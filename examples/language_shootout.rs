@@ -1,0 +1,127 @@
+//! E2 — the Figure 4 "language" shootout on CEC2010 F15 (D=1000, m=50):
+//! runtime of 10,000 function evaluations per engine, plus the paper's
+//! worker experiments (main thread vs one worker vs two parallel workers).
+//!
+//! Engine mapping (DESIGN.md section 3): native Rust ~ Java (compiled
+//! baseline), XLA-jnp ~ Matlab (vectorized array language), XLA-Pallas ~
+//! JavaScript-in-NodIO (the framework's portable engine).
+//!
+//! ```text
+//! cargo run --release --example language_shootout [evals]
+//! ```
+
+use std::time::Instant;
+
+use nodio::bench::Table;
+use nodio::problems::F15Instance;
+use nodio::rng::{Rng64, SplitMix64};
+use nodio::runtime::{NativeEngine, XlaEngine};
+
+const BATCH: usize = 16;
+
+fn candidates(seed: u64, n: usize, dim: usize) -> Vec<f32> {
+    let mut rng = SplitMix64::new(seed);
+    (0..n * dim).map(|_| (rng.uniform() * 10.0 - 5.0) as f32).collect()
+}
+
+fn main() -> anyhow::Result<()> {
+    let evals: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(10_000);
+    let rounds = evals / BATCH;
+    let actual = rounds * BATCH;
+    println!("F15 shootout: {actual} evaluations per engine (batch {BATCH})\n");
+
+    let inst = F15Instance::paper(7);
+    let x = candidates(1, BATCH, inst.dim);
+
+    let mut table = Table::new(&["engine", "ms / 10k evals", "paper analog"]);
+    let scale = |elapsed: std::time::Duration| {
+        elapsed.as_secs_f64() * 1000.0 * 10_000.0 / actual as f64
+    };
+
+    // Native Rust (compiled baseline).
+    let mut native = NativeEngine::new().with_f15(inst.clone());
+    native.eval_f15_batch(&x, BATCH); // warmup
+    let t0 = Instant::now();
+    for _ in 0..rounds {
+        std::hint::black_box(native.eval_f15_batch(&x, BATCH));
+    }
+    let native_ms = scale(t0.elapsed());
+    table.row(&["native (rust)".into(), format!("{native_ms:.1}"),
+                "Java 991ms".into()]);
+
+    // XLA engines.
+    let mut xla = XlaEngine::load_default()?;
+    let mut xla_ms = std::collections::BTreeMap::new();
+    for (variant, analog) in [("jnp", "Matlab 935ms"),
+                              ("pallas", "JS/Node ~1234ms")] {
+        xla.eval_f15(&x, BATCH, &inst, variant)?; // warmup + compile
+        let t0 = Instant::now();
+        for _ in 0..rounds {
+            std::hint::black_box(xla.eval_f15(&x, BATCH, &inst, variant)?);
+        }
+        let ms = scale(t0.elapsed());
+        xla_ms.insert(variant, ms);
+        table.row(&[format!("xla-{variant}"), format!("{ms:.1}"),
+                    analog.into()]);
+    }
+    table.print();
+
+    // --- Worker experiments (paper: "not much difference between running
+    // the code in the main thread or in Web Workers"; two parallel workers
+    // took 1279ms each vs 1238ms single) -----------------------------------
+    println!("\nworker scaling (xla-pallas, {actual} evals each):");
+    let mut worker_table = Table::new(&["configuration", "ms / 10k evals / worker"]);
+
+    // One worker thread.
+    let inst1 = inst.clone();
+    let t0 = Instant::now();
+    let h = std::thread::spawn(move || -> anyhow::Result<()> {
+        let mut xla = XlaEngine::load_default()?;
+        let x = candidates(1, BATCH, inst1.dim);
+        xla.eval_f15(&x, BATCH, &inst1, "pallas")?; // warm
+        for _ in 0..(10_000 / BATCH) {
+            std::hint::black_box(xla.eval_f15(&x, BATCH, &inst1, "pallas")?);
+        }
+        Ok(())
+    });
+    h.join().unwrap()?;
+    let one = t0.elapsed().as_secs_f64() * 1000.0;
+    worker_table.row(&["1 worker".into(), format!("{one:.1}")]);
+
+    // Two parallel workers, each doing the full workload.
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..2)
+        .map(|w| {
+            let inst = inst.clone();
+            std::thread::spawn(move || -> anyhow::Result<()> {
+                let mut xla = XlaEngine::load_default()?;
+                let x = candidates(w + 1, BATCH, inst.dim);
+                xla.eval_f15(&x, BATCH, &inst, "pallas")?;
+                for _ in 0..(10_000 / BATCH) {
+                    std::hint::black_box(
+                        xla.eval_f15(&x, BATCH, &inst, "pallas")?,
+                    );
+                }
+                Ok(())
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap()?;
+    }
+    let two = t0.elapsed().as_secs_f64() * 1000.0;
+    worker_table.row(&["2 parallel workers".into(), format!("{two:.1}")]);
+    worker_table.print();
+
+    println!(
+        "\nshape check: paper JS was ~25-32% slower than Java; \
+         xla-pallas / native = {:.2}x; two workers / one = {:.2}x \
+         (paper: ~1.03x)",
+        xla_ms["pallas"] / native_ms,
+        two / one
+    );
+    Ok(())
+}

@@ -1,0 +1,60 @@
+//! Quickstart: solve the paper's trap-40 problem on a single local island,
+//! with both execution engines.
+//!
+//! ```text
+//! cargo run --release --example quickstart
+//! ```
+
+use nodio::client::{EngineChoice, IslandDriver};
+use nodio::ea::{Island, IslandConfig};
+use nodio::problems::{BitProblem, Trap};
+use nodio::rng::Xoshiro256pp;
+use nodio::util::fmt_duration;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    // --- 1. The plain library API: problem + island + run loop ----------
+    let problem = Trap::paper(); // 40 traps, l=4, a=1, b=2, z=3 -> 160 bits
+    println!(
+        "trap-40: {} bits, optimum fitness {}",
+        problem.n_bits(),
+        problem.optimum()
+    );
+
+    let mut rng = Xoshiro256pp::new(42);
+    let config = IslandConfig { pop_size: 1024, ..Default::default() };
+    let mut island = Island::new(config, &problem, &mut rng);
+
+    let t0 = Instant::now();
+    let report = island.run_to_solution(&problem, 5_000_000, &mut rng);
+    println!(
+        "native island: solved={} in {} ({} evaluations, {} generations)",
+        report.solved,
+        fmt_duration(t0.elapsed()),
+        report.evaluations,
+        report.generations,
+    );
+    println!("best: {}", report.best.to_string01());
+
+    // --- 2. The engine-agnostic driver: same GA on the XLA artifacts ----
+    // (requires `make artifacts`; each run_epoch call executes ONE AOT
+    // artifact that fuses 100 generations)
+    let t0 = Instant::now();
+    let mut driver = IslandDriver::new(EngineChoice::XlaPallas, 512, 42)?;
+    let mut epochs = 0;
+    let solved = loop {
+        let out = driver.run_epoch(100, None)?;
+        epochs += 1;
+        if out.solved {
+            break true;
+        }
+        if epochs >= 100 {
+            break false;
+        }
+    };
+    println!(
+        "xla-pallas island: solved={solved} after {epochs} epochs in {}",
+        fmt_duration(t0.elapsed())
+    );
+    Ok(())
+}

@@ -1,0 +1,105 @@
+//! E6 — the end-to-end headline experiment: a live pool server plus a
+//! churning swarm of heterogeneous volunteer clients solving trap-40,
+//! compared against the single-desktop baseline ("if they eventually take
+//! longer than a basic desktop, their interest will be purely academic").
+//!
+//! ```text
+//! cargo run --release --example volunteer_swarm [clients] [engine] [solutions]
+//! ```
+
+use std::time::Duration;
+
+use nodio::client::{EngineChoice, WorkerMode};
+use nodio::sim::{run_baseline, run_swarm, ChurnConfig, SwarmConfig};
+use nodio::util::fmt_duration;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let clients: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(4);
+    let engine = args
+        .get(1)
+        .and_then(|s| EngineChoice::parse(s))
+        .unwrap_or(EngineChoice::Native);
+    let solutions: u64 = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(3);
+
+    // --- Desktop baseline: one island, pop 1024, same budget ------------
+    println!("== desktop baseline (pop 1024, 1 island, engine {}) ==",
+             engine.as_str());
+    let base = run_baseline(engine, 1024, 3, 5_000_000, 101)?;
+    let base_time = base.time_summary();
+    println!(
+        "  success {:.0}%  mean time-to-solution {:.2}s (n={})",
+        base.success_rate() * 100.0,
+        base_time.mean,
+        base_time.n
+    );
+
+    // --- The volunteer swarm --------------------------------------------
+    println!(
+        "\n== volunteer swarm: {clients} churning W² clients (engine {}) ==",
+        engine.as_str()
+    );
+    let report = run_swarm(SwarmConfig {
+        n_clients: clients,
+        mode: WorkerMode::W2,
+        engine,
+        target_solutions: solutions,
+        timeout: Duration::from_secs(300),
+        churn: Some(ChurnConfig {
+            arrival_rate: 0.5,       // a new volunteer every ~2s
+            mean_session_s: 30.0,    // sessions ~30s (heavy-tailed)
+            max_concurrent: clients * 2,
+        }),
+        slowdown_range: (1.0, 4.0), // phones are ~4x slower than desktops
+        seed: 2024,
+        ..Default::default()
+    })?;
+
+    println!(
+        "  solved {} experiments in {}  (first: {})",
+        report.solutions,
+        fmt_duration(report.elapsed),
+        report
+            .time_to_first
+            .map(fmt_duration)
+            .unwrap_or_else(|| "-".into()),
+    );
+    println!(
+        "  volunteers seen: {}   server requests: {}   total evaluations: {}",
+        report.clients_spawned,
+        report.total_requests,
+        report.total_evaluations()
+    );
+    for (i, t) in report.experiment_times.iter().enumerate() {
+        println!("    experiment {i}: {t:.2}s");
+    }
+
+    // --- The paper's criterion -------------------------------------------
+    if let Some(first) = report.time_to_first {
+        let mean_exp = if report.experiment_times.is_empty() {
+            first.as_secs_f64()
+        } else {
+            report.experiment_times.iter().sum::<f64>()
+                / report.experiment_times.len() as f64
+        };
+        println!("\n== verdict ==");
+        if base_time.n == 0 {
+            println!("  desktop baseline never solved; swarm did -> swarm wins");
+        } else if mean_exp < base_time.mean {
+            println!(
+                "  swarm mean {mean_exp:.2}s beats desktop mean {:.2}s -> \
+                 volunteer computing pays off",
+                base_time.mean
+            );
+        } else {
+            println!(
+                "  swarm mean {mean_exp:.2}s vs desktop mean {:.2}s -> \
+                 below break-even at this scale (add volunteers)",
+                base_time.mean
+            );
+        }
+    } else {
+        println!("\n== verdict == swarm found no solution within timeout");
+    }
+    Ok(())
+}

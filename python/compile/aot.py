@@ -1,0 +1,223 @@
+"""AOT lowering: JAX/Pallas -> HLO *text* artifacts for the Rust runtime.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids that xla_extension 0.5.1 (what the
+published ``xla`` crate binds) rejects with ``proto.id() <= INT_MAX``. The
+text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Run as ``python -m compile.aot --outdir ../artifacts`` (the Makefile's
+``artifacts`` target). Emits one ``<name>.hlo.txt`` per entry in ARTIFACTS
+plus ``manifest.json`` describing every artifact's input/output signature so
+the Rust side can marshal literals without hardcoding shapes.
+
+Lowering is skipped for artifacts whose file is already newer than every
+source file in this package (cheap rebuilds; ``--force`` overrides).
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import ref
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+
+# Population sizes the coordinator uses: the paper's baseline (512, 1024)
+# plus the NodIO-W^2 range [128, 256] (its endpoints; the client rounds its
+# randomly drawn population size to the nearest available artifact).
+POP_SIZES = (128, 192, 256, 512, 1024)
+# F15 eval batch sizes benched in Figure 4's reproduction.
+F15_BATCHES = (1, 16, 128)
+
+F32 = jnp.float32
+I32 = jnp.int32
+U32 = jnp.uint32
+
+
+def _spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _trap_specs(p):
+    return (_spec((p, model.TRAP_BITS), F32),)
+
+
+def _f15_specs(b):
+    d, m, g = ref.F15_D, ref.F15_M, ref.F15_GROUPS
+    return (
+        _spec((b, d), F32),        # x
+        _spec((d,), F32),          # o
+        _spec((d,), I32),          # perm
+        _spec((g, m, m), F32),     # rotation matrices
+    )
+
+
+def _epoch_specs(p):
+    n = model.TRAP_BITS
+    return (
+        _spec((p, n), F32),        # pop
+        _spec((2,), U32),          # key
+        _spec((n,), F32),          # immigrant
+        _spec((), I32),            # use_immigrant
+        _spec((), F32),            # target fitness
+    )
+
+
+def _epoch_fn(engine):
+    def fn(pop, key, immigrant, use_imm, target):
+        return model.ea_epoch_jit(pop, key, immigrant, use_imm, target,
+                                  gens=model.GENERATIONS_PER_EPOCH,
+                                  engine=engine)
+    return fn
+
+
+def build_registry():
+    """name -> (callable, example_arg_specs, metadata)."""
+    reg = {}
+    for p in POP_SIZES:
+        reg[f"trap_eval_p{p}"] = (
+            model.eval_trap_pallas, _trap_specs(p),
+            {"kind": "trap_eval", "engine": "pallas", "pop": p,
+             "bits": model.TRAP_BITS},
+        )
+        reg[f"trap_eval_jnp_p{p}"] = (
+            model.eval_trap_jnp, _trap_specs(p),
+            {"kind": "trap_eval", "engine": "jnp", "pop": p,
+             "bits": model.TRAP_BITS},
+        )
+        reg[f"ea_epoch_p{p}"] = (
+            _epoch_fn("pallas"), _epoch_specs(p),
+            {"kind": "ea_epoch", "engine": "pallas", "pop": p,
+             "bits": model.TRAP_BITS, "gens": model.GENERATIONS_PER_EPOCH},
+        )
+    # One jnp-engine epoch for the engine ablation (keeps artifact count sane).
+    reg["ea_epoch_jnp_p512"] = (
+        _epoch_fn("jnp"), _epoch_specs(512),
+        {"kind": "ea_epoch", "engine": "jnp", "pop": 512,
+         "bits": model.TRAP_BITS, "gens": model.GENERATIONS_PER_EPOCH},
+    )
+    for b in F15_BATCHES:
+        reg[f"f15_eval_b{b}"] = (
+            model.eval_f15_pallas, _f15_specs(b),
+            {"kind": "f15_eval", "engine": "pallas", "batch": b,
+             "dim": ref.F15_D, "group": ref.F15_M, "groups": ref.F15_GROUPS},
+        )
+        reg[f"f15_eval_jnp_b{b}"] = (
+            model.eval_f15_jnp, _f15_specs(b),
+            {"kind": "f15_eval", "engine": "jnp", "batch": b,
+             "dim": ref.F15_D, "group": ref.F15_M, "groups": ref.F15_GROUPS},
+        )
+    return reg
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _dtype_name(dt):
+    return jnp.dtype(dt).name
+
+
+def _sig(specs):
+    return [{"dtype": _dtype_name(s.dtype), "shape": list(s.shape)}
+            for s in specs]
+
+
+def _out_sig(lowered):
+    out = lowered.out_info
+    leaves = jax.tree_util.tree_leaves(out)
+    return [{"dtype": _dtype_name(l.dtype), "shape": list(l.shape)}
+            for l in leaves]
+
+
+def _sources_mtime():
+    newest = 0.0
+    for root, _dirs, files in os.walk(HERE):
+        for f in files:
+            if f.endswith(".py"):
+                newest = max(newest, os.path.getmtime(os.path.join(root, f)))
+    return newest
+
+
+def lower_all(outdir, force=False, only=None):
+    os.makedirs(outdir, exist_ok=True)
+    registry = build_registry()
+    src_mtime = _sources_mtime()
+    manifest_path = os.path.join(outdir, "manifest.json")
+    manifest = {"artifacts": {}}
+    if os.path.exists(manifest_path) and not force:
+        try:
+            with open(manifest_path) as f:
+                manifest = json.load(f)
+        except (json.JSONDecodeError, OSError):
+            manifest = {"artifacts": {}}
+
+    n_built = n_skipped = 0
+    for name, (fn, specs, meta) in sorted(registry.items()):
+        if only and name not in only:
+            continue
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(outdir, fname)
+        fresh = (
+            not force
+            and os.path.exists(path)
+            and os.path.getmtime(path) >= src_mtime
+            and name in manifest.get("artifacts", {})
+        )
+        if fresh:
+            n_skipped += 1
+            continue
+        t0 = time.time()
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"][name] = {
+            "file": fname,
+            "inputs": _sig(specs),
+            "outputs": _out_sig(lowered),
+            "meta": meta,
+        }
+        n_built += 1
+        print(f"  lowered {name:24s} {len(text):>9d} chars "
+              f"({time.time() - t0:.1f}s)", flush=True)
+
+    manifest["generations_per_epoch"] = model.GENERATIONS_PER_EPOCH
+    manifest["trap_bits"] = model.TRAP_BITS
+    manifest["trap_params"] = {"l": ref.TRAP_L, "a": ref.TRAP_A,
+                               "b": ref.TRAP_B, "z": ref.TRAP_Z}
+    manifest["f15"] = {"dim": ref.F15_D, "group": ref.F15_M,
+                       "groups": ref.F15_GROUPS}
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"artifacts: {n_built} built, {n_skipped} up-to-date -> {outdir}")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--outdir", default=os.path.join(HERE, "..", "..",
+                                                     "artifacts"))
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--only", nargs="*", help="artifact names to (re)build")
+    args = ap.parse_args()
+    lower_all(os.path.abspath(args.outdir), force=args.force, only=args.only)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,81 @@
+"""L1 Pallas kernel: CEC2010 F15 rotated-group Rastrigin (the Figure 4 workload).
+
+The hot loop of F15 is, per group k, a dense (B x m) @ (m x m) rotation
+followed by a Rastrigin reduction. That is exactly MXU-shaped work: the
+kernel walks the group axis on the grid, holding one (B, m) slice of the
+permuted-shifted population and one (m, m) rotation matrix in VMEM per
+step, and accumulates the per-group Rastrigin partial into the output.
+
+Shift (x - o) and the permutation gather stay in L2 (model.py) where XLA
+fuses them; gathers are a poor fit for the systolic array.
+
+VMEM per grid step for the benched shapes (B<=128, m=50):
+  zp tile   B*m*4     <= 25.6 KiB
+  M_k       m*m*4      = 10.0 KiB
+  y         B*m*4     <= 25.6 KiB
+  out       B*4       <=  0.5 KiB
+well under the ~16 MiB VMEM budget; double buffering is trivially available.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _f15_group_kernel(zp_ref, mat_ref, out_ref):
+    """One group: accumulate rastrigin((B,m) @ (m,m)) into out[B]."""
+    g = pl.program_id(0)
+
+    zg = zp_ref[...][:, 0, :]            # (B, m) slice for this group
+    mk = mat_ref[...][0]                 # (m, m)
+    y = jnp.dot(zg, mk, preferred_element_type=jnp.float32)
+    partial = jnp.sum(y * y - 10.0 * jnp.cos(2.0 * jnp.pi * y) + 10.0, axis=-1)
+
+    @pl.when(g == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += partial
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def f15_grouped(zp, mats, interpret=True):
+    """Rotated-group Rastrigin over pre-grouped input.
+
+    zp:   f32[B, G, m]   shifted, permuted candidates split into groups
+    mats: f32[G, m, m]   per-group orthogonal rotations
+    Returns f32[B].
+    """
+    b, g, m = zp.shape
+    if mats.shape != (g, m, m):
+        raise ValueError(f"mats shape {mats.shape} != {(g, m, m)}")
+    return pl.pallas_call(
+        _f15_group_kernel,
+        grid=(g,),
+        in_specs=[
+            pl.BlockSpec((b, 1, m), lambda k: (0, k, 0)),
+            pl.BlockSpec((1, m, m), lambda k: (k, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((b,), lambda k: (0,)),
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.float32),
+        interpret=interpret,
+    )(zp, mats)
+
+
+def f15_fitness(x, o, perm, mats, interpret=True):
+    """Full F15 with the L2 prologue inline (shift + permute + group split).
+
+    Mirrors ref.f15_fitness but routes the rotation/reduction through the
+    Pallas kernel. x: f32[B, D], o: f32[D], perm: i32[D], mats: f32[G, m, m].
+    """
+    b, d = x.shape
+    g, m, _ = mats.shape
+    z = x - o[None, :]
+    zp = z[:, perm].reshape(b, g, m)
+    return f15_grouped(zp, mats, interpret=interpret)

@@ -1,0 +1,83 @@
+"""Pure-jnp reference oracles for the L1 Pallas kernels.
+
+These are the ground truth the pytest suite checks the kernels against
+(``assert_allclose``). They are also lowered on their own as the ``*_jnp``
+artifact variants so the Rust bench harness can compare the "array language"
+path (the paper's Matlab analog) against the Pallas path (the paper's
+JavaScript-in-framework analog).
+
+Functions here are shape-polymorphic and jit-friendly: no Python-level
+branching on traced values.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Default trap parameters from the paper (section 3): l=4, a=1, b=2, z=3.
+TRAP_L = 4
+TRAP_A = 1.0
+TRAP_B = 2.0
+TRAP_Z = 3
+
+# CEC2010 F15 constants (section 3.1): D=1000 variables, group size m=50.
+F15_D = 1000
+F15_M = 50
+F15_GROUPS = F15_D // F15_M
+
+
+def trap_block(u, l=TRAP_L, a=TRAP_A, b=TRAP_B, z=TRAP_Z):
+    """Ackley trap value for a block with ``u`` ones out of ``l`` bits.
+
+    Deceptive: fitness decreases from ``a`` at u=0 down to 0 at u=z, then
+    jumps to ``b`` at u=l. With the paper's parameters the optimum is the
+    all-ones block, worth b=2.
+    """
+    u = u.astype(jnp.float32)
+    down = a * (z - u) / z          # u <= z branch
+    up = b * (u - z) / (l - z)      # u >  z branch
+    return jnp.where(u <= z, down, up)
+
+
+def trap_fitness(pop, l=TRAP_L, a=TRAP_A, b=TRAP_B, z=TRAP_Z):
+    """Batched trap fitness.
+
+    pop: f32[P, N] of {0.0, 1.0}; N must be a multiple of l.
+    Returns f32[P]: the sum of per-block trap values.
+    """
+    p, n = pop.shape
+    assert n % l == 0, f"bits {n} not a multiple of block size {l}"
+    blocks = pop.reshape(p, n // l, l)
+    ones = blocks.sum(axis=-1)
+    return trap_block(ones, l=l, a=a, b=b, z=z).sum(axis=-1)
+
+
+def trap_optimum(n_bits, l=TRAP_L, b=TRAP_B):
+    """Fitness of the all-ones string (the global optimum)."""
+    return (n_bits // l) * b
+
+
+def rastrigin(y):
+    """Classical Rastrigin over the last axis: sum(y^2 - 10 cos(2 pi y) + 10)."""
+    return jnp.sum(y * y - 10.0 * jnp.cos(2.0 * jnp.pi * y) + 10.0, axis=-1)
+
+
+def f15_fitness(x, o, perm, mats):
+    """CEC2010 F15: D/m-group shifted and m-rotated Rastrigin (eq. 3).
+
+    x:    f32[B, D]  candidate solutions
+    o:    f32[D]     shifted global optimum
+    perm: i32[D]     random permutation of [0, D)
+    mats: f32[G, m, m] per-group orthogonal rotation matrices
+
+    Returns f32[B].
+    """
+    b, d = x.shape
+    g, m, _ = mats.shape
+    assert g * m == d, f"groups {g} x size {m} != D {d}"
+    z = x - o[None, :]
+    zp = z[:, perm]                      # apply permutation P
+    zg = zp.reshape(b, g, m)             # split into groups
+    # y[b, k, :] = zg[b, k, :] @ mats[k]
+    y = jnp.einsum("bkm,kmn->bkn", zg, mats)
+    return rastrigin(y).sum(axis=-1)

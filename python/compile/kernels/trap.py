@@ -1,0 +1,76 @@
+"""L1 Pallas kernel: batched trap fitness.
+
+The trap function is the paper's baseline workload (Figure 3). Chromosomes
+arrive as f32 {0,1} rows; the kernel tiles the population dimension so each
+grid step evaluates a tile of rows entirely in VMEM.
+
+TPU shaping (see DESIGN.md section 6): this kernel is VPU/bandwidth-bound —
+a (TILE, N) tile is reshaped to (TILE, N/l, l), reduced over the block axis
+and mapped through the piecewise trap value, all vectorized. There is no
+MXU work; the roofline estimate is therefore the HBM->VMEM stream rate of
+the population matrix.
+
+interpret=True is mandatory here: the artifact must run on the CPU PJRT
+client (real-TPU lowering emits a Mosaic custom-call the CPU plugin cannot
+execute).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# Rows per grid step. 128 keeps the tile (128 x 160 f32 = 80 KiB) far under
+# VMEM while giving the vector unit full lanes.
+DEFAULT_TILE = 128
+
+
+def _trap_tile_kernel(pop_ref, out_ref, *, l, a, b, z):
+    """One population tile: f32[TILE, N] -> f32[TILE]."""
+    tile = pop_ref[...]
+    rows, n = tile.shape
+    blocks = tile.reshape(rows, n // l, l)
+    ones = blocks.sum(axis=-1)
+    down = a * (z - ones) / z
+    up = b * (ones - z) / (l - z)
+    vals = jnp.where(ones <= z, down, up)
+    out_ref[...] = vals.sum(axis=-1)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("l", "a", "b", "z", "tile", "interpret")
+)
+def trap_fitness(
+    pop,
+    l=ref.TRAP_L,
+    a=ref.TRAP_A,
+    b=ref.TRAP_B,
+    z=ref.TRAP_Z,
+    tile=DEFAULT_TILE,
+    interpret=True,
+):
+    """Pallas-evaluated trap fitness. pop: f32[P, N] -> f32[P].
+
+    The population axis is tiled; a trailing partial tile is handled by
+    Pallas' out-of-bounds masking (reads pad, writes mask).
+    """
+    p, n = pop.shape
+    if n % l != 0:
+        raise ValueError(f"bits {n} not a multiple of block size {l}")
+    tile = min(tile, p)
+    kernel = functools.partial(
+        _trap_tile_kernel, l=l, a=float(a), b=float(b), z=float(z)
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(pl.cdiv(p, tile),),
+        in_specs=[pl.BlockSpec((tile, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((tile,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((p,), jnp.float32),
+        interpret=interpret,
+    )(pop)

@@ -1,0 +1,85 @@
+"""AOT path: registry completeness, HLO text emission, manifest signatures."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, model
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+class TestRegistry:
+    def test_expected_artifact_names(self):
+        reg = aot.build_registry()
+        for p in aot.POP_SIZES:
+            assert f"trap_eval_p{p}" in reg
+            assert f"trap_eval_jnp_p{p}" in reg
+            assert f"ea_epoch_p{p}" in reg
+        for b in aot.F15_BATCHES:
+            assert f"f15_eval_b{b}" in reg
+            assert f"f15_eval_jnp_b{b}" in reg
+        assert "ea_epoch_jnp_p512" in reg
+
+    def test_epoch_signature(self):
+        reg = aot.build_registry()
+        _, specs, meta = reg["ea_epoch_p512"]
+        shapes = [tuple(s.shape) for s in specs]
+        assert shapes == [(512, 160), (2,), (160,), (), ()]
+        assert meta["gens"] == model.GENERATIONS_PER_EPOCH
+
+    def test_f15_signature(self):
+        reg = aot.build_registry()
+        _, specs, _ = reg["f15_eval_b16"]
+        shapes = [tuple(s.shape) for s in specs]
+        d, m, g = ref.F15_D, ref.F15_M, ref.F15_GROUPS
+        assert shapes == [(16, d), (d,), (d,), (g, m, m)]
+
+
+class TestLowering:
+    def test_trap_artifact_is_valid_hlo_text(self, tmp_path):
+        aot.lower_all(str(tmp_path), only=["trap_eval_p128"])
+        text = (tmp_path / "trap_eval_p128.hlo.txt").read_text()
+        assert text.startswith("HloModule")
+        assert "f32[128,160]" in text
+        manifest = json.loads((tmp_path / "manifest.json").read_text())
+        art = manifest["artifacts"]["trap_eval_p128"]
+        assert art["inputs"] == [{"dtype": "float32", "shape": [128, 160]}]
+        assert art["outputs"] == [{"dtype": "float32", "shape": [128]}]
+
+    def test_incremental_skip(self, tmp_path):
+        aot.lower_all(str(tmp_path), only=["trap_eval_jnp_p128"])
+        mtime = os.path.getmtime(tmp_path / "trap_eval_jnp_p128.hlo.txt")
+        aot.lower_all(str(tmp_path), only=["trap_eval_jnp_p128"])
+        assert os.path.getmtime(
+            tmp_path / "trap_eval_jnp_p128.hlo.txt") == mtime
+
+    def test_force_rebuilds(self, tmp_path):
+        aot.lower_all(str(tmp_path), only=["trap_eval_jnp_p128"])
+        first = os.path.getmtime(tmp_path / "trap_eval_jnp_p128.hlo.txt")
+        os.utime(tmp_path / "trap_eval_jnp_p128.hlo.txt", (1, 1))
+        aot.lower_all(str(tmp_path), only=["trap_eval_jnp_p128"], force=True)
+        assert os.path.getmtime(
+            tmp_path / "trap_eval_jnp_p128.hlo.txt") != 1
+
+
+class TestManifestGlobals:
+    def test_repo_manifest_if_built(self):
+        path = os.path.join(aot.HERE, "..", "..", "artifacts",
+                            "manifest.json")
+        if not os.path.exists(path):
+            pytest.skip("artifacts not built yet")
+        manifest = json.load(open(path))
+        assert manifest["trap_bits"] == 160
+        assert manifest["generations_per_epoch"] == 100
+        assert manifest["trap_params"] == {"l": 4, "a": 1.0, "b": 2.0,
+                                           "z": 3}
+        assert manifest["f15"] == {"dim": 1000, "group": 50, "groups": 20}
+        # every artifact file referenced actually exists
+        adir = os.path.dirname(path)
+        for name, art in manifest["artifacts"].items():
+            assert os.path.exists(os.path.join(adir, art["file"])), name

@@ -1,0 +1,119 @@
+"""L1 correctness: Pallas F15 kernel vs the pure-jnp oracle.
+
+F15 (CEC2010 large-scale global optimization: D/m-group shifted m-rotated
+Rastrigin) is the Figure 4 / E2 workload.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import f15, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def make_instance(seed, d, m):
+    """Random F15 instance: shift vector, permutation, orthogonal rotations."""
+    g = d // m
+    ko, kp, km = jax.random.split(jax.random.PRNGKey(seed), 3)
+    o = jax.random.uniform(ko, (d,), minval=-5.0, maxval=5.0)
+    perm = jax.random.permutation(kp, d).astype(jnp.int32)
+    raw = jax.random.normal(km, (g, m, m))
+    mats, _ = jnp.linalg.qr(raw)
+    return o, perm, mats
+
+
+def make_x(seed, b, d):
+    return jax.random.uniform(jax.random.PRNGKey(seed), (b, d),
+                              minval=-5.0, maxval=5.0)
+
+
+class TestKernelMatchesOracle:
+    @pytest.mark.parametrize("b", [1, 2, 16, 128])
+    def test_batch_sizes_full_dim(self, b):
+        d, m = ref.F15_D, ref.F15_M
+        o, perm, mats = make_instance(7, d, m)
+        x = make_x(b, b, d)
+        got = f15.f15_fitness(x, o, perm, mats)
+        want = ref.f15_fitness(x, o, perm, mats)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-4)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        b=st.integers(1, 20),
+        groups=st.integers(1, 8),
+        m=st.sampled_from([2, 5, 16, 50]),
+    )
+    def test_hypothesis_sweep(self, seed, b, groups, m):
+        d = groups * m
+        o, perm, mats = make_instance(seed, d, m)
+        x = make_x(seed + 1, b, d)
+        got = f15.f15_fitness(x, o, perm, mats)
+        want = ref.f15_fitness(x, o, perm, mats)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-3, atol=1e-3)
+
+    def test_grouped_entrypoint_matches_einsum(self):
+        b, g, m = 4, 6, 50
+        zp = jax.random.normal(jax.random.PRNGKey(0), (b, g, m))
+        raw = jax.random.normal(jax.random.PRNGKey(1), (g, m, m))
+        mats, _ = jnp.linalg.qr(raw)
+        got = f15.f15_grouped(zp, mats)
+        y = jnp.einsum("bkm,kmn->bkn", zp, mats)
+        want = ref.rastrigin(y).sum(axis=-1)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-4)
+
+    def test_shape_mismatch_rejected(self):
+        zp = jnp.zeros((2, 3, 50))
+        mats = jnp.zeros((4, 50, 50))
+        with pytest.raises(ValueError):
+            f15.f15_grouped(zp, mats)
+
+
+class TestAnalyticProperties:
+    def test_global_optimum_is_zero(self):
+        # At x == o the shifted vector is zero; rotation preserves zero and
+        # rastrigin(0) == 0 — the benchmark's known global minimum.
+        d, m = 200, 50
+        o, perm, mats = make_instance(3, d, m)
+        got = f15.f15_fitness(o[None, :], o, perm, mats)
+        np.testing.assert_allclose(np.asarray(got), 0.0, atol=1e-3)
+
+    def test_fitness_nonnegative(self):
+        # rastrigin(y) = sum(y^2 - 10 cos + 10) >= 0 for all y.
+        d, m = 150, 50
+        o, perm, mats = make_instance(4, d, m)
+        x = make_x(5, 32, d)
+        got = np.asarray(f15.f15_fitness(x, o, perm, mats))
+        assert (got >= -1e-3).all()
+
+    def test_rotation_preserves_norm_structure(self):
+        # With orthogonal M the quadratic term sum(y^2) equals sum(z^2);
+        # only the cosine term changes. Check the invariant numerically.
+        g, m = 4, 50
+        zp = jax.random.normal(jax.random.PRNGKey(2), (3, g, m))
+        raw = jax.random.normal(jax.random.PRNGKey(3), (g, m, m))
+        mats, _ = jnp.linalg.qr(raw)
+        y = jnp.einsum("bkm,kmn->bkn", zp, mats)
+        np.testing.assert_allclose(
+            np.asarray((y ** 2).sum(axis=(1, 2))),
+            np.asarray((zp ** 2).sum(axis=(1, 2))),
+            rtol=1e-4,
+        )
+
+    def test_permutation_is_applied(self):
+        # A non-identity permutation must change the result when the groups
+        # are rotated differently.
+        d, m = 100, 50
+        o, perm, mats = make_instance(6, d, m)
+        ident = jnp.arange(d, dtype=jnp.int32)
+        x = make_x(7, 4, d)
+        a = np.asarray(f15.f15_fitness(x, o, perm, mats))
+        b = np.asarray(f15.f15_fitness(x, o, ident, mats))
+        assert not np.allclose(a, b)

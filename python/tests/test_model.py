@@ -1,0 +1,154 @@
+"""L2 correctness: the fused ea_epoch computation.
+
+These are the invariants the Rust coordinator relies on: determinism per
+key, elitism (best fitness never regresses), immigrant injection semantics,
+the solved-freeze, and pallas/jnp engine equivalence.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+N = 40                      # 10 trap blocks — small enough for fast tests
+TARGET = float(ref.trap_optimum(N))
+
+
+def mk_pop(seed, p, n=N):
+    key = jax.random.PRNGKey(seed)
+    return jax.random.bernoulli(key, 0.5, (p, n)).astype(jnp.float32)
+
+
+def run_epoch(pop, seed=1, immigrant=None, use_imm=0, gens=20,
+              engine="pallas", target=TARGET):
+    n = pop.shape[1]
+    if immigrant is None:
+        immigrant = jnp.zeros((n,), jnp.float32)
+    key = jnp.array([seed, seed + 1], dtype=jnp.uint32)
+    return model.ea_epoch_jit(pop, key, immigrant, jnp.int32(use_imm),
+                              jnp.float32(target), gens=gens, engine=engine)
+
+
+class TestDeterminism:
+    def test_same_key_same_result(self):
+        pop = mk_pop(0, 32)
+        a = run_epoch(pop, seed=7)
+        b = run_epoch(pop, seed=7)
+        for x, y in zip(a, b):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+    def test_different_key_different_result(self):
+        pop = mk_pop(0, 32)
+        a = run_epoch(pop, seed=7, gens=5, target=1e9)
+        b = run_epoch(pop, seed=8, gens=5, target=1e9)
+        assert not np.array_equal(np.asarray(a[0]), np.asarray(b[0]))
+
+
+class TestElitism:
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 10_000), p=st.sampled_from([8, 32, 64]))
+    def test_best_fitness_never_regresses(self, seed, p):
+        pop = mk_pop(seed, p)
+        before = float(jnp.max(ref.trap_fitness(pop)))
+        _, fit, best_idx, _ = run_epoch(pop, seed=seed, target=1e9)
+        after = float(fit[best_idx])
+        assert after >= before - 1e-5
+
+    def test_fitness_vector_matches_population(self):
+        pop = mk_pop(3, 16)
+        new_pop, fit, _, _ = run_epoch(pop, seed=3, target=1e9)
+        np.testing.assert_allclose(np.asarray(ref.trap_fitness(new_pop)),
+                                   np.asarray(fit), rtol=1e-6)
+
+
+class TestImmigrant:
+    def test_solution_immigrant_solves_immediately(self):
+        pop = jnp.zeros((32, N), jnp.float32)
+        sol = jnp.ones((N,), jnp.float32)
+        _, fit, best_idx, gens_done = run_epoch(pop, immigrant=sol, use_imm=1)
+        assert float(fit[best_idx]) == TARGET
+        assert int(gens_done) == 0          # frozen on the entry evaluation
+
+    def test_ignored_when_flag_clear(self):
+        pop = jnp.zeros((32, N), jnp.float32)
+        sol = jnp.ones((N,), jnp.float32)
+        _, fit, best_idx, gens_done = run_epoch(pop, immigrant=sol, use_imm=0,
+                                                gens=1)
+        # One generation of bitflips cannot plausibly produce the optimum.
+        assert float(fit[best_idx]) < TARGET
+        assert int(gens_done) == 1
+
+    def test_immigrant_enters_population(self):
+        pop = jnp.zeros((16, N), jnp.float32)
+        marker = jnp.ones((N,), jnp.float32)
+        # target=inf so nothing freezes; gens=0 not allowed, so check via
+        # the frozen path: solution immigrant with exact target.
+        new_pop, _, best_idx, _ = run_epoch(pop, immigrant=marker, use_imm=1)
+        assert float(new_pop[best_idx].sum()) == N
+
+
+class TestSolvedFreeze:
+    def test_population_frozen_after_solve(self):
+        pop = jnp.zeros((16, N), jnp.float32)
+        sol = jnp.ones((N,), jnp.float32)
+        new_pop, fit, best_idx, gens_done = run_epoch(
+            pop, immigrant=sol, use_imm=1, gens=50)
+        # Solution present, rest of population untouched (still all zeros
+        # except the injected slot).
+        assert int(gens_done) == 0
+        total_ones = float(new_pop.sum())
+        assert total_ones == N              # exactly the immigrant's bits
+
+    def test_gens_done_counts_work(self):
+        pop = mk_pop(5, 32)
+        _, _, _, gens_done = run_epoch(pop, gens=12, target=1e9)
+        assert int(gens_done) == 12
+
+
+class TestEngineEquivalence:
+    """pallas and jnp eval engines must produce identical epochs: the same
+    key drives the same random draws, and the kernels compute the same
+    function, so the whole trajectory must agree."""
+
+    @pytest.mark.parametrize("p", [16, 64])
+    def test_trajectories_identical(self, p):
+        pop = mk_pop(11, p)
+        a = run_epoch(pop, seed=11, engine="pallas", gens=10, target=1e9)
+        b = run_epoch(pop, seed=11, engine="jnp", gens=10, target=1e9)
+        np.testing.assert_array_equal(np.asarray(a[0]), np.asarray(b[0]))
+        np.testing.assert_allclose(np.asarray(a[1]), np.asarray(b[1]),
+                                   rtol=1e-6)
+
+
+class TestShapes:
+    def test_output_signature(self):
+        pop = mk_pop(0, 24)
+        new_pop, fit, best_idx, gens_done = run_epoch(pop, gens=3,
+                                                      target=1e9)
+        assert new_pop.shape == (24, N) and new_pop.dtype == jnp.float32
+        assert fit.shape == (24,) and fit.dtype == jnp.float32
+        assert best_idx.shape == () and best_idx.dtype == jnp.int32
+        assert gens_done.shape == () and gens_done.dtype == jnp.int32
+
+    def test_population_stays_binary(self):
+        pop = mk_pop(1, 32)
+        new_pop, _, _, _ = run_epoch(pop, gens=15, target=1e9)
+        vals = np.unique(np.asarray(new_pop))
+        assert set(vals.tolist()) <= {0.0, 1.0}
+
+
+class TestProgress:
+    def test_ga_actually_optimizes_onemax_like_start(self):
+        # From a random start, 60 generations on 10-block trap with pop 64
+        # should improve the best fitness substantially.
+        pop = mk_pop(42, 64)
+        before = float(jnp.max(ref.trap_fitness(pop)))
+        _, fit, best_idx, _ = run_epoch(pop, seed=42, gens=60, target=1e9)
+        after = float(fit[best_idx])
+        assert after > before

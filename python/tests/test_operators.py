@@ -1,0 +1,111 @@
+"""L2 operator internals: the two-point crossover mask and tournament.
+
+The crossover operator is load-bearing for the Figure 3 reproduction
+(uniform crossover cannot solve the trap — see EXPERIMENTS.md), so its
+jax implementation gets direct structural tests here, plus a distribution
+check against the Rust implementation's definition (two independent
+uniform cut points in [0, n), segment [lo, hi) from parent 2).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def mask_for(seed, p, n):
+    key = jax.random.PRNGKey(seed)
+    return np.asarray(model._two_point_mask(key, p, n))
+
+
+class TestTwoPointMask:
+    @settings(max_examples=30, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), p=st.integers(1, 50),
+           n=st.integers(1, 100))
+    def test_mask_is_contiguous_segment(self, seed, p, n):
+        mask = mask_for(seed, p, n)
+        assert mask.shape == (p, n)
+        for row in mask:
+            # A contiguous [lo, hi) segment has at most 2 transitions and
+            # never starts/ends mid-segment in a wrapped way.
+            transitions = int(np.sum(row[1:] != row[:-1]))
+            assert transitions <= 2
+            if transitions == 2:
+                # 0...0 1...1 0...0 shape
+                first, last = row[0], row[-1]
+                assert not first and not last
+
+    def test_mask_rows_are_independent(self):
+        mask = mask_for(0, 200, 40)
+        # Rows should differ (independent cut points per offspring).
+        distinct = {tuple(r) for r in mask}
+        assert len(distinct) > 100
+
+    def test_segment_length_distribution(self):
+        # E[hi - lo] = E|a - b| = (n^2 - 1) / (3n) ~ n/3 for two uniform
+        # cut points. Check the empirical mean is close.
+        n = 60
+        lengths = []
+        for seed in range(50):
+            mask = mask_for(seed, 100, n)
+            lengths.extend(mask.sum(axis=1).tolist())
+        mean = float(np.mean(lengths))
+        expect = (n * n - 1) / (3 * n)
+        assert abs(mean - expect) < 2.0, (mean, expect)
+
+    def test_crossover_uses_segment_from_parent2(self):
+        key = jax.random.PRNGKey(3)
+        p, n = 8, 30
+        fit = jnp.zeros((p,))
+        pop1 = jnp.zeros((p, n))
+        # Force crossover path by checking _generation output bits all
+        # come from {0, 1} parents: with all-zeros population and zero
+        # mutation, children must be all zeros.
+        child = model._generation(pop1, fit, key, p_mut=0.0)
+        assert float(jnp.sum(child)) == 0.0
+
+
+class TestGenerationStep:
+    def test_elite_preserved_in_slot_zero(self):
+        key = jax.random.PRNGKey(1)
+        p, n = 16, 20
+        pop = jax.random.bernoulli(key, 0.5, (p, n)).astype(jnp.float32)
+        from compile.kernels import ref
+        fit = ref.trap_fitness(pop)
+        child = model._generation(pop, fit, jax.random.PRNGKey(2),
+                                  p_mut=0.0)
+        best = int(jnp.argmax(fit))
+        np.testing.assert_array_equal(np.asarray(child[0]),
+                                      np.asarray(pop[best]))
+
+    def test_mutation_rate_one_flips_everything_except_elite(self):
+        key = jax.random.PRNGKey(4)
+        p, n = 8, 24
+        pop = jnp.zeros((p, n), jnp.float32)
+        fit = jnp.zeros((p,))
+        child = model._generation(pop, fit, key, p_mut=1.0)
+        # children (slots 1..) are all ones; elite slot 0 stays zeros
+        assert float(child[0].sum()) == 0.0
+        assert float(child[1:].sum()) == (p - 1) * n
+
+    def test_tournament_indices_in_range(self):
+        key = jax.random.PRNGKey(5)
+        fit = jnp.arange(32, dtype=jnp.float32)
+        idx = np.asarray(model._tournament(key, fit))
+        assert idx.shape == (32,)
+        assert (idx >= 0).all() and (idx < 32).all()
+
+    def test_tournament_prefers_fitter(self):
+        # One individual vastly fitter: it should win most tournaments.
+        fit = jnp.zeros((64,)).at[7].set(100.0)
+        wins = 0
+        for seed in range(50):
+            idx = np.asarray(model._tournament(jax.random.PRNGKey(seed), fit))
+            wins += int((idx == 7).sum())
+        total = 50 * 64
+        # P(win) = 1 - (63/64)^2 ~ 3.1%; require clearly above uniform 1/64.
+        assert wins / total > 0.025, wins / total

@@ -1,0 +1,114 @@
+"""L1 correctness: Pallas trap kernel vs the pure-jnp oracle.
+
+This is the core correctness signal for the Figure 3 / E1 workload: every
+fitness number the Rust coordinator sees flows through this kernel.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref, trap
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def random_pop(seed, p, n):
+    key = jax.random.PRNGKey(seed)
+    return jax.random.bernoulli(key, 0.5, (p, n)).astype(jnp.float32)
+
+
+class TestTrapBlockValues:
+    """The piecewise trap values for l=4, a=1, b=2, z=3 (paper section 3)."""
+
+    @pytest.mark.parametrize("u,expected", [
+        (0, 1.0),        # deceptive local optimum
+        (1, 2.0 / 3.0),
+        (2, 1.0 / 3.0),
+        (3, 0.0),        # the trap floor
+        (4, 2.0),        # global optimum block
+    ])
+    def test_block_value(self, u, expected):
+        got = ref.trap_block(jnp.array(u))
+        np.testing.assert_allclose(float(got), expected, rtol=1e-6)
+
+    def test_deceptive_gradient_points_away_from_optimum(self):
+        # Fitness strictly decreases from u=0 to u=z: hill climbing walks
+        # away from the all-ones optimum — the property that makes trap hard.
+        vals = [float(ref.trap_block(jnp.array(u))) for u in range(4)]
+        assert vals == sorted(vals, reverse=True)
+
+    def test_optimum_beats_deceptive_peak(self):
+        assert float(ref.trap_block(jnp.array(4))) > float(
+            ref.trap_block(jnp.array(0)))
+
+
+class TestKernelMatchesOracle:
+    @pytest.mark.parametrize("p", [1, 2, 64, 127, 128, 129, 256, 500, 512])
+    def test_population_sizes(self, p):
+        pop = random_pop(p, p, 160)
+        got = trap.trap_fitness(pop)
+        want = ref.trap_fitness(pop)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-6)
+
+    @pytest.mark.parametrize("blocks", [1, 3, 10, 40, 64])
+    def test_chromosome_lengths(self, blocks):
+        pop = random_pop(blocks, 33, blocks * ref.TRAP_L)
+        got = trap.trap_fitness(pop)
+        want = ref.trap_fitness(pop)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-6)
+
+    @pytest.mark.parametrize("tile", [1, 7, 32, 128, 1024])
+    def test_tile_sizes(self, tile):
+        # Grid decomposition must not change results.
+        pop = random_pop(99, 200, 160)
+        got = trap.trap_fitness(pop, tile=tile)
+        want = ref.trap_fitness(pop)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-6)
+
+    @settings(max_examples=30, deadline=None)
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        p=st.integers(1, 300),
+        blocks=st.integers(1, 50),
+        l=st.integers(2, 8),
+    )
+    def test_hypothesis_sweep(self, seed, p, blocks, l):
+        """Shapes x trap parameterizations against the oracle."""
+        n = blocks * l
+        pop = random_pop(seed, p, n)
+        z = l - 1
+        got = trap.trap_fitness(pop, l=l, a=1.0, b=2.0, z=z)
+        want = ref.trap_fitness(pop, l=l, a=1.0, b=2.0, z=z)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+
+class TestKnownFitness:
+    def test_all_ones_is_optimum(self):
+        pop = jnp.ones((4, 160), jnp.float32)
+        got = trap.trap_fitness(pop)
+        np.testing.assert_allclose(np.asarray(got),
+                                   ref.trap_optimum(160), rtol=1e-6)
+        assert ref.trap_optimum(160) == 80.0
+
+    def test_all_zeros_is_deceptive_peak(self):
+        pop = jnp.zeros((4, 160), jnp.float32)
+        got = trap.trap_fitness(pop)
+        # 40 blocks x a=1 each.
+        np.testing.assert_allclose(np.asarray(got), 40.0, rtol=1e-6)
+
+    def test_rejects_misaligned_bits(self):
+        with pytest.raises(ValueError):
+            trap.trap_fitness(jnp.zeros((2, 7), jnp.float32))
+
+    def test_output_dtype_and_shape(self):
+        pop = random_pop(0, 17, 160)
+        out = trap.trap_fitness(pop)
+        assert out.shape == (17,)
+        assert out.dtype == jnp.float32

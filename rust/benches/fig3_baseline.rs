@@ -1,0 +1,54 @@
+//! E1 / Figure 3: baseline time-to-solution for the 40x4 trap function,
+//! population 512 vs 1024, N independent runs capped at 5M evaluations.
+//!
+//! Paper reference (section 3): pop=512 -> 66% success, mean 68.97s;
+//! pop=1024 -> 100% success, mean 3.46s. Absolute times differ by
+//! hardware/engine; the *shape* to reproduce is: bigger population ->
+//! higher success rate and much lower time-to-solution.
+//!
+//! Quick profile by default; NODIO_BENCH_FULL=1 for the paper's 50 runs.
+
+use nodio::bench::Table;
+use nodio::client::EngineChoice;
+use nodio::sim::run_baseline;
+
+fn main() {
+    let full = std::env::var("NODIO_BENCH_FULL").is_ok();
+    let (runs, max_evals) = if full { (50, 5_000_000) } else { (10, 2_000_000) };
+    println!(
+        "== Figure 3 reproduction: trap-40 baseline ({runs} runs, cap {max_evals} evals) =="
+    );
+
+    let mut table = Table::new(&[
+        "engine", "pop", "success %", "time mean s", "time median s",
+        "time q1..q3", "evals mean",
+    ]);
+
+    for (engine, engine_runs) in [
+        (EngineChoice::Native, runs),
+        // XLA rows use fewer runs (each epoch is a full artifact exec).
+        (EngineChoice::XlaPallas, if full { 10 } else { 3 }),
+    ] {
+        for pop in [512usize, 1024] {
+            let report =
+                run_baseline(engine, pop, engine_runs, max_evals, 42)
+                    .expect("baseline run");
+            let times = report.time_summary();
+            let evals = report.evals_summary();
+            table.row(&[
+                engine.as_str().into(),
+                pop.to_string(),
+                format!("{:.0}", report.success_rate() * 100.0),
+                format!("{:.3}", times.mean),
+                format!("{:.3}", times.median),
+                format!("{:.3}..{:.3}", times.q1, times.q3),
+                format!("{:.0}", evals.mean),
+            ]);
+        }
+    }
+    table.print();
+    println!(
+        "\npaper shape: pop 1024 should dominate pop 512 on success rate and \
+         be ~an order of magnitude faster on mean time-to-solution."
+    );
+}

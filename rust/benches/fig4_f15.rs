@@ -1,0 +1,103 @@
+//! E2 / Figure 4: runtime of 10,000 CEC2010-F15 evaluations (D=1000, m=50)
+//! per engine and batch size, plus the Web-Worker scaling rows.
+//!
+//! Paper reference (section 3.1): Matlab 935ms, Java 991ms, JS in Chrome
+//! 1238ms / Node 1234ms; two parallel workers 1279ms each (~no overhead).
+//! Shape to reproduce: all engines within a small constant factor; the
+//! portable engine (XLA artifacts) within ~2x of native; 2 parallel
+//! workers ~= 1 worker per-worker time.
+
+use std::time::Instant;
+
+use nodio::bench::Table;
+use nodio::problems::F15Instance;
+use nodio::rng::{Rng64, SplitMix64};
+use nodio::runtime::{NativeEngine, XlaEngine};
+
+const EVALS: usize = 10_000;
+
+fn candidates(seed: u64, n: usize, dim: usize) -> Vec<f32> {
+    let mut rng = SplitMix64::new(seed);
+    (0..n * dim).map(|_| (rng.uniform() * 10.0 - 5.0) as f32).collect()
+}
+
+fn ms_per_10k(elapsed: std::time::Duration, evals: usize) -> f64 {
+    elapsed.as_secs_f64() * 1000.0 * 10_000.0 / evals as f64
+}
+
+fn main() -> anyhow::Result<()> {
+    println!("== Figure 4 reproduction: 10,000 F15 evaluations ==");
+    let inst = F15Instance::paper(7);
+
+    let mut table = Table::new(&["engine", "batch", "ms / 10k evals"]);
+    for batch in [1usize, 16, 128] {
+        let rounds = EVALS / batch;
+        let actual = rounds * batch;
+        let x = candidates(batch as u64, batch, inst.dim);
+
+        // native
+        let mut native = NativeEngine::new().with_f15(inst.clone());
+        native.eval_f15_batch(&x, batch);
+        let t0 = Instant::now();
+        for _ in 0..rounds {
+            std::hint::black_box(native.eval_f15_batch(&x, batch));
+        }
+        table.row(&[
+            "native".into(),
+            batch.to_string(),
+            format!("{:.1}", ms_per_10k(t0.elapsed(), actual)),
+        ]);
+
+        // xla variants
+        let mut xla = XlaEngine::load_default()?;
+        for variant in ["jnp", "pallas"] {
+            xla.eval_f15(&x, batch, &inst, variant)?; // compile+warm
+            let t0 = Instant::now();
+            for _ in 0..rounds {
+                std::hint::black_box(xla.eval_f15(&x, batch, &inst, variant)?);
+            }
+            table.row(&[
+                format!("xla-{variant}"),
+                batch.to_string(),
+                format!("{:.1}", ms_per_10k(t0.elapsed(), actual)),
+            ]);
+        }
+    }
+    table.print();
+
+    // Worker rows (batch 16).
+    println!("\nworker scaling (xla-pallas, batch 16, {EVALS} evals/worker):");
+    let mut wt = Table::new(&["workers", "ms / 10k evals / worker"]);
+    for workers in [1usize, 2, 4] {
+        let t0 = Instant::now();
+        let handles: Vec<_> = (0..workers)
+            .map(|w| {
+                let inst = inst.clone();
+                std::thread::spawn(move || -> anyhow::Result<()> {
+                    let mut xla = XlaEngine::load_default()?;
+                    let x = candidates(w as u64 + 1, 16, inst.dim);
+                    xla.eval_f15(&x, 16, &inst, "pallas")?;
+                    for _ in 0..(EVALS / 16) {
+                        std::hint::black_box(
+                            xla.eval_f15(&x, 16, &inst, "pallas")?,
+                        );
+                    }
+                    Ok(())
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap()?;
+        }
+        wt.row(&[
+            workers.to_string(),
+            format!("{:.1}", ms_per_10k(t0.elapsed(), EVALS)),
+        ]);
+    }
+    wt.print();
+    println!(
+        "\npaper shape: per-worker time roughly flat 1->2 workers \
+         (JS: 1238 -> 1279ms)."
+    );
+    Ok(())
+}

@@ -1,0 +1,161 @@
+//! Microbenchmarks for the L3 hot paths, used by the performance pass
+//! (EXPERIMENTS.md §Perf): pool operations, JSON codec, HTTP parsing,
+//! RNG throughput, native fitness kernels, and the GA generation step.
+
+use nodio::bench::{bench, BenchConfig};
+use nodio::coordinator::{ChromosomePool, PoolEntry};
+use nodio::ea::{operators, BitString, Island, IslandConfig};
+use nodio::http::parse::RequestParser;
+use nodio::json;
+use nodio::problems::{BitProblem, F15Instance, Trap};
+use nodio::rng::{dist, Mt19937, Rng64, SplitMix64, Xoshiro256pp};
+
+fn main() {
+    let cfg = BenchConfig::default();
+    println!("== L3 microbenchmarks ==");
+
+    // ---- RNG throughput (per 1k draws) --------------------------------
+    {
+        let mut mt = Mt19937::new(1);
+        bench("rng: mt19937 1k u32", &cfg, || {
+            let mut acc = 0u32;
+            for _ in 0..1000 {
+                acc = acc.wrapping_add(mt.next_u32());
+            }
+            std::hint::black_box(acc);
+        });
+        let mut xo = Xoshiro256pp::new(1);
+        bench("rng: xoshiro256++ 1k u64", &cfg, || {
+            let mut acc = 0u64;
+            for _ in 0..1000 {
+                acc = acc.wrapping_add(xo.next_u64());
+            }
+            std::hint::black_box(acc);
+        });
+    }
+
+    // ---- Fitness kernels ------------------------------------------------
+    {
+        let trap = Trap::paper();
+        let mut rng = SplitMix64::new(2);
+        let genome = BitString::random(&mut rng, 160);
+        bench("fitness: trap-40 single eval", &cfg, || {
+            std::hint::black_box(trap.eval(genome.bits()));
+        });
+
+        // Batched trap: byte loop vs packed SWAR (perf pass comparison).
+        let engine = nodio::runtime::NativeEngine::new();
+        let mut rng2 = SplitMix64::new(7);
+        let pop: Vec<f32> = (0..1024 * 160)
+            .map(|_| (rng2.next_u64() & 1) as f32)
+            .collect();
+        bench("fitness: trap batch p=1024 (byte loop)", &cfg, || {
+            std::hint::black_box(engine.eval_trap_batch(&pop, 1024));
+        });
+        bench("fitness: trap batch p=1024 (packed SWAR)", &cfg, || {
+            std::hint::black_box(engine.eval_trap_batch_packed(&pop, 1024));
+        });
+
+        let inst = F15Instance::paper(3);
+        let x = inst.random_candidate(&mut rng);
+        let mut scratch = inst.scratch();
+        bench("fitness: F15 single eval", &cfg, || {
+            std::hint::black_box(inst.eval_with(&x, &mut scratch));
+        });
+    }
+
+    // ---- GA generation step --------------------------------------------
+    {
+        let trap = Trap::paper();
+        let mut rng = Xoshiro256pp::new(4);
+        let mut island = Island::new(
+            IslandConfig { pop_size: 512, ..Default::default() },
+            &trap,
+            &mut rng,
+        );
+        bench("ea: one generation pop=512", &cfg, || {
+            std::hint::black_box(island.generation(&trap, &mut rng));
+        });
+
+        let a = BitString::random(&mut rng, 160);
+        let b = BitString::random(&mut rng, 160);
+        bench("ea: uniform crossover 160b", &cfg, || {
+            std::hint::black_box(operators::uniform_crossover(&mut rng, &a, &b));
+        });
+    }
+
+    // ---- Pool operations -------------------------------------------------
+    {
+        let mut pool = ChromosomePool::new(1024);
+        let mut rng = SplitMix64::new(5);
+        let chromosome = "01".repeat(80);
+        bench("pool: put (at capacity)", &cfg, || {
+            pool.put(
+                PoolEntry {
+                    chromosome: chromosome.clone(),
+                    fitness: 40.0,
+                    uuid: "bench".into(),
+                },
+                &mut rng,
+            );
+        });
+        bench("pool: random get", &cfg, || {
+            std::hint::black_box(pool.random(&mut rng));
+        });
+    }
+
+    // ---- JSON codec -------------------------------------------------------
+    {
+        let chromosome = "01".repeat(80);
+        let body = json::Json::obj(vec![
+            ("chromosome", chromosome.as_str().into()),
+            ("fitness", 73.25.into()),
+            ("uuid", "island-123e4567".into()),
+        ]);
+        let text = json::to_string(&body);
+        bench("json: serialize PUT body", &cfg, || {
+            std::hint::black_box(json::to_string(&body));
+        });
+        bench("json: parse PUT body", &cfg, || {
+            std::hint::black_box(json::parse(&text).unwrap());
+        });
+    }
+
+    // ---- HTTP parsing -----------------------------------------------------
+    {
+        let chromosome = "01".repeat(80);
+        let body = format!(
+            "{{\"chromosome\":\"{chromosome}\",\"fitness\":40.0,\"uuid\":\"u\"}}"
+        );
+        let raw = format!(
+            "PUT /experiment/chromosome HTTP/1.1\r\nhost: x\r\n\
+             content-type: application/json\r\ncontent-length: {}\r\n\r\n{}",
+            body.len(),
+            body
+        );
+        bench("http: parse PUT request", &cfg, || {
+            let mut p = RequestParser::new();
+            p.feed(raw.as_bytes());
+            std::hint::black_box(p.next_request().unwrap().unwrap());
+        });
+    }
+
+    // ---- Distributions ------------------------------------------------------
+    {
+        let mut rng = SplitMix64::new(6);
+        bench("dist: 1k tournament draws", &cfg, || {
+            let mut acc = 0usize;
+            for _ in 0..1000 {
+                acc += dist::range(&mut rng, 0, 512);
+            }
+            std::hint::black_box(acc);
+        });
+        bench("dist: 1k gaussians", &cfg, || {
+            let mut acc = 0.0f64;
+            for _ in 0..1000 {
+                acc += dist::gaussian(&mut rng);
+            }
+            std::hint::black_box(acc);
+        });
+    }
+}

@@ -1,0 +1,155 @@
+//! E3 / section 2 scalability claim: throughput and latency of the
+//! single-threaded non-blocking pool server vs concurrent clients, and
+//! the thread-per-connection ablation.
+//!
+//! "Although this single server is a bottleneck since it will eventually
+//! saturate, the fact that it runs as a non-blocking single thread allows
+//! the service of many requests. In fact, a limit in the number of
+//! simultaneous requests will be reached, but so far it has not been
+//! found" — this bench finds it.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use nodio::bench::Table;
+use nodio::coordinator::{PoolServer, PoolServerConfig};
+use nodio::http::{HttpClient, Method, Request, Response, Service};
+use nodio::http::threaded::ThreadedServer;
+use nodio::json::Json;
+use nodio::util::Histogram;
+
+/// One client thread: PUT/GET migration pairs until `stop`.
+fn hammer(
+    addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    count: Arc<AtomicU64>,
+    uuid: String,
+) -> Histogram {
+    let mut hist = Histogram::new();
+    let mut client = match HttpClient::connect(addr) {
+        Ok(c) => c,
+        Err(_) => return hist,
+    };
+    let chromosome = "01".repeat(80);
+    let body = Json::obj(vec![
+        ("chromosome", chromosome.as_str().into()),
+        ("fitness", 40.0.into()),
+        ("uuid", uuid.as_str().into()),
+    ]);
+    let put = Request::new(Method::Put, "/experiment/chromosome").with_json(&body);
+    let get = Request::new(Method::Get, "/experiment/random");
+    while !stop.load(Ordering::Acquire) {
+        let t0 = Instant::now();
+        if client.send(&put).is_err() {
+            break;
+        }
+        if client.send(&get).is_err() {
+            break;
+        }
+        hist.record(t0.elapsed());
+        count.fetch_add(2, Ordering::Relaxed);
+    }
+    hist
+}
+
+fn run_round(addr: std::net::SocketAddr, clients: usize, secs: f64) -> (u64, Histogram) {
+    let stop = Arc::new(AtomicBool::new(false));
+    let count = Arc::new(AtomicU64::new(0));
+    let threads: Vec<_> = (0..clients)
+        .map(|i| {
+            let stop = stop.clone();
+            let count = count.clone();
+            std::thread::spawn(move || {
+                hammer(addr, stop, count, format!("bench-{i}"))
+            })
+        })
+        .collect();
+    std::thread::sleep(Duration::from_secs_f64(secs));
+    stop.store(true, Ordering::Release);
+    let mut hist = Histogram::new();
+    for t in threads {
+        hist.merge(&t.join().unwrap());
+    }
+    (count.load(Ordering::Relaxed), hist)
+}
+
+fn main() {
+    let full = std::env::var("NODIO_BENCH_FULL").is_ok();
+    let secs = if full { 3.0 } else { 1.0 };
+    let client_counts: &[usize] = if full {
+        &[1, 2, 4, 8, 16, 32, 64, 128, 256]
+    } else {
+        &[1, 4, 16, 64]
+    };
+
+    println!("== E3: pool server scalability (round = {secs}s of PUT+GET pairs) ==");
+    let mut table = Table::new(&[
+        "server", "clients", "req/s", "pair p50", "pair p99",
+    ]);
+
+    // Event-loop server (the NodIO architecture).
+    for &clients in client_counts {
+        let handle = PoolServer::spawn(
+            "127.0.0.1:0",
+            PoolServerConfig {
+                target_fitness: 1e18, // never solve during bench
+                ..Default::default()
+            },
+        )
+        .expect("server");
+        let (reqs, hist) = run_round(handle.addr, clients, secs);
+        table.row(&[
+            "event-loop".into(),
+            clients.to_string(),
+            format!("{:.0}", reqs as f64 / secs),
+            format!("{:?}", hist.quantile(0.50)),
+            format!("{:?}", hist.quantile(0.99)),
+        ]);
+        handle.stop();
+    }
+
+    // Thread-per-connection ablation with a locked echo-style service.
+    struct LockedPoolish {
+        entries: Vec<String>,
+    }
+    impl Service for LockedPoolish {
+        fn handle(&mut self, req: &Request) -> Response {
+            match req.method {
+                Method::Put => {
+                    if self.entries.len() < 1024 {
+                        self.entries.push("x".into());
+                    }
+                    Response::json(&Json::obj(vec![("solved", false.into())]))
+                }
+                _ => Response::json(&Json::obj(vec![(
+                    "chromosome",
+                    "01".repeat(80).into(),
+                )])),
+            }
+        }
+    }
+    for &clients in client_counts {
+        let server = ThreadedServer::spawn(
+            "127.0.0.1:0",
+            LockedPoolish { entries: Vec::new() },
+        )
+        .expect("threaded server");
+        let (reqs, hist) = run_round(server.addr, clients, secs);
+        table.row(&[
+            "thread-per-conn".into(),
+            clients.to_string(),
+            format!("{:.0}", reqs as f64 / secs),
+            format!("{:?}", hist.quantile(0.50)),
+            format!("{:?}", hist.quantile(0.99)),
+        ]);
+        server.stop();
+    }
+
+    table.print();
+    println!(
+        "\npaper shape: the single-threaded non-blocking server sustains \
+         throughput as clients grow until a saturation knee; latency stays \
+         flat well past the client counts a volunteer experiment sees."
+    );
+}

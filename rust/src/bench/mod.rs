@@ -1,0 +1,216 @@
+//! Mini benchmark harness (criterion is unavailable offline).
+//!
+//! `cargo bench` targets are `harness = false` binaries built on this:
+//! warmup, timed sampling with robust statistics, and markdown tables that
+//! mirror the paper's figures (EXPERIMENTS.md embeds their output).
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats::Summary;
+use crate::util::{fmt_count, fmt_duration};
+
+/// Sampling policy.
+#[derive(Debug, Clone)]
+pub struct BenchConfig {
+    /// Warmup time before measurement starts.
+    pub warmup: Duration,
+    /// Minimum number of measured samples.
+    pub min_samples: usize,
+    /// Stop sampling after this much measured time (whichever of
+    /// samples/time is satisfied *last* wins, bounded by `max_samples`).
+    pub target_time: Duration,
+    pub max_samples: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig {
+            warmup: Duration::from_millis(200),
+            min_samples: 10,
+            target_time: Duration::from_secs(2),
+            max_samples: 1000,
+        }
+    }
+}
+
+impl BenchConfig {
+    /// A faster profile for long-running end-to-end cases.
+    pub fn quick() -> BenchConfig {
+        BenchConfig {
+            warmup: Duration::from_millis(50),
+            min_samples: 5,
+            target_time: Duration::from_millis(500),
+            max_samples: 100,
+        }
+    }
+}
+
+/// Result of one benchmark case: per-iteration wall time statistics.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub summary: Summary,
+}
+
+impl BenchResult {
+    pub fn mean(&self) -> Duration {
+        Duration::from_secs_f64(self.summary.mean.max(0.0))
+    }
+
+    pub fn median(&self) -> Duration {
+        Duration::from_secs_f64(self.summary.median.max(0.0))
+    }
+
+    pub fn line(&self) -> String {
+        format!(
+            "{:<40} mean {:>10}  median {:>10}  (n={})",
+            self.name,
+            fmt_duration(self.mean()),
+            fmt_duration(self.median()),
+            self.summary.n,
+        )
+    }
+}
+
+/// Time `f` under `config`, printing the result line.
+pub fn bench(name: &str, config: &BenchConfig, mut f: impl FnMut()) -> BenchResult {
+    // Warmup.
+    let w0 = Instant::now();
+    while w0.elapsed() < config.warmup {
+        f();
+    }
+    // Measure.
+    let mut samples = Vec::new();
+    let m0 = Instant::now();
+    while samples.len() < config.max_samples
+        && (samples.len() < config.min_samples || m0.elapsed() < config.target_time)
+    {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    let result =
+        BenchResult { name: name.to_string(), summary: Summary::of(&samples) };
+    println!("{}", result.line());
+    result
+}
+
+/// Run `f` exactly once and report, for long end-to-end cases where
+/// repetition happens inside the workload (e.g. 50 GA runs).
+pub fn bench_once(name: &str, f: impl FnOnce()) -> Duration {
+    let t0 = Instant::now();
+    f();
+    let d = t0.elapsed();
+    println!("{name:<40} total {}", fmt_duration(d));
+    d
+}
+
+/// Markdown table builder for paper-style reports.
+#[derive(Debug, Default)]
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Table {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    pub fn to_markdown(&self) -> String {
+        let mut widths: Vec<usize> =
+            self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let fmt_row = |cells: &[String]| -> String {
+            let padded: Vec<String> = cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:<w$}", c, w = widths[i]))
+                .collect();
+            format!("| {} |", padded.join(" | "))
+        };
+        let mut out = String::new();
+        out.push_str(&fmt_row(&self.headers));
+        out.push('\n');
+        let dashes: Vec<String> =
+            widths.iter().map(|w| "-".repeat(*w)).collect();
+        out.push_str(&fmt_row(&dashes));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.to_markdown());
+    }
+}
+
+/// Throughput helper: items/sec formatted.
+pub fn rate(items: u64, elapsed: Duration) -> String {
+    let per_sec = items as f64 / elapsed.as_secs_f64();
+    format!("{}/s", fmt_count(per_sec as u64))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_samples() {
+        let cfg = BenchConfig {
+            warmup: Duration::from_millis(1),
+            min_samples: 5,
+            target_time: Duration::from_millis(10),
+            max_samples: 50,
+        };
+        let mut count = 0u64;
+        let r = bench("spin", &cfg, || {
+            count += 1;
+            std::hint::black_box(count);
+        });
+        assert!(r.summary.n >= 5);
+        assert!(r.summary.mean >= 0.0);
+        assert!(count > 0);
+    }
+
+    #[test]
+    fn table_markdown_shape() {
+        let mut t = Table::new(&["engine", "ms"]);
+        t.row(&["native".into(), "991".into()]);
+        t.row(&["xla-pallas".into(), "1238".into()]);
+        let md = t.to_markdown();
+        let lines: Vec<&str> = md.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].contains("engine"));
+        assert!(lines[1].starts_with("| -"));
+        assert!(lines[3].contains("xla-pallas"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_arity_checked() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn rate_formats() {
+        assert_eq!(rate(1000, Duration::from_secs(1)), "1,000/s");
+    }
+}

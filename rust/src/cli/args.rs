@@ -1,0 +1,119 @@
+//! Minimal argument parsing: one positional subcommand plus
+//! `--key value` / `--flag` options.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub command: String,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Args, String> {
+        let mut args = Args::default();
+        let mut iter = argv.iter().peekable();
+        match iter.next() {
+            Some(cmd) if !cmd.starts_with("--") => {
+                args.command = cmd.clone();
+            }
+            Some(cmd) => return Err(format!("expected subcommand, got {cmd}")),
+            None => return Err("missing subcommand".into()),
+        }
+        while let Some(tok) = iter.next() {
+            let key = tok
+                .strip_prefix("--")
+                .ok_or_else(|| format!("unexpected argument {tok}"))?;
+            // a flag if next token is absent or another option
+            match iter.peek() {
+                Some(next) if !next.starts_with("--") => {
+                    let value = iter.next().unwrap().clone();
+                    args.options.insert(key.to_string(), value);
+                }
+                _ => args.flags.push(key.to_string()),
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{name}: expected integer, got {v}")),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{name}: expected integer, got {v}")),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{name}: expected number, got {v}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(tokens: &[&str]) -> Args {
+        let owned: Vec<String> = tokens.iter().map(|s| s.to_string()).collect();
+        Args::parse(&owned).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse(&["server", "--addr", "0.0.0.0:8080", "--verbose"]);
+        assert_eq!(a.command, "server");
+        assert_eq!(a.get("addr"), Some("0.0.0.0:8080"));
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn typed_getters() {
+        let a = parse(&["x", "--pop", "512", "--rate", "2.5"]);
+        assert_eq!(a.get_usize("pop", 0).unwrap(), 512);
+        assert_eq!(a.get_f64("rate", 0.0).unwrap(), 2.5);
+        assert_eq!(a.get_u64("missing", 9).unwrap(), 9);
+        assert!(a.get_usize("rate", 0).is_err());
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse(&["client", "--w2"]);
+        assert!(a.flag("w2"));
+    }
+
+    #[test]
+    fn errors() {
+        assert!(Args::parse(&[]).is_err());
+        assert!(Args::parse(&["--oops".to_string()]).is_err());
+        assert!(Args::parse(&["cmd".to_string(), "stray".to_string()]).is_err());
+    }
+}

@@ -1,0 +1,308 @@
+//! Subcommand implementations.
+
+use std::sync::atomic::AtomicBool;
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::args::Args;
+use crate::bench::Table;
+use crate::client::driver::EngineChoice;
+use crate::client::volunteer::{ClientConfig, VolunteerClient};
+use crate::client::worker::WorkerMode;
+use crate::coordinator::{PoolServer, PoolServerConfig};
+use crate::problems::F15Instance;
+use crate::runtime::{NativeEngine, XlaEngine};
+use crate::sim::{run_baseline, run_swarm, run_swarm_trace, ChurnConfig,
+                 SwarmConfig, Trace, TraceModel};
+use crate::util::fmt_duration;
+
+pub const USAGE: &str = "\
+usage: nodio <command> [options]
+
+commands:
+  server    --addr 127.0.0.1:8080 [--target 80] [--bits 160] [--log x.jsonl]
+            run the pool server until killed
+  client    --server HOST:PORT [--engine native|xla|jnp] [--pop 256]
+            [--epochs N] [--uuid NAME] [--no-restart]
+            run one volunteer island
+  swarm     [--clients 4] [--engine native|xla|jnp] [--mode basic|w2]
+            [--solutions 1] [--timeout-s 60] [--churn-rate R]
+            [--session-s S] [--seed N]
+            in-process server + simulated volunteers (experiment E6)
+  baseline  [--pop 512] [--runs 50] [--max-evals 5000000]
+            [--engine native|xla|jnp] [--seed N]
+            the Figure 3 desktop baseline (experiment E1)
+  shootout  [--evals 10000] [--batch 16] [--seed N]
+            the Figure 4 engine comparison, quick form (experiment E2)
+  trace     generate --out trace.jsonl [--horizon-s 120] [--rate 0.5]
+            [--seed N] | stats --in trace.jsonl |
+            replay --in trace.jsonl [--engine E] [--scale 1.0]
+            volunteer-session traces: create, inspect, replay (X5)
+";
+
+pub fn dispatch(args: &Args) -> Result<()> {
+    match args.command.as_str() {
+        "server" => cmd_server(args),
+        "client" => cmd_client(args),
+        "swarm" => cmd_swarm(args),
+        "baseline" => cmd_baseline(args),
+        "shootout" => cmd_shootout(args),
+        "trace" => cmd_trace(args),
+        "help" | "--help" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown command {other}\n{USAGE}"),
+    }
+}
+
+fn engine_arg(args: &Args) -> Result<EngineChoice> {
+    let name = args.get_or("engine", "native");
+    EngineChoice::parse(name).ok_or_else(|| anyhow!("unknown engine {name}"))
+}
+
+fn cmd_server(args: &Args) -> Result<()> {
+    let addr = args.get_or("addr", "127.0.0.1:8080").to_string();
+    let config = PoolServerConfig {
+        target_fitness: args.get_f64("target", 80.0).map_err(|e| anyhow!(e))?,
+        n_bits: args.get_usize("bits", 160).map_err(|e| anyhow!(e))?,
+        log_path: args.get("log").map(std::path::PathBuf::from),
+        ..Default::default()
+    };
+    let handle = PoolServer::spawn(&addr, config)?;
+    println!("nodio pool server listening on {}", handle.addr);
+    println!("routes: PUT /experiment/chromosome, GET /experiment/random,");
+    println!("        GET /experiment/state, GET /stats, POST /experiment/reset");
+    // Run until killed.
+    loop {
+        std::thread::sleep(Duration::from_secs(3600));
+    }
+}
+
+fn cmd_client(args: &Args) -> Result<()> {
+    let server = args
+        .get("server")
+        .ok_or_else(|| anyhow!("--server required"))?;
+    let addr = server
+        .parse()
+        .map_err(|e| anyhow!("bad --server {server}: {e}"))?;
+    let config = ClientConfig {
+        server: Some(addr),
+        engine: engine_arg(args)?,
+        pop_size: args.get_usize("pop", 256).map_err(|e| anyhow!(e))?,
+        max_epochs: args.get_u64("epochs", u64::MAX).map_err(|e| anyhow!(e))?,
+        uuid: args.get_or("uuid", "cli-island").to_string(),
+        restart_on_solution: !args.flag("no-restart"),
+        ..Default::default()
+    };
+    println!(
+        "volunteer {} (engine {}, pop {}) -> {}",
+        config.uuid,
+        config.engine.as_str(),
+        config.pop_size,
+        addr
+    );
+    let stop = AtomicBool::new(false);
+    let mut client = VolunteerClient::new(config)?;
+    let stats = client.run(&stop);
+    println!("{stats:#?}");
+    Ok(())
+}
+
+fn cmd_swarm(args: &Args) -> Result<()> {
+    let churn_rate = args.get_f64("churn-rate", 0.0).map_err(|e| anyhow!(e))?;
+    let config = SwarmConfig {
+        n_clients: args.get_usize("clients", 4).map_err(|e| anyhow!(e))?,
+        engine: engine_arg(args)?,
+        mode: match args.get_or("mode", "w2") {
+            "basic" => WorkerMode::Basic,
+            "w2" => WorkerMode::W2,
+            m => bail!("unknown mode {m}"),
+        },
+        target_solutions: args.get_u64("solutions", 1).map_err(|e| anyhow!(e))?,
+        timeout: Duration::from_secs_f64(
+            args.get_f64("timeout-s", 60.0).map_err(|e| anyhow!(e))?,
+        ),
+        seed: args.get_u64("seed", 0xC0FFEE).map_err(|e| anyhow!(e))?,
+        churn: (churn_rate > 0.0).then(|| ChurnConfig {
+            arrival_rate: churn_rate,
+            mean_session_s: args.get_f64("session-s", 10.0).unwrap_or(10.0),
+            max_concurrent: args.get_usize("max-clients", 16).unwrap_or(16),
+        }),
+        ..Default::default()
+    };
+    println!(
+        "swarm: {} clients ({:?}, {}), target {} solutions",
+        config.n_clients,
+        config.mode,
+        config.engine.as_str(),
+        config.target_solutions
+    );
+    let report = run_swarm(config)?;
+    println!(
+        "solutions={} elapsed={} first={} requests={} evals={}",
+        report.solutions,
+        fmt_duration(report.elapsed),
+        report
+            .time_to_first
+            .map(fmt_duration)
+            .unwrap_or_else(|| "-".into()),
+        report.total_requests,
+        report.total_evaluations(),
+    );
+    for (i, t) in report.experiment_times.iter().enumerate() {
+        println!("  experiment {i}: {t:.2}s");
+    }
+    Ok(())
+}
+
+fn cmd_baseline(args: &Args) -> Result<()> {
+    let pop = args.get_usize("pop", 512).map_err(|e| anyhow!(e))?;
+    let runs = args.get_usize("runs", 50).map_err(|e| anyhow!(e))?;
+    let max_evals =
+        args.get_u64("max-evals", 5_000_000).map_err(|e| anyhow!(e))?;
+    let seed = args.get_u64("seed", 42).map_err(|e| anyhow!(e))?;
+    let engine = engine_arg(args)?;
+    println!(
+        "baseline: {} runs, pop {}, cap {} evals, engine {}",
+        runs,
+        pop,
+        max_evals,
+        engine.as_str()
+    );
+    let report = run_baseline(engine, pop, runs, max_evals, seed)?;
+    let times = report.time_summary();
+    let evals = report.evals_summary();
+    println!(
+        "success rate: {:.0}% ({}/{} runs)",
+        report.success_rate() * 100.0,
+        report.runs.iter().filter(|r| r.solved).count(),
+        report.runs.len()
+    );
+    println!(
+        "time-to-solution (successful): mean {:.3}s median {:.3}s [q1 {:.3} q3 {:.3}]",
+        times.mean, times.median, times.q1, times.q3
+    );
+    println!(
+        "evaluations (successful): mean {:.0} median {:.0}",
+        evals.mean, evals.median
+    );
+    Ok(())
+}
+
+fn cmd_shootout(args: &Args) -> Result<()> {
+    let evals = args.get_usize("evals", 10_000).map_err(|e| anyhow!(e))?;
+    let batch = args.get_usize("batch", 16).map_err(|e| anyhow!(e))?;
+    let seed = args.get_u64("seed", 1).map_err(|e| anyhow!(e))?;
+    if ![1usize, 16, 128].contains(&batch) {
+        bail!("--batch must be one of 1, 16, 128 (available artifacts)");
+    }
+    println!("F15 shootout: {evals} evaluations, batch {batch} (paper Figure 4)");
+
+    let inst = F15Instance::paper(seed);
+    let mut rng = crate::rng::SplitMix64::new(seed ^ 0xF15);
+    use crate::rng::Rng64;
+    let x: Vec<f32> = (0..batch * inst.dim)
+        .map(|_| (rng.uniform() * 10.0 - 5.0) as f32)
+        .collect();
+    let rounds = evals / batch;
+
+    let mut table = Table::new(&["engine", "ms / 10k evals"]);
+
+    // Native.
+    let mut native = NativeEngine::new().with_f15(inst.clone());
+    let t0 = std::time::Instant::now();
+    for _ in 0..rounds {
+        std::hint::black_box(native.eval_f15_batch(&x, batch));
+    }
+    let native_ms = t0.elapsed().as_secs_f64() * 1000.0 * 10_000.0 / evals as f64;
+    table.row(&["native (rust)".into(), format!("{native_ms:.1}")]);
+
+    // XLA variants.
+    let mut xla = XlaEngine::load_default()?;
+    for variant in ["jnp", "pallas"] {
+        // warmup compiles
+        xla.eval_f15(&x, batch, &inst, variant)?;
+        let t0 = std::time::Instant::now();
+        for _ in 0..rounds {
+            std::hint::black_box(xla.eval_f15(&x, batch, &inst, variant)?);
+        }
+        let ms = t0.elapsed().as_secs_f64() * 1000.0 * 10_000.0 / evals as f64;
+        table.row(&[format!("xla-{variant}"), format!("{ms:.1}")]);
+    }
+    table.print();
+    println!("(paper: Matlab 935ms, Java 991ms, JS ~1234-1279ms — shape target: engines within ~2x)");
+    Ok(())
+}
+
+fn cmd_trace(args: &Args) -> Result<()> {
+    // subaction is passed as a flag-like bare option: nodio trace generate ...
+    // Args puts bare words after the command into neither options nor flags,
+    // so we use --action or detect via known flags; simplest: --gen/--stats
+    // aliases plus explicit options.
+    let action = args
+        .get("action")
+        .map(str::to_string)
+        .or_else(|| {
+            for a in ["generate", "stats", "replay"] {
+                if args.flag(a) {
+                    return Some(a.to_string());
+                }
+            }
+            None
+        })
+        .ok_or_else(|| anyhow!("trace: pass --generate/--stats/--replay or --action NAME"))?;
+    match action.as_str() {
+        "generate" => {
+            let out = args.get("out").unwrap_or("trace.jsonl");
+            let model = TraceModel {
+                arrival_rate: args.get_f64("rate", 0.5).map_err(|e| anyhow!(e))?,
+                ..Default::default()
+            };
+            let horizon = args.get_f64("horizon-s", 120.0).map_err(|e| anyhow!(e))?;
+            let seed = args.get_u64("seed", 1).map_err(|e| anyhow!(e))?;
+            let trace = Trace::generate(&model, horizon, seed);
+            trace.save(std::path::Path::new(out))?;
+            println!(
+                "wrote {} sessions (peak concurrency {}, {:.0} worker-seconds) to {out}",
+                trace.sessions.len(),
+                trace.peak_concurrency(),
+                trace.donated_worker_seconds()
+            );
+            Ok(())
+        }
+        "stats" => {
+            let input = args.get("in").ok_or_else(|| anyhow!("--in required"))?;
+            let trace = Trace::load(std::path::Path::new(input))?;
+            println!("sessions: {}", trace.sessions.len());
+            println!("peak concurrency: {}", trace.peak_concurrency());
+            println!("donated worker-seconds: {:.0}", trace.donated_worker_seconds());
+            Ok(())
+        }
+        "replay" => {
+            let input = args.get("in").ok_or_else(|| anyhow!("--in required"))?;
+            let trace = Trace::load(std::path::Path::new(input))?;
+            let scale = args.get_f64("scale", 1.0).map_err(|e| anyhow!(e))?;
+            let report = run_swarm_trace(
+                &trace,
+                engine_arg(args)?,
+                args.get_u64("solutions", 1).map_err(|e| anyhow!(e))?,
+                Duration::from_secs_f64(
+                    args.get_f64("timeout-s", 120.0).map_err(|e| anyhow!(e))?,
+                ),
+                scale,
+                Default::default(),
+            )?;
+            println!(
+                "replayed {} sessions: {} solutions in {} ({} requests)",
+                report.clients_spawned,
+                report.solutions,
+                fmt_duration(report.elapsed),
+                report.total_requests
+            );
+            Ok(())
+        }
+        other => bail!("unknown trace action {other}"),
+    }
+}

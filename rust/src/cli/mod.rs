@@ -1,0 +1,35 @@
+//! Command-line interface (clap is unavailable offline; [`args`] is a
+//! small flag parser).
+//!
+//! Subcommands:
+//!
+//! * `nodio server`   — run the pool server (the NodIO Node.js process)
+//! * `nodio client`   — run a volunteer client against a server
+//! * `nodio swarm`    — in-process server + N simulated volunteers (E6)
+//! * `nodio baseline` — the Figure 3 desktop baseline (E1)
+//! * `nodio shootout` — the Figure 4 engine comparison (E2, quick form)
+
+pub mod args;
+pub mod commands;
+
+pub use args::Args;
+
+/// CLI entrypoint used by `main.rs`. Returns the process exit code.
+pub fn run() -> i32 {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = match Args::parse(&argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("nodio: {e}");
+            eprintln!("{}", commands::USAGE);
+            return 2;
+        }
+    };
+    match commands::dispatch(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("nodio: {e}");
+            1
+        }
+    }
+}

@@ -1,0 +1,314 @@
+//! The full Figure 2 client: a "browser" with a main thread and worker
+//! islands communicating by asynchronous message passing.
+//!
+//! The paper's sequence diagram distinguishes the *main script* (renders
+//! the page, creates workers, updates the plot on iteration messages) from
+//! the *worker global scope* (runs the EA, no DOM access, posts messages).
+//! [`BrowserClient`] reproduces that structure with OS threads and mpsc
+//! channels: workers never touch the shared display state, they post
+//! [`WorkerMsg`]s; the main thread owns the "DOM" ([`DisplayState`] — the
+//! Chart.js analog) and the restart decisions (Figure 2 steps 5–7).
+
+use std::net::SocketAddr;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+use super::driver::EngineChoice;
+use super::volunteer::{ClientConfig, ClientStats, VolunteerClient};
+use crate::rng::{dist, Rng64, SplitMix64};
+
+/// Messages a worker posts to the main thread (the `postMessage` analog).
+#[derive(Debug, Clone)]
+pub enum WorkerMsg {
+    /// Worker created its island and entered the EA loop.
+    Started { worker: usize, pop_size: usize },
+    /// End of one migration epoch (the paper posts every n generations).
+    Iteration {
+        worker: usize,
+        generation: u64,
+        best_fitness: f64,
+    },
+    /// The worker's island reached the target fitness.
+    Solved { worker: usize, chromosome: String, fitness: f64 },
+    /// Worker exited (stop flag or epoch budget).
+    Stopped { worker: usize, stats: Box<ClientStats> },
+}
+
+/// The main thread's view — what the paper renders into the page: a
+/// fitness-over-generations series per worker plus totals.
+#[derive(Debug, Default, Clone)]
+pub struct DisplayState {
+    /// (generation, best fitness) samples per worker — the plot data.
+    pub series: Vec<Vec<(u64, f64)>>,
+    pub solutions: Vec<(usize, String)>,
+    pub iterations_seen: u64,
+    pub workers_started: usize,
+    pub workers_stopped: usize,
+}
+
+impl DisplayState {
+    fn ensure_worker(&mut self, worker: usize) {
+        while self.series.len() <= worker {
+            self.series.push(Vec::new());
+        }
+    }
+
+    /// Apply one message (the paper's `onmessage` callback).
+    pub fn apply(&mut self, msg: &WorkerMsg) {
+        match msg {
+            WorkerMsg::Started { worker, .. } => {
+                self.ensure_worker(*worker);
+                self.workers_started += 1;
+            }
+            WorkerMsg::Iteration { worker, generation, best_fitness } => {
+                self.ensure_worker(*worker);
+                self.iterations_seen += 1;
+                self.series[*worker].push((*generation, *best_fitness));
+            }
+            WorkerMsg::Solved { worker, chromosome, .. } => {
+                self.solutions.push((*worker, chromosome.clone()));
+            }
+            WorkerMsg::Stopped { .. } => {
+                self.workers_stopped += 1;
+            }
+        }
+    }
+
+    /// Best fitness ever plotted for a worker.
+    pub fn best_of(&self, worker: usize) -> Option<f64> {
+        self.series.get(worker)?.iter().map(|(_, f)| *f).fold(
+            None,
+            |acc: Option<f64>, f| Some(acc.map_or(f, |a| a.max(f))),
+        )
+    }
+}
+
+/// One browser visit: main thread + `workers` worker islands.
+pub struct BrowserClient {
+    stop: Arc<AtomicBool>,
+    rx: mpsc::Receiver<WorkerMsg>,
+    worker_threads: Vec<std::thread::JoinHandle<()>>,
+    pub display: DisplayState,
+}
+
+impl BrowserClient {
+    /// Open the page: create workers (Figure 2 step 3) and start their EA
+    /// loops. Population sizes follow W² (U[128, 256]) when `w2`.
+    pub fn open(
+        server: Option<SocketAddr>,
+        workers: usize,
+        engine: EngineChoice,
+        w2: bool,
+        seed: u64,
+        max_epochs: u64,
+    ) -> BrowserClient {
+        let stop = Arc::new(AtomicBool::new(false));
+        let (tx, rx) = mpsc::channel();
+        let mut seeds = SplitMix64::new(seed);
+        let worker_threads = (0..workers)
+            .map(|w| {
+                let tx = tx.clone();
+                let stop = stop.clone();
+                let worker_seed = seeds.next_u64();
+                std::thread::Builder::new()
+                    .name(format!("browser-worker-{w}"))
+                    .spawn(move || {
+                        worker_main(w, server, engine, w2, worker_seed,
+                                    max_epochs, tx, stop);
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        BrowserClient {
+            stop,
+            rx,
+            worker_threads,
+            display: DisplayState::default(),
+        }
+    }
+
+    /// Pump pending worker messages into the display (non-blocking) — one
+    /// main-thread event-loop turn.
+    pub fn pump(&mut self) -> usize {
+        let mut n = 0;
+        while let Ok(msg) = self.rx.try_recv() {
+            self.display.apply(&msg);
+            n += 1;
+        }
+        n
+    }
+
+    /// Block until all workers stop, pumping messages throughout.
+    pub fn run_to_completion(mut self) -> DisplayState {
+        loop {
+            self.pump();
+            if self.display.workers_stopped >= self.worker_threads.len() {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        for t in self.worker_threads.drain(..) {
+            let _ = t.join();
+        }
+        self.pump();
+        self.display
+    }
+
+    /// Close the tab: signal workers and collect the final display.
+    pub fn close(self) -> DisplayState {
+        self.stop.store(true, Ordering::Release);
+        self.run_to_completion()
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn worker_main(
+    worker: usize,
+    server: Option<SocketAddr>,
+    engine: EngineChoice,
+    w2: bool,
+    seed: u64,
+    max_epochs: u64,
+    tx: mpsc::Sender<WorkerMsg>,
+    stop: Arc<AtomicBool>,
+) {
+    let mut rng = SplitMix64::new(seed);
+    let pop_size = if w2 { dist::range(&mut rng, 128, 257) } else { 512 };
+    let config = ClientConfig {
+        server,
+        engine,
+        pop_size,
+        seed,
+        uuid: format!("browser-w{worker}"),
+        restart_on_solution: w2,
+        max_epochs,
+        ..Default::default()
+    };
+    let mut client = match VolunteerClient::new(config) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("browser worker {worker}: {e}");
+            let _ = tx.send(WorkerMsg::Stopped {
+                worker,
+                stats: Box::default(),
+            });
+            return;
+        }
+    };
+    let _ = tx.send(WorkerMsg::Started { worker, pop_size });
+
+    // Drive epoch-by-epoch so each epoch yields an Iteration message,
+    // mirroring the paper's per-n-generations postMessage.
+    let mut epoch = 0u64;
+    while !stop.load(Ordering::Acquire) && epoch < max_epochs {
+        let stats = client.run_epoch_step(&stop);
+        epoch += 1;
+        let Some(outcome) = stats else { break };
+        let _ = tx.send(WorkerMsg::Iteration {
+            worker,
+            generation: client.stats.generations,
+            best_fitness: outcome.0,
+        });
+        if outcome.1 {
+            let _ = tx.send(WorkerMsg::Solved {
+                worker,
+                chromosome: outcome.2,
+                fitness: outcome.0,
+            });
+            if !w2 {
+                break;
+            }
+        }
+    }
+    let _ = tx.send(WorkerMsg::Stopped {
+        worker,
+        stats: Box::new(client.stats.clone()),
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{PoolServer, PoolServerConfig};
+
+    #[test]
+    fn display_state_applies_messages() {
+        let mut d = DisplayState::default();
+        d.apply(&WorkerMsg::Started { worker: 1, pop_size: 128 });
+        d.apply(&WorkerMsg::Iteration { worker: 1, generation: 100,
+                                        best_fitness: 50.0 });
+        d.apply(&WorkerMsg::Iteration { worker: 1, generation: 200,
+                                        best_fitness: 60.0 });
+        d.apply(&WorkerMsg::Solved { worker: 1, chromosome: "11".into(),
+                                     fitness: 80.0 });
+        d.apply(&WorkerMsg::Stopped { worker: 1, stats: Box::default() });
+        assert_eq!(d.workers_started, 1);
+        assert_eq!(d.workers_stopped, 1);
+        assert_eq!(d.iterations_seen, 2);
+        assert_eq!(d.best_of(1), Some(60.0));
+        assert_eq!(d.solutions.len(), 1);
+        assert_eq!(d.best_of(0), None); // padded worker rows stay empty
+    }
+
+    #[test]
+    fn browser_runs_two_workers_offline() {
+        let browser = BrowserClient::open(
+            None,
+            2,
+            EngineChoice::Native,
+            true,
+            42,
+            3,
+        );
+        let display = browser.run_to_completion();
+        assert_eq!(display.workers_started, 2);
+        assert_eq!(display.workers_stopped, 2);
+        // Each worker posts one Iteration per epoch.
+        assert_eq!(display.iterations_seen, 6);
+        assert!(display.best_of(0).unwrap() > 40.0);
+        assert!(display.best_of(1).unwrap() > 40.0);
+    }
+
+    #[test]
+    fn browser_against_server_reports_solutions() {
+        let handle = PoolServer::spawn(
+            "127.0.0.1:0",
+            PoolServerConfig::default(),
+        )
+        .unwrap();
+        let browser = BrowserClient::open(
+            Some(handle.addr),
+            2,
+            EngineChoice::Native,
+            true,
+            7,
+            40,
+        );
+        let display = browser.run_to_completion();
+        // With pop in [128,256] and 40 epochs, at least one island almost
+        // surely solves; when it does, the solution message carries the
+        // all-ones string.
+        for (_, sol) in &display.solutions {
+            assert_eq!(sol.len(), 160);
+            assert!(sol.bytes().all(|b| b == b'1'));
+        }
+        handle.stop();
+    }
+
+    #[test]
+    fn close_interrupts_workers() {
+        let mut browser = BrowserClient::open(
+            None,
+            2,
+            EngineChoice::Native,
+            true,
+            9,
+            u64::MAX,
+        );
+        std::thread::sleep(Duration::from_millis(100));
+        browser.pump();
+        let display = browser.close();
+        assert_eq!(display.workers_stopped, 2);
+    }
+}

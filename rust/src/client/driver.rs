@@ -1,0 +1,237 @@
+//! Engine-agnostic island driving: one type that runs migration epochs on
+//! either the native Rust engine or the AOT XLA artifacts.
+
+use anyhow::Result;
+
+use crate::ea::genome::BitString;
+use crate::ea::island::{Island, IslandConfig};
+use crate::problems::{BitProblem, Trap};
+use crate::rng::Xoshiro256pp;
+use crate::runtime::xla::{EpochState, XlaEngine};
+
+/// Which engine executes the island's generations (the paper's
+/// language/VM axis).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineChoice {
+    /// Pure Rust (compiled-language baseline).
+    Native,
+    /// AOT JAX with the Pallas fitness kernel, via PJRT.
+    XlaPallas,
+    /// AOT JAX with the pure-jnp fitness lowering, via PJRT.
+    XlaJnp,
+}
+
+impl EngineChoice {
+    pub fn parse(s: &str) -> Option<EngineChoice> {
+        Some(match s {
+            "native" => EngineChoice::Native,
+            "xla" | "xla-pallas" | "pallas" => EngineChoice::XlaPallas,
+            "xla-jnp" | "jnp" => EngineChoice::XlaJnp,
+            _ => return None,
+        })
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            EngineChoice::Native => "native",
+            EngineChoice::XlaPallas => "xla-pallas",
+            EngineChoice::XlaJnp => "xla-jnp",
+        }
+    }
+}
+
+/// Result of one migration epoch.
+#[derive(Debug, Clone)]
+pub struct EpochOutcome {
+    pub best: BitString,
+    pub best_fitness: f64,
+    pub gens_done: u64,
+    pub evaluations: u64,
+    pub solved: bool,
+}
+
+/// An island plus the engine that advances it.
+pub enum IslandDriver {
+    Native {
+        problem: Trap,
+        island: Island,
+        rng: Xoshiro256pp,
+    },
+    Xla {
+        engine: Box<XlaEngine>,
+        state: EpochState,
+        variant: &'static str,
+    },
+}
+
+impl IslandDriver {
+    /// Build a driver. For XLA engines `pop_size` must match an available
+    /// `ea_epoch_p*` artifact (see `Manifest::nearest_epoch_pop`).
+    pub fn new(choice: EngineChoice, pop_size: usize, seed: u64) -> Result<IslandDriver> {
+        let problem = Trap::paper();
+        match choice {
+            EngineChoice::Native => {
+                let mut rng = Xoshiro256pp::new(seed);
+                let island = Island::new(
+                    IslandConfig { pop_size, ..Default::default() },
+                    &problem,
+                    &mut rng,
+                );
+                Ok(IslandDriver::Native { problem, island, rng })
+            }
+            EngineChoice::XlaPallas | EngineChoice::XlaJnp => {
+                let engine = Box::new(XlaEngine::load_default()?);
+                let bits = engine.manifest().trap_bits;
+                let state = EpochState::random(
+                    pop_size,
+                    bits,
+                    problem.optimum() as f32,
+                    seed,
+                );
+                let variant = if choice == EngineChoice::XlaPallas {
+                    "pallas"
+                } else {
+                    "jnp"
+                };
+                Ok(IslandDriver::Xla { engine, state, variant })
+            }
+        }
+    }
+
+    pub fn pop_size(&self) -> usize {
+        match self {
+            IslandDriver::Native { island, .. } => island.pop.size(),
+            IslandDriver::Xla { state, .. } => state.pop_size,
+        }
+    }
+
+    /// Run one migration epoch (up to `gens` generations), optionally
+    /// injecting a pool immigrant first.
+    pub fn run_epoch(
+        &mut self,
+        gens: u64,
+        immigrant: Option<&BitString>,
+    ) -> Result<EpochOutcome> {
+        match self {
+            IslandDriver::Native { problem, island, rng } => {
+                if let Some(imm) = immigrant {
+                    island.inject(imm.clone(), problem, rng);
+                }
+                let evals_before = island.evaluations;
+                let gens_done = island.run_epoch(problem, gens, rng);
+                let (best, best_fitness) = island.best();
+                Ok(EpochOutcome {
+                    best: best.clone(),
+                    best_fitness,
+                    gens_done,
+                    evaluations: island.evaluations - evals_before,
+                    solved: problem.is_solution(best_fitness),
+                })
+            }
+            IslandDriver::Xla { engine, state, variant } => {
+                let result = engine.ea_epoch(state, immigrant, variant)?;
+                let best = state.chromosome(result.best_idx);
+                Ok(EpochOutcome {
+                    best,
+                    best_fitness: result.best_fitness as f64,
+                    gens_done: result.gens_done,
+                    // epoch evals: entry eval + one population per gen
+                    evaluations: (result.gens_done + 1)
+                        * state.pop_size as u64,
+                    solved: result.solved,
+                })
+            }
+        }
+    }
+
+    /// Reset to a fresh random population (worker restart, Figure 2 step 7:
+    /// "the worker process is not ended [...] only the parameters and
+    /// population are reset"). The XLA engine and its compiled executables
+    /// are reused — the expensive start-up cost is paid once, like the
+    /// paper's long-lived workers.
+    pub fn restart(&mut self, pop_size: usize, seed: u64) {
+        match self {
+            IslandDriver::Native { problem, island, rng } => {
+                let mut new_rng = Xoshiro256pp::new(seed);
+                *island = Island::new(
+                    IslandConfig { pop_size, ..Default::default() },
+                    problem,
+                    &mut new_rng,
+                );
+                *rng = new_rng;
+            }
+            IslandDriver::Xla { state, .. } => {
+                *state = EpochState::random(
+                    pop_size,
+                    state.bits,
+                    state.target,
+                    seed,
+                );
+            }
+        }
+    }
+
+    pub fn engine_name(&self) -> &'static str {
+        match self {
+            IslandDriver::Native { .. } => "native",
+            IslandDriver::Xla { variant, .. } => {
+                if *variant == "pallas" {
+                    "xla-pallas"
+                } else {
+                    "xla-jnp"
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn engine_choice_parsing() {
+        assert_eq!(EngineChoice::parse("native"), Some(EngineChoice::Native));
+        assert_eq!(EngineChoice::parse("xla"), Some(EngineChoice::XlaPallas));
+        assert_eq!(EngineChoice::parse("jnp"), Some(EngineChoice::XlaJnp));
+        assert_eq!(EngineChoice::parse("webasm"), None);
+        assert_eq!(EngineChoice::Native.as_str(), "native");
+    }
+
+    #[test]
+    fn native_driver_epoch_and_restart() {
+        let mut d = IslandDriver::new(EngineChoice::Native, 64, 1).unwrap();
+        assert_eq!(d.pop_size(), 64);
+        let out = d.run_epoch(5, None).unwrap();
+        assert_eq!(out.gens_done, 5);
+        assert_eq!(out.evaluations, 5 * 64); // 5 gens x pop (incl. elite re-eval)
+        assert!(!out.solved);
+        d.restart(128, 2);
+        assert_eq!(d.pop_size(), 128);
+    }
+
+    #[test]
+    fn native_driver_solves_with_immigrant() {
+        let mut d = IslandDriver::new(EngineChoice::Native, 32, 3).unwrap();
+        let solution = BitString::ones(160);
+        let out = d.run_epoch(10, Some(&solution)).unwrap();
+        assert!(out.solved);
+        assert_eq!(out.gens_done, 0);
+        assert_eq!(out.best_fitness, 80.0);
+        assert_eq!(out.best.count_ones(), 160);
+    }
+
+    #[test]
+    fn xla_driver_epoch_and_restart() {
+        let mut d = IslandDriver::new(EngineChoice::XlaPallas, 128, 4).unwrap();
+        let out = d.run_epoch(100, None).unwrap();
+        assert_eq!(out.gens_done, 100);
+        assert!(out.best_fitness > 40.0);
+        assert_eq!(out.evaluations, 101 * 128);
+        // restart keeps the compiled artifact cache
+        d.restart(128, 5);
+        let out2 = d.run_epoch(100, Some(&BitString::ones(160))).unwrap();
+        assert!(out2.solved);
+        assert_eq!(d.engine_name(), "xla-pallas");
+    }
+}

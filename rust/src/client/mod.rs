@@ -1,0 +1,18 @@
+//! The volunteer client — the browser side of NodIO.
+//!
+//! Each client is "a browser visit": it runs one or more island GAs
+//! ([`worker`] = the Web Worker analog, W² mode runs two), syncing with the
+//! pool server every 100 generations (PUT best / GET random), restarting
+//! when a solution is found so the volunteer keeps donating cycles, and
+//! continuing to evolve locally when the server is unreachable (the
+//! paper's fault-tolerance property).
+
+pub mod browser;
+pub mod driver;
+pub mod volunteer;
+pub mod worker;
+
+pub use browser::{BrowserClient, DisplayState, WorkerMsg};
+pub use driver::{EngineChoice, EpochOutcome, IslandDriver};
+pub use volunteer::{ClientConfig, ClientStats, VolunteerClient};
+pub use worker::{ClientProcess, WorkerMode};

@@ -1,0 +1,218 @@
+//! Multi-worker clients: the Web Worker analog.
+//!
+//! A [`ClientProcess`] is "one browser": [`WorkerMode::Basic`] runs a
+//! single island on the main thread's stand-in; [`WorkerMode::W2`] runs
+//! two worker islands with per-island population sizes drawn uniformly
+//! from [128, 256] and restart-on-solution — the NodIO-W² configuration
+//! from section 2.
+
+use std::net::SocketAddr;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use super::driver::EngineChoice;
+use super::volunteer::{ClientConfig, ClientStats, VolunteerClient};
+use crate::rng::{dist, Rng64, SplitMix64};
+
+/// Client architecture variant (the paper's two implementations).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WorkerMode {
+    /// One island, fixed population, stop on solution.
+    Basic,
+    /// Two worker islands, population ~ U[128, 256] each, restart on
+    /// solution (NodIO-W²).
+    W2,
+}
+
+impl WorkerMode {
+    pub fn workers(&self) -> usize {
+        match self {
+            WorkerMode::Basic => 1,
+            WorkerMode::W2 => 2,
+        }
+    }
+}
+
+/// The population range W² draws from (paper section 2).
+pub const W2_POP_RANGE: (usize, usize) = (128, 256);
+
+/// Population sizes with `ea_epoch_p*` artifacts inside the W² range; a
+/// drawn size is rounded to the nearest so the XLA engine always has an
+/// artifact. (Native islands use the drawn size exactly.)
+fn round_to_artifact(pop: usize, engine: EngineChoice) -> usize {
+    match engine {
+        EngineChoice::Native => pop,
+        _ => {
+            const AVAILABLE: [usize; 3] = [128, 192, 256];
+            *AVAILABLE
+                .iter()
+                .min_by_key(|&&p| p.abs_diff(pop))
+                .unwrap()
+        }
+    }
+}
+
+/// A spawned multi-worker client.
+pub struct ClientProcess {
+    stop: Arc<AtomicBool>,
+    threads: Vec<std::thread::JoinHandle<ClientStats>>,
+}
+
+impl ClientProcess {
+    /// Spawn `mode.workers()` worker threads against `server`.
+    pub fn spawn(
+        server: Option<SocketAddr>,
+        mode: WorkerMode,
+        engine: EngineChoice,
+        base_pop: usize,
+        seed: u64,
+        uuid_prefix: &str,
+        max_epochs: u64,
+        slowdown: f64,
+    ) -> ClientProcess {
+        let stop = Arc::new(AtomicBool::new(false));
+        let mut seeds = SplitMix64::new(seed);
+        let threads = (0..mode.workers())
+            .map(|w| {
+                let worker_seed = seeds.next_u64();
+                let pop_size = match mode {
+                    WorkerMode::Basic => base_pop,
+                    WorkerMode::W2 => {
+                        let mut r = SplitMix64::new(worker_seed ^ 0xA5A5);
+                        round_to_artifact(
+                            dist::range(&mut r, W2_POP_RANGE.0, W2_POP_RANGE.1 + 1),
+                            engine,
+                        )
+                    }
+                };
+                let config = ClientConfig {
+                    server,
+                    engine,
+                    pop_size,
+                    seed: worker_seed,
+                    uuid: format!("{uuid_prefix}-w{w}"),
+                    restart_on_solution: mode == WorkerMode::W2,
+                    max_epochs,
+                    slowdown,
+                    ..Default::default()
+                };
+                let stop = stop.clone();
+                std::thread::Builder::new()
+                    .name(format!("{uuid_prefix}-w{w}"))
+                    .spawn(move || match VolunteerClient::new(config) {
+                        Ok(mut client) => client.run(&stop),
+                        Err(e) => {
+                            eprintln!("nodio worker: {e}");
+                            ClientStats::default()
+                        }
+                    })
+                    .expect("spawn worker thread")
+            })
+            .collect();
+        ClientProcess { stop, threads }
+    }
+
+    /// Signal all workers to stop after their current epoch.
+    pub fn stop(&self) {
+        self.stop.store(true, Ordering::Release);
+    }
+
+    /// Wait for all workers; returns per-worker stats.
+    pub fn join(self) -> Vec<ClientStats> {
+        self.threads
+            .into_iter()
+            .map(|t| t.join().unwrap_or_default())
+            .collect()
+    }
+
+    /// Stop and join.
+    pub fn shutdown(self) -> Vec<ClientStats> {
+        self.stop();
+        self.join()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{PoolServer, PoolServerConfig};
+
+    #[test]
+    fn worker_counts() {
+        assert_eq!(WorkerMode::Basic.workers(), 1);
+        assert_eq!(WorkerMode::W2.workers(), 2);
+    }
+
+    #[test]
+    fn artifact_rounding() {
+        assert_eq!(round_to_artifact(130, EngineChoice::XlaPallas), 128);
+        assert_eq!(round_to_artifact(200, EngineChoice::XlaPallas), 192);
+        assert_eq!(round_to_artifact(250, EngineChoice::XlaPallas), 256);
+        assert_eq!(round_to_artifact(137, EngineChoice::Native), 137);
+    }
+
+    #[test]
+    fn w2_process_runs_two_workers() {
+        let handle =
+            PoolServer::spawn("127.0.0.1:0", PoolServerConfig::default())
+                .unwrap();
+        let process = ClientProcess::spawn(
+            Some(handle.addr),
+            WorkerMode::W2,
+            EngineChoice::Native,
+            256,
+            42,
+            "browser-0",
+            2, // two epochs each
+            1.0,
+        );
+        let stats = process.join();
+        assert_eq!(stats.len(), 2);
+        for s in &stats {
+            assert_eq!(s.epochs, 2);
+            assert!(s.migrations_ok > 0);
+        }
+        // Server saw both UUIDs.
+        let mut c = crate::http::HttpClient::connect(handle.addr).unwrap();
+        let body = c
+            .send(&crate::http::Request::new(crate::http::Method::Get, "/stats"))
+            .unwrap()
+            .json_body()
+            .unwrap();
+        let per_uuid = body.get("per_uuid").unwrap();
+        assert!(per_uuid.get("browser-0-w0").is_some());
+        assert!(per_uuid.get("browser-0-w1").is_some());
+        handle.stop();
+    }
+
+    #[test]
+    fn stop_interrupts_workers() {
+        let process = ClientProcess::spawn(
+            None,
+            WorkerMode::W2,
+            EngineChoice::Native,
+            128,
+            7,
+            "b",
+            u64::MAX,
+            1.0,
+        );
+        std::thread::sleep(std::time::Duration::from_millis(100));
+        let stats = process.shutdown();
+        assert_eq!(stats.len(), 2);
+        for s in &stats {
+            assert!(s.epochs >= 1);
+        }
+    }
+
+    #[test]
+    fn w2_population_sizes_in_range() {
+        // Drawn pop sizes must land in [128, 256] (native keeps exact).
+        for seed in 0..20 {
+            let mut r = SplitMix64::new(seed);
+            let drawn =
+                dist::range(&mut r, W2_POP_RANGE.0, W2_POP_RANGE.1 + 1);
+            assert!((128..=256).contains(&drawn));
+        }
+    }
+}

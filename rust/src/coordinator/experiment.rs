@@ -1,0 +1,214 @@
+//! Experiment lifecycle: the server "has the capability to run a single
+//! experiment, storing the chromosomes in a data structure that is reset
+//! when the solution is found" (paper section 2).
+
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+use crate::json::Json;
+
+/// A completed experiment's record.
+#[derive(Debug, Clone)]
+pub struct ExperimentLog {
+    pub id: u64,
+    pub elapsed: Duration,
+    pub puts: u64,
+    pub gets: u64,
+    pub best_fitness: f64,
+    pub solved_by: Option<String>,
+    pub solution: Option<String>,
+}
+
+impl ExperimentLog {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("experiment", self.id.into()),
+            ("elapsed_s", self.elapsed.as_secs_f64().into()),
+            ("puts", self.puts.into()),
+            ("gets", self.gets.into()),
+            ("best_fitness", self.best_fitness.into()),
+            (
+                "solved_by",
+                self.solved_by
+                    .clone()
+                    .map(Json::Str)
+                    .unwrap_or(Json::Null),
+            ),
+            (
+                "solution",
+                self.solution.clone().map(Json::Str).unwrap_or(Json::Null),
+            ),
+        ])
+    }
+}
+
+/// Tracks the live experiment and the history of completed ones.
+#[derive(Debug)]
+pub struct ExperimentManager {
+    /// Fitness at which a PUT counts as a solution.
+    pub target_fitness: f64,
+    /// Expected chromosome length (PUT validation).
+    pub n_bits: usize,
+    current_id: u64,
+    started: Instant,
+    puts: u64,
+    gets: u64,
+    best_fitness: f64,
+    /// Requests per island UUID across all experiments (the paper logs
+    /// per-client contributions).
+    per_uuid: HashMap<String, u64>,
+    completed: Vec<ExperimentLog>,
+}
+
+impl ExperimentManager {
+    pub fn new(target_fitness: f64, n_bits: usize) -> ExperimentManager {
+        ExperimentManager {
+            target_fitness,
+            n_bits,
+            current_id: 0,
+            started: Instant::now(),
+            puts: 0,
+            gets: 0,
+            best_fitness: f64::NEG_INFINITY,
+            per_uuid: HashMap::new(),
+            completed: Vec::new(),
+        }
+    }
+
+    pub fn current_id(&self) -> u64 {
+        self.current_id
+    }
+
+    pub fn puts(&self) -> u64 {
+        self.puts
+    }
+
+    pub fn gets(&self) -> u64 {
+        self.gets
+    }
+
+    pub fn best_fitness(&self) -> f64 {
+        self.best_fitness
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.started.elapsed()
+    }
+
+    pub fn completed(&self) -> &[ExperimentLog] {
+        &self.completed
+    }
+
+    pub fn per_uuid(&self) -> &HashMap<String, u64> {
+        &self.per_uuid
+    }
+
+    pub fn is_solution(&self, fitness: f64) -> bool {
+        fitness >= self.target_fitness - 1e-9
+    }
+
+    /// Record a PUT. Returns true if this PUT solves the experiment (the
+    /// caller then calls [`ExperimentManager::finish`]).
+    pub fn record_put(&mut self, uuid: &str, fitness: f64) -> bool {
+        self.puts += 1;
+        *self.per_uuid.entry(uuid.to_string()).or_insert(0) += 1;
+        if fitness > self.best_fitness {
+            self.best_fitness = fitness;
+        }
+        self.is_solution(fitness)
+    }
+
+    pub fn record_get(&mut self, uuid: Option<&str>) {
+        self.gets += 1;
+        if let Some(u) = uuid {
+            *self.per_uuid.entry(u.to_string()).or_insert(0) += 1;
+        }
+    }
+
+    /// Close the current experiment (solution found or manual reset) and
+    /// start the next one. Returns the completed record.
+    pub fn finish(
+        &mut self,
+        solved_by: Option<String>,
+        solution: Option<String>,
+    ) -> ExperimentLog {
+        let log = ExperimentLog {
+            id: self.current_id,
+            elapsed: self.started.elapsed(),
+            puts: self.puts,
+            gets: self.gets,
+            best_fitness: self.best_fitness,
+            solved_by,
+            solution,
+        };
+        self.completed.push(log.clone());
+        self.current_id += 1;
+        self.started = Instant::now();
+        self.puts = 0;
+        self.gets = 0;
+        self.best_fitness = f64::NEG_INFINITY;
+        log
+    }
+
+    /// Totals across completed + current.
+    pub fn total_requests(&self) -> u64 {
+        let past: u64 =
+            self.completed.iter().map(|l| l.puts + l.gets).sum();
+        past + self.puts + self.gets
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lifecycle() {
+        let mut m = ExperimentManager::new(80.0, 160);
+        assert_eq!(m.current_id(), 0);
+        assert!(!m.record_put("a", 50.0));
+        assert!(!m.record_put("b", 70.0));
+        m.record_get(Some("a"));
+        assert_eq!(m.best_fitness(), 70.0);
+        assert!(m.record_put("a", 80.0)); // solution
+        let log = m.finish(Some("a".into()), Some("111".into()));
+        assert_eq!(log.id, 0);
+        assert_eq!(log.puts, 3);
+        assert_eq!(log.gets, 1);
+        assert_eq!(log.best_fitness, 80.0);
+        assert_eq!(m.current_id(), 1);
+        assert_eq!(m.puts(), 0);
+        assert_eq!(m.best_fitness(), f64::NEG_INFINITY);
+    }
+
+    #[test]
+    fn solution_tolerance() {
+        let m = ExperimentManager::new(80.0, 160);
+        assert!(m.is_solution(80.0));
+        assert!(m.is_solution(80.0 - 1e-12));
+        assert!(!m.is_solution(79.99));
+    }
+
+    #[test]
+    fn per_uuid_accounting_survives_reset() {
+        let mut m = ExperimentManager::new(10.0, 8);
+        m.record_put("x", 10.0);
+        m.finish(Some("x".into()), None);
+        m.record_put("x", 5.0);
+        m.record_get(Some("y"));
+        assert_eq!(m.per_uuid()["x"], 2);
+        assert_eq!(m.per_uuid()["y"], 1);
+        assert_eq!(m.total_requests(), 3);
+    }
+
+    #[test]
+    fn log_json_shape() {
+        let mut m = ExperimentManager::new(10.0, 8);
+        m.record_put("x", 10.0);
+        let log = m.finish(Some("x".into()), Some("11111111".into()));
+        let j = log.to_json();
+        assert_eq!(j.get_u64("experiment"), Some(0));
+        assert_eq!(j.get_str("solved_by"), Some("x"));
+        assert!(j.get_f64("elapsed_s").unwrap() >= 0.0);
+    }
+}

@@ -1,0 +1,96 @@
+//! JSONL event logging — the paper's server "performs logging duties, but
+//! they are basically a very lightweight and high performance data
+//! storage". One JSON object per line, buffered, flushed on experiment
+//! boundaries and drop.
+
+use std::fs::{File, OpenOptions};
+use std::io::{BufWriter, Write};
+use std::path::Path;
+use std::time::Instant;
+
+use crate::json::{self, Json};
+
+/// Append-only JSONL writer. `None` target discards (for benches).
+pub struct EventLog {
+    out: Option<BufWriter<File>>,
+    epoch: Instant,
+    events: u64,
+}
+
+impl EventLog {
+    pub fn to_file(path: &Path) -> std::io::Result<EventLog> {
+        let file = OpenOptions::new().create(true).append(true).open(path)?;
+        Ok(EventLog {
+            out: Some(BufWriter::new(file)),
+            epoch: Instant::now(),
+            events: 0,
+        })
+    }
+
+    pub fn disabled() -> EventLog {
+        EventLog { out: None, epoch: Instant::now(), events: 0 }
+    }
+
+    pub fn events(&self) -> u64 {
+        self.events
+    }
+
+    /// Log one event with a relative timestamp.
+    pub fn log(&mut self, kind: &str, mut fields: Json) {
+        self.events += 1;
+        if let Some(out) = &mut self.out {
+            if let Json::Obj(_) = fields {
+            } else {
+                fields = Json::obj(vec![("value", fields)]);
+            }
+            fields.set("event", Json::Str(kind.to_string()));
+            fields.set("t_s", Json::Num(self.epoch.elapsed().as_secs_f64()));
+            let _ = writeln!(out, "{}", json::to_string(&fields));
+        }
+    }
+
+    pub fn flush(&mut self) {
+        if let Some(out) = &mut self.out {
+            let _ = out.flush();
+        }
+    }
+}
+
+impl Drop for EventLog {
+    fn drop(&mut self) {
+        self.flush();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_jsonl() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("nodio-log-test-{}.jsonl", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        {
+            let mut log = EventLog::to_file(&path).unwrap();
+            log.log("put", Json::obj(vec![("fitness", 42u64.into())]));
+            log.log("solution", Json::obj(vec![("experiment", 0u64.into())]));
+            assert_eq!(log.events(), 2);
+        } // drop flushes
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        let first = json::parse(lines[0]).unwrap();
+        assert_eq!(first.get_str("event"), Some("put"));
+        assert_eq!(first.get_u64("fitness"), Some(42));
+        assert!(first.get_f64("t_s").unwrap() >= 0.0);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn disabled_log_counts_but_writes_nothing() {
+        let mut log = EventLog::disabled();
+        log.log("x", Json::Null);
+        assert_eq!(log.events(), 1);
+    }
+}

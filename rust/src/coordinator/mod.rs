@@ -1,0 +1,36 @@
+//! The NodIO pool server — the paper's system contribution.
+//!
+//! A REST server holding a shared chromosome pool for asynchronous,
+//! pull-based island migration (section 2):
+//!
+//! | route | paper semantics |
+//! |---|---|
+//! | `PUT  /experiment/chromosome` | island sends its best every 100 generations |
+//! | `GET  /experiment/random`     | island fetches a random pool member |
+//! | `GET  /experiment/state`      | experiment & pool observability |
+//! | `GET  /stats`                 | cross-experiment + per-UUID accounting |
+//! | `POST /experiment/reset`      | manual experiment reset |
+//! | `GET  /`                      | server info/banner |
+//!
+//! When a PUT carries a solution (fitness ≥ target), the experiment ends:
+//! the time-to-solution is logged, the pool array is reset, and the
+//! experiment counter increments — exactly the lifecycle of the paper's
+//! sequence diagram (Figure 2, steps 1 and 6).
+//!
+//! The server runs on the single-threaded non-blocking event loop
+//! ([`crate::http::server`]); handlers share state through `Rc<RefCell>`
+//! with no locks, like Express handlers on Node's loop.
+
+pub mod experiment;
+pub mod logger;
+pub mod pool;
+pub mod routes;
+pub mod security;
+pub mod timeseries;
+pub mod server;
+
+pub use experiment::{ExperimentLog, ExperimentManager};
+pub use pool::{ChromosomePool, PoolEntry};
+pub use security::{FitnessVerifier, RateLimiter, SaboteurLog};
+pub use timeseries::TimeSeries;
+pub use server::{PoolServer, PoolServerConfig};

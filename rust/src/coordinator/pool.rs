@@ -1,0 +1,196 @@
+//! The shared chromosome pool ("the shared pool implemented as an array",
+//! paper section 2, sequence step 1).
+
+use crate::rng::{dist, Rng64};
+
+/// One pooled chromosome.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PoolEntry {
+    /// `"0101..."` wire representation.
+    pub chromosome: String,
+    pub fitness: f64,
+    /// Island UUID that contributed it.
+    pub uuid: String,
+}
+
+/// Bounded pool with random-replacement eviction. The paper's pool is an
+/// unbounded array reset per experiment; the bound (default 1024) guards
+/// the server against adversarial PUT floods (threat model, section 1)
+/// while being far above what migration traffic reaches.
+#[derive(Debug, Clone)]
+pub struct ChromosomePool {
+    entries: Vec<PoolEntry>,
+    capacity: usize,
+    /// Total accepted PUTs over the pool's lifetime (survives eviction).
+    accepted: u64,
+}
+
+impl ChromosomePool {
+    pub fn new(capacity: usize) -> ChromosomePool {
+        assert!(capacity > 0);
+        ChromosomePool { entries: Vec::new(), capacity, accepted: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn accepted(&self) -> u64 {
+        self.accepted
+    }
+
+    /// Insert an entry; evicts a uniformly random victim when full.
+    pub fn put<R: Rng64 + ?Sized>(&mut self, entry: PoolEntry, rng: &mut R) {
+        self.accepted += 1;
+        if self.entries.len() < self.capacity {
+            self.entries.push(entry);
+        } else {
+            let victim = dist::range(rng, 0, self.entries.len());
+            self.entries[victim] = entry;
+        }
+    }
+
+    /// A uniformly random member (the GET route), if any.
+    pub fn random<R: Rng64 + ?Sized>(&self, rng: &mut R) -> Option<&PoolEntry> {
+        if self.entries.is_empty() {
+            None
+        } else {
+            Some(&self.entries[dist::range(rng, 0, self.entries.len())])
+        }
+    }
+
+    /// Best entry by fitness.
+    pub fn best(&self) -> Option<&PoolEntry> {
+        self.entries.iter().max_by(|a, b| {
+            a.fitness.partial_cmp(&b.fitness).expect("finite fitness")
+        })
+    }
+
+    /// Reset for a new experiment.
+    pub fn clear(&mut self) {
+        self.entries.clear();
+        self.accepted = 0;
+    }
+
+    pub fn entries(&self) -> &[PoolEntry] {
+        &self.entries
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::SplitMix64;
+    use crate::testkit::{forall, PropConfig};
+
+    fn entry(tag: u64, fitness: f64) -> PoolEntry {
+        PoolEntry {
+            chromosome: format!("{tag:b}"),
+            fitness,
+            uuid: format!("u{tag}"),
+        }
+    }
+
+    #[test]
+    fn put_get_cycle() {
+        let mut pool = ChromosomePool::new(8);
+        let mut rng = SplitMix64::new(1);
+        assert!(pool.random(&mut rng).is_none());
+        pool.put(entry(1, 10.0), &mut rng);
+        assert_eq!(pool.len(), 1);
+        assert_eq!(pool.random(&mut rng).unwrap().fitness, 10.0);
+    }
+
+    #[test]
+    fn capacity_enforced_with_eviction() {
+        let mut pool = ChromosomePool::new(4);
+        let mut rng = SplitMix64::new(2);
+        for i in 0..100 {
+            pool.put(entry(i, i as f64), &mut rng);
+        }
+        assert_eq!(pool.len(), 4);
+        assert_eq!(pool.accepted(), 100);
+        // Every surviving entry was actually inserted at some point.
+        for e in pool.entries() {
+            assert!(e.fitness < 100.0);
+        }
+    }
+
+    #[test]
+    fn best_tracks_maximum_of_survivors() {
+        let mut pool = ChromosomePool::new(16);
+        let mut rng = SplitMix64::new(3);
+        for i in 0..10 {
+            pool.put(entry(i, (i * 7 % 10) as f64), &mut rng);
+        }
+        let best = pool.best().unwrap().fitness;
+        assert!(pool.entries().iter().all(|e| e.fitness <= best));
+    }
+
+    #[test]
+    fn clear_resets_everything() {
+        let mut pool = ChromosomePool::new(4);
+        let mut rng = SplitMix64::new(4);
+        pool.put(entry(1, 1.0), &mut rng);
+        pool.clear();
+        assert!(pool.is_empty());
+        assert_eq!(pool.accepted(), 0);
+    }
+
+    #[test]
+    fn pool_never_exceeds_capacity_property() {
+        forall(
+            &PropConfig::cases(50),
+            |rng| {
+                let cap = 1 + dist::range(rng, 0, 16);
+                let ops = dist::range(rng, 0, 200);
+                let seed = rng.next_u64();
+                (cap, ops, seed)
+            },
+            |&(cap, ops, seed)| {
+                let mut rng = SplitMix64::new(seed);
+                let mut pool = ChromosomePool::new(cap);
+                for i in 0..ops {
+                    pool.put(entry(i as u64, i as f64), &mut rng);
+                    if pool.len() > cap {
+                        return false;
+                    }
+                }
+                pool.accepted() == ops as u64
+            },
+        );
+    }
+
+    #[test]
+    fn random_returns_only_put_content_property() {
+        // GET returns only chromosomes that were PUT (integrity invariant).
+        forall(
+            &PropConfig::cases(30),
+            |rng| rng.next_u64(),
+            |&seed| {
+                let mut rng = SplitMix64::new(seed);
+                let mut pool = ChromosomePool::new(8);
+                let mut put_set = std::collections::HashSet::new();
+                for i in 0..20u64 {
+                    let e = entry(i, i as f64);
+                    put_set.insert(e.chromosome.clone());
+                    pool.put(e, &mut rng);
+                }
+                (0..20).all(|_| match pool.random(&mut rng) {
+                    Some(e) => put_set.contains(&e.chromosome),
+                    None => false,
+                })
+            },
+        );
+    }
+
+    use crate::rng::dist;
+}

@@ -1,0 +1,592 @@
+//! The REST API: route handlers over shared single-threaded state.
+//!
+//! Handlers communicate through `Rc<RefCell<PoolState>>` — safe because the
+//! event loop is one thread (the architecture the paper borrows from
+//! Node.js/Express).
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use super::experiment::ExperimentManager;
+use super::logger::EventLog;
+use super::pool::{ChromosomePool, PoolEntry};
+use super::security::{FitnessVerifier, RateLimiter, SaboteurLog};
+use super::timeseries::TimeSeries;
+use crate::http::{Params, Request, Response, Router};
+use crate::json::Json;
+use crate::rng::Xoshiro256pp;
+
+/// All server-side state behind the routes.
+pub struct PoolState {
+    pub pool: ChromosomePool,
+    pub experiments: ExperimentManager,
+    pub log: EventLog,
+    pub rng: Xoshiro256pp,
+    /// Sabotage tolerance (the paper's future work; see
+    /// [`super::security`]): re-evaluate claimed fitness server-side,
+    /// rejecting crafted-request attacks with 409 and banning repeat
+    /// offenders with 403.
+    pub verifier: Option<FitnessVerifier>,
+    pub saboteurs: SaboteurLog,
+    /// DoS guard: per-UUID token bucket; empty bucket yields 429.
+    pub rate_limiter: Option<RateLimiter>,
+    /// Best-fitness/pool time series for `/metrics` and `/dashboard`
+    /// (the paper's in-page Chart.js plot, server-side).
+    pub series: TimeSeries,
+}
+
+impl PoolState {
+    pub fn new(
+        capacity: usize,
+        target_fitness: f64,
+        n_bits: usize,
+        log: EventLog,
+        seed: u64,
+    ) -> PoolState {
+        PoolState {
+            pool: ChromosomePool::new(capacity),
+            experiments: ExperimentManager::new(target_fitness, n_bits),
+            log,
+            rng: Xoshiro256pp::new(seed),
+            verifier: None,
+            saboteurs: SaboteurLog::new(3),
+            rate_limiter: None,
+            series: TimeSeries::new(512),
+        }
+    }
+}
+
+type Shared = Rc<RefCell<PoolState>>;
+
+/// Build the full NodIO router over shared state.
+pub fn build_router(state: Shared) -> Router {
+    let mut router = Router::new();
+
+    // Banner / health.
+    {
+        let state = state.clone();
+        router.get("/", move |_req: &Request, _p: &Params| {
+            let s = state.borrow();
+            Response::json(&Json::obj(vec![
+                ("name", "nodio".into()),
+                ("experiment", s.experiments.current_id().into()),
+                ("pool", s.pool.len().into()),
+            ]))
+        });
+    }
+
+    // The migration PUT (sequence step 4).
+    {
+        let state = state.clone();
+        router.put(
+            "/experiment/chromosome",
+            move |req: &Request, _p: &Params| put_chromosome(&state, req),
+        );
+    }
+
+    // The migration GET (sequence step 4).
+    {
+        let state = state.clone();
+        router.get(
+            "/experiment/random",
+            move |req: &Request, _p: &Params| get_random(&state, req),
+        );
+    }
+
+    // Observability.
+    {
+        let state = state.clone();
+        router.get(
+            "/experiment/state",
+            move |_req: &Request, _p: &Params| {
+                let s = state.borrow();
+                let best = s.pool.best();
+                Response::json(&Json::obj(vec![
+                    ("experiment", s.experiments.current_id().into()),
+                    ("pool_size", s.pool.len().into()),
+                    ("puts", s.experiments.puts().into()),
+                    ("gets", s.experiments.gets().into()),
+                    (
+                        "best_fitness",
+                        match s.experiments.best_fitness() {
+                            f if f.is_finite() => f.into(),
+                            _ => Json::Null,
+                        },
+                    ),
+                    (
+                        "pool_best",
+                        best.map(|e| e.fitness.into()).unwrap_or(Json::Null),
+                    ),
+                    (
+                        "elapsed_s",
+                        s.experiments.elapsed().as_secs_f64().into(),
+                    ),
+                    (
+                        "completed",
+                        s.experiments.completed().len().into(),
+                    ),
+                ]))
+            },
+        );
+    }
+
+    {
+        let state = state.clone();
+        router.get("/stats", move |_req: &Request, _p: &Params| {
+            let s = state.borrow();
+            let mut uuids: Vec<(&String, &u64)> =
+                s.experiments.per_uuid().iter().collect();
+            uuids.sort();
+            let per_uuid = Json::Obj(
+                uuids
+                    .into_iter()
+                    .map(|(k, &v)| (k.clone(), v.into()))
+                    .collect(),
+            );
+            let experiments = Json::Arr(
+                s.experiments
+                    .completed()
+                    .iter()
+                    .map(|l| l.to_json())
+                    .collect(),
+            );
+            Response::json(&Json::obj(vec![
+                ("total_requests", s.experiments.total_requests().into()),
+                ("per_uuid", per_uuid),
+                ("experiments", experiments),
+            ]))
+        });
+    }
+
+    // Metrics time series (the chart data).
+    {
+        let state = state.clone();
+        router.get("/metrics", move |_req: &Request, _p: &Params| {
+            let s = state.borrow();
+            Response::json(&Json::obj(vec![
+                ("experiment", s.experiments.current_id().into()),
+                ("series", s.series.to_json()),
+            ]))
+        });
+    }
+
+    // Human-facing status page (the paper's experiment web page, minus
+    // the browser EA: server-rendered, zero scripts).
+    {
+        let state = state.clone();
+        router.get("/dashboard", move |_req: &Request, _p: &Params| {
+            let s = state.borrow();
+            let spark = s.series.sparkline(60);
+            let best = s.experiments.best_fitness();
+            let html = format!(
+                "<!doctype html><html><head><title>NodIO</title></head>\
+                 <body><h1>NodIO experiment {}</h1>\
+                 <p>pool: {} &middot; puts: {} &middot; gets: {} &middot; \
+                 best fitness: {}</p>\
+                 <p>completed experiments: {}</p>\
+                 <pre style=\"font-size:24px\">{}</pre>\
+                 </body></html>",
+                s.experiments.current_id(),
+                s.pool.len(),
+                s.experiments.puts(),
+                s.experiments.gets(),
+                if best.is_finite() { format!("{best:.2}") } else { "-".into() },
+                s.experiments.completed().len(),
+                spark,
+            );
+            let mut resp = Response::ok();
+            resp.body = html.into_bytes();
+            resp.set_header("content-type", "text/html");
+            resp
+        });
+    }
+
+    // Manual reset (operator action).
+    {
+        let state = state.clone();
+        router.post(
+            "/experiment/reset",
+            move |_req: &Request, _p: &Params| {
+                let mut s = state.borrow_mut();
+                let log = s.experiments.finish(None, None);
+                s.pool.clear();
+                s.series.clear();
+                let entry = log.to_json();
+                s.log.log("reset", entry.clone());
+                s.log.flush();
+                Response::json(&entry)
+            },
+        );
+    }
+
+    router
+}
+
+fn put_chromosome(state: &Shared, req: &Request) -> Response {
+    let body = match req.json() {
+        Ok(b) => b,
+        Err(e) => return Response::bad_request(&format!("bad json: {e}")),
+    };
+    let chromosome = match body.get_str("chromosome") {
+        Some(c) => c.to_string(),
+        None => return Response::bad_request("missing chromosome"),
+    };
+    let fitness = match body.get_f64("fitness") {
+        Some(f) if f.is_finite() => f,
+        _ => return Response::bad_request("missing/invalid fitness"),
+    };
+    let uuid = body.get_str("uuid").unwrap_or("anonymous").to_string();
+
+    let mut s = state.borrow_mut();
+    if chromosome.len() != s.experiments.n_bits
+        || !chromosome.bytes().all(|b| b == b'0' || b == b'1')
+    {
+        return Response::bad_request("malformed chromosome");
+    }
+    // Abuse guards (see super::security): bans, rate limits, verification.
+    if s.saboteurs.is_banned(&uuid) {
+        return Response::new(403).with_text("banned for repeated sabotage");
+    }
+    if let Some(limiter) = &mut s.rate_limiter {
+        if !limiter.allow(&uuid) {
+            return Response::new(429).with_text("rate limited");
+        }
+    }
+    if let Some(verifier) = &s.verifier {
+        if let Err(actual) = verifier.verify(&chromosome, fitness) {
+            let banned = s.saboteurs.record_rejection(&uuid);
+            s.log.log(
+                "rejected",
+                Json::obj(vec![
+                    ("uuid", uuid.clone().into()),
+                    ("claimed", fitness.into()),
+                    ("actual", actual.into()),
+                    ("banned", banned.into()),
+                ]),
+            );
+            return Response::new(409).with_text("fitness mismatch");
+        }
+    }
+
+    let solved = s.experiments.record_put(&uuid, fitness);
+    {
+        let best = s.experiments.best_fitness();
+        let pool_size = s.pool.len();
+        let puts = s.experiments.puts();
+        s.series.record(best, pool_size, puts);
+    }
+    let entry = PoolEntry {
+        chromosome: chromosome.clone(),
+        fitness,
+        uuid: uuid.clone(),
+    };
+    let mut rng = s.rng.clone();
+    s.pool.put(entry, &mut rng);
+    s.rng = rng;
+    let current_id = s.experiments.current_id();
+    s.log.log(
+        "put",
+        Json::obj(vec![
+            ("uuid", uuid.clone().into()),
+            ("fitness", fitness.into()),
+            ("experiment", current_id.into()),
+        ]),
+    );
+
+    if solved {
+        // Experiment over: log, reset pool, bump counter (Figure 2 step 6).
+        let log_entry = s
+            .experiments
+            .finish(Some(uuid), Some(chromosome));
+        s.pool.clear();
+        s.series.clear();
+        let payload = log_entry.to_json();
+        s.log.log("solution", payload.clone());
+        s.log.flush();
+        let mut resp = Json::obj(vec![
+            ("solved", true.into()),
+            ("experiment", s.experiments.current_id().into()),
+        ]);
+        resp.set("record", payload);
+        Response::new(201).with_json(&resp)
+    } else {
+        Response::json(&Json::obj(vec![
+            ("solved", false.into()),
+            ("experiment", s.experiments.current_id().into()),
+        ]))
+    }
+}
+
+fn get_random(state: &Shared, req: &Request) -> Response {
+    let mut s = state.borrow_mut();
+    if let (Some(limiter), Some(uuid)) =
+        (&mut s.rate_limiter, req.query_param("uuid").map(str::to_string))
+    {
+        if !limiter.allow(&uuid) {
+            return Response::new(429).with_text("rate limited");
+        }
+    }
+    s.experiments.record_get(req.query_param("uuid"));
+    let mut rng = s.rng.clone();
+    let result = s.pool.random(&mut rng).cloned();
+    s.rng = rng;
+    match result {
+        Some(e) => Response::json(&Json::obj(vec![
+            ("chromosome", e.chromosome.clone().into()),
+            ("fitness", e.fitness.into()),
+            ("experiment", s.experiments.current_id().into()),
+        ])),
+        // Empty pool: 204 — the island just continues without an
+        // immigrant (paper: islands are autonomous).
+        None => Response::new(204),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::http::{Method, Service};
+
+    fn setup() -> (Shared, Router) {
+        let state = Rc::new(RefCell::new(PoolState::new(
+            64,
+            80.0,
+            8,
+            EventLog::disabled(),
+            7,
+        )));
+        let router = build_router(state.clone());
+        (state, router)
+    }
+
+    fn put(router: &mut Router, chromosome: &str, fitness: f64, uuid: &str) -> Response {
+        let body = Json::obj(vec![
+            ("chromosome", chromosome.into()),
+            ("fitness", fitness.into()),
+            ("uuid", uuid.into()),
+        ]);
+        router.handle(
+            &Request::new(Method::Put, "/experiment/chromosome").with_json(&body),
+        )
+    }
+
+    #[test]
+    fn put_then_get_round_trip() {
+        let (_state, mut router) = setup();
+        let resp = put(&mut router, "01010101", 30.0, "island-1");
+        assert_eq!(resp.status, 200);
+        let body = resp.json_body().unwrap();
+        assert_eq!(body.get("solved").unwrap().as_bool(), Some(false));
+
+        let resp = router.handle(&Request::new(
+            Method::Get,
+            "/experiment/random?uuid=island-2",
+        ));
+        assert_eq!(resp.status, 200);
+        let body = resp.json_body().unwrap();
+        assert_eq!(body.get_str("chromosome"), Some("01010101"));
+        assert_eq!(body.get_f64("fitness"), Some(30.0));
+    }
+
+    #[test]
+    fn empty_pool_is_204() {
+        let (_state, mut router) = setup();
+        let resp =
+            router.handle(&Request::new(Method::Get, "/experiment/random"));
+        assert_eq!(resp.status, 204);
+    }
+
+    #[test]
+    fn solution_resets_experiment() {
+        let (state, mut router) = setup();
+        put(&mut router, "00000001", 10.0, "a");
+        let resp = put(&mut router, "11111111", 80.0, "b");
+        assert_eq!(resp.status, 201);
+        let body = resp.json_body().unwrap();
+        assert_eq!(body.get("solved").unwrap().as_bool(), Some(true));
+        assert_eq!(body.get_u64("experiment"), Some(1)); // bumped
+        let record = body.get("record").unwrap();
+        assert_eq!(record.get_str("solved_by"), Some("b"));
+        assert_eq!(record.get_str("solution"), Some("11111111"));
+
+        // Pool was cleared for the new experiment.
+        assert_eq!(state.borrow().pool.len(), 0);
+        let resp =
+            router.handle(&Request::new(Method::Get, "/experiment/random"));
+        assert_eq!(resp.status, 204);
+    }
+
+    #[test]
+    fn validation_rejects_garbage() {
+        let (_state, mut router) = setup();
+        // wrong length
+        assert_eq!(put(&mut router, "010", 5.0, "a").status, 400);
+        // non-binary
+        assert_eq!(put(&mut router, "0101x101", 5.0, "a").status, 400);
+        // missing fitness
+        let body = Json::obj(vec![("chromosome", "01010101".into())]);
+        let resp = router.handle(
+            &Request::new(Method::Put, "/experiment/chromosome")
+                .with_json(&body),
+        );
+        assert_eq!(resp.status, 400);
+        // non-json body
+        let mut req = Request::new(Method::Put, "/experiment/chromosome");
+        req.body = b"not json".to_vec();
+        assert_eq!(router.handle(&req).status, 400);
+        // NaN fitness (adversarial)
+        let resp = router.handle(
+            &Request::new(Method::Put, "/experiment/chromosome").with_json(
+                &Json::obj(vec![
+                    ("chromosome", "01010101".into()),
+                    ("fitness", Json::Num(f64::NAN)),
+                ]),
+            ),
+        );
+        assert_eq!(resp.status, 400);
+    }
+
+    #[test]
+    fn state_and_stats_routes() {
+        let (_state, mut router) = setup();
+        put(&mut router, "01010101", 30.0, "a");
+        put(&mut router, "11111111", 80.0, "a"); // solves experiment 0
+        put(&mut router, "01110111", 40.0, "b");
+
+        let resp =
+            router.handle(&Request::new(Method::Get, "/experiment/state"));
+        let body = resp.json_body().unwrap();
+        assert_eq!(body.get_u64("experiment"), Some(1));
+        assert_eq!(body.get_u64("pool_size"), Some(1));
+        assert_eq!(body.get_u64("puts"), Some(1));
+        assert_eq!(body.get_u64("completed"), Some(1));
+
+        let resp = router.handle(&Request::new(Method::Get, "/stats"));
+        let body = resp.json_body().unwrap();
+        assert_eq!(body.get_u64("total_requests"), Some(3));
+        let per_uuid = body.get("per_uuid").unwrap();
+        assert_eq!(per_uuid.get_u64("a"), Some(2));
+        assert_eq!(per_uuid.get_u64("b"), Some(1));
+        let experiments = body.get("experiments").unwrap().as_arr().unwrap();
+        assert_eq!(experiments.len(), 1);
+    }
+
+    #[test]
+    fn manual_reset() {
+        let (state, mut router) = setup();
+        put(&mut router, "01010101", 30.0, "a");
+        let resp =
+            router.handle(&Request::new(Method::Post, "/experiment/reset"));
+        assert_eq!(resp.status, 200);
+        assert_eq!(state.borrow().experiments.current_id(), 1);
+        assert_eq!(state.borrow().pool.len(), 0);
+    }
+
+    #[test]
+    fn sabotage_verification_hook() {
+        use crate::problems::OneMax;
+        let (state, mut router) = setup();
+        state.borrow_mut().verifier =
+            Some(FitnessVerifier::new(Box::new(OneMax::new(8))));
+        // honest PUT accepted
+        assert_eq!(put(&mut router, "01010101", 4.0, "good").status, 200);
+        // dishonest fitness rejected with 409 (the crafted-request attack
+        // from the paper's threat model)
+        assert_eq!(put(&mut router, "01010101", 80.0, "evil").status, 409);
+        assert_eq!(state.borrow().pool.len(), 1);
+        // three strikes -> banned with 403
+        assert_eq!(put(&mut router, "01010101", 80.0, "evil").status, 409);
+        assert_eq!(put(&mut router, "01010101", 80.0, "evil").status, 409);
+        assert_eq!(put(&mut router, "01010101", 80.0, "evil").status, 403);
+        // honest client unaffected
+        assert_eq!(put(&mut router, "11110000", 4.0, "good").status, 200);
+    }
+
+    #[test]
+    fn rate_limiting_yields_429() {
+        let (state, mut router) = setup();
+        state.borrow_mut().rate_limiter =
+            Some(crate::coordinator::security::RateLimiter::new(1.0, 2.0));
+        assert_eq!(put(&mut router, "01010101", 1.0, "flood").status, 200);
+        assert_eq!(put(&mut router, "01010101", 1.0, "flood").status, 200);
+        assert_eq!(put(&mut router, "01010101", 1.0, "flood").status, 429);
+        // distinct identity has its own bucket
+        assert_eq!(put(&mut router, "01010101", 1.0, "calm").status, 200);
+        // anonymous GETs (no uuid) are never limited
+        let resp = router.handle(&Request::new(
+            crate::http::Method::Get, "/experiment/random"));
+        assert_ne!(resp.status, 429);
+    }
+
+    #[test]
+    fn unknown_route_404() {
+        let (_state, mut router) = setup();
+        let resp = router.handle(&Request::new(Method::Get, "/nope"));
+        assert_eq!(resp.status, 404);
+    }
+}
+
+#[cfg(test)]
+mod dashboard_tests {
+    use super::super::logger::EventLog;
+    use super::*;
+    use crate::http::{Method, Service};
+    use std::cell::RefCell;
+    use std::rc::Rc;
+
+    fn setup() -> (Rc<RefCell<PoolState>>, Router) {
+        let state = Rc::new(RefCell::new(PoolState::new(
+            64, 80.0, 8, EventLog::disabled(), 7,
+        )));
+        let router = build_router(state.clone());
+        (state, router)
+    }
+
+    fn put(router: &mut Router, chromosome: &str, fitness: f64) -> Response {
+        let body = Json::obj(vec![
+            ("chromosome", chromosome.into()),
+            ("fitness", fitness.into()),
+            ("uuid", "t".into()),
+        ]);
+        router.handle(
+            &Request::new(Method::Put, "/experiment/chromosome")
+                .with_json(&body),
+        )
+    }
+
+    #[test]
+    fn metrics_series_grows_with_puts() {
+        let (_state, mut router) = setup();
+        put(&mut router, "01010101", 4.0);
+        put(&mut router, "01110101", 5.0);
+        let resp = router.handle(&Request::new(Method::Get, "/metrics"));
+        assert_eq!(resp.status, 200);
+        let body = resp.json_body().unwrap();
+        let series = body.get("series").unwrap().as_arr().unwrap();
+        assert_eq!(series.len(), 2);
+        assert_eq!(series[1].get_f64("best"), Some(5.0));
+    }
+
+    #[test]
+    fn metrics_reset_on_solution() {
+        let (_state, mut router) = setup();
+        put(&mut router, "01010101", 4.0);
+        put(&mut router, "11111111", 80.0); // solves -> series cleared
+        let resp = router.handle(&Request::new(Method::Get, "/metrics"));
+        let body = resp.json_body().unwrap();
+        assert_eq!(body.get_u64("experiment"), Some(1));
+        assert_eq!(body.get("series").unwrap().as_arr().unwrap().len(), 0);
+    }
+
+    #[test]
+    fn dashboard_renders_html() {
+        let (_state, mut router) = setup();
+        put(&mut router, "01010101", 4.0);
+        let resp = router.handle(&Request::new(Method::Get, "/dashboard"));
+        assert_eq!(resp.status, 200);
+        assert_eq!(resp.header("content-type"), Some("text/html"));
+        let html = String::from_utf8(resp.body).unwrap();
+        assert!(html.contains("NodIO experiment 0"));
+        assert!(html.contains("best fitness: 4.00"));
+    }
+}

@@ -1,0 +1,218 @@
+//! Sabotage tolerance and abuse guards — the paper's threat model
+//! (section 1) made concrete.
+//!
+//! The paper lists three attacks on an open volunteer system and answers
+//! them *socially* (open source, open data, no cheating checks "that would
+//! degrade performance"). This module implements the *technical* side the
+//! paper leaves as future work, so the trade-off can be measured
+//! (`cargo bench --bench ablation_sabotage`):
+//!
+//! 1. **Crafted fake-fitness PUTs** ("assigns a fake fitness to a
+//!    particular chromosome", citing [5]) → [`FitnessVerifier`]:
+//!    server-side re-evaluation of claimed fitness.
+//! 2. **Denial of service** → [`RateLimiter`]: token-bucket per client
+//!    identity.
+//! 3. **Pool poisoning** → quarantine statistics per UUID
+//!    ([`SaboteurLog`]) feeding an operator ban list.
+
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+use crate::problems::BitProblem;
+
+/// Re-evaluates a claimed (chromosome, fitness) pair server-side.
+pub struct FitnessVerifier {
+    problem: Box<dyn BitProblem + Send>,
+    tolerance: f64,
+}
+
+impl FitnessVerifier {
+    pub fn new(problem: Box<dyn BitProblem + Send>) -> FitnessVerifier {
+        FitnessVerifier { problem, tolerance: 1e-6 }
+    }
+
+    /// Check a claim. Returns `Ok(actual)` when honest, `Err(actual)`
+    /// when the claim deviates beyond tolerance.
+    pub fn verify(&self, chromosome01: &str, claimed: f64) -> Result<f64, f64> {
+        let bits: Vec<u8> = chromosome01
+            .bytes()
+            .map(|b| (b == b'1') as u8)
+            .collect();
+        let actual = self.problem.eval(&bits);
+        if (actual - claimed).abs() <= self.tolerance {
+            Ok(actual)
+        } else {
+            Err(actual)
+        }
+    }
+}
+
+/// Classic token bucket, keyed by client identity (UUID or IP).
+///
+/// Sized for migration traffic: an honest island syncs once per ~100
+/// generations (≥ tens of milliseconds), so even `rate = 100/s` is two
+/// orders of magnitude above honest behavior while capping a flood.
+#[derive(Debug)]
+pub struct RateLimiter {
+    /// Tokens added per second.
+    rate: f64,
+    /// Bucket capacity (burst allowance).
+    burst: f64,
+    buckets: HashMap<String, Bucket>,
+    /// Entries idle longer than this are dropped on sweep.
+    idle_expiry: Duration,
+    last_sweep: Instant,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Bucket {
+    tokens: f64,
+    last_refill: Instant,
+}
+
+impl RateLimiter {
+    pub fn new(rate: f64, burst: f64) -> RateLimiter {
+        assert!(rate > 0.0 && burst >= 1.0);
+        RateLimiter {
+            rate,
+            burst,
+            buckets: HashMap::new(),
+            idle_expiry: Duration::from_secs(300),
+            last_sweep: Instant::now(),
+        }
+    }
+
+    /// Consume one token for `key` at time `now`. Returns false when the
+    /// bucket is empty (request should get 429).
+    pub fn allow_at(&mut self, key: &str, now: Instant) -> bool {
+        // Periodic sweep keeps the map bounded under churning identities.
+        if now.duration_since(self.last_sweep) > self.idle_expiry {
+            let expiry = self.idle_expiry;
+            self.buckets
+                .retain(|_, b| now.duration_since(b.last_refill) < expiry);
+            self.last_sweep = now;
+        }
+        let bucket = self
+            .buckets
+            .entry(key.to_string())
+            .or_insert(Bucket { tokens: self.burst, last_refill: now });
+        let dt = now.duration_since(bucket.last_refill).as_secs_f64();
+        bucket.tokens = (bucket.tokens + dt * self.rate).min(self.burst);
+        bucket.last_refill = now;
+        if bucket.tokens >= 1.0 {
+            bucket.tokens -= 1.0;
+            true
+        } else {
+            false
+        }
+    }
+
+    pub fn allow(&mut self, key: &str) -> bool {
+        self.allow_at(key, Instant::now())
+    }
+
+    pub fn tracked_clients(&self) -> usize {
+        self.buckets.len()
+    }
+}
+
+/// Per-UUID sabotage accounting: rejected claims feed a ban threshold.
+#[derive(Debug, Default)]
+pub struct SaboteurLog {
+    rejections: HashMap<String, u64>,
+    ban_threshold: u64,
+}
+
+impl SaboteurLog {
+    pub fn new(ban_threshold: u64) -> SaboteurLog {
+        SaboteurLog { rejections: HashMap::new(), ban_threshold }
+    }
+
+    /// Record a rejected claim; returns true if the client is now banned.
+    pub fn record_rejection(&mut self, uuid: &str) -> bool {
+        let count = self.rejections.entry(uuid.to_string()).or_insert(0);
+        *count += 1;
+        *count >= self.ban_threshold
+    }
+
+    pub fn is_banned(&self, uuid: &str) -> bool {
+        self.rejections
+            .get(uuid)
+            .map(|&c| c >= self.ban_threshold)
+            .unwrap_or(false)
+    }
+
+    pub fn rejections(&self, uuid: &str) -> u64 {
+        self.rejections.get(uuid).copied().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::problems::Trap;
+
+    #[test]
+    fn verifier_accepts_honest_claims() {
+        let v = FitnessVerifier::new(Box::new(Trap::paper()));
+        let ones = "1".repeat(160);
+        assert_eq!(v.verify(&ones, 80.0), Ok(80.0));
+        let zeros = "0".repeat(160);
+        assert_eq!(v.verify(&zeros, 40.0), Ok(40.0));
+    }
+
+    #[test]
+    fn verifier_rejects_fake_fitness() {
+        let v = FitnessVerifier::new(Box::new(Trap::paper()));
+        let zeros = "0".repeat(160);
+        // The crafted-request attack: claim the optimum for a junk string.
+        assert_eq!(v.verify(&zeros, 80.0), Err(40.0));
+    }
+
+    #[test]
+    fn rate_limiter_allows_burst_then_blocks() {
+        let mut rl = RateLimiter::new(10.0, 5.0);
+        let t0 = Instant::now();
+        for _ in 0..5 {
+            assert!(rl.allow_at("a", t0));
+        }
+        assert!(!rl.allow_at("a", t0)); // burst exhausted
+    }
+
+    #[test]
+    fn rate_limiter_refills_over_time() {
+        let mut rl = RateLimiter::new(10.0, 5.0);
+        let t0 = Instant::now();
+        for _ in 0..5 {
+            rl.allow_at("a", t0);
+        }
+        assert!(!rl.allow_at("a", t0));
+        // 0.2 s -> 2 tokens
+        let t1 = t0 + Duration::from_millis(200);
+        assert!(rl.allow_at("a", t1));
+        assert!(rl.allow_at("a", t1));
+        assert!(!rl.allow_at("a", t1));
+    }
+
+    #[test]
+    fn rate_limiter_isolates_clients() {
+        let mut rl = RateLimiter::new(1.0, 1.0);
+        let t0 = Instant::now();
+        assert!(rl.allow_at("a", t0));
+        assert!(!rl.allow_at("a", t0));
+        assert!(rl.allow_at("b", t0)); // b unaffected by a's exhaustion
+        assert_eq!(rl.tracked_clients(), 2);
+    }
+
+    #[test]
+    fn saboteur_ban_threshold() {
+        let mut log = SaboteurLog::new(3);
+        assert!(!log.record_rejection("evil"));
+        assert!(!log.record_rejection("evil"));
+        assert!(!log.is_banned("evil"));
+        assert!(log.record_rejection("evil"));
+        assert!(log.is_banned("evil"));
+        assert!(!log.is_banned("good"));
+        assert_eq!(log.rejections("evil"), 3);
+    }
+}

@@ -1,0 +1,226 @@
+//! Wiring: pool state + router + the event-loop server = the NodIO server
+//! process.
+
+use std::cell::RefCell;
+use std::path::PathBuf;
+use std::rc::Rc;
+
+use super::logger::EventLog;
+use super::routes::{build_router, PoolState};
+use super::security::{FitnessVerifier, RateLimiter};
+use crate::problems::Trap;
+use crate::http::server::{Server, ServerConfig, ServerHandle};
+
+/// Pool server configuration. Defaults are the paper's baseline trap-40
+/// experiment.
+#[derive(Debug, Clone)]
+pub struct PoolServerConfig {
+    /// Fitness that ends an experiment (trap-40 optimum).
+    pub target_fitness: f64,
+    /// Chromosome length for PUT validation.
+    pub n_bits: usize,
+    /// Pool capacity (random-replacement beyond this).
+    pub pool_capacity: usize,
+    /// JSONL event log destination (None = disabled).
+    pub log_path: Option<PathBuf>,
+    /// RNG seed for pool sampling.
+    pub seed: u64,
+    /// HTTP server tuning.
+    pub http: ServerConfig,
+    /// Sabotage tolerance: re-evaluate claimed trap fitness server-side
+    /// (409 on mismatch, 403 after three strikes). Off by default — the
+    /// paper's open-trust model.
+    pub verify_fitness: bool,
+    /// DoS guard: per-UUID token bucket (requests/s, burst).
+    pub rate_limit: Option<(f64, f64)>,
+}
+
+impl Default for PoolServerConfig {
+    fn default() -> Self {
+        PoolServerConfig {
+            target_fitness: 80.0,
+            n_bits: 160,
+            pool_capacity: 1024,
+            log_path: None,
+            seed: 0xBA5EBA11,
+            http: ServerConfig::default(),
+            verify_fitness: false,
+            rate_limit: None,
+        }
+    }
+}
+
+/// The running pool server (background event-loop thread).
+pub struct PoolServer;
+
+impl PoolServer {
+    /// Spawn on `addr` (e.g. `"127.0.0.1:0"`). The returned handle stops
+    /// the server when dropped.
+    pub fn spawn(
+        addr: &str,
+        config: PoolServerConfig,
+    ) -> std::io::Result<ServerHandle> {
+        let http = config.http.clone();
+        Server::spawn_with(addr, http, move || {
+            let log = match &config.log_path {
+                Some(p) => EventLog::to_file(p).unwrap_or_else(|e| {
+                    eprintln!("nodio: cannot open log {}: {e}", p.display());
+                    EventLog::disabled()
+                }),
+                None => EventLog::disabled(),
+            };
+            let mut state = PoolState::new(
+                config.pool_capacity,
+                config.target_fitness,
+                config.n_bits,
+                log,
+                config.seed,
+            );
+            if config.verify_fitness {
+                state.verifier =
+                    Some(FitnessVerifier::new(Box::new(Trap::paper())));
+            }
+            if let Some((rate, burst)) = config.rate_limit {
+                state.rate_limiter = Some(RateLimiter::new(rate, burst));
+            }
+            build_router(Rc::new(RefCell::new(state)))
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::http::{HttpClient, Method, Request};
+    use crate::json::Json;
+
+    fn put_req(chromosome: &str, fitness: f64, uuid: &str) -> Request {
+        Request::new(Method::Put, "/experiment/chromosome").with_json(
+            &Json::obj(vec![
+                ("chromosome", chromosome.into()),
+                ("fitness", fitness.into()),
+                ("uuid", uuid.into()),
+            ]),
+        )
+    }
+
+    #[test]
+    fn end_to_end_over_sockets() {
+        let config = PoolServerConfig {
+            n_bits: 8,
+            target_fitness: 8.0,
+            ..Default::default()
+        };
+        let handle = PoolServer::spawn("127.0.0.1:0", config).unwrap();
+        let mut client = HttpClient::connect(handle.addr).unwrap();
+
+        // Initially empty.
+        let resp = client
+            .send(&Request::new(Method::Get, "/experiment/random"))
+            .unwrap();
+        assert_eq!(resp.status, 204);
+
+        // PUT then GET.
+        let resp = client.send(&put_req("01010101", 4.0, "w1")).unwrap();
+        assert_eq!(resp.status, 200);
+        let resp = client
+            .send(&Request::new(Method::Get, "/experiment/random?uuid=w2"))
+            .unwrap();
+        assert_eq!(resp.status, 200);
+        assert_eq!(
+            resp.json_body().unwrap().get_str("chromosome"),
+            Some("01010101")
+        );
+
+        // Solution ends experiment 0.
+        let resp = client.send(&put_req("11111111", 8.0, "w1")).unwrap();
+        assert_eq!(resp.status, 201);
+        assert_eq!(
+            resp.json_body().unwrap().get_u64("experiment"),
+            Some(1)
+        );
+
+        // Banner shows the new experiment.
+        let resp = client.send(&Request::new(Method::Get, "/")).unwrap();
+        assert_eq!(resp.json_body().unwrap().get_u64("experiment"), Some(1));
+        handle.stop();
+    }
+
+    #[test]
+    fn concurrent_islands_against_one_server() {
+        let config = PoolServerConfig {
+            n_bits: 16,
+            target_fitness: 1e9, // never solved during this test
+            ..Default::default()
+        };
+        let handle = PoolServer::spawn("127.0.0.1:0", config).unwrap();
+        let addr = handle.addr;
+        let threads: Vec<_> = (0..6)
+            .map(|t| {
+                std::thread::spawn(move || {
+                    let mut c = HttpClient::connect(addr).unwrap();
+                    for i in 0..30 {
+                        let resp = c
+                            .send(&put_req(
+                                "0101010101010101",
+                                (t * 100 + i) as f64,
+                                &format!("island-{t}"),
+                            ))
+                            .unwrap();
+                        assert_eq!(resp.status, 200);
+                        let resp = c
+                            .send(&Request::new(
+                                Method::Get,
+                                "/experiment/random",
+                            ))
+                            .unwrap();
+                        assert_eq!(resp.status, 200);
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        let mut c = HttpClient::connect(addr).unwrap();
+        let stats = c
+            .send(&Request::new(Method::Get, "/stats"))
+            .unwrap()
+            .json_body()
+            .unwrap();
+        assert_eq!(stats.get_u64("total_requests"), Some(6 * 30 * 2));
+        handle.stop();
+    }
+
+    #[test]
+    fn jsonl_log_records_solution() {
+        let path = std::env::temp_dir()
+            .join(format!("nodio-server-log-{}.jsonl", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        let config = PoolServerConfig {
+            n_bits: 4,
+            target_fitness: 4.0,
+            log_path: Some(path.clone()),
+            ..Default::default()
+        };
+        let handle = PoolServer::spawn("127.0.0.1:0", config).unwrap();
+        let mut client = HttpClient::connect(handle.addr).unwrap();
+        client.send(&put_req("0101", 2.0, "w")).unwrap();
+        client.send(&put_req("1111", 4.0, "w")).unwrap();
+        handle.stop(); // drop flushes the log
+
+        let text = std::fs::read_to_string(&path).unwrap();
+        let kinds: Vec<String> = text
+            .lines()
+            .map(|l| {
+                crate::json::parse(l)
+                    .unwrap()
+                    .get_str("event")
+                    .unwrap()
+                    .to_string()
+            })
+            .collect();
+        assert_eq!(kinds, vec!["put", "put", "solution"]);
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -1,0 +1,195 @@
+//! Experiment time series — the server-side data behind the paper's
+//! in-page charts (Chart.js plotting generation/fitness over time).
+//!
+//! A fixed-capacity ring of `(t, best_fitness, pool_size, puts)` samples,
+//! recorded on every PUT, downsampled on overflow by dropping every other
+//! sample (so the series always spans the whole experiment at bounded
+//! memory — good enough for plotting, cheap enough for the event loop).
+
+use std::time::Instant;
+
+use crate::json::Json;
+
+/// One observation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Sample {
+    pub t_s: f64,
+    pub best_fitness: f64,
+    pub pool_size: usize,
+    pub puts: u64,
+}
+
+/// Bounded, whole-run-spanning series.
+#[derive(Debug)]
+pub struct TimeSeries {
+    samples: Vec<Sample>,
+    capacity: usize,
+    /// Record every `stride`-th event; doubles when the buffer fills.
+    stride: u64,
+    events: u64,
+    epoch: Instant,
+}
+
+impl TimeSeries {
+    pub fn new(capacity: usize) -> TimeSeries {
+        assert!(capacity >= 8);
+        TimeSeries {
+            samples: Vec::with_capacity(capacity),
+            capacity,
+            stride: 1,
+            events: 0,
+            epoch: Instant::now(),
+        }
+    }
+
+    /// Record an observation (subject to the current stride).
+    pub fn record(&mut self, best_fitness: f64, pool_size: usize, puts: u64) {
+        self.events += 1;
+        if self.events % self.stride != 0 {
+            return;
+        }
+        if self.samples.len() >= self.capacity {
+            // Halve resolution: keep every other sample, double stride.
+            let kept: Vec<Sample> =
+                self.samples.iter().step_by(2).copied().collect();
+            self.samples = kept;
+            self.stride *= 2;
+        }
+        self.samples.push(Sample {
+            t_s: self.epoch.elapsed().as_secs_f64(),
+            best_fitness,
+            pool_size,
+            puts,
+        });
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    pub fn samples(&self) -> &[Sample] {
+        &self.samples
+    }
+
+    /// Reset for a new experiment.
+    pub fn clear(&mut self) {
+        self.samples.clear();
+        self.stride = 1;
+        self.events = 0;
+        self.epoch = Instant::now();
+    }
+
+    /// JSON array for the `/metrics` route.
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            self.samples
+                .iter()
+                .map(|s| {
+                    Json::obj(vec![
+                        ("t_s", s.t_s.into()),
+                        ("best", s.best_fitness.into()),
+                        ("pool", s.pool_size.into()),
+                        ("puts", s.puts.into()),
+                    ])
+                })
+                .collect(),
+        )
+    }
+
+    /// A terminal sparkline of best-fitness over time (the CLI's chart).
+    pub fn sparkline(&self, width: usize) -> String {
+        if self.samples.is_empty() {
+            return String::new();
+        }
+        const LEVELS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+        let (min, max) = self.samples.iter().fold(
+            (f64::INFINITY, f64::NEG_INFINITY),
+            |(lo, hi), s| (lo.min(s.best_fitness), hi.max(s.best_fitness)),
+        );
+        let span = (max - min).max(1e-9);
+        let step = (self.samples.len() as f64 / width as f64).max(1.0);
+        let mut out = String::new();
+        let mut i = 0.0;
+        while (i as usize) < self.samples.len() && out.chars().count() < width {
+            let s = &self.samples[i as usize];
+            let level = ((s.best_fitness - min) / span * 7.0).round() as usize;
+            out.push(LEVELS[level.min(7)]);
+            i += step;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_reports() {
+        let mut ts = TimeSeries::new(16);
+        for i in 0..10 {
+            ts.record(i as f64, i, i as u64);
+        }
+        assert_eq!(ts.len(), 10);
+        let json = ts.to_json();
+        let arr = json.as_arr().unwrap();
+        assert_eq!(arr.len(), 10);
+        assert_eq!(arr[9].get_f64("best"), Some(9.0));
+    }
+
+    #[test]
+    fn downsampling_bounds_memory_and_spans_run() {
+        let mut ts = TimeSeries::new(16);
+        for i in 0..1000 {
+            ts.record(i as f64, 0, i);
+        }
+        assert!(ts.len() <= 16);
+        // Still covers early and late observations.
+        let first = ts.samples().first().unwrap();
+        let last = ts.samples().last().unwrap();
+        assert!(first.puts < 100);
+        assert!(last.puts > 800);
+        // Monotone time.
+        let mut prev = -1.0;
+        for s in ts.samples() {
+            assert!(s.t_s >= prev);
+            prev = s.t_s;
+        }
+    }
+
+    #[test]
+    fn clear_resets() {
+        let mut ts = TimeSeries::new(8);
+        for i in 0..100 {
+            ts.record(i as f64, 0, i);
+        }
+        ts.clear();
+        assert!(ts.is_empty());
+        ts.record(1.0, 1, 1);
+        assert_eq!(ts.len(), 1); // stride reset to 1
+    }
+
+    #[test]
+    fn sparkline_shape() {
+        let mut ts = TimeSeries::new(64);
+        for i in 0..32 {
+            ts.record(i as f64, 0, i);
+        }
+        let line = ts.sparkline(16);
+        assert!(!line.is_empty());
+        assert!(line.chars().count() <= 16);
+        // Rising series starts low, ends high.
+        assert_eq!(line.chars().next(), Some('▁'));
+        assert_eq!(line.chars().last(), Some('█'));
+    }
+
+    #[test]
+    fn empty_sparkline() {
+        let ts = TimeSeries::new(8);
+        assert_eq!(ts.sparkline(10), "");
+    }
+}

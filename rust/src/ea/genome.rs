@@ -1,0 +1,222 @@
+//! Genome representations.
+
+use crate::rng::{dist, Rng64};
+
+/// A fixed-length binary chromosome. Bits are stored one-per-byte (0/1):
+/// simpler and faster for the per-bit operators the GA uses than packed
+/// words, and it marshals to the XLA artifacts' f32 {0,1} populations with
+/// a cast instead of unpacking.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct BitString {
+    bits: Vec<u8>,
+}
+
+impl BitString {
+    pub fn zeros(n: usize) -> BitString {
+        BitString { bits: vec![0; n] }
+    }
+
+    pub fn ones(n: usize) -> BitString {
+        BitString { bits: vec![1; n] }
+    }
+
+    pub fn random<R: Rng64 + ?Sized>(rng: &mut R, n: usize) -> BitString {
+        let bits = (0..n).map(|_| (rng.next_u64() & 1) as u8).collect();
+        BitString { bits }
+    }
+
+    pub fn from_bits(bits: Vec<u8>) -> BitString {
+        debug_assert!(bits.iter().all(|&b| b <= 1));
+        BitString { bits }
+    }
+
+    /// Parse a `"0110..."` string — the pool wire format for chromosomes
+    /// (mirrors NodIO's string representation in PUT bodies).
+    pub fn parse(s: &str) -> Option<BitString> {
+        let mut bits = Vec::with_capacity(s.len());
+        for c in s.chars() {
+            match c {
+                '0' => bits.push(0),
+                '1' => bits.push(1),
+                _ => return None,
+            }
+        }
+        Some(BitString { bits })
+    }
+
+    pub fn to_string01(&self) -> String {
+        self.bits.iter().map(|&b| if b == 1 { '1' } else { '0' }).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.bits.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.bits.is_empty()
+    }
+
+    pub fn bits(&self) -> &[u8] {
+        &self.bits
+    }
+
+    pub fn get(&self, i: usize) -> u8 {
+        self.bits[i]
+    }
+
+    pub fn set(&mut self, i: usize, v: u8) {
+        debug_assert!(v <= 1);
+        self.bits[i] = v;
+    }
+
+    pub fn flip(&mut self, i: usize) {
+        self.bits[i] ^= 1;
+    }
+
+    pub fn count_ones(&self) -> usize {
+        self.bits.iter().map(|&b| b as usize).sum()
+    }
+
+    /// Mutate in place: each bit flips independently with probability `p`.
+    pub fn mutate<R: Rng64 + ?Sized>(&mut self, rng: &mut R, p: f64) {
+        for bit in &mut self.bits {
+            if dist::bernoulli(rng, p) {
+                *bit ^= 1;
+            }
+        }
+    }
+
+    /// f32 {0,1} view for the XLA literal marshaller.
+    pub fn to_f32(&self) -> Vec<f32> {
+        self.bits.iter().map(|&b| b as f32).collect()
+    }
+
+    pub fn from_f32(values: &[f32]) -> BitString {
+        BitString {
+            bits: values.iter().map(|&v| if v >= 0.5 { 1 } else { 0 }).collect(),
+        }
+    }
+}
+
+/// A real-valued genome (used by the F15 workload and the real-coded
+/// operators).
+#[derive(Debug, Clone, PartialEq)]
+pub struct RealVector {
+    pub values: Vec<f64>,
+}
+
+impl RealVector {
+    pub fn random_in<R: Rng64 + ?Sized>(
+        rng: &mut R,
+        n: usize,
+        lo: f64,
+        hi: f64,
+    ) -> RealVector {
+        RealVector {
+            values: (0..n).map(|_| dist::uniform_in(rng, lo, hi)).collect(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+
+    pub fn to_f32(&self) -> Vec<f32> {
+        self.values.iter().map(|&v| v as f32).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::SplitMix64;
+    use crate::testkit::{forall, PropConfig};
+
+    #[test]
+    fn construction() {
+        assert_eq!(BitString::zeros(5).count_ones(), 0);
+        assert_eq!(BitString::ones(5).count_ones(), 5);
+        assert_eq!(BitString::zeros(5).len(), 5);
+    }
+
+    #[test]
+    fn parse_round_trip() {
+        let s = "0110100111";
+        let b = BitString::parse(s).unwrap();
+        assert_eq!(b.to_string01(), s);
+        assert_eq!(b.count_ones(), 6);
+        assert!(BitString::parse("01x").is_none());
+        assert_eq!(BitString::parse("").unwrap().len(), 0);
+    }
+
+    #[test]
+    fn f32_round_trip_property() {
+        forall(
+            &PropConfig::cases(50),
+            |rng| { let n = 1 + (rng.next_u64() % 200) as usize; BitString::random(rng, n) },
+            |b| BitString::from_f32(&b.to_f32()) == *b,
+        );
+    }
+
+    #[test]
+    fn string_round_trip_property() {
+        forall(
+            &PropConfig::cases(50),
+            |rng| { let n = (rng.next_u64() % 100) as usize; BitString::random(rng, n) },
+            |b| BitString::parse(&b.to_string01()).as_ref() == Some(b),
+        );
+    }
+
+    #[test]
+    fn flip_and_set() {
+        let mut b = BitString::zeros(4);
+        b.flip(1);
+        b.set(3, 1);
+        assert_eq!(b.to_string01(), "0101");
+        b.flip(1);
+        assert_eq!(b.to_string01(), "0001");
+    }
+
+    #[test]
+    fn mutation_rate_zero_and_one() {
+        let mut rng = SplitMix64::new(1);
+        let mut b = BitString::random(&mut rng, 64);
+        let orig = b.clone();
+        b.mutate(&mut rng, 0.0);
+        assert_eq!(b, orig);
+        b.mutate(&mut rng, 1.0);
+        for i in 0..64 {
+            assert_eq!(b.get(i), orig.get(i) ^ 1);
+        }
+    }
+
+    #[test]
+    fn mutation_rate_statistics() {
+        let mut rng = SplitMix64::new(2);
+        let n = 10_000;
+        let mut b = BitString::zeros(n);
+        b.mutate(&mut rng, 0.1);
+        let flipped = b.count_ones();
+        assert!((800..1200).contains(&flipped), "flipped={flipped}");
+    }
+
+    #[test]
+    fn random_is_balanced() {
+        let mut rng = SplitMix64::new(3);
+        let b = BitString::random(&mut rng, 10_000);
+        let ones = b.count_ones();
+        assert!((4700..5300).contains(&ones), "ones={ones}");
+    }
+
+    #[test]
+    fn real_vector_bounds() {
+        let mut rng = SplitMix64::new(4);
+        let v = RealVector::random_in(&mut rng, 1000, -5.0, 5.0);
+        assert!(v.values.iter().all(|&x| (-5.0..5.0).contains(&x)));
+        assert_eq!(v.len(), 1000);
+    }
+}

@@ -1,0 +1,24 @@
+//! The evolutionary-algorithm core — the NodEO analog.
+//!
+//! NodEO is the JavaScript EA library NodIO embeds in each browser; this
+//! module is its Rust counterpart: genomes, variation operators, selection,
+//! and the island GA loop that volunteer clients run between pool
+//! exchanges.
+//!
+//! The island's *generation step* is deliberately identical to the L2 JAX
+//! `ea_epoch` (tournament-2 → uniform crossover → per-bit flip mutation →
+//! elitism in slot 0), so the [`crate::runtime::NativeEngine`] and
+//! [`crate::runtime::XlaEngine`] are two implementations of the same
+//! algorithm and the Figure 3/4 comparisons are apples-to-apples.
+
+pub mod genome;
+pub mod island;
+pub mod operators;
+pub mod population;
+pub mod real_island;
+pub mod selection;
+
+pub use genome::{BitString, RealVector};
+pub use island::{Island, IslandConfig, RunReport};
+pub use population::Population;
+pub use real_island::{RealIsland, RealIslandConfig};

@@ -1,0 +1,202 @@
+//! Variation operators: crossover and mutation for both genome types.
+
+use super::genome::{BitString, RealVector};
+use crate::rng::{dist, Rng64};
+
+// ---------------------------------------------------------------------
+// Bitstring crossover
+// ---------------------------------------------------------------------
+
+/// Uniform crossover: each child bit comes from parent 1 or 2 with equal
+/// probability — the operator the NodEO islands (and the L2 `ea_epoch`)
+/// use.
+pub fn uniform_crossover<R: Rng64 + ?Sized>(
+    rng: &mut R,
+    p1: &BitString,
+    p2: &BitString,
+) -> BitString {
+    assert_eq!(p1.len(), p2.len());
+    let mut child = Vec::with_capacity(p1.len());
+    let mut i = 0;
+    while i < p1.len() {
+        // Draw 64 mask bits at a time: one RNG call per 64 loci.
+        let mut mask = rng.next_u64();
+        let chunk_end = (i + 64).min(p1.len());
+        while i < chunk_end {
+            let take1 = mask & 1 == 1;
+            child.push(if take1 { p1.get(i) } else { p2.get(i) });
+            mask >>= 1;
+            i += 1;
+        }
+    }
+    BitString::from_bits(child)
+}
+
+/// Two-point crossover (classical GA alternative; used by the operator
+/// ablation).
+pub fn two_point_crossover<R: Rng64 + ?Sized>(
+    rng: &mut R,
+    p1: &BitString,
+    p2: &BitString,
+) -> BitString {
+    assert_eq!(p1.len(), p2.len());
+    let n = p1.len();
+    if n < 2 {
+        return p1.clone();
+    }
+    let a = dist::range(rng, 0, n);
+    let b = dist::range(rng, 0, n);
+    let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+    let mut child = p1.clone();
+    for i in lo..hi {
+        child.set(i, p2.get(i));
+    }
+    child
+}
+
+/// Per-bit flip mutation with probability `p` (in place).
+pub fn bitflip_mutation<R: Rng64 + ?Sized>(
+    rng: &mut R,
+    genome: &mut BitString,
+    p: f64,
+) {
+    genome.mutate(rng, p);
+}
+
+// ---------------------------------------------------------------------
+// Real-vector operators
+// ---------------------------------------------------------------------
+
+/// BLX-alpha blend crossover for real vectors.
+pub fn blx_alpha<R: Rng64 + ?Sized>(
+    rng: &mut R,
+    p1: &RealVector,
+    p2: &RealVector,
+    alpha: f64,
+) -> RealVector {
+    assert_eq!(p1.len(), p2.len());
+    let values = p1
+        .values
+        .iter()
+        .zip(&p2.values)
+        .map(|(&a, &b)| {
+            let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+            let span = hi - lo;
+            dist::uniform_in(rng, lo - alpha * span, hi + alpha * span)
+        })
+        .collect();
+    RealVector { values }
+}
+
+/// Gaussian perturbation: each gene moves by N(0, sigma) with probability
+/// `p`.
+pub fn gaussian_mutation<R: Rng64 + ?Sized>(
+    rng: &mut R,
+    genome: &mut RealVector,
+    p: f64,
+    sigma: f64,
+) {
+    for v in &mut genome.values {
+        if dist::bernoulli(rng, p) {
+            *v += dist::normal(rng, 0.0, sigma);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::SplitMix64;
+    use crate::testkit::{forall, PropConfig};
+
+    #[test]
+    fn uniform_child_bits_come_from_parents() {
+        forall(
+            &PropConfig::cases(60),
+            |rng| {
+                let n = 1 + (rng.next_u64() % 200) as usize;
+                let p1 = BitString::random(rng, n);
+                let p2 = BitString::random(rng, n);
+                let mut local = SplitMix64::new(rng.next_u64());
+                let child = uniform_crossover(&mut local, &p1, &p2);
+                (p1, p2, child)
+            },
+            |(p1, p2, child)| {
+                (0..p1.len())
+                    .all(|i| child.get(i) == p1.get(i) || child.get(i) == p2.get(i))
+            },
+        );
+    }
+
+    #[test]
+    fn uniform_mixes_roughly_evenly() {
+        let mut rng = SplitMix64::new(9);
+        let p1 = BitString::zeros(10_000);
+        let p2 = BitString::ones(10_000);
+        let child = uniform_crossover(&mut rng, &p1, &p2);
+        let ones = child.count_ones();
+        assert!((4600..5400).contains(&ones), "ones={ones}");
+    }
+
+    #[test]
+    fn uniform_identical_parents_identity() {
+        let mut rng = SplitMix64::new(10);
+        let p = BitString::random(&mut rng, 77);
+        let child = uniform_crossover(&mut rng, &p, &p);
+        assert_eq!(child, p);
+    }
+
+    #[test]
+    fn two_point_segment_structure() {
+        forall(
+            &PropConfig::cases(60),
+            |rng| {
+                let n = 2 + (rng.next_u64() % 100) as usize;
+                let p1 = BitString::zeros(n);
+                let p2 = BitString::ones(n);
+                let mut local = SplitMix64::new(rng.next_u64());
+                two_point_crossover(&mut local, &p1, &p2)
+            },
+            |child| {
+                // 0^a 1^b 0^c structure: at most two transitions.
+                let s = child.to_string01();
+                let transitions = s.as_bytes().windows(2)
+                    .filter(|w| w[0] != w[1]).count();
+                transitions <= 2
+            },
+        );
+    }
+
+    #[test]
+    fn blx_alpha_zero_stays_in_hull() {
+        let mut rng = SplitMix64::new(11);
+        let p1 = RealVector { values: vec![0.0, 1.0, -2.0] };
+        let p2 = RealVector { values: vec![1.0, 1.0, 2.0] };
+        for _ in 0..100 {
+            let c = blx_alpha(&mut rng, &p1, &p2, 0.0);
+            assert!((0.0..=1.0).contains(&c.values[0]));
+            assert!((c.values[1] - 1.0).abs() < 1e-12);
+            assert!((-2.0..=2.0).contains(&c.values[2]));
+        }
+    }
+
+    #[test]
+    fn gaussian_mutation_probability_zero_is_identity() {
+        let mut rng = SplitMix64::new(12);
+        let mut v = RealVector::random_in(&mut rng, 50, -1.0, 1.0);
+        let orig = v.clone();
+        gaussian_mutation(&mut rng, &mut v, 0.0, 1.0);
+        assert_eq!(v, orig);
+    }
+
+    #[test]
+    fn gaussian_mutation_perturbs() {
+        let mut rng = SplitMix64::new(13);
+        let mut v = RealVector { values: vec![0.0; 1000] };
+        gaussian_mutation(&mut rng, &mut v, 1.0, 0.5);
+        let moved = v.values.iter().filter(|&&x| x != 0.0).count();
+        assert!(moved > 990);
+        let mean: f64 = v.values.iter().sum::<f64>() / 1000.0;
+        assert!(mean.abs() < 0.1);
+    }
+}

@@ -1,0 +1,103 @@
+//! A population of bitstring genomes with cached fitness.
+
+use super::genome::BitString;
+use super::selection;
+use crate::problems::BitProblem;
+use crate::rng::Rng64;
+
+/// Population with an always-current fitness vector.
+#[derive(Debug, Clone)]
+pub struct Population {
+    pub members: Vec<BitString>,
+    pub fitness: Vec<f64>,
+}
+
+impl Population {
+    /// Random initialization + evaluation. Counts `size` evaluations into
+    /// `evals`.
+    pub fn random<R: Rng64 + ?Sized>(
+        rng: &mut R,
+        size: usize,
+        problem: &dyn BitProblem,
+        evals: &mut u64,
+    ) -> Population {
+        let members: Vec<BitString> = (0..size)
+            .map(|_| BitString::random(rng, problem.n_bits()))
+            .collect();
+        let fitness = members
+            .iter()
+            .map(|m| {
+                *evals += 1;
+                problem.eval(m.bits())
+            })
+            .collect();
+        Population { members, fitness }
+    }
+
+    pub fn size(&self) -> usize {
+        self.members.len()
+    }
+
+    pub fn best_index(&self) -> usize {
+        selection::best_index(&self.fitness)
+    }
+
+    pub fn best(&self) -> (&BitString, f64) {
+        let i = self.best_index();
+        (&self.members[i], self.fitness[i])
+    }
+
+    pub fn worst_index(&self) -> usize {
+        selection::worst_index(&self.fitness)
+    }
+
+    pub fn mean_fitness(&self) -> f64 {
+        self.fitness.iter().sum::<f64>() / self.fitness.len() as f64
+    }
+
+    /// Replace the member at `index` and refresh its fitness.
+    pub fn replace(
+        &mut self,
+        index: usize,
+        genome: BitString,
+        problem: &dyn BitProblem,
+        evals: &mut u64,
+    ) {
+        *evals += 1;
+        self.fitness[index] = problem.eval(genome.bits());
+        self.members[index] = genome;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::problems::OneMax;
+    use crate::rng::SplitMix64;
+
+    #[test]
+    fn random_population_is_evaluated() {
+        let mut rng = SplitMix64::new(1);
+        let problem = OneMax::new(32);
+        let mut evals = 0;
+        let pop = Population::random(&mut rng, 20, &problem, &mut evals);
+        assert_eq!(evals, 20);
+        assert_eq!(pop.size(), 20);
+        for (m, &f) in pop.members.iter().zip(&pop.fitness) {
+            assert_eq!(f, m.count_ones() as f64);
+        }
+    }
+
+    #[test]
+    fn best_and_replace() {
+        let mut rng = SplitMix64::new(2);
+        let problem = OneMax::new(16);
+        let mut evals = 0;
+        let mut pop = Population::random(&mut rng, 10, &problem, &mut evals);
+        pop.replace(3, BitString::ones(16), &problem, &mut evals);
+        assert_eq!(evals, 11);
+        assert_eq!(pop.best_index(), 3);
+        assert_eq!(pop.best().1, 16.0);
+        assert!(pop.mean_fitness() <= 16.0);
+    }
+}

@@ -1,0 +1,141 @@
+//! Parent selection over a fitness vector (maximization throughout —
+//! matching the trap problem and the L2 `ea_epoch`).
+
+use crate::rng::{dist, Rng64};
+
+/// Tournament selection: best of `k` uniformly drawn candidates.
+pub fn tournament<R: Rng64 + ?Sized>(
+    rng: &mut R,
+    fitness: &[f64],
+    k: usize,
+) -> usize {
+    assert!(!fitness.is_empty() && k >= 1);
+    let mut best = dist::range(rng, 0, fitness.len());
+    for _ in 1..k {
+        let challenger = dist::range(rng, 0, fitness.len());
+        if fitness[challenger] > fitness[best] {
+            best = challenger;
+        }
+    }
+    best
+}
+
+/// Fitness-proportional (roulette-wheel) selection. Requires non-negative
+/// fitness; an all-zero vector degenerates to uniform.
+pub fn roulette<R: Rng64 + ?Sized>(rng: &mut R, fitness: &[f64]) -> usize {
+    assert!(!fitness.is_empty());
+    debug_assert!(fitness.iter().all(|&f| f >= 0.0));
+    let total: f64 = fitness.iter().sum();
+    if total <= 0.0 {
+        return dist::range(rng, 0, fitness.len());
+    }
+    let mut target = rng.uniform() * total;
+    for (i, &f) in fitness.iter().enumerate() {
+        target -= f;
+        if target <= 0.0 {
+            return i;
+        }
+    }
+    fitness.len() - 1
+}
+
+/// Index of the best individual (first max on ties — matching
+/// `jnp.argmax` so the native and XLA engines agree).
+pub fn best_index(fitness: &[f64]) -> usize {
+    assert!(!fitness.is_empty());
+    let mut best = 0;
+    for (i, &f) in fitness.iter().enumerate().skip(1) {
+        if f > fitness[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Index of the worst individual (first min on ties).
+pub fn worst_index(fitness: &[f64]) -> usize {
+    assert!(!fitness.is_empty());
+    let mut worst = 0;
+    for (i, &f) in fitness.iter().enumerate().skip(1) {
+        if f < fitness[worst] {
+            worst = i;
+        }
+    }
+    worst
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::SplitMix64;
+
+    #[test]
+    fn tournament_prefers_fitter() {
+        let mut rng = SplitMix64::new(1);
+        let fitness = [1.0, 2.0, 3.0, 100.0];
+        let mut wins = [0u64; 4];
+        for _ in 0..10_000 {
+            wins[tournament(&mut rng, &fitness, 2)] += 1;
+        }
+        // The best individual wins every tournament it enters:
+        // P(selected) = 1 - (3/4)^2 = 7/16 ~ 0.44.
+        assert!(wins[3] > 3800, "wins={wins:?}");
+        assert!(wins[0] < wins[3]);
+    }
+
+    #[test]
+    fn tournament_k1_is_uniform() {
+        let mut rng = SplitMix64::new(2);
+        let fitness = [5.0, 1.0];
+        let mut first = 0u64;
+        for _ in 0..10_000 {
+            if tournament(&mut rng, &fitness, 1) == 0 {
+                first += 1;
+            }
+        }
+        assert!((4500..5500).contains(&first), "first={first}");
+    }
+
+    #[test]
+    fn tournament_large_k_always_best() {
+        let mut rng = SplitMix64::new(3);
+        let fitness = [1.0, 9.0, 3.0];
+        for _ in 0..100 {
+            assert_eq!(tournament(&mut rng, &fitness, 64), 1);
+        }
+    }
+
+    #[test]
+    fn roulette_proportions() {
+        let mut rng = SplitMix64::new(4);
+        let fitness = [1.0, 3.0];
+        let mut second = 0u64;
+        for _ in 0..40_000 {
+            if roulette(&mut rng, &fitness) == 1 {
+                second += 1;
+            }
+        }
+        let frac = second as f64 / 40_000.0;
+        assert!((frac - 0.75).abs() < 0.02, "frac={frac}");
+    }
+
+    #[test]
+    fn roulette_all_zero_degenerates_to_uniform() {
+        let mut rng = SplitMix64::new(5);
+        let fitness = [0.0, 0.0, 0.0];
+        let mut counts = [0u64; 3];
+        for _ in 0..9000 {
+            counts[roulette(&mut rng, &fitness)] += 1;
+        }
+        for &c in &counts {
+            assert!((2500..3500).contains(&c), "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn best_and_worst() {
+        let fitness = [3.0, 7.0, 1.0, 7.0];
+        assert_eq!(best_index(&fitness), 1); // first max wins
+        assert_eq!(worst_index(&fitness), 2);
+    }
+}

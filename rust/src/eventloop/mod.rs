@@ -1,0 +1,307 @@
+//! A minimal single-threaded I/O event loop over `epoll(7)`.
+//!
+//! The paper's scalability argument rests on the server being "a
+//! lightweight and high-performance, single-threaded, server based in
+//! Node.js": one non-blocking thread multiplexing many slow volunteer
+//! connections. Reproducing that property is the point of this module —
+//! a threaded server would change the system under test — so the pool
+//! server ([`crate::http::server`]) runs on this loop rather than on a
+//! thread pool.
+//!
+//! Safety: this module is the crate's only unsafe-FFI surface besides the
+//! PJRT bindings; every libc call checks its return value.
+
+use std::io;
+use std::os::fd::RawFd;
+use std::time::Duration;
+
+/// Readiness interest for a registered file descriptor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Interest {
+    pub readable: bool,
+    pub writable: bool,
+}
+
+impl Interest {
+    pub const READ: Interest = Interest { readable: true, writable: false };
+    pub const WRITE: Interest = Interest { readable: false, writable: true };
+    pub const BOTH: Interest = Interest { readable: true, writable: true };
+
+    fn events(self) -> u32 {
+        let mut ev = libc::EPOLLRDHUP as u32;
+        if self.readable {
+            ev |= libc::EPOLLIN as u32;
+        }
+        if self.writable {
+            ev |= libc::EPOLLOUT as u32;
+        }
+        ev
+    }
+}
+
+/// A readiness event delivered by [`Epoll::wait`].
+#[derive(Debug, Clone, Copy)]
+pub struct Event {
+    pub token: u64,
+    pub readable: bool,
+    pub writable: bool,
+    /// Peer hung up or the fd errored; the owner should close it.
+    pub closed: bool,
+}
+
+/// Thin RAII wrapper around an epoll instance.
+pub struct Epoll {
+    fd: RawFd,
+}
+
+impl Epoll {
+    pub fn new() -> io::Result<Epoll> {
+        let fd = unsafe { libc::epoll_create1(libc::EPOLL_CLOEXEC) };
+        if fd < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(Epoll { fd })
+    }
+
+    fn ctl(&self, op: i32, fd: RawFd, token: u64, interest: Interest) -> io::Result<()> {
+        let mut ev = libc::epoll_event { events: interest.events(), u64: token };
+        let rc = unsafe { libc::epoll_ctl(self.fd, op, fd, &mut ev) };
+        if rc < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(())
+    }
+
+    /// Register `fd` with a caller-chosen token (level-triggered).
+    pub fn add(&self, fd: RawFd, token: u64, interest: Interest) -> io::Result<()> {
+        self.ctl(libc::EPOLL_CTL_ADD, fd, token, interest)
+    }
+
+    /// Change the interest set of a registered fd.
+    pub fn modify(&self, fd: RawFd, token: u64, interest: Interest) -> io::Result<()> {
+        self.ctl(libc::EPOLL_CTL_MOD, fd, token, interest)
+    }
+
+    /// Deregister. Errors from already-closed fds are ignored (the kernel
+    /// auto-removes closed fds from epoll sets).
+    pub fn remove(&self, fd: RawFd) {
+        let mut ev = libc::epoll_event { events: 0, u64: 0 };
+        unsafe { libc::epoll_ctl(self.fd, libc::EPOLL_CTL_DEL, fd, &mut ev) };
+    }
+
+    /// Wait for events; `timeout=None` blocks indefinitely.
+    pub fn wait(&self, timeout: Option<Duration>, out: &mut Vec<Event>) -> io::Result<()> {
+        out.clear();
+        const CAP: usize = 256;
+        let mut raw: [libc::epoll_event; CAP] =
+            unsafe { std::mem::zeroed() };
+        let ms = match timeout {
+            None => -1,
+            Some(d) => d.as_millis().min(i32::MAX as u128) as i32,
+        };
+        let n = loop {
+            let n = unsafe { libc::epoll_wait(self.fd, raw.as_mut_ptr(), CAP as i32, ms) };
+            if n >= 0 {
+                break n as usize;
+            }
+            let err = io::Error::last_os_error();
+            if err.kind() != io::ErrorKind::Interrupted {
+                return Err(err);
+            }
+        };
+        for ev in &raw[..n] {
+            let bits = ev.events;
+            out.push(Event {
+                token: ev.u64,
+                readable: bits & (libc::EPOLLIN as u32) != 0,
+                writable: bits & (libc::EPOLLOUT as u32) != 0,
+                closed: bits
+                    & (libc::EPOLLHUP as u32
+                        | libc::EPOLLERR as u32
+                        | libc::EPOLLRDHUP as u32)
+                    != 0,
+            });
+        }
+        Ok(())
+    }
+}
+
+impl Drop for Epoll {
+    fn drop(&mut self) {
+        unsafe { libc::close(self.fd) };
+    }
+}
+
+/// Cross-thread wakeup for the loop, built on `eventfd(2)`. Cloneable; any
+/// clone's [`Waker::wake`] makes the next `epoll_wait` return with the
+/// waker's token readable.
+#[derive(Debug)]
+pub struct Waker {
+    fd: RawFd,
+}
+
+impl Waker {
+    pub fn new() -> io::Result<Waker> {
+        let fd = unsafe { libc::eventfd(0, libc::EFD_NONBLOCK | libc::EFD_CLOEXEC) };
+        if fd < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(Waker { fd })
+    }
+
+    pub fn fd(&self) -> RawFd {
+        self.fd
+    }
+
+    pub fn wake(&self) {
+        let one: u64 = 1;
+        unsafe {
+            libc::write(self.fd, &one as *const u64 as *const libc::c_void, 8);
+        }
+    }
+
+    /// Drain pending wakeups (call when the waker token fires).
+    pub fn drain(&self) {
+        let mut buf = 0u64;
+        unsafe {
+            libc::read(self.fd, &mut buf as *mut u64 as *mut libc::c_void, 8);
+        }
+    }
+
+    pub fn try_clone(&self) -> io::Result<Waker> {
+        let fd = unsafe { libc::dup(self.fd) };
+        if fd < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(Waker { fd })
+    }
+}
+
+impl Drop for Waker {
+    fn drop(&mut self) {
+        unsafe { libc::close(self.fd) };
+    }
+}
+
+/// Put an fd into non-blocking mode.
+pub fn set_nonblocking(fd: RawFd) -> io::Result<()> {
+    let flags = unsafe { libc::fcntl(fd, libc::F_GETFL) };
+    if flags < 0 {
+        return Err(io::Error::last_os_error());
+    }
+    let rc = unsafe { libc::fcntl(fd, libc::F_SETFL, flags | libc::O_NONBLOCK) };
+    if rc < 0 {
+        return Err(io::Error::last_os_error());
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{Read, Write};
+    use std::os::fd::AsRawFd;
+    use std::time::Duration;
+
+    #[test]
+    fn waker_wakes_epoll() {
+        let ep = Epoll::new().unwrap();
+        let waker = Waker::new().unwrap();
+        ep.add(waker.fd(), 7, Interest::READ).unwrap();
+
+        let mut events = Vec::new();
+        // Nothing pending: times out empty.
+        ep.wait(Some(Duration::from_millis(10)), &mut events).unwrap();
+        assert!(events.is_empty());
+
+        let remote = waker.try_clone().unwrap();
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            remote.wake();
+        });
+        ep.wait(Some(Duration::from_secs(5)), &mut events).unwrap();
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].token, 7);
+        assert!(events[0].readable);
+        waker.drain();
+        t.join().unwrap();
+
+        // Drained: back to empty timeouts.
+        ep.wait(Some(Duration::from_millis(10)), &mut events).unwrap();
+        assert!(events.is_empty());
+    }
+
+    #[test]
+    fn socket_readability() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let ep = Epoll::new().unwrap();
+        ep.add(listener.as_raw_fd(), 1, Interest::READ).unwrap();
+
+        let mut events = Vec::new();
+        ep.wait(Some(Duration::from_millis(10)), &mut events).unwrap();
+        assert!(events.is_empty());
+
+        let mut client = std::net::TcpStream::connect(addr).unwrap();
+        ep.wait(Some(Duration::from_secs(5)), &mut events).unwrap();
+        assert!(events.iter().any(|e| e.token == 1 && e.readable));
+
+        let (mut conn, _) = listener.accept().unwrap();
+        ep.add(conn.as_raw_fd(), 2, Interest::READ).unwrap();
+        client.write_all(b"ping").unwrap();
+        ep.wait(Some(Duration::from_secs(5)), &mut events).unwrap();
+        assert!(events.iter().any(|e| e.token == 2 && e.readable));
+
+        let mut buf = [0u8; 4];
+        conn.read_exact(&mut buf).unwrap();
+        assert_eq!(&buf, b"ping");
+    }
+
+    #[test]
+    fn hangup_reported() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = std::net::TcpStream::connect(addr).unwrap();
+        let (conn, _) = listener.accept().unwrap();
+
+        let ep = Epoll::new().unwrap();
+        ep.add(conn.as_raw_fd(), 3, Interest::READ).unwrap();
+        drop(client);
+
+        let mut events = Vec::new();
+        ep.wait(Some(Duration::from_secs(5)), &mut events).unwrap();
+        assert!(events.iter().any(|e| e.token == 3 && e.closed));
+    }
+
+    #[test]
+    fn modify_interest() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let _client = std::net::TcpStream::connect(addr).unwrap();
+        let (conn, _) = listener.accept().unwrap();
+
+        let ep = Epoll::new().unwrap();
+        // Writable interest on a fresh socket fires immediately.
+        ep.add(conn.as_raw_fd(), 4, Interest::WRITE).unwrap();
+        let mut events = Vec::new();
+        ep.wait(Some(Duration::from_secs(5)), &mut events).unwrap();
+        assert!(events.iter().any(|e| e.token == 4 && e.writable));
+
+        // Switch to read-only: no more writable events.
+        ep.modify(conn.as_raw_fd(), 4, Interest::READ).unwrap();
+        ep.wait(Some(Duration::from_millis(20)), &mut events).unwrap();
+        assert!(events.iter().all(|e| !e.writable));
+    }
+
+    #[test]
+    fn nonblocking_read_would_block() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let _client = std::net::TcpStream::connect(addr).unwrap();
+        let (mut conn, _) = listener.accept().unwrap();
+        set_nonblocking(conn.as_raw_fd()).unwrap();
+        let mut buf = [0u8; 16];
+        let err = conn.read(&mut buf).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::WouldBlock);
+    }
+}

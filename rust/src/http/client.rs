@@ -1,0 +1,224 @@
+//! Blocking keep-alive HTTP client — what volunteer islands use to talk to
+//! the pool (the browser's `XMLHttpRequest` analog).
+//!
+//! Deliberately synchronous: an island blocks on its migration exchange
+//! exactly like the paper's worker does between `PUT` and `GET`. Supports
+//! reconnection (for the fault-tolerance experiment E5) and per-request
+//! timeouts.
+
+use std::io::{self, Read, Write};
+use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
+use std::time::Duration;
+
+use super::parse::ResponseParser;
+use super::types::{Request, Response};
+
+/// Default per-request timeout.
+pub const DEFAULT_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// A keep-alive connection to one server.
+pub struct HttpClient {
+    addr: SocketAddr,
+    stream: Option<TcpStream>,
+    timeout: Duration,
+}
+
+impl HttpClient {
+    /// Resolve and connect.
+    pub fn connect(addr: impl ToSocketAddrs) -> io::Result<HttpClient> {
+        let addr = addr
+            .to_socket_addrs()?
+            .next()
+            .ok_or_else(|| io::Error::other("address resolved to nothing"))?;
+        let mut c = HttpClient { addr, stream: None, timeout: DEFAULT_TIMEOUT };
+        c.reconnect()?;
+        Ok(c)
+    }
+
+    /// Create without connecting (first `send` dials). Useful when the
+    /// server may not be up yet — islands keep evolving regardless (E5).
+    pub fn lazy(addr: SocketAddr) -> HttpClient {
+        HttpClient { addr, stream: None, timeout: DEFAULT_TIMEOUT }
+    }
+
+    pub fn set_timeout(&mut self, timeout: Duration) {
+        self.timeout = timeout;
+    }
+
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn is_connected(&self) -> bool {
+        self.stream.is_some()
+    }
+
+    fn reconnect(&mut self) -> io::Result<()> {
+        let stream = TcpStream::connect_timeout(&self.addr, self.timeout)?;
+        stream.set_read_timeout(Some(self.timeout))?;
+        stream.set_write_timeout(Some(self.timeout))?;
+        let _ = stream.set_nodelay(true);
+        self.stream = Some(stream);
+        Ok(())
+    }
+
+    /// Send one request, wait for the response. On connection failure the
+    /// socket is dropped and one reconnect+retry is attempted (covers the
+    /// server restarting between migrations); a second failure surfaces.
+    pub fn send(&mut self, req: &Request) -> io::Result<Response> {
+        if self.stream.is_none() {
+            self.reconnect()?;
+        }
+        match self.try_send(req) {
+            Ok(resp) => Ok(resp),
+            Err(_first) => {
+                // stale keep-alive socket or restarted server: redial once
+                self.stream = None;
+                self.reconnect()?;
+                self.try_send(req).inspect_err(|_e| {
+                    self.stream = None;
+                })
+            }
+        }
+    }
+
+    fn try_send(&mut self, req: &Request) -> io::Result<Response> {
+        let stream = self.stream.as_mut().expect("connected");
+        let mut wire = Vec::with_capacity(256 + req.body.len());
+        let target = if req.query.is_empty() {
+            req.path.clone()
+        } else {
+            format!("{}?{}", req.path, req.query)
+        };
+        wire.extend_from_slice(
+            format!("{} {} HTTP/1.1\r\n", req.method.as_str(), target)
+                .as_bytes(),
+        );
+        wire.extend_from_slice(b"host: nodio\r\n");
+        for (k, v) in &req.headers {
+            wire.extend_from_slice(format!("{k}: {v}\r\n").as_bytes());
+        }
+        wire.extend_from_slice(
+            format!("content-length: {}\r\n\r\n", req.body.len()).as_bytes(),
+        );
+        wire.extend_from_slice(&req.body);
+        stream.write_all(&wire)?;
+
+        let mut parser = ResponseParser::new();
+        let mut buf = [0u8; 16 * 1024];
+        loop {
+            match parser.next_response() {
+                Ok(Some(resp)) => {
+                    // Server may close after responding.
+                    if resp
+                        .header("connection")
+                        .map(|v| v.eq_ignore_ascii_case("close"))
+                        .unwrap_or(false)
+                    {
+                        self.stream = None;
+                    }
+                    return Ok(resp);
+                }
+                Ok(None) => {}
+                Err(e) => return Err(io::Error::other(e)),
+            }
+            let n = stream.read(&mut buf)?;
+            if n == 0 {
+                return Err(io::Error::new(
+                    io::ErrorKind::UnexpectedEof,
+                    "connection closed mid-response",
+                ));
+            }
+            parser.feed(&buf[..n]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::http::server::Server;
+    use crate::http::types::Method;
+
+    fn spawn_echo() -> crate::http::ServerHandle {
+        Server::spawn("127.0.0.1:0", || {
+            |req: &Request| -> Response {
+                Response::ok().with_text(&format!("{}", req.path))
+            }
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn basic_request() {
+        let h = spawn_echo();
+        let mut c = HttpClient::connect(h.addr).unwrap();
+        let r = c.send(&Request::new(Method::Get, "/ping")).unwrap();
+        assert_eq!(r.status, 200);
+        assert_eq!(r.body, b"/ping");
+        h.stop();
+    }
+
+    #[test]
+    fn query_string_forwarded() {
+        let h = Server::spawn("127.0.0.1:0", || {
+            |req: &Request| -> Response {
+                Response::ok()
+                    .with_text(req.query_param("k").unwrap_or("none"))
+            }
+        })
+        .unwrap();
+        let mut c = HttpClient::connect(h.addr).unwrap();
+        let r = c.send(&Request::new(Method::Get, "/q?k=v7")).unwrap();
+        assert_eq!(r.body, b"v7");
+        h.stop();
+    }
+
+    #[test]
+    fn reconnects_after_server_restart() {
+        let h = spawn_echo();
+        let addr = h.addr;
+        let mut c = HttpClient::connect(addr).unwrap();
+        c.send(&Request::new(Method::Get, "/a")).unwrap();
+        h.stop(); // server gone
+
+        // Requests now fail...
+        c.set_timeout(Duration::from_millis(300));
+        assert!(c.send(&Request::new(Method::Get, "/b")).is_err());
+
+        // ...until a new server binds the same port; then the client's
+        // redial logic recovers transparently.
+        let h2 = Server::spawn(&addr.to_string(), || {
+            |req: &Request| -> Response {
+                Response::ok().with_text(&format!("{}", req.path))
+            }
+        })
+        .unwrap();
+        let r = c.send(&Request::new(Method::Get, "/c")).unwrap();
+        assert_eq!(r.body, b"/c");
+        h2.stop();
+    }
+
+    #[test]
+    fn lazy_client_connects_on_first_send() {
+        let h = spawn_echo();
+        let mut c = HttpClient::lazy(h.addr);
+        assert!(!c.is_connected());
+        let r = c.send(&Request::new(Method::Get, "/lazy")).unwrap();
+        assert_eq!(r.body, b"/lazy");
+        assert!(c.is_connected());
+        h.stop();
+    }
+
+    #[test]
+    fn connect_to_dead_port_errors() {
+        // Bind+drop to get a port that is almost certainly closed.
+        let addr = {
+            let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap()
+        };
+        let mut c = HttpClient::lazy(addr);
+        c.set_timeout(Duration::from_millis(200));
+        assert!(c.send(&Request::new(Method::Get, "/x")).is_err());
+    }
+}

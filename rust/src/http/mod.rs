@@ -1,0 +1,35 @@
+//! A from-scratch HTTP/1.1 stack: the Express.js replacement.
+//!
+//! * [`types`] — request/response model with JSON body helpers
+//! * [`parse`] — incremental request/response parser (keep-alive,
+//!   pipelining, content-length and chunked bodies, hard limits)
+//! * [`router`] — Express-style path routing with `:param` captures
+//! * [`server`] — the single-threaded non-blocking event-loop server the
+//!   paper's scalability claim is about
+//! * [`threaded`] — a thread-per-connection server used as the ablation
+//!   baseline in the scalability bench
+//! * [`client`] — a blocking keep-alive client used by volunteer islands
+
+pub mod client;
+pub mod parse;
+pub mod router;
+pub mod server;
+pub mod threaded;
+pub mod types;
+
+pub use client::HttpClient;
+pub use router::{Params, Router};
+pub use server::{Server, ServerHandle};
+pub use types::{Method, Request, Response};
+
+/// Anything that can turn requests into responses. The event-loop server
+/// owns its service exclusively (single thread), so no `Sync` bound.
+pub trait Service {
+    fn handle(&mut self, req: &Request) -> Response;
+}
+
+impl<F: FnMut(&Request) -> Response> Service for F {
+    fn handle(&mut self, req: &Request) -> Response {
+        self(req)
+    }
+}

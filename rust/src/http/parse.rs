@@ -1,0 +1,429 @@
+//! Incremental HTTP/1.1 parsing for both directions.
+//!
+//! Designed for the event loop: feed bytes as they arrive, pull out
+//! complete messages. Supports keep-alive, pipelining, `content-length`
+//! and `chunked` bodies, with hard limits on header and body size (the
+//! server faces anonymous volunteers; see the paper's threat model).
+
+use super::types::{Method, Request, Response};
+
+/// Maximum total header block size.
+pub const MAX_HEADER_BYTES: usize = 16 * 1024;
+/// Maximum body size (a chromosome PUT is < 10 KiB; 4 MiB is generous).
+pub const MAX_BODY_BYTES: usize = 4 * 1024 * 1024;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum ParseError {
+    BadRequestLine,
+    BadHeader,
+    UnsupportedMethod,
+    UnsupportedVersion,
+    HeadersTooLarge,
+    BodyTooLarge,
+    BadChunk,
+}
+
+impl std::fmt::Display for ParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{self:?}")
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+/// Incremental request parser holding a rolling input buffer.
+#[derive(Debug, Default)]
+pub struct RequestParser {
+    buf: Vec<u8>,
+}
+
+impl RequestParser {
+    pub fn new() -> RequestParser {
+        RequestParser { buf: Vec::new() }
+    }
+
+    /// Append newly received bytes.
+    pub fn feed(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    pub fn buffered(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Try to extract the next complete request. `Ok(None)` means "need
+    /// more bytes". Consumed bytes are removed from the buffer, so this can
+    /// be called repeatedly to drain pipelined requests.
+    pub fn next_request(&mut self) -> Result<Option<Request>, ParseError> {
+        let header_end = match find_header_end(&self.buf) {
+            Some(i) => i,
+            None => {
+                if self.buf.len() > MAX_HEADER_BYTES {
+                    return Err(ParseError::HeadersTooLarge);
+                }
+                return Ok(None);
+            }
+        };
+        if header_end > MAX_HEADER_BYTES {
+            return Err(ParseError::HeadersTooLarge);
+        }
+        let head = std::str::from_utf8(&self.buf[..header_end])
+            .map_err(|_| ParseError::BadHeader)?;
+        let mut lines = head.split("\r\n");
+        let request_line = lines.next().ok_or(ParseError::BadRequestLine)?;
+        let mut parts = request_line.split(' ');
+        let method_s = parts.next().ok_or(ParseError::BadRequestLine)?;
+        let target = parts.next().ok_or(ParseError::BadRequestLine)?;
+        let version = parts.next().ok_or(ParseError::BadRequestLine)?;
+        if parts.next().is_some() {
+            return Err(ParseError::BadRequestLine);
+        }
+        if version != "HTTP/1.1" && version != "HTTP/1.0" {
+            return Err(ParseError::UnsupportedVersion);
+        }
+        let method =
+            Method::parse(method_s).ok_or(ParseError::UnsupportedMethod)?;
+
+        let mut headers = Vec::new();
+        for line in lines {
+            if line.is_empty() {
+                continue;
+            }
+            let (name, value) =
+                line.split_once(':').ok_or(ParseError::BadHeader)?;
+            headers.push((
+                name.trim().to_ascii_lowercase(),
+                value.trim().to_string(),
+            ));
+        }
+
+        let body_start = header_end + 4;
+        let get = |n: &str| {
+            headers.iter().find(|(k, _)| k == n).map(|(_, v)| v.as_str())
+        };
+
+        // Chunked transfer-encoding takes precedence over content-length.
+        let chunked = get("transfer-encoding")
+            .map(|v| v.to_ascii_lowercase().contains("chunked"))
+            .unwrap_or(false);
+
+        let (body, consumed) = if chunked {
+            match decode_chunked(&self.buf[body_start..])? {
+                Some((body, used)) => (body, body_start + used),
+                None => return Ok(None),
+            }
+        } else {
+            let len = match get("content-length") {
+                Some(v) => v
+                    .parse::<usize>()
+                    .map_err(|_| ParseError::BadHeader)?,
+                None => 0,
+            };
+            if len > MAX_BODY_BYTES {
+                return Err(ParseError::BodyTooLarge);
+            }
+            if self.buf.len() < body_start + len {
+                return Ok(None);
+            }
+            (self.buf[body_start..body_start + len].to_vec(), body_start + len)
+        };
+
+        let (path, query) = match target.split_once('?') {
+            Some((p, q)) => (p.to_string(), q.to_string()),
+            None => (target.to_string(), String::new()),
+        };
+
+        self.buf.drain(..consumed);
+        Ok(Some(Request { method, path, query, headers, body }))
+    }
+}
+
+/// Incremental response parser (client side).
+#[derive(Debug, Default)]
+pub struct ResponseParser {
+    buf: Vec<u8>,
+}
+
+impl ResponseParser {
+    pub fn new() -> ResponseParser {
+        ResponseParser { buf: Vec::new() }
+    }
+
+    pub fn feed(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    pub fn next_response(&mut self) -> Result<Option<Response>, ParseError> {
+        let header_end = match find_header_end(&self.buf) {
+            Some(i) => i,
+            None => {
+                if self.buf.len() > MAX_HEADER_BYTES {
+                    return Err(ParseError::HeadersTooLarge);
+                }
+                return Ok(None);
+            }
+        };
+        let head = std::str::from_utf8(&self.buf[..header_end])
+            .map_err(|_| ParseError::BadHeader)?;
+        let mut lines = head.split("\r\n");
+        let status_line = lines.next().ok_or(ParseError::BadRequestLine)?;
+        let mut parts = status_line.splitn(3, ' ');
+        let version = parts.next().ok_or(ParseError::BadRequestLine)?;
+        if !version.starts_with("HTTP/1.") {
+            return Err(ParseError::UnsupportedVersion);
+        }
+        let status: u16 = parts
+            .next()
+            .ok_or(ParseError::BadRequestLine)?
+            .parse()
+            .map_err(|_| ParseError::BadRequestLine)?;
+
+        let mut headers = Vec::new();
+        for line in lines {
+            if line.is_empty() {
+                continue;
+            }
+            let (name, value) =
+                line.split_once(':').ok_or(ParseError::BadHeader)?;
+            headers.push((
+                name.trim().to_ascii_lowercase(),
+                value.trim().to_string(),
+            ));
+        }
+        let get = |n: &str| {
+            headers.iter().find(|(k, _)| k == n).map(|(_, v)| v.as_str())
+        };
+        let body_start = header_end + 4;
+        let chunked = get("transfer-encoding")
+            .map(|v| v.to_ascii_lowercase().contains("chunked"))
+            .unwrap_or(false);
+        let (body, consumed) = if chunked {
+            match decode_chunked(&self.buf[body_start..])? {
+                Some((body, used)) => (body, body_start + used),
+                None => return Ok(None),
+            }
+        } else {
+            let len = match get("content-length") {
+                Some(v) => {
+                    v.parse::<usize>().map_err(|_| ParseError::BadHeader)?
+                }
+                None => 0,
+            };
+            if len > MAX_BODY_BYTES {
+                return Err(ParseError::BodyTooLarge);
+            }
+            if self.buf.len() < body_start + len {
+                return Ok(None);
+            }
+            (self.buf[body_start..body_start + len].to_vec(), body_start + len)
+        };
+        self.buf.drain(..consumed);
+        Ok(Some(Response { status, headers, body }))
+    }
+}
+
+fn find_header_end(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n")
+}
+
+/// Decode a chunked body. Returns `(body, bytes_consumed)` or `None` if
+/// incomplete.
+fn decode_chunked(buf: &[u8]) -> Result<Option<(Vec<u8>, usize)>, ParseError> {
+    let mut body = Vec::new();
+    let mut pos = 0usize;
+    loop {
+        let line_end = match buf[pos..].windows(2).position(|w| w == b"\r\n") {
+            Some(i) => pos + i,
+            None => return Ok(None),
+        };
+        let size_text = std::str::from_utf8(&buf[pos..line_end])
+            .map_err(|_| ParseError::BadChunk)?;
+        // chunk extensions after ';' are ignored
+        let size_text = size_text.split(';').next().unwrap().trim();
+        let size = usize::from_str_radix(size_text, 16)
+            .map_err(|_| ParseError::BadChunk)?;
+        if body.len() + size > MAX_BODY_BYTES {
+            return Err(ParseError::BodyTooLarge);
+        }
+        let data_start = line_end + 2;
+        if size == 0 {
+            // trailing CRLF after the zero chunk (no trailer support needed)
+            if buf.len() < data_start + 2 {
+                return Ok(None);
+            }
+            return Ok(Some((body, data_start + 2)));
+        }
+        if buf.len() < data_start + size + 2 {
+            return Ok(None);
+        }
+        body.extend_from_slice(&buf[data_start..data_start + size]);
+        if &buf[data_start + size..data_start + size + 2] != b"\r\n" {
+            return Err(ParseError::BadChunk);
+        }
+        pos = data_start + size + 2;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse_one(raw: &[u8]) -> Request {
+        let mut p = RequestParser::new();
+        p.feed(raw);
+        p.next_request().unwrap().unwrap()
+    }
+
+    #[test]
+    fn simple_get() {
+        let r = parse_one(b"GET /random?e=1 HTTP/1.1\r\nHost: x\r\n\r\n");
+        assert_eq!(r.method, Method::Get);
+        assert_eq!(r.path, "/random");
+        assert_eq!(r.query, "e=1");
+        assert_eq!(r.header("host"), Some("x"));
+        assert!(r.body.is_empty());
+    }
+
+    #[test]
+    fn put_with_body() {
+        let r = parse_one(
+            b"PUT /chromosome HTTP/1.1\r\ncontent-length: 7\r\n\r\n{\"a\":1}",
+        );
+        assert_eq!(r.method, Method::Put);
+        assert_eq!(r.body, b"{\"a\":1}");
+    }
+
+    #[test]
+    fn incremental_feeding() {
+        let raw = b"PUT /c HTTP/1.1\r\ncontent-length: 5\r\n\r\nhello";
+        let mut p = RequestParser::new();
+        for chunk in raw.chunks(3) {
+            p.feed(chunk);
+        }
+        // Several early calls return None; last yields the request.
+        let r = p.next_request().unwrap().unwrap();
+        assert_eq!(r.body, b"hello");
+        assert_eq!(p.buffered(), 0);
+    }
+
+    #[test]
+    fn needs_more_bytes() {
+        let mut p = RequestParser::new();
+        p.feed(b"GET / HTTP/1.1\r\n");
+        assert!(p.next_request().unwrap().is_none());
+        p.feed(b"\r\n");
+        assert!(p.next_request().unwrap().is_some());
+    }
+
+    #[test]
+    fn pipelined_requests() {
+        let mut p = RequestParser::new();
+        p.feed(b"GET /a HTTP/1.1\r\n\r\nGET /b HTTP/1.1\r\n\r\n");
+        assert_eq!(p.next_request().unwrap().unwrap().path, "/a");
+        assert_eq!(p.next_request().unwrap().unwrap().path, "/b");
+        assert!(p.next_request().unwrap().is_none());
+    }
+
+    #[test]
+    fn chunked_body() {
+        let raw = b"POST /x HTTP/1.1\r\ntransfer-encoding: chunked\r\n\r\n\
+                    5\r\nhello\r\n6\r\n world\r\n0\r\n\r\n";
+        let r = parse_one(raw);
+        assert_eq!(r.body, b"hello world");
+    }
+
+    #[test]
+    fn chunked_incomplete() {
+        let mut p = RequestParser::new();
+        p.feed(b"POST /x HTTP/1.1\r\ntransfer-encoding: chunked\r\n\r\n5\r\nhel");
+        assert!(p.next_request().unwrap().is_none());
+        p.feed(b"lo\r\n0\r\n\r\n");
+        assert_eq!(p.next_request().unwrap().unwrap().body, b"hello");
+    }
+
+    #[test]
+    fn rejects_bad_method() {
+        let mut p = RequestParser::new();
+        p.feed(b"BREW /coffee HTTP/1.1\r\n\r\n");
+        assert_eq!(p.next_request(), Err(ParseError::UnsupportedMethod));
+    }
+
+    #[test]
+    fn rejects_bad_version() {
+        let mut p = RequestParser::new();
+        p.feed(b"GET / HTTP/2\r\n\r\n");
+        assert_eq!(p.next_request(), Err(ParseError::UnsupportedVersion));
+    }
+
+    #[test]
+    fn rejects_huge_headers() {
+        let mut p = RequestParser::new();
+        p.feed(b"GET / HTTP/1.1\r\n");
+        let filler = format!("x-pad: {}\r\n", "a".repeat(1024));
+        for _ in 0..20 {
+            p.feed(filler.as_bytes());
+        }
+        assert_eq!(p.next_request(), Err(ParseError::HeadersTooLarge));
+    }
+
+    #[test]
+    fn rejects_huge_body_declaration() {
+        let mut p = RequestParser::new();
+        p.feed(
+            format!("PUT /x HTTP/1.1\r\ncontent-length: {}\r\n\r\n",
+                    MAX_BODY_BYTES + 1)
+            .as_bytes(),
+        );
+        assert_eq!(p.next_request(), Err(ParseError::BodyTooLarge));
+    }
+
+    #[test]
+    fn response_parse_round_trip() {
+        let mut out = Vec::new();
+        Response::ok().with_text("pong").write_to(&mut out, true);
+        let mut p = ResponseParser::new();
+        p.feed(&out);
+        let r = p.next_response().unwrap().unwrap();
+        assert_eq!(r.status, 200);
+        assert_eq!(r.body, b"pong");
+    }
+
+    #[test]
+    fn response_parse_incremental() {
+        let mut out = Vec::new();
+        Response::new(404).with_text("nope").write_to(&mut out, false);
+        let mut p = ResponseParser::new();
+        for chunk in out.chunks(2) {
+            p.feed(chunk);
+        }
+        let r = p.next_response().unwrap().unwrap();
+        assert_eq!(r.status, 404);
+        assert_eq!(r.body, b"nope");
+    }
+
+    #[test]
+    fn fuzz_parser_never_panics() {
+        // Property: arbitrary bytes must produce Ok(None)/Ok(Some)/Err,
+        // never a panic. Deterministic pseudo-fuzz over 500 cases.
+        use crate::rng::{Rng64, SplitMix64};
+        let mut rng = SplitMix64::new(0xF00D);
+        for _ in 0..500 {
+            let len = (rng.next_u64() % 300) as usize;
+            let mut bytes = Vec::with_capacity(len);
+            for _ in 0..len {
+                // bias toward ASCII and CR/LF so we exercise deeper paths
+                let b = match rng.next_u64() % 10 {
+                    0 => b'\r',
+                    1 => b'\n',
+                    2 => b' ',
+                    3 => b':',
+                    _ => (rng.next_u64() % 256) as u8,
+                };
+                bytes.push(b);
+            }
+            let mut p = RequestParser::new();
+            p.feed(&bytes);
+            let _ = p.next_request(); // must not panic
+        }
+    }
+}

@@ -1,0 +1,253 @@
+//! Express-style routing: method + path pattern -> handler, with `:param`
+//! captures. The coordinator's REST API (DESIGN.md section 5) is built on
+//! this.
+
+use super::types::{Method, Request, Response};
+use super::Service;
+
+/// Captured path parameters (`/experiment/:id` matching `/experiment/3`
+/// yields `id = "3"`).
+#[derive(Debug, Default, Clone)]
+pub struct Params {
+    pairs: Vec<(String, String)>,
+}
+
+impl Params {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.pairs.iter().find(|(k, _)| k == name).map(|(_, v)| v.as_str())
+    }
+}
+
+type Handler = Box<dyn FnMut(&Request, &Params) -> Response>;
+
+struct Route {
+    method: Method,
+    segments: Vec<Segment>,
+}
+
+enum Segment {
+    Literal(String),
+    Param(String),
+}
+
+/// Method+pattern dispatch table. Routes are matched in registration order;
+/// an unmatched path yields 404, a matched path with the wrong method 405.
+#[derive(Default)]
+pub struct Router {
+    routes: Vec<(Route, Handler)>,
+}
+
+impl Router {
+    pub fn new() -> Router {
+        Router { routes: Vec::new() }
+    }
+
+    /// Register a handler for `method` + `pattern`. Pattern segments
+    /// starting with `:` capture; everything else matches literally.
+    pub fn route(
+        &mut self,
+        method: Method,
+        pattern: &str,
+        handler: impl FnMut(&Request, &Params) -> Response + 'static,
+    ) -> &mut Router {
+        let segments = pattern
+            .split('/')
+            .filter(|s| !s.is_empty())
+            .map(|s| {
+                if let Some(name) = s.strip_prefix(':') {
+                    Segment::Param(name.to_string())
+                } else {
+                    Segment::Literal(s.to_string())
+                }
+            })
+            .collect();
+        self.routes
+            .push((Route { method, segments }, Box::new(handler)));
+        self
+    }
+
+    pub fn get(
+        &mut self,
+        pattern: &str,
+        handler: impl FnMut(&Request, &Params) -> Response + 'static,
+    ) -> &mut Router {
+        self.route(Method::Get, pattern, handler)
+    }
+
+    pub fn put(
+        &mut self,
+        pattern: &str,
+        handler: impl FnMut(&Request, &Params) -> Response + 'static,
+    ) -> &mut Router {
+        self.route(Method::Put, pattern, handler)
+    }
+
+    pub fn post(
+        &mut self,
+        pattern: &str,
+        handler: impl FnMut(&Request, &Params) -> Response + 'static,
+    ) -> &mut Router {
+        self.route(Method::Post, pattern, handler)
+    }
+
+    pub fn delete(
+        &mut self,
+        pattern: &str,
+        handler: impl FnMut(&Request, &Params) -> Response + 'static,
+    ) -> &mut Router {
+        self.route(Method::Delete, pattern, handler)
+    }
+
+    fn match_path(route: &Route, path: &str) -> Option<Params> {
+        let mut params = Params::default();
+        let mut parts = path.split('/').filter(|s| !s.is_empty());
+        for seg in &route.segments {
+            let part = parts.next()?;
+            match seg {
+                Segment::Literal(lit) => {
+                    if lit != part {
+                        return None;
+                    }
+                }
+                Segment::Param(name) => {
+                    params.pairs.push((name.clone(), part.to_string()));
+                }
+            }
+        }
+        if parts.next().is_some() {
+            return None; // request path longer than pattern
+        }
+        Some(params)
+    }
+
+    pub fn dispatch(&mut self, req: &Request) -> Response {
+        let mut path_matched = false;
+        for (route, handler) in &mut self.routes {
+            if let Some(params) = Self::match_path(route, &req.path) {
+                if route.method == req.method {
+                    return handler(req, &params);
+                }
+                path_matched = true;
+            }
+        }
+        if path_matched {
+            Response::new(405).with_text("method not allowed")
+        } else {
+            Response::not_found()
+        }
+    }
+}
+
+impl Service for Router {
+    fn handle(&mut self, req: &Request) -> Response {
+        self.dispatch(req)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(method: Method, path: &str) -> Request {
+        Request::new(method, path)
+    }
+
+    #[test]
+    fn literal_match() {
+        let mut r = Router::new();
+        r.get("/state", |_, _| Response::ok().with_text("s"));
+        assert_eq!(r.dispatch(&req(Method::Get, "/state")).status, 200);
+        assert_eq!(r.dispatch(&req(Method::Get, "/other")).status, 404);
+    }
+
+    #[test]
+    fn param_capture() {
+        let mut r = Router::new();
+        r.get("/experiment/:id/random", |_, p: &Params| {
+            Response::ok().with_text(p.get("id").unwrap())
+        });
+        let resp = r.dispatch(&req(Method::Get, "/experiment/42/random"));
+        assert_eq!(resp.body, b"42");
+    }
+
+    #[test]
+    fn multiple_params() {
+        let mut r = Router::new();
+        r.put("/pool/:pool/slot/:slot", |_, p: &Params| {
+            Response::ok()
+                .with_text(&format!("{}-{}", p.get("pool").unwrap(),
+                                    p.get("slot").unwrap()))
+        });
+        let resp = r.dispatch(&req(Method::Put, "/pool/a/slot/9"));
+        assert_eq!(resp.body, b"a-9");
+    }
+
+    #[test]
+    fn wrong_method_is_405() {
+        let mut r = Router::new();
+        r.put("/chromosome", |_, _| Response::ok());
+        assert_eq!(r.dispatch(&req(Method::Get, "/chromosome")).status, 405);
+    }
+
+    #[test]
+    fn length_mismatch_no_match() {
+        let mut r = Router::new();
+        r.get("/a/b", |_, _| Response::ok());
+        assert_eq!(r.dispatch(&req(Method::Get, "/a")).status, 404);
+        assert_eq!(r.dispatch(&req(Method::Get, "/a/b/c")).status, 404);
+    }
+
+    #[test]
+    fn registration_order_wins() {
+        let mut r = Router::new();
+        r.get("/x/:p", |_, _| Response::ok().with_text("param"));
+        r.get("/x/lit", |_, _| Response::ok().with_text("lit"));
+        // The param route was registered first and matches.
+        assert_eq!(r.dispatch(&req(Method::Get, "/x/lit")).body, b"param");
+    }
+
+    #[test]
+    fn trailing_slash_equivalence() {
+        let mut r = Router::new();
+        r.get("/state", |_, _| Response::ok());
+        assert_eq!(r.dispatch(&req(Method::Get, "/state/")).status, 200);
+    }
+
+    #[test]
+    fn stateful_handler() {
+        // Handlers are FnMut: a counter endpoint works without locks
+        // (single-threaded event loop — the paper's architecture).
+        let mut count = 0u64;
+        let mut r = Router::new();
+        r.get("/hits", move |_, _| {
+            count += 1;
+            Response::ok().with_text(&count.to_string())
+        });
+        r.dispatch(&req(Method::Get, "/hits"));
+        let resp = r.dispatch(&req(Method::Get, "/hits"));
+        assert_eq!(resp.body, b"2");
+    }
+
+    #[test]
+    fn dispatch_total_property() {
+        // Property: dispatch never panics for arbitrary printable paths.
+        use crate::rng::{Rng64, SplitMix64};
+        let mut router = Router::new();
+        router.get("/a/:x", |_, _| Response::ok());
+        router.put("/b", |_, _| Response::ok());
+        let mut rng = SplitMix64::new(1);
+        let alphabet = b"ab/:xyz123.%-_";
+        for _ in 0..500 {
+            let len = (rng.next_u64() % 30) as usize;
+            let path: String = (0..len)
+                .map(|_| {
+                    alphabet[(rng.next_u64() % alphabet.len() as u64) as usize]
+                        as char
+                })
+                .collect();
+            let method = if rng.next_u64() % 2 == 0 { Method::Get } else { Method::Put };
+            let resp = router.dispatch(&req(method, &format!("/{path}")));
+            assert!(matches!(resp.status, 200 | 404 | 405));
+        }
+    }
+}

@@ -1,0 +1,561 @@
+//! The single-threaded non-blocking HTTP server — the Node.js analog.
+//!
+//! One thread runs an epoll loop multiplexing the listener and every client
+//! connection; the [`Service`] (the pool router) therefore needs no locks,
+//! exactly like the paper's Express handlers. "Although this single server
+//! is a bottleneck [...] the fact that it runs as a non-blocking single
+//! thread allows the service of many requests" — the scalability bench
+//! (E3) measures where that saturation point actually is.
+
+use std::collections::HashMap;
+use std::io::{self, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::os::fd::AsRawFd;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+use super::parse::RequestParser;
+use super::types::Response;
+use super::Service;
+use crate::eventloop::{Epoll, Event, Interest, Waker};
+
+const TOKEN_LISTENER: u64 = 0;
+const TOKEN_WAKER: u64 = 1;
+const TOKEN_BASE: u64 = 2;
+
+/// Tunables for the event loop.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// Idle keep-alive connections are dropped after this.
+    pub idle_timeout: Duration,
+    /// epoll_wait tick (also bounds shutdown latency).
+    pub tick: Duration,
+    /// Maximum simultaneous connections; accepts beyond this are refused.
+    pub max_connections: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            idle_timeout: Duration::from_secs(30),
+            tick: Duration::from_millis(100),
+            max_connections: 4096,
+        }
+    }
+}
+
+/// Shared observable counters (read by benches and the stats route).
+#[derive(Debug, Default)]
+pub struct ServerStats {
+    pub requests: AtomicU64,
+    pub connections: AtomicU64,
+    pub parse_errors: AtomicU64,
+}
+
+struct Conn {
+    stream: TcpStream,
+    parser: RequestParser,
+    out: Vec<u8>,
+    out_pos: usize,
+    last_active: Instant,
+    close_after_write: bool,
+    want_write: bool,
+}
+
+impl Conn {
+    fn new(stream: TcpStream) -> Conn {
+        Conn {
+            stream,
+            parser: RequestParser::new(),
+            out: Vec::new(),
+            out_pos: 0,
+            last_active: Instant::now(),
+            close_after_write: false,
+            want_write: false,
+        }
+    }
+
+    fn pending_out(&self) -> bool {
+        self.out_pos < self.out.len()
+    }
+}
+
+/// The event-loop server. Construct with [`Server::bind`], then either call
+/// [`Server::run`] on the current thread or use [`Server::spawn`] to run it
+/// on a background thread with a [`ServerHandle`] for shutdown.
+pub struct Server {
+    listener: TcpListener,
+    epoll: Epoll,
+    waker: Waker,
+    config: ServerConfig,
+    shutdown: Arc<AtomicBool>,
+    stats: Arc<ServerStats>,
+}
+
+impl Server {
+    pub fn bind(addr: &str) -> io::Result<Server> {
+        Server::bind_with(addr, ServerConfig::default())
+    }
+
+    pub fn bind_with(addr: &str, config: ServerConfig) -> io::Result<Server> {
+        let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
+        let epoll = Epoll::new()?;
+        let waker = Waker::new()?;
+        epoll.add(listener.as_raw_fd(), TOKEN_LISTENER, Interest::READ)?;
+        epoll.add(waker.fd(), TOKEN_WAKER, Interest::READ)?;
+        Ok(Server {
+            listener,
+            epoll,
+            waker,
+            config,
+            shutdown: Arc::new(AtomicBool::new(false)),
+            stats: Arc::new(ServerStats::default()),
+        })
+    }
+
+    pub fn local_addr(&self) -> SocketAddr {
+        self.listener.local_addr().expect("bound listener has an address")
+    }
+
+    pub fn stats(&self) -> Arc<ServerStats> {
+        self.stats.clone()
+    }
+
+    /// A flag+waker pair that stops the loop from another thread.
+    pub fn shutdown_switch(&self) -> io::Result<ShutdownSwitch> {
+        Ok(ShutdownSwitch {
+            flag: self.shutdown.clone(),
+            waker: self.waker.try_clone()?,
+        })
+    }
+
+    /// Run the loop on the current thread until shut down.
+    pub fn run<S: Service>(self, mut service: S) -> io::Result<()> {
+        let mut conns: HashMap<u64, Conn> = HashMap::new();
+        let mut next_token = TOKEN_BASE;
+        let mut events: Vec<Event> = Vec::new();
+        let mut read_buf = vec![0u8; 64 * 1024];
+        let mut last_sweep = Instant::now();
+
+        while !self.shutdown.load(Ordering::Acquire) {
+            self.epoll.wait(Some(self.config.tick), &mut events)?;
+            let ev_snapshot: Vec<Event> = events.clone();
+            for ev in ev_snapshot {
+                match ev.token {
+                    TOKEN_LISTENER => {
+                        self.accept_all(&mut conns, &mut next_token);
+                    }
+                    TOKEN_WAKER => {
+                        self.waker.drain();
+                    }
+                    token => {
+                        let mut drop_conn = ev.closed;
+                        if let Some(conn) = conns.get_mut(&token) {
+                            if ev.readable && !drop_conn {
+                                drop_conn |= Self::handle_readable(
+                                    conn,
+                                    &mut service,
+                                    &mut read_buf,
+                                    &self.stats,
+                                );
+                            }
+                            if !drop_conn && (ev.writable || conn.pending_out()) {
+                                drop_conn |= Self::flush(conn);
+                            }
+                            if !drop_conn {
+                                Self::update_interest(&self.epoll, token, conn);
+                            }
+                        }
+                        if drop_conn {
+                            if let Some(conn) = conns.remove(&token) {
+                                self.epoll.remove(conn.stream.as_raw_fd());
+                            }
+                        }
+                    }
+                }
+            }
+
+            // Periodic idle sweep.
+            if last_sweep.elapsed() >= Duration::from_secs(1) {
+                last_sweep = Instant::now();
+                let now = Instant::now();
+                let idle: Vec<u64> = conns
+                    .iter()
+                    .filter(|(_, c)| {
+                        now.duration_since(c.last_active) > self.config.idle_timeout
+                            && !c.pending_out()
+                    })
+                    .map(|(t, _)| *t)
+                    .collect();
+                for token in idle {
+                    if let Some(conn) = conns.remove(&token) {
+                        self.epoll.remove(conn.stream.as_raw_fd());
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn accept_all(&self, conns: &mut HashMap<u64, Conn>, next_token: &mut u64) {
+        loop {
+            match self.listener.accept() {
+                Ok((stream, _peer)) => {
+                    if conns.len() >= self.config.max_connections {
+                        drop(stream); // refuse: at capacity
+                        continue;
+                    }
+                    if stream.set_nonblocking(true).is_err() {
+                        continue;
+                    }
+                    let _ = stream.set_nodelay(true);
+                    let token = *next_token;
+                    *next_token += 1;
+                    if self
+                        .epoll
+                        .add(stream.as_raw_fd(), token, Interest::READ)
+                        .is_ok()
+                    {
+                        conns.insert(token, Conn::new(stream));
+                        self.stats.connections.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(_) => break,
+            }
+        }
+    }
+
+    /// Read everything available, run the service over complete requests.
+    /// Returns true if the connection should be dropped.
+    fn handle_readable<S: Service>(
+        conn: &mut Conn,
+        service: &mut S,
+        read_buf: &mut [u8],
+        stats: &ServerStats,
+    ) -> bool {
+        conn.last_active = Instant::now();
+        loop {
+            match conn.stream.read(read_buf) {
+                Ok(0) => return true, // peer closed
+                Ok(n) => conn.parser.feed(&read_buf[..n]),
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(_) => return true,
+            }
+        }
+        loop {
+            match conn.parser.next_request() {
+                Ok(Some(req)) => {
+                    stats.requests.fetch_add(1, Ordering::Relaxed);
+                    let keep = req.keep_alive();
+                    let resp = service.handle(&req);
+                    resp.write_to(&mut conn.out, keep);
+                    if !keep {
+                        conn.close_after_write = true;
+                        break;
+                    }
+                }
+                Ok(None) => break,
+                Err(_) => {
+                    stats.parse_errors.fetch_add(1, Ordering::Relaxed);
+                    Response::bad_request("malformed request")
+                        .write_to(&mut conn.out, false);
+                    conn.close_after_write = true;
+                    break;
+                }
+            }
+        }
+        false
+    }
+
+    /// Flush pending output. Returns true if the connection should drop.
+    fn flush(conn: &mut Conn) -> bool {
+        while conn.pending_out() {
+            match conn.stream.write(&conn.out[conn.out_pos..]) {
+                Ok(0) => return true,
+                Ok(n) => {
+                    conn.out_pos += n;
+                    conn.last_active = Instant::now();
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(_) => return true,
+            }
+        }
+        if !conn.pending_out() {
+            conn.out.clear();
+            conn.out_pos = 0;
+            if conn.close_after_write {
+                return true;
+            }
+        }
+        false
+    }
+
+    fn update_interest(epoll: &Epoll, token: u64, conn: &mut Conn) {
+        let want_write = conn.pending_out();
+        if want_write != conn.want_write {
+            let interest =
+                if want_write { Interest::BOTH } else { Interest::READ };
+            let _ = epoll.modify(conn.stream.as_raw_fd(), token, interest);
+            conn.want_write = want_write;
+        }
+    }
+
+    /// Run on a new thread; the factory builds the service on that thread
+    /// (services are deliberately not required to be `Send`).
+    pub fn spawn<S, F>(addr: &str, factory: F) -> io::Result<ServerHandle>
+    where
+        S: Service,
+        F: FnOnce() -> S + Send + 'static,
+    {
+        Server::spawn_with(addr, ServerConfig::default(), factory)
+    }
+
+    pub fn spawn_with<S, F>(
+        addr: &str,
+        config: ServerConfig,
+        factory: F,
+    ) -> io::Result<ServerHandle>
+    where
+        S: Service,
+        F: FnOnce() -> S + Send + 'static,
+    {
+        let addr = addr.to_string();
+        let (tx, rx) = mpsc::channel();
+        let thread = std::thread::Builder::new()
+            .name("nodio-server".into())
+            .spawn(move || {
+                match Server::bind_with(&addr, config) {
+                    Ok(server) => {
+                        let info = (
+                            server.local_addr(),
+                            server.shutdown_switch(),
+                            server.stats(),
+                        );
+                        match info.1 {
+                            Ok(switch) => {
+                                tx.send(Ok((info.0, switch, info.2))).ok();
+                                let service = factory();
+                                let _ = server.run(service);
+                            }
+                            Err(e) => {
+                                tx.send(Err(e)).ok();
+                            }
+                        }
+                    }
+                    Err(e) => {
+                        tx.send(Err(e)).ok();
+                    }
+                }
+            })?;
+        let (addr, switch, stats) = rx
+            .recv()
+            .map_err(|_| io::Error::other("server thread died"))??;
+        Ok(ServerHandle { addr, switch, stats, thread: Some(thread) })
+    }
+}
+
+/// Stops a running loop from any thread.
+pub struct ShutdownSwitch {
+    flag: Arc<AtomicBool>,
+    waker: Waker,
+}
+
+impl ShutdownSwitch {
+    pub fn stop(&self) {
+        self.flag.store(true, Ordering::Release);
+        self.waker.wake();
+    }
+}
+
+/// Owner handle for a spawned server: address, stats, and shutdown. The
+/// server stops when the handle is dropped.
+pub struct ServerHandle {
+    pub addr: SocketAddr,
+    switch: ShutdownSwitch,
+    stats: Arc<ServerStats>,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    pub fn stats(&self) -> &ServerStats {
+        &self.stats
+    }
+
+    pub fn url(&self) -> String {
+        format!("http://{}", self.addr)
+    }
+
+    /// Stop the loop and join the server thread.
+    pub fn stop(mut self) {
+        self.stop_inner();
+    }
+
+    fn stop_inner(&mut self) {
+        self.switch.stop();
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for ServerHandle {
+    fn drop(&mut self) {
+        self.stop_inner();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::http::types::{Method, Request};
+    use crate::http::HttpClient;
+    use crate::json::Json;
+
+    fn echo_service() -> impl Service {
+        |req: &Request| -> Response {
+            Response::ok().with_text(&format!("{} {}", req.method, req.path))
+        }
+    }
+
+    #[test]
+    fn serves_and_stops() {
+        let handle = Server::spawn("127.0.0.1:0", echo_service).unwrap();
+        let mut client = HttpClient::connect(handle.addr).unwrap();
+        let resp = client
+            .send(&Request::new(Method::Get, "/hello"))
+            .unwrap();
+        assert_eq!(resp.status, 200);
+        assert_eq!(resp.body, b"GET /hello");
+        assert_eq!(handle.stats().requests.load(Ordering::Relaxed), 1);
+        handle.stop();
+    }
+
+    #[test]
+    fn keep_alive_reuses_connection() {
+        let handle = Server::spawn("127.0.0.1:0", echo_service).unwrap();
+        let mut client = HttpClient::connect(handle.addr).unwrap();
+        for i in 0..10 {
+            let resp = client
+                .send(&Request::new(Method::Get, &format!("/r{i}")))
+                .unwrap();
+            assert_eq!(resp.status, 200);
+        }
+        assert_eq!(handle.stats().connections.load(Ordering::Relaxed), 1);
+        assert_eq!(handle.stats().requests.load(Ordering::Relaxed), 10);
+        handle.stop();
+    }
+
+    #[test]
+    fn concurrent_clients() {
+        let handle = Server::spawn("127.0.0.1:0", echo_service).unwrap();
+        let addr = handle.addr;
+        let threads: Vec<_> = (0..8)
+            .map(|t| {
+                std::thread::spawn(move || {
+                    let mut client = HttpClient::connect(addr).unwrap();
+                    for i in 0..25 {
+                        let resp = client
+                            .send(&Request::new(Method::Get,
+                                                &format!("/t{t}/{i}")))
+                            .unwrap();
+                        assert_eq!(resp.status, 200);
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert_eq!(handle.stats().requests.load(Ordering::Relaxed), 200);
+        handle.stop();
+    }
+
+    #[test]
+    fn json_echo_round_trip() {
+        let handle = Server::spawn("127.0.0.1:0", || {
+            |req: &Request| -> Response {
+                match req.json() {
+                    Ok(v) => Response::json(&v),
+                    Err(_) => Response::bad_request("bad json"),
+                }
+            }
+        })
+        .unwrap();
+        let mut client = HttpClient::connect(handle.addr).unwrap();
+        let doc = Json::obj(vec![("chromosome", "10110".into()),
+                                 ("fitness", 3.5.into())]);
+        let resp = client
+            .send(&Request::new(Method::Put, "/x").with_json(&doc))
+            .unwrap();
+        assert_eq!(resp.status, 200);
+        assert_eq!(resp.json_body().unwrap(), doc);
+        handle.stop();
+    }
+
+    #[test]
+    fn malformed_request_gets_400_and_close() {
+        let handle = Server::spawn("127.0.0.1:0", echo_service).unwrap();
+        let mut raw = std::net::TcpStream::connect(handle.addr).unwrap();
+        use std::io::{Read, Write};
+        raw.write_all(b"BOGUS METHOD LINE\r\n\r\n").unwrap();
+        let mut response = String::new();
+        raw.read_to_string(&mut response).unwrap(); // server closes
+        assert!(response.starts_with("HTTP/1.1 400"));
+        assert_eq!(handle.stats().parse_errors.load(Ordering::Relaxed), 1);
+        handle.stop();
+    }
+
+    #[test]
+    fn stateful_single_threaded_service() {
+        // The whole point of the architecture: a service with mutable state
+        // and no locks, safely serving concurrent clients.
+        let handle = Server::spawn("127.0.0.1:0", || {
+            let mut counter = 0u64;
+            move |_req: &Request| -> Response {
+                counter += 1;
+                Response::ok().with_text(&counter.to_string())
+            }
+        })
+        .unwrap();
+        let addr = handle.addr;
+        let threads: Vec<_> = (0..4)
+            .map(|_| {
+                std::thread::spawn(move || {
+                    let mut c = HttpClient::connect(addr).unwrap();
+                    for _ in 0..50 {
+                        c.send(&Request::new(Method::Get, "/")).unwrap();
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        let mut c = HttpClient::connect(addr).unwrap();
+        let resp = c.send(&Request::new(Method::Get, "/")).unwrap();
+        assert_eq!(resp.body, b"201"); // 200 prior + this one
+        handle.stop();
+    }
+
+    #[test]
+    fn large_body_round_trip() {
+        let handle = Server::spawn("127.0.0.1:0", || {
+            |req: &Request| -> Response {
+                Response::ok().with_text(&req.body.len().to_string())
+            }
+        })
+        .unwrap();
+        let mut client = HttpClient::connect(handle.addr).unwrap();
+        let mut req = Request::new(Method::Post, "/big");
+        req.body = vec![b'x'; 1_000_000];
+        let resp = client.send(&req).unwrap();
+        assert_eq!(resp.body, b"1000000");
+        handle.stop();
+    }
+}

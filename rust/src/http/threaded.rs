@@ -1,0 +1,194 @@
+//! Thread-per-connection HTTP server: the ablation baseline for the
+//! scalability bench (E3). Same wire behavior as [`super::server`], but a
+//! blocking thread per client and a shared, locked service — the
+//! architecture the paper argues *against* for pool servers.
+
+use std::io::{self, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use super::parse::RequestParser;
+use super::types::Response;
+use super::Service;
+
+/// Handle to a running threaded server.
+pub struct ThreadedServer {
+    pub addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+    pub requests: Arc<AtomicU64>,
+}
+
+impl ThreadedServer {
+    /// Spawn with a shared service behind a mutex (handlers in this model
+    /// must be `Send`; contention on the lock is part of what E3 measures).
+    pub fn spawn<S>(addr: &str, service: S) -> io::Result<ThreadedServer>
+    where
+        S: Service + Send + 'static,
+    {
+        let listener = TcpListener::bind(addr)?;
+        let addr = listener.local_addr()?;
+        // Accept loop polls the stop flag between blocking accepts.
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let requests = Arc::new(AtomicU64::new(0));
+        let service = Arc::new(Mutex::new(service));
+
+        let stop2 = stop.clone();
+        let requests2 = requests.clone();
+        let accept_thread = std::thread::Builder::new()
+            .name("nodio-threaded-accept".into())
+            .spawn(move || {
+                let mut workers = Vec::new();
+                while !stop2.load(Ordering::Acquire) {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            let service = service.clone();
+                            let stop3 = stop2.clone();
+                            let requests3 = requests2.clone();
+                            workers.push(std::thread::spawn(move || {
+                                let _ = serve_conn(stream, service, stop3,
+                                                   requests3);
+                            }));
+                        }
+                        Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_millis(5));
+                        }
+                        Err(_) => break,
+                    }
+                }
+                for w in workers {
+                    let _ = w.join();
+                }
+            })?;
+
+        Ok(ThreadedServer {
+            addr,
+            stop,
+            accept_thread: Some(accept_thread),
+            requests,
+        })
+    }
+
+    pub fn stop(mut self) {
+        self.stop_inner();
+    }
+
+    fn stop_inner(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for ThreadedServer {
+    fn drop(&mut self) {
+        self.stop_inner();
+    }
+}
+
+fn serve_conn<S: Service>(
+    mut stream: TcpStream,
+    service: Arc<Mutex<S>>,
+    stop: Arc<AtomicBool>,
+    requests: Arc<AtomicU64>,
+) -> io::Result<()> {
+    stream.set_read_timeout(Some(Duration::from_millis(200)))?;
+    let _ = stream.set_nodelay(true);
+    let mut parser = RequestParser::new();
+    let mut buf = [0u8; 16 * 1024];
+    loop {
+        if stop.load(Ordering::Acquire) {
+            return Ok(());
+        }
+        match stream.read(&mut buf) {
+            Ok(0) => return Ok(()),
+            Ok(n) => parser.feed(&buf[..n]),
+            Err(e)
+                if e.kind() == io::ErrorKind::WouldBlock
+                    || e.kind() == io::ErrorKind::TimedOut =>
+            {
+                continue;
+            }
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(_) => return Ok(()),
+        }
+        loop {
+            match parser.next_request() {
+                Ok(Some(req)) => {
+                    requests.fetch_add(1, Ordering::Relaxed);
+                    let keep = req.keep_alive();
+                    let resp = service.lock().unwrap().handle(&req);
+                    let mut out = Vec::new();
+                    resp.write_to(&mut out, keep);
+                    stream.write_all(&out)?;
+                    if !keep {
+                        return Ok(());
+                    }
+                }
+                Ok(None) => break,
+                Err(_) => {
+                    let mut out = Vec::new();
+                    Response::bad_request("malformed request")
+                        .write_to(&mut out, false);
+                    let _ = stream.write_all(&out);
+                    return Ok(());
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::http::types::{Method, Request};
+    use crate::http::HttpClient;
+
+    #[test]
+    fn serves_requests() {
+        let server = ThreadedServer::spawn("127.0.0.1:0", |req: &Request| {
+            Response::ok().with_text(&req.path.clone())
+        })
+        .unwrap();
+        let mut c = HttpClient::connect(server.addr).unwrap();
+        let r = c.send(&Request::new(Method::Get, "/t")).unwrap();
+        assert_eq!(r.body, b"/t");
+        server.stop();
+    }
+
+    #[test]
+    fn concurrent_clients_shared_state() {
+        let counter = Arc::new(AtomicU64::new(0));
+        let c2 = counter.clone();
+        let server = ThreadedServer::spawn("127.0.0.1:0", move |_req: &Request| {
+            let v = c2.fetch_add(1, Ordering::SeqCst) + 1;
+            Response::ok().with_text(&v.to_string())
+        })
+        .unwrap();
+        let addr = server.addr;
+        let threads: Vec<_> = (0..4)
+            .map(|_| {
+                std::thread::spawn(move || {
+                    let mut c = HttpClient::connect(addr).unwrap();
+                    for _ in 0..25 {
+                        assert_eq!(
+                            c.send(&Request::new(Method::Get, "/")).unwrap()
+                                .status,
+                            200
+                        );
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+        assert_eq!(server.requests.load(Ordering::Relaxed), 100);
+        server.stop();
+    }
+}

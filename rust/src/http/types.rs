@@ -1,0 +1,279 @@
+//! HTTP request/response model.
+
+use crate::json::{self, Json};
+
+/// Request methods the pool protocol uses (the paper's CRUD cycle).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Method {
+    Get,
+    Put,
+    Post,
+    Delete,
+    Head,
+    Options,
+}
+
+impl Method {
+    pub fn parse(s: &str) -> Option<Method> {
+        Some(match s {
+            "GET" => Method::Get,
+            "PUT" => Method::Put,
+            "POST" => Method::Post,
+            "DELETE" => Method::Delete,
+            "HEAD" => Method::Head,
+            "OPTIONS" => Method::Options,
+            _ => return None,
+        })
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Method::Get => "GET",
+            Method::Put => "PUT",
+            Method::Post => "POST",
+            Method::Delete => "DELETE",
+            Method::Head => "HEAD",
+            Method::Options => "OPTIONS",
+        }
+    }
+}
+
+impl std::fmt::Display for Method {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// A parsed HTTP request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Request {
+    pub method: Method,
+    /// Path component only (no query string), percent-decoded is NOT
+    /// applied — pool routes are plain ASCII.
+    pub path: String,
+    /// Raw query string (without `?`), empty if none.
+    pub query: String,
+    /// Header names are lower-cased at parse time.
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    pub fn new(method: Method, path: &str) -> Request {
+        let (path, query) = match path.split_once('?') {
+            Some((p, q)) => (p.to_string(), q.to_string()),
+            None => (path.to_string(), String::new()),
+        };
+        Request { method, path, query, headers: Vec::new(), body: Vec::new() }
+    }
+
+    pub fn with_json(mut self, v: &Json) -> Request {
+        self.body = json::to_string(v).into_bytes();
+        self.headers
+            .push(("content-type".into(), "application/json".into()));
+        self
+    }
+
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let lower = name.to_ascii_lowercase();
+        self.headers
+            .iter()
+            .find(|(k, _)| *k == lower)
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// Parse the body as JSON.
+    pub fn json(&self) -> Result<Json, json::ParseError> {
+        let text = std::str::from_utf8(&self.body).map_err(|_| {
+            json::ParseError { offset: 0, message: "body is not utf-8".into() }
+        })?;
+        json::parse(text)
+    }
+
+    /// Look up a query-string parameter (`a=1&b=2` syntax, no decoding).
+    pub fn query_param(&self, name: &str) -> Option<&str> {
+        self.query.split('&').find_map(|pair| {
+            let (k, v) = pair.split_once('=')?;
+            (k == name).then_some(v)
+        })
+    }
+
+    /// Whether the connection should stay open after this exchange.
+    pub fn keep_alive(&self) -> bool {
+        match self.header("connection") {
+            Some(v) => !v.eq_ignore_ascii_case("close"),
+            None => true, // HTTP/1.1 default
+        }
+    }
+}
+
+/// An HTTP response under construction.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Response {
+    pub status: u16,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Response {
+    pub fn new(status: u16) -> Response {
+        Response { status, headers: Vec::new(), body: Vec::new() }
+    }
+
+    pub fn ok() -> Response {
+        Response::new(200)
+    }
+
+    pub fn not_found() -> Response {
+        Response::new(404).with_text("not found")
+    }
+
+    pub fn bad_request(msg: &str) -> Response {
+        Response::new(400).with_text(msg)
+    }
+
+    pub fn json(v: &Json) -> Response {
+        Response::ok().with_json(v)
+    }
+
+    pub fn with_json(mut self, v: &Json) -> Response {
+        self.body = json::to_string(v).into_bytes();
+        self.set_header("content-type", "application/json");
+        self
+    }
+
+    pub fn with_text(mut self, text: &str) -> Response {
+        self.body = text.as_bytes().to_vec();
+        self.set_header("content-type", "text/plain");
+        self
+    }
+
+    pub fn set_header(&mut self, name: &str, value: &str) {
+        let lower = name.to_ascii_lowercase();
+        if let Some(slot) = self.headers.iter_mut().find(|(k, _)| *k == lower) {
+            slot.1 = value.to_string();
+        } else {
+            self.headers.push((lower, value.to_string()));
+        }
+    }
+
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let lower = name.to_ascii_lowercase();
+        self.headers
+            .iter()
+            .find(|(k, _)| *k == lower)
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// Parse the body as JSON.
+    pub fn json_body(&self) -> Result<Json, json::ParseError> {
+        let text = std::str::from_utf8(&self.body).map_err(|_| {
+            json::ParseError { offset: 0, message: "body is not utf-8".into() }
+        })?;
+        json::parse(text)
+    }
+
+    pub fn status_line(&self) -> &'static str {
+        match self.status {
+            200 => "OK",
+            201 => "Created",
+            204 => "No Content",
+            400 => "Bad Request",
+            404 => "Not Found",
+            405 => "Method Not Allowed",
+            409 => "Conflict",
+            413 => "Payload Too Large",
+            429 => "Too Many Requests",
+            500 => "Internal Server Error",
+            503 => "Service Unavailable",
+            _ => "Unknown",
+        }
+    }
+
+    /// Serialize to wire format, appending to `out`.
+    pub fn write_to(&self, out: &mut Vec<u8>, keep_alive: bool) {
+        out.extend_from_slice(
+            format!("HTTP/1.1 {} {}\r\n", self.status, self.status_line())
+                .as_bytes(),
+        );
+        for (k, v) in &self.headers {
+            out.extend_from_slice(format!("{k}: {v}\r\n").as_bytes());
+        }
+        out.extend_from_slice(
+            format!("content-length: {}\r\n", self.body.len()).as_bytes(),
+        );
+        if !keep_alive {
+            out.extend_from_slice(b"connection: close\r\n");
+        }
+        out.extend_from_slice(b"\r\n");
+        out.extend_from_slice(&self.body);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn method_round_trip() {
+        for m in [Method::Get, Method::Put, Method::Post, Method::Delete,
+                  Method::Head, Method::Options] {
+            assert_eq!(Method::parse(m.as_str()), Some(m));
+        }
+        assert_eq!(Method::parse("PATCH"), None);
+        assert_eq!(Method::parse("get"), None); // methods are case-sensitive
+    }
+
+    #[test]
+    fn request_splits_query() {
+        let r = Request::new(Method::Get, "/random?experiment=3&x=1");
+        assert_eq!(r.path, "/random");
+        assert_eq!(r.query_param("experiment"), Some("3"));
+        assert_eq!(r.query_param("x"), Some("1"));
+        assert_eq!(r.query_param("missing"), None);
+    }
+
+    #[test]
+    fn json_body_round_trip() {
+        let body = Json::obj(vec![("fitness", 80u64.into())]);
+        let r = Request::new(Method::Put, "/chromosome").with_json(&body);
+        assert_eq!(r.json().unwrap(), body);
+        assert_eq!(r.header("content-type"), Some("application/json"));
+    }
+
+    #[test]
+    fn keep_alive_defaults() {
+        let mut r = Request::new(Method::Get, "/");
+        assert!(r.keep_alive());
+        r.headers.push(("connection".into(), "close".into()));
+        assert!(!r.keep_alive());
+    }
+
+    #[test]
+    fn response_wire_format() {
+        let mut out = Vec::new();
+        Response::ok().with_text("hi").write_to(&mut out, true);
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 200 OK\r\n"));
+        assert!(text.contains("content-length: 2\r\n"));
+        assert!(text.ends_with("\r\n\r\nhi"));
+        assert!(!text.contains("connection: close"));
+    }
+
+    #[test]
+    fn response_close_header() {
+        let mut out = Vec::new();
+        Response::new(204).write_to(&mut out, false);
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.contains("connection: close\r\n"));
+    }
+
+    #[test]
+    fn set_header_replaces() {
+        let mut r = Response::ok();
+        r.set_header("X-Test", "1");
+        r.set_header("x-test", "2");
+        assert_eq!(r.header("X-TEST"), Some("2"));
+        assert_eq!(r.headers.len(), 1);
+    }
+}

@@ -1,0 +1,184 @@
+//! JSON serialization: compact and pretty writers with full string escaping
+//! and JavaScript-compatible number formatting (integers without `.0`,
+//! shortest-round-trip floats otherwise).
+
+use super::Json;
+
+/// Serialize compactly (no whitespace) — the wire format.
+pub fn to_string(v: &Json) -> String {
+    let mut out = String::new();
+    write_value(v, &mut out);
+    out
+}
+
+/// Serialize with 2-space indentation — manifests, reports.
+pub fn to_string_pretty(v: &Json) -> String {
+    let mut out = String::new();
+    write_pretty(v, 0, &mut out);
+    out
+}
+
+fn write_value(v: &Json, out: &mut String) {
+    match v {
+        Json::Null => out.push_str("null"),
+        Json::Bool(true) => out.push_str("true"),
+        Json::Bool(false) => out.push_str("false"),
+        Json::Num(n) => write_number(*n, out),
+        Json::Str(s) => write_string(s, out),
+        Json::Arr(items) => {
+            out.push('[');
+            for (i, item) in items.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                write_value(item, out);
+            }
+            out.push(']');
+        }
+        Json::Obj(members) => {
+            out.push('{');
+            for (i, (k, val)) in members.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                write_string(k, out);
+                out.push(':');
+                write_value(val, out);
+            }
+            out.push('}');
+        }
+    }
+}
+
+fn write_pretty(v: &Json, indent: usize, out: &mut String) {
+    match v {
+        Json::Arr(items) if !items.is_empty() => {
+            out.push_str("[\n");
+            for (i, item) in items.iter().enumerate() {
+                if i > 0 {
+                    out.push_str(",\n");
+                }
+                push_indent(indent + 1, out);
+                write_pretty(item, indent + 1, out);
+            }
+            out.push('\n');
+            push_indent(indent, out);
+            out.push(']');
+        }
+        Json::Obj(members) if !members.is_empty() => {
+            out.push_str("{\n");
+            for (i, (k, val)) in members.iter().enumerate() {
+                if i > 0 {
+                    out.push_str(",\n");
+                }
+                push_indent(indent + 1, out);
+                write_string(k, out);
+                out.push_str(": ");
+                write_pretty(val, indent + 1, out);
+            }
+            out.push('\n');
+            push_indent(indent, out);
+            out.push('}');
+        }
+        other => write_value(other, out),
+    }
+}
+
+fn push_indent(n: usize, out: &mut String) {
+    for _ in 0..n {
+        out.push_str("  ");
+    }
+}
+
+fn write_number(n: f64, out: &mut String) {
+    if n.is_nan() || n.is_infinite() {
+        // JSON has no NaN/Inf; JavaScript's JSON.stringify emits null.
+        out.push_str("null");
+    } else if n.fract() == 0.0 && n.abs() < 9.007_199_254_740_992e15 {
+        // exact integer: print without decimal point
+        out.push_str(&format!("{}", n as i64));
+    } else {
+        // `{}` on f64 is Rust's shortest round-trip formatting
+        out.push_str(&format!("{n}"));
+    }
+}
+
+fn write_string(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            '\u{0008}' => out.push_str("\\b"),
+            '\u{000C}' => out.push_str("\\f"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{parse, Json};
+    use super::*;
+
+    #[test]
+    fn integers_have_no_decimal() {
+        assert_eq!(to_string(&Json::Num(42.0)), "42");
+        assert_eq!(to_string(&Json::Num(-7.0)), "-7");
+        assert_eq!(to_string(&Json::Num(0.0)), "0");
+    }
+
+    #[test]
+    fn floats_round_trip() {
+        for x in [0.5, -1.25, 1e-10, 3.141592653589793, 1e300] {
+            let s = to_string(&Json::Num(x));
+            assert_eq!(parse(&s).unwrap().as_f64(), Some(x), "{s}");
+        }
+    }
+
+    #[test]
+    fn non_finite_becomes_null() {
+        assert_eq!(to_string(&Json::Num(f64::NAN)), "null");
+        assert_eq!(to_string(&Json::Num(f64::INFINITY)), "null");
+    }
+
+    #[test]
+    fn string_escaping() {
+        let s = Json::Str("a\"b\\c\nd\te\u{0001}".into());
+        assert_eq!(to_string(&s), "\"a\\\"b\\\\c\\nd\\te\\u0001\"");
+    }
+
+    #[test]
+    fn unicode_passthrough() {
+        let s = Json::Str("😀ñ".into());
+        assert_eq!(to_string(&s), "\"😀ñ\"");
+        assert_eq!(parse(&to_string(&s)).unwrap(), s);
+    }
+
+    #[test]
+    fn compact_object() {
+        let v = Json::obj(vec![("a", 1u64.into()), ("b", vec![1u64, 2].into())]);
+        assert_eq!(to_string(&v), r#"{"a":1,"b":[1,2]}"#);
+    }
+
+    #[test]
+    fn pretty_output() {
+        let v = Json::obj(vec![("a", 1u64.into()), ("b", Json::Arr(vec![]))]);
+        let pretty = to_string_pretty(&v);
+        assert_eq!(pretty, "{\n  \"a\": 1,\n  \"b\": []\n}");
+        assert_eq!(parse(&pretty).unwrap(), v);
+    }
+
+    #[test]
+    fn member_order_preserved() {
+        let v = Json::obj(vec![("z", 1u64.into()), ("a", 2u64.into())]);
+        assert_eq!(to_string(&v), r#"{"z":1,"a":2}"#);
+    }
+}

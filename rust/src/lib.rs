@@ -1,0 +1,51 @@
+//! # NodIO — volunteer-based distributed evolutionary computation
+//!
+//! A reproduction of *"NodIO, a JavaScript framework for volunteer-based
+//! evolutionary algorithms: first results"* (Merelo et al., 2016) as a
+//! three-layer Rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — the coordination contribution: a single-threaded
+//!   non-blocking pool server ([`coordinator`]), volunteer island clients
+//!   ([`client`]), and the volunteer-churn simulator ([`sim`]).
+//! * **L2/L1 (build-time Python)** — the islands' compute hot path
+//!   (trap / CEC2010-F15 fitness and a fused 100-generation GA epoch) is
+//!   authored in JAX + Pallas, AOT-lowered to HLO text, and executed here
+//!   through the PJRT CPU client ([`runtime`]).
+//!
+//! Python never runs on the request path; after `make artifacts` the
+//! `nodio` binary is self-contained.
+//!
+//! Everything below [`http`], [`json`], [`rng`], [`bench`] and [`testkit`]
+//! is built from scratch in this crate: the execution environment has no
+//! network access and no tokio/serde/criterion, and the paper's claims
+//! lean on the server architecture itself (a Node.js-style non-blocking
+//! event loop), so owning those substrates is part of the reproduction.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use nodio::problems::Trap;
+//! use nodio::ea::{Island, IslandConfig};
+//! use nodio::rng::Mt19937;
+//!
+//! let problem = Trap::paper();                 // 40 traps, l=4,a=1,b=2,z=3
+//! let mut rng = Mt19937::new(42);
+//! let mut island = Island::new(IslandConfig::default(), &problem, &mut rng);
+//! let report = island.run_to_solution(&problem, 5_000_000, &mut rng);
+//! println!("solved={} evals={}", report.solved, report.evaluations);
+//! ```
+
+pub mod bench;
+pub mod cli;
+pub mod client;
+pub mod coordinator;
+pub mod ea;
+pub mod eventloop;
+pub mod http;
+pub mod json;
+pub mod problems;
+pub mod rng;
+pub mod runtime;
+pub mod sim;
+pub mod testkit;
+pub mod util;

@@ -1,0 +1,5 @@
+//! `nodio` binary: see `nodio help`.
+
+fn main() {
+    std::process::exit(nodio::cli::run());
+}

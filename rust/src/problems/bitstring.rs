@@ -1,0 +1,266 @@
+//! Bitstring problems: the paper's trap function plus classical test
+//! functions (OneMax, Royal Road, Deceptive-3).
+
+use super::BitProblem;
+
+/// Ackley's trap function (the Figure 3 workload). A chromosome is
+/// `blocks` concatenated traps of `l` bits each; a block with `u` ones
+/// scores
+///
+/// ```text
+///   a * (z - u) / z          if u <= z   (deceptive slope toward zeros)
+///   b * (u - z) / (l - z)    otherwise   (the optimum spike at u = l)
+/// ```
+///
+/// The paper's parameters (`Trap::paper()`): 40 blocks, l=4, a=1, b=2,
+/// z=3 → 160 bits, optimum 80.
+#[derive(Debug, Clone)]
+pub struct Trap {
+    pub blocks: usize,
+    pub l: usize,
+    pub a: f64,
+    pub b: f64,
+    pub z: usize,
+}
+
+impl Trap {
+    pub fn new(blocks: usize, l: usize, a: f64, b: f64, z: usize) -> Trap {
+        assert!(l >= 2 && z < l && blocks > 0);
+        Trap { blocks, l, a, b, z }
+    }
+
+    /// The exact instance from the paper's baseline experiment.
+    pub fn paper() -> Trap {
+        Trap::new(40, 4, 1.0, 2.0, 3)
+    }
+
+    #[inline]
+    fn block_value(&self, ones: usize) -> f64 {
+        if ones <= self.z {
+            self.a * (self.z - ones) as f64 / self.z as f64
+        } else {
+            self.b * (ones - self.z) as f64 / (self.l - self.z) as f64
+        }
+    }
+}
+
+impl BitProblem for Trap {
+    fn n_bits(&self) -> usize {
+        self.blocks * self.l
+    }
+
+    fn eval(&self, bits: &[u8]) -> f64 {
+        debug_assert_eq!(bits.len(), self.n_bits());
+        bits.chunks_exact(self.l)
+            .map(|block| {
+                let ones = block.iter().map(|&b| b as usize).sum::<usize>();
+                self.block_value(ones)
+            })
+            .sum()
+    }
+
+    fn optimum(&self) -> f64 {
+        self.blocks as f64 * self.b
+    }
+}
+
+/// OneMax: fitness = number of ones. The EA "hello world".
+#[derive(Debug, Clone)]
+pub struct OneMax {
+    n: usize,
+}
+
+impl OneMax {
+    pub fn new(n: usize) -> OneMax {
+        OneMax { n }
+    }
+}
+
+impl BitProblem for OneMax {
+    fn n_bits(&self) -> usize {
+        self.n
+    }
+
+    fn eval(&self, bits: &[u8]) -> f64 {
+        debug_assert_eq!(bits.len(), self.n);
+        bits.iter().map(|&b| b as u64).sum::<u64>() as f64
+    }
+
+    fn optimum(&self) -> f64 {
+        self.n as f64
+    }
+}
+
+/// Royal Road R1 (Mitchell et al.): a block scores `block_size` only when
+/// complete. Rewards crossover; classic island-model workload.
+#[derive(Debug, Clone)]
+pub struct RoyalRoad {
+    pub blocks: usize,
+    pub block_size: usize,
+}
+
+impl RoyalRoad {
+    pub fn new(blocks: usize, block_size: usize) -> RoyalRoad {
+        assert!(blocks > 0 && block_size > 0);
+        RoyalRoad { blocks, block_size }
+    }
+}
+
+impl BitProblem for RoyalRoad {
+    fn n_bits(&self) -> usize {
+        self.blocks * self.block_size
+    }
+
+    fn eval(&self, bits: &[u8]) -> f64 {
+        bits.chunks_exact(self.block_size)
+            .filter(|block| block.iter().all(|&b| b == 1))
+            .count() as f64
+            * self.block_size as f64
+    }
+
+    fn optimum(&self) -> f64 {
+        (self.blocks * self.block_size) as f64
+    }
+}
+
+/// Goldberg's fully deceptive 3-bit function, concatenated.
+/// f(u) = 0.9, 0.8, 0.0, 1.0 for u = 0..3 — the local gradient points to
+/// all-zeros while the optimum is all-ones.
+#[derive(Debug, Clone)]
+pub struct Deceptive3 {
+    pub blocks: usize,
+}
+
+impl Deceptive3 {
+    pub fn new(blocks: usize) -> Deceptive3 {
+        Deceptive3 { blocks }
+    }
+}
+
+impl BitProblem for Deceptive3 {
+    fn n_bits(&self) -> usize {
+        self.blocks * 3
+    }
+
+    fn eval(&self, bits: &[u8]) -> f64 {
+        const VALUES: [f64; 4] = [0.9, 0.8, 0.0, 1.0];
+        bits.chunks_exact(3)
+            .map(|block| {
+                VALUES[block.iter().map(|&b| b as usize).sum::<usize>()]
+            })
+            .sum()
+    }
+
+    fn optimum(&self) -> f64 {
+        self.blocks as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ea::BitString;
+    use crate::rng::SplitMix64;
+    use crate::testkit::{forall, PropConfig};
+
+    #[test]
+    fn trap_paper_block_values() {
+        let t = Trap::paper();
+        assert_eq!(t.block_value(0), 1.0);
+        assert!((t.block_value(1) - 2.0 / 3.0).abs() < 1e-12);
+        assert!((t.block_value(2) - 1.0 / 3.0).abs() < 1e-12);
+        assert_eq!(t.block_value(3), 0.0);
+        assert_eq!(t.block_value(4), 2.0);
+    }
+
+    #[test]
+    fn trap_extremes() {
+        let t = Trap::paper();
+        assert_eq!(t.n_bits(), 160);
+        assert_eq!(t.eval(&[1u8; 160]), 80.0);
+        assert_eq!(t.optimum(), 80.0);
+        assert_eq!(t.eval(&[0u8; 160]), 40.0); // deceptive plateau
+        assert!(t.is_solution(80.0));
+        assert!(!t.is_solution(79.9));
+    }
+
+    #[test]
+    fn trap_matches_python_oracle_spot() {
+        // Cross-language anchor: same chromosome evaluated by the Python
+        // ref (ref.trap_fitness) gives 16.666667 for this seed-0 pattern of
+        // the pytest smoke test. Reconstruct a deterministic case here:
+        // one block each of u = 0..=4 ones.
+        let t = Trap::paper();
+        let mut bits = vec![0u8; 160];
+        // block 1: u=1; block 2: u=2; block 3: u=3; block 4: u=4
+        bits[4] = 1;
+        bits[8] = 1;
+        bits[9] = 1;
+        bits[12] = 1;
+        bits[13] = 1;
+        bits[14] = 1;
+        bits[16..20].fill(1);
+        let expect = 1.0 + 2.0 / 3.0 + 1.0 / 3.0 + 0.0 + 2.0 + 35.0 * 1.0;
+        assert!((t.eval(&bits) - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn trap_deceptiveness_property() {
+        // Flipping a 1 to 0 in a non-full block never decreases fitness:
+        // the gradient points away from the optimum.
+        let t = Trap::new(1, 4, 1.0, 2.0, 3);
+        for ones in 1..=3usize {
+            assert!(t.block_value(ones - 1) > t.block_value(ones));
+        }
+    }
+
+    #[test]
+    fn onemax_counts() {
+        let p = OneMax::new(8);
+        assert_eq!(p.eval(&[1, 0, 1, 0, 1, 0, 1, 0]), 4.0);
+        assert_eq!(p.optimum(), 8.0);
+    }
+
+    #[test]
+    fn royal_road_steps() {
+        let p = RoyalRoad::new(2, 4);
+        assert_eq!(p.eval(&[1, 1, 1, 1, 0, 1, 1, 1]), 4.0);
+        assert_eq!(p.eval(&[1, 1, 1, 1, 1, 1, 1, 1]), 8.0);
+        assert_eq!(p.eval(&[0, 1, 1, 1, 0, 1, 1, 1]), 0.0);
+        assert_eq!(p.optimum(), 8.0);
+    }
+
+    #[test]
+    fn deceptive3_values() {
+        let p = Deceptive3::new(1);
+        assert_eq!(p.eval(&[0, 0, 0]), 0.9);
+        assert_eq!(p.eval(&[1, 0, 0]), 0.8);
+        assert_eq!(p.eval(&[1, 1, 0]), 0.0);
+        assert_eq!(p.eval(&[1, 1, 1]), 1.0);
+        assert_eq!(p.optimum(), 1.0);
+    }
+
+    #[test]
+    fn only_all_ones_attains_optimum_property() {
+        let t = Trap::new(8, 4, 1.0, 2.0, 3);
+        forall(
+            &PropConfig::cases(200),
+            |rng| BitString::random(rng, t.n_bits()),
+            |b| {
+                let f = t.eval(b.bits());
+                (f >= t.optimum() - 1e-9) == (b.count_ones() == t.n_bits())
+            },
+        );
+    }
+
+    #[test]
+    fn fitness_bounds_property() {
+        let t = Trap::paper();
+        let mut rng = SplitMix64::new(1);
+        for _ in 0..200 {
+            let b = BitString::random(&mut rng, 160);
+            let f = t.eval(b.bits());
+            assert!((0.0..=80.0).contains(&f));
+        }
+    }
+}

@@ -1,0 +1,255 @@
+//! Extended benchmark problems from the NodIO line of work (the follow-up
+//! volunteer-computing papers evaluate on MMDP and P-Peaks; HIFF is the
+//! classic hierarchical building-block function). All maximization over
+//! bitstrings, like [`super::bitstring`].
+
+use super::BitProblem;
+use crate::rng::{Mt19937, Rng64};
+
+/// Massively Multimodal Deceptive Problem (Goldberg et al.): concatenated
+/// 6-bit subproblems scored by unitation — two global optima per block
+/// (000000 and 111111, worth 1.0) with a deceptive valley at u=3.
+#[derive(Debug, Clone)]
+pub struct Mmdp {
+    pub blocks: usize,
+}
+
+impl Mmdp {
+    pub fn new(blocks: usize) -> Mmdp {
+        Mmdp { blocks }
+    }
+
+    /// Subfunction values for unitation 0..=6.
+    const VALUES: [f64; 7] =
+        [1.0, 0.0, 0.360384, 0.640576, 0.360384, 0.0, 1.0];
+}
+
+impl BitProblem for Mmdp {
+    fn n_bits(&self) -> usize {
+        self.blocks * 6
+    }
+
+    fn eval(&self, bits: &[u8]) -> f64 {
+        debug_assert_eq!(bits.len(), self.n_bits());
+        bits.chunks_exact(6)
+            .map(|b| Self::VALUES[b.iter().map(|&x| x as usize).sum::<usize>()])
+            .sum()
+    }
+
+    fn optimum(&self) -> f64 {
+        self.blocks as f64
+    }
+}
+
+/// P-Peaks (De Jong et al., used in the NodIO follow-ups): `p` random
+/// N-bit peaks; fitness is the maximal Hamming closeness to any peak,
+/// normalized so the optimum is exactly 1.0 (reaching any peak).
+#[derive(Debug, Clone)]
+pub struct PPeaks {
+    pub n_bits: usize,
+    peaks: Vec<Vec<u8>>,
+}
+
+impl PPeaks {
+    /// Deterministic instance from a seed (MT19937, like the benchmark
+    /// generators elsewhere in this crate).
+    pub fn new(p: usize, n_bits: usize, seed: u64) -> PPeaks {
+        assert!(p >= 1);
+        let mut rng = Mt19937::new(seed);
+        let peaks = (0..p)
+            .map(|_| (0..n_bits).map(|_| (rng.next_u64() & 1) as u8).collect())
+            .collect();
+        PPeaks { n_bits, peaks }
+    }
+
+    pub fn peaks(&self) -> &[Vec<u8>] {
+        &self.peaks
+    }
+}
+
+impl BitProblem for PPeaks {
+    fn n_bits(&self) -> usize {
+        self.n_bits
+    }
+
+    fn eval(&self, bits: &[u8]) -> f64 {
+        debug_assert_eq!(bits.len(), self.n_bits);
+        let closest = self
+            .peaks
+            .iter()
+            .map(|peak| {
+                bits.iter()
+                    .zip(peak)
+                    .filter(|(a, b)| a == b)
+                    .count()
+            })
+            .max()
+            .unwrap_or(0);
+        closest as f64 / self.n_bits as f64
+    }
+
+    fn optimum(&self) -> f64 {
+        1.0
+    }
+}
+
+/// Hierarchical If-and-only-If (Watson & Pollack): rewards consistent
+/// blocks at every level of a binary tree. `n_bits` must be a power of
+/// two. The optimum (all-zeros or all-ones) scores `n * (log2(n) + 1)`.
+#[derive(Debug, Clone)]
+pub struct Hiff {
+    pub n_bits: usize,
+}
+
+impl Hiff {
+    pub fn new(n_bits: usize) -> Hiff {
+        assert!(n_bits.is_power_of_two() && n_bits >= 2);
+        Hiff { n_bits }
+    }
+
+    /// Recursive transform: returns (value, Option<block bit>).
+    fn score(bits: &[u8]) -> (f64, Option<u8>) {
+        if bits.len() == 1 {
+            return (1.0, Some(bits[0]));
+        }
+        let half = bits.len() / 2;
+        let (lv, lb) = Self::score(&bits[..half]);
+        let (rv, rb) = Self::score(&bits[half..]);
+        let mut value = lv + rv;
+        let block = match (lb, rb) {
+            (Some(a), Some(b)) if a == b => {
+                value += bits.len() as f64;
+                Some(a)
+            }
+            _ => None,
+        };
+        (value, block)
+    }
+}
+
+impl BitProblem for Hiff {
+    fn n_bits(&self) -> usize {
+        self.n_bits
+    }
+
+    fn eval(&self, bits: &[u8]) -> f64 {
+        debug_assert_eq!(bits.len(), self.n_bits);
+        Self::score(bits).0
+    }
+
+    fn optimum(&self) -> f64 {
+        // n ones at level 0 plus n at each of log2(n) consistent levels.
+        let n = self.n_bits as f64;
+        n * (self.n_bits.ilog2() as f64 + 1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mmdp_bimodal_blocks() {
+        let p = Mmdp::new(1);
+        assert_eq!(p.eval(&[0; 6]), 1.0);
+        assert_eq!(p.eval(&[1; 6]), 1.0);
+        assert_eq!(p.eval(&[1, 0, 0, 0, 0, 0]), 0.0);
+        assert_eq!(p.eval(&[1, 1, 1, 0, 0, 0]), 0.640576);
+        assert!(p.is_solution(p.eval(&[1; 6])));
+    }
+
+    #[test]
+    fn mmdp_concatenation() {
+        let p = Mmdp::new(3);
+        assert_eq!(p.n_bits(), 18);
+        let mut bits = vec![0u8; 18];
+        bits[6..12].fill(1);
+        assert_eq!(p.eval(&bits), 3.0);
+        assert_eq!(p.optimum(), 3.0);
+    }
+
+    #[test]
+    fn ppeaks_peak_is_optimum() {
+        let p = PPeaks::new(5, 32, 42);
+        for peak in p.peaks() {
+            assert_eq!(p.eval(peak), 1.0);
+            assert!(p.is_solution(p.eval(peak)));
+        }
+    }
+
+    #[test]
+    fn ppeaks_distance_scaling() {
+        let p = PPeaks::new(1, 16, 1);
+        let peak = p.peaks()[0].clone();
+        let mut one_off = peak.clone();
+        one_off[0] ^= 1;
+        assert!((p.eval(&one_off) - 15.0 / 16.0).abs() < 1e-12);
+        // inverted peak: 0 matches against a single peak
+        let inverted: Vec<u8> = peak.iter().map(|b| b ^ 1).collect();
+        assert_eq!(p.eval(&inverted), 0.0);
+    }
+
+    #[test]
+    fn ppeaks_deterministic() {
+        let a = PPeaks::new(3, 20, 9);
+        let b = PPeaks::new(3, 20, 9);
+        assert_eq!(a.peaks(), b.peaks());
+        let c = PPeaks::new(3, 20, 10);
+        assert_ne!(a.peaks(), c.peaks());
+    }
+
+    #[test]
+    fn hiff_known_values() {
+        let p = Hiff::new(4);
+        // all equal: 4*1 (leaves) + 2*2 (pairs) + 4 (root) = 12
+        assert_eq!(p.eval(&[0, 0, 0, 0]), 12.0);
+        assert_eq!(p.eval(&[1, 1, 1, 1]), 12.0);
+        assert_eq!(p.optimum(), 12.0);
+        // 1100: leaves 4 + both pairs consistent (11, 00) = 4+4, root no
+        assert_eq!(p.eval(&[1, 1, 0, 0]), 8.0);
+        // 1010: leaves only
+        assert_eq!(p.eval(&[1, 0, 1, 0]), 4.0);
+    }
+
+    #[test]
+    fn hiff_optimum_formula() {
+        for n in [2usize, 4, 8, 16, 64] {
+            let p = Hiff::new(n);
+            assert_eq!(p.eval(&vec![1u8; n]), p.optimum(), "n={n}");
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn hiff_requires_power_of_two() {
+        let _ = Hiff::new(12);
+    }
+
+    #[test]
+    fn island_solves_small_instances() {
+        use crate::ea::{Island, IslandConfig};
+        use crate::rng::Xoshiro256pp;
+        // MMDP 4 blocks and HIFF-32 are solvable quickly; confirms the
+        // problems plug into the island GA like the paper's trap.
+        let mmdp = Mmdp::new(4);
+        let mut rng = Xoshiro256pp::new(5);
+        let mut island = Island::new(
+            IslandConfig { pop_size: 128, ..Default::default() },
+            &mmdp,
+            &mut rng,
+        );
+        let report = island.run_to_solution(&mmdp, 1_000_000, &mut rng);
+        assert!(report.solved, "mmdp best={}", report.best_fitness);
+
+        // HIFF-16 (optimum 80). Full HIFF-32+ needs diversity maintenance
+        // beyond this plain GA — a known property of the function.
+        let hiff = Hiff::new(16);
+        let mut island = Island::new(
+            IslandConfig { pop_size: 256, ..Default::default() },
+            &hiff,
+            &mut rng,
+        );
+        let report = island.run_to_solution(&hiff, 1_000_000, &mut rng);
+        assert!(report.solved, "hiff best={}", report.best_fitness);
+    }
+}

@@ -1,0 +1,232 @@
+//! CEC2010 F15: the D/m-group shifted, m-rotated Rastrigin (the paper's
+//! Figure 4 workload, eq. 2–3).
+//!
+//! An *instance* is (shift vector **o**, permutation **P**, per-group
+//! orthogonal matrices **M_k**), generated deterministically from a seed
+//! with the benchmark's distributions (uniform shift in the search domain,
+//! uniform permutation, Haar-orthogonal rotations). The same instance is
+//! both evaluated natively here and passed as runtime inputs to the XLA
+//! `f15_eval_*` artifacts, so every engine computes the identical function.
+
+use super::linalg::{random_orthogonal, Matrix};
+use super::real::Rastrigin;
+use super::RealProblem;
+use crate::rng::{dist, Mt19937, Rng64};
+
+/// Benchmark constants (paper section 3.1).
+pub const DIM: usize = 1000;
+pub const GROUP: usize = 50;
+/// Search domain for Rastrigin in CEC2010: [-5, 5].
+pub const DOMAIN: (f64, f64) = (-5.0, 5.0);
+
+/// One concrete F15 instance.
+#[derive(Debug, Clone)]
+pub struct F15Instance {
+    pub dim: usize,
+    pub group: usize,
+    /// Shifted global optimum o.
+    pub shift: Vec<f64>,
+    /// Random permutation P of 0..dim.
+    pub perm: Vec<u32>,
+    /// One orthogonal rotation per group.
+    pub rotations: Vec<Matrix>,
+}
+
+impl F15Instance {
+    /// Generate from a seed using MT19937 (the benchmark's own generator
+    /// family — the paper stresses Mersenne Twister determinism).
+    pub fn generate(seed: u64, dim: usize, group: usize) -> F15Instance {
+        assert!(dim % group == 0, "dim {dim} not divisible by group {group}");
+        let mut rng = Mt19937::new(seed);
+        let shift = (0..dim)
+            .map(|_| dist::uniform_in(&mut rng, DOMAIN.0, DOMAIN.1))
+            .collect();
+        let perm = dist::permutation(&mut rng, dim);
+        let rotations = (0..dim / group)
+            .map(|_| random_orthogonal(&mut rng, group))
+            .collect();
+        F15Instance { dim, group, shift, perm, rotations }
+    }
+
+    /// The paper's exact configuration: D=1000, m=50.
+    pub fn paper(seed: u64) -> F15Instance {
+        F15Instance::generate(seed, DIM, GROUP)
+    }
+
+    pub fn groups(&self) -> usize {
+        self.dim / self.group
+    }
+
+    /// Random candidate in the search domain.
+    pub fn random_candidate<R: Rng64 + ?Sized>(&self, rng: &mut R) -> Vec<f64> {
+        (0..self.dim)
+            .map(|_| dist::uniform_in(rng, DOMAIN.0, DOMAIN.1))
+            .collect()
+    }
+
+    /// Flat f32 views for the XLA artifact inputs.
+    pub fn shift_f32(&self) -> Vec<f32> {
+        self.shift.iter().map(|&v| v as f32).collect()
+    }
+
+    pub fn perm_i32(&self) -> Vec<i32> {
+        self.perm.iter().map(|&v| v as i32).collect()
+    }
+
+    pub fn rotations_f32(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.groups() * self.group * self.group);
+        for m in &self.rotations {
+            out.extend(m.data.iter().map(|&v| v as f32));
+        }
+        out
+    }
+
+    /// Scratch buffers for allocation-free evaluation.
+    pub fn scratch(&self) -> F15Scratch {
+        F15Scratch {
+            z: vec![0.0; self.dim],
+            group_in: vec![0.0; self.group],
+            group_out: vec![0.0; self.group],
+        }
+    }
+
+    /// Evaluate with caller-provided scratch (the benched hot path).
+    pub fn eval_with(&self, x: &[f64], scratch: &mut F15Scratch) -> f64 {
+        debug_assert_eq!(x.len(), self.dim);
+        // z = x - o
+        for ((z, &xv), &ov) in scratch.z.iter_mut().zip(x).zip(&self.shift) {
+            *z = xv - ov;
+        }
+        let mut total = 0.0;
+        for (k, rot) in self.rotations.iter().enumerate() {
+            // gather the permuted group, rotate, reduce
+            for (slot, &p) in scratch.group_in.iter_mut().zip(
+                &self.perm[k * self.group..(k + 1) * self.group],
+            ) {
+                *slot = scratch.z[p as usize];
+            }
+            rot.rotate_row(&scratch.group_in, &mut scratch.group_out);
+            total += scratch
+                .group_out
+                .iter()
+                .map(|&v| Rastrigin::term(v))
+                .sum::<f64>();
+        }
+        total
+    }
+}
+
+/// Reusable evaluation buffers.
+#[derive(Debug, Clone)]
+pub struct F15Scratch {
+    z: Vec<f64>,
+    group_in: Vec<f64>,
+    group_out: Vec<f64>,
+}
+
+impl RealProblem for F15Instance {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn eval(&self, x: &[f64]) -> f64 {
+        let mut scratch = self.scratch();
+        self.eval_with(x, &mut scratch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::SplitMix64;
+
+    fn small() -> F15Instance {
+        F15Instance::generate(7, 200, 50)
+    }
+
+    #[test]
+    fn optimum_is_zero_at_shift() {
+        let inst = small();
+        let shift = inst.shift.clone();
+        let v = inst.eval(&shift);
+        assert!(v.abs() < 1e-9, "f(o) = {v}");
+    }
+
+    #[test]
+    fn nonnegative_everywhere_sampled() {
+        let inst = small();
+        let mut rng = SplitMix64::new(1);
+        for _ in 0..50 {
+            let x = inst.random_candidate(&mut rng);
+            assert!(inst.eval(&x) >= -1e-9);
+        }
+    }
+
+    #[test]
+    fn deterministic_generation() {
+        let a = F15Instance::generate(42, 100, 50);
+        let b = F15Instance::generate(42, 100, 50);
+        assert_eq!(a.shift, b.shift);
+        assert_eq!(a.perm, b.perm);
+        assert_eq!(a.rotations[0], b.rotations[0]);
+        let c = F15Instance::generate(43, 100, 50);
+        assert_ne!(a.shift, c.shift);
+    }
+
+    #[test]
+    fn permutation_is_valid() {
+        let inst = small();
+        let mut seen = inst.perm.clone();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..200).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn rotations_are_orthogonal() {
+        let inst = small();
+        for m in &inst.rotations {
+            let qtq = m.transpose().matmul(m);
+            let diff = qtq.max_abs_diff(&Matrix::identity(m.n));
+            assert!(diff < 1e-10);
+        }
+    }
+
+    #[test]
+    fn eval_with_scratch_matches_eval() {
+        let inst = small();
+        let mut rng = SplitMix64::new(2);
+        let mut scratch = inst.scratch();
+        for _ in 0..10 {
+            let x = inst.random_candidate(&mut rng);
+            let a = inst.eval(&x);
+            let b = inst.eval_with(&x, &mut scratch);
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn quadratic_term_invariant_under_rotation() {
+        // sum(y^2) == sum(z_perm^2) because rotations are orthogonal; so
+        // f15 >= 0 and f15(x) <= sum(z^2) + 20*dim (cos term bounded).
+        let inst = small();
+        let mut rng = SplitMix64::new(3);
+        let x = inst.random_candidate(&mut rng);
+        let z2: f64 = x
+            .iter()
+            .zip(&inst.shift)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum();
+        let f = inst.eval(&x);
+        assert!(f <= z2 + 20.0 * inst.dim as f64 + 1e-6);
+        assert!(f >= z2 - 20.0 * inst.dim as f64 - 1e-6);
+    }
+
+    #[test]
+    fn paper_instance_shape() {
+        let inst = F15Instance::paper(1);
+        assert_eq!(inst.dim, 1000);
+        assert_eq!(inst.groups(), 20);
+        assert_eq!(inst.rotations.len(), 20);
+        assert_eq!(inst.rotations_f32().len(), 20 * 50 * 50);
+    }
+}

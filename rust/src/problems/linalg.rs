@@ -1,0 +1,237 @@
+//! Minimal dense linear algebra: Householder QR for generating the random
+//! orthogonal rotation matrices the CEC2010 benchmark requires. (The
+//! paper's Java/Matlab test suite ships pre-generated matrices; we generate
+//! them from a seed with the same distribution — QR of a Gaussian matrix —
+//! so Rust and the XLA artifacts share one instance passed as runtime
+//! inputs.)
+
+use crate::rng::{dist, Rng64};
+
+/// A row-major square matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Matrix {
+    pub n: usize,
+    pub data: Vec<f64>,
+}
+
+impl Matrix {
+    pub fn zeros(n: usize) -> Matrix {
+        Matrix { n, data: vec![0.0; n * n] }
+    }
+
+    pub fn identity(n: usize) -> Matrix {
+        let mut m = Matrix::zeros(n);
+        for i in 0..n {
+            m.data[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    /// iid standard-normal entries.
+    pub fn gaussian<R: Rng64 + ?Sized>(rng: &mut R, n: usize) -> Matrix {
+        Matrix {
+            n,
+            data: (0..n * n).map(|_| dist::gaussian(rng)).collect(),
+        }
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> f64 {
+        self.data[r * self.n + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f64) {
+        self.data[r * self.n + c] = v;
+    }
+
+    /// `y = x * M` for a row vector x (the CEC rotation convention,
+    /// z = x * M).
+    pub fn rotate_row(&self, x: &[f64], out: &mut [f64]) {
+        let n = self.n;
+        debug_assert_eq!(x.len(), n);
+        debug_assert_eq!(out.len(), n);
+        out.fill(0.0);
+        // Row-major traversal: out[c] += x[r] * M[r][c], cache-friendly.
+        for (r, &xr) in x.iter().enumerate() {
+            let row = &self.data[r * n..(r + 1) * n];
+            for (o, &m) in out.iter_mut().zip(row) {
+                *o += xr * m;
+            }
+        }
+    }
+
+    pub fn matmul(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.n, other.n);
+        let n = self.n;
+        let mut out = Matrix::zeros(n);
+        for r in 0..n {
+            for k in 0..n {
+                let a = self.get(r, k);
+                if a == 0.0 {
+                    continue;
+                }
+                for c in 0..n {
+                    out.data[r * n + c] += a * other.get(k, c);
+                }
+            }
+        }
+        out
+    }
+
+    pub fn transpose(&self) -> Matrix {
+        let n = self.n;
+        let mut out = Matrix::zeros(n);
+        for r in 0..n {
+            for c in 0..n {
+                out.set(c, r, self.get(r, c));
+            }
+        }
+        out
+    }
+
+    pub fn max_abs_diff(&self, other: &Matrix) -> f64 {
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+}
+
+/// Householder QR: returns the orthogonal factor Q (with the sign
+/// convention of positive R diagonal, making Q unique and the distribution
+/// Haar when the input is Gaussian).
+pub fn qr_q(a: &Matrix) -> Matrix {
+    let n = a.n;
+    let mut r = a.clone();
+    let mut q = Matrix::identity(n);
+
+    for k in 0..n {
+        // Householder vector for column k below the diagonal.
+        let mut norm = 0.0;
+        for i in k..n {
+            norm += r.get(i, k) * r.get(i, k);
+        }
+        let norm = norm.sqrt();
+        if norm < 1e-300 {
+            continue;
+        }
+        let alpha = if r.get(k, k) >= 0.0 { -norm } else { norm };
+        let mut v = vec![0.0; n];
+        for i in k..n {
+            v[i] = r.get(i, k);
+        }
+        v[k] -= alpha;
+        let vnorm2: f64 = v[k..].iter().map(|x| x * x).sum();
+        if vnorm2 < 1e-300 {
+            continue;
+        }
+
+        // r = (I - 2 v v^T / v^T v) r
+        for c in k..n {
+            let mut dot = 0.0;
+            for i in k..n {
+                dot += v[i] * r.get(i, c);
+            }
+            let scale = 2.0 * dot / vnorm2;
+            for i in k..n {
+                let val = r.get(i, c) - scale * v[i];
+                r.set(i, c, val);
+            }
+        }
+        // q = q (I - 2 v v^T / v^T v)
+        for row in 0..n {
+            let mut dot = 0.0;
+            for i in k..n {
+                dot += q.get(row, i) * v[i];
+            }
+            let scale = 2.0 * dot / vnorm2;
+            for i in k..n {
+                let val = q.get(row, i) - scale * v[i];
+                q.set(row, i, val);
+            }
+        }
+    }
+
+    // Fix signs so diag(R) > 0 (uniqueness + Haar measure).
+    for k in 0..n {
+        if r.get(k, k) < 0.0 {
+            for row in 0..n {
+                let v = -q.get(row, k);
+                q.set(row, k, v);
+            }
+        }
+    }
+    q
+}
+
+/// A random orthogonal matrix: QR of a Gaussian matrix.
+pub fn random_orthogonal<R: Rng64 + ?Sized>(rng: &mut R, n: usize) -> Matrix {
+    qr_q(&Matrix::gaussian(rng, n))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::SplitMix64;
+
+    fn assert_orthogonal(q: &Matrix, tol: f64) {
+        let qtq = q.transpose().matmul(q);
+        let diff = qtq.max_abs_diff(&Matrix::identity(q.n));
+        assert!(diff < tol, "Q^T Q deviates from I by {diff}");
+    }
+
+    #[test]
+    fn identity_is_orthogonal() {
+        assert_orthogonal(&Matrix::identity(5), 1e-15);
+    }
+
+    #[test]
+    fn qr_produces_orthogonal_q() {
+        let mut rng = SplitMix64::new(1);
+        for n in [2, 5, 17, 50] {
+            let q = random_orthogonal(&mut rng, n);
+            assert_orthogonal(&q, 1e-10);
+        }
+    }
+
+    #[test]
+    fn rotation_preserves_norm() {
+        let mut rng = SplitMix64::new(2);
+        let q = random_orthogonal(&mut rng, 50);
+        let x: Vec<f64> = (0..50).map(|_| dist::gaussian(&mut rng)).collect();
+        let mut y = vec![0.0; 50];
+        q.rotate_row(&x, &mut y);
+        let nx: f64 = x.iter().map(|v| v * v).sum();
+        let ny: f64 = y.iter().map(|v| v * v).sum();
+        assert!((nx - ny).abs() / nx < 1e-12);
+    }
+
+    #[test]
+    fn rotate_row_matches_matmul() {
+        let mut rng = SplitMix64::new(3);
+        let m = Matrix::gaussian(&mut rng, 6);
+        let x: Vec<f64> = (0..6).map(|i| i as f64 + 1.0).collect();
+        let mut y = vec![0.0; 6];
+        m.rotate_row(&x, &mut y);
+        for c in 0..6 {
+            let direct: f64 = (0..6).map(|r| x[r] * m.get(r, c)).sum();
+            assert!((y[c] - direct).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn qr_is_deterministic() {
+        let q1 = random_orthogonal(&mut SplitMix64::new(7), 10);
+        let q2 = random_orthogonal(&mut SplitMix64::new(7), 10);
+        assert_eq!(q1, q2);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = SplitMix64::new(4);
+        let m = Matrix::gaussian(&mut rng, 8);
+        assert_eq!(m.transpose().transpose(), m);
+    }
+}

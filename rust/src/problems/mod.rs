@@ -1,0 +1,45 @@
+//! Optimization problems: the paper's two workloads (trap, CEC2010 F15)
+//! plus the classical suite used for tests and extension benches.
+
+pub mod bitstring;
+pub mod extended;
+pub mod f15;
+pub mod linalg;
+pub mod packed;
+pub mod real;
+
+pub use bitstring::{Deceptive3, OneMax, RoyalRoad, Trap};
+pub use extended::{Hiff, Mmdp, PPeaks};
+pub use f15::F15Instance;
+pub use packed::PackedTrapEvaluator;
+pub use real::{Rastrigin, Sphere};
+
+/// A maximization problem over fixed-length bitstrings.
+pub trait BitProblem: Sync {
+    fn n_bits(&self) -> usize;
+    fn eval(&self, bits: &[u8]) -> f64;
+    /// The known global optimum's fitness.
+    fn optimum(&self) -> f64;
+    fn is_solution(&self, fitness: f64) -> bool {
+        fitness >= self.optimum() - 1e-9
+    }
+}
+
+/// A minimization problem over real vectors (the CEC convention).
+pub trait RealProblem: Sync {
+    fn dim(&self) -> usize;
+    fn eval(&self, x: &[f64]) -> f64;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn is_solution_tolerance() {
+        let p = OneMax::new(8);
+        assert!(p.is_solution(8.0));
+        assert!(p.is_solution(8.0 - 1e-12));
+        assert!(!p.is_solution(7.5));
+    }
+}

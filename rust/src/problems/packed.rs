@@ -1,0 +1,200 @@
+//! Packed-u64 trap evaluation: the optimized native fitness path.
+//!
+//! The byte-per-bit [`crate::ea::BitString`] layout is ideal for the GA's
+//! per-bit operators, but fitness evaluation only needs *unitation per
+//! 4-bit block* — which a u64 word computes for 16 blocks at once with
+//! SWAR nibble sums (no lookup tables, no per-bit branches). Used by the
+//! perf pass (§Perf) to push the native engine's eval throughput; the
+//! packing cost is amortized by evaluating whole populations.
+
+use super::bitstring::Trap;
+use super::BitProblem;
+
+/// Pack a {0,1}-byte slice into u64 words, 1 bit per locus (LSB-first).
+pub fn pack_bits(bits: &[u8]) -> Vec<u64> {
+    let mut words = vec![0u64; bits.len().div_ceil(64)];
+    for (i, &b) in bits.iter().enumerate() {
+        debug_assert!(b <= 1);
+        words[i / 64] |= (b as u64) << (i % 64);
+    }
+    words
+}
+
+/// Unpack back to bytes (for tests / round trips).
+pub fn unpack_bits(words: &[u64], n: usize) -> Vec<u8> {
+    (0..n).map(|i| ((words[i / 64] >> (i % 64)) & 1) as u8).collect()
+}
+
+/// SWAR: per-nibble ones-count of a word — 16 values in 0..=4, packed as
+/// nibbles of the result.
+#[inline]
+fn nibble_unitation(w: u64) -> u64 {
+    // Classic pairwise reduction, stopping at nibble granularity.
+    let pairs = (w & 0x5555_5555_5555_5555) + ((w >> 1) & 0x5555_5555_5555_5555);
+    (pairs & 0x3333_3333_3333_3333) + ((pairs >> 2) & 0x3333_3333_3333_3333)
+}
+
+/// Trap evaluation over a packed chromosome. Only valid for `l == 4`
+/// (the paper's parameterization): each nibble is exactly one trap block.
+pub fn trap_eval_packed(trap: &Trap, words: &[u64], n_bits: usize) -> f64 {
+    assert_eq!(trap.l, 4, "packed path requires l=4 blocks");
+    debug_assert_eq!(n_bits % 4, 0);
+    // Precompute the 5 block values once (u = 0..=4).
+    let table = [
+        trap_block_value(trap, 0),
+        trap_block_value(trap, 1),
+        trap_block_value(trap, 2),
+        trap_block_value(trap, 3),
+        trap_block_value(trap, 4),
+    ];
+    let mut total = 0.0;
+    let full_blocks = n_bits / 4;
+    let mut seen = 0usize;
+    for &w in words {
+        let mut u = nibble_unitation(w);
+        let blocks_here = ((n_bits - seen * 16 * 4).min(64)) / 4;
+        for _ in 0..blocks_here {
+            total += table[(u & 0xF) as usize];
+            u >>= 4;
+        }
+        seen += 1;
+        if seen * 16 >= full_blocks {
+            break;
+        }
+    }
+    total
+}
+
+fn trap_block_value(trap: &Trap, ones: usize) -> f64 {
+    if ones <= trap.z {
+        trap.a * (trap.z - ones) as f64 / trap.z as f64
+    } else {
+        trap.b * (ones - trap.z) as f64 / (trap.l - trap.z) as f64
+    }
+}
+
+/// A packed population evaluator reused across calls (scratch-free).
+pub struct PackedTrapEvaluator {
+    trap: Trap,
+    n_bits: usize,
+    words_per_row: usize,
+    packed: Vec<u64>,
+}
+
+impl PackedTrapEvaluator {
+    pub fn new(trap: Trap) -> PackedTrapEvaluator {
+        let n_bits = trap.n_bits();
+        PackedTrapEvaluator {
+            trap,
+            n_bits,
+            words_per_row: n_bits.div_ceil(64),
+            packed: Vec::new(),
+        }
+    }
+
+    /// Evaluate a flat f32 {0,1} population (the engine batch layout).
+    pub fn eval_batch_f32(&mut self, pop: &[f32], pop_size: usize) -> Vec<f32> {
+        let n = self.n_bits;
+        assert_eq!(pop.len(), pop_size * n);
+        self.packed.clear();
+        self.packed.resize(pop_size * self.words_per_row, 0);
+        for row in 0..pop_size {
+            let base = row * self.words_per_row;
+            let src = &pop[row * n..(row + 1) * n];
+            for (i, &v) in src.iter().enumerate() {
+                if v >= 0.5 {
+                    self.packed[base + i / 64] |= 1u64 << (i % 64);
+                }
+            }
+        }
+        (0..pop_size)
+            .map(|row| {
+                let base = row * self.words_per_row;
+                trap_eval_packed(
+                    &self.trap,
+                    &self.packed[base..base + self.words_per_row],
+                    n,
+                ) as f32
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ea::BitString;
+    use crate::rng::SplitMix64;
+    use crate::testkit::{forall, PropConfig};
+
+    #[test]
+    fn pack_round_trip() {
+        forall(
+            &PropConfig::cases(50),
+            |rng| {
+                let n = 1 + (rng.next_u64() % 200) as usize;
+                BitString::random(rng, n)
+            },
+            |b| unpack_bits(&pack_bits(b.bits()), b.len()) == b.bits(),
+        );
+    }
+
+    #[test]
+    fn nibble_unitation_exhaustive_nibbles() {
+        for v in 0u64..16 {
+            let got = nibble_unitation(v) & 0xF;
+            assert_eq!(got, v.count_ones() as u64, "nibble {v:x}");
+        }
+        // A full word: every nibble independent.
+        let w = 0xF731_0F0F_AAAA_5555u64;
+        let u = nibble_unitation(w);
+        for i in 0..16 {
+            let nib = (w >> (i * 4)) & 0xF;
+            assert_eq!((u >> (i * 4)) & 0xF, nib.count_ones() as u64);
+        }
+    }
+
+    #[test]
+    fn packed_matches_reference_eval() {
+        let trap = Trap::paper();
+        forall(
+            &PropConfig::cases(100),
+            |rng| BitString::random(rng, 160),
+            |b| {
+                let packed = pack_bits(b.bits());
+                let fast = trap_eval_packed(&trap, &packed, 160);
+                let slow = trap.eval(b.bits());
+                (fast - slow).abs() < 1e-9
+            },
+        );
+    }
+
+    #[test]
+    fn packed_extremes() {
+        let trap = Trap::paper();
+        assert_eq!(trap_eval_packed(&trap, &pack_bits(&[1u8; 160]), 160), 80.0);
+        assert_eq!(trap_eval_packed(&trap, &pack_bits(&[0u8; 160]), 160), 40.0);
+    }
+
+    #[test]
+    fn batch_evaluator_matches_scalar() {
+        let mut eval = PackedTrapEvaluator::new(Trap::paper());
+        let trap = Trap::paper();
+        let mut rng = SplitMix64::new(3);
+        let pop_size = 33;
+        let mut flat = Vec::new();
+        let mut rows = Vec::new();
+        for _ in 0..pop_size {
+            let b = BitString::random(&mut rng, 160);
+            flat.extend(b.to_f32());
+            rows.push(b);
+        }
+        let got = eval.eval_batch_f32(&flat, pop_size);
+        for (row, &g) in rows.iter().zip(&got) {
+            assert_eq!(g, trap.eval(row.bits()) as f32);
+        }
+        // Reuse across calls (scratch reset) stays correct.
+        let again = eval.eval_batch_f32(&flat, pop_size);
+        assert_eq!(got, again);
+    }
+}

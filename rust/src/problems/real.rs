@@ -1,0 +1,96 @@
+//! Classical real-valued minimization functions (CEC conventions).
+
+use super::RealProblem;
+
+/// Sphere: sum(x_i^2). The sanity-check function.
+#[derive(Debug, Clone)]
+pub struct Sphere {
+    pub dim: usize,
+}
+
+impl Sphere {
+    pub fn new(dim: usize) -> Sphere {
+        Sphere { dim }
+    }
+}
+
+impl RealProblem for Sphere {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn eval(&self, x: &[f64]) -> f64 {
+        debug_assert_eq!(x.len(), self.dim);
+        x.iter().map(|v| v * v).sum()
+    }
+}
+
+/// Separable Rastrigin (paper eq. 1):
+/// `sum(x_i^2 - 10 cos(2 pi x_i) + 10)`.
+#[derive(Debug, Clone)]
+pub struct Rastrigin {
+    pub dim: usize,
+}
+
+impl Rastrigin {
+    pub fn new(dim: usize) -> Rastrigin {
+        Rastrigin { dim }
+    }
+
+    /// The scalar kernel shared with F15's per-group reduction.
+    #[inline]
+    pub fn term(v: f64) -> f64 {
+        v * v - 10.0 * (2.0 * std::f64::consts::PI * v).cos() + 10.0
+    }
+}
+
+impl RealProblem for Rastrigin {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn eval(&self, x: &[f64]) -> f64 {
+        debug_assert_eq!(x.len(), self.dim);
+        x.iter().map(|&v| Rastrigin::term(v)).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sphere_at_zero() {
+        let p = Sphere::new(10);
+        assert_eq!(p.eval(&[0.0; 10]), 0.0);
+        assert_eq!(p.eval(&[1.0; 10]), 10.0);
+    }
+
+    #[test]
+    fn rastrigin_known_values() {
+        let p = Rastrigin::new(3);
+        assert_eq!(p.eval(&[0.0; 3]), 0.0); // global minimum
+        // At integer points cos(2 pi v)=1, so each term is v^2.
+        assert!((p.eval(&[1.0, 1.0, 1.0]) - 3.0).abs() < 1e-9);
+        assert!((p.eval(&[2.0, 0.0, 0.0]) - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rastrigin_nonnegative() {
+        let p = Rastrigin::new(2);
+        for i in -20..20 {
+            for j in -20..20 {
+                let v = p.eval(&[i as f64 / 4.0, j as f64 / 4.0]);
+                assert!(v >= -1e-9, "negative at ({i},{j}): {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn rastrigin_multimodality() {
+        // Local minima near integers: value at 0.5 offsets is higher.
+        let p = Rastrigin::new(1);
+        assert!(p.eval(&[0.5]) > p.eval(&[0.0]));
+        assert!(p.eval(&[0.5]) > p.eval(&[1.0]));
+    }
+}

@@ -1,0 +1,248 @@
+//! Distributions derived from [`Rng64`]: unbiased integer ranges, Gaussian,
+//! exponential, Poisson, lognormal, Bernoulli, and shuffling.
+//!
+//! The volunteer simulator ([`crate::sim`]) uses Poisson/exponential for
+//! arrival processes and lognormal for session lengths; the EA uses the
+//! integer/Bernoulli/shuffle primitives.
+
+use super::Rng64;
+
+/// Uniform integer in `[0, n)` without modulo bias (Lemire's method).
+pub fn range_u64<R: Rng64 + ?Sized>(rng: &mut R, n: u64) -> u64 {
+    assert!(n > 0, "range_u64 over empty range");
+    let mut x = rng.next_u64();
+    let mut m = (x as u128) * (n as u128);
+    let mut lo = m as u64;
+    if lo < n {
+        let threshold = n.wrapping_neg() % n;
+        while lo < threshold {
+            x = rng.next_u64();
+            m = (x as u128) * (n as u128);
+            lo = m as u64;
+        }
+    }
+    (m >> 64) as u64
+}
+
+/// Uniform usize in `[lo, hi)`.
+pub fn range<R: Rng64 + ?Sized>(rng: &mut R, lo: usize, hi: usize) -> usize {
+    assert!(lo < hi, "range [{lo},{hi}) is empty");
+    lo + range_u64(rng, (hi - lo) as u64) as usize
+}
+
+/// Uniform f64 in `[lo, hi)`.
+pub fn uniform_in<R: Rng64 + ?Sized>(rng: &mut R, lo: f64, hi: f64) -> f64 {
+    lo + rng.uniform() * (hi - lo)
+}
+
+/// Bernoulli draw with probability `p`.
+pub fn bernoulli<R: Rng64 + ?Sized>(rng: &mut R, p: f64) -> bool {
+    rng.uniform() < p
+}
+
+/// Standard normal via Box–Muller (polar form, rejection-free branch kept
+/// simple; the EA draws these rarely compared to uniforms).
+pub fn gaussian<R: Rng64 + ?Sized>(rng: &mut R) -> f64 {
+    // Avoid u == 0 so ln(u) is finite.
+    let u = loop {
+        let u = rng.uniform();
+        if u > 0.0 {
+            break u;
+        }
+    };
+    let v = rng.uniform();
+    (-2.0 * u.ln()).sqrt() * (2.0 * std::f64::consts::PI * v).cos()
+}
+
+/// Normal with mean/stddev.
+pub fn normal<R: Rng64 + ?Sized>(rng: &mut R, mean: f64, std: f64) -> f64 {
+    mean + std * gaussian(rng)
+}
+
+/// Exponential with rate `lambda` (mean 1/lambda): inter-arrival times of a
+/// Poisson process.
+pub fn exponential<R: Rng64 + ?Sized>(rng: &mut R, lambda: f64) -> f64 {
+    assert!(lambda > 0.0);
+    let u = loop {
+        let u = rng.uniform();
+        if u > 0.0 {
+            break u;
+        }
+    };
+    -u.ln() / lambda
+}
+
+/// Poisson-distributed count with mean `lambda`. Knuth's product method for
+/// small lambda, normal approximation above 30 (adequate for arrival
+/// batching in the simulator).
+pub fn poisson<R: Rng64 + ?Sized>(rng: &mut R, lambda: f64) -> u64 {
+    assert!(lambda >= 0.0);
+    if lambda == 0.0 {
+        return 0;
+    }
+    if lambda > 30.0 {
+        let x = normal(rng, lambda, lambda.sqrt());
+        return x.max(0.0).round() as u64;
+    }
+    let limit = (-lambda).exp();
+    let mut prod = rng.uniform();
+    let mut k = 0u64;
+    while prod > limit {
+        prod *= rng.uniform();
+        k += 1;
+    }
+    k
+}
+
+/// Lognormal: `exp(normal(mu, sigma))` — heavy-tailed session durations.
+pub fn lognormal<R: Rng64 + ?Sized>(rng: &mut R, mu: f64, sigma: f64) -> f64 {
+    normal(rng, mu, sigma).exp()
+}
+
+/// In-place Fisher–Yates shuffle.
+pub fn shuffle<R: Rng64 + ?Sized, T>(rng: &mut R, xs: &mut [T]) {
+    for i in (1..xs.len()).rev() {
+        let j = range_u64(rng, (i + 1) as u64) as usize;
+        xs.swap(i, j);
+    }
+}
+
+/// A uniformly random permutation of `0..n`.
+pub fn permutation<R: Rng64 + ?Sized>(rng: &mut R, n: usize) -> Vec<u32> {
+    let mut p: Vec<u32> = (0..n as u32).collect();
+    shuffle(rng, &mut p);
+    p
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::SplitMix64;
+
+    fn rng() -> SplitMix64 {
+        SplitMix64::new(0xDEADBEEF)
+    }
+
+    #[test]
+    fn range_is_unbiased_enough() {
+        let mut r = rng();
+        let n = 7u64;
+        let mut counts = [0u64; 7];
+        let draws = 70_000;
+        for _ in 0..draws {
+            counts[range_u64(&mut r, n) as usize] += 1;
+        }
+        let expect = draws as f64 / n as f64;
+        for (i, &c) in counts.iter().enumerate() {
+            let rel = (c as f64 - expect).abs() / expect;
+            assert!(rel < 0.05, "bucket {i}: {c} vs {expect}");
+        }
+    }
+
+    #[test]
+    fn range_bounds() {
+        let mut r = rng();
+        for _ in 0..1000 {
+            let x = range(&mut r, 10, 20);
+            assert!((10..20).contains(&x));
+        }
+        assert_eq!(range_u64(&mut r, 1), 0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn empty_range_panics() {
+        let mut r = rng();
+        let _ = range(&mut r, 5, 5);
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut r = rng();
+        let n = 200_000;
+        let xs: Vec<f64> = (0..n).map(|_| gaussian(&mut r)).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+            / (n - 1) as f64;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.03, "var={var}");
+    }
+
+    #[test]
+    fn exponential_mean() {
+        let mut r = rng();
+        let lambda = 2.5;
+        let n = 100_000;
+        let mean: f64 =
+            (0..n).map(|_| exponential(&mut r, lambda)).sum::<f64>() / n as f64;
+        assert!((mean - 1.0 / lambda).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn poisson_small_lambda_mean() {
+        let mut r = rng();
+        let lambda = 3.0;
+        let n = 100_000;
+        let mean: f64 =
+            (0..n).map(|_| poisson(&mut r, lambda) as f64).sum::<f64>() / n as f64;
+        assert!((mean - lambda).abs() < 0.05, "mean={mean}");
+    }
+
+    #[test]
+    fn poisson_large_lambda_mean() {
+        let mut r = rng();
+        let lambda = 100.0;
+        let n = 20_000;
+        let mean: f64 =
+            (0..n).map(|_| poisson(&mut r, lambda) as f64).sum::<f64>() / n as f64;
+        assert!((mean - lambda).abs() < 1.0, "mean={mean}");
+    }
+
+    #[test]
+    fn poisson_zero() {
+        let mut r = rng();
+        assert_eq!(poisson(&mut r, 0.0), 0);
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = rng();
+        let mut xs: Vec<u32> = (0..100).collect();
+        shuffle(&mut r, &mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<u32>>());
+        assert_ne!(xs, (0..100).collect::<Vec<u32>>()); // astronomically unlikely
+    }
+
+    #[test]
+    fn permutation_uniformity_spot_check() {
+        // Position of element 0 should be uniform across 0..5.
+        let mut r = rng();
+        let mut counts = [0u64; 5];
+        for _ in 0..50_000 {
+            let p = permutation(&mut r, 5);
+            let pos = p.iter().position(|&x| x == 0).unwrap();
+            counts[pos] += 1;
+        }
+        for &c in &counts {
+            let rel = (c as f64 - 10_000.0).abs() / 10_000.0;
+            assert!(rel < 0.06);
+        }
+    }
+
+    #[test]
+    fn bernoulli_extremes() {
+        let mut r = rng();
+        assert!(!bernoulli(&mut r, 0.0));
+        assert!(bernoulli(&mut r, 1.0));
+    }
+
+    #[test]
+    fn lognormal_positive() {
+        let mut r = rng();
+        for _ in 0..1000 {
+            assert!(lognormal(&mut r, 0.0, 1.0) > 0.0);
+        }
+    }
+}

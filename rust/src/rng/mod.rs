@@ -1,0 +1,92 @@
+//! Deterministic random number generation.
+//!
+//! The paper makes a point of using `random-js` (a JavaScript Mersenne
+//! Twister) because `Math.random()` differs between VMs and is
+//! non-deterministic; reproducible randomness is a framework requirement.
+//! We mirror that with a bit-exact [`Mt19937`] (checked against the
+//! canonical test vectors) plus two fast modern generators used where
+//! MT's state size is overkill: [`SplitMix64`] (seeding, simulation) and
+//! [`Xoshiro256pp`] (the EA hot path).
+//!
+//! Everything is behind the [`Rng64`] trait so components can be
+//! parameterized by generator; [`dist`] provides the derived distributions
+//! (uniform ranges without modulo bias, Gaussian, Poisson, exponential,
+//! lognormal, shuffling).
+
+pub mod dist;
+pub mod mt19937;
+pub mod splitmix;
+pub mod xoshiro;
+
+pub use dist::*;
+pub use mt19937::Mt19937;
+pub use splitmix::SplitMix64;
+pub use xoshiro::Xoshiro256pp;
+
+/// A 64-bit pseudorandom generator. All derived draws (`dist`) are defined
+/// in terms of `next_u64`, so two generators with identical output streams
+/// produce identical higher-level behavior.
+pub trait Rng64 {
+    fn next_u64(&mut self) -> u64;
+
+    fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform in [0, 1) with 53 bits of precision.
+    fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+}
+
+impl<T: Rng64 + ?Sized> Rng64 for &mut T {
+    fn next_u64(&mut self) -> u64 {
+        (**self).next_u64()
+    }
+}
+
+/// Derive a stream of distinct seeds from one master seed (for per-island /
+/// per-worker generators). Uses SplitMix64, per its designed use.
+pub fn seed_stream(master: u64) -> impl Iterator<Item = u64> {
+    let mut sm = SplitMix64::new(master);
+    std::iter::from_fn(move || Some(sm.next_u64()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_is_in_unit_interval() {
+        let mut rng = SplitMix64::new(7);
+        for _ in 0..10_000 {
+            let u = rng.uniform();
+            assert!((0.0..1.0).contains(&u));
+        }
+    }
+
+    #[test]
+    fn uniform_mean_is_half() {
+        let mut rng = Xoshiro256pp::new(3);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| rng.uniform()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn seed_stream_distinct() {
+        let seeds: Vec<u64> = seed_stream(1).take(100).collect();
+        let mut sorted = seeds.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), seeds.len());
+    }
+
+    #[test]
+    fn trait_object_usable() {
+        let mut rng = SplitMix64::new(9);
+        let dynrng: &mut dyn Rng64 = &mut rng;
+        let _ = dynrng.next_u64();
+        let _ = dynrng.uniform();
+    }
+}

@@ -1,0 +1,120 @@
+//! xoshiro256++ 1.0 (Blackman & Vigna 2019) — the EA hot-path generator:
+//! 4x64-bit state, excellent statistical quality, ~1ns per draw.
+
+use super::{Rng64, SplitMix64};
+
+#[derive(Debug, Clone)]
+pub struct Xoshiro256pp {
+    s: [u64; 4],
+}
+
+impl Xoshiro256pp {
+    /// Seed via SplitMix64 expansion, per the authors' recommendation.
+    pub fn new(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        let mut s = [0u64; 4];
+        for slot in &mut s {
+            *slot = sm.next_u64();
+        }
+        // All-zero state is the one forbidden fixed point; SplitMix64 can
+        // only produce it with negligible probability, but be exact.
+        if s == [0, 0, 0, 0] {
+            s[0] = 0x9e37_79b9_7f4a_7c15;
+        }
+        Xoshiro256pp { s }
+    }
+
+    pub fn from_state(s: [u64; 4]) -> Self {
+        assert!(s != [0, 0, 0, 0], "xoshiro state must be nonzero");
+        Xoshiro256pp { s }
+    }
+
+    /// The `jump()` function: advances 2^128 draws, for partitioning one
+    /// stream into non-overlapping parallel substreams (one per worker).
+    pub fn jump(&mut self) {
+        const JUMP: [u64; 4] = [
+            0x180ec6d33cfd0aba,
+            0xd5a61266f0c9392c,
+            0xa9582618e03fc9aa,
+            0x39abdc4529b1661c,
+        ];
+        let mut acc = [0u64; 4];
+        for j in JUMP {
+            for b in 0..64 {
+                if (j >> b) & 1 != 0 {
+                    for (a, s) in acc.iter_mut().zip(self.s.iter()) {
+                        *a ^= s;
+                    }
+                }
+                self.next_u64();
+            }
+        }
+        self.s = acc;
+    }
+}
+
+impl Rng64 for Xoshiro256pp {
+    fn next_u64(&mut self) -> u64 {
+        let result = self.s[0]
+            .wrapping_add(self.s[3])
+            .rotate_left(23)
+            .wrapping_add(self.s[0]);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Reference vectors computed from the authors' xoshiro256plusplus.c
+    /// with state {1, 2, 3, 4}.
+    #[test]
+    fn known_state_vectors() {
+        let mut rng = Xoshiro256pp::from_state([1, 2, 3, 4]);
+        let expected = [
+            41943041u64,
+            58720359,
+            3588806011781223,
+            3591011842654386,
+            9228616714210784205,
+        ];
+        for &e in &expected {
+            assert_eq!(rng.next_u64(), e);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_state_rejected() {
+        let _ = Xoshiro256pp::from_state([0, 0, 0, 0]);
+    }
+
+    #[test]
+    fn jump_produces_disjoint_streams() {
+        let mut a = Xoshiro256pp::new(7);
+        let mut b = a.clone();
+        b.jump();
+        let xs: Vec<u64> = (0..100).map(|_| a.next_u64()).collect();
+        let ys: Vec<u64> = (0..100).map(|_| b.next_u64()).collect();
+        assert_ne!(xs, ys);
+        // no element-wise collisions either
+        assert!(xs.iter().zip(&ys).all(|(x, y)| x != y));
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut a = Xoshiro256pp::new(55);
+        let mut b = Xoshiro256pp::new(55);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+}

@@ -1,0 +1,274 @@
+//! The artifact manifest written by `python/compile/aot.py`: names, file
+//! paths, and input/output signatures, so literal marshalling is driven by
+//! data instead of hardcoded shapes.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::json::{self, Json};
+
+/// Element dtype of an artifact tensor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+    U32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Option<DType> {
+        Some(match s {
+            "float32" => DType::F32,
+            "int32" => DType::I32,
+            "uint32" => DType::U32,
+            _ => return None,
+        })
+    }
+}
+
+/// One tensor signature.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSig {
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSig {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+/// One artifact entry.
+#[derive(Debug, Clone)]
+pub struct ArtifactInfo {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSig>,
+    pub outputs: Vec<TensorSig>,
+    pub meta: Json,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub artifacts: BTreeMap<String, ArtifactInfo>,
+    pub generations_per_epoch: u64,
+    pub trap_bits: usize,
+    pub f15_dim: usize,
+    pub f15_group: usize,
+}
+
+#[derive(Debug)]
+pub struct ManifestError(pub String);
+
+impl std::fmt::Display for ManifestError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "manifest error: {}", self.0)
+    }
+}
+
+impl std::error::Error for ManifestError {}
+
+fn err(msg: impl Into<String>) -> ManifestError {
+    ManifestError(msg.into())
+}
+
+fn parse_sig(v: &Json) -> Result<TensorSig, ManifestError> {
+    let dtype = v
+        .get_str("dtype")
+        .and_then(DType::parse)
+        .ok_or_else(|| err("bad dtype"))?;
+    let shape = v
+        .get("shape")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| err("bad shape"))?
+        .iter()
+        .map(|d| d.as_u64().map(|x| x as usize).ok_or_else(|| err("bad dim")))
+        .collect::<Result<Vec<_>, _>>()?;
+    Ok(TensorSig { dtype, shape })
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest, ManifestError> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| err(format!("read {}: {e}", path.display())))?;
+        Manifest::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: &Path) -> Result<Manifest, ManifestError> {
+        let doc = json::parse(text).map_err(|e| err(e.to_string()))?;
+        let arts = doc
+            .get("artifacts")
+            .ok_or_else(|| err("missing artifacts"))?;
+        let mut artifacts = BTreeMap::new();
+        if let Json::Obj(members) = arts {
+            for (name, entry) in members {
+                let file = entry
+                    .get_str("file")
+                    .ok_or_else(|| err(format!("{name}: missing file")))?;
+                let inputs = entry
+                    .get("inputs")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| err(format!("{name}: missing inputs")))?
+                    .iter()
+                    .map(parse_sig)
+                    .collect::<Result<Vec<_>, _>>()?;
+                let outputs = entry
+                    .get("outputs")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| err(format!("{name}: missing outputs")))?
+                    .iter()
+                    .map(parse_sig)
+                    .collect::<Result<Vec<_>, _>>()?;
+                let meta =
+                    entry.get("meta").cloned().unwrap_or(Json::Obj(vec![]));
+                artifacts.insert(
+                    name.clone(),
+                    ArtifactInfo {
+                        name: name.clone(),
+                        file: dir.join(file),
+                        inputs,
+                        outputs,
+                        meta,
+                    },
+                );
+            }
+        } else {
+            return Err(err("artifacts is not an object"));
+        }
+        Ok(Manifest {
+            artifacts,
+            generations_per_epoch: doc
+                .get_u64("generations_per_epoch")
+                .unwrap_or(100),
+            trap_bits: doc.get_u64("trap_bits").unwrap_or(160) as usize,
+            f15_dim: doc
+                .get("f15")
+                .and_then(|f| f.get_u64("dim"))
+                .unwrap_or(1000) as usize,
+            f15_group: doc
+                .get("f15")
+                .and_then(|f| f.get_u64("group"))
+                .unwrap_or(50) as usize,
+        })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactInfo, ManifestError> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| err(format!("unknown artifact {name}")))
+    }
+
+    /// Population sizes that have an `ea_epoch_p*` artifact, ascending.
+    pub fn epoch_pop_sizes(&self) -> Vec<usize> {
+        let mut sizes: Vec<usize> = self
+            .artifacts
+            .keys()
+            .filter_map(|k| k.strip_prefix("ea_epoch_p"))
+            .filter_map(|s| s.parse().ok())
+            .collect();
+        sizes.sort_unstable();
+        sizes.dedup();
+        sizes
+    }
+
+    /// Pick the nearest available epoch population size.
+    pub fn nearest_epoch_pop(&self, want: usize) -> Option<usize> {
+        self.epoch_pop_sizes()
+            .into_iter()
+            .min_by_key(|&p| p.abs_diff(want))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "artifacts": {
+        "trap_eval_p128": {
+          "file": "trap_eval_p128.hlo.txt",
+          "inputs": [{"dtype": "float32", "shape": [128, 160]}],
+          "outputs": [{"dtype": "float32", "shape": [128]}],
+          "meta": {"kind": "trap_eval", "pop": 128}
+        },
+        "ea_epoch_p512": {
+          "file": "ea_epoch_p512.hlo.txt",
+          "inputs": [
+            {"dtype": "float32", "shape": [512, 160]},
+            {"dtype": "uint32", "shape": [2]},
+            {"dtype": "float32", "shape": [160]},
+            {"dtype": "int32", "shape": []},
+            {"dtype": "float32", "shape": []}
+          ],
+          "outputs": [
+            {"dtype": "float32", "shape": [512, 160]},
+            {"dtype": "float32", "shape": [512]},
+            {"dtype": "int32", "shape": []},
+            {"dtype": "int32", "shape": []}
+          ],
+          "meta": {"kind": "ea_epoch", "pop": 512}
+        },
+        "ea_epoch_p128": {
+          "file": "ea_epoch_p128.hlo.txt",
+          "inputs": [], "outputs": [], "meta": {}
+        }
+      },
+      "generations_per_epoch": 100,
+      "trap_bits": 160,
+      "f15": {"dim": 1000, "group": 50, "groups": 20}
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.generations_per_epoch, 100);
+        assert_eq!(m.trap_bits, 160);
+        assert_eq!(m.f15_dim, 1000);
+        let art = m.get("trap_eval_p128").unwrap();
+        assert_eq!(art.inputs[0].shape, vec![128, 160]);
+        assert_eq!(art.inputs[0].dtype, DType::F32);
+        assert_eq!(art.file, Path::new("/tmp/a/trap_eval_p128.hlo.txt"));
+        assert_eq!(art.meta.get_u64("pop"), Some(128));
+    }
+
+    #[test]
+    fn epoch_sizes_sorted() {
+        let m = Manifest::parse(SAMPLE, Path::new("/x")).unwrap();
+        assert_eq!(m.epoch_pop_sizes(), vec![128, 512]);
+        assert_eq!(m.nearest_epoch_pop(100), Some(128));
+        assert_eq!(m.nearest_epoch_pop(400), Some(512));
+        assert_eq!(m.nearest_epoch_pop(300), Some(128)); // ties -> lower
+    }
+
+    #[test]
+    fn scalar_shapes() {
+        let m = Manifest::parse(SAMPLE, Path::new("/x")).unwrap();
+        let art = m.get("ea_epoch_p512").unwrap();
+        assert_eq!(art.inputs[3].shape, Vec::<usize>::new());
+        assert_eq!(art.inputs[3].elements(), 1);
+        assert_eq!(art.outputs.len(), 4);
+    }
+
+    #[test]
+    fn unknown_artifact_errors() {
+        let m = Manifest::parse(SAMPLE, Path::new("/x")).unwrap();
+        assert!(m.get("nope").is_err());
+    }
+
+    #[test]
+    fn real_repo_manifest_loads() {
+        if let Some(dir) = crate::runtime::find_artifacts_dir() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.artifacts.len() >= 20);
+            assert!(m.get("ea_epoch_p512").is_ok());
+            assert!(m.get("f15_eval_b16").is_ok());
+            // every referenced file exists
+            for art in m.artifacts.values() {
+                assert!(art.file.exists(), "{:?}", art.file);
+            }
+        }
+    }
+}

@@ -1,0 +1,55 @@
+//! Execution engines for the islands' compute hot path.
+//!
+//! Two engines implement the same algorithms:
+//!
+//! * [`native`] — pure Rust (the paper's "compiled language" baseline,
+//!   its Java analog).
+//! * [`xla`] — AOT-compiled JAX/Pallas artifacts executed through the PJRT
+//!   CPU client (the paper's "portable managed runtime" — its JavaScript
+//!   analog). Python is involved only at build time (`make artifacts`).
+//!
+//! The Figure 4 reproduction (E2) times both on the identical F15
+//! instance; the volunteer clients can run their whole 100-generation
+//! migration epoch as ONE artifact execution (`ea_epoch_p*`).
+
+pub mod manifest;
+pub mod native;
+pub mod xla;
+
+pub use manifest::{ArtifactInfo, Manifest};
+pub use native::NativeEngine;
+pub use xla::{EpochResult, XlaEngine};
+
+/// Default artifacts location relative to the repo root.
+pub const ARTIFACTS_DIR: &str = "artifacts";
+
+/// Locate the artifacts directory: explicit env override, else walk up
+/// from the current dir looking for `artifacts/manifest.json`.
+pub fn find_artifacts_dir() -> Option<std::path::PathBuf> {
+    if let Ok(dir) = std::env::var("NODIO_ARTIFACTS") {
+        let p = std::path::PathBuf::from(dir);
+        if p.join("manifest.json").exists() {
+            return Some(p);
+        }
+    }
+    let mut cur = std::env::current_dir().ok()?;
+    loop {
+        let candidate = cur.join(ARTIFACTS_DIR);
+        if candidate.join("manifest.json").exists() {
+            return Some(candidate);
+        }
+        if !cur.pop() {
+            return None;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn finds_artifacts_from_repo() {
+        // The repo's artifacts are built before cargo test (Makefile).
+        let dir = super::find_artifacts_dir();
+        assert!(dir.is_some(), "artifacts/manifest.json not found — run `make artifacts`");
+    }
+}

@@ -1,0 +1,478 @@
+//! The XLA/PJRT engine: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py`, compiles them once on the PJRT CPU client, and
+//! executes them from the Rust hot path. Python is never involved at
+//! runtime.
+//!
+//! Interchange is HLO *text*: jax >= 0.5 emits HloModuleProtos with 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see DESIGN.md and /opt/xla-example/README.md).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::manifest::{DType, Manifest};
+use crate::ea::genome::BitString;
+use crate::problems::F15Instance;
+use crate::rng::{Rng64, SplitMix64};
+
+/// Mutable island state for the XLA epoch path: the population lives as a
+/// flat f32 matrix between artifact executions.
+#[derive(Debug, Clone)]
+pub struct EpochState {
+    pub pop: Vec<f32>,
+    pub pop_size: usize,
+    pub bits: usize,
+    pub target: f32,
+    key_rng: SplitMix64,
+}
+
+impl EpochState {
+    /// Random initial population, like `Island::new`.
+    pub fn random(pop_size: usize, bits: usize, target: f32, seed: u64) -> EpochState {
+        let mut key_rng = SplitMix64::new(seed);
+        let pop = (0..pop_size * bits)
+            .map(|_| (key_rng.next_u64() & 1) as f32)
+            .collect();
+        EpochState { pop, pop_size, bits, target, key_rng }
+    }
+
+    fn next_key(&mut self) -> [u32; 2] {
+        let k = self.key_rng.next_u64();
+        [(k >> 32) as u32, k as u32]
+    }
+
+    pub fn chromosome(&self, index: usize) -> BitString {
+        BitString::from_f32(&self.pop[index * self.bits..(index + 1) * self.bits])
+    }
+}
+
+/// Result of one `ea_epoch` artifact execution.
+#[derive(Debug, Clone)]
+pub struct EpochResult {
+    pub fitness: Vec<f32>,
+    pub best_idx: usize,
+    pub gens_done: u64,
+    pub best_fitness: f32,
+    pub solved: bool,
+}
+
+/// Artifact-executing engine. One instance per thread (PJRT wrapper types
+/// are not `Send`); compilation is cached per artifact name.
+///
+/// The F15 instance tensors (shift, permutation, 20x50x50 rotations —
+/// ~208 KiB) are uploaded to the device ONCE per instance and reused via
+/// `execute_b` (perf pass, EXPERIMENTS.md §Perf): re-marshalling them per
+/// call dominated the Figure 4 small-batch timings.
+pub struct XlaEngine {
+    client: ::xla::PjRtClient,
+    manifest: Manifest,
+    dir: PathBuf,
+    cache: HashMap<String, ::xla::PjRtLoadedExecutable>,
+    /// Device-resident (o, perm, mats) keyed by instance identity.
+    ///
+    /// SAFETY NOTE: the host literals are retained next to the buffers.
+    /// `BufferFromHostLiteral` is asynchronous and the wrapper exposes no
+    /// ready-future, so the literal must outlive the transfer; dropping it
+    /// early is a use-after-free (observed as a PJRT size-check abort).
+    f15_inputs: Option<(u64, [(::xla::Literal, ::xla::PjRtBuffer); 3])>,
+}
+
+impl XlaEngine {
+    pub fn load(dir: &Path) -> Result<XlaEngine> {
+        let manifest = Manifest::load(dir)
+            .with_context(|| format!("loading manifest from {}", dir.display()))?;
+        let client = ::xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PJRT CPU client: {e}"))?;
+        Ok(XlaEngine {
+            client,
+            manifest,
+            dir: dir.to_path_buf(),
+            cache: HashMap::new(),
+            f15_inputs: None,
+        })
+    }
+
+    /// Load from the repo's default artifacts directory.
+    pub fn load_default() -> Result<XlaEngine> {
+        let dir = super::find_artifacts_dir()
+            .ok_or_else(|| anyhow!("artifacts dir not found; run `make artifacts`"))?;
+        XlaEngine::load(&dir)
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn artifacts_dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Compile (or fetch from cache) an artifact by name.
+    fn exe(&mut self, name: &str) -> Result<&::xla::PjRtLoadedExecutable> {
+        if !self.cache.contains_key(name) {
+            let info = self.manifest.get(name).map_err(|e| anyhow!("{e}"))?;
+            let proto = ::xla::HloModuleProto::from_text_file(
+                info.file
+                    .to_str()
+                    .ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .map_err(|e| anyhow!("parse {}: {e}", info.file.display()))?;
+            let comp = ::xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {name}: {e}"))?;
+            self.cache.insert(name.to_string(), exe);
+        }
+        Ok(&self.cache[name])
+    }
+
+    /// Warm the compile cache for a set of artifacts.
+    pub fn precompile(&mut self, names: &[&str]) -> Result<()> {
+        for name in names {
+            self.exe(name)?;
+        }
+        Ok(())
+    }
+
+    fn literal_f32(data: &[f32], shape: &[usize]) -> Result<::xla::Literal> {
+        let lit = ::xla::Literal::vec1(data);
+        if shape.len() == 1 {
+            return Ok(lit);
+        }
+        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+        lit.reshape(&dims).map_err(|e| anyhow!("reshape: {e}"))
+    }
+
+    fn check_input(
+        &self,
+        name: &str,
+        index: usize,
+        dtype: DType,
+        len: usize,
+    ) -> Result<()> {
+        let info = self.manifest.get(name).map_err(|e| anyhow!("{e}"))?;
+        let sig = info
+            .inputs
+            .get(index)
+            .ok_or_else(|| anyhow!("{name}: no input {index}"))?;
+        if sig.dtype != dtype || sig.elements() != len {
+            bail!(
+                "{name} input {index}: expected {:?}x{}, got {:?}x{}",
+                sig.dtype,
+                sig.elements(),
+                dtype,
+                len
+            );
+        }
+        Ok(())
+    }
+
+    fn execute(
+        &mut self,
+        name: &str,
+        inputs: &[::xla::Literal],
+    ) -> Result<Vec<::xla::Literal>> {
+        let exe = self.exe(name)?;
+        let result = exe
+            .execute::<::xla::Literal>(inputs)
+            .map_err(|e| anyhow!("execute {name}: {e}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch {name}: {e}"))?;
+        // aot.py lowers with return_tuple=True: always a tuple.
+        lit.to_tuple().map_err(|e| anyhow!("untuple {name}: {e}"))
+    }
+
+    // -----------------------------------------------------------------
+    // Typed entry points
+    // -----------------------------------------------------------------
+
+    /// Batched trap fitness. `variant` is `"pallas"` or `"jnp"`.
+    pub fn eval_trap(
+        &mut self,
+        pop: &[f32],
+        pop_size: usize,
+        variant: &str,
+    ) -> Result<Vec<f32>> {
+        let name = match variant {
+            "pallas" => format!("trap_eval_p{pop_size}"),
+            "jnp" => format!("trap_eval_jnp_p{pop_size}"),
+            other => bail!("unknown trap variant {other}"),
+        };
+        let bits = self.manifest.trap_bits;
+        self.check_input(&name, 0, DType::F32, pop.len())?;
+        let lit = Self::literal_f32(pop, &[pop_size, bits])?;
+        let out = self.execute(&name, &[lit])?;
+        out[0].to_vec::<f32>().map_err(|e| anyhow!("{e}"))
+    }
+
+    /// A stable identity for an instance (seeded generation makes the
+    /// shift vector a perfect fingerprint).
+    fn f15_instance_key(inst: &F15Instance) -> u64 {
+        let mut h = 0xcbf29ce484222325u64; // FNV-1a over the shift bits
+        for v in &inst.shift {
+            h ^= v.to_bits();
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        h ^ inst.dim as u64
+    }
+
+    /// Upload (o, perm, mats) once; reuse across eval_f15 calls. The host
+    /// literals are kept alive with the buffers (see the field's safety
+    /// note).
+    fn f15_device_inputs(&mut self, inst: &F15Instance) -> Result<()> {
+        let key = Self::f15_instance_key(inst);
+        let stale = match &self.f15_inputs {
+            Some((k, _)) => *k != key,
+            None => true,
+        };
+        if stale {
+            let groups = inst.groups();
+            let group = inst.group;
+            let o_lit = ::xla::Literal::vec1(&inst.shift_f32());
+            let perm_lit = ::xla::Literal::vec1(&inst.perm_i32());
+            let mats_lit = Self::literal_f32(
+                &inst.rotations_f32(),
+                &[groups, group, group],
+            )?;
+            let up = |lit: ::xla::Literal| -> Result<(::xla::Literal, ::xla::PjRtBuffer)> {
+                let buf = self
+                    .client
+                    .buffer_from_host_literal(None, &lit)
+                    .map_err(|e| anyhow!("upload: {e}"))?;
+                Ok((lit, buf))
+            };
+            self.f15_inputs =
+                Some((key, [up(o_lit)?, up(perm_lit)?, up(mats_lit)?]));
+        }
+        Ok(())
+    }
+
+    /// Batched F15 fitness on a shared instance. `variant` selects the
+    /// Pallas kernel or the jnp lowering. Instance tensors live on the
+    /// device across calls; only the candidates move per call.
+    pub fn eval_f15(
+        &mut self,
+        x: &[f32],
+        batch: usize,
+        inst: &F15Instance,
+        variant: &str,
+    ) -> Result<Vec<f32>> {
+        let name = match variant {
+            "pallas" => format!("f15_eval_b{batch}"),
+            "jnp" => format!("f15_eval_jnp_b{batch}"),
+            other => bail!("unknown f15 variant {other}"),
+        };
+        let dim = inst.dim;
+        self.check_input(&name, 0, DType::F32, batch * dim)?;
+        self.exe(&name)?; // ensure compiled before borrowing buffers
+
+        let x_lit = Self::literal_f32(x, &[batch, dim])?;
+        let x_buf = self
+            .client
+            .buffer_from_host_literal(None, &x_lit)
+            .map_err(|e| anyhow!("upload x: {e}"))?;
+        self.f15_device_inputs(inst)?;
+        let (_, [(_, o_buf), (_, perm_buf), (_, mats_buf)]) =
+            self.f15_inputs.as_ref().unwrap();
+        let exe = &self.cache[&name];
+        let result = exe
+            .execute_b::<&::xla::PjRtBuffer>(&[&x_buf, o_buf, perm_buf, mats_buf])
+            .map_err(|e| anyhow!("execute {name}: {e}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch {name}: {e}"))?;
+        // x_lit must stay alive until after the output fetch: execution
+        // awaits the input transfer, and the fetch awaits execution.
+        drop(x_lit);
+        let out = lit.to_tuple().map_err(|e| anyhow!("untuple: {e}"))?;
+        out[0].to_vec::<f32>().map_err(|e| anyhow!("{e}"))
+    }
+
+    /// One migration epoch (up to 100 generations fused in one artifact
+    /// execution). Optionally injects a pool immigrant first, mirroring
+    /// the client's GET.
+    pub fn ea_epoch(
+        &mut self,
+        state: &mut EpochState,
+        immigrant: Option<&BitString>,
+        variant: &str,
+    ) -> Result<EpochResult> {
+        let name = match variant {
+            "pallas" => format!("ea_epoch_p{}", state.pop_size),
+            "jnp" => format!("ea_epoch_jnp_p{}", state.pop_size),
+            other => bail!("unknown epoch variant {other}"),
+        };
+        self.check_input(&name, 0, DType::F32, state.pop.len())?;
+
+        let key = state.next_key();
+        let imm: Vec<f32> = match immigrant {
+            Some(b) => {
+                if b.len() != state.bits {
+                    bail!("immigrant has {} bits, island {}", b.len(), state.bits);
+                }
+                b.to_f32()
+            }
+            None => vec![0.0; state.bits],
+        };
+        let use_imm: i32 = immigrant.is_some() as i32;
+
+        let pop_lit =
+            Self::literal_f32(&state.pop, &[state.pop_size, state.bits])?;
+        let key_lit = ::xla::Literal::vec1(&key);
+        let imm_lit = ::xla::Literal::vec1(&imm);
+        let use_lit = ::xla::Literal::scalar(use_imm);
+        let target_lit = ::xla::Literal::scalar(state.target);
+
+        let out = self.execute(
+            &name,
+            &[pop_lit, key_lit, imm_lit, use_lit, target_lit],
+        )?;
+        if out.len() != 4 {
+            bail!("{name}: expected 4 outputs, got {}", out.len());
+        }
+        state.pop = out[0].to_vec::<f32>().map_err(|e| anyhow!("{e}"))?;
+        let fitness = out[1].to_vec::<f32>().map_err(|e| anyhow!("{e}"))?;
+        let best_idx = out[2]
+            .get_first_element::<i32>()
+            .map_err(|e| anyhow!("{e}"))? as usize;
+        let gens_done = out[3]
+            .get_first_element::<i32>()
+            .map_err(|e| anyhow!("{e}"))? as u64;
+        let best_fitness = fitness[best_idx];
+        Ok(EpochResult {
+            solved: best_fitness >= state.target,
+            best_fitness,
+            fitness,
+            best_idx,
+            gens_done,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::NativeEngine;
+    use crate::rng::SplitMix64;
+
+    fn engine() -> XlaEngine {
+        XlaEngine::load_default().expect("artifacts built (make artifacts)")
+    }
+
+    fn random_pop(seed: u64, pop: usize, bits: usize) -> Vec<f32> {
+        let mut rng = SplitMix64::new(seed);
+        (0..pop * bits).map(|_| (rng.next_u64() & 1) as f32).collect()
+    }
+
+    #[test]
+    fn trap_eval_matches_native_both_variants() {
+        let mut xla = engine();
+        let native = NativeEngine::new();
+        let pop = random_pop(1, 128, 160);
+        let want = native.eval_trap_batch(&pop, 128);
+        for variant in ["pallas", "jnp"] {
+            let got = xla.eval_trap(&pop, 128, variant).unwrap();
+            assert_eq!(got.len(), 128);
+            for (g, w) in got.iter().zip(&want) {
+                assert!((g - w).abs() < 1e-4, "{variant}: {g} vs {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn f15_eval_matches_native() {
+        let inst = F15Instance::paper(11);
+        let mut xla = engine();
+        let mut native = NativeEngine::new().with_f15(inst.clone());
+        let mut rng = SplitMix64::new(2);
+        let batch = 16;
+        let x: Vec<f32> = (0..batch * inst.dim)
+            .map(|_| (rng.uniform() * 10.0 - 5.0) as f32)
+            .collect();
+        let want = native.eval_f15_batch(&x, batch);
+        for variant in ["pallas", "jnp"] {
+            let got = xla.eval_f15(&x, batch, &inst, variant).unwrap();
+            for (g, w) in got.iter().zip(&want) {
+                let rel = ((g - w) / w.max(1.0)).abs();
+                assert!(rel < 1e-3, "{variant}: {g} vs {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn epoch_improves_fitness_and_counts_gens() {
+        let mut xla = engine();
+        let mut state = EpochState::random(128, 160, 80.0, 3);
+        let before = xla
+            .eval_trap(&state.pop.clone(), 128, "jnp")
+            .unwrap()
+            .iter()
+            .cloned()
+            .fold(f32::MIN, f32::max);
+        let result = xla.ea_epoch(&mut state, None, "pallas").unwrap();
+        assert_eq!(result.fitness.len(), 128);
+        assert_eq!(result.gens_done, 100); // not solved in one epoch
+        assert!(result.best_fitness >= before,
+                "{} < {before}", result.best_fitness);
+        assert!(!result.solved);
+    }
+
+    #[test]
+    fn epoch_solution_immigrant_freezes() {
+        let mut xla = engine();
+        let mut state = EpochState::random(128, 160, 80.0, 4);
+        let solution = BitString::ones(160);
+        let result = xla.ea_epoch(&mut state, Some(&solution), "pallas").unwrap();
+        assert!(result.solved);
+        assert_eq!(result.gens_done, 0);
+        assert_eq!(result.best_fitness, 80.0);
+        // The solution chromosome is recoverable from the state.
+        let best = state.chromosome(result.best_idx);
+        assert_eq!(best.count_ones(), 160);
+    }
+
+    #[test]
+    fn epoch_population_stays_binary() {
+        let mut xla = engine();
+        let mut state = EpochState::random(192, 160, 80.0, 5);
+        xla.ea_epoch(&mut state, None, "pallas").unwrap();
+        assert!(state.pop.iter().all(|&v| v == 0.0 || v == 1.0));
+        assert_eq!(state.pop.len(), 192 * 160);
+    }
+
+    #[test]
+    fn multi_epoch_progress() {
+        // Several chained epochs should improve best fitness monotonically.
+        let mut xla = engine();
+        let mut state = EpochState::random(256, 160, 80.0, 6);
+        let mut last = f32::MIN;
+        for _ in 0..3 {
+            let r = xla.ea_epoch(&mut state, None, "pallas").unwrap();
+            assert!(r.best_fitness >= last);
+            last = r.best_fitness;
+            if r.solved {
+                break;
+            }
+        }
+        assert!(last > 40.0, "no progress: {last}");
+    }
+
+    #[test]
+    fn wrong_shapes_rejected() {
+        let mut xla = engine();
+        let pop = vec![0.0f32; 10];
+        assert!(xla.eval_trap(&pop, 128, "pallas").is_err());
+        assert!(xla.eval_trap(&pop, 10, "pallas").is_err()); // no such artifact
+    }
+
+    #[test]
+    fn precompile_warms_cache() {
+        let mut xla = engine();
+        xla.precompile(&["trap_eval_p128", "ea_epoch_p128"]).unwrap();
+        assert!(xla.precompile(&["nonexistent"]).is_err());
+    }
+}

@@ -1,0 +1,150 @@
+//! The Figure 3 baseline: independent desktop GA runs on the trap-40
+//! problem with a five-million-evaluation cap, for population sizes 512
+//! and 1024. "The baseline is that if [the volunteer experiments]
+//! eventually take longer than a basic desktop, their interest will be
+//! purely academic."
+
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::client::driver::{EngineChoice, IslandDriver};
+use crate::rng::{Rng64, SplitMix64};
+use crate::util::stats::Summary;
+
+/// One baseline run's outcome.
+#[derive(Debug, Clone)]
+pub struct RunRecord {
+    pub solved: bool,
+    pub elapsed: Duration,
+    pub evaluations: u64,
+    pub best_fitness: f64,
+}
+
+/// Aggregate over `runs` independent runs.
+#[derive(Debug, Clone)]
+pub struct BaselineReport {
+    pub engine: EngineChoice,
+    pub pop_size: usize,
+    pub runs: Vec<RunRecord>,
+}
+
+impl BaselineReport {
+    pub fn success_rate(&self) -> f64 {
+        self.runs.iter().filter(|r| r.solved).count() as f64
+            / self.runs.len().max(1) as f64
+    }
+
+    /// Time-to-solution summary over *successful* runs only (the paper's
+    /// Figure 3 plots only runs where the solution was found).
+    pub fn time_summary(&self) -> Summary {
+        let times: Vec<f64> = self
+            .runs
+            .iter()
+            .filter(|r| r.solved)
+            .map(|r| r.elapsed.as_secs_f64())
+            .collect();
+        Summary::of(&times)
+    }
+
+    pub fn evals_summary(&self) -> Summary {
+        let evals: Vec<f64> = self
+            .runs
+            .iter()
+            .filter(|r| r.solved)
+            .map(|r| r.evaluations as f64)
+            .collect();
+        Summary::of(&evals)
+    }
+}
+
+/// Run the baseline: `runs` independent islands, each until solution or
+/// `max_evals`.
+pub fn run_baseline(
+    engine: EngineChoice,
+    pop_size: usize,
+    runs: usize,
+    max_evals: u64,
+    seed: u64,
+) -> Result<BaselineReport> {
+    let mut seeds = SplitMix64::new(seed);
+    let mut records = Vec::with_capacity(runs);
+    // Epoch granularity: match the clients' 100-generation epochs so
+    // evaluation counting is identical across engines.
+    let epoch_gens = 100;
+    // One long-lived driver, reset per run: the XLA engine's PJRT client
+    // and compiled artifact are start-up costs the paper's long-lived
+    // workers pay once (Figure 2 step 7), so the baseline should too.
+    let mut driver = IslandDriver::new(engine, pop_size, seeds.next_u64())?;
+    // Warm the engine (XLA: PJRT compile of the epoch artifact) outside
+    // the timed region, then reset.
+    driver.run_epoch(1, None)?;
+    for _run in 0..runs {
+        let run_seed = seeds.next_u64();
+        driver.restart(pop_size, run_seed);
+        let t0 = Instant::now();
+        let mut evals = pop_size as u64; // initial population evaluation
+        let mut best = f64::NEG_INFINITY;
+        let mut solved = false;
+        while evals < max_evals {
+            let out = driver.run_epoch(epoch_gens, None)?;
+            evals += out.evaluations;
+            best = best.max(out.best_fitness);
+            if out.solved {
+                solved = true;
+                break;
+            }
+        }
+        records.push(RunRecord {
+            solved,
+            elapsed: t0.elapsed(),
+            evaluations: evals,
+            best_fitness: best,
+        });
+    }
+    Ok(BaselineReport { engine, pop_size, runs: records })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn baseline_small_scale() {
+        // Small budget smoke: mechanics + accounting, not paper numbers.
+        let report = run_baseline(
+            EngineChoice::Native,
+            128,
+            3,
+            200_000,
+            1,
+        )
+        .unwrap();
+        assert_eq!(report.runs.len(), 3);
+        for r in &report.runs {
+            assert!(r.evaluations <= 200_000 + 128 * 101);
+            assert!(r.best_fitness > 40.0);
+            if r.solved {
+                assert_eq!(r.best_fitness, 80.0);
+            }
+        }
+        let rate = report.success_rate();
+        assert!((0.0..=1.0).contains(&rate));
+    }
+
+    #[test]
+    fn summaries_handle_zero_successes() {
+        let report = BaselineReport {
+            engine: EngineChoice::Native,
+            pop_size: 8,
+            runs: vec![RunRecord {
+                solved: false,
+                elapsed: Duration::from_secs(1),
+                evaluations: 100,
+                best_fitness: 50.0,
+            }],
+        };
+        assert_eq!(report.success_rate(), 0.0);
+        assert!(report.time_summary().mean.is_nan());
+    }
+}

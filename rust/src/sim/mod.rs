@@ -1,0 +1,17 @@
+//! Volunteer-dynamics simulation: the paper's "in the wild" experiments,
+//! reproduced with a generative volunteer model since real anonymous
+//! browser traffic is not available in this environment (substitution
+//! table, DESIGN.md section 3).
+//!
+//! * [`baseline`] — the Figure 3 desktop baseline: independent GA runs
+//!   with an evaluation cap.
+//! * [`swarm`] — the end-to-end system: a live pool server plus N
+//!   (possibly churning, heterogeneous) volunteer clients.
+
+pub mod baseline;
+pub mod swarm;
+pub mod trace;
+
+pub use baseline::{run_baseline, BaselineReport, RunRecord};
+pub use swarm::{run_swarm, run_swarm_trace, ChurnConfig, SwarmConfig, SwarmReport};
+pub use trace::{Session, Trace, TraceModel};

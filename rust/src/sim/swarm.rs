@@ -1,0 +1,462 @@
+//! The end-to-end volunteer swarm: a live pool server plus N volunteer
+//! clients with optional churn (Poisson arrivals, lognormal sessions) and
+//! heterogeneous device speeds — the system the paper deploys "in the
+//! wild", driven here by a generative volunteer model.
+
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use super::trace::Trace;
+use crate::client::driver::EngineChoice;
+use crate::client::volunteer::ClientStats;
+use crate::client::worker::{ClientProcess, WorkerMode};
+use crate::coordinator::{PoolServer, PoolServerConfig};
+use crate::http::{HttpClient, Method, Request};
+use crate::rng::{dist, Rng64, SplitMix64};
+
+/// Volunteer churn model.
+#[derive(Debug, Clone)]
+pub struct ChurnConfig {
+    /// Mean client arrivals per second (Poisson process).
+    pub arrival_rate: f64,
+    /// Mean session length in seconds (lognormal with sigma=0.5).
+    pub mean_session_s: f64,
+    /// Cap on simultaneously connected clients.
+    pub max_concurrent: usize,
+}
+
+/// Swarm experiment configuration.
+#[derive(Debug, Clone)]
+pub struct SwarmConfig {
+    /// Number of clients when churn is disabled; initial clients otherwise.
+    pub n_clients: usize,
+    pub mode: WorkerMode,
+    pub engine: EngineChoice,
+    /// Basic-mode population size (W² draws its own).
+    pub base_pop: usize,
+    /// Stop once the server has completed this many experiments.
+    pub target_solutions: u64,
+    pub timeout: Duration,
+    pub seed: u64,
+    pub churn: Option<ChurnConfig>,
+    /// Device heterogeneity: per-client slowdown drawn uniformly from
+    /// this range (1.0 = desktop speed).
+    pub slowdown_range: (f64, f64),
+    /// Pool server tuning.
+    pub server: PoolServerConfig,
+}
+
+impl Default for SwarmConfig {
+    fn default() -> Self {
+        SwarmConfig {
+            n_clients: 4,
+            mode: WorkerMode::W2,
+            engine: EngineChoice::Native,
+            base_pop: 256,
+            target_solutions: 1,
+            timeout: Duration::from_secs(60),
+            seed: 0xC0FFEE,
+            churn: None,
+            slowdown_range: (1.0, 1.0),
+            server: PoolServerConfig::default(),
+        }
+    }
+}
+
+/// What the swarm run produced.
+#[derive(Debug, Clone)]
+pub struct SwarmReport {
+    pub solutions: u64,
+    pub elapsed: Duration,
+    pub time_to_first: Option<Duration>,
+    pub total_requests: u64,
+    /// Per-experiment wall-clock seconds (server-side records).
+    pub experiment_times: Vec<f64>,
+    pub client_stats: Vec<ClientStats>,
+    pub clients_spawned: usize,
+}
+
+impl SwarmReport {
+    pub fn total_evaluations(&self) -> u64 {
+        self.client_stats.iter().map(|s| s.evaluations).sum()
+    }
+
+    pub fn total_epochs(&self) -> u64 {
+        self.client_stats.iter().map(|s| s.epochs).sum()
+    }
+}
+
+/// Run a swarm experiment to completion.
+pub fn run_swarm(config: SwarmConfig) -> Result<SwarmReport> {
+    let handle = PoolServer::spawn("127.0.0.1:0", config.server.clone())
+        .map_err(|e| anyhow!("pool server: {e}"))?;
+    let addr = handle.addr;
+    let mut rng = SplitMix64::new(config.seed);
+    let mut monitor = HttpClient::connect(addr)?;
+
+    let spawn_client = |idx: usize, rng: &mut SplitMix64| -> ClientProcess {
+        let slowdown = dist::uniform_in(
+            rng,
+            config.slowdown_range.0,
+            config.slowdown_range.1.max(config.slowdown_range.0),
+        );
+        ClientProcess::spawn(
+            Some(addr),
+            config.mode,
+            config.engine,
+            config.base_pop,
+            rng.next_u64(),
+            &format!("client-{idx}"),
+            u64::MAX,
+            slowdown,
+        )
+    };
+
+    let t0 = Instant::now();
+    let mut active: Vec<(ClientProcess, Option<Instant>)> = Vec::new();
+    let mut finished_stats: Vec<ClientStats> = Vec::new();
+    let mut spawned = 0usize;
+
+    for _ in 0..config.n_clients {
+        active.push((spawn_client(spawned, &mut rng), None));
+        spawned += 1;
+    }
+    // Schedule departures for initial clients under churn.
+    if let Some(churn) = &config.churn {
+        for slot in &mut active {
+            let session =
+                dist::lognormal(&mut rng, churn.mean_session_s.ln(), 0.5);
+            slot.1 = Some(t0 + Duration::from_secs_f64(session));
+        }
+    }
+
+    let mut time_to_first = None;
+    let mut solutions = 0u64;
+    let mut next_arrival = config.churn.as_ref().map(|c| {
+        t0 + Duration::from_secs_f64(dist::exponential(&mut rng, c.arrival_rate))
+    });
+
+    loop {
+        std::thread::sleep(Duration::from_millis(20));
+        let now = Instant::now();
+
+        // Server-side progress.
+        if let Ok(resp) =
+            monitor.send(&Request::new(Method::Get, "/experiment/state"))
+        {
+            if resp.status == 200 {
+                if let Ok(body) = resp.json_body() {
+                    let completed =
+                        body.get_u64("completed").unwrap_or(0);
+                    if completed > 0 && time_to_first.is_none() {
+                        time_to_first = Some(now - t0);
+                    }
+                    solutions = completed;
+                }
+            }
+        }
+        if solutions >= config.target_solutions {
+            break;
+        }
+        if now - t0 > config.timeout {
+            break;
+        }
+
+        // Churn: departures then arrivals.
+        if let Some(churn) = &config.churn {
+            let mut i = 0;
+            while i < active.len() {
+                if matches!(active[i].1, Some(dep) if now >= dep) {
+                    let (proc_, _) = active.swap_remove(i);
+                    finished_stats.extend(proc_.shutdown());
+                } else {
+                    i += 1;
+                }
+            }
+            while matches!(next_arrival, Some(t) if now >= t) {
+                if active.len() < churn.max_concurrent {
+                    let session = dist::lognormal(
+                        &mut rng,
+                        churn.mean_session_s.ln(),
+                        0.5,
+                    );
+                    active.push((
+                        spawn_client(spawned, &mut rng),
+                        Some(now + Duration::from_secs_f64(session)),
+                    ));
+                    spawned += 1;
+                }
+                next_arrival = Some(
+                    now + Duration::from_secs_f64(dist::exponential(
+                        &mut rng,
+                        churn.arrival_rate,
+                    )),
+                );
+            }
+        }
+    }
+    let elapsed = t0.elapsed();
+
+    // Collect server-side experiment records before shutdown.
+    let mut experiment_times = Vec::new();
+    let mut total_requests = 0;
+    if let Ok(resp) = monitor.send(&Request::new(Method::Get, "/stats")) {
+        if let Ok(body) = resp.json_body() {
+            total_requests = body.get_u64("total_requests").unwrap_or(0);
+            if let Some(exps) =
+                body.get("experiments").and_then(|e| e.as_arr())
+            {
+                experiment_times = exps
+                    .iter()
+                    .filter(|e| e.get_str("solved_by").is_some())
+                    .filter_map(|e| e.get_f64("elapsed_s"))
+                    .collect();
+            }
+        }
+    }
+
+    for (proc_, _) in active {
+        finished_stats.extend(proc_.shutdown());
+    }
+    handle.stop();
+
+    Ok(SwarmReport {
+        solutions,
+        elapsed,
+        time_to_first,
+        total_requests,
+        experiment_times,
+        client_stats: finished_stats,
+        clients_spawned: spawned,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn swarm_solves_trap40() {
+        // E6 at test scale: 2 W² clients, native engine. Must find the
+        // trap-40 solution well within the timeout on any dev machine.
+        let report = run_swarm(SwarmConfig {
+            n_clients: 2,
+            target_solutions: 1,
+            timeout: Duration::from_secs(120),
+            seed: 7,
+            ..Default::default()
+        })
+        .unwrap();
+        assert!(report.solutions >= 1, "no solution: {report:?}");
+        assert!(report.time_to_first.is_some());
+        assert!(report.total_requests > 0);
+        assert_eq!(report.experiment_times.len() as u64, report.solutions);
+        assert!(report.total_evaluations() > 0);
+        assert_eq!(report.client_stats.len(), 4); // 2 clients x 2 workers
+    }
+
+    #[test]
+    fn churn_spawns_and_retires_clients() {
+        let report = run_swarm(SwarmConfig {
+            n_clients: 1,
+            target_solutions: u64::MAX, // run purely on timeout
+            timeout: Duration::from_secs(2),
+            churn: Some(ChurnConfig {
+                arrival_rate: 5.0,       // ~10 arrivals in 2s
+                mean_session_s: 0.5,     // short sessions
+                max_concurrent: 4,
+            }),
+            seed: 11,
+            ..Default::default()
+        })
+        .unwrap();
+        assert!(report.clients_spawned > 1, "{report:?}");
+        // Departed clients' stats were collected.
+        assert!(!report.client_stats.is_empty());
+    }
+}
+
+/// Replay a recorded volunteer [`Trace`] against a live pool server:
+/// clients arrive and depart exactly when the trace says (scaled by
+/// `time_scale` — 0.1 compresses a 100 s trace into 10 s of wall time).
+/// Runs until the trace is exhausted, `target_solutions` are found, or
+/// `timeout` elapses.
+pub fn run_swarm_trace(
+    trace: &Trace,
+    engine: EngineChoice,
+    target_solutions: u64,
+    timeout: Duration,
+    time_scale: f64,
+    server: PoolServerConfig,
+) -> Result<SwarmReport> {
+    let handle = PoolServer::spawn("127.0.0.1:0", server)
+        .map_err(|e| anyhow!("pool server: {e}"))?;
+    let addr = handle.addr;
+    let mut monitor = HttpClient::connect(addr)?;
+
+    struct Pending<'a> {
+        session: &'a super::trace::Session,
+        proc_: Option<ClientProcess>,
+        done: bool,
+    }
+    let mut slots: Vec<Pending> = trace
+        .sessions
+        .iter()
+        .map(|s| Pending { session: s, proc_: None, done: false })
+        .collect();
+
+    let t0 = Instant::now();
+    let mut finished_stats = Vec::new();
+    let mut solutions = 0u64;
+    let mut time_to_first = None;
+    let mut spawned = 0usize;
+
+    loop {
+        std::thread::sleep(Duration::from_millis(10));
+        let now_s = t0.elapsed().as_secs_f64() / time_scale;
+
+        // Arrivals and departures per the trace clock.
+        for (i, slot) in slots.iter_mut().enumerate() {
+            if slot.done {
+                continue;
+            }
+            if slot.proc_.is_none() && now_s >= slot.session.arrive_s {
+                let mode = if slot.session.workers >= 2 {
+                    WorkerMode::W2
+                } else {
+                    WorkerMode::Basic
+                };
+                slot.proc_ = Some(ClientProcess::spawn(
+                    Some(addr),
+                    mode,
+                    engine,
+                    512,
+                    0xACE + i as u64,
+                    &format!("trace-{i}"),
+                    u64::MAX,
+                    slot.session.slowdown,
+                ));
+                spawned += 1;
+            }
+            if slot.proc_.is_some() && now_s >= slot.session.depart_s() {
+                finished_stats.extend(slot.proc_.take().unwrap().shutdown());
+                slot.done = true;
+            }
+        }
+
+        // Server progress.
+        if let Ok(resp) =
+            monitor.send(&Request::new(Method::Get, "/experiment/state"))
+        {
+            if let Ok(body) = resp.json_body() {
+                let completed = body.get_u64("completed").unwrap_or(0);
+                if completed > 0 && time_to_first.is_none() {
+                    time_to_first = Some(t0.elapsed());
+                }
+                solutions = completed;
+            }
+        }
+        let trace_over = slots.iter().all(|s| s.done)
+            || now_s
+                > trace
+                    .sessions
+                    .iter()
+                    .map(|s| s.depart_s())
+                    .fold(0.0, f64::max);
+        if solutions >= target_solutions
+            || t0.elapsed() > timeout
+            || trace_over
+        {
+            break;
+        }
+    }
+    let elapsed = t0.elapsed();
+
+    let mut experiment_times = Vec::new();
+    let mut total_requests = 0;
+    if let Ok(resp) = monitor.send(&Request::new(Method::Get, "/stats")) {
+        if let Ok(body) = resp.json_body() {
+            total_requests = body.get_u64("total_requests").unwrap_or(0);
+            if let Some(exps) = body.get("experiments").and_then(|e| e.as_arr()) {
+                experiment_times = exps
+                    .iter()
+                    .filter(|e| e.get_str("solved_by").is_some())
+                    .filter_map(|e| e.get_f64("elapsed_s"))
+                    .collect();
+            }
+        }
+    }
+    for slot in slots.iter_mut() {
+        if let Some(p) = slot.proc_.take() {
+            finished_stats.extend(p.shutdown());
+        }
+    }
+    handle.stop();
+
+    Ok(SwarmReport {
+        solutions,
+        elapsed,
+        time_to_first,
+        total_requests,
+        experiment_times,
+        client_stats: finished_stats,
+        clients_spawned: spawned,
+    })
+}
+
+#[cfg(test)]
+mod trace_tests {
+    use super::*;
+    use crate::sim::trace::{Session, Trace};
+
+    #[test]
+    fn replays_a_trace_and_solves() {
+        // Two overlapping W² sessions, compressed 1:1 (short trace).
+        let trace = Trace {
+            sessions: vec![
+                Session { arrive_s: 0.0, duration_s: 60.0, slowdown: 1.0, workers: 2 },
+                Session { arrive_s: 0.2, duration_s: 60.0, slowdown: 1.5, workers: 2 },
+            ],
+        };
+        let report = run_swarm_trace(
+            &trace,
+            EngineChoice::Native,
+            1,
+            Duration::from_secs(90),
+            1.0,
+            PoolServerConfig::default(),
+        )
+        .unwrap();
+        assert_eq!(report.clients_spawned, 2);
+        assert!(report.solutions >= 1, "{report:?}");
+    }
+
+    #[test]
+    fn departures_honored() {
+        // One very short session; run until the trace is over.
+        let trace = Trace {
+            sessions: vec![Session {
+                arrive_s: 0.0,
+                duration_s: 0.3,
+                slowdown: 1.0,
+                workers: 1,
+            }],
+        };
+        let report = run_swarm_trace(
+            &trace,
+            EngineChoice::Native,
+            u64::MAX,
+            Duration::from_secs(30),
+            1.0,
+            PoolServerConfig {
+                target_fitness: 1e18, // never solved
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(report.clients_spawned, 1);
+        assert_eq!(report.client_stats.len(), 1); // basic mode: 1 worker
+        assert!(report.elapsed < Duration::from_secs(20));
+    }
+}

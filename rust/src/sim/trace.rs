@@ -1,0 +1,261 @@
+//! Volunteer session traces: generate, persist, and replay the arrival /
+//! departure behavior of a volunteer population.
+//!
+//! The paper's experiments ran "in the wild" against real anonymous
+//! visitors; this environment has none, so the swarm is driven by a
+//! generative model instead (DESIGN.md §3). Traces make those runs
+//! *reproducible and exchangeable*: a trace is a JSONL file of sessions
+//! (`arrive_s`, `duration_s`, `slowdown`, `workers`) that
+//! [`crate::sim::swarm`]-style experiments can replay, and that real
+//! deployments could record for later replay.
+
+use std::io::{BufRead, Write};
+use std::path::Path;
+
+use crate::json::{self, Json};
+use crate::rng::{dist, Rng64, SplitMix64};
+
+/// One volunteer visit.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Session {
+    /// Seconds after experiment start at which the volunteer arrives.
+    pub arrive_s: f64,
+    /// Session length in seconds.
+    pub duration_s: f64,
+    /// Device slowdown factor (1.0 = desktop; phones larger).
+    pub slowdown: f64,
+    /// Worker islands this browser runs (W² = 2).
+    pub workers: usize,
+}
+
+impl Session {
+    pub fn depart_s(&self) -> f64 {
+        self.arrive_s + self.duration_s
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("arrive_s", self.arrive_s.into()),
+            ("duration_s", self.duration_s.into()),
+            ("slowdown", self.slowdown.into()),
+            ("workers", self.workers.into()),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Option<Session> {
+        Some(Session {
+            arrive_s: v.get_f64("arrive_s")?,
+            duration_s: v.get_f64("duration_s")?,
+            slowdown: v.get_f64("slowdown").unwrap_or(1.0),
+            workers: v.get_u64("workers").unwrap_or(1) as usize,
+        })
+    }
+}
+
+/// Parameters of the generative volunteer model.
+#[derive(Debug, Clone)]
+pub struct TraceModel {
+    /// Mean arrivals per second (Poisson process).
+    pub arrival_rate: f64,
+    /// Lognormal session-length parameters (median = e^mu seconds).
+    pub session_mu: f64,
+    pub session_sigma: f64,
+    /// Device slowdown range (uniform).
+    pub slowdown_range: (f64, f64),
+    /// Probability a visitor's browser supports Web Workers (the paper:
+    /// "in case the browser does not support HTML5 Web workers ... a basic
+    /// version of NodIO can also be used").
+    pub w2_probability: f64,
+}
+
+impl Default for TraceModel {
+    fn default() -> Self {
+        TraceModel {
+            arrival_rate: 0.5,
+            session_mu: (30.0f64).ln(),
+            session_sigma: 1.0,
+            slowdown_range: (1.0, 4.0),
+            w2_probability: 0.8,
+        }
+    }
+}
+
+/// A full trace: sessions sorted by arrival time.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Trace {
+    pub sessions: Vec<Session>,
+}
+
+impl Trace {
+    /// Sample a trace covering `horizon_s` seconds.
+    pub fn generate(model: &TraceModel, horizon_s: f64, seed: u64) -> Trace {
+        let mut rng = SplitMix64::new(seed);
+        let mut sessions = Vec::new();
+        let mut t = 0.0;
+        loop {
+            t += dist::exponential(&mut rng, model.arrival_rate);
+            if t >= horizon_s {
+                break;
+            }
+            let duration =
+                dist::lognormal(&mut rng, model.session_mu, model.session_sigma);
+            let slowdown = dist::uniform_in(
+                &mut rng,
+                model.slowdown_range.0,
+                model.slowdown_range.1,
+            );
+            let workers =
+                if dist::bernoulli(&mut rng, model.w2_probability) { 2 } else { 1 };
+            sessions.push(Session {
+                arrive_s: t,
+                duration_s: duration,
+                slowdown,
+                workers,
+            });
+        }
+        Trace { sessions }
+    }
+
+    /// Number of volunteers online at time `t`.
+    pub fn concurrency_at(&self, t: f64) -> usize {
+        self.sessions
+            .iter()
+            .filter(|s| s.arrive_s <= t && t < s.depart_s())
+            .count()
+    }
+
+    /// Peak concurrency over the trace (evaluated at arrival instants,
+    /// where the maximum must occur).
+    pub fn peak_concurrency(&self) -> usize {
+        self.sessions
+            .iter()
+            .map(|s| self.concurrency_at(s.arrive_s))
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Total worker-seconds donated (the cycle-donation metric W² boosts).
+    pub fn donated_worker_seconds(&self) -> f64 {
+        self.sessions
+            .iter()
+            .map(|s| s.duration_s * s.workers as f64 / s.slowdown)
+            .sum()
+    }
+
+    /// Write as JSONL.
+    pub fn save(&self, path: &Path) -> std::io::Result<()> {
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        for s in &self.sessions {
+            writeln!(f, "{}", json::to_string(&s.to_json()))?;
+        }
+        Ok(())
+    }
+
+    /// Load from JSONL, skipping malformed lines.
+    pub fn load(path: &Path) -> std::io::Result<Trace> {
+        let f = std::io::BufReader::new(std::fs::File::open(path)?);
+        let mut sessions = Vec::new();
+        for line in f.lines() {
+            let line = line?;
+            if line.trim().is_empty() {
+                continue;
+            }
+            if let Ok(v) = json::parse(&line) {
+                if let Some(s) = Session::from_json(&v) {
+                    sessions.push(s);
+                }
+            }
+        }
+        sessions.sort_by(|a, b| a.arrive_s.partial_cmp(&b.arrive_s).unwrap());
+        Ok(Trace { sessions })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::{forall, PropConfig};
+
+    #[test]
+    fn generation_respects_horizon_and_order() {
+        let trace = Trace::generate(&TraceModel::default(), 100.0, 1);
+        assert!(!trace.sessions.is_empty());
+        let mut last = 0.0;
+        for s in &trace.sessions {
+            assert!(s.arrive_s >= last);
+            assert!(s.arrive_s < 100.0);
+            assert!(s.duration_s > 0.0);
+            assert!((1.0..=4.0).contains(&s.slowdown));
+            assert!(s.workers == 1 || s.workers == 2);
+            last = s.arrive_s;
+        }
+    }
+
+    #[test]
+    fn arrival_rate_statistics() {
+        let model = TraceModel { arrival_rate: 2.0, ..Default::default() };
+        let trace = Trace::generate(&model, 1000.0, 2);
+        let rate = trace.sessions.len() as f64 / 1000.0;
+        assert!((rate - 2.0).abs() < 0.2, "rate={rate}");
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let m = TraceModel::default();
+        assert_eq!(Trace::generate(&m, 50.0, 7), Trace::generate(&m, 50.0, 7));
+        assert_ne!(Trace::generate(&m, 50.0, 7), Trace::generate(&m, 50.0, 8));
+    }
+
+    #[test]
+    fn concurrency_accounting() {
+        let trace = Trace {
+            sessions: vec![
+                Session { arrive_s: 0.0, duration_s: 10.0, slowdown: 1.0, workers: 2 },
+                Session { arrive_s: 5.0, duration_s: 10.0, slowdown: 2.0, workers: 1 },
+                Session { arrive_s: 20.0, duration_s: 1.0, slowdown: 1.0, workers: 1 },
+            ],
+        };
+        assert_eq!(trace.concurrency_at(6.0), 2);
+        assert_eq!(trace.concurrency_at(12.0), 1);
+        assert_eq!(trace.concurrency_at(16.0), 0);
+        assert_eq!(trace.peak_concurrency(), 2);
+        let donated = trace.donated_worker_seconds();
+        assert!((donated - (20.0 + 5.0 + 1.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn save_load_round_trip() {
+        let trace = Trace::generate(&TraceModel::default(), 60.0, 3);
+        let path = std::env::temp_dir()
+            .join(format!("nodio-trace-{}.jsonl", std::process::id()));
+        trace.save(&path).unwrap();
+        let loaded = Trace::load(&path).unwrap();
+        assert_eq!(trace.sessions.len(), loaded.sessions.len());
+        for (a, b) in trace.sessions.iter().zip(&loaded.sessions) {
+            assert!((a.arrive_s - b.arrive_s).abs() < 1e-9);
+            assert!((a.duration_s - b.duration_s).abs() < 1e-9);
+            assert_eq!(a.workers, b.workers);
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn round_trip_property() {
+        forall(
+            &PropConfig::cases(30),
+            |rng| Session {
+                arrive_s: rng.uniform() * 1000.0,
+                duration_s: rng.uniform() * 100.0 + 0.1,
+                slowdown: 1.0 + rng.uniform() * 3.0,
+                workers: 1 + (rng.next_u64() % 2) as usize,
+            },
+            |s| match Session::from_json(&s.to_json()) {
+                Some(back) => {
+                    (back.arrive_s - s.arrive_s).abs() < 1e-9
+                        && back.workers == s.workers
+                }
+                None => false,
+            },
+        );
+    }
+}

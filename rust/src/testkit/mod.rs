@@ -1,0 +1,159 @@
+//! Test utilities: a miniature property-testing harness (proptest is
+//! unavailable offline) and network test helpers.
+//!
+//! The property harness is deliberately simple: deterministic seeded case
+//! generation with a failure report that includes the case index and seed,
+//! so any failure is reproducible by construction. No shrinking — cases
+//! are kept small instead.
+
+use crate::rng::{Rng64, SplitMix64};
+
+/// Configuration for [`forall`].
+#[derive(Debug, Clone)]
+pub struct PropConfig {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        PropConfig { cases: 100, seed: 0x5EED }
+    }
+}
+
+impl PropConfig {
+    pub fn cases(n: usize) -> PropConfig {
+        PropConfig { cases: n, ..Default::default() }
+    }
+}
+
+/// Run `prop` over `cfg.cases` generated inputs; panic with a reproducible
+/// report on the first failure.
+pub fn forall<T: std::fmt::Debug>(
+    cfg: &PropConfig,
+    mut generate: impl FnMut(&mut dyn Rng64) -> T,
+    mut prop: impl FnMut(&T) -> bool,
+) {
+    let mut master = SplitMix64::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let case_seed = master.next_u64();
+        let mut rng = SplitMix64::new(case_seed);
+        let input = generate(&mut rng);
+        if !prop(&input) {
+            panic!(
+                "property failed at case {case}/{} (seed {:#x}):\n{:#?}",
+                cfg.cases, case_seed, input
+            );
+        }
+    }
+}
+
+/// Like [`forall`] but the property returns `Result` with a message.
+pub fn forall_ok<T: std::fmt::Debug, E: std::fmt::Display>(
+    cfg: &PropConfig,
+    mut generate: impl FnMut(&mut dyn Rng64) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), E>,
+) {
+    let mut master = SplitMix64::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let case_seed = master.next_u64();
+        let mut rng = SplitMix64::new(case_seed);
+        let input = generate(&mut rng);
+        if let Err(e) = prop(&input) {
+            panic!(
+                "property failed at case {case}/{} (seed {:#x}): {e}\n{:#?}",
+                cfg.cases, case_seed, input
+            );
+        }
+    }
+}
+
+/// Bind-then-drop to obtain a likely-free localhost port for tests that
+/// need a fixed address (e.g. server restart scenarios).
+pub fn free_port() -> u16 {
+    let listener = std::net::TcpListener::bind("127.0.0.1:0")
+        .expect("bind ephemeral");
+    listener.local_addr().unwrap().port()
+}
+
+/// Poll `cond` until true or `timeout`; returns whether it became true.
+pub fn wait_until(
+    timeout: std::time::Duration,
+    mut cond: impl FnMut() -> bool,
+) -> bool {
+    let t0 = std::time::Instant::now();
+    while t0.elapsed() < timeout {
+        if cond() {
+            return true;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
+    cond()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::dist;
+
+    #[test]
+    fn forall_passes_true_property() {
+        forall(
+            &PropConfig::cases(50),
+            |rng| dist::range(rng, 0, 100),
+            |&x| x < 100,
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn forall_reports_failures() {
+        forall(
+            &PropConfig::cases(50),
+            |rng| dist::range(rng, 0, 100),
+            |&x| x < 90, // fails eventually
+        );
+    }
+
+    #[test]
+    fn forall_is_deterministic() {
+        // Same seed -> same generated sequence.
+        let collect = |seed: u64| {
+            let mut xs = Vec::new();
+            forall(
+                &PropConfig { cases: 20, seed },
+                |rng| dist::range(rng, 0, 1000),
+                |&x| {
+                    xs.push(x);
+                    true
+                },
+            );
+            xs
+        };
+        assert_eq!(collect(7), collect(7));
+        assert_ne!(collect(7), collect(8));
+    }
+
+    #[test]
+    fn free_port_is_bindable() {
+        let port = free_port();
+        // Port may race, but immediately rebinding usually works.
+        let res = std::net::TcpListener::bind(("127.0.0.1", port));
+        assert!(res.is_ok());
+    }
+
+    #[test]
+    fn wait_until_observes_change() {
+        use std::sync::atomic::{AtomicBool, Ordering};
+        use std::sync::Arc;
+        let flag = Arc::new(AtomicBool::new(false));
+        let f2 = flag.clone();
+        std::thread::spawn(move || {
+            std::thread::sleep(std::time::Duration::from_millis(20));
+            f2.store(true, Ordering::Release);
+        });
+        assert!(wait_until(std::time::Duration::from_secs(2), || {
+            flag.load(Ordering::Acquire)
+        }));
+    }
+}

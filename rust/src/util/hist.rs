@@ -1,0 +1,134 @@
+//! Log-scaled latency histogram for the server/benchmark hot paths.
+//!
+//! Fixed bucket layout (power-of-two microsecond buckets) so recording is
+//! one CLZ + one increment — cheap enough to live inside the event loop.
+
+use std::time::Duration;
+
+const BUCKETS: usize = 40; // 1µs .. ~2^39µs (~6 days): plenty
+
+/// Power-of-two histogram over microsecond latencies.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    counts: [u64; BUCKETS],
+    total: u64,
+    sum_us: u128,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Histogram { counts: [0; BUCKETS], total: 0, sum_us: 0 }
+    }
+
+    fn bucket_of(us: u64) -> usize {
+        if us == 0 {
+            0
+        } else {
+            (63 - us.leading_zeros() as usize).min(BUCKETS - 1)
+        }
+    }
+
+    pub fn record(&mut self, d: Duration) {
+        let us = d.as_micros().min(u64::MAX as u128) as u64;
+        self.counts[Self::bucket_of(us)] += 1;
+        self.total += 1;
+        self.sum_us += us as u128;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn mean(&self) -> Duration {
+        if self.total == 0 {
+            return Duration::ZERO;
+        }
+        Duration::from_micros((self.sum_us / self.total as u128) as u64)
+    }
+
+    /// Upper bound of the bucket containing the q-quantile observation.
+    /// Resolution is the power-of-two bucket width: good enough for p50/p99
+    /// reporting, free at record time.
+    pub fn quantile(&self, q: f64) -> Duration {
+        if self.total == 0 {
+            return Duration::ZERO;
+        }
+        let rank = ((q * self.total as f64).ceil() as u64).clamp(1, self.total);
+        let mut seen = 0;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return Duration::from_micros(1u64 << (i + 1));
+            }
+        }
+        Duration::from_micros(1u64 << BUCKETS)
+    }
+
+    pub fn merge(&mut self, other: &Histogram) {
+        for i in 0..BUCKETS {
+            self.counts[i] += other.counts[i];
+        }
+        self.total += other.total;
+        self.sum_us += other.sum_us;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_layout() {
+        assert_eq!(Histogram::bucket_of(0), 0);
+        assert_eq!(Histogram::bucket_of(1), 0);
+        assert_eq!(Histogram::bucket_of(2), 1);
+        assert_eq!(Histogram::bucket_of(3), 1);
+        assert_eq!(Histogram::bucket_of(4), 2);
+        assert_eq!(Histogram::bucket_of(1024), 10);
+    }
+
+    #[test]
+    fn mean_is_exact() {
+        let mut h = Histogram::new();
+        h.record(Duration::from_micros(100));
+        h.record(Duration::from_micros(300));
+        assert_eq!(h.mean(), Duration::from_micros(200));
+        assert_eq!(h.count(), 2);
+    }
+
+    #[test]
+    fn quantile_bounds_observations() {
+        let mut h = Histogram::new();
+        for us in [10u64, 20, 30, 40, 50, 5000] {
+            h.record(Duration::from_micros(us));
+        }
+        let p50 = h.quantile(0.5);
+        assert!(p50 >= Duration::from_micros(30));
+        assert!(p50 <= Duration::from_micros(64));
+        let p99 = h.quantile(0.99);
+        assert!(p99 >= Duration::from_micros(5000));
+    }
+
+    #[test]
+    fn merge_adds_counts() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        a.record(Duration::from_micros(5));
+        b.record(Duration::from_micros(500));
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+    }
+
+    #[test]
+    fn empty_histogram() {
+        let h = Histogram::new();
+        assert_eq!(h.mean(), Duration::ZERO);
+        assert_eq!(h.quantile(0.99), Duration::ZERO);
+    }
+}

@@ -1,0 +1,60 @@
+//! Small shared utilities: online statistics, stopwatches, histograms,
+//! formatting helpers.
+
+pub mod hist;
+pub mod stats;
+pub mod timer;
+
+pub use hist::Histogram;
+pub use stats::{OnlineStats, Summary};
+pub use timer::Stopwatch;
+
+/// Format a duration in adaptive units (`1.23s`, `45.6ms`, `789µs`).
+pub fn fmt_duration(d: std::time::Duration) -> String {
+    let s = d.as_secs_f64();
+    if s >= 1.0 {
+        format!("{s:.2}s")
+    } else if s >= 1e-3 {
+        format!("{:.2}ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.2}µs", s * 1e6)
+    } else {
+        format!("{:.0}ns", s * 1e9)
+    }
+}
+
+/// Format a count with thousands separators: `1234567` -> `1,234,567`.
+pub fn fmt_count(n: u64) -> String {
+    let raw = n.to_string();
+    let bytes = raw.as_bytes();
+    let mut out = String::with_capacity(raw.len() + raw.len() / 3);
+    for (i, b) in bytes.iter().enumerate() {
+        if i > 0 && (bytes.len() - i) % 3 == 0 {
+            out.push(',');
+        }
+        out.push(*b as char);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn duration_units() {
+        assert_eq!(fmt_duration(Duration::from_secs(2)), "2.00s");
+        assert_eq!(fmt_duration(Duration::from_millis(45)), "45.00ms");
+        assert_eq!(fmt_duration(Duration::from_micros(789)), "789.00µs");
+        assert_eq!(fmt_duration(Duration::from_nanos(12)), "12ns");
+    }
+
+    #[test]
+    fn count_separators() {
+        assert_eq!(fmt_count(0), "0");
+        assert_eq!(fmt_count(999), "999");
+        assert_eq!(fmt_count(1000), "1,000");
+        assert_eq!(fmt_count(1234567), "1,234,567");
+    }
+}

@@ -1,0 +1,111 @@
+//! Stopwatch helpers. The paper leans on high-resolution timers
+//! (`process.hrtime()` / `Performance.now()`); `std::time::Instant` is the
+//! Rust equivalent (monotonic, independent of the system clock).
+
+use std::time::{Duration, Instant};
+
+/// A restartable stopwatch that can accumulate across segments.
+#[derive(Debug, Clone)]
+pub struct Stopwatch {
+    started: Option<Instant>,
+    accumulated: Duration,
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Stopwatch {
+    /// Create a stopped stopwatch with zero accumulated time.
+    pub fn new() -> Self {
+        Stopwatch { started: None, accumulated: Duration::ZERO }
+    }
+
+    /// Create and immediately start.
+    pub fn started() -> Self {
+        Stopwatch { started: Some(Instant::now()), accumulated: Duration::ZERO }
+    }
+
+    pub fn start(&mut self) {
+        if self.started.is_none() {
+            self.started = Some(Instant::now());
+        }
+    }
+
+    pub fn stop(&mut self) {
+        if let Some(t0) = self.started.take() {
+            self.accumulated += t0.elapsed();
+        }
+    }
+
+    pub fn reset(&mut self) {
+        self.started = None;
+        self.accumulated = Duration::ZERO;
+    }
+
+    pub fn is_running(&self) -> bool {
+        self.started.is_some()
+    }
+
+    /// Total accumulated time, including the live segment if running.
+    pub fn elapsed(&self) -> Duration {
+        match self.started {
+            Some(t0) => self.accumulated + t0.elapsed(),
+            None => self.accumulated,
+        }
+    }
+}
+
+/// Time one closure invocation.
+pub fn time_it<R>(f: impl FnOnce() -> R) -> (R, Duration) {
+    let t0 = Instant::now();
+    let r = f();
+    (r, t0.elapsed())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread::sleep;
+
+    #[test]
+    fn accumulates_across_segments() {
+        let mut w = Stopwatch::new();
+        assert!(!w.is_running());
+        w.start();
+        sleep(Duration::from_millis(5));
+        w.stop();
+        let first = w.elapsed();
+        assert!(first >= Duration::from_millis(4));
+        w.start();
+        sleep(Duration::from_millis(5));
+        w.stop();
+        assert!(w.elapsed() > first);
+    }
+
+    #[test]
+    fn reset_zeroes() {
+        let mut w = Stopwatch::started();
+        sleep(Duration::from_millis(2));
+        w.reset();
+        assert_eq!(w.elapsed(), Duration::ZERO);
+        assert!(!w.is_running());
+    }
+
+    #[test]
+    fn double_start_is_idempotent() {
+        let mut w = Stopwatch::started();
+        w.start(); // must not reset the running segment
+        sleep(Duration::from_millis(2));
+        assert!(w.elapsed() >= Duration::from_millis(1));
+    }
+
+    #[test]
+    fn time_it_returns_value() {
+        let (v, d) = time_it(|| 42);
+        assert_eq!(v, 42);
+        assert!(d < Duration::from_secs(1));
+    }
+}

@@ -1,0 +1,296 @@
+//! Cross-module integration tests: full system paths over real sockets and
+//! real AOT artifacts. (`cargo test --test integration`)
+
+use std::sync::atomic::AtomicBool;
+use std::time::Duration;
+
+use nodio::client::{
+    ClientConfig, ClientProcess, EngineChoice, VolunteerClient, WorkerMode,
+};
+use nodio::coordinator::{PoolServer, PoolServerConfig};
+use nodio::ea::BitString;
+use nodio::http::{HttpClient, Method, Request};
+use nodio::json::Json;
+use nodio::problems::{BitProblem, Trap};
+use nodio::runtime::xla::EpochState;
+use nodio::runtime::{NativeEngine, XlaEngine};
+use nodio::testkit::wait_until;
+
+// ---------------------------------------------------------------------
+// Engine agreement: the native GA and the AOT artifact implement the same
+// algorithm end-to-end.
+// ---------------------------------------------------------------------
+
+#[test]
+fn xla_and_native_engines_solve_the_same_problem() {
+    // Both engines must solve trap-40 from a random start within a modest
+    // epoch budget (two-point crossover makes this reliable).
+    let mut xla = XlaEngine::load_default().expect("make artifacts first");
+    let mut state = EpochState::random(512, 160, 80.0, 1234);
+    let mut solved = false;
+    for _ in 0..40 {
+        let r = xla.ea_epoch(&mut state, None, "pallas").unwrap();
+        if r.solved {
+            solved = true;
+            break;
+        }
+    }
+    assert!(solved, "xla engine failed to solve trap-40 in 40 epochs");
+
+    let native = NativeEngine::new();
+    let (mut island, mut rng) = native.new_island(512, 1234);
+    let trap = Trap::paper();
+    let mut solved = false;
+    for _ in 0..40 {
+        island.run_epoch(&trap, 100, &mut rng);
+        if island.is_solved(&trap) {
+            solved = true;
+            break;
+        }
+    }
+    assert!(solved, "native engine failed to solve trap-40 in 40 epochs");
+}
+
+#[test]
+fn trap_fitness_identical_across_engines() {
+    let mut xla = XlaEngine::load_default().expect("artifacts");
+    let native = NativeEngine::new();
+    let mut rng = nodio::rng::SplitMix64::new(99);
+    use nodio::rng::Rng64;
+    let pop: Vec<f32> =
+        (0..256 * 160).map(|_| (rng.next_u64() & 1) as f32).collect();
+    let native_fit = native.eval_trap_batch(&pop, 256);
+    for variant in ["pallas", "jnp"] {
+        let xla_fit = xla.eval_trap(&pop, 256, variant).unwrap();
+        assert_eq!(native_fit.len(), xla_fit.len());
+        for (a, b) in native_fit.iter().zip(&xla_fit) {
+            assert!((a - b).abs() < 1e-4, "{variant}: {a} vs {b}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Full-system: server + clients over real sockets.
+// ---------------------------------------------------------------------
+
+#[test]
+fn two_native_clients_solve_cooperatively() {
+    let handle = PoolServer::spawn(
+        "127.0.0.1:0",
+        PoolServerConfig::default(),
+    )
+    .unwrap();
+    let clients: Vec<ClientProcess> = (0..2)
+        .map(|i| {
+            ClientProcess::spawn(
+                Some(handle.addr),
+                WorkerMode::W2,
+                EngineChoice::Native,
+                256,
+                500 + i,
+                &format!("coop-{i}"),
+                u64::MAX,
+                1.0,
+            )
+        })
+        .collect();
+
+    // Wait for the server to record at least one completed experiment.
+    let mut monitor = HttpClient::connect(handle.addr).unwrap();
+    let solved = wait_until(Duration::from_secs(60), || {
+        monitor
+            .send(&Request::new(Method::Get, "/experiment/state"))
+            .ok()
+            .and_then(|r| r.json_body().ok())
+            .and_then(|b| b.get_u64("completed"))
+            .unwrap_or(0)
+            >= 1
+    });
+    for c in clients {
+        c.shutdown();
+    }
+    assert!(solved, "no experiment completed within 60s");
+
+    // The stats route exposes the solved experiment with its solver UUID.
+    let stats = monitor
+        .send(&Request::new(Method::Get, "/stats"))
+        .unwrap()
+        .json_body()
+        .unwrap();
+    let experiments = stats.get("experiments").unwrap().as_arr().unwrap();
+    assert!(!experiments.is_empty());
+    let first = &experiments[0];
+    assert!(first.get_str("solved_by").unwrap().starts_with("coop-"));
+    let solution = first.get_str("solution").unwrap();
+    assert_eq!(solution.len(), 160);
+    assert!(solution.bytes().all(|b| b == b'1'));
+    handle.stop();
+}
+
+#[test]
+fn xla_client_migrates_against_server() {
+    // One XLA-engine volunteer doing real artifact executions through the
+    // full HTTP migration loop.
+    let handle = PoolServer::spawn(
+        "127.0.0.1:0",
+        PoolServerConfig::default(),
+    )
+    .unwrap();
+    let stop = AtomicBool::new(false);
+    let mut client = VolunteerClient::new(ClientConfig {
+        server: Some(handle.addr),
+        engine: EngineChoice::XlaPallas,
+        pop_size: 128,
+        max_epochs: 2,
+        restart_on_solution: false,
+        uuid: "xla-volunteer".into(),
+        ..Default::default()
+    })
+    .unwrap();
+    let stats = client.run(&stop);
+    assert_eq!(stats.epochs, 2);
+    assert_eq!(stats.migrations_ok, 4); // 2 PUTs + 2 GETs
+    assert!(stats.best_fitness > 40.0);
+
+    // Server saw the XLA island's chromosomes.
+    let mut monitor = HttpClient::connect(handle.addr).unwrap();
+    let state = monitor
+        .send(&Request::new(Method::Get, "/experiment/state"))
+        .unwrap()
+        .json_body()
+        .unwrap();
+    assert_eq!(state.get_u64("puts"), Some(2));
+    handle.stop();
+}
+
+#[test]
+fn migration_actually_transfers_genetic_material() {
+    // Plant a solution in the pool; a fresh island must pick it up via
+    // GET and solve instantly — the migration path works end to end.
+    let handle = PoolServer::spawn(
+        "127.0.0.1:0",
+        PoolServerConfig::default(),
+    )
+    .unwrap();
+    let mut seeder = HttpClient::connect(handle.addr).unwrap();
+    let solution = BitString::ones(160);
+    let resp = seeder
+        .send(
+            &Request::new(Method::Put, "/experiment/chromosome").with_json(
+                &Json::obj(vec![
+                    ("chromosome", solution.to_string01().into()),
+                    ("fitness", 79.0.into()), // below target: stays in pool
+                    ("uuid", "seeder".into()),
+                ]),
+            ),
+        )
+        .unwrap();
+    assert_eq!(resp.status, 200);
+
+    let stop = AtomicBool::new(false);
+    let mut client = VolunteerClient::new(ClientConfig {
+        server: Some(handle.addr),
+        engine: EngineChoice::Native,
+        pop_size: 64,
+        max_epochs: 3,
+        restart_on_solution: false,
+        uuid: "receiver".into(),
+        ..Default::default()
+    })
+    .unwrap();
+    let stats = client.run(&stop);
+    // Epoch 1 PUTs its own best and GETs the planted chromosome; epoch 2
+    // injects it. The all-ones string IS the solution, so the island
+    // solves immediately after injection.
+    assert!(stats.solutions_found >= 1, "{stats:?}");
+    assert!(stats.immigrants_received >= 1);
+    handle.stop();
+}
+
+#[test]
+fn sabotage_rejection_end_to_end() {
+    // Enable server-side re-evaluation via the swarm config path: build a
+    // custom server with the verify hook by driving routes directly over
+    // HTTP is not possible (hook is in-process), so this test documents
+    // the honest path: fake fitness with a wrong value is ACCEPTED when
+    // no hook is set (the paper's open-trust model) — and the pool then
+    // contains the lie. This is exactly the vulnerability the paper
+    // acknowledges; the hook (tested in routes.rs) is our extension.
+    let handle = PoolServer::spawn(
+        "127.0.0.1:0",
+        PoolServerConfig {
+            target_fitness: 1e9,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let mut c = HttpClient::connect(handle.addr).unwrap();
+    let resp = c
+        .send(
+            &Request::new(Method::Put, "/experiment/chromosome").with_json(
+                &Json::obj(vec![
+                    ("chromosome", "0".repeat(160).as_str().into()),
+                    ("fitness", 999.0.into()), // a lie
+                    ("uuid", "saboteur".into()),
+                ]),
+            ),
+        )
+        .unwrap();
+    assert_eq!(resp.status, 200); // trust model accepts it
+    handle.stop();
+}
+
+// ---------------------------------------------------------------------
+// Multi-client stress: the single-threaded server under many writers.
+// ---------------------------------------------------------------------
+
+#[test]
+fn sixteen_clients_no_lost_requests() {
+    let handle = PoolServer::spawn(
+        "127.0.0.1:0",
+        PoolServerConfig {
+            target_fitness: 1e18,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let addr = handle.addr;
+    let per_client = 25u64;
+    let threads: Vec<_> = (0..16)
+        .map(|t| {
+            std::thread::spawn(move || {
+                let mut c = HttpClient::connect(addr).unwrap();
+                for i in 0..per_client {
+                    let resp = c
+                        .send(
+                            &Request::new(
+                                Method::Put,
+                                "/experiment/chromosome",
+                            )
+                            .with_json(&Json::obj(vec![
+                                (
+                                    "chromosome",
+                                    "01".repeat(80).as_str().into(),
+                                ),
+                                ("fitness", (i as f64).into()),
+                                ("uuid", format!("stress-{t}").into()),
+                            ])),
+                        )
+                        .unwrap();
+                    assert_eq!(resp.status, 200);
+                }
+            })
+        })
+        .collect();
+    for t in threads {
+        t.join().unwrap();
+    }
+    let mut c = HttpClient::connect(addr).unwrap();
+    let state = c
+        .send(&Request::new(Method::Get, "/experiment/state"))
+        .unwrap()
+        .json_body()
+        .unwrap();
+    assert_eq!(state.get_u64("puts"), Some(16 * per_client));
+    handle.stop();
+}

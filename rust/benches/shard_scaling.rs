@@ -1,0 +1,254 @@
+//! E3 extension: throughput vs shard count for the sharded pool
+//! coordinator, against two baselines — the paper's single-loop server and
+//! the thread-per-connection ablation.
+//!
+//! The paper's single non-blocking thread "allows the service of many
+//! requests" until it saturates one core; `coordinator::cluster` spreads
+//! the same lock-free loop across N cores. This bench draws the
+//! throughput-vs-shards curve and then verifies the semantics that
+//! sharding must NOT change: a solving PUT on one shard terminates the
+//! experiment observed from a connection on another shard.
+//!
+//! `NODIO_BENCH_FULL=1` lengthens rounds and widens the sweep.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use nodio::bench::Table;
+use nodio::coordinator::cluster::{ClusterConfig, ShardedPoolServer};
+use nodio::coordinator::{PoolServer, PoolServerConfig};
+use nodio::http::threaded::ThreadedServer;
+use nodio::http::{HttpClient, Method, Request, Response, Service};
+use nodio::json::Json;
+use nodio::testkit::wait_until;
+use nodio::util::Histogram;
+
+/// One client thread: PUT/GET migration pairs until `stop`.
+fn hammer(
+    addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    count: Arc<AtomicU64>,
+    uuid: String,
+) -> Histogram {
+    let mut hist = Histogram::new();
+    let mut client = match HttpClient::connect(addr) {
+        Ok(c) => c,
+        Err(_) => return hist,
+    };
+    let chromosome = "01".repeat(80);
+    let body = Json::obj(vec![
+        ("chromosome", chromosome.as_str().into()),
+        ("fitness", 40.0.into()),
+        ("uuid", uuid.as_str().into()),
+    ]);
+    let put =
+        Request::new(Method::Put, "/experiment/chromosome").with_json(&body);
+    let get = Request::new(Method::Get, "/experiment/random");
+    while !stop.load(Ordering::Acquire) {
+        let t0 = Instant::now();
+        if client.send(&put).is_err() {
+            break;
+        }
+        if client.send(&get).is_err() {
+            break;
+        }
+        hist.record(t0.elapsed());
+        count.fetch_add(2, Ordering::Relaxed);
+    }
+    hist
+}
+
+fn run_round(
+    addr: std::net::SocketAddr,
+    clients: usize,
+    secs: f64,
+) -> (u64, Histogram) {
+    let stop = Arc::new(AtomicBool::new(false));
+    let count = Arc::new(AtomicU64::new(0));
+    let threads: Vec<_> = (0..clients)
+        .map(|i| {
+            let stop = stop.clone();
+            let count = count.clone();
+            std::thread::spawn(move || {
+                hammer(addr, stop, count, format!("bench-{i}"))
+            })
+        })
+        .collect();
+    std::thread::sleep(Duration::from_secs_f64(secs));
+    stop.store(true, Ordering::Release);
+    let mut hist = Histogram::new();
+    for t in threads {
+        hist.merge(&t.join().unwrap());
+    }
+    (count.load(Ordering::Relaxed), hist)
+}
+
+fn cluster_config(shards: usize) -> ClusterConfig {
+    ClusterConfig {
+        shards,
+        base: PoolServerConfig {
+            target_fitness: 1e18, // never solve during throughput rounds
+            ..Default::default()
+        },
+        ..ClusterConfig::default()
+    }
+}
+
+/// Semantics check: solution on shard A is detected from shard B.
+fn verify_cross_shard_termination() -> bool {
+    let handle = ShardedPoolServer::spawn(
+        "127.0.0.1:0",
+        ClusterConfig {
+            shards: 4,
+            base: PoolServerConfig {
+                n_bits: 8,
+                target_fitness: 8.0,
+                ..Default::default()
+            },
+            ..ClusterConfig::default()
+        },
+    )
+    .expect("cluster");
+    // Round-robin: these two connections land on different shards.
+    let mut observer = HttpClient::connect(handle.addr).expect("observer");
+    let mut solver = HttpClient::connect(handle.addr).expect("solver");
+    let put = Request::new(Method::Put, "/experiment/chromosome").with_json(
+        &Json::obj(vec![
+            ("chromosome", "11111111".into()),
+            ("fitness", 8.0.into()),
+            ("uuid", "solver".into()),
+        ]),
+    );
+    let resp = solver.send(&put).expect("solving PUT");
+    let solved_ack = resp.status == 201;
+    let observed = wait_until(Duration::from_secs(10), || {
+        observer
+            .send(&Request::new(Method::Get, "/experiment/state"))
+            .ok()
+            .and_then(|r| r.json_body().ok())
+            .and_then(|b| b.get_u64("completed"))
+            .unwrap_or(0)
+            >= 1
+    });
+    handle.stop();
+    solved_ack && observed
+}
+
+fn main() {
+    let full = std::env::var("NODIO_BENCH_FULL").is_ok();
+    let secs = if full { 3.0 } else { 1.0 };
+    let clients = if full { 32 } else { 16 };
+    let shard_counts: &[usize] =
+        if full { &[1, 2, 4, 8] } else { &[1, 2, 4] };
+
+    println!(
+        "== E3x: sharded pool coordinator scaling \
+         ({clients} clients, round = {secs}s of PUT+GET pairs) =="
+    );
+    let mut table =
+        Table::new(&["server", "shards", "req/s", "pair p50", "pair p99"]);
+
+    // Baseline 1: the paper's single event loop.
+    let single_rate;
+    {
+        let handle = PoolServer::spawn(
+            "127.0.0.1:0",
+            PoolServerConfig { target_fitness: 1e18, ..Default::default() },
+        )
+        .expect("single-loop server");
+        let (reqs, hist) = run_round(handle.addr, clients, secs);
+        single_rate = reqs as f64 / secs;
+        table.row(&[
+            "event-loop".into(),
+            "1".into(),
+            format!("{single_rate:.0}"),
+            format!("{:?}", hist.quantile(0.50)),
+            format!("{:?}", hist.quantile(0.99)),
+        ]);
+        handle.stop();
+    }
+
+    // Baseline 2: thread-per-connection with a locked service.
+    {
+        struct LockedPoolish {
+            entries: Vec<String>,
+        }
+        impl Service for LockedPoolish {
+            fn handle(&mut self, req: &Request) -> Response {
+                match req.method {
+                    Method::Put => {
+                        if self.entries.len() < 1024 {
+                            self.entries.push("x".into());
+                        }
+                        Response::json(&Json::obj(vec![(
+                            "solved",
+                            false.into(),
+                        )]))
+                    }
+                    _ => Response::json(&Json::obj(vec![(
+                        "chromosome",
+                        "01".repeat(80).into(),
+                    )])),
+                }
+            }
+        }
+        let server = ThreadedServer::spawn(
+            "127.0.0.1:0",
+            LockedPoolish { entries: Vec::new() },
+        )
+        .expect("threaded server");
+        let (reqs, hist) = run_round(server.addr, clients, secs);
+        table.row(&[
+            "thread-per-conn".into(),
+            "-".into(),
+            format!("{:.0}", reqs as f64 / secs),
+            format!("{:?}", hist.quantile(0.50)),
+            format!("{:?}", hist.quantile(0.99)),
+        ]);
+        server.stop();
+    }
+
+    // The sharded coordinator across the sweep.
+    let mut rate_at_4 = None;
+    for &shards in shard_counts {
+        let handle =
+            ShardedPoolServer::spawn("127.0.0.1:0", cluster_config(shards))
+                .expect("sharded server");
+        let (reqs, hist) = run_round(handle.addr, clients, secs);
+        let rate = reqs as f64 / secs;
+        if shards == 4 {
+            rate_at_4 = Some(rate);
+        }
+        table.row(&[
+            "sharded".into(),
+            shards.to_string(),
+            format!("{rate:.0}"),
+            format!("{:?}", hist.quantile(0.50)),
+            format!("{:?}", hist.quantile(0.99)),
+        ]);
+        handle.stop();
+    }
+    table.print();
+
+    if let Some(rate4) = rate_at_4 {
+        let speedup = rate4 / single_rate.max(1.0);
+        println!(
+            "\n4-shard aggregate vs single loop: {rate4:.0} vs \
+             {single_rate:.0} req/s ({speedup:.2}x) — {}",
+            if rate4 > single_rate {
+                "PASS (above single-loop baseline)"
+            } else {
+                "FAIL (not above single-loop baseline)"
+            }
+        );
+    }
+
+    print!("cross-shard experiment termination: ");
+    if verify_cross_shard_termination() {
+        println!("PASS (solution on one shard observed from another)");
+    } else {
+        println!("FAIL");
+        std::process::exit(1);
+    }
+}

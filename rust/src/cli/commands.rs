@@ -10,7 +10,8 @@ use crate::bench::Table;
 use crate::client::driver::EngineChoice;
 use crate::client::volunteer::{ClientConfig, VolunteerClient};
 use crate::client::worker::WorkerMode;
-use crate::coordinator::{PoolServer, PoolServerConfig};
+use crate::coordinator::cluster::{ClusterConfig, PoolBackend};
+use crate::coordinator::PoolServerConfig;
 use crate::problems::F15Instance;
 use crate::runtime::{NativeEngine, XlaEngine};
 use crate::sim::{run_baseline, run_swarm, run_swarm_trace, ChurnConfig,
@@ -22,14 +23,19 @@ usage: nodio <command> [options]
 
 commands:
   server    --addr 127.0.0.1:8080 [--target 80] [--bits 160] [--log x.jsonl]
-            run the pool server until killed
+            [--shards N] [--migration-ms 100] [--migration-k 3]
+            run the pool server until killed; --shards N > 1 runs the
+            multi-core sharded coordinator (N event-loop shards with
+            round-robin connection routing and best-K pool gossip;
+            --log applies to the single-loop server only)
   client    --server HOST:PORT [--engine native|xla|jnp] [--pop 256]
             [--epochs N] [--uuid NAME] [--no-restart]
             run one volunteer island
   swarm     [--clients 4] [--engine native|xla|jnp] [--mode basic|w2]
             [--solutions 1] [--timeout-s 60] [--churn-rate R]
-            [--session-s S] [--seed N]
-            in-process server + simulated volunteers (experiment E6)
+            [--session-s S] [--seed N] [--shards N]
+            in-process server + simulated volunteers (experiment E6);
+            --shards N > 1 drives the sharded pool coordinator
   baseline  [--pop 512] [--runs 50] [--max-evals 5000000]
             [--engine native|xla|jnp] [--seed N]
             the Figure 3 desktop baseline (experiment E1)
@@ -64,16 +70,36 @@ fn engine_arg(args: &Args) -> Result<EngineChoice> {
 
 fn cmd_server(args: &Args) -> Result<()> {
     let addr = args.get_or("addr", "127.0.0.1:8080").to_string();
+    let shards = args.get_usize("shards", 1).map_err(|e| anyhow!(e))?;
     let config = PoolServerConfig {
         target_fitness: args.get_f64("target", 80.0).map_err(|e| anyhow!(e))?,
         n_bits: args.get_usize("bits", 160).map_err(|e| anyhow!(e))?,
         log_path: args.get("log").map(std::path::PathBuf::from),
         ..Default::default()
     };
-    let handle = PoolServer::spawn(&addr, config)?;
-    println!("nodio pool server listening on {}", handle.addr);
+    let cluster = ClusterConfig {
+        shards,
+        migration_interval: Duration::from_millis(
+            args.get_u64("migration-ms", 100).map_err(|e| anyhow!(e))?,
+        ),
+        migration_k: args.get_usize("migration-k", 3).map_err(|e| anyhow!(e))?,
+        base: config,
+    };
+    // The handle stays alive for the process lifetime — dropping it would
+    // stop the server threads.
+    let running = PoolBackend::spawn(&addr, cluster)?;
+    if running.shards() > 1 {
+        println!(
+            "nodio sharded pool server listening on {} ({} shards)",
+            running.addr(),
+            running.shards()
+        );
+    } else {
+        println!("nodio pool server listening on {}", running.addr());
+    }
     println!("routes: PUT /experiment/chromosome, GET /experiment/random,");
-    println!("        GET /experiment/state, GET /stats, POST /experiment/reset");
+    println!("        GET /experiment/state, GET /stats, GET /metrics,");
+    println!("        POST /experiment/reset");
     // Run until killed.
     loop {
         std::thread::sleep(Duration::from_secs(3600));
@@ -114,6 +140,7 @@ fn cmd_swarm(args: &Args) -> Result<()> {
     let churn_rate = args.get_f64("churn-rate", 0.0).map_err(|e| anyhow!(e))?;
     let config = SwarmConfig {
         n_clients: args.get_usize("clients", 4).map_err(|e| anyhow!(e))?,
+        shards: args.get_usize("shards", 1).map_err(|e| anyhow!(e))?,
         engine: engine_arg(args)?,
         mode: match args.get_or("mode", "w2") {
             "basic" => WorkerMode::Basic,
@@ -133,11 +160,12 @@ fn cmd_swarm(args: &Args) -> Result<()> {
         ..Default::default()
     };
     println!(
-        "swarm: {} clients ({:?}, {}), target {} solutions",
+        "swarm: {} clients ({:?}, {}), target {} solutions, {} shard(s)",
         config.n_clients,
         config.mode,
         config.engine.as_str(),
-        config.target_solutions
+        config.target_solutions,
+        config.shards.max(1)
     );
     let report = run_swarm(config)?;
     println!(

@@ -221,6 +221,16 @@ mod tests {
         assert_eq!(out.best.count_ones(), 160);
     }
 
+    #[cfg(not(feature = "xla-runtime"))]
+    #[test]
+    fn xla_driver_unavailable_without_feature() {
+        let err = IslandDriver::new(EngineChoice::XlaPallas, 128, 4)
+            .err()
+            .expect("stub build must refuse the XLA engine");
+        assert!(err.to_string().contains("xla-runtime"), "{err}");
+    }
+
+    #[cfg(feature = "xla-runtime")]
     #[test]
     fn xla_driver_epoch_and_restart() {
         let mut d = IslandDriver::new(EngineChoice::XlaPallas, 128, 4).unwrap();

@@ -1,0 +1,1230 @@
+//! Sharded pool coordinator: a multi-core cluster of single-threaded
+//! event loops.
+//!
+//! The paper concedes the single pool server "is a bottleneck [...] the
+//! fact that it runs as a non-blocking single thread allows the service of
+//! many requests" — and E3 measures where that single loop saturates. This
+//! module breaks the single-thread ceiling WITHOUT giving up the paper's
+//! architectural bet: no locks appear on any request path. Instead of one
+//! event loop there are N independent shards, each a full copy of the
+//! non-blocking loop ([`crate::http::server::ConnDriver`] behind its own
+//! epoll) owning a private partition of the chromosome pool:
+//!
+//! * **Acceptor**: one thread owns the listener and deals accepted
+//!   connections round-robin to shards over a handoff queue plus the
+//!   shard's [`Waker`]. Each queue is written by the acceptor only and
+//!   read by its shard only (spsc discipline; the internal mutex is
+//!   uncontended by construction).
+//! * **Migration gossip**: every `migration_interval`, each shard sends
+//!   its best-K pool entries to every other shard's inbox — the
+//!   island-model analog of the paper's section-2 migration, one level up:
+//!   shards are islands of the pool itself. Convergence therefore matches
+//!   single-pool semantics (good genes reach every partition within a
+//!   gossip period) while writes stay partition-local.
+//! * **Fan-in observability and termination**: `/experiment/state`,
+//!   `/stats` and `/metrics` aggregate across shards through shared
+//!   atomics (relaxed counters, a CAS-max for global best fitness).
+//!   A solving PUT on ANY shard ends the experiment for ALL shards: the
+//!   winner advances a global experiment epoch with one CAS, and every
+//!   shard clears its partition when it observes the new epoch.
+//!
+//! Unsupported relative to the single-loop [`super::server::PoolServer`]
+//! (by design, for now): per-UUID accounting in `/stats`, JSONL event
+//! logging, fitness verification and rate limiting. The single-loop
+//! server remains the default (`--shards 1`).
+
+use std::collections::VecDeque;
+use std::io;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::os::fd::AsRawFd;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::experiment::ExperimentLog;
+use super::pool::{ChromosomePool, PoolEntry};
+use super::server::{PoolServer, PoolServerConfig};
+use crate::eventloop::{Epoll, Event, Interest, Waker};
+use crate::http::server::{
+    ConnDriver, ServerConfig, ServerHandle, ServerStats, TOKEN_LISTENER,
+    TOKEN_WAKER,
+};
+use crate::http::{Method, Request, Response, Service};
+use crate::json::Json;
+use crate::rng::Xoshiro256pp;
+
+/// Sharded pool server configuration.
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    /// Number of event-loop shards (1 = degenerate single-loop cluster).
+    pub shards: usize,
+    /// Pool/experiment settings shared with the single-loop server. The
+    /// pool capacity is split evenly across shards; `log_path`,
+    /// `verify_fitness` and `rate_limit` are ignored (see module docs).
+    pub base: PoolServerConfig,
+    /// Gossip period for inter-shard best-K migration.
+    pub migration_interval: Duration,
+    /// How many of a shard's best entries each gossip round carries.
+    pub migration_k: usize,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            shards: 2,
+            base: PoolServerConfig::default(),
+            migration_interval: Duration::from_millis(100),
+            migration_k: 3,
+        }
+    }
+}
+
+/// Map f64 to a u64 whose unsigned order matches the f64 total order, so
+/// the cluster-wide best fitness is one `fetch_max` away (no locks on the
+/// PUT path).
+fn ordered_key(f: f64) -> u64 {
+    let bits = f.to_bits();
+    if bits >> 63 == 1 {
+        !bits
+    } else {
+        bits | (1u64 << 63)
+    }
+}
+
+fn key_to_f64(k: u64) -> f64 {
+    if k >> 63 == 1 {
+        f64::from_bits(k & !(1u64 << 63))
+    } else {
+        f64::from_bits(!k)
+    }
+}
+
+/// A handoff queue between exactly one producer and one consumer thread
+/// (acceptor -> shard for connections; peer shard -> shard for migration
+/// batches, where each producer pushes rarely). The mutex is held for a
+/// push or a drain only — never across I/O or request handling — so the
+/// request path stays effectively lock-free.
+struct Handoff<T> {
+    q: Mutex<VecDeque<T>>,
+}
+
+impl<T> Handoff<T> {
+    fn new() -> Handoff<T> {
+        Handoff { q: Mutex::new(VecDeque::new()) }
+    }
+
+    fn push(&self, value: T) {
+        self.q.lock().unwrap().push_back(value);
+    }
+
+    fn drain(&self) -> Vec<T> {
+        let mut q = self.q.lock().unwrap();
+        q.drain(..).collect()
+    }
+}
+
+/// One gossip payload: a snapshot of a shard's best entries, tagged with
+/// the experiment epoch it belongs to (stale batches are dropped).
+struct MigrationBatch {
+    experiment: u64,
+    entries: Vec<PoolEntry>,
+}
+
+/// Per-shard mailbox + observability counters, readable by every shard
+/// (for the aggregated routes) and by the handle.
+struct ShardSlot {
+    waker: Waker,
+    conns_in: Handoff<TcpStream>,
+    migrations_in: Handoff<MigrationBatch>,
+    puts: AtomicU64,
+    gets: AtomicU64,
+    /// Connections the acceptor routed here (cumulative).
+    handoffs: AtomicU64,
+    /// Currently registered connections.
+    open_conns: AtomicU64,
+    /// Current partition size.
+    pool_len: AtomicU64,
+    /// Gossip entries merged into this partition (cumulative).
+    migrations_rx: AtomicU64,
+}
+
+impl ShardSlot {
+    fn new(waker: Waker) -> ShardSlot {
+        ShardSlot {
+            waker,
+            conns_in: Handoff::new(),
+            migrations_in: Handoff::new(),
+            puts: AtomicU64::new(0),
+            gets: AtomicU64::new(0),
+            handoffs: AtomicU64::new(0),
+            open_conns: AtomicU64::new(0),
+            pool_len: AtomicU64::new(0),
+            migrations_rx: AtomicU64::new(0),
+        }
+    }
+}
+
+/// Cluster-global state: the experiment epoch, fan-in counters, and the
+/// completed-experiment history.
+struct ClusterShared {
+    target_fitness: f64,
+    experiment: AtomicU64,
+    puts: AtomicU64,
+    gets: AtomicU64,
+    /// Cumulative counts at the start of the current experiment, so
+    /// per-experiment puts/gets can be derived without per-shard resets.
+    exp_base_puts: AtomicU64,
+    exp_base_gets: AtomicU64,
+    /// `ordered_key` of the best fitness seen this experiment.
+    best_key: AtomicU64,
+    started: Mutex<Instant>,
+    completed: Mutex<Vec<ExperimentLog>>,
+    shutdown: AtomicBool,
+}
+
+impl ClusterShared {
+    fn new(target_fitness: f64) -> ClusterShared {
+        ClusterShared {
+            target_fitness,
+            experiment: AtomicU64::new(0),
+            puts: AtomicU64::new(0),
+            gets: AtomicU64::new(0),
+            exp_base_puts: AtomicU64::new(0),
+            exp_base_gets: AtomicU64::new(0),
+            best_key: AtomicU64::new(ordered_key(f64::NEG_INFINITY)),
+            started: Mutex::new(Instant::now()),
+            completed: Mutex::new(Vec::new()),
+            shutdown: AtomicBool::new(false),
+        }
+    }
+
+    fn best_fitness(&self) -> f64 {
+        key_to_f64(self.best_key.load(Ordering::Acquire))
+    }
+
+    fn completed_count(&self) -> u64 {
+        self.completed.lock().unwrap().len() as u64
+    }
+
+    /// Close the current experiment epoch if `expected` is still current.
+    /// Exactly one caller wins per epoch; the winner records the log and
+    /// resets the per-experiment aggregates. Returns whether we won.
+    fn finish_experiment(
+        &self,
+        expected: u64,
+        best_fitness: f64,
+        solved_by: Option<String>,
+        solution: Option<String>,
+    ) -> bool {
+        if self
+            .experiment
+            .compare_exchange(
+                expected,
+                expected + 1,
+                Ordering::AcqRel,
+                Ordering::Acquire,
+            )
+            .is_err()
+        {
+            return false;
+        }
+        let elapsed = {
+            let mut started = self.started.lock().unwrap();
+            let elapsed = started.elapsed();
+            *started = Instant::now();
+            elapsed
+        };
+        let puts_now = self.puts.load(Ordering::Relaxed);
+        let gets_now = self.gets.load(Ordering::Relaxed);
+        let log = ExperimentLog {
+            id: expected,
+            elapsed,
+            puts: puts_now
+                - self.exp_base_puts.swap(puts_now, Ordering::Relaxed),
+            gets: gets_now
+                - self.exp_base_gets.swap(gets_now, Ordering::Relaxed),
+            best_fitness,
+            solved_by,
+            solution,
+        };
+        self.completed.lock().unwrap().push(log);
+        self.best_key
+            .store(ordered_key(f64::NEG_INFINITY), Ordering::Release);
+        true
+    }
+}
+
+/// Per-shard configuration snapshot moved into the shard thread.
+struct ShardCfg {
+    id: usize,
+    http: ServerConfig,
+    n_bits: usize,
+    pool_capacity: usize,
+    seed: u64,
+    migration_interval: Duration,
+    migration_k: usize,
+}
+
+/// The request handler + partition state owned by one shard thread. Plain
+/// `&mut self` ownership: the event loop is the only caller, which is the
+/// same no-locks discipline the single server gets from `Rc<RefCell<..>>`.
+struct ShardService {
+    id: usize,
+    n_bits: usize,
+    migration_k: usize,
+    pool: ChromosomePool,
+    rng: Xoshiro256pp,
+    /// Experiment epoch this shard has caught up to.
+    local_experiment: u64,
+    shared: Arc<ClusterShared>,
+    slots: Arc<Vec<ShardSlot>>,
+}
+
+impl ShardService {
+    fn new(
+        cfg: &ShardCfg,
+        shared: Arc<ClusterShared>,
+        slots: Arc<Vec<ShardSlot>>,
+    ) -> ShardService {
+        ShardService {
+            id: cfg.id,
+            n_bits: cfg.n_bits,
+            migration_k: cfg.migration_k,
+            pool: ChromosomePool::new(cfg.pool_capacity),
+            rng: Xoshiro256pp::new(
+                cfg.seed ^ (cfg.id as u64).wrapping_mul(0x9E3779B97F4A7C15),
+            ),
+            local_experiment: shared.experiment.load(Ordering::Acquire),
+            shared,
+            slots,
+        }
+    }
+
+    fn slot(&self) -> &ShardSlot {
+        &self.slots[self.id]
+    }
+
+    fn publish_pool_len(&self) {
+        self.slot()
+            .pool_len
+            .store(self.pool.len() as u64, Ordering::Relaxed);
+    }
+
+    /// Catch up with the global experiment epoch: a solution (or reset) on
+    /// any shard clears every partition.
+    fn sync_epoch(&mut self) {
+        let global = self.shared.experiment.load(Ordering::Acquire);
+        if global != self.local_experiment {
+            self.local_experiment = global;
+            self.pool.clear();
+            self.publish_pool_len();
+        }
+    }
+
+    /// Merge gossiped entries from peer shards into the local partition.
+    fn drain_migrations(&mut self) {
+        let batches = self.slot().migrations_in.drain();
+        if batches.is_empty() {
+            return;
+        }
+        let mut merged = 0u64;
+        for batch in batches {
+            if batch.experiment != self.local_experiment {
+                continue; // stale epoch: the experiment already ended
+            }
+            for entry in batch.entries {
+                if !entry.fitness.is_finite() {
+                    continue;
+                }
+                let dup = self
+                    .pool
+                    .entries()
+                    .iter()
+                    .any(|e| e.chromosome == entry.chromosome);
+                if dup {
+                    continue;
+                }
+                self.pool.put(entry, &mut self.rng);
+                merged += 1;
+            }
+        }
+        if merged > 0 {
+            self.slot()
+                .migrations_rx
+                .fetch_add(merged, Ordering::Relaxed);
+            self.publish_pool_len();
+        }
+    }
+
+    /// Send this shard's best-K entries to every peer (the island-model
+    /// migration step, applied to pool partitions).
+    fn gossip(&mut self) {
+        if self.slots.len() <= 1 || self.pool.is_empty() {
+            return;
+        }
+        let mut by_fitness: Vec<&PoolEntry> =
+            self.pool.entries().iter().collect();
+        by_fitness.sort_by(|a, b| b.fitness.total_cmp(&a.fitness));
+        let k = self.migration_k.min(by_fitness.len());
+        if k == 0 {
+            return;
+        }
+        let best: Vec<PoolEntry> =
+            by_fitness[..k].iter().map(|e| (*e).clone()).collect();
+        for (i, slot) in self.slots.iter().enumerate() {
+            if i == self.id {
+                continue;
+            }
+            slot.migrations_in.push(MigrationBatch {
+                experiment: self.local_experiment,
+                entries: best.clone(),
+            });
+            slot.waker.wake();
+        }
+    }
+
+    fn total_pool_len(&self) -> u64 {
+        self.slots
+            .iter()
+            .map(|s| s.pool_len.load(Ordering::Relaxed))
+            .sum()
+    }
+
+    // -----------------------------------------------------------------
+    // Routes
+    // -----------------------------------------------------------------
+
+    fn banner(&self) -> Response {
+        Response::json(&Json::obj(vec![
+            ("name", "nodio".into()),
+            (
+                "experiment",
+                self.shared.experiment.load(Ordering::Acquire).into(),
+            ),
+            ("pool", self.total_pool_len().into()),
+            ("shards", self.slots.len().into()),
+        ]))
+    }
+
+    fn put_chromosome(&mut self, req: &Request) -> Response {
+        let body = match req.json() {
+            Ok(b) => b,
+            Err(e) => {
+                return Response::bad_request(&format!("bad json: {e}"))
+            }
+        };
+        let chromosome = match body.get_str("chromosome") {
+            Some(c) => c.to_string(),
+            None => return Response::bad_request("missing chromosome"),
+        };
+        // Reject non-finite fitness outright: a NaN here must never reach
+        // the pool or the global best CAS (threat model, section 1).
+        let fitness = match body.get_f64("fitness") {
+            Some(f) if f.is_finite() => f,
+            Some(_) => return Response::bad_request("non-finite fitness"),
+            None => return Response::bad_request("missing/invalid fitness"),
+        };
+        let uuid = body.get_str("uuid").unwrap_or("anonymous").to_string();
+        if chromosome.len() != self.n_bits
+            || !chromosome.bytes().all(|b| b == b'0' || b == b'1')
+        {
+            return Response::bad_request("malformed chromosome");
+        }
+
+        // Never insert into a partition belonging to a finished epoch.
+        self.sync_epoch();
+
+        self.shared.puts.fetch_add(1, Ordering::Relaxed);
+        self.slot().puts.fetch_add(1, Ordering::Relaxed);
+        let key = ordered_key(fitness);
+        self.shared.best_key.fetch_max(key, Ordering::AcqRel);
+        // If another shard finished the experiment between our sync_epoch
+        // and the fetch_max above, our fitness belongs to the finished
+        // epoch and may have overwritten the winner's best_key reset.
+        // Best-effort retraction: undo only if our value is still the
+        // stored max. (A smaller legitimate new-epoch best lost this way
+        // is re-established by that shard's next PUT; without this, a
+        // stale best would persist for the whole next experiment.)
+        // Deliberately no sync_epoch here: local_experiment must stay at
+        // the stale epoch so a solving PUT below loses the finish CAS
+        // instead of closing the NEW experiment with an old chromosome;
+        // the stale pool entry is cleared at the next tick's sync.
+        if self.shared.experiment.load(Ordering::Acquire)
+            != self.local_experiment
+        {
+            let _ = self.shared.best_key.compare_exchange(
+                key,
+                ordered_key(f64::NEG_INFINITY),
+                Ordering::AcqRel,
+                Ordering::Acquire,
+            );
+        }
+
+        let entry = PoolEntry {
+            chromosome: chromosome.clone(),
+            fitness,
+            uuid: uuid.clone(),
+        };
+        self.pool.put(entry, &mut self.rng);
+        self.publish_pool_len();
+
+        let solved = fitness >= self.shared.target_fitness - 1e-9;
+        if !solved {
+            return Response::json(&Json::obj(vec![
+                ("solved", false.into()),
+                ("experiment", self.local_experiment.into()),
+            ]));
+        }
+
+        // Experiment over. One shard wins the epoch CAS and records the
+        // log; everyone else (a concurrent solver on another shard) still
+        // reports solved. Peers are woken so their partitions clear now,
+        // not at the next tick.
+        let won = self.shared.finish_experiment(
+            self.local_experiment,
+            fitness,
+            Some(uuid),
+            Some(chromosome),
+        );
+        if won {
+            for (i, slot) in self.slots.iter().enumerate() {
+                if i != self.id {
+                    slot.waker.wake();
+                }
+            }
+        }
+        self.sync_epoch();
+        let mut resp = Json::obj(vec![
+            ("solved", true.into()),
+            ("experiment", self.local_experiment.into()),
+        ]);
+        if won {
+            if let Some(log) = self.shared.completed.lock().unwrap().last() {
+                resp.set("record", log.to_json());
+            }
+        }
+        Response::new(201).with_json(&resp)
+    }
+
+    fn get_random(&mut self, _req: &Request) -> Response {
+        self.sync_epoch();
+        self.shared.gets.fetch_add(1, Ordering::Relaxed);
+        self.slot().gets.fetch_add(1, Ordering::Relaxed);
+        let picked = self.pool.random(&mut self.rng).cloned();
+        match picked {
+            Some(e) => Response::json(&Json::obj(vec![
+                ("chromosome", e.chromosome.clone().into()),
+                ("fitness", e.fitness.into()),
+                ("experiment", self.local_experiment.into()),
+            ])),
+            // Empty partition: 204, the island continues without an
+            // immigrant (same contract as the single server).
+            None => Response::new(204),
+        }
+    }
+
+    fn state(&self) -> Response {
+        let best = self.shared.best_fitness();
+        // Relaxed loads of two monotonically related counters: saturate
+        // rather than wrap if a stale read ever inverts them.
+        let puts = self
+            .shared
+            .puts
+            .load(Ordering::Relaxed)
+            .saturating_sub(self.shared.exp_base_puts.load(Ordering::Relaxed));
+        let gets = self
+            .shared
+            .gets
+            .load(Ordering::Relaxed)
+            .saturating_sub(self.shared.exp_base_gets.load(Ordering::Relaxed));
+        let elapsed_s =
+            self.shared.started.lock().unwrap().elapsed().as_secs_f64();
+        Response::json(&Json::obj(vec![
+            (
+                "experiment",
+                self.shared.experiment.load(Ordering::Acquire).into(),
+            ),
+            ("pool_size", self.total_pool_len().into()),
+            ("puts", puts.into()),
+            ("gets", gets.into()),
+            (
+                "best_fitness",
+                if best.is_finite() { best.into() } else { Json::Null },
+            ),
+            ("elapsed_s", elapsed_s.into()),
+            ("completed", self.shared.completed_count().into()),
+            ("shards", self.slots.len().into()),
+        ]))
+    }
+
+    fn per_shard_json(&self) -> Json {
+        Json::Arr(
+            self.slots
+                .iter()
+                .enumerate()
+                .map(|(i, s)| {
+                    Json::obj(vec![
+                        ("shard", i.into()),
+                        ("puts", s.puts.load(Ordering::Relaxed).into()),
+                        ("gets", s.gets.load(Ordering::Relaxed).into()),
+                        (
+                            "handoffs",
+                            s.handoffs.load(Ordering::Relaxed).into(),
+                        ),
+                        (
+                            "connections",
+                            s.open_conns.load(Ordering::Relaxed).into(),
+                        ),
+                        ("pool", s.pool_len.load(Ordering::Relaxed).into()),
+                        (
+                            "migrations_rx",
+                            s.migrations_rx.load(Ordering::Relaxed).into(),
+                        ),
+                    ])
+                })
+                .collect(),
+        )
+    }
+
+    fn stats_route(&self) -> Response {
+        let experiments = Json::Arr(
+            self.shared
+                .completed
+                .lock()
+                .unwrap()
+                .iter()
+                .map(|l| l.to_json())
+                .collect(),
+        );
+        let total = self.shared.puts.load(Ordering::Relaxed)
+            + self.shared.gets.load(Ordering::Relaxed);
+        Response::json(&Json::obj(vec![
+            ("total_requests", total.into()),
+            ("shards", self.slots.len().into()),
+            ("per_shard", self.per_shard_json()),
+            ("experiments", experiments),
+        ]))
+    }
+
+    fn metrics(&self) -> Response {
+        let best = self.shared.best_fitness();
+        Response::json(&Json::obj(vec![
+            (
+                "experiment",
+                self.shared.experiment.load(Ordering::Acquire).into(),
+            ),
+            (
+                "best",
+                if best.is_finite() { best.into() } else { Json::Null },
+            ),
+            ("pool", self.total_pool_len().into()),
+            ("puts", self.shared.puts.load(Ordering::Relaxed).into()),
+            ("gets", self.shared.gets.load(Ordering::Relaxed).into()),
+            ("per_shard", self.per_shard_json()),
+        ]))
+    }
+
+    fn reset(&mut self) -> Response {
+        let best = self.shared.best_fitness();
+        let recorded = if best.is_finite() { best } else { f64::NEG_INFINITY };
+        self.shared.finish_experiment(
+            self.local_experiment,
+            recorded,
+            None,
+            None,
+        );
+        // Lost CAS means a concurrent solution/reset already ended the
+        // epoch — either way the experiment the caller saw is over.
+        for (i, slot) in self.slots.iter().enumerate() {
+            if i != self.id {
+                slot.waker.wake();
+            }
+        }
+        self.sync_epoch();
+        let entry = self
+            .shared
+            .completed
+            .lock()
+            .unwrap()
+            .last()
+            .map(|l| l.to_json())
+            .unwrap_or(Json::Null);
+        Response::json(&entry)
+    }
+}
+
+impl Service for ShardService {
+    fn handle(&mut self, req: &Request) -> Response {
+        let path = if req.path.len() > 1 {
+            req.path.trim_end_matches('/')
+        } else {
+            req.path.as_str()
+        };
+        match (req.method, path) {
+            (Method::Get, "/") => self.banner(),
+            (Method::Put, "/experiment/chromosome") => {
+                self.put_chromosome(req)
+            }
+            (Method::Get, "/experiment/random") => self.get_random(req),
+            (Method::Get, "/experiment/state") => self.state(),
+            (Method::Get, "/stats") => self.stats_route(),
+            (Method::Get, "/metrics") => self.metrics(),
+            (Method::Post, "/experiment/reset") => self.reset(),
+            (
+                _,
+                "/" | "/experiment/chromosome" | "/experiment/random"
+                | "/experiment/state" | "/stats" | "/metrics"
+                | "/experiment/reset",
+            ) => Response::new(405).with_text("method not allowed"),
+            _ => Response::not_found(),
+        }
+    }
+}
+
+/// One shard thread: its own epoll + waker + [`ConnDriver`] + partition,
+/// woken by the acceptor for new connections and by peers for gossip.
+fn shard_loop(
+    cfg: ShardCfg,
+    waker: Waker,
+    shared: Arc<ClusterShared>,
+    slots: Arc<Vec<ShardSlot>>,
+    stats: Arc<ServerStats>,
+) -> io::Result<()> {
+    let epoll = Epoll::new()?;
+    epoll.add(waker.fd(), TOKEN_WAKER, Interest::READ)?;
+    let mut driver = ConnDriver::new(cfg.http.clone());
+    let mut service = ShardService::new(&cfg, shared.clone(), slots.clone());
+    let mut events: Vec<Event> = Vec::new();
+    let mut last_gossip = Instant::now();
+    let id = cfg.id;
+
+    while !shared.shutdown.load(Ordering::Acquire) {
+        epoll.wait(Some(cfg.http.tick), &mut events)?;
+        let snapshot: Vec<Event> = events.clone();
+        for ev in snapshot {
+            if ev.token == TOKEN_WAKER {
+                waker.drain();
+            } else {
+                driver.handle_event(&epoll, &ev, &mut service, &stats);
+            }
+        }
+        // Adopt connections the acceptor handed off (level-triggered
+        // epoll reports any already-buffered request bytes immediately).
+        for stream in slots[id].conns_in.drain() {
+            driver.register(&epoll, stream, &stats);
+        }
+        service.sync_epoch();
+        service.drain_migrations();
+        if last_gossip.elapsed() >= cfg.migration_interval {
+            last_gossip = Instant::now();
+            service.gossip();
+        }
+        driver.sweep_idle(&epoll);
+        slots[id]
+            .open_conns
+            .store(driver.connections() as u64, Ordering::Relaxed);
+    }
+    Ok(())
+}
+
+/// The acceptor: owns the listener, deals connections round-robin.
+/// Sleeps in epoll on the listener fd (no busy-polling when idle); the
+/// wait timeout bounds shutdown latency.
+fn acceptor_loop(
+    listener: TcpListener,
+    shared: Arc<ClusterShared>,
+    slots: Arc<Vec<ShardSlot>>,
+) -> io::Result<()> {
+    let epoll = Epoll::new()?;
+    epoll.add(listener.as_raw_fd(), TOKEN_LISTENER, Interest::READ)?;
+    let mut events: Vec<Event> = Vec::new();
+    let mut next = 0usize;
+    while !shared.shutdown.load(Ordering::Acquire) {
+        epoll.wait(Some(Duration::from_millis(100)), &mut events)?;
+        // Level-triggered: drain every pending accept before sleeping.
+        loop {
+            match listener.accept() {
+                Ok((stream, _peer)) => {
+                    let slot = &slots[next];
+                    next = (next + 1) % slots.len();
+                    slot.handoffs.fetch_add(1, Ordering::Relaxed);
+                    slot.conns_in.push(stream);
+                    slot.waker.wake();
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                Err(e) => return Err(e),
+            }
+        }
+    }
+    Ok(())
+}
+
+/// The sharded NodIO pool server.
+pub struct ShardedPoolServer;
+
+impl ShardedPoolServer {
+    /// Spawn the acceptor and all shard threads on `addr` (e.g.
+    /// `"127.0.0.1:0"`). The returned handle stops the cluster when
+    /// dropped.
+    pub fn spawn(
+        addr: &str,
+        config: ClusterConfig,
+    ) -> io::Result<ClusterHandle> {
+        let n = config.shards.max(1);
+        let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
+        let addr = listener.local_addr()?;
+
+        let shared = Arc::new(ClusterShared::new(config.base.target_fitness));
+        let stats = Arc::new(ServerStats::default());
+
+        let mut slots = Vec::with_capacity(n);
+        let mut shard_wakers = Vec::with_capacity(n);
+        for _ in 0..n {
+            let waker = Waker::new()?;
+            slots.push(ShardSlot::new(waker.try_clone()?));
+            shard_wakers.push(waker);
+        }
+        let slots = Arc::new(slots);
+
+        let per_shard_capacity = (config.base.pool_capacity / n).max(1);
+        let mut threads = Vec::with_capacity(n + 1);
+        for (id, waker) in shard_wakers.into_iter().enumerate() {
+            let cfg = ShardCfg {
+                id,
+                http: config.base.http.clone(),
+                n_bits: config.base.n_bits,
+                pool_capacity: per_shard_capacity,
+                seed: config.base.seed,
+                migration_interval: config.migration_interval,
+                migration_k: config.migration_k,
+            };
+            let shared = shared.clone();
+            let slots = slots.clone();
+            let stats = stats.clone();
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("nodio-shard-{id}"))
+                    .spawn(move || {
+                        if let Err(e) =
+                            shard_loop(cfg, waker, shared, slots, stats)
+                        {
+                            eprintln!("nodio shard {id}: loop failed: {e}");
+                        }
+                    })?,
+            );
+        }
+        {
+            let shared = shared.clone();
+            let slots = slots.clone();
+            threads.push(
+                std::thread::Builder::new()
+                    .name("nodio-shard-acceptor".into())
+                    .spawn(move || {
+                        if let Err(e) = acceptor_loop(listener, shared, slots)
+                        {
+                            eprintln!("nodio acceptor: loop failed: {e}");
+                        }
+                    })?,
+            );
+        }
+
+        Ok(ClusterHandle { addr, shared, slots, stats, threads })
+    }
+}
+
+/// Either pool backend behind one handle: the paper's single event loop
+/// (`shards <= 1`) or the sharded cluster. Spawn-by-shard-count lives
+/// here so the CLI and the swarm simulator share one code path.
+pub enum PoolBackend {
+    Single(ServerHandle),
+    Sharded(ClusterHandle),
+}
+
+impl PoolBackend {
+    /// Spawn the backend selected by `config.shards`. With one shard the
+    /// single-loop [`PoolServer`] runs (full feature set: event log,
+    /// verification, rate limiting); otherwise the sharded cluster.
+    pub fn spawn(addr: &str, config: ClusterConfig) -> io::Result<PoolBackend> {
+        if config.shards > 1 {
+            Ok(PoolBackend::Sharded(ShardedPoolServer::spawn(addr, config)?))
+        } else {
+            Ok(PoolBackend::Single(PoolServer::spawn(addr, config.base)?))
+        }
+    }
+
+    pub fn addr(&self) -> SocketAddr {
+        match self {
+            PoolBackend::Single(h) => h.addr,
+            PoolBackend::Sharded(h) => h.addr,
+        }
+    }
+
+    pub fn shards(&self) -> usize {
+        match self {
+            PoolBackend::Single(_) => 1,
+            PoolBackend::Sharded(h) => h.shards(),
+        }
+    }
+
+    pub fn stop(self) {
+        match self {
+            PoolBackend::Single(h) => h.stop(),
+            PoolBackend::Sharded(h) => h.stop(),
+        }
+    }
+}
+
+/// Owner handle for a running cluster: address, aggregate stats, shutdown.
+pub struct ClusterHandle {
+    pub addr: SocketAddr,
+    shared: Arc<ClusterShared>,
+    slots: Arc<Vec<ShardSlot>>,
+    stats: Arc<ServerStats>,
+    threads: Vec<JoinHandle<()>>,
+}
+
+impl ClusterHandle {
+    pub fn url(&self) -> String {
+        format!("http://{}", self.addr)
+    }
+
+    pub fn shards(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// HTTP-level counters aggregated across shards.
+    pub fn stats(&self) -> &ServerStats {
+        &self.stats
+    }
+
+    /// Completed experiments so far (solutions + manual resets).
+    pub fn completed_experiments(&self) -> u64 {
+        self.shared.completed_count()
+    }
+
+    /// Stop every shard and the acceptor, then join them.
+    pub fn stop(mut self) {
+        self.stop_inner();
+    }
+
+    fn stop_inner(&mut self) {
+        self.shared.shutdown.store(true, Ordering::Release);
+        for slot in self.slots.iter() {
+            slot.waker.wake();
+        }
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for ClusterHandle {
+    fn drop(&mut self) {
+        self.stop_inner();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::http::{HttpClient, Method, Request};
+    use crate::testkit::wait_until;
+
+    fn put_req(chromosome: &str, fitness: f64, uuid: &str) -> Request {
+        Request::new(Method::Put, "/experiment/chromosome").with_json(
+            &Json::obj(vec![
+                ("chromosome", chromosome.into()),
+                ("fitness", fitness.into()),
+                ("uuid", uuid.into()),
+            ]),
+        )
+    }
+
+    fn fast_config(shards: usize, target: f64) -> ClusterConfig {
+        ClusterConfig {
+            shards,
+            base: PoolServerConfig {
+                n_bits: 8,
+                target_fitness: target,
+                http: ServerConfig {
+                    tick: Duration::from_millis(5),
+                    ..ServerConfig::default()
+                },
+                ..PoolServerConfig::default()
+            },
+            migration_interval: Duration::from_millis(20),
+            migration_k: 2,
+        }
+    }
+
+    #[test]
+    fn ordered_key_is_monotonic() {
+        let values = [
+            f64::NEG_INFINITY,
+            -1e300,
+            -2.5,
+            -0.0,
+            0.0,
+            1e-300,
+            3.25,
+            1e300,
+            f64::INFINITY,
+        ];
+        for w in values.windows(2) {
+            assert!(
+                ordered_key(w[0]) <= ordered_key(w[1]),
+                "{} !<= {}",
+                w[0],
+                w[1]
+            );
+        }
+        for v in values {
+            assert_eq!(key_to_f64(ordered_key(v)), v);
+        }
+    }
+
+    #[test]
+    fn solution_on_one_shard_terminates_all() {
+        let handle =
+            ShardedPoolServer::spawn("127.0.0.1:0", fast_config(2, 8.0))
+                .unwrap();
+        // Connection order is round-robin: c1 -> shard 0, c2 -> shard 1.
+        let mut c1 = HttpClient::connect(handle.addr).unwrap();
+        let mut c2 = HttpClient::connect(handle.addr).unwrap();
+
+        // A non-solving PUT lands in shard 0's partition.
+        assert_eq!(c1.send(&put_req("01010101", 4.0, "a")).unwrap().status, 200);
+
+        // The solution arrives on the OTHER shard.
+        let resp = c2.send(&put_req("11111111", 8.0, "b")).unwrap();
+        assert_eq!(resp.status, 201);
+        let body = resp.json_body().unwrap();
+        assert_eq!(body.get("solved").and_then(Json::as_bool), Some(true));
+        assert_eq!(body.get_u64("experiment"), Some(1));
+        let record = body.get("record").expect("winner carries the record");
+        assert_eq!(record.get_str("solved_by"), Some("b"));
+        assert_eq!(record.get_str("solution"), Some("11111111"));
+
+        // Shard 0 observes the termination...
+        let seen = wait_until(Duration::from_secs(5), || {
+            c1.send(&Request::new(Method::Get, "/experiment/state"))
+                .ok()
+                .and_then(|r| r.json_body().ok())
+                .and_then(|b| b.get_u64("completed"))
+                == Some(1)
+        });
+        assert!(seen, "shard 0 never saw the completed experiment");
+
+        // ...and its partition was cleared for the new experiment.
+        let cleared = wait_until(Duration::from_secs(5), || {
+            c1.send(&Request::new(Method::Get, "/experiment/random"))
+                .map(|r| r.status == 204)
+                .unwrap_or(false)
+        });
+        assert!(cleared, "shard 0 kept stale entries after the solution");
+        handle.stop();
+    }
+
+    #[test]
+    fn acceptor_distributes_connections_round_robin() {
+        let handle =
+            ShardedPoolServer::spawn("127.0.0.1:0", fast_config(4, 1e18))
+                .unwrap();
+        let mut clients: Vec<HttpClient> = (0..8)
+            .map(|_| HttpClient::connect(handle.addr).unwrap())
+            .collect();
+        // A served request proves the connection was registered.
+        for c in clients.iter_mut() {
+            assert_eq!(
+                c.send(&Request::new(Method::Get, "/")).unwrap().status,
+                200
+            );
+        }
+        let stats = clients[0]
+            .send(&Request::new(Method::Get, "/stats"))
+            .unwrap()
+            .json_body()
+            .unwrap();
+        let per_shard = stats.get("per_shard").unwrap().as_arr().unwrap();
+        assert_eq!(per_shard.len(), 4);
+        for shard in per_shard {
+            assert_eq!(shard.get_u64("handoffs"), Some(2), "{stats}");
+        }
+        drop(clients);
+        handle.stop();
+    }
+
+    #[test]
+    fn gossip_spreads_entries_between_partitions() {
+        let handle =
+            ShardedPoolServer::spawn("127.0.0.1:0", fast_config(2, 1e18))
+                .unwrap();
+        let mut c1 = HttpClient::connect(handle.addr).unwrap(); // shard 0
+        let mut c2 = HttpClient::connect(handle.addr).unwrap(); // shard 1
+
+        assert_eq!(c1.send(&put_req("10101010", 5.0, "a")).unwrap().status, 200);
+
+        // Shard 1's partition starts empty; the gossiped entry arrives
+        // within a couple of migration intervals.
+        let mut migrated = None;
+        let ok = wait_until(Duration::from_secs(5), || {
+            match c2.send(&Request::new(Method::Get, "/experiment/random")) {
+                Ok(resp) if resp.status == 200 => {
+                    migrated = resp.json_body().ok();
+                    true
+                }
+                _ => false,
+            }
+        });
+        assert!(ok, "entry never migrated to the peer shard");
+        let body = migrated.unwrap();
+        assert_eq!(body.get_str("chromosome"), Some("10101010"));
+        assert_eq!(body.get_f64("fitness"), Some(5.0));
+
+        // The receiving shard accounted for the merge.
+        let stats = c1
+            .send(&Request::new(Method::Get, "/stats"))
+            .unwrap()
+            .json_body()
+            .unwrap();
+        let per_shard = stats.get("per_shard").unwrap().as_arr().unwrap();
+        let rx: u64 = per_shard
+            .iter()
+            .filter_map(|s| s.get_u64("migrations_rx"))
+            .sum();
+        assert!(rx >= 1, "{stats}");
+        handle.stop();
+    }
+
+    #[test]
+    fn non_finite_fitness_rejected_with_400() {
+        let handle =
+            ShardedPoolServer::spawn("127.0.0.1:0", fast_config(1, 1e18))
+                .unwrap();
+        let mut c = HttpClient::connect(handle.addr).unwrap();
+
+        // NaN via the JSON layer.
+        let resp = c
+            .send(
+                &Request::new(Method::Put, "/experiment/chromosome")
+                    .with_json(&Json::obj(vec![
+                        ("chromosome", "01010101".into()),
+                        ("fitness", Json::Num(f64::NAN)),
+                    ])),
+            )
+            .unwrap();
+        assert_eq!(resp.status, 400);
+
+        // Infinity via a raw body (1e999 overflows to +inf when parsed).
+        let mut req = Request::new(Method::Put, "/experiment/chromosome");
+        req.body =
+            br#"{"chromosome":"01010101","fitness":1e999,"uuid":"x"}"#
+                .to_vec();
+        let resp = c.send(&req).unwrap();
+        assert_eq!(resp.status, 400);
+
+        // The pool stayed empty and the experiment is untouched.
+        let state = c
+            .send(&Request::new(Method::Get, "/experiment/state"))
+            .unwrap()
+            .json_body()
+            .unwrap();
+        assert_eq!(state.get_u64("pool_size"), Some(0));
+        assert_eq!(state.get_u64("puts"), Some(0));
+        handle.stop();
+    }
+
+    #[test]
+    fn aggregated_state_and_stats_fan_in() {
+        // Gossip disabled (hour-long interval): partition contents stay
+        // disjoint so the aggregate pool size is exact.
+        let mut config = fast_config(2, 1e18);
+        config.migration_interval = Duration::from_secs(3600);
+        let handle =
+            ShardedPoolServer::spawn("127.0.0.1:0", config).unwrap();
+        let mut c1 = HttpClient::connect(handle.addr).unwrap(); // shard 0
+        let mut c2 = HttpClient::connect(handle.addr).unwrap(); // shard 1
+
+        assert_eq!(c1.send(&put_req("00000001", 1.0, "a")).unwrap().status, 200);
+        assert_eq!(c2.send(&put_req("00000011", 2.0, "b")).unwrap().status, 200);
+        let resp =
+            c1.send(&Request::new(Method::Get, "/experiment/random")).unwrap();
+        assert_eq!(resp.status, 200); // shard 0 holds its own entry
+
+        let state = c2
+            .send(&Request::new(Method::Get, "/experiment/state"))
+            .unwrap()
+            .json_body()
+            .unwrap();
+        assert_eq!(state.get_u64("pool_size"), Some(2)); // one per shard
+        assert_eq!(state.get_u64("puts"), Some(2));
+        assert_eq!(state.get_u64("gets"), Some(1));
+        assert_eq!(state.get_f64("best_fitness"), Some(2.0));
+        assert_eq!(state.get_u64("completed"), Some(0));
+        assert_eq!(state.get_u64("shards"), Some(2));
+
+        let stats = c1
+            .send(&Request::new(Method::Get, "/stats"))
+            .unwrap()
+            .json_body()
+            .unwrap();
+        assert_eq!(stats.get_u64("total_requests"), Some(3));
+        let per_shard = stats.get("per_shard").unwrap().as_arr().unwrap();
+        let puts: u64 =
+            per_shard.iter().filter_map(|s| s.get_u64("puts")).sum();
+        assert_eq!(puts, 2);
+
+        let banner =
+            c1.send(&Request::new(Method::Get, "/")).unwrap().json_body().unwrap();
+        assert_eq!(banner.get_u64("shards"), Some(2));
+        assert_eq!(banner.get_u64("pool"), Some(2));
+        handle.stop();
+    }
+
+    #[test]
+    fn manual_reset_clears_every_partition() {
+        let mut config = fast_config(2, 1e18);
+        config.migration_interval = Duration::from_secs(3600);
+        let handle =
+            ShardedPoolServer::spawn("127.0.0.1:0", config).unwrap();
+        let mut c1 = HttpClient::connect(handle.addr).unwrap();
+        let mut c2 = HttpClient::connect(handle.addr).unwrap();
+        assert_eq!(c1.send(&put_req("01010101", 3.0, "a")).unwrap().status, 200);
+        assert_eq!(c2.send(&put_req("01110101", 4.0, "b")).unwrap().status, 200);
+
+        let resp = c1
+            .send(&Request::new(Method::Post, "/experiment/reset"))
+            .unwrap();
+        assert_eq!(resp.status, 200);
+
+        for c in [&mut c1, &mut c2] {
+            let cleared = wait_until(Duration::from_secs(5), || {
+                c.send(&Request::new(Method::Get, "/experiment/random"))
+                    .map(|r| r.status == 204)
+                    .unwrap_or(false)
+            });
+            assert!(cleared);
+        }
+        let banner =
+            c1.send(&Request::new(Method::Get, "/")).unwrap().json_body().unwrap();
+        assert_eq!(banner.get_u64("experiment"), Some(1));
+        handle.stop();
+    }
+
+    #[test]
+    fn unknown_route_and_wrong_method() {
+        let handle =
+            ShardedPoolServer::spawn("127.0.0.1:0", fast_config(1, 1e18))
+                .unwrap();
+        let mut c = HttpClient::connect(handle.addr).unwrap();
+        let resp = c.send(&Request::new(Method::Get, "/nope")).unwrap();
+        assert_eq!(resp.status, 404);
+        let resp =
+            c.send(&Request::new(Method::Get, "/experiment/chromosome")).unwrap();
+        assert_eq!(resp.status, 405);
+        handle.stop();
+    }
+}

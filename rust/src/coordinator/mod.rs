@@ -21,6 +21,11 @@
 //! ([`crate::http::server`]); handlers share state through `Rc<RefCell>`
 //! with no locks, like Express handlers on Node's loop.
 
+//! For multi-core deployments, [`cluster`] shards this server across N
+//! independent event loops with inter-shard migration — same REST
+//! surface, same no-locks-on-the-request-path discipline.
+
+pub mod cluster;
 pub mod experiment;
 pub mod logger;
 pub mod pool;
@@ -29,6 +34,7 @@ pub mod security;
 pub mod timeseries;
 pub mod server;
 
+pub use cluster::{ClusterConfig, ClusterHandle, PoolBackend, ShardedPoolServer};
 pub use experiment::{ExperimentLog, ExperimentManager};
 pub use pool::{ChromosomePool, PoolEntry};
 pub use security::{FitnessVerifier, RateLimiter, SaboteurLog};

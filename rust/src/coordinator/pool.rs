@@ -67,11 +67,14 @@ impl ChromosomePool {
         }
     }
 
-    /// Best entry by fitness.
+    /// Best entry by fitness. Total-order safe: the PUT route rejects
+    /// non-finite fitness with 400, but `best` must never panic even if a
+    /// NaN reaches the pool through another path (`total_cmp` sorts NaN
+    /// deterministically instead of aborting the event loop).
     pub fn best(&self) -> Option<&PoolEntry> {
-        self.entries.iter().max_by(|a, b| {
-            a.fitness.partial_cmp(&b.fitness).expect("finite fitness")
-        })
+        self.entries
+            .iter()
+            .max_by(|a, b| a.fitness.total_cmp(&b.fitness))
     }
 
     /// Reset for a new experiment.
@@ -143,6 +146,45 @@ mod tests {
         pool.clear();
         assert!(pool.is_empty());
         assert_eq!(pool.accepted(), 0);
+    }
+
+    #[test]
+    fn best_is_nan_safe() {
+        // An adversarial NaN in the pool must not panic the server; it
+        // must also not mask a real maximum among the finite entries
+        // forever (total_cmp puts positive NaN above all finite values —
+        // the point is determinism, not ranking).
+        let mut pool = ChromosomePool::new(8);
+        let mut rng = SplitMix64::new(5);
+        pool.put(entry(1, 3.0), &mut rng);
+        pool.put(entry(2, f64::NAN), &mut rng);
+        pool.put(entry(3, 7.0), &mut rng);
+        let best = pool.best().expect("non-empty pool has a best");
+        assert!(best.fitness.is_nan() || best.fitness == 7.0);
+
+        // All-NaN pool: still total, still no panic.
+        let mut pool = ChromosomePool::new(4);
+        pool.put(entry(4, f64::NAN), &mut rng);
+        assert!(pool.best().unwrap().fitness.is_nan());
+    }
+
+    #[test]
+    fn accepted_survives_eviction_flood() {
+        // `accepted` is lifetime accounting: a PUT flood far beyond
+        // capacity must keep the bound while counting every insert.
+        let mut pool = ChromosomePool::new(16);
+        let mut rng = SplitMix64::new(6);
+        for i in 0..10_000u64 {
+            pool.put(entry(i, (i % 97) as f64), &mut rng);
+            assert!(pool.len() <= 16);
+        }
+        assert_eq!(pool.len(), 16);
+        assert_eq!(pool.accepted(), 10_000);
+        // Eviction is random-replacement: late entries dominate survivors,
+        // but every survivor is a real insert.
+        for e in pool.entries() {
+            assert!(e.fitness < 97.0);
+        }
     }
 
     #[test]

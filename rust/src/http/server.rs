@@ -20,9 +20,9 @@ use super::types::Response;
 use super::Service;
 use crate::eventloop::{Epoll, Event, Interest, Waker};
 
-const TOKEN_LISTENER: u64 = 0;
-const TOKEN_WAKER: u64 = 1;
-const TOKEN_BASE: u64 = 2;
+pub(crate) const TOKEN_LISTENER: u64 = 0;
+pub(crate) const TOKEN_WAKER: u64 = 1;
+pub(crate) const TOKEN_BASE: u64 = 2;
 
 /// Tunables for the event loop.
 #[derive(Debug, Clone)]
@@ -81,150 +81,116 @@ impl Conn {
     }
 }
 
-/// The event-loop server. Construct with [`Server::bind`], then either call
-/// [`Server::run`] on the current thread or use [`Server::spawn`] to run it
-/// on a background thread with a [`ServerHandle`] for shutdown.
-pub struct Server {
-    listener: TcpListener,
-    epoll: Epoll,
-    waker: Waker,
+/// The reusable connection-driving core of the event loop: owns the table
+/// of live client connections and moves bytes between their sockets and a
+/// [`Service`]. [`Server::run`] drives one behind its own listener; the
+/// sharded pool coordinator ([`crate::coordinator::cluster`]) drives one
+/// per shard behind an acceptor handoff queue instead of a listener.
+pub(crate) struct ConnDriver {
+    conns: HashMap<u64, Conn>,
+    next_token: u64,
+    read_buf: Vec<u8>,
     config: ServerConfig,
-    shutdown: Arc<AtomicBool>,
-    stats: Arc<ServerStats>,
+    last_sweep: Instant,
 }
 
-impl Server {
-    pub fn bind(addr: &str) -> io::Result<Server> {
-        Server::bind_with(addr, ServerConfig::default())
-    }
-
-    pub fn bind_with(addr: &str, config: ServerConfig) -> io::Result<Server> {
-        let listener = TcpListener::bind(addr)?;
-        listener.set_nonblocking(true)?;
-        let epoll = Epoll::new()?;
-        let waker = Waker::new()?;
-        epoll.add(listener.as_raw_fd(), TOKEN_LISTENER, Interest::READ)?;
-        epoll.add(waker.fd(), TOKEN_WAKER, Interest::READ)?;
-        Ok(Server {
-            listener,
-            epoll,
-            waker,
+impl ConnDriver {
+    pub(crate) fn new(config: ServerConfig) -> ConnDriver {
+        ConnDriver {
+            conns: HashMap::new(),
+            next_token: TOKEN_BASE,
+            read_buf: vec![0u8; 64 * 1024],
             config,
-            shutdown: Arc::new(AtomicBool::new(false)),
-            stats: Arc::new(ServerStats::default()),
-        })
+            last_sweep: Instant::now(),
+        }
     }
 
-    pub fn local_addr(&self) -> SocketAddr {
-        self.listener.local_addr().expect("bound listener has an address")
+    pub(crate) fn connections(&self) -> usize {
+        self.conns.len()
     }
 
-    pub fn stats(&self) -> Arc<ServerStats> {
-        self.stats.clone()
+    /// Adopt an accepted stream into the loop. Returns false when refused
+    /// (at capacity, or the fd could not be made non-blocking/registered).
+    pub(crate) fn register(
+        &mut self,
+        epoll: &Epoll,
+        stream: TcpStream,
+        stats: &ServerStats,
+    ) -> bool {
+        if self.conns.len() >= self.config.max_connections {
+            return false; // refuse: at capacity
+        }
+        if stream.set_nonblocking(true).is_err() {
+            return false;
+        }
+        let _ = stream.set_nodelay(true);
+        let token = self.next_token;
+        self.next_token += 1;
+        if epoll
+            .add(stream.as_raw_fd(), token, Interest::READ)
+            .is_err()
+        {
+            return false;
+        }
+        self.conns.insert(token, Conn::new(stream));
+        stats.connections.fetch_add(1, Ordering::Relaxed);
+        true
     }
 
-    /// A flag+waker pair that stops the loop from another thread.
-    pub fn shutdown_switch(&self) -> io::Result<ShutdownSwitch> {
-        Ok(ShutdownSwitch {
-            flag: self.shutdown.clone(),
-            waker: self.waker.try_clone()?,
-        })
-    }
-
-    /// Run the loop on the current thread until shut down.
-    pub fn run<S: Service>(self, mut service: S) -> io::Result<()> {
-        let mut conns: HashMap<u64, Conn> = HashMap::new();
-        let mut next_token = TOKEN_BASE;
-        let mut events: Vec<Event> = Vec::new();
-        let mut read_buf = vec![0u8; 64 * 1024];
-        let mut last_sweep = Instant::now();
-
-        while !self.shutdown.load(Ordering::Acquire) {
-            self.epoll.wait(Some(self.config.tick), &mut events)?;
-            let ev_snapshot: Vec<Event> = events.clone();
-            for ev in ev_snapshot {
-                match ev.token {
-                    TOKEN_LISTENER => {
-                        self.accept_all(&mut conns, &mut next_token);
-                    }
-                    TOKEN_WAKER => {
-                        self.waker.drain();
-                    }
-                    token => {
-                        let mut drop_conn = ev.closed;
-                        if let Some(conn) = conns.get_mut(&token) {
-                            if ev.readable && !drop_conn {
-                                drop_conn |= Self::handle_readable(
-                                    conn,
-                                    &mut service,
-                                    &mut read_buf,
-                                    &self.stats,
-                                );
-                            }
-                            if !drop_conn && (ev.writable || conn.pending_out()) {
-                                drop_conn |= Self::flush(conn);
-                            }
-                            if !drop_conn {
-                                Self::update_interest(&self.epoll, token, conn);
-                            }
-                        }
-                        if drop_conn {
-                            if let Some(conn) = conns.remove(&token) {
-                                self.epoll.remove(conn.stream.as_raw_fd());
-                            }
-                        }
-                    }
-                }
+    /// React to a readiness event for a connection token. Unknown tokens
+    /// (already-dropped connections) are ignored.
+    pub(crate) fn handle_event<S: Service>(
+        &mut self,
+        epoll: &Epoll,
+        ev: &Event,
+        service: &mut S,
+        stats: &ServerStats,
+    ) {
+        let token = ev.token;
+        let mut drop_conn = ev.closed;
+        if let Some(conn) = self.conns.get_mut(&token) {
+            if ev.readable && !drop_conn {
+                drop_conn |= Self::handle_readable(
+                    conn,
+                    service,
+                    &mut self.read_buf,
+                    stats,
+                );
             }
-
-            // Periodic idle sweep.
-            if last_sweep.elapsed() >= Duration::from_secs(1) {
-                last_sweep = Instant::now();
-                let now = Instant::now();
-                let idle: Vec<u64> = conns
-                    .iter()
-                    .filter(|(_, c)| {
-                        now.duration_since(c.last_active) > self.config.idle_timeout
-                            && !c.pending_out()
-                    })
-                    .map(|(t, _)| *t)
-                    .collect();
-                for token in idle {
-                    if let Some(conn) = conns.remove(&token) {
-                        self.epoll.remove(conn.stream.as_raw_fd());
-                    }
-                }
+            if !drop_conn && (ev.writable || conn.pending_out()) {
+                drop_conn |= Self::flush(conn);
+            }
+            if !drop_conn {
+                Self::update_interest(epoll, token, conn);
             }
         }
-        Ok(())
+        if drop_conn {
+            if let Some(conn) = self.conns.remove(&token) {
+                epoll.remove(conn.stream.as_raw_fd());
+            }
+        }
     }
 
-    fn accept_all(&self, conns: &mut HashMap<u64, Conn>, next_token: &mut u64) {
-        loop {
-            match self.listener.accept() {
-                Ok((stream, _peer)) => {
-                    if conns.len() >= self.config.max_connections {
-                        drop(stream); // refuse: at capacity
-                        continue;
-                    }
-                    if stream.set_nonblocking(true).is_err() {
-                        continue;
-                    }
-                    let _ = stream.set_nodelay(true);
-                    let token = *next_token;
-                    *next_token += 1;
-                    if self
-                        .epoll
-                        .add(stream.as_raw_fd(), token, Interest::READ)
-                        .is_ok()
-                    {
-                        conns.insert(token, Conn::new(stream));
-                        self.stats.connections.fetch_add(1, Ordering::Relaxed);
-                    }
-                }
-                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
-                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
-                Err(_) => break,
+    /// Drop connections idle past the configured timeout. Rate-limited
+    /// internally to one pass per second; call freely every loop tick.
+    pub(crate) fn sweep_idle(&mut self, epoll: &Epoll) {
+        if self.last_sweep.elapsed() < Duration::from_secs(1) {
+            return;
+        }
+        self.last_sweep = Instant::now();
+        let now = Instant::now();
+        let idle: Vec<u64> = self
+            .conns
+            .iter()
+            .filter(|(_, c)| {
+                now.duration_since(c.last_active) > self.config.idle_timeout
+                    && !c.pending_out()
+            })
+            .map(|(t, _)| *t)
+            .collect();
+        for token in idle {
+            if let Some(conn) = self.conns.remove(&token) {
+                epoll.remove(conn.stream.as_raw_fd());
             }
         }
     }
@@ -303,6 +269,97 @@ impl Server {
                 if want_write { Interest::BOTH } else { Interest::READ };
             let _ = epoll.modify(conn.stream.as_raw_fd(), token, interest);
             conn.want_write = want_write;
+        }
+    }
+}
+
+/// The event-loop server. Construct with [`Server::bind`], then either call
+/// [`Server::run`] on the current thread or use [`Server::spawn`] to run it
+/// on a background thread with a [`ServerHandle`] for shutdown.
+pub struct Server {
+    listener: TcpListener,
+    epoll: Epoll,
+    waker: Waker,
+    config: ServerConfig,
+    shutdown: Arc<AtomicBool>,
+    stats: Arc<ServerStats>,
+}
+
+impl Server {
+    pub fn bind(addr: &str) -> io::Result<Server> {
+        Server::bind_with(addr, ServerConfig::default())
+    }
+
+    pub fn bind_with(addr: &str, config: ServerConfig) -> io::Result<Server> {
+        let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
+        let epoll = Epoll::new()?;
+        let waker = Waker::new()?;
+        epoll.add(listener.as_raw_fd(), TOKEN_LISTENER, Interest::READ)?;
+        epoll.add(waker.fd(), TOKEN_WAKER, Interest::READ)?;
+        Ok(Server {
+            listener,
+            epoll,
+            waker,
+            config,
+            shutdown: Arc::new(AtomicBool::new(false)),
+            stats: Arc::new(ServerStats::default()),
+        })
+    }
+
+    pub fn local_addr(&self) -> SocketAddr {
+        self.listener.local_addr().expect("bound listener has an address")
+    }
+
+    pub fn stats(&self) -> Arc<ServerStats> {
+        self.stats.clone()
+    }
+
+    /// A flag+waker pair that stops the loop from another thread.
+    pub fn shutdown_switch(&self) -> io::Result<ShutdownSwitch> {
+        Ok(ShutdownSwitch {
+            flag: self.shutdown.clone(),
+            waker: self.waker.try_clone()?,
+        })
+    }
+
+    /// Run the loop on the current thread until shut down.
+    pub fn run<S: Service>(self, mut service: S) -> io::Result<()> {
+        let mut driver = ConnDriver::new(self.config.clone());
+        let mut events: Vec<Event> = Vec::new();
+
+        while !self.shutdown.load(Ordering::Acquire) {
+            self.epoll.wait(Some(self.config.tick), &mut events)?;
+            let ev_snapshot: Vec<Event> = events.clone();
+            for ev in ev_snapshot {
+                match ev.token {
+                    TOKEN_LISTENER => self.accept_all(&mut driver),
+                    TOKEN_WAKER => self.waker.drain(),
+                    _ => driver.handle_event(
+                        &self.epoll,
+                        &ev,
+                        &mut service,
+                        &self.stats,
+                    ),
+                }
+            }
+            driver.sweep_idle(&self.epoll);
+        }
+        Ok(())
+    }
+
+    fn accept_all(&self, driver: &mut ConnDriver) {
+        loop {
+            match self.listener.accept() {
+                Ok((stream, _peer)) => {
+                    // register() refuses at capacity or on registration
+                    // failure; the stream is dropped (connection refused).
+                    driver.register(&self.epoll, stream, &self.stats);
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(_) => break,
+            }
         }
     }
 

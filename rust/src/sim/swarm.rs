@@ -11,6 +11,7 @@ use super::trace::Trace;
 use crate::client::driver::EngineChoice;
 use crate::client::volunteer::ClientStats;
 use crate::client::worker::{ClientProcess, WorkerMode};
+use crate::coordinator::cluster::{ClusterConfig, PoolBackend};
 use crate::coordinator::{PoolServer, PoolServerConfig};
 use crate::http::{HttpClient, Method, Request};
 use crate::rng::{dist, Rng64, SplitMix64};
@@ -45,6 +46,9 @@ pub struct SwarmConfig {
     pub slowdown_range: (f64, f64),
     /// Pool server tuning.
     pub server: PoolServerConfig,
+    /// Event-loop shards for the pool server; 1 = the paper's single
+    /// non-blocking loop, >1 = the multi-core sharded coordinator.
+    pub shards: usize,
 }
 
 impl Default for SwarmConfig {
@@ -60,6 +64,7 @@ impl Default for SwarmConfig {
             churn: None,
             slowdown_range: (1.0, 1.0),
             server: PoolServerConfig::default(),
+            shards: 1,
         }
     }
 }
@@ -89,9 +94,14 @@ impl SwarmReport {
 
 /// Run a swarm experiment to completion.
 pub fn run_swarm(config: SwarmConfig) -> Result<SwarmReport> {
-    let handle = PoolServer::spawn("127.0.0.1:0", config.server.clone())
+    let backend_config = ClusterConfig {
+        shards: config.shards,
+        base: config.server.clone(),
+        ..ClusterConfig::default()
+    };
+    let handle = PoolBackend::spawn("127.0.0.1:0", backend_config)
         .map_err(|e| anyhow!("pool server: {e}"))?;
-    let addr = handle.addr;
+    let addr = handle.addr();
     let mut rng = SplitMix64::new(config.seed);
     let mut monitor = HttpClient::connect(addr)?;
 
@@ -254,6 +264,26 @@ mod tests {
         assert_eq!(report.experiment_times.len() as u64, report.solutions);
         assert!(report.total_evaluations() > 0);
         assert_eq!(report.client_stats.len(), 4); // 2 clients x 2 workers
+    }
+
+    #[test]
+    fn swarm_solves_trap40_on_sharded_backend() {
+        // Same E6 scenario against the multi-core sharded coordinator:
+        // termination must be detected through the aggregated state route
+        // no matter which shard receives the solving PUT.
+        let report = run_swarm(SwarmConfig {
+            n_clients: 2,
+            shards: 2,
+            target_solutions: 1,
+            timeout: Duration::from_secs(120),
+            seed: 9,
+            ..Default::default()
+        })
+        .unwrap();
+        assert!(report.solutions >= 1, "no solution: {report:?}");
+        assert!(report.time_to_first.is_some());
+        assert!(report.total_requests > 0);
+        assert_eq!(report.experiment_times.len() as u64, report.solutions);
     }
 
     #[test]

@@ -11,8 +11,11 @@ use nodio::coordinator::{PoolServer, PoolServerConfig};
 use nodio::ea::BitString;
 use nodio::http::{HttpClient, Method, Request};
 use nodio::json::Json;
+#[cfg(feature = "xla-runtime")]
 use nodio::problems::{BitProblem, Trap};
+#[cfg(feature = "xla-runtime")]
 use nodio::runtime::xla::EpochState;
+#[cfg(feature = "xla-runtime")]
 use nodio::runtime::{NativeEngine, XlaEngine};
 use nodio::testkit::wait_until;
 
@@ -21,6 +24,7 @@ use nodio::testkit::wait_until;
 // algorithm end-to-end.
 // ---------------------------------------------------------------------
 
+#[cfg(feature = "xla-runtime")]
 #[test]
 fn xla_and_native_engines_solve_the_same_problem() {
     // Both engines must solve trap-40 from a random start within a modest
@@ -51,6 +55,7 @@ fn xla_and_native_engines_solve_the_same_problem() {
     assert!(solved, "native engine failed to solve trap-40 in 40 epochs");
 }
 
+#[cfg(feature = "xla-runtime")]
 #[test]
 fn trap_fitness_identical_across_engines() {
     let mut xla = XlaEngine::load_default().expect("artifacts");
@@ -127,6 +132,7 @@ fn two_native_clients_solve_cooperatively() {
     handle.stop();
 }
 
+#[cfg(feature = "xla-runtime")]
 #[test]
 fn xla_client_migrates_against_server() {
     // One XLA-engine volunteer doing real artifact executions through the

@@ -1,0 +1,116 @@
+//! Minimal, offline-vendorable subset of the `libc` crate.
+//!
+//! The execution environment has no crates.io access, and the event loop
+//! ([`nodio::eventloop`]) needs only the epoll(7)/eventfd(2)/fcntl(2)
+//! surface below, so this crate declares exactly that against the system C
+//! library. Constants are the Linux x86_64/aarch64 values (both
+//! architectures share them for everything used here).
+
+#![allow(non_camel_case_types)]
+
+pub type c_int = i32;
+pub type c_uint = u32;
+pub type c_ulonglong = u64;
+pub type size_t = usize;
+pub type ssize_t = isize;
+
+/// Opaque type for untyped buffers (matches `std::ffi::c_void` layout).
+pub use std::ffi::c_void;
+
+// epoll events (uapi/linux/eventpoll.h).
+pub const EPOLLIN: c_int = 0x001;
+pub const EPOLLOUT: c_int = 0x004;
+pub const EPOLLERR: c_int = 0x008;
+pub const EPOLLHUP: c_int = 0x010;
+pub const EPOLLRDHUP: c_int = 0x2000;
+
+// epoll_ctl ops.
+pub const EPOLL_CTL_ADD: c_int = 1;
+pub const EPOLL_CTL_DEL: c_int = 2;
+pub const EPOLL_CTL_MOD: c_int = 3;
+
+// Flag values shared with O_CLOEXEC / O_NONBLOCK on Linux.
+pub const EPOLL_CLOEXEC: c_int = 0o2000000;
+pub const EFD_CLOEXEC: c_int = 0o2000000;
+pub const EFD_NONBLOCK: c_int = 0o4000;
+pub const O_NONBLOCK: c_int = 0o4000;
+
+// fcntl commands.
+pub const F_GETFL: c_int = 3;
+pub const F_SETFL: c_int = 4;
+
+/// One epoll readiness record. Packed on x86_64 (the kernel ABI); natural
+/// alignment elsewhere (aarch64 and friends).
+#[repr(C)]
+#[cfg_attr(target_arch = "x86_64", repr(packed))]
+#[derive(Debug, Copy, Clone)]
+pub struct epoll_event {
+    pub events: u32,
+    pub u64: u64,
+}
+
+extern "C" {
+    pub fn epoll_create1(flags: c_int) -> c_int;
+    pub fn epoll_ctl(
+        epfd: c_int,
+        op: c_int,
+        fd: c_int,
+        event: *mut epoll_event,
+    ) -> c_int;
+    pub fn epoll_wait(
+        epfd: c_int,
+        events: *mut epoll_event,
+        maxevents: c_int,
+        timeout: c_int,
+    ) -> c_int;
+    pub fn eventfd(initval: c_uint, flags: c_int) -> c_int;
+    pub fn read(fd: c_int, buf: *mut c_void, count: size_t) -> ssize_t;
+    pub fn write(fd: c_int, buf: *const c_void, count: size_t) -> ssize_t;
+    pub fn close(fd: c_int) -> c_int;
+    pub fn dup(oldfd: c_int) -> c_int;
+    pub fn fcntl(fd: c_int, cmd: c_int, ...) -> c_int;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eventfd_round_trip() {
+        unsafe {
+            let fd = eventfd(0, EFD_CLOEXEC | EFD_NONBLOCK);
+            assert!(fd >= 0);
+            let one: u64 = 1;
+            let n = write(fd, &one as *const u64 as *const c_void, 8);
+            assert_eq!(n, 8);
+            let mut out = 0u64;
+            let n = read(fd, &mut out as *mut u64 as *mut c_void, 8);
+            assert_eq!(n, 8);
+            assert_eq!(out, 1);
+            assert_eq!(close(fd), 0);
+        }
+    }
+
+    #[test]
+    fn epoll_create_and_close() {
+        unsafe {
+            let ep = epoll_create1(EPOLL_CLOEXEC);
+            assert!(ep >= 0);
+            assert_eq!(close(ep), 0);
+        }
+    }
+
+    #[test]
+    fn fcntl_toggles_nonblocking() {
+        unsafe {
+            let fd = eventfd(0, 0);
+            assert!(fd >= 0);
+            let flags = fcntl(fd, F_GETFL);
+            assert!(flags >= 0);
+            assert_eq!(flags & O_NONBLOCK, 0);
+            assert_eq!(fcntl(fd, F_SETFL, flags | O_NONBLOCK), 0);
+            assert_eq!(fcntl(fd, F_GETFL) & O_NONBLOCK, O_NONBLOCK);
+            close(fd);
+        }
+    }
+}

@@ -1,0 +1,228 @@
+//! Persistence-cost bench: PUT throughput with the WAL on vs off.
+//!
+//! The durable-experiment subsystem appends one CRC-framed JSONL record
+//! per accepted PUT (flushed to the OS, fsynced only at snapshots/epochs
+//! by default). This bench quantifies what that costs on the hot write
+//! path, for the single-loop server and the sharded coordinator, plus the
+//! fsync-every-record mode and the batched-PUT amortization.
+//!
+//! `NODIO_BENCH_FULL=1` lengthens rounds.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use nodio::bench::Table;
+use nodio::coordinator::cluster::{ClusterConfig, PoolBackend};
+use nodio::coordinator::{PersistConfig, PoolServerConfig};
+use nodio::http::{HttpClient, Method, Request};
+use nodio::json::Json;
+
+fn put_body(uuid: &str) -> Json {
+    Json::obj(vec![
+        ("chromosome", "01".repeat(80).into()),
+        ("fitness", 40.0.into()),
+        ("uuid", uuid.into()),
+    ])
+}
+
+/// One client thread: single PUTs (or batches of `batch`) until `stop`.
+/// Counts accepted chromosomes, not HTTP exchanges.
+fn hammer(
+    addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    count: Arc<AtomicU64>,
+    uuid: String,
+    batch: usize,
+) {
+    let mut client = match HttpClient::connect(addr) {
+        Ok(c) => c,
+        Err(_) => return,
+    };
+    let req = if batch <= 1 {
+        Request::new(Method::Put, "/experiment/chromosome")
+            .with_json(&put_body(&uuid))
+    } else {
+        Request::new(Method::Put, "/experiment/chromosome")
+            .with_json(&Json::Arr(vec![put_body(&uuid); batch]))
+    };
+    while !stop.load(Ordering::Acquire) {
+        if client.send(&req).is_err() {
+            break;
+        }
+        count.fetch_add(batch.max(1) as u64, Ordering::Relaxed);
+    }
+}
+
+fn run_round(
+    addr: std::net::SocketAddr,
+    clients: usize,
+    secs: f64,
+    batch: usize,
+) -> f64 {
+    let stop = Arc::new(AtomicBool::new(false));
+    let count = Arc::new(AtomicU64::new(0));
+    let threads: Vec<_> = (0..clients)
+        .map(|i| {
+            let stop = stop.clone();
+            let count = count.clone();
+            std::thread::spawn(move || {
+                hammer(addr, stop, count, format!("bench-{i}"), batch)
+            })
+        })
+        .collect();
+    std::thread::sleep(Duration::from_secs_f64(secs));
+    stop.store(true, Ordering::Release);
+    for t in threads {
+        let _ = t.join();
+    }
+    count.load(Ordering::Relaxed) as f64 / secs
+}
+
+fn config(shards: usize, persist: Option<PersistConfig>) -> ClusterConfig {
+    ClusterConfig {
+        shards,
+        base: PoolServerConfig {
+            target_fitness: 1e18, // never solve mid-round
+            persist,
+            ..Default::default()
+        },
+        ..ClusterConfig::default()
+    }
+}
+
+fn bench_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("nodio-wal-bench-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+struct Round {
+    label: &'static str,
+    shards: usize,
+    persist: bool,
+    fsync: bool,
+    batch: usize,
+}
+
+fn main() {
+    let full = std::env::var("NODIO_BENCH_FULL").is_ok();
+    let secs = if full { 3.0 } else { 1.0 };
+    let clients = if full { 16 } else { 8 };
+
+    println!(
+        "== WAL overhead: accepted chromosomes/s, persistence on vs off \
+         ({clients} writers, {secs}s rounds) =="
+    );
+    let rounds = [
+        Round { label: "single-loop", shards: 1, persist: false, fsync: false, batch: 1 },
+        Round { label: "single-loop + WAL", shards: 1, persist: true, fsync: false, batch: 1 },
+        Round { label: "single-loop + WAL + fsync", shards: 1, persist: true, fsync: true, batch: 1 },
+        Round { label: "sharded x2", shards: 2, persist: false, fsync: false, batch: 1 },
+        Round { label: "sharded x2 + WAL", shards: 2, persist: true, fsync: false, batch: 1 },
+        Round { label: "single-loop batch16", shards: 1, persist: false, fsync: false, batch: 16 },
+        Round { label: "single-loop batch16 + WAL", shards: 1, persist: true, fsync: false, batch: 16 },
+    ];
+
+    let mut table = Table::new(&["setup", "chromosomes/s", "vs no-WAL"]);
+    let mut baselines: Vec<(usize, usize, f64)> = Vec::new(); // (shards, batch, rate)
+    let mut wal_ratio: Option<f64> = None;
+
+    for r in &rounds {
+        let dir = bench_dir(r.label.replace(' ', "-").as_str());
+        let persist = r.persist.then(|| PersistConfig {
+            snapshot_every: 4096,
+            fsync: r.fsync,
+            ..PersistConfig::new(&dir)
+        });
+        let handle = PoolBackend::spawn("127.0.0.1:0", config(r.shards, persist))
+            .expect("spawn backend");
+        let rate = run_round(handle.addr(), clients, secs, r.batch);
+        handle.stop();
+        let _ = std::fs::remove_dir_all(&dir);
+
+        let rel = if r.persist {
+            baselines
+                .iter()
+                .find(|(s, b, _)| *s == r.shards && *b == r.batch)
+                .map(|(_, _, base)| {
+                    let ratio = rate / base.max(1.0);
+                    if r.shards == 1 && r.batch == 1 && !r.fsync {
+                        wal_ratio = Some(ratio);
+                    }
+                    format!("{:.0}%", ratio * 100.0)
+                })
+                .unwrap_or_else(|| "-".into())
+        } else {
+            baselines.push((r.shards, r.batch, rate));
+            "100%".into()
+        };
+        table.row(&[r.label.into(), format!("{rate:.0}"), rel]);
+    }
+    table.print();
+
+    match wal_ratio {
+        Some(ratio) => {
+            println!(
+                "\nWAL-on PUT throughput is {:.0}% of WAL-off \
+                 (single-loop, unbatched). {}",
+                ratio * 100.0,
+                if ratio >= 0.5 {
+                    "PASS (within the documented 2x overhead budget)"
+                } else {
+                    "FAIL (exceeds the documented 2x overhead budget)"
+                }
+            );
+            if ratio < 0.5 {
+                std::process::exit(1);
+            }
+        }
+        None => {
+            println!("\nFAIL: no WAL round completed");
+            std::process::exit(1);
+        }
+    }
+
+    // Durability sanity: a restarted backend resumes the pool the bench
+    // wrote (the whole point of paying the overhead).
+    let dir = bench_dir("resume-check");
+    let persist = Some(PersistConfig {
+        snapshot_every: 4096,
+        ..PersistConfig::new(&dir)
+    });
+    let handle =
+        PoolBackend::spawn("127.0.0.1:0", config(1, persist.clone()))
+            .expect("spawn");
+    let _ = run_round(handle.addr(), 2, 0.5, 1);
+    let mut c = HttpClient::connect(handle.addr()).expect("connect");
+    let before = c
+        .send(&Request::new(Method::Get, "/experiment/state"))
+        .unwrap()
+        .json_body()
+        .unwrap();
+    drop(c);
+    handle.stop();
+    let handle = PoolBackend::spawn("127.0.0.1:0", config(1, persist))
+        .expect("respawn");
+    let mut c = HttpClient::connect(handle.addr()).expect("reconnect");
+    let after = c
+        .send(&Request::new(Method::Get, "/experiment/state"))
+        .unwrap()
+        .json_body()
+        .unwrap();
+    drop(c);
+    handle.stop();
+    let _ = std::fs::remove_dir_all(&dir);
+    let same = before.get_u64("puts") == after.get_u64("puts")
+        && before.get_u64("pool_size") == after.get_u64("pool_size");
+    println!(
+        "kill-and-resume state check: {}",
+        if same { "PASS (puts + pool identical)" } else { "FAIL" }
+    );
+    if !same {
+        println!("  before: {before}\n  after:  {after}");
+        std::process::exit(1);
+    }
+}

@@ -1,5 +1,6 @@
-//! Minimal argument parsing: one positional subcommand plus
-//! `--key value` / `--flag` options.
+//! Minimal argument parsing: one positional subcommand, optional bare
+//! positional operands (`nodio replay DIR`), plus `--key value` /
+//! `--flag` options.
 
 use std::collections::BTreeMap;
 
@@ -8,6 +9,7 @@ pub struct Args {
     pub command: String,
     options: BTreeMap<String, String>,
     flags: Vec<String>,
+    positionals: Vec<String>,
 }
 
 impl Args {
@@ -22,9 +24,15 @@ impl Args {
             None => return Err("missing subcommand".into()),
         }
         while let Some(tok) = iter.next() {
-            let key = tok
-                .strip_prefix("--")
-                .ok_or_else(|| format!("unexpected argument {tok}"))?;
+            let key = match tok.strip_prefix("--") {
+                Some(k) => k,
+                // Bare word: a positional operand (`nodio replay DIR`,
+                // `nodio trace generate`).
+                None => {
+                    args.positionals.push(tok.clone());
+                    continue;
+                }
+            };
             // a flag if next token is absent or another option
             match iter.peek() {
                 Some(next) if !next.starts_with("--") => {
@@ -39,6 +47,18 @@ impl Args {
 
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
+    }
+
+    /// The i-th bare positional operand after the subcommand.
+    pub fn positional(&self, i: usize) -> Option<&str> {
+        self.positionals.get(i).map(|s| s.as_str())
+    }
+
+    /// Number of bare positional operands. Commands that take none use
+    /// this to reject strays (`nodio swarm 8`) instead of silently
+    /// ignoring them.
+    pub fn positional_count(&self) -> usize {
+        self.positionals.len()
     }
 
     pub fn get(&self, name: &str) -> Option<&str> {
@@ -111,9 +131,23 @@ mod tests {
     }
 
     #[test]
+    fn positionals_captured_in_order() {
+        let a = parse(&["replay", "data-dir", "--fix"]);
+        assert_eq!(a.command, "replay");
+        assert_eq!(a.positional(0), Some("data-dir"));
+        assert_eq!(a.positional(1), None);
+        assert!(a.flag("fix"));
+
+        // Option values are not positionals.
+        let a = parse(&["trace", "generate", "--out", "t.jsonl"]);
+        assert_eq!(a.positional(0), Some("generate"));
+        assert_eq!(a.get("out"), Some("t.jsonl"));
+        assert_eq!(a.positional(1), None);
+    }
+
+    #[test]
     fn errors() {
         assert!(Args::parse(&[]).is_err());
         assert!(Args::parse(&["--oops".to_string()]).is_err());
-        assert!(Args::parse(&["cmd".to_string(), "stray".to_string()]).is_err());
     }
 }

@@ -11,7 +11,8 @@ use crate::client::driver::EngineChoice;
 use crate::client::volunteer::{ClientConfig, VolunteerClient};
 use crate::client::worker::WorkerMode;
 use crate::coordinator::cluster::{ClusterConfig, PoolBackend};
-use crate::coordinator::PoolServerConfig;
+use crate::coordinator::persistence::replay_dir;
+use crate::coordinator::{PersistConfig, PoolServerConfig};
 use crate::problems::F15Instance;
 use crate::runtime::{NativeEngine, XlaEngine};
 use crate::sim::{run_baseline, run_swarm, run_swarm_trace, ChurnConfig,
@@ -24,6 +25,8 @@ usage: nodio <command> [options]
 commands:
   server    --addr 127.0.0.1:8080 [--target 80] [--bits 160] [--log x.jsonl]
             [--shards N] [--migration-ms 100] [--migration-k 3]
+            [--data-dir nodio-data] [--no-persist] [--snapshot-every 1024]
+            [--fsync]
             run the pool server until killed; --shards N > 1 runs the
             multi-core sharded coordinator (N event-loop shards with
             round-robin connection routing and best-K pool gossip;
@@ -34,8 +37,12 @@ commands:
   swarm     [--clients 4] [--engine native|xla|jnp] [--mode basic|w2]
             [--solutions 1] [--timeout-s 60] [--churn-rate R]
             [--session-s S] [--seed N] [--shards N]
+            [--data-dir DIR] [--no-persist] [--snapshot-every 1024]
             in-process server + simulated volunteers (experiment E6);
             --shards N > 1 drives the sharded pool coordinator
+  replay    <data-dir>
+            reconstruct an experiment's history offline from its WAL +
+            snapshot directory (no server needed)
   baseline  [--pop 512] [--runs 50] [--max-evals 5000000]
             [--engine native|xla|jnp] [--seed N]
             the Figure 3 desktop baseline (experiment E1)
@@ -45,13 +52,37 @@ commands:
             [--seed N] | stats --in trace.jsonl |
             replay --in trace.jsonl [--engine E] [--scale 1.0]
             volunteer-session traces: create, inspect, replay (X5)
+
+persistence (the durable-experiment subsystem):
+  --data-dir holds one directory per shard (shard-0000/...), each with an
+  append-only CRC-framed JSONL write-ahead log (wal.jsonl: one record per
+  accepted PUT, merged migration batch, and experiment-epoch transition)
+  plus a periodic compacted snapshot (snapshot.jsonl, written atomically).
+  On startup the server replays snapshot+tail and RESUMES the live
+  experiment: same pool, same epoch, same per-UUID accounting. A torn
+  final record (crash mid-write) is dropped, never fatal. --no-persist
+  runs fully in-memory (the paper's original semantics); --fsync makes
+  every WAL record power-loss durable at a throughput cost (see
+  benches/wal_overhead.rs).
 ";
 
 pub fn dispatch(args: &Args) -> Result<()> {
+    // Only `replay` (the data dir) and `trace` (the subaction) take bare
+    // operands; a stray one anywhere else is a mistake (`nodio swarm 8`),
+    // not something to silently ignore.
+    if !matches!(args.command.as_str(), "replay" | "trace")
+        && args.positional_count() > 0
+    {
+        bail!(
+            "unexpected argument {:?} (did you mean a --option?)\n{USAGE}",
+            args.positional(0).unwrap_or("")
+        );
+    }
     match args.command.as_str() {
         "server" => cmd_server(args),
         "client" => cmd_client(args),
         "swarm" => cmd_swarm(args),
+        "replay" => cmd_replay(args),
         "baseline" => cmd_baseline(args),
         "shootout" => cmd_shootout(args),
         "trace" => cmd_trace(args),
@@ -68,13 +99,39 @@ fn engine_arg(args: &Args) -> Result<EngineChoice> {
     EngineChoice::parse(name).ok_or_else(|| anyhow!("unknown engine {name}"))
 }
 
+/// Shared `--data-dir` / `--no-persist` / `--snapshot-every` / `--fsync`
+/// handling. `default_dir` None means persistence is opt-in (the swarm
+/// simulator); Some gives the server a durable default.
+fn persist_args(
+    args: &Args,
+    default_dir: Option<&str>,
+) -> Result<Option<PersistConfig>> {
+    if args.flag("no-persist") {
+        return Ok(None);
+    }
+    let dir = match (args.get("data-dir"), default_dir) {
+        (Some(d), _) => d.to_string(),
+        (None, Some(d)) => d.to_string(),
+        (None, None) => return Ok(None),
+    };
+    Ok(Some(PersistConfig {
+        snapshot_every: args
+            .get_u64("snapshot-every", 1024)
+            .map_err(|e| anyhow!(e))?,
+        fsync: args.flag("fsync"),
+        ..PersistConfig::new(dir)
+    }))
+}
+
 fn cmd_server(args: &Args) -> Result<()> {
     let addr = args.get_or("addr", "127.0.0.1:8080").to_string();
     let shards = args.get_usize("shards", 1).map_err(|e| anyhow!(e))?;
+    let persist = persist_args(args, Some("nodio-data"))?;
     let config = PoolServerConfig {
         target_fitness: args.get_f64("target", 80.0).map_err(|e| anyhow!(e))?,
         n_bits: args.get_usize("bits", 160).map_err(|e| anyhow!(e))?,
         log_path: args.get("log").map(std::path::PathBuf::from),
+        persist,
         ..Default::default()
     };
     let cluster = ClusterConfig {
@@ -97,13 +154,74 @@ fn cmd_server(args: &Args) -> Result<()> {
     } else {
         println!("nodio pool server listening on {}", running.addr());
     }
-    println!("routes: PUT /experiment/chromosome, GET /experiment/random,");
-    println!("        GET /experiment/state, GET /stats, GET /metrics,");
+    println!("routes: PUT /experiment/chromosome (object or batch array),");
+    println!("        GET /experiment/random, GET /experiment/state,");
+    println!("        GET /experiment/history, GET /stats, GET /metrics,");
     println!("        POST /experiment/reset");
+    if args.flag("no-persist") {
+        println!("persistence: disabled (--no-persist)");
+    } else {
+        println!(
+            "persistence: WAL + snapshots under {} (replayed on restart)",
+            args.get_or("data-dir", "nodio-data")
+        );
+    }
     // Run until killed.
     loop {
         std::thread::sleep(Duration::from_secs(3600));
     }
+}
+
+fn cmd_replay(args: &Args) -> Result<()> {
+    let dir = args
+        .positional(0)
+        .or_else(|| args.get("dir"))
+        .ok_or_else(|| anyhow!("usage: nodio replay <data-dir>"))?;
+    let history = replay_dir(std::path::Path::new(dir))?;
+    println!(
+        "{dir}: {} shard(s), experiment {} live",
+        history.shards.len(),
+        history.experiment
+    );
+    for (i, shard) in history.shards.iter().enumerate() {
+        println!(
+            "  shard {i}: epoch {} pool {} puts {} best {}{}",
+            shard.state.experiment,
+            shard.state.entries.len(),
+            shard.state.puts,
+            if shard.state.best_fitness.is_finite() {
+                format!("{:.2}", shard.state.best_fitness)
+            } else {
+                "-".into()
+            },
+            if shard.dropped_records > 0 {
+                format!(" ({} torn record(s) dropped)", shard.dropped_records)
+            } else {
+                String::new()
+            }
+        );
+    }
+    println!(
+        "live experiment: pool {} best {}",
+        history.pool_size,
+        if history.best_fitness.is_finite() {
+            format!("{:.2}", history.best_fitness)
+        } else {
+            "-".into()
+        }
+    );
+    println!("completed experiments: {}", history.completed.len());
+    for log in &history.completed {
+        println!(
+            "  experiment {}: best {:.2} puts {} gets {} solved_by {}",
+            log.id,
+            log.best_fitness,
+            log.puts,
+            log.gets,
+            log.solved_by.as_deref().unwrap_or("-")
+        );
+    }
+    Ok(())
 }
 
 fn cmd_client(args: &Args) -> Result<()> {
@@ -141,6 +259,7 @@ fn cmd_swarm(args: &Args) -> Result<()> {
     let config = SwarmConfig {
         n_clients: args.get_usize("clients", 4).map_err(|e| anyhow!(e))?,
         shards: args.get_usize("shards", 1).map_err(|e| anyhow!(e))?,
+        persist: persist_args(args, None)?,
         engine: engine_arg(args)?,
         mode: match args.get_or("mode", "w2") {
             "basic" => WorkerMode::Basic,
@@ -265,12 +384,11 @@ fn cmd_shootout(args: &Args) -> Result<()> {
 }
 
 fn cmd_trace(args: &Args) -> Result<()> {
-    // subaction is passed as a flag-like bare option: nodio trace generate ...
-    // Args puts bare words after the command into neither options nor flags,
-    // so we use --action or detect via known flags; simplest: --gen/--stats
-    // aliases plus explicit options.
+    // `nodio trace generate ...` — bare positional subaction, with the
+    // historical `--generate` / `--action NAME` spellings still accepted.
     let action = args
-        .get("action")
+        .positional(0)
+        .or_else(|| args.get("action"))
         .map(str::to_string)
         .or_else(|| {
             for a in ["generate", "stats", "replay"] {
@@ -280,7 +398,7 @@ fn cmd_trace(args: &Args) -> Result<()> {
             }
             None
         })
-        .ok_or_else(|| anyhow!("trace: pass --generate/--stats/--replay or --action NAME"))?;
+        .ok_or_else(|| anyhow!("trace: pass generate/stats/replay (or --action NAME)"))?;
     match action.as_str() {
         "generate" => {
             let out = args.get("out").unwrap_or("trace.jsonl");

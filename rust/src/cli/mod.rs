@@ -3,9 +3,12 @@
 //!
 //! Subcommands:
 //!
-//! * `nodio server`   — run the pool server (the NodIO Node.js process)
+//! * `nodio server`   — run the pool server (the NodIO Node.js process);
+//!   persistent by default (`--data-dir nodio-data`, `--no-persist` to opt
+//!   out) — a restart resumes the live experiment from WAL + snapshot
 //! * `nodio client`   — run a volunteer client against a server
 //! * `nodio swarm`    — in-process server + N simulated volunteers (E6)
+//! * `nodio replay`   — reconstruct experiment history from a data dir
 //! * `nodio baseline` — the Figure 3 desktop baseline (E1)
 //! * `nodio shootout` — the Figure 4 engine comparison (E2, quick form)
 

@@ -28,12 +28,28 @@
 //!   winner advances a global experiment epoch with one CAS, and every
 //!   shard clears its partition when it observes the new epoch.
 //!
-//! Unsupported relative to the single-loop [`super::server::PoolServer`]
-//! (by design, for now): per-UUID accounting in `/stats`, JSONL event
-//! logging, fitness verification and rate limiting. The single-loop
-//! server remains the default (`--shards 1`).
+//! * **Durability** ([`super::persistence`]): with `persist` configured,
+//!   every shard WALs its accepted PUTs, merged migration batches and
+//!   epoch transitions, snapshots its partition periodically, and replays
+//!   snapshot+tail on spawn — a restarted cluster resumes the live
+//!   experiment (same pool, same epoch, same per-UUID accounting) instead
+//!   of resetting it.
+//! * **Batched PUTs**: `PUT /experiment/chromosome` accepts a JSON array;
+//!   each element is validated independently and answered per-item, so W²
+//!   clients amortize HTTP round-trips.
+//! * **Per-shard response cache**: hot `GET /experiment/random` bodies are
+//!   pre-rendered per pool slot and invalidated on partition mutation
+//!   (partitions are independent between gossip rounds, so there is no
+//!   cross-shard invalidation).
+//!
+//! Per-UUID accounting reaches `/stats` parity with the single-loop
+//! server: shards count locally (lock-free) and publish to their slot
+//! once per tick; the aggregator merges. Still unsupported relative to
+//! [`super::server::PoolServer`] (by design, for now): fitness
+//! verification and rate limiting. The single-loop server remains the
+//! default (`--shards 1`).
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::io;
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::os::fd::AsRawFd;
@@ -43,6 +59,9 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use super::experiment::ExperimentLog;
+use super::persistence::{
+    self, PersistConfig, RecoveredShard, ShardPersistence, ShardState,
+};
 use super::pool::{ChromosomePool, PoolEntry};
 use super::server::{PoolServer, PoolServerConfig};
 use crate::eventloop::{Epoll, Event, Interest, Waker};
@@ -51,8 +70,13 @@ use crate::http::server::{
     TOKEN_WAKER,
 };
 use crate::http::{Method, Request, Response, Service};
-use crate::json::Json;
-use crate::rng::Xoshiro256pp;
+use crate::json::{self, Json};
+use crate::rng::{dist, Xoshiro256pp};
+
+/// Largest accepted batched-PUT array (mirrors
+/// [`super::routes::MAX_PUT_BATCH`]): bounds how long one request can
+/// occupy a shard's event loop.
+pub const MAX_PUT_BATCH: usize = super::routes::MAX_PUT_BATCH;
 
 /// Sharded pool server configuration.
 #[derive(Debug, Clone)]
@@ -60,7 +84,8 @@ pub struct ClusterConfig {
     /// Number of event-loop shards (1 = degenerate single-loop cluster).
     pub shards: usize,
     /// Pool/experiment settings shared with the single-loop server. The
-    /// pool capacity is split evenly across shards; `log_path`,
+    /// pool capacity is split evenly across shards and `persist` gives
+    /// each shard its own WAL+snapshot directory; `log_path`,
     /// `verify_fitness` and `rate_limit` are ignored (see module docs).
     pub base: PoolServerConfig,
     /// Gossip period for inter-shard best-K migration.
@@ -147,6 +172,14 @@ struct ShardSlot {
     pool_len: AtomicU64,
     /// Gossip entries merged into this partition (cumulative).
     migrations_rx: AtomicU64,
+    /// `GET /experiment/random` responses served from the per-shard
+    /// render cache (cumulative).
+    cache_hits: AtomicU64,
+    /// Per-UUID accounting published by the owning shard once per tick
+    /// (the shard counts lock-free and clones here when dirty; `/stats`
+    /// on any shard merges every slot's copy). Written by the owner only,
+    /// read by aggregating shards — contention-free in steady state.
+    per_uuid: Mutex<HashMap<String, u64>>,
 }
 
 impl ShardSlot {
@@ -161,6 +194,8 @@ impl ShardSlot {
             open_conns: AtomicU64::new(0),
             pool_len: AtomicU64::new(0),
             migrations_rx: AtomicU64::new(0),
+            cache_hits: AtomicU64::new(0),
+            per_uuid: Mutex::new(HashMap::new()),
         }
     }
 }
@@ -184,17 +219,38 @@ struct ClusterShared {
 }
 
 impl ClusterShared {
-    fn new(target_fitness: f64) -> ClusterShared {
+    /// Seed the cluster-global state from recovered durable state: the
+    /// max shard epoch, the current-experiment counter sums, the best
+    /// PUT fitness of the resumed experiment and the merged history.
+    /// Cumulative totals (`/stats` total_requests) restart as history
+    /// sums + the live experiment's counters, with the per-experiment
+    /// bases at the history sums — single-loop `total_requests()`
+    /// parity. The experiment wall clock restarts now (elapsed time is
+    /// not persisted).
+    fn recovered(
+        target_fitness: f64,
+        experiment: u64,
+        puts: u64,
+        gets: u64,
+        best_fitness: f64,
+        completed: Vec<ExperimentLog>,
+    ) -> ClusterShared {
+        let hist_puts: u64 = completed.iter().map(|l| l.puts).sum();
+        let hist_gets: u64 = completed.iter().map(|l| l.gets).sum();
         ClusterShared {
             target_fitness,
-            experiment: AtomicU64::new(0),
-            puts: AtomicU64::new(0),
-            gets: AtomicU64::new(0),
-            exp_base_puts: AtomicU64::new(0),
-            exp_base_gets: AtomicU64::new(0),
-            best_key: AtomicU64::new(ordered_key(f64::NEG_INFINITY)),
+            experiment: AtomicU64::new(experiment),
+            puts: AtomicU64::new(hist_puts + puts),
+            gets: AtomicU64::new(hist_gets + gets),
+            exp_base_puts: AtomicU64::new(hist_puts),
+            exp_base_gets: AtomicU64::new(hist_gets),
+            best_key: AtomicU64::new(ordered_key(if best_fitness.is_finite() {
+                best_fitness
+            } else {
+                f64::NEG_INFINITY
+            })),
             started: Mutex::new(Instant::now()),
-            completed: Mutex::new(Vec::new()),
+            completed: Mutex::new(completed),
             shutdown: AtomicBool::new(false),
         }
     }
@@ -209,14 +265,17 @@ impl ClusterShared {
 
     /// Close the current experiment epoch if `expected` is still current.
     /// Exactly one caller wins per epoch; the winner records the log and
-    /// resets the per-experiment aggregates. Returns whether we won.
+    /// resets the per-experiment aggregates. Returns the winner's own
+    /// [`ExperimentLog`] (NOT `completed.last()`, which a concurrent
+    /// finish of the next epoch could have already advanced past —
+    /// the WAL must persist exactly this epoch's record).
     fn finish_experiment(
         &self,
         expected: u64,
         best_fitness: f64,
         solved_by: Option<String>,
         solution: Option<String>,
-    ) -> bool {
+    ) -> Option<ExperimentLog> {
         if self
             .experiment
             .compare_exchange(
@@ -227,7 +286,7 @@ impl ClusterShared {
             )
             .is_err()
         {
-            return false;
+            return None;
         }
         let elapsed = {
             let mut started = self.started.lock().unwrap();
@@ -248,10 +307,10 @@ impl ClusterShared {
             solved_by,
             solution,
         };
-        self.completed.lock().unwrap().push(log);
+        self.completed.lock().unwrap().push(log.clone());
         self.best_key
             .store(ordered_key(f64::NEG_INFINITY), Ordering::Release);
-        true
+        Some(log)
     }
 }
 
@@ -264,6 +323,10 @@ struct ShardCfg {
     seed: u64,
     migration_interval: Duration,
     migration_k: usize,
+    persist: Option<PersistConfig>,
+    /// Durable state replayed on the spawning thread (so errors surface
+    /// from `spawn`), taken by the shard thread at startup.
+    recovered: Option<RecoveredShard>,
 }
 
 /// The request handler + partition state owned by one shard thread. Plain
@@ -277,6 +340,26 @@ struct ShardService {
     rng: Xoshiro256pp,
     /// Experiment epoch this shard has caught up to.
     local_experiment: u64,
+    /// Current-experiment counters, persisted in snapshots so a restart
+    /// resumes exact per-experiment accounting.
+    epoch_puts: u64,
+    epoch_gets: u64,
+    /// Best fitness PUT to this shard this experiment (this shard's
+    /// contribution to the global best CAS).
+    epoch_best: f64,
+    /// Per-UUID accounting (puts + uuid-tagged gets) accrued since the
+    /// last tick, lock-free on the request path; merged into the slot's
+    /// published cumulative map once per tick (O(recently-active UUIDs),
+    /// not O(all-time UUIDs)).
+    per_uuid_delta: HashMap<String, u64>,
+    /// Experiments this shard closed (winner of the epoch CAS) — the
+    /// durable history this shard's snapshots carry.
+    closed: Vec<ExperimentLog>,
+    /// Pre-rendered `GET /experiment/random` bodies, slot-aligned with
+    /// the partition; a slot is invalidated when its entry is replaced
+    /// and the whole cache drops on clear/epoch.
+    random_cache: Vec<Option<Vec<u8>>>,
+    persist: Option<ShardPersistence>,
     shared: Arc<ClusterShared>,
     slots: Arc<Vec<ShardSlot>>,
 }
@@ -284,21 +367,54 @@ struct ShardService {
 impl ShardService {
     fn new(
         cfg: &ShardCfg,
+        recovered: RecoveredShard,
         shared: Arc<ClusterShared>,
         slots: Arc<Vec<ShardSlot>>,
     ) -> ShardService {
-        ShardService {
+        let persist = cfg.persist.as_ref().and_then(|pc| {
+            let dir = persistence::shard_dir(&pc.data_dir, cfg.id);
+            match ShardPersistence::open(&dir, pc, &recovered) {
+                Ok(p) => Some(p),
+                Err(e) => {
+                    eprintln!(
+                        "nodio shard {}: persistence disabled ({}: {e})",
+                        cfg.id,
+                        dir.display()
+                    );
+                    None
+                }
+            }
+        });
+        let state = recovered.state;
+        let mut pool = ChromosomePool::new(cfg.pool_capacity);
+        pool.restore(state.entries, state.accepted);
+        // The recovered cumulative per-UUID map seeds the published slot
+        // copy directly; the live delta starts empty.
+        *slots[cfg.id].per_uuid.lock().unwrap() = state.per_uuid;
+        let service = ShardService {
             id: cfg.id,
             n_bits: cfg.n_bits,
             migration_k: cfg.migration_k,
-            pool: ChromosomePool::new(cfg.pool_capacity),
+            pool,
             rng: Xoshiro256pp::new(
                 cfg.seed ^ (cfg.id as u64).wrapping_mul(0x9E3779B97F4A7C15),
             ),
-            local_experiment: shared.experiment.load(Ordering::Acquire),
+            // Starts at the shard's own recovered epoch; the first tick's
+            // sync_epoch catches up to the cluster max and WALs the
+            // transition like any other epoch change.
+            local_experiment: state.experiment,
+            epoch_puts: state.puts,
+            epoch_gets: state.gets,
+            epoch_best: state.best_fitness,
+            per_uuid_delta: HashMap::new(),
+            closed: state.completed,
+            random_cache: Vec::new(),
+            persist,
             shared,
             slots,
-        }
+        };
+        service.publish_pool_len();
+        service
     }
 
     fn slot(&self) -> &ShardSlot {
@@ -311,14 +427,98 @@ impl ShardService {
             .store(self.pool.len() as u64, Ordering::Relaxed);
     }
 
+    /// Merge the tick's per-UUID delta into this shard's published slot
+    /// map (`/stats` aggregation reads the slots; staleness is bounded by
+    /// one tick, cost by the number of UUIDs active within it).
+    fn publish_per_uuid(&mut self) {
+        if self.per_uuid_delta.is_empty() {
+            return;
+        }
+        let slot = &self.slots[self.id];
+        let mut published = slot.per_uuid.lock().unwrap();
+        for (k, v) in self.per_uuid_delta.drain() {
+            *published.entry(k).or_insert(0) += v;
+        }
+    }
+
+    /// Keep the render cache slot-aligned after a pool insert.
+    fn note_pool_insert(&mut self, evict: Option<usize>) {
+        match evict {
+            Some(i) if i < self.random_cache.len() => {
+                self.random_cache[i] = None
+            }
+            Some(_) => {}
+            None => self.random_cache.push(None),
+        }
+    }
+
+    /// The durable view of this shard (what a snapshot captures). The
+    /// full per-UUID map is published copy + unpublished delta.
+    fn snapshot_state(&self) -> ShardState {
+        let mut per_uuid = self.slot().per_uuid.lock().unwrap().clone();
+        for (k, v) in &self.per_uuid_delta {
+            *per_uuid.entry(k.clone()).or_insert(0) += *v;
+        }
+        ShardState {
+            experiment: self.local_experiment,
+            seq: 0, // stamped by ShardPersistence::snapshot
+            puts: self.epoch_puts,
+            gets: self.epoch_gets,
+            best_fitness: self.epoch_best,
+            accepted: self.pool.accepted(),
+            per_uuid,
+            completed: self.closed.clone(),
+            entries: self.pool.entries().to_vec(),
+        }
+    }
+
+    /// Compact the WAL into a snapshot once enough records accumulated.
+    fn maybe_snapshot(&mut self) {
+        if !self
+            .persist
+            .as_ref()
+            .is_some_and(ShardPersistence::should_snapshot)
+        {
+            return;
+        }
+        let snap = self.snapshot_state();
+        if let Some(p) = &mut self.persist {
+            p.snapshot(snap);
+        }
+    }
+
+    /// fsync the WAL on shutdown so a graceful stop loses nothing.
+    fn shutdown_flush(&mut self) {
+        if let Some(p) = &mut self.persist {
+            p.sync();
+        }
+    }
+
+    /// Move this shard to epoch `to`: WAL the transition (with the
+    /// closing record when this shard won the epoch CAS), clear the
+    /// partition, reset per-experiment counters.
+    fn advance_epoch_locally(&mut self, to: u64, log: Option<&ExperimentLog>) {
+        if let Some(p) = &mut self.persist {
+            p.record_epoch(self.local_experiment, to, log);
+        }
+        if let Some(l) = log {
+            self.closed.push(l.clone());
+        }
+        self.local_experiment = to;
+        self.pool.clear();
+        self.random_cache.clear();
+        self.epoch_puts = 0;
+        self.epoch_gets = 0;
+        self.epoch_best = f64::NEG_INFINITY;
+        self.publish_pool_len();
+    }
+
     /// Catch up with the global experiment epoch: a solution (or reset) on
     /// any shard clears every partition.
     fn sync_epoch(&mut self) {
         let global = self.shared.experiment.load(Ordering::Acquire);
         if global != self.local_experiment {
-            self.local_experiment = global;
-            self.pool.clear();
-            self.publish_pool_len();
+            self.advance_epoch_locally(global, None);
         }
     }
 
@@ -328,7 +528,7 @@ impl ShardService {
         if batches.is_empty() {
             return;
         }
-        let mut merged = 0u64;
+        let mut applied: Vec<(PoolEntry, Option<usize>)> = Vec::new();
         for batch in batches {
             if batch.experiment != self.local_experiment {
                 continue; // stale epoch: the experiment already ended
@@ -345,14 +545,18 @@ impl ShardService {
                 if dup {
                     continue;
                 }
-                self.pool.put(entry, &mut self.rng);
-                merged += 1;
+                let evict = self.pool.put(entry.clone(), &mut self.rng);
+                self.note_pool_insert(evict);
+                applied.push((entry, evict));
             }
         }
-        if merged > 0 {
+        if !applied.is_empty() {
+            if let Some(p) = &mut self.persist {
+                p.record_migration(self.local_experiment, &applied);
+            }
             self.slot()
                 .migrations_rx
-                .fetch_add(merged, Ordering::Relaxed);
+                .fetch_add(applied.len() as u64, Ordering::Relaxed);
             self.publish_pool_len();
         }
     }
@@ -414,29 +618,49 @@ impl ShardService {
                 return Response::bad_request(&format!("bad json: {e}"))
             }
         };
-        let chromosome = match body.get_str("chromosome") {
-            Some(c) => c.to_string(),
-            None => return Response::bad_request("missing chromosome"),
-        };
-        // Reject non-finite fitness outright: a NaN here must never reach
-        // the pool or the global best CAS (threat model, section 1).
-        let fitness = match body.get_f64("fitness") {
-            Some(f) if f.is_finite() => f,
-            Some(_) => return Response::bad_request("non-finite fitness"),
-            None => return Response::bad_request("missing/invalid fitness"),
-        };
-        let uuid = body.get_str("uuid").unwrap_or("anonymous").to_string();
-        if chromosome.len() != self.n_bits
-            || !chromosome.bytes().all(|b| b == b'0' || b == b'1')
-        {
-            return Response::bad_request("malformed chromosome");
+        match &body {
+            // Batched PUT: one response element per request element
+            // (protocol shared with the single-loop router).
+            Json::Arr(items) => {
+                match super::routes::run_put_batch(items, |item| {
+                    self.put_one(item)
+                }) {
+                    Err(resp) => resp,
+                    Ok(out) => Response::json(&Json::obj(vec![
+                        ("batch", items.len().into()),
+                        ("accepted", out.accepted.into()),
+                        ("solved", out.solved.into()),
+                        ("experiment", self.local_experiment.into()),
+                        ("results", Json::Arr(out.results)),
+                    ])),
+                }
+            }
+            _ => {
+                let (status, payload) = self.put_one(&body);
+                Response::new(status).with_json(&payload)
+            }
         }
+    }
+
+    /// Validate and apply one PUT element (shared by the single and
+    /// batched forms). Returns the per-item status and JSON payload.
+    fn put_one(&mut self, body: &Json) -> (u16, Json) {
+        let (chromosome, fitness, uuid) =
+            match super::routes::parse_put_item(body, self.n_bits) {
+                Ok(parts) => parts,
+                Err(rejection) => return rejection,
+            };
 
         // Never insert into a partition belonging to a finished epoch.
         self.sync_epoch();
 
         self.shared.puts.fetch_add(1, Ordering::Relaxed);
         self.slot().puts.fetch_add(1, Ordering::Relaxed);
+        self.epoch_puts += 1;
+        *self.per_uuid_delta.entry(uuid.clone()).or_insert(0) += 1;
+        if fitness > self.epoch_best {
+            self.epoch_best = fitness;
+        }
         let key = ordered_key(fitness);
         self.shared.best_key.fetch_max(key, Ordering::AcqRel);
         // If another shard finished the experiment between our sync_epoch
@@ -466,28 +690,37 @@ impl ShardService {
             fitness,
             uuid: uuid.clone(),
         };
-        self.pool.put(entry, &mut self.rng);
+        let evict = self.pool.put(entry.clone(), &mut self.rng);
+        self.note_pool_insert(evict);
+        if let Some(p) = &mut self.persist {
+            p.record_put(self.local_experiment, &entry, evict);
+        }
         self.publish_pool_len();
 
         let solved = fitness >= self.shared.target_fitness - 1e-9;
         if !solved {
-            return Response::json(&Json::obj(vec![
-                ("solved", false.into()),
-                ("experiment", self.local_experiment.into()),
-            ]));
+            return (
+                200,
+                Json::obj(vec![
+                    ("solved", false.into()),
+                    ("experiment", self.local_experiment.into()),
+                ]),
+            );
         }
 
         // Experiment over. One shard wins the epoch CAS and records the
         // log; everyone else (a concurrent solver on another shard) still
         // reports solved. Peers are woken so their partitions clear now,
         // not at the next tick.
-        let won = self.shared.finish_experiment(
+        let record = self.shared.finish_experiment(
             self.local_experiment,
             fitness,
             Some(uuid),
             Some(chromosome),
         );
-        if won {
+        if record.is_some() {
+            let to = self.local_experiment + 1;
+            self.advance_epoch_locally(to, record.as_ref());
             for (i, slot) in self.slots.iter().enumerate() {
                 if i != self.id {
                     slot.waker.wake();
@@ -499,29 +732,50 @@ impl ShardService {
             ("solved", true.into()),
             ("experiment", self.local_experiment.into()),
         ]);
-        if won {
-            if let Some(log) = self.shared.completed.lock().unwrap().last() {
-                resp.set("record", log.to_json());
-            }
+        if let Some(log) = record {
+            resp.set("record", log.to_json());
         }
-        Response::new(201).with_json(&resp)
+        (201, resp)
     }
 
-    fn get_random(&mut self, _req: &Request) -> Response {
+    fn get_random(&mut self, req: &Request) -> Response {
         self.sync_epoch();
         self.shared.gets.fetch_add(1, Ordering::Relaxed);
         self.slot().gets.fetch_add(1, Ordering::Relaxed);
-        let picked = self.pool.random(&mut self.rng).cloned();
-        match picked {
-            Some(e) => Response::json(&Json::obj(vec![
-                ("chromosome", e.chromosome.clone().into()),
-                ("fitness", e.fitness.into()),
-                ("experiment", self.local_experiment.into()),
-            ])),
+        self.epoch_gets += 1;
+        if let Some(u) = req.query_param("uuid") {
+            *self.per_uuid_delta.entry(u.to_string()).or_insert(0) += 1;
+        }
+        let len = self.pool.len();
+        if len == 0 {
             // Empty partition: 204, the island continues without an
             // immigrant (same contract as the single server).
-            None => Response::new(204),
+            return Response::new(204);
         }
+        let idx = dist::range(&mut self.rng, 0, len);
+        if self.random_cache.len() != len {
+            // Only possible right after recovery (cache starts cold).
+            self.random_cache.resize(len, None);
+        }
+        if let Some(body) = &self.random_cache[idx] {
+            self.slot().cache_hits.fetch_add(1, Ordering::Relaxed);
+            let mut resp = Response::new(200);
+            resp.body = body.clone();
+            resp.set_header("content-type", "application/json");
+            return resp;
+        }
+        let e = &self.pool.entries()[idx];
+        let body = json::to_string(&Json::obj(vec![
+            ("chromosome", e.chromosome.as_str().into()),
+            ("fitness", e.fitness.into()),
+            ("experiment", self.local_experiment.into()),
+        ]))
+        .into_bytes();
+        self.random_cache[idx] = Some(body.clone());
+        let mut resp = Response::new(200);
+        resp.body = body;
+        resp.set_header("content-type", "application/json");
+        resp
     }
 
     fn state(&self) -> Response {
@@ -581,10 +835,32 @@ impl ShardService {
                             "migrations_rx",
                             s.migrations_rx.load(Ordering::Relaxed).into(),
                         ),
+                        (
+                            "cache_hits",
+                            s.cache_hits.load(Ordering::Relaxed).into(),
+                        ),
                     ])
                 })
                 .collect(),
         )
+    }
+
+    /// Cluster-wide per-UUID accounting: every slot's published map plus
+    /// this shard's unpublished delta (peer staleness bounded by one
+    /// tick) — the single-loop server's `/stats` parity.
+    fn merged_per_uuid(&self) -> Json {
+        let mut merged: HashMap<String, u64> = HashMap::new();
+        for slot in self.slots.iter() {
+            for (k, v) in slot.per_uuid.lock().unwrap().iter() {
+                *merged.entry(k.clone()).or_insert(0) += *v;
+            }
+        }
+        for (k, v) in &self.per_uuid_delta {
+            *merged.entry(k.clone()).or_insert(0) += *v;
+        }
+        let mut uuids: Vec<(String, u64)> = merged.into_iter().collect();
+        uuids.sort();
+        Json::Obj(uuids.into_iter().map(|(k, v)| (k, v.into())).collect())
     }
 
     fn stats_route(&self) -> Response {
@@ -602,8 +878,23 @@ impl ShardService {
         Response::json(&Json::obj(vec![
             ("total_requests", total.into()),
             ("shards", self.slots.len().into()),
+            ("per_uuid", self.merged_per_uuid()),
             ("per_shard", self.per_shard_json()),
             ("experiments", experiments),
+        ]))
+    }
+
+    /// Completed-experiment history — recovered records (WAL/snapshot
+    /// replay) seed this list on startup, so it survives restarts.
+    fn history(&self) -> Response {
+        let completed = self.shared.completed.lock().unwrap();
+        Response::json(&Json::obj(vec![
+            ("count", completed.len().into()),
+            ("persistent", self.persist.is_some().into()),
+            (
+                "experiments",
+                Json::Arr(completed.iter().map(|l| l.to_json()).collect()),
+            ),
         ]))
     }
 
@@ -628,12 +919,15 @@ impl ShardService {
     fn reset(&mut self) -> Response {
         let best = self.shared.best_fitness();
         let recorded = if best.is_finite() { best } else { f64::NEG_INFINITY };
-        self.shared.finish_experiment(
+        if let Some(log) = self.shared.finish_experiment(
             self.local_experiment,
             recorded,
             None,
             None,
-        );
+        ) {
+            let to = self.local_experiment + 1;
+            self.advance_epoch_locally(to, Some(&log));
+        }
         // Lost CAS means a concurrent solution/reset already ended the
         // epoch — either way the experiment the caller saw is over.
         for (i, slot) in self.slots.iter().enumerate() {
@@ -668,14 +962,15 @@ impl Service for ShardService {
             }
             (Method::Get, "/experiment/random") => self.get_random(req),
             (Method::Get, "/experiment/state") => self.state(),
+            (Method::Get, "/experiment/history") => self.history(),
             (Method::Get, "/stats") => self.stats_route(),
             (Method::Get, "/metrics") => self.metrics(),
             (Method::Post, "/experiment/reset") => self.reset(),
             (
                 _,
                 "/" | "/experiment/chromosome" | "/experiment/random"
-                | "/experiment/state" | "/stats" | "/metrics"
-                | "/experiment/reset",
+                | "/experiment/state" | "/experiment/history" | "/stats"
+                | "/metrics" | "/experiment/reset",
             ) => Response::new(405).with_text("method not allowed"),
             _ => Response::not_found(),
         }
@@ -685,7 +980,7 @@ impl Service for ShardService {
 /// One shard thread: its own epoll + waker + [`ConnDriver`] + partition,
 /// woken by the acceptor for new connections and by peers for gossip.
 fn shard_loop(
-    cfg: ShardCfg,
+    mut cfg: ShardCfg,
     waker: Waker,
     shared: Arc<ClusterShared>,
     slots: Arc<Vec<ShardSlot>>,
@@ -694,7 +989,10 @@ fn shard_loop(
     let epoll = Epoll::new()?;
     epoll.add(waker.fd(), TOKEN_WAKER, Interest::READ)?;
     let mut driver = ConnDriver::new(cfg.http.clone());
-    let mut service = ShardService::new(&cfg, shared.clone(), slots.clone());
+    let recovered =
+        cfg.recovered.take().unwrap_or_else(RecoveredShard::fresh);
+    let mut service =
+        ShardService::new(&cfg, recovered, shared.clone(), slots.clone());
     let mut events: Vec<Event> = Vec::new();
     let mut last_gossip = Instant::now();
     let id = cfg.id;
@@ -720,11 +1018,14 @@ fn shard_loop(
             last_gossip = Instant::now();
             service.gossip();
         }
+        service.publish_per_uuid();
+        service.maybe_snapshot();
         driver.sweep_idle(&epoll);
         slots[id]
             .open_conns
             .store(driver.connections() as u64, Ordering::Relaxed);
     }
+    service.shutdown_flush();
     Ok(())
 }
 
@@ -768,6 +1069,10 @@ impl ShardedPoolServer {
     /// Spawn the acceptor and all shard threads on `addr` (e.g.
     /// `"127.0.0.1:0"`). The returned handle stops the cluster when
     /// dropped.
+    /// With `config.base.persist` set, every shard's durable state is
+    /// recovered (snapshot + WAL replay) before any thread starts;
+    /// recovery errors (corrupt snapshot, mismatched layout) fail the
+    /// spawn rather than silently resetting the experiment.
     pub fn spawn(
         addr: &str,
         config: ClusterConfig,
@@ -777,7 +1082,59 @@ impl ShardedPoolServer {
         listener.set_nonblocking(true)?;
         let addr = listener.local_addr()?;
 
-        let shared = Arc::new(ClusterShared::new(config.base.target_fitness));
+        // Recover durable state up front so the global epoch/best/history
+        // can seed the shared fan-in state consistently across shards.
+        let mut recovered: Vec<RecoveredShard> = match &config.base.persist {
+            Some(pc) => {
+                persistence::check_or_init_meta(
+                    &pc.data_dir,
+                    n,
+                    config.base.n_bits,
+                    config.base.pool_capacity,
+                )?;
+                let shards = persistence::recover_cluster(&pc.data_dir, n)?;
+                let dropped: u64 =
+                    shards.iter().map(|s| s.dropped_records).sum();
+                if dropped > 0 {
+                    eprintln!(
+                        "nodio: dropped {dropped} torn WAL record(s) on \
+                         recovery"
+                    );
+                }
+                shards
+            }
+            None => (0..n).map(|_| RecoveredShard::fresh()).collect(),
+        };
+        let epoch = recovered
+            .iter()
+            .map(|r| r.state.experiment)
+            .max()
+            .unwrap_or(0);
+        let completed = persistence::merge_completed(&recovered);
+        let (mut puts0, mut gets0) = (0u64, 0u64);
+        let mut best0 = f64::NEG_INFINITY;
+        for r in &recovered {
+            if r.state.experiment == epoch {
+                puts0 += r.state.puts;
+                gets0 += r.state.gets;
+                best0 = best0.max(r.state.best_fitness);
+            }
+        }
+        if !completed.is_empty() || epoch > 0 {
+            eprintln!(
+                "nodio: resumed experiment {epoch} ({} completed)",
+                completed.len()
+            );
+        }
+
+        let shared = Arc::new(ClusterShared::recovered(
+            config.base.target_fitness,
+            epoch,
+            puts0,
+            gets0,
+            best0,
+            completed,
+        ));
         let stats = Arc::new(ServerStats::default());
 
         let mut slots = Vec::with_capacity(n);
@@ -800,6 +1157,11 @@ impl ShardedPoolServer {
                 seed: config.base.seed,
                 migration_interval: config.migration_interval,
                 migration_k: config.migration_k,
+                persist: config.base.persist.clone(),
+                recovered: Some(std::mem::replace(
+                    &mut recovered[id],
+                    RecoveredShard::fresh(),
+                )),
             };
             let shared = shared.clone();
             let slots = slots.clone();
@@ -1226,5 +1588,285 @@ mod tests {
             c.send(&Request::new(Method::Get, "/experiment/chromosome")).unwrap();
         assert_eq!(resp.status, 405);
         handle.stop();
+    }
+
+    #[test]
+    fn batched_put_reports_per_item_status() {
+        let handle =
+            ShardedPoolServer::spawn("127.0.0.1:0", fast_config(2, 8.0))
+                .unwrap();
+        let mut c = HttpClient::connect(handle.addr).unwrap();
+        let batch = Json::Arr(vec![
+            Json::obj(vec![
+                ("chromosome", "01010101".into()),
+                ("fitness", 3.0.into()),
+                ("uuid", "w".into()),
+            ]),
+            Json::obj(vec![
+                ("chromosome", "bad".into()),
+                ("fitness", 1.0.into()),
+            ]),
+            Json::obj(vec![
+                ("chromosome", "11111111".into()),
+                ("fitness", 8.0.into()), // solves
+                ("uuid", "w".into()),
+            ]),
+        ]);
+        let resp = c
+            .send(
+                &Request::new(Method::Put, "/experiment/chromosome")
+                    .with_json(&batch),
+            )
+            .unwrap();
+        assert_eq!(resp.status, 200);
+        let body = resp.json_body().unwrap();
+        assert_eq!(body.get_u64("batch"), Some(3));
+        assert_eq!(body.get_u64("accepted"), Some(2));
+        assert_eq!(body.get("solved").and_then(Json::as_bool), Some(true));
+        assert_eq!(body.get_u64("experiment"), Some(1));
+        let results = body.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(results[0].get_u64("status"), Some(200));
+        assert_eq!(results[1].get_u64("status"), Some(400));
+        assert!(results[1].get_str("error").is_some());
+        assert_eq!(results[2].get_u64("status"), Some(201));
+        assert!(results[2].get("record").is_some());
+        handle.stop();
+    }
+
+    #[test]
+    fn per_uuid_accounting_aggregates_across_shards() {
+        let mut config = fast_config(2, 1e18);
+        config.migration_interval = Duration::from_secs(3600);
+        let handle =
+            ShardedPoolServer::spawn("127.0.0.1:0", config).unwrap();
+        let mut c1 = HttpClient::connect(handle.addr).unwrap(); // shard 0
+        let mut c2 = HttpClient::connect(handle.addr).unwrap(); // shard 1
+        assert_eq!(c1.send(&put_req("01010101", 1.0, "a")).unwrap().status, 200);
+        assert_eq!(c1.send(&put_req("01010111", 2.0, "a")).unwrap().status, 200);
+        assert_eq!(c2.send(&put_req("01110101", 3.0, "b")).unwrap().status, 200);
+        let _ = c2
+            .send(&Request::new(Method::Get, "/experiment/random?uuid=b"))
+            .unwrap();
+
+        // Publication is per-tick; wait for the merged view to settle.
+        let ok = wait_until(Duration::from_secs(5), || {
+            c1.send(&Request::new(Method::Get, "/stats"))
+                .ok()
+                .and_then(|r| r.json_body().ok())
+                .map(|b| {
+                    let per_uuid = b.get("per_uuid");
+                    per_uuid.and_then(|p| p.get_u64("a")) == Some(2)
+                        && per_uuid.and_then(|p| p.get_u64("b")) == Some(2)
+                })
+                .unwrap_or(false)
+        });
+        assert!(ok, "per-UUID counts never aggregated across shards");
+        handle.stop();
+    }
+
+    #[test]
+    fn random_cache_serves_hot_responses() {
+        let mut config = fast_config(1, 1e18);
+        config.migration_interval = Duration::from_secs(3600);
+        let handle =
+            ShardedPoolServer::spawn("127.0.0.1:0", config).unwrap();
+        let mut c = HttpClient::connect(handle.addr).unwrap();
+        assert_eq!(c.send(&put_req("01010101", 5.0, "a")).unwrap().status, 200);
+        // Single entry: every GET picks slot 0; the first render fills the
+        // cache, the rest hit it.
+        for _ in 0..5 {
+            let resp = c
+                .send(&Request::new(Method::Get, "/experiment/random"))
+                .unwrap();
+            assert_eq!(resp.status, 200);
+            let body = resp.json_body().unwrap();
+            assert_eq!(body.get_str("chromosome"), Some("01010101"));
+            assert_eq!(body.get_f64("fitness"), Some(5.0));
+        }
+        let stats = c
+            .send(&Request::new(Method::Get, "/stats"))
+            .unwrap()
+            .json_body()
+            .unwrap();
+        let per_shard = stats.get("per_shard").unwrap().as_arr().unwrap();
+        let hits: u64 = per_shard
+            .iter()
+            .filter_map(|s| s.get_u64("cache_hits"))
+            .sum();
+        assert!(hits >= 4, "{stats}");
+
+        // A mutation invalidates the slot: the replacing PUT evicts slot 0
+        // once capacity is reached — here pool is large, so instead verify
+        // the cache never serves a stale epoch after reset.
+        let resp =
+            c.send(&Request::new(Method::Post, "/experiment/reset")).unwrap();
+        assert_eq!(resp.status, 200);
+        let cleared = wait_until(Duration::from_secs(5), || {
+            c.send(&Request::new(Method::Get, "/experiment/random"))
+                .map(|r| r.status == 204)
+                .unwrap_or(false)
+        });
+        assert!(cleared, "cache served a stale entry after reset");
+        handle.stop();
+    }
+
+    fn persist_config(
+        shards: usize,
+        target: f64,
+        dir: &std::path::Path,
+        snapshot_every: u64,
+    ) -> ClusterConfig {
+        let mut config = fast_config(shards, target);
+        config.migration_interval = Duration::from_secs(3600);
+        config.base.persist = Some(PersistConfig {
+            snapshot_every,
+            ..PersistConfig::new(dir)
+        });
+        config
+    }
+
+    #[test]
+    fn recovery_cluster_resumes_mid_experiment() {
+        let dir = std::env::temp_dir().join(format!(
+            "nodio-recover-cluster-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+
+        // Run 1: solve experiment 0, then leave experiment 1 mid-flight
+        // with entries on both shards (snapshot_every 3 forces >=1
+        // snapshot; the later puts form the WAL tail).
+        {
+            let handle = ShardedPoolServer::spawn(
+                "127.0.0.1:0",
+                persist_config(2, 8.0, &dir, 3),
+            )
+            .unwrap();
+            let mut c1 = HttpClient::connect(handle.addr).unwrap(); // shard 0
+            let mut c2 = HttpClient::connect(handle.addr).unwrap(); // shard 1
+            assert_eq!(
+                c1.send(&put_req("11111111", 8.0, "a")).unwrap().status,
+                201
+            );
+            // Shard 1 observes the new epoch before its next insert.
+            assert_eq!(
+                c2.send(&put_req("00000011", 2.0, "b")).unwrap().status,
+                200
+            );
+            assert_eq!(
+                c1.send(&put_req("00000001", 1.0, "a")).unwrap().status,
+                200
+            );
+            assert_eq!(
+                c2.send(&put_req("00000111", 3.0, "b")).unwrap().status,
+                200
+            );
+            // Let the tick loops snapshot (5ms tick; 3+ records per shard
+            // is not guaranteed on shard 1, but shard 0 has put+epoch+put).
+            std::thread::sleep(Duration::from_millis(200));
+            assert_eq!(
+                c1.send(&put_req("00001111", 4.0, "a")).unwrap().status,
+                200
+            );
+            let state = c1
+                .send(&Request::new(Method::Get, "/experiment/state"))
+                .unwrap()
+                .json_body()
+                .unwrap();
+            assert_eq!(state.get_u64("experiment"), Some(1));
+            assert_eq!(state.get_u64("pool_size"), Some(4));
+            assert_eq!(state.get_u64("puts"), Some(4));
+            assert_eq!(state.get_f64("best_fitness"), Some(4.0));
+            handle.stop();
+        }
+        // At least one shard wrote a snapshot before the kill.
+        let have_snapshot = (0..2).any(|i| {
+            persistence::shard_dir(&dir, i)
+                .join("snapshot.jsonl")
+                .exists()
+        });
+        assert!(have_snapshot, "no shard snapshotted before the kill");
+
+        // Run 2: identical state after restart.
+        {
+            let handle = ShardedPoolServer::spawn(
+                "127.0.0.1:0",
+                persist_config(2, 8.0, &dir, 3),
+            )
+            .unwrap();
+            let mut c1 = HttpClient::connect(handle.addr).unwrap();
+            let state = c1
+                .send(&Request::new(Method::Get, "/experiment/state"))
+                .unwrap()
+                .json_body()
+                .unwrap();
+            assert_eq!(state.get_u64("experiment"), Some(1));
+            assert_eq!(state.get_u64("pool_size"), Some(4));
+            assert_eq!(state.get_u64("puts"), Some(4));
+            assert_eq!(state.get_f64("best_fitness"), Some(4.0));
+            assert_eq!(state.get_u64("completed"), Some(1));
+
+            // Per-UUID accounting is identical (puts only above).
+            let ok = wait_until(Duration::from_secs(5), || {
+                c1.send(&Request::new(Method::Get, "/stats"))
+                    .ok()
+                    .and_then(|r| r.json_body().ok())
+                    .map(|b| {
+                        let p = b.get("per_uuid");
+                        p.and_then(|p| p.get_u64("a")) == Some(3)
+                            && p.and_then(|p| p.get_u64("b")) == Some(2)
+                    })
+                    .unwrap_or(false)
+            });
+            assert!(ok, "per-UUID accounting did not survive the restart");
+
+            // History carries the solved experiment.
+            let history = c1
+                .send(&Request::new(Method::Get, "/experiment/history"))
+                .unwrap()
+                .json_body()
+                .unwrap();
+            assert_eq!(history.get_u64("count"), Some(1));
+            assert_eq!(
+                history.get("persistent").and_then(Json::as_bool),
+                Some(true)
+            );
+            let experiments =
+                history.get("experiments").unwrap().as_arr().unwrap();
+            assert_eq!(experiments[0].get_str("solved_by"), Some("a"));
+            assert_eq!(experiments[0].get_str("solution"), Some("11111111"));
+
+            // The resumed experiment still terminates cluster-wide.
+            let mut c2 = HttpClient::connect(handle.addr).unwrap();
+            assert_eq!(
+                c2.send(&put_req("11111111", 8.0, "b")).unwrap().status,
+                201
+            );
+            handle.stop();
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn recovery_shard_count_mismatch_refused() {
+        let dir = std::env::temp_dir().join(format!(
+            "nodio-recover-cluster-layout-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        {
+            let handle = ShardedPoolServer::spawn(
+                "127.0.0.1:0",
+                persist_config(2, 1e18, &dir, 64),
+            )
+            .unwrap();
+            handle.stop();
+        }
+        assert!(ShardedPoolServer::spawn(
+            "127.0.0.1:0",
+            persist_config(4, 1e18, &dir, 64),
+        )
+        .is_err());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

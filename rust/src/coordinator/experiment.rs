@@ -20,6 +20,29 @@ pub struct ExperimentLog {
 }
 
 impl ExperimentLog {
+    /// Inverse of [`ExperimentLog::to_json`] — used by WAL/snapshot
+    /// recovery ([`super::persistence`]). Returns `None` when `v` is not
+    /// an experiment record.
+    pub fn from_json(v: &Json) -> Option<ExperimentLog> {
+        // Guard from_secs_f64 against non-finite/negative inputs (it
+        // panics on them); a damaged record degrades to elapsed 0.
+        let elapsed_s = match v.get_f64("elapsed_s") {
+            Some(e) if e.is_finite() && e > 0.0 => e,
+            _ => 0.0,
+        };
+        Some(ExperimentLog {
+            id: v.get_u64("experiment")?,
+            elapsed: Duration::from_secs_f64(elapsed_s),
+            puts: v.get_u64("puts").unwrap_or(0),
+            gets: v.get_u64("gets").unwrap_or(0),
+            best_fitness: v
+                .get_f64("best_fitness")
+                .unwrap_or(f64::NEG_INFINITY),
+            solved_by: v.get_str("solved_by").map(str::to_string),
+            solution: v.get_str("solution").map(str::to_string),
+        })
+    }
+
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("experiment", self.id.into()),
@@ -148,6 +171,28 @@ impl ExperimentManager {
         self.gets = 0;
         self.best_fitness = f64::NEG_INFINITY;
         log
+    }
+
+    /// Restore recovered state (WAL/snapshot replay) into a fresh manager.
+    /// The wall clock restarts now: elapsed time is not persisted, so a
+    /// resumed experiment's `elapsed` counts from the restart (documented
+    /// persistence tradeoff).
+    pub fn restore(
+        &mut self,
+        current_id: u64,
+        puts: u64,
+        gets: u64,
+        best_fitness: f64,
+        per_uuid: HashMap<String, u64>,
+        completed: Vec<ExperimentLog>,
+    ) {
+        self.current_id = current_id;
+        self.puts = puts;
+        self.gets = gets;
+        self.best_fitness = best_fitness;
+        self.per_uuid = per_uuid;
+        self.completed = completed;
+        self.started = Instant::now();
     }
 
     /// Totals across completed + current.

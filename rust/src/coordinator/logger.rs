@@ -1,27 +1,36 @@
 //! JSONL event logging — the paper's server "performs logging duties, but
 //! they are basically a very lightweight and high performance data
-//! storage". One JSON object per line, buffered, flushed on experiment
-//! boundaries and drop.
+//! storage".
+//!
+//! Since the persistence subsystem landed, `EventLog` is a thin facade
+//! over the same CRC-framed [`super::persistence::wal::WalWriter`] the
+//! WAL uses: one framed JSON object per line, flushed per record. Event
+//! records are audit-only — recovery replays state from `put`/`migration`
+//! /`epoch` records and skips `event` records — so a standalone event log
+//! (`--log` without `--data-dir`) and a full WAL share one writer, one
+//! framing, and one reader ([`super::persistence::wal::scan`]).
 
-use std::fs::{File, OpenOptions};
-use std::io::{BufWriter, Write};
 use std::path::Path;
 use std::time::Instant;
 
-use crate::json::{self, Json};
+use super::persistence::wal::WalWriter;
+use crate::json::Json;
 
-/// Append-only JSONL writer. `None` target discards (for benches).
+/// Append-only framed-JSONL event writer. `None` target discards (for
+/// benches).
 pub struct EventLog {
-    out: Option<BufWriter<File>>,
+    out: Option<WalWriter>,
     epoch: Instant,
     events: u64,
 }
 
 impl EventLog {
     pub fn to_file(path: &Path) -> std::io::Result<EventLog> {
-        let file = OpenOptions::new().create(true).append(true).open(path)?;
+        // Buffered: audit events are not replayed state, so they keep the
+        // pre-fold batching (flush at experiment boundaries and drop)
+        // instead of the WAL's per-record flush.
         Ok(EventLog {
-            out: Some(BufWriter::new(file)),
+            out: Some(WalWriter::open(path, 0, None, false)?.buffered()),
             epoch: Instant::now(),
             events: 0,
         })
@@ -39,16 +48,19 @@ impl EventLog {
     pub fn log(&mut self, kind: &str, mut fields: Json) {
         self.events += 1;
         if let Some(out) = &mut self.out {
-            if let Json::Obj(_) = fields {
-            } else {
+            if !matches!(fields, Json::Obj(_)) {
                 fields = Json::obj(vec![("value", fields)]);
             }
+            fields.set("t", Json::Str("event".to_string()));
             fields.set("event", Json::Str(kind.to_string()));
             fields.set("t_s", Json::Num(self.epoch.elapsed().as_secs_f64()));
-            let _ = writeln!(out, "{}", json::to_string(&fields));
+            let _ = out.append(fields);
         }
     }
 
+    /// Flush buffered events to the OS. Deliberately NOT an fsync: this
+    /// is audit data on the request path (solutions/resets call it), and
+    /// its records are never replayed as state.
     pub fn flush(&mut self) {
         if let Some(out) = &mut self.out {
             let _ = out.flush();
@@ -56,34 +68,32 @@ impl EventLog {
     }
 }
 
-impl Drop for EventLog {
-    fn drop(&mut self) {
-        self.flush();
-    }
-}
-
 #[cfg(test)]
 mod tests {
+    use super::super::persistence::wal::scan;
     use super::*;
 
     #[test]
-    fn writes_jsonl() {
+    fn writes_framed_jsonl() {
         let dir = std::env::temp_dir();
-        let path = dir.join(format!("nodio-log-test-{}.jsonl", std::process::id()));
+        let path =
+            dir.join(format!("nodio-log-test-{}.jsonl", std::process::id()));
         let _ = std::fs::remove_file(&path);
         {
             let mut log = EventLog::to_file(&path).unwrap();
             log.log("put", Json::obj(vec![("fitness", 42u64.into())]));
-            log.log("solution", Json::obj(vec![("experiment", 0u64.into())]));
+            log.log(
+                "solution",
+                Json::obj(vec![("experiment", 0u64.into())]),
+            );
             assert_eq!(log.events(), 2);
         } // drop flushes
-        let text = std::fs::read_to_string(&path).unwrap();
-        let lines: Vec<&str> = text.lines().collect();
-        assert_eq!(lines.len(), 2);
-        let first = json::parse(lines[0]).unwrap();
-        assert_eq!(first.get_str("event"), Some("put"));
-        assert_eq!(first.get_u64("fitness"), Some(42));
-        assert!(first.get_f64("t_s").unwrap() >= 0.0);
+        let records = scan(&path).unwrap().records;
+        assert_eq!(records.len(), 2);
+        assert_eq!(records[0].get_str("event"), Some("put"));
+        assert_eq!(records[0].get_u64("fitness"), Some(42));
+        assert!(records[0].get_f64("t_s").unwrap() >= 0.0);
+        assert_eq!(records[1].get_str("event"), Some("solution"));
         let _ = std::fs::remove_file(&path);
     }
 

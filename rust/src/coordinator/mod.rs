@@ -5,9 +5,10 @@
 //!
 //! | route | paper semantics |
 //! |---|---|
-//! | `PUT  /experiment/chromosome` | island sends its best every 100 generations |
+//! | `PUT  /experiment/chromosome` | island sends its best every 100 generations (object or batch array) |
 //! | `GET  /experiment/random`     | island fetches a random pool member |
 //! | `GET  /experiment/state`      | experiment & pool observability |
+//! | `GET  /experiment/history`    | completed experiments, served from the durable log |
 //! | `GET  /stats`                 | cross-experiment + per-UUID accounting |
 //! | `POST /experiment/reset`      | manual experiment reset |
 //! | `GET  /`                      | server info/banner |
@@ -25,9 +26,15 @@
 //! independent event loops with inter-shard migration — same REST
 //! surface, same no-locks-on-the-request-path discipline.
 
+//! With persistence configured ([`persistence`]), both server shapes WAL
+//! every accepted PUT and epoch transition, snapshot periodically, and
+//! replay snapshot+tail on startup — a restart resumes the live
+//! experiment instead of resetting it.
+
 pub mod cluster;
 pub mod experiment;
 pub mod logger;
+pub mod persistence;
 pub mod pool;
 pub mod routes;
 pub mod security;
@@ -36,6 +43,7 @@ pub mod server;
 
 pub use cluster::{ClusterConfig, ClusterHandle, PoolBackend, ShardedPoolServer};
 pub use experiment::{ExperimentLog, ExperimentManager};
+pub use persistence::{PersistConfig, ReplayedHistory, ShardPersistence};
 pub use pool::{ChromosomePool, PoolEntry};
 pub use security::{FitnessVerifier, RateLimiter, SaboteurLog};
 pub use timeseries::TimeSeries;

@@ -1,0 +1,537 @@
+//! Durable experiments: per-shard WAL + snapshot/replay persistence.
+//!
+//! The paper's server is the durable record of a volunteer experiment —
+//! clients come and go, the pool accrues progress for hours. Before this
+//! module a coordinator restart silently reset every experiment. Now both
+//! the single-loop [`super::server::PoolServer`] and the N-shard
+//! [`super::cluster::ShardedPoolServer`] resume a live experiment from
+//! disk: same pool contents, same epoch, same per-UUID accounting.
+//!
+//! ## On-disk layout
+//!
+//! ```text
+//! <data-dir>/
+//!   meta.json            cluster layout (shard count, n_bits, capacity);
+//!                        validated on restart — changing the layout
+//!                        against existing data is an error, not silent
+//!                        data loss
+//!   shard-0000/          one directory per shard (the single-loop server
+//!   shard-0001/          is a 1-shard layout)
+//!     wal.jsonl          append-only CRC-framed JSONL write-ahead log:
+//!                        one record per accepted PUT, merged migration
+//!                        batch, and experiment-epoch transition
+//!                        (standalone audit logs — the folded EventLog —
+//!                        use the same framing in their own files)
+//!     snapshot.jsonl     periodic compacted checkpoint, written via
+//!                        tmp + fsync + atomic rename; bounds replay time
+//!     lock               pid lockfile: two live processes must never
+//!                        share a WAL; a dead owner's lock is taken over
+//! ```
+//!
+//! Every line in both files is `{"crc":"<8 hex>","rec":{...}}` — the
+//! CRC-32 of the exact `rec` bytes. A torn tail record (crash mid-write)
+//! fails its checksum and is dropped on recovery; the writer truncates it
+//! before appending again. GETs are deliberately not WAL'd (reads stay off
+//! the write path); uuid-tagged GET counts are durable only as of the last
+//! snapshot.
+//!
+//! The WAL record format is serialization-friendly by design: it doubles
+//! as the wire format for the planned multi-host gossip rung (ROADMAP).
+
+pub mod recover;
+pub mod snapshot;
+pub mod wal;
+
+pub use recover::{merge_completed, recover_shard, RecoveredShard};
+pub use snapshot::{load_snapshot, write_snapshot, ShardState};
+pub use wal::{crc32, frame, scan, unframe, WalWriter};
+
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+use crate::coordinator::experiment::ExperimentLog;
+use crate::coordinator::pool::PoolEntry;
+use crate::json::Json;
+
+pub const WAL_FILE: &str = "wal.jsonl";
+pub const META_FILE: &str = "meta.json";
+pub const LOCK_FILE: &str = "lock";
+
+/// Claim exclusive write ownership of a shard directory via a pid
+/// lockfile. A second live process appending to the same WAL would
+/// interleave records and race snapshot renames, so it must be refused;
+/// a lock left by a dead process (crash — the case this subsystem
+/// exists for) is detected via `/proc/<pid>` and taken over.
+fn acquire_lock(dir: &Path) -> io::Result<()> {
+    let path = dir.join(LOCK_FILE);
+    if let Ok(text) = fs::read_to_string(&path) {
+        let pid: u32 = text.trim().parse().unwrap_or(0);
+        let me = std::process::id();
+        if pid != 0
+            && pid != me
+            && Path::new(&format!("/proc/{pid}")).exists()
+        {
+            return Err(io::Error::new(
+                io::ErrorKind::WouldBlock,
+                format!(
+                    "{} is locked by live process {pid}; refusing to \
+                     share a WAL between two servers",
+                    dir.display()
+                ),
+            ));
+        }
+    }
+    fs::write(&path, format!("{}\n", std::process::id()))
+}
+
+/// Best-effort lock release (only if we still own it).
+fn release_lock(dir: &Path) {
+    let path = dir.join(LOCK_FILE);
+    if let Ok(text) = fs::read_to_string(&path) {
+        if text.trim().parse::<u32>() == Ok(std::process::id()) {
+            let _ = fs::remove_file(&path);
+        }
+    }
+}
+
+/// Persistence tuning, carried by `PoolServerConfig::persist`.
+#[derive(Debug, Clone)]
+pub struct PersistConfig {
+    /// Root directory for WALs, snapshots and cluster metadata.
+    pub data_dir: PathBuf,
+    /// Compact a shard's WAL into a snapshot after this many records.
+    pub snapshot_every: u64,
+    /// fsync every WAL record (power-loss durability) instead of only on
+    /// snapshots and epoch transitions. Costs throughput; measured in
+    /// `benches/wal_overhead.rs`.
+    pub fsync: bool,
+}
+
+impl PersistConfig {
+    pub fn new(data_dir: impl Into<PathBuf>) -> PersistConfig {
+        PersistConfig {
+            data_dir: data_dir.into(),
+            snapshot_every: 1024,
+            fsync: false,
+        }
+    }
+}
+
+/// `<data-dir>/shard-0042`-style per-shard directory.
+pub fn shard_dir(data_dir: &Path, shard: usize) -> PathBuf {
+    data_dir.join(format!("shard-{shard:04}"))
+}
+
+/// Validate (or create) `<data-dir>/meta.json` against the configured
+/// layout. Restarting with a different shard count, chromosome width or
+/// pool capacity over existing data is refused: the WAL partitioning
+/// would silently mis-assign state.
+pub fn check_or_init_meta(
+    data_dir: &Path,
+    shards: usize,
+    n_bits: usize,
+    pool_capacity: usize,
+) -> io::Result<()> {
+    fs::create_dir_all(data_dir)?;
+    let path = data_dir.join(META_FILE);
+    match fs::read_to_string(&path) {
+        Ok(text) => {
+            let rec = unframe(text.trim()).ok_or_else(|| {
+                io::Error::new(
+                    io::ErrorKind::InvalidData,
+                    format!("{}: corrupt cluster metadata", path.display()),
+                )
+            })?;
+            let stored = (
+                rec.get_u64("shards"),
+                rec.get_u64("n_bits"),
+                rec.get_u64("pool_capacity"),
+            );
+            let want = (
+                Some(shards as u64),
+                Some(n_bits as u64),
+                Some(pool_capacity as u64),
+            );
+            if stored != want {
+                return Err(io::Error::new(
+                    io::ErrorKind::InvalidInput,
+                    format!(
+                        "{}: data dir was written with layout \
+                         shards={:?} n_bits={:?} capacity={:?}, but the \
+                         server was started with shards={} n_bits={} \
+                         capacity={}; point --data-dir elsewhere or match \
+                         the stored layout",
+                        path.display(),
+                        stored.0,
+                        stored.1,
+                        stored.2,
+                        shards,
+                        n_bits,
+                        pool_capacity
+                    ),
+                ));
+            }
+            Ok(())
+        }
+        Err(e) if e.kind() == io::ErrorKind::NotFound => {
+            let rec = Json::obj(vec![
+                ("t", "cluster-meta".into()),
+                ("shards", shards.into()),
+                ("n_bits", n_bits.into()),
+                ("pool_capacity", pool_capacity.into()),
+            ]);
+            // Same durability discipline as snapshots (tmp + fsync +
+            // rename + dir sync): a torn meta.json would otherwise brick
+            // the data dir on the next restart.
+            let tmp = data_dir.join("meta.json.tmp");
+            {
+                let mut f = fs::File::create(&tmp)?;
+                use std::io::Write;
+                writeln!(f, "{}", frame(&rec))?;
+                f.sync_all()?;
+            }
+            fs::rename(&tmp, &path)?;
+            if let Ok(d) = fs::File::open(data_dir) {
+                let _ = d.sync_all();
+            }
+            Ok(())
+        }
+        Err(e) => Err(e),
+    }
+}
+
+/// Recover every shard directory of a layout. Fresh directories recover
+/// to empty shards, so first boot and restart share one code path.
+pub fn recover_cluster(
+    data_dir: &Path,
+    shards: usize,
+) -> io::Result<Vec<RecoveredShard>> {
+    (0..shards)
+        .map(|id| recover_shard(&shard_dir(data_dir, id)))
+        .collect()
+}
+
+/// One shard's live persistence handle: the open WAL plus the snapshot
+/// cadence. All `record_*` methods are best-effort — a failing disk is
+/// reported once to stderr and the experiment keeps running in memory
+/// (availability over durability, matching the paper's volunteer-first
+/// posture).
+pub struct ShardPersistence {
+    dir: PathBuf,
+    wal: WalWriter,
+    snapshot_every: u64,
+    records_since_snapshot: u64,
+    write_failed: bool,
+}
+
+impl ShardPersistence {
+    /// Open the WAL for appending after recovery. `recovered` supplies the
+    /// resume seq and the torn-tail truncation point.
+    pub fn open(
+        dir: &Path,
+        cfg: &PersistConfig,
+        recovered: &RecoveredShard,
+    ) -> io::Result<ShardPersistence> {
+        fs::create_dir_all(dir)?;
+        acquire_lock(dir)?;
+        let wal = WalWriter::open(
+            &dir.join(WAL_FILE),
+            recovered.wal_seq,
+            Some(recovered.wal_valid_len),
+            cfg.fsync,
+        )?;
+        Ok(ShardPersistence {
+            dir: dir.to_path_buf(),
+            wal,
+            snapshot_every: cfg.snapshot_every.max(1),
+            records_since_snapshot: 0,
+            write_failed: false,
+        })
+    }
+
+    fn append(&mut self, rec: Json) {
+        match self.wal.append(rec) {
+            Ok(_) => self.records_since_snapshot += 1,
+            Err(e) => {
+                if !self.write_failed {
+                    self.write_failed = true;
+                    eprintln!(
+                        "nodio persistence: WAL append to {} failed ({e}); \
+                         continuing without durability",
+                        self.dir.display()
+                    );
+                }
+            }
+        }
+    }
+
+    /// Record one accepted PUT. `evict` is the pool slot the insert
+    /// replaced (None = appended), making replay byte-exact.
+    pub fn record_put(
+        &mut self,
+        experiment: u64,
+        entry: &PoolEntry,
+        evict: Option<usize>,
+    ) {
+        self.append(Json::obj(vec![
+            ("t", "put".into()),
+            ("experiment", experiment.into()),
+            ("chromosome", entry.chromosome.as_str().into()),
+            ("fitness", entry.fitness.into()),
+            ("uuid", entry.uuid.as_str().into()),
+            (
+                "evict",
+                evict.map(|i| Json::from(i as u64)).unwrap_or(Json::Null),
+            ),
+        ]));
+    }
+
+    /// Record the entries of a gossip batch that were actually merged
+    /// (post-dedup), with their eviction slots.
+    pub fn record_migration(
+        &mut self,
+        experiment: u64,
+        applied: &[(PoolEntry, Option<usize>)],
+    ) {
+        if applied.is_empty() {
+            return;
+        }
+        let items = applied
+            .iter()
+            .map(|(e, evict)| {
+                Json::obj(vec![
+                    ("chromosome", e.chromosome.as_str().into()),
+                    ("fitness", e.fitness.into()),
+                    ("uuid", e.uuid.as_str().into()),
+                    (
+                        "evict",
+                        evict
+                            .map(|i| Json::from(i as u64))
+                            .unwrap_or(Json::Null),
+                    ),
+                ])
+            })
+            .collect();
+        self.append(Json::obj(vec![
+            ("t", "migration".into()),
+            ("experiment", experiment.into()),
+            ("entries", Json::Arr(items)),
+        ]));
+    }
+
+    /// Record an experiment-epoch transition. Only the shard that closed
+    /// the experiment carries its [`ExperimentLog`]. Synced to stable
+    /// storage: losing a finished experiment's record is worse than the
+    /// latency of one fsync per experiment.
+    pub fn record_epoch(
+        &mut self,
+        from: u64,
+        to: u64,
+        record: Option<&ExperimentLog>,
+    ) {
+        self.append(Json::obj(vec![
+            ("t", "epoch".into()),
+            ("from", from.into()),
+            ("to", to.into()),
+            (
+                "record",
+                record.map(|l| l.to_json()).unwrap_or(Json::Null),
+            ),
+        ]));
+        let _ = self.wal.sync();
+    }
+
+    /// Whether enough records accumulated to warrant a snapshot.
+    pub fn should_snapshot(&self) -> bool {
+        self.records_since_snapshot >= self.snapshot_every
+    }
+
+    /// Write a compacted snapshot of `state` and reset the WAL. The
+    /// snapshot's seq high-water mark is stamped from the WAL writer, so
+    /// callers must pass the state *including* every record appended so
+    /// far.
+    pub fn snapshot(&mut self, mut state: ShardState) {
+        // Reset the cadence up front: on failure the next attempt comes
+        // after another `snapshot_every` records, not on every tick (a
+        // full disk would otherwise clone the whole shard state per tick).
+        self.records_since_snapshot = 0;
+        state.seq = self.wal.last_seq();
+        if let Err(e) = write_snapshot(&self.dir, &state) {
+            if !self.write_failed {
+                self.write_failed = true;
+                eprintln!(
+                    "nodio persistence: snapshot in {} failed ({e}); \
+                     continuing on WAL only",
+                    self.dir.display()
+                );
+            }
+            return;
+        }
+        // The snapshot covers everything; compact the log. Replay is
+        // protected by seq filtering even if this reset doesn't survive.
+        if let Err(e) = self.wal.reset() {
+            eprintln!(
+                "nodio persistence: WAL compaction in {} failed ({e})",
+                self.dir.display()
+            );
+        }
+    }
+
+    /// Flush and fsync (shutdown, epoch boundaries).
+    pub fn sync(&mut self) {
+        let _ = self.wal.sync();
+    }
+}
+
+impl Drop for ShardPersistence {
+    fn drop(&mut self) {
+        let _ = self.wal.sync();
+        release_lock(&self.dir);
+    }
+}
+
+/// Reconstruct a whole layout's experiment history offline — the engine
+/// behind `nodio replay <dir>` and the `/experiment/history` route's
+/// recovered prefix. Reads `meta.json` for the shard count.
+pub struct ReplayedHistory {
+    pub shards: Vec<RecoveredShard>,
+    pub completed: Vec<ExperimentLog>,
+    pub experiment: u64,
+    pub pool_size: usize,
+    pub best_fitness: f64,
+}
+
+pub fn replay_dir(data_dir: &Path) -> io::Result<ReplayedHistory> {
+    let meta_path = data_dir.join(META_FILE);
+    let text = fs::read_to_string(&meta_path).map_err(|e| {
+        io::Error::new(
+            e.kind(),
+            format!("{}: {e} (not a nodio data dir?)", meta_path.display()),
+        )
+    })?;
+    let meta = unframe(text.trim()).ok_or_else(|| {
+        io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("{}: corrupt cluster metadata", meta_path.display()),
+        )
+    })?;
+    let n = meta.get_u64("shards").unwrap_or(1) as usize;
+    let shards = recover_cluster(data_dir, n)?;
+    let completed = merge_completed(&shards);
+    let experiment =
+        shards.iter().map(|s| s.state.experiment).max().unwrap_or(0);
+    let live: Vec<&RecoveredShard> = shards
+        .iter()
+        .filter(|s| s.state.experiment == experiment)
+        .collect();
+    let pool_size = live.iter().map(|s| s.state.entries.len()).sum();
+    let best_fitness = live
+        .iter()
+        .map(|s| s.state.best_fitness)
+        .fold(f64::NEG_INFINITY, f64::max);
+    Ok(ReplayedHistory {
+        shards,
+        completed,
+        experiment,
+        pool_size,
+        best_fitness,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("nodio-persist-{}-{name}", std::process::id()));
+        let _ = fs::remove_dir_all(&d);
+        fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn meta_validates_layout() {
+        let dir = tmpdir("meta");
+        check_or_init_meta(&dir, 2, 8, 64).unwrap();
+        // Same layout: fine.
+        check_or_init_meta(&dir, 2, 8, 64).unwrap();
+        // Different shard count: refused.
+        let err = check_or_init_meta(&dir, 4, 8, 64).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidInput);
+        // Different n_bits: refused.
+        assert!(check_or_init_meta(&dir, 2, 16, 64).is_err());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn record_snapshot_recover_cycle() {
+        let dir = tmpdir("cycle");
+        let sdir = shard_dir(&dir, 0);
+        let cfg = PersistConfig { snapshot_every: 3, ..PersistConfig::new(&dir) };
+        let entry = |c: &str, f: f64| PoolEntry {
+            chromosome: c.into(),
+            fitness: f,
+            uuid: "u".into(),
+        };
+        {
+            let fresh = RecoveredShard::fresh();
+            let mut p = ShardPersistence::open(&sdir, &cfg, &fresh).unwrap();
+            p.record_put(0, &entry("0101", 2.0), None);
+            p.record_put(0, &entry("0111", 3.0), None);
+            assert!(!p.should_snapshot());
+            p.record_put(0, &entry("1111", 4.0), Some(0));
+            assert!(p.should_snapshot());
+            // Snapshot what replay of those 3 records would produce.
+            let r = recover_shard(&sdir).unwrap();
+            p.snapshot(r.state);
+            // Tail after the snapshot.
+            p.record_put(0, &entry("0011", 1.0), None);
+        }
+        let r = recover_shard(&sdir).unwrap();
+        assert_eq!(r.state.puts, 4);
+        assert_eq!(r.state.entries.len(), 3);
+        assert_eq!(r.state.entries[0].chromosome, "1111");
+        assert_eq!(r.state.best_fitness, 4.0);
+        assert_eq!(r.state.per_uuid["u"], 4);
+        // The WAL was compacted: only the post-snapshot tail remains.
+        let log = scan(&sdir.join(WAL_FILE)).unwrap();
+        assert_eq!(log.records.len(), 1);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn replay_dir_reconstructs_history() {
+        let dir = tmpdir("replay");
+        check_or_init_meta(&dir, 1, 8, 64).unwrap();
+        let sdir = shard_dir(&dir, 0);
+        let cfg = PersistConfig::new(&dir);
+        {
+            let fresh = RecoveredShard::fresh();
+            let mut p = ShardPersistence::open(&sdir, &cfg, &fresh).unwrap();
+            let e = PoolEntry {
+                chromosome: "11111111".into(),
+                fitness: 8.0,
+                uuid: "w".into(),
+            };
+            p.record_put(0, &e, None);
+            let log = ExperimentLog {
+                id: 0,
+                elapsed: std::time::Duration::from_secs(2),
+                puts: 1,
+                gets: 0,
+                best_fitness: 8.0,
+                solved_by: Some("w".into()),
+                solution: Some("11111111".into()),
+            };
+            p.record_epoch(0, 1, Some(&log));
+        }
+        let h = replay_dir(&dir).unwrap();
+        assert_eq!(h.experiment, 1);
+        assert_eq!(h.completed.len(), 1);
+        assert_eq!(h.completed[0].solved_by.as_deref(), Some("w"));
+        assert_eq!(h.pool_size, 0); // epoch transition cleared it
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

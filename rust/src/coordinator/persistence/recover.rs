@@ -1,0 +1,381 @@
+//! Startup recovery: snapshot + WAL-tail replay.
+//!
+//! Replay is exact, not approximate: PUT and migration records carry the
+//! eviction victim index the live pool chose, so re-applying the log
+//! reproduces the identical partition contents — same entries in the same
+//! slots — along with the experiment epoch, the per-experiment counters,
+//! and the cumulative per-UUID accounting. A torn final WAL record (the
+//! crash case) is detected by its CRC frame and dropped; everything before
+//! it is state.
+
+use std::io;
+use std::path::Path;
+
+use super::snapshot::{entry_from_json, load_snapshot, ShardState};
+use super::wal::scan;
+use crate::coordinator::experiment::ExperimentLog;
+use crate::json::Json;
+
+/// What recovery reconstructed for one shard directory.
+pub struct RecoveredShard {
+    /// The replayed state (pool, epoch, counters, history).
+    pub state: ShardState,
+    /// Byte length of the valid WAL prefix; the writer reopens truncated
+    /// to this so appends never follow a torn record.
+    pub wal_valid_len: u64,
+    /// Highest WAL seq observed (snapshot or log); the writer resumes
+    /// numbering after it.
+    pub wal_seq: u64,
+    /// Corrupt/torn trailing WAL lines dropped during the scan.
+    pub dropped_records: u64,
+}
+
+impl RecoveredShard {
+    /// A never-persisted shard: fresh state, fresh log.
+    pub fn fresh() -> RecoveredShard {
+        RecoveredShard {
+            state: ShardState::empty(),
+            wal_valid_len: 0,
+            wal_seq: 0,
+            dropped_records: 0,
+        }
+    }
+
+    /// True when the directory held any durable state at all.
+    pub fn had_history(&self) -> bool {
+        self.wal_seq > 0
+            || self.state.experiment > 0
+            || !self.state.entries.is_empty()
+    }
+}
+
+/// Apply one WAL record to `state`. Records at or below the snapshot seq
+/// and records from a different (stale) epoch are skipped; the seq
+/// high-water mark always advances.
+fn replay_record(state: &mut ShardState, rec: &Json, seq_floor: u64) {
+    let seq = rec.get_u64("seq").unwrap_or(0);
+    if seq <= seq_floor || seq <= state.seq {
+        return;
+    }
+    state.seq = seq;
+    match rec.get_str("t") {
+        Some("put") => {
+            if rec.get_u64("experiment") != Some(state.experiment) {
+                return;
+            }
+            let Some(entry) = entry_from_json(rec) else { return };
+            state.puts += 1;
+            state.accepted += 1;
+            if entry.fitness > state.best_fitness {
+                state.best_fitness = entry.fitness;
+            }
+            *state
+                .per_uuid
+                .entry(entry.uuid.clone())
+                .or_insert(0) += 1;
+            apply_entry(state, entry, evict_of(rec));
+        }
+        Some("migration") => {
+            if rec.get_u64("experiment") != Some(state.experiment) {
+                return;
+            }
+            let Some(items) = rec.get("entries").and_then(Json::as_arr) else {
+                return;
+            };
+            for item in items {
+                let Some(entry) = entry_from_json(item) else { continue };
+                state.accepted += 1;
+                apply_entry(state, entry, evict_of(item));
+            }
+        }
+        Some("epoch") => {
+            let Some(to) = rec.get_u64("to") else { return };
+            if to <= state.experiment {
+                return;
+            }
+            if let Some(log) =
+                rec.get("record").and_then(ExperimentLog::from_json)
+            {
+                state.completed.push(log);
+            }
+            state.experiment = to;
+            state.entries.clear();
+            state.puts = 0;
+            state.gets = 0;
+            state.accepted = 0;
+            state.best_fitness = f64::NEG_INFINITY;
+        }
+        // Audit events (the folded EventLog) carry no replayable state.
+        _ => {}
+    }
+}
+
+fn evict_of(rec: &Json) -> Option<usize> {
+    rec.get_u64("evict").map(|v| v as usize)
+}
+
+fn apply_entry(
+    state: &mut ShardState,
+    entry: crate::coordinator::pool::PoolEntry,
+    evict: Option<usize>,
+) {
+    match evict {
+        Some(i) if i < state.entries.len() => state.entries[i] = entry,
+        _ => state.entries.push(entry),
+    }
+}
+
+/// Recover one shard directory: load the snapshot (if any), then replay
+/// the valid WAL prefix on top of it.
+pub fn recover_shard(dir: &Path) -> io::Result<RecoveredShard> {
+    let mut state = load_snapshot(dir)?;
+    let seq_floor = state.seq;
+    let log = scan(&dir.join(super::WAL_FILE))?;
+    let mut wal_seq = state.seq;
+    for rec in &log.records {
+        replay_record(&mut state, rec, seq_floor);
+        if let Some(seq) = rec.get_u64("seq") {
+            wal_seq = wal_seq.max(seq);
+        }
+    }
+    wal_seq = wal_seq.max(state.seq);
+    Ok(RecoveredShard {
+        state,
+        wal_valid_len: log.valid_len,
+        wal_seq,
+        dropped_records: log.dropped,
+    })
+}
+
+/// Merge per-shard completed-experiment histories into one chronology:
+/// deduplicated by experiment id (only the closing shard carries the
+/// record, but replays can overlap after reconfiguration), sorted by id.
+pub fn merge_completed(shards: &[RecoveredShard]) -> Vec<ExperimentLog> {
+    let mut all: Vec<ExperimentLog> = Vec::new();
+    for shard in shards {
+        for log in &shard.state.completed {
+            if !all.iter().any(|l| l.id == log.id) {
+                all.push(log.clone());
+            }
+        }
+    }
+    all.sort_by_key(|l| l.id);
+    all
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::persistence::snapshot::write_snapshot;
+    use crate::coordinator::persistence::wal::WalWriter;
+    use crate::coordinator::pool::PoolEntry;
+    use std::path::PathBuf;
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("nodio-recover-{}-{name}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn put_rec(experiment: u64, c: &str, f: f64, uuid: &str, evict: Option<usize>) -> Json {
+        Json::obj(vec![
+            ("t", "put".into()),
+            ("experiment", experiment.into()),
+            ("chromosome", c.into()),
+            ("fitness", f.into()),
+            ("uuid", uuid.into()),
+            (
+                "evict",
+                evict.map(|i| Json::from(i as u64)).unwrap_or(Json::Null),
+            ),
+        ])
+    }
+
+    #[test]
+    fn replay_without_snapshot_rebuilds_state() {
+        let dir = tmpdir("wal-only");
+        {
+            let mut w = WalWriter::open(
+                &dir.join(crate::coordinator::persistence::WAL_FILE),
+                0,
+                None,
+                false,
+            )
+            .unwrap();
+            w.append(put_rec(0, "0101", 2.0, "a", None)).unwrap();
+            w.append(put_rec(0, "0111", 3.0, "b", None)).unwrap();
+            w.append(put_rec(0, "1111", 4.0, "a", Some(0))).unwrap();
+        }
+        let r = recover_shard(&dir).unwrap();
+        assert_eq!(r.wal_seq, 3);
+        assert_eq!(r.dropped_records, 0);
+        assert_eq!(r.state.puts, 3);
+        assert_eq!(r.state.best_fitness, 4.0);
+        assert_eq!(r.state.per_uuid["a"], 2);
+        assert_eq!(r.state.per_uuid["b"], 1);
+        // Eviction replayed exactly: slot 0 was overwritten.
+        assert_eq!(r.state.entries.len(), 2);
+        assert_eq!(r.state.entries[0].chromosome, "1111");
+        assert_eq!(r.state.entries[1].chromosome, "0111");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn snapshot_plus_tail_skips_covered_records() {
+        let dir = tmpdir("snap-tail");
+        // Snapshot covers seqs 1..=2.
+        let mut snap = ShardState::empty();
+        snap.seq = 2;
+        snap.puts = 2;
+        snap.best_fitness = 3.0;
+        snap.entries.push(PoolEntry {
+            chromosome: "0101".into(),
+            fitness: 3.0,
+            uuid: "a".into(),
+        });
+        snap.per_uuid.insert("a".into(), 2);
+        write_snapshot(&dir, &snap).unwrap();
+        {
+            let mut w = WalWriter::open(
+                &dir.join(crate::coordinator::persistence::WAL_FILE),
+                0,
+                None,
+                false,
+            )
+            .unwrap();
+            // seqs 1..=2: already covered by the snapshot; must not
+            // double-apply.
+            w.append(put_rec(0, "0001", 1.0, "a", None)).unwrap();
+            w.append(put_rec(0, "0101", 3.0, "a", None)).unwrap();
+            // seq 3: the tail.
+            w.append(put_rec(0, "0111", 5.0, "b", None)).unwrap();
+        }
+        let r = recover_shard(&dir).unwrap();
+        assert_eq!(r.state.puts, 3);
+        assert_eq!(r.state.best_fitness, 5.0);
+        assert_eq!(r.state.entries.len(), 2);
+        assert_eq!(r.state.per_uuid["a"], 2);
+        assert_eq!(r.state.per_uuid["b"], 1);
+        assert_eq!(r.wal_seq, 3);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn epoch_record_closes_experiment_and_clears_pool() {
+        let dir = tmpdir("epoch");
+        {
+            let mut w = WalWriter::open(
+                &dir.join(crate::coordinator::persistence::WAL_FILE),
+                0,
+                None,
+                false,
+            )
+            .unwrap();
+            w.append(put_rec(0, "0101", 2.0, "a", None)).unwrap();
+            let log = ExperimentLog {
+                id: 0,
+                elapsed: std::time::Duration::from_secs(1),
+                puts: 2,
+                gets: 0,
+                best_fitness: 8.0,
+                solved_by: Some("a".into()),
+                solution: Some("1111".into()),
+            };
+            w.append(Json::obj(vec![
+                ("t", "epoch".into()),
+                ("from", 0u64.into()),
+                ("to", 1u64.into()),
+                ("record", log.to_json()),
+            ]))
+            .unwrap();
+            // A put in the NEW epoch.
+            w.append(put_rec(1, "0011", 1.0, "b", None)).unwrap();
+            // A stale put from the old epoch arriving late: ignored.
+            w.append(put_rec(0, "0001", 9.0, "c", None)).unwrap();
+        }
+        let r = recover_shard(&dir).unwrap();
+        assert_eq!(r.state.experiment, 1);
+        assert_eq!(r.state.completed.len(), 1);
+        assert_eq!(r.state.completed[0].solved_by.as_deref(), Some("a"));
+        assert_eq!(r.state.puts, 1);
+        assert_eq!(r.state.entries.len(), 1);
+        assert_eq!(r.state.entries[0].chromosome, "0011");
+        assert_eq!(r.state.best_fitness, 1.0);
+        // Cumulative accounting survives the reset; the stale put still
+        // bumped seq but nothing else.
+        assert_eq!(r.state.per_uuid["a"], 1);
+        assert_eq!(r.state.per_uuid["b"], 1);
+        assert!(!r.state.per_uuid.contains_key("c"));
+        assert_eq!(r.wal_seq, 4);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn migration_records_replay_merged_entries() {
+        let dir = tmpdir("migration");
+        {
+            let mut w = WalWriter::open(
+                &dir.join(crate::coordinator::persistence::WAL_FILE),
+                0,
+                None,
+                false,
+            )
+            .unwrap();
+            w.append(put_rec(0, "0101", 2.0, "a", None)).unwrap();
+            w.append(Json::obj(vec![
+                ("t", "migration".into()),
+                ("experiment", 0u64.into()),
+                (
+                    "entries",
+                    Json::Arr(vec![Json::obj(vec![
+                        ("chromosome", "1010".into()),
+                        ("fitness", 6.0.into()),
+                        ("uuid", "peer".into()),
+                        ("evict", Json::Null),
+                    ])]),
+                ),
+            ]))
+            .unwrap();
+        }
+        let r = recover_shard(&dir).unwrap();
+        assert_eq!(r.state.entries.len(), 2);
+        assert_eq!(r.state.accepted, 2);
+        // Migrations are not PUTs: no puts/best/per-uuid effect (the
+        // origin shard already accounted for them).
+        assert_eq!(r.state.puts, 1);
+        assert_eq!(r.state.best_fitness, 2.0);
+        assert!(!r.state.per_uuid.contains_key("peer"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn merge_completed_dedups_and_sorts() {
+        let mk = |id: u64| ExperimentLog {
+            id,
+            elapsed: std::time::Duration::from_secs(1),
+            puts: 0,
+            gets: 0,
+            best_fitness: 1.0,
+            solved_by: None,
+            solution: None,
+        };
+        let mut a = RecoveredShard::fresh();
+        a.state.completed = vec![mk(1), mk(0)];
+        let mut b = RecoveredShard::fresh();
+        b.state.completed = vec![mk(1), mk(2)];
+        let merged = merge_completed(&[a, b]);
+        let ids: Vec<u64> = merged.iter().map(|l| l.id).collect();
+        assert_eq!(ids, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn fresh_directory_recovers_to_empty() {
+        let dir = tmpdir("fresh");
+        let r = recover_shard(&dir).unwrap();
+        assert!(!r.had_history());
+        assert_eq!(r.state.experiment, 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,316 @@
+//! Compacted pool snapshots: the periodic checkpoint that bounds WAL
+//! replay time.
+//!
+//! A snapshot is a framed-record JSONL file (same CRC framing as the WAL)
+//! written to `snapshot.jsonl.tmp`, fsynced, then atomically renamed over
+//! `snapshot.jsonl` — a reader never observes a half-written snapshot.
+//! The first record is the `meta` line carrying the experiment epoch, the
+//! WAL sequence number the snapshot covers, the live counters, per-UUID
+//! accounting, and the completed-experiment history; every following line
+//! is one pool entry.
+
+use std::collections::HashMap;
+use std::fs::{self, File, OpenOptions};
+use std::io::{self, BufRead, BufReader, BufWriter, Write};
+use std::path::{Path, PathBuf};
+
+use super::wal::{frame, unframe};
+use crate::coordinator::experiment::ExperimentLog;
+use crate::coordinator::pool::PoolEntry;
+use crate::json::Json;
+
+pub const SNAPSHOT_FILE: &str = "snapshot.jsonl";
+const SNAPSHOT_TMP: &str = "snapshot.jsonl.tmp";
+
+/// Everything a snapshot captures about one shard (the single-loop server
+/// is shard 0 of a 1-shard layout).
+#[derive(Debug, Clone, Default)]
+pub struct ShardState {
+    /// Experiment epoch the shard is in.
+    pub experiment: u64,
+    /// Last WAL seq applied to this state; replay skips records at or
+    /// below it.
+    pub seq: u64,
+    /// Current-experiment accepted PUTs on this shard.
+    pub puts: u64,
+    /// Current-experiment GETs on this shard (snapshot-only durability:
+    /// GETs are not WAL'd, so GETs since the last snapshot are lost on
+    /// crash — a documented tradeoff that keeps reads off the write path).
+    pub gets: u64,
+    /// Best fitness seen via PUT this experiment (NEG_INFINITY if none);
+    /// stored as null in JSON when not finite.
+    pub best_fitness: f64,
+    /// Pool lifetime-accepted counter (puts + merged migrations).
+    pub accepted: u64,
+    /// Cumulative per-UUID request accounting (survives experiment
+    /// resets, like the single-loop server's).
+    pub per_uuid: HashMap<String, u64>,
+    /// Completed-experiment records this shard closed.
+    pub completed: Vec<ExperimentLog>,
+    /// The pool partition itself.
+    pub entries: Vec<PoolEntry>,
+}
+
+impl ShardState {
+    pub fn empty() -> ShardState {
+        ShardState { best_fitness: f64::NEG_INFINITY, ..Default::default() }
+    }
+}
+
+fn entry_to_json(e: &PoolEntry) -> Json {
+    Json::obj(vec![
+        ("t", "entry".into()),
+        ("chromosome", e.chromosome.as_str().into()),
+        ("fitness", e.fitness.into()),
+        ("uuid", e.uuid.as_str().into()),
+    ])
+}
+
+pub(crate) fn entry_from_json(v: &Json) -> Option<PoolEntry> {
+    Some(PoolEntry {
+        chromosome: v.get_str("chromosome")?.to_string(),
+        fitness: v.get_f64("fitness")?,
+        uuid: v.get_str("uuid").unwrap_or("anonymous").to_string(),
+    })
+}
+
+fn meta_to_json(s: &ShardState) -> Json {
+    let mut uuids: Vec<(&String, &u64)> = s.per_uuid.iter().collect();
+    uuids.sort();
+    Json::obj(vec![
+        ("t", "meta".into()),
+        ("experiment", s.experiment.into()),
+        ("wal_seq", s.seq.into()),
+        ("puts", s.puts.into()),
+        ("gets", s.gets.into()),
+        (
+            "best_fitness",
+            if s.best_fitness.is_finite() {
+                s.best_fitness.into()
+            } else {
+                Json::Null
+            },
+        ),
+        ("accepted", s.accepted.into()),
+        (
+            "per_uuid",
+            Json::Obj(
+                uuids.into_iter().map(|(k, &v)| (k.clone(), v.into())).collect(),
+            ),
+        ),
+        (
+            "completed",
+            Json::Arr(s.completed.iter().map(|l| l.to_json()).collect()),
+        ),
+    ])
+}
+
+fn bad(msg: String) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, msg)
+}
+
+/// Write `state` as `dir/snapshot.jsonl` via tmp-file + fsync + atomic
+/// rename.
+pub fn write_snapshot(dir: &Path, state: &ShardState) -> io::Result<()> {
+    fs::create_dir_all(dir)?;
+    let tmp = dir.join(SNAPSHOT_TMP);
+    {
+        let file = OpenOptions::new()
+            .create(true)
+            .write(true)
+            .truncate(true)
+            .open(&tmp)?;
+        let mut out = BufWriter::new(file);
+        writeln!(out, "{}", frame(&meta_to_json(state)))?;
+        for e in &state.entries {
+            writeln!(out, "{}", frame(&entry_to_json(e)))?;
+        }
+        out.flush()?;
+        out.get_ref().sync_all()?;
+    }
+    fs::rename(&tmp, dir.join(SNAPSHOT_FILE))?;
+    // Make the rename itself durable (directory entry).
+    if let Ok(d) = File::open(dir) {
+        let _ = d.sync_all();
+    }
+    Ok(())
+}
+
+/// Load `dir/snapshot.jsonl`. A missing file yields the empty state (a
+/// fresh experiment); a corrupt file is an error — the atomic-rename
+/// protocol means that can only happen through external damage, which the
+/// operator must see rather than silently losing the experiment.
+pub fn load_snapshot(dir: &Path) -> io::Result<ShardState> {
+    let path: PathBuf = dir.join(SNAPSHOT_FILE);
+    let file = match File::open(&path) {
+        Ok(f) => f,
+        Err(e) if e.kind() == io::ErrorKind::NotFound => {
+            return Ok(ShardState::empty())
+        }
+        Err(e) => return Err(e),
+    };
+    let reader = BufReader::new(file);
+    let mut state = ShardState::empty();
+    let mut saw_meta = false;
+    for (i, line) in reader.lines().enumerate() {
+        let line = line?;
+        let rec = unframe(&line).ok_or_else(|| {
+            bad(format!("{}: corrupt snapshot record at line {}", path.display(), i + 1))
+        })?;
+        match rec.get_str("t") {
+            Some("meta") if !saw_meta => {
+                saw_meta = true;
+                state.experiment = rec.get_u64("experiment").unwrap_or(0);
+                state.seq = rec.get_u64("wal_seq").unwrap_or(0);
+                state.puts = rec.get_u64("puts").unwrap_or(0);
+                state.gets = rec.get_u64("gets").unwrap_or(0);
+                state.best_fitness = rec
+                    .get_f64("best_fitness")
+                    .unwrap_or(f64::NEG_INFINITY);
+                state.accepted = rec.get_u64("accepted").unwrap_or(0);
+                if let Some(Json::Obj(members)) = rec.get("per_uuid") {
+                    for (k, v) in members {
+                        if let Some(n) = v.as_u64() {
+                            state.per_uuid.insert(k.clone(), n);
+                        }
+                    }
+                }
+                if let Some(logs) = rec.get("completed").and_then(Json::as_arr)
+                {
+                    state.completed =
+                        logs.iter().filter_map(ExperimentLog::from_json).collect();
+                }
+            }
+            Some("entry") if saw_meta => {
+                let entry = entry_from_json(&rec).ok_or_else(|| {
+                    bad(format!(
+                        "{}: malformed pool entry at line {}",
+                        path.display(),
+                        i + 1
+                    ))
+                })?;
+                state.entries.push(entry);
+            }
+            other => {
+                return Err(bad(format!(
+                    "{}: unexpected snapshot record {:?} at line {}",
+                    path.display(),
+                    other,
+                    i + 1
+                )))
+            }
+        }
+    }
+    if !saw_meta {
+        return Err(bad(format!("{}: snapshot has no meta record", path.display())));
+    }
+    Ok(state)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("nodio-snap-{}-{name}", std::process::id()));
+        let _ = fs::remove_dir_all(&d);
+        fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn sample_state() -> ShardState {
+        let mut per_uuid = HashMap::new();
+        per_uuid.insert("a".to_string(), 3u64);
+        per_uuid.insert("b".to_string(), 1u64);
+        ShardState {
+            experiment: 2,
+            seq: 17,
+            puts: 4,
+            gets: 9,
+            best_fitness: 7.5,
+            accepted: 5,
+            per_uuid,
+            completed: vec![ExperimentLog {
+                id: 1,
+                elapsed: Duration::from_secs_f64(1.5),
+                puts: 10,
+                gets: 20,
+                best_fitness: 8.0,
+                solved_by: Some("a".into()),
+                solution: Some("1111".into()),
+            }],
+            entries: vec![
+                PoolEntry {
+                    chromosome: "0101".into(),
+                    fitness: 2.0,
+                    uuid: "a".into(),
+                },
+                PoolEntry {
+                    chromosome: "0111".into(),
+                    fitness: 3.0,
+                    uuid: "b".into(),
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn snapshot_round_trip() {
+        let dir = tmpdir("rt");
+        let state = sample_state();
+        write_snapshot(&dir, &state).unwrap();
+        let loaded = load_snapshot(&dir).unwrap();
+        assert_eq!(loaded.experiment, 2);
+        assert_eq!(loaded.seq, 17);
+        assert_eq!(loaded.puts, 4);
+        assert_eq!(loaded.gets, 9);
+        assert_eq!(loaded.best_fitness, 7.5);
+        assert_eq!(loaded.accepted, 5);
+        assert_eq!(loaded.per_uuid, state.per_uuid);
+        assert_eq!(loaded.entries, state.entries);
+        assert_eq!(loaded.completed.len(), 1);
+        assert_eq!(loaded.completed[0].id, 1);
+        assert_eq!(loaded.completed[0].solved_by.as_deref(), Some("a"));
+        // No tmp file left behind.
+        assert!(!dir.join(SNAPSHOT_TMP).exists());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn missing_snapshot_is_empty_state() {
+        let dir = tmpdir("missing");
+        let loaded = load_snapshot(&dir).unwrap();
+        assert_eq!(loaded.experiment, 0);
+        assert!(loaded.entries.is_empty());
+        assert_eq!(loaded.best_fitness, f64::NEG_INFINITY);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn rewrite_replaces_previous_snapshot() {
+        let dir = tmpdir("rewrite");
+        write_snapshot(&dir, &sample_state()).unwrap();
+        let mut newer = sample_state();
+        newer.experiment = 3;
+        newer.entries.clear();
+        write_snapshot(&dir, &newer).unwrap();
+        let loaded = load_snapshot(&dir).unwrap();
+        assert_eq!(loaded.experiment, 3);
+        assert!(loaded.entries.is_empty());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_snapshot_is_an_error() {
+        let dir = tmpdir("corrupt");
+        write_snapshot(&dir, &sample_state()).unwrap();
+        let path = dir.join(SNAPSHOT_FILE);
+        let mut text = fs::read_to_string(&path).unwrap();
+        text = text.replace("0101", "0x01");
+        fs::write(&path, text).unwrap();
+        assert!(load_snapshot(&dir).is_err());
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,327 @@
+//! The append-only write-ahead log: CRC-framed JSONL records.
+//!
+//! Every line is a self-contained JSON object
+//!
+//! ```text
+//! {"crc":"9ae0daaf","rec":{...}}
+//! ```
+//!
+//! where `crc` is the IEEE CRC-32 of the exact bytes of the `rec` value as
+//! written. Because the writer controls the framing, the reader verifies
+//! the checksum over the raw byte slice (fixed 24-byte prefix, one closing
+//! brace) without re-serializing — float formatting can never invalidate a
+//! record. A torn final line (partial write at crash) fails the frame or
+//! the checksum and is dropped, never propagated as state.
+
+use std::fs::{File, OpenOptions};
+use std::io::{self, BufRead, BufReader, BufWriter, Seek, SeekFrom, Write};
+use std::path::Path;
+
+use crate::json::{self, Json};
+
+/// IEEE CRC-32 (reflected, poly 0xEDB88320) — the zlib/ethernet polynomial.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut crc = !0u32;
+    for &b in bytes {
+        crc ^= b as u32;
+        for _ in 0..8 {
+            let mask = (crc & 1).wrapping_neg();
+            crc = (crc >> 1) ^ (0xEDB8_8320 & mask);
+        }
+    }
+    !crc
+}
+
+/// `{"crc":"` + 8 hex digits + `","rec":` — every framed line starts with
+/// exactly these 24 bytes.
+const FRAME_PREFIX_LEN: usize = 24;
+
+/// Frame a record payload into one WAL line (without the newline).
+pub fn frame(rec: &Json) -> String {
+    let payload = json::to_string(rec);
+    format!("{{\"crc\":\"{:08x}\",\"rec\":{payload}}}", crc32(payload.as_bytes()))
+}
+
+/// Verify and strip the frame; `None` for malformed or checksum-failing
+/// lines (a torn tail write).
+pub fn unframe(line: &str) -> Option<Json> {
+    let line = line.trim_end_matches(['\r', '\n']);
+    let bytes = line.as_bytes();
+    // Byte-level frame check first: arbitrary (corrupt) content must never
+    // hit a non-char-boundary str slice.
+    if bytes.len() < FRAME_PREFIX_LEN + 1
+        || &bytes[..8] != b"{\"crc\":\""
+        || &bytes[16..FRAME_PREFIX_LEN] != b"\",\"rec\":"
+        || bytes[bytes.len() - 1] != b'}'
+    {
+        return None;
+    }
+    let hex = std::str::from_utf8(&bytes[8..16]).ok()?;
+    let crc = u32::from_str_radix(hex, 16).ok()?;
+    // The prefix is pure ASCII, so these offsets are char boundaries.
+    let payload = &line[FRAME_PREFIX_LEN..line.len() - 1];
+    if crc32(payload.as_bytes()) != crc {
+        return None;
+    }
+    json::parse(payload).ok()
+}
+
+/// Append-only framed-record writer. Each append is flushed to the OS
+/// (surviving a process crash); `fsync` additionally makes every record
+/// survive power loss at a measured throughput cost (see
+/// `benches/wal_overhead.rs`). Audit-only logs (the coordinator's
+/// `EventLog`) switch to [`WalWriter::buffered`] — their records are not
+/// replayed state, so they keep the old BufWriter batching and flush
+/// only at experiment boundaries.
+pub struct WalWriter {
+    out: BufWriter<File>,
+    seq: u64,
+    fsync: bool,
+    flush_each: bool,
+}
+
+impl WalWriter {
+    /// Open `path` for appending. `start_seq` seeds the record sequence
+    /// (recovery passes the last durable seq); `truncate_to` cuts a torn
+    /// tail off first so new records never follow a corrupt line.
+    pub fn open(
+        path: &Path,
+        start_seq: u64,
+        truncate_to: Option<u64>,
+        fsync: bool,
+    ) -> io::Result<WalWriter> {
+        let mut file =
+            OpenOptions::new().create(true).append(true).open(path)?;
+        if let Some(len) = truncate_to {
+            if file.metadata()?.len() > len {
+                file.set_len(len)?;
+            }
+        }
+        file.seek(SeekFrom::End(0))?;
+        Ok(WalWriter {
+            out: BufWriter::new(file),
+            seq: start_seq,
+            fsync,
+            flush_each: true,
+        })
+    }
+
+    /// Switch to buffered appends (no per-record flush): for audit logs
+    /// whose records are never replayed as state. The WAL proper must NOT
+    /// use this — recovery guarantees depend on per-record flush.
+    pub fn buffered(mut self) -> WalWriter {
+        self.flush_each = false;
+        self
+    }
+
+    /// Next sequence number this writer will assign.
+    pub fn next_seq(&self) -> u64 {
+        self.seq + 1
+    }
+
+    /// Last sequence number assigned (or the resume seq if none yet).
+    pub fn last_seq(&self) -> u64 {
+        self.seq
+    }
+
+    /// Truncate the log to zero bytes — called after a snapshot has made
+    /// every record redundant. The seq counter keeps counting (snapshot
+    /// seq filtering depends on monotonicity across compactions).
+    pub fn reset(&mut self) -> io::Result<()> {
+        self.out.flush()?;
+        self.out.get_ref().set_len(0)?;
+        self.out.get_ref().sync_all()
+    }
+
+    /// Assign the next seq to `rec` (as a `"seq"` member), frame, append,
+    /// and flush. Returns the assigned seq.
+    pub fn append(&mut self, mut rec: Json) -> io::Result<u64> {
+        self.seq += 1;
+        rec.set("seq", self.seq.into());
+        writeln!(self.out, "{}", frame(&rec))?;
+        if self.flush_each {
+            self.out.flush()?;
+            if self.fsync {
+                self.out.get_ref().sync_all()?;
+            }
+        }
+        Ok(self.seq)
+    }
+
+    /// Flush buffered records to the OS without fsync — all a buffered
+    /// audit log needs at its boundaries.
+    pub fn flush(&mut self) -> io::Result<()> {
+        self.out.flush()
+    }
+
+    /// Force everything to stable storage (epoch boundaries, shutdown).
+    pub fn sync(&mut self) -> io::Result<()> {
+        self.out.flush()?;
+        self.out.get_ref().sync_all()
+    }
+}
+
+impl Drop for WalWriter {
+    fn drop(&mut self) {
+        let _ = self.out.flush();
+    }
+}
+
+/// The result of scanning a framed-record file.
+pub struct ScannedLog {
+    pub records: Vec<Json>,
+    /// Byte length of the valid prefix (where a writer may safely resume
+    /// appending).
+    pub valid_len: u64,
+    /// Trailing lines dropped for framing/CRC failure. More than one bad
+    /// line means corruption beyond a torn tail — the reader still stops
+    /// at the first, so `dropped` counts the rest unparsed.
+    pub dropped: u64,
+}
+
+/// Read every valid record from the start of `path`, stopping at the first
+/// torn or corrupt line. A missing file is an empty log.
+pub fn scan(path: &Path) -> io::Result<ScannedLog> {
+    let file = match File::open(path) {
+        Ok(f) => f,
+        Err(e) if e.kind() == io::ErrorKind::NotFound => {
+            return Ok(ScannedLog {
+                records: Vec::new(),
+                valid_len: 0,
+                dropped: 0,
+            })
+        }
+        Err(e) => return Err(e),
+    };
+    let mut reader = BufReader::new(file);
+    let mut records = Vec::new();
+    let mut valid_len = 0u64;
+    let mut line = String::new();
+    let mut dropped = 0u64;
+    loop {
+        line.clear();
+        let n = reader.read_line(&mut line)?;
+        if n == 0 {
+            break;
+        }
+        if dropped == 0 {
+            if let Some(rec) = unframe(&line) {
+                records.push(rec);
+                valid_len += n as u64;
+                continue;
+            }
+        }
+        dropped += 1;
+    }
+    Ok(ScannedLog { records, valid_len, dropped })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir()
+            .join(format!("nodio-wal-{}-{name}", std::process::id()))
+    }
+
+    #[test]
+    fn crc32_known_vectors() {
+        assert_eq!(crc32(b""), 0);
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+    }
+
+    #[test]
+    fn frame_round_trip() {
+        let rec = Json::obj(vec![
+            ("t", "put".into()),
+            ("fitness", 3.25.into()),
+            ("uuid", "island-1".into()),
+        ]);
+        let line = frame(&rec);
+        assert_eq!(unframe(&line), Some(rec));
+    }
+
+    #[test]
+    fn unframe_rejects_corruption() {
+        let rec = Json::obj(vec![("t", "put".into())]);
+        let line = frame(&rec);
+        // Flip a payload byte: checksum fails.
+        let bad = line.replace("put", "pux");
+        assert_eq!(unframe(&bad), None);
+        // Truncated line: frame fails.
+        assert_eq!(unframe(&line[..line.len() - 2]), None);
+        assert_eq!(unframe("not a frame"), None);
+        assert_eq!(unframe(""), None);
+    }
+
+    #[test]
+    fn writer_assigns_sequential_seqs_and_scan_reads_back() {
+        let path = tmp("seq.jsonl");
+        let _ = std::fs::remove_file(&path);
+        {
+            let mut w = WalWriter::open(&path, 0, None, false).unwrap();
+            for i in 0..3u64 {
+                let seq = w
+                    .append(Json::obj(vec![("i", i.into())]))
+                    .unwrap();
+                assert_eq!(seq, i + 1);
+            }
+        }
+        // Reopen continuing the sequence.
+        {
+            let mut w = WalWriter::open(&path, 3, None, false).unwrap();
+            assert_eq!(w.append(Json::obj(vec![("i", 3u64.into())])).unwrap(), 4);
+        }
+        let log = scan(&path).unwrap();
+        assert_eq!(log.dropped, 0);
+        assert_eq!(log.records.len(), 4);
+        for (i, rec) in log.records.iter().enumerate() {
+            assert_eq!(rec.get_u64("i"), Some(i as u64));
+            assert_eq!(rec.get_u64("seq"), Some(i as u64 + 1));
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn scan_drops_torn_tail_and_reports_resume_point() {
+        let path = tmp("torn.jsonl");
+        let _ = std::fs::remove_file(&path);
+        {
+            let mut w = WalWriter::open(&path, 0, None, false).unwrap();
+            w.append(Json::obj(vec![("i", 0u64.into())])).unwrap();
+            w.append(Json::obj(vec![("i", 1u64.into())])).unwrap();
+        }
+        let intact = std::fs::metadata(&path).unwrap().len();
+        // Simulate a crash mid-write: append half a record.
+        {
+            use std::io::Write;
+            let mut f = OpenOptions::new().append(true).open(&path).unwrap();
+            f.write_all(b"{\"crc\":\"00000000\",\"rec\":{\"i\":2")
+                .unwrap();
+        }
+        let log = scan(&path).unwrap();
+        assert_eq!(log.records.len(), 2);
+        assert_eq!(log.dropped, 1);
+        assert_eq!(log.valid_len, intact);
+
+        // A writer reopening at the resume point truncates the torn tail.
+        {
+            let mut w =
+                WalWriter::open(&path, 2, Some(log.valid_len), false).unwrap();
+            w.append(Json::obj(vec![("i", 2u64.into())])).unwrap();
+        }
+        let log = scan(&path).unwrap();
+        assert_eq!(log.dropped, 0);
+        assert_eq!(log.records.len(), 3);
+        assert_eq!(log.records[2].get_u64("i"), Some(2));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn scan_of_missing_file_is_empty() {
+        let log = scan(Path::new("/nonexistent/nodio-wal")).unwrap();
+        assert!(log.records.is_empty());
+        assert_eq!(log.valid_len, 0);
+    }
+}

@@ -48,14 +48,30 @@ impl ChromosomePool {
     }
 
     /// Insert an entry; evicts a uniformly random victim when full.
-    pub fn put<R: Rng64 + ?Sized>(&mut self, entry: PoolEntry, rng: &mut R) {
+    /// Returns the evicted slot (None = appended) so the persistence WAL
+    /// can replay the identical mutation without replaying the RNG.
+    pub fn put<R: Rng64 + ?Sized>(
+        &mut self,
+        entry: PoolEntry,
+        rng: &mut R,
+    ) -> Option<usize> {
         self.accepted += 1;
         if self.entries.len() < self.capacity {
             self.entries.push(entry);
+            None
         } else {
             let victim = dist::range(rng, 0, self.entries.len());
             self.entries[victim] = entry;
+            Some(victim)
         }
+    }
+
+    /// Adopt recovered entries (startup replay). Bounded by capacity; the
+    /// lifetime-accepted counter is restored alongside.
+    pub fn restore(&mut self, mut entries: Vec<PoolEntry>, accepted: u64) {
+        entries.truncate(self.capacity);
+        self.entries = entries;
+        self.accepted = accepted;
     }
 
     /// A uniformly random member (the GET route), if any.

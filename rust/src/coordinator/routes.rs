@@ -3,18 +3,101 @@
 //! Handlers communicate through `Rc<RefCell<PoolState>>` — safe because the
 //! event loop is one thread (the architecture the paper borrows from
 //! Node.js/Express).
+//!
+//! `PUT /experiment/chromosome` accepts either a single JSON object or a
+//! JSON array of objects (the batched-PUT protocol: W² clients amortize
+//! HTTP round-trips by shipping a whole epoch's migrants at once). Each
+//! array element is validated independently and gets its own status in
+//! the response.
 
 use std::cell::RefCell;
 use std::rc::Rc;
 
 use super::experiment::ExperimentManager;
 use super::logger::EventLog;
+use super::persistence::{ShardPersistence, ShardState};
 use super::pool::{ChromosomePool, PoolEntry};
 use super::security::{FitnessVerifier, RateLimiter, SaboteurLog};
 use super::timeseries::TimeSeries;
 use crate::http::{Params, Request, Response, Router};
 use crate::json::Json;
 use crate::rng::Xoshiro256pp;
+
+/// Largest accepted `PUT /experiment/chromosome` batch. Guards the event
+/// loop against a single request monopolizing it (threat model,
+/// section 1).
+pub const MAX_PUT_BATCH: usize = 256;
+
+/// Outcome of a batched PUT: per-item payloads (each stamped with its
+/// `status`) plus the envelope aggregates.
+pub(crate) struct BatchOutcome {
+    pub results: Vec<Json>,
+    pub accepted: u64,
+    pub solved: bool,
+}
+
+/// Shared PUT-element validation (single-loop router and sharded
+/// coordinator must never drift): chromosome presence and bit-string
+/// shape, finite fitness (a NaN/Inf must never reach a pool or the
+/// global best CAS — threat model, section 1), defaulted uuid. `Err`
+/// carries the per-item `(status, payload)` rejection.
+pub(crate) fn parse_put_item(
+    body: &Json,
+    n_bits: usize,
+) -> Result<(String, f64, String), (u16, Json)> {
+    fn fail(status: u16, msg: &str) -> (u16, Json) {
+        (status, Json::obj(vec![("error", msg.into())]))
+    }
+    let chromosome = match body.get_str("chromosome") {
+        Some(c) => c.to_string(),
+        None => return Err(fail(400, "missing chromosome")),
+    };
+    let fitness = match body.get_f64("fitness") {
+        Some(f) if f.is_finite() => f,
+        Some(_) => return Err(fail(400, "non-finite fitness")),
+        None => return Err(fail(400, "missing/invalid fitness")),
+    };
+    let uuid = body.get_str("uuid").unwrap_or("anonymous").to_string();
+    if chromosome.len() != n_bits
+        || !chromosome.bytes().all(|b| b == b'0' || b == b'1')
+    {
+        return Err(fail(400, "malformed chromosome"));
+    }
+    Ok((chromosome, fitness, uuid))
+}
+
+/// The batched-PUT protocol shared by the single-loop router and the
+/// sharded coordinator: size guards, per-item dispatch through `put_one`,
+/// per-item `status` stamping. `Err` carries the guard-rejection
+/// response.
+pub(crate) fn run_put_batch(
+    items: &[Json],
+    mut put_one: impl FnMut(&Json) -> (u16, Json),
+) -> Result<BatchOutcome, Response> {
+    if items.is_empty() {
+        return Err(Response::bad_request("empty batch"));
+    }
+    if items.len() > MAX_PUT_BATCH {
+        return Err(Response::new(413).with_text("batch exceeds 256 elements"));
+    }
+    let mut out = BatchOutcome {
+        results: Vec::with_capacity(items.len()),
+        accepted: 0,
+        solved: false,
+    };
+    for item in items {
+        let (status, mut payload) = put_one(item);
+        if status == 200 || status == 201 {
+            out.accepted += 1;
+        }
+        if status == 201 {
+            out.solved = true;
+        }
+        payload.set("status", (status as u64).into());
+        out.results.push(payload);
+    }
+    Ok(out)
+}
 
 /// All server-side state behind the routes.
 pub struct PoolState {
@@ -33,6 +116,10 @@ pub struct PoolState {
     /// Best-fitness/pool time series for `/metrics` and `/dashboard`
     /// (the paper's in-page Chart.js plot, server-side).
     pub series: TimeSeries,
+    /// Durable-experiment subsystem ([`super::persistence`]): WAL every
+    /// accepted PUT and epoch transition, snapshot periodically. `None`
+    /// runs fully in-memory (the paper's original semantics).
+    pub persist: Option<ShardPersistence>,
 }
 
 impl PoolState {
@@ -52,7 +139,47 @@ impl PoolState {
             saboteurs: SaboteurLog::new(3),
             rate_limiter: None,
             series: TimeSeries::new(512),
+            persist: None,
         }
+    }
+
+    /// Adopt recovered state (snapshot + WAL replay) — the startup path of
+    /// a persistent server.
+    pub fn restore(&mut self, state: ShardState) {
+        self.pool.restore(state.entries, state.accepted);
+        self.experiments.restore(
+            state.experiment,
+            state.puts,
+            state.gets,
+            state.best_fitness,
+            state.per_uuid,
+            state.completed,
+        );
+    }
+
+    /// The durable view of the current state (what a snapshot captures).
+    pub fn snapshot_state(&self) -> ShardState {
+        ShardState {
+            experiment: self.experiments.current_id(),
+            seq: 0, // stamped by ShardPersistence::snapshot
+            puts: self.experiments.puts(),
+            gets: self.experiments.gets(),
+            best_fitness: self.experiments.best_fitness(),
+            accepted: self.pool.accepted(),
+            per_uuid: self.experiments.per_uuid().clone(),
+            completed: self.experiments.completed().to_vec(),
+            entries: self.pool.entries().to_vec(),
+        }
+    }
+}
+
+fn maybe_snapshot(s: &mut PoolState) {
+    if !s.persist.as_ref().is_some_and(ShardPersistence::should_snapshot) {
+        return;
+    }
+    let snap = s.snapshot_state();
+    if let Some(p) = &mut s.persist {
+        p.snapshot(snap);
     }
 }
 
@@ -75,7 +202,7 @@ pub fn build_router(state: Shared) -> Router {
         });
     }
 
-    // The migration PUT (sequence step 4).
+    // The migration PUT (sequence step 4) — single object or batch array.
     {
         let state = state.clone();
         router.put(
@@ -158,6 +285,33 @@ pub fn build_router(state: Shared) -> Router {
         });
     }
 
+    // Completed-experiment history — served from the durable log: after a
+    // restart the recovered records (WAL/snapshot replay) seed this list,
+    // so history survives the process.
+    {
+        let state = state.clone();
+        router.get(
+            "/experiment/history",
+            move |_req: &Request, _p: &Params| {
+                let s = state.borrow();
+                Response::json(&Json::obj(vec![
+                    ("count", s.experiments.completed().len().into()),
+                    ("persistent", s.persist.is_some().into()),
+                    (
+                        "experiments",
+                        Json::Arr(
+                            s.experiments
+                                .completed()
+                                .iter()
+                                .map(|l| l.to_json())
+                                .collect(),
+                        ),
+                    ),
+                ]))
+            },
+        );
+    }
+
     // Metrics time series (the chart data).
     {
         let state = state.clone();
@@ -211,9 +365,13 @@ pub fn build_router(state: Shared) -> Router {
                 let log = s.experiments.finish(None, None);
                 s.pool.clear();
                 s.series.clear();
+                if let Some(p) = &mut s.persist {
+                    p.record_epoch(log.id, log.id + 1, Some(&log));
+                }
                 let entry = log.to_json();
                 s.log.log("reset", entry.clone());
                 s.log.flush();
+                maybe_snapshot(&mut s);
                 Response::json(&entry)
             },
         );
@@ -227,29 +385,47 @@ fn put_chromosome(state: &Shared, req: &Request) -> Response {
         Ok(b) => b,
         Err(e) => return Response::bad_request(&format!("bad json: {e}")),
     };
-    let chromosome = match body.get_str("chromosome") {
-        Some(c) => c.to_string(),
-        None => return Response::bad_request("missing chromosome"),
-    };
-    let fitness = match body.get_f64("fitness") {
-        Some(f) if f.is_finite() => f,
-        _ => return Response::bad_request("missing/invalid fitness"),
-    };
-    let uuid = body.get_str("uuid").unwrap_or("anonymous").to_string();
-
     let mut s = state.borrow_mut();
-    if chromosome.len() != s.experiments.n_bits
-        || !chromosome.bytes().all(|b| b == b'0' || b == b'1')
-    {
-        return Response::bad_request("malformed chromosome");
+    match &body {
+        // Batched PUT: one response element per request element, in order.
+        Json::Arr(items) => {
+            match run_put_batch(items, |item| put_one(&mut s, item)) {
+                Err(resp) => resp,
+                Ok(out) => Response::json(&Json::obj(vec![
+                    ("batch", items.len().into()),
+                    ("accepted", out.accepted.into()),
+                    ("solved", out.solved.into()),
+                    ("experiment", s.experiments.current_id().into()),
+                    ("results", Json::Arr(out.results)),
+                ])),
+            }
+        }
+        _ => {
+            let (status, payload) = put_one(&mut s, &body);
+            Response::new(status).with_json(&payload)
+        }
     }
+}
+
+/// Validate and apply one PUT element against the live state. Returns the
+/// per-item status and JSON payload (shared by the single and batched
+/// forms).
+fn put_one(s: &mut PoolState, body: &Json) -> (u16, Json) {
+    fn fail(status: u16, msg: &str) -> (u16, Json) {
+        (status, Json::obj(vec![("error", msg.into())]))
+    }
+    let (chromosome, fitness, uuid) =
+        match parse_put_item(body, s.experiments.n_bits) {
+            Ok(parts) => parts,
+            Err(rejection) => return rejection,
+        };
     // Abuse guards (see super::security): bans, rate limits, verification.
     if s.saboteurs.is_banned(&uuid) {
-        return Response::new(403).with_text("banned for repeated sabotage");
+        return fail(403, "banned for repeated sabotage");
     }
     if let Some(limiter) = &mut s.rate_limiter {
         if !limiter.allow(&uuid) {
-            return Response::new(429).with_text("rate limited");
+            return fail(429, "rate limited");
         }
     }
     if let Some(verifier) = &s.verifier {
@@ -264,7 +440,7 @@ fn put_chromosome(state: &Shared, req: &Request) -> Response {
                     ("banned", banned.into()),
                 ]),
             );
-            return Response::new(409).with_text("fitness mismatch");
+            return fail(409, "fitness mismatch");
         }
     }
 
@@ -281,9 +457,12 @@ fn put_chromosome(state: &Shared, req: &Request) -> Response {
         uuid: uuid.clone(),
     };
     let mut rng = s.rng.clone();
-    s.pool.put(entry, &mut rng);
+    let evict = s.pool.put(entry.clone(), &mut rng);
     s.rng = rng;
     let current_id = s.experiments.current_id();
+    if let Some(p) = &mut s.persist {
+        p.record_put(current_id, &entry, evict);
+    }
     s.log.log(
         "put",
         Json::obj(vec![
@@ -300,19 +479,24 @@ fn put_chromosome(state: &Shared, req: &Request) -> Response {
             .finish(Some(uuid), Some(chromosome));
         s.pool.clear();
         s.series.clear();
+        if let Some(p) = &mut s.persist {
+            p.record_epoch(log_entry.id, log_entry.id + 1, Some(&log_entry));
+        }
         let payload = log_entry.to_json();
         s.log.log("solution", payload.clone());
         s.log.flush();
+        maybe_snapshot(s);
         let mut resp = Json::obj(vec![
             ("solved", true.into()),
             ("experiment", s.experiments.current_id().into()),
         ]);
         resp.set("record", payload);
-        Response::new(201).with_json(&resp)
+        (201, resp)
     } else {
-        Response::json(&Json::obj(vec![
+        maybe_snapshot(s);
+        (200, Json::obj(vec![
             ("solved", false.into()),
-            ("experiment", s.experiments.current_id().into()),
+            ("experiment", current_id.into()),
         ]))
     }
 }
@@ -444,6 +628,121 @@ mod tests {
             ),
         );
         assert_eq!(resp.status, 400);
+    }
+
+    #[test]
+    fn batched_put_reports_per_item_status() {
+        let (state, mut router) = setup();
+        let batch = Json::Arr(vec![
+            Json::obj(vec![
+                ("chromosome", "01010101".into()),
+                ("fitness", 3.0.into()),
+                ("uuid", "w".into()),
+            ]),
+            // malformed: wrong length
+            Json::obj(vec![
+                ("chromosome", "010".into()),
+                ("fitness", 1.0.into()),
+                ("uuid", "w".into()),
+            ]),
+            Json::obj(vec![
+                ("chromosome", "01110101".into()),
+                ("fitness", 5.0.into()),
+                ("uuid", "w".into()),
+            ]),
+        ]);
+        let resp = router.handle(
+            &Request::new(Method::Put, "/experiment/chromosome")
+                .with_json(&batch),
+        );
+        assert_eq!(resp.status, 200);
+        let body = resp.json_body().unwrap();
+        assert_eq!(body.get_u64("batch"), Some(3));
+        assert_eq!(body.get_u64("accepted"), Some(2));
+        assert_eq!(body.get("solved").and_then(Json::as_bool), Some(false));
+        let results = body.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(results.len(), 3);
+        assert_eq!(results[0].get_u64("status"), Some(200));
+        assert_eq!(results[1].get_u64("status"), Some(400));
+        assert!(results[1].get_str("error").is_some());
+        assert_eq!(results[2].get_u64("status"), Some(200));
+        // Both valid entries landed; the malformed one did not.
+        assert_eq!(state.borrow().pool.len(), 2);
+        assert_eq!(state.borrow().experiments.puts(), 2);
+    }
+
+    #[test]
+    fn batched_put_with_solution_ends_experiment() {
+        let (state, mut router) = setup();
+        let batch = Json::Arr(vec![
+            Json::obj(vec![
+                ("chromosome", "01010101".into()),
+                ("fitness", 3.0.into()),
+                ("uuid", "w".into()),
+            ]),
+            Json::obj(vec![
+                ("chromosome", "11111111".into()),
+                ("fitness", 80.0.into()), // solves (target 80)
+                ("uuid", "w".into()),
+            ]),
+        ]);
+        let resp = router.handle(
+            &Request::new(Method::Put, "/experiment/chromosome")
+                .with_json(&batch),
+        );
+        assert_eq!(resp.status, 200);
+        let body = resp.json_body().unwrap();
+        assert_eq!(body.get("solved").and_then(Json::as_bool), Some(true));
+        assert_eq!(body.get_u64("experiment"), Some(1));
+        let results = body.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(results[1].get_u64("status"), Some(201));
+        assert!(results[1].get("record").is_some());
+        assert_eq!(state.borrow().experiments.current_id(), 1);
+        assert_eq!(state.borrow().pool.len(), 0);
+    }
+
+    #[test]
+    fn batch_limits_enforced() {
+        let (_state, mut router) = setup();
+        // Empty batch.
+        let resp = router.handle(
+            &Request::new(Method::Put, "/experiment/chromosome")
+                .with_json(&Json::Arr(vec![])),
+        );
+        assert_eq!(resp.status, 400);
+        // Oversized batch.
+        let item = Json::obj(vec![
+            ("chromosome", "01010101".into()),
+            ("fitness", 1.0.into()),
+        ]);
+        let big = Json::Arr(vec![item; MAX_PUT_BATCH + 1]);
+        let resp = router.handle(
+            &Request::new(Method::Put, "/experiment/chromosome")
+                .with_json(&big),
+        );
+        assert_eq!(resp.status, 413);
+    }
+
+    #[test]
+    fn history_route_lists_completed_experiments() {
+        let (_state, mut router) = setup();
+        let resp =
+            router.handle(&Request::new(Method::Get, "/experiment/history"));
+        let body = resp.json_body().unwrap();
+        assert_eq!(body.get_u64("count"), Some(0));
+        assert_eq!(
+            body.get("persistent").and_then(Json::as_bool),
+            Some(false)
+        );
+
+        put(&mut router, "11111111", 80.0, "a"); // solves experiment 0
+        put(&mut router, "01010101", 5.0, "b");
+        let resp =
+            router.handle(&Request::new(Method::Get, "/experiment/history"));
+        let body = resp.json_body().unwrap();
+        assert_eq!(body.get_u64("count"), Some(1));
+        let experiments = body.get("experiments").unwrap().as_arr().unwrap();
+        assert_eq!(experiments[0].get_str("solved_by"), Some("a"));
     }
 
     #[test]

@@ -6,10 +6,13 @@ use std::path::PathBuf;
 use std::rc::Rc;
 
 use super::logger::EventLog;
+use super::persistence::{
+    self, PersistConfig, RecoveredShard, ShardPersistence,
+};
 use super::routes::{build_router, PoolState};
 use super::security::{FitnessVerifier, RateLimiter};
-use crate::problems::Trap;
 use crate::http::server::{Server, ServerConfig, ServerHandle};
+use crate::problems::Trap;
 
 /// Pool server configuration. Defaults are the paper's baseline trap-40
 /// experiment.
@@ -21,7 +24,8 @@ pub struct PoolServerConfig {
     pub n_bits: usize,
     /// Pool capacity (random-replacement beyond this).
     pub pool_capacity: usize,
-    /// JSONL event log destination (None = disabled).
+    /// Standalone JSONL audit-event log (None = disabled). Distinct from
+    /// `persist`: events are human/audit records, not replayable state.
     pub log_path: Option<PathBuf>,
     /// RNG seed for pool sampling.
     pub seed: u64,
@@ -33,6 +37,10 @@ pub struct PoolServerConfig {
     pub verify_fitness: bool,
     /// DoS guard: per-UUID token bucket (requests/s, burst).
     pub rate_limit: Option<(f64, f64)>,
+    /// Durable experiments ([`super::persistence`]): WAL + snapshots
+    /// under `data_dir`, replayed on startup so a restart resumes the
+    /// live experiment instead of resetting it. None = in-memory only.
+    pub persist: Option<PersistConfig>,
 }
 
 impl Default for PoolServerConfig {
@@ -46,6 +54,7 @@ impl Default for PoolServerConfig {
             http: ServerConfig::default(),
             verify_fitness: false,
             rate_limit: None,
+            persist: None,
         }
     }
 }
@@ -56,11 +65,32 @@ pub struct PoolServer;
 impl PoolServer {
     /// Spawn on `addr` (e.g. `"127.0.0.1:0"`). The returned handle stops
     /// the server when dropped.
+    ///
+    /// With `config.persist` set, durable state is recovered (snapshot +
+    /// WAL replay) before the event loop starts; recovery errors
+    /// (corrupt snapshot, mismatched layout) fail the spawn rather than
+    /// silently resetting the experiment.
     pub fn spawn(
         addr: &str,
         config: PoolServerConfig,
     ) -> std::io::Result<ServerHandle> {
         let http = config.http.clone();
+        // Recovery happens on the spawning thread so errors surface here.
+        let recovered: Option<RecoveredShard> = match &config.persist {
+            Some(cfg) => {
+                persistence::check_or_init_meta(
+                    &cfg.data_dir,
+                    1,
+                    config.n_bits,
+                    config.pool_capacity,
+                )?;
+                Some(persistence::recover_shard(&persistence::shard_dir(
+                    &cfg.data_dir,
+                    0,
+                ))?)
+            }
+            None => None,
+        };
         Server::spawn_with(addr, http, move || {
             let log = match &config.log_path {
                 Some(p) => EventLog::to_file(p).unwrap_or_else(|e| {
@@ -76,6 +106,33 @@ impl PoolServer {
                 log,
                 config.seed,
             );
+            if let (Some(cfg), Some(rec)) = (&config.persist, recovered) {
+                if rec.dropped_records > 0 {
+                    eprintln!(
+                        "nodio: dropped {} torn WAL record(s) on recovery",
+                        rec.dropped_records
+                    );
+                }
+                if rec.had_history() {
+                    eprintln!(
+                        "nodio: resumed experiment {} (pool {}, {} completed)",
+                        rec.state.experiment,
+                        rec.state.entries.len(),
+                        rec.state.completed.len()
+                    );
+                }
+                let dir = persistence::shard_dir(&cfg.data_dir, 0);
+                match ShardPersistence::open(&dir, cfg, &rec) {
+                    Ok(p) => {
+                        state.restore(rec.state);
+                        state.persist = Some(p);
+                    }
+                    Err(e) => eprintln!(
+                        "nodio: persistence disabled ({}: {e})",
+                        dir.display()
+                    ),
+                }
+            }
             if config.verify_fitness {
                 state.verifier =
                     Some(FitnessVerifier::new(Box::new(Trap::paper())));
@@ -209,18 +266,177 @@ mod tests {
         client.send(&put_req("1111", 4.0, "w")).unwrap();
         handle.stop(); // drop flushes the log
 
-        let text = std::fs::read_to_string(&path).unwrap();
-        let kinds: Vec<String> = text
-            .lines()
-            .map(|l| {
-                crate::json::parse(l)
-                    .unwrap()
-                    .get_str("event")
-                    .unwrap()
-                    .to_string()
-            })
+        // EventLog is folded into the CRC-framed WAL writer: read it back
+        // through the shared scanner.
+        let records = super::persistence::scan(&path).unwrap().records;
+        let kinds: Vec<&str> = records
+            .iter()
+            .map(|r| r.get_str("event").unwrap())
             .collect();
         assert_eq!(kinds, vec!["put", "put", "solution"]);
         let _ = std::fs::remove_file(&path);
+    }
+
+    fn recovery_config(data_dir: &std::path::Path) -> PoolServerConfig {
+        PoolServerConfig {
+            n_bits: 8,
+            target_fitness: 8.0,
+            persist: Some(PersistConfig {
+                snapshot_every: 3,
+                ..PersistConfig::new(data_dir)
+            }),
+            ..Default::default()
+        }
+    }
+
+    fn state_of(client: &mut HttpClient) -> Json {
+        client
+            .send(&Request::new(Method::Get, "/experiment/state"))
+            .unwrap()
+            .json_body()
+            .unwrap()
+    }
+
+    #[test]
+    fn recovery_single_loop_resumes_from_data_dir() {
+        let dir = std::env::temp_dir().join(format!(
+            "nodio-recover-server-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+
+        // Run 1: solve one experiment, leave another in flight with a
+        // snapshot (every 3 records) plus a WAL tail.
+        {
+            let handle =
+                PoolServer::spawn("127.0.0.1:0", recovery_config(&dir))
+                    .unwrap();
+            let mut c = HttpClient::connect(handle.addr).unwrap();
+            assert_eq!(c.send(&put_req("01010101", 4.0, "a")).unwrap().status, 200);
+            assert_eq!(c.send(&put_req("11111111", 8.0, "a")).unwrap().status, 201);
+            assert_eq!(c.send(&put_req("00010101", 2.0, "b")).unwrap().status, 200);
+            assert_eq!(c.send(&put_req("00110101", 3.0, "a")).unwrap().status, 200);
+            let state = state_of(&mut c);
+            assert_eq!(state.get_u64("experiment"), Some(1));
+            assert_eq!(state.get_u64("pool_size"), Some(2));
+            assert_eq!(state.get_u64("puts"), Some(2));
+            assert_eq!(state.get_f64("best_fitness"), Some(3.0));
+            handle.stop();
+        }
+
+        // Run 2: the same experiment resumes — epoch, pool, counters,
+        // per-UUID accounting and history all intact.
+        {
+            let handle =
+                PoolServer::spawn("127.0.0.1:0", recovery_config(&dir))
+                    .unwrap();
+            let mut c = HttpClient::connect(handle.addr).unwrap();
+            let state = state_of(&mut c);
+            assert_eq!(state.get_u64("experiment"), Some(1));
+            assert_eq!(state.get_u64("pool_size"), Some(2));
+            assert_eq!(state.get_u64("puts"), Some(2));
+            assert_eq!(state.get_f64("best_fitness"), Some(3.0));
+            assert_eq!(state.get_u64("completed"), Some(1));
+
+            let stats = c
+                .send(&Request::new(Method::Get, "/stats"))
+                .unwrap()
+                .json_body()
+                .unwrap();
+            let per_uuid = stats.get("per_uuid").unwrap();
+            assert_eq!(per_uuid.get_u64("a"), Some(3));
+            assert_eq!(per_uuid.get_u64("b"), Some(1));
+
+            let history = c
+                .send(&Request::new(Method::Get, "/experiment/history"))
+                .unwrap()
+                .json_body()
+                .unwrap();
+            assert_eq!(history.get_u64("count"), Some(1));
+            assert_eq!(
+                history.get("persistent").and_then(Json::as_bool),
+                Some(true)
+            );
+            let experiments =
+                history.get("experiments").unwrap().as_arr().unwrap();
+            assert_eq!(experiments[0].get_str("solved_by"), Some("a"));
+
+            // The pool still serves the recovered entries.
+            let resp = c
+                .send(&Request::new(Method::Get, "/experiment/random"))
+                .unwrap();
+            assert_eq!(resp.status, 200);
+            // And the resumed experiment can still be solved.
+            assert_eq!(c.send(&put_req("11111111", 8.0, "b")).unwrap().status, 201);
+            handle.stop();
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn recovery_corrupted_tail_record_is_dropped_not_a_panic() {
+        let dir = std::env::temp_dir().join(format!(
+            "nodio-recover-torn-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        {
+            let handle =
+                PoolServer::spawn("127.0.0.1:0", recovery_config(&dir))
+                    .unwrap();
+            let mut c = HttpClient::connect(handle.addr).unwrap();
+            assert_eq!(c.send(&put_req("01010101", 4.0, "a")).unwrap().status, 200);
+            assert_eq!(c.send(&put_req("01110101", 5.0, "a")).unwrap().status, 200);
+            handle.stop();
+        }
+        // Simulate a crash mid-append: truncate the last WAL line.
+        let wal = super::persistence::shard_dir(&dir, 0)
+            .join(super::persistence::WAL_FILE);
+        let text = std::fs::read_to_string(&wal).unwrap();
+        assert!(text.lines().count() >= 2, "expected WAL records:\n{text}");
+        let torn = &text[..text.len() - 9];
+        std::fs::write(&wal, torn).unwrap();
+
+        let handle =
+            PoolServer::spawn("127.0.0.1:0", recovery_config(&dir)).unwrap();
+        let mut c = HttpClient::connect(handle.addr).unwrap();
+        let state = state_of(&mut c);
+        // The torn record (the 5.0 put) is gone; the intact one survived.
+        assert_eq!(state.get_u64("pool_size"), Some(1));
+        assert_eq!(state.get_u64("puts"), Some(1));
+        assert_eq!(state.get_f64("best_fitness"), Some(4.0));
+        // The server keeps accepting writes after truncating the tail.
+        assert_eq!(c.send(&put_req("00000111", 6.0, "b")).unwrap().status, 200);
+        handle.stop();
+
+        // And the post-corruption write is itself durable.
+        let handle =
+            PoolServer::spawn("127.0.0.1:0", recovery_config(&dir)).unwrap();
+        let mut c = HttpClient::connect(handle.addr).unwrap();
+        let state = state_of(&mut c);
+        assert_eq!(state.get_u64("pool_size"), Some(2));
+        assert_eq!(state.get_f64("best_fitness"), Some(6.0));
+        handle.stop();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn recovery_layout_mismatch_is_refused() {
+        let dir = std::env::temp_dir().join(format!(
+            "nodio-recover-layout-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        {
+            let handle =
+                PoolServer::spawn("127.0.0.1:0", recovery_config(&dir))
+                    .unwrap();
+            handle.stop();
+        }
+        // Same dir, different chromosome width: spawn must fail loudly.
+        let mut config = recovery_config(&dir);
+        config.n_bits = 16;
+        assert!(PoolServer::spawn("127.0.0.1:0", config).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

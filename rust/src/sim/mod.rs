@@ -13,5 +13,8 @@ pub mod swarm;
 pub mod trace;
 
 pub use baseline::{run_baseline, BaselineReport, RunRecord};
-pub use swarm::{run_swarm, run_swarm_trace, ChurnConfig, SwarmConfig, SwarmReport};
+pub use swarm::{
+    run_kill_resume, run_swarm, run_swarm_trace, ChurnConfig,
+    ExperimentProbe, SwarmConfig, SwarmReport,
+};
 pub use trace::{Session, Trace, TraceModel};

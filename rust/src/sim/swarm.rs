@@ -5,14 +5,14 @@
 
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, Result};
 
 use super::trace::Trace;
 use crate::client::driver::EngineChoice;
 use crate::client::volunteer::ClientStats;
 use crate::client::worker::{ClientProcess, WorkerMode};
 use crate::coordinator::cluster::{ClusterConfig, PoolBackend};
-use crate::coordinator::{PoolServer, PoolServerConfig};
+use crate::coordinator::{PersistConfig, PoolServer, PoolServerConfig};
 use crate::http::{HttpClient, Method, Request};
 use crate::rng::{dist, Rng64, SplitMix64};
 
@@ -49,6 +49,10 @@ pub struct SwarmConfig {
     /// Event-loop shards for the pool server; 1 = the paper's single
     /// non-blocking loop, >1 = the multi-core sharded coordinator.
     pub shards: usize,
+    /// Durable experiments: WAL + snapshots under this config's data
+    /// dir, so the coordinator can be killed and resumed mid-swarm (see
+    /// [`run_kill_resume`]). Overrides `server.persist` when set.
+    pub persist: Option<PersistConfig>,
 }
 
 impl Default for SwarmConfig {
@@ -65,6 +69,23 @@ impl Default for SwarmConfig {
             slowdown_range: (1.0, 1.0),
             server: PoolServerConfig::default(),
             shards: 1,
+            persist: None,
+        }
+    }
+}
+
+impl SwarmConfig {
+    /// The pool-backend config this swarm drives (persistence plumbed
+    /// through to every shard).
+    fn backend_config(&self) -> ClusterConfig {
+        let mut base = self.server.clone();
+        if self.persist.is_some() {
+            base.persist = self.persist.clone();
+        }
+        ClusterConfig {
+            shards: self.shards,
+            base,
+            ..ClusterConfig::default()
         }
     }
 }
@@ -94,12 +115,7 @@ impl SwarmReport {
 
 /// Run a swarm experiment to completion.
 pub fn run_swarm(config: SwarmConfig) -> Result<SwarmReport> {
-    let backend_config = ClusterConfig {
-        shards: config.shards,
-        base: config.server.clone(),
-        ..ClusterConfig::default()
-    };
-    let handle = PoolBackend::spawn("127.0.0.1:0", backend_config)
+    let handle = PoolBackend::spawn("127.0.0.1:0", config.backend_config())
         .map_err(|e| anyhow!("pool server: {e}"))?;
     let addr = handle.addr();
     let mut rng = SplitMix64::new(config.seed);
@@ -242,6 +258,103 @@ pub fn run_swarm(config: SwarmConfig) -> Result<SwarmReport> {
     })
 }
 
+/// One observation of a backend's aggregate experiment state, used to
+/// compare a coordinator before a kill and after a resume.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExperimentProbe {
+    pub experiment: u64,
+    pub pool_size: u64,
+    /// Current-experiment accepted PUTs (exact across restarts: every
+    /// accepted PUT is WAL'd).
+    pub puts: u64,
+    pub best_fitness: Option<f64>,
+    pub completed: u64,
+}
+
+fn probe_state(monitor: &mut HttpClient) -> Result<ExperimentProbe> {
+    let body = monitor
+        .send(&Request::new(Method::Get, "/experiment/state"))
+        .map_err(|e| anyhow!("probe: {e}"))?
+        .json_body()
+        .map_err(|e| anyhow!("probe body: {e}"))?;
+    Ok(ExperimentProbe {
+        experiment: body.get_u64("experiment").unwrap_or(0),
+        pool_size: body.get_u64("pool_size").unwrap_or(0),
+        puts: body.get_u64("puts").unwrap_or(0),
+        best_fitness: body.get_f64("best_fitness"),
+        completed: body.get_u64("completed").unwrap_or(0),
+    })
+}
+
+/// The kill-and-resume scenario: drive a volunteer swarm against a
+/// persistent coordinator for `warmup`, retire the clients, probe the
+/// experiment state, kill the coordinator, restart it from the same
+/// `--data-dir`, and probe again. With WAL+snapshot persistence the two
+/// probes are identical — the experiment survived the process.
+///
+/// Gossip is disabled for the scenario (hour-long interval) so the state
+/// is quiescent between the probe and the kill; migration batches are
+/// WAL'd and replayed the same way when enabled.
+pub fn run_kill_resume(
+    mut config: SwarmConfig,
+    warmup: Duration,
+) -> Result<(ExperimentProbe, ExperimentProbe)> {
+    if config.persist.is_none() && config.server.persist.is_none() {
+        bail!("run_kill_resume needs a persistent backend (set persist)");
+    }
+    // Never end the experiment mid-scenario: the point is resuming a
+    // live one.
+    config.server.target_fitness = f64::MAX;
+    let mut backend_config = config.backend_config();
+    backend_config.migration_interval = Duration::from_secs(3600);
+
+    let handle = PoolBackend::spawn("127.0.0.1:0", backend_config.clone())
+        .map_err(|e| anyhow!("pool server: {e}"))?;
+    let addr = handle.addr();
+    let mut rng = SplitMix64::new(config.seed);
+    let clients: Vec<ClientProcess> = (0..config.n_clients.max(1))
+        .map(|i| {
+            ClientProcess::spawn(
+                Some(addr),
+                config.mode,
+                config.engine,
+                config.base_pop,
+                rng.next_u64(),
+                &format!("resume-{i}"),
+                u64::MAX,
+                1.0,
+            )
+        })
+        .collect();
+    std::thread::sleep(warmup);
+    // Retire the swarm first so the state is quiescent when probed.
+    for c in clients {
+        c.shutdown();
+    }
+    let mut monitor = HttpClient::connect(addr)?;
+    let before = probe_state(&mut monitor)?;
+    drop(monitor);
+    handle.stop(); // the kill (graceful here; torn-tail recovery is
+                   // exercised by the coordinator's corruption tests)
+
+    let handle = PoolBackend::spawn("127.0.0.1:0", backend_config)
+        .map_err(|e| anyhow!("pool server (resume): {e}"))?;
+    let mut monitor = HttpClient::connect(handle.addr())?;
+    let after = probe_state(&mut monitor)?;
+    // The resumed pool must still serve migration GETs.
+    if after.pool_size > 0 {
+        let resp = monitor
+            .send(&Request::new(Method::Get, "/experiment/random"))
+            .map_err(|e| anyhow!("resumed GET: {e}"))?;
+        if resp.status != 200 {
+            bail!("resumed pool refused a GET ({})", resp.status);
+        }
+    }
+    drop(monitor);
+    handle.stop();
+    Ok((before, after))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -284,6 +397,37 @@ mod tests {
         assert!(report.time_to_first.is_some());
         assert!(report.total_requests > 0);
         assert_eq!(report.experiment_times.len() as u64, report.solutions);
+    }
+
+    #[test]
+    fn recovery_swarm_kill_and_resume() {
+        // The durable-experiment scenario: a sharded coordinator under
+        // real W² volunteer traffic is killed mid-experiment and
+        // restarted from its data dir; the experiment state must be
+        // identical on both sides of the kill.
+        let dir = std::env::temp_dir().join(format!(
+            "nodio-swarm-resume-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let (before, after) = run_kill_resume(
+            SwarmConfig {
+                n_clients: 2,
+                shards: 2,
+                seed: 13,
+                persist: Some(crate::coordinator::PersistConfig {
+                    snapshot_every: 16,
+                    ..crate::coordinator::PersistConfig::new(&dir)
+                }),
+                ..Default::default()
+            },
+            Duration::from_secs(3),
+        )
+        .unwrap();
+        assert!(before.puts > 0, "swarm produced no PUTs: {before:?}");
+        assert!(before.pool_size > 0, "{before:?}");
+        assert_eq!(before, after);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

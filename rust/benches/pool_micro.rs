@@ -88,7 +88,9 @@ fn main() {
     {
         let mut pool = ChromosomePool::new(1024);
         let mut rng = SplitMix64::new(5);
-        let chromosome = "01".repeat(80);
+        let chromosome =
+            nodio::problems::PackedBits::from_str01(&"01".repeat(80))
+                .unwrap();
         bench("pool: put (at capacity)", &cfg, || {
             pool.put(
                 PoolEntry {

@@ -44,10 +44,15 @@
 //!
 //! Per-UUID accounting reaches `/stats` parity with the single-loop
 //! server: shards count locally (lock-free) and publish to their slot
-//! once per tick; the aggregator merges. Still unsupported relative to
-//! [`super::server::PoolServer`] (by design, for now): fitness
-//! verification and rate limiting. The single-loop server remains the
-//! default (`--shards 1`).
+//! once per tick; the aggregator merges. Fitness verification and
+//! per-UUID rate limiting run in the sharded path too (closing the
+//! ROADMAP parity gap): each shard owns its own verifier, saboteur log
+//! and token buckets — no cross-shard locks. Since the acceptor pins a
+//! connection to one shard, a client's requests hit one bucket/strike
+//! counter; a client spreading k connections across shards can get up to
+//! k× the nominal rate (resp. k× the ban threshold in strikes) —
+//! documented slack, not a correctness gap. The single-loop server
+//! remains the default (`--shards 1`).
 
 use std::collections::{HashMap, VecDeque};
 use std::io;
@@ -58,20 +63,27 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use super::experiment::ExperimentLog;
+use super::experiment::{bump_count, ExperimentLog};
 use super::persistence::{
     self, PersistConfig, RecoveredShard, ShardPersistence, ShardState,
 };
 use super::pool::{ChromosomePool, PoolEntry};
+use super::routes::{
+    first_json_byte, put_fail, run_put_batch, validate_put_json,
+    validate_put_ref, PutFields, PutOutcome, RandomOutcome,
+};
+use super::security::{FitnessVerifier, RateLimiter, SaboteurLog};
 use super::server::{PoolServer, PoolServerConfig};
 use crate::eventloop::{Epoll, Event, Interest, Waker};
 use crate::http::server::{
     ConnDriver, ServerConfig, ServerHandle, ServerStats, TOKEN_LISTENER,
     TOKEN_WAKER,
 };
+use crate::http::types::{write_json_200, write_no_content_204};
 use crate::http::{Method, Request, Response, Service};
-use crate::json::{self, Json};
-use crate::rng::{dist, Xoshiro256pp};
+use crate::json::{self, Json, PutBody};
+use crate::problems::{PackedBits, Trap};
+use crate::rng::Xoshiro256pp;
 
 /// Largest accepted batched-PUT array (mirrors
 /// [`super::routes::MAX_PUT_BATCH`]): bounds how long one request can
@@ -84,9 +96,11 @@ pub struct ClusterConfig {
     /// Number of event-loop shards (1 = degenerate single-loop cluster).
     pub shards: usize,
     /// Pool/experiment settings shared with the single-loop server. The
-    /// pool capacity is split evenly across shards and `persist` gives
-    /// each shard its own WAL+snapshot directory; `log_path`,
-    /// `verify_fitness` and `rate_limit` are ignored (see module docs).
+    /// pool capacity is split evenly across shards, `persist` gives each
+    /// shard its own WAL+snapshot directory, and `verify_fitness` /
+    /// `rate_limit` are enforced per shard (see module docs for the
+    /// per-connection semantics); only `log_path` is ignored (the
+    /// cluster has no audit event log).
     pub base: PoolServerConfig,
     /// Gossip period for inter-shard best-K migration.
     pub migration_interval: Duration,
@@ -324,6 +338,11 @@ struct ShardCfg {
     migration_interval: Duration,
     migration_k: usize,
     persist: Option<PersistConfig>,
+    /// Server-side fitness re-evaluation (shared parity with
+    /// [`PoolServerConfig::verify_fitness`]; per-shard verifier).
+    verify_fitness: bool,
+    /// Per-UUID token bucket (rate, burst) — per-shard buckets.
+    rate_limit: Option<(f64, f64)>,
     /// Durable state replayed on the spawning thread (so errors surface
     /// from `spawn`), taken by the shard thread at startup.
     recovered: Option<RecoveredShard>,
@@ -359,6 +378,16 @@ struct ShardService {
     /// the partition; a slot is invalidated when its entry is replaced
     /// and the whole cache drops on clear/epoch.
     random_cache: Vec<Option<Vec<u8>>>,
+    /// Pre-rendered `{"solved":false,"experiment":N}` — the steady-state
+    /// single-PUT response body, rebuilt on epoch change.
+    put_ok_body: Vec<u8>,
+    /// Sabotage tolerance (parity with the single-loop server): per-shard
+    /// server-side re-evaluation of claimed fitness, 409 on mismatch and
+    /// 403 after repeated offenses.
+    verifier: Option<FitnessVerifier>,
+    saboteurs: SaboteurLog,
+    /// DoS guard (parity): per-UUID token bucket, per shard.
+    rate_limiter: Option<RateLimiter>,
     persist: Option<ShardPersistence>,
     shared: Arc<ClusterShared>,
     slots: Arc<Vec<ShardSlot>>,
@@ -391,7 +420,7 @@ impl ShardService {
         // The recovered cumulative per-UUID map seeds the published slot
         // copy directly; the live delta starts empty.
         *slots[cfg.id].per_uuid.lock().unwrap() = state.per_uuid;
-        let service = ShardService {
+        let mut service = ShardService {
             id: cfg.id,
             n_bits: cfg.n_bits,
             migration_k: cfg.migration_k,
@@ -409,12 +438,31 @@ impl ShardService {
             per_uuid_delta: HashMap::new(),
             closed: state.completed,
             random_cache: Vec::new(),
+            put_ok_body: Vec::new(),
+            verifier: cfg
+                .verify_fitness
+                .then(|| FitnessVerifier::new(Box::new(Trap::paper()))),
+            saboteurs: SaboteurLog::new(3),
+            rate_limiter: cfg
+                .rate_limit
+                .map(|(rate, burst)| RateLimiter::new(rate, burst)),
             persist,
             shared,
             slots,
         };
+        service.rebuild_put_ok();
         service.publish_pool_len();
         service
+    }
+
+    /// Re-render the cached steady-state PUT response for this shard's
+    /// current epoch.
+    fn rebuild_put_ok(&mut self) {
+        self.put_ok_body = json::to_string(&Json::obj(vec![
+            ("solved", false.into()),
+            ("experiment", self.local_experiment.into()),
+        ]))
+        .into_bytes();
     }
 
     fn slot(&self) -> &ShardSlot {
@@ -507,6 +555,7 @@ impl ShardService {
         self.local_experiment = to;
         self.pool.clear();
         self.random_cache.clear();
+        self.rebuild_put_ok();
         self.epoch_puts = 0;
         self.epoch_gets = 0;
         self.epoch_best = f64::NEG_INFINITY;
@@ -612,6 +661,41 @@ impl ShardService {
     }
 
     fn put_chromosome(&mut self, req: &Request) -> Response {
+        // Zero-copy path first: SAX-extract the two known request shapes
+        // (protocol shared with the single-loop router); escapes and
+        // malformed JSON fall back to the owned tree with legacy errors.
+        if let Ok(text) = std::str::from_utf8(&req.body) {
+            match json::parse_put_body(text) {
+                Ok(PutBody::Single(item)) => {
+                    let (status, payload) =
+                        match validate_put_ref(&item, self.n_bits) {
+                            Ok(fields) => self.put_one(fields),
+                            Err(rejection) => rejection,
+                        };
+                    return Response::new(status).with_json(&payload);
+                }
+                Ok(PutBody::Batch(items)) => {
+                    let n_bits = self.n_bits;
+                    let outcome = run_put_batch(&items, |item| {
+                        match validate_put_ref(item, n_bits) {
+                            Ok(fields) => self.put_one(fields),
+                            Err(rejection) => rejection,
+                        }
+                    });
+                    return match outcome {
+                        Err(resp) => resp,
+                        Ok(out) => Response::json(&Json::obj(vec![
+                            ("batch", items.len().into()),
+                            ("accepted", out.accepted.into()),
+                            ("solved", out.solved.into()),
+                            ("experiment", self.local_experiment.into()),
+                            ("results", Json::Arr(out.results)),
+                        ])),
+                    };
+                }
+                Err(_) => {} // owned fallback below
+            }
+        }
         let body = match req.json() {
             Ok(b) => b,
             Err(e) => {
@@ -619,12 +703,16 @@ impl ShardService {
             }
         };
         match &body {
-            // Batched PUT: one response element per request element
-            // (protocol shared with the single-loop router).
+            // Batched PUT: one response element per request element.
             Json::Arr(items) => {
-                match super::routes::run_put_batch(items, |item| {
-                    self.put_one(item)
-                }) {
+                let n_bits = self.n_bits;
+                let outcome = run_put_batch(items, |item| {
+                    match validate_put_json(item, n_bits) {
+                        Ok(fields) => self.put_one(fields),
+                        Err(rejection) => rejection,
+                    }
+                });
+                match outcome {
                     Err(resp) => resp,
                     Ok(out) => Response::json(&Json::obj(vec![
                         ("batch", items.len().into()),
@@ -636,20 +724,60 @@ impl ShardService {
                 }
             }
             _ => {
-                let (status, payload) = self.put_one(&body);
+                let (status, payload) =
+                    match validate_put_json(&body, self.n_bits) {
+                        Ok(fields) => self.put_one(fields),
+                        Err(rejection) => rejection,
+                    };
                 Response::new(status).with_json(&payload)
             }
         }
     }
 
-    /// Validate and apply one PUT element (shared by the single and
-    /// batched forms). Returns the per-item status and JSON payload.
-    fn put_one(&mut self, body: &Json) -> (u16, Json) {
-        let (chromosome, fitness, uuid) =
-            match super::routes::parse_put_item(body, self.n_bits) {
-                Ok(parts) => parts,
-                Err(rejection) => return rejection,
-            };
+    /// Apply one validated PUT element (shared by the single and batched
+    /// forms). Returns the per-item status and JSON payload.
+    fn put_one(&mut self, fields: PutFields) -> (u16, Json) {
+        match self.apply_put(fields) {
+            PutOutcome::Rejected(status, payload) => (status, payload),
+            PutOutcome::Accepted => (
+                200,
+                Json::obj(vec![
+                    ("solved", false.into()),
+                    ("experiment", self.local_experiment.into()),
+                ]),
+            ),
+            PutOutcome::Solved(payload) => (201, payload),
+        }
+    }
+
+    /// The core PUT state transition, payload-free on the accept path so
+    /// the event-loop fast path can answer from the pre-rendered cache.
+    fn apply_put(&mut self, f: PutFields) -> PutOutcome {
+        fn reject(status: u16, msg: &str) -> PutOutcome {
+            let (status, payload) = put_fail(status, msg);
+            PutOutcome::Rejected(status, payload)
+        }
+        // Abuse guards (parity with the single-loop server; per-shard
+        // state — see module docs for the multi-connection semantics).
+        if self.saboteurs.is_banned(f.uuid) {
+            return reject(403, "banned for repeated sabotage");
+        }
+        if let Some(limiter) = &mut self.rate_limiter {
+            if !limiter.allow(f.uuid) {
+                return reject(429, "rate limited");
+            }
+        }
+        if let Some(verifier) = &self.verifier {
+            if verifier.verify(f.chromosome, f.fitness).is_err() {
+                self.saboteurs.record_rejection(f.uuid);
+                return reject(409, "fitness mismatch");
+            }
+        }
+        let Some(packed) = PackedBits::from_str01(f.chromosome) else {
+            // Unreachable after validation; a defensive 400 beats a
+            // panic on the shard loop.
+            return reject(400, "malformed chromosome");
+        };
 
         // Never insert into a partition belonging to a finished epoch.
         self.sync_epoch();
@@ -657,11 +785,11 @@ impl ShardService {
         self.shared.puts.fetch_add(1, Ordering::Relaxed);
         self.slot().puts.fetch_add(1, Ordering::Relaxed);
         self.epoch_puts += 1;
-        *self.per_uuid_delta.entry(uuid.clone()).or_insert(0) += 1;
-        if fitness > self.epoch_best {
-            self.epoch_best = fitness;
+        bump_count(&mut self.per_uuid_delta, f.uuid);
+        if f.fitness > self.epoch_best {
+            self.epoch_best = f.fitness;
         }
-        let key = ordered_key(fitness);
+        let key = ordered_key(f.fitness);
         self.shared.best_key.fetch_max(key, Ordering::AcqRel);
         // If another shard finished the experiment between our sync_epoch
         // and the fetch_max above, our fitness belongs to the finished
@@ -686,26 +814,27 @@ impl ShardService {
         }
 
         let entry = PoolEntry {
-            chromosome: chromosome.clone(),
-            fitness,
-            uuid: uuid.clone(),
+            chromosome: packed,
+            fitness: f.fitness,
+            uuid: f.uuid.to_string(),
         };
-        let evict = self.pool.put(entry.clone(), &mut self.rng);
+        let evict = self.pool.put(entry, &mut self.rng);
+        // The entry lives in the pool now; read it back by slot instead
+        // of cloning it up front.
+        let slot_idx = evict.unwrap_or(self.pool.len() - 1);
         self.note_pool_insert(evict);
         if let Some(p) = &mut self.persist {
-            p.record_put(self.local_experiment, &entry, evict);
+            p.record_put(
+                self.local_experiment,
+                &self.pool.entries()[slot_idx],
+                evict,
+            );
         }
         self.publish_pool_len();
 
-        let solved = fitness >= self.shared.target_fitness - 1e-9;
+        let solved = f.fitness >= self.shared.target_fitness - 1e-9;
         if !solved {
-            return (
-                200,
-                Json::obj(vec![
-                    ("solved", false.into()),
-                    ("experiment", self.local_experiment.into()),
-                ]),
-            );
+            return PutOutcome::Accepted;
         }
 
         // Experiment over. One shard wins the epoch CAS and records the
@@ -714,9 +843,9 @@ impl ShardService {
         // not at the next tick.
         let record = self.shared.finish_experiment(
             self.local_experiment,
-            fitness,
-            Some(uuid),
-            Some(chromosome),
+            f.fitness,
+            Some(f.uuid.to_string()),
+            Some(f.chromosome.to_string()),
         );
         if record.is_some() {
             let to = self.local_experiment + 1;
@@ -735,47 +864,88 @@ impl ShardService {
         if let Some(log) = record {
             resp.set("record", log.to_json());
         }
-        (201, resp)
+        PutOutcome::Solved(resp)
     }
 
     fn get_random(&mut self, req: &Request) -> Response {
+        match self.random_body(req) {
+            RandomOutcome::Limited => {
+                Response::new(429).with_text("rate limited")
+            }
+            RandomOutcome::Empty => Response::new(204),
+            RandomOutcome::Body(body) => {
+                let mut resp = Response::new(200);
+                resp.body = body.to_vec();
+                resp.set_header("content-type", "application/json");
+                resp
+            }
+        }
+    }
+
+    /// The zero-allocation event-loop variant of [`ShardService::get_random`]:
+    /// head + cached body appended straight to the connection buffer.
+    fn get_random_into(
+        &mut self,
+        req: &Request,
+        keep_alive: bool,
+        out: &mut Vec<u8>,
+    ) {
+        match self.random_body(req) {
+            RandomOutcome::Limited => Response::new(429)
+                .with_text("rate limited")
+                .write_to(out, keep_alive),
+            RandomOutcome::Empty => write_no_content_204(out, keep_alive),
+            RandomOutcome::Body(body) => {
+                write_json_200(out, body, keep_alive)
+            }
+        }
+    }
+
+    /// Shared GET logic: rate limit, epoch sync, accounting, slot pick,
+    /// cache fill. Both response renderers wrap this, so they cannot
+    /// drift.
+    fn random_body(&mut self, req: &Request) -> RandomOutcome<'_> {
+        // Rate limit before accounting (single-loop semantics: limited
+        // GETs are not counted; anonymous GETs are never limited).
+        if let Some(limiter) = &mut self.rate_limiter {
+            if let Some(uuid) = req.query_param("uuid") {
+                if !limiter.allow(uuid) {
+                    return RandomOutcome::Limited;
+                }
+            }
+        }
         self.sync_epoch();
         self.shared.gets.fetch_add(1, Ordering::Relaxed);
         self.slot().gets.fetch_add(1, Ordering::Relaxed);
         self.epoch_gets += 1;
         if let Some(u) = req.query_param("uuid") {
-            *self.per_uuid_delta.entry(u.to_string()).or_insert(0) += 1;
+            bump_count(&mut self.per_uuid_delta, u);
         }
-        let len = self.pool.len();
-        if len == 0 {
+        let Some(idx) = self.pool.random_index(&mut self.rng) else {
             // Empty partition: 204, the island continues without an
             // immigrant (same contract as the single server).
-            return Response::new(204);
-        }
-        let idx = dist::range(&mut self.rng, 0, len);
+            return RandomOutcome::Empty;
+        };
+        let len = self.pool.len();
         if self.random_cache.len() != len {
             // Only possible right after recovery (cache starts cold).
             self.random_cache.resize(len, None);
         }
-        if let Some(body) = &self.random_cache[idx] {
+        if self.random_cache[idx].is_none() {
+            let e = &self.pool.entries()[idx];
+            let body = json::to_string(&Json::obj(vec![
+                ("chromosome", e.chromosome.to_string01().into()),
+                ("fitness", e.fitness.into()),
+                ("experiment", self.local_experiment.into()),
+            ]))
+            .into_bytes();
+            self.random_cache[idx] = Some(body);
+        } else {
             self.slot().cache_hits.fetch_add(1, Ordering::Relaxed);
-            let mut resp = Response::new(200);
-            resp.body = body.clone();
-            resp.set_header("content-type", "application/json");
-            return resp;
         }
-        let e = &self.pool.entries()[idx];
-        let body = json::to_string(&Json::obj(vec![
-            ("chromosome", e.chromosome.as_str().into()),
-            ("fitness", e.fitness.into()),
-            ("experiment", self.local_experiment.into()),
-        ]))
-        .into_bytes();
-        self.random_cache[idx] = Some(body.clone());
-        let mut resp = Response::new(200);
-        resp.body = body;
-        resp.set_header("content-type", "application/json");
-        resp
+        RandomOutcome::Body(
+            self.random_cache[idx].as_deref().expect("just filled"),
+        )
     }
 
     fn state(&self) -> Response {
@@ -975,6 +1145,56 @@ impl Service for ShardService {
             _ => Response::not_found(),
         }
     }
+
+    /// The event-loop fast path: the two hot routes render straight into
+    /// the connection's warm output buffer — a cached GET and a
+    /// steady-state single PUT complete with zero allocations. Everything
+    /// else (and any body the SAX extractor can't borrow) goes through
+    /// [`ShardService::handle`], which shares the same state and caches.
+    fn handle_into(
+        &mut self,
+        req: &Request,
+        keep_alive: bool,
+        out: &mut Vec<u8>,
+    ) {
+        if req.method == Method::Get && req.path == "/experiment/random" {
+            return self.get_random_into(req, keep_alive, out);
+        }
+        if req.method == Method::Put
+            && req.path == "/experiment/chromosome"
+            // Only single objects take the fast path; batches/junk are
+            // declined on the first byte and parse once, in handle().
+            // (A `{`-body with escapes is scanned here and again there —
+            // a rare, bounded double scan.)
+            && first_json_byte(&req.body) == Some(b'{')
+        {
+            if let Ok(text) = std::str::from_utf8(&req.body) {
+                if let Ok(PutBody::Single(item)) = json::parse_put_body(text)
+                {
+                    match validate_put_ref(&item, self.n_bits)
+                        .map(|fields| self.apply_put(fields))
+                    {
+                        Ok(PutOutcome::Accepted) => write_json_200(
+                            out,
+                            &self.put_ok_body,
+                            keep_alive,
+                        ),
+                        Ok(PutOutcome::Solved(payload)) => {
+                            Response::new(201)
+                                .with_json(&payload)
+                                .write_to(out, keep_alive)
+                        }
+                        Ok(PutOutcome::Rejected(status, payload))
+                        | Err((status, payload)) => Response::new(status)
+                            .with_json(&payload)
+                            .write_to(out, keep_alive),
+                    }
+                    return;
+                }
+            }
+        }
+        self.handle(req).write_to(out, keep_alive);
+    }
 }
 
 /// One shard thread: its own epoll + waker + [`ConnDriver`] + partition,
@@ -999,12 +1219,13 @@ fn shard_loop(
 
     while !shared.shutdown.load(Ordering::Acquire) {
         epoll.wait(Some(cfg.http.tick), &mut events)?;
-        let snapshot: Vec<Event> = events.clone();
-        for ev in snapshot {
+        // Iterate in place: nothing below touches `events`, and the old
+        // defensive clone allocated once per loop tick.
+        for ev in &events {
             if ev.token == TOKEN_WAKER {
                 waker.drain();
             } else {
-                driver.handle_event(&epoll, &ev, &mut service, &stats);
+                driver.handle_event(&epoll, ev, &mut service, &stats);
             }
         }
         // Adopt connections the acceptor handed off (level-triggered
@@ -1158,6 +1379,8 @@ impl ShardedPoolServer {
                 migration_interval: config.migration_interval,
                 migration_k: config.migration_k,
                 persist: config.base.persist.clone(),
+                verify_fitness: config.base.verify_fitness,
+                rate_limit: config.base.rate_limit,
                 recovered: Some(std::mem::replace(
                     &mut recovered[id],
                     RecoveredShard::fresh(),
@@ -1207,8 +1430,9 @@ pub enum PoolBackend {
 
 impl PoolBackend {
     /// Spawn the backend selected by `config.shards`. With one shard the
-    /// single-loop [`PoolServer`] runs (full feature set: event log,
-    /// verification, rate limiting); otherwise the sharded cluster.
+    /// single-loop [`PoolServer`] runs; otherwise the sharded cluster.
+    /// Verification and rate limiting work on both (the only remaining
+    /// single-loop exclusive is the audit event log).
     pub fn spawn(addr: &str, config: ClusterConfig) -> io::Result<PoolBackend> {
         if config.shards > 1 {
             Ok(PoolBackend::Sharded(ShardedPoolServer::spawn(addr, config)?))
@@ -1845,6 +2069,67 @@ mod tests {
             handle.stop();
         }
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn sharded_fitness_verification_rejects_and_bans() {
+        // Parity satellite: the sharded path re-evaluates claimed trap
+        // fitness server-side (409 on mismatch, 403 after three strikes)
+        // — previously single-loop only.
+        let mut config = fast_config(2, 1e18);
+        config.base.n_bits = 160; // Trap::paper() chromosome width
+        config.base.verify_fitness = true;
+        let handle =
+            ShardedPoolServer::spawn("127.0.0.1:0", config).unwrap();
+        let mut c = HttpClient::connect(handle.addr).unwrap();
+        let ones = "1".repeat(160);
+        let zeros = "0".repeat(160);
+        // Honest claims accepted (trap-40: all-ones = 80, all-zeros = 40).
+        assert_eq!(c.send(&put_req(&ones, 80.0, "good")).unwrap().status, 200);
+        assert_eq!(c.send(&put_req(&zeros, 40.0, "good")).unwrap().status, 200);
+        // The crafted-request attack: claimed optimum for a junk string.
+        assert_eq!(c.send(&put_req(&zeros, 80.0, "evil")).unwrap().status, 409);
+        assert_eq!(c.send(&put_req(&zeros, 80.0, "evil")).unwrap().status, 409);
+        assert_eq!(c.send(&put_req(&zeros, 80.0, "evil")).unwrap().status, 409);
+        // Three strikes -> banned.
+        assert_eq!(c.send(&put_req(&zeros, 40.0, "evil")).unwrap().status, 403);
+        // Honest client unaffected, and no fake entry reached the pool.
+        assert_eq!(c.send(&put_req(&ones, 80.0, "good")).unwrap().status, 200);
+        let state = c
+            .send(&Request::new(Method::Get, "/experiment/state"))
+            .unwrap()
+            .json_body()
+            .unwrap();
+        assert_eq!(state.get_u64("puts"), Some(3));
+        handle.stop();
+    }
+
+    #[test]
+    fn sharded_rate_limiting_yields_429() {
+        // Parity satellite: per-UUID token buckets in the sharded path.
+        // One client connection is pinned to one shard, so its bucket
+        // behaves exactly like the single-loop limiter.
+        let mut config = fast_config(2, 1e18);
+        config.base.rate_limit = Some((1.0, 2.0));
+        let handle =
+            ShardedPoolServer::spawn("127.0.0.1:0", config).unwrap();
+        let mut c = HttpClient::connect(handle.addr).unwrap();
+        assert_eq!(c.send(&put_req("01010101", 1.0, "flood")).unwrap().status, 200);
+        assert_eq!(c.send(&put_req("01010111", 2.0, "flood")).unwrap().status, 200);
+        assert_eq!(c.send(&put_req("01110111", 3.0, "flood")).unwrap().status, 429);
+        // A distinct identity has its own bucket.
+        assert_eq!(c.send(&put_req("01111111", 4.0, "calm")).unwrap().status, 200);
+        // uuid-tagged GETs consume the same bucket...
+        let resp = c
+            .send(&Request::new(Method::Get, "/experiment/random?uuid=flood"))
+            .unwrap();
+        assert_eq!(resp.status, 429);
+        // ...anonymous GETs are never limited.
+        let resp = c
+            .send(&Request::new(Method::Get, "/experiment/random"))
+            .unwrap();
+        assert_ne!(resp.status, 429);
+        handle.stop();
     }
 
     #[test]

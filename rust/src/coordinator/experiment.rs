@@ -7,6 +7,18 @@ use std::time::{Duration, Instant};
 
 use crate::json::Json;
 
+/// Increment `map[key]`, allocating the owned key only on first sight.
+/// `HashMap::entry(key.to_string())` clones the key on *every* call; the
+/// steady-state request path (same islands hitting the server for hours)
+/// must not pay an allocation per request for accounting.
+pub(crate) fn bump_count(map: &mut HashMap<String, u64>, key: &str) {
+    if let Some(count) = map.get_mut(key) {
+        *count += 1;
+    } else {
+        map.insert(key.to_string(), 1);
+    }
+}
+
 /// A completed experiment's record.
 #[derive(Debug, Clone)]
 pub struct ExperimentLog {
@@ -134,7 +146,7 @@ impl ExperimentManager {
     /// caller then calls [`ExperimentManager::finish`]).
     pub fn record_put(&mut self, uuid: &str, fitness: f64) -> bool {
         self.puts += 1;
-        *self.per_uuid.entry(uuid.to_string()).or_insert(0) += 1;
+        bump_count(&mut self.per_uuid, uuid);
         if fitness > self.best_fitness {
             self.best_fitness = fitness;
         }
@@ -144,7 +156,7 @@ impl ExperimentManager {
     pub fn record_get(&mut self, uuid: Option<&str>) {
         self.gets += 1;
         if let Some(u) = uuid {
-            *self.per_uuid.entry(u.to_string()).or_insert(0) += 1;
+            bump_count(&mut self.per_uuid, u);
         }
     }
 

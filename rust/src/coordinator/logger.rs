@@ -45,8 +45,24 @@ impl EventLog {
     }
 
     /// Log one event with a relative timestamp.
-    pub fn log(&mut self, kind: &str, mut fields: Json) {
+    pub fn log(&mut self, kind: &str, fields: Json) {
         self.events += 1;
+        self.write(kind, fields);
+    }
+
+    /// Log one event, building its fields lazily: the request hot path
+    /// skips the JSON construction entirely when logging is disabled
+    /// (benches, the default server) while the event counter still
+    /// advances.
+    pub fn log_with(&mut self, kind: &str, fields: impl FnOnce() -> Json) {
+        self.events += 1;
+        if self.out.is_some() {
+            let fields = fields();
+            self.write(kind, fields);
+        }
+    }
+
+    fn write(&mut self, kind: &str, mut fields: Json) {
         if let Some(out) = &mut self.out {
             if !matches!(fields, Json::Obj(_)) {
                 fields = Json::obj(vec![("value", fields)]);

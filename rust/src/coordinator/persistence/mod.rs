@@ -268,6 +268,12 @@ impl ShardPersistence {
 
     /// Record one accepted PUT. `evict` is the pool slot the insert
     /// replaced (None = appended), making replay byte-exact.
+    ///
+    /// v2 record: the chromosome travels in the packed-hex form
+    /// (`packed` + `n_bits`, 4x smaller than the `"0101..."` string and
+    /// convertible without re-validation). Replay still accepts the PR 2
+    /// v1 form (`chromosome` string) — see
+    /// [`super::persistence::snapshot::entry_from_json`].
     pub fn record_put(
         &mut self,
         experiment: u64,
@@ -276,8 +282,10 @@ impl ShardPersistence {
     ) {
         self.append(Json::obj(vec![
             ("t", "put".into()),
+            ("v", 2u64.into()),
             ("experiment", experiment.into()),
-            ("chromosome", entry.chromosome.as_str().into()),
+            ("packed", entry.chromosome.to_hex().into()),
+            ("n_bits", entry.chromosome.n_bits().into()),
             ("fitness", entry.fitness.into()),
             ("uuid", entry.uuid.as_str().into()),
             (
@@ -288,7 +296,8 @@ impl ShardPersistence {
     }
 
     /// Record the entries of a gossip batch that were actually merged
-    /// (post-dedup), with their eviction slots.
+    /// (post-dedup), with their eviction slots (v2 packed form, like
+    /// [`ShardPersistence::record_put`]).
     pub fn record_migration(
         &mut self,
         experiment: u64,
@@ -301,7 +310,8 @@ impl ShardPersistence {
             .iter()
             .map(|(e, evict)| {
                 Json::obj(vec![
-                    ("chromosome", e.chromosome.as_str().into()),
+                    ("packed", e.chromosome.to_hex().into()),
+                    ("n_bits", e.chromosome.n_bits().into()),
                     ("fitness", e.fitness.into()),
                     ("uuid", e.uuid.as_str().into()),
                     (
@@ -315,6 +325,7 @@ impl ShardPersistence {
             .collect();
         self.append(Json::obj(vec![
             ("t", "migration".into()),
+            ("v", 2u64.into()),
             ("experiment", experiment.into()),
             ("entries", Json::Arr(items)),
         ]));
@@ -471,7 +482,7 @@ mod tests {
         let sdir = shard_dir(&dir, 0);
         let cfg = PersistConfig { snapshot_every: 3, ..PersistConfig::new(&dir) };
         let entry = |c: &str, f: f64| PoolEntry {
-            chromosome: c.into(),
+            chromosome: crate::problems::PackedBits::from_str01(c).unwrap(),
             fitness: f,
             uuid: "u".into(),
         };
@@ -511,7 +522,10 @@ mod tests {
             let fresh = RecoveredShard::fresh();
             let mut p = ShardPersistence::open(&sdir, &cfg, &fresh).unwrap();
             let e = PoolEntry {
-                chromosome: "11111111".into(),
+                chromosome: crate::problems::PackedBits::from_str01(
+                    "11111111",
+                )
+                .unwrap(),
                 fitness: 8.0,
                 uuid: "w".into(),
             };

@@ -231,7 +231,8 @@ mod tests {
         snap.puts = 2;
         snap.best_fitness = 3.0;
         snap.entries.push(PoolEntry {
-            chromosome: "0101".into(),
+            chromosome: crate::problems::PackedBits::from_str01("0101")
+                .unwrap(),
             fitness: 3.0,
             uuid: "a".into(),
         });
@@ -376,6 +377,103 @@ mod tests {
         let r = recover_shard(&dir).unwrap();
         assert!(!r.had_history());
         assert_eq!(r.state.experiment, 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn packed_wire_boundary_round_trip_property() {
+        // String ⇄ packed ⇄ WAL record ⇄ replay: a random wire-format
+        // chromosome survives the whole durable pipeline bit-for-bit.
+        use crate::coordinator::persistence::{
+            PersistConfig, ShardPersistence,
+        };
+        use crate::problems::PackedBits;
+        use crate::rng::{Rng64, SplitMix64};
+
+        let dir = tmpdir("wire-prop");
+        let cfg = PersistConfig::new(&dir);
+        let mut rng = SplitMix64::new(0xC0FFEE);
+        let mut originals: Vec<(String, f64)> = Vec::new();
+        {
+            let fresh = RecoveredShard::fresh();
+            let mut p = ShardPersistence::open(&dir, &cfg, &fresh).unwrap();
+            for i in 0..40u64 {
+                let n = 1 + (rng.next_u64() % 200) as usize;
+                let wire: String = (0..n)
+                    .map(|_| if rng.next_u64() % 2 == 0 { '0' } else { '1' })
+                    .collect();
+                let fitness = (rng.next_u64() % 1000) as f64 / 8.0;
+                let packed = PackedBits::from_str01(&wire).unwrap();
+                // packed ⇄ hex is lossless...
+                assert_eq!(
+                    PackedBits::from_hex(&packed.to_hex(), packed.n_bits())
+                        .as_ref(),
+                    Some(&packed)
+                );
+                let entry = PoolEntry {
+                    chromosome: packed,
+                    fitness,
+                    uuid: format!("u{i}"),
+                };
+                p.record_put(0, &entry, None);
+                originals.push((wire, fitness));
+            }
+        }
+        // ...and replay reproduces the exact wire strings.
+        let r = recover_shard(&dir).unwrap();
+        assert_eq!(r.state.entries.len(), originals.len());
+        for (entry, (wire, fitness)) in
+            r.state.entries.iter().zip(&originals)
+        {
+            assert_eq!(entry.chromosome.to_string01(), *wire);
+            assert_eq!(entry.chromosome, wire.as_str());
+            assert_eq!(entry.fitness, *fitness);
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn replay_pr2_era_v1_wal_fixture() {
+        // Backward compatibility: a WAL whose records carry the PR 2
+        // string-chromosome form (no `packed`/`n_bits`/`v` members) must
+        // replay into the same state a PR 2 server would have resumed —
+        // the format bump is additive, not breaking. `put_rec` above
+        // writes exactly that v1 shape; this fixture goes further and
+        // embeds raw v1 lines byte-for-byte (CRC frames included) as a
+        // PR 2 writer produced them.
+        let dir = tmpdir("v1-fixture");
+        let fixture = concat!(
+            "{\"crc\":\"0fc80f0e\",\"rec\":{\"t\":\"put\",\"experiment\":0,",
+            "\"chromosome\":\"01011010\",\"fitness\":2.5,\"uuid\":\"a\",",
+            "\"evict\":null,\"seq\":1}}\n",
+            "{\"crc\":\"4cb6f52f\",\"rec\":{\"t\":\"put\",\"experiment\":0,",
+            "\"chromosome\":\"11110000\",\"fitness\":4,\"uuid\":\"b\",",
+            "\"evict\":0,\"seq\":2}}\n",
+        );
+        // The fixture must itself be frame-valid (guards against typos in
+        // the embedded CRCs rather than against the code under test).
+        for line in fixture.lines() {
+            assert!(
+                crate::coordinator::persistence::unframe(line).is_some(),
+                "fixture line failed its own CRC: {line}"
+            );
+        }
+        std::fs::write(
+            dir.join(crate::coordinator::persistence::WAL_FILE),
+            fixture,
+        )
+        .unwrap();
+        let r = recover_shard(&dir).unwrap();
+        assert_eq!(r.dropped_records, 0);
+        assert_eq!(r.wal_seq, 2);
+        assert_eq!(r.state.puts, 2);
+        // Eviction replayed exactly: slot 0 was overwritten by seq 2.
+        assert_eq!(r.state.entries.len(), 1);
+        assert_eq!(r.state.entries[0].chromosome, "11110000");
+        assert_eq!(r.state.entries[0].fitness, 4.0);
+        assert_eq!(r.state.best_fitness, 4.0);
+        assert_eq!(r.state.per_uuid["a"], 1);
+        assert_eq!(r.state.per_uuid["b"], 1);
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -18,6 +18,7 @@ use super::wal::{frame, unframe};
 use crate::coordinator::experiment::ExperimentLog;
 use crate::coordinator::pool::PoolEntry;
 use crate::json::Json;
+use crate::problems::PackedBits;
 
 pub const SNAPSHOT_FILE: &str = "snapshot.jsonl";
 const SNAPSHOT_TMP: &str = "snapshot.jsonl.tmp";
@@ -58,17 +59,28 @@ impl ShardState {
 }
 
 fn entry_to_json(e: &PoolEntry) -> Json {
+    // v2 record: packed-hex chromosome (4x smaller than the "0101..."
+    // wire string, no re-validation on replay).
     Json::obj(vec![
         ("t", "entry".into()),
-        ("chromosome", e.chromosome.as_str().into()),
+        ("v", 2u64.into()),
+        ("packed", e.chromosome.to_hex().into()),
+        ("n_bits", e.chromosome.n_bits().into()),
         ("fitness", e.fitness.into()),
         ("uuid", e.uuid.as_str().into()),
     ])
 }
 
+/// Decode one durable pool-entry record: the v2 packed form
+/// (`packed` + `n_bits`) or the PR 2 v1 form (`chromosome` bit-string).
+/// `None` for malformed/corrupt records of either version.
 pub(crate) fn entry_from_json(v: &Json) -> Option<PoolEntry> {
+    let chromosome = match (v.get_str("packed"), v.get_u64("n_bits")) {
+        (Some(hex), Some(n)) => PackedBits::from_hex(hex, n as usize)?,
+        _ => PackedBits::from_str01(v.get_str("chromosome")?)?,
+    };
     Some(PoolEntry {
-        chromosome: v.get_str("chromosome")?.to_string(),
+        chromosome,
         fitness: v.get_f64("fitness")?,
         uuid: v.get_str("uuid").unwrap_or("anonymous").to_string(),
     })
@@ -243,12 +255,12 @@ mod tests {
             }],
             entries: vec![
                 PoolEntry {
-                    chromosome: "0101".into(),
+                    chromosome: PackedBits::from_str01("0101").unwrap(),
                     fitness: 2.0,
                     uuid: "a".into(),
                 },
                 PoolEntry {
-                    chromosome: "0111".into(),
+                    chromosome: PackedBits::from_str01("0111").unwrap(),
                     fitness: 3.0,
                     uuid: "b".into(),
                 },
@@ -307,10 +319,78 @@ mod tests {
         let dir = tmpdir("corrupt");
         write_snapshot(&dir, &sample_state()).unwrap();
         let path = dir.join(SNAPSHOT_FILE);
+        // Byte-level damage: the record CRC fails.
+        let text = fs::read_to_string(&path).unwrap();
+        fs::write(&path, text.replace("fitness", "fitnezz")).unwrap();
+        assert!(load_snapshot(&dir).is_err());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn snapshot_with_malformed_packed_entry_is_an_error() {
+        use super::super::wal::frame;
+        let dir = tmpdir("badpacked");
+        let mut state = sample_state();
+        state.entries.clear();
+        write_snapshot(&dir, &state).unwrap();
+        // Append a well-framed entry whose packed hex is non-canonical
+        // (padding bits set): entry_from_json must refuse it.
+        let bad = Json::obj(vec![
+            ("t", "entry".into()),
+            ("v", 2u64.into()),
+            ("packed", "00000000000000ff".into()),
+            ("n_bits", 4u64.into()),
+            ("fitness", 1.0.into()),
+            ("uuid", "x".into()),
+        ]);
+        let path = dir.join(SNAPSHOT_FILE);
         let mut text = fs::read_to_string(&path).unwrap();
-        text = text.replace("0101", "0x01");
+        text.push_str(&frame(&bad));
+        text.push('\n');
         fs::write(&path, text).unwrap();
         assert!(load_snapshot(&dir).is_err());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn v1_snapshot_entries_still_load() {
+        use super::super::wal::frame;
+        // A PR 2-era snapshot: meta line + string-chromosome entries.
+        let dir = tmpdir("v1");
+        let meta = Json::obj(vec![
+            ("t", "meta".into()),
+            ("experiment", 1u64.into()),
+            ("wal_seq", 2u64.into()),
+            ("puts", 2u64.into()),
+            ("gets", 0u64.into()),
+            ("best_fitness", 3.0.into()),
+            ("accepted", 2u64.into()),
+            ("per_uuid", Json::Obj(vec![("a".into(), 2u64.into())])),
+            ("completed", Json::Arr(vec![])),
+        ]);
+        let e1 = Json::obj(vec![
+            ("t", "entry".into()),
+            ("chromosome", "0101".into()),
+            ("fitness", 2.0.into()),
+            ("uuid", "a".into()),
+        ]);
+        let e2 = Json::obj(vec![
+            ("t", "entry".into()),
+            ("chromosome", "0111".into()),
+            ("fitness", 3.0.into()),
+            ("uuid", "a".into()),
+        ]);
+        fs::create_dir_all(&dir).unwrap();
+        fs::write(
+            dir.join(SNAPSHOT_FILE),
+            format!("{}\n{}\n{}\n", frame(&meta), frame(&e1), frame(&e2)),
+        )
+        .unwrap();
+        let loaded = load_snapshot(&dir).unwrap();
+        assert_eq!(loaded.experiment, 1);
+        assert_eq!(loaded.entries.len(), 2);
+        assert_eq!(loaded.entries[0].chromosome, "0101");
+        assert_eq!(loaded.entries[1].chromosome, "0111");
         let _ = fs::remove_dir_all(&dir);
     }
 }

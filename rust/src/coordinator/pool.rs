@@ -1,13 +1,23 @@
 //! The shared chromosome pool ("the shared pool implemented as an array",
 //! paper section 2, sequence step 1).
+//!
+//! Entries store their chromosome **bit-packed**
+//! ([`crate::problems::PackedBits`]: 64 loci per u64 word) rather than as
+//! the one-byte-per-bit `"0101..."` wire string. Conversion happens at
+//! the boundaries only: PUT validation packs the incoming wire string
+//! once, GET responses are rendered from the pack into a per-slot cache,
+//! and WAL/snapshot records carry a fixed-width hex form. In between —
+//! eviction, gossip, dedup, snapshots — entries move as a few words, and
+//! migration dedup is word compares instead of string compares.
 
+use crate::problems::PackedBits;
 use crate::rng::{dist, Rng64};
 
 /// One pooled chromosome.
 #[derive(Debug, Clone, PartialEq)]
 pub struct PoolEntry {
-    /// `"0101..."` wire representation.
-    pub chromosome: String,
+    /// Bit-packed chromosome; `"0101..."` only at the wire boundary.
+    pub chromosome: PackedBits,
     pub fitness: f64,
     /// Island UUID that contributed it.
     pub uuid: String,
@@ -76,10 +86,21 @@ impl ChromosomePool {
 
     /// A uniformly random member (the GET route), if any.
     pub fn random<R: Rng64 + ?Sized>(&self, rng: &mut R) -> Option<&PoolEntry> {
+        self.random_index(rng).map(|i| &self.entries[i])
+    }
+
+    /// The *slot index* of a uniformly random member. The GET hot path
+    /// uses this instead of [`ChromosomePool::random`]-then-clone: the
+    /// index addresses both the entry and its slot-aligned render cache,
+    /// so serving a GET borrows in place and copies nothing.
+    pub fn random_index<R: Rng64 + ?Sized>(
+        &self,
+        rng: &mut R,
+    ) -> Option<usize> {
         if self.entries.is_empty() {
             None
         } else {
-            Some(&self.entries[dist::range(rng, 0, self.entries.len())])
+            Some(dist::range(rng, 0, self.entries.len()))
         }
     }
 
@@ -112,7 +133,7 @@ mod tests {
 
     fn entry(tag: u64, fitness: f64) -> PoolEntry {
         PoolEntry {
-            chromosome: format!("{tag:b}"),
+            chromosome: PackedBits::from_str01(&format!("{tag:b}")).unwrap(),
             fitness,
             uuid: format!("u{tag}"),
         }

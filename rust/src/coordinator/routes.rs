@@ -19,8 +19,10 @@ use super::persistence::{ShardPersistence, ShardState};
 use super::pool::{ChromosomePool, PoolEntry};
 use super::security::{FitnessVerifier, RateLimiter, SaboteurLog};
 use super::timeseries::TimeSeries;
-use crate::http::{Params, Request, Response, Router};
-use crate::json::Json;
+use crate::http::types::{write_json_200, write_no_content_204};
+use crate::http::{Method, Params, Request, Response, Router};
+use crate::json::{self, Json, PutBody, PutItemRef};
+use crate::problems::PackedBits;
 use crate::rng::Xoshiro256pp;
 
 /// Largest accepted `PUT /experiment/chromosome` batch. Guards the event
@@ -36,43 +38,79 @@ pub(crate) struct BatchOutcome {
     pub solved: bool,
 }
 
+/// One validated PUT element, still borrowing the request body: the
+/// chromosome and uuid slices point into the wire bytes and are only
+/// materialized (packed / owned) once the element is actually applied.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct PutFields<'a> {
+    pub chromosome: &'a str,
+    pub fitness: f64,
+    pub uuid: &'a str,
+}
+
+pub(crate) fn put_fail(status: u16, msg: &str) -> (u16, Json) {
+    (status, Json::obj(vec![("error", msg.into())]))
+}
+
 /// Shared PUT-element validation (single-loop router and sharded
 /// coordinator must never drift): chromosome presence and bit-string
 /// shape, finite fitness (a NaN/Inf must never reach a pool or the
 /// global best CAS — threat model, section 1), defaulted uuid. `Err`
-/// carries the per-item `(status, payload)` rejection.
-pub(crate) fn parse_put_item(
-    body: &Json,
+/// carries the per-item `(status, payload)` rejection. The checks run in
+/// a fixed order so both body representations reject identically.
+fn validate_put_parts<'a>(
+    chromosome: Option<&'a str>,
+    fitness: Option<f64>,
+    uuid: Option<&'a str>,
     n_bits: usize,
-) -> Result<(String, f64, String), (u16, Json)> {
-    fn fail(status: u16, msg: &str) -> (u16, Json) {
-        (status, Json::obj(vec![("error", msg.into())]))
-    }
-    let chromosome = match body.get_str("chromosome") {
-        Some(c) => c.to_string(),
-        None => return Err(fail(400, "missing chromosome")),
+) -> Result<PutFields<'a>, (u16, Json)> {
+    let chromosome = match chromosome {
+        Some(c) => c,
+        None => return Err(put_fail(400, "missing chromosome")),
     };
-    let fitness = match body.get_f64("fitness") {
+    let fitness = match fitness {
         Some(f) if f.is_finite() => f,
-        Some(_) => return Err(fail(400, "non-finite fitness")),
-        None => return Err(fail(400, "missing/invalid fitness")),
+        Some(_) => return Err(put_fail(400, "non-finite fitness")),
+        None => return Err(put_fail(400, "missing/invalid fitness")),
     };
-    let uuid = body.get_str("uuid").unwrap_or("anonymous").to_string();
+    let uuid = uuid.unwrap_or("anonymous");
     if chromosome.len() != n_bits
         || !chromosome.bytes().all(|b| b == b'0' || b == b'1')
     {
-        return Err(fail(400, "malformed chromosome"));
+        return Err(put_fail(400, "malformed chromosome"));
     }
-    Ok((chromosome, fitness, uuid))
+    Ok(PutFields { chromosome, fitness, uuid })
+}
+
+/// Validate one element of an owned-tree body (the escape/fallback path).
+pub(crate) fn validate_put_json<'a>(
+    body: &'a Json,
+    n_bits: usize,
+) -> Result<PutFields<'a>, (u16, Json)> {
+    validate_put_parts(
+        body.get_str("chromosome"),
+        body.get_f64("fitness"),
+        body.get_str("uuid"),
+        n_bits,
+    )
+}
+
+/// Validate one SAX-extracted element (the zero-copy hot path).
+pub(crate) fn validate_put_ref<'a>(
+    item: &PutItemRef<'a>,
+    n_bits: usize,
+) -> Result<PutFields<'a>, (u16, Json)> {
+    validate_put_parts(item.chromosome, item.fitness, item.uuid, n_bits)
 }
 
 /// The batched-PUT protocol shared by the single-loop router and the
 /// sharded coordinator: size guards, per-item dispatch through `put_one`,
-/// per-item `status` stamping. `Err` carries the guard-rejection
-/// response.
-pub(crate) fn run_put_batch(
-    items: &[Json],
-    mut put_one: impl FnMut(&Json) -> (u16, Json),
+/// per-item `status` stamping. Generic over the element representation
+/// (owned `Json` or borrowed [`PutItemRef`]). `Err` carries the
+/// guard-rejection response.
+pub(crate) fn run_put_batch<T>(
+    items: &[T],
+    mut put_one: impl FnMut(&T) -> (u16, Json),
 ) -> Result<BatchOutcome, Response> {
     if items.is_empty() {
         return Err(Response::bad_request("empty batch"));
@@ -120,6 +158,14 @@ pub struct PoolState {
     /// accepted PUT and epoch transition, snapshot periodically. `None`
     /// runs fully in-memory (the paper's original semantics).
     pub persist: Option<ShardPersistence>,
+    /// Pre-rendered `GET /experiment/random` bodies, slot-aligned with
+    /// the pool: a slot is invalidated when its entry is replaced, the
+    /// whole cache drops on clear/epoch. A cache hit serves with zero
+    /// allocations (head + body appended to the warm connection buffer).
+    pub(crate) random_cache: Vec<Option<Vec<u8>>>,
+    /// Pre-rendered `{"solved":false,"experiment":N}` — the steady-state
+    /// single-PUT response body, rebuilt on epoch change.
+    pub(crate) put_ok_body: Vec<u8>,
 }
 
 impl PoolState {
@@ -130,7 +176,7 @@ impl PoolState {
         log: EventLog,
         seed: u64,
     ) -> PoolState {
-        PoolState {
+        let mut state = PoolState {
             pool: ChromosomePool::new(capacity),
             experiments: ExperimentManager::new(target_fitness, n_bits),
             log,
@@ -140,7 +186,39 @@ impl PoolState {
             rate_limiter: None,
             series: TimeSeries::new(512),
             persist: None,
+            random_cache: Vec::new(),
+            put_ok_body: Vec::new(),
+        };
+        state.rebuild_put_ok();
+        state
+    }
+
+    /// Re-render the cached steady-state PUT response for the current
+    /// experiment epoch.
+    fn rebuild_put_ok(&mut self) {
+        self.put_ok_body = json::to_string(&Json::obj(vec![
+            ("solved", false.into()),
+            ("experiment", self.experiments.current_id().into()),
+        ]))
+        .into_bytes();
+    }
+
+    /// Keep the render cache slot-aligned after a pool insert.
+    fn note_pool_insert(&mut self, evict: Option<usize>) {
+        match evict {
+            Some(i) if i < self.random_cache.len() => {
+                self.random_cache[i] = None
+            }
+            Some(_) => {}
+            None => self.random_cache.push(None),
         }
+    }
+
+    /// Invalidate everything derived from the pool + epoch (solution,
+    /// manual reset, restore).
+    fn drop_render_caches(&mut self) {
+        self.random_cache.clear();
+        self.rebuild_put_ok();
     }
 
     /// Adopt recovered state (snapshot + WAL replay) — the startup path of
@@ -155,6 +233,9 @@ impl PoolState {
             state.per_uuid,
             state.completed,
         );
+        // Render caches start cold: the GET path resizes the slot cache
+        // lazily and put_ok must carry the recovered epoch.
+        self.drop_render_caches();
     }
 
     /// The durable view of the current state (what a snapshot captures).
@@ -365,6 +446,7 @@ pub fn build_router(state: Shared) -> Router {
                 let log = s.experiments.finish(None, None);
                 s.pool.clear();
                 s.series.clear();
+                s.drop_render_caches();
                 if let Some(p) = &mut s.persist {
                     p.record_epoch(log.id, log.id + 1, Some(&log));
                 }
@@ -377,19 +459,133 @@ pub fn build_router(state: Shared) -> Router {
         );
     }
 
+    // The event-loop fast path (Service::handle_into only): serve the two
+    // hot routes straight into the connection's warm output buffer — a
+    // cached GET and a steady-state single PUT complete with zero
+    // allocations. Anything else, and any body the SAX extractor cannot
+    // borrow (escapes, malformed JSON), declines into normal dispatch,
+    // whose handlers share the same state/caches so behavior is
+    // identical.
+    {
+        let state = state.clone();
+        router.set_fast(move |req, keep_alive, out| {
+            match (req.method, req.path.as_str()) {
+                (Method::Get, "/experiment/random") => {
+                    let mut s = state.borrow_mut();
+                    match random_body(&mut s, req) {
+                        RandomOutcome::Limited => Response::new(429)
+                            .with_text("rate limited")
+                            .write_to(out, keep_alive),
+                        RandomOutcome::Empty => {
+                            write_no_content_204(out, keep_alive)
+                        }
+                        RandomOutcome::Body(body) => {
+                            write_json_200(out, body, keep_alive)
+                        }
+                    }
+                    true
+                }
+                (Method::Put, "/experiment/chromosome") => {
+                    // Only single objects take the fast path; batches and
+                    // junk are declined on the first byte so they parse
+                    // once, in dispatch. (A `{`-body the extractor can't
+                    // borrow — escapes/malformed — is scanned here and
+                    // again by dispatch: a rare, bounded double scan.)
+                    if first_json_byte(&req.body) != Some(b'{') {
+                        return false;
+                    }
+                    let Ok(text) = std::str::from_utf8(&req.body) else {
+                        return false;
+                    };
+                    let Ok(PutBody::Single(item)) =
+                        json::parse_put_body(text)
+                    else {
+                        return false; // escapes/malformed: dispatch path
+                    };
+                    let mut s = state.borrow_mut();
+                    let n_bits = s.experiments.n_bits;
+                    match validate_put_ref(&item, n_bits)
+                        .map(|fields| apply_put(&mut s, fields))
+                    {
+                        Ok(PutOutcome::Accepted) => {
+                            write_json_200(out, &s.put_ok_body, keep_alive)
+                        }
+                        Ok(PutOutcome::Solved(payload)) => {
+                            Response::new(201)
+                                .with_json(&payload)
+                                .write_to(out, keep_alive)
+                        }
+                        Ok(PutOutcome::Rejected(status, payload))
+                        | Err((status, payload)) => Response::new(status)
+                            .with_json(&payload)
+                            .write_to(out, keep_alive),
+                    }
+                    true
+                }
+                _ => false,
+            }
+        });
+    }
+
     router
 }
 
 fn put_chromosome(state: &Shared, req: &Request) -> Response {
+    // Zero-copy path first: SAX-extract the two known request shapes
+    // straight from the body bytes (no owned JSON tree). Escapes and
+    // malformed documents fall through to the owned parser, which
+    // reproduces the legacy errors exactly.
+    if let Ok(text) = std::str::from_utf8(&req.body) {
+        match json::parse_put_body(text) {
+            Ok(PutBody::Single(item)) => {
+                let mut s = state.borrow_mut();
+                let n_bits = s.experiments.n_bits;
+                let (status, payload) = match validate_put_ref(&item, n_bits)
+                {
+                    Ok(fields) => put_one(&mut s, fields),
+                    Err(rejection) => rejection,
+                };
+                return Response::new(status).with_json(&payload);
+            }
+            Ok(PutBody::Batch(items)) => {
+                let mut s = state.borrow_mut();
+                let n_bits = s.experiments.n_bits;
+                let outcome = run_put_batch(&items, |item| {
+                    match validate_put_ref(item, n_bits) {
+                        Ok(fields) => put_one(&mut s, fields),
+                        Err(rejection) => rejection,
+                    }
+                });
+                return match outcome {
+                    Err(resp) => resp,
+                    Ok(out) => Response::json(&Json::obj(vec![
+                        ("batch", items.len().into()),
+                        ("accepted", out.accepted.into()),
+                        ("solved", out.solved.into()),
+                        ("experiment", s.experiments.current_id().into()),
+                        ("results", Json::Arr(out.results)),
+                    ])),
+                };
+            }
+            Err(_) => {} // owned fallback below
+        }
+    }
     let body = match req.json() {
         Ok(b) => b,
         Err(e) => return Response::bad_request(&format!("bad json: {e}")),
     };
     let mut s = state.borrow_mut();
+    let n_bits = s.experiments.n_bits;
     match &body {
         // Batched PUT: one response element per request element, in order.
         Json::Arr(items) => {
-            match run_put_batch(items, |item| put_one(&mut s, item)) {
+            let outcome = run_put_batch(items, |item| {
+                match validate_put_json(item, n_bits) {
+                    Ok(fields) => put_one(&mut s, fields),
+                    Err(rejection) => rejection,
+                }
+            });
+            match outcome {
                 Err(resp) => resp,
                 Ok(out) => Response::json(&Json::obj(vec![
                     ("batch", items.len().into()),
@@ -401,50 +597,79 @@ fn put_chromosome(state: &Shared, req: &Request) -> Response {
             }
         }
         _ => {
-            let (status, payload) = put_one(&mut s, &body);
+            let (status, payload) = match validate_put_json(&body, n_bits) {
+                Ok(fields) => put_one(&mut s, fields),
+                Err(rejection) => rejection,
+            };
             Response::new(status).with_json(&payload)
         }
     }
 }
 
-/// Validate and apply one PUT element against the live state. Returns the
-/// per-item status and JSON payload (shared by the single and batched
-/// forms).
-fn put_one(s: &mut PoolState, body: &Json) -> (u16, Json) {
-    fn fail(status: u16, msg: &str) -> (u16, Json) {
-        (status, Json::obj(vec![("error", msg.into())]))
+/// Outcome of applying one validated PUT element against live state.
+pub(crate) enum PutOutcome {
+    /// Guard rejection: per-item status + error payload.
+    Rejected(u16, Json),
+    /// Accepted without solving — the 200 whose body is the per-epoch
+    /// pre-rendered `put_ok` cache on the fast path.
+    Accepted,
+    /// This PUT closed the experiment: the 201 payload.
+    Solved(Json),
+}
+
+/// Apply one validated PUT element. Returns the per-item status and JSON
+/// payload (the batched form and the Response-building callers).
+fn put_one(s: &mut PoolState, fields: PutFields) -> (u16, Json) {
+    match apply_put(s, fields) {
+        PutOutcome::Rejected(status, payload) => (status, payload),
+        PutOutcome::Accepted => (
+            200,
+            Json::obj(vec![
+                ("solved", false.into()),
+                ("experiment", s.experiments.current_id().into()),
+            ]),
+        ),
+        PutOutcome::Solved(payload) => (201, payload),
     }
-    let (chromosome, fitness, uuid) =
-        match parse_put_item(body, s.experiments.n_bits) {
-            Ok(parts) => parts,
-            Err(rejection) => return rejection,
-        };
+}
+
+/// The core PUT state transition, payload-free on the accept path so the
+/// event-loop fast hook can answer from the pre-rendered cache.
+fn apply_put(s: &mut PoolState, f: PutFields) -> PutOutcome {
+    fn reject(status: u16, msg: &str) -> PutOutcome {
+        let (status, payload) = put_fail(status, msg);
+        PutOutcome::Rejected(status, payload)
+    }
     // Abuse guards (see super::security): bans, rate limits, verification.
-    if s.saboteurs.is_banned(&uuid) {
-        return fail(403, "banned for repeated sabotage");
+    if s.saboteurs.is_banned(f.uuid) {
+        return reject(403, "banned for repeated sabotage");
     }
     if let Some(limiter) = &mut s.rate_limiter {
-        if !limiter.allow(&uuid) {
-            return fail(429, "rate limited");
+        if !limiter.allow(f.uuid) {
+            return reject(429, "rate limited");
         }
     }
     if let Some(verifier) = &s.verifier {
-        if let Err(actual) = verifier.verify(&chromosome, fitness) {
-            let banned = s.saboteurs.record_rejection(&uuid);
-            s.log.log(
-                "rejected",
+        if let Err(actual) = verifier.verify(f.chromosome, f.fitness) {
+            let banned = s.saboteurs.record_rejection(f.uuid);
+            s.log.log_with("rejected", || {
                 Json::obj(vec![
-                    ("uuid", uuid.clone().into()),
-                    ("claimed", fitness.into()),
+                    ("uuid", f.uuid.into()),
+                    ("claimed", f.fitness.into()),
                     ("actual", actual.into()),
                     ("banned", banned.into()),
-                ]),
-            );
-            return fail(409, "fitness mismatch");
+                ])
+            });
+            return reject(409, "fitness mismatch");
         }
     }
+    let Some(packed) = PackedBits::from_str01(f.chromosome) else {
+        // Unreachable after validation; a defensive 400 beats a panic on
+        // the event loop.
+        return reject(400, "malformed chromosome");
+    };
 
-    let solved = s.experiments.record_put(&uuid, fitness);
+    let solved = s.experiments.record_put(f.uuid, f.fitness);
     {
         let best = s.experiments.best_fitness();
         let pool_size = s.pool.len();
@@ -452,77 +677,121 @@ fn put_one(s: &mut PoolState, body: &Json) -> (u16, Json) {
         s.series.record(best, pool_size, puts);
     }
     let entry = PoolEntry {
-        chromosome: chromosome.clone(),
-        fitness,
-        uuid: uuid.clone(),
+        chromosome: packed,
+        fitness: f.fitness,
+        uuid: f.uuid.to_string(),
     };
-    let mut rng = s.rng.clone();
-    let evict = s.pool.put(entry.clone(), &mut rng);
-    s.rng = rng;
+    let evict = s.pool.put(entry, &mut s.rng);
+    // The entry lives in the pool now; read it back by slot instead of
+    // cloning it up front (the pre-change path cloned every accepted
+    // chromosome twice).
+    let slot = evict.unwrap_or(s.pool.len() - 1);
+    s.note_pool_insert(evict);
     let current_id = s.experiments.current_id();
     if let Some(p) = &mut s.persist {
-        p.record_put(current_id, &entry, evict);
+        p.record_put(current_id, &s.pool.entries()[slot], evict);
     }
-    s.log.log(
-        "put",
+    s.log.log_with("put", || {
         Json::obj(vec![
-            ("uuid", uuid.clone().into()),
-            ("fitness", fitness.into()),
+            ("uuid", f.uuid.into()),
+            ("fitness", f.fitness.into()),
             ("experiment", current_id.into()),
-        ]),
-    );
+        ])
+    });
 
-    if solved {
-        // Experiment over: log, reset pool, bump counter (Figure 2 step 6).
-        let log_entry = s
-            .experiments
-            .finish(Some(uuid), Some(chromosome));
-        s.pool.clear();
-        s.series.clear();
-        if let Some(p) = &mut s.persist {
-            p.record_epoch(log_entry.id, log_entry.id + 1, Some(&log_entry));
-        }
-        let payload = log_entry.to_json();
-        s.log.log("solution", payload.clone());
-        s.log.flush();
+    if !solved {
         maybe_snapshot(s);
-        let mut resp = Json::obj(vec![
-            ("solved", true.into()),
-            ("experiment", s.experiments.current_id().into()),
-        ]);
-        resp.set("record", payload);
-        (201, resp)
-    } else {
-        maybe_snapshot(s);
-        (200, Json::obj(vec![
-            ("solved", false.into()),
-            ("experiment", current_id.into()),
-        ]))
+        return PutOutcome::Accepted;
     }
+
+    // Experiment over: log, reset pool, bump counter (Figure 2 step 6).
+    let log_entry = s
+        .experiments
+        .finish(Some(f.uuid.to_string()), Some(f.chromosome.to_string()));
+    s.pool.clear();
+    s.series.clear();
+    s.drop_render_caches();
+    if let Some(p) = &mut s.persist {
+        p.record_epoch(log_entry.id, log_entry.id + 1, Some(&log_entry));
+    }
+    let payload = log_entry.to_json();
+    s.log.log("solution", payload.clone());
+    s.log.flush();
+    maybe_snapshot(s);
+    let mut resp = Json::obj(vec![
+        ("solved", true.into()),
+        ("experiment", s.experiments.current_id().into()),
+    ]);
+    resp.set("record", payload);
+    PutOutcome::Solved(resp)
+}
+
+/// First non-whitespace byte of a request body — a cheap shape probe so
+/// the event-loop fast hooks decline batch (`[`) and junk bodies without
+/// parsing them (dispatch parses once instead).
+pub(crate) fn first_json_byte(body: &[u8]) -> Option<u8> {
+    body.iter()
+        .copied()
+        .find(|b| !matches!(b, b' ' | b'\t' | b'\n' | b'\r'))
+}
+
+/// What one `GET /experiment/random` resolves to; the body borrows the
+/// slot-aligned render cache. Shared with the sharded coordinator so the
+/// two hot paths keep one vocabulary.
+pub(crate) enum RandomOutcome<'a> {
+    Limited,
+    Empty,
+    Body(&'a [u8]),
+}
+
+/// Shared GET logic: rate limit, accounting, slot pick, cache fill. The
+/// Response path and the zero-allocation event-loop fast path both wrap
+/// this, so they cannot drift.
+fn random_body<'a>(s: &'a mut PoolState, req: &Request) -> RandomOutcome<'a> {
+    if let Some(limiter) = &mut s.rate_limiter {
+        if let Some(uuid) = req.query_param("uuid") {
+            if !limiter.allow(uuid) {
+                return RandomOutcome::Limited;
+            }
+        }
+    }
+    s.experiments.record_get(req.query_param("uuid"));
+    let Some(idx) = s.pool.random_index(&mut s.rng) else {
+        // Empty pool: 204 — the island just continues without an
+        // immigrant (paper: islands are autonomous).
+        return RandomOutcome::Empty;
+    };
+    let len = s.pool.len();
+    if s.random_cache.len() != len {
+        // Only possible right after recovery (cache starts cold).
+        s.random_cache.resize(len, None);
+    }
+    if s.random_cache[idx].is_none() {
+        let e = &s.pool.entries()[idx];
+        let body = json::to_string(&Json::obj(vec![
+            ("chromosome", e.chromosome.to_string01().into()),
+            ("fitness", e.fitness.into()),
+            ("experiment", s.experiments.current_id().into()),
+        ]))
+        .into_bytes();
+        s.random_cache[idx] = Some(body);
+    }
+    RandomOutcome::Body(s.random_cache[idx].as_deref().expect("just filled"))
 }
 
 fn get_random(state: &Shared, req: &Request) -> Response {
     let mut s = state.borrow_mut();
-    if let (Some(limiter), Some(uuid)) =
-        (&mut s.rate_limiter, req.query_param("uuid").map(str::to_string))
-    {
-        if !limiter.allow(&uuid) {
-            return Response::new(429).with_text("rate limited");
+    match random_body(&mut s, req) {
+        RandomOutcome::Limited => {
+            Response::new(429).with_text("rate limited")
         }
-    }
-    s.experiments.record_get(req.query_param("uuid"));
-    let mut rng = s.rng.clone();
-    let result = s.pool.random(&mut rng).cloned();
-    s.rng = rng;
-    match result {
-        Some(e) => Response::json(&Json::obj(vec![
-            ("chromosome", e.chromosome.clone().into()),
-            ("fitness", e.fitness.into()),
-            ("experiment", s.experiments.current_id().into()),
-        ])),
-        // Empty pool: 204 — the island just continues without an
-        // immigrant (paper: islands are autonomous).
-        None => Response::new(204),
+        RandomOutcome::Empty => Response::new(204),
+        RandomOutcome::Body(body) => {
+            let mut resp = Response::new(200);
+            resp.body = body.to_vec();
+            resp.set_header("content-type", "application/json");
+            resp
+        }
     }
 }
 
@@ -822,6 +1091,63 @@ mod tests {
         let (_state, mut router) = setup();
         let resp = router.handle(&Request::new(Method::Get, "/nope"));
         assert_eq!(resp.status, 404);
+    }
+
+    #[test]
+    fn fast_hook_matches_dispatch_byte_for_byte() {
+        // Two identically-seeded states: drive one through the event-loop
+        // fast path (handle_into) and one through plain dispatch — every
+        // response must be byte-identical on the wire.
+        let (_s1, mut fast_router) = setup();
+        let (_s2, mut slow_router) = setup();
+        let put_req = Request::new(Method::Put, "/experiment/chromosome")
+            .with_json(&Json::obj(vec![
+                ("chromosome", "01010101".into()),
+                ("fitness", 3.0.into()),
+                ("uuid", "w".into()),
+            ]));
+        let get_req =
+            Request::new(Method::Get, "/experiment/random?uuid=w");
+        // Exercises: empty-pool 204, accepted PUT, cache-miss GET,
+        // cache-hit GET.
+        for req in [&get_req, &put_req, &get_req, &get_req, &put_req] {
+            let mut fast = Vec::new();
+            fast_router.handle_into(req, true, &mut fast);
+            let mut slow = Vec::new();
+            slow_router.handle(req).write_to(&mut slow, true);
+            assert_eq!(
+                String::from_utf8(fast).unwrap(),
+                String::from_utf8(slow).unwrap()
+            );
+        }
+    }
+
+    #[test]
+    fn render_cache_invalidated_on_eviction() {
+        // Capacity-1 pool: the second accepted PUT must evict slot 0 and
+        // drop its cached render — a GET must never serve the old entry.
+        let state = Rc::new(RefCell::new(PoolState::new(
+            1,
+            80.0,
+            8,
+            EventLog::disabled(),
+            7,
+        )));
+        let mut router = build_router(state.clone());
+        put(&mut router, "01010101", 1.0, "a");
+        let r1 = router
+            .handle(&Request::new(Method::Get, "/experiment/random"));
+        assert_eq!(
+            r1.json_body().unwrap().get_str("chromosome"),
+            Some("01010101")
+        );
+        put(&mut router, "11110000", 2.0, "a");
+        let body = router
+            .handle(&Request::new(Method::Get, "/experiment/random"))
+            .json_body()
+            .unwrap();
+        assert_eq!(body.get_str("chromosome"), Some("11110000"));
+        assert_eq!(body.get_f64("fitness"), Some(2.0));
     }
 }
 

@@ -26,6 +26,19 @@ pub use types::{Method, Request, Response};
 /// owns its service exclusively (single thread), so no `Sync` bound.
 pub trait Service {
     fn handle(&mut self, req: &Request) -> Response;
+
+    /// Render the response for `req` directly into a connection's output
+    /// buffer. The event-loop server calls this instead of [`handle`]:
+    /// services with a pre-rendered hot path (the pool coordinators'
+    /// cached `GET /experiment/random`) override it to append head+body
+    /// into the warm buffer without building a `Response` — zero
+    /// allocations in the steady state. The default delegates to
+    /// [`handle`], so closure services and the router work unchanged.
+    ///
+    /// [`handle`]: Service::handle
+    fn handle_into(&mut self, req: &Request, keep_alive: bool, out: &mut Vec<u8>) {
+        self.handle(req).write_to(out, keep_alive);
+    }
 }
 
 impl<F: FnMut(&Request) -> Response> Service for F {

@@ -20,6 +20,10 @@ impl Params {
 
 type Handler = Box<dyn FnMut(&Request, &Params) -> Response>;
 
+/// A pre-dispatch fast path: `(request, keep_alive, out)` and returns
+/// whether it fully rendered the response into `out`.
+type FastHandler = Box<dyn FnMut(&Request, bool, &mut Vec<u8>) -> bool>;
+
 struct Route {
     method: Method,
     segments: Vec<Segment>,
@@ -32,14 +36,32 @@ enum Segment {
 
 /// Method+pattern dispatch table. Routes are matched in registration order;
 /// an unmatched path yields 404, a matched path with the wrong method 405.
+///
+/// An optional *fast hook* ([`Router::set_fast`]) runs before dispatch on
+/// the event-loop path only ([`Service::handle_into`]): it may render hot
+/// responses straight into the connection buffer (no `Response`, no
+/// allocations) and decline everything else, which then dispatches
+/// normally. [`Router::handle`]/[`Router::dispatch`] never consult the
+/// hook, so direct callers always exercise the canonical handlers.
 #[derive(Default)]
 pub struct Router {
     routes: Vec<(Route, Handler)>,
+    fast: Option<FastHandler>,
 }
 
 impl Router {
     pub fn new() -> Router {
-        Router { routes: Vec::new() }
+        Router { routes: Vec::new(), fast: None }
+    }
+
+    /// Install the event-loop fast path. The hook must be behaviorally
+    /// identical to the dispatched handlers for every request it accepts
+    /// (returns true); returning false falls through to dispatch.
+    pub fn set_fast(
+        &mut self,
+        hook: impl FnMut(&Request, bool, &mut Vec<u8>) -> bool + 'static,
+    ) {
+        self.fast = Some(Box::new(hook));
     }
 
     /// Register a handler for `method` + `pattern`. Pattern segments
@@ -142,6 +164,15 @@ impl Service for Router {
     fn handle(&mut self, req: &Request) -> Response {
         self.dispatch(req)
     }
+
+    fn handle_into(&mut self, req: &Request, keep_alive: bool, out: &mut Vec<u8>) {
+        if let Some(fast) = &mut self.fast {
+            if fast(req, keep_alive, out) {
+                return;
+            }
+        }
+        self.dispatch(req).write_to(out, keep_alive);
+    }
 }
 
 #[cfg(test)]
@@ -226,6 +257,30 @@ mod tests {
         r.dispatch(&req(Method::Get, "/hits"));
         let resp = r.dispatch(&req(Method::Get, "/hits"));
         assert_eq!(resp.body, b"2");
+    }
+
+    #[test]
+    fn fast_hook_short_circuits_handle_into_only() {
+        let mut r = Router::new();
+        r.get("/hot", |_, _| Response::ok().with_text("slow"));
+        r.set_fast(|req, keep, out| {
+            if req.path == "/hot" {
+                Response::ok().with_text("fast").write_to(out, keep);
+                true
+            } else {
+                false
+            }
+        });
+        // handle() (direct dispatch) ignores the hook.
+        assert_eq!(r.handle(&req(Method::Get, "/hot")).body, b"slow");
+        // handle_into() consults it.
+        let mut out = Vec::new();
+        r.handle_into(&req(Method::Get, "/hot"), true, &mut out);
+        assert!(String::from_utf8(out).unwrap().ends_with("fast"));
+        // Declined requests dispatch normally.
+        let mut out = Vec::new();
+        r.handle_into(&req(Method::Get, "/nope"), true, &mut out);
+        assert!(String::from_utf8(out).unwrap().starts_with("HTTP/1.1 404"));
     }
 
     #[test]

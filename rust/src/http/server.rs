@@ -24,6 +24,12 @@ pub(crate) const TOKEN_LISTENER: u64 = 0;
 pub(crate) const TOKEN_WAKER: u64 = 1;
 pub(crate) const TOKEN_BASE: u64 = 2;
 
+/// Per-connection output capacity retained across responses (see
+/// [`ConnDriver`]): large enough that every pool-protocol response
+/// renders allocation-free once warm, small enough to keep thousands of
+/// idle keep-alive connections cheap.
+const RETAINED_OUT_CAP: usize = 64 * 1024;
+
 /// Tunables for the event loop.
 #[derive(Debug, Clone)]
 pub struct ServerConfig {
@@ -218,8 +224,11 @@ impl ConnDriver {
                 Ok(Some(req)) => {
                     stats.requests.fetch_add(1, Ordering::Relaxed);
                     let keep = req.keep_alive();
-                    let resp = service.handle(&req);
-                    resp.write_to(&mut conn.out, keep);
+                    // Render straight into the connection's (warm,
+                    // capacity-retaining) output buffer; services with a
+                    // cached hot path override handle_into to skip the
+                    // Response object entirely.
+                    service.handle_into(&req, keep, &mut conn.out);
                     if !keep {
                         conn.close_after_write = true;
                         break;
@@ -255,6 +264,12 @@ impl ConnDriver {
         if !conn.pending_out() {
             conn.out.clear();
             conn.out_pos = 0;
+            // Keep the hot capacity (steady-state rendering is then
+            // allocation-free) but give back outliers: one huge response
+            // must not pin megabytes per idle keep-alive connection.
+            if conn.out.capacity() > RETAINED_OUT_CAP {
+                conn.out.shrink_to(RETAINED_OUT_CAP);
+            }
             if conn.close_after_write {
                 return true;
             }
@@ -330,14 +345,15 @@ impl Server {
 
         while !self.shutdown.load(Ordering::Acquire) {
             self.epoll.wait(Some(self.config.tick), &mut events)?;
-            let ev_snapshot: Vec<Event> = events.clone();
-            for ev in ev_snapshot {
+            // Iterate in place: nothing below touches `events`, and the
+            // old defensive clone allocated once per loop tick.
+            for ev in &events {
                 match ev.token {
                     TOKEN_LISTENER => self.accept_all(&mut driver),
                     TOKEN_WAKER => self.waker.drain(),
                     _ => driver.handle_event(
                         &self.epoll,
-                        &ev,
+                        ev,
                         &mut service,
                         &self.stats,
                     ),

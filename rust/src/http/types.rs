@@ -190,24 +190,72 @@ impl Response {
         }
     }
 
-    /// Serialize to wire format, appending to `out`.
+    /// Serialize to wire format, appending to `out`. Allocation-free:
+    /// every piece is extended into `out` directly (no `format!`
+    /// temporaries), so rendering into a warm connection buffer costs
+    /// only memcpys — this is the per-response half of the hot-path
+    /// allocation budget (see `benches/hotpath_alloc.rs`).
     pub fn write_to(&self, out: &mut Vec<u8>, keep_alive: bool) {
-        out.extend_from_slice(
-            format!("HTTP/1.1 {} {}\r\n", self.status, self.status_line())
-                .as_bytes(),
-        );
-        for (k, v) in &self.headers {
-            out.extend_from_slice(format!("{k}: {v}\r\n").as_bytes());
-        }
-        out.extend_from_slice(
-            format!("content-length: {}\r\n", self.body.len()).as_bytes(),
-        );
-        if !keep_alive {
-            out.extend_from_slice(b"connection: close\r\n");
-        }
+        out.extend_from_slice(b"HTTP/1.1 ");
+        push_u64(out, self.status as u64);
+        out.push(b' ');
+        out.extend_from_slice(self.status_line().as_bytes());
         out.extend_from_slice(b"\r\n");
+        for (k, v) in &self.headers {
+            out.extend_from_slice(k.as_bytes());
+            out.extend_from_slice(b": ");
+            out.extend_from_slice(v.as_bytes());
+            out.extend_from_slice(b"\r\n");
+        }
+        finish_head(out, self.body.len(), keep_alive);
         out.extend_from_slice(&self.body);
     }
+}
+
+/// Append a decimal integer without allocating.
+pub(crate) fn push_u64(out: &mut Vec<u8>, mut v: u64) {
+    let mut buf = [0u8; 20];
+    let mut i = buf.len();
+    loop {
+        i -= 1;
+        buf[i] = b'0' + (v % 10) as u8;
+        v /= 10;
+        if v == 0 {
+            break;
+        }
+    }
+    out.extend_from_slice(&buf[i..]);
+}
+
+/// `content-length` + optional `connection: close` + blank line — the
+/// shared tail of every response head.
+pub(crate) fn finish_head(out: &mut Vec<u8>, body_len: usize, keep_alive: bool) {
+    out.extend_from_slice(b"content-length: ");
+    push_u64(out, body_len as u64);
+    out.extend_from_slice(b"\r\n");
+    if !keep_alive {
+        out.extend_from_slice(b"connection: close\r\n");
+    }
+    out.extend_from_slice(b"\r\n");
+}
+
+/// Render a complete `200 OK` JSON response around a pre-rendered body.
+/// Byte-identical to `Response::json(..).write_to(..)` but with zero
+/// intermediate `Response`: the cached-GET fast path appends head + body
+/// straight into the connection's output buffer.
+pub(crate) fn write_json_200(out: &mut Vec<u8>, body: &[u8], keep_alive: bool) {
+    out.extend_from_slice(
+        b"HTTP/1.1 200 OK\r\ncontent-type: application/json\r\n",
+    );
+    finish_head(out, body.len(), keep_alive);
+    out.extend_from_slice(body);
+}
+
+/// Render a complete bodyless `204 No Content` (the empty-pool GET).
+/// Byte-identical to `Response::new(204).write_to(..)`.
+pub(crate) fn write_no_content_204(out: &mut Vec<u8>, keep_alive: bool) {
+    out.extend_from_slice(b"HTTP/1.1 204 No Content\r\n");
+    finish_head(out, 0, keep_alive);
 }
 
 #[cfg(test)]
@@ -266,6 +314,38 @@ mod tests {
         Response::new(204).write_to(&mut out, false);
         let text = String::from_utf8(out).unwrap();
         assert!(text.contains("connection: close\r\n"));
+    }
+
+    #[test]
+    fn push_u64_matches_display() {
+        for v in [0u64, 1, 9, 10, 42, 200, 204, 65535, u64::MAX] {
+            let mut out = Vec::new();
+            push_u64(&mut out, v);
+            assert_eq!(out, v.to_string().as_bytes());
+        }
+    }
+
+    #[test]
+    fn fast_heads_match_response_rendering() {
+        let body = br#"{"chromosome":"01","fitness":1}"#;
+        for keep in [true, false] {
+            let parsed =
+                json::parse(std::str::from_utf8(body).unwrap()).unwrap();
+            let mut slow = Vec::new();
+            Response::json(&parsed).write_to(&mut slow, keep);
+            let mut fast = Vec::new();
+            write_json_200(&mut fast, body, keep);
+            assert_eq!(
+                String::from_utf8(fast).unwrap(),
+                String::from_utf8(slow).unwrap()
+            );
+
+            let mut slow = Vec::new();
+            Response::new(204).write_to(&mut slow, keep);
+            let mut fast = Vec::new();
+            write_no_content_204(&mut fast, keep);
+            assert_eq!(fast, slow);
+        }
     }
 
     #[test]

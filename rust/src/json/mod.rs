@@ -6,10 +6,22 @@
 //!
 //! Object member order is preserved (insertion order), which keeps log
 //! lines and manifests stable and diffable.
+//!
+//! Two parse modes share one grammar: [`parse`] builds the owned [`Json`]
+//! tree (escape decoding, `String`/`Vec` per node); the borrowed mode
+//! ([`parse_ref`] for a general `&str`-slice tree, SAX-style
+//! [`parse_put_body`] for the known chromosome-PUT shapes) borrows the
+//! input instead. The request hot path uses the SAX extractor and falls
+//! back to the owned tree only when a string actually contains an
+//! escape.
 
+mod borrowed;
 mod parse;
 mod write;
 
+pub use borrowed::{
+    parse_put_body, parse_ref, JsonRef, PutBody, PutItemRef, RefError,
+};
 pub use parse::{parse, ParseError};
 pub use write::{to_string, to_string_pretty};
 

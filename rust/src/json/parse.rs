@@ -5,8 +5,9 @@ use super::Json;
 
 /// Maximum nesting depth — bounds stack use against adversarial bodies
 /// (the server parses volunteer-supplied requests; see the paper's threat
-/// model in section 1).
-const MAX_DEPTH: usize = 128;
+/// model in section 1). Shared with the borrowed parser
+/// ([`super::borrowed`]) so both modes accept the same documents.
+pub(crate) const MAX_DEPTH: usize = 128;
 
 #[derive(Debug, Clone, PartialEq)]
 pub struct ParseError {

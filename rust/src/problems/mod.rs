@@ -11,7 +11,7 @@ pub mod real;
 pub use bitstring::{Deceptive3, OneMax, RoyalRoad, Trap};
 pub use extended::{Hiff, Mmdp, PPeaks};
 pub use f15::F15Instance;
-pub use packed::PackedTrapEvaluator;
+pub use packed::{PackedBits, PackedTrapEvaluator};
 pub use real::{Rastrigin, Sphere};
 
 /// A maximization problem over fixed-length bitstrings.

@@ -1,4 +1,5 @@
-//! Packed-u64 trap evaluation: the optimized native fitness path.
+//! Packed-u64 bitstring representations: the optimized native fitness
+//! path and the coordinator's in-memory chromosome format.
 //!
 //! The byte-per-bit [`crate::ea::BitString`] layout is ideal for the GA's
 //! per-bit operators, but fitness evaluation only needs *unitation per
@@ -6,9 +7,127 @@
 //! SWAR nibble sums (no lookup tables, no per-bit branches). Used by the
 //! perf pass (§Perf) to push the native engine's eval throughput; the
 //! packing cost is amortized by evaluating whole populations.
+//!
+//! [`PackedBits`] is the same word layout behind a small value type: the
+//! chromosome pool ([`crate::coordinator::pool`]) stores entries packed
+//! (64 loci per word instead of one byte per locus), converting to the
+//! `"0101..."` wire string only at the HTTP boundary and to a fixed-width
+//! hex form in WAL/snapshot records.
 
 use super::bitstring::Trap;
 use super::BitProblem;
+
+/// A fixed-length bitstring packed 64 loci per u64 word (LSB-first), the
+/// coordinator's in-memory and durable chromosome representation.
+///
+/// Canonical form: bits beyond `n_bits` in the last word are always zero,
+/// so derived equality/hashing are sound. A 160-bit trap chromosome is 3
+/// words (24 bytes + length) instead of a 160-byte `String`, and equality
+/// checks (migration dedup) are 3 word compares instead of a 160-byte
+/// memcmp.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct PackedBits {
+    words: Vec<u64>,
+    n_bits: usize,
+}
+
+impl PackedBits {
+    /// Pack a `"0101..."` wire string. `None` if any byte is not `0`/`1`.
+    pub fn from_str01(s: &str) -> Option<PackedBits> {
+        let n = s.len();
+        let mut words = vec![0u64; n.div_ceil(64)];
+        for (i, b) in s.bytes().enumerate() {
+            match b {
+                b'0' => {}
+                b'1' => words[i / 64] |= 1u64 << (i % 64),
+                _ => return None,
+            }
+        }
+        Some(PackedBits { words, n_bits: n })
+    }
+
+    pub fn n_bits(&self) -> usize {
+        self.n_bits
+    }
+
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+
+    fn bit(&self, i: usize) -> bool {
+        (self.words[i / 64] >> (i % 64)) & 1 == 1
+    }
+
+    /// The `"0101..."` wire form as an owned string.
+    pub fn to_string01(&self) -> String {
+        let mut s = String::with_capacity(self.n_bits);
+        for i in 0..self.n_bits {
+            s.push(if self.bit(i) { '1' } else { '0' });
+        }
+        s
+    }
+
+    /// Fixed-width hex of the words (16 lowercase digits per word,
+    /// LSB-first word order) — the durable WAL/snapshot form, 4x smaller
+    /// than the wire string.
+    pub fn to_hex(&self) -> String {
+        let mut s = String::with_capacity(self.words.len() * 16);
+        for w in &self.words {
+            use std::fmt::Write;
+            let _ = write!(s, "{w:016x}");
+        }
+        s
+    }
+
+    /// Inverse of [`PackedBits::to_hex`]. `None` on wrong length, bad hex
+    /// digits, or non-zero padding bits past `n_bits` (non-canonical or
+    /// corrupt records must not replay).
+    pub fn from_hex(hex: &str, n_bits: usize) -> Option<PackedBits> {
+        let want_words = n_bits.div_ceil(64);
+        let bytes = hex.as_bytes();
+        if bytes.len() != want_words * 16 {
+            return None;
+        }
+        let mut words = Vec::with_capacity(want_words);
+        for chunk in bytes.chunks(16) {
+            // from_str_radix would accept a leading '+'/'-'; only bare
+            // hex digits are canonical.
+            if !chunk.iter().all(u8::is_ascii_hexdigit) {
+                return None;
+            }
+            let text = std::str::from_utf8(chunk).ok()?;
+            words.push(u64::from_str_radix(text, 16).ok()?);
+        }
+        if n_bits % 64 != 0 {
+            let mask = (1u64 << (n_bits % 64)) - 1;
+            if words.last().is_some_and(|w| w & !mask != 0) {
+                return None;
+            }
+        }
+        Some(PackedBits { words, n_bits })
+    }
+}
+
+/// Compare against a `"0101..."` wire string without unpacking.
+impl PartialEq<str> for PackedBits {
+    fn eq(&self, other: &str) -> bool {
+        other.len() == self.n_bits
+            && other
+                .bytes()
+                .enumerate()
+                .all(|(i, b)| match b {
+                    b'0' => !self.bit(i),
+                    b'1' => self.bit(i),
+                    _ => false,
+                })
+    }
+}
+
+impl PartialEq<&str> for PackedBits {
+    fn eq(&self, other: &&str) -> bool {
+        *self == **other
+    }
+}
 
 /// Pack a {0,1}-byte slice into u64 words, 1 bit per locus (LSB-first).
 pub fn pack_bits(bits: &[u8]) -> Vec<u64> {
@@ -126,6 +245,69 @@ mod tests {
     use crate::ea::BitString;
     use crate::rng::SplitMix64;
     use crate::testkit::{forall, PropConfig};
+
+    #[test]
+    fn packed_bits_string_round_trip_property() {
+        forall(
+            &PropConfig::cases(100),
+            |rng| {
+                let n = 1 + (rng.next_u64() % 200) as usize;
+                let b = BitString::random(rng, n);
+                b.bits()
+                    .iter()
+                    .map(|&x| if x == 1 { '1' } else { '0' })
+                    .collect::<String>()
+            },
+            |s| {
+                let p = PackedBits::from_str01(s).unwrap();
+                p.n_bits() == s.len()
+                    && p.to_string01() == *s
+                    && p == s.as_str()
+                    && PackedBits::from_hex(&p.to_hex(), p.n_bits())
+                        == Some(p.clone())
+            },
+        );
+    }
+
+    #[test]
+    fn packed_bits_rejects_non_binary() {
+        assert!(PackedBits::from_str01("01x1").is_none());
+        assert!(PackedBits::from_str01("01 1").is_none());
+        assert_eq!(
+            PackedBits::from_str01("").map(|p| p.n_bits()),
+            Some(0)
+        );
+    }
+
+    #[test]
+    fn packed_bits_hex_rejects_corruption() {
+        let p = PackedBits::from_str01("10110").unwrap();
+        let hex = p.to_hex();
+        assert_eq!(hex.len(), 16);
+        // Wrong length.
+        assert!(PackedBits::from_hex(&hex[1..], 5).is_none());
+        // Bad digit.
+        let bad = hex.replacen(|c: char| c.is_ascii_hexdigit(), "g", 1);
+        assert!(PackedBits::from_hex(&bad, 5).is_none());
+        // Signs are not hex digits (from_str_radix alone would take '+').
+        let signed = format!("+{}", &hex[1..]);
+        assert!(PackedBits::from_hex(&signed, 5).is_none());
+        // Padding bits past n_bits set: non-canonical, refused.
+        assert!(PackedBits::from_hex("00000000000000ff", 5).is_none());
+        // n_bits mismatch that still passes the mask is a different value,
+        // not this one.
+        assert_ne!(PackedBits::from_hex(&hex, 6), Some(p));
+    }
+
+    #[test]
+    fn packed_bits_wire_equality() {
+        let p = PackedBits::from_str01("0110").unwrap();
+        assert!(p == "0110");
+        assert!(p != "0111");
+        assert!(p != "011");
+        assert!(p != "01100");
+        assert!(p != "01a0"); // non-binary never equal
+    }
 
     #[test]
     fn pack_round_trip() {

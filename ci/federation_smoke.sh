@@ -1,0 +1,124 @@
+#!/usr/bin/env bash
+# Federation smoke test: three `nodio server` processes wired as a gossip
+# ring on localhost, exchanging CRC-framed WAL records over TCP.
+#
+#   1. best-chromosome propagation: a PUT at one peer becomes visible in
+#      every peer's /experiment/state within the gossip interval;
+#   2. rejoin + catch-up: one peer is killed and restarted, reconnects,
+#      and re-learns the federation's best via re-gossip;
+#   3. one winner: a solving PUT at one peer terminates the experiment at
+#      ALL peers (experiment epoch + completed count advance everywhere).
+#
+# Runs locally (`bash ci/federation_smoke.sh`) and in the CI
+# `federation-smoke` job. The only dependency is the nodio binary itself:
+# all HTTP probing goes through `nodio http`.
+set -euo pipefail
+
+NODIO="${NODIO:-target/release/nodio}"
+if [[ ! -x "$NODIO" ]]; then
+    echo "nodio binary not found at $NODIO (build with: cargo build --release)" >&2
+    exit 1
+fi
+
+# Deterministic-ish port block derived from the PID to dodge collisions
+# between concurrent runs. Kept below 32768 so it can never collide with
+# the kernel's ephemeral-port range (outgoing connections of other jobs).
+BASE=$(( 15000 + ($$ % 17000) ))
+GBASE=$(( BASE + 100 ))
+PIDS=(0 0 0)
+LOGDIR=$(mktemp -d)
+
+http() { "$NODIO" http "$@"; }
+
+launch_peer() { # launch_peer <i> [gossip-port]
+    local i=$1 next=$(( ($1 + 1) % 3 ))
+    local gport=${2:-$((GBASE + i))}
+    "$NODIO" server \
+        --addr "127.0.0.1:$((BASE + i))" \
+        --no-persist --target 8 --bits 8 \
+        --gossip-listen "127.0.0.1:$gport" \
+        --peer "127.0.0.1:$((GBASE + next))" \
+        --gossip-every 100 --node "peer-$i" \
+        >"$LOGDIR/peer-$i.log" 2>&1 &
+    PIDS[$i]=$!
+}
+
+cleanup() {
+    for pid in "${PIDS[@]}"; do
+        [[ "$pid" != 0 ]] && kill "$pid" 2>/dev/null || true
+    done
+    wait 2>/dev/null || true
+    rm -rf "$LOGDIR"
+}
+trap cleanup EXIT
+
+wait_for() { # wait_for <url> <grep-pattern> <what>
+    local url=$1 pattern=$2 what=$3 deadline=$((SECONDS + 30))
+    while (( SECONDS < deadline )); do
+        if http GET "$url" 2>/dev/null | grep -q "$pattern"; then
+            return 0
+        fi
+        sleep 0.2
+    done
+    echo "FAIL: timed out waiting for: $what" >&2
+    echo "  (wanted pattern $pattern at $url; last body:)" >&2
+    http GET "$url" >&2 || true
+    echo "--- server logs ---" >&2
+    tail -n 20 "$LOGDIR"/peer-*.log >&2 || true
+    return 1
+}
+
+put() { # put <peer-index> <chromosome> <fitness>
+    http PUT "127.0.0.1:$((BASE + $1))/experiment/chromosome" \
+        --body "{\"chromosome\":\"$2\",\"fitness\":$3,\"uuid\":\"smoke\"}" \
+        >/dev/null
+}
+
+echo "== federation smoke: 3-process gossip ring on 127.0.0.1:$BASE-$((BASE+2)) =="
+
+for i in 0 1 2; do launch_peer "$i"; done
+for i in 0 1 2; do
+    wait_for "127.0.0.1:$((BASE + i))/" '"name":"nodio"' "peer $i serving"
+done
+echo "all 3 peers up"
+
+# --- 1. best-chromosome propagation ----------------------------------
+put 0 "01010101" 4.5
+for i in 0 1 2; do
+    wait_for "127.0.0.1:$((BASE + i))/experiment/state" \
+        '"best_fitness":4.5' "best=4.5 visible at peer $i"
+done
+echo "PASS: best chromosome propagated to every peer"
+
+# --- 2. kill one peer, restart it, assert it rejoins and catches up ---
+put 1 "01110111" 5.5
+for i in 0 1 2; do
+    wait_for "127.0.0.1:$((BASE + i))/experiment/state" \
+        '"best_fitness":5.5' "best=5.5 visible at peer $i"
+done
+kill "${PIDS[2]}"
+wait "${PIDS[2]}" 2>/dev/null || true
+PIDS[2]=0
+echo "peer 2 killed"
+# Relaunch on a fresh gossip port (the old one may sit in TIME_WAIT from
+# the killed peer's accepted links); it still rejoins the federation
+# through its own outbound dial to peer 0, and links are bidirectional.
+launch_peer 2 $((GBASE + 3))
+wait_for "127.0.0.1:$((BASE + 2))/" '"name":"nodio"' "peer 2 back up"
+# The restarted (stateless: --no-persist) peer must re-learn the
+# federation's best purely through re-gossip from its reconnected links.
+wait_for "127.0.0.1:$((BASE + 2))/experiment/state" \
+    '"best_fitness":5.5' "restarted peer 2 caught up to best=5.5"
+echo "PASS: killed peer rejoined and caught up"
+
+# --- 3. a solving PUT at one peer terminates the whole federation -----
+put 0 "11111111" 8
+for i in 0 1 2; do
+    wait_for "127.0.0.1:$((BASE + i))/experiment/state" \
+        '"experiment":1' "peer $i advanced to experiment 1"
+    wait_for "127.0.0.1:$((BASE + i))/experiment/state" \
+        '"completed":1' "peer $i recorded the completed experiment"
+done
+echo "PASS: federation converged on one winner"
+
+echo "federation smoke: ALL PASS"

@@ -1,0 +1,395 @@
+//! Federation scaling: the paper's E3 throughput experiment at the
+//! *process* level.
+//!
+//! NodIO's headline scaling claim is "add more backends": independent
+//! pool-server processes exchanging best individuals island-model style.
+//! This bench spawns real `nodio server` processes (the binary under
+//! test, via `CARGO_BIN_EXE_nodio`) wired into a federation over
+//! localhost TCP gossip, and measures:
+//!
+//! * mixed PUT+GET throughput for 1/2/4 federated single-shard processes
+//!   vs an equal-shard single process (2- and 4-shard clusters);
+//! * cross-process experiment termination (a solving PUT at one process
+//!   observed at another);
+//! * time-to-solution with real W² volunteer clients driving 1/2/4
+//!   federated processes.
+//!
+//! Hard gate (CI `federation-smoke`): 2 federated processes must deliver
+//! at least 1.3x the throughput of one single-shard process — federation
+//! has to actually buy capacity, not just connectivity. The gate is
+//! skipped on single-core machines (nothing can run in parallel there).
+//!
+//! `NODIO_BENCH_FULL=1` lengthens rounds. `NODIO_BENCH_JSON=path` writes
+//! a machine-readable summary (uploaded as a CI artifact).
+
+use std::io::{BufRead, BufReader};
+use std::net::SocketAddr;
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use nodio::bench::{write_json_summary, Table};
+use nodio::client::driver::EngineChoice;
+use nodio::client::worker::{ClientProcess, WorkerMode};
+use nodio::http::{HttpClient, Method, Request};
+use nodio::json::Json;
+
+/// One spawned `nodio server` process; killed on drop.
+struct Backend {
+    child: Child,
+    http: SocketAddr,
+    gossip: Option<SocketAddr>,
+}
+
+impl Drop for Backend {
+    fn drop(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+fn spawn_backend(
+    shards: usize,
+    peers: &[SocketAddr],
+    listen: bool,
+    target: f64,
+    bits: usize,
+) -> Backend {
+    let exe = env!("CARGO_BIN_EXE_nodio");
+    let mut cmd = Command::new(exe);
+    cmd.arg("server")
+        .arg("--addr")
+        .arg("127.0.0.1:0")
+        .arg("--no-persist")
+        .arg("--target")
+        .arg(target.to_string())
+        .arg("--bits")
+        .arg(bits.to_string())
+        .arg("--shards")
+        .arg(shards.to_string())
+        .arg("--gossip-every")
+        .arg("100");
+    if listen {
+        cmd.arg("--gossip-listen").arg("127.0.0.1:0");
+    }
+    for p in peers {
+        cmd.arg("--peer").arg(p.to_string());
+    }
+    cmd.stdout(Stdio::piped()).stderr(Stdio::null());
+    let mut child = cmd.spawn().expect("spawn nodio server process");
+    // The server prints its bound addresses; parse them (port 0 in,
+    // real ports out — no port races).
+    let stdout = child.stdout.take().expect("child stdout piped");
+    let mut reader = BufReader::new(stdout);
+    let mut http: Option<SocketAddr> = None;
+    let mut gossip: Option<SocketAddr> = None;
+    let mut line = String::new();
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while (http.is_none() || (listen && gossip.is_none()))
+        && Instant::now() < deadline
+    {
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) | Err(_) => break,
+            Ok(_) => {}
+        }
+        if let Some(rest) = line.strip_prefix("nodio gossip listening on ") {
+            gossip = rest.trim().parse().ok();
+        } else if let Some(i) = line.find("listening on ") {
+            let tail = &line[i + "listening on ".len()..];
+            if let Some(tok) = tail.split_whitespace().next() {
+                http = tok.parse().ok();
+            }
+        }
+    }
+    let http = http.expect("server never reported its address");
+    Backend { child, http, gossip }
+}
+
+/// Spawn `procs` federated processes (`shards` each): everyone listens,
+/// each dials its predecessor — links are bidirectional, so the chain is
+/// one connected federation.
+fn spawn_federation(
+    procs: usize,
+    shards: usize,
+    target: f64,
+    bits: usize,
+) -> Vec<Backend> {
+    let mut backends: Vec<Backend> = Vec::with_capacity(procs);
+    for i in 0..procs {
+        let peers: Vec<SocketAddr> = if i > 0 {
+            vec![backends[i - 1].gossip.expect("gossip listener bound")]
+        } else {
+            Vec::new()
+        };
+        backends.push(spawn_backend(shards, &peers, procs > 1, target, bits));
+    }
+    backends
+}
+
+/// One client thread: PUT/GET migration pairs against one backend.
+fn hammer(
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    count: Arc<AtomicU64>,
+    uuid: String,
+) {
+    let mut client = match HttpClient::connect(addr) {
+        Ok(c) => c,
+        Err(_) => return,
+    };
+    let chromosome = "01".repeat(80);
+    let body = Json::obj(vec![
+        ("chromosome", chromosome.as_str().into()),
+        ("fitness", 40.0.into()),
+        ("uuid", uuid.as_str().into()),
+    ]);
+    let put =
+        Request::new(Method::Put, "/experiment/chromosome").with_json(&body);
+    let get = Request::new(Method::Get, "/experiment/random");
+    while !stop.load(Ordering::Acquire) {
+        if client.send(&put).is_err() || client.send(&get).is_err() {
+            break;
+        }
+        count.fetch_add(2, Ordering::Relaxed);
+    }
+}
+
+/// Drive `clients` threads round-robin across `addrs` for `secs`;
+/// returns aggregate requests/sec.
+fn run_round(addrs: &[SocketAddr], clients: usize, secs: f64) -> f64 {
+    let stop = Arc::new(AtomicBool::new(false));
+    let count = Arc::new(AtomicU64::new(0));
+    let threads: Vec<_> = (0..clients)
+        .map(|i| {
+            let stop = stop.clone();
+            let count = count.clone();
+            let addr = addrs[i % addrs.len()];
+            std::thread::spawn(move || {
+                hammer(addr, stop, count, format!("bench-{i}"))
+            })
+        })
+        .collect();
+    std::thread::sleep(Duration::from_secs_f64(secs));
+    stop.store(true, Ordering::Release);
+    for t in threads {
+        let _ = t.join();
+    }
+    count.load(Ordering::Relaxed) as f64 / secs
+}
+
+fn completed_at(client: &mut HttpClient) -> u64 {
+    client
+        .send(&Request::new(Method::Get, "/experiment/state"))
+        .ok()
+        .and_then(|r| r.json_body().ok())
+        .and_then(|b| b.get_u64("completed"))
+        .unwrap_or(0)
+}
+
+/// A solving PUT at process 0 must terminate the experiment at process 1
+/// (the federation analog of the cluster's cross-shard termination).
+fn verify_cross_process_termination() -> bool {
+    let backends = spawn_federation(2, 1, 8.0, 8);
+    let mut solver = match HttpClient::connect(backends[0].http) {
+        Ok(c) => c,
+        Err(_) => return false,
+    };
+    let mut observer = match HttpClient::connect(backends[1].http) {
+        Ok(c) => c,
+        Err(_) => return false,
+    };
+    let put = Request::new(Method::Put, "/experiment/chromosome").with_json(
+        &Json::obj(vec![
+            ("chromosome", "11111111".into()),
+            ("fitness", 8.0.into()),
+            ("uuid", "solver".into()),
+        ]),
+    );
+    let solved = solver.send(&put).map(|r| r.status == 201).unwrap_or(false);
+    let deadline = Instant::now() + Duration::from_secs(15);
+    let mut observed = false;
+    while Instant::now() < deadline {
+        if completed_at(&mut observer) >= 1 {
+            observed = true;
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    solved && observed
+}
+
+/// Time until EVERY federated process has observed one solved experiment,
+/// with one W² volunteer client per process (real discovery, real
+/// propagation). `None` = timed out.
+fn time_to_solution(procs: usize, timeout: Duration) -> Option<f64> {
+    let backends = spawn_federation(procs, 1, 80.0, 160);
+    let clients: Vec<ClientProcess> = backends
+        .iter()
+        .enumerate()
+        .map(|(i, b)| {
+            ClientProcess::spawn(
+                Some(b.http),
+                WorkerMode::W2,
+                EngineChoice::Native,
+                256,
+                0xBEEF + i as u64,
+                &format!("bench-vol-{i}"),
+                u64::MAX,
+                1.0,
+            )
+        })
+        .collect();
+    let mut monitors: Vec<HttpClient> = Vec::new();
+    for b in &backends {
+        match HttpClient::connect(b.http) {
+            Ok(c) => monitors.push(c),
+            Err(_) => return None,
+        }
+    }
+    let t0 = Instant::now();
+    let mut solved_everywhere = false;
+    while t0.elapsed() < timeout {
+        std::thread::sleep(Duration::from_millis(50));
+        if monitors.iter_mut().all(|m| completed_at(m) >= 1) {
+            solved_everywhere = true;
+            break;
+        }
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    for c in clients {
+        let _ = c.shutdown();
+    }
+    drop(backends);
+    solved_everywhere.then_some(elapsed)
+}
+
+fn main() {
+    let full = std::env::var("NODIO_BENCH_FULL").is_ok();
+    let secs = if full { 3.0 } else { 1.5 };
+    let clients = if full { 16 } else { 8 };
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+
+    println!(
+        "== federation scaling: real `nodio server` processes over \
+         localhost TCP gossip ({clients} clients, {secs}s rounds, \
+         {cores} cores) =="
+    );
+
+    let mut table =
+        Table::new(&["setup", "processes", "shards/proc", "req/s"]);
+    let mut summary_rounds: Vec<Json> = Vec::new();
+    let mut rate_of = |label: &str, procs: usize, shards: usize| -> f64 {
+        let backends = spawn_federation(procs, shards, 1e18, 160);
+        let addrs: Vec<SocketAddr> =
+            backends.iter().map(|b| b.http).collect();
+        let rate = run_round(&addrs, clients, secs);
+        table.row(&[
+            label.into(),
+            procs.to_string(),
+            shards.to_string(),
+            format!("{rate:.0}"),
+        ]);
+        summary_rounds.push(Json::obj(vec![
+            ("setup", label.into()),
+            ("processes", procs.into()),
+            ("shards_per_process", shards.into()),
+            ("req_per_s", rate.into()),
+        ]));
+        rate
+    };
+
+    let single1 = rate_of("single process", 1, 1);
+    let single2 = rate_of("single process", 1, 2);
+    let single4 = rate_of("single process", 1, 4);
+    let fed2 = rate_of("federated", 2, 1);
+    let fed4 = rate_of("federated", 4, 1);
+    table.print();
+    println!(
+        "\nequal-shard comparison: 2 federated procs {fed2:.0} vs 2-shard \
+         single proc {single2:.0}; 4 federated {fed4:.0} vs 4-shard \
+         single {single4:.0} req/s"
+    );
+
+    let speedup = fed2 / single1.max(1.0);
+    println!(
+        "2 federated processes vs 1 single-shard process: {fed2:.0} vs \
+         {single1:.0} req/s ({speedup:.2}x, gate >= 1.3x)"
+    );
+
+    print!("cross-process experiment termination: ");
+    let termination_ok = verify_cross_process_termination();
+    println!(
+        "{}",
+        if termination_ok {
+            "PASS (solution at one process observed at its peer)"
+        } else {
+            "FAIL"
+        }
+    );
+
+    println!("\ntime-to-solution (W2 volunteers, 1 per process):");
+    let tts_timeout = Duration::from_secs(90);
+    let mut tts: Vec<(usize, Option<f64>)> = Vec::new();
+    for procs in [1usize, 2, 4] {
+        let t = time_to_solution(procs, tts_timeout);
+        match t {
+            Some(s) => println!("  {procs} process(es): {s:.2}s"),
+            None => println!("  {procs} process(es): timeout"),
+        }
+        tts.push((procs, t));
+    }
+
+    write_json_summary(&Json::obj(vec![
+        ("bench", "federation_scaling".into()),
+        ("cores", cores.into()),
+        ("round_secs", secs.into()),
+        ("clients", clients.into()),
+        ("rounds", Json::Arr(summary_rounds)),
+        ("speedup_fed2_vs_single1", speedup.into()),
+        ("termination_propagates", termination_ok.into()),
+        (
+            "time_to_solution_s",
+            Json::Arr(
+                tts.iter()
+                    .map(|(p, t)| {
+                        Json::obj(vec![
+                            ("processes", (*p).into()),
+                            (
+                                "seconds",
+                                t.map(Json::from).unwrap_or(Json::Null),
+                            ),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ]));
+
+    // -- gates ---------------------------------------------------------
+    let mut failed = false;
+    if !termination_ok {
+        println!("FAIL: cross-process termination never propagated");
+        failed = true;
+    }
+    if cores < 2 {
+        println!(
+            "SKIP: throughput gate needs >= 2 cores (federated processes \
+             cannot run in parallel here)"
+        );
+    } else if speedup < 1.3 {
+        println!(
+            "FAIL: 2-process federated throughput is only {speedup:.2}x a \
+             single process (gate 1.3x)"
+        );
+        failed = true;
+    } else {
+        println!("PASS: {speedup:.2}x >= 1.3x");
+    }
+    if failed {
+        std::process::exit(1);
+    }
+}

@@ -33,7 +33,7 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use nodio::bench::Table;
+use nodio::bench::{write_json_summary, Table};
 use nodio::coordinator::cluster::{ClusterConfig, ShardedPoolServer};
 use nodio::coordinator::routes::{build_router, PoolState};
 use nodio::coordinator::PoolServerConfig;
@@ -430,6 +430,19 @@ fn main() {
              {hits} render-cache hits"
         );
     }
+
+    // Machine-readable trajectory (CI uploads this as an artifact);
+    // written before the gates so a failing run still leaves evidence.
+    write_json_summary(&Json::obj(vec![
+        ("bench", "hotpath_alloc".into()),
+        ("get_allocs_per_req", get_allocs_per_req.into()),
+        ("put_allocs_per_req", put_allocs_per_req.into()),
+        ("get_bytes_per_req", (b_get as f64 / n as f64).into()),
+        ("put_bytes_per_req", (b_put as f64 / n as f64).into()),
+        ("fast_req_per_s", fast_rps.into()),
+        ("legacy_req_per_s", legacy_rps.into()),
+        ("fast_over_legacy_ratio", ratio.into()),
+    ]));
 
     // -- gates ---------------------------------------------------------
     let mut failed = false;

@@ -13,7 +13,7 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use nodio::bench::Table;
+use nodio::bench::{write_json_summary, Table};
 use nodio::coordinator::cluster::{ClusterConfig, PoolBackend};
 use nodio::coordinator::{PersistConfig, PoolServerConfig};
 use nodio::http::{HttpClient, Method, Request};
@@ -129,6 +129,7 @@ fn main() {
     let mut table = Table::new(&["setup", "chromosomes/s", "vs no-WAL"]);
     let mut baselines: Vec<(usize, usize, f64)> = Vec::new(); // (shards, batch, rate)
     let mut wal_ratio: Option<f64> = None;
+    let mut summary_rows: Vec<Json> = Vec::new();
 
     for r in &rounds {
         let dir = bench_dir(r.label.replace(' ', "-").as_str());
@@ -159,9 +160,27 @@ fn main() {
             baselines.push((r.shards, r.batch, rate));
             "100%".into()
         };
+        summary_rows.push(Json::obj(vec![
+            ("setup", r.label.into()),
+            ("shards", r.shards.into()),
+            ("persist", r.persist.into()),
+            ("fsync", r.fsync.into()),
+            ("batch", r.batch.into()),
+            ("chromosomes_per_s", rate.into()),
+        ]));
         table.row(&[r.label.into(), format!("{rate:.0}"), rel]);
     }
     table.print();
+
+    // Machine-readable trajectory (CI uploads this as an artifact).
+    write_json_summary(&Json::obj(vec![
+        ("bench", "wal_overhead".into()),
+        ("rounds", Json::Arr(summary_rows)),
+        (
+            "wal_on_over_off_ratio",
+            wal_ratio.map(Json::from).unwrap_or(Json::Null),
+        ),
+    ]));
 
     match wal_ratio {
         Some(ratio) => {

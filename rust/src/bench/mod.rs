@@ -167,6 +167,24 @@ pub fn rate(items: u64, elapsed: Duration) -> String {
     format!("{}/s", fmt_count(per_sec as u64))
 }
 
+/// Write a machine-readable bench summary to the path named by the
+/// `NODIO_BENCH_JSON` environment variable (CI uploads these files as
+/// workflow artifacts, making the perf trajectory inspectable per PR).
+/// No-op when the variable is unset; a write failure is reported but
+/// never fails the bench (the gates are the human-readable output's job).
+pub fn write_json_summary(summary: &crate::json::Json) {
+    let Ok(path) = std::env::var("NODIO_BENCH_JSON") else { return };
+    if path.is_empty() {
+        return;
+    }
+    let body = crate::json::to_string_pretty(summary);
+    if let Err(e) = std::fs::write(&path, body + "\n") {
+        eprintln!("NODIO_BENCH_JSON: cannot write {path}: {e}");
+    } else {
+        println!("bench summary written to {path}");
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

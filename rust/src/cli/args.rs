@@ -7,7 +7,9 @@ use std::collections::BTreeMap;
 #[derive(Debug, Clone, Default)]
 pub struct Args {
     pub command: String,
-    options: BTreeMap<String, String>,
+    /// Every value given for an option, in order (`--peer a --peer b`).
+    /// Single-value accessors read the last occurrence.
+    options: BTreeMap<String, Vec<String>>,
     flags: Vec<String>,
     positionals: Vec<String>,
 }
@@ -37,7 +39,10 @@ impl Args {
             match iter.peek() {
                 Some(next) if !next.starts_with("--") => {
                     let value = iter.next().unwrap().clone();
-                    args.options.insert(key.to_string(), value);
+                    args.options
+                        .entry(key.to_string())
+                        .or_default()
+                        .push(value);
                 }
                 _ => args.flags.push(key.to_string()),
             }
@@ -62,7 +67,25 @@ impl Args {
     }
 
     pub fn get(&self, name: &str) -> Option<&str> {
-        self.options.get(name).map(|s| s.as_str())
+        self.options
+            .get(name)
+            .and_then(|vals| vals.last())
+            .map(|s| s.as_str())
+    }
+
+    /// Every value of a repeatable option, in order, with comma-separated
+    /// values split (`--peer a:1 --peer b:2,c:3` -> `[a:1, b:2, c:3]`).
+    pub fn get_multi(&self, name: &str) -> Vec<&str> {
+        self.options
+            .get(name)
+            .map(|vals| {
+                vals.iter()
+                    .flat_map(|v| v.split(','))
+                    .map(str::trim)
+                    .filter(|s| !s.is_empty())
+                    .collect()
+            })
+            .unwrap_or_default()
     }
 
     pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
@@ -122,6 +145,18 @@ mod tests {
         assert_eq!(a.get_f64("rate", 0.0).unwrap(), 2.5);
         assert_eq!(a.get_u64("missing", 9).unwrap(), 9);
         assert!(a.get_usize("rate", 0).is_err());
+    }
+
+    #[test]
+    fn repeated_options_accumulate() {
+        let a = parse(&[
+            "server", "--peer", "a:9301", "--peer", "b:9302,c:9303",
+            "--addr", "x", "--addr", "y",
+        ]);
+        assert_eq!(a.get_multi("peer"), vec!["a:9301", "b:9302", "c:9303"]);
+        // Single-value accessors read the last occurrence.
+        assert_eq!(a.get("addr"), Some("y"));
+        assert!(a.get_multi("missing").is_empty());
     }
 
     #[test]

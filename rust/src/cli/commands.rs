@@ -12,7 +12,8 @@ use crate::client::volunteer::{ClientConfig, VolunteerClient};
 use crate::client::worker::WorkerMode;
 use crate::coordinator::cluster::{ClusterConfig, PoolBackend};
 use crate::coordinator::persistence::replay_dir;
-use crate::coordinator::{PersistConfig, PoolServerConfig};
+use crate::coordinator::{FederationConfig, PersistConfig, PoolServerConfig};
+use crate::http::{HttpClient, Method, Request};
 use crate::problems::F15Instance;
 use crate::runtime::{NativeEngine, XlaEngine};
 use crate::sim::{run_baseline, run_swarm, run_swarm_trace, ChurnConfig,
@@ -26,20 +27,35 @@ commands:
   server    --addr 127.0.0.1:8080 [--target 80] [--bits 160] [--log x.jsonl]
             [--shards N] [--migration-ms 100] [--migration-k 3]
             [--data-dir nodio-data] [--no-persist] [--snapshot-every 1024]
-            [--fsync]
+            [--fsync] [--gossip-listen HOST:PORT] [--peer HOST:PORT ...]
+            [--gossip-every 250] [--node NAME]
             run the pool server until killed; --shards N > 1 runs the
             multi-core sharded coordinator (N event-loop shards with
             round-robin connection routing and best-K pool gossip;
-            --log applies to the single-loop server only)
+            --log applies to the single-loop server only).
+            --peer/--gossip-listen federate multiple server processes:
+            they exchange best individuals and experiment terminations
+            over TCP as CRC-framed WAL records (--peer is repeatable or
+            comma-separated; --gossip-every is the send period in ms)
+  http      <METHOD> <URL> [--body JSON] [--timeout-s 10]
+            one-shot request against a pool server (GET 127.0.0.1:8080/
+            stats, PUT with --body, ...); prints the response body,
+            exits nonzero on connect failure or status >= 400 — the
+            dependency-free probe ci/federation_smoke.sh drives
   client    --server HOST:PORT [--engine native|xla|jnp] [--pop 256]
             [--epochs N] [--uuid NAME] [--no-restart]
             run one volunteer island
   swarm     [--clients 4] [--engine native|xla|jnp] [--mode basic|w2]
             [--solutions 1] [--timeout-s 60] [--churn-rate R]
-            [--session-s S] [--seed N] [--shards N]
+            [--session-s S] [--seed N] [--shards N] [--backends N]
             [--data-dir DIR] [--no-persist] [--snapshot-every 1024]
+            [--peer HOST:PORT ...] [--gossip-listen HOST:PORT]
+            [--gossip-every 250]
             in-process server + simulated volunteers (experiment E6);
-            --shards N > 1 drives the sharded pool coordinator
+            --shards N > 1 drives the sharded pool coordinator;
+            --backends N > 1 runs N federated backends linked over
+            localhost TCP gossip and waits for every backend to agree
+            on the solutions (the multi-process scenario)
   replay    <data-dir>
             reconstruct an experiment's history offline from its WAL +
             snapshot directory (no server needed)
@@ -70,7 +86,7 @@ pub fn dispatch(args: &Args) -> Result<()> {
     // Only `replay` (the data dir) and `trace` (the subaction) take bare
     // operands; a stray one anywhere else is a mistake (`nodio swarm 8`),
     // not something to silently ignore.
-    if !matches!(args.command.as_str(), "replay" | "trace")
+    if !matches!(args.command.as_str(), "replay" | "trace" | "http")
         && args.positional_count() > 0
     {
         bail!(
@@ -82,6 +98,7 @@ pub fn dispatch(args: &Args) -> Result<()> {
         "server" => cmd_server(args),
         "client" => cmd_client(args),
         "swarm" => cmd_swarm(args),
+        "http" => cmd_http(args),
         "replay" => cmd_replay(args),
         "baseline" => cmd_baseline(args),
         "shootout" => cmd_shootout(args),
@@ -123,6 +140,25 @@ fn persist_args(
     }))
 }
 
+/// Shared `--peer` / `--gossip-listen` / `--gossip-every` / `--node`
+/// handling (the multi-backend federation flags).
+fn federation_args(args: &Args) -> Result<Option<FederationConfig>> {
+    let peers: Vec<String> =
+        args.get_multi("peer").iter().map(|s| s.to_string()).collect();
+    let listen = args.get("gossip-listen").map(str::to_string);
+    if peers.is_empty() && listen.is_none() {
+        return Ok(None);
+    }
+    Ok(Some(FederationConfig {
+        listen,
+        peers,
+        gossip_interval: Duration::from_millis(
+            args.get_u64("gossip-every", 250).map_err(|e| anyhow!(e))?,
+        ),
+        node: args.get("node").map(str::to_string),
+    }))
+}
+
 fn cmd_server(args: &Args) -> Result<()> {
     let addr = args.get_or("addr", "127.0.0.1:8080").to_string();
     let shards = args.get_usize("shards", 1).map_err(|e| anyhow!(e))?;
@@ -140,6 +176,7 @@ fn cmd_server(args: &Args) -> Result<()> {
             args.get_u64("migration-ms", 100).map_err(|e| anyhow!(e))?,
         ),
         migration_k: args.get_usize("migration-k", 3).map_err(|e| anyhow!(e))?,
+        federation: federation_args(args)?,
         base: config,
     };
     // The handle stays alive for the process lifetime — dropping it would
@@ -153,6 +190,9 @@ fn cmd_server(args: &Args) -> Result<()> {
         );
     } else {
         println!("nodio pool server listening on {}", running.addr());
+    }
+    if let Some(gossip) = running.gossip_addr() {
+        println!("nodio gossip listening on {gossip}");
     }
     println!("routes: PUT /experiment/chromosome (object or batch array),");
     println!("        GET /experiment/random, GET /experiment/state,");
@@ -170,6 +210,44 @@ fn cmd_server(args: &Args) -> Result<()> {
     loop {
         std::thread::sleep(Duration::from_secs(3600));
     }
+}
+
+/// `nodio http <METHOD> <URL> [--body JSON]` — a one-shot HTTP probe so
+/// shell scripts (ci/federation_smoke.sh) can drive and inspect pool
+/// servers with no dependency beyond the nodio binary itself.
+fn cmd_http(args: &Args) -> Result<()> {
+    const USAGE_HTTP: &str =
+        "usage: nodio http <METHOD> <URL> [--body JSON] [--timeout-s 10]";
+    let method_s = args
+        .positional(0)
+        .ok_or_else(|| anyhow!("{USAGE_HTTP}"))?;
+    let url = args.positional(1).ok_or_else(|| anyhow!("{USAGE_HTTP}"))?;
+    let method = Method::parse(method_s.to_ascii_uppercase().as_str())
+        .ok_or_else(|| anyhow!("unknown method {method_s}"))?;
+    let rest = url.strip_prefix("http://").unwrap_or(url);
+    let (host, path) = match rest.find('/') {
+        Some(i) => (&rest[..i], &rest[i..]),
+        None => (rest, "/"),
+    };
+    let mut client = HttpClient::connect(host)
+        .map_err(|e| anyhow!("connect {host}: {e}"))?;
+    client.set_timeout(Duration::from_secs_f64(
+        args.get_f64("timeout-s", 10.0).map_err(|e| anyhow!(e))?,
+    ));
+    let mut req = Request::new(method, path);
+    if let Some(body) = args.get("body") {
+        req.body = body.as_bytes().to_vec();
+        req.headers
+            .push(("content-type".into(), "application/json".into()));
+    }
+    let resp = client.send(&req).map_err(|e| anyhow!("{url}: {e}"))?;
+    if !resp.body.is_empty() {
+        println!("{}", String::from_utf8_lossy(&resp.body));
+    }
+    if resp.status >= 400 {
+        bail!("{url}: HTTP {}", resp.status);
+    }
+    Ok(())
 }
 
 fn cmd_replay(args: &Args) -> Result<()> {
@@ -256,10 +334,20 @@ fn cmd_client(args: &Args) -> Result<()> {
 
 fn cmd_swarm(args: &Args) -> Result<()> {
     let churn_rate = args.get_f64("churn-rate", 0.0).map_err(|e| anyhow!(e))?;
+    let backends = args.get_usize("backends", 1).map_err(|e| anyhow!(e))?;
     let config = SwarmConfig {
         n_clients: args.get_usize("clients", 4).map_err(|e| anyhow!(e))?,
         shards: args.get_usize("shards", 1).map_err(|e| anyhow!(e))?,
         persist: persist_args(args, None)?,
+        peers: args
+            .get_multi("peer")
+            .iter()
+            .map(|s| s.to_string())
+            .collect(),
+        gossip_listen: args.get("gossip-listen").map(str::to_string),
+        gossip_every: Duration::from_millis(
+            args.get_u64("gossip-every", 250).map_err(|e| anyhow!(e))?,
+        ),
         engine: engine_arg(args)?,
         mode: match args.get_or("mode", "w2") {
             "basic" => WorkerMode::Basic,
@@ -278,6 +366,44 @@ fn cmd_swarm(args: &Args) -> Result<()> {
         }),
         ..Default::default()
     };
+    if backends > 1 {
+        if !config.peers.is_empty() || config.gossip_listen.is_some() {
+            // run_federated_swarm wires its own localhost federation;
+            // silently ignoring user-supplied links would be worse than
+            // refusing.
+            bail!(
+                "--backends builds its own gossip links; it cannot be \
+                 combined with --peer/--gossip-listen"
+            );
+        }
+        // The multi-process scenario: N federated in-process backends
+        // linked over localhost TCP, clients spread round-robin.
+        println!(
+            "federated swarm: {} clients over {} backends ({} shard(s) \
+             each), target {} solutions at EVERY backend",
+            config.n_clients,
+            backends,
+            config.shards.max(1),
+            config.target_solutions,
+        );
+        let report = crate::sim::run_federated_swarm(config, backends)?;
+        println!(
+            "solutions={} (federation-agreed) elapsed={} requests={} \
+             evals={}",
+            report.solutions,
+            fmt_duration(report.elapsed),
+            report.total_requests,
+            report
+                .client_stats
+                .iter()
+                .map(|s| s.evaluations)
+                .sum::<u64>(),
+        );
+        for (i, c) in report.per_backend_completed.iter().enumerate() {
+            println!("  backend {i}: {c} completed");
+        }
+        return Ok(());
+    }
     println!(
         "swarm: {} clients ({:?}, {}), target {} solutions, {} shard(s)",
         config.n_clients,

@@ -64,6 +64,9 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use super::experiment::{bump_count, ExperimentLog};
+use super::federation::{
+    self, FederationConfig, FederationHub, FedOutbound,
+};
 use super::persistence::{
     self, PersistConfig, RecoveredShard, ShardPersistence, ShardState,
 };
@@ -84,6 +87,7 @@ use crate::http::{Method, Request, Response, Service};
 use crate::json::{self, Json, PutBody};
 use crate::problems::{PackedBits, Trap};
 use crate::rng::Xoshiro256pp;
+use crate::util::unix_ms;
 
 /// Largest accepted batched-PUT array (mirrors
 /// [`super::routes::MAX_PUT_BATCH`]): bounds how long one request can
@@ -106,6 +110,10 @@ pub struct ClusterConfig {
     pub migration_interval: Duration,
     /// How many of a shard's best entries each gossip round carries.
     pub migration_k: usize,
+    /// Multi-backend federation ([`super::federation`]): TCP gossip
+    /// between processes over the WAL wire format. `None` = this process
+    /// is the whole pool (the pre-federation behavior).
+    pub federation: Option<FederationConfig>,
 }
 
 impl Default for ClusterConfig {
@@ -115,6 +123,7 @@ impl Default for ClusterConfig {
             base: PoolServerConfig::default(),
             migration_interval: Duration::from_millis(100),
             migration_k: 3,
+            federation: None,
         }
     }
 }
@@ -122,7 +131,7 @@ impl Default for ClusterConfig {
 /// Map f64 to a u64 whose unsigned order matches the f64 total order, so
 /// the cluster-wide best fitness is one `fetch_max` away (no locks on the
 /// PUT path).
-fn ordered_key(f: f64) -> u64 {
+pub(crate) fn ordered_key(f: f64) -> u64 {
     let bits = f.to_bits();
     if bits >> 63 == 1 {
         !bits
@@ -141,23 +150,24 @@ fn key_to_f64(k: u64) -> f64 {
 
 /// A handoff queue between exactly one producer and one consumer thread
 /// (acceptor -> shard for connections; peer shard -> shard for migration
-/// batches, where each producer pushes rarely). The mutex is held for a
-/// push or a drain only — never across I/O or request handling — so the
-/// request path stays effectively lock-free.
-struct Handoff<T> {
+/// batches, where each producer pushes rarely; shard -> federation driver
+/// for outbound gossip). The mutex is held for a push or a drain only —
+/// never across I/O or request handling — so the request path stays
+/// effectively lock-free.
+pub(crate) struct Handoff<T> {
     q: Mutex<VecDeque<T>>,
 }
 
 impl<T> Handoff<T> {
-    fn new() -> Handoff<T> {
+    pub(crate) fn new() -> Handoff<T> {
         Handoff { q: Mutex::new(VecDeque::new()) }
     }
 
-    fn push(&self, value: T) {
+    pub(crate) fn push(&self, value: T) {
         self.q.lock().unwrap().push_back(value);
     }
 
-    fn drain(&self) -> Vec<T> {
+    pub(crate) fn drain(&self) -> Vec<T> {
         let mut q = self.q.lock().unwrap();
         q.drain(..).collect()
     }
@@ -165,17 +175,20 @@ impl<T> Handoff<T> {
 
 /// One gossip payload: a snapshot of a shard's best entries, tagged with
 /// the experiment epoch it belongs to (stale batches are dropped).
-struct MigrationBatch {
-    experiment: u64,
-    entries: Vec<PoolEntry>,
+/// Shared with [`super::federation`]: an inbound remote batch is merged
+/// through the same per-shard dedup path as local gossip.
+pub(crate) struct MigrationBatch {
+    pub(crate) experiment: u64,
+    pub(crate) entries: Vec<PoolEntry>,
 }
 
 /// Per-shard mailbox + observability counters, readable by every shard
-/// (for the aggregated routes) and by the handle.
-struct ShardSlot {
-    waker: Waker,
+/// (for the aggregated routes), by the handle, and by the federation
+/// driver (inbound remote batches land in `migrations_in`).
+pub(crate) struct ShardSlot {
+    pub(crate) waker: Waker,
     conns_in: Handoff<TcpStream>,
-    migrations_in: Handoff<MigrationBatch>,
+    pub(crate) migrations_in: Handoff<MigrationBatch>,
     puts: AtomicU64,
     gets: AtomicU64,
     /// Connections the acceptor routed here (cumulative).
@@ -185,7 +198,7 @@ struct ShardSlot {
     /// Current partition size.
     pool_len: AtomicU64,
     /// Gossip entries merged into this partition (cumulative).
-    migrations_rx: AtomicU64,
+    pub(crate) migrations_rx: AtomicU64,
     /// `GET /experiment/random` responses served from the per-shard
     /// render cache (cumulative).
     cache_hits: AtomicU64,
@@ -197,7 +210,7 @@ struct ShardSlot {
 }
 
 impl ShardSlot {
-    fn new(waker: Waker) -> ShardSlot {
+    pub(crate) fn new(waker: Waker) -> ShardSlot {
         ShardSlot {
             waker,
             conns_in: Handoff::new(),
@@ -215,10 +228,12 @@ impl ShardSlot {
 }
 
 /// Cluster-global state: the experiment epoch, fan-in counters, and the
-/// completed-experiment history.
-struct ClusterShared {
+/// completed-experiment history. Also the contact surface for the
+/// federation driver: remote epoch observations fast-forward the epoch
+/// and merge the remote winner's record here.
+pub(crate) struct ClusterShared {
     target_fitness: f64,
-    experiment: AtomicU64,
+    pub(crate) experiment: AtomicU64,
     puts: AtomicU64,
     gets: AtomicU64,
     /// Cumulative counts at the start of the current experiment, so
@@ -226,9 +241,17 @@ struct ClusterShared {
     exp_base_puts: AtomicU64,
     exp_base_gets: AtomicU64,
     /// `ordered_key` of the best fitness seen this experiment.
-    best_key: AtomicU64,
-    started: Mutex<Instant>,
+    pub(crate) best_key: AtomicU64,
+    /// Wall-clock start of the live experiment (Unix ms). Persisted in
+    /// epoch WAL records/snapshots and restored on recovery, so
+    /// `/experiment/state` reports true experiment age across restarts.
+    pub(crate) started_at_ms: AtomicU64,
     completed: Mutex<Vec<ExperimentLog>>,
+    /// A remote winner's [`ExperimentLog`] awaiting durable adoption: the
+    /// first shard to observe the fast-forwarded epoch takes it and WALs
+    /// it in its epoch-transition record, so remote-won experiments
+    /// survive a local restart.
+    pending_epoch_log: Mutex<Option<ExperimentLog>>,
     shutdown: AtomicBool,
 }
 
@@ -239,14 +262,16 @@ impl ClusterShared {
     /// Cumulative totals (`/stats` total_requests) restart as history
     /// sums + the live experiment's counters, with the per-experiment
     /// bases at the history sums — single-loop `total_requests()`
-    /// parity. The experiment wall clock restarts now (elapsed time is
-    /// not persisted).
-    fn recovered(
+    /// parity. `started_at_ms` is the recovered experiment's persisted
+    /// wall-clock start (0 = unknown: the clock starts now).
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn recovered(
         target_fitness: f64,
         experiment: u64,
         puts: u64,
         gets: u64,
         best_fitness: f64,
+        started_at_ms: u64,
         completed: Vec<ExperimentLog>,
     ) -> ClusterShared {
         let hist_puts: u64 = completed.iter().map(|l| l.puts).sum();
@@ -263,18 +288,39 @@ impl ClusterShared {
             } else {
                 f64::NEG_INFINITY
             })),
-            started: Mutex::new(Instant::now()),
+            started_at_ms: AtomicU64::new(if started_at_ms == 0 {
+                unix_ms()
+            } else {
+                started_at_ms
+            }),
             completed: Mutex::new(completed),
+            pending_epoch_log: Mutex::new(None),
             shutdown: AtomicBool::new(false),
         }
     }
 
-    fn best_fitness(&self) -> f64 {
+    /// Wall-clock age of the live experiment.
+    fn elapsed(&self) -> Duration {
+        Duration::from_millis(
+            unix_ms()
+                .saturating_sub(self.started_at_ms.load(Ordering::Relaxed)),
+        )
+    }
+
+    pub(crate) fn best_fitness(&self) -> f64 {
         key_to_f64(self.best_key.load(Ordering::Acquire))
     }
 
-    fn completed_count(&self) -> u64 {
+    pub(crate) fn completed_count(&self) -> u64 {
         self.completed.lock().unwrap().len() as u64
+    }
+
+    /// Most recent completed experiment (highest id — the list is kept
+    /// sorted). The federation driver sends this to peers that announce
+    /// an older epoch, so a peer whose link was down at the instant of a
+    /// solution still converges on the winner's record.
+    pub(crate) fn latest_completed(&self) -> Option<ExperimentLog> {
+        self.completed.lock().unwrap().last().cloned()
     }
 
     /// Close the current experiment epoch if `expected` is still current.
@@ -302,12 +348,8 @@ impl ClusterShared {
         {
             return None;
         }
-        let elapsed = {
-            let mut started = self.started.lock().unwrap();
-            let elapsed = started.elapsed();
-            *started = Instant::now();
-            elapsed
-        };
+        let elapsed = self.elapsed();
+        self.started_at_ms.store(unix_ms(), Ordering::Relaxed);
         let puts_now = self.puts.load(Ordering::Relaxed);
         let gets_now = self.gets.load(Ordering::Relaxed);
         let log = ExperimentLog {
@@ -325,6 +367,71 @@ impl ClusterShared {
         self.best_key
             .store(ordered_key(f64::NEG_INFINITY), Ordering::Release);
         Some(log)
+    }
+
+    /// Adopt a higher experiment epoch observed from a federated peer: a
+    /// remote solution ends the experiment here exactly like an
+    /// in-process shard's CAS would. Per-experiment aggregates reset, the
+    /// remote epoch's start stamp is adopted, and the remote winner's
+    /// record (if carried) joins the history (deduplicated by id) and is
+    /// queued for durable adoption by the next shard to WAL its epoch
+    /// transition. Returns true when the epoch actually advanced; `to`
+    /// at or below the current epoch only merges the record.
+    pub(crate) fn fast_forward(
+        &self,
+        to: u64,
+        log: Option<ExperimentLog>,
+        started_at_ms: u64,
+    ) -> bool {
+        let mut advanced = false;
+        loop {
+            let cur = self.experiment.load(Ordering::Acquire);
+            if to <= cur {
+                break;
+            }
+            if self
+                .experiment
+                .compare_exchange(cur, to, Ordering::AcqRel, Ordering::Acquire)
+                .is_ok()
+            {
+                let puts_now = self.puts.load(Ordering::Relaxed);
+                let gets_now = self.gets.load(Ordering::Relaxed);
+                self.exp_base_puts.store(puts_now, Ordering::Relaxed);
+                self.exp_base_gets.store(gets_now, Ordering::Relaxed);
+                self.best_key
+                    .store(ordered_key(f64::NEG_INFINITY), Ordering::Release);
+                self.started_at_ms.store(
+                    if started_at_ms == 0 { unix_ms() } else { started_at_ms },
+                    Ordering::Relaxed,
+                );
+                advanced = true;
+                break;
+            }
+        }
+        if let Some(log) = log {
+            let mut completed = self.completed.lock().unwrap();
+            let fresh = !completed.iter().any(|l| l.id == log.id);
+            if fresh {
+                completed.push(log.clone());
+                completed.sort_by_key(|l| l.id);
+            }
+            drop(completed);
+            // Queue for durable adoption only when this record belongs to
+            // the transition the shards are about to WAL. A record for an
+            // epoch we already passed joins the in-memory history above
+            // but is not persisted — attaching it to some later unrelated
+            // transition would misattribute it in the WAL.
+            if advanced && fresh {
+                *self.pending_epoch_log.lock().unwrap() = Some(log);
+            }
+        }
+        advanced
+    }
+
+    /// Whether the cluster is shutting down (read by the federation
+    /// driver's loop).
+    pub(crate) fn is_shutdown(&self) -> bool {
+        self.shutdown.load(Ordering::Acquire)
     }
 }
 
@@ -346,6 +453,12 @@ struct ShardCfg {
     /// Durable state replayed on the spawning thread (so errors surface
     /// from `spawn`), taken by the shard thread at startup.
     recovered: Option<RecoveredShard>,
+    /// Multi-backend federation: shards push their best-K entries and
+    /// epoch transitions here; the federation driver forwards them to
+    /// every connected peer process.
+    federation: Option<Arc<FederationHub>>,
+    /// Cadence of this shard's outbound federation gossip.
+    fed_gossip_interval: Duration,
 }
 
 /// The request handler + partition state owned by one shard thread. Plain
@@ -389,6 +502,7 @@ struct ShardService {
     /// DoS guard (parity): per-UUID token bucket, per shard.
     rate_limiter: Option<RateLimiter>,
     persist: Option<ShardPersistence>,
+    federation: Option<Arc<FederationHub>>,
     shared: Arc<ClusterShared>,
     slots: Arc<Vec<ShardSlot>>,
 }
@@ -403,7 +517,17 @@ impl ShardService {
         let persist = cfg.persist.as_ref().and_then(|pc| {
             let dir = persistence::shard_dir(&pc.data_dir, cfg.id);
             match ShardPersistence::open(&dir, pc, &recovered) {
-                Ok(p) => Some(p),
+                Ok(mut p) => {
+                    if !recovered.had_history() {
+                        // First boot: WAL the epoch-0 start stamp so a
+                        // restart reports true experiment age.
+                        p.record_start(
+                            recovered.state.experiment,
+                            shared.started_at_ms.load(Ordering::Relaxed),
+                        );
+                    }
+                    Some(p)
+                }
                 Err(e) => {
                     eprintln!(
                         "nodio shard {}: persistence disabled ({}: {e})",
@@ -447,6 +571,7 @@ impl ShardService {
                 .rate_limit
                 .map(|(rate, burst)| RateLimiter::new(rate, burst)),
             persist,
+            federation: cfg.federation.clone(),
             shared,
             slots,
         };
@@ -513,6 +638,10 @@ impl ShardService {
             puts: self.epoch_puts,
             gets: self.epoch_gets,
             best_fitness: self.epoch_best,
+            started_at_ms: self
+                .shared
+                .started_at_ms
+                .load(Ordering::Relaxed),
             accepted: self.pool.accepted(),
             per_uuid,
             completed: self.closed.clone(),
@@ -547,7 +676,14 @@ impl ShardService {
     /// partition, reset per-experiment counters.
     fn advance_epoch_locally(&mut self, to: u64, log: Option<&ExperimentLog>) {
         if let Some(p) = &mut self.persist {
-            p.record_epoch(self.local_experiment, to, log);
+            // The shared stamp was already reset to the new epoch's start
+            // by whoever won the finish CAS (or fast-forwarded it).
+            p.record_epoch(
+                self.local_experiment,
+                to,
+                log,
+                self.shared.started_at_ms.load(Ordering::Relaxed),
+            );
         }
         if let Some(l) = log {
             self.closed.push(l.clone());
@@ -563,11 +699,15 @@ impl ShardService {
     }
 
     /// Catch up with the global experiment epoch: a solution (or reset) on
-    /// any shard clears every partition.
+    /// any shard — or a federated peer's fast-forward — clears every
+    /// partition. If a remote winner's record is pending, this shard
+    /// adopts it durably (WALs it in its epoch record).
     fn sync_epoch(&mut self) {
         let global = self.shared.experiment.load(Ordering::Acquire);
         if global != self.local_experiment {
-            self.advance_epoch_locally(global, None);
+            let remote_log =
+                self.shared.pending_epoch_log.lock().unwrap().take();
+            self.advance_epoch_locally(global, remote_log.as_ref());
         }
     }
 
@@ -610,21 +750,24 @@ impl ShardService {
         }
     }
 
+    /// This shard's best-K pool entries by fitness (the gossip payload).
+    fn best_entries(&self, k: usize) -> Vec<PoolEntry> {
+        let mut by_fitness: Vec<&PoolEntry> =
+            self.pool.entries().iter().collect();
+        by_fitness.sort_by(|a, b| b.fitness.total_cmp(&a.fitness));
+        by_fitness.iter().take(k).map(|e| (*e).clone()).collect()
+    }
+
     /// Send this shard's best-K entries to every peer (the island-model
     /// migration step, applied to pool partitions).
     fn gossip(&mut self) {
         if self.slots.len() <= 1 || self.pool.is_empty() {
             return;
         }
-        let mut by_fitness: Vec<&PoolEntry> =
-            self.pool.entries().iter().collect();
-        by_fitness.sort_by(|a, b| b.fitness.total_cmp(&a.fitness));
-        let k = self.migration_k.min(by_fitness.len());
-        if k == 0 {
+        let best = self.best_entries(self.migration_k);
+        if best.is_empty() {
             return;
         }
-        let best: Vec<PoolEntry> =
-            by_fitness[..k].iter().map(|e| (*e).clone()).collect();
         for (i, slot) in self.slots.iter().enumerate() {
             if i == self.id {
                 continue;
@@ -635,6 +778,25 @@ impl ShardService {
             });
             slot.waker.wake();
         }
+    }
+
+    /// Push this shard's best-K entries to the federation driver, which
+    /// forwards them to every connected remote peer as a CRC-framed
+    /// `migration` record — the island-model step one level further up:
+    /// whole processes are islands of the pool.
+    fn federation_gossip(&mut self) {
+        let Some(hub) = &self.federation else { return };
+        if self.pool.is_empty() {
+            return;
+        }
+        let best = self.best_entries(self.migration_k);
+        if best.is_empty() {
+            return;
+        }
+        hub.push(FedOutbound::Migration(MigrationBatch {
+            experiment: self.local_experiment,
+            entries: best,
+        }));
     }
 
     fn total_pool_len(&self) -> u64 {
@@ -855,6 +1017,20 @@ impl ShardService {
                     slot.waker.wake();
                 }
             }
+            // Tell federated peers the experiment ended: they
+            // fast-forward their epoch and adopt this record, so the
+            // federation converges on one winner.
+            if let Some(hub) = &self.federation {
+                hub.push(FedOutbound::Epoch {
+                    from: to - 1,
+                    to,
+                    record: record.clone(),
+                    started_at_ms: self
+                        .shared
+                        .started_at_ms
+                        .load(Ordering::Relaxed),
+                });
+            }
         }
         self.sync_epoch();
         let mut resp = Json::obj(vec![
@@ -962,8 +1138,7 @@ impl ShardService {
             .gets
             .load(Ordering::Relaxed)
             .saturating_sub(self.shared.exp_base_gets.load(Ordering::Relaxed));
-        let elapsed_s =
-            self.shared.started.lock().unwrap().elapsed().as_secs_f64();
+        let elapsed_s = self.shared.elapsed().as_secs_f64();
         Response::json(&Json::obj(vec![
             (
                 "experiment",
@@ -1045,13 +1220,17 @@ impl ShardService {
         );
         let total = self.shared.puts.load(Ordering::Relaxed)
             + self.shared.gets.load(Ordering::Relaxed);
-        Response::json(&Json::obj(vec![
+        let mut body = Json::obj(vec![
             ("total_requests", total.into()),
             ("shards", self.slots.len().into()),
             ("per_uuid", self.merged_per_uuid()),
             ("per_shard", self.per_shard_json()),
             ("experiments", experiments),
-        ]))
+        ]);
+        if let Some(hub) = &self.federation {
+            body.set("federation", hub.stats_json());
+        }
+        Response::json(&body)
     }
 
     /// Completed-experiment history — recovered records (WAL/snapshot
@@ -1097,6 +1276,19 @@ impl ShardService {
         ) {
             let to = self.local_experiment + 1;
             self.advance_epoch_locally(to, Some(&log));
+            // A manual reset propagates across the federation like a
+            // solution: peers fast-forward to the new epoch.
+            if let Some(hub) = &self.federation {
+                hub.push(FedOutbound::Epoch {
+                    from: to - 1,
+                    to,
+                    record: Some(log),
+                    started_at_ms: self
+                        .shared
+                        .started_at_ms
+                        .load(Ordering::Relaxed),
+                });
+            }
         }
         // Lost CAS means a concurrent solution/reset already ended the
         // epoch — either way the experiment the caller saw is over.
@@ -1215,6 +1407,7 @@ fn shard_loop(
         ShardService::new(&cfg, recovered, shared.clone(), slots.clone());
     let mut events: Vec<Event> = Vec::new();
     let mut last_gossip = Instant::now();
+    let mut last_fed_gossip = Instant::now();
     let id = cfg.id;
 
     while !shared.shutdown.load(Ordering::Acquire) {
@@ -1238,6 +1431,12 @@ fn shard_loop(
         if last_gossip.elapsed() >= cfg.migration_interval {
             last_gossip = Instant::now();
             service.gossip();
+        }
+        if cfg.federation.is_some()
+            && last_fed_gossip.elapsed() >= cfg.fed_gossip_interval
+        {
+            last_fed_gossip = Instant::now();
+            service.federation_gossip();
         }
         service.publish_per_uuid();
         service.maybe_snapshot();
@@ -1334,11 +1533,18 @@ impl ShardedPoolServer {
         let completed = persistence::merge_completed(&recovered);
         let (mut puts0, mut gets0) = (0u64, 0u64);
         let mut best0 = f64::NEG_INFINITY;
+        let mut started0 = 0u64;
         for r in &recovered {
             if r.state.experiment == epoch {
                 puts0 += r.state.puts;
                 gets0 += r.state.gets;
                 best0 = best0.max(r.state.best_fitness);
+                // Latest recorded stamp wins: every shard records roughly
+                // the same transition instant, except a shard that raced
+                // the epoch CAS and WAL'd the PREVIOUS experiment's stamp
+                // — which is strictly older, so max() filters it (the
+                // winner's own record always carries the correct stamp).
+                started0 = started0.max(r.state.started_at_ms);
             }
         }
         if !completed.is_empty() || epoch > 0 {
@@ -1354,6 +1560,7 @@ impl ShardedPoolServer {
             puts0,
             gets0,
             best0,
+            started0,
             completed,
         ));
         let stats = Arc::new(ServerStats::default());
@@ -1367,8 +1574,34 @@ impl ShardedPoolServer {
         }
         let slots = Arc::new(slots);
 
+        // Multi-backend federation: bind the gossip listener and start
+        // the peer driver before the shards, so every shard holds the
+        // hub it pushes outbound gossip through.
+        let mut gossip_addr = None;
+        let mut fed_thread = None;
+        let hub = match &config.federation {
+            Some(fc) => {
+                let hub = Arc::new(FederationHub::new(fc)?);
+                let (bound, thread) = federation::spawn_driver(
+                    fc.clone(),
+                    shared.clone(),
+                    slots.clone(),
+                    hub.clone(),
+                )?;
+                gossip_addr = bound;
+                fed_thread = Some(thread);
+                Some(hub)
+            }
+            None => None,
+        };
+        let fed_gossip_interval = config
+            .federation
+            .as_ref()
+            .map(|f| f.gossip_interval)
+            .unwrap_or(Duration::from_millis(250));
+
         let per_shard_capacity = (config.base.pool_capacity / n).max(1);
-        let mut threads = Vec::with_capacity(n + 1);
+        let mut threads = Vec::with_capacity(n + 2);
         for (id, waker) in shard_wakers.into_iter().enumerate() {
             let cfg = ShardCfg {
                 id,
@@ -1385,6 +1618,8 @@ impl ShardedPoolServer {
                     &mut recovered[id],
                     RecoveredShard::fresh(),
                 )),
+                federation: hub.clone(),
+                fed_gossip_interval,
             };
             let shared = shared.clone();
             let slots = slots.clone();
@@ -1416,7 +1651,19 @@ impl ShardedPoolServer {
             );
         }
 
-        Ok(ClusterHandle { addr, shared, slots, stats, threads })
+        if let Some(t) = fed_thread {
+            threads.push(t);
+        }
+
+        Ok(ClusterHandle {
+            addr,
+            gossip_addr,
+            shared,
+            slots,
+            stats,
+            hub,
+            threads,
+        })
     }
 }
 
@@ -1431,10 +1678,13 @@ pub enum PoolBackend {
 impl PoolBackend {
     /// Spawn the backend selected by `config.shards`. With one shard the
     /// single-loop [`PoolServer`] runs; otherwise the sharded cluster.
+    /// Federation always runs on the cluster backend (a federated
+    /// single-shard process is a 1-shard cluster): the gossip driver
+    /// plugs into the shard mailboxes the single loop doesn't have.
     /// Verification and rate limiting work on both (the only remaining
     /// single-loop exclusive is the audit event log).
     pub fn spawn(addr: &str, config: ClusterConfig) -> io::Result<PoolBackend> {
-        if config.shards > 1 {
+        if config.shards > 1 || config.federation.is_some() {
             Ok(PoolBackend::Sharded(ShardedPoolServer::spawn(addr, config)?))
         } else {
             Ok(PoolBackend::Single(PoolServer::spawn(addr, config.base)?))
@@ -1445,6 +1695,14 @@ impl PoolBackend {
         match self {
             PoolBackend::Single(h) => h.addr,
             PoolBackend::Sharded(h) => h.addr,
+        }
+    }
+
+    /// Bound federation gossip listener, when configured.
+    pub fn gossip_addr(&self) -> Option<SocketAddr> {
+        match self {
+            PoolBackend::Single(_) => None,
+            PoolBackend::Sharded(h) => h.gossip_addr,
         }
     }
 
@@ -1466,9 +1724,13 @@ impl PoolBackend {
 /// Owner handle for a running cluster: address, aggregate stats, shutdown.
 pub struct ClusterHandle {
     pub addr: SocketAddr,
+    /// Bound federation gossip listener, when one was configured (peers
+    /// dial this to exchange WAL-framed migration/epoch records).
+    pub gossip_addr: Option<SocketAddr>,
     shared: Arc<ClusterShared>,
     slots: Arc<Vec<ShardSlot>>,
     stats: Arc<ServerStats>,
+    hub: Option<Arc<FederationHub>>,
     threads: Vec<JoinHandle<()>>,
 }
 
@@ -1500,6 +1762,9 @@ impl ClusterHandle {
         self.shared.shutdown.store(true, Ordering::Release);
         for slot in self.slots.iter() {
             slot.waker.wake();
+        }
+        if let Some(hub) = &self.hub {
+            hub.wake();
         }
         for t in self.threads.drain(..) {
             let _ = t.join();
@@ -1543,6 +1808,7 @@ mod tests {
             },
             migration_interval: Duration::from_millis(20),
             migration_k: 2,
+            federation: None,
         }
     }
 
@@ -2130,6 +2396,120 @@ mod tests {
             .unwrap();
         assert_ne!(resp.status, 429);
         handle.stop();
+    }
+
+    /// Two federated backends (in-process stand-ins for two `nodio
+    /// server` processes — same TCP wire path): a dial-only peer linked
+    /// to a listening peer.
+    fn federated_pair(target: f64) -> (ClusterHandle, ClusterHandle) {
+        let mut cfg_a = fast_config(1, target);
+        cfg_a.federation = Some(FederationConfig {
+            listen: Some("127.0.0.1:0".into()),
+            gossip_interval: Duration::from_millis(20),
+            ..FederationConfig::default()
+        });
+        let a = ShardedPoolServer::spawn("127.0.0.1:0", cfg_a).unwrap();
+        let gossip = a.gossip_addr.expect("listener bound");
+        let mut cfg_b = fast_config(1, target);
+        cfg_b.federation = Some(FederationConfig {
+            peers: vec![gossip.to_string()],
+            gossip_interval: Duration::from_millis(20),
+            ..FederationConfig::default()
+        });
+        let b = ShardedPoolServer::spawn("127.0.0.1:0", cfg_b).unwrap();
+        (a, b)
+    }
+
+    #[test]
+    fn federation_gossip_propagates_best_between_backends() {
+        let (a, b) = federated_pair(1e18);
+        let mut ca = HttpClient::connect(a.addr).unwrap();
+        let mut cb = HttpClient::connect(b.addr).unwrap();
+
+        // A non-solving PUT at backend A...
+        assert_eq!(
+            ca.send(&put_req("01010101", 4.0, "a")).unwrap().status,
+            200
+        );
+        // ...reaches backend B's pool over the TCP gossip link.
+        let migrated = wait_until(Duration::from_secs(10), || {
+            cb.send(&Request::new(Method::Get, "/experiment/random"))
+                .map(|r| r.status == 200)
+                .unwrap_or(false)
+        });
+        assert!(migrated, "entry never gossiped to the peer backend");
+        let body = cb
+            .send(&Request::new(Method::Get, "/experiment/random"))
+            .unwrap()
+            .json_body()
+            .unwrap();
+        assert_eq!(body.get_str("chromosome"), Some("01010101"));
+        // Best fitness converges at the peer, not only where the PUT hit.
+        let state = cb
+            .send(&Request::new(Method::Get, "/experiment/state"))
+            .unwrap()
+            .json_body()
+            .unwrap();
+        assert_eq!(state.get_f64("best_fitness"), Some(4.0));
+        // Both ends report live federation links in /stats.
+        let stats = cb
+            .send(&Request::new(Method::Get, "/stats"))
+            .unwrap()
+            .json_body()
+            .unwrap();
+        let fed = stats.get("federation").expect("federation stats");
+        assert_eq!(fed.get_u64("links"), Some(1));
+        assert!(fed.get_u64("batches_rx").unwrap_or(0) >= 1, "{stats}");
+        b.stop();
+        a.stop();
+    }
+
+    #[test]
+    fn federation_solution_terminates_remote_backend() {
+        let (a, b) = federated_pair(8.0);
+        let mut ca = HttpClient::connect(a.addr).unwrap();
+        let mut cb = HttpClient::connect(b.addr).unwrap();
+
+        // Seed a non-solving entry at A so its partition must clear.
+        assert_eq!(
+            ca.send(&put_req("01010101", 4.0, "a")).unwrap().status,
+            200
+        );
+        // The solution lands at B; A must observe the termination, adopt
+        // the winner's record, and clear its partition.
+        assert_eq!(
+            cb.send(&put_req("11111111", 8.0, "b")).unwrap().status,
+            201
+        );
+        let seen = wait_until(Duration::from_secs(10), || {
+            ca.send(&Request::new(Method::Get, "/experiment/state"))
+                .ok()
+                .and_then(|r| r.json_body().ok())
+                .map(|s| {
+                    s.get_u64("experiment") == Some(1)
+                        && s.get_u64("completed") == Some(1)
+                })
+                .unwrap_or(false)
+        });
+        assert!(seen, "backend A never observed the remote termination");
+        let cleared = wait_until(Duration::from_secs(10), || {
+            ca.send(&Request::new(Method::Get, "/experiment/random"))
+                .map(|r| r.status == 204)
+                .unwrap_or(false)
+        });
+        assert!(cleared, "backend A kept a dead epoch's entries");
+        // The remote winner's record is in A's history.
+        let history = ca
+            .send(&Request::new(Method::Get, "/experiment/history"))
+            .unwrap()
+            .json_body()
+            .unwrap();
+        let experiments =
+            history.get("experiments").unwrap().as_arr().unwrap();
+        assert_eq!(experiments[0].get_str("solved_by"), Some("b"));
+        assert_eq!(experiments[0].get_str("solution"), Some("11111111"));
+        b.stop();
+        a.stop();
     }
 
     #[test]

@@ -3,9 +3,10 @@
 //! when the solution is found" (paper section 2).
 
 use std::collections::HashMap;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use crate::json::Json;
+use crate::util::unix_ms;
 
 /// Increment `map[key]`, allocating the owned key only on first sight.
 /// `HashMap::entry(key.to_string())` clones the key on *every* call; the
@@ -85,7 +86,10 @@ pub struct ExperimentManager {
     /// Expected chromosome length (PUT validation).
     pub n_bits: usize,
     current_id: u64,
-    started: Instant,
+    /// Wall-clock start of the live experiment (Unix ms). Persisted in
+    /// epoch WAL records and snapshots, so a recovered experiment's
+    /// elapsed time counts from its true start, not from the restart.
+    started_at_ms: u64,
     puts: u64,
     gets: u64,
     best_fitness: f64,
@@ -101,7 +105,7 @@ impl ExperimentManager {
             target_fitness,
             n_bits,
             current_id: 0,
-            started: Instant::now(),
+            started_at_ms: unix_ms(),
             puts: 0,
             gets: 0,
             best_fitness: f64::NEG_INFINITY,
@@ -126,8 +130,21 @@ impl ExperimentManager {
         self.best_fitness
     }
 
+    /// Wall-clock age of the live experiment. Measured against the
+    /// persisted start stamp, so it is continuous across restarts (PR 2
+    /// restarted this clock on recovery — the documented gap). Tradeoff:
+    /// wall clock is what survives processes and hosts, but an NTP step
+    /// mid-experiment skews the reading (a backwards step saturates to
+    /// 0) — accepted, since the stamp must be meaningful to a different
+    /// process, possibly on a different machine.
     pub fn elapsed(&self) -> Duration {
-        self.started.elapsed()
+        Duration::from_millis(unix_ms().saturating_sub(self.started_at_ms))
+    }
+
+    /// Unix-ms start stamp of the live experiment (what snapshots and
+    /// epoch WAL records persist).
+    pub fn started_at_ms(&self) -> u64 {
+        self.started_at_ms
     }
 
     pub fn completed(&self) -> &[ExperimentLog] {
@@ -169,7 +186,7 @@ impl ExperimentManager {
     ) -> ExperimentLog {
         let log = ExperimentLog {
             id: self.current_id,
-            elapsed: self.started.elapsed(),
+            elapsed: self.elapsed(),
             puts: self.puts,
             gets: self.gets,
             best_fitness: self.best_fitness,
@@ -178,7 +195,7 @@ impl ExperimentManager {
         };
         self.completed.push(log.clone());
         self.current_id += 1;
-        self.started = Instant::now();
+        self.started_at_ms = unix_ms();
         self.puts = 0;
         self.gets = 0;
         self.best_fitness = f64::NEG_INFINITY;
@@ -186,9 +203,10 @@ impl ExperimentManager {
     }
 
     /// Restore recovered state (WAL/snapshot replay) into a fresh manager.
-    /// The wall clock restarts now: elapsed time is not persisted, so a
-    /// resumed experiment's `elapsed` counts from the restart (documented
-    /// persistence tradeoff).
+    /// `started_at_ms` is the experiment's persisted wall-clock start (0 =
+    /// unknown, e.g. data written before the stamp existed — the clock
+    /// then restarts now, the pre-fix behavior).
+    #[allow(clippy::too_many_arguments)]
     pub fn restore(
         &mut self,
         current_id: u64,
@@ -197,6 +215,7 @@ impl ExperimentManager {
         best_fitness: f64,
         per_uuid: HashMap<String, u64>,
         completed: Vec<ExperimentLog>,
+        started_at_ms: u64,
     ) {
         self.current_id = current_id;
         self.puts = puts;
@@ -204,7 +223,8 @@ impl ExperimentManager {
         self.best_fitness = best_fitness;
         self.per_uuid = per_uuid;
         self.completed = completed;
-        self.started = Instant::now();
+        self.started_at_ms =
+            if started_at_ms == 0 { unix_ms() } else { started_at_ms };
     }
 
     /// Totals across completed + current.

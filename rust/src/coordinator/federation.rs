@@ -1,0 +1,1020 @@
+//! Multi-backend federation: TCP gossip between `nodio server` processes
+//! over the WAL wire format.
+//!
+//! The ROADMAP's multi-backend rung, built exactly as the persistence
+//! layer anticipated: a remote peer is literally a WAL reader/writer on a
+//! socket. Every gossip link carries newline-delimited CRC-framed JSON
+//! records ([`wal::FrameWriter`]/[`wal::FrameReader`]) with the same
+//! `t`/`seq`/`experiment` members the on-disk log uses:
+//!
+//! * `hello` — sent once per connection: the sender's node id and current
+//!   experiment epoch. A receiver that is behind fast-forwards
+//!   immediately; a receiver that is AHEAD replies with an `epoch` record
+//!   carrying the latest winner's log, so a peer that was disconnected at
+//!   the instant of a solution still converges on it when it reconnects.
+//! * `migration` — a best-K batch in the v2 packed form, identical to the
+//!   WAL's `migration` record minus the eviction slots (the receiver
+//!   chooses its own). Inbound batches merge through the same per-shard
+//!   dedup path as local inter-shard gossip and are WAL'd there, so a
+//!   restarted peer replays remote immigrants like any other state.
+//! * `epoch` — an experiment-epoch transition with the winner's
+//!   [`ExperimentLog`]: a peer observing a higher epoch fast-forwards
+//!   termination exactly like an in-process shard, so a federation
+//!   converges on one winner.
+//!
+//! `seq` (stamped per link by the sender's [`wal::FrameWriter`]) gives
+//! per-link delivery ordering and duplicate suppression; the CRC frame
+//! gives the same torn-record tolerance as file-tail recovery, with
+//! [`wal::FrameReader`] resynchronizing at the next newline instead of
+//! stopping. Delivery is at-least-once per link — gossip rounds re-send
+//! the current best-K — and merges are idempotent (chromosome dedup), so
+//! lost connections only delay convergence, never corrupt it.
+//!
+//! The driver runs one dedicated thread per process: a nonblocking epoll
+//! loop (the same event-loop core the request path uses) multiplexing the
+//! gossip listener and every peer link, with reconnect + exponential
+//! backoff for configured `--peer` targets. Shards hand it outbound
+//! batches through a mailbox ([`FederationHub`]) and receive inbound
+//! batches through their existing migration mailboxes — gossip I/O never
+//! runs on, or stalls, a request-serving event loop. (Dialing a dead peer
+//! blocks this driver thread for at most the 300 ms connect timeout,
+//! bounded further by the backoff schedule.)
+
+use std::collections::HashMap;
+use std::io::{self, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::os::fd::AsRawFd;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::cluster::{
+    ordered_key, ClusterShared, Handoff, MigrationBatch, ShardSlot,
+};
+use super::experiment::ExperimentLog;
+use super::persistence::snapshot::entry_from_json;
+use super::persistence::wal::{FrameReader, FrameWriter};
+use super::pool::PoolEntry;
+use crate::eventloop::{Epoll, Event, Interest, Waker};
+use crate::json::Json;
+
+const TOKEN_LISTENER: u64 = 0;
+const TOKEN_WAKER: u64 = 1;
+const TOKEN_BASE: u64 = 2;
+
+/// Driver loop tick (also bounds shutdown latency).
+const TICK: Duration = Duration::from_millis(100);
+/// Blocking-connect budget for one dial attempt.
+const DIAL_TIMEOUT: Duration = Duration::from_millis(300);
+const INITIAL_BACKOFF: Duration = Duration::from_millis(200);
+const MAX_BACKOFF: Duration = Duration::from_secs(10);
+/// A link whose peer cannot drain this much pending output is dropped
+/// (reconnect recovers it); bounds memory per slow/dead peer.
+const MAX_LINK_BUFFER: usize = 1 << 20;
+
+/// Federation settings, carried by
+/// [`super::cluster::ClusterConfig::federation`].
+#[derive(Debug, Clone)]
+pub struct FederationConfig {
+    /// Gossip acceptor address (`--gossip-listen host:port`). `None` =
+    /// dial-only (this process initiates every link it has).
+    pub listen: Option<String>,
+    /// Peer gossip addresses to dial (`--peer host:port`, repeatable).
+    /// Links are symmetric once established: both sides send and receive.
+    pub peers: Vec<String>,
+    /// How often each shard sends its best-K entries to every connected
+    /// peer (`--gossip-every` ms).
+    pub gossip_interval: Duration,
+    /// Node id announced in `hello` records (default: `pid-<pid>`).
+    pub node: Option<String>,
+}
+
+impl Default for FederationConfig {
+    fn default() -> Self {
+        FederationConfig {
+            listen: None,
+            peers: Vec::new(),
+            gossip_interval: Duration::from_millis(250),
+            node: None,
+        }
+    }
+}
+
+/// What shards hand the driver for broadcast to every connected peer.
+pub(crate) enum FedOutbound {
+    /// A shard's best-K entries (the island-model migration step at
+    /// process level).
+    Migration(MigrationBatch),
+    /// A locally won (or manually reset) experiment-epoch transition.
+    Epoch {
+        from: u64,
+        to: u64,
+        record: Option<ExperimentLog>,
+        started_at_ms: u64,
+    },
+}
+
+/// Wire-visible counters, surfaced under `"federation"` in `/stats`.
+#[derive(Default)]
+pub(crate) struct FederationStats {
+    pub(crate) records_tx: AtomicU64,
+    pub(crate) records_rx: AtomicU64,
+    pub(crate) batches_rx: AtomicU64,
+    pub(crate) entries_rx: AtomicU64,
+    pub(crate) stale_dropped: AtomicU64,
+    pub(crate) dup_dropped: AtomicU64,
+    pub(crate) epochs_rx: AtomicU64,
+    pub(crate) fast_forwards: AtomicU64,
+    pub(crate) reconnects: AtomicU64,
+    pub(crate) frames_dropped: AtomicU64,
+    /// Currently connected links (gauge).
+    pub(crate) links: AtomicU64,
+}
+
+/// The mailbox between request-serving shards and the federation driver:
+/// shards push outbound gossip and wake the driver; routes read the
+/// counters. One hub per process.
+pub(crate) struct FederationHub {
+    outbox: Handoff<FedOutbound>,
+    waker: Waker,
+    pub(crate) stats: Arc<FederationStats>,
+    node: String,
+    peers: usize,
+}
+
+impl FederationHub {
+    pub(crate) fn new(cfg: &FederationConfig) -> io::Result<FederationHub> {
+        Ok(FederationHub {
+            outbox: Handoff::new(),
+            waker: Waker::new()?,
+            stats: Arc::new(FederationStats::default()),
+            node: cfg
+                .node
+                .clone()
+                .unwrap_or_else(|| format!("pid-{}", std::process::id())),
+            peers: cfg.peers.len(),
+        })
+    }
+
+    /// Queue an outbound record and wake the driver.
+    pub(crate) fn push(&self, item: FedOutbound) {
+        self.outbox.push(item);
+        self.waker.wake();
+    }
+
+    /// Wake the driver without queueing (shutdown).
+    pub(crate) fn wake(&self) {
+        self.waker.wake();
+    }
+
+    fn drain_waker(&self) {
+        self.waker.drain();
+    }
+
+    fn waker_fd(&self) -> std::os::fd::RawFd {
+        self.waker.fd()
+    }
+
+    pub(crate) fn node(&self) -> &str {
+        &self.node
+    }
+
+    /// The `/stats` `"federation"` object.
+    pub(crate) fn stats_json(&self) -> Json {
+        let s = &self.stats;
+        let load = |a: &AtomicU64| Json::from(a.load(Ordering::Relaxed));
+        Json::obj(vec![
+            ("node", self.node.as_str().into()),
+            ("peers", self.peers.into()),
+            ("links", load(&s.links)),
+            ("records_tx", load(&s.records_tx)),
+            ("records_rx", load(&s.records_rx)),
+            ("batches_rx", load(&s.batches_rx)),
+            ("entries_rx", load(&s.entries_rx)),
+            ("stale_dropped", load(&s.stale_dropped)),
+            ("dup_dropped", load(&s.dup_dropped)),
+            ("epochs_rx", load(&s.epochs_rx)),
+            ("fast_forwards", load(&s.fast_forwards)),
+            ("reconnects", load(&s.reconnects)),
+            ("frames_dropped", load(&s.frames_dropped)),
+        ])
+    }
+}
+
+// ----------------------------------------------------------------------
+// Wire records (the WAL record shapes, reused verbatim).
+// ----------------------------------------------------------------------
+
+fn hello_record(node: &str, experiment: u64) -> Json {
+    Json::obj(vec![
+        ("t", "hello".into()),
+        ("node", node.into()),
+        ("experiment", experiment.into()),
+    ])
+}
+
+fn migration_record(batch: &MigrationBatch) -> Json {
+    let items = batch
+        .entries
+        .iter()
+        .map(|e| {
+            Json::obj(vec![
+                ("packed", e.chromosome.to_hex().into()),
+                ("n_bits", e.chromosome.n_bits().into()),
+                ("fitness", e.fitness.into()),
+                ("uuid", e.uuid.as_str().into()),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("t", "migration".into()),
+        ("v", 2u64.into()),
+        ("experiment", batch.experiment.into()),
+        ("entries", Json::Arr(items)),
+    ])
+}
+
+fn epoch_record(
+    from: u64,
+    to: u64,
+    record: Option<&ExperimentLog>,
+    started_at_ms: u64,
+) -> Json {
+    Json::obj(vec![
+        ("t", "epoch".into()),
+        ("from", from.into()),
+        ("to", to.into()),
+        ("started_at_ms", started_at_ms.into()),
+        (
+            "record",
+            record.map(|l| l.to_json()).unwrap_or(Json::Null),
+        ),
+    ])
+}
+
+// ----------------------------------------------------------------------
+// Inbound protocol handling (socket-free, so loopback tests cover it).
+// ----------------------------------------------------------------------
+
+/// Applies decoded wire records against cluster state. Owns no sockets —
+/// the driver feeds it records, tests feed it records decoded from
+/// in-memory pipes.
+pub(crate) struct FederationCore {
+    shared: Arc<ClusterShared>,
+    slots: Arc<Vec<ShardSlot>>,
+    stats: Arc<FederationStats>,
+    /// Round-robin target for inbound batches (spread across shards).
+    next_shard: usize,
+}
+
+impl FederationCore {
+    pub(crate) fn new(
+        shared: Arc<ClusterShared>,
+        slots: Arc<Vec<ShardSlot>>,
+        stats: Arc<FederationStats>,
+    ) -> FederationCore {
+        FederationCore { shared, slots, stats, next_shard: 0 }
+    }
+
+    fn shutdown(&self) -> bool {
+        self.shared.is_shutdown()
+    }
+
+    /// Apply one decoded record from a link whose receive high-water mark
+    /// is `last_rx_seq`. Records at or below the mark are duplicates
+    /// (at-least-once delivery) and dropped; the merge itself is also
+    /// idempotent, so the seq gate is belt-and-suspenders ordering, not a
+    /// correctness requirement. A `Some` return is a reply record the
+    /// caller must send back on the same link (the hello catch-up).
+    pub(crate) fn apply_record(
+        &mut self,
+        last_rx_seq: &mut u64,
+        rec: &Json,
+    ) -> Option<Json> {
+        let seq = rec.get_u64("seq").unwrap_or(0);
+        if seq != 0 {
+            if seq <= *last_rx_seq {
+                self.stats.dup_dropped.fetch_add(1, Ordering::Relaxed);
+                return None;
+            }
+            *last_rx_seq = seq;
+        }
+        self.stats.records_rx.fetch_add(1, Ordering::Relaxed);
+        match rec.get_str("t") {
+            Some("hello") => {
+                // A peer already in a later experiment ends ours now.
+                let exp = rec.get_u64("experiment")?;
+                self.fast_forward(exp, None, 0);
+                // And a peer that is BEHIND missed a termination while
+                // disconnected (epoch records are not re-gossiped):
+                // answer with the transition + the latest winner's
+                // record so its history converges too.
+                let ours = self.shared.experiment.load(Ordering::Acquire);
+                if exp < ours {
+                    return Some(epoch_record(
+                        exp,
+                        ours,
+                        self.shared.latest_completed().as_ref(),
+                        self.shared.started_at_ms.load(Ordering::Relaxed),
+                    ));
+                }
+                None
+            }
+            Some("epoch") => {
+                let to = rec.get_u64("to")?;
+                self.stats.epochs_rx.fetch_add(1, Ordering::Relaxed);
+                let log =
+                    rec.get("record").and_then(ExperimentLog::from_json);
+                let started = rec.get_u64("started_at_ms").unwrap_or(0);
+                self.fast_forward(to, log, started);
+                None
+            }
+            Some("migration") => {
+                self.apply_migration(rec);
+                None
+            }
+            _ => None,
+        }
+    }
+
+    fn apply_migration(&mut self, rec: &Json) {
+        let Some(exp) = rec.get_u64("experiment") else { return };
+        let global = self.shared.experiment.load(Ordering::Acquire);
+        if exp < global {
+            // The sender's experiment already ended: its entries belong
+            // to a dead epoch.
+            self.stats.stale_dropped.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        if exp > global {
+            // The sender is ahead (we missed its epoch record): catch up
+            // first, then merge its entries into the new epoch's pool.
+            self.fast_forward(exp, None, 0);
+        }
+        let Some(items) = rec.get("entries").and_then(Json::as_arr) else {
+            return;
+        };
+        let mut entries: Vec<PoolEntry> = Vec::with_capacity(items.len());
+        for item in items {
+            if let Some(e) = entry_from_json(item) {
+                if e.fitness.is_finite() {
+                    entries.push(e);
+                }
+            }
+        }
+        if entries.is_empty() {
+            return;
+        }
+        // Converged observability: the federation-wide best fitness is
+        // visible at every peer, not only where the PUT landed.
+        for e in &entries {
+            self.shared
+                .best_key
+                .fetch_max(ordered_key(e.fitness), Ordering::AcqRel);
+        }
+        self.stats.batches_rx.fetch_add(1, Ordering::Relaxed);
+        self.stats
+            .entries_rx
+            .fetch_add(entries.len() as u64, Ordering::Relaxed);
+        // Deliver through the same mailbox local inter-shard gossip uses:
+        // the receiving shard dedups, inserts, and WALs the merge.
+        let idx = self.next_shard % self.slots.len();
+        self.next_shard = self.next_shard.wrapping_add(1);
+        let slot = &self.slots[idx];
+        slot.migrations_in.push(MigrationBatch { experiment: exp, entries });
+        slot.waker.wake();
+    }
+
+    fn fast_forward(&self, to: u64, log: Option<ExperimentLog>, ms: u64) {
+        if self.shared.fast_forward(to, log, ms) {
+            self.stats.fast_forwards.fetch_add(1, Ordering::Relaxed);
+            // Shards clear their dead-epoch partitions now, not at the
+            // next tick.
+            for slot in self.slots.iter() {
+                slot.waker.wake();
+            }
+        }
+    }
+}
+
+// ----------------------------------------------------------------------
+// The socket driver.
+// ----------------------------------------------------------------------
+
+/// One live gossip link (dialed or accepted — symmetric after the
+/// handshake: both sides send and receive).
+struct Link {
+    stream: TcpStream,
+    reader: FrameReader,
+    /// Outbound records, framed and seq-stamped per link; `sent` marks
+    /// the flushed prefix of the writer's buffer.
+    wr: FrameWriter<Vec<u8>>,
+    sent: usize,
+    last_rx_seq: u64,
+    want_write: bool,
+    /// Reader drop-count already folded into the shared stats.
+    dropped_seen: u64,
+    /// Index into the dial targets when this link was outbound (for
+    /// reconnect bookkeeping); `None` for accepted links.
+    target: Option<usize>,
+}
+
+impl Link {
+    fn pending(&self) -> usize {
+        self.wr.get_ref().len() - self.sent
+    }
+}
+
+/// One configured `--peer` dial target with its backoff state.
+struct DialTarget {
+    addr: String,
+    backoff: Duration,
+    next_attempt: Instant,
+    connected: bool,
+}
+
+fn dial(addr: &str) -> io::Result<TcpStream> {
+    let sa = addr
+        .to_socket_addrs()?
+        .next()
+        .ok_or_else(|| io::Error::other("peer address resolved to nothing"))?;
+    let stream = TcpStream::connect_timeout(&sa, DIAL_TIMEOUT)?;
+    stream.set_nonblocking(true)?;
+    let _ = stream.set_nodelay(true);
+    Ok(stream)
+}
+
+/// Read everything available into the link's frame reader. Returns true
+/// when the link should drop (peer closed or errored).
+fn read_link(link: &mut Link, read_buf: &mut [u8]) -> bool {
+    loop {
+        match link.stream.read(read_buf) {
+            Ok(0) => return true,
+            Ok(n) => link.reader.feed(&read_buf[..n]),
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(_) => return true,
+        }
+    }
+    false
+}
+
+/// Flush pending output. Returns true when the link should drop.
+fn flush_link(link: &mut Link) -> bool {
+    while link.sent < link.wr.get_ref().len() {
+        let n = {
+            let buf = link.wr.get_ref();
+            match link.stream.write(&buf[link.sent..]) {
+                Ok(0) => return true,
+                Ok(n) => n,
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(_) => return true,
+            }
+        };
+        link.sent += n;
+    }
+    if link.sent > 0 && link.sent >= link.wr.get_ref().len() {
+        link.wr.get_mut().clear();
+        link.sent = 0;
+    }
+    false
+}
+
+fn update_interest(epoll: &Epoll, token: u64, link: &mut Link) {
+    let want = link.pending() > 0;
+    if want != link.want_write {
+        let interest = if want { Interest::BOTH } else { Interest::READ };
+        let _ = epoll.modify(link.stream.as_raw_fd(), token, interest);
+        link.want_write = want;
+    }
+}
+
+struct Driver {
+    core: FederationCore,
+    epoll: Epoll,
+    listener: Option<TcpListener>,
+    links: HashMap<u64, Link>,
+    targets: Vec<DialTarget>,
+    next_token: u64,
+    read_buf: Vec<u8>,
+    hub: Arc<FederationHub>,
+    node: String,
+}
+
+impl Driver {
+    fn run(mut self) {
+        let mut events: Vec<Event> = Vec::new();
+        while !self.core.shutdown() {
+            if self.epoll.wait(Some(TICK), &mut events).is_err() {
+                break;
+            }
+            for ev in &events {
+                match ev.token {
+                    TOKEN_LISTENER => self.accept_all(),
+                    TOKEN_WAKER => self.hub.drain_waker(),
+                    token => self.handle_link_event(token, ev),
+                }
+            }
+            self.broadcast();
+            self.dial_pending();
+            self.hub
+                .stats
+                .links
+                .store(self.links.len() as u64, Ordering::Relaxed);
+        }
+    }
+
+    fn accept_all(&mut self) {
+        let mut accepted = Vec::new();
+        if let Some(listener) = &self.listener {
+            loop {
+                match listener.accept() {
+                    Ok((stream, _peer)) => accepted.push(stream),
+                    Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                    Err(_) => break,
+                }
+            }
+        }
+        for stream in accepted {
+            self.add_link(stream, None);
+        }
+    }
+
+    /// Adopt a connected stream as a live link (greeting the peer).
+    /// Returns false when registration failed.
+    fn add_link(&mut self, stream: TcpStream, target: Option<usize>) -> bool {
+        if stream.set_nonblocking(true).is_err() {
+            return false;
+        }
+        let _ = stream.set_nodelay(true);
+        let token = self.next_token;
+        self.next_token += 1;
+        if self
+            .epoll
+            .add(stream.as_raw_fd(), token, Interest::READ)
+            .is_err()
+        {
+            return false;
+        }
+        let mut link = Link {
+            stream,
+            reader: FrameReader::new(),
+            wr: FrameWriter::new(Vec::new(), 0),
+            sent: 0,
+            last_rx_seq: 0,
+            want_write: false,
+            dropped_seen: 0,
+            target,
+        };
+        let hello = hello_record(
+            &self.node,
+            self.core.shared.experiment.load(Ordering::Acquire),
+        );
+        let _ = link.wr.append(hello);
+        self.hub.stats.records_tx.fetch_add(1, Ordering::Relaxed);
+        if flush_link(&mut link) {
+            self.epoll.remove(link.stream.as_raw_fd());
+            return false;
+        }
+        update_interest(&self.epoll, token, &mut link);
+        self.links.insert(token, link);
+        true
+    }
+
+    fn handle_link_event(&mut self, token: u64, ev: &Event) {
+        let mut drop_link = ev.closed;
+        if let Some(link) = self.links.get_mut(&token) {
+            if ev.readable && !drop_link {
+                drop_link |= read_link(link, &mut self.read_buf);
+                while let Some(rec) = link.reader.next_record() {
+                    if let Some(reply) =
+                        self.core.apply_record(&mut link.last_rx_seq, &rec)
+                    {
+                        let _ = link.wr.append(reply);
+                        self.hub
+                            .stats
+                            .records_tx
+                            .fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+                let dropped = link.reader.dropped();
+                if dropped > link.dropped_seen {
+                    self.hub.stats.frames_dropped.fetch_add(
+                        dropped - link.dropped_seen,
+                        Ordering::Relaxed,
+                    );
+                    link.dropped_seen = dropped;
+                }
+            }
+            if !drop_link && (ev.writable || link.pending() > 0) {
+                drop_link |= flush_link(link);
+            }
+            if !drop_link {
+                update_interest(&self.epoll, token, link);
+            }
+        } else {
+            return;
+        }
+        if drop_link {
+            self.drop_link(token);
+        }
+    }
+
+    fn drop_link(&mut self, token: u64) {
+        if let Some(link) = self.links.remove(&token) {
+            self.epoll.remove(link.stream.as_raw_fd());
+            if let Some(i) = link.target {
+                let t = &mut self.targets[i];
+                t.connected = false;
+                t.next_attempt = Instant::now() + t.backoff;
+                t.backoff = (t.backoff * 2).min(MAX_BACKOFF);
+                self.hub.stats.reconnects.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Forward everything the shards queued to every connected link.
+    /// With no links up, items are dropped — periodic gossip re-sends the
+    /// current best-K, so nothing needs buffering for dead peers.
+    fn broadcast(&mut self) {
+        let items = self.hub.outbox.drain();
+        if items.is_empty() {
+            return;
+        }
+        let mut dead: Vec<u64> = Vec::new();
+        for item in items {
+            let rec = match &item {
+                FedOutbound::Migration(batch) => migration_record(batch),
+                FedOutbound::Epoch { from, to, record, started_at_ms } => {
+                    epoch_record(*from, *to, record.as_ref(), *started_at_ms)
+                }
+            };
+            for (token, link) in self.links.iter_mut() {
+                if link.wr.append(rec.clone()).is_err()
+                    || link.pending() > MAX_LINK_BUFFER
+                {
+                    dead.push(*token);
+                    continue;
+                }
+                self.hub.stats.records_tx.fetch_add(1, Ordering::Relaxed);
+                if flush_link(link) {
+                    dead.push(*token);
+                }
+            }
+        }
+        for (token, link) in self.links.iter_mut() {
+            update_interest(&self.epoll, *token, link);
+        }
+        dead.sort_unstable();
+        dead.dedup();
+        for token in dead {
+            self.drop_link(token);
+        }
+    }
+
+    fn dial_pending(&mut self) {
+        let now = Instant::now();
+        for i in 0..self.targets.len() {
+            if self.targets[i].connected || now < self.targets[i].next_attempt
+            {
+                continue;
+            }
+            let ok = match dial(&self.targets[i].addr) {
+                Ok(stream) => self.add_link(stream, Some(i)),
+                Err(_) => false,
+            };
+            let t = &mut self.targets[i];
+            if ok {
+                t.connected = true;
+                t.backoff = INITIAL_BACKOFF;
+            } else {
+                t.next_attempt = now + t.backoff;
+                t.backoff = (t.backoff * 2).min(MAX_BACKOFF);
+            }
+        }
+    }
+}
+
+/// Bind the gossip listener (if configured) and start the driver thread.
+/// Returns the bound listener address (so `--gossip-listen :0` callers
+/// can discover it) and the thread handle; the thread exits when the
+/// cluster's shutdown flag is set (wake the hub to hasten it).
+pub(crate) fn spawn_driver(
+    cfg: FederationConfig,
+    shared: Arc<ClusterShared>,
+    slots: Arc<Vec<ShardSlot>>,
+    hub: Arc<FederationHub>,
+) -> io::Result<(Option<SocketAddr>, JoinHandle<()>)> {
+    let listener = match &cfg.listen {
+        Some(addr) => {
+            let l = TcpListener::bind(addr.as_str())?;
+            l.set_nonblocking(true)?;
+            Some(l)
+        }
+        None => None,
+    };
+    let bound = match &listener {
+        Some(l) => Some(l.local_addr()?),
+        None => None,
+    };
+    let epoll = Epoll::new()?;
+    if let Some(l) = &listener {
+        epoll.add(l.as_raw_fd(), TOKEN_LISTENER, Interest::READ)?;
+    }
+    epoll.add(hub.waker_fd(), TOKEN_WAKER, Interest::READ)?;
+    let now = Instant::now();
+    let targets = cfg
+        .peers
+        .iter()
+        .map(|addr| DialTarget {
+            addr: addr.clone(),
+            backoff: INITIAL_BACKOFF,
+            next_attempt: now,
+            connected: false,
+        })
+        .collect();
+    let node = hub.node().to_string();
+    let driver = Driver {
+        core: FederationCore::new(shared, slots, hub.stats.clone()),
+        epoll,
+        listener,
+        links: HashMap::new(),
+        targets,
+        next_token: TOKEN_BASE,
+        read_buf: vec![0u8; 64 * 1024],
+        hub,
+        node,
+    };
+    let thread = std::thread::Builder::new()
+        .name("nodio-federation".into())
+        .spawn(move || driver.run())?;
+    Ok((bound, thread))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::problems::PackedBits;
+
+    fn entry(c: &str, fitness: f64, uuid: &str) -> PoolEntry {
+        PoolEntry {
+            chromosome: PackedBits::from_str01(c).unwrap(),
+            fitness,
+            uuid: uuid.into(),
+        }
+    }
+
+    /// A socket-free federation endpoint: cluster state + core, with two
+    /// shard mailboxes.
+    #[allow(clippy::type_complexity)]
+    fn endpoint(experiment: u64) -> (
+        Arc<ClusterShared>,
+        Arc<Vec<ShardSlot>>,
+        Arc<FederationStats>,
+        FederationCore,
+    ) {
+        let shared = Arc::new(ClusterShared::recovered(
+            1e18,
+            experiment,
+            0,
+            0,
+            f64::NEG_INFINITY,
+            0,
+            Vec::new(),
+        ));
+        let slots = Arc::new(vec![
+            ShardSlot::new(Waker::new().unwrap()),
+            ShardSlot::new(Waker::new().unwrap()),
+        ]);
+        let stats = Arc::new(FederationStats::default());
+        let core =
+            FederationCore::new(shared.clone(), slots.clone(), stats.clone());
+        (shared, slots, stats, core)
+    }
+
+    /// Encode records through the wire format (FrameWriter over an
+    /// in-memory pipe) and decode them back — the loopback "socket".
+    fn loopback(records: Vec<Json>) -> Vec<Json> {
+        let mut w = FrameWriter::new(Vec::new(), 0);
+        for rec in records {
+            w.append(rec).unwrap();
+        }
+        let bytes = w.into_inner();
+        let mut r = FrameReader::new();
+        r.feed(&bytes);
+        let mut out = Vec::new();
+        while let Some(rec) = r.next_record() {
+            out.push(rec);
+        }
+        out
+    }
+
+    #[test]
+    fn loopback_migration_batch_reaches_a_shard_mailbox() {
+        let (shared, slots, stats, mut core) = endpoint(0);
+        let batch = MigrationBatch {
+            experiment: 0,
+            entries: vec![entry("01010101", 4.0, "peer")],
+        };
+        let wire = loopback(vec![
+            hello_record("peer", 0),
+            migration_record(&batch),
+        ]);
+        assert_eq!(wire.len(), 2);
+        let mut last_seq = 0;
+        for rec in &wire {
+            core.apply_record(&mut last_seq, rec);
+        }
+        assert_eq!(stats.records_rx.load(Ordering::Relaxed), 2);
+        assert_eq!(stats.batches_rx.load(Ordering::Relaxed), 1);
+        assert_eq!(stats.entries_rx.load(Ordering::Relaxed), 1);
+        // Round-robin delivery starts at shard 0; the entry survives the
+        // wire byte-for-byte.
+        let delivered = slots[0].migrations_in.drain();
+        assert_eq!(delivered.len(), 1);
+        assert_eq!(delivered[0].experiment, 0);
+        assert_eq!(delivered[0].entries.len(), 1);
+        assert_eq!(delivered[0].entries[0].chromosome, "01010101");
+        assert_eq!(delivered[0].entries[0].fitness, 4.0);
+        assert!(slots[1].migrations_in.drain().is_empty());
+        // The federation-wide best is visible here before the merge.
+        assert_eq!(shared.best_fitness(), 4.0);
+    }
+
+    #[test]
+    fn per_link_seq_dedup_drops_replayed_records() {
+        let (_shared, slots, stats, mut core) = endpoint(0);
+        let batch = MigrationBatch {
+            experiment: 0,
+            entries: vec![entry("0101", 2.0, "peer")],
+        };
+        let wire = loopback(vec![migration_record(&batch)]);
+        let mut last_seq = 0;
+        core.apply_record(&mut last_seq, &wire[0]);
+        // The same frame again (duplicate delivery on one link): dropped
+        // by the seq gate before any state is touched.
+        core.apply_record(&mut last_seq, &wire[0]);
+        assert_eq!(stats.batches_rx.load(Ordering::Relaxed), 1);
+        assert_eq!(stats.dup_dropped.load(Ordering::Relaxed), 1);
+        assert_eq!(slots[0].migrations_in.drain().len(), 1);
+        // A fresh link (reconnect) starts a fresh seq space: the same
+        // content is delivered again and the idempotent merge dedups it.
+        let mut fresh_link_seq = 0;
+        core.apply_record(&mut fresh_link_seq, &wire[0]);
+        assert_eq!(stats.batches_rx.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn stale_epoch_batches_are_dropped() {
+        let (shared, slots, stats, mut core) = endpoint(2);
+        let batch = MigrationBatch {
+            experiment: 1, // an experiment this endpoint already finished
+            entries: vec![entry("0101", 9.0, "peer")],
+        };
+        let wire = loopback(vec![migration_record(&batch)]);
+        let mut last_seq = 0;
+        core.apply_record(&mut last_seq, &wire[0]);
+        assert_eq!(stats.stale_dropped.load(Ordering::Relaxed), 1);
+        assert_eq!(stats.batches_rx.load(Ordering::Relaxed), 0);
+        assert!(slots[0].migrations_in.drain().is_empty());
+        assert!(slots[1].migrations_in.drain().is_empty());
+        // The stale entry's fitness must not pollute the live best.
+        assert!(shared.best_fitness().is_infinite());
+    }
+
+    #[test]
+    fn remote_epoch_record_fast_forwards_termination() {
+        let (shared, _slots, stats, mut core) = endpoint(0);
+        let log = ExperimentLog {
+            id: 0,
+            elapsed: Duration::from_secs(3),
+            puts: 7,
+            gets: 2,
+            best_fitness: 8.0,
+            solved_by: Some("remote".into()),
+            solution: Some("11111111".into()),
+        };
+        let wire = loopback(vec![epoch_record(0, 1, Some(&log), 555)]);
+        let mut last_seq = 0;
+        core.apply_record(&mut last_seq, &wire[0]);
+        assert_eq!(shared.experiment.load(Ordering::Acquire), 1);
+        assert_eq!(shared.completed_count(), 1);
+        assert_eq!(shared.started_at_ms.load(Ordering::Relaxed), 555);
+        assert_eq!(stats.epochs_rx.load(Ordering::Relaxed), 1);
+        assert_eq!(stats.fast_forwards.load(Ordering::Relaxed), 1);
+        // The same epoch observed again (another link): no double count.
+        let mut other_link_seq = 0;
+        core.apply_record(&mut other_link_seq, &wire[0]);
+        assert_eq!(shared.experiment.load(Ordering::Acquire), 1);
+        assert_eq!(shared.completed_count(), 1);
+        assert_eq!(stats.fast_forwards.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn migration_from_a_newer_epoch_fast_forwards_then_delivers() {
+        let (shared, slots, stats, mut core) = endpoint(0);
+        let batch = MigrationBatch {
+            experiment: 5,
+            entries: vec![entry("0111", 3.0, "peer")],
+        };
+        let wire = loopback(vec![migration_record(&batch)]);
+        let mut last_seq = 0;
+        core.apply_record(&mut last_seq, &wire[0]);
+        assert_eq!(shared.experiment.load(Ordering::Acquire), 5);
+        assert_eq!(stats.fast_forwards.load(Ordering::Relaxed), 1);
+        let delivered = slots[0].migrations_in.drain();
+        assert_eq!(delivered.len(), 1);
+        assert_eq!(delivered[0].experiment, 5);
+    }
+
+    #[test]
+    fn hello_from_an_ahead_peer_fast_forwards() {
+        let (shared, _slots, stats, mut core) = endpoint(1);
+        let wire = loopback(vec![hello_record("peer", 4)]);
+        let mut last_seq = 0;
+        let reply = core.apply_record(&mut last_seq, &wire[0]);
+        assert!(reply.is_none());
+        assert_eq!(shared.experiment.load(Ordering::Acquire), 4);
+        assert_eq!(stats.fast_forwards.load(Ordering::Relaxed), 1);
+        // A hello from an equal-epoch peer changes nothing and needs no
+        // catch-up.
+        let wire = loopback(vec![hello_record("peer2", 4)]);
+        let mut other_link_seq = 0;
+        let reply = core.apply_record(&mut other_link_seq, &wire[0]);
+        assert!(reply.is_none());
+        assert_eq!(shared.experiment.load(Ordering::Acquire), 4);
+    }
+
+    #[test]
+    fn hello_from_a_behind_peer_is_answered_with_the_missed_epoch() {
+        // A peer whose link was down at the instant of a solution misses
+        // the epoch record (they are not re-gossiped); the hello it sends
+        // on reconnect is answered with the transition + winner's log.
+        let (shared, _slots, _stats, mut core) = endpoint(0);
+        let log = ExperimentLog {
+            id: 1,
+            elapsed: Duration::from_secs(2),
+            puts: 3,
+            gets: 1,
+            best_fitness: 8.0,
+            solved_by: Some("winner".into()),
+            solution: Some("11111111".into()),
+        };
+        assert!(shared.fast_forward(2, Some(log), 700));
+        let wire = loopback(vec![hello_record("laggard", 0)]);
+        let mut last_seq = 0;
+        let reply = core
+            .apply_record(&mut last_seq, &wire[0])
+            .expect("catch-up epoch record");
+        assert_eq!(reply.get_str("t"), Some("epoch"));
+        assert_eq!(reply.get_u64("from"), Some(0));
+        assert_eq!(reply.get_u64("to"), Some(2));
+        assert_eq!(reply.get_u64("started_at_ms"), Some(700));
+        let record = reply.get("record").expect("carries the winner's log");
+        assert_eq!(record.get_str("solved_by"), Some("winner"));
+        // Round-trip: the reply itself fast-forwards a fresh endpoint.
+        let (shared2, _slots2, _stats2, mut core2) = endpoint(0);
+        let wire = loopback(vec![reply]);
+        let mut seq2 = 0;
+        assert!(core2.apply_record(&mut seq2, &wire[0]).is_none());
+        assert_eq!(shared2.experiment.load(Ordering::Acquire), 2);
+        assert_eq!(shared2.completed_count(), 1);
+    }
+
+    #[test]
+    fn corrupt_frames_on_the_wire_drop_without_losing_the_link() {
+        // End-to-end through the byte layer: one record is damaged in
+        // flight; the reader drops it and the next record still applies.
+        let (_shared, slots, _stats, mut core) = endpoint(0);
+        let b1 = MigrationBatch {
+            experiment: 0,
+            entries: vec![entry("0001", 1.0, "a")],
+        };
+        let b2 = MigrationBatch {
+            experiment: 0,
+            entries: vec![entry("0011", 2.0, "b")],
+        };
+        let mut w = FrameWriter::new(Vec::new(), 0);
+        w.append(migration_record(&b1)).unwrap();
+        w.append(migration_record(&b2)).unwrap();
+        let mut bytes = w.into_inner();
+        // Corrupt a byte inside the first record's payload.
+        bytes[30] ^= 0x40;
+        let mut r = FrameReader::new();
+        r.feed(&bytes);
+        let mut last_seq = 0;
+        let mut applied = 0;
+        while let Some(rec) = r.next_record() {
+            core.apply_record(&mut last_seq, &rec);
+            applied += 1;
+        }
+        assert_eq!(applied, 1);
+        assert_eq!(r.dropped(), 1);
+        let delivered = slots[0].migrations_in.drain();
+        assert_eq!(delivered.len(), 1);
+        assert_eq!(delivered[0].entries[0].chromosome, "0011");
+    }
+}

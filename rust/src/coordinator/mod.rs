@@ -31,8 +31,14 @@
 //! replay snapshot+tail on startup — a restart resumes the live
 //! experiment instead of resetting it.
 
+//! With federation configured ([`federation`]), multiple server
+//! *processes* exchange best individuals and epoch transitions over TCP
+//! as CRC-framed WAL records — island-model scaling across hosts, the
+//! paper's "add more backends" claim made concrete.
+
 pub mod cluster;
 pub mod experiment;
+pub mod federation;
 pub mod logger;
 pub mod persistence;
 pub mod pool;
@@ -43,6 +49,7 @@ pub mod server;
 
 pub use cluster::{ClusterConfig, ClusterHandle, PoolBackend, ShardedPoolServer};
 pub use experiment::{ExperimentLog, ExperimentManager};
+pub use federation::FederationConfig;
 pub use persistence::{PersistConfig, ReplayedHistory, ShardPersistence};
 pub use pool::{ChromosomePool, PoolEntry};
 pub use security::{FitnessVerifier, RateLimiter, SaboteurLog};

@@ -44,7 +44,9 @@ pub mod wal;
 
 pub use recover::{merge_completed, recover_shard, RecoveredShard};
 pub use snapshot::{load_snapshot, write_snapshot, ShardState};
-pub use wal::{crc32, frame, scan, unframe, WalWriter};
+pub use wal::{
+    crc32, frame, scan, unframe, FrameReader, FrameWriter, WalWriter,
+};
 
 use std::fs;
 use std::io;
@@ -332,25 +334,41 @@ impl ShardPersistence {
     }
 
     /// Record an experiment-epoch transition. Only the shard that closed
-    /// the experiment carries its [`ExperimentLog`]. Synced to stable
-    /// storage: losing a finished experiment's record is worse than the
-    /// latency of one fsync per experiment.
+    /// the experiment carries its [`ExperimentLog`]. `started_at_ms` is
+    /// the new epoch's wall-clock start (Unix ms), restored on replay so
+    /// elapsed time survives restarts. Synced to stable storage: losing a
+    /// finished experiment's record is worse than the latency of one
+    /// fsync per experiment.
     pub fn record_epoch(
         &mut self,
         from: u64,
         to: u64,
         record: Option<&ExperimentLog>,
+        started_at_ms: u64,
     ) {
         self.append(Json::obj(vec![
             ("t", "epoch".into()),
             ("from", from.into()),
             ("to", to.into()),
+            ("started_at_ms", started_at_ms.into()),
             (
                 "record",
                 record.map(|l| l.to_json()).unwrap_or(Json::Null),
             ),
         ]));
         let _ = self.wal.sync();
+    }
+
+    /// Record the first-boot start marker: epoch `experiment` began at
+    /// `started_at_ms`. Epoch transitions carry the stamp for every later
+    /// epoch; without this marker a never-transitioned experiment would
+    /// restart its clock on recovery.
+    pub fn record_start(&mut self, experiment: u64, started_at_ms: u64) {
+        self.append(Json::obj(vec![
+            ("t", "start".into()),
+            ("experiment", experiment.into()),
+            ("started_at_ms", started_at_ms.into()),
+        ]));
     }
 
     /// Whether enough records accumulated to warrant a snapshot.
@@ -539,7 +557,7 @@ mod tests {
                 solved_by: Some("w".into()),
                 solution: Some("11111111".into()),
             };
-            p.record_epoch(0, 1, Some(&log));
+            p.record_epoch(0, 1, Some(&log), 1_700_000_000_000);
         }
         let h = replay_dir(&dir).unwrap();
         assert_eq!(h.experiment, 1);

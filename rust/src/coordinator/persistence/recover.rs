@@ -104,6 +104,20 @@ fn replay_record(state: &mut ShardState, rec: &Json, seq_floor: u64) {
             state.gets = 0;
             state.accepted = 0;
             state.best_fitness = f64::NEG_INFINITY;
+            // The transition record carries the new epoch's wall-clock
+            // start, so a recovered experiment's age is continuous
+            // across restarts (absent in PR 2 records: 0 = unknown).
+            state.started_at_ms =
+                rec.get_u64("started_at_ms").unwrap_or(0);
+        }
+        Some("start") => {
+            // First-boot marker: epoch 0 has no transition record, so a
+            // fresh WAL opens with one of these carrying its start stamp.
+            if rec.get_u64("experiment") == Some(state.experiment) {
+                if let Some(ms) = rec.get_u64("started_at_ms") {
+                    state.started_at_ms = ms;
+                }
+            }
         }
         // Audit events (the folded EventLog) carry no replayable state.
         _ => {}
@@ -369,6 +383,51 @@ mod tests {
         let merged = merge_completed(&[a, b]);
         let ids: Vec<u64> = merged.iter().map(|l| l.id).collect();
         assert_eq!(ids, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn replay_restores_experiment_start_stamp() {
+        use crate::coordinator::persistence::{
+            PersistConfig, ShardPersistence,
+        };
+        // Epoch transitions carry the new epoch's wall-clock start.
+        let dir = tmpdir("start-stamp");
+        let cfg = PersistConfig::new(&dir);
+        {
+            let fresh = RecoveredShard::fresh();
+            let mut p = ShardPersistence::open(&dir, &cfg, &fresh).unwrap();
+            p.record_start(0, 111);
+            let log = ExperimentLog {
+                id: 0,
+                elapsed: std::time::Duration::from_secs(1),
+                puts: 1,
+                gets: 0,
+                best_fitness: 8.0,
+                solved_by: None,
+                solution: None,
+            };
+            p.record_epoch(0, 1, Some(&log), 222);
+        }
+        let r = recover_shard(&dir).unwrap();
+        assert_eq!(r.state.experiment, 1);
+        assert_eq!(r.state.started_at_ms, 222);
+        let _ = std::fs::remove_dir_all(&dir);
+
+        // A never-transitioned experiment 0 is covered by the first-boot
+        // start marker alone.
+        let dir = tmpdir("start-stamp-epoch0");
+        let cfg = PersistConfig::new(&dir);
+        {
+            let fresh = RecoveredShard::fresh();
+            let mut p = ShardPersistence::open(&dir, &cfg, &fresh).unwrap();
+            p.record_start(0, 333);
+        }
+        let r = recover_shard(&dir).unwrap();
+        assert_eq!(r.state.experiment, 0);
+        assert_eq!(r.state.started_at_ms, 333);
+        // PR 2-era data without any stamp recovers to 0 (= restart now).
+        assert_eq!(ShardState::empty().started_at_ms, 0);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

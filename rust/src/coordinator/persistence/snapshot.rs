@@ -41,6 +41,10 @@ pub struct ShardState {
     /// Best fitness seen via PUT this experiment (NEG_INFINITY if none);
     /// stored as null in JSON when not finite.
     pub best_fitness: f64,
+    /// Wall-clock start of the live experiment (Unix ms; 0 = unknown,
+    /// i.e. data written before the stamp existed). Restored on replay so
+    /// `/experiment/state` reports true experiment age across restarts.
+    pub started_at_ms: u64,
     /// Pool lifetime-accepted counter (puts + merged migrations).
     pub accepted: u64,
     /// Cumulative per-UUID request accounting (survives experiment
@@ -104,6 +108,7 @@ fn meta_to_json(s: &ShardState) -> Json {
             },
         ),
         ("accepted", s.accepted.into()),
+        ("started_at_ms", s.started_at_ms.into()),
         (
             "per_uuid",
             Json::Obj(
@@ -180,6 +185,10 @@ pub fn load_snapshot(dir: &Path) -> io::Result<ShardState> {
                     .get_f64("best_fitness")
                     .unwrap_or(f64::NEG_INFINITY);
                 state.accepted = rec.get_u64("accepted").unwrap_or(0);
+                // Absent in PR 2-era snapshots: 0 = unknown (clock
+                // restarts on recovery, the old behavior).
+                state.started_at_ms =
+                    rec.get_u64("started_at_ms").unwrap_or(0);
                 if let Some(Json::Obj(members)) = rec.get("per_uuid") {
                     for (k, v) in members {
                         if let Some(n) = v.as_u64() {
@@ -242,6 +251,7 @@ mod tests {
             puts: 4,
             gets: 9,
             best_fitness: 7.5,
+            started_at_ms: 1_700_000_000_123,
             accepted: 5,
             per_uuid,
             completed: vec![ExperimentLog {
@@ -279,6 +289,7 @@ mod tests {
         assert_eq!(loaded.puts, 4);
         assert_eq!(loaded.gets, 9);
         assert_eq!(loaded.best_fitness, 7.5);
+        assert_eq!(loaded.started_at_ms, 1_700_000_000_123);
         assert_eq!(loaded.accepted, 5);
         assert_eq!(loaded.per_uuid, state.per_uuid);
         assert_eq!(loaded.entries, state.entries);

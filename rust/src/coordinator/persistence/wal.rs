@@ -1,4 +1,5 @@
-//! The append-only write-ahead log: CRC-framed JSONL records.
+//! CRC-framed JSONL records: the append-only write-ahead log and the
+//! federation wire format.
 //!
 //! Every line is a self-contained JSON object
 //!
@@ -12,6 +13,16 @@
 //! brace) without re-serializing — float formatting can never invalidate a
 //! record. A torn final line (partial write at crash) fails the frame or
 //! the checksum and is dropped, never propagated as state.
+//!
+//! The framing is deliberately transport-agnostic: [`FrameWriter`] stamps
+//! and writes records over any `Write` sink and [`FrameReader`]
+//! incrementally decodes them from any byte stream, so the exact bytes a
+//! [`WalWriter`] appends to disk double as the inter-process gossip wire
+//! format ([`crate::coordinator::federation`]) — a remote peer is a WAL
+//! reader/writer on a socket. File-specific concerns (torn-tail
+//! truncation, fsync, compaction) stay in [`WalWriter`]; stream-specific
+//! concerns (resynchronization after a corrupt line, partial reads) live
+//! in [`FrameReader`].
 
 use std::fs::{File, OpenOptions};
 use std::io::{self, BufRead, BufReader, BufWriter, Seek, SeekFrom, Write};
@@ -35,6 +46,12 @@ pub fn crc32(bytes: &[u8]) -> u32 {
 /// `{"crc":"` + 8 hex digits + `","rec":` — every framed line starts with
 /// exactly these 24 bytes.
 const FRAME_PREFIX_LEN: usize = 24;
+
+/// Longest framed line a [`FrameReader`] will buffer before declaring the
+/// stream garbage and resynchronizing at the next newline. Far above any
+/// legitimate record (a max-size migration batch is a few tens of KiB);
+/// bounds what a hostile or corrupt peer can make the reader hold.
+pub const MAX_FRAME_LINE: usize = 1 << 20;
 
 /// Frame a record payload into one WAL line (without the newline).
 pub fn frame(rec: &Json) -> String {
@@ -66,16 +83,174 @@ pub fn unframe(line: &str) -> Option<Json> {
     json::parse(payload).ok()
 }
 
-/// Append-only framed-record writer. Each append is flushed to the OS
-/// (surviving a process crash); `fsync` additionally makes every record
-/// survive power loss at a measured throughput cost (see
-/// `benches/wal_overhead.rs`). Audit-only logs (the coordinator's
+/// Framed-record writer over any `Write` sink: stamps each record with the
+/// next monotonically increasing `seq`, frames it, writes one line. No
+/// flushing policy of its own — the owner decides (the file-bound
+/// [`WalWriter`] flushes per record for recovery guarantees; a gossip link
+/// flushes opportunistically into its nonblocking socket buffer).
+pub struct FrameWriter<W: Write> {
+    out: W,
+    seq: u64,
+}
+
+impl<W: Write> FrameWriter<W> {
+    /// Wrap `out`, seeding the record sequence at `start_seq` (records get
+    /// `start_seq + 1, start_seq + 2, ...`).
+    pub fn new(out: W, start_seq: u64) -> FrameWriter<W> {
+        FrameWriter { out, seq: start_seq }
+    }
+
+    /// Assign the next seq to `rec` (as a `"seq"` member), frame, write.
+    /// Returns the assigned seq.
+    pub fn append(&mut self, mut rec: Json) -> io::Result<u64> {
+        self.seq += 1;
+        rec.set("seq", self.seq.into());
+        writeln!(self.out, "{}", frame(&rec))?;
+        Ok(self.seq)
+    }
+
+    /// Next sequence number this writer will assign.
+    pub fn next_seq(&self) -> u64 {
+        self.seq + 1
+    }
+
+    /// Last sequence number assigned (or the start seq if none yet).
+    pub fn last_seq(&self) -> u64 {
+        self.seq
+    }
+
+    pub fn get_ref(&self) -> &W {
+        &self.out
+    }
+
+    pub fn get_mut(&mut self) -> &mut W {
+        &mut self.out
+    }
+
+    pub fn into_inner(self) -> W {
+        self.out
+    }
+}
+
+/// Incremental framed-record reader over an arbitrary byte stream (a
+/// socket, a pipe, chunked reads of a file). Feed bytes as they arrive;
+/// [`FrameReader::next_record`] yields each complete, checksum-valid
+/// record.
+///
+/// Unlike [`scan`] (whose file-tail contract is "stop at the first bad
+/// line — everything after a torn record is suspect"), a stream reader
+/// must keep going: a corrupt line is counted in
+/// [`FrameReader::dropped`], the reader resynchronizes at the next
+/// newline, and subsequent records decode normally. A line longer than
+/// `max_line` with no newline is declared garbage the same way. The
+/// reader never panics on arbitrary input — corrupt bytes can only drop
+/// records, never tear the decoder.
+pub struct FrameReader {
+    buf: Vec<u8>,
+    /// Consumed prefix of `buf` (compacted lazily).
+    pos: usize,
+    dropped: u64,
+    /// An oversized line is being skipped: discard until the next newline.
+    skipping: bool,
+    max_line: usize,
+}
+
+impl Default for FrameReader {
+    fn default() -> Self {
+        FrameReader::new()
+    }
+}
+
+impl FrameReader {
+    pub fn new() -> FrameReader {
+        FrameReader::with_max_line(MAX_FRAME_LINE)
+    }
+
+    pub fn with_max_line(max_line: usize) -> FrameReader {
+        FrameReader {
+            buf: Vec::new(),
+            pos: 0,
+            dropped: 0,
+            skipping: false,
+            max_line: max_line.max(FRAME_PREFIX_LEN + 1),
+        }
+    }
+
+    /// Buffer freshly received bytes.
+    pub fn feed(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Decode the next complete valid record, skipping (and counting)
+    /// corrupt lines. `None` means more bytes are needed.
+    pub fn next_record(&mut self) -> Option<Json> {
+        loop {
+            let Some(nl) =
+                self.buf[self.pos..].iter().position(|&b| b == b'\n')
+            else {
+                // No complete line buffered: compact the consumed prefix
+                // and wait for more bytes.
+                if self.pos > 0 {
+                    self.buf.drain(..self.pos);
+                    self.pos = 0;
+                }
+                // A "line" past the size cap with no newline in sight is
+                // garbage (or hostile): drop it now and resynchronize at
+                // the next newline when it arrives.
+                if self.buf.len() > self.max_line {
+                    self.buf.clear();
+                    if !self.skipping {
+                        self.dropped += 1;
+                        self.skipping = true;
+                    }
+                }
+                return None;
+            };
+            let start = self.pos;
+            let end = start + nl;
+            self.pos = end + 1;
+            if self.skipping {
+                // Tail of an (already counted) oversized line.
+                self.skipping = false;
+                continue;
+            }
+            let rec = std::str::from_utf8(&self.buf[start..end])
+                .ok()
+                .and_then(unframe);
+            match rec {
+                // Only `pos` advances here; the consumed prefix is
+                // compacted once per feed cycle (the no-newline branch
+                // above), not per record — a batched feed stays O(bytes)
+                // instead of O(bytes x records) in memmove.
+                Some(rec) => return Some(rec),
+                None => {
+                    self.dropped += 1;
+                    continue;
+                }
+            }
+        }
+    }
+
+    /// Lines dropped for framing/CRC failure or oversize so far.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Bytes buffered but not yet decoded (a partial trailing line).
+    pub fn buffered(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+}
+
+/// Append-only framed-record writer bound to a file. Each append is
+/// flushed to the OS (surviving a process crash); `fsync` additionally
+/// makes every record survive power loss at a measured throughput cost
+/// (see `benches/wal_overhead.rs`). Audit-only logs (the coordinator's
 /// `EventLog`) switch to [`WalWriter::buffered`] — their records are not
 /// replayed state, so they keep the old BufWriter batching and flush
 /// only at experiment boundaries.
 pub struct WalWriter {
-    out: BufWriter<File>,
-    seq: u64,
+    inner: FrameWriter<BufWriter<File>>,
     fsync: bool,
     flush_each: bool,
 }
@@ -99,8 +274,7 @@ impl WalWriter {
         }
         file.seek(SeekFrom::End(0))?;
         Ok(WalWriter {
-            out: BufWriter::new(file),
-            seq: start_seq,
+            inner: FrameWriter::new(BufWriter::new(file), start_seq),
             fsync,
             flush_each: true,
         })
@@ -116,54 +290,52 @@ impl WalWriter {
 
     /// Next sequence number this writer will assign.
     pub fn next_seq(&self) -> u64 {
-        self.seq + 1
+        self.inner.next_seq()
     }
 
     /// Last sequence number assigned (or the resume seq if none yet).
     pub fn last_seq(&self) -> u64 {
-        self.seq
+        self.inner.last_seq()
     }
 
     /// Truncate the log to zero bytes — called after a snapshot has made
     /// every record redundant. The seq counter keeps counting (snapshot
     /// seq filtering depends on monotonicity across compactions).
     pub fn reset(&mut self) -> io::Result<()> {
-        self.out.flush()?;
-        self.out.get_ref().set_len(0)?;
-        self.out.get_ref().sync_all()
+        self.inner.get_mut().flush()?;
+        self.inner.get_mut().get_ref().set_len(0)?;
+        self.inner.get_mut().get_ref().sync_all()
     }
 
     /// Assign the next seq to `rec` (as a `"seq"` member), frame, append,
     /// and flush. Returns the assigned seq.
-    pub fn append(&mut self, mut rec: Json) -> io::Result<u64> {
-        self.seq += 1;
-        rec.set("seq", self.seq.into());
-        writeln!(self.out, "{}", frame(&rec))?;
+    pub fn append(&mut self, rec: Json) -> io::Result<u64> {
+        let seq = self.inner.append(rec)?;
         if self.flush_each {
-            self.out.flush()?;
+            self.inner.get_mut().flush()?;
             if self.fsync {
-                self.out.get_ref().sync_all()?;
+                self.inner.get_mut().get_ref().sync_all()?;
             }
         }
-        Ok(self.seq)
+        Ok(seq)
     }
 
     /// Flush buffered records to the OS without fsync — all a buffered
     /// audit log needs at its boundaries.
     pub fn flush(&mut self) -> io::Result<()> {
-        self.out.flush()
+        self.inner.get_mut().flush()
     }
 
     /// Force everything to stable storage (epoch boundaries, shutdown).
     pub fn sync(&mut self) -> io::Result<()> {
-        self.out.flush()?;
-        self.out.get_ref().sync_all()
+        self.inner.get_mut().flush()?;
+        self.inner.get_mut().get_ref().sync_all()
     }
 }
 
 impl Drop for WalWriter {
     fn drop(&mut self) {
-        let _ = self.out.flush();
+        let _ = self.inner.get_mut().flush();
     }
 }
 
@@ -219,6 +391,7 @@ pub fn scan(path: &Path) -> io::Result<ScannedLog> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::rng::{Rng64, SplitMix64};
 
     fn tmp(name: &str) -> std::path::PathBuf {
         std::env::temp_dir()
@@ -323,5 +496,250 @@ mod tests {
         let log = scan(Path::new("/nonexistent/nodio-wal")).unwrap();
         assert!(log.records.is_empty());
         assert_eq!(log.valid_len, 0);
+    }
+
+    // ------------------------------------------------------------------
+    // FrameWriter / FrameReader: the transport-agnostic stream framing.
+    // ------------------------------------------------------------------
+
+    fn sample_records(n: u64) -> Vec<Json> {
+        (0..n)
+            .map(|i| {
+                Json::obj(vec![
+                    ("t", "put".into()),
+                    ("i", i.into()),
+                    ("uuid", format!("node-{}", i % 7).into()),
+                    ("fitness", (i as f64 / 8.0).into()),
+                ])
+            })
+            .collect()
+    }
+
+    /// Write `recs` through a FrameWriter into a byte buffer (the wire).
+    fn wire_bytes(recs: &[Json]) -> Vec<u8> {
+        let mut w = FrameWriter::new(Vec::new(), 0);
+        for rec in recs {
+            w.append(rec.clone()).unwrap();
+        }
+        w.into_inner()
+    }
+
+    /// Drain every currently decodable record.
+    fn drain(reader: &mut FrameReader) -> Vec<Json> {
+        let mut out = Vec::new();
+        while let Some(rec) = reader.next_record() {
+            out.push(rec);
+        }
+        out
+    }
+
+    #[test]
+    fn frame_writer_stamps_seqs_over_any_sink() {
+        let mut w = FrameWriter::new(Vec::new(), 10);
+        assert_eq!(w.next_seq(), 11);
+        let seq = w.append(Json::obj(vec![("a", 1u64.into())])).unwrap();
+        assert_eq!(seq, 11);
+        assert_eq!(w.last_seq(), 11);
+        let bytes = w.into_inner();
+        let line = std::str::from_utf8(&bytes).unwrap().trim_end();
+        let rec = unframe(line).expect("frame-valid");
+        assert_eq!(rec.get_u64("seq"), Some(11));
+    }
+
+    #[test]
+    fn frame_reader_round_trips_under_arbitrary_chunking() {
+        let recs = sample_records(40);
+        let wire = wire_bytes(&recs);
+        // 1-byte, small, large and whole-buffer chunkings all reproduce
+        // the record stream exactly.
+        for chunk in [1usize, 3, 7, 64, 1024, wire.len()] {
+            let mut r = FrameReader::new();
+            let mut got = Vec::new();
+            for piece in wire.chunks(chunk) {
+                r.feed(piece);
+                got.extend(drain(&mut r));
+            }
+            assert_eq!(got.len(), recs.len(), "chunk={chunk}");
+            for (i, (g, want)) in got.iter().zip(&recs).enumerate() {
+                assert_eq!(g.get_u64("seq"), Some(i as u64 + 1));
+                assert_eq!(g.get_u64("i"), want.get_u64("i"));
+            }
+            assert_eq!(r.dropped(), 0);
+            assert_eq!(r.buffered(), 0);
+        }
+    }
+
+    #[test]
+    fn frame_reader_resynchronizes_after_corrupt_line() {
+        let recs = sample_records(5);
+        let mut wire = wire_bytes(&recs);
+        // Flip one byte inside the third record's payload: that line must
+        // drop, the other four must survive — unlike the file scanner,
+        // which would stop at the first bad line.
+        let lines: Vec<usize> = wire
+            .iter()
+            .enumerate()
+            .filter(|(_, &b)| b == b'\n')
+            .map(|(i, _)| i)
+            .collect();
+        let mid = (lines[1] + lines[2]) / 2;
+        wire[mid] ^= 0x01;
+        let mut r = FrameReader::new();
+        r.feed(&wire);
+        let got = drain(&mut r);
+        assert_eq!(got.len(), 4);
+        assert_eq!(r.dropped(), 1);
+        let ids: Vec<u64> =
+            got.iter().filter_map(|g| g.get_u64("i")).collect();
+        assert_eq!(ids, vec![0, 1, 3, 4]);
+    }
+
+    #[test]
+    fn frame_reader_mid_frame_disconnect_holds_partial_line() {
+        let recs = sample_records(3);
+        let wire = wire_bytes(&recs);
+        // The peer dies mid-record: the partial tail is neither decoded
+        // nor (yet) counted dropped — exactly a torn file tail.
+        let cut = wire.len() - 9;
+        let mut r = FrameReader::new();
+        r.feed(&wire[..cut]);
+        let got = drain(&mut r);
+        assert_eq!(got.len(), 2);
+        assert_eq!(r.dropped(), 0);
+        assert!(r.buffered() > 0);
+        // A reconnecting peer starts a fresh stream; the stale partial
+        // line is terminated by the next newline and dropped, and the
+        // new records decode.
+        r.feed(b"\n");
+        let fresh = wire_bytes(&sample_records(2));
+        r.feed(&fresh);
+        let got = drain(&mut r);
+        assert_eq!(got.len(), 2);
+        assert_eq!(r.dropped(), 1);
+    }
+
+    #[test]
+    fn frame_reader_drops_oversized_garbage_and_recovers() {
+        let mut r = FrameReader::with_max_line(256);
+        // 1 KiB of newline-free garbage: declared garbage once past the
+        // cap, counted once, buffer released.
+        r.feed(&[b'x'; 1024]);
+        assert_eq!(r.next_record(), None);
+        assert_eq!(r.dropped(), 1);
+        assert_eq!(r.buffered(), 0);
+        // The newline ending the garbage line is consumed silently, then
+        // a valid record decodes.
+        r.feed(b"junk-tail\n");
+        let wire = wire_bytes(&sample_records(1));
+        r.feed(&wire);
+        let got = drain(&mut r);
+        assert_eq!(got.len(), 1);
+        assert_eq!(r.dropped(), 1);
+    }
+
+    #[test]
+    fn frame_reader_accepts_interleaved_v1_and_v2_records() {
+        // The framing layer is version-agnostic: a stream mixing PR 2-era
+        // v1 put records (string chromosome) with v2 (packed hex) decodes
+        // every record; version interpretation belongs to replay.
+        let v1 = Json::obj(vec![
+            ("t", "put".into()),
+            ("experiment", 0u64.into()),
+            ("chromosome", "01011010".into()),
+            ("fitness", 2.5.into()),
+            ("uuid", "a".into()),
+        ]);
+        let v2 = Json::obj(vec![
+            ("t", "put".into()),
+            ("v", 2u64.into()),
+            ("experiment", 0u64.into()),
+            ("packed", "000000000000005a".into()),
+            ("n_bits", 8u64.into()),
+            ("fitness", 4.0.into()),
+            ("uuid", "b".into()),
+        ]);
+        let wire = wire_bytes(&[v1.clone(), v2.clone(), v1.clone(), v2]);
+        let mut r = FrameReader::new();
+        r.feed(&wire);
+        let got = drain(&mut r);
+        assert_eq!(got.len(), 4);
+        assert_eq!(got[0].get_str("chromosome"), Some("01011010"));
+        assert_eq!(got[1].get_str("packed"), Some("000000000000005a"));
+        assert_eq!(r.dropped(), 0);
+    }
+
+    #[test]
+    fn frame_reader_fuzz_never_panics_and_survivors_are_genuine() {
+        // Deterministic fuzz: a valid stream is mutated (byte flips,
+        // truncations, garbage splices) and fed in random-sized chunks.
+        // The reader must never panic, and every record it does yield
+        // must be one of the originals (the CRC gate) — corruption can
+        // only lose records, never invent or alter them.
+        let originals = sample_records(30);
+        let clean = wire_bytes(&originals);
+        let mut rng = SplitMix64::new(0xFEED_FACE);
+        for round in 0..60u64 {
+            let mut wire = clean.clone();
+            let mutations = 1 + (rng.next_u64() % 6) as usize;
+            for _ in 0..mutations {
+                match rng.next_u64() % 4 {
+                    0 => {
+                        // Flip a byte.
+                        let i = (rng.next_u64() as usize) % wire.len();
+                        wire[i] ^= (1 << (rng.next_u64() % 8)) as u8;
+                    }
+                    1 => {
+                        // Truncate the tail (mid-frame disconnect).
+                        let keep = (rng.next_u64() as usize) % wire.len();
+                        wire.truncate(keep);
+                    }
+                    2 => {
+                        // Splice garbage bytes (0..64) at a random point.
+                        let i = (rng.next_u64() as usize) % (wire.len() + 1);
+                        let n = (rng.next_u64() % 64) as usize;
+                        let junk: Vec<u8> = (0..n)
+                            .map(|_| (rng.next_u64() & 0xFF) as u8)
+                            .collect();
+                        wire.splice(i..i, junk);
+                    }
+                    _ => {
+                        // Duplicate a slice (stutter / retransmit).
+                        if !wire.is_empty() {
+                            let a = (rng.next_u64() as usize) % wire.len();
+                            let b = (a + 1
+                                + (rng.next_u64() as usize) % 40)
+                                .min(wire.len());
+                            let dup: Vec<u8> = wire[a..b].to_vec();
+                            wire.splice(b..b, dup);
+                        }
+                    }
+                }
+                if wire.is_empty() {
+                    break;
+                }
+            }
+            let mut r = FrameReader::new();
+            let mut got = Vec::new();
+            let mut off = 0usize;
+            while off < wire.len() {
+                let n = 1 + (rng.next_u64() as usize) % 97;
+                let end = (off + n).min(wire.len());
+                r.feed(&wire[off..end]);
+                off = end;
+                got.extend(drain(&mut r));
+            }
+            for rec in &got {
+                let mut body = rec.clone();
+                // Strip the stamped seq before comparing content.
+                if let Json::Obj(members) = &mut body {
+                    members.retain(|(k, _)| k != "seq");
+                }
+                assert!(
+                    originals.contains(&body),
+                    "round {round}: decoder yielded a record that was \
+                     never written: {rec}"
+                );
+            }
+        }
     }
 }

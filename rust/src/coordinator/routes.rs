@@ -232,6 +232,7 @@ impl PoolState {
             state.best_fitness,
             state.per_uuid,
             state.completed,
+            state.started_at_ms,
         );
         // Render caches start cold: the GET path resizes the slot cache
         // lazily and put_ok must carry the recovered epoch.
@@ -246,6 +247,7 @@ impl PoolState {
             puts: self.experiments.puts(),
             gets: self.experiments.gets(),
             best_fitness: self.experiments.best_fitness(),
+            started_at_ms: self.experiments.started_at_ms(),
             accepted: self.pool.accepted(),
             per_uuid: self.experiments.per_uuid().clone(),
             completed: self.experiments.completed().to_vec(),
@@ -447,8 +449,9 @@ pub fn build_router(state: Shared) -> Router {
                 s.pool.clear();
                 s.series.clear();
                 s.drop_render_caches();
+                let started = s.experiments.started_at_ms();
                 if let Some(p) = &mut s.persist {
-                    p.record_epoch(log.id, log.id + 1, Some(&log));
+                    p.record_epoch(log.id, log.id + 1, Some(&log), started);
                 }
                 let entry = log.to_json();
                 s.log.log("reset", entry.clone());
@@ -711,8 +714,14 @@ fn apply_put(s: &mut PoolState, f: PutFields) -> PutOutcome {
     s.pool.clear();
     s.series.clear();
     s.drop_render_caches();
+    let started = s.experiments.started_at_ms();
     if let Some(p) = &mut s.persist {
-        p.record_epoch(log_entry.id, log_entry.id + 1, Some(&log_entry));
+        p.record_epoch(
+            log_entry.id,
+            log_entry.id + 1,
+            Some(&log_entry),
+            started,
+        );
     }
     let payload = log_entry.to_json();
     s.log.log("solution", payload.clone());

@@ -122,9 +122,18 @@ impl PoolServer {
                     );
                 }
                 let dir = persistence::shard_dir(&cfg.data_dir, 0);
+                let fresh_dir = !rec.had_history();
                 match ShardPersistence::open(&dir, cfg, &rec) {
-                    Ok(p) => {
+                    Ok(mut p) => {
                         state.restore(rec.state);
+                        if fresh_dir {
+                            // First boot: WAL the epoch-0 start stamp so
+                            // a restart reports true experiment age.
+                            p.record_start(
+                                state.experiments.current_id(),
+                                state.experiments.started_at_ms(),
+                            );
+                        }
                         state.persist = Some(p);
                     }
                     Err(e) => eprintln!(
@@ -416,6 +425,42 @@ mod tests {
         let state = state_of(&mut c);
         assert_eq!(state.get_u64("pool_size"), Some(2));
         assert_eq!(state.get_f64("best_fitness"), Some(6.0));
+        handle.stop();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn recovery_elapsed_time_survives_restart() {
+        // The PR 2 gap, closed: a recovered experiment's wall-clock age
+        // continues from its true start instead of restarting at zero.
+        let dir = std::env::temp_dir().join(format!(
+            "nodio-recover-elapsed-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        {
+            let handle =
+                PoolServer::spawn("127.0.0.1:0", recovery_config(&dir))
+                    .unwrap();
+            let mut c = HttpClient::connect(handle.addr).unwrap();
+            assert_eq!(
+                c.send(&put_req("01010101", 4.0, "a")).unwrap().status,
+                200
+            );
+            std::thread::sleep(std::time::Duration::from_millis(400));
+            handle.stop();
+        }
+        let handle =
+            PoolServer::spawn("127.0.0.1:0", recovery_config(&dir)).unwrap();
+        let mut c = HttpClient::connect(handle.addr).unwrap();
+        let state = state_of(&mut c);
+        // The experiment is at least as old as the pre-restart sleep; a
+        // restarted clock would read near zero here.
+        let elapsed = state.get_f64("elapsed_s").unwrap();
+        assert!(
+            elapsed >= 0.35,
+            "elapsed clock restarted on recovery: {elapsed}s"
+        );
         handle.stop();
         let _ = std::fs::remove_dir_all(&dir);
     }

@@ -14,7 +14,7 @@ pub mod trace;
 
 pub use baseline::{run_baseline, BaselineReport, RunRecord};
 pub use swarm::{
-    run_kill_resume, run_swarm, run_swarm_trace, ChurnConfig,
-    ExperimentProbe, SwarmConfig, SwarmReport,
+    run_federated_swarm, run_kill_resume, run_swarm, run_swarm_trace,
+    ChurnConfig, ExperimentProbe, FederatedReport, SwarmConfig, SwarmReport,
 };
 pub use trace::{Session, Trace, TraceModel};

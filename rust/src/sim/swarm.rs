@@ -12,6 +12,7 @@ use crate::client::driver::EngineChoice;
 use crate::client::volunteer::ClientStats;
 use crate::client::worker::{ClientProcess, WorkerMode};
 use crate::coordinator::cluster::{ClusterConfig, PoolBackend};
+use crate::coordinator::federation::FederationConfig;
 use crate::coordinator::{PersistConfig, PoolServer, PoolServerConfig};
 use crate::http::{HttpClient, Method, Request};
 use crate::rng::{dist, Rng64, SplitMix64};
@@ -53,6 +54,15 @@ pub struct SwarmConfig {
     /// dir, so the coordinator can be killed and resumed mid-swarm (see
     /// [`run_kill_resume`]). Overrides `server.persist` when set.
     pub persist: Option<PersistConfig>,
+    /// Federation peers the spawned backend dials (`--peer`); with
+    /// `gossip_listen`, this swarm's backend joins a multi-process
+    /// federation. [`run_federated_swarm`] builds a whole federation
+    /// in-process instead.
+    pub peers: Vec<String>,
+    /// Federation gossip acceptor address (`--gossip-listen`).
+    pub gossip_listen: Option<String>,
+    /// Outbound federation gossip period (`--gossip-every`).
+    pub gossip_every: Duration,
 }
 
 impl Default for SwarmConfig {
@@ -70,21 +80,37 @@ impl Default for SwarmConfig {
             server: PoolServerConfig::default(),
             shards: 1,
             persist: None,
+            peers: Vec::new(),
+            gossip_listen: None,
+            gossip_every: Duration::from_millis(250),
         }
     }
 }
 
 impl SwarmConfig {
-    /// The pool-backend config this swarm drives (persistence plumbed
-    /// through to every shard).
+    /// The pool-backend config this swarm drives (persistence and
+    /// federation plumbed through to every shard).
     fn backend_config(&self) -> ClusterConfig {
         let mut base = self.server.clone();
         if self.persist.is_some() {
             base.persist = self.persist.clone();
         }
+        let federation = if !self.peers.is_empty()
+            || self.gossip_listen.is_some()
+        {
+            Some(FederationConfig {
+                listen: self.gossip_listen.clone(),
+                peers: self.peers.clone(),
+                gossip_interval: self.gossip_every,
+                node: None,
+            })
+        } else {
+            None
+        };
         ClusterConfig {
             shards: self.shards,
             base,
+            federation,
             ..ClusterConfig::default()
         }
     }
@@ -258,6 +284,133 @@ pub fn run_swarm(config: SwarmConfig) -> Result<SwarmReport> {
     })
 }
 
+/// What a federated (multi-backend) swarm run produced.
+#[derive(Debug, Clone)]
+pub struct FederatedReport {
+    pub backends: usize,
+    /// Completed experiments as observed at EVERY backend when the run
+    /// ended (the federation's convergence criterion: a solution found
+    /// anywhere terminates the experiment everywhere).
+    pub per_backend_completed: Vec<u64>,
+    /// Minimum of `per_backend_completed` — solutions the whole
+    /// federation agrees on.
+    pub solutions: u64,
+    pub elapsed: Duration,
+    pub total_requests: u64,
+    pub client_stats: Vec<ClientStats>,
+}
+
+/// The multi-process scenario: `backends` federated pool coordinators
+/// (each the in-process stand-in for one `nodio server` process — its own
+/// listener, shards, epoll loops and gossip driver, linked to its
+/// predecessor over real localhost TCP), with the volunteer swarm spread
+/// round-robin across them. Runs until every backend observes
+/// `target_solutions` completed experiments (termination must propagate
+/// across the federation, not just occur somewhere) or the timeout.
+/// `config.peers`/`config.gossip_listen` are ignored: this function wires
+/// its own localhost links (the CLI refuses the combination).
+pub fn run_federated_swarm(
+    config: SwarmConfig,
+    backends: usize,
+) -> Result<FederatedReport> {
+    let n = backends.max(1);
+    // Backend 0 listens; each later backend listens and dials its
+    // predecessor. Links are bidirectional, so the chain is a connected
+    // federation end to end.
+    let mut handles: Vec<PoolBackend> = Vec::with_capacity(n);
+    for i in 0..n {
+        let mut cfg = config.backend_config();
+        // Per-backend persistence directories: federated processes must
+        // never share a WAL.
+        if let Some(pc) = &mut cfg.base.persist {
+            pc.data_dir = pc.data_dir.join(format!("backend-{i}"));
+        }
+        let mut fed = FederationConfig {
+            listen: Some("127.0.0.1:0".into()),
+            gossip_interval: config.gossip_every,
+            ..FederationConfig::default()
+        };
+        if i > 0 {
+            let prev = handles[i - 1]
+                .gossip_addr()
+                .ok_or_else(|| anyhow!("backend {i} has no gossip addr"))?;
+            fed.peers = vec![prev.to_string()];
+        }
+        cfg.federation = Some(fed);
+        handles.push(
+            PoolBackend::spawn("127.0.0.1:0", cfg)
+                .map_err(|e| anyhow!("backend {i}: {e}"))?,
+        );
+    }
+
+    let mut rng = SplitMix64::new(config.seed);
+    let mut clients = Vec::new();
+    for i in 0..config.n_clients.max(1) {
+        let addr = handles[i % n].addr();
+        clients.push(ClientProcess::spawn(
+            Some(addr),
+            config.mode,
+            config.engine,
+            config.base_pop,
+            rng.next_u64(),
+            &format!("fed-client-{i}"),
+            u64::MAX,
+            1.0,
+        ));
+    }
+
+    let mut monitors = Vec::with_capacity(n);
+    for h in &handles {
+        monitors.push(HttpClient::connect(h.addr())?);
+    }
+    let t0 = Instant::now();
+    let mut per_backend = vec![0u64; n];
+    loop {
+        std::thread::sleep(Duration::from_millis(20));
+        for (i, monitor) in monitors.iter_mut().enumerate() {
+            if let Ok(resp) =
+                monitor.send(&Request::new(Method::Get, "/experiment/state"))
+            {
+                if let Ok(body) = resp.json_body() {
+                    per_backend[i] =
+                        body.get_u64("completed").unwrap_or(0);
+                }
+            }
+        }
+        let agreed = per_backend.iter().copied().min().unwrap_or(0);
+        if agreed >= config.target_solutions || t0.elapsed() > config.timeout
+        {
+            break;
+        }
+    }
+    let elapsed = t0.elapsed();
+
+    let mut total_requests = 0;
+    for monitor in monitors.iter_mut() {
+        if let Ok(resp) = monitor.send(&Request::new(Method::Get, "/stats")) {
+            if let Ok(body) = resp.json_body() {
+                total_requests += body.get_u64("total_requests").unwrap_or(0);
+            }
+        }
+    }
+    drop(monitors);
+    let mut client_stats = Vec::new();
+    for c in clients {
+        client_stats.extend(c.shutdown());
+    }
+    for h in handles {
+        h.stop();
+    }
+    Ok(FederatedReport {
+        backends: n,
+        solutions: per_backend.iter().copied().min().unwrap_or(0),
+        per_backend_completed: per_backend,
+        elapsed,
+        total_requests,
+        client_stats,
+    })
+}
+
 /// One observation of a backend's aggregate experiment state, used to
 /// compare a coordinator before a kill and after a resume.
 #[derive(Debug, Clone, PartialEq)]
@@ -428,6 +581,34 @@ mod tests {
         assert!(before.pool_size > 0, "{before:?}");
         assert_eq!(before, after);
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn federated_swarm_converges_on_one_winner() {
+        // The multi-process E6: two federated backends (one W² client
+        // each) must BOTH observe the single solution — wherever it is
+        // found, the epoch record gossips to the other backend and
+        // terminates its experiment too.
+        let report = run_federated_swarm(
+            SwarmConfig {
+                n_clients: 2,
+                target_solutions: 1,
+                timeout: Duration::from_secs(120),
+                seed: 21,
+                gossip_every: Duration::from_millis(50),
+                ..Default::default()
+            },
+            2,
+        )
+        .unwrap();
+        assert_eq!(report.backends, 2);
+        assert!(
+            report.per_backend_completed.iter().all(|&c| c >= 1),
+            "federation did not converge: {report:?}"
+        );
+        assert!(report.solutions >= 1);
+        assert!(report.total_requests > 0);
+        assert!(!report.client_stats.is_empty());
     }
 
     #[test]

@@ -9,6 +9,16 @@ pub use hist::Histogram;
 pub use stats::{OnlineStats, Summary};
 pub use timer::Stopwatch;
 
+/// Milliseconds since the Unix epoch (0 if the clock reads before 1970).
+/// The durable-experiment subsystem stamps experiment start times with
+/// this so a restarted coordinator reports true wall-clock age.
+pub fn unix_ms() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_millis() as u64)
+        .unwrap_or(0)
+}
+
 /// Format a duration in adaptive units (`1.23s`, `45.6ms`, `789µs`).
 pub fn fmt_duration(d: std::time::Duration) -> String {
     let s = d.as_secs_f64();

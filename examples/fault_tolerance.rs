@@ -31,6 +31,7 @@ fn main() -> anyhow::Result<()> {
         .map(|i| {
             ClientProcess::spawn(
                 Some(addr),
+                &nodio::genome::ProblemSpec::trap(),
                 WorkerMode::W2,
                 EngineChoice::Native,
                 256,

@@ -56,5 +56,23 @@ fn main() -> anyhow::Result<()> {
         "xla-pallas island: solved={solved} after {epochs} epochs in {}",
         fmt_duration(t0.elapsed())
     );
+
+    // --- 3. The real-valued problem family ------------------------------
+    // The same coordinator serves floating-point experiments: start a
+    // server with `nodio server --problem rastrigin --dim 64` (or
+    // sphere / griewank) and volunteers evolve f64 gene vectors, PUT as
+    // `{"genes":[...],"fitness":-cost}`. The island underneath:
+    use nodio::ea::{RealIsland, RealIslandConfig};
+    use nodio::problems::Rastrigin;
+    let problem = Rastrigin::new(16);
+    let mut rng = Xoshiro256pp::new(7);
+    let mut island =
+        RealIsland::new(RealIslandConfig::default(), &problem, &mut rng);
+    let start = island.best().1;
+    let end = island.run(&problem, 200, &mut rng);
+    println!(
+        "rastrigin(dim=16) real-coded island: cost {start:.2} -> {end:.2} \
+         after 200 generations"
+    );
     Ok(())
 }

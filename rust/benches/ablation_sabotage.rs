@@ -84,6 +84,7 @@ fn run_scenario(s: &Scenario, seed: u64) -> Vec<String> {
         .map(|i| {
             ClientProcess::spawn(
                 Some(addr),
+                &nodio::genome::ProblemSpec::trap(),
                 WorkerMode::W2,
                 EngineChoice::Native,
                 256,

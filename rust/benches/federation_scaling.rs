@@ -231,6 +231,7 @@ fn time_to_solution(procs: usize, timeout: Duration) -> Option<f64> {
         .map(|(i, b)| {
             ClientProcess::spawn(
                 Some(b.http),
+                &nodio::genome::ProblemSpec::trap(),
                 WorkerMode::W2,
                 EngineChoice::Native,
                 256,

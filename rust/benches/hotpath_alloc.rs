@@ -37,6 +37,7 @@ use nodio::bench::{write_json_summary, Table};
 use nodio::coordinator::cluster::{ClusterConfig, ShardedPoolServer};
 use nodio::coordinator::routes::{build_router, PoolState};
 use nodio::coordinator::PoolServerConfig;
+use nodio::genome::ProblemSpec;
 use nodio::http::{HttpClient, Method, Request, Response, Router, Service};
 use nodio::json::{self, Json};
 
@@ -193,7 +194,7 @@ fn legacy_put(
     let uuid = parsed.get_str("uuid").unwrap_or("anonymous").to_string();
     let mut s = state.borrow_mut();
     assert!(
-        chromosome.len() == s.experiments.n_bits
+        chromosome.len() == s.experiments.repr.len()
             && chromosome.bytes().all(|b| b == b'0' || b == b'1')
     );
     s.experiments.record_put(&uuid, fitness);
@@ -221,13 +222,36 @@ const PUT_BODY: &str = concat!(
 fn single_loop_state() -> (Rc<RefCell<PoolState>>, Router) {
     let state = Rc::new(RefCell::new(PoolState::new(
         1024,
-        1e18, // never solved mid-bench
-        160,
+        // never solved mid-bench
+        &ProblemSpec::bits(160, 1e18),
         nodio::coordinator::logger::EventLog::disabled(),
         7,
     )));
     let router = build_router(state.clone());
     (state, router)
+}
+
+/// The real-valued lane: a sphere(32) experiment that never solves.
+fn real_loop_state() -> (Rc<RefCell<PoolState>>, Router) {
+    let state = Rc::new(RefCell::new(PoolState::new(
+        1024,
+        &ProblemSpec::sphere(32, 0.0).with_target(1e18),
+        nodio::coordinator::logger::EventLog::disabled(),
+        7,
+    )));
+    let router = build_router(state.clone());
+    (state, router)
+}
+
+/// A machine-generated 32-gene PUT body (what a real-coded volunteer
+/// sends every epoch).
+fn real_put_body() -> String {
+    let genes: Vec<String> =
+        (0..32).map(|i| format!("{i}.53125")).collect();
+    format!(
+        "{{\"genes\":[{}],\"fitness\":-123.25,\"uuid\":\"bench\"}}",
+        genes.join(",")
+    )
 }
 
 fn main() {
@@ -277,6 +301,41 @@ fn main() {
         out.clear();
     });
     let put_allocs_per_req = a_put as f64 / n as f64;
+
+    // ==================================================================
+    // Phase A2 — the real-valued lane: same allocation gates on a
+    // sphere(32) experiment (`genes` bodies, gene-array render cache).
+    // The budget is identical: 0 allocs/cached GET, <= 8 allocs/PUT —
+    // opening the second representation must not regress the hot path.
+    // ==================================================================
+
+    let (_real_state, mut real_router) = real_loop_state();
+    let real_body = real_put_body();
+    let real_put_req = {
+        let mut r = Request::new(Method::Put, "/experiment/chromosome");
+        r.body = real_body.into_bytes();
+        r
+    };
+    real_router.handle_into(&real_put_req, true, &mut out);
+    out.clear();
+    for _ in 0..1_000 {
+        real_router.handle_into(&get_req, true, &mut out);
+        out.clear();
+    }
+    let (_t, ra_get, rb_get) = measured(n, || {
+        real_router.handle_into(&get_req, true, &mut out);
+        out.clear();
+    });
+    let real_get_allocs_per_req = ra_get as f64 / n as f64;
+    for _ in 0..1_000 {
+        real_router.handle_into(&real_put_req, true, &mut out);
+        out.clear();
+    }
+    let (_t, ra_put, rb_put) = measured(n, || {
+        real_router.handle_into(&real_put_req, true, &mut out);
+        out.clear();
+    });
+    let real_put_allocs_per_req = ra_put as f64 / n as f64;
 
     // ==================================================================
     // Phase B — throughput ratio (noise-resistant: fast and legacy
@@ -346,6 +405,18 @@ fn main() {
         format!("{:.1}", b_put as f64 / n as f64),
     ]);
     table.row(&[
+        "real GET (cached)".into(),
+        "-".into(),
+        format!("{real_get_allocs_per_req:.3}"),
+        format!("{:.1}", rb_get as f64 / n as f64),
+    ]);
+    table.row(&[
+        "real PUT (single)".into(),
+        "-".into(),
+        format!("{real_put_allocs_per_req:.3}"),
+        format!("{:.1}", rb_put as f64 / n as f64),
+    ]);
+    table.row(&[
         "legacy GET".into(),
         format!("{:.0}", legacy_per_round as f64 / lt_get),
         format!("{:.3}", la_get as f64 / legacy_iters),
@@ -368,7 +439,7 @@ fn main() {
         let config = ClusterConfig {
             shards: 2,
             base: PoolServerConfig {
-                target_fitness: 1e18,
+                problem: ProblemSpec::trap().with_target(1e18),
                 ..Default::default()
             },
             ..ClusterConfig::default()
@@ -439,6 +510,10 @@ fn main() {
         ("put_allocs_per_req", put_allocs_per_req.into()),
         ("get_bytes_per_req", (b_get as f64 / n as f64).into()),
         ("put_bytes_per_req", (b_put as f64 / n as f64).into()),
+        ("real_get_allocs_per_req", real_get_allocs_per_req.into()),
+        ("real_put_allocs_per_req", real_put_allocs_per_req.into()),
+        ("real_get_bytes_per_req", (rb_get as f64 / n as f64).into()),
+        ("real_put_bytes_per_req", (rb_put as f64 / n as f64).into()),
         ("fast_req_per_s", fast_rps.into()),
         ("legacy_req_per_s", legacy_rps.into()),
         ("fast_over_legacy_ratio", ratio.into()),
@@ -475,6 +550,27 @@ fn main() {
         failed = true;
     } else {
         println!("PASS: {ratio:.2}x >= 2.0x vs pre-change baseline");
+    }
+    if ra_get != 0 {
+        println!(
+            "FAIL: real-valued cached GET allocated ({ra_get} allocations \
+             over {n} requests; budget is 0)"
+        );
+        failed = true;
+    } else {
+        println!("PASS: real-valued cached GET is allocation-free");
+    }
+    if real_put_allocs_per_req > 8.0 {
+        println!(
+            "FAIL: real-valued PUT allocates \
+             {real_put_allocs_per_req:.2}/request (budget 8)"
+        );
+        failed = true;
+    } else {
+        println!(
+            "PASS: real-valued PUT within budget \
+             ({real_put_allocs_per_req:.2} allocations/request <= 8)"
+        );
     }
     if failed {
         std::process::exit(1);

@@ -93,7 +93,9 @@ fn main() {
         let handle = PoolServer::spawn(
             "127.0.0.1:0",
             PoolServerConfig {
-                target_fitness: 1e18, // never solve during bench
+                // never solve during bench
+                problem: nodio::genome::ProblemSpec::trap()
+                    .with_target(1e18),
                 ..Default::default()
             },
         )

@@ -88,7 +88,8 @@ fn cluster_config(shards: usize) -> ClusterConfig {
     ClusterConfig {
         shards,
         base: PoolServerConfig {
-            target_fitness: 1e18, // never solve during throughput rounds
+            // never solve during throughput rounds
+            problem: nodio::genome::ProblemSpec::trap().with_target(1e18),
             ..Default::default()
         },
         ..ClusterConfig::default()
@@ -102,8 +103,7 @@ fn verify_cross_shard_termination() -> bool {
         ClusterConfig {
             shards: 4,
             base: PoolServerConfig {
-                n_bits: 8,
-                target_fitness: 8.0,
+                problem: nodio::genome::ProblemSpec::bits(8, 8.0),
                 ..Default::default()
             },
             ..ClusterConfig::default()
@@ -154,7 +154,11 @@ fn main() {
     {
         let handle = PoolServer::spawn(
             "127.0.0.1:0",
-            PoolServerConfig { target_fitness: 1e18, ..Default::default() },
+            PoolServerConfig {
+                problem: nodio::genome::ProblemSpec::trap()
+                    .with_target(1e18),
+                ..Default::default()
+            },
         )
         .expect("single-loop server");
         let (reqs, hist) = run_round(handle.addr, clients, secs);

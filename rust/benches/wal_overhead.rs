@@ -84,7 +84,8 @@ fn config(shards: usize, persist: Option<PersistConfig>) -> ClusterConfig {
     ClusterConfig {
         shards,
         base: PoolServerConfig {
-            target_fitness: 1e18, // never solve mid-round
+            // never solve mid-round
+            problem: nodio::genome::ProblemSpec::trap().with_target(1e18),
             persist,
             ..Default::default()
         },

@@ -13,6 +13,7 @@ use crate::client::worker::WorkerMode;
 use crate::coordinator::cluster::{ClusterConfig, PoolBackend};
 use crate::coordinator::persistence::replay_dir;
 use crate::coordinator::{FederationConfig, PersistConfig, PoolServerConfig};
+use crate::genome::ProblemSpec;
 use crate::http::{HttpClient, Method, Request};
 use crate::problems::F15Instance;
 use crate::runtime::{NativeEngine, XlaEngine};
@@ -24,15 +25,25 @@ pub const USAGE: &str = "\
 usage: nodio <command> [options]
 
 commands:
-  server    --addr 127.0.0.1:8080 [--target 80] [--bits 160] [--log x.jsonl]
-            [--shards N] [--migration-ms 100] [--migration-k 3]
-            [--data-dir nodio-data] [--no-persist] [--snapshot-every 1024]
-            [--fsync] [--gossip-listen HOST:PORT] [--peer HOST:PORT ...]
-            [--gossip-every 250] [--node NAME]
+  server    --addr 127.0.0.1:8080 [--problem trap] [--dim N] [--target T]
+            [--bits 160] [--log x.jsonl] [--shards N] [--migration-ms 100]
+            [--migration-k 3] [--data-dir nodio-data] [--no-persist]
+            [--snapshot-every 1024] [--fsync] [--gossip-listen HOST:PORT]
+            [--peer HOST:PORT ...] [--gossip-every 250] [--node NAME]
             run the pool server until killed; --shards N > 1 runs the
             multi-core sharded coordinator (N event-loop shards with
-            round-robin connection routing and best-K pool gossip;
-            --log applies to the single-loop server only).
+            round-robin connection routing and best-K pool gossip; --log
+            writes one audit file per shard on the cluster).
+            --problem selects the experiment family and its genome
+            representation: trap | onemax | bits (bit-strings, PUT
+            "chromosome"; bits = any width + explicit --target) or
+            sphere | rastrigin | griewank (f64 vectors, PUT "genes");
+            --dim is the bit width / vector dimension (--bits is the
+            trap-era alias). --target is the solving fitness for bit
+            problems and the target COST for real ones (defaults: the
+            optimum / a dimension-scaled threshold). The representation
+            is persisted in meta.json and announced to federation peers;
+            mismatched peers are refused.
             --peer/--gossip-listen federate multiple server processes:
             they exchange best individuals and experiment terminations
             over TCP as CRC-framed WAL records (--peer is repeatable or
@@ -42,16 +53,20 @@ commands:
             stats, PUT with --body, ...); prints the response body,
             exits nonzero on connect failure or status >= 400 — the
             dependency-free probe ci/federation_smoke.sh drives
-  client    --server HOST:PORT [--engine native|xla|jnp] [--pop 256]
-            [--epochs N] [--uuid NAME] [--no-restart]
-            run one volunteer island
-  swarm     [--clients 4] [--engine native|xla|jnp] [--mode basic|w2]
-            [--solutions 1] [--timeout-s 60] [--churn-rate R]
-            [--session-s S] [--seed N] [--shards N] [--backends N]
-            [--data-dir DIR] [--no-persist] [--snapshot-every 1024]
-            [--peer HOST:PORT ...] [--gossip-listen HOST:PORT]
-            [--gossip-every 250]
+  client    --server HOST:PORT [--problem trap] [--dim N] [--target T]
+            [--engine native|xla|jnp] [--pop 256] [--epochs N]
+            [--uuid NAME] [--no-restart]
+            run one volunteer island (--problem must match the server's;
+            real problems run a native real-coded island)
+  swarm     [--clients 4] [--problem trap] [--dim N] [--target T]
+            [--engine native|xla|jnp] [--mode basic|w2] [--solutions 1]
+            [--timeout-s 60] [--churn-rate R] [--session-s S] [--seed N]
+            [--shards N] [--backends N] [--data-dir DIR] [--no-persist]
+            [--snapshot-every 1024] [--peer HOST:PORT ...]
+            [--gossip-listen HOST:PORT] [--gossip-every 250]
             in-process server + simulated volunteers (experiment E6);
+            --problem/--dim/--target select the experiment exactly like
+            `nodio server` (e.g. --problem rastrigin --dim 64);
             --shards N > 1 drives the sharded pool coordinator;
             --backends N > 1 runs N federated backends linked over
             localhost TCP gossip and waits for every backend to agree
@@ -116,6 +131,39 @@ fn engine_arg(args: &Args) -> Result<EngineChoice> {
     EngineChoice::parse(name).ok_or_else(|| anyhow!("unknown engine {name}"))
 }
 
+/// Shared `--problem` / `--dim` (alias `--bits`) / `--target` handling:
+/// the experiment spec for `nodio server`, `swarm` and `client`.
+fn problem_args(args: &Args) -> Result<ProblemSpec> {
+    let dim = match args.get("dim").or_else(|| args.get("bits")) {
+        Some(v) => Some(v.parse::<usize>().map_err(|_| {
+            anyhow!("--dim: expected integer, got {v}")
+        })?),
+        None => None,
+    };
+    let target = match args.get("target") {
+        Some(v) => Some(v.parse::<f64>().map_err(|_| {
+            anyhow!("--target: expected number, got {v}")
+        })?),
+        None => None,
+    };
+    let name = match args.get("problem") {
+        Some(n) => n,
+        // The pre-PR 5 surface: a bare `--bits N` (no --problem) keeps
+        // its old width-only semantics — any width, default target 80.0
+        // — instead of inheriting trap's optimum and multiple-of-4
+        // constraint.
+        None if args.get("bits").is_some() => {
+            let n = dim.unwrap_or(160);
+            if n == 0 {
+                return Err(anyhow!("--bits needs a positive bit count"));
+            }
+            return Ok(ProblemSpec::bits(n, target.unwrap_or(80.0)));
+        }
+        None => "trap",
+    };
+    ProblemSpec::parse(name, dim, target).map_err(|e| anyhow!(e))
+}
+
 /// Shared `--data-dir` / `--no-persist` / `--snapshot-every` / `--fsync`
 /// handling. `default_dir` None means persistence is opt-in (the swarm
 /// simulator); Some gives the server a durable default.
@@ -163,9 +211,9 @@ fn cmd_server(args: &Args) -> Result<()> {
     let addr = args.get_or("addr", "127.0.0.1:8080").to_string();
     let shards = args.get_usize("shards", 1).map_err(|e| anyhow!(e))?;
     let persist = persist_args(args, Some("nodio-data"))?;
+    let problem = problem_args(args)?;
     let config = PoolServerConfig {
-        target_fitness: args.get_f64("target", 80.0).map_err(|e| anyhow!(e))?,
-        n_bits: args.get_usize("bits", 160).map_err(|e| anyhow!(e))?,
+        problem,
         log_path: args.get("log").map(std::path::PathBuf::from),
         persist,
         ..Default::default()
@@ -181,15 +229,20 @@ fn cmd_server(args: &Args) -> Result<()> {
     };
     // The handle stays alive for the process lifetime — dropping it would
     // stop the server threads.
+    let label = cluster.base.problem.label();
     let running = PoolBackend::spawn(&addr, cluster)?;
     if running.shards() > 1 {
         println!(
-            "nodio sharded pool server listening on {} ({} shards)",
+            "nodio sharded pool server listening on {} ({} shards, \
+             problem {label})",
             running.addr(),
             running.shards()
         );
     } else {
-        println!("nodio pool server listening on {}", running.addr());
+        println!(
+            "nodio pool server listening on {} (problem {label})",
+            running.addr()
+        );
     }
     if let Some(gossip) = running.gossip_addr() {
         println!("nodio gossip listening on {gossip}");
@@ -311,6 +364,7 @@ fn cmd_client(args: &Args) -> Result<()> {
         .map_err(|e| anyhow!("bad --server {server}: {e}"))?;
     let config = ClientConfig {
         server: Some(addr),
+        problem: problem_args(args)?,
         engine: engine_arg(args)?,
         pop_size: args.get_usize("pop", 256).map_err(|e| anyhow!(e))?,
         max_epochs: args.get_u64("epochs", u64::MAX).map_err(|e| anyhow!(e))?,
@@ -337,6 +391,7 @@ fn cmd_swarm(args: &Args) -> Result<()> {
     let backends = args.get_usize("backends", 1).map_err(|e| anyhow!(e))?;
     let config = SwarmConfig {
         n_clients: args.get_usize("clients", 4).map_err(|e| anyhow!(e))?,
+        problem: problem_args(args)?,
         shards: args.get_usize("shards", 1).map_err(|e| anyhow!(e))?,
         persist: persist_args(args, None)?,
         peers: args
@@ -380,10 +435,11 @@ fn cmd_swarm(args: &Args) -> Result<()> {
         // linked over localhost TCP, clients spread round-robin.
         println!(
             "federated swarm: {} clients over {} backends ({} shard(s) \
-             each), target {} solutions at EVERY backend",
+             each), problem {}, target {} solutions at EVERY backend",
             config.n_clients,
             backends,
             config.shards.max(1),
+            config.problem.label(),
             config.target_solutions,
         );
         let report = crate::sim::run_federated_swarm(config, backends)?;
@@ -402,13 +458,22 @@ fn cmd_swarm(args: &Args) -> Result<()> {
         for (i, c) in report.per_backend_completed.iter().enumerate() {
             println!("  backend {i}: {c} completed");
         }
+        if report.solutions < config.target_solutions {
+            bail!(
+                "timed out: only {}/{} federation-agreed solutions",
+                report.solutions,
+                config.target_solutions
+            );
+        }
         return Ok(());
     }
     println!(
-        "swarm: {} clients ({:?}, {}), target {} solutions, {} shard(s)",
+        "swarm: {} clients ({:?}, {}), problem {}, target {} solutions, \
+         {} shard(s)",
         config.n_clients,
         config.mode,
         config.engine.as_str(),
+        config.problem.label(),
         config.target_solutions,
         config.shards.max(1)
     );
@@ -426,6 +491,13 @@ fn cmd_swarm(args: &Args) -> Result<()> {
     );
     for (i, t) in report.experiment_times.iter().enumerate() {
         println!("  experiment {i}: {t:.2}s");
+    }
+    if report.solutions < config.target_solutions {
+        bail!(
+            "timed out: only {}/{} solutions",
+            report.solutions,
+            config.target_solutions
+        );
     }
     Ok(())
 }

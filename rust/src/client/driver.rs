@@ -3,9 +3,12 @@
 
 use anyhow::Result;
 
-use crate::ea::genome::BitString;
+use crate::ea::genome::{BitString, RealVector};
 use crate::ea::island::{Island, IslandConfig};
-use crate::problems::{BitProblem, Trap};
+use crate::ea::real_island::{RealIsland, RealIslandConfig};
+use crate::genome::{ProblemSpec, Representation};
+use crate::json::Json;
+use crate::problems::{BitProblem, RealProblem, Trap};
 use crate::rng::Xoshiro256pp;
 use crate::runtime::xla::{EpochState, XlaEngine};
 
@@ -40,10 +43,45 @@ impl EngineChoice {
     }
 }
 
+/// A client-side genome: what an island evolves and migrates. The
+/// server-side analog is [`crate::genome::Genome`]; this one keeps the
+/// operator-friendly layouts (byte-per-bit strings, plain f64 vectors).
+#[derive(Debug, Clone)]
+pub enum ClientGenome {
+    Bits(BitString),
+    Real(RealVector),
+}
+
+impl ClientGenome {
+    /// The PUT-body member for this genome (`chromosome` wire string or
+    /// `genes` array).
+    pub fn wire_member(&self) -> (&'static str, Json) {
+        match self {
+            ClientGenome::Bits(b) => {
+                ("chromosome", Json::Str(b.to_string01()))
+            }
+            ClientGenome::Real(v) => (
+                "genes",
+                Json::Arr(v.values.iter().map(|&g| Json::Num(g)).collect()),
+            ),
+        }
+    }
+
+    /// Display form (logs, the Figure-2 postMessage payload).
+    pub fn display_string(&self) -> String {
+        match self {
+            ClientGenome::Bits(b) => b.to_string01(),
+            ClientGenome::Real(v) => crate::json::to_string(&Json::Arr(
+                v.values.iter().map(|&g| Json::Num(g)).collect(),
+            )),
+        }
+    }
+}
+
 /// Result of one migration epoch.
 #[derive(Debug, Clone)]
 pub struct EpochOutcome {
-    pub best: BitString,
+    pub best: ClientGenome,
     pub best_fitness: f64,
     pub gens_done: u64,
     pub evaluations: u64,
@@ -52,10 +90,22 @@ pub struct EpochOutcome {
 
 /// An island plus the engine that advances it.
 pub enum IslandDriver {
+    /// A native bit-string island over any evaluable bit problem (trap
+    /// at any width, onemax).
     Native {
-        problem: Trap,
+        problem: Box<dyn BitProblem + Send>,
         island: Island,
         rng: Xoshiro256pp,
+    },
+    /// A real-coded island (BLX-alpha crossover, Gaussian mutation,
+    /// elitism) minimizing one of the floating-point problems; reports
+    /// `fitness = -cost` to match the pool's maximization convention.
+    NativeReal {
+        problem: Box<dyn RealProblem + Send + Sync>,
+        island: RealIsland,
+        rng: Xoshiro256pp,
+        config: RealIslandConfig,
+        target_cost: f64,
     },
     Xla {
         engine: Box<XlaEngine>,
@@ -65,6 +115,81 @@ pub enum IslandDriver {
 }
 
 impl IslandDriver {
+    /// Build a driver for an arbitrary experiment spec. Real problems
+    /// run a [`RealIsland`] on the native engine (the XLA artifacts are
+    /// trap-only); `trap` and `onemax` specs build a width-matched
+    /// native island; 160-bit `bits` (width-only) specs keep the legacy
+    /// behavior of evolving the paper's trap. Everything else bails
+    /// loudly rather than evolving a mismatched island.
+    pub fn for_problem(
+        spec: &ProblemSpec,
+        choice: EngineChoice,
+        pop_size: usize,
+        seed: u64,
+    ) -> Result<IslandDriver> {
+        if let Some(problem) = spec.real_problem() {
+            if choice != EngineChoice::Native {
+                anyhow::bail!(
+                    "real-valued problems run on the native engine \
+                     (engine {} has no {} artifact)",
+                    choice.as_str(),
+                    spec.name
+                );
+            }
+            let mut rng = Xoshiro256pp::new(seed);
+            let config = RealIslandConfig {
+                pop_size,
+                domain: spec.domain,
+                ..Default::default()
+            };
+            let island =
+                RealIsland::new(config.clone(), problem.as_ref(), &mut rng);
+            return Ok(IslandDriver::NativeReal {
+                problem,
+                island,
+                rng,
+                config,
+                target_cost: spec.target_cost(),
+            });
+        }
+        // Bit problems with a known evaluator (trap at any width,
+        // onemax): a native island evolves them directly.
+        if choice == EngineChoice::Native {
+            if let Some(problem) = spec.bit_problem() {
+                let mut rng = Xoshiro256pp::new(seed);
+                let island = Island::new(
+                    IslandConfig { pop_size, ..Default::default() },
+                    problem.as_ref(),
+                    &mut rng,
+                );
+                return Ok(IslandDriver::Native { problem, island, rng });
+            }
+        } else if spec.name == "trap"
+            && spec.repr == Representation::bits(160)
+        {
+            // The XLA artifacts are compiled for the paper's 160-bit
+            // trap only.
+            return IslandDriver::new(choice, pop_size, seed);
+        }
+        // Width-only experiments ("bits") have no evaluator to evolve
+        // against; at the paper's width the volunteers run the trap
+        // island exactly as they always did (the pre-PR 5 behavior).
+        // Anything else must bail loudly: silently evolving a
+        // mismatched island would stall the experiment and — with
+        // verification on — get every honest volunteer banned.
+        if spec.name == "bits" && spec.repr == Representation::bits(160) {
+            return IslandDriver::new(choice, pop_size, seed);
+        }
+        anyhow::bail!(
+            "no {} client island for problem {}; volunteers evolve trap \
+             or onemax natively (any width), the 160-bit trap on the XLA \
+             engines, 160-bit width-only experiments, or the real-valued \
+             family",
+            choice.as_str(),
+            spec.label()
+        )
+    }
+
     /// Build a driver. For XLA engines `pop_size` must match an available
     /// `ea_epoch_p*` artifact (see `Manifest::nearest_epoch_pop`).
     pub fn new(choice: EngineChoice, pop_size: usize, seed: u64) -> Result<IslandDriver> {
@@ -77,7 +202,11 @@ impl IslandDriver {
                     &problem,
                     &mut rng,
                 );
-                Ok(IslandDriver::Native { problem, island, rng })
+                Ok(IslandDriver::Native {
+                    problem: Box::new(problem),
+                    island,
+                    rng,
+                })
             }
             EngineChoice::XlaPallas | EngineChoice::XlaJnp => {
                 let engine = Box::new(XlaEngine::load_default()?);
@@ -101,6 +230,7 @@ impl IslandDriver {
     pub fn pop_size(&self) -> usize {
         match self {
             IslandDriver::Native { island, .. } => island.pop.size(),
+            IslandDriver::NativeReal { island, .. } => island.members.len(),
             IslandDriver::Xla { state, .. } => state.pop_size,
         }
     }
@@ -110,29 +240,69 @@ impl IslandDriver {
     pub fn run_epoch(
         &mut self,
         gens: u64,
-        immigrant: Option<&BitString>,
+        immigrant: Option<&ClientGenome>,
     ) -> Result<EpochOutcome> {
         match self {
             IslandDriver::Native { problem, island, rng } => {
-                if let Some(imm) = immigrant {
-                    island.inject(imm.clone(), problem, rng);
+                if let Some(ClientGenome::Bits(imm)) = immigrant {
+                    if imm.len() == problem.n_bits() {
+                        island.inject(imm.clone(), problem.as_ref(), rng);
+                    }
                 }
                 let evals_before = island.evaluations;
-                let gens_done = island.run_epoch(problem, gens, rng);
+                let gens_done =
+                    island.run_epoch(problem.as_ref(), gens, rng);
                 let (best, best_fitness) = island.best();
                 Ok(EpochOutcome {
-                    best: best.clone(),
+                    best: ClientGenome::Bits(best.clone()),
                     best_fitness,
                     gens_done,
                     evaluations: island.evaluations - evals_before,
                     solved: problem.is_solution(best_fitness),
                 })
             }
+            IslandDriver::NativeReal {
+                problem,
+                island,
+                rng,
+                target_cost,
+                ..
+            } => {
+                if let Some(ClientGenome::Real(imm)) = immigrant {
+                    // A wrong-dimension immigrant (malformed peer) is
+                    // dropped rather than poisoning the population.
+                    if imm.len() == problem.dim() {
+                        island.inject(imm.clone(), problem.as_ref(), rng);
+                    }
+                }
+                let evals_before = island.evaluations;
+                let solved_at = |cost: f64| cost <= *target_cost + 1e-9;
+                let mut gens_done = 0u64;
+                let mut best_cost = island.best().1;
+                // Early exit on solution mid-epoch, mirroring the bit
+                // island's run_epoch contract.
+                while gens_done < gens && !solved_at(best_cost) {
+                    best_cost = island.generation(problem.as_ref(), rng);
+                    gens_done += 1;
+                }
+                let (best, cost) = island.best();
+                Ok(EpochOutcome {
+                    best: ClientGenome::Real(best.clone()),
+                    best_fitness: -cost,
+                    gens_done,
+                    evaluations: island.evaluations - evals_before,
+                    solved: solved_at(cost),
+                })
+            }
             IslandDriver::Xla { engine, state, variant } => {
-                let result = engine.ea_epoch(state, immigrant, variant)?;
+                let imm = match immigrant {
+                    Some(ClientGenome::Bits(b)) => Some(b),
+                    _ => None,
+                };
+                let result = engine.ea_epoch(state, imm, variant)?;
                 let best = state.chromosome(result.best_idx);
                 Ok(EpochOutcome {
-                    best,
+                    best: ClientGenome::Bits(best),
                     best_fitness: result.best_fitness as f64,
                     gens_done: result.gens_done,
                     // epoch evals: entry eval + one population per gen
@@ -155,7 +325,23 @@ impl IslandDriver {
                 let mut new_rng = Xoshiro256pp::new(seed);
                 *island = Island::new(
                     IslandConfig { pop_size, ..Default::default() },
-                    problem,
+                    problem.as_ref(),
+                    &mut new_rng,
+                );
+                *rng = new_rng;
+            }
+            IslandDriver::NativeReal {
+                problem,
+                island,
+                rng,
+                config,
+                ..
+            } => {
+                let mut new_rng = Xoshiro256pp::new(seed);
+                config.pop_size = pop_size;
+                *island = RealIsland::new(
+                    config.clone(),
+                    problem.as_ref(),
                     &mut new_rng,
                 );
                 *rng = new_rng;
@@ -173,7 +359,9 @@ impl IslandDriver {
 
     pub fn engine_name(&self) -> &'static str {
         match self {
-            IslandDriver::Native { .. } => "native",
+            IslandDriver::Native { .. } | IslandDriver::NativeReal { .. } => {
+                "native"
+            }
             IslandDriver::Xla { variant, .. } => {
                 if *variant == "pallas" {
                     "xla-pallas"
@@ -213,12 +401,117 @@ mod tests {
     #[test]
     fn native_driver_solves_with_immigrant() {
         let mut d = IslandDriver::new(EngineChoice::Native, 32, 3).unwrap();
-        let solution = BitString::ones(160);
+        let solution = ClientGenome::Bits(BitString::ones(160));
         let out = d.run_epoch(10, Some(&solution)).unwrap();
         assert!(out.solved);
         assert_eq!(out.gens_done, 0);
         assert_eq!(out.best_fitness, 80.0);
-        assert_eq!(out.best.count_ones(), 160);
+        let ClientGenome::Bits(best) = out.best else {
+            panic!("expected a bit genome");
+        };
+        assert_eq!(best.count_ones(), 160);
+    }
+
+    #[test]
+    fn real_driver_minimizes_and_reports_negated_cost() {
+        let spec = crate::genome::ProblemSpec::sphere(6, 1e-2);
+        let mut d =
+            IslandDriver::for_problem(&spec, EngineChoice::Native, 64, 5)
+                .unwrap();
+        assert_eq!(d.pop_size(), 64);
+        assert_eq!(d.engine_name(), "native");
+        let out = d.run_epoch(50, None).unwrap();
+        assert!(out.gens_done > 0);
+        assert!(out.evaluations > 0);
+        // Fitness is the negated cost: never positive on sphere.
+        assert!(out.best_fitness <= 0.0, "{}", out.best_fitness);
+        let ClientGenome::Real(v) = &out.best else {
+            panic!("expected a real genome");
+        };
+        assert_eq!(v.len(), 6);
+        // An optimal immigrant solves at epoch entry (gens_done 0).
+        let solution =
+            ClientGenome::Real(RealVector { values: vec![0.0; 6] });
+        let out = d.run_epoch(10, Some(&solution)).unwrap();
+        assert!(out.solved);
+        assert_eq!(out.gens_done, 0);
+        assert_eq!(out.best_fitness, -0.0);
+        // Wire form: genes member, canonical rendering.
+        let (key, _) = out.best.wire_member();
+        assert_eq!(key, "genes");
+        assert_eq!(out.best.display_string(), "[0,0,0,0,0,0]");
+        // Restart draws a fresh random population.
+        d.restart(32, 9);
+        assert_eq!(d.pop_size(), 32);
+        let out = d.run_epoch(1, None).unwrap();
+        assert!(!out.solved || out.best_fitness >= -1e-2 - 1e-9);
+    }
+
+    #[test]
+    fn real_driver_refuses_xla_engines_and_mismatched_immigrants() {
+        let spec = crate::genome::ProblemSpec::rastrigin(4, 4.0);
+        assert!(IslandDriver::for_problem(
+            &spec,
+            EngineChoice::XlaPallas,
+            64,
+            1
+        )
+        .is_err());
+        let mut d =
+            IslandDriver::for_problem(&spec, EngineChoice::Native, 16, 2)
+                .unwrap();
+        // Wrong-dimension and wrong-family immigrants are ignored, not
+        // injected (no panic, population stays homogeneous).
+        let narrow = ClientGenome::Real(RealVector { values: vec![0.0; 2] });
+        let bits = ClientGenome::Bits(BitString::ones(160));
+        assert!(d.run_epoch(1, Some(&narrow)).is_ok());
+        assert!(d.run_epoch(1, Some(&bits)).is_ok());
+    }
+
+    #[test]
+    fn onemax_driver_evolves_the_right_problem() {
+        // `--problem onemax --dim 32`: the volunteer island evaluates
+        // onemax (fitness = ones), not trap — and solves it.
+        let spec =
+            crate::genome::ProblemSpec::parse("onemax", Some(32), None)
+                .unwrap();
+        let mut d =
+            IslandDriver::for_problem(&spec, EngineChoice::Native, 64, 11)
+                .unwrap();
+        let out = d.run_epoch(400, None).unwrap();
+        assert!(out.solved, "onemax-32 unsolved: {out:?}");
+        let ClientGenome::Bits(best) = &out.best else {
+            panic!("expected bits");
+        };
+        assert_eq!(best.len(), 32);
+        assert_eq!(best.count_ones(), 32);
+        assert_eq!(out.best_fitness, 32.0);
+        // Non-native engines have no onemax artifact: loud error.
+        assert!(IslandDriver::for_problem(
+            &spec,
+            EngineChoice::XlaPallas,
+            64,
+            1
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn trap_driver_scales_to_custom_widths() {
+        // `--problem trap --dim 8`: the client island matches the
+        // experiment width instead of assuming the paper's 160 bits.
+        let spec =
+            crate::genome::ProblemSpec::parse("trap", Some(8), None).unwrap();
+        let mut d =
+            IslandDriver::for_problem(&spec, EngineChoice::Native, 64, 3)
+                .unwrap();
+        let out = d.run_epoch(200, None).unwrap();
+        let ClientGenome::Bits(best) = &out.best else {
+            panic!("expected bits");
+        };
+        assert_eq!(best.len(), 8);
+        // Trap-2 optimum is 4.0; a 64-member island finds it fast.
+        assert!(out.solved, "trap-8 unsolved after 200 gens: {out:?}");
     }
 
     #[cfg(not(feature = "xla-runtime"))]

@@ -13,6 +13,6 @@ pub mod volunteer;
 pub mod worker;
 
 pub use browser::{BrowserClient, DisplayState, WorkerMsg};
-pub use driver::{EngineChoice, EpochOutcome, IslandDriver};
+pub use driver::{ClientGenome, EngineChoice, EpochOutcome, IslandDriver};
 pub use volunteer::{ClientConfig, ClientStats, VolunteerClient};
 pub use worker::{ClientProcess, WorkerMode};

@@ -7,8 +7,9 @@ use std::time::Duration;
 
 use anyhow::Result;
 
-use super::driver::{EngineChoice, IslandDriver};
-use crate::ea::genome::BitString;
+use super::driver::{ClientGenome, EngineChoice, IslandDriver};
+use crate::ea::genome::{BitString, RealVector};
+use crate::genome::ProblemSpec;
 use crate::http::{HttpClient, Method, Request};
 use crate::json::Json;
 
@@ -18,6 +19,10 @@ pub struct ClientConfig {
     /// Pool server; `None` runs the island fully offline (the paper's
     /// fault-tolerance scenario: "the island does not need the server").
     pub server: Option<SocketAddr>,
+    /// The experiment this volunteer evolves (must match the server's):
+    /// selects the island representation — bit-string trap islands or
+    /// real-coded islands (BLX-alpha, Gaussian mutation).
+    pub problem: ProblemSpec,
     pub engine: EngineChoice,
     pub pop_size: usize,
     /// Generations between pool exchanges (the paper's 100).
@@ -40,6 +45,7 @@ impl Default for ClientConfig {
     fn default() -> Self {
         ClientConfig {
             server: None,
+            problem: ProblemSpec::trap(),
             engine: EngineChoice::Native,
             pop_size: 256,
             epoch_gens: 100,
@@ -77,13 +83,17 @@ pub struct VolunteerClient {
     restart_seed: u64,
     /// Immigrant fetched at the end of the previous epoch, injected at the
     /// start of the next.
-    pending_immigrant: Option<BitString>,
+    pending_immigrant: Option<ClientGenome>,
 }
 
 impl VolunteerClient {
     pub fn new(config: ClientConfig) -> Result<VolunteerClient> {
-        let driver =
-            IslandDriver::new(config.engine, config.pop_size, config.seed)?;
+        let driver = IslandDriver::for_problem(
+            &config.problem,
+            config.engine,
+            config.pop_size,
+            config.seed,
+        )?;
         let http = config.server.map(|addr| {
             let mut c = HttpClient::lazy(addr);
             c.set_timeout(config.timeout);
@@ -99,12 +109,17 @@ impl VolunteerClient {
         })
     }
 
-    /// PUT the best chromosome; returns whether the server confirmed a
+    /// PUT the best genome; returns whether the server confirmed a
     /// solution (solved==true), or None on network failure.
-    fn put_best(&mut self, best: &BitString, fitness: f64) -> Option<bool> {
+    fn put_best(
+        &mut self,
+        best: &ClientGenome,
+        fitness: f64,
+    ) -> Option<bool> {
         let http = self.http.as_mut()?;
+        let (key, genome_json) = best.wire_member();
         let body = Json::obj(vec![
-            ("chromosome", best.to_string01().into()),
+            (key, genome_json),
             ("fitness", fitness.into()),
             ("uuid", self.config.uuid.clone().into()),
         ]);
@@ -124,9 +139,9 @@ impl VolunteerClient {
         }
     }
 
-    /// GET a random pool chromosome, if the server is reachable and the
+    /// GET a random pool genome, if the server is reachable and the
     /// pool is non-empty.
-    fn get_random(&mut self) -> Option<BitString> {
+    fn get_random(&mut self) -> Option<ClientGenome> {
         let http = self.http.as_mut()?;
         let req = Request::new(
             Method::Get,
@@ -136,8 +151,17 @@ impl VolunteerClient {
             Ok(resp) if resp.status == 200 => {
                 self.stats.migrations_ok += 1;
                 let body = resp.json_body().ok()?;
-                let chrom = body.get_str("chromosome")?;
-                let parsed = BitString::parse(chrom)?;
+                let parsed = if let Some(chrom) = body.get_str("chromosome")
+                {
+                    ClientGenome::Bits(BitString::parse(chrom)?)
+                } else {
+                    let items = body.get("genes")?.as_arr()?;
+                    let mut values = Vec::with_capacity(items.len());
+                    for item in items {
+                        values.push(item.as_f64()?);
+                    }
+                    ClientGenome::Real(RealVector { values })
+                };
                 self.stats.immigrants_received += 1;
                 Some(parsed)
             }
@@ -208,7 +232,7 @@ impl VolunteerClient {
         Some((
             outcome.best_fitness,
             outcome.solved,
-            outcome.best.to_string01(),
+            outcome.best.display_string(),
         ))
     }
 
@@ -307,6 +331,45 @@ mod tests {
         assert_eq!(stats.epochs, 2); // evolution unaffected
         assert!(stats.migrations_failed > 0);
         assert_eq!(stats.migrations_ok, 0);
+    }
+
+    #[test]
+    fn real_island_solves_against_live_server() {
+        // A real-valued experiment end-to-end: a real-coded volunteer
+        // PUTs `genes` bodies, GETs real immigrants, and drives the
+        // server to a solution (sphere dim 4, cost <= 0.5).
+        let spec = crate::genome::ProblemSpec::sphere(4, 0.5);
+        let handle = PoolServer::spawn(
+            "127.0.0.1:0",
+            PoolServerConfig { problem: spec.clone(), ..Default::default() },
+        )
+        .unwrap();
+        let stop = AtomicBool::new(false);
+        let config = ClientConfig {
+            server: Some(handle.addr),
+            problem: spec,
+            pop_size: 64,
+            epoch_gens: 50,
+            max_epochs: 400,
+            restart_on_solution: false,
+            uuid: "real-island".into(),
+            seed: 17,
+            ..Default::default()
+        };
+        let mut client = VolunteerClient::new(config).unwrap();
+        let stats = client.run(&stop);
+        assert!(stats.solutions_found >= 1, "{stats:?}");
+        assert!(stats.migrations_ok > 0);
+        assert_eq!(stats.migrations_failed, 0);
+        // The server closed the experiment with the client's record.
+        let mut c = HttpClient::connect(handle.addr).unwrap();
+        let history = c
+            .send(&Request::new(Method::Get, "/experiment/history"))
+            .unwrap()
+            .json_body()
+            .unwrap();
+        assert!(history.get_u64("count").unwrap_or(0) >= 1, "{history}");
+        handle.stop();
     }
 
     #[test]

@@ -12,6 +12,7 @@ use std::sync::Arc;
 
 use super::driver::EngineChoice;
 use super::volunteer::{ClientConfig, ClientStats, VolunteerClient};
+use crate::genome::ProblemSpec;
 use crate::rng::{dist, Rng64, SplitMix64};
 
 /// Client architecture variant (the paper's two implementations).
@@ -59,9 +60,12 @@ pub struct ClientProcess {
 }
 
 impl ClientProcess {
-    /// Spawn `mode.workers()` worker threads against `server`.
+    /// Spawn `mode.workers()` worker threads against `server`, evolving
+    /// `problem` (trap bit-strings or a real-valued island per worker).
+    #[allow(clippy::too_many_arguments)]
     pub fn spawn(
         server: Option<SocketAddr>,
+        problem: &ProblemSpec,
         mode: WorkerMode,
         engine: EngineChoice,
         base_pop: usize,
@@ -87,6 +91,7 @@ impl ClientProcess {
                 };
                 let config = ClientConfig {
                     server,
+                    problem: problem.clone(),
                     engine,
                     pop_size,
                     seed: worker_seed,
@@ -158,6 +163,7 @@ mod tests {
                 .unwrap();
         let process = ClientProcess::spawn(
             Some(handle.addr),
+            &ProblemSpec::trap(),
             WorkerMode::W2,
             EngineChoice::Native,
             256,
@@ -189,6 +195,7 @@ mod tests {
     fn stop_interrupts_workers() {
         let process = ClientProcess::spawn(
             None,
+            &ProblemSpec::trap(),
             WorkerMode::W2,
             EngineChoice::Native,
             128,

@@ -67,25 +67,26 @@ use super::experiment::{bump_count, ExperimentLog};
 use super::federation::{
     self, FederationConfig, FederationHub, FedOutbound,
 };
+use super::logger::EventLog;
 use super::persistence::{
     self, PersistConfig, RecoveredShard, ShardPersistence, ShardState,
 };
 use super::pool::{ChromosomePool, PoolEntry};
 use super::routes::{
     first_json_byte, put_fail, run_put_batch, validate_put_json,
-    validate_put_ref, PutFields, PutOutcome, RandomOutcome,
+    validate_put_ref, GenomeFields, PutFields, PutOutcome, RandomOutcome,
 };
 use super::security::{FitnessVerifier, RateLimiter, SaboteurLog};
 use super::server::{PoolServer, PoolServerConfig};
 use crate::eventloop::{Epoll, Event, Interest, Waker};
+use crate::genome::{ProblemSpec, Representation};
 use crate::http::server::{
     ConnDriver, ServerConfig, ServerHandle, ServerStats, TOKEN_LISTENER,
     TOKEN_WAKER,
 };
 use crate::http::types::{write_json_200, write_no_content_204};
 use crate::http::{Method, Request, Response, Service};
-use crate::json::{self, Json, PutBody};
-use crate::problems::{PackedBits, Trap};
+use crate::json::{self, Json, PutBody, PutScratch};
 use crate::rng::Xoshiro256pp;
 use crate::util::unix_ms;
 
@@ -101,10 +102,12 @@ pub struct ClusterConfig {
     pub shards: usize,
     /// Pool/experiment settings shared with the single-loop server. The
     /// pool capacity is split evenly across shards, `persist` gives each
-    /// shard its own WAL+snapshot directory, and `verify_fitness` /
+    /// shard its own WAL+snapshot directory, `verify_fitness` /
     /// `rate_limit` are enforced per shard (see module docs for the
-    /// per-connection semantics); only `log_path` is ignored (the
-    /// cluster has no audit event log).
+    /// per-connection semantics), and `log_path` gives each shard its
+    /// own audit event log (`<stem>-shardNNNN.<ext>`, merged counters in
+    /// `/stats`) through the same `WalWriter` facade the single loop
+    /// uses.
     pub base: PoolServerConfig,
     /// Gossip period for inter-shard best-K migration.
     pub migration_interval: Duration,
@@ -202,6 +205,9 @@ pub(crate) struct ShardSlot {
     /// `GET /experiment/random` responses served from the per-shard
     /// render cache (cumulative).
     cache_hits: AtomicU64,
+    /// Audit events this shard's `EventLog` recorded (published per
+    /// tick; `/stats` merges the slots into `events_logged`).
+    events: AtomicU64,
     /// Per-UUID accounting published by the owning shard once per tick
     /// (the shard counts lock-free and clones here when dirty; `/stats`
     /// on any shard merges every slot's copy). Written by the owner only,
@@ -222,6 +228,7 @@ impl ShardSlot {
             pool_len: AtomicU64::new(0),
             migrations_rx: AtomicU64::new(0),
             cache_hits: AtomicU64::new(0),
+            events: AtomicU64::new(0),
             per_uuid: Mutex::new(HashMap::new()),
         }
     }
@@ -439,9 +446,12 @@ impl ClusterShared {
 struct ShardCfg {
     id: usize,
     http: ServerConfig,
-    n_bits: usize,
+    problem: ProblemSpec,
     pool_capacity: usize,
     seed: u64,
+    /// Per-shard audit event log target (None = disabled), derived from
+    /// `PoolServerConfig::log_path` via [`shard_log_path`].
+    log_path: Option<std::path::PathBuf>,
     migration_interval: Duration,
     migration_k: usize,
     persist: Option<PersistConfig>,
@@ -466,7 +476,7 @@ struct ShardCfg {
 /// same no-locks discipline the single server gets from `Rc<RefCell<..>>`.
 struct ShardService {
     id: usize,
-    n_bits: usize,
+    repr: Representation,
     migration_k: usize,
     pool: ChromosomePool,
     rng: Xoshiro256pp,
@@ -501,6 +511,12 @@ struct ShardService {
     saboteurs: SaboteurLog,
     /// DoS guard (parity): per-UUID token bucket, per shard.
     rate_limiter: Option<RateLimiter>,
+    /// Per-shard audit event log (parity with the single-loop server's
+    /// `--log`): same CRC-framed `WalWriter` facade, own file per shard.
+    log: EventLog,
+    /// Reusable batch-PUT parse scratch (one allocation per shard, not
+    /// one per batch request).
+    put_scratch: PutScratch,
     persist: Option<ShardPersistence>,
     federation: Option<Arc<FederationHub>>,
     shared: Arc<ClusterShared>,
@@ -544,9 +560,20 @@ impl ShardService {
         // The recovered cumulative per-UUID map seeds the published slot
         // copy directly; the live delta starts empty.
         *slots[cfg.id].per_uuid.lock().unwrap() = state.per_uuid;
+        let log = match &cfg.log_path {
+            Some(p) => EventLog::to_file(p).unwrap_or_else(|e| {
+                eprintln!(
+                    "nodio shard {}: cannot open log {}: {e}",
+                    cfg.id,
+                    p.display()
+                );
+                EventLog::disabled()
+            }),
+            None => EventLog::disabled(),
+        };
         let mut service = ShardService {
             id: cfg.id,
-            n_bits: cfg.n_bits,
+            repr: cfg.problem.repr,
             migration_k: cfg.migration_k,
             pool,
             rng: Xoshiro256pp::new(
@@ -563,13 +590,26 @@ impl ShardService {
             closed: state.completed,
             random_cache: Vec::new(),
             put_ok_body: Vec::new(),
-            verifier: cfg
-                .verify_fitness
-                .then(|| FitnessVerifier::new(Box::new(Trap::paper()))),
+            verifier: cfg.verify_fitness.then(|| {
+                let v = FitnessVerifier::for_spec(&cfg.problem);
+                if v.is_none() && cfg.id == 0 {
+                    // Parity with the single-loop server's warning: the
+                    // operator asked for verification the spec cannot
+                    // provide (once, not once per shard).
+                    eprintln!(
+                        "nodio: verify-fitness has no evaluator for \
+                         problem {}; verification disabled",
+                        cfg.problem.label()
+                    );
+                }
+                v
+            }).flatten(),
             saboteurs: SaboteurLog::new(3),
             rate_limiter: cfg
                 .rate_limit
                 .map(|(rate, burst)| RateLimiter::new(rate, burst)),
+            log,
+            put_scratch: PutScratch::new(),
             persist,
             federation: cfg.federation.clone(),
             shared,
@@ -598,6 +638,11 @@ impl ShardService {
         self.slot()
             .pool_len
             .store(self.pool.len() as u64, Ordering::Relaxed);
+    }
+
+    /// Publish this shard's audit-event count (merged in `/stats`).
+    fn publish_events(&self) {
+        self.slot().events.store(self.log.events(), Ordering::Relaxed);
     }
 
     /// Merge the tick's per-UUID delta into this shard's published slot
@@ -664,11 +709,13 @@ impl ShardService {
         }
     }
 
-    /// fsync the WAL on shutdown so a graceful stop loses nothing.
+    /// fsync the WAL (and flush the audit log) on shutdown so a graceful
+    /// stop loses nothing.
     fn shutdown_flush(&mut self) {
         if let Some(p) = &mut self.persist {
             p.sync();
         }
+        self.log.flush();
     }
 
     /// Move this shard to epoch `to`: WAL the transition (with the
@@ -824,27 +871,35 @@ impl ShardService {
 
     fn put_chromosome(&mut self, req: &Request) -> Response {
         // Zero-copy path first: SAX-extract the two known request shapes
-        // (protocol shared with the single-loop router); escapes and
+        // (protocol shared with the single-loop router; the batch vector
+        // is recycled through the shard's scratch); escapes and
         // malformed JSON fall back to the owned tree with legacy errors.
         if let Ok(text) = std::str::from_utf8(&req.body) {
-            match json::parse_put_body(text) {
+            let parsed = {
+                let mut scratch = std::mem::take(&mut self.put_scratch);
+                let parsed =
+                    json::parse_put_body_reusing(text, &mut scratch);
+                self.put_scratch = scratch;
+                parsed
+            };
+            match parsed {
                 Ok(PutBody::Single(item)) => {
                     let (status, payload) =
-                        match validate_put_ref(&item, self.n_bits) {
+                        match validate_put_ref(&item, self.repr) {
                             Ok(fields) => self.put_one(fields),
                             Err(rejection) => rejection,
                         };
                     return Response::new(status).with_json(&payload);
                 }
                 Ok(PutBody::Batch(items)) => {
-                    let n_bits = self.n_bits;
+                    let repr = self.repr;
                     let outcome = run_put_batch(&items, |item| {
-                        match validate_put_ref(item, n_bits) {
+                        match validate_put_ref(item, repr) {
                             Ok(fields) => self.put_one(fields),
                             Err(rejection) => rejection,
                         }
                     });
-                    return match outcome {
+                    let resp = match outcome {
                         Err(resp) => resp,
                         Ok(out) => Response::json(&Json::obj(vec![
                             ("batch", items.len().into()),
@@ -854,6 +909,8 @@ impl ShardService {
                             ("results", Json::Arr(out.results)),
                         ])),
                     };
+                    self.put_scratch.restore(items);
+                    return resp;
                 }
                 Err(_) => {} // owned fallback below
             }
@@ -867,9 +924,9 @@ impl ShardService {
         match &body {
             // Batched PUT: one response element per request element.
             Json::Arr(items) => {
-                let n_bits = self.n_bits;
+                let repr = self.repr;
                 let outcome = run_put_batch(items, |item| {
-                    match validate_put_json(item, n_bits) {
+                    match validate_put_json(item, repr) {
                         Ok(fields) => self.put_one(fields),
                         Err(rejection) => rejection,
                     }
@@ -887,7 +944,7 @@ impl ShardService {
             }
             _ => {
                 let (status, payload) =
-                    match validate_put_json(&body, self.n_bits) {
+                    match validate_put_json(&body, self.repr) {
                         Ok(fields) => self.put_one(fields),
                         Err(rejection) => rejection,
                     };
@@ -930,12 +987,27 @@ impl ShardService {
             }
         }
         if let Some(verifier) = &self.verifier {
-            if verifier.verify(f.chromosome, f.fitness).is_err() {
-                self.saboteurs.record_rejection(f.uuid);
+            let checked = match &f.genome {
+                GenomeFields::Bits(c) => verifier.verify(c, f.fitness),
+                GenomeFields::Real(genes) => {
+                    verifier.verify_real(genes, f.fitness)
+                }
+            };
+            if let Err(actual) = checked {
+                let banned = self.saboteurs.record_rejection(f.uuid);
+                self.log.log_with("rejected", || {
+                    Json::obj(vec![
+                        ("uuid", f.uuid.into()),
+                        ("claimed", f.fitness.into()),
+                        ("actual", actual.into()),
+                        ("banned", banned.into()),
+                    ])
+                });
                 return reject(409, "fitness mismatch");
             }
         }
-        let Some(packed) = PackedBits::from_str01(f.chromosome) else {
+        let PutFields { genome, fitness, uuid } = f;
+        let Some(genome) = genome.into_genome() else {
             // Unreachable after validation; a defensive 400 beats a
             // panic on the shard loop.
             return reject(400, "malformed chromosome");
@@ -947,11 +1019,11 @@ impl ShardService {
         self.shared.puts.fetch_add(1, Ordering::Relaxed);
         self.slot().puts.fetch_add(1, Ordering::Relaxed);
         self.epoch_puts += 1;
-        bump_count(&mut self.per_uuid_delta, f.uuid);
-        if f.fitness > self.epoch_best {
-            self.epoch_best = f.fitness;
+        bump_count(&mut self.per_uuid_delta, uuid);
+        if fitness > self.epoch_best {
+            self.epoch_best = fitness;
         }
-        let key = ordered_key(f.fitness);
+        let key = ordered_key(fitness);
         self.shared.best_key.fetch_max(key, Ordering::AcqRel);
         // If another shard finished the experiment between our sync_epoch
         // and the fetch_max above, our fitness belongs to the finished
@@ -976,9 +1048,9 @@ impl ShardService {
         }
 
         let entry = PoolEntry {
-            chromosome: packed,
-            fitness: f.fitness,
-            uuid: f.uuid.to_string(),
+            chromosome: genome,
+            fitness,
+            uuid: uuid.to_string(),
         };
         let evict = self.pool.put(entry, &mut self.rng);
         // The entry lives in the pool now; read it back by slot instead
@@ -993,8 +1065,16 @@ impl ShardService {
             );
         }
         self.publish_pool_len();
+        let current_id = self.local_experiment;
+        self.log.log_with("put", || {
+            Json::obj(vec![
+                ("uuid", uuid.into()),
+                ("fitness", fitness.into()),
+                ("experiment", current_id.into()),
+            ])
+        });
 
-        let solved = f.fitness >= self.shared.target_fitness - 1e-9;
+        let solved = fitness >= self.shared.target_fitness - 1e-9;
         if !solved {
             return PutOutcome::Accepted;
         }
@@ -1003,11 +1083,13 @@ impl ShardService {
         // log; everyone else (a concurrent solver on another shard) still
         // reports solved. Peers are woken so their partitions clear now,
         // not at the next tick.
+        let solution =
+            self.pool.entries()[slot_idx].chromosome.display_string();
         let record = self.shared.finish_experiment(
             self.local_experiment,
-            f.fitness,
-            Some(f.uuid.to_string()),
-            Some(f.chromosome.to_string()),
+            fitness,
+            Some(uuid.to_string()),
+            Some(solution),
         );
         if record.is_some() {
             let to = self.local_experiment + 1;
@@ -1038,7 +1120,10 @@ impl ShardService {
             ("experiment", self.local_experiment.into()),
         ]);
         if let Some(log) = record {
-            resp.set("record", log.to_json());
+            let payload = log.to_json();
+            self.log.log("solution", payload.clone());
+            self.log.flush();
+            resp.set("record", payload);
         }
         PutOutcome::Solved(resp)
     }
@@ -1109,8 +1194,9 @@ impl ShardService {
         }
         if self.random_cache[idx].is_none() {
             let e = &self.pool.entries()[idx];
+            let (key, genome_json) = e.chromosome.wire_member();
             let body = json::to_string(&Json::obj(vec![
-                ("chromosome", e.chromosome.to_string01().into()),
+                (key, genome_json),
                 ("fitness", e.fitness.into()),
                 ("experiment", self.local_experiment.into()),
             ]))
@@ -1184,6 +1270,10 @@ impl ShardService {
                             "cache_hits",
                             s.cache_hits.load(Ordering::Relaxed).into(),
                         ),
+                        (
+                            "events",
+                            s.events.load(Ordering::Relaxed).into(),
+                        ),
                     ])
                 })
                 .collect(),
@@ -1220,9 +1310,24 @@ impl ShardService {
         );
         let total = self.shared.puts.load(Ordering::Relaxed)
             + self.shared.gets.load(Ordering::Relaxed);
+        // The merged audit view: every slot's published count plus this
+        // shard's possibly-unpublished delta.
+        let events_logged: u64 = self
+            .slots
+            .iter()
+            .enumerate()
+            .map(|(i, slot)| {
+                if i == self.id {
+                    self.log.events()
+                } else {
+                    slot.events.load(Ordering::Relaxed)
+                }
+            })
+            .sum();
         let mut body = Json::obj(vec![
             ("total_requests", total.into()),
             ("shards", self.slots.len().into()),
+            ("events_logged", events_logged.into()),
             ("per_uuid", self.merged_per_uuid()),
             ("per_shard", self.per_shard_json()),
             ("experiments", experiments),
@@ -1306,6 +1411,8 @@ impl ShardService {
             .last()
             .map(|l| l.to_json())
             .unwrap_or(Json::Null);
+        self.log.log("reset", entry.clone());
+        self.log.flush();
         Response::json(&entry)
     }
 }
@@ -1363,7 +1470,7 @@ impl Service for ShardService {
             if let Ok(text) = std::str::from_utf8(&req.body) {
                 if let Ok(PutBody::Single(item)) = json::parse_put_body(text)
                 {
-                    match validate_put_ref(&item, self.n_bits)
+                    match validate_put_ref(&item, self.repr)
                         .map(|fields| self.apply_put(fields))
                     {
                         Ok(PutOutcome::Accepted) => write_json_200(
@@ -1387,6 +1494,23 @@ impl Service for ShardService {
         }
         self.handle(req).write_to(out, keep_alive);
     }
+}
+
+/// `audit.jsonl` -> `audit-shard0003.jsonl`: every shard owns its own
+/// audit log file (two appenders must never interleave one stream).
+fn shard_log_path(
+    path: &std::path::Path,
+    shard: usize,
+) -> std::path::PathBuf {
+    let stem = path
+        .file_stem()
+        .and_then(|s| s.to_str())
+        .unwrap_or("events");
+    let ext = path
+        .extension()
+        .and_then(|s| s.to_str())
+        .unwrap_or("jsonl");
+    path.with_file_name(format!("{stem}-shard{shard:04}.{ext}"))
 }
 
 /// One shard thread: its own epoll + waker + [`ConnDriver`] + partition,
@@ -1439,6 +1563,7 @@ fn shard_loop(
             service.federation_gossip();
         }
         service.publish_per_uuid();
+        service.publish_events();
         service.maybe_snapshot();
         driver.sweep_idle(&epoll);
         slots[id]
@@ -1509,7 +1634,7 @@ impl ShardedPoolServer {
                 persistence::check_or_init_meta(
                     &pc.data_dir,
                     n,
-                    config.base.n_bits,
+                    config.base.problem.repr,
                     config.base.pool_capacity,
                 )?;
                 let shards = persistence::recover_cluster(&pc.data_dir, n)?;
@@ -1555,7 +1680,7 @@ impl ShardedPoolServer {
         }
 
         let shared = Arc::new(ClusterShared::recovered(
-            config.base.target_fitness,
+            config.base.problem.target_fitness,
             epoch,
             puts0,
             gets0,
@@ -1584,6 +1709,7 @@ impl ShardedPoolServer {
                 let hub = Arc::new(FederationHub::new(fc)?);
                 let (bound, thread) = federation::spawn_driver(
                     fc.clone(),
+                    config.base.problem.repr,
                     shared.clone(),
                     slots.clone(),
                     hub.clone(),
@@ -1606,9 +1732,14 @@ impl ShardedPoolServer {
             let cfg = ShardCfg {
                 id,
                 http: config.base.http.clone(),
-                n_bits: config.base.n_bits,
+                problem: config.base.problem.clone(),
                 pool_capacity: per_shard_capacity,
                 seed: config.base.seed,
+                log_path: config
+                    .base
+                    .log_path
+                    .as_deref()
+                    .map(|p| shard_log_path(p, id)),
                 migration_interval: config.migration_interval,
                 migration_k: config.migration_k,
                 persist: config.base.persist.clone(),
@@ -1681,8 +1812,9 @@ impl PoolBackend {
     /// Federation always runs on the cluster backend (a federated
     /// single-shard process is a 1-shard cluster): the gossip driver
     /// plugs into the shard mailboxes the single loop doesn't have.
-    /// Verification and rate limiting work on both (the only remaining
-    /// single-loop exclusive is the audit event log).
+    /// Verification, rate limiting and the audit event log work on both
+    /// (per-shard log files on the cluster; no single-loop exclusives
+    /// remain).
     pub fn spawn(addr: &str, config: ClusterConfig) -> io::Result<PoolBackend> {
         if config.shards > 1 || config.federation.is_some() {
             Ok(PoolBackend::Sharded(ShardedPoolServer::spawn(addr, config)?))
@@ -1798,8 +1930,7 @@ mod tests {
         ClusterConfig {
             shards,
             base: PoolServerConfig {
-                n_bits: 8,
-                target_fitness: target,
+                problem: ProblemSpec::bits(8, target),
                 http: ServerConfig {
                     tick: Duration::from_millis(5),
                     ..ServerConfig::default()
@@ -2343,7 +2474,8 @@ mod tests {
         // fitness server-side (409 on mismatch, 403 after three strikes)
         // — previously single-loop only.
         let mut config = fast_config(2, 1e18);
-        config.base.n_bits = 160; // Trap::paper() chromosome width
+        // Trap::paper() chromosome width, never solved during the test.
+        config.base.problem = ProblemSpec::trap().with_target(1e18);
         config.base.verify_fitness = true;
         let handle =
             ShardedPoolServer::spawn("127.0.0.1:0", config).unwrap();
@@ -2510,6 +2642,125 @@ mod tests {
         assert_eq!(experiments[0].get_str("solution"), Some("11111111"));
         b.stop();
         a.stop();
+    }
+
+    #[test]
+    fn sharded_audit_event_log_records_per_shard() {
+        // The last single-loop-exclusive: each shard now owns an audit
+        // EventLog (same WalWriter facade/framing), with the merged
+        // count surfaced through /stats.
+        let dir = std::env::temp_dir().join(format!(
+            "nodio-cluster-log-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut config = fast_config(2, 8.0);
+        config.migration_interval = Duration::from_secs(3600);
+        config.base.log_path = Some(dir.join("audit.jsonl"));
+        let handle =
+            ShardedPoolServer::spawn("127.0.0.1:0", config).unwrap();
+        let mut c1 = HttpClient::connect(handle.addr).unwrap(); // shard 0
+        let mut c2 = HttpClient::connect(handle.addr).unwrap(); // shard 1
+        assert_eq!(c1.send(&put_req("01010101", 3.0, "a")).unwrap().status, 200);
+        assert_eq!(c2.send(&put_req("11111111", 8.0, "b")).unwrap().status, 201);
+        // 2 puts + 1 solution, merged across shards (peer counts publish
+        // per tick).
+        let merged = wait_until(Duration::from_secs(5), || {
+            c1.send(&Request::new(Method::Get, "/stats"))
+                .ok()
+                .and_then(|r| r.json_body().ok())
+                .and_then(|b| b.get_u64("events_logged"))
+                .is_some_and(|n| n >= 3)
+        });
+        assert!(merged, "merged audit count never reached 3");
+        handle.stop(); // flushes the buffered logs
+        // Each shard wrote its own CRC-framed file; the shared scanner
+        // (the same one that reads WALs) reads them back.
+        let mut kinds: Vec<String> = Vec::new();
+        for i in 0..2 {
+            let p = dir.join(format!("audit-shard{i:04}.jsonl"));
+            assert!(p.exists(), "missing {}", p.display());
+            for rec in persistence::scan(&p).unwrap().records {
+                kinds.push(rec.get_str("event").unwrap().to_string());
+            }
+        }
+        assert_eq!(kinds.iter().filter(|k| *k == "put").count(), 2, "{kinds:?}");
+        assert_eq!(
+            kinds.iter().filter(|k| *k == "solution").count(),
+            1,
+            "{kinds:?}"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    fn put_genes_req(genes: &str, fitness: f64, uuid: &str) -> Request {
+        let mut req = Request::new(Method::Put, "/experiment/chromosome");
+        req.body = format!(
+            "{{\"genes\":{genes},\"fitness\":{fitness},\"uuid\":\"{uuid}\"}}"
+        )
+        .into_bytes();
+        req
+    }
+
+    #[test]
+    fn sharded_real_experiment_terminates_cluster_wide() {
+        // A real-valued experiment through the sharded coordinator:
+        // gossip spreads gene vectors between partitions and a solving
+        // PUT (cost at the target) ends the experiment on every shard.
+        let mut config = fast_config(2, 0.0);
+        config.base.problem = ProblemSpec::sphere(2, 1e-3);
+        let handle =
+            ShardedPoolServer::spawn("127.0.0.1:0", config).unwrap();
+        let mut c1 = HttpClient::connect(handle.addr).unwrap(); // shard 0
+        let mut c2 = HttpClient::connect(handle.addr).unwrap(); // shard 1
+
+        assert_eq!(
+            c1.send(&put_genes_req("[1.5,0.5]", -2.5, "a")).unwrap().status,
+            200
+        );
+        // The entry gossips into shard 1's partition.
+        let mut migrated = None;
+        let ok = wait_until(Duration::from_secs(5), || {
+            match c2.send(&Request::new(Method::Get, "/experiment/random")) {
+                Ok(resp) if resp.status == 200 => {
+                    migrated = resp.json_body().ok();
+                    true
+                }
+                _ => false,
+            }
+        });
+        assert!(ok, "real entry never migrated to the peer shard");
+        let body = migrated.unwrap();
+        let genes = body.get("genes").unwrap().as_arr().unwrap();
+        let values: Vec<f64> =
+            genes.iter().filter_map(Json::as_f64).collect();
+        assert_eq!(values, vec![1.5, 0.5]);
+
+        // Solve from the OTHER shard: fitness 0 (cost 0) >= -1e-3.
+        let resp = c2.send(&put_genes_req("[0,0]", 0.0, "w")).unwrap();
+        assert_eq!(resp.status, 201);
+        let record = resp.json_body().unwrap();
+        assert_eq!(
+            record.get("record").unwrap().get_str("solution"),
+            Some("[0,0]")
+        );
+        // Shard 0 observes the termination and clears its partition.
+        let seen = wait_until(Duration::from_secs(5), || {
+            c1.send(&Request::new(Method::Get, "/experiment/state"))
+                .ok()
+                .and_then(|r| r.json_body().ok())
+                .and_then(|b| b.get_u64("completed"))
+                == Some(1)
+        });
+        assert!(seen, "shard 0 never saw the completed real experiment");
+        let cleared = wait_until(Duration::from_secs(5), || {
+            c1.send(&Request::new(Method::Get, "/experiment/random"))
+                .map(|r| r.status == 204)
+                .unwrap_or(false)
+        });
+        assert!(cleared);
+        handle.stop();
     }
 
     #[test]

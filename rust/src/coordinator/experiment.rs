@@ -5,6 +5,7 @@
 use std::collections::HashMap;
 use std::time::Duration;
 
+use crate::genome::Representation;
 use crate::json::Json;
 use crate::util::unix_ms;
 
@@ -83,8 +84,9 @@ impl ExperimentLog {
 pub struct ExperimentManager {
     /// Fitness at which a PUT counts as a solution.
     pub target_fitness: f64,
-    /// Expected chromosome length (PUT validation).
-    pub n_bits: usize,
+    /// Genome representation PUTs are validated against (bit width or
+    /// real-vector dimension).
+    pub repr: Representation,
     current_id: u64,
     /// Wall-clock start of the live experiment (Unix ms). Persisted in
     /// epoch WAL records and snapshots, so a recovered experiment's
@@ -100,10 +102,13 @@ pub struct ExperimentManager {
 }
 
 impl ExperimentManager {
-    pub fn new(target_fitness: f64, n_bits: usize) -> ExperimentManager {
+    pub fn new(
+        target_fitness: f64,
+        repr: Representation,
+    ) -> ExperimentManager {
         ExperimentManager {
             target_fitness,
-            n_bits,
+            repr,
             current_id: 0,
             started_at_ms: unix_ms(),
             puts: 0,
@@ -241,7 +246,8 @@ mod tests {
 
     #[test]
     fn lifecycle() {
-        let mut m = ExperimentManager::new(80.0, 160);
+        let mut m =
+            ExperimentManager::new(80.0, Representation::bits(160));
         assert_eq!(m.current_id(), 0);
         assert!(!m.record_put("a", 50.0));
         assert!(!m.record_put("b", 70.0));
@@ -260,7 +266,7 @@ mod tests {
 
     #[test]
     fn solution_tolerance() {
-        let m = ExperimentManager::new(80.0, 160);
+        let m = ExperimentManager::new(80.0, Representation::bits(160));
         assert!(m.is_solution(80.0));
         assert!(m.is_solution(80.0 - 1e-12));
         assert!(!m.is_solution(79.99));
@@ -268,7 +274,7 @@ mod tests {
 
     #[test]
     fn per_uuid_accounting_survives_reset() {
-        let mut m = ExperimentManager::new(10.0, 8);
+        let mut m = ExperimentManager::new(10.0, Representation::bits(8));
         m.record_put("x", 10.0);
         m.finish(Some("x".into()), None);
         m.record_put("x", 5.0);
@@ -280,7 +286,7 @@ mod tests {
 
     #[test]
     fn log_json_shape() {
-        let mut m = ExperimentManager::new(10.0, 8);
+        let mut m = ExperimentManager::new(10.0, Representation::bits(8));
         m.record_put("x", 10.0);
         let log = m.finish(Some("x".into()), Some("11111111".into()));
         let j = log.to_json();

@@ -7,20 +7,29 @@
 //! records ([`wal::FrameWriter`]/[`wal::FrameReader`]) with the same
 //! `t`/`seq`/`experiment` members the on-disk log uses:
 //!
-//! * `hello` — sent once per connection: the sender's node id and current
-//!   experiment epoch. A receiver that is behind fast-forwards
-//!   immediately; a receiver that is AHEAD replies with an `epoch` record
-//!   carrying the latest winner's log, so a peer that was disconnected at
-//!   the instant of a solution still converges on it when it reconnects.
-//! * `migration` — a best-K batch in the v2 packed form, identical to the
-//!   WAL's `migration` record minus the eviction slots (the receiver
-//!   chooses its own). Inbound batches merge through the same per-shard
-//!   dedup path as local inter-shard gossip and are WAL'd there, so a
-//!   restarted peer replays remote immigrants like any other state.
+//! * `hello` — sent once per connection: the sender's node id, current
+//!   experiment epoch, and genome representation tag (`repr`, e.g.
+//!   `"bits-160"` / `"real-64"`). A receiver that is behind
+//!   fast-forwards immediately; a receiver that is AHEAD replies with an
+//!   `epoch` record carrying the latest winner's log, so a peer that was
+//!   disconnected at the instant of a solution still converges on it
+//!   when it reconnects. A receiver whose experiment runs a *different
+//!   representation* refuses the link with a loud error — a bit-string
+//!   federation and a real-vector federation can never merge.
+//! * `migration` — a best-K batch in the v3 genome form (`repr` +
+//!   packed hex for bit-strings / canonical `genes` array for real
+//!   vectors), identical to the WAL's `migration` record minus the
+//!   eviction slots (the receiver chooses its own). Inbound batches
+//!   merge through the same per-shard dedup path as local inter-shard
+//!   gossip and are WAL'd there, so a restarted peer replays remote
+//!   immigrants like any other state.
 //! * `epoch` — an experiment-epoch transition with the winner's
-//!   [`ExperimentLog`]: a peer observing a higher epoch fast-forwards
-//!   termination exactly like an in-process shard, so a federation
-//!   converges on one winner.
+//!   [`ExperimentLog`] and the sender's `repr` tag: a peer observing a
+//!   higher epoch fast-forwards termination exactly like an in-process
+//!   shard, so a federation converges on one winner. The same
+//!   representation gate as `hello` applies — a foreign-representation
+//!   (or, on a real-vector server, a tag-less pre-PR 5) epoch record
+//!   refuses the link instead of terminating the local experiment.
 //!
 //! `seq` (stamped per link by the sender's [`wal::FrameWriter`]) gives
 //! per-link delivery ordering and duplicate suppression; the CRC frame
@@ -57,6 +66,7 @@ use super::persistence::snapshot::entry_from_json;
 use super::persistence::wal::{FrameReader, FrameWriter};
 use super::pool::PoolEntry;
 use crate::eventloop::{Epoll, Event, Interest, Waker};
+use crate::genome::Representation;
 use crate::json::Json;
 
 const TOKEN_LISTENER: u64 = 0;
@@ -206,11 +216,12 @@ impl FederationHub {
 // Wire records (the WAL record shapes, reused verbatim).
 // ----------------------------------------------------------------------
 
-fn hello_record(node: &str, experiment: u64) -> Json {
+fn hello_record(node: &str, experiment: u64, repr: Representation) -> Json {
     Json::obj(vec![
         ("t", "hello".into()),
         ("node", node.into()),
         ("experiment", experiment.into()),
+        ("repr", repr.wire_tag().into()),
     ])
 }
 
@@ -219,17 +230,17 @@ fn migration_record(batch: &MigrationBatch) -> Json {
         .entries
         .iter()
         .map(|e| {
-            Json::obj(vec![
-                ("packed", e.chromosome.to_hex().into()),
-                ("n_bits", e.chromosome.n_bits().into()),
+            let mut item = Json::obj(vec![
                 ("fitness", e.fitness.into()),
                 ("uuid", e.uuid.as_str().into()),
-            ])
+            ]);
+            e.chromosome.encode_record(&mut item);
+            item
         })
         .collect();
     Json::obj(vec![
         ("t", "migration".into()),
-        ("v", 2u64.into()),
+        ("v", 3u64.into()),
         ("experiment", batch.experiment.into()),
         ("entries", Json::Arr(items)),
     ])
@@ -240,12 +251,14 @@ fn epoch_record(
     to: u64,
     record: Option<&ExperimentLog>,
     started_at_ms: u64,
+    repr: Representation,
 ) -> Json {
     Json::obj(vec![
         ("t", "epoch".into()),
         ("from", from.into()),
         ("to", to.into()),
         ("started_at_ms", started_at_ms.into()),
+        ("repr", repr.wire_tag().into()),
         (
             "record",
             record.map(|l| l.to_json()).unwrap_or(Json::Null),
@@ -257,6 +270,17 @@ fn epoch_record(
 // Inbound protocol handling (socket-free, so loopback tests cover it).
 // ----------------------------------------------------------------------
 
+/// What applying one inbound record asks of the socket driver.
+pub(crate) enum Applied {
+    /// Nothing to send back.
+    None,
+    /// A reply record to write on the same link (the hello catch-up).
+    Reply(Json),
+    /// The peer runs an incompatible experiment representation: close
+    /// the link loudly (and keep it closed — re-dials will re-refuse).
+    Refuse(String),
+}
+
 /// Applies decoded wire records against cluster state. Owns no sockets —
 /// the driver feeds it records, tests feed it records decoded from
 /// in-memory pipes.
@@ -264,6 +288,10 @@ pub(crate) struct FederationCore {
     shared: Arc<ClusterShared>,
     slots: Arc<Vec<ShardSlot>>,
     stats: Arc<FederationStats>,
+    /// The local experiment's genome representation; a peer announcing a
+    /// different one in its hello is refused, and mismatched migration
+    /// entries are dropped even without a hello (hostile peers).
+    repr: Representation,
     /// Round-robin target for inbound batches (spread across shards).
     next_shard: usize,
 }
@@ -273,8 +301,9 @@ impl FederationCore {
         shared: Arc<ClusterShared>,
         slots: Arc<Vec<ShardSlot>>,
         stats: Arc<FederationStats>,
+        repr: Representation,
     ) -> FederationCore {
-        FederationCore { shared, slots, stats, next_shard: 0 }
+        FederationCore { shared, slots, stats, repr, next_shard: 0 }
     }
 
     fn shutdown(&self) -> bool {
@@ -285,26 +314,40 @@ impl FederationCore {
     /// is `last_rx_seq`. Records at or below the mark are duplicates
     /// (at-least-once delivery) and dropped; the merge itself is also
     /// idempotent, so the seq gate is belt-and-suspenders ordering, not a
-    /// correctness requirement. A `Some` return is a reply record the
-    /// caller must send back on the same link (the hello catch-up).
+    /// correctness requirement. [`Applied::Reply`] is a record the caller
+    /// must send back on the same link (the hello catch-up);
+    /// [`Applied::Refuse`] tells it to drop the link.
     pub(crate) fn apply_record(
         &mut self,
         last_rx_seq: &mut u64,
         rec: &Json,
-    ) -> Option<Json> {
+    ) -> Applied {
         let seq = rec.get_u64("seq").unwrap_or(0);
         if seq != 0 {
             if seq <= *last_rx_seq {
                 self.stats.dup_dropped.fetch_add(1, Ordering::Relaxed);
-                return None;
+                return Applied::None;
             }
             *last_rx_seq = seq;
         }
         self.stats.records_rx.fetch_add(1, Ordering::Relaxed);
         match rec.get_str("t") {
             Some("hello") => {
+                // Representation handshake first: merging real-vector
+                // entries into a bit-string pool (or 64-gene vectors
+                // into a 128-gene experiment) is meaningless — refuse
+                // the link loudly instead of silently dropping records
+                // forever. Pre-PR 5 peers announce no repr; they can
+                // only be bit-string peers, so a bit-string server
+                // accepts them while a real-vector server refuses.
+                if let Some(refusal) = self.check_record_repr(rec, "hello")
+                {
+                    return refusal;
+                }
                 // A peer already in a later experiment ends ours now.
-                let exp = rec.get_u64("experiment")?;
+                let Some(exp) = rec.get_u64("experiment") else {
+                    return Applied::None;
+                };
                 self.fast_forward(exp, None, 0);
                 // And a peer that is BEHIND missed a termination while
                 // disconnected (epoch records are not re-gossiped):
@@ -312,29 +355,73 @@ impl FederationCore {
                 // record so its history converges too.
                 let ours = self.shared.experiment.load(Ordering::Acquire);
                 if exp < ours {
-                    return Some(epoch_record(
+                    return Applied::Reply(epoch_record(
                         exp,
                         ours,
                         self.shared.latest_completed().as_ref(),
                         self.shared.started_at_ms.load(Ordering::Relaxed),
+                        self.repr,
                     ));
                 }
-                None
+                Applied::None
             }
             Some("epoch") => {
-                let to = rec.get_u64("to")?;
+                // Epoch records fast-forward (and terminate) the local
+                // experiment, so they carry the same representation gate
+                // as hellos: a foreign-representation peer must never
+                // end a local experiment or plant its winner's record in
+                // this history.
+                if let Some(refusal) = self.check_record_repr(rec, "epoch")
+                {
+                    return refusal;
+                }
+                let Some(to) = rec.get_u64("to") else {
+                    return Applied::None;
+                };
                 self.stats.epochs_rx.fetch_add(1, Ordering::Relaxed);
                 let log =
                     rec.get("record").and_then(ExperimentLog::from_json);
                 let started = rec.get_u64("started_at_ms").unwrap_or(0);
                 self.fast_forward(to, log, started);
-                None
+                Applied::None
             }
             Some("migration") => {
                 self.apply_migration(rec);
+                Applied::None
+            }
+            _ => Applied::None,
+        }
+    }
+
+    /// The representation gate shared by `hello` and `epoch` records:
+    /// an explicit mismatching `repr` tag always refuses; an absent tag
+    /// (pre-PR 5 peer — necessarily bit-string) is accepted only when
+    /// this server runs bits itself.
+    fn check_record_repr(&self, rec: &Json, kind: &str) -> Option<Applied> {
+        match rec.get_str("repr") {
+            Some(tag) => {
+                if Representation::parse_wire_tag(tag) != Some(self.repr) {
+                    return Some(Applied::Refuse(format!(
+                        "peer {} sent a {kind} for representation {tag}; \
+                         this server runs {}",
+                        rec.get_str("node").unwrap_or("?"),
+                        self.repr.wire_tag()
+                    )));
+                }
                 None
             }
-            _ => None,
+            None => match self.repr {
+                Representation::Bits { .. } => None,
+                Representation::Real { .. } => Some(Applied::Refuse(
+                    format!(
+                        "peer {} sent a {kind} without a representation \
+                         tag (pre-multi-representation peer, bit-string \
+                         only); this server runs {}",
+                        rec.get_str("node").unwrap_or("?"),
+                        self.repr.wire_tag()
+                    ),
+                )),
+            },
         }
     }
 
@@ -347,24 +434,33 @@ impl FederationCore {
             self.stats.stale_dropped.fetch_add(1, Ordering::Relaxed);
             return;
         }
-        if exp > global {
-            // The sender is ahead (we missed its epoch record): catch up
-            // first, then merge its entries into the new epoch's pool.
-            self.fast_forward(exp, None, 0);
-        }
         let Some(items) = rec.get("entries").and_then(Json::as_arr) else {
             return;
         };
         let mut entries: Vec<PoolEntry> = Vec::with_capacity(items.len());
         for item in items {
             if let Some(e) = entry_from_json(item) {
-                if e.fitness.is_finite() {
+                // Belt and suspenders under the hello handshake: a
+                // hostile or confused peer's mismatched-representation
+                // entries must never reach a pool.
+                if e.fitness.is_finite() && e.chromosome.matches(self.repr)
+                {
                     entries.push(e);
                 }
             }
         }
         if entries.is_empty() {
+            // Nothing representation-compatible survived: the record is
+            // foreign (or empty) and must not touch local state — in
+            // particular its epoch number must not fast-forward
+            // (terminate) this experiment. Migration records carry no
+            // record-level repr tag, so the entry filter IS the gate.
             return;
+        }
+        if exp > global {
+            // The sender is ahead (we missed its epoch record): catch up
+            // first, then merge its entries into the new epoch's pool.
+            self.fast_forward(exp, None, 0);
         }
         // Converged observability: the federation-wide best fitness is
         // visible at every peer, not only where the PUT landed.
@@ -572,6 +668,7 @@ impl Driver {
         let hello = hello_record(
             &self.node,
             self.core.shared.experiment.load(Ordering::Acquire),
+            self.core.repr,
         );
         let _ = link.wr.append(hello);
         self.hub.stats.records_tx.fetch_add(1, Ordering::Relaxed);
@@ -586,18 +683,38 @@ impl Driver {
 
     fn handle_link_event(&mut self, token: u64, ev: &Event) {
         let mut drop_link = ev.closed;
+        let mut refused = false;
         if let Some(link) = self.links.get_mut(&token) {
             if ev.readable && !drop_link {
                 drop_link |= read_link(link, &mut self.read_buf);
                 while let Some(rec) = link.reader.next_record() {
-                    if let Some(reply) =
-                        self.core.apply_record(&mut link.last_rx_seq, &rec)
+                    match self
+                        .core
+                        .apply_record(&mut link.last_rx_seq, &rec)
                     {
-                        let _ = link.wr.append(reply);
-                        self.hub
-                            .stats
-                            .records_tx
-                            .fetch_add(1, Ordering::Relaxed);
+                        Applied::None => {}
+                        Applied::Reply(reply) => {
+                            let _ = link.wr.append(reply);
+                            self.hub
+                                .stats
+                                .records_tx
+                                .fetch_add(1, Ordering::Relaxed);
+                        }
+                        Applied::Refuse(reason) => {
+                            eprintln!(
+                                "nodio federation: refusing link: {reason}"
+                            );
+                            refused = true;
+                            drop_link = true;
+                        }
+                    }
+                    // Stop decoding only on refusal. A peer that
+                    // sent-then-closed (e.g. flushed its final epoch
+                    // record and exited) still gets its buffered records
+                    // applied — epoch records are not re-gossiped, so
+                    // dropping them here would strand the termination.
+                    if refused {
+                        break;
                     }
                 }
                 let dropped = link.reader.dropped();
@@ -619,18 +736,30 @@ impl Driver {
             return;
         }
         if drop_link {
-            self.drop_link(token);
+            self.drop_link_inner(token, refused);
         }
     }
 
     fn drop_link(&mut self, token: u64) {
+        self.drop_link_inner(token, false);
+    }
+
+    fn drop_link_inner(&mut self, token: u64, refused: bool) {
         if let Some(link) = self.links.remove(&token) {
             self.epoll.remove(link.stream.as_raw_fd());
             if let Some(i) = link.target {
                 let t = &mut self.targets[i];
                 t.connected = false;
-                t.next_attempt = Instant::now() + t.backoff;
-                t.backoff = (t.backoff * 2).min(MAX_BACKOFF);
+                if refused {
+                    // A representation-refused peer will refuse every
+                    // redial: back off to the maximum instead of
+                    // hammering (and re-logging) it at reconnect speed.
+                    t.backoff = MAX_BACKOFF;
+                    t.next_attempt = Instant::now() + MAX_BACKOFF;
+                } else {
+                    t.next_attempt = Instant::now() + t.backoff;
+                    t.backoff = (t.backoff * 2).min(MAX_BACKOFF);
+                }
                 self.hub.stats.reconnects.fetch_add(1, Ordering::Relaxed);
             }
         }
@@ -649,7 +778,13 @@ impl Driver {
             let rec = match &item {
                 FedOutbound::Migration(batch) => migration_record(batch),
                 FedOutbound::Epoch { from, to, record, started_at_ms } => {
-                    epoch_record(*from, *to, record.as_ref(), *started_at_ms)
+                    epoch_record(
+                        *from,
+                        *to,
+                        record.as_ref(),
+                        *started_at_ms,
+                        self.core.repr,
+                    )
                 }
             };
             for (token, link) in self.links.iter_mut() {
@@ -704,6 +839,7 @@ impl Driver {
 /// cluster's shutdown flag is set (wake the hub to hasten it).
 pub(crate) fn spawn_driver(
     cfg: FederationConfig,
+    repr: Representation,
     shared: Arc<ClusterShared>,
     slots: Arc<Vec<ShardSlot>>,
     hub: Arc<FederationHub>,
@@ -738,7 +874,7 @@ pub(crate) fn spawn_driver(
         .collect();
     let node = hub.node().to_string();
     let driver = Driver {
-        core: FederationCore::new(shared, slots, hub.stats.clone()),
+        core: FederationCore::new(shared, slots, hub.stats.clone(), repr),
         epoll,
         listener,
         links: HashMap::new(),
@@ -757,11 +893,20 @@ pub(crate) fn spawn_driver(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::genome::{Genome, RealGenes};
     use crate::problems::PackedBits;
 
     fn entry(c: &str, fitness: f64, uuid: &str) -> PoolEntry {
         PoolEntry {
-            chromosome: PackedBits::from_str01(c).unwrap(),
+            chromosome: Genome::Bits(PackedBits::from_str01(c).unwrap()),
+            fitness,
+            uuid: uuid.into(),
+        }
+    }
+
+    fn real_entry(genes: Vec<f64>, fitness: f64, uuid: &str) -> PoolEntry {
+        PoolEntry {
+            chromosome: Genome::Real(RealGenes::new(genes).unwrap()),
             fitness,
             uuid: uuid.into(),
         }
@@ -770,7 +915,7 @@ mod tests {
     /// A socket-free federation endpoint: cluster state + core, with two
     /// shard mailboxes.
     #[allow(clippy::type_complexity)]
-    fn endpoint(experiment: u64) -> (
+    fn endpoint_with(experiment: u64, repr: Representation) -> (
         Arc<ClusterShared>,
         Arc<Vec<ShardSlot>>,
         Arc<FederationStats>,
@@ -790,9 +935,23 @@ mod tests {
             ShardSlot::new(Waker::new().unwrap()),
         ]);
         let stats = Arc::new(FederationStats::default());
-        let core =
-            FederationCore::new(shared.clone(), slots.clone(), stats.clone());
+        let core = FederationCore::new(
+            shared.clone(),
+            slots.clone(),
+            stats.clone(),
+            repr,
+        );
         (shared, slots, stats, core)
+    }
+
+    #[allow(clippy::type_complexity)]
+    fn endpoint(experiment: u64) -> (
+        Arc<ClusterShared>,
+        Arc<Vec<ShardSlot>>,
+        Arc<FederationStats>,
+        FederationCore,
+    ) {
+        endpoint_with(experiment, Representation::bits(8))
     }
 
     /// Encode records through the wire format (FrameWriter over an
@@ -820,7 +979,7 @@ mod tests {
             entries: vec![entry("01010101", 4.0, "peer")],
         };
         let wire = loopback(vec![
-            hello_record("peer", 0),
+            hello_record("peer", 0, Representation::bits(8)),
             migration_record(&batch),
         ]);
         assert_eq!(wire.len(), 2);
@@ -849,7 +1008,7 @@ mod tests {
         let (_shared, slots, stats, mut core) = endpoint(0);
         let batch = MigrationBatch {
             experiment: 0,
-            entries: vec![entry("0101", 2.0, "peer")],
+            entries: vec![entry("01010000", 2.0, "peer")],
         };
         let wire = loopback(vec![migration_record(&batch)]);
         let mut last_seq = 0;
@@ -872,7 +1031,7 @@ mod tests {
         let (shared, slots, stats, mut core) = endpoint(2);
         let batch = MigrationBatch {
             experiment: 1, // an experiment this endpoint already finished
-            entries: vec![entry("0101", 9.0, "peer")],
+            entries: vec![entry("01010000", 9.0, "peer")],
         };
         let wire = loopback(vec![migration_record(&batch)]);
         let mut last_seq = 0;
@@ -897,7 +1056,13 @@ mod tests {
             solved_by: Some("remote".into()),
             solution: Some("11111111".into()),
         };
-        let wire = loopback(vec![epoch_record(0, 1, Some(&log), 555)]);
+        let wire = loopback(vec![epoch_record(
+            0,
+            1,
+            Some(&log),
+            555,
+            Representation::bits(8),
+        )]);
         let mut last_seq = 0;
         core.apply_record(&mut last_seq, &wire[0]);
         assert_eq!(shared.experiment.load(Ordering::Acquire), 1);
@@ -918,7 +1083,7 @@ mod tests {
         let (shared, slots, stats, mut core) = endpoint(0);
         let batch = MigrationBatch {
             experiment: 5,
-            entries: vec![entry("0111", 3.0, "peer")],
+            entries: vec![entry("01110000", 3.0, "peer")],
         };
         let wire = loopback(vec![migration_record(&batch)]);
         let mut last_seq = 0;
@@ -933,18 +1098,20 @@ mod tests {
     #[test]
     fn hello_from_an_ahead_peer_fast_forwards() {
         let (shared, _slots, stats, mut core) = endpoint(1);
-        let wire = loopback(vec![hello_record("peer", 4)]);
+        let wire =
+            loopback(vec![hello_record("peer", 4, Representation::bits(8))]);
         let mut last_seq = 0;
         let reply = core.apply_record(&mut last_seq, &wire[0]);
-        assert!(reply.is_none());
+        assert!(matches!(reply, Applied::None));
         assert_eq!(shared.experiment.load(Ordering::Acquire), 4);
         assert_eq!(stats.fast_forwards.load(Ordering::Relaxed), 1);
         // A hello from an equal-epoch peer changes nothing and needs no
         // catch-up.
-        let wire = loopback(vec![hello_record("peer2", 4)]);
+        let wire =
+            loopback(vec![hello_record("peer2", 4, Representation::bits(8))]);
         let mut other_link_seq = 0;
         let reply = core.apply_record(&mut other_link_seq, &wire[0]);
-        assert!(reply.is_none());
+        assert!(matches!(reply, Applied::None));
         assert_eq!(shared.experiment.load(Ordering::Acquire), 4);
     }
 
@@ -964,11 +1131,17 @@ mod tests {
             solution: Some("11111111".into()),
         };
         assert!(shared.fast_forward(2, Some(log), 700));
-        let wire = loopback(vec![hello_record("laggard", 0)]);
+        let wire = loopback(vec![hello_record(
+            "laggard",
+            0,
+            Representation::bits(8),
+        )]);
         let mut last_seq = 0;
-        let reply = core
-            .apply_record(&mut last_seq, &wire[0])
-            .expect("catch-up epoch record");
+        let Applied::Reply(reply) =
+            core.apply_record(&mut last_seq, &wire[0])
+        else {
+            panic!("expected a catch-up epoch record");
+        };
         assert_eq!(reply.get_str("t"), Some("epoch"));
         assert_eq!(reply.get_u64("from"), Some(0));
         assert_eq!(reply.get_u64("to"), Some(2));
@@ -979,9 +1152,224 @@ mod tests {
         let (shared2, _slots2, _stats2, mut core2) = endpoint(0);
         let wire = loopback(vec![reply]);
         let mut seq2 = 0;
-        assert!(core2.apply_record(&mut seq2, &wire[0]).is_none());
+        assert!(matches!(
+            core2.apply_record(&mut seq2, &wire[0]),
+            Applied::None
+        ));
         assert_eq!(shared2.experiment.load(Ordering::Acquire), 2);
         assert_eq!(shared2.completed_count(), 1);
+    }
+
+    #[test]
+    fn real_valued_migration_batches_cross_the_wire_bit_exactly() {
+        let (shared, slots, stats, mut core) =
+            endpoint_with(0, Representation::real(3));
+        let batch = MigrationBatch {
+            experiment: 0,
+            entries: vec![
+                real_entry(vec![0.5, -1.25e-3, 3e15], -7.5, "peer"),
+                real_entry(vec![0.0, -0.0, 42.0], -42.0, "peer"),
+            ],
+        };
+        let wire = loopback(vec![
+            hello_record("peer", 0, Representation::real(3)),
+            migration_record(&batch),
+        ]);
+        let mut last_seq = 0;
+        for rec in &wire {
+            core.apply_record(&mut last_seq, rec);
+        }
+        assert_eq!(stats.entries_rx.load(Ordering::Relaxed), 2);
+        let delivered = slots[0].migrations_in.drain();
+        assert_eq!(delivered.len(), 1);
+        assert_eq!(delivered[0].entries.len(), 2);
+        let Genome::Real(g) = &delivered[0].entries[0].chromosome else {
+            panic!("expected real genome");
+        };
+        assert_eq!(g.genes(), &[0.5, -1.25e-3, 3e15]);
+        // -0.0 survives bit-exactly too.
+        let Genome::Real(g) = &delivered[0].entries[1].chromosome else {
+            panic!("expected real genome");
+        };
+        assert_eq!(g.genes()[1].to_bits(), (-0.0f64).to_bits());
+        assert_eq!(shared.best_fitness(), -7.5);
+    }
+
+    #[test]
+    fn mismatched_representation_hello_refuses_the_link() {
+        // bits-8 endpoint, real-64 peer: the hello is refused loudly.
+        let (shared, _slots, _stats, mut core) = endpoint(3);
+        let wire = loopback(vec![hello_record(
+            "alien",
+            7,
+            Representation::real(64),
+        )]);
+        let mut last_seq = 0;
+        let Applied::Refuse(reason) =
+            core.apply_record(&mut last_seq, &wire[0])
+        else {
+            panic!("mismatched repr must refuse");
+        };
+        assert!(reason.contains("real-64"), "{reason}");
+        assert!(reason.contains("bits-8"), "{reason}");
+        // The refused hello's epoch must NOT fast-forward us.
+        assert_eq!(shared.experiment.load(Ordering::Acquire), 3);
+
+        // Same family, different size: also refused.
+        let wire = loopback(vec![hello_record(
+            "wide",
+            0,
+            Representation::bits(16),
+        )]);
+        let mut seq2 = 0;
+        assert!(matches!(
+            core.apply_record(&mut seq2, &wire[0]),
+            Applied::Refuse(_)
+        ));
+
+        // A pre-PR 5 peer announces no repr: accepted (bit-string only).
+        let legacy = loopback(vec![Json::obj(vec![
+            ("t", "hello".into()),
+            ("node", "old".into()),
+            ("experiment", 3u64.into()),
+        ])]);
+        let mut seq3 = 0;
+        assert!(matches!(
+            core.apply_record(&mut seq3, &legacy[0]),
+            Applied::None
+        ));
+    }
+
+    #[test]
+    fn foreign_representation_epoch_records_cannot_terminate() {
+        // An epoch record from a different-representation federation
+        // must refuse the link, not fast-forward (= kill) the local
+        // experiment or adopt the foreign winner's record.
+        let (shared, _slots, stats, mut core) =
+            endpoint_with(0, Representation::real(4));
+        let log = ExperimentLog {
+            id: 0,
+            elapsed: Duration::from_secs(1),
+            puts: 1,
+            gets: 0,
+            best_fitness: 80.0,
+            solved_by: Some("bits-peer".into()),
+            solution: Some("1111".into()),
+        };
+        let wire = loopback(vec![epoch_record(
+            0,
+            3,
+            Some(&log),
+            555,
+            Representation::bits(160),
+        )]);
+        let mut last_seq = 0;
+        assert!(matches!(
+            core.apply_record(&mut last_seq, &wire[0]),
+            Applied::Refuse(_)
+        ));
+        assert_eq!(shared.experiment.load(Ordering::Acquire), 0);
+        assert_eq!(shared.completed_count(), 0);
+        assert_eq!(stats.fast_forwards.load(Ordering::Relaxed), 0);
+
+        // A tag-less (pre-PR 5) epoch record: bit-string peers are the
+        // only peers that can produce one, so a real-vector server
+        // refuses it too...
+        let legacy = loopback(vec![Json::obj(vec![
+            ("t", "epoch".into()),
+            ("from", 0u64.into()),
+            ("to", 2u64.into()),
+            ("started_at_ms", 1u64.into()),
+            ("record", Json::Null),
+        ])]);
+        let mut seq2 = 0;
+        assert!(matches!(
+            core.apply_record(&mut seq2, &legacy[0]),
+            Applied::Refuse(_)
+        ));
+        assert_eq!(shared.experiment.load(Ordering::Acquire), 0);
+
+        // ...while a bit-string server accepts it (wire compatibility
+        // with pre-PR 5 binaries).
+        let (shared_b, _slots_b, _stats_b, mut core_b) = endpoint(0);
+        let mut seq3 = 0;
+        assert!(matches!(
+            core_b.apply_record(&mut seq3, &legacy[0]),
+            Applied::None
+        ));
+        assert_eq!(shared_b.experiment.load(Ordering::Acquire), 2);
+    }
+
+    #[test]
+    fn tagless_hello_is_refused_by_a_real_server() {
+        // A pre-PR 5 hello (no repr) is necessarily a bit-string peer:
+        // accepted by bits servers (tested above), refused by real ones.
+        let (shared, _slots, _stats, mut core) =
+            endpoint_with(1, Representation::real(8));
+        let legacy = loopback(vec![Json::obj(vec![
+            ("t", "hello".into()),
+            ("node", "old".into()),
+            ("experiment", 9u64.into()),
+        ])]);
+        let mut seq = 0;
+        assert!(matches!(
+            core.apply_record(&mut seq, &legacy[0]),
+            Applied::Refuse(_)
+        ));
+        assert_eq!(shared.experiment.load(Ordering::Acquire), 1);
+    }
+
+    #[test]
+    fn mismatched_migration_entries_never_reach_a_pool() {
+        // Even without a hello (hostile peer), entries whose genome does
+        // not match the local representation are dropped.
+        let (_shared, slots, stats, mut core) = endpoint(0); // bits-8
+        let batch = MigrationBatch {
+            experiment: 0,
+            entries: vec![
+                real_entry(vec![1.0, 2.0], -1.0, "alien"),
+                entry("01010101", 5.0, "ok"),
+                entry("0101", 3.0, "narrow"), // bits-4: wrong width
+            ],
+        };
+        let wire = loopback(vec![migration_record(&batch)]);
+        let mut last_seq = 0;
+        core.apply_record(&mut last_seq, &wire[0]);
+        let delivered = slots[0].migrations_in.drain();
+        assert_eq!(delivered.len(), 1);
+        assert_eq!(delivered[0].entries.len(), 1);
+        assert_eq!(delivered[0].entries[0].chromosome, "01010101");
+        assert_eq!(stats.entries_rx.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn foreign_migration_epoch_numbers_cannot_fast_forward() {
+        // Migration records carry no record-level repr tag, so the
+        // entry filter must also gate the piggy-backed epoch number: a
+        // bit-string batch claiming experiment 5 must not terminate a
+        // real-valued server's experiment on its way to being dropped.
+        let (shared, slots, stats, mut core) =
+            endpoint_with(0, Representation::real(3));
+        let batch = MigrationBatch {
+            experiment: 5,
+            entries: vec![entry("01010101", 9.0, "alien")],
+        };
+        let wire = loopback(vec![migration_record(&batch)]);
+        let mut last_seq = 0;
+        core.apply_record(&mut last_seq, &wire[0]);
+        assert_eq!(shared.experiment.load(Ordering::Acquire), 0);
+        assert_eq!(stats.fast_forwards.load(Ordering::Relaxed), 0);
+        assert!(slots[0].migrations_in.drain().is_empty());
+        assert!(shared.best_fitness().is_infinite()); // untouched
+        // A compatible batch from a newer epoch still fast-forwards.
+        let batch = MigrationBatch {
+            experiment: 5,
+            entries: vec![real_entry(vec![0.5, 1.0, -2.0], -5.25, "peer")],
+        };
+        let wire = loopback(vec![migration_record(&batch)]);
+        core.apply_record(&mut last_seq, &wire[0]);
+        assert_eq!(shared.experiment.load(Ordering::Acquire), 5);
+        assert_eq!(slots[0].migrations_in.drain().len(), 1);
     }
 
     #[test]
@@ -991,11 +1379,11 @@ mod tests {
         let (_shared, slots, _stats, mut core) = endpoint(0);
         let b1 = MigrationBatch {
             experiment: 0,
-            entries: vec![entry("0001", 1.0, "a")],
+            entries: vec![entry("00010000", 1.0, "a")],
         };
         let b2 = MigrationBatch {
             experiment: 0,
-            entries: vec![entry("0011", 2.0, "b")],
+            entries: vec![entry("00110000", 2.0, "b")],
         };
         let mut w = FrameWriter::new(Vec::new(), 0);
         w.append(migration_record(&b1)).unwrap();
@@ -1015,6 +1403,6 @@ mod tests {
         assert_eq!(r.dropped(), 1);
         let delivered = slots[0].migrations_in.drain();
         assert_eq!(delivered.len(), 1);
-        assert_eq!(delivered[0].entries[0].chromosome, "0011");
+        assert_eq!(delivered[0].entries[0].chromosome, "00110000");
     }
 }

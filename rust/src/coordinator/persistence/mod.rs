@@ -11,10 +11,11 @@
 //!
 //! ```text
 //! <data-dir>/
-//!   meta.json            cluster layout (shard count, n_bits, capacity);
-//!                        validated on restart — changing the layout
-//!                        against existing data is an error, not silent
-//!                        data loss
+//!   meta.json            cluster layout (shard count, genome
+//!                        representation tag, capacity); validated on
+//!                        restart — changing the layout (or the
+//!                        representation) against existing data is an
+//!                        error, not silent data loss
 //!   shard-0000/          one directory per shard (the single-loop server
 //!   shard-0001/          is a 1-shard layout)
 //!     wal.jsonl          append-only CRC-framed JSONL write-ahead log:
@@ -54,6 +55,7 @@ use std::path::{Path, PathBuf};
 
 use crate::coordinator::experiment::ExperimentLog;
 use crate::coordinator::pool::PoolEntry;
+use crate::genome::Representation;
 use crate::json::Json;
 
 pub const WAL_FILE: &str = "wal.jsonl";
@@ -126,13 +128,15 @@ pub fn shard_dir(data_dir: &Path, shard: usize) -> PathBuf {
 }
 
 /// Validate (or create) `<data-dir>/meta.json` against the configured
-/// layout. Restarting with a different shard count, chromosome width or
-/// pool capacity over existing data is refused: the WAL partitioning
-/// would silently mis-assign state.
+/// layout. Restarting with a different shard count, genome
+/// representation (family or width/dimension) or pool capacity over
+/// existing data is refused: the WAL partitioning would silently
+/// mis-assign state, and a WAL written under a different representation
+/// must never replay into this experiment.
 pub fn check_or_init_meta(
     data_dir: &Path,
     shards: usize,
-    n_bits: usize,
+    repr: Representation,
     pool_capacity: usize,
 ) -> io::Result<()> {
     fs::create_dir_all(data_dir)?;
@@ -145,31 +149,39 @@ pub fn check_or_init_meta(
                     format!("{}: corrupt cluster metadata", path.display()),
                 )
             })?;
+            // Pre-PR 5 meta carries only `n_bits` (always a bit-string
+            // layout); newer meta stores the representation tag.
+            let stored_repr = match rec.get_str("repr") {
+                Some(tag) => Representation::parse_wire_tag(tag),
+                None => rec
+                    .get_u64("n_bits")
+                    .map(|n| Representation::bits(n as usize)),
+            };
             let stored = (
                 rec.get_u64("shards"),
-                rec.get_u64("n_bits"),
+                stored_repr,
                 rec.get_u64("pool_capacity"),
             );
-            let want = (
-                Some(shards as u64),
-                Some(n_bits as u64),
-                Some(pool_capacity as u64),
-            );
+            let want =
+                (Some(shards as u64), Some(repr), Some(pool_capacity as u64));
             if stored != want {
                 return Err(io::Error::new(
                     io::ErrorKind::InvalidInput,
                     format!(
-                        "{}: data dir was written with layout \
-                         shards={:?} n_bits={:?} capacity={:?}, but the \
-                         server was started with shards={} n_bits={} \
+                        "{}: data dir was written with layout shards={:?} \
+                         representation={} capacity={:?}, but the server \
+                         was started with shards={} representation={} \
                          capacity={}; point --data-dir elsewhere or match \
                          the stored layout",
                         path.display(),
                         stored.0,
-                        stored.1,
+                        stored
+                            .1
+                            .map(|r| r.wire_tag())
+                            .unwrap_or_else(|| "?".into()),
                         stored.2,
                         shards,
-                        n_bits,
+                        repr.wire_tag(),
                         pool_capacity
                     ),
                 ));
@@ -177,12 +189,17 @@ pub fn check_or_init_meta(
             Ok(())
         }
         Err(e) if e.kind() == io::ErrorKind::NotFound => {
-            let rec = Json::obj(vec![
+            let mut rec = Json::obj(vec![
                 ("t", "cluster-meta".into()),
                 ("shards", shards.into()),
-                ("n_bits", n_bits.into()),
+                ("repr", repr.wire_tag().into()),
                 ("pool_capacity", pool_capacity.into()),
             ]);
+            // Keep the legacy member for bit layouts so a pre-PR 5
+            // binary still validates a bits data dir.
+            if let Representation::Bits { n_bits } = repr {
+                rec.set("n_bits", n_bits.into());
+            }
             // Same durability discipline as snapshots (tmp + fsync +
             // rename + dir sync): a torn meta.json would otherwise brick
             // the data dir on the next restart.
@@ -271,34 +288,34 @@ impl ShardPersistence {
     /// Record one accepted PUT. `evict` is the pool slot the insert
     /// replaced (None = appended), making replay byte-exact.
     ///
-    /// v2 record: the chromosome travels in the packed-hex form
-    /// (`packed` + `n_bits`, 4x smaller than the `"0101..."` string and
-    /// convertible without re-validation). Replay still accepts the PR 2
-    /// v1 form (`chromosome` string) — see
-    /// [`super::persistence::snapshot::entry_from_json`].
+    /// v3 record: `repr` plus the genome's durable payload — the bit
+    /// packed-hex form (`packed` + `n_bits`, unchanged from v2) or the
+    /// hex-free canonical `genes` array for real vectors. Replay still
+    /// accepts the PR 3 v2 form and the PR 2 v1 form (`chromosome`
+    /// string) — see [`super::persistence::snapshot::entry_from_json`].
     pub fn record_put(
         &mut self,
         experiment: u64,
         entry: &PoolEntry,
         evict: Option<usize>,
     ) {
-        self.append(Json::obj(vec![
+        let mut rec = Json::obj(vec![
             ("t", "put".into()),
-            ("v", 2u64.into()),
+            ("v", 3u64.into()),
             ("experiment", experiment.into()),
-            ("packed", entry.chromosome.to_hex().into()),
-            ("n_bits", entry.chromosome.n_bits().into()),
             ("fitness", entry.fitness.into()),
             ("uuid", entry.uuid.as_str().into()),
             (
                 "evict",
                 evict.map(|i| Json::from(i as u64)).unwrap_or(Json::Null),
             ),
-        ]));
+        ]);
+        entry.chromosome.encode_record(&mut rec);
+        self.append(rec);
     }
 
     /// Record the entries of a gossip batch that were actually merged
-    /// (post-dedup), with their eviction slots (v2 packed form, like
+    /// (post-dedup), with their eviction slots (v3 genome payloads, like
     /// [`ShardPersistence::record_put`]).
     pub fn record_migration(
         &mut self,
@@ -311,9 +328,7 @@ impl ShardPersistence {
         let items = applied
             .iter()
             .map(|(e, evict)| {
-                Json::obj(vec![
-                    ("packed", e.chromosome.to_hex().into()),
-                    ("n_bits", e.chromosome.n_bits().into()),
+                let mut item = Json::obj(vec![
                     ("fitness", e.fitness.into()),
                     ("uuid", e.uuid.as_str().into()),
                     (
@@ -322,12 +337,14 @@ impl ShardPersistence {
                             .map(|i| Json::from(i as u64))
                             .unwrap_or(Json::Null),
                     ),
-                ])
+                ]);
+                e.chromosome.encode_record(&mut item);
+                item
             })
             .collect();
         self.append(Json::obj(vec![
             ("t", "migration".into()),
-            ("v", 2u64.into()),
+            ("v", 3u64.into()),
             ("experiment", experiment.into()),
             ("entries", Json::Arr(items)),
         ]));
@@ -483,14 +500,62 @@ mod tests {
     #[test]
     fn meta_validates_layout() {
         let dir = tmpdir("meta");
-        check_or_init_meta(&dir, 2, 8, 64).unwrap();
+        let bits8 = Representation::bits(8);
+        check_or_init_meta(&dir, 2, bits8, 64).unwrap();
         // Same layout: fine.
-        check_or_init_meta(&dir, 2, 8, 64).unwrap();
+        check_or_init_meta(&dir, 2, bits8, 64).unwrap();
         // Different shard count: refused.
-        let err = check_or_init_meta(&dir, 4, 8, 64).unwrap_err();
+        let err = check_or_init_meta(&dir, 4, bits8, 64).unwrap_err();
         assert_eq!(err.kind(), io::ErrorKind::InvalidInput);
-        // Different n_bits: refused.
-        assert!(check_or_init_meta(&dir, 2, 16, 64).is_err());
+        // Different width: refused.
+        assert!(
+            check_or_init_meta(&dir, 2, Representation::bits(16), 64)
+                .is_err()
+        );
+        // Different representation family: refused loudly — a WAL
+        // written under bits must never replay into a real experiment.
+        let err = check_or_init_meta(&dir, 2, Representation::real(8), 64)
+            .unwrap_err();
+        assert!(err.to_string().contains("representation=bits-8"), "{err}");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn meta_real_layout_round_trips_and_refuses_bits() {
+        let dir = tmpdir("meta-real");
+        let real64 = Representation::real(64);
+        check_or_init_meta(&dir, 1, real64, 128).unwrap();
+        check_or_init_meta(&dir, 1, real64, 128).unwrap();
+        assert!(
+            check_or_init_meta(&dir, 1, Representation::real(32), 128)
+                .is_err()
+        );
+        assert!(
+            check_or_init_meta(&dir, 1, Representation::bits(64), 128)
+                .is_err()
+        );
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn meta_without_repr_member_is_a_bits_layout() {
+        // A PR 2..4-era meta.json (no `repr`): validates against the
+        // matching bit layout, refuses a real one.
+        let dir = tmpdir("meta-v1");
+        fs::create_dir_all(&dir).unwrap();
+        let rec = Json::obj(vec![
+            ("t", "cluster-meta".into()),
+            ("shards", 1u64.into()),
+            ("n_bits", 8u64.into()),
+            ("pool_capacity", 64u64.into()),
+        ]);
+        fs::write(dir.join(META_FILE), format!("{}\n", frame(&rec)))
+            .unwrap();
+        check_or_init_meta(&dir, 1, Representation::bits(8), 64).unwrap();
+        assert!(
+            check_or_init_meta(&dir, 1, Representation::real(8), 64)
+                .is_err()
+        );
         let _ = fs::remove_dir_all(&dir);
     }
 
@@ -500,7 +565,9 @@ mod tests {
         let sdir = shard_dir(&dir, 0);
         let cfg = PersistConfig { snapshot_every: 3, ..PersistConfig::new(&dir) };
         let entry = |c: &str, f: f64| PoolEntry {
-            chromosome: crate::problems::PackedBits::from_str01(c).unwrap(),
+            chromosome: crate::genome::Genome::Bits(
+                crate::problems::PackedBits::from_str01(c).unwrap(),
+            ),
             fitness: f,
             uuid: "u".into(),
         };
@@ -533,17 +600,17 @@ mod tests {
     #[test]
     fn replay_dir_reconstructs_history() {
         let dir = tmpdir("replay");
-        check_or_init_meta(&dir, 1, 8, 64).unwrap();
+        check_or_init_meta(&dir, 1, Representation::bits(8), 64).unwrap();
         let sdir = shard_dir(&dir, 0);
         let cfg = PersistConfig::new(&dir);
         {
             let fresh = RecoveredShard::fresh();
             let mut p = ShardPersistence::open(&sdir, &cfg, &fresh).unwrap();
             let e = PoolEntry {
-                chromosome: crate::problems::PackedBits::from_str01(
-                    "11111111",
-                )
-                .unwrap(),
+                chromosome: crate::genome::Genome::Bits(
+                    crate::problems::PackedBits::from_str01("11111111")
+                        .unwrap(),
+                ),
                 fitness: 8.0,
                 uuid: "w".into(),
             };

@@ -245,8 +245,9 @@ mod tests {
         snap.puts = 2;
         snap.best_fitness = 3.0;
         snap.entries.push(PoolEntry {
-            chromosome: crate::problems::PackedBits::from_str01("0101")
-                .unwrap(),
+            chromosome: crate::genome::Genome::Bits(
+                crate::problems::PackedBits::from_str01("0101").unwrap(),
+            ),
             fitness: 3.0,
             uuid: "a".into(),
         });
@@ -431,6 +432,148 @@ mod tests {
     }
 
     #[test]
+    fn replay_v1_v2_v3_interleaved_wal_fixture() {
+        // A WAL mixing all three record generations byte-for-byte (CRC
+        // frames included): the PR 2 string form, the PR 3 packed-hex
+        // form, and the PR 5 `repr`-tagged form must replay into one
+        // coherent state — the format bumps are additive, not breaking.
+        let dir = tmpdir("v123-fixture");
+        let fixture = concat!(
+            "{\"crc\":\"0fc80f0e\",\"rec\":{\"t\":\"put\",\"experiment\":0,",
+            "\"chromosome\":\"01011010\",\"fitness\":2.5,\"uuid\":\"a\",",
+            "\"evict\":null,\"seq\":1}}\n",
+            "{\"crc\":\"ada29b88\",\"rec\":{\"t\":\"put\",\"v\":2,",
+            "\"experiment\":0,\"packed\":\"00000000000000f0\",\"n_bits\":8,",
+            "\"fitness\":4,\"uuid\":\"b\",\"evict\":null,\"seq\":2}}\n",
+            "{\"crc\":\"c59237f9\",\"rec\":{\"t\":\"put\",\"v\":3,",
+            "\"experiment\":0,\"fitness\":6,\"uuid\":\"c\",\"evict\":0,",
+            "\"repr\":\"bits\",\"packed\":\"000000000000000f\",\"n_bits\":8,",
+            "\"seq\":3}}\n",
+        );
+        for line in fixture.lines() {
+            assert!(
+                crate::coordinator::persistence::unframe(line).is_some(),
+                "fixture line failed its own CRC: {line}"
+            );
+        }
+        std::fs::write(
+            dir.join(crate::coordinator::persistence::WAL_FILE),
+            fixture,
+        )
+        .unwrap();
+        let r = recover_shard(&dir).unwrap();
+        assert_eq!(r.dropped_records, 0);
+        assert_eq!(r.wal_seq, 3);
+        assert_eq!(r.state.puts, 3);
+        // seq 3 evicted slot 0 (the v1 entry).
+        assert_eq!(r.state.entries.len(), 2);
+        assert_eq!(r.state.entries[0].chromosome, "11110000");
+        assert_eq!(r.state.entries[1].chromosome, "00001111");
+        assert_eq!(r.state.best_fitness, 6.0);
+        assert_eq!(r.state.per_uuid["a"], 1);
+        assert_eq!(r.state.per_uuid["b"], 1);
+        assert_eq!(r.state.per_uuid["c"], 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn replay_v3_real_wal_fixture() {
+        // Byte-exact v3 real records: a put plus a merged migration
+        // batch replay into exact gene vectors.
+        let dir = tmpdir("v3-real-fixture");
+        let fixture = concat!(
+            "{\"crc\":\"f82815b9\",\"rec\":{\"t\":\"put\",\"v\":3,",
+            "\"experiment\":0,\"fitness\":-6.5,\"uuid\":\"r\",\"evict\":null,",
+            "\"repr\":\"real\",\"genes\":[1.5,-2,0.25],\"seq\":1}}\n",
+            "{\"crc\":\"ac742952\",\"rec\":{\"t\":\"migration\",\"v\":3,",
+            "\"experiment\":0,\"entries\":[{\"fitness\":-1,\"uuid\":\"peer\",",
+            "\"evict\":null,\"repr\":\"real\",\"genes\":[0.5,0,-0.125]}],",
+            "\"seq\":2}}\n",
+        );
+        for line in fixture.lines() {
+            assert!(
+                crate::coordinator::persistence::unframe(line).is_some(),
+                "fixture line failed its own CRC: {line}"
+            );
+        }
+        std::fs::write(
+            dir.join(crate::coordinator::persistence::WAL_FILE),
+            fixture,
+        )
+        .unwrap();
+        let r = recover_shard(&dir).unwrap();
+        assert_eq!(r.dropped_records, 0);
+        assert_eq!(r.state.puts, 1);
+        assert_eq!(r.state.accepted, 2);
+        assert_eq!(r.state.best_fitness, -6.5);
+        assert_eq!(r.state.entries.len(), 2);
+        let genes = |i: usize| match &r.state.entries[i].chromosome {
+            crate::genome::Genome::Real(g) => g.genes().to_vec(),
+            other => panic!("expected real genome, got {other:?}"),
+        };
+        assert_eq!(genes(0), vec![1.5, -2.0, 0.25]);
+        assert_eq!(genes(1), vec![0.5, 0.0, -0.125]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn real_genes_wal_round_trip_property() {
+        // RealVector ⇄ WAL v3 ⇄ replay: random finite gene vectors
+        // survive the durable pipeline bit-for-bit (the real-valued
+        // analog of packed_wire_boundary_round_trip_property).
+        use crate::coordinator::persistence::{
+            PersistConfig, ShardPersistence,
+        };
+        use crate::genome::{Genome, RealGenes};
+        use crate::rng::{Rng64, SplitMix64};
+
+        let dir = tmpdir("real-wire-prop");
+        let cfg = PersistConfig::new(&dir);
+        let mut rng = SplitMix64::new(0xBEEF);
+        let mut originals: Vec<(Vec<f64>, f64)> = Vec::new();
+        {
+            let fresh = RecoveredShard::fresh();
+            let mut p = ShardPersistence::open(&dir, &cfg, &fresh).unwrap();
+            for i in 0..40u64 {
+                let n = 1 + (rng.next_u64() % 64) as usize;
+                let genes: Vec<f64> = (0..n)
+                    .map(|_| match rng.next_u64() % 4 {
+                        0 => (rng.next_u64() % 100) as f64,
+                        1 => -0.0,
+                        2 => f64::MIN_POSITIVE * (1 + rng.next_u64() % 9) as f64,
+                        _ => (rng.next_u64() as i64 as f64) / 128.0,
+                    })
+                    .collect();
+                let fitness = -((rng.next_u64() % 1000) as f64 / 8.0);
+                let entry = PoolEntry {
+                    chromosome: Genome::Real(
+                        RealGenes::new(genes.clone()).unwrap(),
+                    ),
+                    fitness,
+                    uuid: format!("r{i}"),
+                };
+                p.record_put(0, &entry, None);
+                originals.push((genes, fitness));
+            }
+        }
+        let r = recover_shard(&dir).unwrap();
+        assert_eq!(r.state.entries.len(), originals.len());
+        for (entry, (genes, fitness)) in
+            r.state.entries.iter().zip(&originals)
+        {
+            let crate::genome::Genome::Real(g) = &entry.chromosome else {
+                panic!("expected real genome");
+            };
+            assert_eq!(g.genes().len(), genes.len());
+            for (a, b) in g.genes().iter().zip(genes) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{a} vs {b}");
+            }
+            assert_eq!(entry.fitness, *fitness);
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
     fn fresh_directory_recovers_to_empty() {
         let dir = tmpdir("fresh");
         let r = recover_shard(&dir).unwrap();
@@ -470,7 +613,7 @@ mod tests {
                     Some(&packed)
                 );
                 let entry = PoolEntry {
-                    chromosome: packed,
+                    chromosome: crate::genome::Genome::Bits(packed),
                     fitness,
                     uuid: format!("u{i}"),
                 };
@@ -484,7 +627,7 @@ mod tests {
         for (entry, (wire, fitness)) in
             r.state.entries.iter().zip(&originals)
         {
-            assert_eq!(entry.chromosome.to_string01(), *wire);
+            assert_eq!(entry.chromosome.display_string(), *wire);
             assert_eq!(entry.chromosome, wire.as_str());
             assert_eq!(entry.fitness, *fitness);
         }

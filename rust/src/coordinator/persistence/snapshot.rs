@@ -17,8 +17,8 @@ use std::path::{Path, PathBuf};
 use super::wal::{frame, unframe};
 use crate::coordinator::experiment::ExperimentLog;
 use crate::coordinator::pool::PoolEntry;
+use crate::genome::Genome;
 use crate::json::Json;
-use crate::problems::PackedBits;
 
 pub const SNAPSHOT_FILE: &str = "snapshot.jsonl";
 const SNAPSHOT_TMP: &str = "snapshot.jsonl.tmp";
@@ -63,28 +63,26 @@ impl ShardState {
 }
 
 fn entry_to_json(e: &PoolEntry) -> Json {
-    // v2 record: packed-hex chromosome (4x smaller than the "0101..."
-    // wire string, no re-validation on replay).
-    Json::obj(vec![
+    // v3 record: `repr` + the genome's durable payload (packed hex for
+    // bits — the v2 payload unchanged — or the canonical decimal `genes`
+    // array for real vectors). No re-validation on replay.
+    let mut rec = Json::obj(vec![
         ("t", "entry".into()),
-        ("v", 2u64.into()),
-        ("packed", e.chromosome.to_hex().into()),
-        ("n_bits", e.chromosome.n_bits().into()),
+        ("v", 3u64.into()),
         ("fitness", e.fitness.into()),
         ("uuid", e.uuid.as_str().into()),
-    ])
+    ]);
+    e.chromosome.encode_record(&mut rec);
+    rec
 }
 
-/// Decode one durable pool-entry record: the v2 packed form
-/// (`packed` + `n_bits`) or the PR 2 v1 form (`chromosome` bit-string).
-/// `None` for malformed/corrupt records of either version.
+/// Decode one durable pool-entry record of any version: v3 (`repr`
+/// dispatch), v2 (`packed` + `n_bits`), or the PR 2 v1 form
+/// (`chromosome` bit-string). `None` for malformed/corrupt records of
+/// any version.
 pub(crate) fn entry_from_json(v: &Json) -> Option<PoolEntry> {
-    let chromosome = match (v.get_str("packed"), v.get_u64("n_bits")) {
-        (Some(hex), Some(n)) => PackedBits::from_hex(hex, n as usize)?,
-        _ => PackedBits::from_str01(v.get_str("chromosome")?)?,
-    };
     Some(PoolEntry {
-        chromosome,
+        chromosome: Genome::decode_record(v)?,
         fitness: v.get_f64("fitness")?,
         uuid: v.get_str("uuid").unwrap_or("anonymous").to_string(),
     })
@@ -231,6 +229,8 @@ pub fn load_snapshot(dir: &Path) -> io::Result<ShardState> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::genome::RealGenes;
+    use crate::problems::PackedBits;
     use std::time::Duration;
 
     fn tmpdir(name: &str) -> PathBuf {
@@ -265,12 +265,16 @@ mod tests {
             }],
             entries: vec![
                 PoolEntry {
-                    chromosome: PackedBits::from_str01("0101").unwrap(),
+                    chromosome: Genome::Bits(
+                        PackedBits::from_str01("0101").unwrap(),
+                    ),
                     fitness: 2.0,
                     uuid: "a".into(),
                 },
                 PoolEntry {
-                    chromosome: PackedBits::from_str01("0111").unwrap(),
+                    chromosome: Genome::Real(
+                        RealGenes::new(vec![0.5, -1.25e-3, 3e15]).unwrap(),
+                    ),
                     fitness: 3.0,
                     uuid: "b".into(),
                 },

@@ -1,23 +1,29 @@
 //! The shared chromosome pool ("the shared pool implemented as an array",
 //! paper section 2, sequence step 1).
 //!
-//! Entries store their chromosome **bit-packed**
-//! ([`crate::problems::PackedBits`]: 64 loci per u64 word) rather than as
-//! the one-byte-per-bit `"0101..."` wire string. Conversion happens at
-//! the boundaries only: PUT validation packs the incoming wire string
-//! once, GET responses are rendered from the pack into a per-slot cache,
-//! and WAL/snapshot records carry a fixed-width hex form. In between —
-//! eviction, gossip, dedup, snapshots — entries move as a few words, and
-//! migration dedup is word compares instead of string compares.
+//! Entries store a representation-generic [`crate::genome::Genome`]: a
+//! bit-string genome stays **bit-packed**
+//! ([`crate::problems::PackedBits`]: 64 loci per u64 word) rather than
+//! the one-byte-per-bit `"0101..."` wire string, and a real-valued
+//! genome is a validated finite f64 vector. Conversion happens at the
+//! boundaries only: PUT validation materializes the incoming wire form
+//! once, GET responses are rendered into a per-slot cache, and
+//! WAL/snapshot records carry the compact durable form (fixed-width hex
+//! for bits, a canonical decimal array for real genes). In between —
+//! eviction, gossip, dedup, snapshots — entries move whole, and
+//! migration dedup is word/bit-pattern compares instead of string
+//! compares.
 
-use crate::problems::PackedBits;
+use crate::genome::Genome;
 use crate::rng::{dist, Rng64};
 
-/// One pooled chromosome.
+/// One pooled genome.
 #[derive(Debug, Clone, PartialEq)]
 pub struct PoolEntry {
-    /// Bit-packed chromosome; `"0101..."` only at the wire boundary.
-    pub chromosome: PackedBits,
+    /// The genome; wire forms (`"0101..."` / `[f64,...]`) exist only at
+    /// the HTTP boundary. Named for the paper's vocabulary — a real
+    /// vector is a "chromosome" of f64 genes.
+    pub chromosome: Genome,
     pub fitness: f64,
     /// Island UUID that contributed it.
     pub uuid: String,
@@ -128,12 +134,16 @@ impl ChromosomePool {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::genome::RealGenes;
+    use crate::problems::PackedBits;
     use crate::rng::SplitMix64;
     use crate::testkit::{forall, PropConfig};
 
     fn entry(tag: u64, fitness: f64) -> PoolEntry {
         PoolEntry {
-            chromosome: PackedBits::from_str01(&format!("{tag:b}")).unwrap(),
+            chromosome: Genome::Bits(
+                PackedBits::from_str01(&format!("{tag:b}")).unwrap(),
+            ),
             fitness,
             uuid: format!("u{tag}"),
         }
@@ -222,6 +232,29 @@ mod tests {
         for e in pool.entries() {
             assert!(e.fitness < 97.0);
         }
+    }
+
+    #[test]
+    fn real_entries_compare_bitwise() {
+        // The pool is representation-generic; real genomes dedup by
+        // exact gene bit patterns (the migration-dedup predicate).
+        let mut pool = ChromosomePool::new(4);
+        let mut rng = SplitMix64::new(9);
+        let g = |v: Vec<f64>| Genome::Real(RealGenes::new(v).unwrap());
+        pool.put(
+            PoolEntry {
+                chromosome: g(vec![0.5, -1.25]),
+                fitness: -1.0,
+                uuid: "r".into(),
+            },
+            &mut rng,
+        );
+        assert_eq!(pool.len(), 1);
+        assert_eq!(pool.entries()[0].chromosome, g(vec![0.5, -1.25]));
+        assert_ne!(g(vec![0.0]), g(vec![-0.0]));
+        // A real genome never equals a bit-string wire form.
+        assert!(pool.entries()[0].chromosome != "01");
+        assert_eq!(pool.best().unwrap().fitness, -1.0);
     }
 
     #[test]

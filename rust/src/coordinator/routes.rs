@@ -19,9 +19,10 @@ use super::persistence::{ShardPersistence, ShardState};
 use super::pool::{ChromosomePool, PoolEntry};
 use super::security::{FitnessVerifier, RateLimiter, SaboteurLog};
 use super::timeseries::TimeSeries;
+use crate::genome::{Genome, ProblemSpec, RealGenes, Representation};
 use crate::http::types::{write_json_200, write_no_content_204};
 use crate::http::{Method, Params, Request, Response, Router};
-use crate::json::{self, Json, PutBody, PutItemRef};
+use crate::json::{self, Json, PutBody, PutItemRef, PutScratch};
 use crate::problems::PackedBits;
 use crate::rng::Xoshiro256pp;
 
@@ -38,69 +39,178 @@ pub(crate) struct BatchOutcome {
     pub solved: bool,
 }
 
-/// One validated PUT element, still borrowing the request body: the
-/// chromosome and uuid slices point into the wire bytes and are only
+/// One validated PUT element, still borrowing the request body where it
+/// can: bit chromosomes and uuids point into the wire bytes and are only
 /// materialized (packed / owned) once the element is actually applied.
-#[derive(Debug, Clone, Copy)]
+/// Real gene vectors are materialized at validation — proving every gene
+/// finite walks them anyway, and the one `Vec` is the pool-resident
+/// storage, not a copy.
+#[derive(Debug, Clone)]
 pub(crate) struct PutFields<'a> {
-    pub chromosome: &'a str,
+    pub genome: GenomeFields<'a>,
     pub fitness: f64,
     pub uuid: &'a str,
+}
+
+/// The validated genome payload of one PUT element.
+#[derive(Debug, Clone)]
+pub(crate) enum GenomeFields<'a> {
+    /// A `"0101..."` wire string of the experiment's exact width.
+    Bits(&'a str),
+    /// A finite gene vector of the experiment's exact dimension.
+    Real(Vec<f64>),
+}
+
+impl GenomeFields<'_> {
+    /// Materialize the pool-resident genome. `None` only if a bit string
+    /// fails packing — unreachable after validation; callers keep a
+    /// defensive 400 rather than any panic path on the event loop.
+    pub(crate) fn into_genome(self) -> Option<Genome> {
+        match self {
+            GenomeFields::Bits(c) => {
+                PackedBits::from_str01(c).map(Genome::Bits)
+            }
+            GenomeFields::Real(genes) => {
+                RealGenes::new(genes).map(Genome::Real)
+            }
+        }
+    }
 }
 
 pub(crate) fn put_fail(status: u16, msg: &str) -> (u16, Json) {
     (status, Json::obj(vec![("error", msg.into())]))
 }
 
+/// Shared finite-fitness check (a NaN/Inf must never reach a pool or the
+/// global best CAS — threat model, section 1).
+fn validate_fitness(fitness: Option<f64>) -> Result<f64, (u16, Json)> {
+    match fitness {
+        Some(f) if f.is_finite() => Ok(f),
+        Some(_) => Err(put_fail(400, "non-finite fitness")),
+        None => Err(put_fail(400, "missing/invalid fitness")),
+    }
+}
+
+fn validate_bits_shape(chromosome: &str, n_bits: usize) -> bool {
+    chromosome.len() == n_bits
+        && chromosome.bytes().all(|b| b == b'0' || b == b'1')
+}
+
+/// The `genes` member as one of the two body representations (SAX slice
+/// or owned tree node), so [`validate_put_parts`] stays a single copy.
+enum GenesSource<'a> {
+    Ref(GenesRef<'a>),
+    Tree(&'a Json),
+}
+
+impl GenesSource<'_> {
+    /// Materialize when the member is an all-number array of exactly
+    /// `dim` genes; `None` = malformed (wrong type, mixed elements, or
+    /// wrong dimension). Finiteness is checked by the caller.
+    fn to_genes(&self, dim: usize) -> Option<Vec<f64>> {
+        match self {
+            GenesSource::Ref(r) => {
+                // Dimension-check on the captured count BEFORE
+                // materializing: a wrong-dimension (or hostile, huge)
+                // array rejects without allocating or parsing.
+                if r.count() != Some(dim) {
+                    return None;
+                }
+                r.to_vec()
+            }
+            GenesSource::Tree(v) => {
+                let items = v.as_arr().filter(|a| a.len() == dim)?;
+                let mut genes = Vec::with_capacity(items.len());
+                for g in items {
+                    genes.push(g.as_f64()?);
+                }
+                Some(genes)
+            }
+        }
+    }
+}
+
 /// Shared PUT-element validation (single-loop router and sharded
-/// coordinator must never drift): chromosome presence and bit-string
-/// shape, finite fitness (a NaN/Inf must never reach a pool or the
-/// global best CAS — threat model, section 1), defaulted uuid. `Err`
-/// carries the per-item `(status, payload)` rejection. The checks run in
-/// a fixed order so both body representations reject identically.
+/// coordinator, SAX and owned bodies, must never drift): genome
+/// presence, finite fitness (a NaN/Inf must never reach a pool or the
+/// global best CAS — threat model, section 1), defaulted uuid, genome
+/// shape (width/dimension, bit alphabet, gene finiteness). `Err` carries
+/// the per-item `(status, payload)` rejection; the checks run in one
+/// fixed order so every body representation rejects identically.
 fn validate_put_parts<'a>(
     chromosome: Option<&'a str>,
+    genes: Option<GenesSource<'a>>,
     fitness: Option<f64>,
     uuid: Option<&'a str>,
-    n_bits: usize,
+    repr: Representation,
 ) -> Result<PutFields<'a>, (u16, Json)> {
-    let chromosome = match chromosome {
-        Some(c) => c,
-        None => return Err(put_fail(400, "missing chromosome")),
-    };
-    let fitness = match fitness {
-        Some(f) if f.is_finite() => f,
-        Some(_) => return Err(put_fail(400, "non-finite fitness")),
-        None => return Err(put_fail(400, "missing/invalid fitness")),
-    };
-    let uuid = uuid.unwrap_or("anonymous");
-    if chromosome.len() != n_bits
-        || !chromosome.bytes().all(|b| b == b'0' || b == b'1')
-    {
-        return Err(put_fail(400, "malformed chromosome"));
+    match repr {
+        Representation::Bits { n_bits } => {
+            let chromosome = match chromosome {
+                Some(c) => c,
+                None => return Err(put_fail(400, "missing chromosome")),
+            };
+            let fitness = validate_fitness(fitness)?;
+            let uuid = uuid.unwrap_or("anonymous");
+            if !validate_bits_shape(chromosome, n_bits) {
+                return Err(put_fail(400, "malformed chromosome"));
+            }
+            Ok(PutFields {
+                genome: GenomeFields::Bits(chromosome),
+                fitness,
+                uuid,
+            })
+        }
+        Representation::Real { dim } => {
+            let genes = match genes {
+                Some(g) => g,
+                None => return Err(put_fail(400, "missing genes")),
+            };
+            let fitness = validate_fitness(fitness)?;
+            let uuid = uuid.unwrap_or("anonymous");
+            let genes = match genes.to_genes(dim) {
+                Some(g) => g,
+                None => return Err(put_fail(400, "malformed genes")),
+            };
+            if !genes.iter().all(|g| g.is_finite()) {
+                return Err(put_fail(400, "non-finite genes"));
+            }
+            Ok(PutFields {
+                genome: GenomeFields::Real(genes),
+                fitness,
+                uuid,
+            })
+        }
     }
-    Ok(PutFields { chromosome, fitness, uuid })
 }
 
 /// Validate one element of an owned-tree body (the escape/fallback path).
 pub(crate) fn validate_put_json<'a>(
     body: &'a Json,
-    n_bits: usize,
+    repr: Representation,
 ) -> Result<PutFields<'a>, (u16, Json)> {
     validate_put_parts(
         body.get_str("chromosome"),
+        body.get("genes").map(GenesSource::Tree),
         body.get_f64("fitness"),
         body.get_str("uuid"),
-        n_bits,
+        repr,
     )
 }
 
-/// Validate one SAX-extracted element (the zero-copy hot path).
+/// Validate one SAX-extracted element (the zero-copy hot path); same
+/// checks, same order, same rejections as [`validate_put_json`].
 pub(crate) fn validate_put_ref<'a>(
     item: &PutItemRef<'a>,
-    n_bits: usize,
+    repr: Representation,
 ) -> Result<PutFields<'a>, (u16, Json)> {
-    validate_put_parts(item.chromosome, item.fitness, item.uuid, n_bits)
+    validate_put_parts(
+        item.chromosome,
+        item.genes.map(GenesSource::Ref),
+        item.fitness,
+        item.uuid,
+        repr,
+    )
 }
 
 /// The batched-PUT protocol shared by the single-loop router and the
@@ -166,19 +276,24 @@ pub struct PoolState {
     /// Pre-rendered `{"solved":false,"experiment":N}` — the steady-state
     /// single-PUT response body, rebuilt on epoch change.
     pub(crate) put_ok_body: Vec<u8>,
+    /// Reusable batch-PUT parse scratch: one element-vector allocation
+    /// per router, not one per batch request.
+    pub(crate) put_scratch: PutScratch,
 }
 
 impl PoolState {
     pub fn new(
         capacity: usize,
-        target_fitness: f64,
-        n_bits: usize,
+        problem: &ProblemSpec,
         log: EventLog,
         seed: u64,
     ) -> PoolState {
         let mut state = PoolState {
             pool: ChromosomePool::new(capacity),
-            experiments: ExperimentManager::new(target_fitness, n_bits),
+            experiments: ExperimentManager::new(
+                problem.target_fitness,
+                problem.repr,
+            ),
             log,
             rng: Xoshiro256pp::new(seed),
             verifier: None,
@@ -188,6 +303,7 @@ impl PoolState {
             persist: None,
             random_cache: Vec::new(),
             put_ok_body: Vec::new(),
+            put_scratch: PutScratch::new(),
         };
         state.rebuild_put_ok();
         state
@@ -506,8 +622,8 @@ pub fn build_router(state: Shared) -> Router {
                         return false; // escapes/malformed: dispatch path
                     };
                     let mut s = state.borrow_mut();
-                    let n_bits = s.experiments.n_bits;
-                    match validate_put_ref(&item, n_bits)
+                    let repr = s.experiments.repr;
+                    match validate_put_ref(&item, repr)
                         .map(|fields| apply_put(&mut s, fields))
                     {
                         Ok(PutOutcome::Accepted) => {
@@ -535,15 +651,23 @@ pub fn build_router(state: Shared) -> Router {
 
 fn put_chromosome(state: &Shared, req: &Request) -> Response {
     // Zero-copy path first: SAX-extract the two known request shapes
-    // straight from the body bytes (no owned JSON tree). Escapes and
-    // malformed documents fall through to the owned parser, which
+    // straight from the body bytes (no owned JSON tree; the batch
+    // element vector is recycled through the state's scratch). Escapes
+    // and malformed documents fall through to the owned parser, which
     // reproduces the legacy errors exactly.
     if let Ok(text) = std::str::from_utf8(&req.body) {
-        match json::parse_put_body(text) {
+        let parsed = {
+            let mut scratch =
+                std::mem::take(&mut state.borrow_mut().put_scratch);
+            let parsed = json::parse_put_body_reusing(text, &mut scratch);
+            state.borrow_mut().put_scratch = scratch;
+            parsed
+        };
+        match parsed {
             Ok(PutBody::Single(item)) => {
                 let mut s = state.borrow_mut();
-                let n_bits = s.experiments.n_bits;
-                let (status, payload) = match validate_put_ref(&item, n_bits)
+                let repr = s.experiments.repr;
+                let (status, payload) = match validate_put_ref(&item, repr)
                 {
                     Ok(fields) => put_one(&mut s, fields),
                     Err(rejection) => rejection,
@@ -551,24 +675,31 @@ fn put_chromosome(state: &Shared, req: &Request) -> Response {
                 return Response::new(status).with_json(&payload);
             }
             Ok(PutBody::Batch(items)) => {
-                let mut s = state.borrow_mut();
-                let n_bits = s.experiments.n_bits;
-                let outcome = run_put_batch(&items, |item| {
-                    match validate_put_ref(item, n_bits) {
-                        Ok(fields) => put_one(&mut s, fields),
-                        Err(rejection) => rejection,
+                let resp = {
+                    let mut s = state.borrow_mut();
+                    let repr = s.experiments.repr;
+                    let outcome = run_put_batch(&items, |item| {
+                        match validate_put_ref(item, repr) {
+                            Ok(fields) => put_one(&mut s, fields),
+                            Err(rejection) => rejection,
+                        }
+                    });
+                    match outcome {
+                        Err(resp) => resp,
+                        Ok(out) => Response::json(&Json::obj(vec![
+                            ("batch", items.len().into()),
+                            ("accepted", out.accepted.into()),
+                            ("solved", out.solved.into()),
+                            (
+                                "experiment",
+                                s.experiments.current_id().into(),
+                            ),
+                            ("results", Json::Arr(out.results)),
+                        ])),
                     }
-                });
-                return match outcome {
-                    Err(resp) => resp,
-                    Ok(out) => Response::json(&Json::obj(vec![
-                        ("batch", items.len().into()),
-                        ("accepted", out.accepted.into()),
-                        ("solved", out.solved.into()),
-                        ("experiment", s.experiments.current_id().into()),
-                        ("results", Json::Arr(out.results)),
-                    ])),
                 };
+                state.borrow_mut().put_scratch.restore(items);
+                return resp;
             }
             Err(_) => {} // owned fallback below
         }
@@ -578,12 +709,12 @@ fn put_chromosome(state: &Shared, req: &Request) -> Response {
         Err(e) => return Response::bad_request(&format!("bad json: {e}")),
     };
     let mut s = state.borrow_mut();
-    let n_bits = s.experiments.n_bits;
+    let repr = s.experiments.repr;
     match &body {
         // Batched PUT: one response element per request element, in order.
         Json::Arr(items) => {
             let outcome = run_put_batch(items, |item| {
-                match validate_put_json(item, n_bits) {
+                match validate_put_json(item, repr) {
                     Ok(fields) => put_one(&mut s, fields),
                     Err(rejection) => rejection,
                 }
@@ -600,7 +731,7 @@ fn put_chromosome(state: &Shared, req: &Request) -> Response {
             }
         }
         _ => {
-            let (status, payload) = match validate_put_json(&body, n_bits) {
+            let (status, payload) = match validate_put_json(&body, repr) {
                 Ok(fields) => put_one(&mut s, fields),
                 Err(rejection) => rejection,
             };
@@ -653,7 +784,13 @@ fn apply_put(s: &mut PoolState, f: PutFields) -> PutOutcome {
         }
     }
     if let Some(verifier) = &s.verifier {
-        if let Err(actual) = verifier.verify(f.chromosome, f.fitness) {
+        let checked = match &f.genome {
+            GenomeFields::Bits(c) => verifier.verify(c, f.fitness),
+            GenomeFields::Real(genes) => {
+                verifier.verify_real(genes, f.fitness)
+            }
+        };
+        if let Err(actual) = checked {
             let banned = s.saboteurs.record_rejection(f.uuid);
             s.log.log_with("rejected", || {
                 Json::obj(vec![
@@ -666,13 +803,14 @@ fn apply_put(s: &mut PoolState, f: PutFields) -> PutOutcome {
             return reject(409, "fitness mismatch");
         }
     }
-    let Some(packed) = PackedBits::from_str01(f.chromosome) else {
+    let PutFields { genome, fitness, uuid } = f;
+    let Some(genome) = genome.into_genome() else {
         // Unreachable after validation; a defensive 400 beats a panic on
         // the event loop.
         return reject(400, "malformed chromosome");
     };
 
-    let solved = s.experiments.record_put(f.uuid, f.fitness);
+    let solved = s.experiments.record_put(uuid, fitness);
     {
         let best = s.experiments.best_fitness();
         let pool_size = s.pool.len();
@@ -680,9 +818,9 @@ fn apply_put(s: &mut PoolState, f: PutFields) -> PutOutcome {
         s.series.record(best, pool_size, puts);
     }
     let entry = PoolEntry {
-        chromosome: packed,
-        fitness: f.fitness,
-        uuid: f.uuid.to_string(),
+        chromosome: genome,
+        fitness,
+        uuid: uuid.to_string(),
     };
     let evict = s.pool.put(entry, &mut s.rng);
     // The entry lives in the pool now; read it back by slot instead of
@@ -696,8 +834,8 @@ fn apply_put(s: &mut PoolState, f: PutFields) -> PutOutcome {
     }
     s.log.log_with("put", || {
         Json::obj(vec![
-            ("uuid", f.uuid.into()),
-            ("fitness", f.fitness.into()),
+            ("uuid", uuid.into()),
+            ("fitness", fitness.into()),
             ("experiment", current_id.into()),
         ])
     });
@@ -708,9 +846,9 @@ fn apply_put(s: &mut PoolState, f: PutFields) -> PutOutcome {
     }
 
     // Experiment over: log, reset pool, bump counter (Figure 2 step 6).
-    let log_entry = s
-        .experiments
-        .finish(Some(f.uuid.to_string()), Some(f.chromosome.to_string()));
+    let solution = s.pool.entries()[slot].chromosome.display_string();
+    let log_entry =
+        s.experiments.finish(Some(uuid.to_string()), Some(solution));
     s.pool.clear();
     s.series.clear();
     s.drop_render_caches();
@@ -777,8 +915,9 @@ fn random_body<'a>(s: &'a mut PoolState, req: &Request) -> RandomOutcome<'a> {
     }
     if s.random_cache[idx].is_none() {
         let e = &s.pool.entries()[idx];
+        let (key, genome_json) = e.chromosome.wire_member();
         let body = json::to_string(&Json::obj(vec![
-            ("chromosome", e.chromosome.to_string01().into()),
+            (key, genome_json),
             ("fitness", e.fitness.into()),
             ("experiment", s.experiments.current_id().into()),
         ]))
@@ -812,8 +951,7 @@ mod tests {
     fn setup() -> (Shared, Router) {
         let state = Rc::new(RefCell::new(PoolState::new(
             64,
-            80.0,
-            8,
+            &ProblemSpec::bits(8, 80.0),
             EventLog::disabled(),
             7,
         )));
@@ -1137,8 +1275,7 @@ mod tests {
         // drop its cached render — a GET must never serve the old entry.
         let state = Rc::new(RefCell::new(PoolState::new(
             1,
-            80.0,
-            8,
+            &ProblemSpec::bits(8, 80.0),
             EventLog::disabled(),
             7,
         )));
@@ -1158,6 +1295,198 @@ mod tests {
         assert_eq!(body.get_str("chromosome"), Some("11110000"));
         assert_eq!(body.get_f64("fitness"), Some(2.0));
     }
+
+    // -----------------------------------------------------------------
+    // Real-valued experiments end-to-end through the same router.
+    // -----------------------------------------------------------------
+
+    fn real_setup(spec: &ProblemSpec) -> (Shared, Router) {
+        let state = Rc::new(RefCell::new(PoolState::new(
+            64,
+            spec,
+            EventLog::disabled(),
+            7,
+        )));
+        let router = build_router(state.clone());
+        (state, router)
+    }
+
+    fn put_genes(
+        router: &mut Router,
+        genes: &[f64],
+        fitness: f64,
+        uuid: &str,
+    ) -> Response {
+        let body = Json::obj(vec![
+            (
+                "genes",
+                Json::Arr(genes.iter().map(|&g| Json::Num(g)).collect()),
+            ),
+            ("fitness", fitness.into()),
+            ("uuid", uuid.into()),
+        ]);
+        router.handle(
+            &Request::new(Method::Put, "/experiment/chromosome")
+                .with_json(&body),
+        )
+    }
+
+    #[test]
+    fn real_put_get_round_trip_is_bit_exact() {
+        let (_state, mut router) = real_setup(&ProblemSpec::sphere(3, 1e-3));
+        let resp = put_genes(&mut router, &[0.5, -1.25, 2.0], -5.8125, "r1");
+        assert_eq!(resp.status, 200);
+        let body = resp.json_body().unwrap();
+        assert_eq!(body.get("solved").and_then(Json::as_bool), Some(false));
+
+        let resp = router
+            .handle(&Request::new(Method::Get, "/experiment/random?uuid=r2"));
+        assert_eq!(resp.status, 200);
+        let body = resp.json_body().unwrap();
+        let genes = body.get("genes").unwrap().as_arr().unwrap();
+        let values: Vec<f64> =
+            genes.iter().filter_map(Json::as_f64).collect();
+        assert_eq!(values, vec![0.5, -1.25, 2.0]);
+        assert_eq!(body.get_f64("fitness"), Some(-5.8125));
+        assert!(body.get("chromosome").is_none());
+    }
+
+    #[test]
+    fn real_validation_rejects_garbage() {
+        let (_state, mut router) = real_setup(&ProblemSpec::sphere(3, 1e-3));
+        let raw = |body: &str| {
+            let mut req =
+                Request::new(Method::Put, "/experiment/chromosome");
+            req.body = body.as_bytes().to_vec();
+            req
+        };
+        // Missing genes (a bit-string body on a real experiment).
+        let resp = router
+            .handle(&raw(r#"{"chromosome":"010","fitness":1}"#));
+        assert_eq!(resp.status, 400);
+        assert_eq!(
+            resp.json_body().unwrap().get_str("error"),
+            Some("missing genes")
+        );
+        // Wrong dimension.
+        let resp = router.handle(&raw(r#"{"genes":[1,2],"fitness":1}"#));
+        assert_eq!(resp.status, 400);
+        assert_eq!(
+            resp.json_body().unwrap().get_str("error"),
+            Some("malformed genes")
+        );
+        // Non-number element.
+        let resp =
+            router.handle(&raw(r#"{"genes":[1,"x",3],"fitness":1}"#));
+        assert_eq!(resp.status, 400);
+        // Non-finite gene (1e999 overflows to +inf when parsed).
+        let resp =
+            router.handle(&raw(r#"{"genes":[1,1e999,3],"fitness":1}"#));
+        assert_eq!(resp.status, 400);
+        assert_eq!(
+            resp.json_body().unwrap().get_str("error"),
+            Some("non-finite genes")
+        );
+        // Missing fitness (checked after genome presence, like bits).
+        let resp = router.handle(&raw(r#"{"genes":[1,2,3]}"#));
+        assert_eq!(resp.status, 400);
+        assert_eq!(
+            resp.json_body().unwrap().get_str("error"),
+            Some("missing/invalid fitness")
+        );
+        // The pool saw none of it.
+        let resp =
+            router.handle(&Request::new(Method::Get, "/experiment/random"));
+        assert_eq!(resp.status, 204);
+    }
+
+    #[test]
+    fn real_solution_ends_experiment_with_canonical_record() {
+        let (state, mut router) = real_setup(&ProblemSpec::sphere(3, 1e-3));
+        assert_eq!(
+            put_genes(&mut router, &[1.0, 1.0, 1.0], -3.0, "a").status,
+            200
+        );
+        // Cost 0 -> fitness 0 >= -1e-3: solved.
+        let resp = put_genes(&mut router, &[0.0, 0.0, 0.0], 0.0, "w");
+        assert_eq!(resp.status, 201);
+        let body = resp.json_body().unwrap();
+        assert_eq!(body.get("solved").and_then(Json::as_bool), Some(true));
+        let record = body.get("record").unwrap();
+        assert_eq!(record.get_str("solved_by"), Some("w"));
+        assert_eq!(record.get_str("solution"), Some("[0,0,0]"));
+        assert_eq!(state.borrow().pool.len(), 0);
+    }
+
+    #[test]
+    fn real_batch_put_reports_per_item_status() {
+        let (state, mut router) = real_setup(&ProblemSpec::sphere(2, 1e-6));
+        let batch = Json::Arr(vec![
+            Json::obj(vec![
+                ("genes", Json::Arr(vec![1.0.into(), 2.0.into()])),
+                ("fitness", (-5.0).into()),
+                ("uuid", "w".into()),
+            ]),
+            // Wrong dimension: rejected per-item.
+            Json::obj(vec![
+                ("genes", Json::Arr(vec![1.0.into()])),
+                ("fitness", (-1.0).into()),
+            ]),
+            Json::obj(vec![
+                ("genes", Json::Arr(vec![0.5.into(), 0.25.into()])),
+                ("fitness", (-0.3125).into()),
+                ("uuid", "w".into()),
+            ]),
+        ]);
+        let resp = router.handle(
+            &Request::new(Method::Put, "/experiment/chromosome")
+                .with_json(&batch),
+        );
+        assert_eq!(resp.status, 200);
+        let body = resp.json_body().unwrap();
+        assert_eq!(body.get_u64("batch"), Some(3));
+        assert_eq!(body.get_u64("accepted"), Some(2));
+        let results = body.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(results[0].get_u64("status"), Some(200));
+        assert_eq!(results[1].get_u64("status"), Some(400));
+        assert_eq!(results[2].get_u64("status"), Some(200));
+        assert_eq!(state.borrow().pool.len(), 2);
+    }
+
+    #[test]
+    fn real_fast_hook_matches_dispatch_byte_for_byte() {
+        let spec = ProblemSpec::sphere(2, 1e-9);
+        let (_s1, mut fast_router) = real_setup(&spec);
+        let (_s2, mut slow_router) = real_setup(&spec);
+        let mut put_req =
+            Request::new(Method::Put, "/experiment/chromosome");
+        put_req.body =
+            br#"{"genes":[0.5,-1.5],"fitness":-2.5,"uuid":"w"}"#.to_vec();
+        let get_req =
+            Request::new(Method::Get, "/experiment/random?uuid=w");
+        for req in [&get_req, &put_req, &get_req, &get_req, &put_req] {
+            let mut fast = Vec::new();
+            fast_router.handle_into(req, true, &mut fast);
+            let mut slow = Vec::new();
+            slow_router.handle(req).write_to(&mut slow, true);
+            assert_eq!(
+                String::from_utf8(fast).unwrap(),
+                String::from_utf8(slow).unwrap()
+            );
+        }
+    }
+
+    #[test]
+    fn real_verifier_rejects_fake_claims_end_to_end() {
+        let spec = ProblemSpec::sphere(2, 1e-6);
+        let (state, mut router) = real_setup(&spec);
+        state.borrow_mut().verifier = FitnessVerifier::for_spec(&spec);
+        // Honest claim: cost of [1,2] is 5 -> fitness -5.
+        assert_eq!(put_genes(&mut router, &[1.0, 2.0], -5.0, "good").status, 200);
+        // Crafted claim of the optimum: 409 (the paper's threat model).
+        assert_eq!(put_genes(&mut router, &[1.0, 2.0], 0.0, "evil").status, 409);
+        assert_eq!(state.borrow().pool.len(), 1);
+    }
 }
 
 #[cfg(test)]
@@ -1170,7 +1499,10 @@ mod dashboard_tests {
 
     fn setup() -> (Rc<RefCell<PoolState>>, Router) {
         let state = Rc::new(RefCell::new(PoolState::new(
-            64, 80.0, 8, EventLog::disabled(), 7,
+            64,
+            &ProblemSpec::bits(8, 80.0),
+            EventLog::disabled(),
+            7,
         )));
         let router = build_router(state.clone());
         (state, router)

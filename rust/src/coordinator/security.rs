@@ -18,31 +18,84 @@
 use std::collections::HashMap;
 use std::time::{Duration, Instant};
 
-use crate::problems::BitProblem;
+use crate::genome::ProblemSpec;
+use crate::problems::{BitProblem, RealProblem};
 
-/// Re-evaluates a claimed (chromosome, fitness) pair server-side.
+/// Re-evaluates a claimed (genome, fitness) pair server-side —
+/// representation-generic: a bit verifier re-evaluates `"0101..."`
+/// chromosomes, a real verifier re-evaluates gene vectors (claimed
+/// fitness is the negated cost, matching the pool's maximization
+/// convention).
 pub struct FitnessVerifier {
-    problem: Box<dyn BitProblem + Send>,
+    kind: VerifierKind,
     tolerance: f64,
+}
+
+enum VerifierKind {
+    Bits(Box<dyn BitProblem + Send>),
+    Real(Box<dyn RealProblem + Send + Sync>),
 }
 
 impl FitnessVerifier {
     pub fn new(problem: Box<dyn BitProblem + Send>) -> FitnessVerifier {
-        FitnessVerifier { problem, tolerance: 1e-6 }
+        FitnessVerifier { kind: VerifierKind::Bits(problem), tolerance: 1e-6 }
     }
 
-    /// Check a claim. Returns `Ok(actual)` when honest, `Err(actual)`
-    /// when the claim deviates beyond tolerance.
+    /// A verifier for a real-valued minimization problem: honest clients
+    /// claim `fitness = -cost`.
+    pub fn real(
+        problem: Box<dyn RealProblem + Send + Sync>,
+    ) -> FitnessVerifier {
+        FitnessVerifier { kind: VerifierKind::Real(problem), tolerance: 1e-6 }
+    }
+
+    /// The verifier matching an experiment spec, when its problem has a
+    /// known server-side evaluator (`trap`, `onemax`, and every real
+    /// problem; `bits` is width-only and unverifiable).
+    pub fn for_spec(spec: &ProblemSpec) -> Option<FitnessVerifier> {
+        if let Some(p) = spec.real_problem() {
+            return Some(FitnessVerifier::real(p));
+        }
+        spec.bit_problem().map(FitnessVerifier::new)
+    }
+
+    /// Check a bit-string claim. Returns `Ok(actual)` when honest,
+    /// `Err(actual)` when the claim deviates beyond tolerance. A
+    /// family-mismatched verifier (real verifier, bit claim) cannot
+    /// re-evaluate and accepts — unreachable when the verifier comes
+    /// from [`FitnessVerifier::for_spec`], since PUT validation already
+    /// enforced the experiment's representation.
     pub fn verify(&self, chromosome01: &str, claimed: f64) -> Result<f64, f64> {
-        let bits: Vec<u8> = chromosome01
-            .bytes()
-            .map(|b| (b == b'1') as u8)
-            .collect();
-        let actual = self.problem.eval(&bits);
-        if (actual - claimed).abs() <= self.tolerance {
-            Ok(actual)
-        } else {
-            Err(actual)
+        match &self.kind {
+            VerifierKind::Bits(problem) => {
+                let bits: Vec<u8> = chromosome01
+                    .bytes()
+                    .map(|b| (b == b'1') as u8)
+                    .collect();
+                let actual = problem.eval(&bits);
+                if (actual - claimed).abs() <= self.tolerance {
+                    Ok(actual)
+                } else {
+                    Err(actual)
+                }
+            }
+            VerifierKind::Real(_) => Ok(claimed),
+        }
+    }
+
+    /// Check a real-vector claim (`claimed = -cost`); family mismatch
+    /// accepts, like [`FitnessVerifier::verify`].
+    pub fn verify_real(&self, genes: &[f64], claimed: f64) -> Result<f64, f64> {
+        match &self.kind {
+            VerifierKind::Real(problem) => {
+                let actual = -problem.eval(genes);
+                if (actual - claimed).abs() <= self.tolerance {
+                    Ok(actual)
+                } else {
+                    Err(actual)
+                }
+            }
+            VerifierKind::Bits(_) => Ok(claimed),
         }
     }
 }
@@ -159,6 +212,23 @@ mod tests {
         assert_eq!(v.verify(&ones, 80.0), Ok(80.0));
         let zeros = "0".repeat(160);
         assert_eq!(v.verify(&zeros, 40.0), Ok(40.0));
+    }
+
+    #[test]
+    fn real_verifier_checks_negated_cost() {
+        let spec = crate::genome::ProblemSpec::sphere(4, 0.01);
+        let v = FitnessVerifier::for_spec(&spec).expect("sphere verifies");
+        // Honest claim: sphere cost of [1,1,1,1] is 4 -> fitness -4.
+        assert_eq!(v.verify_real(&[1.0, 1.0, 1.0, 1.0], -4.0), Ok(-4.0));
+        // The crafted-request attack: claiming the optimum.
+        assert_eq!(v.verify_real(&[1.0, 1.0, 1.0, 1.0], 0.0), Err(-4.0));
+        // Family mismatch cannot re-evaluate and accepts.
+        assert!(v.verify("0101", 99.0).is_ok());
+        let bit_v = FitnessVerifier::new(Box::new(Trap::paper()));
+        assert!(bit_v.verify_real(&[0.0; 4], 123.0).is_ok());
+        // Width-only bit specs have no evaluator.
+        let spec = crate::genome::ProblemSpec::bits(8, 8.0);
+        assert!(FitnessVerifier::for_spec(&spec).is_none());
     }
 
     #[test]

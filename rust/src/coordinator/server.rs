@@ -11,17 +11,18 @@ use super::persistence::{
 };
 use super::routes::{build_router, PoolState};
 use super::security::{FitnessVerifier, RateLimiter};
+use crate::genome::ProblemSpec;
 use crate::http::server::{Server, ServerConfig, ServerHandle};
-use crate::problems::Trap;
 
 /// Pool server configuration. Defaults are the paper's baseline trap-40
 /// experiment.
 #[derive(Debug, Clone)]
 pub struct PoolServerConfig {
-    /// Fitness that ends an experiment (trap-40 optimum).
-    pub target_fitness: f64,
-    /// Chromosome length for PUT validation.
-    pub n_bits: usize,
+    /// The experiment: problem family, genome representation (bit width
+    /// or real-vector dimension) and solve threshold. Selected at boot
+    /// (`--problem`/`--dim`/`--target`), persisted in `meta.json`, and
+    /// announced to federation peers.
+    pub problem: ProblemSpec,
     /// Pool capacity (random-replacement beyond this).
     pub pool_capacity: usize,
     /// Standalone JSONL audit-event log (None = disabled). Distinct from
@@ -46,8 +47,7 @@ pub struct PoolServerConfig {
 impl Default for PoolServerConfig {
     fn default() -> Self {
         PoolServerConfig {
-            target_fitness: 80.0,
-            n_bits: 160,
+            problem: ProblemSpec::trap(),
             pool_capacity: 1024,
             log_path: None,
             seed: 0xBA5EBA11,
@@ -81,7 +81,7 @@ impl PoolServer {
                 persistence::check_or_init_meta(
                     &cfg.data_dir,
                     1,
-                    config.n_bits,
+                    config.problem.repr,
                     config.pool_capacity,
                 )?;
                 Some(persistence::recover_shard(&persistence::shard_dir(
@@ -101,8 +101,7 @@ impl PoolServer {
             };
             let mut state = PoolState::new(
                 config.pool_capacity,
-                config.target_fitness,
-                config.n_bits,
+                &config.problem,
                 log,
                 config.seed,
             );
@@ -143,8 +142,14 @@ impl PoolServer {
                 }
             }
             if config.verify_fitness {
-                state.verifier =
-                    Some(FitnessVerifier::new(Box::new(Trap::paper())));
+                state.verifier = FitnessVerifier::for_spec(&config.problem);
+                if state.verifier.is_none() {
+                    eprintln!(
+                        "nodio: --verify-fitness has no evaluator for \
+                         problem {}; verification disabled",
+                        config.problem.label()
+                    );
+                }
             }
             if let Some((rate, burst)) = config.rate_limit {
                 state.rate_limiter = Some(RateLimiter::new(rate, burst));
@@ -173,8 +178,7 @@ mod tests {
     #[test]
     fn end_to_end_over_sockets() {
         let config = PoolServerConfig {
-            n_bits: 8,
-            target_fitness: 8.0,
+            problem: ProblemSpec::bits(8, 8.0),
             ..Default::default()
         };
         let handle = PoolServer::spawn("127.0.0.1:0", config).unwrap();
@@ -215,8 +219,7 @@ mod tests {
     #[test]
     fn concurrent_islands_against_one_server() {
         let config = PoolServerConfig {
-            n_bits: 16,
-            target_fitness: 1e9, // never solved during this test
+            problem: ProblemSpec::bits(16, 1e9), // never solved here
             ..Default::default()
         };
         let handle = PoolServer::spawn("127.0.0.1:0", config).unwrap();
@@ -264,8 +267,7 @@ mod tests {
             .join(format!("nodio-server-log-{}.jsonl", std::process::id()));
         let _ = std::fs::remove_file(&path);
         let config = PoolServerConfig {
-            n_bits: 4,
-            target_fitness: 4.0,
+            problem: ProblemSpec::bits(4, 4.0),
             log_path: Some(path.clone()),
             ..Default::default()
         };
@@ -288,8 +290,7 @@ mod tests {
 
     fn recovery_config(data_dir: &std::path::Path) -> PoolServerConfig {
         PoolServerConfig {
-            n_bits: 8,
-            target_fitness: 8.0,
+            problem: ProblemSpec::bits(8, 8.0),
             persist: Some(PersistConfig {
                 snapshot_every: 3,
                 ..PersistConfig::new(data_dir)
@@ -466,6 +467,65 @@ mod tests {
     }
 
     #[test]
+    fn recovery_real_experiment_replays_identical_pool() {
+        // A real-valued experiment survives kill+resume: the replayed
+        // pool serves the identical gene vectors (bit-exact) and the
+        // resumed experiment still solves.
+        let dir = std::env::temp_dir().join(format!(
+            "nodio-recover-real-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let config = || PoolServerConfig {
+            problem: ProblemSpec::sphere(3, 1e-3),
+            persist: Some(PersistConfig {
+                snapshot_every: 2,
+                ..PersistConfig::new(&dir)
+            }),
+            ..Default::default()
+        };
+        let put = |c: &mut HttpClient, genes: &str, fitness: f64| {
+            let mut req =
+                Request::new(Method::Put, "/experiment/chromosome");
+            req.body = format!(
+                "{{\"genes\":{genes},\"fitness\":{fitness},\"uuid\":\"r\"}}"
+            )
+            .into_bytes();
+            c.send(&req).unwrap()
+        };
+        {
+            let handle =
+                PoolServer::spawn("127.0.0.1:0", config()).unwrap();
+            let mut c = HttpClient::connect(handle.addr).unwrap();
+            assert_eq!(put(&mut c, "[1.5,-2.25,0.5]", -7.8125).status, 200);
+            assert_eq!(put(&mut c, "[0.5,0.25,0]", -0.3125).status, 200);
+            assert_eq!(put(&mut c, "[0.25,0,0]", -0.0625).status, 200);
+            handle.stop();
+        }
+        {
+            let handle =
+                PoolServer::spawn("127.0.0.1:0", config()).unwrap();
+            let mut c = HttpClient::connect(handle.addr).unwrap();
+            let state = state_of(&mut c);
+            assert_eq!(state.get_u64("pool_size"), Some(3));
+            assert_eq!(state.get_u64("puts"), Some(3));
+            assert_eq!(state.get_f64("best_fitness"), Some(-0.0625));
+            // The recovered pool serves exact gene vectors.
+            let resp = c
+                .send(&Request::new(Method::Get, "/experiment/random"))
+                .unwrap();
+            assert_eq!(resp.status, 200);
+            let body = resp.json_body().unwrap();
+            let genes = body.get("genes").unwrap().as_arr().unwrap();
+            assert_eq!(genes.len(), 3);
+            // And the resumed real experiment still terminates.
+            assert_eq!(put(&mut c, "[0,0,0]", 0.0).status, 201);
+            handle.stop();
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
     fn recovery_layout_mismatch_is_refused() {
         let dir = std::env::temp_dir().join(format!(
             "nodio-recover-layout-{}",
@@ -480,7 +540,11 @@ mod tests {
         }
         // Same dir, different chromosome width: spawn must fail loudly.
         let mut config = recovery_config(&dir);
-        config.n_bits = 16;
+        config.problem = ProblemSpec::bits(16, 8.0);
+        assert!(PoolServer::spawn("127.0.0.1:0", config).is_err());
+        // Different representation family over the same data: refused.
+        let mut config = recovery_config(&dir);
+        config.problem = ProblemSpec::sphere(8, 1e-3);
         assert!(PoolServer::spawn("127.0.0.1:0", config).is_err());
         let _ = std::fs::remove_dir_all(&dir);
     }

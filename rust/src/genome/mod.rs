@@ -1,0 +1,710 @@
+//! Pluggable genome representations: the coordinator-side genome
+//! subsystem.
+//!
+//! The paper's headline claim rests on "different integer and floating
+//! point problems", but until this module the whole coordinator stack —
+//! pool entries, PUT validation, WAL/snapshot records, the federation
+//! wire, the render caches — was hardwired to bit-strings. [`Genome`] is
+//! the representation-generic value those layers now carry, with two
+//! first-class codecs:
+//!
+//! * **Bits** — the existing packed bit-string
+//!   ([`crate::problems::PackedBits`], 64 loci per u64 word): `"0101..."`
+//!   on the HTTP wire, fixed-width hex in durable records. Unchanged
+//!   byte-for-byte from the PR 3 format, so the zero-allocation gates and
+//!   v1/v2 replay compatibility are preserved.
+//! * **Real** — a fixed-dimension f64 vector ([`RealGenes`]): a
+//!   `"genes":[f64,...]` JSON array on the HTTP wire and in durable
+//!   records, rendered with Rust's shortest-round-trip decimal formatting
+//!   (hex-free, canonical: the same vector always renders to the same
+//!   bytes, and every rendered gene parses back bit-exactly). Genes are
+//!   validated finite at every boundary — a NaN/Inf can never enter a
+//!   pool, a WAL, or the gossip wire.
+//!
+//! [`Representation`] describes which family (and dimension) an
+//! experiment runs; it is chosen at boot ([`ProblemSpec`], the
+//! `--problem`/`--dim` CLI surface), persisted in `meta.json`, announced
+//! in federation `hello` records, and enforced at every decode boundary:
+//! recovery refuses a WAL written under a different representation, and
+//! gossip links between peers running different representations are
+//! refused with a loud hello error.
+
+use crate::json::{self, Json};
+use crate::problems::{
+    BitProblem, Griewank, OneMax, PackedBits, Rastrigin, RealProblem,
+    Sphere, Trap,
+};
+
+/// Which genome family (and fixed size) an experiment runs. An experiment
+/// has exactly one representation for its whole life — it is part of the
+/// durable layout (`meta.json`) and of the federation handshake.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Representation {
+    /// Fixed-length bit-string of `n_bits` loci.
+    Bits { n_bits: usize },
+    /// Fixed-dimension vector of `dim` finite f64 genes.
+    Real { dim: usize },
+}
+
+impl Representation {
+    pub fn bits(n_bits: usize) -> Representation {
+        Representation::Bits { n_bits }
+    }
+
+    pub fn real(dim: usize) -> Representation {
+        Representation::Real { dim }
+    }
+
+    /// Number of loci/genes.
+    pub fn len(&self) -> usize {
+        match self {
+            Representation::Bits { n_bits } => *n_bits,
+            Representation::Real { dim } => *dim,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The durable/wire family tag (`"bits"` / `"real"`).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Representation::Bits { .. } => "bits",
+            Representation::Real { .. } => "real",
+        }
+    }
+
+    /// Compact identity announced in federation `hello` records and
+    /// stored in `meta.json`: `"bits-160"`, `"real-64"`. Two peers (or a
+    /// WAL and a server) agree on a representation iff their tags match.
+    pub fn wire_tag(&self) -> String {
+        format!("{}-{}", self.kind(), self.len())
+    }
+
+    /// Inverse of [`Representation::wire_tag`].
+    pub fn parse_wire_tag(tag: &str) -> Option<Representation> {
+        let (kind, n) = tag.split_once('-')?;
+        let n: usize = n.parse().ok()?;
+        match kind {
+            "bits" => Some(Representation::Bits { n_bits: n }),
+            "real" => Some(Representation::Real { dim: n }),
+            _ => None,
+        }
+    }
+}
+
+/// A validated real-valued genome: every gene is finite. Equality (pool
+/// dedup, tests) is bit-exact per gene — two vectors are the same genome
+/// iff every gene has the same f64 bit pattern, which matches the
+/// canonical decimal rendering exactly (shortest-round-trip formatting is
+/// injective on distinct bit patterns, modulo `-0.0`/`0.0` which compare
+/// unequal here and render differently too).
+#[derive(Debug, Clone)]
+pub struct RealGenes {
+    genes: Vec<f64>,
+}
+
+impl PartialEq for RealGenes {
+    fn eq(&self, other: &RealGenes) -> bool {
+        self.genes.len() == other.genes.len()
+            && self
+                .genes
+                .iter()
+                .zip(&other.genes)
+                .all(|(a, b)| a.to_bits() == b.to_bits())
+    }
+}
+
+/// Bit-pattern equality is a true equivalence relation (no NaN reaches a
+/// [`RealGenes`]), so `Eq`/`Hash` are sound and consistent.
+impl Eq for RealGenes {}
+
+impl std::hash::Hash for RealGenes {
+    fn hash<H: std::hash::Hasher>(&self, state: &mut H) {
+        self.genes.len().hash(state);
+        for g in &self.genes {
+            g.to_bits().hash(state);
+        }
+    }
+}
+
+impl RealGenes {
+    /// Adopt a gene vector; `None` if any gene is non-finite (the 400
+    /// path at the HTTP boundary, the corrupt-record path on replay).
+    pub fn new(genes: Vec<f64>) -> Option<RealGenes> {
+        if genes.iter().all(|g| g.is_finite()) {
+            Some(RealGenes { genes })
+        } else {
+            None
+        }
+    }
+
+    pub fn genes(&self) -> &[f64] {
+        &self.genes
+    }
+
+    pub fn dim(&self) -> usize {
+        self.genes.len()
+    }
+
+    /// The wire/durable form: a JSON array of canonically rendered
+    /// numbers (`[0,1.5,-2.25e-3]` style via the shared JSON writer).
+    pub fn to_json(&self) -> Json {
+        Json::Arr(self.genes.iter().map(|&g| Json::Num(g)).collect())
+    }
+
+    /// Decode a `genes` JSON value. `None` unless it is an array of
+    /// finite numbers (corrupt or non-canonical records must not replay).
+    pub fn from_json(v: &Json) -> Option<RealGenes> {
+        let items = v.as_arr()?;
+        let mut genes = Vec::with_capacity(items.len());
+        for item in items {
+            let g = item.as_f64()?;
+            if !g.is_finite() {
+                return None;
+            }
+            genes.push(g);
+        }
+        Some(RealGenes { genes })
+    }
+
+    /// Canonical compact decimal rendering (`"[0,1.5]"`) — the
+    /// human-facing form used in winner records and logs.
+    pub fn render(&self) -> String {
+        json::to_string(&self.to_json())
+    }
+}
+
+/// A representation-generic genome: what [`crate::coordinator::pool`]
+/// entries hold and what WAL/snapshot/gossip records carry.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub enum Genome {
+    Bits(PackedBits),
+    Real(RealGenes),
+}
+
+impl Genome {
+    pub fn representation(&self) -> Representation {
+        match self {
+            Genome::Bits(p) => Representation::Bits { n_bits: p.n_bits() },
+            Genome::Real(r) => Representation::Real { dim: r.dim() },
+        }
+    }
+
+    /// Whether this genome belongs to `repr` (family AND size — a 64-gene
+    /// vector does not match a 128-gene experiment).
+    pub fn matches(&self, repr: Representation) -> bool {
+        self.representation() == repr
+    }
+
+    /// The HTTP-wire member of this genome, as rendered into
+    /// `GET /experiment/random` bodies and solution payloads:
+    /// `("chromosome", "0101...")` or `("genes", [f64,...])`.
+    pub fn wire_member(&self) -> (&'static str, Json) {
+        match self {
+            Genome::Bits(p) => ("chromosome", Json::Str(p.to_string01())),
+            Genome::Real(r) => ("genes", r.to_json()),
+        }
+    }
+
+    /// Human/winner-record display form: the `"0101..."` wire string or
+    /// the canonical `"[...]"` gene rendering.
+    pub fn display_string(&self) -> String {
+        match self {
+            Genome::Bits(p) => p.to_string01(),
+            Genome::Real(r) => r.render(),
+        }
+    }
+
+    /// Stamp the durable v3 members onto a WAL/snapshot/gossip record:
+    /// `repr` plus the per-family payload (`packed`+`n_bits` hex for
+    /// bits — byte-identical to the v2 payload — or the hex-free `genes`
+    /// array for real vectors).
+    pub fn encode_record(&self, rec: &mut Json) {
+        match self {
+            Genome::Bits(p) => {
+                rec.set("repr", "bits".into());
+                rec.set("packed", p.to_hex().into());
+                rec.set("n_bits", p.n_bits().into());
+            }
+            Genome::Real(r) => {
+                rec.set("repr", "real".into());
+                rec.set("genes", r.to_json());
+            }
+        }
+    }
+
+    /// Decode a durable record of any version: v3 (`repr` dispatch), v2
+    /// (`packed`+`n_bits`), or v1 (`chromosome` string). `None` for
+    /// malformed/corrupt records of any version.
+    pub fn decode_record(v: &Json) -> Option<Genome> {
+        match v.get_str("repr") {
+            Some("real") => {
+                RealGenes::from_json(v.get("genes")?).map(Genome::Real)
+            }
+            Some("bits") | None => {
+                let packed =
+                    match (v.get_str("packed"), v.get_u64("n_bits")) {
+                        (Some(hex), Some(n)) => {
+                            PackedBits::from_hex(hex, n as usize)?
+                        }
+                        _ => PackedBits::from_str01(v.get_str("chromosome")?)?,
+                    };
+                Some(Genome::Bits(packed))
+            }
+            Some(_) => None, // unknown representation: refuse to replay
+        }
+    }
+}
+
+/// Compare against a `"0101..."` wire string without unpacking (bit
+/// genomes only; a real genome never equals a bit-string).
+impl PartialEq<str> for Genome {
+    fn eq(&self, other: &str) -> bool {
+        match self {
+            Genome::Bits(p) => p == other,
+            Genome::Real(_) => false,
+        }
+    }
+}
+
+impl PartialEq<&str> for Genome {
+    fn eq(&self, other: &&str) -> bool {
+        *self == **other
+    }
+}
+
+/// The experiment a server (or swarm) runs: problem family,
+/// representation, solve threshold, and — for real problems — the search
+/// domain. Selected at boot (`--problem NAME --dim N`), persisted in
+/// `meta.json` via [`Representation::wire_tag`], and used to derive the
+/// optional server-side fitness verifier.
+///
+/// Real problems follow the CEC *minimization* convention while the pool
+/// protocol *maximizes* fitness, so clients PUT `fitness = -cost` and
+/// `target_fitness` is the negated target cost: an experiment is solved
+/// when a PUT's fitness reaches it, i.e. when cost drops to the target.
+#[derive(Debug, Clone)]
+pub struct ProblemSpec {
+    /// Problem family: `trap`, `onemax`, `bits` (width-only bit
+    /// experiment with an explicit target), `sphere`, `rastrigin`,
+    /// `griewank`.
+    pub name: &'static str,
+    pub repr: Representation,
+    /// Fitness at which a PUT ends the experiment (for real problems:
+    /// the negated target cost).
+    pub target_fitness: f64,
+    /// Per-gene search domain — real problems only (ignored for bits).
+    pub domain: (f64, f64),
+}
+
+impl Default for ProblemSpec {
+    fn default() -> Self {
+        ProblemSpec::trap()
+    }
+}
+
+impl ProblemSpec {
+    /// The paper's baseline: trap-40 (160 bits, optimum 80).
+    pub fn trap() -> ProblemSpec {
+        ProblemSpec {
+            name: "trap",
+            repr: Representation::bits(160),
+            target_fitness: 80.0,
+            domain: (0.0, 0.0),
+        }
+    }
+
+    /// A width-only bit-string experiment with an explicit solve target
+    /// (what tests and benches that are not about the trap use).
+    pub fn bits(n_bits: usize, target_fitness: f64) -> ProblemSpec {
+        ProblemSpec {
+            name: "bits",
+            repr: Representation::bits(n_bits),
+            target_fitness,
+            domain: (0.0, 0.0),
+        }
+    }
+
+    /// Sphere in `dim` dimensions; solved at cost <= `target_cost`.
+    pub fn sphere(dim: usize, target_cost: f64) -> ProblemSpec {
+        ProblemSpec {
+            name: "sphere",
+            repr: Representation::real(dim),
+            target_fitness: -target_cost,
+            domain: (-5.0, 5.0),
+        }
+    }
+
+    /// Rastrigin in `dim` dimensions; solved at cost <= `target_cost`.
+    pub fn rastrigin(dim: usize, target_cost: f64) -> ProblemSpec {
+        ProblemSpec {
+            name: "rastrigin",
+            repr: Representation::real(dim),
+            target_fitness: -target_cost,
+            domain: (-5.0, 5.0),
+        }
+    }
+
+    /// Griewank in `dim` dimensions; solved at cost <= `target_cost`.
+    pub fn griewank(dim: usize, target_cost: f64) -> ProblemSpec {
+        ProblemSpec {
+            name: "griewank",
+            repr: Representation::real(dim),
+            target_fitness: -target_cost,
+            domain: (-600.0, 600.0),
+        }
+    }
+
+    /// Parse the CLI surface: `--problem NAME [--dim N] [--target T]`.
+    /// For bit problems `T` is the target *fitness* (default: the
+    /// problem's optimum); for real problems `T` is the target *cost*
+    /// (default: a per-problem threshold scaled to the dimension that a
+    /// volunteer swarm reaches in minutes, not the global optimum — pass
+    /// an explicit `--target` to demand more).
+    pub fn parse(
+        name: &str,
+        dim: Option<usize>,
+        target: Option<f64>,
+    ) -> Result<ProblemSpec, String> {
+        let spec = match name {
+            "trap" => {
+                let n = dim.unwrap_or(160);
+                if n == 0 || n % 4 != 0 {
+                    return Err(format!(
+                        "trap needs a positive multiple of 4 bits, got {n} \
+                         (use --problem bits for a width-only experiment)"
+                    ));
+                }
+                let optimum = (n / 4) as f64 * 2.0;
+                ProblemSpec {
+                    name: "trap",
+                    repr: Representation::bits(n),
+                    target_fitness: target.unwrap_or(optimum),
+                    domain: (0.0, 0.0),
+                }
+            }
+            "onemax" => {
+                let n = dim.unwrap_or(64);
+                if n == 0 {
+                    return Err("onemax needs a positive bit count".into());
+                }
+                ProblemSpec {
+                    name: "onemax",
+                    repr: Representation::bits(n),
+                    target_fitness: target.unwrap_or(n as f64),
+                    domain: (0.0, 0.0),
+                }
+            }
+            // Width-only bit experiment (the pre-PR 5 `--bits N
+            // --target T` surface): any width, no server-side evaluator,
+            // so the solve target must be explicit.
+            "bits" => {
+                let n = dim.unwrap_or(160);
+                if n == 0 {
+                    return Err("bits needs a positive bit count".into());
+                }
+                let Some(target) = target else {
+                    return Err(
+                        "--problem bits has no known optimum; pass an \
+                         explicit --target"
+                            .into(),
+                    );
+                };
+                ProblemSpec::bits(n, target)
+            }
+            "sphere" => {
+                ProblemSpec::sphere(real_dim(dim)?, target.unwrap_or(1e-2))
+            }
+            "rastrigin" => {
+                let d = real_dim(dim)?;
+                ProblemSpec::rastrigin(d, target.unwrap_or(d as f64))
+            }
+            "griewank" => {
+                let d = real_dim(dim)?;
+                ProblemSpec::griewank(d, target.unwrap_or(d as f64 / 10.0))
+            }
+            other => {
+                return Err(format!(
+                    "unknown problem {other} (trap, onemax, bits, sphere, \
+                     rastrigin, griewank)"
+                ))
+            }
+        };
+        Ok(spec)
+    }
+
+    pub fn is_real(&self) -> bool {
+        matches!(self.repr, Representation::Real { .. })
+    }
+
+    /// Builder-style target override (benches that must never solve).
+    pub fn with_target(mut self, target_fitness: f64) -> ProblemSpec {
+        self.target_fitness = target_fitness;
+        self
+    }
+
+    /// For real problems: the target cost (negated target fitness).
+    pub fn target_cost(&self) -> f64 {
+        -self.target_fitness
+    }
+
+    /// The evaluator for real problems (clients and the server-side
+    /// fitness verifier); `None` for bit representations.
+    pub fn real_problem(&self) -> Option<Box<dyn RealProblem + Send + Sync>> {
+        let dim = match self.repr {
+            Representation::Real { dim } => dim,
+            Representation::Bits { .. } => return None,
+        };
+        match self.name {
+            "sphere" => Some(Box::new(Sphere::new(dim))),
+            "rastrigin" => Some(Box::new(Rastrigin::new(dim))),
+            "griewank" => Some(Box::new(Griewank::new(dim))),
+            _ => None,
+        }
+    }
+
+    /// The evaluator for bit problems with a known instance (`trap`,
+    /// `onemax`); `None` for `bits` (width-only) and real problems.
+    pub fn bit_problem(&self) -> Option<Box<dyn BitProblem + Send>> {
+        let n = match self.repr {
+            Representation::Bits { n_bits } => n_bits,
+            Representation::Real { .. } => return None,
+        };
+        match self.name {
+            "trap" => Some(Box::new(Trap::new(n / 4, 4, 1.0, 2.0, 3))),
+            "onemax" => Some(Box::new(OneMax::new(n))),
+            _ => None,
+        }
+    }
+
+    /// Short human label for CLI banners (`rastrigin(dim=64)`).
+    pub fn label(&self) -> String {
+        match self.repr {
+            Representation::Bits { n_bits } => {
+                format!("{}({} bits)", self.name, n_bits)
+            }
+            Representation::Real { dim } => {
+                format!("{}(dim={})", self.name, dim)
+            }
+        }
+    }
+}
+
+fn real_dim(dim: Option<usize>) -> Result<usize, String> {
+    let d = dim.unwrap_or(64);
+    if d == 0 {
+        return Err("real-valued problems need --dim >= 1".into());
+    }
+    Ok(d)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{Rng64, SplitMix64};
+    use crate::testkit::{forall, PropConfig};
+
+    #[test]
+    fn wire_tag_round_trip() {
+        for repr in [
+            Representation::bits(160),
+            Representation::bits(1),
+            Representation::real(64),
+            Representation::real(1),
+        ] {
+            assert_eq!(
+                Representation::parse_wire_tag(&repr.wire_tag()),
+                Some(repr)
+            );
+        }
+        assert_eq!(Representation::parse_wire_tag("bits-160").unwrap().len(), 160);
+        assert!(Representation::parse_wire_tag("blobs-8").is_none());
+        assert!(Representation::parse_wire_tag("bits-x").is_none());
+        assert!(Representation::parse_wire_tag("bits").is_none());
+    }
+
+    #[test]
+    fn real_genes_reject_non_finite() {
+        assert!(RealGenes::new(vec![1.0, f64::NAN]).is_none());
+        assert!(RealGenes::new(vec![f64::INFINITY]).is_none());
+        assert!(RealGenes::new(vec![]).is_some());
+        assert!(RealGenes::new(vec![1.0, -2.5]).is_some());
+        // Decode refuses non-finite too (1e999 parses to +inf upstream;
+        // a literal Num(inf) models the same corruption).
+        let bad = Json::Arr(vec![Json::Num(f64::INFINITY)]);
+        assert!(RealGenes::from_json(&bad).is_none());
+        let mixed = Json::Arr(vec![Json::Num(1.0), Json::Str("x".into())]);
+        assert!(RealGenes::from_json(&mixed).is_none());
+        assert!(RealGenes::from_json(&Json::Num(1.0)).is_none());
+    }
+
+    /// A vector of "nasty" finite doubles exercising the decimal codec.
+    fn nasty_genes(rng: &mut SplitMix64) -> Vec<f64> {
+        let n = 1 + (rng.next_u64() % 40) as usize;
+        (0..n)
+            .map(|_| match rng.next_u64() % 8 {
+                0 => 0.0,
+                1 => -0.0,
+                2 => (rng.next_u64() % 1000) as f64, // integers
+                3 => f64::MIN_POSITIVE,              // 2.2e-308
+                4 => f64::MAX,
+                5 => -f64::MAX,
+                6 => f64::from_bits(rng.next_u64() % (1u64 << 62)), // subnormals+
+                _ => (rng.next_u64() as i64 as f64) / 1e3,
+            })
+            .map(|g| if g.is_finite() { g } else { 1.0 })
+            .collect()
+    }
+
+    #[test]
+    fn real_genes_json_round_trip_is_bit_exact_property() {
+        // RealVector ⇄ JSON text ⇄ RealVector: the canonical decimal
+        // rendering reproduces every gene's exact bit pattern.
+        forall(
+            &PropConfig::cases(100),
+            |rng| {
+                let mut local = SplitMix64::new(rng.next_u64());
+                nasty_genes(&mut local)
+            },
+            |genes| {
+                let r = RealGenes::new(genes.clone()).unwrap();
+                let text = r.render();
+                let parsed = crate::json::parse(&text).unwrap();
+                let back = RealGenes::from_json(&parsed).unwrap();
+                back == r
+                    && back
+                        .genes()
+                        .iter()
+                        .zip(genes)
+                        .all(|(a, b)| a.to_bits() == b.to_bits())
+            },
+        );
+    }
+
+    #[test]
+    fn genome_record_round_trip_property() {
+        // Genome ⇄ WAL v3 record members ⇄ Genome, both families, through
+        // the actual framed-JSON text (not just the tree).
+        forall(
+            &PropConfig::cases(100),
+            |rng| rng.next_u64(),
+            |&seed| {
+                let mut rng = SplitMix64::new(seed);
+                let genome = if rng.next_u64() % 2 == 0 {
+                    let n = 1 + (rng.next_u64() % 200) as usize;
+                    let s: String = (0..n)
+                        .map(|_| if rng.next_u64() % 2 == 0 { '0' } else { '1' })
+                        .collect();
+                    Genome::Bits(PackedBits::from_str01(&s).unwrap())
+                } else {
+                    Genome::Real(
+                        RealGenes::new(nasty_genes(&mut rng)).unwrap(),
+                    )
+                };
+                let mut rec = Json::obj(vec![("t", "put".into())]);
+                genome.encode_record(&mut rec);
+                let text = json::to_string(&rec);
+                let parsed = crate::json::parse(&text).unwrap();
+                Genome::decode_record(&parsed) == Some(genome)
+            },
+        );
+    }
+
+    #[test]
+    fn decode_accepts_v1_v2_v3_shapes() {
+        // v1: chromosome string, no repr.
+        let v1 = Json::obj(vec![("chromosome", "0101".into())]);
+        assert_eq!(
+            Genome::decode_record(&v1).unwrap(),
+            Genome::Bits(PackedBits::from_str01("0101").unwrap())
+        );
+        // v2: packed hex, no repr.
+        let v2 = Json::obj(vec![
+            ("packed", "000000000000000a".into()),
+            ("n_bits", 4u64.into()),
+        ]);
+        assert_eq!(
+            Genome::decode_record(&v2).unwrap(),
+            Genome::Bits(PackedBits::from_str01("0101").unwrap())
+        );
+        // v3 bits: explicit repr.
+        let v3b = Json::obj(vec![
+            ("repr", "bits".into()),
+            ("packed", "000000000000000a".into()),
+            ("n_bits", 4u64.into()),
+        ]);
+        assert!(Genome::decode_record(&v3b).is_some());
+        // v3 real.
+        let v3r = Json::obj(vec![
+            ("repr", "real".into()),
+            ("genes", Json::Arr(vec![Json::Num(1.5), Json::Num(-2.0)])),
+        ]);
+        let Some(Genome::Real(r)) = Genome::decode_record(&v3r) else {
+            panic!("real record failed to decode");
+        };
+        assert_eq!(r.genes(), &[1.5, -2.0]);
+        // Unknown repr refuses; malformed payloads refuse.
+        let unknown = Json::obj(vec![("repr", "tree".into())]);
+        assert!(Genome::decode_record(&unknown).is_none());
+        let bad = Json::obj(vec![
+            ("repr", "real".into()),
+            ("genes", Json::Str("nope".into())),
+        ]);
+        assert!(Genome::decode_record(&bad).is_none());
+    }
+
+    #[test]
+    fn genome_wire_members_and_matching() {
+        let bits = Genome::Bits(PackedBits::from_str01("0110").unwrap());
+        let (k, v) = bits.wire_member();
+        assert_eq!((k, v.as_str()), ("chromosome", Some("0110")));
+        assert!(bits.matches(Representation::bits(4)));
+        assert!(!bits.matches(Representation::bits(5)));
+        assert!(!bits.matches(Representation::real(4)));
+        assert!(bits == "0110");
+
+        let real = Genome::Real(RealGenes::new(vec![0.5, 2.0]).unwrap());
+        let (k, v) = real.wire_member();
+        assert_eq!(k, "genes");
+        assert_eq!(v.as_arr().map(<[Json]>::len), Some(2));
+        assert!(real.matches(Representation::real(2)));
+        assert!(!real.matches(Representation::real(3)));
+        assert!(real != "01");
+        assert_eq!(real.display_string(), "[0.5,2]");
+    }
+
+    #[test]
+    fn problem_spec_parse_and_defaults() {
+        let trap = ProblemSpec::parse("trap", None, None).unwrap();
+        assert_eq!(trap.repr, Representation::bits(160));
+        assert_eq!(trap.target_fitness, 80.0);
+        assert!(trap.bit_problem().is_some());
+        assert!(trap.real_problem().is_none());
+
+        let trap8 = ProblemSpec::parse("trap", Some(8), None).unwrap();
+        assert_eq!(trap8.target_fitness, 4.0);
+        assert!(ProblemSpec::parse("trap", Some(7), None).is_err());
+
+        let ras = ProblemSpec::parse("rastrigin", Some(64), None).unwrap();
+        assert_eq!(ras.repr, Representation::real(64));
+        assert_eq!(ras.target_cost(), 64.0);
+        assert!(ras.is_real());
+        let p = ras.real_problem().unwrap();
+        assert_eq!(p.eval(&vec![0.0; 64]), 0.0);
+
+        let sph = ProblemSpec::parse("sphere", Some(8), Some(0.5)).unwrap();
+        assert_eq!(sph.target_fitness, -0.5);
+        assert_eq!(sph.label(), "sphere(dim=8)");
+
+        // Width-only legacy surface: any width, explicit target required.
+        let bits = ProblemSpec::parse("bits", Some(10), Some(7.5)).unwrap();
+        assert_eq!(bits.repr, Representation::bits(10));
+        assert_eq!(bits.target_fitness, 7.5);
+        assert!(ProblemSpec::parse("bits", Some(10), None).is_err());
+
+        assert!(ProblemSpec::parse("hiff", None, None).is_err());
+        assert!(ProblemSpec::parse("sphere", Some(0), None).is_err());
+    }
+}

@@ -20,7 +20,8 @@ mod parse;
 mod write;
 
 pub use borrowed::{
-    parse_put_body, parse_ref, JsonRef, PutBody, PutItemRef, RefError,
+    parse_put_body, parse_put_body_reusing, parse_ref, GenesRef, JsonRef,
+    PutBody, PutItemRef, PutScratch, RefError,
 };
 pub use parse::{parse, ParseError};
 pub use write::{to_string, to_string_pretty};

@@ -94,11 +94,17 @@ fn write_number(n: f64, out: &mut String) {
     if n.is_nan() || n.is_infinite() {
         // JSON has no NaN/Inf; JavaScript's JSON.stringify emits null.
         out.push_str("null");
-    } else if n.fract() == 0.0 && n.abs() < 9.007_199_254_740_992e15 {
+    } else if n.fract() == 0.0
+        && n.abs() < 9.007_199_254_740_992e15
+        && !(n == 0.0 && n.is_sign_negative())
+    {
         // exact integer: print without decimal point
         out.push_str(&format!("{}", n as i64));
     } else {
-        // `{}` on f64 is Rust's shortest round-trip formatting
+        // `{}` on f64 is Rust's shortest round-trip formatting; -0.0
+        // takes this branch ("-0") so every distinct bit pattern keeps a
+        // distinct, round-trippable rendering (real-genome codecs rely
+        // on it).
         out.push_str(&format!("{n}"));
     }
 }
@@ -141,6 +147,15 @@ mod tests {
             let s = to_string(&Json::Num(x));
             assert_eq!(parse(&s).unwrap().as_f64(), Some(x), "{s}");
         }
+    }
+
+    #[test]
+    fn negative_zero_keeps_its_sign() {
+        // Bit-exactness for real genomes: -0.0 must not collapse to "0".
+        let s = to_string(&Json::Num(-0.0));
+        assert_eq!(s, "-0");
+        let back = parse(&s).unwrap().as_f64().unwrap();
+        assert_eq!(back.to_bits(), (-0.0f64).to_bits());
     }
 
     #[test]

@@ -41,6 +41,7 @@ pub mod client;
 pub mod coordinator;
 pub mod ea;
 pub mod eventloop;
+pub mod genome;
 pub mod http;
 pub mod json;
 pub mod problems;

@@ -12,7 +12,7 @@ pub use bitstring::{Deceptive3, OneMax, RoyalRoad, Trap};
 pub use extended::{Hiff, Mmdp, PPeaks};
 pub use f15::F15Instance;
 pub use packed::{PackedBits, PackedTrapEvaluator};
-pub use real::{Rastrigin, Sphere};
+pub use real::{Griewank, Rastrigin, Sphere};
 
 /// A maximization problem over fixed-length bitstrings.
 pub trait BitProblem: Sync {

@@ -55,6 +55,37 @@ impl RealProblem for Rastrigin {
     }
 }
 
+/// Griewank: `1 + sum(x_i^2)/4000 - prod(cos(x_i / sqrt(i+1)))` — the
+/// third function of the paper's floating-point family. Classical domain
+/// [-600, 600]; global minimum 0 at the origin.
+#[derive(Debug, Clone)]
+pub struct Griewank {
+    pub dim: usize,
+}
+
+impl Griewank {
+    pub fn new(dim: usize) -> Griewank {
+        Griewank { dim }
+    }
+}
+
+impl RealProblem for Griewank {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn eval(&self, x: &[f64]) -> f64 {
+        debug_assert_eq!(x.len(), self.dim);
+        let sum: f64 = x.iter().map(|v| v * v).sum();
+        let prod: f64 = x
+            .iter()
+            .enumerate()
+            .map(|(i, v)| (v / ((i + 1) as f64).sqrt()).cos())
+            .product();
+        1.0 + sum / 4000.0 - prod
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -83,6 +114,20 @@ mod tests {
                 let v = p.eval(&[i as f64 / 4.0, j as f64 / 4.0]);
                 assert!(v >= -1e-9, "negative at ({i},{j}): {v}");
             }
+        }
+    }
+
+    #[test]
+    fn griewank_known_values() {
+        let p = Griewank::new(4);
+        assert!(p.eval(&[0.0; 4]).abs() < 1e-12); // global minimum
+        // Away from the origin the quadratic term dominates.
+        let far = p.eval(&[300.0, -300.0, 300.0, -300.0]);
+        assert!(far > 80.0, "{far}");
+        // Never below the global minimum (up to fp noise).
+        for i in -10..10 {
+            let v = p.eval(&[i as f64 * 37.0, 1.0, -2.0, 3.0]);
+            assert!(v >= -1e-9, "{v}");
         }
     }
 

@@ -14,6 +14,7 @@ use crate::client::worker::{ClientProcess, WorkerMode};
 use crate::coordinator::cluster::{ClusterConfig, PoolBackend};
 use crate::coordinator::federation::FederationConfig;
 use crate::coordinator::{PersistConfig, PoolServer, PoolServerConfig};
+use crate::genome::ProblemSpec;
 use crate::http::{HttpClient, Method, Request};
 use crate::rng::{dist, Rng64, SplitMix64};
 
@@ -33,6 +34,10 @@ pub struct ChurnConfig {
 pub struct SwarmConfig {
     /// Number of clients when churn is disabled; initial clients otherwise.
     pub n_clients: usize,
+    /// The experiment the whole swarm runs: problem family, genome
+    /// representation and solve threshold (`--problem`/`--dim` on
+    /// `nodio swarm`). Overrides `server.problem`.
+    pub problem: ProblemSpec,
     pub mode: WorkerMode,
     pub engine: EngineChoice,
     /// Basic-mode population size (W² draws its own).
@@ -69,6 +74,7 @@ impl Default for SwarmConfig {
     fn default() -> Self {
         SwarmConfig {
             n_clients: 4,
+            problem: ProblemSpec::trap(),
             mode: WorkerMode::W2,
             engine: EngineChoice::Native,
             base_pop: 256,
@@ -92,6 +98,7 @@ impl SwarmConfig {
     /// federation plumbed through to every shard).
     fn backend_config(&self) -> ClusterConfig {
         let mut base = self.server.clone();
+        base.problem = self.problem.clone();
         if self.persist.is_some() {
             base.persist = self.persist.clone();
         }
@@ -155,6 +162,7 @@ pub fn run_swarm(config: SwarmConfig) -> Result<SwarmReport> {
         );
         ClientProcess::spawn(
             Some(addr),
+            &config.problem,
             config.mode,
             config.engine,
             config.base_pop,
@@ -349,6 +357,7 @@ pub fn run_federated_swarm(
         let addr = handles[i % n].addr();
         clients.push(ClientProcess::spawn(
             Some(addr),
+            &config.problem,
             config.mode,
             config.engine,
             config.base_pop,
@@ -457,7 +466,7 @@ pub fn run_kill_resume(
     }
     // Never end the experiment mid-scenario: the point is resuming a
     // live one.
-    config.server.target_fitness = f64::MAX;
+    config.problem.target_fitness = f64::MAX;
     let mut backend_config = config.backend_config();
     backend_config.migration_interval = Duration::from_secs(3600);
 
@@ -469,6 +478,7 @@ pub fn run_kill_resume(
         .map(|i| {
             ClientProcess::spawn(
                 Some(addr),
+                &config.problem,
                 config.mode,
                 config.engine,
                 config.base_pop,
@@ -612,6 +622,83 @@ mod tests {
     }
 
     #[test]
+    fn swarm_solves_real_valued_problem() {
+        // The paper's floating-point family at swarm scale: real-coded
+        // volunteers drive a sphere experiment (dim 6, cost <= 0.05) to
+        // a server-confirmed solution.
+        let report = run_swarm(SwarmConfig {
+            n_clients: 2,
+            problem: crate::genome::ProblemSpec::sphere(6, 0.05),
+            target_solutions: 1,
+            timeout: Duration::from_secs(120),
+            seed: 23,
+            ..Default::default()
+        })
+        .unwrap();
+        assert!(report.solutions >= 1, "no real solution: {report:?}");
+        assert!(report.total_requests > 0);
+        assert!(report.total_evaluations() > 0);
+    }
+
+    #[test]
+    fn federated_swarm_converges_on_real_valued_winner() {
+        // The acceptance scenario at test scale (`nodio swarm --problem
+        // sphere --dim 6 --backends 2`): every federated backend must
+        // observe the one real-valued winner — termination and the
+        // winning gene vector propagate over the TCP gossip links.
+        let report = run_federated_swarm(
+            SwarmConfig {
+                n_clients: 2,
+                problem: crate::genome::ProblemSpec::sphere(6, 0.05),
+                target_solutions: 1,
+                timeout: Duration::from_secs(120),
+                seed: 29,
+                gossip_every: Duration::from_millis(50),
+                ..Default::default()
+            },
+            2,
+        )
+        .unwrap();
+        assert_eq!(report.backends, 2);
+        assert!(
+            report.per_backend_completed.iter().all(|&c| c >= 1),
+            "real federation did not converge: {report:?}"
+        );
+        assert!(report.solutions >= 1);
+    }
+
+    #[test]
+    fn recovery_real_swarm_kill_and_resume() {
+        // Kill+resume of a real-valued experiment: the replayed pool is
+        // identical (same probe on both sides of the kill) — WAL v3
+        // `genes` records replay bit-exactly through the sharded path.
+        let dir = std::env::temp_dir().join(format!(
+            "nodio-real-resume-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let (before, after) = run_kill_resume(
+            SwarmConfig {
+                n_clients: 2,
+                shards: 2,
+                seed: 31,
+                problem: crate::genome::ProblemSpec::sphere(8, 1e-6),
+                persist: Some(crate::coordinator::PersistConfig {
+                    snapshot_every: 16,
+                    ..crate::coordinator::PersistConfig::new(&dir)
+                }),
+                ..Default::default()
+            },
+            Duration::from_secs(3),
+        )
+        .unwrap();
+        assert!(before.puts > 0, "real swarm produced no PUTs: {before:?}");
+        assert!(before.pool_size > 0, "{before:?}");
+        assert_eq!(before, after);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
     fn churn_spawns_and_retires_clients() {
         let report = run_swarm(SwarmConfig {
             n_clients: 1,
@@ -645,6 +732,7 @@ pub fn run_swarm_trace(
     time_scale: f64,
     server: PoolServerConfig,
 ) -> Result<SwarmReport> {
+    let problem = server.problem.clone();
     let handle = PoolServer::spawn("127.0.0.1:0", server)
         .map_err(|e| anyhow!("pool server: {e}"))?;
     let addr = handle.addr;
@@ -684,6 +772,7 @@ pub fn run_swarm_trace(
                 };
                 slot.proc_ = Some(ClientProcess::spawn(
                     Some(addr),
+                    &problem,
                     mode,
                     engine,
                     512,
@@ -805,7 +894,7 @@ mod trace_tests {
             Duration::from_secs(30),
             1.0,
             PoolServerConfig {
-                target_fitness: 1e18, // never solved
+                problem: ProblemSpec::trap().with_target(1e18), // unsolved
                 ..Default::default()
             },
         )

@@ -89,6 +89,7 @@ fn two_native_clients_solve_cooperatively() {
         .map(|i| {
             ClientProcess::spawn(
                 Some(handle.addr),
+                &nodio::genome::ProblemSpec::trap(),
                 WorkerMode::W2,
                 EngineChoice::Native,
                 256,
@@ -225,7 +226,7 @@ fn sabotage_rejection_end_to_end() {
     let handle = PoolServer::spawn(
         "127.0.0.1:0",
         PoolServerConfig {
-            target_fitness: 1e9,
+            problem: nodio::genome::ProblemSpec::trap().with_target(1e9),
             ..Default::default()
         },
     )
@@ -255,7 +256,7 @@ fn sixteen_clients_no_lost_requests() {
     let handle = PoolServer::spawn(
         "127.0.0.1:0",
         PoolServerConfig {
-            target_fitness: 1e18,
+            problem: nodio::genome::ProblemSpec::trap().with_target(1e18),
             ..Default::default()
         },
     )

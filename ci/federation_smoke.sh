@@ -76,9 +76,13 @@ put() { # put <peer-index> <chromosome> <fitness>
 
 echo "== federation smoke: 3-process gossip ring on 127.0.0.1:$BASE-$((BASE+2)) =="
 
+# /readyz flips to "ready" only once WAL replay is done, every shard
+# serves, and the gossip acceptor is listening — a real readiness gate,
+# not a banner probe. (The anchored pattern rejects the 503 "not ready"
+# body, which nodio-http prints before failing.)
 for i in 0 1 2; do launch_peer "$i"; done
 for i in 0 1 2; do
-    wait_for "127.0.0.1:$((BASE + i))/" '"name":"nodio"' "peer $i serving"
+    wait_for "127.0.0.1:$((BASE + i))/readyz" '^ready$' "peer $i ready"
 done
 echo "all 3 peers up"
 
@@ -104,7 +108,7 @@ echo "peer 2 killed"
 # the killed peer's accepted links); it still rejoins the federation
 # through its own outbound dial to peer 0, and links are bidirectional.
 launch_peer 2 $((GBASE + 3))
-wait_for "127.0.0.1:$((BASE + 2))/" '"name":"nodio"' "peer 2 back up"
+wait_for "127.0.0.1:$((BASE + 2))/readyz" '^ready$' "peer 2 back up"
 # The restarted (stateless: --no-persist) peer must re-learn the
 # federation's best purely through re-gossip from its reconnected links.
 wait_for "127.0.0.1:$((BASE + 2))/experiment/state" \

@@ -1,0 +1,148 @@
+//! Observability quickstart: boot a pool server in-process, drive it
+//! with real volunteer clients until an experiment solves, then walk
+//! the whole telemetry surface — health probes, the Prometheus
+//! exposition (parsed with the in-repo checker, no dependencies), and
+//! the `/debug/trace` flight recorder.
+//!
+//! ```text
+//! cargo run --release --example telemetry_scrape
+//! ```
+//!
+//! The same surface is reachable from outside any `nodio server` or
+//! `nodio swarm --addr …` process: see the ROADMAP "Observability"
+//! section and `nodio top` / `nodio promcheck`.
+
+use std::time::{Duration, Instant};
+
+use nodio::client::{ClientProcess, EngineChoice, WorkerMode};
+use nodio::coordinator::telemetry::{
+    check_exposition, parse_exposition, quantile_from_buckets,
+};
+use nodio::coordinator::{PoolServer, PoolServerConfig, TelemetrySettings};
+use nodio::genome::ProblemSpec;
+use nodio::http::{HttpClient, Method, Request};
+
+fn main() -> anyhow::Result<()> {
+    // --- 1. A server with the flight recorder on ------------------------
+    // `--trace-buffer 256 --slow-ms 1` in CLI terms: keep the last 256
+    // structured events and trace any dispatch at or over 1 ms.
+    let handle = PoolServer::spawn(
+        "127.0.0.1:0",
+        PoolServerConfig {
+            telemetry: TelemetrySettings { trace_buffer: 256, slow_ms: 1 },
+            ..Default::default()
+        },
+    )?;
+    let addr = handle.addr;
+    let mut probe = HttpClient::connect(addr)?;
+
+    let get = |c: &mut HttpClient, path: &str| {
+        c.send(&Request::new(Method::Get, path))
+    };
+    println!(
+        "GET /healthz -> {}",
+        String::from_utf8_lossy(&get(&mut probe, "/healthz")?.body).trim()
+    );
+    println!(
+        "GET /readyz  -> {}",
+        String::from_utf8_lossy(&get(&mut probe, "/readyz")?.body).trim()
+    );
+
+    // --- 2. Real traffic: two W^2 volunteers solve the trap -------------
+    let problem = ProblemSpec::trap();
+    let clients: Vec<ClientProcess> = (0..2)
+        .map(|i| {
+            ClientProcess::spawn(
+                Some(addr),
+                &problem,
+                WorkerMode::W2,
+                EngineChoice::Native,
+                256,
+                0xC0FFEE + i,
+                &format!("scrape-demo-{i}"),
+                u64::MAX,
+                1.0,
+            )
+        })
+        .collect();
+    let t0 = Instant::now();
+    loop {
+        std::thread::sleep(Duration::from_millis(50));
+        let state = get(&mut probe, "/experiment/state")?.json_body()?;
+        if state.get_u64("completed").unwrap_or(0) > 0 {
+            break;
+        }
+        if t0.elapsed() > Duration::from_secs(120) {
+            anyhow::bail!("no solution within 120s");
+        }
+    }
+    println!("solved after {:.1?}", t0.elapsed());
+    for c in clients {
+        c.shutdown();
+    }
+
+    // --- 3. The Prometheus exposition -----------------------------------
+    let scrape = get(&mut probe, "/metrics/prom")?;
+    let text = String::from_utf8(scrape.body)?;
+    check_exposition(&text).map_err(|e| anyhow::anyhow!(e))?;
+    let samples = parse_exposition(&text).map_err(|e| anyhow::anyhow!(e))?;
+    println!(
+        "scrape ok: {} samples, {} bytes",
+        samples.len(),
+        text.len()
+    );
+
+    let sum = |name: &str| -> f64 {
+        samples.iter().filter(|s| s.name == name).map(|s| s.value).sum()
+    };
+    println!("requests served : {}", sum("nodio_requests_total") as u64);
+    println!("slow requests   : {}", sum("nodio_slow_requests_total") as u64);
+
+    // Latency quantiles from the merged per-route histogram buckets.
+    let mut buckets: Vec<(f64, f64)> = Vec::new();
+    for s in samples
+        .iter()
+        .filter(|s| s.name == "nodio_request_duration_seconds_bucket")
+    {
+        let le = match s.label("le") {
+            Some("+Inf") => f64::INFINITY,
+            Some(v) => v.parse().unwrap_or(f64::INFINITY),
+            None => continue,
+        };
+        match buckets.iter_mut().find(|(l, _)| *l == le) {
+            Some((_, count)) => *count += s.value,
+            None => buckets.push((le, s.value)),
+        }
+    }
+    buckets.sort_by(|a, b| a.0.total_cmp(&b.0));
+    println!(
+        "request latency : p50 <= {:.6}s, p99 <= {:.6}s",
+        quantile_from_buckets(&buckets, 0.5),
+        quantile_from_buckets(&buckets, 0.99),
+    );
+
+    // --- 4. The flight recorder ------------------------------------------
+    let trace = get(&mut probe, "/debug/trace")?.json_body()?;
+    let events = trace
+        .get("events")
+        .and_then(|e| e.as_arr())
+        .map(<[_]>::to_vec)
+        .unwrap_or_default();
+    println!(
+        "trace ring: {} events (capacity {})",
+        trace.get_u64("total").unwrap_or(0),
+        trace.get_u64("capacity").unwrap_or(0),
+    );
+    for e in events.iter().rev().take(8) {
+        println!(
+            "  [{}] shard {} {}",
+            e.get_u64("seq").unwrap_or(0),
+            e.get_u64("shard").unwrap_or(0),
+            e.get_str("kind").unwrap_or("?"),
+        );
+    }
+
+    drop(probe);
+    handle.stop();
+    Ok(())
+}

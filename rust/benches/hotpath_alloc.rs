@@ -15,6 +15,12 @@
 //!   (best-of-3 per phase), so the gated ratio is self-calibrating and a
 //!   transient CPU stall cannot silently skew it.
 //!
+//! Every measured fast-path request also records into a live telemetry
+//! registry (latency histogram + slow-request check), exactly as the
+//! event loop's `ConnDriver` does — the gates below certify the hot
+//! path with the metric subsystem enabled, not an instrumentation-free
+//! build.
+//!
 //! Gates (process exits 1 on violation — CI job `bench-smoke`):
 //! * steady-state cached `GET /experiment/random` must do **0
 //!   allocations per request**;
@@ -36,6 +42,7 @@ use std::time::{Duration, Instant};
 use nodio::bench::{write_json_summary, Table};
 use nodio::coordinator::cluster::{ClusterConfig, ShardedPoolServer};
 use nodio::coordinator::routes::{build_router, PoolState};
+use nodio::coordinator::telemetry::{route_class, Telemetry, TelemetrySettings};
 use nodio::coordinator::PoolServerConfig;
 use nodio::genome::ProblemSpec;
 use nodio::http::{HttpClient, Method, Request, Response, Router, Service};
@@ -273,6 +280,16 @@ fn main() {
     };
     let mut out: Vec<u8> = Vec::with_capacity(64 * 1024);
 
+    // Live telemetry, exactly as `ConnDriver` records it: every measured
+    // fast-path request below pays for a timestamp pair and a latency-
+    // histogram record (default registry: 256-slot trace ring, 500 ms
+    // slow threshold) — the allocation gates certify the hot path WITH
+    // the metric subsystem enabled.
+    let telemetry = Telemetry::new(1, &TelemetrySettings::default());
+    let recorder = telemetry.driver(0);
+    let get_class = route_class(Method::Get, "/experiment/random");
+    let put_class = route_class(Method::Put, "/experiment/chromosome");
+
     // ==================================================================
     // Phase A — allocation gates (deterministic: the GET phase runs on a
     // single-entry pool so every request hits the same warmed cache slot,
@@ -287,7 +304,9 @@ fn main() {
         out.clear();
     }
     let (t_get_a, a_get, b_get) = measured(n, || {
+        let t = Instant::now();
         router.handle_into(&get_req, true, &mut out);
+        recorder.record_request(get_class, t.elapsed());
         out.clear();
     });
     let get_allocs_per_req = a_get as f64 / n as f64;
@@ -297,7 +316,9 @@ fn main() {
         out.clear();
     }
     let (t_put_a, a_put, b_put) = measured(n, || {
+        let t = Instant::now();
         router.handle_into(&put_req, true, &mut out);
+        recorder.record_request(put_class, t.elapsed());
         out.clear();
     });
     let put_allocs_per_req = a_put as f64 / n as f64;
@@ -323,7 +344,9 @@ fn main() {
         out.clear();
     }
     let (_t, ra_get, rb_get) = measured(n, || {
+        let t = Instant::now();
         real_router.handle_into(&get_req, true, &mut out);
+        recorder.record_request(get_class, t.elapsed());
         out.clear();
     });
     let real_get_allocs_per_req = ra_get as f64 / n as f64;
@@ -332,7 +355,9 @@ fn main() {
         out.clear();
     }
     let (_t, ra_put, rb_put) = measured(n, || {
+        let t = Instant::now();
         real_router.handle_into(&real_put_req, true, &mut out);
+        recorder.record_request(put_class, t.elapsed());
         out.clear();
     });
     let real_put_allocs_per_req = ra_put as f64 / n as f64;
@@ -362,12 +387,16 @@ fn main() {
     let (mut la_get, mut la_put) = (0u64, 0u64);
     for _ in 0..3 {
         let (t, _, _) = measured(per_round, || {
+            let t = Instant::now();
             router.handle_into(&get_req, true, &mut out);
+            recorder.record_request(get_class, t.elapsed());
             out.clear();
         });
         t_get = t_get.min(t);
         let (t, _, _) = measured(per_round, || {
+            let t = Instant::now();
             router.handle_into(&put_req, true, &mut out);
+            recorder.record_request(put_class, t.elapsed());
             out.clear();
         });
         t_put = t_put.min(t);
@@ -517,6 +546,7 @@ fn main() {
         ("fast_req_per_s", fast_rps.into()),
         ("legacy_req_per_s", legacy_rps.into()),
         ("fast_over_legacy_ratio", ratio.into()),
+        ("telemetry_enabled", true.into()),
     ]));
 
     // -- gates ---------------------------------------------------------

@@ -12,6 +12,10 @@ use crate::client::volunteer::{ClientConfig, VolunteerClient};
 use crate::client::worker::WorkerMode;
 use crate::coordinator::cluster::{ClusterConfig, PoolBackend};
 use crate::coordinator::persistence::replay_dir;
+use crate::coordinator::telemetry::{
+    check_exposition, parse_exposition, quantile_from_buckets, Sample,
+    TelemetrySettings,
+};
 use crate::coordinator::{FederationConfig, PersistConfig, PoolServerConfig};
 use crate::genome::ProblemSpec;
 use crate::http::{HttpClient, Method, Request};
@@ -19,7 +23,7 @@ use crate::problems::F15Instance;
 use crate::runtime::{NativeEngine, XlaEngine};
 use crate::sim::{run_baseline, run_swarm, run_swarm_trace, ChurnConfig,
                  SwarmConfig, Trace, TraceModel};
-use crate::util::fmt_duration;
+use crate::util::{fmt_count, fmt_duration};
 
 pub const USAGE: &str = "\
 usage: nodio <command> [options]
@@ -30,6 +34,7 @@ commands:
             [--migration-k 3] [--data-dir nodio-data] [--no-persist]
             [--snapshot-every 1024] [--fsync] [--gossip-listen HOST:PORT]
             [--peer HOST:PORT ...] [--gossip-every 250] [--node NAME]
+            [--trace-buffer 256] [--slow-ms 500]
             run the pool server until killed; --shards N > 1 runs the
             multi-core sharded coordinator (N event-loop shards with
             round-robin connection routing and best-K pool gossip; --log
@@ -47,7 +52,11 @@ commands:
             --peer/--gossip-listen federate multiple server processes:
             they exchange best individuals and experiment terminations
             over TCP as CRC-framed WAL records (--peer is repeatable or
-            comma-separated; --gossip-every is the send period in ms)
+            comma-separated; --gossip-every is the send period in ms).
+            Observability: GET /metrics/prom (Prometheus text format),
+            /healthz, /readyz, /debug/trace (the flight recorder;
+            --trace-buffer sets its capacity in events, 0 disables;
+            requests at or over --slow-ms are counted and traced)
   http      <METHOD> <URL> [--body JSON] [--timeout-s 10]
             one-shot request against a pool server (GET 127.0.0.1:8080/
             stats, PUT with --body, ...); prints the response body,
@@ -64,16 +73,30 @@ commands:
             [--shards N] [--backends N] [--data-dir DIR] [--no-persist]
             [--snapshot-every 1024] [--peer HOST:PORT ...]
             [--gossip-listen HOST:PORT] [--gossip-every 250]
+            [--addr 127.0.0.1:0] [--trace-buffer 256] [--slow-ms 500]
             in-process server + simulated volunteers (experiment E6);
             --problem/--dim/--target select the experiment exactly like
             `nodio server` (e.g. --problem rastrigin --dim 64);
             --shards N > 1 drives the sharded pool coordinator;
             --backends N > 1 runs N federated backends linked over
             localhost TCP gossip and waits for every backend to agree
-            on the solutions (the multi-process scenario)
+            on the solutions (the multi-process scenario); --addr pins
+            the pool server's listen address (default: an ephemeral
+            port) so /metrics/prom, /debug/trace and `nodio top` can
+            watch the run from outside
   replay    <data-dir>
             reconstruct an experiment's history offline from its WAL +
             snapshot directory (no server needed)
+  top       <URL> [--interval-s 2] [--count 0]
+            live dashboard over GET /metrics/prom: request rate, p50/p99
+            service latency, open connections, pool gauges, WAL write
+            rate and per-peer federation link health, one line per poll
+            (--count 0 = run until killed; a bare host URL defaults to
+            /metrics/prom)
+  promcheck <URL>
+            fetch a Prometheus exposition and validate it against the
+            text-format grammar — the CI live-scrape gate; exits nonzero
+            on any violation (a bare host URL defaults to /metrics/prom)
   baseline  [--pop 512] [--runs 50] [--max-evals 5000000]
             [--engine native|xla|jnp] [--seed N]
             the Figure 3 desktop baseline (experiment E1)
@@ -101,8 +124,10 @@ pub fn dispatch(args: &Args) -> Result<()> {
     // Only `replay` (the data dir) and `trace` (the subaction) take bare
     // operands; a stray one anywhere else is a mistake (`nodio swarm 8`),
     // not something to silently ignore.
-    if !matches!(args.command.as_str(), "replay" | "trace" | "http")
-        && args.positional_count() > 0
+    if !matches!(
+        args.command.as_str(),
+        "replay" | "trace" | "http" | "top" | "promcheck"
+    ) && args.positional_count() > 0
     {
         bail!(
             "unexpected argument {:?} (did you mean a --option?)\n{USAGE}",
@@ -114,6 +139,8 @@ pub fn dispatch(args: &Args) -> Result<()> {
         "client" => cmd_client(args),
         "swarm" => cmd_swarm(args),
         "http" => cmd_http(args),
+        "top" => cmd_top(args),
+        "promcheck" => cmd_promcheck(args),
         "replay" => cmd_replay(args),
         "baseline" => cmd_baseline(args),
         "shootout" => cmd_shootout(args),
@@ -207,6 +234,20 @@ fn federation_args(args: &Args) -> Result<Option<FederationConfig>> {
     }))
 }
 
+/// Shared `--trace-buffer` / `--slow-ms` handling (the observability
+/// knobs of both server shapes).
+fn telemetry_args(args: &Args) -> Result<TelemetrySettings> {
+    let defaults = TelemetrySettings::default();
+    Ok(TelemetrySettings {
+        trace_buffer: args
+            .get_usize("trace-buffer", defaults.trace_buffer)
+            .map_err(|e| anyhow!(e))?,
+        slow_ms: args
+            .get_u64("slow-ms", defaults.slow_ms)
+            .map_err(|e| anyhow!(e))?,
+    })
+}
+
 fn cmd_server(args: &Args) -> Result<()> {
     let addr = args.get_or("addr", "127.0.0.1:8080").to_string();
     let shards = args.get_usize("shards", 1).map_err(|e| anyhow!(e))?;
@@ -216,6 +257,7 @@ fn cmd_server(args: &Args) -> Result<()> {
         problem,
         log_path: args.get("log").map(std::path::PathBuf::from),
         persist,
+        telemetry: telemetry_args(args)?,
         ..Default::default()
     };
     let cluster = ClusterConfig {
@@ -250,7 +292,8 @@ fn cmd_server(args: &Args) -> Result<()> {
     println!("routes: PUT /experiment/chromosome (object or batch array),");
     println!("        GET /experiment/random, GET /experiment/state,");
     println!("        GET /experiment/history, GET /stats, GET /metrics,");
-    println!("        POST /experiment/reset");
+    println!("        GET /metrics/prom, GET /healthz, GET /readyz,");
+    println!("        GET /debug/trace, POST /experiment/reset");
     if args.flag("no-persist") {
         println!("persistence: disabled (--no-persist)");
     } else {
@@ -277,11 +320,7 @@ fn cmd_http(args: &Args) -> Result<()> {
     let url = args.positional(1).ok_or_else(|| anyhow!("{USAGE_HTTP}"))?;
     let method = Method::parse(method_s.to_ascii_uppercase().as_str())
         .ok_or_else(|| anyhow!("unknown method {method_s}"))?;
-    let rest = url.strip_prefix("http://").unwrap_or(url);
-    let (host, path) = match rest.find('/') {
-        Some(i) => (&rest[..i], &rest[i..]),
-        None => (rest, "/"),
-    };
+    let (host, path) = split_url(url);
     let mut client = HttpClient::connect(host)
         .map_err(|e| anyhow!("connect {host}: {e}"))?;
     client.set_timeout(Duration::from_secs_f64(
@@ -300,6 +339,180 @@ fn cmd_http(args: &Args) -> Result<()> {
     if resp.status >= 400 {
         bail!("{url}: HTTP {}", resp.status);
     }
+    Ok(())
+}
+
+/// Split `http://HOST:PORT/path` into the connectable host and the
+/// request path (`/` when the URL has none).
+fn split_url(url: &str) -> (&str, &str) {
+    let rest = url.strip_prefix("http://").unwrap_or(url);
+    match rest.find('/') {
+        Some(i) => (&rest[..i], &rest[i..]),
+        None => (rest, "/"),
+    }
+}
+
+/// Resolve a `top`/`promcheck` operand: a bare host URL scrapes the
+/// default exposition path.
+fn scrape_target(url: &str) -> (&str, &str) {
+    let (host, path) = split_url(url);
+    (host, if path == "/" { "/metrics/prom" } else { path })
+}
+
+/// One-shot GET returning the body as text (non-200 is an error).
+fn fetch_text(host: &str, path: &str) -> Result<String> {
+    let mut client = HttpClient::connect(host)
+        .map_err(|e| anyhow!("connect {host}: {e}"))?;
+    client.set_timeout(Duration::from_secs(10));
+    let resp = client
+        .send(&Request::new(Method::Get, path))
+        .map_err(|e| anyhow!("GET {host}{path}: {e}"))?;
+    if resp.status != 200 {
+        bail!("GET {host}{path}: HTTP {}", resp.status);
+    }
+    Ok(String::from_utf8_lossy(&resp.body).into_owned())
+}
+
+fn sum_counter(samples: &[Sample], name: &str) -> f64 {
+    samples.iter().filter(|s| s.name == name).map(|s| s.value).sum()
+}
+
+fn gauge(samples: &[Sample], name: &str) -> f64 {
+    samples
+        .iter()
+        .find(|s| s.name == name)
+        .map(|s| s.value)
+        .unwrap_or(0.0)
+}
+
+/// Merge every `<name>_bucket` series into one cumulative `(le, count)`
+/// list, summing across label sets (routes), sorted by bound.
+fn merged_buckets(samples: &[Sample], name: &str) -> Vec<(f64, f64)> {
+    let bucket_name = format!("{name}_bucket");
+    let mut by_le: Vec<(f64, f64)> = Vec::new();
+    for s in samples.iter().filter(|s| s.name == bucket_name) {
+        let Some(le) = s.label("le").and_then(|v| match v {
+            "+Inf" => Some(f64::INFINITY),
+            v => v.parse().ok(),
+        }) else {
+            continue;
+        };
+        match by_le.iter_mut().find(|(l, _)| *l == le) {
+            Some((_, v)) => *v += s.value,
+            None => by_le.push((le, s.value)),
+        }
+    }
+    by_le.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    by_le
+}
+
+/// A histogram quantile as a display string; the top bucket is
+/// unbounded, so a rank landing there has no finite estimate.
+fn fmt_quantile(v: f64) -> String {
+    if v.is_finite() {
+        fmt_duration(Duration::from_secs_f64(v))
+    } else {
+        "inf".into()
+    }
+}
+
+/// `nodio top <url>` — poll the Prometheus exposition and print a
+/// one-line live summary per interval, using the same dependency-free
+/// HTTP client the volunteers run on.
+fn cmd_top(args: &Args) -> Result<()> {
+    let url = args.positional(0).ok_or_else(|| {
+        anyhow!("usage: nodio top <url> [--interval-s 2] [--count 0]")
+    })?;
+    let (host, path) = scrape_target(url);
+    let interval =
+        args.get_f64("interval-s", 2.0).map_err(|e| anyhow!(e))?;
+    if !interval.is_finite() || interval <= 0.0 {
+        bail!("--interval-s must be positive");
+    }
+    let count = args.get_u64("count", 0).map_err(|e| anyhow!(e))?;
+
+    let mut prev: Option<(std::time::Instant, Vec<Sample>)> = None;
+    let mut printed = 0u64;
+    loop {
+        let text = fetch_text(host, path)?;
+        let now = std::time::Instant::now();
+        let samples =
+            parse_exposition(&text).map_err(|e| anyhow!("{host}: {e}"))?;
+        match &prev {
+            None => println!(
+                "nodio top {host}{path}: {} shard(s), experiment {}, \
+                 pool {}/{}",
+                gauge(&samples, "nodio_shards") as u64,
+                gauge(&samples, "nodio_experiment") as u64,
+                gauge(&samples, "nodio_pool_entries") as u64,
+                gauge(&samples, "nodio_pool_capacity") as u64,
+            ),
+            Some((t0, base)) => {
+                let dt = now.duration_since(*t0).as_secs_f64().max(1e-9);
+                print_top_line(&samples, base, dt);
+                printed += 1;
+                if count > 0 && printed >= count {
+                    return Ok(());
+                }
+            }
+        }
+        prev = Some((now, samples));
+        std::thread::sleep(Duration::from_secs_f64(interval));
+    }
+}
+
+fn print_top_line(cur: &[Sample], prev: &[Sample], dt: f64) {
+    let delta = |name: &str| {
+        (sum_counter(cur, name) - sum_counter(prev, name)).max(0.0)
+    };
+    let lat = merged_buckets(cur, "nodio_request_duration_seconds");
+    let mut line = format!(
+        "req/s {:7.1}  p50 {:>7}  p99 {:>7}  conns {:3}  pool {:>5}  \
+         exp {}  wal {:>7}B/s",
+        delta("nodio_requests_total") / dt,
+        fmt_quantile(quantile_from_buckets(&lat, 0.5)),
+        fmt_quantile(quantile_from_buckets(&lat, 0.99)),
+        gauge(cur, "nodio_open_connections") as u64,
+        fmt_count(gauge(cur, "nodio_pool_entries") as u64),
+        gauge(cur, "nodio_experiment") as u64,
+        fmt_count((delta("nodio_wal_appended_bytes_total") / dt) as u64),
+    );
+    // Per-peer federation link health (present only when federated).
+    for s in cur.iter().filter(|s| s.name == "nodio_federation_link_up") {
+        let peer = s.label("peer").unwrap_or("?");
+        let lag = cur
+            .iter()
+            .find(|l| {
+                l.name == "nodio_federation_link_lag_records"
+                    && l.label("peer") == Some(peer)
+            })
+            .map(|l| l.value)
+            .unwrap_or(0.0);
+        line.push_str(&format!(
+            "  [{peer}{} lag {}]",
+            if s.value > 0.0 { "" } else { " DOWN" },
+            fmt_count(lag as u64),
+        ));
+    }
+    println!("{line}");
+}
+
+/// `nodio promcheck <url>` — fetch an exposition and run the
+/// text-format grammar checker over it (CI's live-scrape gate).
+fn cmd_promcheck(args: &Args) -> Result<()> {
+    let url = args
+        .positional(0)
+        .ok_or_else(|| anyhow!("usage: nodio promcheck <url>"))?;
+    let (host, path) = scrape_target(url);
+    let text = fetch_text(host, path)?;
+    check_exposition(&text).map_err(|e| anyhow!("{host}{path}: {e}"))?;
+    let samples =
+        parse_exposition(&text).map_err(|e| anyhow!("{host}{path}: {e}"))?;
+    println!(
+        "{host}{path}: exposition ok ({} samples, {} bytes)",
+        samples.len(),
+        text.len()
+    );
     Ok(())
 }
 
@@ -390,6 +603,7 @@ fn cmd_swarm(args: &Args) -> Result<()> {
     let churn_rate = args.get_f64("churn-rate", 0.0).map_err(|e| anyhow!(e))?;
     let backends = args.get_usize("backends", 1).map_err(|e| anyhow!(e))?;
     let config = SwarmConfig {
+        addr: args.get_or("addr", "127.0.0.1:0").to_string(),
         n_clients: args.get_usize("clients", 4).map_err(|e| anyhow!(e))?,
         problem: problem_args(args)?,
         shards: args.get_usize("shards", 1).map_err(|e| anyhow!(e))?,
@@ -414,6 +628,10 @@ fn cmd_swarm(args: &Args) -> Result<()> {
             args.get_f64("timeout-s", 60.0).map_err(|e| anyhow!(e))?,
         ),
         seed: args.get_u64("seed", 0xC0FFEE).map_err(|e| anyhow!(e))?,
+        server: PoolServerConfig {
+            telemetry: telemetry_args(args)?,
+            ..Default::default()
+        },
         churn: (churn_rate > 0.0).then(|| ChurnConfig {
             arrival_rate: churn_rate,
             mean_session_s: args.get_f64("session-s", 10.0).unwrap_or(10.0),
@@ -429,6 +647,12 @@ fn cmd_swarm(args: &Args) -> Result<()> {
             bail!(
                 "--backends builds its own gossip links; it cannot be \
                  combined with --peer/--gossip-listen"
+            );
+        }
+        if config.addr != "127.0.0.1:0" {
+            bail!(
+                "--addr applies to the single-backend swarm; --backends \
+                 binds its own ephemeral listeners"
             );
         }
         // The multi-process scenario: N federated in-process backends
@@ -477,6 +701,12 @@ fn cmd_swarm(args: &Args) -> Result<()> {
         config.target_solutions,
         config.shards.max(1)
     );
+    if config.addr != "127.0.0.1:0" {
+        println!(
+            "pool server on http://{} (scrape /metrics/prom, /debug/trace)",
+            config.addr
+        );
+    }
     let report = run_swarm(config)?;
     println!(
         "solutions={} elapsed={} first={} requests={} evals={}",

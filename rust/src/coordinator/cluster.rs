@@ -78,6 +78,7 @@ use super::routes::{
 };
 use super::security::{FitnessVerifier, RateLimiter, SaboteurLog};
 use super::server::{PoolServer, PoolServerConfig};
+use super::telemetry::{self, ServerGauges, Telemetry, TraceKind};
 use crate::eventloop::{Epoll, Event, Interest, Waker};
 use crate::genome::{ProblemSpec, Representation};
 use crate::http::server::{
@@ -469,6 +470,9 @@ struct ShardCfg {
     federation: Option<Arc<FederationHub>>,
     /// Cadence of this shard's outbound federation gossip.
     fed_gossip_interval: Duration,
+    /// The process-wide metric registry (per-shard slots + trace ring +
+    /// readiness); each shard records into its own slot.
+    telemetry: Arc<Telemetry>,
 }
 
 /// The request handler + partition state owned by one shard thread. Plain
@@ -519,6 +523,7 @@ struct ShardService {
     put_scratch: PutScratch,
     persist: Option<ShardPersistence>,
     federation: Option<Arc<FederationHub>>,
+    telemetry: Arc<Telemetry>,
     shared: Arc<ClusterShared>,
     slots: Arc<Vec<ShardSlot>>,
 }
@@ -534,6 +539,7 @@ impl ShardService {
             let dir = persistence::shard_dir(&pc.data_dir, cfg.id);
             match ShardPersistence::open(&dir, pc, &recovered) {
                 Ok(mut p) => {
+                    p.set_telemetry(cfg.telemetry.persist(cfg.id));
                     if !recovered.had_history() {
                         // First boot: WAL the epoch-0 start stamp so a
                         // restart reports true experiment age.
@@ -612,6 +618,7 @@ impl ShardService {
             put_scratch: PutScratch::new(),
             persist,
             federation: cfg.federation.clone(),
+            telemetry: cfg.telemetry.clone(),
             shared,
             slots,
         };
@@ -793,6 +800,14 @@ impl ShardService {
             self.slot()
                 .migrations_rx
                 .fetch_add(applied.len() as u64, Ordering::Relaxed);
+            self.telemetry.ring().push(
+                TraceKind::Migration,
+                self.id as u64,
+                self.local_experiment,
+                applied.len() as u64,
+                0,
+                "",
+            );
             self.publish_pool_len();
         }
     }
@@ -1091,8 +1106,26 @@ impl ShardService {
             Some(uuid.to_string()),
             Some(solution),
         );
+        if let Some(log) = &record {
+            self.telemetry.ring().push(
+                TraceKind::Solution,
+                self.id as u64,
+                log.id,
+                fitness.to_bits(),
+                0,
+                uuid,
+            );
+        }
         if record.is_some() {
             let to = self.local_experiment + 1;
+            self.telemetry.ring().push(
+                TraceKind::EpochStart,
+                self.id as u64,
+                to,
+                0,
+                0,
+                "",
+            );
             self.advance_epoch_locally(to, record.as_ref());
             for (i, slot) in self.slots.iter().enumerate() {
                 if i != self.id {
@@ -1370,6 +1403,28 @@ impl ShardService {
         ]))
     }
 
+    /// The Prometheus text exposition. The renderer is shared with the
+    /// single-loop server, so a 1-shard cluster scrape is byte-identical
+    /// to the single loop's for equal state; per-link federation gauges
+    /// are appended only when a federation hub is running.
+    fn prom(&self) -> Response {
+        let gauges = ServerGauges {
+            experiment: self.shared.experiment.load(Ordering::Acquire),
+            best_fitness: self.shared.best_fitness(),
+            pool_entries: self.total_pool_len(),
+            pool_capacity: (self.pool.capacity() * self.slots.len())
+                as u64,
+            completed: self.shared.completed_count(),
+            shards: self.slots.len() as u64,
+        };
+        let mut body = Vec::new();
+        self.telemetry.render_prometheus(&mut body, &gauges);
+        if let Some(hub) = &self.federation {
+            hub.render_prom(&mut body);
+        }
+        telemetry::prom_response(body)
+    }
+
     fn reset(&mut self) -> Response {
         let best = self.shared.best_fitness();
         let recorded = if best.is_finite() { best } else { f64::NEG_INFINITY };
@@ -1380,6 +1435,14 @@ impl ShardService {
             None,
         ) {
             let to = self.local_experiment + 1;
+            self.telemetry.ring().push(
+                TraceKind::EpochStart,
+                self.id as u64,
+                to,
+                0,
+                0,
+                "",
+            );
             self.advance_epoch_locally(to, Some(&log));
             // A manual reset propagates across the federation like a
             // solution: peers fast-forward to the new epoch.
@@ -1434,12 +1497,21 @@ impl Service for ShardService {
             (Method::Get, "/experiment/history") => self.history(),
             (Method::Get, "/stats") => self.stats_route(),
             (Method::Get, "/metrics") => self.metrics(),
+            (Method::Get, "/metrics/prom") => self.prom(),
+            (Method::Get, "/healthz") => telemetry::healthz_response(),
+            (Method::Get, "/readyz") => {
+                telemetry::readyz_response(self.telemetry.readiness())
+            }
+            (Method::Get, "/debug/trace") => {
+                Response::json(&self.telemetry.ring().dump_json())
+            }
             (Method::Post, "/experiment/reset") => self.reset(),
             (
                 _,
                 "/" | "/experiment/chromosome" | "/experiment/random"
                 | "/experiment/state" | "/experiment/history" | "/stats"
-                | "/metrics" | "/experiment/reset",
+                | "/metrics" | "/metrics/prom" | "/healthz" | "/readyz"
+                | "/debug/trace" | "/experiment/reset",
             ) => Response::new(405).with_text("method not allowed"),
             _ => Response::not_found(),
         }
@@ -1529,6 +1601,9 @@ fn shard_loop(
         cfg.recovered.take().unwrap_or_else(RecoveredShard::fresh);
     let mut service =
         ShardService::new(&cfg, recovered, shared.clone(), slots.clone());
+    // State is restored and the loop is about to serve: this shard
+    // counts toward `/readyz`.
+    service.telemetry.readiness().mark_shard_serving();
     let mut events: Vec<Event> = Vec::new();
     let mut last_gossip = Instant::now();
     let mut last_fed_gossip = Instant::now();
@@ -1689,6 +1764,10 @@ impl ShardedPoolServer {
             completed,
         ));
         let stats = Arc::new(ServerStats::default());
+        let telemetry =
+            Arc::new(Telemetry::new(n, &config.base.telemetry));
+        // Recovery (above) ran to completion on this thread.
+        telemetry.readiness().mark_replayed();
 
         let mut slots = Vec::with_capacity(n);
         let mut shard_wakers = Vec::with_capacity(n);
@@ -1706,7 +1785,9 @@ impl ShardedPoolServer {
         let mut fed_thread = None;
         let hub = match &config.federation {
             Some(fc) => {
-                let hub = Arc::new(FederationHub::new(fc)?);
+                let mut hub = FederationHub::new(fc)?;
+                hub.attach_ring(telemetry.ring().clone());
+                let hub = Arc::new(hub);
                 let (bound, thread) = federation::spawn_driver(
                     fc.clone(),
                     config.base.problem.repr,
@@ -1720,6 +1801,9 @@ impl ShardedPoolServer {
             }
             None => None,
         };
+        // Gossip is ready once the driver is bound and running (or when
+        // no federation is configured at all).
+        telemetry.readiness().mark_gossip_ready();
         let fed_gossip_interval = config
             .federation
             .as_ref()
@@ -1729,9 +1813,11 @@ impl ShardedPoolServer {
         let per_shard_capacity = (config.base.pool_capacity / n).max(1);
         let mut threads = Vec::with_capacity(n + 2);
         for (id, waker) in shard_wakers.into_iter().enumerate() {
+            let mut http = config.base.http.clone();
+            http.telemetry = Some(telemetry.driver(id));
             let cfg = ShardCfg {
                 id,
-                http: config.base.http.clone(),
+                http,
                 problem: config.base.problem.clone(),
                 pool_capacity: per_shard_capacity,
                 seed: config.base.seed,
@@ -1751,6 +1837,7 @@ impl ShardedPoolServer {
                 )),
                 federation: hub.clone(),
                 fed_gossip_interval,
+                telemetry: telemetry.clone(),
             };
             let shared = shared.clone();
             let slots = slots.clone();
@@ -1793,6 +1880,7 @@ impl ShardedPoolServer {
             slots,
             stats,
             hub,
+            telemetry,
             threads,
         })
     }
@@ -1863,12 +1951,18 @@ pub struct ClusterHandle {
     slots: Arc<Vec<ShardSlot>>,
     stats: Arc<ServerStats>,
     hub: Option<Arc<FederationHub>>,
+    telemetry: Arc<Telemetry>,
     threads: Vec<JoinHandle<()>>,
 }
 
 impl ClusterHandle {
     pub fn url(&self) -> String {
         format!("http://{}", self.addr)
+    }
+
+    /// The cluster's metric registry (readiness, trace ring, slots).
+    pub fn telemetry(&self) -> &Arc<Telemetry> {
+        &self.telemetry
     }
 
     pub fn shards(&self) -> usize {
@@ -1967,6 +2061,103 @@ mod tests {
         for v in values {
             assert_eq!(key_to_f64(ordered_key(v)), v);
         }
+    }
+
+    /// The exposition renderer is shared between both server shapes, so
+    /// a 1-shard cluster and the single-loop router must produce
+    /// byte-identical `/metrics/prom` bodies for identical traffic.
+    /// Both sides are driven directly through their handlers (no
+    /// sockets, no `ConnDriver`), so the request-latency histograms are
+    /// deterministically zero on both and every remaining sample is
+    /// pure state.
+    #[test]
+    fn one_shard_scrape_matches_single_loop_byte_for_byte() {
+        use crate::coordinator::routes::{build_router, PoolState};
+        use crate::coordinator::telemetry::{
+            check_exposition, TelemetrySettings,
+        };
+        use std::cell::RefCell;
+        use std::rc::Rc;
+
+        let problem = ProblemSpec::bits(8, 8.0);
+        let capacity = 64;
+
+        // The single-loop shape: real router over shared state.
+        let state = Rc::new(RefCell::new(PoolState::new(
+            capacity,
+            &problem,
+            EventLog::disabled(),
+            7,
+        )));
+        let mut router = build_router(state);
+
+        // The cluster shape: one directly-driven shard service (the
+        // same code its event loop dispatches into).
+        let telemetry =
+            Arc::new(Telemetry::new(1, &TelemetrySettings::default()));
+        let shared = Arc::new(ClusterShared::recovered(
+            problem.target_fitness,
+            0,
+            0,
+            0,
+            f64::NEG_INFINITY,
+            0,
+            Vec::new(),
+        ));
+        let slots = Arc::new(vec![ShardSlot::new(Waker::new().unwrap())]);
+        let cfg = ShardCfg {
+            id: 0,
+            http: ServerConfig::default(),
+            problem: problem.clone(),
+            pool_capacity: capacity,
+            seed: 7,
+            log_path: None,
+            migration_interval: Duration::from_millis(20),
+            migration_k: 2,
+            persist: None,
+            verify_fitness: false,
+            rate_limit: None,
+            recovered: None,
+            federation: None,
+            fed_gossip_interval: Duration::from_millis(20),
+            telemetry,
+        };
+        let mut shard = ShardService::new(
+            &cfg,
+            RecoveredShard::fresh(),
+            shared,
+            slots,
+        );
+
+        // Identical traffic: a surviving PUT, then a solution (closes
+        // experiment 0, resets the live gauges, and records the same
+        // Solution + EpochStart trace events on both sides).
+        for req in
+            [put_req("01010101", 4.0, "a"), put_req("11111111", 8.0, "w")]
+        {
+            assert_eq!(
+                router.handle(&req).status,
+                shard.handle(&req).status
+            );
+        }
+
+        let scrape = Request::new(Method::Get, "/metrics/prom");
+        let single = router.handle(&scrape);
+        let cluster = shard.handle(&scrape);
+        assert_eq!(single.status, 200);
+        assert_eq!(cluster.status, 200);
+        let text = String::from_utf8(single.body.clone()).unwrap();
+        check_exposition(&text).unwrap_or_else(|e| {
+            panic!("checker rejected scrape: {e}\n{text}")
+        });
+        assert!(text.contains("nodio_experiment 1"), "{text}");
+        assert_eq!(
+            single.body,
+            cluster.body,
+            "shapes diverged:\n--- single ---\n{}\n--- cluster ---\n{}",
+            text,
+            String::from_utf8_lossy(&cluster.body),
+        );
     }
 
     #[test]

@@ -65,6 +65,10 @@ use super::experiment::ExperimentLog;
 use super::persistence::snapshot::entry_from_json;
 use super::persistence::wal::{FrameReader, FrameWriter};
 use super::pool::PoolEntry;
+use super::telemetry::{
+    write_help_type, write_sample_f64, write_sample_u64, LinkTelemetry,
+    TraceKind, TraceRing,
+};
 use crate::eventloop::{Epoll, Event, Interest, Waker};
 use crate::genome::Representation;
 use crate::json::Json;
@@ -151,10 +155,24 @@ pub(crate) struct FederationHub {
     pub(crate) stats: Arc<FederationStats>,
     node: String,
     peers: usize,
+    /// Fixed per-dial-target link gauges plus one trailing aggregate
+    /// slot for accepted (inbound) links — the registry stays fixed at
+    /// startup even though accepted links come and go. Written by the
+    /// driver thread, read by scrapes.
+    pub(crate) link_telemetry: Vec<LinkTelemetry>,
+    /// Records handed to `broadcast` so far: the baseline each link's
+    /// `sent` counter lags behind while the link is down.
+    pub(crate) broadcast: AtomicU64,
+    /// Trace ring for link up/down events (attached by the cluster
+    /// spawn; `None` in socket-free tests).
+    ring: Option<Arc<TraceRing>>,
 }
 
 impl FederationHub {
     pub(crate) fn new(cfg: &FederationConfig) -> io::Result<FederationHub> {
+        let mut link_telemetry: Vec<LinkTelemetry> =
+            cfg.peers.iter().map(|p| LinkTelemetry::new(p)).collect();
+        link_telemetry.push(LinkTelemetry::new("inbound"));
         Ok(FederationHub {
             outbox: Handoff::new(),
             waker: Waker::new()?,
@@ -164,7 +182,135 @@ impl FederationHub {
                 .clone()
                 .unwrap_or_else(|| format!("pid-{}", std::process::id())),
             peers: cfg.peers.len(),
+            link_telemetry,
+            broadcast: AtomicU64::new(0),
+            ring: None,
         })
+    }
+
+    /// Wire the cluster's trace ring in before the driver starts (link
+    /// up/down events land there).
+    pub(crate) fn attach_ring(&mut self, ring: Arc<TraceRing>) {
+        self.ring = Some(ring);
+    }
+
+    /// The slot a link records into: its dial target's, or the trailing
+    /// inbound aggregate for accepted links.
+    fn link_slot(&self, target: Option<usize>) -> &LinkTelemetry {
+        match target {
+            Some(i) => &self.link_telemetry[i],
+            None => self.link_telemetry.last().expect("inbound slot"),
+        }
+    }
+
+    fn trace_link(&self, kind: TraceKind, target: Option<usize>) {
+        if let Some(ring) = &self.ring {
+            ring.push(kind, 0, 0, 0, 0, &self.link_slot(target).peer);
+        }
+    }
+
+    /// Append the per-link gauges to a Prometheus exposition (the
+    /// cluster's `/metrics/prom` calls this after the shared renderer).
+    pub(crate) fn render_prom(&self, out: &mut Vec<u8>) {
+        let broadcast = self.broadcast.load(Ordering::Relaxed);
+        write_help_type(
+            out,
+            "nodio_federation_link_up",
+            "Established gossip links (1 per dial target; the inbound \
+             slot counts accepted links).",
+            "gauge",
+        );
+        for l in &self.link_telemetry {
+            write_sample_u64(
+                out,
+                "nodio_federation_link_up",
+                &[("peer", l.peer.as_str())],
+                l.up.load(Ordering::Relaxed),
+            );
+        }
+        write_help_type(
+            out,
+            "nodio_federation_link_sent_total",
+            "Wire records written to this link.",
+            "counter",
+        );
+        for l in &self.link_telemetry {
+            write_sample_u64(
+                out,
+                "nodio_federation_link_sent_total",
+                &[("peer", l.peer.as_str())],
+                l.sent.load(Ordering::Relaxed),
+            );
+        }
+        write_help_type(
+            out,
+            "nodio_federation_link_lag_records",
+            "Broadcast records this link has not been sent (grows while \
+             the link is down).",
+            "gauge",
+        );
+        for l in &self.link_telemetry {
+            write_sample_u64(
+                out,
+                "nodio_federation_link_lag_records",
+                &[("peer", l.peer.as_str())],
+                broadcast.saturating_sub(l.sent.load(Ordering::Relaxed)),
+            );
+        }
+        write_help_type(
+            out,
+            "nodio_federation_link_last_rx_seq",
+            "Highest wire seq received from this peer.",
+            "gauge",
+        );
+        for l in &self.link_telemetry {
+            write_sample_u64(
+                out,
+                "nodio_federation_link_last_rx_seq",
+                &[("peer", l.peer.as_str())],
+                l.last_rx_seq.load(Ordering::Relaxed),
+            );
+        }
+        write_help_type(
+            out,
+            "nodio_federation_link_last_seen_seconds",
+            "Seconds since the last inbound record (0 = never).",
+            "gauge",
+        );
+        for l in &self.link_telemetry {
+            write_sample_f64(
+                out,
+                "nodio_federation_link_last_seen_seconds",
+                &[("peer", l.peer.as_str())],
+                l.last_seen_age_s(),
+            );
+        }
+        write_help_type(
+            out,
+            "nodio_federation_link_reconnects_total",
+            "Times this link dropped and re-entered dial backoff.",
+            "counter",
+        );
+        for l in &self.link_telemetry {
+            write_sample_u64(
+                out,
+                "nodio_federation_link_reconnects_total",
+                &[("peer", l.peer.as_str())],
+                l.reconnects.load(Ordering::Relaxed),
+            );
+        }
+        write_help_type(
+            out,
+            "nodio_federation_frames_dropped_total",
+            "Inbound frames dropped for framing/CRC failure.",
+            "counter",
+        );
+        write_sample_u64(
+            out,
+            "nodio_federation_frames_dropped_total",
+            &[],
+            self.stats.frames_dropped.load(Ordering::Relaxed),
+        );
     }
 
     /// Queue an outbound record and wake the driver.
@@ -294,6 +440,9 @@ pub(crate) struct FederationCore {
     repr: Representation,
     /// Round-robin target for inbound batches (spread across shards).
     next_shard: usize,
+    /// Trace ring for fast-forward events (attached by the driver;
+    /// `None` in socket-free tests).
+    ring: Option<Arc<TraceRing>>,
 }
 
 impl FederationCore {
@@ -303,7 +452,18 @@ impl FederationCore {
         stats: Arc<FederationStats>,
         repr: Representation,
     ) -> FederationCore {
-        FederationCore { shared, slots, stats, repr, next_shard: 0 }
+        FederationCore {
+            shared,
+            slots,
+            stats,
+            repr,
+            next_shard: 0,
+            ring: None,
+        }
+    }
+
+    pub(crate) fn set_ring(&mut self, ring: Arc<TraceRing>) {
+        self.ring = Some(ring);
     }
 
     fn shutdown(&self) -> bool {
@@ -483,8 +643,12 @@ impl FederationCore {
     }
 
     fn fast_forward(&self, to: u64, log: Option<ExperimentLog>, ms: u64) {
+        let from = self.shared.experiment.load(Ordering::Acquire);
         if self.shared.fast_forward(to, log, ms) {
             self.stats.fast_forwards.fetch_add(1, Ordering::Relaxed);
+            if let Some(ring) = &self.ring {
+                ring.push(TraceKind::FastForward, 0, from, to, 0, "");
+            }
             // Shards clear their dead-epoch partitions now, not at the
             // next tick.
             for slot in self.slots.iter() {
@@ -677,6 +841,10 @@ impl Driver {
             return false;
         }
         update_interest(&self.epoll, token, &mut link);
+        let slot = self.hub.link_slot(target);
+        slot.up.fetch_add(1, Ordering::Relaxed);
+        slot.sent.fetch_add(1, Ordering::Relaxed); // the hello
+        self.hub.trace_link(TraceKind::LinkUp, target);
         self.links.insert(token, link);
         true
     }
@@ -687,7 +855,9 @@ impl Driver {
         if let Some(link) = self.links.get_mut(&token) {
             if ev.readable && !drop_link {
                 drop_link |= read_link(link, &mut self.read_buf);
+                let mut received = false;
                 while let Some(rec) = link.reader.next_record() {
+                    received = true;
                     match self
                         .core
                         .apply_record(&mut link.last_rx_seq, &rec)
@@ -698,6 +868,10 @@ impl Driver {
                             self.hub
                                 .stats
                                 .records_tx
+                                .fetch_add(1, Ordering::Relaxed);
+                            self.hub
+                                .link_slot(link.target)
+                                .sent
                                 .fetch_add(1, Ordering::Relaxed);
                         }
                         Applied::Refuse(reason) => {
@@ -725,6 +899,13 @@ impl Driver {
                     );
                     link.dropped_seen = dropped;
                 }
+                if received {
+                    let slot = self.hub.link_slot(link.target);
+                    slot.last_rx_seq
+                        .store(link.last_rx_seq, Ordering::Relaxed);
+                    slot.last_seen_ms
+                        .store(crate::util::unix_ms(), Ordering::Relaxed);
+                }
             }
             if !drop_link && (ev.writable || link.pending() > 0) {
                 drop_link |= flush_link(link);
@@ -747,6 +928,16 @@ impl Driver {
     fn drop_link_inner(&mut self, token: u64, refused: bool) {
         if let Some(link) = self.links.remove(&token) {
             self.epoll.remove(link.stream.as_raw_fd());
+            let slot = self.hub.link_slot(link.target);
+            let _ = slot.up.fetch_update(
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+                |v| Some(v.saturating_sub(1)),
+            );
+            if link.target.is_some() {
+                slot.reconnects.fetch_add(1, Ordering::Relaxed);
+            }
+            self.hub.trace_link(TraceKind::LinkDown, link.target);
             if let Some(i) = link.target {
                 let t = &mut self.targets[i];
                 t.connected = false;
@@ -773,6 +964,9 @@ impl Driver {
         if items.is_empty() {
             return;
         }
+        self.hub
+            .broadcast
+            .fetch_add(items.len() as u64, Ordering::Relaxed);
         let mut dead: Vec<u64> = Vec::new();
         for item in items {
             let rec = match &item {
@@ -795,6 +989,10 @@ impl Driver {
                     continue;
                 }
                 self.hub.stats.records_tx.fetch_add(1, Ordering::Relaxed);
+                self.hub
+                    .link_slot(link.target)
+                    .sent
+                    .fetch_add(1, Ordering::Relaxed);
                 if flush_link(link) {
                     dead.push(*token);
                 }
@@ -873,8 +1071,13 @@ pub(crate) fn spawn_driver(
         })
         .collect();
     let node = hub.node().to_string();
+    let mut core =
+        FederationCore::new(shared, slots, hub.stats.clone(), repr);
+    if let Some(ring) = &hub.ring {
+        core.set_ring(ring.clone());
+    }
     let driver = Driver {
-        core: FederationCore::new(shared, slots, hub.stats.clone(), repr),
+        core,
         epoll,
         listener,
         links: HashMap::new(),

@@ -44,6 +44,7 @@ pub mod persistence;
 pub mod pool;
 pub mod routes;
 pub mod security;
+pub mod telemetry;
 pub mod timeseries;
 pub mod server;
 
@@ -53,5 +54,6 @@ pub use federation::FederationConfig;
 pub use persistence::{PersistConfig, ReplayedHistory, ShardPersistence};
 pub use pool::{ChromosomePool, PoolEntry};
 pub use security::{FitnessVerifier, RateLimiter, SaboteurLog};
+pub use telemetry::{Telemetry, TelemetrySettings};
 pub use timeseries::TimeSeries;
 pub use server::{PoolServer, PoolServerConfig};

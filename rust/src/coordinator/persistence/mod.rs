@@ -53,8 +53,11 @@ use std::fs;
 use std::io;
 use std::path::{Path, PathBuf};
 
+use std::time::Instant;
+
 use crate::coordinator::experiment::ExperimentLog;
 use crate::coordinator::pool::PoolEntry;
+use crate::coordinator::telemetry::PersistTelemetry;
 use crate::genome::Representation;
 use crate::json::Json;
 
@@ -242,6 +245,7 @@ pub struct ShardPersistence {
     snapshot_every: u64,
     records_since_snapshot: u64,
     write_failed: bool,
+    telemetry: Option<PersistTelemetry>,
 }
 
 impl ShardPersistence {
@@ -266,12 +270,29 @@ impl ShardPersistence {
             snapshot_every: cfg.snapshot_every.max(1),
             records_since_snapshot: 0,
             write_failed: false,
+            telemetry: None,
         })
     }
 
+    /// Attach metric recording (append/fsync latency, bytes, snapshot
+    /// durations). Persistence works identically without it.
+    pub fn set_telemetry(&mut self, telemetry: PersistTelemetry) {
+        self.telemetry = Some(telemetry);
+    }
+
     fn append(&mut self, rec: Json) {
+        let start = Instant::now();
+        let before = self.wal.bytes_written();
         match self.wal.append(rec) {
-            Ok(_) => self.records_since_snapshot += 1,
+            Ok(_) => {
+                self.records_since_snapshot += 1;
+                if let Some(t) = &self.telemetry {
+                    t.record_append(
+                        start.elapsed(),
+                        self.wal.bytes_written() - before,
+                    );
+                }
+            }
             Err(e) => {
                 if !self.write_failed {
                     self.write_failed = true;
@@ -373,7 +394,7 @@ impl ShardPersistence {
                 record.map(|l| l.to_json()).unwrap_or(Json::Null),
             ),
         ]));
-        let _ = self.wal.sync();
+        self.sync();
     }
 
     /// Record the first-boot start marker: epoch `experiment` began at
@@ -403,6 +424,8 @@ impl ShardPersistence {
         // full disk would otherwise clone the whole shard state per tick).
         self.records_since_snapshot = 0;
         state.seq = self.wal.last_seq();
+        let start = Instant::now();
+        let entries = state.entries.len() as u64;
         if let Err(e) = write_snapshot(&self.dir, &state) {
             if !self.write_failed {
                 self.write_failed = true;
@@ -422,11 +445,18 @@ impl ShardPersistence {
                 self.dir.display()
             );
         }
+        if let Some(t) = &self.telemetry {
+            t.record_snapshot(start.elapsed(), entries);
+        }
     }
 
     /// Flush and fsync (shutdown, epoch boundaries).
     pub fn sync(&mut self) {
+        let start = Instant::now();
         let _ = self.wal.sync();
+        if let Some(t) = &self.telemetry {
+            t.record_fsync(start.elapsed());
+        }
     }
 }
 

@@ -91,13 +91,14 @@ pub fn unframe(line: &str) -> Option<Json> {
 pub struct FrameWriter<W: Write> {
     out: W,
     seq: u64,
+    bytes_written: u64,
 }
 
 impl<W: Write> FrameWriter<W> {
     /// Wrap `out`, seeding the record sequence at `start_seq` (records get
     /// `start_seq + 1, start_seq + 2, ...`).
     pub fn new(out: W, start_seq: u64) -> FrameWriter<W> {
-        FrameWriter { out, seq: start_seq }
+        FrameWriter { out, seq: start_seq, bytes_written: 0 }
     }
 
     /// Assign the next seq to `rec` (as a `"seq"` member), frame, write.
@@ -105,8 +106,16 @@ impl<W: Write> FrameWriter<W> {
     pub fn append(&mut self, mut rec: Json) -> io::Result<u64> {
         self.seq += 1;
         rec.set("seq", self.seq.into());
-        writeln!(self.out, "{}", frame(&rec))?;
+        let line = frame(&rec);
+        writeln!(self.out, "{line}")?;
+        self.bytes_written += line.len() as u64 + 1;
         Ok(self.seq)
+    }
+
+    /// Cumulative frame bytes written through this writer (including the
+    /// newline terminators) — telemetry reads deltas around appends.
+    pub fn bytes_written(&self) -> u64 {
+        self.bytes_written
     }
 
     /// Next sequence number this writer will assign.
@@ -296,6 +305,11 @@ impl WalWriter {
     /// Last sequence number assigned (or the resume seq if none yet).
     pub fn last_seq(&self) -> u64 {
         self.inner.last_seq()
+    }
+
+    /// Cumulative frame bytes appended (see [`FrameWriter::bytes_written`]).
+    pub fn bytes_written(&self) -> u64 {
+        self.inner.bytes_written()
     }
 
     /// Truncate the log to zero bytes — called after a snapshot has made

@@ -12,12 +12,16 @@
 
 use std::cell::RefCell;
 use std::rc::Rc;
+use std::sync::Arc;
 
 use super::experiment::ExperimentManager;
 use super::logger::EventLog;
 use super::persistence::{ShardPersistence, ShardState};
 use super::pool::{ChromosomePool, PoolEntry};
 use super::security::{FitnessVerifier, RateLimiter, SaboteurLog};
+use super::telemetry::{
+    ServerGauges, Telemetry, TelemetrySettings, TraceKind,
+};
 use super::timeseries::TimeSeries;
 use crate::genome::{Genome, ProblemSpec, RealGenes, Representation};
 use crate::http::types::{write_json_200, write_no_content_204};
@@ -279,6 +283,12 @@ pub struct PoolState {
     /// Reusable batch-PUT parse scratch: one element-vector allocation
     /// per router, not one per batch request.
     pub(crate) put_scratch: PutScratch,
+    /// The process-wide metric registry + trace ring + readiness. A
+    /// standalone router gets a default (1-shard) registry so direct
+    /// callers (tests, benches) need no wiring; [`super::server`]
+    /// replaces it with the spawn-time registry shared with the
+    /// `ConnDriver`.
+    pub telemetry: Arc<Telemetry>,
 }
 
 impl PoolState {
@@ -304,6 +314,10 @@ impl PoolState {
             random_cache: Vec::new(),
             put_ok_body: Vec::new(),
             put_scratch: PutScratch::new(),
+            telemetry: Arc::new(Telemetry::new(
+                1,
+                &TelemetrySettings::default(),
+            )),
         };
         state.rebuild_put_ok();
         state
@@ -353,6 +367,18 @@ impl PoolState {
         // Render caches start cold: the GET path resizes the slot cache
         // lazily and put_ok must carry the recovered epoch.
         self.drop_render_caches();
+    }
+
+    /// Point-in-time gauges for the Prometheus exposition.
+    pub fn prom_gauges(&self) -> ServerGauges {
+        ServerGauges {
+            experiment: self.experiments.current_id(),
+            best_fitness: self.experiments.best_fitness(),
+            pool_entries: self.pool.len() as u64,
+            pool_capacity: self.pool.capacity() as u64,
+            completed: self.experiments.completed().len() as u64,
+            shards: self.telemetry.shards() as u64,
+        }
     }
 
     /// The durable view of the current state (what a snapshot captures).
@@ -523,6 +549,39 @@ pub fn build_router(state: Shared) -> Router {
         });
     }
 
+    // Prometheus text exposition (scrape-time aggregation; the request
+    // path only ever touched relaxed atomics).
+    {
+        let state = state.clone();
+        router.get("/metrics/prom", move |_req: &Request, _p: &Params| {
+            let s = state.borrow();
+            let mut body = Vec::new();
+            s.telemetry.render_prometheus(&mut body, &s.prom_gauges());
+            super::telemetry::prom_response(body)
+        });
+    }
+
+    // Liveness + readiness probes.
+    router.get("/healthz", move |_req: &Request, _p: &Params| {
+        super::telemetry::healthz_response()
+    });
+    {
+        let state = state.clone();
+        router.get("/readyz", move |_req: &Request, _p: &Params| {
+            let s = state.borrow();
+            super::telemetry::readyz_response(s.telemetry.readiness())
+        });
+    }
+
+    // The trace-ring flight recorder.
+    {
+        let state = state.clone();
+        router.get("/debug/trace", move |_req: &Request, _p: &Params| {
+            let s = state.borrow();
+            Response::json(&s.telemetry.ring().dump_json())
+        });
+    }
+
     // Human-facing status page (the paper's experiment web page, minus
     // the browser EA: server-rendered, zero scripts).
     {
@@ -572,6 +631,14 @@ pub fn build_router(state: Shared) -> Router {
                 let entry = log.to_json();
                 s.log.log("reset", entry.clone());
                 s.log.flush();
+                s.telemetry.ring().push(
+                    TraceKind::EpochStart,
+                    0,
+                    s.experiments.current_id(),
+                    0,
+                    0,
+                    "",
+                );
                 maybe_snapshot(&mut s);
                 Response::json(&entry)
             },
@@ -864,6 +931,22 @@ fn apply_put(s: &mut PoolState, f: PutFields) -> PutOutcome {
     let payload = log_entry.to_json();
     s.log.log("solution", payload.clone());
     s.log.flush();
+    s.telemetry.ring().push(
+        TraceKind::Solution,
+        0,
+        log_entry.id,
+        fitness.to_bits(),
+        0,
+        uuid,
+    );
+    s.telemetry.ring().push(
+        TraceKind::EpochStart,
+        0,
+        s.experiments.current_id(),
+        0,
+        0,
+        "",
+    );
     maybe_snapshot(s);
     let mut resp = Json::obj(vec![
         ("solved", true.into()),
@@ -1238,6 +1321,64 @@ mod tests {
         let (_state, mut router) = setup();
         let resp = router.handle(&Request::new(Method::Get, "/nope"));
         assert_eq!(resp.status, 404);
+    }
+
+    #[test]
+    fn scrape_health_and_trace_routes() {
+        use crate::coordinator::telemetry::{
+            check_exposition, PROM_CONTENT_TYPE,
+        };
+        let (state, mut router) = setup();
+        put(&mut router, "01010101", 30.0, "a");
+        put(&mut router, "11111111", 80.0, "w"); // solves experiment 0
+
+        // /healthz is always live.
+        let resp = router.handle(&Request::new(Method::Get, "/healthz"));
+        assert_eq!(resp.status, 200);
+        assert_eq!(resp.body, b"ok\n");
+
+        // /readyz flips 503 -> 200 once replay/shards/gossip are marked.
+        let resp = router.handle(&Request::new(Method::Get, "/readyz"));
+        assert_eq!(resp.status, 503);
+        assert!(String::from_utf8(resp.body)
+            .unwrap()
+            .contains("not ready"));
+        {
+            let s = state.borrow();
+            let ready = s.telemetry.readiness();
+            ready.mark_replayed();
+            ready.mark_shard_serving();
+            ready.mark_gossip_ready();
+        }
+        let resp = router.handle(&Request::new(Method::Get, "/readyz"));
+        assert_eq!(resp.status, 200);
+        assert_eq!(resp.body, b"ready\n");
+
+        // /metrics/prom passes the grammar checker and carries gauges.
+        let resp =
+            router.handle(&Request::new(Method::Get, "/metrics/prom"));
+        assert_eq!(resp.status, 200);
+        assert_eq!(resp.header("content-type"), Some(PROM_CONTENT_TYPE));
+        let text = String::from_utf8(resp.body).unwrap();
+        check_exposition(&text).unwrap_or_else(|e| {
+            panic!("checker rejected live scrape: {e}\n{text}")
+        });
+        assert!(text.contains("nodio_experiment 1"));
+        assert!(text.contains("nodio_experiments_completed 1"));
+        assert!(text.contains("nodio_pool_capacity 64"));
+
+        // /debug/trace recorded the solution span + the new epoch.
+        let resp =
+            router.handle(&Request::new(Method::Get, "/debug/trace"));
+        assert_eq!(resp.status, 200);
+        let body = resp.json_body().unwrap();
+        let events = body.get("events").unwrap().as_arr().unwrap();
+        assert_eq!(events.len(), 2);
+        assert_eq!(events[0].get_str("kind"), Some("solution"));
+        assert_eq!(events[0].get_str("by"), Some("w"));
+        assert_eq!(events[0].get_f64("fitness"), Some(80.0));
+        assert_eq!(events[1].get_str("kind"), Some("epoch_start"));
+        assert_eq!(events[1].get_u64("experiment"), Some(1));
     }
 
     #[test]

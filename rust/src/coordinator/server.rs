@@ -11,8 +11,10 @@ use super::persistence::{
 };
 use super::routes::{build_router, PoolState};
 use super::security::{FitnessVerifier, RateLimiter};
+use super::telemetry::{Telemetry, TelemetrySettings};
 use crate::genome::ProblemSpec;
 use crate::http::server::{Server, ServerConfig, ServerHandle};
+use std::sync::Arc;
 
 /// Pool server configuration. Defaults are the paper's baseline trap-40
 /// experiment.
@@ -42,6 +44,9 @@ pub struct PoolServerConfig {
     /// under `data_dir`, replayed on startup so a restart resumes the
     /// live experiment instead of resetting it. None = in-memory only.
     pub persist: Option<PersistConfig>,
+    /// Telemetry knobs: trace-ring capacity and slow-request threshold
+    /// ([`super::telemetry`]).
+    pub telemetry: TelemetrySettings,
 }
 
 impl Default for PoolServerConfig {
@@ -55,6 +60,7 @@ impl Default for PoolServerConfig {
             verify_fitness: false,
             rate_limit: None,
             persist: None,
+            telemetry: TelemetrySettings::default(),
         }
     }
 }
@@ -74,7 +80,9 @@ impl PoolServer {
         addr: &str,
         config: PoolServerConfig,
     ) -> std::io::Result<ServerHandle> {
-        let http = config.http.clone();
+        let telemetry = Arc::new(Telemetry::new(1, &config.telemetry));
+        let mut http = config.http.clone();
+        http.telemetry = Some(telemetry.driver(0));
         // Recovery happens on the spawning thread so errors surface here.
         let recovered: Option<RecoveredShard> = match &config.persist {
             Some(cfg) => {
@@ -91,6 +99,10 @@ impl PoolServer {
             }
             None => None,
         };
+        // Replay (or the trivial in-memory case) is done; the remaining
+        // readiness conditions are marked by the server thread.
+        telemetry.readiness().mark_replayed();
+        telemetry.readiness().mark_gossip_ready(); // no federation here
         Server::spawn_with(addr, http, move || {
             let log = match &config.log_path {
                 Some(p) => EventLog::to_file(p).unwrap_or_else(|e| {
@@ -105,6 +117,7 @@ impl PoolServer {
                 log,
                 config.seed,
             );
+            state.telemetry = telemetry.clone();
             if let (Some(cfg), Some(rec)) = (&config.persist, recovered) {
                 if rec.dropped_records > 0 {
                     eprintln!(
@@ -124,6 +137,7 @@ impl PoolServer {
                 let fresh_dir = !rec.had_history();
                 match ShardPersistence::open(&dir, cfg, &rec) {
                     Ok(mut p) => {
+                        p.set_telemetry(telemetry.persist(0));
                         state.restore(rec.state);
                         if fresh_dir {
                             // First boot: WAL the epoch-0 start stamp so
@@ -154,6 +168,7 @@ impl PoolServer {
             if let Some((rate, burst)) = config.rate_limit {
                 state.rate_limiter = Some(RateLimiter::new(rate, burst));
             }
+            telemetry.readiness().mark_shard_serving();
             build_router(Rc::new(RefCell::new(state)))
         })
     }
@@ -213,6 +228,67 @@ mod tests {
         // Banner shows the new experiment.
         let resp = client.send(&Request::new(Method::Get, "/")).unwrap();
         assert_eq!(resp.json_body().unwrap().get_u64("experiment"), Some(1));
+        handle.stop();
+    }
+
+    #[test]
+    fn scrape_over_sockets_passes_grammar_and_counts_requests() {
+        use crate::coordinator::telemetry::{
+            check_exposition, parse_exposition,
+        };
+        let config = PoolServerConfig {
+            problem: ProblemSpec::bits(8, 8.0),
+            ..Default::default()
+        };
+        let handle = PoolServer::spawn("127.0.0.1:0", config).unwrap();
+        let mut client = HttpClient::connect(handle.addr).unwrap();
+        // Liveness, and readiness (marked before the loop serves).
+        let resp = client
+            .send(&Request::new(Method::Get, "/healthz"))
+            .unwrap();
+        assert_eq!(resp.status, 200);
+        let resp = client
+            .send(&Request::new(Method::Get, "/readyz"))
+            .unwrap();
+        assert_eq!(resp.status, 200);
+        assert_eq!(resp.body, b"ready\n");
+
+        client.send(&put_req("01010101", 4.0, "w")).unwrap();
+        client
+            .send(&Request::new(Method::Get, "/experiment/random"))
+            .unwrap();
+        let resp = client
+            .send(&Request::new(Method::Get, "/metrics/prom"))
+            .unwrap();
+        assert_eq!(resp.status, 200);
+        let text = String::from_utf8(resp.body).unwrap();
+        check_exposition(&text).unwrap_or_else(|e| {
+            panic!("checker rejected socket scrape: {e}\n{text}")
+        });
+        // Requests served through the ConnDriver landed in the per-route
+        // counters and latency histograms.
+        let samples = parse_exposition(&text).unwrap();
+        let series = |name: &str, route: &str| {
+            samples
+                .iter()
+                .find(|s| s.name == name && s.label("route") == Some(route))
+                .unwrap_or_else(|| panic!("missing {name}{{{route}}}"))
+                .value
+        };
+        assert_eq!(series("nodio_requests_total", "put_chromosome"), 1.0);
+        assert_eq!(series("nodio_requests_total", "get_random"), 1.0);
+        assert_eq!(
+            series(
+                "nodio_request_duration_seconds_count",
+                "put_chromosome"
+            ),
+            1.0
+        );
+        let open = samples
+            .iter()
+            .find(|s| s.name == "nodio_open_connections")
+            .unwrap();
+        assert!(open.value >= 1.0, "live client not in the gauge");
         handle.stop();
     }
 

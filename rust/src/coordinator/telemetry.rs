@@ -1,0 +1,1774 @@
+//! Zero-allocation telemetry: a fixed-at-startup metric registry, a
+//! Prometheus/OpenMetrics text renderer, and a bounded trace ring.
+//!
+//! The paper's contribution is *measurement* ("a series of measurements
+//! to establish the speed of JavaScript in evolutionary algorithms that
+//! can serve as a baseline"); this module makes the live server
+//! measurable from the inside, not just by offline benches.
+//!
+//! Design constraints, in order:
+//!
+//! 1. **The hot path stays allocation-free.** Recording a request is a
+//!    route classification over the already-parsed method+path bytes,
+//!    one `Instant` read, and two relaxed atomic adds into
+//!    cache-line-padded per-shard slots ([`AtomicHist`]). The
+//!    `hotpath_alloc` bench gates hold with telemetry enabled.
+//! 2. **Aggregation happens at scrape time only.** `GET /metrics/prom`
+//!    merges the per-shard slots and renders the exposition text; scrape
+//!    cost is not on the request path.
+//! 3. **No dependencies.** The exposition renderer, the grammar checker
+//!    used by tests/CI, and the tiny sample parser used by `nodio top`
+//!    are all in this file, std-only.
+//!
+//! The trace ring is the in-process flight recorder: experiment
+//! lifecycle spans (epoch start / solution / fast-forward), migration
+//! batches, WAL snapshots, federation link transitions and slow
+//! requests, each a fixed-size all-atomic slot (seqlock-style versioned,
+//! so readers never block writers and torn slots are skipped, not UB).
+//! `GET /debug/trace` dumps it as JSON.
+
+use std::fmt;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::http::types::push_u64;
+use crate::http::{Method, Response};
+use crate::json::Json;
+use crate::util::unix_ms;
+
+/// Bucket count, identical to `util::hist::Histogram`: power-of-two
+/// microsecond buckets, 1µs .. ~2^39µs.
+pub const HIST_BUCKETS: usize = 40;
+
+/// `impl fmt::Debug` body for telemetry types (all-atomic interiors make
+/// derived Debug noise; configs that embed them still derive Debug).
+macro_rules! fmt_debug_stub {
+    ($name:literal) => {
+        fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+            f.debug_struct($name).finish_non_exhaustive()
+        }
+    };
+}
+
+// ---------------------------------------------------------------------
+// Route classes
+// ---------------------------------------------------------------------
+
+/// Number of route classes tracked per shard.
+pub const ROUTE_CLASSES: usize = 7;
+
+/// Exposition label values, indexed by [`route_class`].
+pub const ROUTE_LABELS: [&str; ROUTE_CLASSES] = [
+    "put_chromosome",
+    "get_random",
+    "state",
+    "stats",
+    "scrape",
+    "debug",
+    "other",
+];
+
+/// Classify a request into a route class. Allocation-free: byte
+/// comparisons over the parsed method + path only.
+pub fn route_class(method: Method, path: &str) -> usize {
+    let path =
+        if path.len() > 1 { path.trim_end_matches('/') } else { path };
+    match (method, path) {
+        (Method::Put, "/experiment/chromosome") => 0,
+        (Method::Get, "/experiment/random") => 1,
+        (Method::Get, "/" | "/experiment/state") => 2,
+        (Method::Get, "/stats" | "/metrics" | "/experiment/history")
+        | (Method::Get, "/dashboard") => 3,
+        (Method::Get, "/metrics/prom" | "/healthz" | "/readyz") => 4,
+        (Method::Get, "/debug/trace") => 5,
+        _ => 6,
+    }
+}
+
+// ---------------------------------------------------------------------
+// Atomic histogram
+// ---------------------------------------------------------------------
+
+/// A lock-free latency histogram with the exact bucket layout of
+/// `util::hist::Histogram`. Cache-line aligned so two shards' histograms
+/// never share a line; recording is two relaxed `fetch_add`s.
+#[repr(align(64))]
+pub struct AtomicHist {
+    counts: [AtomicU64; HIST_BUCKETS],
+    sum_us: AtomicU64,
+}
+
+impl Default for AtomicHist {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl AtomicHist {
+    pub fn new() -> AtomicHist {
+        #[allow(clippy::declare_interior_mutable_const)]
+        const ZERO: AtomicU64 = AtomicU64::new(0);
+        AtomicHist { counts: [ZERO; HIST_BUCKETS], sum_us: AtomicU64::new(0) }
+    }
+
+    fn bucket_of(us: u64) -> usize {
+        if us == 0 {
+            0
+        } else {
+            (63 - us.leading_zeros() as usize).min(HIST_BUCKETS - 1)
+        }
+    }
+
+    /// Record a latency in microseconds. Two relaxed atomic adds.
+    pub fn record_us(&self, us: u64) {
+        self.counts[Self::bucket_of(us)].fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+    }
+
+    pub fn record(&self, d: Duration) {
+        self.record_us(d.as_micros().min(u64::MAX as u128) as u64);
+    }
+
+    /// Fold this histogram into `snap` (scrape-time aggregation).
+    pub fn add_into(&self, snap: &mut HistSnapshot) {
+        for (i, c) in self.counts.iter().enumerate() {
+            snap.counts[i] += c.load(Ordering::Relaxed);
+        }
+        snap.sum_us += self.sum_us.load(Ordering::Relaxed);
+    }
+}
+
+/// A merged, point-in-time view of one or more [`AtomicHist`]s.
+#[derive(Clone, Copy)]
+pub struct HistSnapshot {
+    pub counts: [u64; HIST_BUCKETS],
+    pub sum_us: u64,
+}
+
+impl Default for HistSnapshot {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl HistSnapshot {
+    pub fn new() -> HistSnapshot {
+        HistSnapshot { counts: [0; HIST_BUCKETS], sum_us: 0 }
+    }
+
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+}
+
+// ---------------------------------------------------------------------
+// Per-shard metric slots
+// ---------------------------------------------------------------------
+
+/// One shard's metric slots. Written by exactly one event-loop thread
+/// (plus the persistence calls that thread makes); read by whichever
+/// shard serves a scrape. Every histogram is cache-line aligned, so
+/// cross-shard false sharing is structural, not accidental.
+pub struct ShardTelemetry {
+    /// Request latency per route class; bucket sums double as the
+    /// per-route request counters.
+    pub requests: [AtomicHist; ROUTE_CLASSES],
+    /// Live connections registered with this shard's `ConnDriver`.
+    pub open_conns: AtomicU64,
+    /// Requests at or over the slow threshold (also traced).
+    pub slow_requests: AtomicU64,
+    /// WAL append latency (frame + write + flush, + fsync when on).
+    pub wal_append: AtomicHist,
+    /// Bytes appended to the WAL.
+    pub wal_append_bytes: AtomicU64,
+    /// Explicit WAL fsync latency (epoch-transition durability points).
+    pub wal_fsync: AtomicHist,
+    /// Snapshot-compaction wall time.
+    pub snapshot: AtomicHist,
+}
+
+impl Default for ShardTelemetry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ShardTelemetry {
+    pub fn new() -> ShardTelemetry {
+        ShardTelemetry {
+            requests: std::array::from_fn(|_| AtomicHist::new()),
+            open_conns: AtomicU64::new(0),
+            slow_requests: AtomicU64::new(0),
+            wal_append: AtomicHist::new(),
+            wal_append_bytes: AtomicU64::new(0),
+            wal_fsync: AtomicHist::new(),
+            snapshot: AtomicHist::new(),
+        }
+    }
+}
+
+impl fmt::Debug for ShardTelemetry {
+    fmt_debug_stub!("ShardTelemetry");
+}
+
+// ---------------------------------------------------------------------
+// Trace ring
+// ---------------------------------------------------------------------
+
+/// Trace event kinds recorded in the ring.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TraceKind {
+    /// A new experiment epoch began (`a` = experiment id).
+    EpochStart = 0,
+    /// An experiment was solved (`a` = experiment id, `b` = fitness
+    /// bits, label = solver uuid).
+    Solution = 1,
+    /// Local epoch fast-forwarded to a remote winner (`a` = from,
+    /// `b` = to).
+    FastForward = 2,
+    /// A migration batch was applied (`a` = experiment, `b` = entries).
+    Migration = 3,
+    /// A WAL snapshot compaction ran (`a` = pool entries, `b` = µs).
+    Snapshot = 4,
+    /// A federation link came up (label = peer).
+    LinkUp = 5,
+    /// A federation link dropped (label = peer).
+    LinkDown = 6,
+    /// A request exceeded the slow threshold (`a` = route class,
+    /// `b` = µs).
+    SlowRequest = 7,
+}
+
+impl TraceKind {
+    pub fn label(self) -> &'static str {
+        match self {
+            TraceKind::EpochStart => "epoch_start",
+            TraceKind::Solution => "solution",
+            TraceKind::FastForward => "fast_forward",
+            TraceKind::Migration => "migration",
+            TraceKind::Snapshot => "snapshot",
+            TraceKind::LinkUp => "link_up",
+            TraceKind::LinkDown => "link_down",
+            TraceKind::SlowRequest => "slow_request",
+        }
+    }
+
+    fn from_u64(v: u64) -> Option<TraceKind> {
+        Some(match v {
+            0 => TraceKind::EpochStart,
+            1 => TraceKind::Solution,
+            2 => TraceKind::FastForward,
+            3 => TraceKind::Migration,
+            4 => TraceKind::Snapshot,
+            5 => TraceKind::LinkUp,
+            6 => TraceKind::LinkDown,
+            7 => TraceKind::SlowRequest,
+            _ => return None,
+        })
+    }
+}
+
+const LABEL_WORDS: usize = 3; // 24 bytes of inline label
+
+struct TraceSlot {
+    /// Seqlock version: 0 = never written, odd = write in progress,
+    /// even = stable. All payload fields are atomics too, so a torn
+    /// read is detected garbage, never UB.
+    version: AtomicU64,
+    seq: AtomicU64,
+    ts_ms: AtomicU64,
+    kind: AtomicU64,
+    shard: AtomicU64,
+    a: AtomicU64,
+    b: AtomicU64,
+    c: AtomicU64,
+    label: [AtomicU64; LABEL_WORDS],
+}
+
+impl TraceSlot {
+    fn new() -> TraceSlot {
+        #[allow(clippy::declare_interior_mutable_const)]
+        const ZERO: AtomicU64 = AtomicU64::new(0);
+        TraceSlot {
+            version: AtomicU64::new(0),
+            seq: AtomicU64::new(0),
+            ts_ms: AtomicU64::new(0),
+            kind: AtomicU64::new(0),
+            shard: AtomicU64::new(0),
+            a: AtomicU64::new(0),
+            b: AtomicU64::new(0),
+            c: AtomicU64::new(0),
+            label: [ZERO; LABEL_WORDS],
+        }
+    }
+}
+
+fn pack_label(s: &str) -> [u64; LABEL_WORDS] {
+    let mut bytes = [0u8; LABEL_WORDS * 8];
+    let src = s.as_bytes();
+    let n = src.len().min(bytes.len());
+    bytes[..n].copy_from_slice(&src[..n]);
+    let mut words = [0u64; LABEL_WORDS];
+    for (i, w) in words.iter_mut().enumerate() {
+        let mut chunk = [0u8; 8];
+        chunk.copy_from_slice(&bytes[i * 8..i * 8 + 8]);
+        *w = u64::from_le_bytes(chunk);
+    }
+    words
+}
+
+fn unpack_label(words: &[u64; LABEL_WORDS]) -> String {
+    let mut bytes = [0u8; LABEL_WORDS * 8];
+    for (i, w) in words.iter().enumerate() {
+        bytes[i * 8..i * 8 + 8].copy_from_slice(&w.to_le_bytes());
+    }
+    let len =
+        bytes.iter().rposition(|&b| b != 0).map(|p| p + 1).unwrap_or(0);
+    String::from_utf8_lossy(&bytes[..len]).into_owned()
+}
+
+/// The bounded flight recorder: a fixed ring of all-atomic slots shared
+/// by every shard, the federation driver, and the persistence layer.
+/// Writers claim a slot with one `fetch_add` and never block; readers
+/// (the `/debug/trace` dump) skip slots whose version changed mid-read.
+/// Capacity 0 disables recording entirely (push is a no-op).
+pub struct TraceRing {
+    slots: Vec<TraceSlot>,
+    next: AtomicU64,
+}
+
+impl TraceRing {
+    pub fn new(capacity: usize) -> TraceRing {
+        TraceRing {
+            slots: (0..capacity).map(|_| TraceSlot::new()).collect(),
+            next: AtomicU64::new(0),
+        }
+    }
+
+    /// Total events recorded since startup (including overwritten ones).
+    pub fn total(&self) -> u64 {
+        self.next.load(Ordering::Relaxed)
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Record an event. Lock-free and allocation-free; with multiple
+    /// concurrent writers a wrapped-around slot collision can garble one
+    /// slot, which the reader detects and skips (best-effort debug data,
+    /// never corruption).
+    pub fn push(
+        &self,
+        kind: TraceKind,
+        shard: u64,
+        a: u64,
+        b: u64,
+        c: u64,
+        label: &str,
+    ) {
+        if self.slots.is_empty() {
+            return;
+        }
+        let seq = self.next.fetch_add(1, Ordering::Relaxed);
+        let slot = &self.slots[(seq % self.slots.len() as u64) as usize];
+        slot.version.fetch_add(1, Ordering::Acquire); // begin (odd)
+        slot.seq.store(seq, Ordering::Relaxed);
+        slot.ts_ms.store(unix_ms(), Ordering::Relaxed);
+        slot.kind.store(kind as u64, Ordering::Relaxed);
+        slot.shard.store(shard, Ordering::Relaxed);
+        slot.a.store(a, Ordering::Relaxed);
+        slot.b.store(b, Ordering::Relaxed);
+        slot.c.store(c, Ordering::Relaxed);
+        let words = pack_label(label);
+        for (w, v) in slot.label.iter().zip(words) {
+            w.store(v, Ordering::Relaxed);
+        }
+        slot.version.fetch_add(1, Ordering::Release); // end (even)
+    }
+
+    /// Dump the stable slots as a JSON object, oldest event first.
+    pub fn dump_json(&self) -> Json {
+        let mut events: Vec<(u64, Json)> = Vec::new();
+        for slot in &self.slots {
+            let v1 = slot.version.load(Ordering::Acquire);
+            if v1 == 0 || v1 % 2 == 1 {
+                continue; // never written, or write in progress
+            }
+            let seq = slot.seq.load(Ordering::Relaxed);
+            let ts_ms = slot.ts_ms.load(Ordering::Relaxed);
+            let kind_raw = slot.kind.load(Ordering::Relaxed);
+            let shard = slot.shard.load(Ordering::Relaxed);
+            let a = slot.a.load(Ordering::Relaxed);
+            let b = slot.b.load(Ordering::Relaxed);
+            let c = slot.c.load(Ordering::Relaxed);
+            let mut words = [0u64; LABEL_WORDS];
+            for (i, w) in slot.label.iter().enumerate() {
+                words[i] = w.load(Ordering::Relaxed);
+            }
+            if slot.version.load(Ordering::Acquire) != v1 {
+                continue; // overwritten while reading
+            }
+            let Some(kind) = TraceKind::from_u64(kind_raw) else {
+                continue;
+            };
+            let label = unpack_label(&words);
+            let mut obj: Vec<(&str, Json)> = vec![
+                ("seq", seq.into()),
+                ("ts_ms", ts_ms.into()),
+                ("kind", kind.label().into()),
+                ("shard", shard.into()),
+            ];
+            match kind {
+                TraceKind::EpochStart => {
+                    obj.push(("experiment", a.into()));
+                }
+                TraceKind::Solution => {
+                    obj.push(("experiment", a.into()));
+                    obj.push(("fitness", f64::from_bits(b).into()));
+                    obj.push(("by", label.into()));
+                }
+                TraceKind::FastForward => {
+                    obj.push(("from", a.into()));
+                    obj.push(("to", b.into()));
+                }
+                TraceKind::Migration => {
+                    obj.push(("experiment", a.into()));
+                    obj.push(("entries", b.into()));
+                }
+                TraceKind::Snapshot => {
+                    obj.push(("entries", a.into()));
+                    obj.push(("us", b.into()));
+                }
+                TraceKind::LinkUp | TraceKind::LinkDown => {
+                    obj.push(("peer", label.into()));
+                }
+                TraceKind::SlowRequest => {
+                    let route = ROUTE_LABELS
+                        [(a as usize).min(ROUTE_CLASSES - 1)];
+                    obj.push(("route", route.into()));
+                    obj.push(("us", b.into()));
+                }
+            }
+            let _ = c;
+            events.push((seq, Json::obj(obj)));
+        }
+        events.sort_by_key(|(seq, _)| *seq);
+        Json::obj(vec![
+            ("capacity", self.slots.len().into()),
+            ("total", self.total().into()),
+            (
+                "events",
+                Json::Arr(events.into_iter().map(|(_, e)| e).collect()),
+            ),
+        ])
+    }
+}
+
+impl fmt::Debug for TraceRing {
+    fmt_debug_stub!("TraceRing");
+}
+
+// ---------------------------------------------------------------------
+// Readiness
+// ---------------------------------------------------------------------
+
+/// Liveness vs readiness: `/healthz` answers as soon as the event loop
+/// serves; `/readyz` answers 200 only once durable state is replayed,
+/// every shard loop is running, and the gossip listener (when
+/// configured) is bound.
+pub struct Readiness {
+    shards_total: u64,
+    shards_up: AtomicU64,
+    replay_done: AtomicBool,
+    gossip_ready: AtomicBool,
+}
+
+impl Readiness {
+    fn new(shards_total: u64) -> Readiness {
+        Readiness {
+            shards_total,
+            shards_up: AtomicU64::new(0),
+            replay_done: AtomicBool::new(false),
+            gossip_ready: AtomicBool::new(false),
+        }
+    }
+
+    /// Durable state (snapshot + WAL tail) finished replaying — also the
+    /// trivial case of an in-memory-only server.
+    pub fn mark_replayed(&self) {
+        self.replay_done.store(true, Ordering::Release);
+    }
+
+    /// One shard's event loop started serving.
+    pub fn mark_shard_serving(&self) {
+        self.shards_up.fetch_add(1, Ordering::AcqRel);
+    }
+
+    /// The gossip listener is bound (or federation is not configured).
+    pub fn mark_gossip_ready(&self) {
+        self.gossip_ready.store(true, Ordering::Release);
+    }
+
+    pub fn ready(&self) -> bool {
+        self.replay_done.load(Ordering::Acquire)
+            && self.gossip_ready.load(Ordering::Acquire)
+            && self.shards_up.load(Ordering::Acquire) >= self.shards_total
+    }
+
+    /// Human-readable readiness state for the 503 body.
+    pub fn describe(&self) -> String {
+        format!(
+            "replay={} shards={}/{} gossip={}",
+            self.replay_done.load(Ordering::Acquire),
+            self.shards_up.load(Ordering::Acquire),
+            self.shards_total,
+            self.gossip_ready.load(Ordering::Acquire),
+        )
+    }
+}
+
+impl fmt::Debug for Readiness {
+    fmt_debug_stub!("Readiness");
+}
+
+/// Content type of the Prometheus text exposition.
+pub const PROM_CONTENT_TYPE: &str = "text/plain; version=0.0.4";
+
+/// Wrap an already-rendered exposition body as the `/metrics/prom`
+/// response. Both server shapes build it here, so scrapes of equal state
+/// are byte-identical on the wire.
+pub fn prom_response(body: Vec<u8>) -> Response {
+    let mut resp = Response::ok();
+    resp.body = body;
+    resp.set_header("content-type", PROM_CONTENT_TYPE);
+    resp
+}
+
+/// The `/healthz` liveness response: 200 as soon as the loop serves.
+pub fn healthz_response() -> Response {
+    Response::ok().with_text("ok\n")
+}
+
+/// The `/readyz` readiness response: 200 `ready`, or 503 with the
+/// blocking conditions spelled out.
+pub fn readyz_response(r: &Readiness) -> Response {
+    if r.ready() {
+        Response::ok().with_text("ready\n")
+    } else {
+        Response::new(503)
+            .with_text(&format!("not ready: {}\n", r.describe()))
+    }
+}
+
+// ---------------------------------------------------------------------
+// Settings + registry
+// ---------------------------------------------------------------------
+
+/// User-facing telemetry knobs (`--trace-buffer`, `--slow-ms`).
+#[derive(Debug, Clone)]
+pub struct TelemetrySettings {
+    /// Trace ring capacity in events; 0 disables the flight recorder.
+    pub trace_buffer: usize,
+    /// Requests at or over this are counted + traced; 0 disables.
+    pub slow_ms: u64,
+}
+
+impl Default for TelemetrySettings {
+    fn default() -> Self {
+        TelemetrySettings { trace_buffer: 256, slow_ms: 500 }
+    }
+}
+
+impl TelemetrySettings {
+    fn slow_us(&self) -> u64 {
+        if self.slow_ms == 0 {
+            u64::MAX
+        } else {
+            self.slow_ms.saturating_mul(1000)
+        }
+    }
+}
+
+/// The fixed-at-startup registry: per-shard metric slots, the shared
+/// trace ring, and readiness state. One per server process (both server
+/// shapes), shared via `Arc`.
+pub struct Telemetry {
+    shards: Vec<Arc<ShardTelemetry>>,
+    ring: Arc<TraceRing>,
+    readiness: Readiness,
+    slow_us: u64,
+}
+
+impl Telemetry {
+    pub fn new(shards: usize, settings: &TelemetrySettings) -> Telemetry {
+        Telemetry {
+            shards: (0..shards.max(1))
+                .map(|_| Arc::new(ShardTelemetry::new()))
+                .collect(),
+            ring: Arc::new(TraceRing::new(settings.trace_buffer)),
+            readiness: Readiness::new(shards.max(1) as u64),
+            slow_us: settings.slow_us(),
+        }
+    }
+
+    pub fn shard(&self, i: usize) -> &Arc<ShardTelemetry> {
+        &self.shards[i % self.shards.len()]
+    }
+
+    pub fn shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn ring(&self) -> &Arc<TraceRing> {
+        &self.ring
+    }
+
+    pub fn readiness(&self) -> &Readiness {
+        &self.readiness
+    }
+
+    /// The bundle a `ConnDriver` records through (one per event loop).
+    pub fn driver(&self, shard: usize) -> DriverTelemetry {
+        DriverTelemetry {
+            shard: self.shard(shard).clone(),
+            ring: self.ring.clone(),
+            shard_id: shard as u64,
+            slow_us: self.slow_us,
+        }
+    }
+
+    /// The bundle the persistence layer records through.
+    pub fn persist(&self, shard: usize) -> PersistTelemetry {
+        PersistTelemetry {
+            shard: self.shard(shard).clone(),
+            ring: self.ring.clone(),
+            shard_id: shard as u64,
+        }
+    }
+
+    /// Render the full Prometheus text exposition. Scrape-time only;
+    /// merges every shard's slots. Federation link metrics are appended
+    /// separately by the federation hub (cluster scrape path).
+    pub fn render_prometheus(&self, out: &mut Vec<u8>, g: &ServerGauges) {
+        write_help_type(
+            out,
+            "nodio_requests_total",
+            "Requests handled, by route class.",
+            "counter",
+        );
+        let mut route_snaps = [HistSnapshot::new(); ROUTE_CLASSES];
+        for (r, snap) in route_snaps.iter_mut().enumerate() {
+            for s in &self.shards {
+                s.requests[r].add_into(snap);
+            }
+            write_sample_u64(
+                out,
+                "nodio_requests_total",
+                &[("route", ROUTE_LABELS[r])],
+                snap.total(),
+            );
+        }
+        write_help_type(
+            out,
+            "nodio_request_duration_seconds",
+            "Request service latency, by route class.",
+            "histogram",
+        );
+        for (r, snap) in route_snaps.iter().enumerate() {
+            write_histogram(
+                out,
+                "nodio_request_duration_seconds",
+                &[("route", ROUTE_LABELS[r])],
+                snap,
+            );
+        }
+
+        write_help_type(
+            out,
+            "nodio_slow_requests_total",
+            "Requests at or over the --slow-ms threshold.",
+            "counter",
+        );
+        write_sample_u64(
+            out,
+            "nodio_slow_requests_total",
+            &[],
+            self.sum(|s| s.slow_requests.load(Ordering::Relaxed)),
+        );
+
+        write_help_type(
+            out,
+            "nodio_open_connections",
+            "Live client connections across all event loops.",
+            "gauge",
+        );
+        write_sample_u64(
+            out,
+            "nodio_open_connections",
+            &[],
+            self.sum(|s| s.open_conns.load(Ordering::Relaxed)),
+        );
+
+        write_help_type(
+            out,
+            "nodio_shards",
+            "Event-loop shards in this process.",
+            "gauge",
+        );
+        write_sample_u64(out, "nodio_shards", &[], g.shards);
+
+        write_help_type(
+            out,
+            "nodio_pool_entries",
+            "Chromosomes in the live pool.",
+            "gauge",
+        );
+        write_sample_u64(out, "nodio_pool_entries", &[], g.pool_entries);
+        write_help_type(
+            out,
+            "nodio_pool_capacity",
+            "Configured pool capacity.",
+            "gauge",
+        );
+        write_sample_u64(out, "nodio_pool_capacity", &[], g.pool_capacity);
+        write_help_type(
+            out,
+            "nodio_experiment",
+            "Current experiment epoch.",
+            "gauge",
+        );
+        write_sample_u64(out, "nodio_experiment", &[], g.experiment);
+        write_help_type(
+            out,
+            "nodio_experiments_completed",
+            "Experiments solved since the durable epoch zero.",
+            "gauge",
+        );
+        write_sample_u64(
+            out,
+            "nodio_experiments_completed",
+            &[],
+            g.completed,
+        );
+        write_help_type(
+            out,
+            "nodio_best_fitness",
+            "Best fitness observed in the current experiment.",
+            "gauge",
+        );
+        write_sample_f64(out, "nodio_best_fitness", &[], g.best_fitness);
+
+        let mut wal_append = HistSnapshot::new();
+        let mut wal_fsync = HistSnapshot::new();
+        let mut snapshot = HistSnapshot::new();
+        for s in &self.shards {
+            s.wal_append.add_into(&mut wal_append);
+            s.wal_fsync.add_into(&mut wal_fsync);
+            s.snapshot.add_into(&mut snapshot);
+        }
+        write_help_type(
+            out,
+            "nodio_wal_append_duration_seconds",
+            "WAL record append latency (frame + write + flush).",
+            "histogram",
+        );
+        write_histogram(
+            out,
+            "nodio_wal_append_duration_seconds",
+            &[],
+            &wal_append,
+        );
+        write_help_type(
+            out,
+            "nodio_wal_appended_bytes_total",
+            "Bytes appended to the WAL.",
+            "counter",
+        );
+        write_sample_u64(
+            out,
+            "nodio_wal_appended_bytes_total",
+            &[],
+            self.sum(|s| s.wal_append_bytes.load(Ordering::Relaxed)),
+        );
+        write_help_type(
+            out,
+            "nodio_wal_fsync_duration_seconds",
+            "Explicit WAL fsync latency (durability points).",
+            "histogram",
+        );
+        write_histogram(
+            out,
+            "nodio_wal_fsync_duration_seconds",
+            &[],
+            &wal_fsync,
+        );
+        write_help_type(
+            out,
+            "nodio_snapshot_duration_seconds",
+            "WAL snapshot compaction wall time.",
+            "histogram",
+        );
+        write_histogram(
+            out,
+            "nodio_snapshot_duration_seconds",
+            &[],
+            &snapshot,
+        );
+
+        write_help_type(
+            out,
+            "nodio_trace_events_total",
+            "Events recorded in the trace ring since startup.",
+            "counter",
+        );
+        write_sample_u64(
+            out,
+            "nodio_trace_events_total",
+            &[],
+            self.ring.total(),
+        );
+    }
+
+    fn sum(&self, f: impl Fn(&ShardTelemetry) -> u64) -> u64 {
+        self.shards.iter().map(|s| f(s)).sum()
+    }
+}
+
+impl fmt::Debug for Telemetry {
+    fmt_debug_stub!("Telemetry");
+}
+
+/// Point-in-time server gauges supplied by the scraping route (both
+/// shapes read them from their own state; the renderer is shared so the
+/// exposition is byte-identical across shapes).
+#[derive(Debug, Clone, Copy)]
+pub struct ServerGauges {
+    pub experiment: u64,
+    pub best_fitness: f64,
+    pub pool_entries: u64,
+    pub pool_capacity: u64,
+    pub completed: u64,
+    pub shards: u64,
+}
+
+/// What a `ConnDriver` holds: its shard's slots, the shared ring, and
+/// the slow threshold. Recording is allocation-free.
+#[derive(Clone)]
+pub struct DriverTelemetry {
+    shard: Arc<ShardTelemetry>,
+    ring: Arc<TraceRing>,
+    shard_id: u64,
+    slow_us: u64,
+}
+
+impl DriverTelemetry {
+    /// Record one served request: latency histogram + (over threshold)
+    /// slow counter and trace event.
+    pub fn record_request(&self, class: usize, elapsed: Duration) {
+        let us = elapsed.as_micros().min(u64::MAX as u128) as u64;
+        self.shard.requests[class.min(ROUTE_CLASSES - 1)].record_us(us);
+        if us >= self.slow_us {
+            self.shard.slow_requests.fetch_add(1, Ordering::Relaxed);
+            self.ring.push(
+                TraceKind::SlowRequest,
+                self.shard_id,
+                class as u64,
+                us,
+                0,
+                "",
+            );
+        }
+    }
+
+    /// Publish the live connection count for this event loop.
+    pub fn set_open_conns(&self, n: u64) {
+        self.shard.open_conns.store(n, Ordering::Relaxed);
+    }
+}
+
+impl fmt::Debug for DriverTelemetry {
+    fmt_debug_stub!("DriverTelemetry");
+}
+
+/// What the persistence layer holds: WAL/fsync/snapshot slots plus the
+/// ring for snapshot span events.
+#[derive(Clone)]
+pub struct PersistTelemetry {
+    shard: Arc<ShardTelemetry>,
+    ring: Arc<TraceRing>,
+    shard_id: u64,
+}
+
+impl PersistTelemetry {
+    pub fn record_append(&self, elapsed: Duration, bytes: u64) {
+        self.shard.wal_append.record(elapsed);
+        self.shard.wal_append_bytes.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    pub fn record_fsync(&self, elapsed: Duration) {
+        self.shard.wal_fsync.record(elapsed);
+    }
+
+    pub fn record_snapshot(&self, elapsed: Duration, entries: u64) {
+        self.shard.snapshot.record(elapsed);
+        self.ring.push(
+            TraceKind::Snapshot,
+            self.shard_id,
+            entries,
+            elapsed.as_micros().min(u64::MAX as u128) as u64,
+            0,
+            "",
+        );
+    }
+}
+
+impl fmt::Debug for PersistTelemetry {
+    fmt_debug_stub!("PersistTelemetry");
+}
+
+// ---------------------------------------------------------------------
+// Federation link slots
+// ---------------------------------------------------------------------
+
+/// Per-federation-link observable state. The driver thread writes;
+/// scrapes read. One fixed slot per dial target plus one aggregate slot
+/// for inbound links keeps the registry fixed at startup.
+pub struct LinkTelemetry {
+    /// Label value for the `peer` tag (dial address, or "inbound").
+    pub peer: String,
+    /// 1 while the link is established.
+    pub up: AtomicU64,
+    /// Records written to this link.
+    pub sent: AtomicU64,
+    /// Highest wire seq received from the peer.
+    pub last_rx_seq: AtomicU64,
+    /// Unix ms of the last inbound record.
+    pub last_seen_ms: AtomicU64,
+    /// Times the link dropped and re-entered dialing/backoff.
+    pub reconnects: AtomicU64,
+}
+
+impl LinkTelemetry {
+    pub fn new(peer: &str) -> LinkTelemetry {
+        LinkTelemetry {
+            peer: peer.to_string(),
+            up: AtomicU64::new(0),
+            sent: AtomicU64::new(0),
+            last_rx_seq: AtomicU64::new(0),
+            last_seen_ms: AtomicU64::new(0),
+            reconnects: AtomicU64::new(0),
+        }
+    }
+
+    /// Seconds since the last inbound record (0 when never seen).
+    pub fn last_seen_age_s(&self) -> f64 {
+        let seen = self.last_seen_ms.load(Ordering::Relaxed);
+        if seen == 0 {
+            return 0.0;
+        }
+        (unix_ms().saturating_sub(seen)) as f64 / 1e3
+    }
+}
+
+impl fmt::Debug for LinkTelemetry {
+    fmt_debug_stub!("LinkTelemetry");
+}
+
+// ---------------------------------------------------------------------
+// Exposition text helpers
+// ---------------------------------------------------------------------
+
+/// Append a `# HELP` + `# TYPE` pair for a metric family.
+pub fn write_help_type(
+    out: &mut Vec<u8>,
+    name: &str,
+    help: &str,
+    kind: &str,
+) {
+    out.extend_from_slice(b"# HELP ");
+    out.extend_from_slice(name.as_bytes());
+    out.push(b' ');
+    out.extend_from_slice(help.as_bytes());
+    out.extend_from_slice(b"\n# TYPE ");
+    out.extend_from_slice(name.as_bytes());
+    out.push(b' ');
+    out.extend_from_slice(kind.as_bytes());
+    out.push(b'\n');
+}
+
+fn write_name_labels(
+    out: &mut Vec<u8>,
+    name: &str,
+    suffix: &str,
+    labels: &[(&str, &str)],
+    extra: Option<(&str, &str)>,
+) {
+    out.extend_from_slice(name.as_bytes());
+    out.extend_from_slice(suffix.as_bytes());
+    if labels.is_empty() && extra.is_none() {
+        return;
+    }
+    out.push(b'{');
+    let mut first = true;
+    for (k, v) in labels.iter().copied().chain(extra) {
+        if !first {
+            out.push(b',');
+        }
+        first = false;
+        out.extend_from_slice(k.as_bytes());
+        out.extend_from_slice(b"=\"");
+        write_label_escaped(out, v);
+        out.push(b'"');
+    }
+    out.push(b'}');
+}
+
+/// Escape a label value per the text exposition format (`\\`, `\"`,
+/// `\n`).
+pub fn write_label_escaped(out: &mut Vec<u8>, v: &str) {
+    for b in v.bytes() {
+        match b {
+            b'\\' => out.extend_from_slice(b"\\\\"),
+            b'"' => out.extend_from_slice(b"\\\""),
+            b'\n' => out.extend_from_slice(b"\\n"),
+            _ => out.push(b),
+        }
+    }
+}
+
+/// Append a float in exposition syntax (`+Inf` / `-Inf` / `NaN`).
+pub fn write_f64(out: &mut Vec<u8>, v: f64) {
+    use std::io::Write;
+    if v.is_nan() {
+        out.extend_from_slice(b"NaN");
+    } else if v == f64::INFINITY {
+        out.extend_from_slice(b"+Inf");
+    } else if v == f64::NEG_INFINITY {
+        out.extend_from_slice(b"-Inf");
+    } else {
+        let _ = write!(out, "{v}");
+    }
+}
+
+/// Append one `name{labels} value` sample line (integer value).
+pub fn write_sample_u64(
+    out: &mut Vec<u8>,
+    name: &str,
+    labels: &[(&str, &str)],
+    v: u64,
+) {
+    write_name_labels(out, name, "", labels, None);
+    out.push(b' ');
+    push_u64(out, v);
+    out.push(b'\n');
+}
+
+/// Append one `name{labels} value` sample line (float value).
+pub fn write_sample_f64(
+    out: &mut Vec<u8>,
+    name: &str,
+    labels: &[(&str, &str)],
+    v: f64,
+) {
+    write_name_labels(out, name, "", labels, None);
+    out.push(b' ');
+    write_f64(out, v);
+    out.push(b'\n');
+}
+
+/// Append a full histogram family member: cumulative `_bucket` lines
+/// (one per power-of-two bound, in seconds), `+Inf`, `_sum`, `_count`.
+pub fn write_histogram(
+    out: &mut Vec<u8>,
+    name: &str,
+    labels: &[(&str, &str)],
+    snap: &HistSnapshot,
+) {
+    let mut cum = 0u64;
+    let mut le_buf: Vec<u8> = Vec::with_capacity(24);
+    for i in 0..HIST_BUCKETS {
+        cum += snap.counts[i];
+        le_buf.clear();
+        write_f64(&mut le_buf, (1u64 << (i + 1)) as f64 / 1e6);
+        let le = std::str::from_utf8(&le_buf).unwrap_or("0");
+        write_name_labels(out, name, "_bucket", labels, Some(("le", le)));
+        out.push(b' ');
+        push_u64(out, cum);
+        out.push(b'\n');
+    }
+    write_name_labels(out, name, "_bucket", labels, Some(("le", "+Inf")));
+    out.push(b' ');
+    push_u64(out, cum);
+    out.push(b'\n');
+    write_name_labels(out, name, "_sum", labels, None);
+    out.push(b' ');
+    write_f64(out, snap.sum_us as f64 / 1e6);
+    out.push(b'\n');
+    write_name_labels(out, name, "_count", labels, None);
+    out.push(b' ');
+    push_u64(out, cum);
+    out.push(b'\n');
+}
+
+// ---------------------------------------------------------------------
+// Exposition parsing + grammar checking (tests, CI, `nodio top`)
+// ---------------------------------------------------------------------
+
+/// One parsed sample line.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Sample {
+    pub name: String,
+    pub labels: Vec<(String, String)>,
+    pub value: f64,
+}
+
+impl Sample {
+    pub fn label(&self, key: &str) -> Option<&str> {
+        self.labels
+            .iter()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+    }
+}
+
+fn is_name_byte(b: u8, first: bool) -> bool {
+    b.is_ascii_alphabetic()
+        || b == b'_'
+        || b == b':'
+        || (!first && b.is_ascii_digit())
+}
+
+fn valid_metric_name(name: &str) -> bool {
+    !name.is_empty()
+        && name
+            .bytes()
+            .enumerate()
+            .all(|(i, b)| is_name_byte(b, i == 0))
+}
+
+/// Parse an exposition float (`+Inf`/`-Inf`/`Inf`/`NaN` accepted).
+pub fn parse_prom_f64(s: &str) -> Option<f64> {
+    match s {
+        "+Inf" | "Inf" => Some(f64::INFINITY),
+        "-Inf" => Some(f64::NEG_INFINITY),
+        "NaN" => Some(f64::NAN),
+        _ => s.parse::<f64>().ok(),
+    }
+}
+
+/// Parse one sample line (`name{labels} value`). Strict about the
+/// grammar the renderer emits: exactly one space before the value, no
+/// timestamps, escaped label values.
+fn parse_sample_line(line: &str) -> Result<Sample, String> {
+    let bytes = line.as_bytes();
+    let mut i = 0;
+    while i < bytes.len() && is_name_byte(bytes[i], i == 0) {
+        i += 1;
+    }
+    if i == 0 {
+        return Err("missing metric name".to_string());
+    }
+    let name = line[..i].to_string();
+    let mut labels = Vec::new();
+    if i < bytes.len() && bytes[i] == b'{' {
+        i += 1;
+        if i < bytes.len() && bytes[i] == b'}' {
+            i += 1; // empty label set
+        } else {
+            loop {
+                let start = i;
+                while i < bytes.len() && is_name_byte(bytes[i], i == start)
+                {
+                    i += 1;
+                }
+                if i == start {
+                    return Err("bad label name".to_string());
+                }
+                let key = line[start..i].to_string();
+                if i + 1 >= bytes.len()
+                    || bytes[i] != b'='
+                    || bytes[i + 1] != b'"'
+                {
+                    return Err("expected =\" after label name".to_string());
+                }
+                i += 2;
+                let mut value = Vec::new();
+                loop {
+                    if i >= bytes.len() {
+                        return Err("unterminated label value".to_string());
+                    }
+                    match bytes[i] {
+                        b'"' => {
+                            i += 1;
+                            break;
+                        }
+                        b'\\' => {
+                            let esc = bytes.get(i + 1).ok_or_else(|| {
+                                "dangling escape".to_string()
+                            })?;
+                            match esc {
+                                b'\\' => value.push(b'\\'),
+                                b'"' => value.push(b'"'),
+                                b'n' => value.push(b'\n'),
+                                _ => {
+                                    return Err(format!(
+                                        "bad escape \\{}",
+                                        *esc as char
+                                    ))
+                                }
+                            }
+                            i += 2;
+                        }
+                        b => {
+                            value.push(b);
+                            i += 1;
+                        }
+                    }
+                }
+                let value = String::from_utf8(value)
+                    .map_err(|_| "label value not utf-8".to_string())?;
+                labels.push((key, value));
+                match bytes.get(i) {
+                    Some(b',') => i += 1,
+                    Some(b'}') => {
+                        i += 1;
+                        break;
+                    }
+                    _ => {
+                        return Err(
+                            "expected ',' or '}' in labels".to_string()
+                        )
+                    }
+                }
+            }
+        }
+    }
+    if bytes.get(i) != Some(&b' ') {
+        return Err("expected space before value".to_string());
+    }
+    i += 1;
+    let value_str = &line[i..];
+    if value_str.is_empty() || value_str.contains(' ') {
+        return Err("malformed value".to_string());
+    }
+    let value = parse_prom_f64(value_str)
+        .ok_or_else(|| format!("bad value {value_str:?}"))?;
+    Ok(Sample { name, labels, value })
+}
+
+/// Parse every sample line of an exposition (comments skipped).
+pub fn parse_exposition(text: &str) -> Result<Vec<Sample>, String> {
+    let mut samples = Vec::new();
+    for (idx, line) in text.lines().enumerate() {
+        if line.trim().is_empty() || line.starts_with('#') {
+            continue;
+        }
+        samples.push(
+            parse_sample_line(line)
+                .map_err(|e| format!("line {}: {e}", idx + 1))?,
+        );
+    }
+    Ok(samples)
+}
+
+fn series_key(s: &Sample) -> String {
+    let mut labels: Vec<String> = s
+        .labels
+        .iter()
+        .map(|(k, v)| format!("{k}={v:?}"))
+        .collect();
+    labels.sort();
+    format!("{}{{{}}}", s.name, labels.join(","))
+}
+
+fn labels_key_without_le(s: &Sample) -> String {
+    let mut labels: Vec<String> = s
+        .labels
+        .iter()
+        .filter(|(k, _)| k != "le")
+        .map(|(k, v)| format!("{k}={v:?}"))
+        .collect();
+    labels.sort();
+    labels.join(",")
+}
+
+fn histogram_family<'a>(
+    name: &str,
+    types: &'a [(String, String)],
+) -> Option<&'a str> {
+    for suffix in ["_bucket", "_sum", "_count"] {
+        if let Some(base) = name.strip_suffix(suffix) {
+            if types
+                .iter()
+                .any(|(n, k)| n == base && k == "histogram")
+            {
+                return Some(
+                    types
+                        .iter()
+                        .find(|(n, _)| n == base)
+                        .map(|(n, _)| n.as_str())
+                        .unwrap_or(base),
+                );
+            }
+        }
+    }
+    None
+}
+
+/// Dependency-free grammar checker for the text exposition format.
+/// Verifies: HELP/TYPE lines well-formed and preceding their samples,
+/// metric/label names valid, label values correctly escaped, values
+/// parseable, no duplicate series, and histogram consistency (buckets
+/// cumulative and monotone, `+Inf` terminal, `_count` equal to the
+/// `+Inf` bucket, `_sum` present).
+pub fn check_exposition(text: &str) -> Result<(), String> {
+    let mut types: Vec<(String, String)> = Vec::new();
+    let mut helps: Vec<String> = Vec::new();
+    let mut samples: Vec<Sample> = Vec::new();
+    let mut keys: Vec<String> = Vec::new();
+    for (idx, line) in text.lines().enumerate() {
+        let ln = idx + 1;
+        if line.trim().is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('#') {
+            let rest = rest.trim_start();
+            if let Some(r) = rest.strip_prefix("HELP ") {
+                let (name, help) = r
+                    .split_once(' ')
+                    .ok_or_else(|| format!("line {ln}: HELP without text"))?;
+                if !valid_metric_name(name) {
+                    return Err(format!(
+                        "line {ln}: bad HELP metric name {name:?}"
+                    ));
+                }
+                if help.trim().is_empty() {
+                    return Err(format!("line {ln}: empty HELP text"));
+                }
+                helps.push(name.to_string());
+            } else if let Some(r) = rest.strip_prefix("TYPE ") {
+                let (name, kind) = r
+                    .split_once(' ')
+                    .ok_or_else(|| format!("line {ln}: TYPE without kind"))?;
+                if !valid_metric_name(name) {
+                    return Err(format!(
+                        "line {ln}: bad TYPE metric name {name:?}"
+                    ));
+                }
+                if !matches!(
+                    kind,
+                    "counter" | "gauge" | "histogram" | "summary"
+                        | "untyped"
+                ) {
+                    return Err(format!(
+                        "line {ln}: unknown metric type {kind:?}"
+                    ));
+                }
+                if types.iter().any(|(n, _)| n == name) {
+                    return Err(format!("line {ln}: duplicate TYPE {name}"));
+                }
+                let already_sampled = samples.iter().any(|s| {
+                    s.name == name
+                        || (kind == "histogram"
+                            && [
+                                format!("{name}_bucket"),
+                                format!("{name}_sum"),
+                                format!("{name}_count"),
+                            ]
+                            .contains(&s.name))
+                });
+                if already_sampled {
+                    return Err(format!(
+                        "line {ln}: TYPE {name} after its samples"
+                    ));
+                }
+                types.push((name.to_string(), kind.to_string()));
+            }
+            // Other # lines are free-form comments: allowed.
+            continue;
+        }
+        let s = parse_sample_line(line)
+            .map_err(|e| format!("line {ln}: {e}"))?;
+        let known = types.iter().any(|(n, _)| *n == s.name)
+            || histogram_family(&s.name, &types).is_some();
+        if !known {
+            return Err(format!(
+                "line {ln}: sample {} without a preceding TYPE",
+                s.name
+            ));
+        }
+        let key = series_key(&s);
+        if keys.contains(&key) {
+            return Err(format!("line {ln}: duplicate series {key}"));
+        }
+        keys.push(key);
+        samples.push(s);
+    }
+    for (name, _) in &types {
+        if !helps.contains(name) {
+            return Err(format!("metric {name} has TYPE but no HELP"));
+        }
+    }
+    // Histogram consistency.
+    for (name, kind) in &types {
+        if kind != "histogram" {
+            continue;
+        }
+        let bucket_name = format!("{name}_bucket");
+        let mut groups: Vec<(String, Vec<(f64, f64)>)> = Vec::new();
+        for s in samples.iter().filter(|s| s.name == bucket_name) {
+            let le = s.label("le").ok_or_else(|| {
+                format!("histogram {name}: bucket without le label")
+            })?;
+            let le_v = parse_prom_f64(le).ok_or_else(|| {
+                format!("histogram {name}: unparseable le {le:?}")
+            })?;
+            let gkey = labels_key_without_le(s);
+            match groups.iter_mut().find(|(k, _)| *k == gkey) {
+                Some((_, buckets)) => buckets.push((le_v, s.value)),
+                None => groups.push((gkey, vec![(le_v, s.value)])),
+            }
+        }
+        for (gkey, mut buckets) in groups {
+            buckets.sort_by(|a, b| {
+                a.0.partial_cmp(&b.0).unwrap_or(std::cmp::Ordering::Equal)
+            });
+            let mut prev = -1.0f64;
+            for (le, v) in &buckets {
+                if *v < prev {
+                    return Err(format!(
+                        "histogram {name}{{{gkey}}}: bucket le={le} \
+                         decreases ({v} < {prev})"
+                    ));
+                }
+                prev = *v;
+            }
+            let Some(&(last_le, last_v)) = buckets.last() else {
+                continue;
+            };
+            if last_le != f64::INFINITY {
+                return Err(format!(
+                    "histogram {name}{{{gkey}}}: missing +Inf bucket"
+                ));
+            }
+            let count = samples
+                .iter()
+                .find(|s| {
+                    s.name == format!("{name}_count")
+                        && labels_key_without_le(s) == gkey
+                })
+                .ok_or_else(|| {
+                    format!("histogram {name}{{{gkey}}}: missing _count")
+                })?;
+            if count.value != last_v {
+                return Err(format!(
+                    "histogram {name}{{{gkey}}}: _count {} != +Inf \
+                     bucket {last_v}",
+                    count.value
+                ));
+            }
+            samples
+                .iter()
+                .find(|s| {
+                    s.name == format!("{name}_sum")
+                        && labels_key_without_le(s) == gkey
+                })
+                .ok_or_else(|| {
+                    format!("histogram {name}{{{gkey}}}: missing _sum")
+                })?;
+        }
+    }
+    Ok(())
+}
+
+/// Quantile over parsed `(le, cumulative count)` buckets: the smallest
+/// bound whose cumulative count reaches the rank. Returns seconds.
+pub fn quantile_from_buckets(buckets: &[(f64, f64)], q: f64) -> f64 {
+    let total = buckets.last().map(|&(_, v)| v).unwrap_or(0.0);
+    if total <= 0.0 {
+        return 0.0;
+    }
+    let rank = (q * total).ceil().max(1.0);
+    for &(le, v) in buckets {
+        if v >= rank {
+            return le;
+        }
+    }
+    buckets.last().map(|&(le, _)| le).unwrap_or(0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Histogram;
+
+    #[test]
+    fn route_classes_cover_the_api() {
+        assert_eq!(
+            route_class(Method::Put, "/experiment/chromosome"),
+            0
+        );
+        assert_eq!(route_class(Method::Put, "/experiment/chromosome/"), 0);
+        assert_eq!(route_class(Method::Get, "/experiment/random"), 1);
+        assert_eq!(route_class(Method::Get, "/"), 2);
+        assert_eq!(route_class(Method::Get, "/experiment/state"), 2);
+        assert_eq!(route_class(Method::Get, "/stats"), 3);
+        assert_eq!(route_class(Method::Get, "/metrics"), 3);
+        assert_eq!(route_class(Method::Get, "/metrics/prom"), 4);
+        assert_eq!(route_class(Method::Get, "/healthz"), 4);
+        assert_eq!(route_class(Method::Get, "/readyz"), 4);
+        assert_eq!(route_class(Method::Get, "/debug/trace"), 5);
+        assert_eq!(route_class(Method::Post, "/experiment/reset"), 6);
+        assert_eq!(route_class(Method::Get, "/nope"), 6);
+    }
+
+    #[test]
+    fn atomic_hist_matches_util_hist_buckets() {
+        // Same bucket function as util::hist: quantiles agree.
+        let ah = AtomicHist::new();
+        let mut h = Histogram::new();
+        for us in [0u64, 1, 2, 3, 10, 100, 1024, 5000, 1 << 20] {
+            ah.record_us(us);
+            h.record(Duration::from_micros(us));
+        }
+        let mut snap = HistSnapshot::new();
+        ah.add_into(&mut snap);
+        assert_eq!(snap.total(), h.count());
+        // p50/p99 resolved from the snapshot match the mutable hist.
+        let mut cum = 0u64;
+        let mut buckets = Vec::new();
+        for (i, c) in snap.counts.iter().enumerate() {
+            cum += c;
+            buckets
+                .push(((1u64 << (i + 1)) as f64 / 1e6, cum as f64));
+        }
+        buckets.push((f64::INFINITY, cum as f64));
+        let p50 = quantile_from_buckets(&buckets, 0.5);
+        assert_eq!(
+            Duration::from_secs_f64(p50),
+            h.quantile(0.5),
+            "p50 mismatch"
+        );
+    }
+
+    #[test]
+    fn trace_ring_records_and_wraps() {
+        let ring = TraceRing::new(4);
+        for i in 0..6u64 {
+            ring.push(TraceKind::EpochStart, 0, i, 0, 0, "");
+        }
+        let dump = ring.dump_json();
+        assert_eq!(dump.get_u64("total"), Some(6));
+        assert_eq!(dump.get_u64("capacity"), Some(4));
+        let events = dump.get("events").unwrap().as_arr().unwrap();
+        assert_eq!(events.len(), 4);
+        // Oldest surviving event first, newest last.
+        assert_eq!(events[0].get_u64("seq"), Some(2));
+        assert_eq!(events[3].get_u64("seq"), Some(5));
+        assert_eq!(events[3].get_u64("experiment"), Some(5));
+        assert_eq!(events[3].get_str("kind"), Some("epoch_start"));
+    }
+
+    #[test]
+    fn trace_ring_solution_event_round_trips() {
+        let ring = TraceRing::new(8);
+        ring.push(
+            TraceKind::Solution,
+            1,
+            3,
+            160.0f64.to_bits(),
+            0,
+            "island-7",
+        );
+        let dump = ring.dump_json();
+        let events = dump.get("events").unwrap().as_arr().unwrap();
+        assert_eq!(events[0].get_str("kind"), Some("solution"));
+        assert_eq!(events[0].get_u64("experiment"), Some(3));
+        assert_eq!(events[0].get_f64("fitness"), Some(160.0));
+        assert_eq!(events[0].get_str("by"), Some("island-7"));
+        assert_eq!(events[0].get_u64("shard"), Some(1));
+    }
+
+    #[test]
+    fn trace_ring_zero_capacity_is_disabled() {
+        let ring = TraceRing::new(0);
+        ring.push(TraceKind::EpochStart, 0, 1, 0, 0, "");
+        assert_eq!(ring.total(), 0);
+        let events = ring.dump_json();
+        assert_eq!(
+            events.get("events").unwrap().as_arr().unwrap().len(),
+            0
+        );
+    }
+
+    #[test]
+    fn label_pack_truncates_and_round_trips() {
+        assert_eq!(unpack_label(&pack_label("")), "");
+        assert_eq!(unpack_label(&pack_label("abc")), "abc");
+        let long = "x".repeat(60);
+        assert_eq!(unpack_label(&pack_label(&long)), "x".repeat(24));
+    }
+
+    #[test]
+    fn readiness_requires_all_three() {
+        let t = Telemetry::new(2, &TelemetrySettings::default());
+        let r = t.readiness();
+        assert!(!r.ready());
+        r.mark_replayed();
+        r.mark_gossip_ready();
+        r.mark_shard_serving();
+        assert!(!r.ready(), "one of two shards up");
+        r.mark_shard_serving();
+        assert!(r.ready());
+        assert!(r.describe().contains("shards=2/2"));
+    }
+
+    fn gauges() -> ServerGauges {
+        ServerGauges {
+            experiment: 3,
+            best_fitness: 42.5,
+            pool_entries: 10,
+            pool_capacity: 1024,
+            completed: 3,
+            shards: 2,
+        }
+    }
+
+    #[test]
+    fn rendered_exposition_passes_the_checker() {
+        let t = Telemetry::new(2, &TelemetrySettings::default());
+        let d0 = t.driver(0);
+        let d1 = t.driver(1);
+        d0.record_request(0, Duration::from_micros(80));
+        d0.record_request(1, Duration::from_micros(3));
+        d1.record_request(0, Duration::from_millis(700)); // slow
+        d0.set_open_conns(4);
+        t.persist(0).record_append(Duration::from_micros(15), 120);
+        t.persist(0).record_fsync(Duration::from_micros(900));
+        t.persist(1).record_snapshot(Duration::from_millis(2), 64);
+        let mut out = Vec::new();
+        t.render_prometheus(&mut out, &gauges());
+        let text = String::from_utf8(out).unwrap();
+        check_exposition(&text).unwrap_or_else(|e| {
+            panic!("checker rejected rendered exposition: {e}\n{text}")
+        });
+        let samples = parse_exposition(&text).unwrap();
+        let total: f64 = samples
+            .iter()
+            .filter(|s| s.name == "nodio_requests_total")
+            .map(|s| s.value)
+            .sum();
+        assert_eq!(total, 3.0);
+        let slow = samples
+            .iter()
+            .find(|s| s.name == "nodio_slow_requests_total")
+            .unwrap();
+        assert_eq!(slow.value, 1.0);
+        assert!(text.contains("nodio_wal_appended_bytes_total 120"));
+        // The slow request also landed in the ring.
+        assert!(text.contains("nodio_trace_events_total 2")); // slow + snapshot
+    }
+
+    #[test]
+    fn checker_rejects_broken_documents() {
+        // Sample without TYPE.
+        assert!(check_exposition("a_metric 1\n").is_err());
+        // TYPE after samples.
+        let doc = "# HELP m x\n# TYPE m counter\nm 1\n# TYPE m gauge\n";
+        assert!(check_exposition(doc).is_err());
+        // TYPE without HELP.
+        assert!(check_exposition("# TYPE m counter\nm 1\n").is_err());
+        // Bad escape in a label value.
+        let doc =
+            "# HELP m x\n# TYPE m counter\nm{l=\"a\\q\"} 1\n";
+        assert!(check_exposition(doc).is_err());
+        // Duplicate series.
+        let doc = "# HELP m x\n# TYPE m counter\nm 1\nm 2\n";
+        assert!(check_exposition(doc).is_err());
+        // Decreasing histogram buckets.
+        let doc = concat!(
+            "# HELP h x\n# TYPE h histogram\n",
+            "h_bucket{le=\"1\"} 5\n",
+            "h_bucket{le=\"2\"} 3\n",
+            "h_bucket{le=\"+Inf\"} 3\n",
+            "h_sum 1\nh_count 3\n",
+        );
+        assert!(check_exposition(doc).is_err());
+        // Missing +Inf bucket.
+        let doc = concat!(
+            "# HELP h x\n# TYPE h histogram\n",
+            "h_bucket{le=\"1\"} 5\n",
+            "h_sum 1\nh_count 5\n",
+        );
+        assert!(check_exposition(doc).is_err());
+        // _count disagreeing with the +Inf bucket.
+        let doc = concat!(
+            "# HELP h x\n# TYPE h histogram\n",
+            "h_bucket{le=\"+Inf\"} 5\n",
+            "h_sum 1\nh_count 4\n",
+        );
+        assert!(check_exposition(doc).is_err());
+        // Missing _sum.
+        let doc = concat!(
+            "# HELP h x\n# TYPE h histogram\n",
+            "h_bucket{le=\"+Inf\"} 5\n",
+            "h_count 5\n",
+        );
+        assert!(check_exposition(doc).is_err());
+        // Bad value.
+        assert!(check_exposition(
+            "# HELP m x\n# TYPE m counter\nm abc\n"
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn label_escaping_round_trips_through_the_parser() {
+        let mut out = Vec::new();
+        write_help_type(&mut out, "m", "peers with odd names", "gauge");
+        write_sample_u64(
+            &mut out,
+            "m",
+            &[("peer", "a\"b\\c\nd")],
+            7,
+        );
+        let text = String::from_utf8(out).unwrap();
+        check_exposition(&text).unwrap();
+        let samples = parse_exposition(&text).unwrap();
+        assert_eq!(samples[0].label("peer"), Some("a\"b\\c\nd"));
+        assert_eq!(samples[0].value, 7.0);
+    }
+
+    #[test]
+    fn exposition_floats() {
+        let mut out = Vec::new();
+        write_f64(&mut out, f64::NEG_INFINITY);
+        out.push(b' ');
+        write_f64(&mut out, f64::INFINITY);
+        out.push(b' ');
+        write_f64(&mut out, 0.000002);
+        assert_eq!(
+            String::from_utf8(out).unwrap(),
+            "-Inf +Inf 0.000002"
+        );
+        assert_eq!(parse_prom_f64("-Inf"), Some(f64::NEG_INFINITY));
+        assert_eq!(parse_prom_f64("0.5"), Some(0.5));
+        assert!(parse_prom_f64("x").is_none());
+    }
+
+    #[test]
+    fn render_is_deterministic_for_equal_state() {
+        // Two registries fed identical events render identical bytes —
+        // the property behind the single-vs-cluster byte-equality test.
+        let make = || {
+            let t = Telemetry::new(1, &TelemetrySettings::default());
+            t.shard(0).wal_append_bytes.store(99, Ordering::Relaxed);
+            let mut out = Vec::new();
+            t.render_prometheus(&mut out, &gauges());
+            out
+        };
+        assert_eq!(make(), make());
+    }
+}

@@ -18,6 +18,7 @@ use std::time::{Duration, Instant};
 use super::parse::RequestParser;
 use super::types::Response;
 use super::Service;
+use crate::coordinator::telemetry::{route_class, DriverTelemetry};
 use crate::eventloop::{Epoll, Event, Interest, Waker};
 
 pub(crate) const TOKEN_LISTENER: u64 = 0;
@@ -39,6 +40,10 @@ pub struct ServerConfig {
     pub tick: Duration,
     /// Maximum simultaneous connections; accepts beyond this are refused.
     pub max_connections: usize,
+    /// Telemetry recording bundle for this event loop. `None` (the
+    /// default) keeps the loop metric-free; the pool coordinators set it
+    /// so every served request lands in a latency histogram.
+    pub telemetry: Option<DriverTelemetry>,
 }
 
 impl Default for ServerConfig {
@@ -47,6 +52,7 @@ impl Default for ServerConfig {
             idle_timeout: Duration::from_secs(30),
             tick: Duration::from_millis(100),
             max_connections: 4096,
+            telemetry: None,
         }
     }
 }
@@ -140,7 +146,15 @@ impl ConnDriver {
         }
         self.conns.insert(token, Conn::new(stream));
         stats.connections.fetch_add(1, Ordering::Relaxed);
+        self.publish_conns();
         true
+    }
+
+    /// Publish the live connection count gauge (no-op without telemetry).
+    fn publish_conns(&self) {
+        if let Some(t) = &self.config.telemetry {
+            t.set_open_conns(self.conns.len() as u64);
+        }
     }
 
     /// React to a readiness event for a connection token. Unknown tokens
@@ -161,6 +175,7 @@ impl ConnDriver {
                     service,
                     &mut self.read_buf,
                     stats,
+                    self.config.telemetry.as_ref(),
                 );
             }
             if !drop_conn && (ev.writable || conn.pending_out()) {
@@ -174,6 +189,7 @@ impl ConnDriver {
             if let Some(conn) = self.conns.remove(&token) {
                 epoll.remove(conn.stream.as_raw_fd());
             }
+            self.publish_conns();
         }
     }
 
@@ -194,10 +210,14 @@ impl ConnDriver {
             })
             .map(|(t, _)| *t)
             .collect();
+        let swept = !idle.is_empty();
         for token in idle {
             if let Some(conn) = self.conns.remove(&token) {
                 epoll.remove(conn.stream.as_raw_fd());
             }
+        }
+        if swept {
+            self.publish_conns();
         }
     }
 
@@ -208,6 +228,7 @@ impl ConnDriver {
         service: &mut S,
         read_buf: &mut [u8],
         stats: &ServerStats,
+        telemetry: Option<&DriverTelemetry>,
     ) -> bool {
         conn.last_active = Instant::now();
         loop {
@@ -228,7 +249,17 @@ impl ConnDriver {
                     // capacity-retaining) output buffer; services with a
                     // cached hot path override handle_into to skip the
                     // Response object entirely.
-                    service.handle_into(&req, keep, &mut conn.out);
+                    match telemetry {
+                        Some(t) => {
+                            let class = route_class(req.method, &req.path);
+                            let start = Instant::now();
+                            service.handle_into(&req, keep, &mut conn.out);
+                            t.record_request(class, start.elapsed());
+                        }
+                        None => {
+                            service.handle_into(&req, keep, &mut conn.out)
+                        }
+                    }
                     if !keep {
                         conn.close_after_write = true;
                         break;

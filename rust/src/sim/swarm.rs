@@ -32,6 +32,10 @@ pub struct ChurnConfig {
 /// Swarm experiment configuration.
 #[derive(Debug, Clone)]
 pub struct SwarmConfig {
+    /// Listen address for the pool server (`--addr`). The default binds
+    /// an ephemeral port; pin it to scrape `/metrics/prom`, `/debug/
+    /// trace` or `nodio top` from outside while the swarm runs.
+    pub addr: String,
     /// Number of clients when churn is disabled; initial clients otherwise.
     pub n_clients: usize,
     /// The experiment the whole swarm runs: problem family, genome
@@ -73,6 +77,7 @@ pub struct SwarmConfig {
 impl Default for SwarmConfig {
     fn default() -> Self {
         SwarmConfig {
+            addr: "127.0.0.1:0".into(),
             n_clients: 4,
             problem: ProblemSpec::trap(),
             mode: WorkerMode::W2,
@@ -148,7 +153,7 @@ impl SwarmReport {
 
 /// Run a swarm experiment to completion.
 pub fn run_swarm(config: SwarmConfig) -> Result<SwarmReport> {
-    let handle = PoolBackend::spawn("127.0.0.1:0", config.backend_config())
+    let handle = PoolBackend::spawn(&config.addr, config.backend_config())
         .map_err(|e| anyhow!("pool server: {e}"))?;
     let addr = handle.addr();
     let mut rng = SplitMix64::new(config.seed);
@@ -716,6 +721,128 @@ mod tests {
         assert!(report.clients_spawned > 1, "{report:?}");
         // Departed clients' stats were collected.
         assert!(!report.client_stats.is_empty());
+    }
+
+    #[test]
+    fn swarm_trace_ring_records_lifecycle_and_slow_requests() {
+        use crate::coordinator::cluster::MAX_PUT_BATCH;
+        use crate::coordinator::telemetry::TelemetrySettings;
+        use crate::json::Json;
+
+        // The flight-recorder scenario: a solving swarm with the trace
+        // ring on and the slow-request threshold at its floor (1 ms).
+        // After the run, /debug/trace must hold the experiment lifecycle
+        // (epoch_start + solution), and a deliberately heavy /stats
+        // scrape must land a slow_request event next to them.
+        let problem = ProblemSpec::trap();
+        let handle = PoolServer::spawn(
+            "127.0.0.1:0",
+            PoolServerConfig {
+                telemetry: TelemetrySettings {
+                    trace_buffer: 512,
+                    slow_ms: 1,
+                },
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let addr = handle.addr;
+
+        let mut rng = SplitMix64::new(41);
+        let clients: Vec<ClientProcess> = (0..2)
+            .map(|i| {
+                ClientProcess::spawn(
+                    Some(addr),
+                    &problem,
+                    WorkerMode::W2,
+                    EngineChoice::Native,
+                    256,
+                    rng.next_u64(),
+                    &format!("trace-ring-{i}"),
+                    u64::MAX,
+                    1.0,
+                )
+            })
+            .collect();
+
+        let mut monitor = HttpClient::connect(addr).unwrap();
+        let t0 = Instant::now();
+        let mut solved = false;
+        while t0.elapsed() < Duration::from_secs(120) {
+            std::thread::sleep(Duration::from_millis(20));
+            let completed = monitor
+                .send(&Request::new(Method::Get, "/experiment/state"))
+                .ok()
+                .and_then(|r| r.json_body().ok())
+                .and_then(|b| b.get_u64("completed"))
+                .unwrap_or(0);
+            if completed > 0 {
+                solved = true;
+                break;
+            }
+        }
+        for c in clients {
+            c.shutdown();
+        }
+        assert!(solved, "swarm never solved within the timeout");
+
+        // Grow the per-uuid ledger with full-size batches of distinct
+        // volunteers: /stats sorts and renders every uuid it has ever
+        // seen, so each round makes the scrape heavier until one
+        // dispatch crosses the 1 ms line.
+        let chromo = "01".repeat(80); // trap is 160-bit
+        let mut slow_seen = false;
+        for round in 0..50 {
+            let items: Vec<Json> = (0..MAX_PUT_BATCH)
+                .map(|i| {
+                    let uuid = format!("seed-{round}-{i}");
+                    Json::obj(vec![
+                        ("chromosome", chromo.as_str().into()),
+                        ("fitness", 0.5.into()),
+                        ("uuid", uuid.as_str().into()),
+                    ])
+                })
+                .collect();
+            let put = Request::new(Method::Put, "/experiment/chromosome")
+                .with_json(&Json::Arr(items));
+            let resp = monitor.send(&put).unwrap();
+            assert_eq!(resp.status, 200, "batch PUT round {round} failed");
+            // The heavy scrape is itself the slow-request candidate.
+            let stats =
+                monitor.send(&Request::new(Method::Get, "/stats")).unwrap();
+            assert_eq!(stats.status, 200);
+            let trace = monitor
+                .send(&Request::new(Method::Get, "/debug/trace"))
+                .unwrap();
+            assert_eq!(trace.status, 200);
+            let body = trace.json_body().unwrap();
+            let events =
+                body.get("events").and_then(|e| e.as_arr()).unwrap();
+            if events
+                .iter()
+                .any(|e| e.get_str("kind") == Some("slow_request"))
+            {
+                slow_seen = true;
+                break;
+            }
+        }
+        assert!(
+            slow_seen,
+            "no slow_request event after 50 heavy /stats scrapes"
+        );
+
+        let trace = monitor
+            .send(&Request::new(Method::Get, "/debug/trace"))
+            .unwrap();
+        let body = trace.json_body().unwrap();
+        let events = body.get("events").and_then(|e| e.as_arr()).unwrap();
+        let has_kind = |k: &str| {
+            events.iter().any(|e| e.get_str("kind") == Some(k))
+        };
+        assert!(has_kind("epoch_start"), "missing epoch_start: {body:?}");
+        assert!(has_kind("solution"), "missing solution: {body:?}");
+        drop(monitor);
+        handle.stop();
     }
 }
 

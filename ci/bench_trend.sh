@@ -1,0 +1,110 @@
+#!/usr/bin/env bash
+# Bench trend gate: compare freshly-written NODIO_BENCH_JSON summaries
+# (BENCH_hotpath.json / BENCH_wal.json / BENCH_federation.json) against
+# the committed baselines under rust/benches/baselines/, failing on a
+# >25% regression of any gated field.
+#
+#   bash ci/bench_trend.sh BENCH_hotpath.json [BENCH_wal.json ...]
+#
+# Each summary carries its bench name in the "bench" member; the gated
+# fields and their direction are declared per bench below. "up" fields
+# (throughput ratios) regress by falling, "down" fields (allocation
+# budgets) regress by rising; down checks get a +0.5 absolute slack so
+# a zero baseline (the allocation-free GET) still tolerates counting
+# noise without admitting a real new allocation per request.
+#
+# The committed baselines are the documented gate values, not a single
+# machine's measurements — refresh them from a CI artifact when a PR
+# legitimately moves the floor.
+set -euo pipefail
+
+BASELINES="$(dirname "$0")/../rust/benches/baselines"
+FAILED=0
+
+# Print the first numeric value of "<key>" in <file> (empty if absent
+# or null) — the summaries are the pretty-printed JSON the benches
+# write, so a line-oriented extraction is dependency-free.
+field() { # field <file> <key>
+    grep -o "\"$2\"[[:space:]]*:[[:space:]]*[-0-9.eE+]*" "$1" \
+        | head -n 1 | sed 's/.*://; s/[[:space:]]//g'
+}
+
+bench_name() { # bench_name <file>
+    grep -o '"bench"[[:space:]]*:[[:space:]]*"[a-z_]*"' "$1" \
+        | head -n 1 | sed 's/.*"\([a-z_]*\)"$/\1/'
+}
+
+check() { # check <file> <baseline> <key> <up|down>
+    local fresh base
+    fresh=$(field "$1" "$3")
+    base=$(field "$2" "$3")
+    if [[ -z "$fresh" ]]; then
+        echo "FAIL: $1 has no numeric \"$3\" (bench died mid-run?)"
+        FAILED=1
+        return
+    fi
+    if [[ -z "$base" ]]; then
+        echo "FAIL: $2 has no numeric \"$3\" (baseline out of date?)"
+        FAILED=1
+        return
+    fi
+    local ok
+    if [[ "$4" == up ]]; then
+        ok=$(awk -v f="$fresh" -v b="$base" \
+            'BEGIN { print (f >= b * 0.75) ? 1 : 0 }')
+    else
+        ok=$(awk -v f="$fresh" -v b="$base" \
+            'BEGIN { print (f <= b * 1.25 + 0.5) ? 1 : 0 }')
+    fi
+    if [[ "$ok" == 1 ]]; then
+        echo "PASS: $3 = $fresh (baseline $base, $4 is better)"
+    else
+        echo "FAIL: $3 regressed >25%: $fresh vs baseline $base"
+        FAILED=1
+    fi
+}
+
+if [[ $# -eq 0 ]]; then
+    echo "usage: bash ci/bench_trend.sh <BENCH_*.json>..." >&2
+    exit 1
+fi
+
+for f in "$@"; do
+    if [[ ! -f "$f" ]]; then
+        echo "FAIL: $f missing (bench never wrote its summary)"
+        FAILED=1
+        continue
+    fi
+    name=$(bench_name "$f")
+    base="$BASELINES/$name.json"
+    if [[ ! -f "$base" ]]; then
+        echo "FAIL: no committed baseline for bench \"$name\" ($base)"
+        FAILED=1
+        continue
+    fi
+    echo "== $f vs $base =="
+    case "$name" in
+        hotpath_alloc)
+            check "$f" "$base" fast_over_legacy_ratio up
+            check "$f" "$base" get_allocs_per_req down
+            check "$f" "$base" put_allocs_per_req down
+            check "$f" "$base" real_put_allocs_per_req down
+            ;;
+        wal_overhead)
+            check "$f" "$base" wal_on_over_off_ratio up
+            ;;
+        federation_scaling)
+            check "$f" "$base" speedup_fed2_vs_single1 up
+            ;;
+        *)
+            echo "FAIL: unknown bench \"$name\" in $f"
+            FAILED=1
+            ;;
+    esac
+done
+
+if [[ "$FAILED" != 0 ]]; then
+    echo "bench trend: REGRESSION DETECTED"
+    exit 1
+fi
+echo "bench trend: ALL WITHIN 25% OF BASELINE"

@@ -3,11 +3,23 @@
 # ring on localhost, exchanging CRC-framed WAL records over TCP.
 #
 #   1. best-chromosome propagation: a PUT at one peer becomes visible in
-#      every peer's /experiment/state within the gossip interval;
+#      every peer's /experiment/state within the gossip interval — and
+#      its provenance tag (origin node + gossip hop) is visible in every
+#      peer's /experiment/lineage;
 #   2. rejoin + catch-up: one peer is killed and restarted, reconnects,
 #      and re-learns the federation's best via re-gossip;
 #   3. one winner: a solving PUT at one peer terminates the experiment at
-#      ALL peers (experiment epoch + completed count advance everywhere).
+#      ALL peers (experiment epoch + completed count advance everywhere);
+#   4. observability: every peer's /metrics/prom validates under
+#      `nodio promcheck` and carries federation link gauges, the remote
+#      peers' flight recorders hold the fast_forward trace event, the
+#      winner's cross-process lineage is reconstructable from any peer,
+#      and `nodio trace assemble --url ...` merges all three flight
+#      recorders into one cross-process timeline;
+#   5. lineage survives kill + rejoin: a restarted (stateless) peer
+#      re-learns the winner's full lineage through the hello catch-up;
+#   6. `nodio trace assemble <data-dir>` reconstructs origin tags from a
+#      killed persistent server's WAL, offline.
 #
 # Runs locally (`bash ci/federation_smoke.sh`) and in the CI
 # `federation-smoke` job. The only dependency is the nodio binary itself:
@@ -94,6 +106,20 @@ for i in 0 1 2; do
 done
 echo "PASS: best chromosome propagated to every peer"
 
+# --- 1b. provenance: the best entry's lineage at every peer ------------
+# Peer 0 ingested the PUT, so its lineage names the origin tag directly;
+# peers 1 and 2 received it over gossip, so theirs additionally carries
+# the delivery hop naming the receiving peer.
+wait_for "127.0.0.1:$BASE/experiment/lineage" \
+    '"best":{"uuid":"smoke"' "best lineage at origin peer 0"
+for i in 1 2; do
+    wait_for "127.0.0.1:$((BASE + i))/experiment/lineage" \
+        '"origin":{"node":"peer-0"' "origin tag visible at peer $i"
+    wait_for "127.0.0.1:$((BASE + i))/experiment/lineage" \
+        '"hops":\[{"node":"peer-'$i'"' "gossip hop recorded at peer $i"
+done
+echo "PASS: origin tag + gossip hop visible at every peer"
+
 # --- 2. kill one peer, restart it, assert it rejoins and catches up ---
 put 1 "01110111" 5.5
 for i in 0 1 2; do
@@ -124,5 +150,94 @@ for i in 0 1 2; do
         '"completed":1' "peer $i recorded the completed experiment"
 done
 echo "PASS: federation converged on one winner"
+
+# --- 4. observability: promcheck, link gauges, traces, lineage ---------
+for i in 0 1 2; do
+    "$NODIO" promcheck "127.0.0.1:$((BASE + i))/metrics/prom" >/dev/null
+    http GET "127.0.0.1:$((BASE + i))/metrics/prom" \
+        | grep -q 'nodio_federation_link_up{peer=' || {
+        echo "FAIL: no federation link gauge at peer $i" >&2
+        exit 1
+    }
+done
+echo "PASS: every exposition validates and carries link gauges"
+
+# Peers 1 and 2 learned the termination over the wire, so their flight
+# recorders hold a fast_forward event; every peer's completed history
+# names the winner's origin tag (ingested at peer 0).
+for i in 1 2; do
+    wait_for "127.0.0.1:$((BASE + i))/debug/trace" \
+        '"kind":"fast_forward"' "fast_forward trace event at peer $i"
+done
+for i in 0 1 2; do
+    wait_for "127.0.0.1:$((BASE + i))/experiment/lineage" \
+        '"uuid":"smoke","origin":{"node":"peer-0"' \
+        "winner lineage reconstructable at peer $i"
+done
+echo "PASS: winner lineage reconstructable from every peer"
+
+# The offline assembler merges all three flight recorders into one
+# timeline: the solver's solution event and the remote peers'
+# fast_forward events land in a single causally-ordered view.
+ASSEMBLED=$("$NODIO" trace assemble \
+    --url "127.0.0.1:$BASE" \
+    --url "127.0.0.1:$((BASE + 1))" \
+    --url "127.0.0.1:$((BASE + 2))")
+for i in 0 1 2; do
+    echo "$ASSEMBLED" | grep -q "127.0.0.1:$((BASE + i))" || {
+        echo "FAIL: assembled timeline is missing peer $i" >&2
+        echo "$ASSEMBLED" >&2
+        exit 1
+    }
+done
+echo "$ASSEMBLED" | grep -q 'trace solution.*by="smoke"' || {
+    echo "FAIL: assembled timeline is missing the solution event" >&2
+    echo "$ASSEMBLED" >&2
+    exit 1
+}
+echo "$ASSEMBLED" | grep -q 'trace fast_forward' || {
+    echo "FAIL: assembled timeline is missing fast_forward events" >&2
+    echo "$ASSEMBLED" >&2
+    exit 1
+}
+echo "PASS: trace assemble merged all three flight recorders"
+
+# --- 5. lineage survives kill + rejoin ---------------------------------
+# Kill peer 2 (its outbound dial targets the still-alive peer 0) and
+# restart it stateless on a fresh gossip port: everything it knew is
+# gone, so the winner's lineage can only come back over the wire — the
+# hello catch-up re-delivers the epoch transition WITH the lineage
+# record, gaining a hop that names the re-learning peer.
+kill "${PIDS[2]}"
+wait "${PIDS[2]}" 2>/dev/null || true
+PIDS[2]=0
+launch_peer 2 $((GBASE + 4))
+wait_for "127.0.0.1:$((BASE + 2))/readyz" '^ready$' "peer 2 back up again"
+wait_for "127.0.0.1:$((BASE + 2))/experiment/lineage" \
+    '"uuid":"smoke","origin":{"node":"peer-0"' \
+    "restarted peer 2 re-learned the winner's lineage"
+echo "PASS: cross-process lineage survived kill + rejoin"
+
+# --- 6. offline WAL assembly -------------------------------------------
+# A persistent single-loop server ingests one PUT, dies, and the
+# assembler reconstructs the origin tag from its WAL alone — no server.
+SOLO_DIR="$LOGDIR/solo-data"
+"$NODIO" server --addr "127.0.0.1:$((BASE + 3))" \
+    --data-dir "$SOLO_DIR" --target 8 --bits 8 \
+    >"$LOGDIR/solo.log" 2>&1 &
+SOLO=$!
+PIDS+=("$SOLO")
+wait_for "127.0.0.1:$((BASE + 3))/readyz" '^ready$' "solo server ready"
+http PUT "127.0.0.1:$((BASE + 3))/experiment/chromosome" \
+    --body '{"chromosome":"01010101","fitness":4.5,"uuid":"smoke"}' \
+    >/dev/null
+kill "$SOLO"
+wait "$SOLO" 2>/dev/null || true
+"$NODIO" trace assemble "$SOLO_DIR" | grep -q 'local/0/smoke/1' || {
+    echo "FAIL: WAL assembly did not reconstruct the origin tag" >&2
+    "$NODIO" trace assemble "$SOLO_DIR" >&2 || true
+    exit 1
+}
+echo "PASS: offline WAL assembly reconstructed the origin tag"
 
 echo "federation smoke: ALL PASS"

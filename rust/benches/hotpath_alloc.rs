@@ -15,11 +15,12 @@
 //!   (best-of-3 per phase), so the gated ratio is self-calibrating and a
 //!   transient CPU stall cannot silently skew it.
 //!
-//! Every measured fast-path request also records into a live telemetry
-//! registry (latency histogram + slow-request check), exactly as the
-//! event loop's `ConnDriver` does — the gates below certify the hot
-//! path with the metric subsystem enabled, not an instrumentation-free
-//! build.
+//! The routers are wired to a live telemetry registry via
+//! `Router::set_telemetry` — exactly the production configuration — so
+//! every measured request pays for the latency-histogram record, the
+//! slow-request check, and (on PUTs) the provenance stamp + exemplar
+//! hand-off. The gates below certify the hot path with the metric and
+//! provenance subsystems enabled, not an instrumentation-free build.
 //!
 //! Gates (process exits 1 on violation — CI job `bench-smoke`):
 //! * steady-state cached `GET /experiment/random` must do **0
@@ -42,7 +43,6 @@ use std::time::{Duration, Instant};
 use nodio::bench::{write_json_summary, Table};
 use nodio::coordinator::cluster::{ClusterConfig, ShardedPoolServer};
 use nodio::coordinator::routes::{build_router, PoolState};
-use nodio::coordinator::telemetry::{route_class, Telemetry, TelemetrySettings};
 use nodio::coordinator::PoolServerConfig;
 use nodio::genome::ProblemSpec;
 use nodio::http::{HttpClient, Method, Request, Response, Router, Service};
@@ -280,15 +280,12 @@ fn main() {
     };
     let mut out: Vec<u8> = Vec::with_capacity(64 * 1024);
 
-    // Live telemetry, exactly as `ConnDriver` records it: every measured
-    // fast-path request below pays for a timestamp pair and a latency-
-    // histogram record (default registry: 256-slot trace ring, 500 ms
-    // slow threshold) — the allocation gates certify the hot path WITH
-    // the metric subsystem enabled.
-    let telemetry = Telemetry::new(1, &TelemetrySettings::default());
-    let recorder = telemetry.driver(0);
-    let get_class = route_class(Method::Get, "/experiment/random");
-    let put_class = route_class(Method::Put, "/experiment/chromosome");
+    // Telemetry is wired the production way with no bench-side setup:
+    // `build_router` hands the router its state's live registry
+    // (default: 256-slot trace ring, 500 ms slow threshold), so every
+    // measured request below pays for the latency-histogram record, the
+    // slow-request check, and (on PUTs) the provenance stamp + exemplar
+    // hand-off.
 
     // ==================================================================
     // Phase A — allocation gates (deterministic: the GET phase runs on a
@@ -304,9 +301,7 @@ fn main() {
         out.clear();
     }
     let (t_get_a, a_get, b_get) = measured(n, || {
-        let t = Instant::now();
         router.handle_into(&get_req, true, &mut out);
-        recorder.record_request(get_class, t.elapsed());
         out.clear();
     });
     let get_allocs_per_req = a_get as f64 / n as f64;
@@ -316,9 +311,7 @@ fn main() {
         out.clear();
     }
     let (t_put_a, a_put, b_put) = measured(n, || {
-        let t = Instant::now();
         router.handle_into(&put_req, true, &mut out);
-        recorder.record_request(put_class, t.elapsed());
         out.clear();
     });
     let put_allocs_per_req = a_put as f64 / n as f64;
@@ -344,9 +337,7 @@ fn main() {
         out.clear();
     }
     let (_t, ra_get, rb_get) = measured(n, || {
-        let t = Instant::now();
         real_router.handle_into(&get_req, true, &mut out);
-        recorder.record_request(get_class, t.elapsed());
         out.clear();
     });
     let real_get_allocs_per_req = ra_get as f64 / n as f64;
@@ -355,9 +346,7 @@ fn main() {
         out.clear();
     }
     let (_t, ra_put, rb_put) = measured(n, || {
-        let t = Instant::now();
         real_router.handle_into(&real_put_req, true, &mut out);
-        recorder.record_request(put_class, t.elapsed());
         out.clear();
     });
     let real_put_allocs_per_req = ra_put as f64 / n as f64;
@@ -387,16 +376,12 @@ fn main() {
     let (mut la_get, mut la_put) = (0u64, 0u64);
     for _ in 0..3 {
         let (t, _, _) = measured(per_round, || {
-            let t = Instant::now();
             router.handle_into(&get_req, true, &mut out);
-            recorder.record_request(get_class, t.elapsed());
             out.clear();
         });
         t_get = t_get.min(t);
         let (t, _, _) = measured(per_round, || {
-            let t = Instant::now();
             router.handle_into(&put_req, true, &mut out);
-            recorder.record_request(put_class, t.elapsed());
             out.clear();
         });
         t_put = t_put.min(t);

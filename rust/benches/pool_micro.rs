@@ -88,15 +88,17 @@ fn main() {
     {
         let mut pool = ChromosomePool::new(1024);
         let mut rng = SplitMix64::new(5);
-        let chromosome =
+        let chromosome = nodio::genome::Genome::Bits(
             nodio::problems::PackedBits::from_str01(&"01".repeat(80))
-                .unwrap();
+                .unwrap(),
+        );
         bench("pool: put (at capacity)", &cfg, || {
             pool.put(
                 PoolEntry {
                     chromosome: chromosome.clone(),
                     fitness: 40.0,
                     uuid: "bench".into(),
+                    origin: Default::default(),
                 },
                 &mut rng,
             );

@@ -11,7 +11,10 @@ use crate::client::driver::EngineChoice;
 use crate::client::volunteer::{ClientConfig, VolunteerClient};
 use crate::client::worker::WorkerMode;
 use crate::coordinator::cluster::{ClusterConfig, PoolBackend};
-use crate::coordinator::persistence::replay_dir;
+use crate::coordinator::persistence::{
+    replay_dir, shard_dir, wal, WAL_FILE,
+};
+use crate::coordinator::provenance::{LineageRecord, Provenance};
 use crate::coordinator::telemetry::{
     check_exposition, parse_exposition, quantile_from_buckets, Sample,
     TelemetrySettings,
@@ -19,6 +22,7 @@ use crate::coordinator::telemetry::{
 use crate::coordinator::{FederationConfig, PersistConfig, PoolServerConfig};
 use crate::genome::ProblemSpec;
 use crate::http::{HttpClient, Method, Request};
+use crate::json::{self, Json};
 use crate::problems::F15Instance;
 use crate::runtime::{NativeEngine, XlaEngine};
 use crate::sim::{run_baseline, run_swarm, run_swarm_trace, ChurnConfig,
@@ -53,10 +57,13 @@ commands:
             they exchange best individuals and experiment terminations
             over TCP as CRC-framed WAL records (--peer is repeatable or
             comma-separated; --gossip-every is the send period in ms).
-            Observability: GET /metrics/prom (Prometheus text format),
-            /healthz, /readyz, /debug/trace (the flight recorder;
-            --trace-buffer sets its capacity in events, 0 disables;
-            requests at or over --slow-ms are counted and traced)
+            Observability: GET /metrics/prom (Prometheus text format,
+            latency histograms carry provenance exemplars), /healthz,
+            /readyz, /debug/trace (the flight recorder; --trace-buffer
+            sets its per-ring capacity in events, 0 disables; requests
+            at or over --slow-ms are counted and traced), and
+            /experiment/lineage (the best entry's and every epoch
+            winner's origin tag + hop chain)
   http      <METHOD> <URL> [--body JSON] [--timeout-s 10]
             one-shot request against a pool server (GET 127.0.0.1:8080/
             stats, PUT with --body, ...); prints the response body,
@@ -104,8 +111,14 @@ commands:
             the Figure 4 engine comparison, quick form (experiment E2)
   trace     generate --out trace.jsonl [--horizon-s 120] [--rate 0.5]
             [--seed N] | stats --in trace.jsonl |
-            replay --in trace.jsonl [--engine E] [--scale 1.0]
-            volunteer-session traces: create, inspect, replay (X5)
+            replay --in trace.jsonl [--engine E] [--scale 1.0] |
+            assemble <data-dir>... [--url HOST:PORT ...]
+            volunteer-session traces: create, inspect, replay (X5);
+            `assemble` is different: it merges several processes' WAL
+            directories and live /debug/trace dumps into one
+            causally-ordered cross-process timeline keyed by
+            provenance tags and per-link wire seqs, then prints each
+            distinct origin tag's full hop chain
 
 persistence (the durable-experiment subsystem):
   --data-dir holds one directory per shard (shard-0000/...), each with an
@@ -245,6 +258,7 @@ fn telemetry_args(args: &Args) -> Result<TelemetrySettings> {
         slow_ms: args
             .get_u64("slow-ms", defaults.slow_ms)
             .map_err(|e| anyhow!(e))?,
+        latency_override_us: defaults.latency_override_us,
     })
 }
 
@@ -293,7 +307,8 @@ fn cmd_server(args: &Args) -> Result<()> {
     println!("        GET /experiment/random, GET /experiment/state,");
     println!("        GET /experiment/history, GET /stats, GET /metrics,");
     println!("        GET /metrics/prom, GET /healthz, GET /readyz,");
-    println!("        GET /debug/trace, POST /experiment/reset");
+    println!("        GET /debug/trace, GET /experiment/lineage,");
+    println!("        POST /experiment/reset");
     if args.flag("no-persist") {
         println!("persistence: disabled (--no-persist)");
     } else {
@@ -819,14 +834,19 @@ fn cmd_trace(args: &Args) -> Result<()> {
         .or_else(|| args.get("action"))
         .map(str::to_string)
         .or_else(|| {
-            for a in ["generate", "stats", "replay"] {
+            for a in ["generate", "stats", "replay", "assemble"] {
                 if args.flag(a) {
                     return Some(a.to_string());
                 }
             }
             None
         })
-        .ok_or_else(|| anyhow!("trace: pass generate/stats/replay (or --action NAME)"))?;
+        .ok_or_else(|| {
+            anyhow!(
+                "trace: pass generate/stats/replay/assemble \
+                 (or --action NAME)"
+            )
+        })?;
     match action.as_str() {
         "generate" => {
             let out = args.get("out").unwrap_or("trace.jsonl");
@@ -877,6 +897,270 @@ fn cmd_trace(args: &Args) -> Result<()> {
             );
             Ok(())
         }
+        "assemble" => cmd_trace_assemble(args),
         other => bail!("unknown trace action {other}"),
+    }
+}
+
+/// One merged cross-process timeline entry. Wall-clock ms is the
+/// primary ordering key — per-process WAL/ring seqs only order events
+/// within their own source, so they serve as the tie-break.
+struct AssembledEvent {
+    ts_ms: u64,
+    source: String,
+    seq: u64,
+    line: String,
+}
+
+/// `nodio trace assemble <data-dir>... [--url HOST:PORT ...]` — the
+/// offline half of the lineage story: merge several processes' WAL
+/// directories (and, optionally, live `/debug/trace` dumps fetched
+/// over HTTP) into one causally-ordered cross-process timeline.
+/// Every event that carries a provenance tag prints it, and the
+/// footer reconstructs each distinct origin tag's longest observed
+/// hop chain — the winner's journey origin volunteer → shards →
+/// gossip links, stitched from whichever peer saw each leg.
+fn cmd_trace_assemble(args: &Args) -> Result<()> {
+    // Skip the subaction operand when it was given positionally (the
+    // `--action assemble` spelling passes data dirs from operand 0).
+    let first = usize::from(args.positional(0) == Some("assemble"));
+    let dirs: Vec<&str> = (first..args.positional_count())
+        .filter_map(|i| args.positional(i))
+        .collect();
+    let urls = args.get_multi("url");
+    if dirs.is_empty() && urls.is_empty() {
+        bail!(
+            "usage: nodio trace assemble <data-dir>... \
+             [--url HOST:PORT ...]"
+        );
+    }
+    let mut events: Vec<AssembledEvent> = Vec::new();
+    let mut lineages: Vec<(String, Provenance)> = Vec::new();
+    for dir in &dirs {
+        assemble_wal_dir(
+            std::path::Path::new(dir),
+            &mut events,
+            &mut lineages,
+        )?;
+    }
+    for url in &urls {
+        let (host, path) = split_url(url);
+        let path = if path == "/" { "/debug/trace" } else { path };
+        let text = fetch_text(host, path)?;
+        let dump = json::parse(&text)
+            .map_err(|e| anyhow!("{host}{path}: {e}"))?;
+        assemble_trace_dump(host, &dump, &mut events);
+    }
+    events.sort_by(|a, b| {
+        (a.ts_ms, &a.source, a.seq).cmp(&(b.ts_ms, &b.source, b.seq))
+    });
+    println!(
+        "assembled {} event(s) from {} WAL dir(s) and {} live dump(s)",
+        events.len(),
+        dirs.len(),
+        urls.len()
+    );
+    for e in &events {
+        println!("{:>13}  {:<24}  {}", e.ts_ms, e.source, e.line);
+    }
+    // One chain per distinct origin tag; a tag observed by several
+    // sources keeps its longest hop chain (the most-travelled copy).
+    let mut chains: Vec<(String, Provenance)> = Vec::new();
+    for (tag, prov) in lineages {
+        match chains.iter_mut().find(|(t, _)| *t == tag) {
+            Some((_, best)) => {
+                if prov.hops.len() > best.hops.len() {
+                    *best = prov;
+                }
+            }
+            None => chains.push((tag, prov)),
+        }
+    }
+    if !chains.is_empty() {
+        chains.sort_by(|a, b| a.0.cmp(&b.0));
+        println!("lineage ({} distinct origin tag(s)):", chains.len());
+        for (tag, prov) in &chains {
+            let mut path = format!("  {tag}: ingest@{}", prov.ts_ms);
+            for h in &prov.hops {
+                path.push_str(&format!(
+                    " -> {}/{} (link_seq {}, @{})",
+                    h.node, h.shard, h.link_seq, h.ts_ms
+                ));
+            }
+            println!("{path}");
+        }
+    }
+    Ok(())
+}
+
+/// Feed every shard WAL under one `--data-dir` into the timeline.
+fn assemble_wal_dir(
+    dir: &std::path::Path,
+    events: &mut Vec<AssembledEvent>,
+    lineages: &mut Vec<(String, Provenance)>,
+) -> Result<()> {
+    let name = dir
+        .file_name()
+        .and_then(|n| n.to_str())
+        .unwrap_or("data-dir");
+    let mut shard = 0usize;
+    loop {
+        let sdir = shard_dir(dir, shard);
+        if !sdir.exists() {
+            break;
+        }
+        let scanned = wal::scan(&sdir.join(WAL_FILE))
+            .map_err(|e| anyhow!("{}: {e}", sdir.display()))?;
+        let source = format!("{name}/shard-{shard:04}");
+        for rec in &scanned.records {
+            push_wal_record(rec, &source, events, lineages);
+        }
+        if scanned.dropped > 0 {
+            eprintln!(
+                "{}: {} torn record(s) dropped",
+                sdir.display(),
+                scanned.dropped
+            );
+        }
+        shard += 1;
+    }
+    if shard == 0 {
+        bail!(
+            "{}: no shard-0000/ directory (is this a --data-dir?)",
+            dir.display()
+        );
+    }
+    Ok(())
+}
+
+/// Turn one WAL record into timeline event(s), harvesting provenance
+/// chains along the way. Pre-v4 records (no `prov`) still appear on
+/// the timeline, just without a tag.
+fn push_wal_record(
+    rec: &Json,
+    source: &str,
+    events: &mut Vec<AssembledEvent>,
+    lineages: &mut Vec<(String, Provenance)>,
+) {
+    let seq = rec.get_u64("seq").unwrap_or(0);
+    let mut push = |ts_ms: u64, line: String| {
+        events.push(AssembledEvent {
+            ts_ms,
+            source: source.to_string(),
+            seq,
+            line,
+        });
+    };
+    match rec.get_str("t") {
+        Some("put") => {
+            let prov = Provenance::decode_record(rec);
+            let uuid = rec.get_str("uuid").unwrap_or("?");
+            let fitness = rec.get_f64("fitness").unwrap_or(f64::NAN);
+            if prov.is_unknown() {
+                push(0, format!("wal put uuid={uuid} (no provenance)"));
+            } else {
+                let line = format!(
+                    "wal put {} fitness={fitness}",
+                    prov.tag(uuid)
+                );
+                push(prov.ts_ms, line);
+                lineages.push((prov.tag(uuid), prov));
+            }
+        }
+        Some("migration") => {
+            let Some(entries) =
+                rec.get("entries").and_then(Json::as_arr)
+            else {
+                return;
+            };
+            for item in entries {
+                let prov = Provenance::decode_record(item);
+                let uuid = item.get_str("uuid").unwrap_or("?");
+                if prov.is_unknown() {
+                    push(
+                        0,
+                        format!(
+                            "wal migration uuid={uuid} (no provenance)"
+                        ),
+                    );
+                    continue;
+                }
+                // The last hop is the delivery this record witnessed;
+                // a hopless entry travelled in-process only.
+                let (ts, via) = match prov.hops.last() {
+                    Some(h) => (
+                        h.ts_ms,
+                        format!(
+                            " via {}/{} link_seq={}",
+                            h.node, h.shard, h.link_seq
+                        ),
+                    ),
+                    None => (prov.ts_ms, String::new()),
+                };
+                let line = format!(
+                    "wal migration {}{via} ({} hop(s))",
+                    prov.tag(uuid),
+                    prov.hops.len()
+                );
+                push(ts, line);
+                lineages.push((prov.tag(uuid), prov));
+            }
+        }
+        Some("epoch") => {
+            let from = rec.get_u64("from").unwrap_or(0);
+            let to = rec.get_u64("to").unwrap_or(0);
+            let mut line = format!("wal epoch {from} -> {to}");
+            if let Some(l) = rec
+                .get("record")
+                .and_then(|r| r.get("lineage"))
+                .and_then(LineageRecord::from_json)
+            {
+                line.push_str(&format!(
+                    " winner={}",
+                    l.origin.tag(&l.uuid)
+                ));
+                lineages.push((l.origin.tag(&l.uuid), l.origin));
+            }
+            push(rec.get_u64("started_at_ms").unwrap_or(0), line);
+        }
+        Some("start") => {
+            let exp = rec.get_u64("experiment").unwrap_or(0);
+            push(
+                rec.get_u64("started_at_ms").unwrap_or(0),
+                format!("wal start experiment {exp}"),
+            );
+        }
+        _ => {}
+    }
+}
+
+/// Feed one live `/debug/trace` dump (already parsed) into the
+/// timeline; ring events carry their own wall-clock stamps and, for
+/// class-0 slow requests, the accepted PUT's origin tag.
+fn assemble_trace_dump(
+    source: &str,
+    dump: &Json,
+    events: &mut Vec<AssembledEvent>,
+) {
+    let Some(items) = dump.get("events").and_then(Json::as_arr) else {
+        return;
+    };
+    for e in items {
+        let kind = e.get_str("kind").unwrap_or("?");
+        let mut line = format!("trace {kind}");
+        for key in [
+            "experiment", "from", "to", "fitness", "by", "entries",
+            "route", "us", "peer", "prov", "prov_seq",
+        ] {
+            if let Some(v) = e.get(key) {
+                line.push_str(&format!(" {key}={}", json::to_string(v)));
+            }
+        }
+        events.push(AssembledEvent {
+            ts_ms: e.get_u64("ts_ms").unwrap_or(0),
+            source: source.to_string(),
+            seq: e.get_u64("seq").unwrap_or(0),
+            line,
+        });
     }
 }

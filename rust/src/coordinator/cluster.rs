@@ -72,13 +72,16 @@ use super::persistence::{
     self, PersistConfig, RecoveredShard, ShardPersistence, ShardState,
 };
 use super::pool::{ChromosomePool, PoolEntry};
+use super::provenance::{lineage_json, Hop, LineageRecord, Provenance};
 use super::routes::{
     first_json_byte, put_fail, run_put_batch, validate_put_json,
     validate_put_ref, GenomeFields, PutFields, PutOutcome, RandomOutcome,
 };
 use super::security::{FitnessVerifier, RateLimiter, SaboteurLog};
 use super::server::{PoolServer, PoolServerConfig};
-use super::telemetry::{self, ServerGauges, Telemetry, TraceKind};
+use super::telemetry::{
+    self, route_class, DriverTelemetry, ServerGauges, Telemetry, TraceKind,
+};
 use crate::eventloop::{Epoll, Event, Interest, Waker};
 use crate::genome::{ProblemSpec, Representation};
 use crate::http::server::{
@@ -260,6 +263,11 @@ pub(crate) struct ClusterShared {
     /// it in its epoch-transition record, so remote-won experiments
     /// survive a local restart.
     pending_epoch_log: Mutex<Option<ExperimentLog>>,
+    /// Provenance of the best entry seen this experiment, keyed by
+    /// `ordered_key(fitness)` — what `/experiment/lineage` reports as the
+    /// live best's hop chain. Updated on accepted PUTs and adopted
+    /// migrations; cleared on every epoch transition.
+    best_lineage: Mutex<Option<(u64, LineageRecord)>>,
     shutdown: AtomicBool,
 }
 
@@ -303,8 +311,37 @@ impl ClusterShared {
             }),
             completed: Mutex::new(completed),
             pending_epoch_log: Mutex::new(None),
+            best_lineage: Mutex::new(None),
             shutdown: AtomicBool::new(false),
         }
+    }
+
+    /// Offer a candidate for the live experiment's best lineage. The
+    /// record is built only when the candidate actually improves on the
+    /// stored key, so the steady-state PUT path pays a lock and a
+    /// compare, not an allocation.
+    pub(crate) fn offer_lineage(
+        &self,
+        key: u64,
+        make: impl FnOnce() -> LineageRecord,
+    ) {
+        let mut slot = self.best_lineage.lock().unwrap();
+        let improves = match slot.as_ref() {
+            Some((stored, _)) => key > *stored,
+            None => true,
+        };
+        if improves {
+            *slot = Some((key, make()));
+        }
+    }
+
+    /// Current best entry's `(fitness, lineage)` for this experiment.
+    pub(crate) fn best_lineage(&self) -> Option<(f64, LineageRecord)> {
+        self.best_lineage
+            .lock()
+            .unwrap()
+            .as_ref()
+            .map(|(k, r)| (key_to_f64(*k), r.clone()))
     }
 
     /// Wall-clock age of the live experiment.
@@ -343,6 +380,7 @@ impl ClusterShared {
         best_fitness: f64,
         solved_by: Option<String>,
         solution: Option<String>,
+        lineage: Option<LineageRecord>,
     ) -> Option<ExperimentLog> {
         if self
             .experiment
@@ -370,10 +408,12 @@ impl ClusterShared {
             best_fitness,
             solved_by,
             solution,
+            lineage,
         };
         self.completed.lock().unwrap().push(log.clone());
         self.best_key
             .store(ordered_key(f64::NEG_INFINITY), Ordering::Release);
+        *self.best_lineage.lock().unwrap() = None;
         Some(log)
     }
 
@@ -412,6 +452,7 @@ impl ClusterShared {
                     if started_at_ms == 0 { unix_ms() } else { started_at_ms },
                     Ordering::Relaxed,
                 );
+                *self.best_lineage.lock().unwrap() = None;
                 advanced = true;
                 break;
             }
@@ -473,6 +514,10 @@ struct ShardCfg {
     /// The process-wide metric registry (per-shard slots + trace ring +
     /// readiness); each shard records into its own slot.
     telemetry: Arc<Telemetry>,
+    /// This process's provenance node name: the federation node name when
+    /// federated, `"local"` otherwise. Stamped into every accepted PUT's
+    /// origin tag.
+    node: Arc<str>,
 }
 
 /// The request handler + partition state owned by one shard thread. Plain
@@ -524,6 +569,16 @@ struct ShardService {
     persist: Option<ShardPersistence>,
     federation: Option<Arc<FederationHub>>,
     telemetry: Arc<Telemetry>,
+    /// This shard's latency recorder: every request served through
+    /// [`Service::handle`] / [`Service::handle_into`] lands in the
+    /// per-route histograms, socket traffic and direct calls alike.
+    driver: DriverTelemetry,
+    /// Provenance node name (see [`ShardCfg::node`]).
+    node: Arc<str>,
+    /// Monotone per-shard origin sequence; seeded from the recovered
+    /// pool's lifetime-accepted counter so stamps stay unique across
+    /// restarts.
+    prov_seq: u64,
     shared: Arc<ClusterShared>,
     slots: Arc<Vec<ShardSlot>>,
 }
@@ -577,6 +632,7 @@ impl ShardService {
             }),
             None => EventLog::disabled(),
         };
+        let prov_seq = pool.accepted();
         let mut service = ShardService {
             id: cfg.id,
             repr: cfg.problem.repr,
@@ -618,7 +674,10 @@ impl ShardService {
             put_scratch: PutScratch::new(),
             persist,
             federation: cfg.federation.clone(),
+            driver: cfg.telemetry.driver(cfg.id),
             telemetry: cfg.telemetry.clone(),
+            node: cfg.node.clone(),
+            prov_seq,
             shared,
             slots,
         };
@@ -776,7 +835,7 @@ impl ShardService {
             if batch.experiment != self.local_experiment {
                 continue; // stale epoch: the experiment already ended
             }
-            for entry in batch.entries {
+            for mut entry in batch.entries {
                 if !entry.fitness.is_finite() {
                     continue;
                 }
@@ -788,8 +847,28 @@ impl ShardService {
                 if dup {
                     continue;
                 }
+                // Record the inter-shard hop (link_seq 0: in-process
+                // mailboxes have no wire sequence) so the entry's chain
+                // shows which partition adopted it.
+                if !entry.origin.is_unknown() {
+                    entry.origin.push_hop(Hop {
+                        node: self.node.clone(),
+                        shard: self.id as u32,
+                        link_seq: 0,
+                        ts_ms: unix_ms(),
+                    });
+                }
                 let evict = self.pool.put(entry.clone(), &mut self.rng);
                 self.note_pool_insert(evict);
+                if !entry.origin.is_unknown() {
+                    self.shared.offer_lineage(
+                        ordered_key(entry.fitness),
+                        || LineageRecord {
+                            uuid: entry.uuid.clone(),
+                            origin: entry.origin.clone(),
+                        },
+                    );
+                }
                 applied.push((entry, evict));
             }
         }
@@ -1062,10 +1141,18 @@ impl ShardService {
             );
         }
 
+        self.prov_seq += 1;
+        let origin = Provenance::origin(
+            &self.node,
+            self.id as u32,
+            self.prov_seq,
+            unix_ms(),
+        );
         let entry = PoolEntry {
             chromosome: genome,
             fitness,
             uuid: uuid.to_string(),
+            origin,
         };
         let evict = self.pool.put(entry, &mut self.rng);
         // The entry lives in the pool now; read it back by slot instead
@@ -1078,6 +1165,20 @@ impl ShardService {
                 &self.pool.entries()[slot_idx],
                 evict,
             );
+        }
+        self.telemetry.note_put_provenance(
+            self.id,
+            &self.pool.entries()[slot_idx].origin,
+            uuid,
+        );
+        if self.shared.experiment.load(Ordering::Acquire)
+            == self.local_experiment
+        {
+            let entries = self.pool.entries();
+            self.shared.offer_lineage(key, || LineageRecord {
+                uuid: entries[slot_idx].uuid.clone(),
+                origin: entries[slot_idx].origin.clone(),
+            });
         }
         self.publish_pool_len();
         let current_id = self.local_experiment;
@@ -1100,11 +1201,16 @@ impl ShardService {
         // not at the next tick.
         let solution =
             self.pool.entries()[slot_idx].chromosome.display_string();
+        let lineage = Some(LineageRecord {
+            uuid: self.pool.entries()[slot_idx].uuid.clone(),
+            origin: self.pool.entries()[slot_idx].origin.clone(),
+        });
         let record = self.shared.finish_experiment(
             self.local_experiment,
             fitness,
             Some(uuid.to_string()),
             Some(solution),
+            lineage,
         );
         if let Some(log) = &record {
             self.telemetry.ring().push(
@@ -1385,6 +1491,19 @@ impl ShardService {
         ]))
     }
 
+    /// The live best's and every completed epoch winner's hop chain —
+    /// origin volunteer tag plus each shard/gossip hop (same shape as the
+    /// single-loop route, so the trace assembler reads either).
+    fn lineage(&self) -> Response {
+        let best = self.shared.best_lineage();
+        let completed = self.shared.completed.lock().unwrap();
+        Response::json(&lineage_json(
+            self.shared.experiment.load(Ordering::Acquire),
+            best.as_ref().map(|(f, r)| (*f, r)),
+            &completed,
+        ))
+    }
+
     fn metrics(&self) -> Response {
         let best = self.shared.best_fitness();
         Response::json(&Json::obj(vec![
@@ -1428,11 +1547,16 @@ impl ShardService {
     fn reset(&mut self) -> Response {
         let best = self.shared.best_fitness();
         let recorded = if best.is_finite() { best } else { f64::NEG_INFINITY };
+        // A manual reset has no solving entry; the best entry's lineage
+        // (if any) documents where the abandoned experiment's best came
+        // from.
+        let lineage = self.shared.best_lineage().map(|(_, r)| r);
         if let Some(log) = self.shared.finish_experiment(
             self.local_experiment,
             recorded,
             None,
             None,
+            lineage,
         ) {
             let to = self.local_experiment + 1;
             self.telemetry.ring().push(
@@ -1480,8 +1604,8 @@ impl ShardService {
     }
 }
 
-impl Service for ShardService {
-    fn handle(&mut self, req: &Request) -> Response {
+impl ShardService {
+    fn handle_inner(&mut self, req: &Request) -> Response {
         let path = if req.path.len() > 1 {
             req.path.trim_end_matches('/')
         } else {
@@ -1495,6 +1619,7 @@ impl Service for ShardService {
             (Method::Get, "/experiment/random") => self.get_random(req),
             (Method::Get, "/experiment/state") => self.state(),
             (Method::Get, "/experiment/history") => self.history(),
+            (Method::Get, "/experiment/lineage") => self.lineage(),
             (Method::Get, "/stats") => self.stats_route(),
             (Method::Get, "/metrics") => self.metrics(),
             (Method::Get, "/metrics/prom") => self.prom(),
@@ -1503,18 +1628,29 @@ impl Service for ShardService {
                 telemetry::readyz_response(self.telemetry.readiness())
             }
             (Method::Get, "/debug/trace") => {
-                Response::json(&self.telemetry.ring().dump_json())
+                Response::json(&self.telemetry.dump_trace_json())
             }
             (Method::Post, "/experiment/reset") => self.reset(),
             (
                 _,
                 "/" | "/experiment/chromosome" | "/experiment/random"
-                | "/experiment/state" | "/experiment/history" | "/stats"
+                | "/experiment/state" | "/experiment/history"
+                | "/experiment/lineage" | "/stats"
                 | "/metrics" | "/metrics/prom" | "/healthz" | "/readyz"
                 | "/debug/trace" | "/experiment/reset",
             ) => Response::new(405).with_text("method not allowed"),
             _ => Response::not_found(),
         }
+    }
+}
+
+impl Service for ShardService {
+    fn handle(&mut self, req: &Request) -> Response {
+        let start = Instant::now();
+        let resp = self.handle_inner(req);
+        self.driver
+            .record_request(route_class(req.method, &req.path), start.elapsed());
+        resp
     }
 
     /// The event-loop fast path: the two hot routes render straight into
@@ -1528,8 +1664,14 @@ impl Service for ShardService {
         keep_alive: bool,
         out: &mut Vec<u8>,
     ) {
+        let start = Instant::now();
         if req.method == Method::Get && req.path == "/experiment/random" {
-            return self.get_random_into(req, keep_alive, out);
+            self.get_random_into(req, keep_alive, out);
+            self.driver.record_request(
+                route_class(req.method, &req.path),
+                start.elapsed(),
+            );
+            return;
         }
         if req.method == Method::Put
             && req.path == "/experiment/chromosome"
@@ -1560,11 +1702,19 @@ impl Service for ShardService {
                             .with_json(&payload)
                             .write_to(out, keep_alive),
                     }
+                    self.driver.record_request(
+                        route_class(req.method, &req.path),
+                        start.elapsed(),
+                    );
                     return;
                 }
             }
         }
-        self.handle(req).write_to(out, keep_alive);
+        self.handle_inner(req).write_to(out, keep_alive);
+        self.driver.record_request(
+            route_class(req.method, &req.path),
+            start.elapsed(),
+        );
     }
 }
 
@@ -1786,7 +1936,7 @@ impl ShardedPoolServer {
         let hub = match &config.federation {
             Some(fc) => {
                 let mut hub = FederationHub::new(fc)?;
-                hub.attach_ring(telemetry.ring().clone());
+                hub.attach_ring(telemetry.process_ring().clone());
                 let hub = Arc::new(hub);
                 let (bound, thread) = federation::spawn_driver(
                     fc.clone(),
@@ -1810,6 +1960,12 @@ impl ShardedPoolServer {
             .map(|f| f.gossip_interval)
             .unwrap_or(Duration::from_millis(250));
 
+        // Provenance node name: the federation identity when federated
+        // (tags must be unique across the fleet), "local" otherwise.
+        let node: Arc<str> = match &hub {
+            Some(h) => Arc::from(h.node()),
+            None => Arc::from("local"),
+        };
         let per_shard_capacity = (config.base.pool_capacity / n).max(1);
         let mut threads = Vec::with_capacity(n + 2);
         for (id, waker) in shard_wakers.into_iter().enumerate() {
@@ -1838,6 +1994,7 @@ impl ShardedPoolServer {
                 federation: hub.clone(),
                 fed_gossip_interval,
                 telemetry: telemetry.clone(),
+                node: node.clone(),
             };
             let shared = shared.clone();
             let slots = slots.clone();
@@ -2066,10 +2223,10 @@ mod tests {
     /// The exposition renderer is shared between both server shapes, so
     /// a 1-shard cluster and the single-loop router must produce
     /// byte-identical `/metrics/prom` bodies for identical traffic.
-    /// Both sides are driven directly through their handlers (no
-    /// sockets, no `ConnDriver`), so the request-latency histograms are
-    /// deterministically zero on both and every remaining sample is
-    /// pure state.
+    /// Both sides are driven directly through their handlers; since the
+    /// handlers themselves record latencies now, both registries pin the
+    /// recorded latency with the `latency_override_us` test knob so the
+    /// histograms (and the PUT exemplar) are deterministic on both.
     #[test]
     fn one_shard_scrape_matches_single_loop_byte_for_byte() {
         use crate::coordinator::routes::{build_router, PoolState};
@@ -2081,20 +2238,27 @@ mod tests {
 
         let problem = ProblemSpec::bits(8, 8.0);
         let capacity = 64;
+        let settings = TelemetrySettings {
+            latency_override_us: Some(70),
+            ..TelemetrySettings::default()
+        };
 
-        // The single-loop shape: real router over shared state.
+        // The single-loop shape: real router over shared state (the
+        // deterministic registry must be in place before build_router
+        // captures its recorder).
         let state = Rc::new(RefCell::new(PoolState::new(
             capacity,
             &problem,
             EventLog::disabled(),
             7,
         )));
+        state.borrow_mut().telemetry =
+            Arc::new(Telemetry::new(1, &settings));
         let mut router = build_router(state);
 
         // The cluster shape: one directly-driven shard service (the
         // same code its event loop dispatches into).
-        let telemetry =
-            Arc::new(Telemetry::new(1, &TelemetrySettings::default()));
+        let telemetry = Arc::new(Telemetry::new(1, &settings));
         let shared = Arc::new(ClusterShared::recovered(
             problem.target_fitness,
             0,
@@ -2121,6 +2285,7 @@ mod tests {
             federation: None,
             fed_gossip_interval: Duration::from_millis(20),
             telemetry,
+            node: Arc::from("local"),
         };
         let mut shard = ShardService::new(
             &cfg,

@@ -5,6 +5,7 @@
 use std::collections::HashMap;
 use std::time::Duration;
 
+use super::provenance::LineageRecord;
 use crate::genome::Representation;
 use crate::json::Json;
 use crate::util::unix_ms;
@@ -31,6 +32,9 @@ pub struct ExperimentLog {
     pub best_fitness: f64,
     pub solved_by: Option<String>,
     pub solution: Option<String>,
+    /// Provenance of the winning entry (origin tag + hop chain). `None`
+    /// for manual resets, unsolved epochs, and pre-v4 records.
+    pub lineage: Option<LineageRecord>,
 }
 
 impl ExperimentLog {
@@ -54,12 +58,13 @@ impl ExperimentLog {
                 .unwrap_or(f64::NEG_INFINITY),
             solved_by: v.get_str("solved_by").map(str::to_string),
             solution: v.get_str("solution").map(str::to_string),
+            lineage: v.get("lineage").and_then(LineageRecord::from_json),
         })
     }
 
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
-            ("experiment", self.id.into()),
+        let mut obj = vec![
+            ("experiment", Json::from(self.id)),
             ("elapsed_s", self.elapsed.as_secs_f64().into()),
             ("puts", self.puts.into()),
             ("gets", self.gets.into()),
@@ -75,7 +80,13 @@ impl ExperimentLog {
                 "solution",
                 self.solution.clone().map(Json::Str).unwrap_or(Json::Null),
             ),
-        ])
+        ];
+        // Emitted only when known, so pre-v4 records re-serialize
+        // byte-identically and pre-v4 readers see an unchanged shape.
+        if let Some(l) = &self.lineage {
+            obj.push(("lineage", l.to_json()));
+        }
+        Json::obj(obj)
     }
 }
 
@@ -188,6 +199,7 @@ impl ExperimentManager {
         &mut self,
         solved_by: Option<String>,
         solution: Option<String>,
+        lineage: Option<LineageRecord>,
     ) -> ExperimentLog {
         let log = ExperimentLog {
             id: self.current_id,
@@ -197,6 +209,7 @@ impl ExperimentManager {
             best_fitness: self.best_fitness,
             solved_by,
             solution,
+            lineage,
         };
         self.completed.push(log.clone());
         self.current_id += 1;
@@ -254,7 +267,7 @@ mod tests {
         m.record_get(Some("a"));
         assert_eq!(m.best_fitness(), 70.0);
         assert!(m.record_put("a", 80.0)); // solution
-        let log = m.finish(Some("a".into()), Some("111".into()));
+        let log = m.finish(Some("a".into()), Some("111".into()), None);
         assert_eq!(log.id, 0);
         assert_eq!(log.puts, 3);
         assert_eq!(log.gets, 1);
@@ -276,7 +289,7 @@ mod tests {
     fn per_uuid_accounting_survives_reset() {
         let mut m = ExperimentManager::new(10.0, Representation::bits(8));
         m.record_put("x", 10.0);
-        m.finish(Some("x".into()), None);
+        m.finish(Some("x".into()), None, None);
         m.record_put("x", 5.0);
         m.record_get(Some("y"));
         assert_eq!(m.per_uuid()["x"], 2);
@@ -288,7 +301,7 @@ mod tests {
     fn log_json_shape() {
         let mut m = ExperimentManager::new(10.0, Representation::bits(8));
         m.record_put("x", 10.0);
-        let log = m.finish(Some("x".into()), Some("11111111".into()));
+        let log = m.finish(Some("x".into()), Some("11111111".into()), None);
         let j = log.to_json();
         assert_eq!(j.get_u64("experiment"), Some(0));
         assert_eq!(j.get_str("solved_by"), Some("x"));

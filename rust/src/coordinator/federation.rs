@@ -16,13 +16,16 @@
 //!   when it reconnects. A receiver whose experiment runs a *different
 //!   representation* refuses the link with a loud error — a bit-string
 //!   federation and a real-vector federation can never merge.
-//! * `migration` — a best-K batch in the v3 genome form (`repr` +
+//! * `migration` — a best-K batch in the v4 genome form (`repr` +
 //!   packed hex for bit-strings / canonical `genes` array for real
-//!   vectors), identical to the WAL's `migration` record minus the
-//!   eviction slots (the receiver chooses its own). Inbound batches
-//!   merge through the same per-shard dedup path as local inter-shard
-//!   gossip and are WAL'd there, so a restarted peer replays remote
-//!   immigrants like any other state.
+//!   vectors, plus each entry's `prov` origin tag and hop chain),
+//!   identical to the WAL's `migration` record minus the eviction slots
+//!   (the receiver chooses its own). Inbound batches merge through the
+//!   same per-shard dedup path as local inter-shard gossip and are
+//!   WAL'd there, so a restarted peer replays remote immigrants like
+//!   any other state. The receiver appends a [`Hop`] carrying its node
+//!   name and the sender's per-link wire seq before delivery, so a
+//!   chromosome's cross-process journey stays reconstructable.
 //! * `epoch` — an experiment-epoch transition with the winner's
 //!   [`ExperimentLog`] and the sender's `repr` tag: a peer observing a
 //!   higher epoch fast-forwards termination exactly like an in-process
@@ -65,6 +68,7 @@ use super::experiment::ExperimentLog;
 use super::persistence::snapshot::entry_from_json;
 use super::persistence::wal::{FrameReader, FrameWriter};
 use super::pool::PoolEntry;
+use super::provenance::Hop;
 use super::telemetry::{
     write_help_type, write_sample_f64, write_sample_u64, LinkTelemetry,
     TraceKind, TraceRing,
@@ -72,6 +76,7 @@ use super::telemetry::{
 use crate::eventloop::{Epoll, Event, Interest, Waker};
 use crate::genome::Representation;
 use crate::json::Json;
+use crate::util::unix_ms;
 
 const TOKEN_LISTENER: u64 = 0;
 const TOKEN_WAKER: u64 = 1;
@@ -381,12 +386,13 @@ fn migration_record(batch: &MigrationBatch) -> Json {
                 ("uuid", e.uuid.as_str().into()),
             ]);
             e.chromosome.encode_record(&mut item);
+            e.origin.encode_record(&mut item);
             item
         })
         .collect();
     Json::obj(vec![
         ("t", "migration".into()),
-        ("v", 3u64.into()),
+        ("v", 4u64.into()),
         ("experiment", batch.experiment.into()),
         ("entries", Json::Arr(items)),
     ])
@@ -440,6 +446,9 @@ pub(crate) struct FederationCore {
     repr: Representation,
     /// Round-robin target for inbound batches (spread across shards).
     next_shard: usize,
+    /// This process's federation node name, stamped into the receiving
+    /// [`Hop`] appended to inbound entries and fast-forwarded lineages.
+    node: Arc<str>,
     /// Trace ring for fast-forward events (attached by the driver;
     /// `None` in socket-free tests).
     ring: Option<Arc<TraceRing>>,
@@ -451,6 +460,7 @@ impl FederationCore {
         slots: Arc<Vec<ShardSlot>>,
         stats: Arc<FederationStats>,
         repr: Representation,
+        node: Arc<str>,
     ) -> FederationCore {
         FederationCore {
             shared,
@@ -458,6 +468,7 @@ impl FederationCore {
             stats,
             repr,
             next_shard: 0,
+            node,
             ring: None,
         }
     }
@@ -508,7 +519,7 @@ impl FederationCore {
                 let Some(exp) = rec.get_u64("experiment") else {
                     return Applied::None;
                 };
-                self.fast_forward(exp, None, 0);
+                self.fast_forward(exp, None, 0, seq);
                 // And a peer that is BEHIND missed a termination while
                 // disconnected (epoch records are not re-gossiped):
                 // answer with the transition + the latest winner's
@@ -542,11 +553,11 @@ impl FederationCore {
                 let log =
                     rec.get("record").and_then(ExperimentLog::from_json);
                 let started = rec.get_u64("started_at_ms").unwrap_or(0);
-                self.fast_forward(to, log, started);
+                self.fast_forward(to, log, started, seq);
                 Applied::None
             }
             Some("migration") => {
-                self.apply_migration(rec);
+                self.apply_migration(rec, seq);
                 Applied::None
             }
             _ => Applied::None,
@@ -585,7 +596,7 @@ impl FederationCore {
         }
     }
 
-    fn apply_migration(&mut self, rec: &Json) {
+    fn apply_migration(&mut self, rec: &Json, link_seq: u64) {
         let Some(exp) = rec.get_u64("experiment") else { return };
         let global = self.shared.experiment.load(Ordering::Acquire);
         if exp < global {
@@ -620,7 +631,7 @@ impl FederationCore {
         if exp > global {
             // The sender is ahead (we missed its epoch record): catch up
             // first, then merge its entries into the new epoch's pool.
-            self.fast_forward(exp, None, 0);
+            self.fast_forward(exp, None, 0, link_seq);
         }
         // Converged observability: the federation-wide best fitness is
         // visible at every peer, not only where the PUT landed.
@@ -637,12 +648,48 @@ impl FederationCore {
         // the receiving shard dedups, inserts, and WALs the merge.
         let idx = self.next_shard % self.slots.len();
         self.next_shard = self.next_shard.wrapping_add(1);
+        // The gossip arrival is a provenance hop: the receiving node and
+        // target shard, keyed by the sender's per-link wire seq so
+        // `nodio trace assemble` can order cross-process deliveries.
+        // Unknown origins (pre-v4 peers) stay unknown — no invented tags.
+        let ts = unix_ms();
+        for e in &mut entries {
+            if !e.origin.is_unknown() {
+                e.origin.push_hop(Hop {
+                    node: self.node.clone(),
+                    shard: idx as u32,
+                    link_seq,
+                    ts_ms: ts,
+                });
+            }
+        }
         let slot = &self.slots[idx];
         slot.migrations_in.push(MigrationBatch { experiment: exp, entries });
         slot.waker.wake();
     }
 
-    fn fast_forward(&self, to: u64, log: Option<ExperimentLog>, ms: u64) {
+    fn fast_forward(
+        &self,
+        to: u64,
+        mut log: Option<ExperimentLog>,
+        ms: u64,
+        link_seq: u64,
+    ) {
+        // A fast-forwarded winner's lineage crossed a gossip link to get
+        // here: append the receiving hop (process-level, so shard 0)
+        // before the log enters local history.
+        if let Some(log) = log.as_mut() {
+            if let Some(lineage) = log.lineage.as_mut() {
+                if !lineage.origin.is_unknown() {
+                    lineage.origin.push_hop(Hop {
+                        node: self.node.clone(),
+                        shard: 0,
+                        link_seq,
+                        ts_ms: unix_ms(),
+                    });
+                }
+            }
+        }
         let from = self.shared.experiment.load(Ordering::Acquire);
         if self.shared.fast_forward(to, log, ms) {
             self.stats.fast_forwards.fetch_add(1, Ordering::Relaxed);
@@ -1071,8 +1118,13 @@ pub(crate) fn spawn_driver(
         })
         .collect();
     let node = hub.node().to_string();
-    let mut core =
-        FederationCore::new(shared, slots, hub.stats.clone(), repr);
+    let mut core = FederationCore::new(
+        shared,
+        slots,
+        hub.stats.clone(),
+        repr,
+        Arc::from(hub.node()),
+    );
     if let Some(ring) = &hub.ring {
         core.set_ring(ring.clone());
     }
@@ -1096,6 +1148,7 @@ pub(crate) fn spawn_driver(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::provenance::{LineageRecord, Provenance};
     use crate::genome::{Genome, RealGenes};
     use crate::problems::PackedBits;
 
@@ -1104,6 +1157,7 @@ mod tests {
             chromosome: Genome::Bits(PackedBits::from_str01(c).unwrap()),
             fitness,
             uuid: uuid.into(),
+            origin: Provenance::default(),
         }
     }
 
@@ -1112,6 +1166,7 @@ mod tests {
             chromosome: Genome::Real(RealGenes::new(genes).unwrap()),
             fitness,
             uuid: uuid.into(),
+            origin: Provenance::default(),
         }
     }
 
@@ -1143,6 +1198,7 @@ mod tests {
             slots.clone(),
             stats.clone(),
             repr,
+            Arc::from("here"),
         );
         (shared, slots, stats, core)
     }
@@ -1258,6 +1314,7 @@ mod tests {
             best_fitness: 8.0,
             solved_by: Some("remote".into()),
             solution: Some("11111111".into()),
+            lineage: None,
         };
         let wire = loopback(vec![epoch_record(
             0,
@@ -1332,6 +1389,7 @@ mod tests {
             best_fitness: 8.0,
             solved_by: Some("winner".into()),
             solution: Some("11111111".into()),
+            lineage: None,
         };
         assert!(shared.fast_forward(2, Some(log), 700));
         let wire = loopback(vec![hello_record(
@@ -1458,6 +1516,7 @@ mod tests {
             best_fitness: 80.0,
             solved_by: Some("bits-peer".into()),
             solution: Some("1111".into()),
+            lineage: None,
         };
         let wire = loopback(vec![epoch_record(
             0,
@@ -1607,5 +1666,81 @@ mod tests {
         let delivered = slots[0].migrations_in.drain();
         assert_eq!(delivered.len(), 1);
         assert_eq!(delivered[0].entries[0].chromosome, "00110000");
+    }
+
+    #[test]
+    fn migration_provenance_crosses_the_wire_and_gains_a_hop() {
+        let (_shared, slots, _stats, mut core) = endpoint(0);
+        let mut e = entry("01010101", 4.0, "vol-1");
+        e.origin =
+            Provenance::origin(&Arc::from("peer-0"), 1, 7, 1_000);
+        let batch = MigrationBatch { experiment: 0, entries: vec![e] };
+        let wire = loopback(vec![migration_record(&batch)]);
+        assert_eq!(wire[0].get_u64("v"), Some(4));
+        let wire_seq = wire[0].get_u64("seq").unwrap();
+        let mut last_seq = 0;
+        core.apply_record(&mut last_seq, &wire[0]);
+        let delivered = slots[0].migrations_in.drain();
+        let origin = &delivered[0].entries[0].origin;
+        // The origin tag survives the wire byte-for-byte...
+        assert_eq!(origin.tag("vol-1"), "peer-0/1/vol-1/7");
+        assert_eq!(origin.ts_ms, 1_000);
+        // ...and the delivery appended the receiving hop, keyed by the
+        // sender's per-link wire seq.
+        assert_eq!(origin.hops.len(), 1);
+        assert_eq!(&*origin.hops[0].node, "here");
+        assert_eq!(origin.hops[0].shard, 0);
+        assert_eq!(origin.hops[0].link_seq, wire_seq);
+
+        // An unknown origin (pre-v4 peer) stays unknown: no invented
+        // tag, no hop.
+        let batch = MigrationBatch {
+            experiment: 0,
+            entries: vec![entry("01010111", 5.0, "old")],
+        };
+        let wire = loopback(vec![migration_record(&batch)]);
+        core.apply_record(&mut last_seq, &wire[0]);
+        let delivered = slots[1].migrations_in.drain();
+        assert!(delivered[0].entries[0].origin.is_unknown());
+        assert!(delivered[0].entries[0].origin.hops.is_empty());
+    }
+
+    #[test]
+    fn epoch_lineage_crosses_the_wire_and_gains_a_hop() {
+        let (shared, _slots, _stats, mut core) = endpoint(0);
+        let log = ExperimentLog {
+            id: 0,
+            elapsed: Duration::from_secs(3),
+            puts: 7,
+            gets: 2,
+            best_fitness: 8.0,
+            solved_by: Some("winner".into()),
+            solution: Some("11111111".into()),
+            lineage: Some(LineageRecord {
+                uuid: "winner".into(),
+                origin: Provenance::origin(
+                    &Arc::from("peer-0"),
+                    2,
+                    41,
+                    500,
+                ),
+            }),
+        };
+        let wire = loopback(vec![epoch_record(
+            0,
+            1,
+            Some(&log),
+            555,
+            Representation::bits(8),
+        )]);
+        let mut last_seq = 0;
+        core.apply_record(&mut last_seq, &wire[0]);
+        let adopted = shared.latest_completed().expect("winner adopted");
+        let lineage = adopted.lineage.expect("lineage crossed the wire");
+        assert_eq!(lineage.uuid, "winner");
+        assert_eq!(lineage.origin.tag("winner"), "peer-0/2/winner/41");
+        // The receiving peer recorded its own hop on the way in.
+        assert_eq!(lineage.origin.hops.len(), 1);
+        assert_eq!(&*lineage.origin.hops[0].node, "here");
     }
 }

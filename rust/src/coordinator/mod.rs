@@ -42,6 +42,7 @@ pub mod federation;
 pub mod logger;
 pub mod persistence;
 pub mod pool;
+pub mod provenance;
 pub mod routes;
 pub mod security;
 pub mod telemetry;
@@ -53,6 +54,7 @@ pub use experiment::{ExperimentLog, ExperimentManager};
 pub use federation::FederationConfig;
 pub use persistence::{PersistConfig, ReplayedHistory, ShardPersistence};
 pub use pool::{ChromosomePool, PoolEntry};
+pub use provenance::{Hop, LineageRecord, Provenance};
 pub use security::{FitnessVerifier, RateLimiter, SaboteurLog};
 pub use telemetry::{Telemetry, TelemetrySettings};
 pub use timeseries::TimeSeries;

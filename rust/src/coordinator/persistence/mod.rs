@@ -309,11 +309,13 @@ impl ShardPersistence {
     /// Record one accepted PUT. `evict` is the pool slot the insert
     /// replaced (None = appended), making replay byte-exact.
     ///
-    /// v3 record: `repr` plus the genome's durable payload — the bit
-    /// packed-hex form (`packed` + `n_bits`, unchanged from v2) or the
-    /// hex-free canonical `genes` array for real vectors. Replay still
-    /// accepts the PR 3 v2 form and the PR 2 v1 form (`chromosome`
-    /// string) — see [`super::persistence::snapshot::entry_from_json`].
+    /// v4 record: the v3 genome payload — the bit packed-hex form
+    /// (`packed` + `n_bits`, unchanged from v2) or the hex-free
+    /// canonical `genes` array for real vectors — plus the entry's
+    /// `prov` origin tag and hop chain, so provenance survives restarts.
+    /// Replay still accepts the PR 3 v2 form and the PR 2 v1 form
+    /// (`chromosome` string) — see
+    /// [`super::persistence::snapshot::entry_from_json`].
     pub fn record_put(
         &mut self,
         experiment: u64,
@@ -322,7 +324,7 @@ impl ShardPersistence {
     ) {
         let mut rec = Json::obj(vec![
             ("t", "put".into()),
-            ("v", 3u64.into()),
+            ("v", 4u64.into()),
             ("experiment", experiment.into()),
             ("fitness", entry.fitness.into()),
             ("uuid", entry.uuid.as_str().into()),
@@ -332,12 +334,13 @@ impl ShardPersistence {
             ),
         ]);
         entry.chromosome.encode_record(&mut rec);
+        entry.origin.encode_record(&mut rec);
         self.append(rec);
     }
 
     /// Record the entries of a gossip batch that were actually merged
-    /// (post-dedup), with their eviction slots (v3 genome payloads, like
-    /// [`ShardPersistence::record_put`]).
+    /// (post-dedup), with their eviction slots (v4 genome + provenance
+    /// payloads, like [`ShardPersistence::record_put`]).
     pub fn record_migration(
         &mut self,
         experiment: u64,
@@ -360,12 +363,13 @@ impl ShardPersistence {
                     ),
                 ]);
                 e.chromosome.encode_record(&mut item);
+                e.origin.encode_record(&mut item);
                 item
             })
             .collect();
         self.append(Json::obj(vec![
             ("t", "migration".into()),
-            ("v", 3u64.into()),
+            ("v", 4u64.into()),
             ("experiment", experiment.into()),
             ("entries", Json::Arr(items)),
         ]));
@@ -600,6 +604,7 @@ mod tests {
             ),
             fitness: f,
             uuid: "u".into(),
+            origin: crate::coordinator::provenance::Provenance::default(),
         };
         {
             let fresh = RecoveredShard::fresh();
@@ -643,6 +648,7 @@ mod tests {
                 ),
                 fitness: 8.0,
                 uuid: "w".into(),
+                origin: crate::coordinator::provenance::Provenance::default(),
             };
             p.record_put(0, &e, None);
             let log = ExperimentLog {
@@ -653,6 +659,7 @@ mod tests {
                 best_fitness: 8.0,
                 solved_by: Some("w".into()),
                 solution: Some("11111111".into()),
+                lineage: None,
             };
             p.record_epoch(0, 1, Some(&log), 1_700_000_000_000);
         }

@@ -250,6 +250,7 @@ mod tests {
             ),
             fitness: 3.0,
             uuid: "a".into(),
+            origin: Default::default(),
         });
         snap.per_uuid.insert("a".into(), 2);
         write_snapshot(&dir, &snap).unwrap();
@@ -298,6 +299,7 @@ mod tests {
                 best_fitness: 8.0,
                 solved_by: Some("a".into()),
                 solution: Some("1111".into()),
+                lineage: None,
             };
             w.append(Json::obj(vec![
                 ("t", "epoch".into()),
@@ -376,6 +378,7 @@ mod tests {
             best_fitness: 1.0,
             solved_by: None,
             solution: None,
+            lineage: None,
         };
         let mut a = RecoveredShard::fresh();
         a.state.completed = vec![mk(1), mk(0)];
@@ -406,6 +409,7 @@ mod tests {
                 best_fitness: 8.0,
                 solved_by: None,
                 solution: None,
+                lineage: None,
             };
             p.record_epoch(0, 1, Some(&log), 222);
         }
@@ -517,6 +521,56 @@ mod tests {
     }
 
     #[test]
+    fn replay_v4_provenance_wal_fixture() {
+        // Byte-exact v4 records (CRC frames included): a stamped put and
+        // a migration whose entry carries an origin plus one hop must
+        // replay with their provenance intact — and the v4 bump stays
+        // additive over v1–v3 like every bump before it.
+        let dir = tmpdir("v4-fixture");
+        let fixture = concat!(
+            "{\"crc\":\"08b3735f\",\"rec\":{\"t\":\"put\",\"v\":4,",
+            "\"experiment\":0,\"fitness\":2.5,\"uuid\":\"a\",\"evict\":null,",
+            "\"repr\":\"bits\",\"packed\":\"000000000000005a\",\"n_bits\":8,",
+            "\"prov\":{\"node\":\"peer-0\",\"shard\":0,\"seq\":1,",
+            "\"ts_ms\":100,\"hops\":[]},\"seq\":1}}\n",
+            "{\"crc\":\"82ccb710\",\"rec\":{\"t\":\"migration\",\"v\":4,",
+            "\"experiment\":0,\"entries\":[{\"fitness\":4,\"uuid\":\"m\",",
+            "\"evict\":null,\"repr\":\"bits\",",
+            "\"packed\":\"00000000000000f0\",\"n_bits\":8,",
+            "\"prov\":{\"node\":\"peer-1\",\"shard\":2,\"seq\":9,",
+            "\"ts_ms\":200,\"hops\":[{\"node\":\"peer-0\",\"shard\":1,",
+            "\"link_seq\":5,\"ts_ms\":300}]}}],\"seq\":2}}\n",
+        );
+        for line in fixture.lines() {
+            assert!(
+                crate::coordinator::persistence::unframe(line).is_some(),
+                "fixture line failed its own CRC: {line}"
+            );
+        }
+        std::fs::write(
+            dir.join(crate::coordinator::persistence::WAL_FILE),
+            fixture,
+        )
+        .unwrap();
+        let r = recover_shard(&dir).unwrap();
+        assert_eq!(r.dropped_records, 0);
+        assert_eq!(r.wal_seq, 2);
+        assert_eq!(r.state.entries.len(), 2);
+        let a = &r.state.entries[0].origin;
+        assert_eq!(a.tag("a"), "peer-0/0/a/1");
+        assert_eq!(a.ts_ms, 100);
+        assert!(a.hops.is_empty());
+        let m = &r.state.entries[1].origin;
+        assert_eq!(m.tag("m"), "peer-1/2/m/9");
+        assert_eq!(m.hops.len(), 1);
+        assert_eq!(&*m.hops[0].node, "peer-0");
+        assert_eq!(m.hops[0].shard, 1);
+        assert_eq!(m.hops[0].link_seq, 5);
+        assert_eq!(m.hops[0].ts_ms, 300);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
     fn real_genes_wal_round_trip_property() {
         // RealVector ⇄ WAL v3 ⇄ replay: random finite gene vectors
         // survive the durable pipeline bit-for-bit (the real-valued
@@ -551,6 +605,7 @@ mod tests {
                     ),
                     fitness,
                     uuid: format!("r{i}"),
+                    origin: Default::default(),
                 };
                 p.record_put(0, &entry, None);
                 originals.push((genes, fitness));
@@ -616,6 +671,7 @@ mod tests {
                     chromosome: crate::genome::Genome::Bits(packed),
                     fitness,
                     uuid: format!("u{i}"),
+                    origin: Default::default(),
                 };
                 p.record_put(0, &entry, None);
                 originals.push((wire, fitness));

@@ -17,6 +17,7 @@ use std::path::{Path, PathBuf};
 use super::wal::{frame, unframe};
 use crate::coordinator::experiment::ExperimentLog;
 use crate::coordinator::pool::PoolEntry;
+use crate::coordinator::provenance::Provenance;
 use crate::genome::Genome;
 use crate::json::Json;
 
@@ -63,28 +64,32 @@ impl ShardState {
 }
 
 fn entry_to_json(e: &PoolEntry) -> Json {
-    // v3 record: `repr` + the genome's durable payload (packed hex for
-    // bits — the v2 payload unchanged — or the canonical decimal `genes`
-    // array for real vectors). No re-validation on replay.
+    // v4 record: the v3 genome payload (`repr` + packed hex for bits —
+    // the v2 payload unchanged — or the canonical decimal `genes` array
+    // for real vectors) plus the entry's `prov` origin tag and hop
+    // chain. No re-validation on replay.
     let mut rec = Json::obj(vec![
         ("t", "entry".into()),
-        ("v", 3u64.into()),
+        ("v", 4u64.into()),
         ("fitness", e.fitness.into()),
         ("uuid", e.uuid.as_str().into()),
     ]);
     e.chromosome.encode_record(&mut rec);
+    e.origin.encode_record(&mut rec);
     rec
 }
 
-/// Decode one durable pool-entry record of any version: v3 (`repr`
-/// dispatch), v2 (`packed` + `n_bits`), or the PR 2 v1 form
-/// (`chromosome` bit-string). `None` for malformed/corrupt records of
-/// any version.
+/// Decode one durable pool-entry record of any version: v4 (v3 plus the
+/// `prov` provenance member), v3 (`repr` dispatch), v2 (`packed` +
+/// `n_bits`), or the PR 2 v1 form (`chromosome` bit-string). Records
+/// without `prov` decode to the unknown origin. `None` for
+/// malformed/corrupt records of any version.
 pub(crate) fn entry_from_json(v: &Json) -> Option<PoolEntry> {
     Some(PoolEntry {
         chromosome: Genome::decode_record(v)?,
         fitness: v.get_f64("fitness")?,
         uuid: v.get_str("uuid").unwrap_or("anonymous").to_string(),
+        origin: Provenance::decode_record(v),
     })
 }
 
@@ -262,6 +267,7 @@ mod tests {
                 best_fitness: 8.0,
                 solved_by: Some("a".into()),
                 solution: Some("1111".into()),
+                lineage: None,
             }],
             entries: vec![
                 PoolEntry {
@@ -270,6 +276,21 @@ mod tests {
                     ),
                     fitness: 2.0,
                     uuid: "a".into(),
+                    // A stamped origin with one hop: the round-trip
+                    // assertion below proves provenance survives the
+                    // snapshot byte layer.
+                    origin: Provenance {
+                        node: std::sync::Arc::from("peer-0"),
+                        shard: 1,
+                        seq: 7,
+                        ts_ms: 42,
+                        hops: vec![crate::coordinator::provenance::Hop {
+                            node: std::sync::Arc::from("peer-1"),
+                            shard: 0,
+                            link_seq: 3,
+                            ts_ms: 99,
+                        }],
+                    },
                 },
                 PoolEntry {
                     chromosome: Genome::Real(
@@ -277,6 +298,7 @@ mod tests {
                     ),
                     fitness: 3.0,
                     uuid: "b".into(),
+                    origin: Provenance::default(),
                 },
             ],
         }

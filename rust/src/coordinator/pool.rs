@@ -14,6 +14,7 @@
 //! migration dedup is word/bit-pattern compares instead of string
 //! compares.
 
+use super::provenance::Provenance;
 use crate::genome::Genome;
 use crate::rng::{dist, Rng64};
 
@@ -27,6 +28,10 @@ pub struct PoolEntry {
     pub fitness: f64,
     /// Island UUID that contributed it.
     pub uuid: String,
+    /// Where the entry entered the system and every hop since; stamped
+    /// at PUT acceptance, carried through WAL v4, snapshots, migration,
+    /// and the federation wire.
+    pub origin: Provenance,
 }
 
 /// Bounded pool with random-replacement eviction. The paper's pool is an
@@ -146,6 +151,7 @@ mod tests {
             ),
             fitness,
             uuid: format!("u{tag}"),
+            origin: Provenance::default(),
         }
     }
 
@@ -246,6 +252,7 @@ mod tests {
                 chromosome: g(vec![0.5, -1.25]),
                 fitness: -1.0,
                 uuid: "r".into(),
+                origin: Provenance::default(),
             },
             &mut rng,
         );

@@ -1,0 +1,350 @@
+//! Solution provenance: where a chromosome came from and every hop it
+//! took to get here.
+//!
+//! The paper's lineage ("Asynchronous Distributed Genetic Algorithms
+//! with Javascript and JSON") hinges on knowing which volunteers and
+//! which migration paths produced the winners. Every accepted PUT is
+//! stamped with a compact origin tag — `node/shard/volunteer-uuid/seq`
+//! plus the ingest timestamp — that travels with the entry through the
+//! pool, the WAL (record v4), inter-shard migration, and the federation
+//! wire. Each migration or gossip delivery appends a [`Hop`], so the
+//! winning solution's full chain (origin volunteer → shards → gossip
+//! links → winning epoch) is reconstructable on any peer via
+//! `GET /experiment/lineage` or `nodio trace assemble`.
+//!
+//! Representation notes for the hot path: the node name is an
+//! `Arc<str>` (stamping clones a refcount, never allocates) and a fresh
+//! origin has an empty hop vector (`Vec::new` does not allocate), so
+//! provenance stamping adds **zero** allocations to the PUT path.
+
+use std::sync::Arc;
+
+use crate::json::Json;
+
+/// Upper bound on a hop chain — see [`Provenance::push_hop`].
+pub const MAX_HOPS: usize = 8;
+
+/// One migration/gossip delivery in an entry's journey: which node and
+/// shard received it, over which per-link wire seq (0 for in-process
+/// shard gossip), and when.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Hop {
+    pub node: Arc<str>,
+    pub shard: u32,
+    /// The sender's per-link WAL wire seq for federation deliveries;
+    /// 0 for in-process inter-shard migration.
+    pub link_seq: u64,
+    pub ts_ms: u64,
+}
+
+impl Hop {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("node", self.node.as_ref().into()),
+            ("shard", u64::from(self.shard).into()),
+            ("link_seq", self.link_seq.into()),
+            ("ts_ms", self.ts_ms.into()),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Option<Hop> {
+        Some(Hop {
+            node: Arc::from(v.get_str("node")?),
+            shard: v.get_u64("shard")? as u32,
+            link_seq: v.get_u64("link_seq").unwrap_or(0),
+            ts_ms: v.get_u64("ts_ms").unwrap_or(0),
+        })
+    }
+}
+
+/// The origin tag stamped on every accepted PUT, plus the hop chain
+/// appended as the entry migrates. Travels with [`super::pool::PoolEntry`]
+/// through WAL v4 records, snapshots, and the federation wire.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Provenance {
+    /// Federation node name of the ingesting process (`--node`, default
+    /// `pid-<pid>`); `"local"` for non-federated servers.
+    pub node: Arc<str>,
+    /// Shard that accepted the PUT.
+    pub shard: u32,
+    /// Per-shard ingest sequence number (1-based; 0 = unknown origin,
+    /// e.g. an entry replayed from a pre-v4 WAL).
+    pub seq: u64,
+    /// Unix ms at ingest.
+    pub ts_ms: u64,
+    /// Deliveries since ingest, oldest first.
+    pub hops: Vec<Hop>,
+}
+
+impl Default for Provenance {
+    fn default() -> Self {
+        Provenance {
+            node: Arc::from(""),
+            shard: 0,
+            seq: 0,
+            ts_ms: 0,
+            hops: Vec::new(),
+        }
+    }
+}
+
+impl Provenance {
+    /// A fresh origin stamp (no hops). Allocation-free: clones the node
+    /// `Arc` and starts an empty hop vector.
+    pub fn origin(node: &Arc<str>, shard: u32, seq: u64, ts_ms: u64) -> Provenance {
+        Provenance { node: node.clone(), shard, seq, ts_ms, hops: Vec::new() }
+    }
+
+    /// True for entries whose origin predates provenance stamping
+    /// (pre-v4 WAL replay, pre-v4 federation peers).
+    pub fn is_unknown(&self) -> bool {
+        self.node.is_empty()
+    }
+
+    /// The compact origin tag: `node/shard/volunteer-uuid/seq`.
+    pub fn tag(&self, uuid: &str) -> String {
+        format!("{}/{}/{}/{}", self.node, self.shard, uuid, self.seq)
+    }
+
+    /// Append a boundary-crossing hop, bounded at [`MAX_HOPS`]: a
+    /// long-lived federation with repeated kill/rejoin cycles would
+    /// otherwise grow the winner lineage's chain without limit (each
+    /// hello catch-up re-delivery appends a hop). The origin stamp is
+    /// untouched; when full, the oldest hop is dropped so the chain
+    /// keeps the most recent crossings.
+    pub fn push_hop(&mut self, hop: Hop) {
+        if self.hops.len() >= MAX_HOPS {
+            self.hops.remove(0);
+        }
+        self.hops.push(hop);
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("node", self.node.as_ref().into()),
+            ("shard", u64::from(self.shard).into()),
+            ("seq", self.seq.into()),
+            ("ts_ms", self.ts_ms.into()),
+            (
+                "hops",
+                Json::Arr(self.hops.iter().map(Hop::to_json).collect()),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Option<Provenance> {
+        let mut hops: Vec<Hop> = v
+            .get("hops")
+            .and_then(Json::as_arr)
+            .map(|items| items.iter().filter_map(Hop::from_json).collect())
+            .unwrap_or_default();
+        // Wire/WAL inputs honor the same bound as push_hop: a peer
+        // running older code (or a hostile one) cannot inflate chains
+        // past MAX_HOPS; the most recent crossings win.
+        if hops.len() > MAX_HOPS {
+            hops.drain(..hops.len() - MAX_HOPS);
+        }
+        Some(Provenance {
+            node: Arc::from(v.get_str("node")?),
+            shard: v.get_u64("shard").unwrap_or(0) as u32,
+            seq: v.get_u64("seq").unwrap_or(0),
+            ts_ms: v.get_u64("ts_ms").unwrap_or(0),
+            hops,
+        })
+    }
+
+    /// Encode into a WAL/wire record under the `"prov"` member (the
+    /// record-v4 addition). Unknown origins are skipped, so pre-v4
+    /// replayed entries re-serialize without inventing a tag.
+    pub fn encode_record(&self, rec: &mut Json) {
+        if !self.is_unknown() {
+            rec.set("prov", self.to_json());
+        }
+    }
+
+    /// Decode from a WAL/wire record; absent/foreign `"prov"` members
+    /// (v1–v3 records, pre-v4 peers) yield the unknown origin.
+    pub fn decode_record(rec: &Json) -> Provenance {
+        rec.get("prov")
+            .and_then(Provenance::from_json)
+            .unwrap_or_default()
+    }
+}
+
+/// The provenance of a winning (or currently best) solution: the
+/// volunteer uuid plus the entry's origin + hop chain. Carried by
+/// [`super::experiment::ExperimentLog`] so it crosses the WAL, epoch
+/// wire records, and recovery with the rest of the experiment history.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LineageRecord {
+    pub uuid: String,
+    pub origin: Provenance,
+}
+
+impl LineageRecord {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("uuid", self.uuid.as_str().into()),
+            ("origin", self.origin.to_json()),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Option<LineageRecord> {
+        Some(LineageRecord {
+            uuid: v.get_str("uuid")?.to_string(),
+            origin: v.get("origin").and_then(Provenance::from_json)?,
+        })
+    }
+}
+
+/// The `GET /experiment/lineage` body, shared by both server shapes so
+/// the route renders identically: the current best entry's lineage (if
+/// any) and each completed epoch winner's.
+pub fn lineage_json(
+    experiment: u64,
+    best: Option<(f64, &LineageRecord)>,
+    completed: &[super::experiment::ExperimentLog],
+) -> Json {
+    let best_json = match best {
+        Some((fitness, rec)) => Json::obj(vec![
+            ("uuid", rec.uuid.as_str().into()),
+            ("fitness", fitness.into()),
+            ("origin", rec.origin.to_json()),
+        ]),
+        None => Json::Null,
+    };
+    let completed_json: Vec<Json> = completed
+        .iter()
+        .map(|log| {
+            let mut obj = vec![
+                ("experiment", Json::from(log.id)),
+                ("best_fitness", log.best_fitness.into()),
+            ];
+            match &log.lineage {
+                Some(l) => {
+                    obj.push(("uuid", l.uuid.as_str().into()));
+                    obj.push(("origin", l.origin.to_json()));
+                }
+                None => obj.push(("origin", Json::Null)),
+            }
+            Json::obj(obj)
+        })
+        .collect();
+    Json::obj(vec![
+        ("experiment", experiment.into()),
+        ("best", best_json),
+        ("completed", Json::Arr(completed_json)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Provenance {
+        Provenance {
+            node: Arc::from("peer-0"),
+            shard: 2,
+            seq: 41,
+            ts_ms: 1_700_000_000_123,
+            hops: vec![
+                Hop {
+                    node: Arc::from("peer-0"),
+                    shard: 1,
+                    link_seq: 0,
+                    ts_ms: 1_700_000_000_200,
+                },
+                Hop {
+                    node: Arc::from("peer-1"),
+                    shard: 0,
+                    link_seq: 17,
+                    ts_ms: 1_700_000_000_450,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn provenance_round_trips_through_json() {
+        let p = sample();
+        let decoded = Provenance::from_json(&p.to_json()).unwrap();
+        assert_eq!(decoded, p);
+    }
+
+    #[test]
+    fn record_encode_decode_round_trips() {
+        let p = sample();
+        let mut rec = Json::obj(vec![("t", "put".into())]);
+        p.encode_record(&mut rec);
+        assert_eq!(Provenance::decode_record(&rec), p);
+    }
+
+    #[test]
+    fn unknown_origin_is_not_encoded() {
+        let p = Provenance::default();
+        assert!(p.is_unknown());
+        let mut rec = Json::obj(vec![("t", "put".into())]);
+        p.encode_record(&mut rec);
+        assert!(rec.get("prov").is_none());
+        // And a record without prov decodes back to unknown.
+        assert!(Provenance::decode_record(&rec).is_unknown());
+    }
+
+    #[test]
+    fn pre_v4_records_decode_to_unknown() {
+        let rec = Json::obj(vec![
+            ("t", "put".into()),
+            ("fitness", 4.0.into()),
+            ("uuid", "w".into()),
+        ]);
+        let p = Provenance::decode_record(&rec);
+        assert!(p.is_unknown());
+        assert_eq!(p.seq, 0);
+        assert!(p.hops.is_empty());
+    }
+
+    #[test]
+    fn tag_is_the_compact_origin() {
+        let p = sample();
+        assert_eq!(p.tag("island-7"), "peer-0/2/island-7/41");
+    }
+
+    #[test]
+    fn lineage_record_round_trips() {
+        let rec =
+            LineageRecord { uuid: "island-7".into(), origin: sample() };
+        let decoded = LineageRecord::from_json(&rec.to_json()).unwrap();
+        assert_eq!(decoded, rec);
+    }
+
+    #[test]
+    fn hop_chain_is_bounded_keeping_the_most_recent() {
+        let node: Arc<str> = Arc::from("peer-0");
+        let mut p = Provenance::origin(&node, 0, 1, 10);
+        for i in 0..(MAX_HOPS as u64 + 3) {
+            p.push_hop(Hop {
+                node: node.clone(),
+                shard: 0,
+                link_seq: i,
+                ts_ms: 10 + i,
+            });
+        }
+        assert_eq!(p.hops.len(), MAX_HOPS);
+        // The 3 oldest crossings were dropped; the origin stamp stays.
+        assert_eq!(p.hops[0].link_seq, 3);
+        assert_eq!(p.hops.last().unwrap().link_seq, MAX_HOPS as u64 + 2);
+        assert_eq!(p.seq, 1);
+
+        // Decode honors the same bound: an inflated wire chain is
+        // truncated to its most recent MAX_HOPS hops.
+        let mut inflated: Vec<Json> =
+            p.hops.iter().map(Hop::to_json).collect();
+        let extra = inflated[0].clone();
+        inflated.insert(0, extra);
+        let mut json = p.to_json();
+        json.set("hops", Json::Arr(inflated));
+        let decoded = Provenance::from_json(&json).unwrap();
+        assert_eq!(decoded.hops.len(), MAX_HOPS);
+        assert_eq!(decoded.hops.last().unwrap().link_seq, MAX_HOPS as u64 + 2);
+    }
+}

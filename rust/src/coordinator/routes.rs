@@ -18,6 +18,7 @@ use super::experiment::ExperimentManager;
 use super::logger::EventLog;
 use super::persistence::{ShardPersistence, ShardState};
 use super::pool::{ChromosomePool, PoolEntry};
+use super::provenance::{lineage_json, LineageRecord, Provenance};
 use super::security::{FitnessVerifier, RateLimiter, SaboteurLog};
 use super::telemetry::{
     ServerGauges, Telemetry, TelemetrySettings, TraceKind,
@@ -29,6 +30,7 @@ use crate::http::{Method, Params, Request, Response, Router};
 use crate::json::{self, Json, PutBody, PutItemRef, PutScratch};
 use crate::problems::PackedBits;
 use crate::rng::Xoshiro256pp;
+use crate::util::unix_ms;
 
 /// Largest accepted `PUT /experiment/chromosome` batch. Guards the event
 /// loop against a single request monopolizing it (threat model,
@@ -289,6 +291,12 @@ pub struct PoolState {
     /// replaces it with the spawn-time registry shared with the
     /// `ConnDriver`.
     pub telemetry: Arc<Telemetry>,
+    /// Node name stamped into PUT provenance. The single-loop server is
+    /// never federated (federation forces the sharded backend), so this
+    /// is `"local"`.
+    pub node: Arc<str>,
+    /// Per-process PUT ingest counter (the `seq` of the origin tag).
+    prov_seq: u64,
 }
 
 impl PoolState {
@@ -318,6 +326,8 @@ impl PoolState {
                 1,
                 &TelemetrySettings::default(),
             )),
+            node: Arc::from("local"),
+            prov_seq: 0,
         };
         state.rebuild_put_ok();
         state
@@ -537,6 +547,32 @@ pub fn build_router(state: Shared) -> Router {
         );
     }
 
+    // Solution provenance: the current best entry's origin + hop chain
+    // and each completed epoch winner's.
+    {
+        let state = state.clone();
+        router.get(
+            "/experiment/lineage",
+            move |_req: &Request, _p: &Params| {
+                let s = state.borrow();
+                let best = s.pool.best().map(|e| {
+                    (
+                        e.fitness,
+                        LineageRecord {
+                            uuid: e.uuid.clone(),
+                            origin: e.origin.clone(),
+                        },
+                    )
+                });
+                Response::json(&lineage_json(
+                    s.experiments.current_id(),
+                    best.as_ref().map(|(f, r)| (*f, r)),
+                    s.experiments.completed(),
+                ))
+            },
+        );
+    }
+
     // Metrics time series (the chart data).
     {
         let state = state.clone();
@@ -573,12 +609,12 @@ pub fn build_router(state: Shared) -> Router {
         });
     }
 
-    // The trace-ring flight recorder.
+    // The trace-ring flight recorder (all per-shard rings merged).
     {
         let state = state.clone();
         router.get("/debug/trace", move |_req: &Request, _p: &Params| {
             let s = state.borrow();
-            Response::json(&s.telemetry.ring().dump_json())
+            Response::json(&s.telemetry.dump_trace_json())
         });
     }
 
@@ -620,7 +656,7 @@ pub fn build_router(state: Shared) -> Router {
             "/experiment/reset",
             move |_req: &Request, _p: &Params| {
                 let mut s = state.borrow_mut();
-                let log = s.experiments.finish(None, None);
+                let log = s.experiments.finish(None, None, None);
                 s.pool.clear();
                 s.series.clear();
                 s.drop_render_caches();
@@ -712,6 +748,11 @@ pub fn build_router(state: Shared) -> Router {
             }
         });
     }
+
+    // Latency recording sits in the router itself, so both event-loop
+    // traffic and direct handler calls (tests, benches) land in the
+    // same per-route histograms.
+    router.set_telemetry(state.borrow().telemetry.driver(0));
 
     router
 }
@@ -884,10 +925,16 @@ fn apply_put(s: &mut PoolState, f: PutFields) -> PutOutcome {
         let puts = s.experiments.puts();
         s.series.record(best, pool_size, puts);
     }
+    // Stamp the origin tag (node/shard/uuid/seq + ingest time). The
+    // single-loop server is shard 0 of node "local"; `origin` clones an
+    // Arc and starts an empty hop vector — no allocations.
+    s.prov_seq += 1;
+    let origin = Provenance::origin(&s.node, 0, s.prov_seq, unix_ms());
     let entry = PoolEntry {
         chromosome: genome,
         fitness,
         uuid: uuid.to_string(),
+        origin,
     };
     let evict = s.pool.put(entry, &mut s.rng);
     // The entry lives in the pool now; read it back by slot instead of
@@ -895,6 +942,12 @@ fn apply_put(s: &mut PoolState, f: PutFields) -> PutOutcome {
     // chromosome twice).
     let slot = evict.unwrap_or(s.pool.len() - 1);
     s.note_pool_insert(evict);
+    // Hand the tag to the metric registry: the next class-0 latency
+    // sample rendered for `nodio_request_duration_seconds` carries it as
+    // an OpenMetrics exemplar, and a slow-request trace event inherits
+    // it as its label.
+    s.telemetry
+        .note_put_provenance(0, &s.pool.entries()[slot].origin, uuid);
     let current_id = s.experiments.current_id();
     if let Some(p) = &mut s.persist {
         p.record_put(current_id, &s.pool.entries()[slot], evict);
@@ -914,8 +967,12 @@ fn apply_put(s: &mut PoolState, f: PutFields) -> PutOutcome {
 
     // Experiment over: log, reset pool, bump counter (Figure 2 step 6).
     let solution = s.pool.entries()[slot].chromosome.display_string();
+    let lineage = Some(LineageRecord {
+        uuid: s.pool.entries()[slot].uuid.clone(),
+        origin: s.pool.entries()[slot].origin.clone(),
+    });
     let log_entry =
-        s.experiments.finish(Some(uuid.to_string()), Some(solution));
+        s.experiments.finish(Some(uuid.to_string()), Some(solution), lineage);
     s.pool.clear();
     s.series.clear();
     s.drop_render_caches();
@@ -1379,6 +1436,47 @@ mod tests {
         assert_eq!(events[0].get_f64("fitness"), Some(80.0));
         assert_eq!(events[1].get_str("kind"), Some("epoch_start"));
         assert_eq!(events[1].get_u64("experiment"), Some(1));
+    }
+
+    #[test]
+    fn direct_handler_calls_land_in_latency_histograms() {
+        use crate::coordinator::telemetry::parse_exposition;
+        // Regression: latency recording lives in the router itself
+        // (build_router wires the state's registry), so requests served
+        // by direct handle() calls — tests, benches — must land in the
+        // per-route histograms, not only event-loop traffic.
+        let (_state, mut router) = setup();
+        put(&mut router, "01010101", 30.0, "a");
+        for _ in 0..3 {
+            router.handle(&Request::new(
+                Method::Get,
+                "/experiment/random?uuid=a",
+            ));
+        }
+        let resp =
+            router.handle(&Request::new(Method::Get, "/metrics/prom"));
+        assert_eq!(resp.status, 200);
+        let text = String::from_utf8(resp.body).unwrap();
+        let samples = parse_exposition(&text).unwrap();
+        // 1 PUT + 3 GETs; the scrape records itself only after
+        // rendering, so it is absent from its own snapshot.
+        let count: f64 = samples
+            .iter()
+            .filter(|s| s.name == "nodio_request_duration_seconds_count")
+            .map(|s| s.value)
+            .sum();
+        assert!(count >= 4.0, "histogram count {count} < 4:\n{text}");
+        // The accepted PUT parked its origin tag, rendered as the
+        // OpenMetrics exemplar of the put_chromosome histogram.
+        let exemplar = samples
+            .iter()
+            .filter(|s| {
+                s.name == "nodio_request_duration_seconds_bucket"
+                    && s.label("route") == Some("put_chromosome")
+            })
+            .find_map(|s| s.exemplar.as_ref())
+            .unwrap_or_else(|| panic!("no PUT exemplar in:\n{text}"));
+        assert_eq!(exemplar.label("prov"), Some("local/0/a/1"));
     }
 
     #[test]

@@ -29,9 +29,10 @@
 
 use std::fmt;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
+use super::provenance::Provenance;
 use crate::http::types::push_u64;
 use crate::http::{Method, Response};
 use crate::json::Json;
@@ -186,6 +187,38 @@ pub struct ShardTelemetry {
     pub wal_fsync: AtomicHist,
     /// Snapshot-compaction wall time.
     pub snapshot: AtomicHist,
+    /// Origin tag of the most recently accepted PUT, parked by
+    /// `apply_put` until the request's latency is recorded (class 0
+    /// takes it as its exemplar / slow-trace label). One writer per
+    /// shard; the `Mutex` is never contended on the hot path.
+    pending_prov: Mutex<Option<PendingProv>>,
+    /// The freshest `(origin tag, latency)` pair observed by a class-0
+    /// request — rendered as the OpenMetrics exemplar of the
+    /// `put_chromosome` latency histogram at scrape time.
+    put_exemplar: Mutex<Option<PutExemplar>>,
+}
+
+/// A compact copy of an accepted PUT's origin stamp (plus the volunteer
+/// uuid), parked between `apply_put` and the latency recording.
+#[derive(Clone)]
+struct PendingProv {
+    node: Arc<str>,
+    shard: u32,
+    seq: u64,
+    uuid: String,
+    ts_ms: u64,
+}
+
+impl PendingProv {
+    fn tag(&self) -> String {
+        format!("{}/{}/{}/{}", self.node, self.shard, self.uuid, self.seq)
+    }
+}
+
+#[derive(Clone)]
+struct PutExemplar {
+    prov: PendingProv,
+    us: u64,
 }
 
 impl Default for ShardTelemetry {
@@ -204,6 +237,8 @@ impl ShardTelemetry {
             wal_append_bytes: AtomicU64::new(0),
             wal_fsync: AtomicHist::new(),
             snapshot: AtomicHist::new(),
+            pending_prov: Mutex::new(None),
+            put_exemplar: Mutex::new(None),
         }
     }
 }
@@ -271,6 +306,10 @@ impl TraceKind {
 
 const LABEL_WORDS: usize = 3; // 24 bytes of inline label
 
+/// Cache-line aligned so adjacent slots of a shard's ring never share a
+/// line with another writer's slot (each shard owns a whole ring, but
+/// the dump-time reader walks all of them).
+#[repr(align(64))]
 struct TraceSlot {
     /// Seqlock version: 0 = never written, odd = write in progress,
     /// even = stable. All payload fields are atomics too, so a torn
@@ -390,7 +429,23 @@ impl TraceRing {
 
     /// Dump the stable slots as a JSON object, oldest event first.
     pub fn dump_json(&self) -> Json {
-        let mut events: Vec<(u64, Json)> = Vec::new();
+        let mut events = self.collect_stable();
+        events.sort_by_key(|(seq, _, _)| *seq);
+        Json::obj(vec![
+            ("capacity", self.slots.len().into()),
+            ("total", self.total().into()),
+            (
+                "events",
+                Json::Arr(events.into_iter().map(|(_, _, e)| e).collect()),
+            ),
+        ])
+    }
+
+    /// Read every stable slot as `(seq, ts_ms, event_json)`. Shared by
+    /// the single-ring dump and the merged multi-ring dump
+    /// ([`Telemetry::dump_trace_json`]).
+    fn collect_stable(&self) -> Vec<(u64, u64, Json)> {
+        let mut events: Vec<(u64, u64, Json)> = Vec::new();
         for slot in &self.slots {
             let v1 = slot.version.load(Ordering::Acquire);
             if v1 == 0 || v1 % 2 == 1 {
@@ -449,20 +504,18 @@ impl TraceRing {
                         [(a as usize).min(ROUTE_CLASSES - 1)];
                     obj.push(("route", route.into()));
                     obj.push(("us", b.into()));
+                    // Class-0 slow requests inherit the accepted PUT's
+                    // origin tag (label, 24-byte truncated) and its
+                    // ingest seq — the cross-process correlation key.
+                    if !label.is_empty() {
+                        obj.push(("prov", label.into()));
+                        obj.push(("prov_seq", c.into()));
+                    }
                 }
             }
-            let _ = c;
-            events.push((seq, Json::obj(obj)));
+            events.push((seq, ts_ms, Json::obj(obj)));
         }
-        events.sort_by_key(|(seq, _)| *seq);
-        Json::obj(vec![
-            ("capacity", self.slots.len().into()),
-            ("total", self.total().into()),
-            (
-                "events",
-                Json::Arr(events.into_iter().map(|(_, e)| e).collect()),
-            ),
-        ])
+        events
     }
 }
 
@@ -573,11 +626,19 @@ pub struct TelemetrySettings {
     pub trace_buffer: usize,
     /// Requests at or over this are counted + traced; 0 disables.
     pub slow_ms: u64,
+    /// Test-only determinism knob: when set, every recorded request
+    /// latency is replaced by this many microseconds, making renders of
+    /// equal traffic byte-identical across server shapes. No CLI flag.
+    pub latency_override_us: Option<u64>,
 }
 
 impl Default for TelemetrySettings {
     fn default() -> Self {
-        TelemetrySettings { trace_buffer: 256, slow_ms: 500 }
+        TelemetrySettings {
+            trace_buffer: 256,
+            slow_ms: 500,
+            latency_override_us: None,
+        }
     }
 }
 
@@ -591,25 +652,35 @@ impl TelemetrySettings {
     }
 }
 
-/// The fixed-at-startup registry: per-shard metric slots, the shared
-/// trace ring, and readiness state. One per server process (both server
-/// shapes), shared via `Arc`.
+/// The fixed-at-startup registry: per-shard metric slots, per-shard
+/// trace rings (plus one process ring for the federation driver), and
+/// readiness state. One per server process (both server shapes), shared
+/// via `Arc`.
 pub struct Telemetry {
     shards: Vec<Arc<ShardTelemetry>>,
-    ring: Arc<TraceRing>,
+    /// One ring per shard plus a trailing process-wide ring (federation
+    /// driver, other non-shard writers) — a hot shard can fill its own
+    /// ring without starving anyone else's event slots. Merged at
+    /// `/debug/trace` dump time.
+    rings: Vec<Arc<TraceRing>>,
     readiness: Readiness,
     slow_us: u64,
+    latency_override_us: Option<u64>,
 }
 
 impl Telemetry {
     pub fn new(shards: usize, settings: &TelemetrySettings) -> Telemetry {
+        let shards = shards.max(1);
         Telemetry {
-            shards: (0..shards.max(1))
+            shards: (0..shards)
                 .map(|_| Arc::new(ShardTelemetry::new()))
                 .collect(),
-            ring: Arc::new(TraceRing::new(settings.trace_buffer)),
-            readiness: Readiness::new(shards.max(1) as u64),
+            rings: (0..shards + 1)
+                .map(|_| Arc::new(TraceRing::new(settings.trace_buffer)))
+                .collect(),
+            readiness: Readiness::new(shards as u64),
             slow_us: settings.slow_us(),
+            latency_override_us: settings.latency_override_us,
         }
     }
 
@@ -621,21 +692,93 @@ impl Telemetry {
         self.shards.len()
     }
 
+    /// Shard 0's trace ring (the single-loop server's event ring).
     pub fn ring(&self) -> &Arc<TraceRing> {
-        &self.ring
+        &self.rings[0]
+    }
+
+    /// Shard `i`'s trace ring.
+    pub fn ring_for(&self, shard: usize) -> &Arc<TraceRing> {
+        &self.rings[shard % self.shards.len()]
+    }
+
+    /// The process-wide ring for non-shard writers (federation driver).
+    pub fn process_ring(&self) -> &Arc<TraceRing> {
+        &self.rings[self.rings.len() - 1]
+    }
+
+    /// Merge every ring's stable events into one dump, ordered by
+    /// `(ts_ms, ring, seq)` — per-ring seqs are only ordered within a
+    /// ring, so wall-clock is the primary cross-ring key.
+    pub fn dump_trace_json(&self) -> Json {
+        let mut events: Vec<(u64, usize, u64, Json)> = Vec::new();
+        for (ring_idx, ring) in self.rings.iter().enumerate() {
+            for (seq, ts_ms, e) in ring.collect_stable() {
+                events.push((ts_ms, ring_idx, seq, e));
+            }
+        }
+        events.sort_by(|a, b| {
+            (a.0, a.1, a.2).cmp(&(b.0, b.1, b.2))
+        });
+        Json::obj(vec![
+            (
+                "capacity",
+                self.rings
+                    .iter()
+                    .map(|r| r.capacity())
+                    .sum::<usize>()
+                    .into(),
+            ),
+            ("total", self.trace_total().into()),
+            (
+                "events",
+                Json::Arr(
+                    events.into_iter().map(|(_, _, _, e)| e).collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Events recorded across all rings since startup.
+    fn trace_total(&self) -> u64 {
+        self.rings.iter().map(|r| r.total()).sum()
     }
 
     pub fn readiness(&self) -> &Readiness {
         &self.readiness
     }
 
+    /// Park an accepted PUT's origin tag on its shard's slot; the next
+    /// class-0 latency sample consumes it as exemplar + slow-trace
+    /// label. One uuid-copy allocation per accepted PUT.
+    pub fn note_put_provenance(
+        &self,
+        shard: usize,
+        origin: &Provenance,
+        uuid: &str,
+    ) {
+        if origin.is_unknown() {
+            return;
+        }
+        if let Ok(mut slot) = self.shard(shard).pending_prov.lock() {
+            *slot = Some(PendingProv {
+                node: origin.node.clone(),
+                shard: origin.shard,
+                seq: origin.seq,
+                uuid: uuid.to_string(),
+                ts_ms: origin.ts_ms,
+            });
+        }
+    }
+
     /// The bundle a `ConnDriver` records through (one per event loop).
     pub fn driver(&self, shard: usize) -> DriverTelemetry {
         DriverTelemetry {
             shard: self.shard(shard).clone(),
-            ring: self.ring.clone(),
+            ring: self.ring_for(shard).clone(),
             shard_id: shard as u64,
             slow_us: self.slow_us,
+            latency_override_us: self.latency_override_us,
         }
     }
 
@@ -643,7 +786,7 @@ impl Telemetry {
     pub fn persist(&self, shard: usize) -> PersistTelemetry {
         PersistTelemetry {
             shard: self.shard(shard).clone(),
-            ring: self.ring.clone(),
+            ring: self.ring_for(shard).clone(),
             shard_id: shard as u64,
         }
     }
@@ -676,12 +819,37 @@ impl Telemetry {
             "Request service latency, by route class.",
             "histogram",
         );
+        // Freshest accepted-PUT origin tag across shards, rendered as
+        // the OpenMetrics exemplar of the put_chromosome histogram —
+        // the latency buckets link back to a concrete provenance tag.
+        let put_exemplar: Option<(String, u64)> = {
+            let mut best: Option<PutExemplar> = None;
+            for s in &self.shards {
+                if let Ok(slot) = s.put_exemplar.lock() {
+                    if let Some(e) = slot.as_ref() {
+                        let fresher = best
+                            .as_ref()
+                            .is_none_or(|b| e.prov.ts_ms >= b.prov.ts_ms);
+                        if fresher {
+                            best = Some(e.clone());
+                        }
+                    }
+                }
+            }
+            best.map(|e| (e.prov.tag(), e.us))
+        };
         for (r, snap) in route_snaps.iter().enumerate() {
-            write_histogram(
+            let exemplar = if r == 0 {
+                put_exemplar.as_ref().map(|(tag, us)| (tag.as_str(), *us))
+            } else {
+                None
+            };
+            write_histogram_exemplar(
                 out,
                 "nodio_request_duration_seconds",
                 &[("route", ROUTE_LABELS[r])],
                 snap,
+                exemplar,
             );
         }
 
@@ -827,7 +995,7 @@ impl Telemetry {
             out,
             "nodio_trace_events_total",
             &[],
-            self.ring.total(),
+            self.trace_total(),
         );
     }
 
@@ -853,32 +1021,67 @@ pub struct ServerGauges {
     pub shards: u64,
 }
 
-/// What a `ConnDriver` holds: its shard's slots, the shared ring, and
-/// the slow threshold. Recording is allocation-free.
+/// What a request recorder holds: its shard's slots, that shard's ring,
+/// and the slow threshold. Recording is allocation-free (a slow class-0
+/// request formats its origin tag — off the steady-state path).
 #[derive(Clone)]
 pub struct DriverTelemetry {
     shard: Arc<ShardTelemetry>,
     ring: Arc<TraceRing>,
     shard_id: u64,
     slow_us: u64,
+    latency_override_us: Option<u64>,
 }
 
 impl DriverTelemetry {
     /// Record one served request: latency histogram + (over threshold)
-    /// slow counter and trace event.
+    /// slow counter and trace event. A class-0 (PUT) sample consumes
+    /// the origin tag parked by `apply_put` as its exemplar.
     pub fn record_request(&self, class: usize, elapsed: Duration) {
-        let us = elapsed.as_micros().min(u64::MAX as u128) as u64;
+        let us = match self.latency_override_us {
+            Some(v) => v,
+            None => elapsed.as_micros().min(u64::MAX as u128) as u64,
+        };
         self.shard.requests[class.min(ROUTE_CLASSES - 1)].record_us(us);
+        // Only the PUT class touches the provenance slot: the GET hot
+        // path stays free of even the uncontended lock.
+        let prov = if class == 0 {
+            self.shard
+                .pending_prov
+                .lock()
+                .ok()
+                .and_then(|mut slot| slot.take())
+        } else {
+            None
+        };
         if us >= self.slow_us {
             self.shard.slow_requests.fetch_add(1, Ordering::Relaxed);
-            self.ring.push(
-                TraceKind::SlowRequest,
-                self.shard_id,
-                class as u64,
-                us,
-                0,
-                "",
-            );
+            match &prov {
+                Some(p) => {
+                    let tag = p.tag();
+                    self.ring.push(
+                        TraceKind::SlowRequest,
+                        self.shard_id,
+                        class as u64,
+                        us,
+                        p.seq,
+                        &tag,
+                    );
+                }
+                None => self.ring.push(
+                    TraceKind::SlowRequest,
+                    self.shard_id,
+                    class as u64,
+                    us,
+                    0,
+                    "",
+                ),
+            }
+        }
+        if let Some(p) = prov {
+            if let Ok(mut slot) = self.shard.put_exemplar.lock() {
+                *slot = Some(PutExemplar { prov: p, us });
+            }
         }
     }
 
@@ -1086,6 +1289,36 @@ pub fn write_histogram(
     labels: &[(&str, &str)],
     snap: &HistSnapshot,
 ) {
+    write_histogram_exemplar(out, name, labels, snap, None);
+}
+
+/// [`write_histogram`], optionally attaching an OpenMetrics exemplar
+/// (`# {prov="<tag>"} <seconds>`) to the bucket line the latency falls
+/// in (the `+Inf` line when the latency exceeds the last finite bound).
+pub fn write_histogram_exemplar(
+    out: &mut Vec<u8>,
+    name: &str,
+    labels: &[(&str, &str)],
+    snap: &HistSnapshot,
+    exemplar: Option<(&str, u64)>,
+) {
+    // The exemplar's bucket: the same mapping record_us uses, except a
+    // latency past the last finite bound belongs on the +Inf line (an
+    // exemplar's value must not exceed its bucket's bound).
+    let ex_bucket: Option<usize> = exemplar.and_then(|(_, us)| {
+        let b = AtomicHist::bucket_of(us);
+        if us >= (1u64 << (b + 1)) {
+            None // capped: +Inf line
+        } else {
+            Some(b)
+        }
+    });
+    let write_exemplar = |out: &mut Vec<u8>, (tag, us): (&str, u64)| {
+        out.extend_from_slice(b" # {prov=\"");
+        write_label_escaped(out, tag);
+        out.extend_from_slice(b"\"} ");
+        write_f64(out, us as f64 / 1e6);
+    };
     let mut cum = 0u64;
     let mut le_buf: Vec<u8> = Vec::with_capacity(24);
     for i in 0..HIST_BUCKETS {
@@ -1096,11 +1329,21 @@ pub fn write_histogram(
         write_name_labels(out, name, "_bucket", labels, Some(("le", le)));
         out.push(b' ');
         push_u64(out, cum);
+        if ex_bucket == Some(i) {
+            if let Some(e) = exemplar {
+                write_exemplar(out, e);
+            }
+        }
         out.push(b'\n');
     }
     write_name_labels(out, name, "_bucket", labels, Some(("le", "+Inf")));
     out.push(b' ');
     push_u64(out, cum);
+    if ex_bucket.is_none() {
+        if let Some(e) = exemplar {
+            write_exemplar(out, e);
+        }
+    }
     out.push(b'\n');
     write_name_labels(out, name, "_sum", labels, None);
     out.push(b' ');
@@ -1122,6 +1365,24 @@ pub struct Sample {
     pub name: String,
     pub labels: Vec<(String, String)>,
     pub value: f64,
+    /// OpenMetrics exemplar (`# {labels} value`), if the line has one.
+    pub exemplar: Option<SampleExemplar>,
+}
+
+/// A parsed OpenMetrics exemplar.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SampleExemplar {
+    pub labels: Vec<(String, String)>,
+    pub value: f64,
+}
+
+impl SampleExemplar {
+    pub fn label(&self, key: &str) -> Option<&str> {
+        self.labels
+            .iter()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+    }
 }
 
 impl Sample {
@@ -1158,7 +1419,108 @@ pub fn parse_prom_f64(s: &str) -> Option<f64> {
     }
 }
 
-/// Parse one sample line (`name{labels} value`). Strict about the
+/// Parse a `{key="value",...}` label set. `*i` must point at the `{`;
+/// on success it points past the closing `}`.
+fn parse_label_set(
+    line: &str,
+    i: &mut usize,
+) -> Result<Vec<(String, String)>, String> {
+    let bytes = line.as_bytes();
+    debug_assert_eq!(bytes.get(*i), Some(&b'{'));
+    *i += 1;
+    let mut labels = Vec::new();
+    if bytes.get(*i) == Some(&b'}') {
+        *i += 1; // empty label set
+        return Ok(labels);
+    }
+    loop {
+        let start = *i;
+        while *i < bytes.len() && is_name_byte(bytes[*i], *i == start) {
+            *i += 1;
+        }
+        if *i == start {
+            return Err("bad label name".to_string());
+        }
+        let key = line[start..*i].to_string();
+        if *i + 1 >= bytes.len()
+            || bytes[*i] != b'='
+            || bytes[*i + 1] != b'"'
+        {
+            return Err("expected =\" after label name".to_string());
+        }
+        *i += 2;
+        let mut value = Vec::new();
+        loop {
+            if *i >= bytes.len() {
+                return Err("unterminated label value".to_string());
+            }
+            match bytes[*i] {
+                b'"' => {
+                    *i += 1;
+                    break;
+                }
+                b'\\' => {
+                    let esc = bytes
+                        .get(*i + 1)
+                        .ok_or_else(|| "dangling escape".to_string())?;
+                    match esc {
+                        b'\\' => value.push(b'\\'),
+                        b'"' => value.push(b'"'),
+                        b'n' => value.push(b'\n'),
+                        _ => {
+                            return Err(format!(
+                                "bad escape \\{}",
+                                *esc as char
+                            ))
+                        }
+                    }
+                    *i += 2;
+                }
+                b => {
+                    value.push(b);
+                    *i += 1;
+                }
+            }
+        }
+        let value = String::from_utf8(value)
+            .map_err(|_| "label value not utf-8".to_string())?;
+        labels.push((key, value));
+        match bytes.get(*i) {
+            Some(b',') => *i += 1,
+            Some(b'}') => {
+                *i += 1;
+                break;
+            }
+            _ => return Err("expected ',' or '}' in labels".to_string()),
+        }
+    }
+    Ok(labels)
+}
+
+/// Parse the exemplar portion of a sample line (after the ` # `):
+/// `{labels} value`.
+fn parse_exemplar(s: &str) -> Result<SampleExemplar, String> {
+    let bytes = s.as_bytes();
+    if bytes.first() != Some(&b'{') {
+        return Err("exemplar must start with '{'".to_string());
+    }
+    let mut i = 0;
+    let labels = parse_label_set(s, &mut i)?;
+    if bytes.get(i) != Some(&b' ') {
+        return Err("expected space before exemplar value".to_string());
+    }
+    i += 1;
+    let value_str = &s[i..];
+    if value_str.is_empty() || value_str.contains(' ') {
+        return Err("malformed exemplar value".to_string());
+    }
+    let value = parse_prom_f64(value_str)
+        .ok_or_else(|| format!("bad exemplar value {value_str:?}"))?;
+    Ok(SampleExemplar { labels, value })
+}
+
+/// Parse one sample line (`name{labels} value`, optionally followed by
+/// an OpenMetrics ` # {labels} value` exemplar). Strict about the
 /// grammar the renderer emits: exactly one space before the value, no
 /// timestamps, escaped label values.
 fn parse_sample_line(line: &str) -> Result<Sample, String> {
@@ -1173,89 +1535,23 @@ fn parse_sample_line(line: &str) -> Result<Sample, String> {
     let name = line[..i].to_string();
     let mut labels = Vec::new();
     if i < bytes.len() && bytes[i] == b'{' {
-        i += 1;
-        if i < bytes.len() && bytes[i] == b'}' {
-            i += 1; // empty label set
-        } else {
-            loop {
-                let start = i;
-                while i < bytes.len() && is_name_byte(bytes[i], i == start)
-                {
-                    i += 1;
-                }
-                if i == start {
-                    return Err("bad label name".to_string());
-                }
-                let key = line[start..i].to_string();
-                if i + 1 >= bytes.len()
-                    || bytes[i] != b'='
-                    || bytes[i + 1] != b'"'
-                {
-                    return Err("expected =\" after label name".to_string());
-                }
-                i += 2;
-                let mut value = Vec::new();
-                loop {
-                    if i >= bytes.len() {
-                        return Err("unterminated label value".to_string());
-                    }
-                    match bytes[i] {
-                        b'"' => {
-                            i += 1;
-                            break;
-                        }
-                        b'\\' => {
-                            let esc = bytes.get(i + 1).ok_or_else(|| {
-                                "dangling escape".to_string()
-                            })?;
-                            match esc {
-                                b'\\' => value.push(b'\\'),
-                                b'"' => value.push(b'"'),
-                                b'n' => value.push(b'\n'),
-                                _ => {
-                                    return Err(format!(
-                                        "bad escape \\{}",
-                                        *esc as char
-                                    ))
-                                }
-                            }
-                            i += 2;
-                        }
-                        b => {
-                            value.push(b);
-                            i += 1;
-                        }
-                    }
-                }
-                let value = String::from_utf8(value)
-                    .map_err(|_| "label value not utf-8".to_string())?;
-                labels.push((key, value));
-                match bytes.get(i) {
-                    Some(b',') => i += 1,
-                    Some(b'}') => {
-                        i += 1;
-                        break;
-                    }
-                    _ => {
-                        return Err(
-                            "expected ',' or '}' in labels".to_string()
-                        )
-                    }
-                }
-            }
-        }
+        labels = parse_label_set(line, &mut i)?;
     }
     if bytes.get(i) != Some(&b' ') {
         return Err("expected space before value".to_string());
     }
     i += 1;
-    let value_str = &line[i..];
+    let rest = &line[i..];
+    let (value_str, exemplar) = match rest.split_once(" # ") {
+        Some((v, ex)) => (v, Some(parse_exemplar(ex)?)),
+        None => (rest, None),
+    };
     if value_str.is_empty() || value_str.contains(' ') {
         return Err("malformed value".to_string());
     }
     let value = parse_prom_f64(value_str)
         .ok_or_else(|| format!("bad value {value_str:?}"))?;
-    Ok(Sample { name, labels, value })
+    Ok(Sample { name, labels, value, exemplar })
 }
 
 /// Parse every sample line of an exposition (comments skipped).
@@ -1398,6 +1694,30 @@ pub fn check_exposition(text: &str) -> Result<(), String> {
                 "line {ln}: sample {} without a preceding TYPE",
                 s.name
             ));
+        }
+        if let Some(ex) = &s.exemplar {
+            // OpenMetrics restricts exemplars to histogram buckets (we
+            // don't emit counter exemplars); the exemplar value must fit
+            // inside its finite bucket bound.
+            let on_bucket = s.name.ends_with("_bucket")
+                && histogram_family(&s.name, &types).is_some();
+            if !on_bucket {
+                return Err(format!(
+                    "line {ln}: exemplar on non-bucket sample {}",
+                    s.name
+                ));
+            }
+            if let Some(le_v) =
+                s.label("le").and_then(parse_prom_f64)
+            {
+                if le_v.is_finite() && ex.value > le_v {
+                    return Err(format!(
+                        "line {ln}: exemplar value {} exceeds bucket \
+                         le={le_v}",
+                        ex.value
+                    ));
+                }
+            }
         }
         let key = series_key(&s);
         if keys.contains(&key) {
@@ -1739,6 +2059,81 @@ mod tests {
         let samples = parse_exposition(&text).unwrap();
         assert_eq!(samples[0].label("peer"), Some("a\"b\\c\nd"));
         assert_eq!(samples[0].value, 7.0);
+    }
+
+    #[test]
+    fn exemplar_round_trips_on_the_matching_bucket() {
+        let mut snap = HistSnapshot::new();
+        snap.counts[AtomicHist::bucket_of(80)] = 1;
+        snap.sum_us = 80;
+        let mut out = Vec::new();
+        write_help_type(&mut out, "h", "latency", "histogram");
+        write_histogram_exemplar(
+            &mut out,
+            "h",
+            &[("route", "put_chromosome")],
+            &snap,
+            Some(("peer-0/2/island-7/41", 80)),
+        );
+        let text = String::from_utf8(out).unwrap();
+        check_exposition(&text).unwrap_or_else(|e| {
+            panic!("checker rejected exemplar exposition: {e}\n{text}")
+        });
+        let samples = parse_exposition(&text).unwrap();
+        let with_ex: Vec<&Sample> =
+            samples.iter().filter(|s| s.exemplar.is_some()).collect();
+        assert_eq!(with_ex.len(), 1);
+        let s = with_ex[0];
+        // 80us lands in the le=0.000128 bucket (2^7 us bound).
+        assert_eq!(s.label("le"), Some("0.000128"));
+        let ex = s.exemplar.as_ref().unwrap();
+        assert_eq!(ex.label("prov"), Some("peer-0/2/island-7/41"));
+        assert!((ex.value - 0.00008).abs() < 1e-12);
+    }
+
+    #[test]
+    fn exemplar_past_the_last_finite_bound_lands_on_inf() {
+        let huge = 1u64 << 41; // beyond bucket 39's 2^40us bound
+        let mut snap = HistSnapshot::new();
+        snap.counts[AtomicHist::bucket_of(huge)] = 1;
+        snap.sum_us = huge;
+        let mut out = Vec::new();
+        write_help_type(&mut out, "h", "latency", "histogram");
+        write_histogram_exemplar(&mut out, "h", &[], &snap, Some(("t", huge)));
+        let text = String::from_utf8(out).unwrap();
+        check_exposition(&text).unwrap();
+        let samples = parse_exposition(&text).unwrap();
+        let s = samples.iter().find(|s| s.exemplar.is_some()).unwrap();
+        assert_eq!(s.label("le"), Some("+Inf"));
+    }
+
+    #[test]
+    fn checker_rejects_misplaced_or_oversized_exemplars() {
+        // Exemplar on a counter sample.
+        let doc = "# HELP m x\n# TYPE m counter\n\
+                   m 1 # {prov=\"t\"} 0.5\n";
+        assert!(check_exposition(doc).is_err());
+        // Exemplar value exceeding its finite bucket bound.
+        let doc = concat!(
+            "# HELP h x\n# TYPE h histogram\n",
+            "h_bucket{le=\"0.001\"} 1 # {prov=\"t\"} 0.5\n",
+            "h_bucket{le=\"+Inf\"} 1\n",
+            "h_sum 0.0005\nh_count 1\n",
+        );
+        assert!(check_exposition(doc).is_err());
+        // Same exemplar within the bound: accepted.
+        let doc = concat!(
+            "# HELP h x\n# TYPE h histogram\n",
+            "h_bucket{le=\"0.001\"} 1 # {prov=\"t\"} 0.0005\n",
+            "h_bucket{le=\"+Inf\"} 1\n",
+            "h_sum 0.0005\nh_count 1\n",
+        );
+        check_exposition(doc).unwrap();
+        // Malformed exemplar suffix.
+        let doc = "# HELP h x\n# TYPE h histogram\n\
+                   h_bucket{le=\"+Inf\"} 1 # junk\n\
+                   h_sum 1\nh_count 1\n";
+        assert!(check_exposition(doc).is_err());
     }
 
     #[test]

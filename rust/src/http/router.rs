@@ -2,8 +2,11 @@
 //! captures. The coordinator's REST API (DESIGN.md section 5) is built on
 //! this.
 
+use std::time::Instant;
+
 use super::types::{Method, Request, Response};
 use super::Service;
+use crate::coordinator::telemetry::{route_class, DriverTelemetry};
 
 /// Captured path parameters (`/experiment/:id` matching `/experiment/3`
 /// yields `id = "3"`).
@@ -47,11 +50,12 @@ enum Segment {
 pub struct Router {
     routes: Vec<(Route, Handler)>,
     fast: Option<FastHandler>,
+    telemetry: Option<DriverTelemetry>,
 }
 
 impl Router {
     pub fn new() -> Router {
-        Router { routes: Vec::new(), fast: None }
+        Router { routes: Vec::new(), fast: None, telemetry: None }
     }
 
     /// Install the event-loop fast path. The hook must be behaviorally
@@ -62,6 +66,15 @@ impl Router {
         hook: impl FnMut(&Request, bool, &mut Vec<u8>) -> bool + 'static,
     ) {
         self.fast = Some(Box::new(hook));
+    }
+
+    /// Attach latency recording. Every request served through
+    /// [`Service::handle`] or [`Service::handle_into`] — event-loop
+    /// traffic and direct handler calls alike — then lands in the
+    /// per-route latency histogram (and, over the slow threshold, the
+    /// trace ring).
+    pub fn set_telemetry(&mut self, telemetry: DriverTelemetry) {
+        self.telemetry = Some(telemetry);
     }
 
     /// Register a handler for `method` + `pattern`. Pattern segments
@@ -162,16 +175,43 @@ impl Router {
 
 impl Service for Router {
     fn handle(&mut self, req: &Request) -> Response {
-        self.dispatch(req)
+        match self.telemetry.clone() {
+            Some(t) => {
+                let start = Instant::now();
+                let resp = self.dispatch(req);
+                t.record_request(
+                    route_class(req.method, &req.path),
+                    start.elapsed(),
+                );
+                resp
+            }
+            None => self.dispatch(req),
+        }
     }
 
     fn handle_into(&mut self, req: &Request, keep_alive: bool, out: &mut Vec<u8>) {
+        // Time the fast hook and the dispatch fallback alike: the
+        // histogram must describe every served request, not just the
+        // ones that missed the cache.
+        let timed = self.telemetry.clone().map(|t| (t, Instant::now()));
         if let Some(fast) = &mut self.fast {
             if fast(req, keep_alive, out) {
+                if let Some((t, start)) = timed {
+                    t.record_request(
+                        route_class(req.method, &req.path),
+                        start.elapsed(),
+                    );
+                }
                 return;
             }
         }
         self.dispatch(req).write_to(out, keep_alive);
+        if let Some((t, start)) = timed {
+            t.record_request(
+                route_class(req.method, &req.path),
+                start.elapsed(),
+            );
+        }
     }
 }
 

@@ -18,7 +18,7 @@ use std::time::{Duration, Instant};
 use super::parse::RequestParser;
 use super::types::Response;
 use super::Service;
-use crate::coordinator::telemetry::{route_class, DriverTelemetry};
+use crate::coordinator::telemetry::DriverTelemetry;
 use crate::eventloop::{Epoll, Event, Interest, Waker};
 
 pub(crate) const TOKEN_LISTENER: u64 = 0;
@@ -175,7 +175,6 @@ impl ConnDriver {
                     service,
                     &mut self.read_buf,
                     stats,
-                    self.config.telemetry.as_ref(),
                 );
             }
             if !drop_conn && (ev.writable || conn.pending_out()) {
@@ -228,7 +227,6 @@ impl ConnDriver {
         service: &mut S,
         read_buf: &mut [u8],
         stats: &ServerStats,
-        telemetry: Option<&DriverTelemetry>,
     ) -> bool {
         conn.last_active = Instant::now();
         loop {
@@ -248,18 +246,11 @@ impl ConnDriver {
                     // Render straight into the connection's (warm,
                     // capacity-retaining) output buffer; services with a
                     // cached hot path override handle_into to skip the
-                    // Response object entirely.
-                    match telemetry {
-                        Some(t) => {
-                            let class = route_class(req.method, &req.path);
-                            let start = Instant::now();
-                            service.handle_into(&req, keep, &mut conn.out);
-                            t.record_request(class, start.elapsed());
-                        }
-                        None => {
-                            service.handle_into(&req, keep, &mut conn.out)
-                        }
-                    }
+                    // Response object entirely. Latency recording lives
+                    // in the services themselves (Router/ShardService),
+                    // so direct handler calls land in the same
+                    // histograms as event-loop traffic.
+                    service.handle_into(&req, keep, &mut conn.out);
                     if !keep {
                         conn.close_after_write = true;
                         break;

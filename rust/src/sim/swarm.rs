@@ -741,6 +741,7 @@ mod tests {
                 telemetry: TelemetrySettings {
                     trace_buffer: 512,
                     slow_ms: 1,
+                    ..TelemetrySettings::default()
                 },
                 ..Default::default()
             },

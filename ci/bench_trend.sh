@@ -96,6 +96,14 @@ for f in "$@"; do
         federation_scaling)
             check "$f" "$base" speedup_fed2_vs_single1 up
             ;;
+        pool_micro)
+            check "$f" "$base" batch_over_scalar_verify_ratio up
+            ;;
+        load_gen)
+            check "$f" "$base" req_per_s up
+            check "$f" "$base" p99_ms down
+            check "$f" "$base" write_syscalls_per_resp down
+            ;;
         *)
             echo "FAIL: unknown bench \"$name\" in $f"
             FAILED=1

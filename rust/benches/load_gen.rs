@@ -1,0 +1,530 @@
+//! In-repo load generator: a wrk-style closed-loop driver that holds
+//! thousands of keep-alive connections of mixed GET/PUT pool-protocol
+//! traffic against a real spawned server, and reports wire-level
+//! throughput and latency percentiles.
+//!
+//! Each connection is a closed loop (one request in flight), so the
+//! offered load self-regulates and latency percentiles reflect real
+//! queueing at the server, not generator backlog. Client connections are
+//! driven by a few epoll loops — the same machinery the server uses — so
+//! a laptop can hold 5k+ sockets without a thread per connection.
+//!
+//! Gates (process exits 1 on violation — CI job `load-smoke`):
+//! * the server must answer the measured window in about one outbound
+//!   `write(2)`/`writev(2)` per response (<= 1.10 after the vectored
+//!   head+body flush; this is the strace-free syscall-budget assertion);
+//! * the error rate must stay under 0.5%.
+//!
+//! Throughput (`req_per_s`, floor) and tail latency (`p99_ms`, ceiling)
+//! are gated against committed baselines by `ci/bench_trend.sh` via the
+//! `NODIO_BENCH_JSON` summary, so a regression fails the PR while still
+//! leaving the measured numbers in the workflow artifact.
+//!
+//! Knobs: `NODIO_LOADGEN_CONNS` (default 5000), `NODIO_LOADGEN_SECS`
+//! (default 3; `NODIO_BENCH_FULL=1` defaults to 8).
+
+use std::collections::VecDeque;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::os::fd::AsRawFd;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Barrier};
+use std::time::{Duration, Instant};
+
+use nodio::bench::{write_json_summary, Table};
+use nodio::coordinator::{PoolServer, PoolServerConfig};
+use nodio::eventloop::{self, Epoll, Event, Interest};
+use nodio::genome::ProblemSpec;
+use nodio::http::server::ServerConfig;
+use nodio::http::{HttpClient, Method, Request};
+use nodio::json::Json;
+
+/// One PUT per this many requests (the paper's worker does one PUT + one
+/// GET per epoch, but a pool fronting many islands sees far more GETs).
+const PUT_EVERY: u64 = 8;
+
+const PUT_BODY: &str = concat!(
+    "{\"chromosome\":\"",
+    "0101010101010101010101010101010101010101",
+    "0101010101010101010101010101010101010101",
+    "0101010101010101010101010101010101010101",
+    "0101010101010101010101010101010101010101",
+    "\",\"fitness\":40.5,\"uuid\":\"loadgen\"}"
+);
+
+fn env_u64(name: &str, default: u64) -> u64 {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// Pre-rendered request wire bytes (what `HttpClient` would send).
+fn get_wire() -> Vec<u8> {
+    b"GET /experiment/random?uuid=loadgen HTTP/1.1\r\n\
+      host: nodio\r\ncontent-length: 0\r\n\r\n"
+        .to_vec()
+}
+
+fn put_wire() -> Vec<u8> {
+    let mut w = Vec::with_capacity(256 + PUT_BODY.len());
+    w.extend_from_slice(b"PUT /experiment/chromosome HTTP/1.1\r\n");
+    w.extend_from_slice(b"host: nodio\r\n");
+    w.extend_from_slice(
+        format!("content-length: {}\r\n\r\n", PUT_BODY.len()).as_bytes(),
+    );
+    w.extend_from_slice(PUT_BODY.as_bytes());
+    w
+}
+
+fn find_subslice(haystack: &[u8], needle: &[u8]) -> Option<usize> {
+    haystack.windows(needle.len()).position(|w| w == needle)
+}
+
+/// Scan a buffered byte prefix for one complete response. Returns
+/// `(total_len, status)` once the head and `content-length` body are
+/// fully buffered.
+fn response_complete(buf: &[u8]) -> Option<(usize, u16)> {
+    let head_end = find_subslice(buf, b"\r\n\r\n")?;
+    let head = &buf[..head_end];
+    // "HTTP/1.1 NNN ..."
+    let status: u16 = head
+        .get(9..12)
+        .and_then(|s| std::str::from_utf8(s).ok())
+        .and_then(|s| s.parse().ok())?;
+    let mut content_len = 0usize;
+    for line in head.split(|&b| b == b'\n') {
+        let line = line.strip_suffix(b"\r").unwrap_or(line);
+        if line.len() > 15
+            && line[..15].eq_ignore_ascii_case(b"content-length:")
+        {
+            content_len = std::str::from_utf8(&line[15..])
+                .ok()?
+                .trim()
+                .parse()
+                .ok()?;
+        }
+    }
+    let total = head_end + 4 + content_len;
+    (buf.len() >= total).then_some((total, status))
+}
+
+/// One closed-loop keep-alive connection.
+struct LoadConn {
+    stream: TcpStream,
+    out: Vec<u8>,
+    out_pos: usize,
+    inbuf: Vec<u8>,
+    sent_at: Instant,
+    seq: u64,
+    /// EPOLLOUT currently armed (only after a short write).
+    armed_write: bool,
+}
+
+impl LoadConn {
+    fn pending_out(&self) -> bool {
+        self.out_pos < self.out.len()
+    }
+
+    fn queue_next(&mut self, get: &[u8], put: &[u8]) {
+        self.out.clear();
+        self.out.extend_from_slice(if self.seq % PUT_EVERY == PUT_EVERY - 1 {
+            put
+        } else {
+            get
+        });
+        self.out_pos = 0;
+        self.seq += 1;
+        self.sent_at = Instant::now();
+    }
+
+    /// Push pending request bytes; true while more remains (WouldBlock).
+    fn try_write(&mut self) -> std::io::Result<bool> {
+        while self.pending_out() {
+            match self.stream.write(&self.out[self.out_pos..]) {
+                Ok(0) => {
+                    return Err(std::io::Error::from(
+                        std::io::ErrorKind::WriteZero,
+                    ))
+                }
+                Ok(n) => self.out_pos += n,
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    return Ok(true)
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(e) => return Err(e),
+            }
+        }
+        Ok(false)
+    }
+}
+
+struct WorkerReport {
+    completed: u64,
+    errors: u64,
+    latencies_ms: Vec<f64>,
+}
+
+#[allow(clippy::too_many_arguments)]
+fn worker(
+    addr: std::net::SocketAddr,
+    conns: usize,
+    worker_id: usize,
+    ready: Arc<Barrier>,
+    recording: Arc<AtomicBool>,
+    stop: Arc<AtomicBool>,
+    connected: Arc<AtomicU64>,
+) -> WorkerReport {
+    let get = get_wire();
+    let put = put_wire();
+    let epoll = Epoll::new().expect("epoll");
+    let mut table: Vec<Option<LoadConn>> = Vec::with_capacity(conns);
+
+    for i in 0..conns {
+        // Brief retry: a 5k-connection burst can transiently overflow the
+        // listen backlog even though the server drains accepts per tick.
+        let mut attempt = 0;
+        let stream = loop {
+            match TcpStream::connect(addr) {
+                Ok(s) => break s,
+                Err(_) if attempt < 5 => {
+                    attempt += 1;
+                    std::thread::sleep(Duration::from_millis(20 * attempt));
+                }
+                Err(e) => panic!("connect {i}: {e}"),
+            }
+        };
+        stream.set_nonblocking(true).expect("nonblocking");
+        let _ = stream.set_nodelay(true);
+        let token = i as u64;
+        epoll
+            .add(stream.as_raw_fd(), token, Interest::READ)
+            .expect("epoll add");
+        table.push(Some(LoadConn {
+            stream,
+            out: Vec::with_capacity(512),
+            out_pos: 0,
+            inbuf: Vec::with_capacity(4096),
+            sent_at: Instant::now(),
+            // Stagger the GET/PUT phase across connections so PUTs are
+            // spread over the window instead of arriving in lockstep.
+            seq: (worker_id * conns + i) as u64,
+            armed_write: false,
+        }));
+        connected.fetch_add(1, Ordering::Relaxed);
+        if i % 256 == 255 {
+            // Let the acceptor breathe during the connect storm.
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+    ready.wait();
+
+    // Fire the first request on every connection.
+    let mut dead: VecDeque<u64> = VecDeque::new();
+    for (token, slot) in table.iter_mut().enumerate() {
+        let conn = slot.as_mut().expect("fresh conn");
+        conn.queue_next(&get, &put);
+        match conn.try_write() {
+            Ok(true) => {
+                conn.armed_write = true;
+                let _ = epoll.modify(
+                    conn.stream.as_raw_fd(),
+                    token as u64,
+                    Interest::BOTH,
+                );
+            }
+            Ok(false) => {}
+            Err(_) => dead.push_back(token as u64),
+        }
+    }
+    for token in dead.drain(..) {
+        if let Some(conn) = table[token as usize].take() {
+            epoll.remove(conn.stream.as_raw_fd());
+        }
+    }
+
+    let mut completed = 0u64;
+    let mut errors = 0u64;
+    let mut latencies_ms: Vec<f64> = Vec::with_capacity(1 << 16);
+    let mut events: Vec<Event> = Vec::new();
+    let mut read_buf = vec![0u8; 64 * 1024];
+
+    'outer: while !stop.load(Ordering::Acquire) {
+        epoll
+            .wait(Some(Duration::from_millis(50)), &mut events)
+            .expect("epoll wait");
+        for ev in &events {
+            if stop.load(Ordering::Acquire) {
+                break 'outer;
+            }
+            let token = ev.token as usize;
+            let Some(conn) = table[token].as_mut() else { continue };
+            let mut drop_conn = ev.closed;
+
+            if !drop_conn && ev.writable && conn.pending_out() {
+                match conn.try_write() {
+                    Ok(true) => {}
+                    Ok(false) => {
+                        if conn.armed_write {
+                            conn.armed_write = false;
+                            let _ = epoll.modify(
+                                conn.stream.as_raw_fd(),
+                                ev.token,
+                                Interest::READ,
+                            );
+                        }
+                    }
+                    Err(_) => drop_conn = true,
+                }
+            }
+
+            if !drop_conn && ev.readable {
+                loop {
+                    match conn.stream.read(&mut read_buf) {
+                        Ok(0) => {
+                            drop_conn = true;
+                            break;
+                        }
+                        Ok(n) => {
+                            conn.inbuf.extend_from_slice(&read_buf[..n]);
+                            while let Some((total, status)) =
+                                response_complete(&conn.inbuf)
+                            {
+                                if recording.load(Ordering::Relaxed) {
+                                    completed += 1;
+                                    latencies_ms.push(
+                                        conn.sent_at.elapsed().as_secs_f64()
+                                            * 1e3,
+                                    );
+                                    if !(200..300).contains(&status) {
+                                        errors += 1;
+                                    }
+                                }
+                                conn.inbuf.drain(..total);
+                                conn.queue_next(&get, &put);
+                                match conn.try_write() {
+                                    Ok(true) => {
+                                        if !conn.armed_write {
+                                            conn.armed_write = true;
+                                            let _ = epoll.modify(
+                                                conn.stream.as_raw_fd(),
+                                                ev.token,
+                                                Interest::BOTH,
+                                            );
+                                        }
+                                    }
+                                    Ok(false) => {}
+                                    Err(_) => {
+                                        drop_conn = true;
+                                        break;
+                                    }
+                                }
+                            }
+                        }
+                        Err(e)
+                            if e.kind()
+                                == std::io::ErrorKind::WouldBlock =>
+                        {
+                            break
+                        }
+                        Err(e)
+                            if e.kind()
+                                == std::io::ErrorKind::Interrupted => {}
+                        Err(_) => {
+                            drop_conn = true;
+                            break;
+                        }
+                    }
+                    if drop_conn {
+                        break;
+                    }
+                }
+            }
+
+            if drop_conn {
+                if recording.load(Ordering::Relaxed) {
+                    errors += 1;
+                }
+                if let Some(conn) = table[token].take() {
+                    epoll.remove(conn.stream.as_raw_fd());
+                }
+            }
+        }
+    }
+
+    WorkerReport { completed, errors, latencies_ms }
+}
+
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() as f64 - 1.0) * p).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+fn main() {
+    let full = std::env::var("NODIO_BENCH_FULL").is_ok();
+    let conns = env_u64("NODIO_LOADGEN_CONNS", 5000) as usize;
+    let secs = env_u64("NODIO_LOADGEN_SECS", if full { 8 } else { 3 });
+    let warmup_ms = env_u64("NODIO_LOADGEN_WARMUP_MS", 500);
+    let threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .clamp(2, 8);
+
+    // Client sockets + server-side conns + epoll/eventfd plumbing all
+    // live in this one process.
+    let soft = eventloop::raise_nofile_limit((conns as u64) * 2 + 1024)
+        .unwrap_or(0);
+    println!(
+        "== load_gen: {conns} keep-alive connections, {threads} client \
+         threads, {secs}s window (fd limit {soft}) =="
+    );
+
+    let server = PoolServer::spawn(
+        "127.0.0.1:0",
+        PoolServerConfig {
+            problem: ProblemSpec::bits(160, 1e18), // never solved mid-run
+            http: ServerConfig {
+                max_connections: conns + 128,
+                ..ServerConfig::default()
+            },
+            ..Default::default()
+        },
+    )
+    .expect("spawn server");
+    let addr = server.addr;
+
+    // Readiness gate: traffic starts only once /readyz answers 200.
+    let mut c = HttpClient::connect(addr).expect("connect");
+    let t0 = Instant::now();
+    loop {
+        let resp =
+            c.send(&Request::new(Method::Get, "/readyz")).expect("readyz");
+        if resp.status == 200 {
+            break;
+        }
+        assert!(t0.elapsed() < Duration::from_secs(5), "server never ready");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    // Seed one pool entry so every GET in the run hits the cached body.
+    let mut put = Request::new(Method::Put, "/experiment/chromosome");
+    put.body = PUT_BODY.as_bytes().to_vec();
+    assert_eq!(c.send(&put).expect("seed put").status, 200);
+    drop(c);
+
+    let ready = Arc::new(Barrier::new(threads + 1));
+    let recording = Arc::new(AtomicBool::new(false));
+    let stop = Arc::new(AtomicBool::new(false));
+    let connected = Arc::new(AtomicU64::new(0));
+    let per_thread = conns / threads;
+    let handles: Vec<_> = (0..threads)
+        .map(|id| {
+            let n =
+                if id == threads - 1 { conns - per_thread * id } else { per_thread };
+            let (ready, recording, stop, connected) = (
+                ready.clone(),
+                recording.clone(),
+                stop.clone(),
+                connected.clone(),
+            );
+            std::thread::Builder::new()
+                .name(format!("loadgen-{id}"))
+                .spawn(move || {
+                    worker(addr, n, id, ready, recording, stop, connected)
+                })
+                .expect("spawn worker")
+        })
+        .collect();
+
+    ready.wait(); // all connections up
+    assert_eq!(connected.load(Ordering::Relaxed), conns as u64);
+    std::thread::sleep(Duration::from_millis(warmup_ms));
+
+    // Measured window: deltas of the server's own counters bracket it, so
+    // the syscall budget is computed over exactly the recorded traffic.
+    let stats = server.stats();
+    let req0 = stats.requests.load(Ordering::Relaxed);
+    let wr0 = stats.write_syscalls.load(Ordering::Relaxed);
+    let w0 = Instant::now();
+    recording.store(true, Ordering::Release);
+    std::thread::sleep(Duration::from_secs(secs));
+    recording.store(false, Ordering::Release);
+    let elapsed = w0.elapsed().as_secs_f64();
+    let req1 = stats.requests.load(Ordering::Relaxed);
+    let wr1 = stats.write_syscalls.load(Ordering::Relaxed);
+    stop.store(true, Ordering::Release);
+
+    let mut completed = 0u64;
+    let mut errors = 0u64;
+    let mut latencies: Vec<f64> = Vec::new();
+    for h in handles {
+        let r = h.join().expect("worker panicked");
+        completed += r.completed;
+        errors += r.errors;
+        latencies.extend_from_slice(&r.latencies_ms);
+    }
+    server.stop();
+
+    latencies.sort_by(f64::total_cmp);
+    let req_per_s = completed as f64 / elapsed;
+    let p50 = percentile(&latencies, 0.50);
+    let p99 = percentile(&latencies, 0.99);
+    let served = req1.saturating_sub(req0).max(1);
+    let syscalls_per_resp = (wr1.saturating_sub(wr0)) as f64 / served as f64;
+    let error_rate = errors as f64 / completed.max(1) as f64;
+
+    let mut table = Table::new(&["metric", "value"]);
+    table.row(&["connections".into(), format!("{conns}")]);
+    table.row(&["completed requests".into(), format!("{completed}")]);
+    table.row(&["req/s".into(), format!("{req_per_s:.0}")]);
+    table.row(&["p50 latency".into(), format!("{p50:.2} ms")]);
+    table.row(&["p99 latency".into(), format!("{p99:.2} ms")]);
+    table.row(&[
+        "write syscalls/response".into(),
+        format!("{syscalls_per_resp:.3}"),
+    ]);
+    table.row(&["errors".into(), format!("{errors}")]);
+    table.print();
+
+    // Written before the gates so a failing run still leaves evidence.
+    write_json_summary(&Json::obj(vec![
+        ("bench", "load_gen".into()),
+        ("connections", (conns as f64).into()),
+        ("threads", (threads as f64).into()),
+        ("window_s", elapsed.into()),
+        ("req_per_s", req_per_s.into()),
+        ("p50_ms", p50.into()),
+        ("p99_ms", p99.into()),
+        ("write_syscalls_per_resp", syscalls_per_resp.into()),
+        ("errors", (errors as f64).into()),
+    ]));
+
+    // -- gates -----------------------------------------------------------
+    let mut failed = false;
+    if syscalls_per_resp > 1.10 {
+        println!(
+            "FAIL: {syscalls_per_resp:.3} write syscalls/response (budget \
+             1.10; the vectored flush should answer in one writev)"
+        );
+        failed = true;
+    } else {
+        println!(
+            "PASS: {syscalls_per_resp:.3} write syscalls/response <= 1.10"
+        );
+    }
+    if error_rate > 0.005 {
+        println!(
+            "FAIL: error rate {:.3}% over {completed} requests (budget 0.5%)",
+            error_rate * 1e2
+        );
+        failed = true;
+    } else {
+        println!("PASS: error rate {:.3}% <= 0.5%", error_rate * 1e2);
+    }
+    if completed == 0 {
+        println!("FAIL: no requests completed in the measured window");
+        failed = true;
+    }
+    if failed {
+        std::process::exit(1);
+    }
+}

@@ -1,12 +1,21 @@
 //! Microbenchmarks for the L3 hot paths, used by the performance pass
 //! (EXPERIMENTS.md §Perf): pool operations, JSON codec, HTTP parsing,
-//! RNG throughput, native fitness kernels, and the GA generation step.
+//! RNG throughput, native fitness kernels, the GA generation step, and
+//! the server-side batch-verification lane.
+//!
+//! Gate (process exits 1 on violation — CI job `bench-smoke`): verifying
+//! a 256-item batch through `FitnessVerifier::verify_batch` (one packed
+//! batch-kernel call) must be >= 2x the throughput of the scalar
+//! `verify` loop it replaced on the PUT-batch path.
 
-use nodio::bench::{bench, BenchConfig};
-use nodio::coordinator::{ChromosomePool, PoolEntry};
+use std::time::Instant;
+
+use nodio::bench::{bench, write_json_summary, BenchConfig};
+use nodio::coordinator::{ChromosomePool, FitnessVerifier, PoolEntry};
 use nodio::ea::{operators, BitString, Island, IslandConfig};
+use nodio::genome::ProblemSpec;
 use nodio::http::parse::RequestParser;
-use nodio::json;
+use nodio::json::{self, Json};
 use nodio::problems::{BitProblem, F15Instance, Trap};
 use nodio::rng::{dist, Mt19937, Rng64, SplitMix64, Xoshiro256pp};
 
@@ -162,4 +171,82 @@ fn main() {
             std::hint::black_box(acc);
         });
     }
+
+    // ---- Batch fitness verification (gated) --------------------------------
+    // A server-side batch PUT verifies all 256 claims before applying
+    // them: scalar = the old per-item `verify` loop (one decode + one
+    // eval + one Vec allocation each), batch = one `verify_batch` call
+    // (one scratch decode, one packed batch-kernel eval).
+    let batch_over_scalar = {
+        let trap = Trap::paper();
+        let mut rng = SplitMix64::new(8);
+        let claims: Vec<(String, f64)> = (0..256)
+            .map(|_| {
+                let g = BitString::random(&mut rng, 160);
+                let s: String = g
+                    .bits()
+                    .iter()
+                    .map(|&b| if b == 1 { '1' } else { '0' })
+                    .collect();
+                let f = trap.eval(g.bits());
+                (s, f)
+            })
+            .collect();
+        let claim_refs: Vec<(&str, f64)> =
+            claims.iter().map(|(s, f)| (s.as_str(), *f)).collect();
+        let mut verifier = FitnessVerifier::for_spec(&ProblemSpec::trap())
+            .expect("trap verifier");
+
+        // Identical verdicts first (the bit-identity contract), then
+        // timing: 3 interleaved rounds, best round per lane, so a
+        // transient stall hits both lanes instead of skewing the ratio.
+        let scalar_verdicts: Vec<Result<f64, f64>> =
+            claim_refs.iter().map(|&(c, f)| verifier.verify(c, f)).collect();
+        let mut out = Vec::new();
+        verifier.verify_batch(&claim_refs, &mut out);
+        assert_eq!(scalar_verdicts, out, "batch verify diverged from scalar");
+
+        let reps = 100;
+        let (mut t_scalar, mut t_batch) = (f64::INFINITY, f64::INFINITY);
+        for _ in 0..3 {
+            let t0 = Instant::now();
+            for _ in 0..reps {
+                for &(c, f) in &claim_refs {
+                    std::hint::black_box(verifier.verify(c, f).is_ok());
+                }
+            }
+            t_scalar = t_scalar.min(t0.elapsed().as_secs_f64());
+            let t0 = Instant::now();
+            for _ in 0..reps {
+                verifier.verify_batch(&claim_refs, &mut out);
+                std::hint::black_box(out.len());
+            }
+            t_batch = t_batch.min(t0.elapsed().as_secs_f64());
+        }
+        let items = (256 * reps) as f64;
+        let ratio = t_scalar / t_batch;
+        println!(
+            "verify: scalar {:.0}/s vs batch-256 {:.0}/s -> {ratio:.2}x \
+             (gate: >= 2.0x)",
+            items / t_scalar,
+            items / t_batch,
+        );
+        ratio
+    };
+
+    // Machine-readable trajectory (CI uploads this as an artifact);
+    // written before the gate so a failing run still leaves evidence.
+    write_json_summary(&Json::obj(vec![
+        ("bench", "pool_micro".into()),
+        ("batch_over_scalar_verify_ratio", batch_over_scalar.into()),
+    ]));
+
+    if batch_over_scalar < 2.0 {
+        println!(
+            "FAIL: batch verification is only {batch_over_scalar:.2}x the \
+             scalar loop (gate 2.0x)"
+        );
+        std::process::exit(1);
+    }
+    println!("PASS: batch verification {batch_over_scalar:.2}x >= 2.0x");
 }

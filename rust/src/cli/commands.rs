@@ -94,12 +94,13 @@ commands:
   replay    <data-dir>
             reconstruct an experiment's history offline from its WAL +
             snapshot directory (no server needed)
-  top       <URL> [--interval-s 2] [--count 0]
+  top       <URL> [--interval-s 2] [--count 0] [--once]
             live dashboard over GET /metrics/prom: request rate, p50/p99
             service latency, open connections, pool gauges, WAL write
             rate and per-peer federation link health, one line per poll
             (--count 0 = run until killed; a bare host URL defaults to
-            /metrics/prom)
+            /metrics/prom); --once prints a single machine-readable
+            key=value sample and exits (for scripts — no polling loop)
   promcheck <URL>
             fetch a Prometheus exposition and validate it against the
             text-format grammar — the CI live-scrape gate; exits nonzero
@@ -436,9 +437,34 @@ fn fmt_quantile(v: f64) -> String {
 /// HTTP client the volunteers run on.
 fn cmd_top(args: &Args) -> Result<()> {
     let url = args.positional(0).ok_or_else(|| {
-        anyhow!("usage: nodio top <url> [--interval-s 2] [--count 0]")
+        anyhow!(
+            "usage: nodio top <url> [--interval-s 2] [--count 0] [--once]"
+        )
     })?;
     let (host, path) = scrape_target(url);
+    // `--once`: one scrape, one machine-readable key=value line, exit —
+    // scriptable (load harnesses, cron probes) with no interval loop and
+    // no cursor redraw assumptions about the terminal.
+    if args.flag("once") {
+        let text = fetch_text(host, path)?;
+        let samples =
+            parse_exposition(&text).map_err(|e| anyhow!("{host}: {e}"))?;
+        let lat = merged_buckets(&samples, "nodio_request_duration_seconds");
+        println!(
+            "requests={} experiment={} shards={} pool={} pool_capacity={} \
+             conns={} p50_s={} p99_s={} wal_bytes={}",
+            sum_counter(&samples, "nodio_requests_total") as u64,
+            gauge(&samples, "nodio_experiment") as u64,
+            gauge(&samples, "nodio_shards") as u64,
+            gauge(&samples, "nodio_pool_entries") as u64,
+            gauge(&samples, "nodio_pool_capacity") as u64,
+            gauge(&samples, "nodio_open_connections") as u64,
+            quantile_from_buckets(&lat, 0.5),
+            quantile_from_buckets(&lat, 0.99),
+            sum_counter(&samples, "nodio_wal_appended_bytes_total") as u64,
+        );
+        return Ok(());
+    }
     let interval =
         args.get_f64("interval-s", 2.0).map_err(|e| anyhow!(e))?;
     if !interval.is_finite() || interval <= 0.0 {

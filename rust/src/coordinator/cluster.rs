@@ -74,21 +74,26 @@ use super::persistence::{
 use super::pool::{ChromosomePool, PoolEntry};
 use super::provenance::{lineage_json, Hop, LineageRecord, Provenance};
 use super::routes::{
-    first_json_byte, put_fail, run_put_batch, validate_put_json,
-    validate_put_ref, GenomeFields, PutFields, PutOutcome, RandomOutcome,
+    first_json_byte, precompute_verdicts, put_fail, run_put_batch_n,
+    validate_put_json, validate_put_ref, GenomeFields, PutFields,
+    PutOutcome, RandomOutcome,
 };
 use super::security::{FitnessVerifier, RateLimiter, SaboteurLog};
 use super::server::{PoolServer, PoolServerConfig};
 use super::telemetry::{
     self, route_class, DriverTelemetry, ServerGauges, Telemetry, TraceKind,
 };
-use crate::eventloop::{Epoll, Event, Interest, Waker};
+use crate::eventloop::{
+    self, BatchedWaker, Epoll, Event, Interest, Waker,
+};
 use crate::genome::{ProblemSpec, Representation};
 use crate::http::server::{
     ConnDriver, ServerConfig, ServerHandle, ServerStats, TOKEN_LISTENER,
     TOKEN_WAKER,
 };
-use crate::http::types::{write_json_200, write_no_content_204};
+use crate::http::types::{
+    write_json_200_head, write_no_content_204,
+};
 use crate::http::{Method, Request, Response, Service};
 use crate::json::{self, Json, PutBody, PutScratch};
 use crate::rng::Xoshiro256pp;
@@ -193,7 +198,10 @@ pub(crate) struct MigrationBatch {
 /// (for the aggregated routes), by the handle, and by the federation
 /// driver (inbound remote batches land in `migrations_in`).
 pub(crate) struct ShardSlot {
-    pub(crate) waker: Waker,
+    /// Coalescing wakeup: a burst of producer pushes (gossip fan-out,
+    /// federation deliveries, accepted connections) wakes the shard
+    /// once, not once per record.
+    pub(crate) waker: BatchedWaker,
     conns_in: Handoff<TcpStream>,
     pub(crate) migrations_in: Handoff<MigrationBatch>,
     puts: AtomicU64,
@@ -222,7 +230,7 @@ pub(crate) struct ShardSlot {
 impl ShardSlot {
     pub(crate) fn new(waker: Waker) -> ShardSlot {
         ShardSlot {
-            waker,
+            waker: BatchedWaker::from_waker(waker),
             conns_in: Handoff::new(),
             migrations_in: Handoff::new(),
             puts: AtomicU64::new(0),
@@ -548,11 +556,14 @@ struct ShardService {
     closed: Vec<ExperimentLog>,
     /// Pre-rendered `GET /experiment/random` bodies, slot-aligned with
     /// the partition; a slot is invalidated when its entry is replaced
-    /// and the whole cache drops on clear/epoch.
-    random_cache: Vec<Option<Vec<u8>>>,
+    /// and the whole cache drops on clear/epoch. Bodies are `Arc<[u8]>`
+    /// so a cache hit hands the event loop a shared tail: head + body
+    /// leave in one `writev(2)` without memcpying the body first.
+    random_cache: Vec<Option<Arc<[u8]>>>,
     /// Pre-rendered `{"solved":false,"experiment":N}` — the steady-state
-    /// single-PUT response body, rebuilt on epoch change.
-    put_ok_body: Vec<u8>,
+    /// single-PUT response body, rebuilt on epoch change. Shared for the
+    /// same vectored-send reason as `random_cache`.
+    put_ok_body: Arc<[u8]>,
     /// Sabotage tolerance (parity with the single-loop server): per-shard
     /// server-side re-evaluation of claimed fitness, 409 on mismatch and
     /// 403 after repeated offenses.
@@ -651,7 +662,7 @@ impl ShardService {
             per_uuid_delta: HashMap::new(),
             closed: state.completed,
             random_cache: Vec::new(),
-            put_ok_body: Vec::new(),
+            put_ok_body: Arc::from(&b""[..]),
             verifier: cfg.verify_fitness.then(|| {
                 let v = FitnessVerifier::for_spec(&cfg.problem);
                 if v.is_none() && cfg.id == 0 {
@@ -693,7 +704,8 @@ impl ShardService {
             ("solved", false.into()),
             ("experiment", self.local_experiment.into()),
         ]))
-        .into_bytes();
+        .into_bytes()
+        .into();
     }
 
     fn slot(&self) -> &ShardSlot {
@@ -917,7 +929,7 @@ impl ShardService {
                 experiment: self.local_experiment,
                 entries: best.clone(),
             });
-            slot.waker.wake();
+            slot.waker.notify();
         }
     }
 
@@ -987,9 +999,23 @@ impl ShardService {
                 }
                 Ok(PutBody::Batch(items)) => {
                     let repr = self.repr;
-                    let outcome = run_put_batch(&items, |item| {
-                        match validate_put_ref(item, repr) {
-                            Ok(fields) => self.put_one(fields),
+                    // Validate up front, then verify every claim with one
+                    // batch-kernel call; items are applied sequentially so
+                    // the ban/rate-limit state evolves exactly as the
+                    // scalar path would.
+                    let mut validated: Vec<_> = items
+                        .iter()
+                        .map(|item| validate_put_ref(item, repr))
+                        .collect();
+                    let mut pre =
+                        precompute_verdicts(&mut self.verifier, &validated);
+                    let outcome = run_put_batch_n(validated.len(), |i| {
+                        let verdict = pre[i].take();
+                        match std::mem::replace(
+                            &mut validated[i],
+                            Err(put_fail(500, "consumed")),
+                        ) {
+                            Ok(fields) => self.put_one_pre(fields, verdict),
                             Err(rejection) => rejection,
                         }
                     });
@@ -1003,6 +1029,7 @@ impl ShardService {
                             ("results", Json::Arr(out.results)),
                         ])),
                     };
+                    drop(validated);
                     self.put_scratch.restore(items);
                     return resp;
                 }
@@ -1019,9 +1046,19 @@ impl ShardService {
             // Batched PUT: one response element per request element.
             Json::Arr(items) => {
                 let repr = self.repr;
-                let outcome = run_put_batch(items, |item| {
-                    match validate_put_json(item, repr) {
-                        Ok(fields) => self.put_one(fields),
+                let mut validated: Vec<_> = items
+                    .iter()
+                    .map(|item| validate_put_json(item, repr))
+                    .collect();
+                let mut pre =
+                    precompute_verdicts(&mut self.verifier, &validated);
+                let outcome = run_put_batch_n(validated.len(), |i| {
+                    let verdict = pre[i].take();
+                    match std::mem::replace(
+                        &mut validated[i],
+                        Err(put_fail(500, "consumed")),
+                    ) {
+                        Ok(fields) => self.put_one_pre(fields, verdict),
                         Err(rejection) => rejection,
                     }
                 });
@@ -1050,7 +1087,17 @@ impl ShardService {
     /// Apply one validated PUT element (shared by the single and batched
     /// forms). Returns the per-item status and JSON payload.
     fn put_one(&mut self, fields: PutFields) -> (u16, Json) {
-        match self.apply_put(fields) {
+        self.put_one_pre(fields, None)
+    }
+
+    /// [`ShardService::put_one`] with an optional pre-computed batch
+    /// verification verdict (see [`precompute_verdicts`]).
+    fn put_one_pre(
+        &mut self,
+        fields: PutFields,
+        pre: Option<Result<f64, f64>>,
+    ) -> (u16, Json) {
+        match self.apply_put_pre(fields, pre) {
             PutOutcome::Rejected(status, payload) => (status, payload),
             PutOutcome::Accepted => (
                 200,
@@ -1066,6 +1113,18 @@ impl ShardService {
     /// The core PUT state transition, payload-free on the accept path so
     /// the event-loop fast path can answer from the pre-rendered cache.
     fn apply_put(&mut self, f: PutFields) -> PutOutcome {
+        self.apply_put_pre(f, None)
+    }
+
+    /// [`ShardService::apply_put`] with an optional pre-computed batch
+    /// verification verdict. Verification is pure, so consulting a
+    /// hoisted verdict after the ban/rate-limit guards is equivalent to
+    /// re-evaluating inline.
+    fn apply_put_pre(
+        &mut self,
+        f: PutFields,
+        pre: Option<Result<f64, f64>>,
+    ) -> PutOutcome {
         fn reject(status: u16, msg: &str) -> PutOutcome {
             let (status, payload) = put_fail(status, msg);
             PutOutcome::Rejected(status, payload)
@@ -1081,11 +1140,14 @@ impl ShardService {
             }
         }
         if let Some(verifier) = &self.verifier {
-            let checked = match &f.genome {
-                GenomeFields::Bits(c) => verifier.verify(c, f.fitness),
-                GenomeFields::Real(genes) => {
-                    verifier.verify_real(genes, f.fitness)
-                }
+            let checked = match pre {
+                Some(verdict) => verdict,
+                None => match &f.genome {
+                    GenomeFields::Bits(c) => verifier.verify(c, f.fitness),
+                    GenomeFields::Real(genes) => {
+                        verifier.verify_real(genes, f.fitness)
+                    }
+                },
             };
             if let Err(actual) = checked {
                 let banned = self.saboteurs.record_rejection(f.uuid);
@@ -1235,7 +1297,7 @@ impl ShardService {
             self.advance_epoch_locally(to, record.as_ref());
             for (i, slot) in self.slots.iter().enumerate() {
                 if i != self.id {
-                    slot.waker.wake();
+                    slot.waker.notify();
                 }
             }
             // Tell federated peers the experiment ended: they
@@ -1282,25 +1344,6 @@ impl ShardService {
         }
     }
 
-    /// The zero-allocation event-loop variant of [`ShardService::get_random`]:
-    /// head + cached body appended straight to the connection buffer.
-    fn get_random_into(
-        &mut self,
-        req: &Request,
-        keep_alive: bool,
-        out: &mut Vec<u8>,
-    ) {
-        match self.random_body(req) {
-            RandomOutcome::Limited => Response::new(429)
-                .with_text("rate limited")
-                .write_to(out, keep_alive),
-            RandomOutcome::Empty => write_no_content_204(out, keep_alive),
-            RandomOutcome::Body(body) => {
-                write_json_200(out, body, keep_alive)
-            }
-        }
-    }
-
     /// Shared GET logic: rate limit, epoch sync, accounting, slot pick,
     /// cache fill. Both response renderers wrap this, so they cannot
     /// drift.
@@ -1340,12 +1383,12 @@ impl ShardService {
                 ("experiment", self.local_experiment.into()),
             ]))
             .into_bytes();
-            self.random_cache[idx] = Some(body);
+            self.random_cache[idx] = Some(body.into());
         } else {
             self.slot().cache_hits.fetch_add(1, Ordering::Relaxed);
         }
         RandomOutcome::Body(
-            self.random_cache[idx].as_deref().expect("just filled"),
+            self.random_cache[idx].as_ref().expect("just filled"),
         )
     }
 
@@ -1586,7 +1629,7 @@ impl ShardService {
         // epoch — either way the experiment the caller saw is over.
         for (i, slot) in self.slots.iter().enumerate() {
             if i != self.id {
-                slot.waker.wake();
+                slot.waker.notify();
             }
         }
         self.sync_epoch();
@@ -1653,25 +1696,58 @@ impl Service for ShardService {
         resp
     }
 
-    /// The event-loop fast path: the two hot routes render straight into
-    /// the connection's warm output buffer — a cached GET and a
-    /// steady-state single PUT complete with zero allocations. Everything
-    /// else (and any body the SAX extractor can't borrow) goes through
-    /// [`ShardService::handle`], which shares the same state and caches.
+    /// The contiguous render mode: the vectored path does the work, and
+    /// any shared tail is flattened into `out` — so the two modes cannot
+    /// drift (byte identity by construction).
     fn handle_into(
         &mut self,
         req: &Request,
         keep_alive: bool,
         out: &mut Vec<u8>,
     ) {
+        if let Some(tail) = self.handle_into_vectored(req, keep_alive, out) {
+            out.extend_from_slice(&tail);
+        }
+    }
+
+    /// The event-loop fast path: the two hot routes render straight into
+    /// the connection's warm output buffer — a cached GET and a
+    /// steady-state single PUT complete with zero allocations, returning
+    /// the pre-rendered body as a shared tail so the driver can send
+    /// head + body with one `writev(2)`. Everything else (and any body
+    /// the SAX extractor can't borrow) goes through
+    /// [`ShardService::handle_inner`], which shares the same state and
+    /// caches.
+    fn handle_into_vectored(
+        &mut self,
+        req: &Request,
+        keep_alive: bool,
+        out: &mut Vec<u8>,
+    ) -> Option<Arc<[u8]>> {
         let start = Instant::now();
         if req.method == Method::Get && req.path == "/experiment/random" {
-            self.get_random_into(req, keep_alive, out);
+            let tail = match self.random_body(req) {
+                RandomOutcome::Limited => {
+                    Response::new(429)
+                        .with_text("rate limited")
+                        .write_to(out, keep_alive);
+                    None
+                }
+                RandomOutcome::Empty => {
+                    write_no_content_204(out, keep_alive);
+                    None
+                }
+                RandomOutcome::Body(body) => {
+                    let body = body.clone();
+                    write_json_200_head(out, body.len(), keep_alive);
+                    Some(body)
+                }
+            };
             self.driver.record_request(
                 route_class(req.method, &req.path),
                 start.elapsed(),
             );
-            return;
+            return tail;
         }
         if req.method == Method::Put
             && req.path == "/experiment/chromosome"
@@ -1684,29 +1760,37 @@ impl Service for ShardService {
             if let Ok(text) = std::str::from_utf8(&req.body) {
                 if let Ok(PutBody::Single(item)) = json::parse_put_body(text)
                 {
-                    match validate_put_ref(&item, self.repr)
+                    let tail = match validate_put_ref(&item, self.repr)
                         .map(|fields| self.apply_put(fields))
                     {
-                        Ok(PutOutcome::Accepted) => write_json_200(
-                            out,
-                            &self.put_ok_body,
-                            keep_alive,
-                        ),
+                        Ok(PutOutcome::Accepted) => {
+                            let body = self.put_ok_body.clone();
+                            write_json_200_head(
+                                out,
+                                body.len(),
+                                keep_alive,
+                            );
+                            Some(body)
+                        }
                         Ok(PutOutcome::Solved(payload)) => {
                             Response::new(201)
                                 .with_json(&payload)
-                                .write_to(out, keep_alive)
+                                .write_to(out, keep_alive);
+                            None
                         }
                         Ok(PutOutcome::Rejected(status, payload))
-                        | Err((status, payload)) => Response::new(status)
-                            .with_json(&payload)
-                            .write_to(out, keep_alive),
-                    }
+                        | Err((status, payload)) => {
+                            Response::new(status)
+                                .with_json(&payload)
+                                .write_to(out, keep_alive);
+                            None
+                        }
+                    };
                     self.driver.record_request(
                         route_class(req.method, &req.path),
                         start.elapsed(),
                     );
-                    return;
+                    return tail;
                 }
             }
         }
@@ -1715,6 +1799,7 @@ impl Service for ShardService {
             route_class(req.method, &req.path),
             start.elapsed(),
         );
+        None
     }
 }
 
@@ -1765,7 +1850,11 @@ fn shard_loop(
         // defensive clone allocated once per loop tick.
         for ev in &events {
             if ev.token == TOKEN_WAKER {
-                waker.drain();
+                // Drain through the slot's BatchedWaker (same eventfd as
+                // `waker`): clearing the coalescing flag BEFORE the queue
+                // sweeps below guarantees a producer pushing after the
+                // sweep raises a fresh wakeup.
+                slots[id].waker.drain();
             } else {
                 driver.handle_event(&epoll, ev, &mut service, &stats);
             }
@@ -1814,19 +1903,14 @@ fn acceptor_loop(
     while !shared.shutdown.load(Ordering::Acquire) {
         epoll.wait(Some(Duration::from_millis(100)), &mut events)?;
         // Level-triggered: drain every pending accept before sleeping.
-        loop {
-            match listener.accept() {
-                Ok((stream, _peer)) => {
-                    let slot = &slots[next];
-                    next = (next + 1) % slots.len();
-                    slot.handoffs.fetch_add(1, Ordering::Relaxed);
-                    slot.conns_in.push(stream);
-                    slot.waker.wake();
-                }
-                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
-                Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
-                Err(e) => return Err(e),
-            }
+        // `accept4(SOCK_NONBLOCK)` births the stream non-blocking, so
+        // the adopting shard registers it without an fcntl round trip.
+        while let Some(stream) = eventloop::accept_nonblocking(&listener)? {
+            let slot = &slots[next];
+            next = (next + 1) % slots.len();
+            slot.handoffs.fetch_add(1, Ordering::Relaxed);
+            slot.conns_in.push(stream);
+            slot.waker.notify();
         }
     }
     Ok(())
@@ -2144,7 +2228,10 @@ impl ClusterHandle {
     fn stop_inner(&mut self) {
         self.shared.shutdown.store(true, Ordering::Release);
         for slot in self.slots.iter() {
-            slot.waker.wake();
+            // Bypass the coalescing flag: shutdown must wake the shard
+            // even if a pending (possibly already-consumed) notify left
+            // the flag set.
+            slot.waker.force_wake();
         }
         if let Some(hub) = &self.hub {
             hub.wake();

@@ -73,7 +73,7 @@ use super::telemetry::{
     write_help_type, write_sample_f64, write_sample_u64, LinkTelemetry,
     TraceKind, TraceRing,
 };
-use crate::eventloop::{Epoll, Event, Interest, Waker};
+use crate::eventloop::{self, BatchedWaker, Epoll, Event, Interest};
 use crate::genome::Representation;
 use crate::json::Json;
 use crate::util::unix_ms;
@@ -156,7 +156,9 @@ pub(crate) struct FederationStats {
 /// counters. One hub per process.
 pub(crate) struct FederationHub {
     outbox: Handoff<FedOutbound>,
-    waker: Waker,
+    /// Coalescing wakeup: a burst of shard pushes (every shard gossiping
+    /// in the same tick) costs one eventfd write, not one per record.
+    waker: BatchedWaker,
     pub(crate) stats: Arc<FederationStats>,
     node: String,
     peers: usize,
@@ -180,7 +182,7 @@ impl FederationHub {
         link_telemetry.push(LinkTelemetry::new("inbound"));
         Ok(FederationHub {
             outbox: Handoff::new(),
-            waker: Waker::new()?,
+            waker: BatchedWaker::new()?,
             stats: Arc::new(FederationStats::default()),
             node: cfg
                 .node
@@ -318,15 +320,17 @@ impl FederationHub {
         );
     }
 
-    /// Queue an outbound record and wake the driver.
+    /// Queue an outbound record and wake the driver (coalesced: a burst
+    /// of pushes raises one wakeup).
     pub(crate) fn push(&self, item: FedOutbound) {
         self.outbox.push(item);
-        self.waker.wake();
+        self.waker.notify();
     }
 
-    /// Wake the driver without queueing (shutdown).
+    /// Wake the driver without queueing (shutdown) — unconditionally, so
+    /// a racing coalesce flag can never strand the driver asleep.
     pub(crate) fn wake(&self) {
-        self.waker.wake();
+        self.waker.force_wake();
     }
 
     fn drain_waker(&self) {
@@ -665,7 +669,7 @@ impl FederationCore {
         }
         let slot = &self.slots[idx];
         slot.migrations_in.push(MigrationBatch { experiment: exp, entries });
-        slot.waker.wake();
+        slot.waker.notify();
     }
 
     fn fast_forward(
@@ -699,7 +703,7 @@ impl FederationCore {
             // Shards clear their dead-epoch partitions now, not at the
             // next tick.
             for slot in self.slots.iter() {
-                slot.waker.wake();
+                slot.waker.notify();
             }
         }
     }
@@ -748,7 +752,6 @@ fn dial(addr: &str) -> io::Result<TcpStream> {
         .ok_or_else(|| io::Error::other("peer address resolved to nothing"))?;
     let stream = TcpStream::connect_timeout(&sa, DIAL_TIMEOUT)?;
     stream.set_nonblocking(true)?;
-    let _ = stream.set_nodelay(true);
     Ok(stream)
 }
 
@@ -836,13 +839,12 @@ impl Driver {
     fn accept_all(&mut self) {
         let mut accepted = Vec::new();
         if let Some(listener) = &self.listener {
-            loop {
-                match listener.accept() {
-                    Ok((stream, _peer)) => accepted.push(stream),
-                    Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
-                    Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
-                    Err(_) => break,
-                }
+            // `accept4(SOCK_NONBLOCK)` drain: streams are born
+            // non-blocking, no per-connection fcntl round trips.
+            while let Ok(Some(stream)) =
+                eventloop::accept_nonblocking(listener)
+            {
+                accepted.push(stream);
             }
         }
         for stream in accepted {
@@ -850,12 +852,11 @@ impl Driver {
         }
     }
 
-    /// Adopt a connected stream as a live link (greeting the peer).
-    /// Returns false when registration failed.
+    /// Adopt a connected stream as a live link (greeting the peer). The
+    /// stream is already non-blocking on both entry paths (`accept4` for
+    /// inbound, [`dial`] for outbound). Returns false when registration
+    /// failed.
     fn add_link(&mut self, stream: TcpStream, target: Option<usize>) -> bool {
-        if stream.set_nonblocking(true).is_err() {
-            return false;
-        }
         let _ = stream.set_nodelay(true);
         let token = self.next_token;
         self.next_token += 1;
@@ -1149,6 +1150,7 @@ pub(crate) fn spawn_driver(
 mod tests {
     use super::*;
     use crate::coordinator::provenance::{LineageRecord, Provenance};
+    use crate::eventloop::Waker;
     use crate::genome::{Genome, RealGenes};
     use crate::problems::PackedBits;
 

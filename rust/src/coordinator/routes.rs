@@ -25,8 +25,8 @@ use super::telemetry::{
 };
 use super::timeseries::TimeSeries;
 use crate::genome::{Genome, ProblemSpec, RealGenes, Representation};
-use crate::http::types::{write_json_200, write_no_content_204};
-use crate::http::{Method, Params, Request, Response, Router};
+use crate::http::types::{write_json_200_head, write_no_content_204};
+use crate::http::{FastOutcome, Method, Params, Request, Response, Router};
 use crate::json::{self, Json, PutBody, PutItemRef, PutScratch};
 use crate::problems::PackedBits;
 use crate::rng::Xoshiro256pp;
@@ -220,27 +220,26 @@ pub(crate) fn validate_put_ref<'a>(
 }
 
 /// The batched-PUT protocol shared by the single-loop router and the
-/// sharded coordinator: size guards, per-item dispatch through `put_one`,
-/// per-item `status` stamping. Generic over the element representation
-/// (owned `Json` or borrowed [`PutItemRef`]). `Err` carries the
-/// guard-rejection response.
-pub(crate) fn run_put_batch<T>(
-    items: &[T],
-    mut put_one: impl FnMut(&T) -> (u16, Json),
+/// sharded coordinator: size guards, per-item dispatch through `put_one`
+/// (index-driven, so callers can consume pre-validated elements), per-item
+/// `status` stamping. `Err` carries the guard-rejection response.
+pub(crate) fn run_put_batch_n(
+    count: usize,
+    mut put_one: impl FnMut(usize) -> (u16, Json),
 ) -> Result<BatchOutcome, Response> {
-    if items.is_empty() {
+    if count == 0 {
         return Err(Response::bad_request("empty batch"));
     }
-    if items.len() > MAX_PUT_BATCH {
+    if count > MAX_PUT_BATCH {
         return Err(Response::new(413).with_text("batch exceeds 256 elements"));
     }
     let mut out = BatchOutcome {
-        results: Vec::with_capacity(items.len()),
+        results: Vec::with_capacity(count),
         accepted: 0,
         solved: false,
     };
-    for item in items {
-        let (status, mut payload) = put_one(item);
+    for i in 0..count {
+        let (status, mut payload) = put_one(i);
         if status == 200 || status == 201 {
             out.accepted += 1;
         }
@@ -251,6 +250,51 @@ pub(crate) fn run_put_batch<T>(
         out.results.push(payload);
     }
     Ok(out)
+}
+
+/// Pre-verify all valid elements of a batch with one fitness-kernel call
+/// (see [`FitnessVerifier::verify_batch`]): returns one verdict slot per
+/// element, `None` for invalid elements or when no verifier is active.
+/// Verification is pure (no guard state is touched), so pre-computing it
+/// cannot change per-item outcomes: the verdicts are only consulted by
+/// [`apply_put_pre`] after the ban and rate-limit guards pass, exactly
+/// where the scalar path would have re-evaluated.
+///
+/// [`FitnessVerifier::verify_batch`]: super::security::FitnessVerifier::verify_batch
+pub(crate) fn precompute_verdicts(
+    verifier: &mut Option<FitnessVerifier>,
+    validated: &[Result<PutFields<'_>, (u16, Json)>],
+) -> Vec<Option<Result<f64, f64>>> {
+    let mut pre: Vec<Option<Result<f64, f64>>> = vec![None; validated.len()];
+    let Some(verifier) = verifier else {
+        return pre;
+    };
+    // Valid elements share the experiment's representation, so the
+    // claims are homogeneous: one kernel call covers them all.
+    let mut slots = Vec::new();
+    let mut bit_claims: Vec<(&str, f64)> = Vec::new();
+    let mut real_claims: Vec<(&[f64], f64)> = Vec::new();
+    for (i, v) in validated.iter().enumerate() {
+        if let Ok(f) = v {
+            slots.push(i);
+            match &f.genome {
+                GenomeFields::Bits(c) => bit_claims.push((c, f.fitness)),
+                GenomeFields::Real(g) => {
+                    real_claims.push((g.as_slice(), f.fitness))
+                }
+            }
+        }
+    }
+    let mut verdicts = Vec::new();
+    if !bit_claims.is_empty() {
+        verifier.verify_batch(&bit_claims, &mut verdicts);
+    } else if !real_claims.is_empty() {
+        verifier.verify_real_batch(&real_claims, &mut verdicts);
+    }
+    for (&slot, verdict) in slots.iter().zip(verdicts) {
+        pre[slot] = Some(verdict);
+    }
+    pre
 }
 
 /// All server-side state behind the routes.
@@ -276,12 +320,15 @@ pub struct PoolState {
     pub persist: Option<ShardPersistence>,
     /// Pre-rendered `GET /experiment/random` bodies, slot-aligned with
     /// the pool: a slot is invalidated when its entry is replaced, the
-    /// whole cache drops on clear/epoch. A cache hit serves with zero
-    /// allocations (head + body appended to the warm connection buffer).
-    pub(crate) random_cache: Vec<Option<Vec<u8>>>,
+    /// whole cache drops on clear/epoch. Bodies are `Arc<[u8]>` so a
+    /// cache hit can hand the event-loop server a shared tail — head and
+    /// body leave in one `writev(2)` with zero allocations (an Arc clone
+    /// is one atomic increment).
+    pub(crate) random_cache: Vec<Option<Arc<[u8]>>>,
     /// Pre-rendered `{"solved":false,"experiment":N}` — the steady-state
-    /// single-PUT response body, rebuilt on epoch change.
-    pub(crate) put_ok_body: Vec<u8>,
+    /// single-PUT response body, rebuilt on epoch change. Shared for the
+    /// same vectored-send reason as `random_cache`.
+    pub(crate) put_ok_body: Arc<[u8]>,
     /// Reusable batch-PUT parse scratch: one element-vector allocation
     /// per router, not one per batch request.
     pub(crate) put_scratch: PutScratch,
@@ -320,7 +367,7 @@ impl PoolState {
             series: TimeSeries::new(512),
             persist: None,
             random_cache: Vec::new(),
-            put_ok_body: Vec::new(),
+            put_ok_body: Arc::from(&b""[..]),
             put_scratch: PutScratch::new(),
             telemetry: Arc::new(Telemetry::new(
                 1,
@@ -340,7 +387,8 @@ impl PoolState {
             ("solved", false.into()),
             ("experiment", self.experiments.current_id().into()),
         ]))
-        .into_bytes();
+        .into_bytes()
+        .into();
     }
 
     /// Keep the render cache slot-aligned after a pool insert.
@@ -681,13 +729,15 @@ pub fn build_router(state: Shared) -> Router {
         );
     }
 
-    // The event-loop fast path (Service::handle_into only): serve the two
-    // hot routes straight into the connection's warm output buffer — a
-    // cached GET and a steady-state single PUT complete with zero
-    // allocations. Anything else, and any body the SAX extractor cannot
-    // borrow (escapes, malformed JSON), declines into normal dispatch,
-    // whose handlers share the same state/caches so behavior is
-    // identical.
+    // The event-loop fast path (Service::handle_into /
+    // handle_into_vectored only): serve the two hot routes straight into
+    // the connection's warm output buffer — a cached GET and a
+    // steady-state single PUT complete with zero allocations, returning
+    // their pre-rendered bodies as shared tails so the server sends head
+    // + body with one writev(2). Anything else, and any body the SAX
+    // extractor cannot borrow (escapes, malformed JSON), declines into
+    // normal dispatch, whose handlers share the same state/caches so
+    // behavior is identical.
     {
         let state = state.clone();
         router.set_fast(move |req, keep_alive, out| {
@@ -695,17 +745,22 @@ pub fn build_router(state: Shared) -> Router {
                 (Method::Get, "/experiment/random") => {
                     let mut s = state.borrow_mut();
                     match random_body(&mut s, req) {
-                        RandomOutcome::Limited => Response::new(429)
-                            .with_text("rate limited")
-                            .write_to(out, keep_alive),
+                        RandomOutcome::Limited => {
+                            Response::new(429)
+                                .with_text("rate limited")
+                                .write_to(out, keep_alive);
+                            FastOutcome::Done
+                        }
                         RandomOutcome::Empty => {
-                            write_no_content_204(out, keep_alive)
+                            write_no_content_204(out, keep_alive);
+                            FastOutcome::Done
                         }
                         RandomOutcome::Body(body) => {
-                            write_json_200(out, body, keep_alive)
+                            let body = body.clone();
+                            write_json_200_head(out, body.len(), keep_alive);
+                            FastOutcome::DoneVectored(body)
                         }
                     }
-                    true
                 }
                 (Method::Put, "/experiment/chromosome") => {
                     // Only single objects take the fast path; batches and
@@ -714,15 +769,16 @@ pub fn build_router(state: Shared) -> Router {
                     // borrow — escapes/malformed — is scanned here and
                     // again by dispatch: a rare, bounded double scan.)
                     if first_json_byte(&req.body) != Some(b'{') {
-                        return false;
+                        return FastOutcome::Declined;
                     }
                     let Ok(text) = std::str::from_utf8(&req.body) else {
-                        return false;
+                        return FastOutcome::Declined;
                     };
                     let Ok(PutBody::Single(item)) =
                         json::parse_put_body(text)
                     else {
-                        return false; // escapes/malformed: dispatch path
+                        // escapes/malformed: dispatch path
+                        return FastOutcome::Declined;
                     };
                     let mut s = state.borrow_mut();
                     let repr = s.experiments.repr;
@@ -730,21 +786,26 @@ pub fn build_router(state: Shared) -> Router {
                         .map(|fields| apply_put(&mut s, fields))
                     {
                         Ok(PutOutcome::Accepted) => {
-                            write_json_200(out, &s.put_ok_body, keep_alive)
+                            let body = s.put_ok_body.clone();
+                            write_json_200_head(out, body.len(), keep_alive);
+                            FastOutcome::DoneVectored(body)
                         }
                         Ok(PutOutcome::Solved(payload)) => {
                             Response::new(201)
                                 .with_json(&payload)
-                                .write_to(out, keep_alive)
+                                .write_to(out, keep_alive);
+                            FastOutcome::Done
                         }
                         Ok(PutOutcome::Rejected(status, payload))
-                        | Err((status, payload)) => Response::new(status)
-                            .with_json(&payload)
-                            .write_to(out, keep_alive),
+                        | Err((status, payload)) => {
+                            Response::new(status)
+                                .with_json(&payload)
+                                .write_to(out, keep_alive);
+                            FastOutcome::Done
+                        }
                     }
-                    true
                 }
-                _ => false,
+                _ => FastOutcome::Declined,
             }
         });
     }
@@ -786,9 +847,22 @@ fn put_chromosome(state: &Shared, req: &Request) -> Response {
                 let resp = {
                     let mut s = state.borrow_mut();
                     let repr = s.experiments.repr;
-                    let outcome = run_put_batch(&items, |item| {
-                        match validate_put_ref(item, repr) {
-                            Ok(fields) => put_one(&mut s, fields),
+                    // Validate everything up front, then verify all valid
+                    // claims with one batch kernel call; items are applied
+                    // in order with their pre-computed verdicts.
+                    let mut validated: Vec<_> = items
+                        .iter()
+                        .map(|item| validate_put_ref(item, repr))
+                        .collect();
+                    let mut pre =
+                        precompute_verdicts(&mut s.verifier, &validated);
+                    let outcome = run_put_batch_n(validated.len(), |i| {
+                        let verdict = pre[i].take();
+                        match std::mem::replace(
+                            &mut validated[i],
+                            Err(put_fail(500, "consumed")),
+                        ) {
+                            Ok(fields) => put_one_pre(&mut s, fields, verdict),
                             Err(rejection) => rejection,
                         }
                     });
@@ -821,9 +895,18 @@ fn put_chromosome(state: &Shared, req: &Request) -> Response {
     match &body {
         // Batched PUT: one response element per request element, in order.
         Json::Arr(items) => {
-            let outcome = run_put_batch(items, |item| {
-                match validate_put_json(item, repr) {
-                    Ok(fields) => put_one(&mut s, fields),
+            let mut validated: Vec<_> = items
+                .iter()
+                .map(|item| validate_put_json(item, repr))
+                .collect();
+            let mut pre = precompute_verdicts(&mut s.verifier, &validated);
+            let outcome = run_put_batch_n(validated.len(), |i| {
+                let verdict = pre[i].take();
+                match std::mem::replace(
+                    &mut validated[i],
+                    Err(put_fail(500, "consumed")),
+                ) {
+                    Ok(fields) => put_one_pre(&mut s, fields, verdict),
                     Err(rejection) => rejection,
                 }
             });
@@ -862,7 +945,17 @@ pub(crate) enum PutOutcome {
 /// Apply one validated PUT element. Returns the per-item status and JSON
 /// payload (the batched form and the Response-building callers).
 fn put_one(s: &mut PoolState, fields: PutFields) -> (u16, Json) {
-    match apply_put(s, fields) {
+    put_one_pre(s, fields, None)
+}
+
+/// [`put_one`] with an optional pre-computed verification verdict (the
+/// batch-verified PUT path).
+fn put_one_pre(
+    s: &mut PoolState,
+    fields: PutFields,
+    pre: Option<Result<f64, f64>>,
+) -> (u16, Json) {
+    match apply_put_pre(s, fields, pre) {
         PutOutcome::Rejected(status, payload) => (status, payload),
         PutOutcome::Accepted => (
             200,
@@ -878,6 +971,19 @@ fn put_one(s: &mut PoolState, fields: PutFields) -> (u16, Json) {
 /// The core PUT state transition, payload-free on the accept path so the
 /// event-loop fast hook can answer from the pre-rendered cache.
 fn apply_put(s: &mut PoolState, f: PutFields) -> PutOutcome {
+    apply_put_pre(s, f, None)
+}
+
+/// [`apply_put`] with an optional pre-computed verification verdict:
+/// `Some` skips the per-item re-evaluation (the claim was already checked
+/// by one batch kernel call over the whole request), `None` verifies
+/// inline. Verdict semantics are identical either way — `Ok(actual)`
+/// accepts, `Err(actual)` is the 409 sabotage rejection.
+fn apply_put_pre(
+    s: &mut PoolState,
+    f: PutFields,
+    pre: Option<Result<f64, f64>>,
+) -> PutOutcome {
     fn reject(status: u16, msg: &str) -> PutOutcome {
         let (status, payload) = put_fail(status, msg);
         PutOutcome::Rejected(status, payload)
@@ -892,11 +998,14 @@ fn apply_put(s: &mut PoolState, f: PutFields) -> PutOutcome {
         }
     }
     if let Some(verifier) = &s.verifier {
-        let checked = match &f.genome {
-            GenomeFields::Bits(c) => verifier.verify(c, f.fitness),
-            GenomeFields::Real(genes) => {
-                verifier.verify_real(genes, f.fitness)
-            }
+        let checked = match pre {
+            Some(verdict) => verdict,
+            None => match &f.genome {
+                GenomeFields::Bits(c) => verifier.verify(c, f.fitness),
+                GenomeFields::Real(genes) => {
+                    verifier.verify_real(genes, f.fitness)
+                }
+            },
         };
         if let Err(actual) = checked {
             let banned = s.saboteurs.record_rejection(f.uuid);
@@ -1023,12 +1132,13 @@ pub(crate) fn first_json_byte(body: &[u8]) -> Option<u8> {
 }
 
 /// What one `GET /experiment/random` resolves to; the body borrows the
-/// slot-aligned render cache. Shared with the sharded coordinator so the
-/// two hot paths keep one vocabulary.
+/// slot-aligned render cache (an `Arc` so the vectored fast path can
+/// clone it as a shared send tail). Shared with the sharded coordinator
+/// so the two hot paths keep one vocabulary.
 pub(crate) enum RandomOutcome<'a> {
     Limited,
     Empty,
-    Body(&'a [u8]),
+    Body(&'a Arc<[u8]>),
 }
 
 /// Shared GET logic: rate limit, accounting, slot pick, cache fill. The
@@ -1062,9 +1172,9 @@ fn random_body<'a>(s: &'a mut PoolState, req: &Request) -> RandomOutcome<'a> {
             ("experiment", s.experiments.current_id().into()),
         ]))
         .into_bytes();
-        s.random_cache[idx] = Some(body);
+        s.random_cache[idx] = Some(body.into());
     }
-    RandomOutcome::Body(s.random_cache[idx].as_deref().expect("just filled"))
+    RandomOutcome::Body(s.random_cache[idx].as_ref().expect("just filled"))
 }
 
 fn get_random(state: &Shared, req: &Request) -> Response {
@@ -1355,6 +1465,46 @@ mod tests {
         assert_eq!(put(&mut router, "01010101", 80.0, "evil").status, 403);
         // honest client unaffected
         assert_eq!(put(&mut router, "11110000", 4.0, "good").status, 200);
+    }
+
+    #[test]
+    fn batched_put_verifies_with_batch_kernel_same_verdicts() {
+        use crate::problems::OneMax;
+        // A verified batch goes through precompute_verdicts (one kernel
+        // call); per-item statuses must match what scalar verification
+        // would produce, including ban-state evolution inside the batch.
+        let (state, mut router) = setup();
+        state.borrow_mut().verifier =
+            Some(FitnessVerifier::new(Box::new(OneMax::new(8))));
+        let item = |c: &str, f: f64, u: &str| {
+            Json::obj(vec![
+                ("chromosome", c.into()),
+                ("fitness", f.into()),
+                ("uuid", u.into()),
+            ])
+        };
+        let batch = Json::Arr(vec![
+            item("01010101", 4.0, "good"), // honest
+            item("01010101", 8.0, "evil"), // fake claim -> 409 (strike 1)
+            item("010", 1.0, "evil"),      // malformed -> 400, no strike
+            item("01010101", 8.0, "evil"), // 409 (strike 2)
+            item("01010101", 8.0, "evil"), // 409 (strike 3 -> banned)
+            item("01010101", 4.0, "evil"), // honest but banned -> 403
+            item("11110000", 4.0, "good"), // honest, unaffected
+        ]);
+        let resp = router.handle(
+            &Request::new(Method::Put, "/experiment/chromosome")
+                .with_json(&batch),
+        );
+        assert_eq!(resp.status, 200);
+        let body = resp.json_body().unwrap();
+        assert_eq!(body.get_u64("accepted"), Some(2));
+        let results = body.get("results").unwrap().as_arr().unwrap();
+        let statuses: Vec<u64> =
+            results.iter().filter_map(|r| r.get_u64("status")).collect();
+        assert_eq!(statuses, vec![200, 409, 400, 409, 409, 403, 200]);
+        assert_eq!(state.borrow().pool.len(), 2);
+        assert!(state.borrow().saboteurs.is_banned("evil"));
     }
 
     #[test]

@@ -29,6 +29,14 @@ use crate::problems::{BitProblem, RealProblem};
 pub struct FitnessVerifier {
     kind: VerifierKind,
     tolerance: f64,
+    /// Batch scratch: decoded bit rows, row-major, one `n_bits` row per
+    /// claim. Reused across calls so a batch PUT verifies without the
+    /// per-item `Vec<u8>` the scalar path allocates.
+    scratch_rows: Vec<u8>,
+    /// Batch scratch: real gene rows, row-major.
+    scratch_flat: Vec<f64>,
+    /// Batch scratch: kernel output, one actual fitness per row.
+    scratch_actual: Vec<f64>,
 }
 
 enum VerifierKind {
@@ -38,7 +46,13 @@ enum VerifierKind {
 
 impl FitnessVerifier {
     pub fn new(problem: Box<dyn BitProblem + Send>) -> FitnessVerifier {
-        FitnessVerifier { kind: VerifierKind::Bits(problem), tolerance: 1e-6 }
+        FitnessVerifier {
+            kind: VerifierKind::Bits(problem),
+            tolerance: 1e-6,
+            scratch_rows: Vec::new(),
+            scratch_flat: Vec::new(),
+            scratch_actual: Vec::new(),
+        }
     }
 
     /// A verifier for a real-valued minimization problem: honest clients
@@ -46,7 +60,13 @@ impl FitnessVerifier {
     pub fn real(
         problem: Box<dyn RealProblem + Send + Sync>,
     ) -> FitnessVerifier {
-        FitnessVerifier { kind: VerifierKind::Real(problem), tolerance: 1e-6 }
+        FitnessVerifier {
+            kind: VerifierKind::Real(problem),
+            tolerance: 1e-6,
+            scratch_rows: Vec::new(),
+            scratch_flat: Vec::new(),
+            scratch_actual: Vec::new(),
+        }
     }
 
     /// The verifier matching an experiment spec, when its problem has a
@@ -96,6 +116,104 @@ impl FitnessVerifier {
                 }
             }
             VerifierKind::Bits(_) => Ok(claimed),
+        }
+    }
+
+    /// [`verify`] over a whole batch with one fitness-kernel call: decode
+    /// every chromosome into one row-major scratch matrix, evaluate with
+    /// [`BitProblem::eval_batch`], then compare claims. Per-item results
+    /// are identical to calling [`verify`] in a loop (the bit-identity
+    /// contract of the batch kernels); rows whose length doesn't match the
+    /// problem width fall back to the scalar path item-by-item so the
+    /// semantics stay exact even for malformed claims. Fills `out`
+    /// (cleared first) with one verdict per claim.
+    ///
+    /// [`verify`]: FitnessVerifier::verify
+    /// [`BitProblem::eval_batch`]: crate::problems::BitProblem::eval_batch
+    pub fn verify_batch(
+        &mut self,
+        claims: &[(&str, f64)],
+        out: &mut Vec<Result<f64, f64>>,
+    ) {
+        out.clear();
+        out.reserve(claims.len());
+        match &self.kind {
+            VerifierKind::Bits(problem) => {
+                let n = problem.n_bits();
+                if n > 0 && claims.iter().all(|(c, _)| c.len() == n) {
+                    self.scratch_rows.clear();
+                    self.scratch_rows.reserve(claims.len() * n);
+                    for (c, _) in claims {
+                        self.scratch_rows
+                            .extend(c.bytes().map(|b| (b == b'1') as u8));
+                    }
+                    let rows: Vec<&[u8]> =
+                        self.scratch_rows.chunks_exact(n).collect();
+                    problem.eval_batch(&rows, &mut self.scratch_actual);
+                    for ((_, claimed), &actual) in
+                        claims.iter().zip(&self.scratch_actual)
+                    {
+                        out.push(if (actual - claimed).abs() <= self.tolerance {
+                            Ok(actual)
+                        } else {
+                            Err(actual)
+                        });
+                    }
+                } else {
+                    for (c, f) in claims {
+                        out.push(self.verify(c, *f));
+                    }
+                }
+            }
+            VerifierKind::Real(_) => {
+                out.extend(claims.iter().map(|&(_, f)| Ok(f)));
+            }
+        }
+    }
+
+    /// [`verify_real`] over a whole batch with one kernel call; same
+    /// contract as [`verify_batch`] (exact per-item semantics, scalar
+    /// fallback for dimension-mismatched rows).
+    ///
+    /// [`verify_real`]: FitnessVerifier::verify_real
+    /// [`verify_batch`]: FitnessVerifier::verify_batch
+    pub fn verify_real_batch(
+        &mut self,
+        claims: &[(&[f64], f64)],
+        out: &mut Vec<Result<f64, f64>>,
+    ) {
+        out.clear();
+        out.reserve(claims.len());
+        match &self.kind {
+            VerifierKind::Real(problem) => {
+                let dim = problem.dim();
+                if dim > 0 && claims.iter().all(|(g, _)| g.len() == dim) {
+                    self.scratch_flat.clear();
+                    self.scratch_flat.reserve(claims.len() * dim);
+                    for (g, _) in claims {
+                        self.scratch_flat.extend_from_slice(g);
+                    }
+                    problem
+                        .eval_batch(&self.scratch_flat, &mut self.scratch_actual);
+                    for ((_, claimed), &cost) in
+                        claims.iter().zip(&self.scratch_actual)
+                    {
+                        let actual = -cost;
+                        out.push(if (actual - claimed).abs() <= self.tolerance {
+                            Ok(actual)
+                        } else {
+                            Err(actual)
+                        });
+                    }
+                } else {
+                    for (g, f) in claims {
+                        out.push(self.verify_real(g, *f));
+                    }
+                }
+            }
+            VerifierKind::Bits(_) => {
+                out.extend(claims.iter().map(|&(_, f)| Ok(f)));
+            }
         }
     }
 }
@@ -237,6 +355,68 @@ mod tests {
         let zeros = "0".repeat(160);
         // The crafted-request attack: claim the optimum for a junk string.
         assert_eq!(v.verify(&zeros, 80.0), Err(40.0));
+    }
+
+    #[test]
+    fn batch_verify_matches_scalar_verdicts() {
+        let mut v = FitnessVerifier::new(Box::new(Trap::paper()));
+        let ones = "1".repeat(160);
+        let zeros = "0".repeat(160);
+        let claims: Vec<(&str, f64)> = vec![
+            (&ones, 80.0),  // honest optimum
+            (&zeros, 40.0), // honest plateau
+            (&zeros, 80.0), // crafted fake
+            (&ones, 80.0 + 5e-7), // within tolerance
+        ];
+        let mut got = Vec::new();
+        v.verify_batch(&claims, &mut got);
+        let want: Vec<Result<f64, f64>> =
+            claims.iter().map(|(c, f)| v.verify(c, *f)).collect();
+        assert_eq!(got, want);
+        // Reuse across calls: scratch reset keeps verdicts stable.
+        let mut again = Vec::new();
+        v.verify_batch(&claims, &mut again);
+        assert_eq!(got, again);
+    }
+
+    #[test]
+    fn batch_verify_wrong_width_falls_back_to_scalar() {
+        let mut v = FitnessVerifier::new(Box::new(Trap::paper()));
+        let ones = "1".repeat(160);
+        let short = "101"; // width mismatch forces the scalar fallback
+        let claims: Vec<(&str, f64)> = vec![(&ones, 80.0), (short, 0.0)];
+        let mut got = Vec::new();
+        v.verify_batch(&claims, &mut got);
+        let want: Vec<Result<f64, f64>> =
+            claims.iter().map(|(c, f)| v.verify(c, *f)).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn batch_verify_real_matches_scalar_verdicts() {
+        let spec = crate::genome::ProblemSpec::sphere(4, 0.01);
+        let mut v = FitnessVerifier::for_spec(&spec).expect("sphere verifies");
+        let a = [1.0, 1.0, 1.0, 1.0];
+        let b = [0.0, -0.0, 2.0, -2.0];
+        let claims: Vec<(&[f64], f64)> = vec![
+            (&a, -4.0), // honest
+            (&b, -8.0), // honest
+            (&a, 0.0),  // crafted optimum claim
+        ];
+        let mut got = Vec::new();
+        v.verify_real_batch(&claims, &mut got);
+        let want: Vec<Result<f64, f64>> =
+            claims.iter().map(|(g, f)| v.verify_real(g, *f)).collect();
+        assert_eq!(got, want);
+        // Family mismatch accepts every claim, batch like scalar.
+        let mut bit_v = FitnessVerifier::new(Box::new(Trap::paper()));
+        let mut accepted = Vec::new();
+        bit_v.verify_real_batch(&claims, &mut accepted);
+        assert!(accepted.iter().all(|r| r.is_ok()));
+        let s = "0101";
+        let mut bit_claims_on_real = Vec::new();
+        v.verify_batch(&[(s, 99.0)], &mut bit_claims_on_real);
+        assert_eq!(bit_claims_on_real, vec![Ok(99.0)]);
     }
 
     #[test]

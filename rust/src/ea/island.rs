@@ -115,14 +115,14 @@ impl Island {
         let (elite, _) = self.pop.best();
         let elite = elite.clone();
 
+        // Build the whole next generation first, then evaluate it with
+        // one batch-kernel call: evaluation consumes no randomness, so
+        // the RNG stream (and therefore every chromosome) is identical
+        // to the old member-at-a-time loop — only the evaluation order
+        // moved, and the batch kernels are bit-identical to scalar eval.
         let mut next_members = Vec::with_capacity(size);
-        let mut next_fitness = Vec::with_capacity(size);
-
         // Slot 0 carries the elite unchanged (same as ea_epoch).
-        next_fitness.push(problem.eval(elite.bits()));
-        self.evaluations += 1;
         next_members.push(elite);
-
         for _ in 1..size {
             let i1 = tournament(rng, &self.pop.fitness, self.config.tournament_k);
             let i2 = tournament(rng, &self.pop.fitness, self.config.tournament_k);
@@ -133,10 +133,16 @@ impl Island {
                 Crossover::Uniform => uniform_crossover(rng, p1, p2),
             };
             child.mutate(rng, self.p_mut);
-            self.evaluations += 1;
-            next_fitness.push(problem.eval(child.bits()));
             next_members.push(child);
         }
+        let rows: Vec<&[u8]> = next_members.iter().map(|m| m.bits()).collect();
+        // Recycle the outgoing fitness vector as the batch output buffer
+        // (eval_batch clears it): no per-generation allocation beyond the
+        // row index.
+        let mut next_fitness = std::mem::take(&mut self.pop.fitness);
+        problem.eval_batch(&rows, &mut next_fitness);
+        self.evaluations += size as u64;
+        drop(rows);
         self.pop.members = next_members;
         self.pop.fitness = next_fitness;
         self.generations += 1;

@@ -107,10 +107,13 @@ impl RealIsland {
 
         let size = self.config.pop_size;
         let mut next_members = Vec::with_capacity(size);
-        let mut next_cost = Vec::with_capacity(size);
         next_members.push(elite);
-        next_cost.push(elite_cost);
 
+        // Build all children first (evaluation consumes no randomness, so
+        // the RNG stream matches the old member-at-a-time loop exactly),
+        // then cost them with one batch-kernel call. The elite's cached
+        // cost is carried, so the batch covers rows 1..size — the same
+        // evaluation count as before.
         for _ in 1..size {
             let i1 = tournament(rng, &fitness, self.config.tournament_k);
             let i2 = tournament(rng, &fitness, self.config.tournament_k);
@@ -122,10 +125,19 @@ impl RealIsland {
             );
             gaussian_mutation(rng, &mut child, self.config.p_mut, self.sigma);
             self.clamp(&mut child);
-            self.evaluations += 1;
-            next_cost.push(problem.eval(&child.values));
             next_members.push(child);
         }
+        let mut flat = Vec::with_capacity((size - 1) * problem.dim());
+        for m in &next_members[1..] {
+            flat.extend_from_slice(&m.values);
+        }
+        let mut child_cost = Vec::new();
+        problem.eval_batch(&flat, &mut child_cost);
+        self.evaluations += (size - 1) as u64;
+
+        let mut next_cost = Vec::with_capacity(size);
+        next_cost.push(elite_cost);
+        next_cost.extend_from_slice(&child_cost);
         self.members = next_members;
         self.cost = next_cost;
         self.generations += 1;

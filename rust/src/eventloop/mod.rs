@@ -12,7 +12,9 @@
 //! PJRT bindings; every libc call checks its return value.
 
 use std::io;
-use std::os::fd::RawFd;
+use std::net::{TcpListener, TcpStream};
+use std::os::fd::{AsRawFd, FromRawFd, RawFd};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::time::Duration;
 
 /// Readiness interest for a registered file descriptor.
@@ -183,6 +185,158 @@ impl Drop for Waker {
     }
 }
 
+/// An eventfd wakeup with a coalescing flag: a burst of `notify` calls
+/// from producer threads costs one `write(2)` instead of one per record.
+/// The consumer must call [`BatchedWaker::drain`] *before* draining the
+/// queues the producers fill, so a notify racing the drain either lands in
+/// the queue sweep or re-arms the eventfd for the next `epoll_wait`.
+#[derive(Debug)]
+pub struct BatchedWaker {
+    inner: Waker,
+    pending: AtomicBool,
+}
+
+impl BatchedWaker {
+    pub fn new() -> io::Result<BatchedWaker> {
+        Ok(BatchedWaker::from_waker(Waker::new()?))
+    }
+
+    /// Wrap an existing waker (e.g. a clone sharing an event loop's
+    /// eventfd) with a coalescing flag.
+    pub fn from_waker(inner: Waker) -> BatchedWaker {
+        BatchedWaker { inner, pending: AtomicBool::new(false) }
+    }
+
+    pub fn fd(&self) -> RawFd {
+        self.inner.fd()
+    }
+
+    /// Wake the loop unless a wakeup is already pending.
+    pub fn notify(&self) {
+        if !self.pending.swap(true, Ordering::AcqRel) {
+            self.inner.wake();
+        }
+    }
+
+    /// Wake the loop unconditionally, ignoring the coalescing flag —
+    /// the shutdown path uses this so a racing flag state can never
+    /// strand a sleeping consumer.
+    pub fn force_wake(&self) {
+        self.pending.store(true, Ordering::Release);
+        self.inner.wake();
+    }
+
+    /// Consume the pending wakeup(s). Clears the coalescing flag, so any
+    /// producer pushing after this call raises a fresh eventfd write.
+    pub fn drain(&self) {
+        self.inner.drain();
+        self.pending.store(false, Ordering::Release);
+    }
+}
+
+/// Accept one pending connection without blocking, via `accept4(2)`: the
+/// stream is born `SOCK_NONBLOCK | SOCK_CLOEXEC`, saving the two
+/// `fcntl(2)` round trips a `listener.accept()` + `set_nonblocking` pair
+/// would cost per connection. Returns `Ok(None)` when the backlog is
+/// empty; callers drain in a loop until then (level-triggered listeners
+/// only fire once per readiness edge batch).
+pub fn accept_nonblocking(
+    listener: &TcpListener,
+) -> io::Result<Option<TcpStream>> {
+    loop {
+        let fd = unsafe {
+            libc::accept4(
+                listener.as_raw_fd(),
+                std::ptr::null_mut(),
+                std::ptr::null_mut(),
+                libc::SOCK_NONBLOCK | libc::SOCK_CLOEXEC,
+            )
+        };
+        if fd >= 0 {
+            return Ok(Some(unsafe { TcpStream::from_raw_fd(fd) }));
+        }
+        let err = io::Error::last_os_error();
+        match err.kind() {
+            io::ErrorKind::WouldBlock => return Ok(None),
+            io::ErrorKind::Interrupted => continue,
+            // The peer gave up between SYN and accept: skip it, keep
+            // draining the backlog.
+            io::ErrorKind::ConnectionAborted => continue,
+            _ => return Err(err),
+        }
+    }
+}
+
+/// Gathered write of two byte slices in one syscall (`writev(2)`); the
+/// short-write contract matches `write(2)` — the return counts bytes
+/// consumed from `a` first, then `b`.
+pub fn write_two(fd: RawFd, a: &[u8], b: &[u8]) -> io::Result<usize> {
+    let parts = [
+        libc::iovec {
+            iov_base: a.as_ptr() as *const libc::c_void,
+            iov_len: a.len(),
+        },
+        libc::iovec {
+            iov_base: b.as_ptr() as *const libc::c_void,
+            iov_len: b.len(),
+        },
+    ];
+    // Skip empty leading/trailing segments so the kernel sees the minimal
+    // vector (writev with iov_len 0 entries is legal but pointless).
+    let (ptr, cnt) = match (a.is_empty(), b.is_empty()) {
+        (false, false) => (parts.as_ptr(), 2),
+        (false, true) => (parts.as_ptr(), 1),
+        (true, false) => (parts[1..].as_ptr(), 1),
+        (true, true) => return Ok(0),
+    };
+    let n = unsafe { libc::writev(fd, ptr, cnt) };
+    if n < 0 {
+        return Err(io::Error::last_os_error());
+    }
+    Ok(n as usize)
+}
+
+/// Set the kernel send-buffer size (`SO_SNDBUF`) — a test knob for
+/// exercising short-write paths; the kernel doubles the value and clamps
+/// it to its configured minimum.
+pub fn set_send_buffer(fd: RawFd, bytes: usize) -> io::Result<()> {
+    let val: libc::c_int = bytes.min(i32::MAX as usize) as libc::c_int;
+    let rc = unsafe {
+        libc::setsockopt(
+            fd,
+            libc::SOL_SOCKET,
+            libc::SO_SNDBUF,
+            &val as *const libc::c_int as *const libc::c_void,
+            std::mem::size_of::<libc::c_int>() as libc::socklen_t,
+        )
+    };
+    if rc < 0 {
+        return Err(io::Error::last_os_error());
+    }
+    Ok(())
+}
+
+/// Raise the soft fd limit to `want` (clamped to the hard limit), so the
+/// in-repo load generator can hold thousands of sockets. Returns the
+/// resulting soft limit.
+pub fn raise_nofile_limit(want: u64) -> io::Result<u64> {
+    let mut lim = libc::rlimit { rlim_cur: 0, rlim_max: 0 };
+    if unsafe { libc::getrlimit(libc::RLIMIT_NOFILE, &mut lim) } < 0 {
+        return Err(io::Error::last_os_error());
+    }
+    if lim.rlim_cur >= want {
+        return Ok(lim.rlim_cur);
+    }
+    let new = libc::rlimit {
+        rlim_cur: want.min(lim.rlim_max),
+        rlim_max: lim.rlim_max,
+    };
+    if unsafe { libc::setrlimit(libc::RLIMIT_NOFILE, &new) } < 0 {
+        return Err(io::Error::last_os_error());
+    }
+    Ok(new.rlim_cur)
+}
+
 /// Put an fd into non-blocking mode.
 pub fn set_nonblocking(fd: RawFd) -> io::Result<()> {
     let flags = unsafe { libc::fcntl(fd, libc::F_GETFL) };
@@ -291,6 +445,85 @@ mod tests {
         ep.modify(conn.as_raw_fd(), 4, Interest::READ).unwrap();
         ep.wait(Some(Duration::from_millis(20)), &mut events).unwrap();
         assert!(events.iter().all(|e| !e.writable));
+    }
+
+    #[test]
+    fn batched_waker_coalesces_a_burst() {
+        let ep = Epoll::new().unwrap();
+        let waker = BatchedWaker::new().unwrap();
+        ep.add(waker.fd(), 9, Interest::READ).unwrap();
+
+        // A burst of notifies raises exactly one readiness edge.
+        for _ in 0..100 {
+            waker.notify();
+        }
+        let mut events = Vec::new();
+        ep.wait(Some(Duration::from_secs(5)), &mut events).unwrap();
+        assert_eq!(events.len(), 1);
+        waker.drain();
+        ep.wait(Some(Duration::from_millis(10)), &mut events).unwrap();
+        assert!(events.is_empty());
+
+        // After a drain, the next notify wakes again.
+        waker.notify();
+        ep.wait(Some(Duration::from_secs(5)), &mut events).unwrap();
+        assert_eq!(events.len(), 1);
+        waker.drain();
+    }
+
+    #[test]
+    fn accept_nonblocking_drains_backlog_and_reports_empty() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        // Empty backlog: None, not a block or an error.
+        assert!(accept_nonblocking(&listener).unwrap().is_none());
+
+        let c1 = std::net::TcpStream::connect(addr).unwrap();
+        let c2 = std::net::TcpStream::connect(addr).unwrap();
+        // Both pending connections drain, each born non-blocking.
+        let mut got = 0;
+        while let Some(conn) = accept_nonblocking(&listener).unwrap() {
+            got += 1;
+            let mut buf = [0u8; 1];
+            let err = conn.peek(&mut buf).unwrap_err();
+            assert_eq!(err.kind(), std::io::ErrorKind::WouldBlock);
+        }
+        assert_eq!(got, 2);
+        drop((c1, c2));
+    }
+
+    #[test]
+    fn write_two_concatenates_over_a_socket() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = std::net::TcpStream::connect(addr).unwrap();
+        let (mut conn, _) = listener.accept().unwrap();
+        let n =
+            write_two(client.as_raw_fd(), b"head: ", b"body").unwrap();
+        assert_eq!(n, 10);
+        let mut buf = [0u8; 10];
+        conn.read_exact(&mut buf).unwrap();
+        assert_eq!(&buf, b"head: body");
+        // Degenerate vectors still behave.
+        assert_eq!(write_two(client.as_raw_fd(), b"", b"x").unwrap(), 1);
+        assert_eq!(write_two(client.as_raw_fd(), b"y", b"").unwrap(), 1);
+        assert_eq!(write_two(client.as_raw_fd(), b"", b"").unwrap(), 0);
+    }
+
+    #[test]
+    fn send_buffer_shrinks() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = std::net::TcpStream::connect(addr).unwrap();
+        set_send_buffer(client.as_raw_fd(), 4096).unwrap();
+    }
+
+    #[test]
+    fn nofile_limit_is_queryable_and_monotone() {
+        let cur = raise_nofile_limit(64).unwrap();
+        assert!(cur >= 64);
+        // Asking again for less never lowers the limit.
+        assert!(raise_nofile_limit(32).unwrap() >= cur.min(64));
     }
 
     #[test]

@@ -18,7 +18,7 @@ pub mod threaded;
 pub mod types;
 
 pub use client::HttpClient;
-pub use router::{Params, Router};
+pub use router::{FastOutcome, Params, Router};
 pub use server::{Server, ServerHandle};
 pub use types::{Method, Request, Response};
 
@@ -38,6 +38,28 @@ pub trait Service {
     /// [`handle`]: Service::handle
     fn handle_into(&mut self, req: &Request, keep_alive: bool, out: &mut Vec<u8>) {
         self.handle(req).write_to(out, keep_alive);
+    }
+
+    /// The iovec-pair render mode: like [`handle_into`], but a service
+    /// with a shareable pre-rendered body (the coordinators' cached
+    /// `GET /experiment/random` and steady-state PUT ok) may render only
+    /// the response *head* into `out` and return the body separately; the
+    /// driver then sends head + body with one `writev(2)` instead of
+    /// memcpying the body into the buffer first. Returning `None` means
+    /// the full response was rendered into `out` (the default, which
+    /// delegates to the contiguous path). The concatenation
+    /// `out ++ returned body` must be byte-identical to what
+    /// [`handle_into`] renders.
+    ///
+    /// [`handle_into`]: Service::handle_into
+    fn handle_into_vectored(
+        &mut self,
+        req: &Request,
+        keep_alive: bool,
+        out: &mut Vec<u8>,
+    ) -> Option<std::sync::Arc<[u8]>> {
+        self.handle_into(req, keep_alive, out);
+        None
     }
 }
 

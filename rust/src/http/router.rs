@@ -2,6 +2,7 @@
 //! captures. The coordinator's REST API (DESIGN.md section 5) is built on
 //! this.
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use super::types::{Method, Request, Response};
@@ -23,9 +24,24 @@ impl Params {
 
 type Handler = Box<dyn FnMut(&Request, &Params) -> Response>;
 
-/// A pre-dispatch fast path: `(request, keep_alive, out)` and returns
-/// whether it fully rendered the response into `out`.
-type FastHandler = Box<dyn FnMut(&Request, bool, &mut Vec<u8>) -> bool>;
+/// What a fast hook did with a request.
+pub enum FastOutcome {
+    /// Not a hot route (or not a hot shape): dispatch normally.
+    Declined,
+    /// The full response was rendered into `out`.
+    Done,
+    /// The response *head* was rendered into `out` and the body is
+    /// returned as a shared tail — the event-loop server sends both with
+    /// one `writev(2)`. `out ++ tail` must be byte-identical to what
+    /// [`FastOutcome::Done`] would have rendered; the contiguous
+    /// [`Service::handle_into`] path flattens the tail to keep that
+    /// contract observable.
+    DoneVectored(Arc<[u8]>),
+}
+
+/// A pre-dispatch fast path: `(request, keep_alive, out)` renders hot
+/// responses (contiguously or head + shared tail) or declines.
+type FastHandler = Box<dyn FnMut(&Request, bool, &mut Vec<u8>) -> FastOutcome>;
 
 struct Route {
     method: Method,
@@ -60,10 +76,11 @@ impl Router {
 
     /// Install the event-loop fast path. The hook must be behaviorally
     /// identical to the dispatched handlers for every request it accepts
-    /// (returns true); returning false falls through to dispatch.
+    /// (returns [`FastOutcome::Done`]/[`FastOutcome::DoneVectored`]);
+    /// [`FastOutcome::Declined`] falls through to dispatch.
     pub fn set_fast(
         &mut self,
-        hook: impl FnMut(&Request, bool, &mut Vec<u8>) -> bool + 'static,
+        hook: impl FnMut(&Request, bool, &mut Vec<u8>) -> FastOutcome + 'static,
     ) {
         self.fast = Some(Box::new(hook));
     }
@@ -195,14 +212,29 @@ impl Service for Router {
         // ones that missed the cache.
         let timed = self.telemetry.clone().map(|t| (t, Instant::now()));
         if let Some(fast) = &mut self.fast {
-            if fast(req, keep_alive, out) {
-                if let Some((t, start)) = timed {
-                    t.record_request(
-                        route_class(req.method, &req.path),
-                        start.elapsed(),
-                    );
+            match fast(req, keep_alive, out) {
+                FastOutcome::Declined => {}
+                FastOutcome::Done => {
+                    if let Some((t, start)) = timed {
+                        t.record_request(
+                            route_class(req.method, &req.path),
+                            start.elapsed(),
+                        );
+                    }
+                    return;
                 }
-                return;
+                FastOutcome::DoneVectored(body) => {
+                    // Contiguous mode: flatten the tail so handle_into's
+                    // output stays byte-identical to the vectored wire.
+                    out.extend_from_slice(&body);
+                    if let Some((t, start)) = timed {
+                        t.record_request(
+                            route_class(req.method, &req.path),
+                            start.elapsed(),
+                        );
+                    }
+                    return;
+                }
             }
         }
         self.dispatch(req).write_to(out, keep_alive);
@@ -212,6 +244,46 @@ impl Service for Router {
                 start.elapsed(),
             );
         }
+    }
+
+    fn handle_into_vectored(
+        &mut self,
+        req: &Request,
+        keep_alive: bool,
+        out: &mut Vec<u8>,
+    ) -> Option<Arc<[u8]>> {
+        let timed = self.telemetry.clone().map(|t| (t, Instant::now()));
+        if let Some(fast) = &mut self.fast {
+            match fast(req, keep_alive, out) {
+                FastOutcome::Declined => {}
+                FastOutcome::Done => {
+                    if let Some((t, start)) = timed {
+                        t.record_request(
+                            route_class(req.method, &req.path),
+                            start.elapsed(),
+                        );
+                    }
+                    return None;
+                }
+                FastOutcome::DoneVectored(body) => {
+                    if let Some((t, start)) = timed {
+                        t.record_request(
+                            route_class(req.method, &req.path),
+                            start.elapsed(),
+                        );
+                    }
+                    return Some(body);
+                }
+            }
+        }
+        self.dispatch(req).write_to(out, keep_alive);
+        if let Some((t, start)) = timed {
+            t.record_request(
+                route_class(req.method, &req.path),
+                start.elapsed(),
+            );
+        }
+        None
     }
 }
 
@@ -306,9 +378,9 @@ mod tests {
         r.set_fast(|req, keep, out| {
             if req.path == "/hot" {
                 Response::ok().with_text("fast").write_to(out, keep);
-                true
+                FastOutcome::Done
             } else {
-                false
+                FastOutcome::Declined
             }
         });
         // handle() (direct dispatch) ignores the hook.
@@ -320,6 +392,49 @@ mod tests {
         // Declined requests dispatch normally.
         let mut out = Vec::new();
         r.handle_into(&req(Method::Get, "/nope"), true, &mut out);
+        assert!(String::from_utf8(out).unwrap().starts_with("HTTP/1.1 404"));
+    }
+
+    #[test]
+    fn vectored_fast_hook_splits_head_and_tail() {
+        use crate::http::types::write_json_200_head;
+        let body: Arc<[u8]> = Arc::from(&b"{\"hot\":true}"[..]);
+        let shared = body.clone();
+        let mut r = Router::new();
+        r.get("/hot", move |_, _| {
+            let mut resp = Response::ok();
+            resp.body = b"{\"hot\":true}".to_vec();
+            resp.set_header("content-type", "application/json");
+            resp
+        });
+        r.set_fast(move |req, keep, out| {
+            if req.path == "/hot" {
+                write_json_200_head(out, shared.len(), keep);
+                FastOutcome::DoneVectored(shared.clone())
+            } else {
+                FastOutcome::Declined
+            }
+        });
+        // Vectored mode: head in `out`, body returned as the tail.
+        let mut head = Vec::new();
+        let tail = r.handle_into_vectored(
+            &req(Method::Get, "/hot"),
+            true,
+            &mut head,
+        );
+        let tail = tail.expect("hot route returns a tail");
+        assert_eq!(&tail[..], &body[..]);
+        // Contiguous mode flattens the same bytes.
+        let mut flat = Vec::new();
+        r.handle_into(&req(Method::Get, "/hot"), true, &mut flat);
+        let mut joined = head.clone();
+        joined.extend_from_slice(&tail);
+        assert_eq!(flat, joined);
+        // Declined requests render contiguously with no tail.
+        let mut out = Vec::new();
+        let tail =
+            r.handle_into_vectored(&req(Method::Get, "/nope"), true, &mut out);
+        assert!(tail.is_none());
         assert!(String::from_utf8(out).unwrap().starts_with("HTTP/1.1 404"));
     }
 

@@ -210,6 +210,26 @@ impl Response {
         finish_head(out, self.body.len(), keep_alive);
         out.extend_from_slice(&self.body);
     }
+
+    /// The iovec-pair render mode: append only the head (status line,
+    /// headers, `content-length`, blank line) to `out`, leaving the body
+    /// to travel as the second `writev(2)` segment. Concatenating the
+    /// rendered head with `self.body` is byte-identical to
+    /// [`Response::write_to`].
+    pub fn write_head_to(&self, out: &mut Vec<u8>, keep_alive: bool) {
+        out.extend_from_slice(b"HTTP/1.1 ");
+        push_u64(out, self.status as u64);
+        out.push(b' ');
+        out.extend_from_slice(self.status_line().as_bytes());
+        out.extend_from_slice(b"\r\n");
+        for (k, v) in &self.headers {
+            out.extend_from_slice(k.as_bytes());
+            out.extend_from_slice(b": ");
+            out.extend_from_slice(v.as_bytes());
+            out.extend_from_slice(b"\r\n");
+        }
+        finish_head(out, self.body.len(), keep_alive);
+    }
 }
 
 /// Append a decimal integer without allocating.
@@ -244,11 +264,23 @@ pub(crate) fn finish_head(out: &mut Vec<u8>, body_len: usize, keep_alive: bool) 
 /// intermediate `Response`: the cached-GET fast path appends head + body
 /// straight into the connection's output buffer.
 pub(crate) fn write_json_200(out: &mut Vec<u8>, body: &[u8], keep_alive: bool) {
+    write_json_200_head(out, body.len(), keep_alive);
+    out.extend_from_slice(body);
+}
+
+/// Head-only half of [`write_json_200`]: the vectored fast path renders
+/// this into the connection buffer and hands the cached body to the
+/// driver as the second `writev` segment, so head + body still leave in
+/// one syscall without the body memcpy.
+pub(crate) fn write_json_200_head(
+    out: &mut Vec<u8>,
+    body_len: usize,
+    keep_alive: bool,
+) {
     out.extend_from_slice(
         b"HTTP/1.1 200 OK\r\ncontent-type: application/json\r\n",
     );
-    finish_head(out, body.len(), keep_alive);
-    out.extend_from_slice(body);
+    finish_head(out, body_len, keep_alive);
 }
 
 /// Render a complete bodyless `204 No Content` (the empty-pool GET).
@@ -345,6 +377,33 @@ mod tests {
             let mut fast = Vec::new();
             write_no_content_204(&mut fast, keep);
             assert_eq!(fast, slow);
+        }
+    }
+
+    #[test]
+    fn head_only_renderings_concatenate_to_contiguous() {
+        let body = br#"{"chromosome":"0110","fitness":2}"#;
+        for keep in [true, false] {
+            // write_json_200_head + body == write_json_200.
+            let mut contiguous = Vec::new();
+            write_json_200(&mut contiguous, body, keep);
+            let mut vectored = Vec::new();
+            write_json_200_head(&mut vectored, body.len(), keep);
+            vectored.extend_from_slice(body);
+            assert_eq!(vectored, contiguous);
+
+            // Response::write_head_to + body == Response::write_to, for
+            // assorted statuses and header sets.
+            for status in [200u16, 201, 400, 409, 429] {
+                let mut resp = Response::new(status).with_text("oops");
+                resp.set_header("x-extra", "1");
+                let mut contiguous = Vec::new();
+                resp.write_to(&mut contiguous, keep);
+                let mut vectored = Vec::new();
+                resp.write_head_to(&mut vectored, keep);
+                vectored.extend_from_slice(&resp.body);
+                assert_eq!(vectored, contiguous, "status {status}");
+            }
         }
     }
 

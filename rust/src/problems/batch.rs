@@ -1,0 +1,232 @@
+//! Batch fitness kernels: evaluate whole populations with one call.
+//!
+//! The scalar [`BitProblem::eval`]/[`RealProblem::eval`] path is ideal for
+//! single chromosomes, but the server-side verifier and the native island
+//! loop both evaluate *batches* — every item of a batch PUT, every child of
+//! a generation. These kernels amortize the per-item costs (dyn dispatch,
+//! scratch allocation) and reshape the inner loops so the compiler can
+//! vectorize them: bitstrings are packed 64 loci per u64 word and reduced
+//! with lane-wise popcounts, real vectors are walked in plain chunked
+//! loops with no per-item branching. No `unsafe`, no intrinsics — the
+//! layout does the work.
+//!
+//! **Bit-identity contract**: every kernel here produces *exactly* the
+//! same `f64` (same bits, including signed zeros and subnormals) as the
+//! scalar `eval` applied per row. Bitstring kernels reduce in integers, so
+//! identity is trivial; real kernels keep the scalar path's left-to-right
+//! per-row reduction order and only batch *across* rows. The property
+//! tests below pin this with `f64::to_bits` equality.
+//!
+//! [`BitProblem::eval`]: super::BitProblem
+//! [`RealProblem::eval`]: super::RealProblem
+
+use super::bitstring::Trap;
+use super::packed::{pack_bits_into, trap_eval_packed};
+use super::real::Rastrigin;
+
+/// Trap over many rows: pack each chromosome into u64 words (one scratch
+/// buffer reused across the batch) and reduce with the SWAR nibble-sum
+/// kernel. `l == 4` only (the paper's parameterization — each nibble is
+/// one block); other widths take the scalar per-row path. Clears `out`.
+pub fn trap_batch(trap: &Trap, rows: &[&[u8]], out: &mut Vec<f64>) {
+    use super::BitProblem;
+    out.clear();
+    out.reserve(rows.len());
+    if trap.l != 4 {
+        out.extend(rows.iter().map(|row| trap.eval(row)));
+        return;
+    }
+    let mut words: Vec<u64> = Vec::new();
+    for row in rows {
+        debug_assert_eq!(row.len(), trap.n_bits());
+        pack_bits_into(row, &mut words);
+        out.push(trap_eval_packed(trap, &words, row.len()));
+    }
+}
+
+/// OneMax over many rows: pack and popcount whole words (64 loci per
+/// `count_ones`) instead of summing bytes. Integer reduction — exact.
+/// Clears `out`.
+pub fn onemax_batch(rows: &[&[u8]], out: &mut Vec<f64>) {
+    out.clear();
+    out.reserve(rows.len());
+    let mut words: Vec<u64> = Vec::new();
+    for row in rows {
+        pack_bits_into(row, &mut words);
+        let ones: u64 = words.iter().map(|w| w.count_ones() as u64).sum();
+        out.push(ones as f64);
+    }
+}
+
+/// Sphere over a row-major flat matrix (`rows.len() == flat.len() / dim`).
+/// Per-row reduction is the scalar kernel verbatim (left-to-right sum of
+/// squares), so results are bit-identical to per-row `eval`. Clears `out`.
+pub fn sphere_batch(dim: usize, flat: &[f64], out: &mut Vec<f64>) {
+    debug_assert!(dim > 0 && flat.len() % dim == 0);
+    out.clear();
+    out.reserve(flat.len() / dim.max(1));
+    for row in flat.chunks_exact(dim) {
+        out.push(row.iter().map(|v| v * v).sum());
+    }
+}
+
+/// Rastrigin over a row-major flat matrix. Same term and reduction order
+/// as the scalar path. Clears `out`.
+pub fn rastrigin_batch(dim: usize, flat: &[f64], out: &mut Vec<f64>) {
+    debug_assert!(dim > 0 && flat.len() % dim == 0);
+    out.clear();
+    out.reserve(flat.len() / dim.max(1));
+    for row in flat.chunks_exact(dim) {
+        out.push(row.iter().map(|&v| Rastrigin::term(v)).sum());
+    }
+}
+
+/// Griewank over a row-major flat matrix. Sum and product reductions keep
+/// the scalar path's index order. Clears `out`.
+pub fn griewank_batch(dim: usize, flat: &[f64], out: &mut Vec<f64>) {
+    debug_assert!(dim > 0 && flat.len() % dim == 0);
+    out.clear();
+    out.reserve(flat.len() / dim.max(1));
+    for row in flat.chunks_exact(dim) {
+        let sum: f64 = row.iter().map(|v| v * v).sum();
+        let prod: f64 = row
+            .iter()
+            .enumerate()
+            .map(|(i, v)| (v / ((i + 1) as f64).sqrt()).cos())
+            .product();
+        out.push(1.0 + sum / 4000.0 - prod);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{
+        BitProblem, Griewank, OneMax, Rastrigin, RealProblem, Sphere, Trap,
+    };
+    use crate::ea::BitString;
+    use crate::rng::SplitMix64;
+
+    fn bits_rows(rng: &mut SplitMix64, n_rows: usize, n_bits: usize) -> Vec<BitString> {
+        (0..n_rows).map(|_| BitString::random(rng, n_bits)).collect()
+    }
+
+    /// Batch == scalar, bit-for-bit, via the trait entry point (so the
+    /// overrides are what's exercised, not just the free kernels).
+    fn assert_bit_batch_identical(p: &dyn BitProblem, rows: &[BitString]) {
+        let refs: Vec<&[u8]> = rows.iter().map(|b| b.bits()).collect();
+        let mut got = Vec::new();
+        p.eval_batch(&refs, &mut got);
+        assert_eq!(got.len(), rows.len());
+        for (row, g) in rows.iter().zip(&got) {
+            let want = p.eval(row.bits());
+            assert_eq!(g.to_bits(), want.to_bits(), "row {row:?}");
+        }
+    }
+
+    #[test]
+    fn trap_batch_matches_scalar_bitwise() {
+        let trap = Trap::paper();
+        let mut rng = SplitMix64::new(11);
+        for n_rows in [0usize, 1, 3, 33, 256] {
+            let rows = bits_rows(&mut rng, n_rows, trap.n_bits());
+            assert_bit_batch_identical(&trap, &rows);
+        }
+    }
+
+    #[test]
+    fn trap_batch_non_nibble_width_falls_back_bitwise() {
+        // l=5 can't use the nibble kernel; the fallback must still match.
+        let trap = Trap::new(7, 5, 1.0, 2.0, 3);
+        let mut rng = SplitMix64::new(12);
+        let rows = bits_rows(&mut rng, 17, trap.n_bits());
+        assert_bit_batch_identical(&trap, &rows);
+    }
+
+    #[test]
+    fn onemax_batch_matches_scalar_bitwise() {
+        let mut rng = SplitMix64::new(13);
+        // Widths straddling word boundaries: 1, 63..65, 127, 160.
+        for n_bits in [1usize, 63, 64, 65, 127, 160] {
+            let p = OneMax::new(n_bits);
+            let rows = bits_rows(&mut rng, 29, n_bits);
+            assert_bit_batch_identical(&p, &rows);
+        }
+    }
+
+    fn real_rows(rng: &mut SplitMix64, n_rows: usize, dim: usize) -> Vec<f64> {
+        let mut flat = Vec::with_capacity(n_rows * dim);
+        for i in 0..n_rows * dim {
+            // Mix ordinary values with the awkward ones: -0.0, subnormals,
+            // huge magnitudes. All must survive batch evaluation bitwise.
+            let v = match i % 7 {
+                0 => -0.0,
+                1 => f64::MIN_POSITIVE / 2.0, // subnormal
+                2 => -5e-324,                 // smallest subnormal, negative
+                3 => 1e300,
+                _ => (rng.next_u64() as i64 as f64) / 1e15,
+            };
+            flat.push(v);
+        }
+        flat
+    }
+
+    fn assert_real_batch_identical(p: &dyn RealProblem, flat: &[f64]) {
+        let dim = p.dim();
+        let mut got = Vec::new();
+        p.eval_batch(flat, &mut got);
+        assert_eq!(got.len(), flat.len() / dim);
+        for (row, g) in flat.chunks_exact(dim).zip(&got) {
+            assert_eq!(g.to_bits(), p.eval(row).to_bits());
+        }
+    }
+
+    #[test]
+    fn real_batches_match_scalar_bitwise() {
+        let mut rng = SplitMix64::new(14);
+        // Dims deliberately not multiples of any SIMD lane width.
+        for dim in [1usize, 3, 7, 13, 50] {
+            for n_rows in [0usize, 1, 5, 64] {
+                let flat = real_rows(&mut rng, n_rows, dim);
+                assert_real_batch_identical(&Sphere::new(dim), &flat);
+                assert_real_batch_identical(&Rastrigin::new(dim), &flat);
+                assert_real_batch_identical(&Griewank::new(dim), &flat);
+            }
+        }
+    }
+
+    #[test]
+    fn negative_zero_rows_keep_their_sign_semantics() {
+        // A row of -0.0 squares to +0.0 in both paths; the batch result
+        // must carry the identical bit pattern, not just compare equal.
+        let p = Sphere::new(4);
+        let flat = [-0.0f64; 8];
+        let mut got = Vec::new();
+        p.eval_batch(&flat, &mut got);
+        assert_eq!(got.len(), 2);
+        for g in &got {
+            assert_eq!(g.to_bits(), p.eval(&flat[..4]).to_bits());
+        }
+    }
+
+    #[test]
+    fn default_trait_batch_loops_scalar() {
+        // A problem with no override takes the default (scalar loop) —
+        // still bit-identical, still sized right.
+        struct Parity(usize);
+        impl BitProblem for Parity {
+            fn n_bits(&self) -> usize {
+                self.0
+            }
+            fn eval(&self, bits: &[u8]) -> f64 {
+                (bits.iter().map(|&b| b as u64).sum::<u64>() % 2) as f64
+            }
+            fn optimum(&self) -> f64 {
+                1.0
+            }
+        }
+        let p = Parity(9);
+        let mut rng = SplitMix64::new(15);
+        let rows = bits_rows(&mut rng, 21, 9);
+        assert_bit_batch_identical(&p, &rows);
+    }
+}

@@ -62,6 +62,10 @@ impl BitProblem for Trap {
     fn optimum(&self) -> f64 {
         self.blocks as f64 * self.b
     }
+
+    fn eval_batch(&self, rows: &[&[u8]], out: &mut Vec<f64>) {
+        super::batch::trap_batch(self, rows, out);
+    }
 }
 
 /// OneMax: fitness = number of ones. The EA "hello world".
@@ -88,6 +92,10 @@ impl BitProblem for OneMax {
 
     fn optimum(&self) -> f64 {
         self.n as f64
+    }
+
+    fn eval_batch(&self, rows: &[&[u8]], out: &mut Vec<f64>) {
+        super::batch::onemax_batch(rows, out);
     }
 }
 

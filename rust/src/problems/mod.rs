@@ -1,6 +1,7 @@
 //! Optimization problems: the paper's two workloads (trap, CEC2010 F15)
 //! plus the classical suite used for tests and extension benches.
 
+pub mod batch;
 pub mod bitstring;
 pub mod extended;
 pub mod f15;
@@ -23,12 +24,39 @@ pub trait BitProblem: Sync {
     fn is_solution(&self, fitness: f64) -> bool {
         fitness >= self.optimum() - 1e-9
     }
+
+    /// Evaluate many chromosomes with one call, filling `out` (cleared
+    /// first) with one fitness per row. The default loops the scalar
+    /// [`eval`]; problems with a vectorizable kernel (see
+    /// [`batch`](crate::problems::batch)) override it. Results must be
+    /// bit-identical to the scalar path, row for row.
+    ///
+    /// [`eval`]: BitProblem::eval
+    fn eval_batch(&self, rows: &[&[u8]], out: &mut Vec<f64>) {
+        out.clear();
+        out.reserve(rows.len());
+        out.extend(rows.iter().map(|row| self.eval(row)));
+    }
 }
 
 /// A minimization problem over real vectors (the CEC convention).
 pub trait RealProblem: Sync {
     fn dim(&self) -> usize;
     fn eval(&self, x: &[f64]) -> f64;
+
+    /// Evaluate a row-major flat matrix (`flat.len()` a multiple of
+    /// [`dim`]) with one call, filling `out` (cleared first) with one cost
+    /// per row. Same bit-identity contract as
+    /// [`BitProblem::eval_batch`]; the default loops the scalar `eval`.
+    ///
+    /// [`dim`]: RealProblem::dim
+    fn eval_batch(&self, flat: &[f64], out: &mut Vec<f64>) {
+        let dim = self.dim();
+        debug_assert!(dim > 0 && flat.len() % dim == 0);
+        out.clear();
+        out.reserve(flat.len() / dim.max(1));
+        out.extend(flat.chunks_exact(dim).map(|row| self.eval(row)));
+    }
 }
 
 #[cfg(test)]

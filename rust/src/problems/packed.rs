@@ -131,12 +131,21 @@ impl PartialEq<&str> for PackedBits {
 
 /// Pack a {0,1}-byte slice into u64 words, 1 bit per locus (LSB-first).
 pub fn pack_bits(bits: &[u8]) -> Vec<u64> {
-    let mut words = vec![0u64; bits.len().div_ceil(64)];
+    let mut words = Vec::new();
+    pack_bits_into(bits, &mut words);
+    words
+}
+
+/// [`pack_bits`] into a caller-owned scratch buffer (cleared first) — the
+/// batch kernels reuse one buffer across a whole population instead of
+/// allocating per row.
+pub fn pack_bits_into(bits: &[u8], words: &mut Vec<u64>) {
+    words.clear();
+    words.resize(bits.len().div_ceil(64), 0);
     for (i, &b) in bits.iter().enumerate() {
         debug_assert!(b <= 1);
         words[i / 64] |= (b as u64) << (i % 64);
     }
-    words
 }
 
 /// Unpack back to bytes (for tests / round trips).

@@ -23,6 +23,10 @@ impl RealProblem for Sphere {
         debug_assert_eq!(x.len(), self.dim);
         x.iter().map(|v| v * v).sum()
     }
+
+    fn eval_batch(&self, flat: &[f64], out: &mut Vec<f64>) {
+        super::batch::sphere_batch(self.dim, flat, out);
+    }
 }
 
 /// Separable Rastrigin (paper eq. 1):
@@ -52,6 +56,10 @@ impl RealProblem for Rastrigin {
     fn eval(&self, x: &[f64]) -> f64 {
         debug_assert_eq!(x.len(), self.dim);
         x.iter().map(|&v| Rastrigin::term(v)).sum()
+    }
+
+    fn eval_batch(&self, flat: &[f64], out: &mut Vec<f64>) {
+        super::batch::rastrigin_batch(self.dim, flat, out);
     }
 }
 
@@ -83,6 +91,10 @@ impl RealProblem for Griewank {
             .map(|(i, v)| (v / ((i + 1) as f64).sqrt()).cos())
             .product();
         1.0 + sum / 4000.0 - prod
+    }
+
+    fn eval_batch(&self, flat: &[f64], out: &mut Vec<f64>) {
+        super::batch::griewank_batch(self.dim, flat, out);
     }
 }
 

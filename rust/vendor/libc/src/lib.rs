@@ -13,6 +13,7 @@ pub type c_uint = u32;
 pub type c_ulonglong = u64;
 pub type size_t = usize;
 pub type ssize_t = isize;
+pub type socklen_t = u32;
 
 /// Opaque type for untyped buffers (matches `std::ffi::c_void` layout).
 pub use std::ffi::c_void;
@@ -38,6 +39,35 @@ pub const O_NONBLOCK: c_int = 0o4000;
 // fcntl commands.
 pub const F_GETFL: c_int = 3;
 pub const F_SETFL: c_int = 4;
+
+// accept4(2) flags (same octal values as O_NONBLOCK / O_CLOEXEC).
+pub const SOCK_NONBLOCK: c_int = 0o4000;
+pub const SOCK_CLOEXEC: c_int = 0o2000000;
+
+// setsockopt(2) levels and options.
+pub const SOL_SOCKET: c_int = 1;
+pub const SO_SNDBUF: c_int = 7;
+pub const IPPROTO_TCP: c_int = 6;
+pub const TCP_NODELAY: c_int = 1;
+
+// getrlimit(2)/setrlimit(2) — the load generator raises its own fd cap.
+pub const RLIMIT_NOFILE: c_int = 7;
+
+/// One writev(2) scatter-gather segment.
+#[repr(C)]
+#[derive(Debug, Copy, Clone)]
+pub struct iovec {
+    pub iov_base: *const c_void,
+    pub iov_len: size_t,
+}
+
+/// Resource limit pair for getrlimit/setrlimit.
+#[repr(C)]
+#[derive(Debug, Copy, Clone)]
+pub struct rlimit {
+    pub rlim_cur: c_ulonglong,
+    pub rlim_max: c_ulonglong,
+}
 
 /// One epoll readiness record. Packed on x86_64 (the kernel ABI); natural
 /// alignment elsewhere (aarch64 and friends).
@@ -69,6 +99,22 @@ extern "C" {
     pub fn close(fd: c_int) -> c_int;
     pub fn dup(oldfd: c_int) -> c_int;
     pub fn fcntl(fd: c_int, cmd: c_int, ...) -> c_int;
+    pub fn writev(fd: c_int, iov: *const iovec, iovcnt: c_int) -> ssize_t;
+    pub fn accept4(
+        sockfd: c_int,
+        addr: *mut c_void,
+        addrlen: *mut socklen_t,
+        flags: c_int,
+    ) -> c_int;
+    pub fn setsockopt(
+        sockfd: c_int,
+        level: c_int,
+        optname: c_int,
+        optval: *const c_void,
+        optlen: socklen_t,
+    ) -> c_int;
+    pub fn getrlimit(resource: c_int, rlim: *mut rlimit) -> c_int;
+    pub fn setrlimit(resource: c_int, rlim: *const rlimit) -> c_int;
 }
 
 #[cfg(test)]
@@ -97,6 +143,42 @@ mod tests {
             let ep = epoll_create1(EPOLL_CLOEXEC);
             assert!(ep >= 0);
             assert_eq!(close(ep), 0);
+        }
+    }
+
+    #[test]
+    fn writev_gathers_two_segments() {
+        unsafe {
+            // An eventfd write must arrive as one 8-byte value; a gathered
+            // writev of 4+4 bytes proves the segments are concatenated.
+            let fd = eventfd(0, EFD_CLOEXEC);
+            assert!(fd >= 0);
+            let value = 0x0102030405060708u64.to_ne_bytes();
+            let parts = [
+                iovec {
+                    iov_base: value.as_ptr() as *const c_void,
+                    iov_len: 4,
+                },
+                iovec {
+                    iov_base: value.as_ptr().add(4) as *const c_void,
+                    iov_len: 4,
+                },
+            ];
+            assert_eq!(writev(fd, parts.as_ptr(), 2), 8);
+            let mut out = 0u64;
+            assert_eq!(read(fd, &mut out as *mut u64 as *mut c_void, 8), 8);
+            assert_eq!(out.to_ne_bytes(), value);
+            close(fd);
+        }
+    }
+
+    #[test]
+    fn rlimit_round_trip() {
+        unsafe {
+            let mut lim = rlimit { rlim_cur: 0, rlim_max: 0 };
+            assert_eq!(getrlimit(RLIMIT_NOFILE, &mut lim), 0);
+            assert!(lim.rlim_cur >= 1);
+            assert!(lim.rlim_max >= lim.rlim_cur);
         }
     }
 

@@ -104,6 +104,10 @@ for f in "$@"; do
             check "$f" "$base" p99_ms down
             check "$f" "$base" write_syscalls_per_resp down
             ;;
+        push)
+            check "$f" "$base" idle_syscalls_per_session_s down
+            check "$f" "$base" tts_push_ms down
+            ;;
         *)
             echo "FAIL: unknown bench \"$name\" in $f"
             FAILED=1

@@ -19,7 +19,12 @@
 #   5. lineage survives kill + rejoin: a restarted (stateless) peer
 #      re-learns the winner's full lineage through the hello catch-up;
 #   6. `nodio trace assemble <data-dir>` reconstructs origin tags from a
-#      killed persistent server's WAL, offline.
+#      killed persistent server's WAL, offline;
+#   7. push sessions: a WebSocket volunteer (`nodio client --push`) per
+#      peer solves over streamed session frames, the pushed solution
+#      terminates the experiment at ALL peers, and every peer's
+#      exposition still validates and carries the session metrics
+#      (nodio_ws_sessions, nodio_push_frames_total).
 #
 # Runs locally (`bash ci/federation_smoke.sh`) and in the CI
 # `federation-smoke` job. The only dependency is the nodio binary itself:
@@ -239,5 +244,51 @@ wait "$SOLO" 2>/dev/null || true
     exit 1
 }
 echo "PASS: offline WAL assembly reconstructed the origin tag"
+
+# --- 7. push sessions: WebSocket volunteers converge the federation ----
+# One push-mode volunteer per peer: PUTs stream as session frames over
+# the persistent WebSocket instead of per-epoch HTTP polling. The
+# volunteers evolve onemax-8 (same bits-8 representation the peers were
+# booted with; fitness 8 meets the peers' --target 8), which solves in
+# the first epoch, so a pushed solution lands at some peer and must
+# terminate the live experiment federation-wide.
+for i in 0 1 2; do
+    "$NODIO" client --server "127.0.0.1:$((BASE + i))" --push \
+        --problem onemax --dim 8 --target 8 --pop 64 \
+        --uuid "push-vol-$i" --no-restart --epochs 5 \
+        >"$LOGDIR/push-client-$i.log" 2>&1 &
+    PIDS+=($!)
+done
+# completed was exactly 1 after phase 3; >= 2 means a pushed solution
+# landed. Volunteers can solve once per epoch, so the count may reach
+# double digits — match both widths.
+for i in 0 1 2; do
+    wait_for "127.0.0.1:$((BASE + i))/experiment/state" \
+        '"completed":\([2-9]\|[1-9][0-9]\)' \
+        "pushed solution terminated peer $i"
+done
+echo "PASS: pushed solution converged every peer"
+
+# The session metrics must be live on every peer and the exposition must
+# still validate with them present: the session gauge family, at least
+# one broadcast frame counted, and the session-lifetime histogram.
+for i in 0 1 2; do
+    "$NODIO" promcheck "127.0.0.1:$((BASE + i))/metrics/prom" >/dev/null
+    PROM=$(http GET "127.0.0.1:$((BASE + i))/metrics/prom")
+    echo "$PROM" | grep -q '^nodio_ws_sessions' || {
+        echo "FAIL: no nodio_ws_sessions gauge at peer $i" >&2
+        exit 1
+    }
+    echo "$PROM" | grep -Eq '^nodio_push_frames_total [1-9]' || {
+        echo "FAIL: nodio_push_frames_total never counted at peer $i" >&2
+        echo "$PROM" | grep '^nodio_push' >&2 || true
+        exit 1
+    }
+    echo "$PROM" | grep -q '^nodio_ws_session_duration_seconds_bucket' || {
+        echo "FAIL: no session-lifetime histogram at peer $i" >&2
+        exit 1
+    }
+done
+echo "PASS: session metrics live and valid on every peer"
 
 echo "federation smoke: ALL PASS"

@@ -92,6 +92,7 @@ fn run_scenario(s: &Scenario, seed: u64) -> Vec<String> {
                 &format!("honest-{i}"),
                 u64::MAX,
                 1.0,
+                false,
             )
         })
         .collect();

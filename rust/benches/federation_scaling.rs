@@ -239,6 +239,7 @@ fn time_to_solution(procs: usize, timeout: Duration) -> Option<f64> {
                 &format!("bench-vol-{i}"),
                 u64::MAX,
                 1.0,
+                false,
             )
         })
         .collect();

@@ -22,6 +22,16 @@
 //!
 //! Knobs: `NODIO_LOADGEN_CONNS` (default 5000), `NODIO_LOADGEN_SECS`
 //! (default 3; `NODIO_BENCH_FULL=1` defaults to 8).
+//!
+//! Push lane (`NODIO_PUSH_SESSIONS=N` switches the whole run — CI job
+//! `push-smoke`): an N-session WebSocket soak against the same server.
+//! Gates: ~0 write syscalls per idle session-second (the generation
+//! compare must keep idle sessions entirely off the wire), every session
+//! receives the broadcast after an injected PUT, a pushed PUT streamed
+//! over a session frame is acked with status 200, push notification
+//! beats a 500 ms poller to the new generation, and a graceful shutdown
+//! drains every session with close-going-away (nothing dropped).
+//! `NODIO_PUSH_IDLE_SECS` sets the idle window (default 3).
 
 use std::collections::VecDeque;
 use std::io::{Read, Write};
@@ -360,7 +370,260 @@ fn percentile(sorted: &[f64], p: f64) -> f64 {
     sorted[idx.min(sorted.len() - 1)]
 }
 
+/// The push-lane soak: N long-lived WebSocket sessions, an idle window
+/// with a hard syscall budget, a broadcast fan-out + notify race, one
+/// streamed PUT, and a drain-on-shutdown check. Exits the process.
+fn push_soak(sessions: usize) {
+    use nodio::http::{ws, WsClient, WsMsg};
+
+    let idle_secs = env_u64("NODIO_PUSH_IDLE_SECS", 3);
+    let timeout = Duration::from_secs(5);
+    let soft = eventloop::raise_nofile_limit((sessions as u64) * 2 + 1024)
+        .unwrap_or(0);
+    println!(
+        "== load_gen push lane: {sessions} WebSocket sessions, {idle_secs}s \
+         idle window (fd limit {soft}) =="
+    );
+
+    let server = PoolServer::spawn(
+        "127.0.0.1:0",
+        PoolServerConfig {
+            problem: ProblemSpec::bits(160, 1e18), // never solved mid-run
+            http: ServerConfig {
+                max_connections: sessions + 128,
+                ..ServerConfig::default()
+            },
+            ..Default::default()
+        },
+    )
+    .expect("spawn server");
+    let addr = server.addr;
+
+    let mut c = HttpClient::connect(addr).expect("connect");
+    let t0 = Instant::now();
+    loop {
+        let resp =
+            c.send(&Request::new(Method::Get, "/readyz")).expect("readyz");
+        if resp.status == 200 {
+            break;
+        }
+        assert!(t0.elapsed() < Duration::from_secs(5), "server never ready");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    drop(c); // no HTTP connection may pollute the idle window
+
+    // Connect the swarm of sessions; each gets the current payload as an
+    // on-connect broadcast, drained below so the idle window starts clean.
+    let connect_t0 = Instant::now();
+    let mut clients: Vec<WsClient> = Vec::with_capacity(sessions);
+    for i in 0..sessions {
+        clients.push(
+            WsClient::connect(addr, ws::WS_PATH, timeout)
+                .unwrap_or_else(|e| panic!("session {i}: {e}")),
+        );
+        if i % 256 == 255 {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+    let connect_s = connect_t0.elapsed().as_secs_f64();
+    let mut greeted = 0usize;
+    for (i, client) in clients.iter_mut().enumerate() {
+        match client.recv_timeout(timeout) {
+            Ok(Some(WsMsg::Text(_))) => greeted += 1,
+            other => panic!("session {i}: no on-connect push: {other:?}"),
+        }
+    }
+
+    // Idle window: the server must not issue a single outbound write.
+    // (`stats_arc`: the drain counters are read after `stop()` consumes
+    // the handle.)
+    let stats = server.stats_arc();
+    let wr0 = stats.write_syscalls.load(Ordering::Relaxed);
+    std::thread::sleep(Duration::from_secs(idle_secs));
+    let wr1 = stats.write_syscalls.load(Ordering::Relaxed);
+    let idle_syscalls_per_session_s = (wr1.saturating_sub(wr0)) as f64
+        / (sessions as f64 * idle_secs as f64);
+
+    // Notify race: a 500 ms poller vs the push fan-out, both watching
+    // for the generation the injected PUT creates.
+    let poll_dt = Arc::new(std::sync::Mutex::new(None::<f64>));
+    let poller = {
+        let poll_dt = poll_dt.clone();
+        std::thread::spawn(move || {
+            let mut c = HttpClient::connect(addr).expect("poller connect");
+            let t0 = Instant::now();
+            loop {
+                if let Ok(resp) =
+                    c.send(&Request::new(Method::Get, "/experiment/state"))
+                {
+                    if let Ok(body) = resp.json_body() {
+                        if body.get_u64("pool_size").unwrap_or(0) > 0 {
+                            *poll_dt.lock().unwrap() =
+                                Some(t0.elapsed().as_secs_f64() * 1e3);
+                            return;
+                        }
+                    }
+                }
+                if t0.elapsed() > Duration::from_secs(10) {
+                    return;
+                }
+                std::thread::sleep(Duration::from_millis(500));
+            }
+        })
+    };
+    std::thread::sleep(Duration::from_millis(50)); // let the first poll miss
+    let mut c = HttpClient::connect(addr).expect("injector connect");
+    let mut put = Request::new(Method::Put, "/experiment/chromosome");
+    put.body = PUT_BODY.as_bytes().to_vec();
+    let inject_t0 = Instant::now();
+    assert_eq!(c.send(&put).expect("inject put").status, 200);
+    let tts_push_ms = match clients[0].recv_timeout(timeout) {
+        Ok(Some(WsMsg::Text(_))) => inject_t0.elapsed().as_secs_f64() * 1e3,
+        other => panic!("session 0: no broadcast after PUT: {other:?}"),
+    };
+    poller.join().expect("poller panicked");
+    let tts_poll_ms = poll_dt.lock().unwrap().unwrap_or(f64::INFINITY);
+
+    // Fan-out: every other session must see the same broadcast.
+    let mut fanned = 1usize;
+    for (i, client) in clients.iter_mut().enumerate().skip(1) {
+        match client.recv_timeout(timeout) {
+            Ok(Some(WsMsg::Text(payload))) => {
+                assert!(
+                    find_subslice(&payload, b"\"chromosome\"").is_some(),
+                    "session {i}: broadcast lacks the pool best"
+                );
+                fanned += 1;
+            }
+            other => panic!("session {i}: missed broadcast: {other:?}"),
+        }
+    }
+
+    // A pushed PUT streamed over the session, acked in-order on the same
+    // frames (and itself broadcast to everyone — drained at drain time).
+    clients[0].send_text(PUT_BODY.as_bytes()).expect("streamed put");
+    let streamed_put_ok = loop {
+        match clients[0].recv_timeout(timeout) {
+            Ok(Some(WsMsg::Text(payload))) => {
+                if find_subslice(&payload, b"\"type\":\"push\"").is_some() {
+                    continue; // broadcast; the ack is behind it
+                }
+                break find_subslice(&payload, b"\"status\":200").is_some();
+            }
+            other => panic!("session 0: no ack for streamed PUT: {other:?}"),
+        }
+    };
+
+    // Graceful shutdown: every session must get close-going-away.
+    server.stop();
+    let mut drained = 0usize;
+    for (i, client) in clients.iter_mut().enumerate() {
+        loop {
+            match client.recv_timeout(timeout) {
+                Ok(Some(WsMsg::Close(code))) => {
+                    assert_eq!(
+                        code,
+                        ws::CLOSE_GOING_AWAY,
+                        "session {i}: wrong close code"
+                    );
+                    drained += 1;
+                    break;
+                }
+                Ok(Some(_)) => continue, // pending broadcast frames
+                other => {
+                    panic!("session {i}: dropped without close: {other:?}")
+                }
+            }
+        }
+    }
+    let opened = stats.sessions_opened.load(Ordering::Relaxed);
+    let server_drained = stats.sessions_drained.load(Ordering::Relaxed);
+    let push_frames = stats.push_frames.load(Ordering::Relaxed);
+
+    let mut table = Table::new(&["metric", "value"]);
+    table.row(&["sessions".into(), format!("{sessions}")]);
+    table.row(&["connect time".into(), format!("{connect_s:.2} s")]);
+    table.row(&[
+        "idle write syscalls / session-s".into(),
+        format!("{idle_syscalls_per_session_s:.4}"),
+    ]);
+    table.row(&["push notify".into(), format!("{tts_push_ms:.1} ms")]);
+    table.row(&["poll notify".into(), format!("{tts_poll_ms:.1} ms")]);
+    table.row(&["push frames".into(), format!("{push_frames}")]);
+    table.row(&["drained".into(), format!("{drained}/{sessions}")]);
+    table.print();
+
+    write_json_summary(&Json::obj(vec![
+        ("bench", "push".into()),
+        ("sessions", (sessions as f64).into()),
+        ("idle_window_s", (idle_secs as f64).into()),
+        ("connect_s", connect_s.into()),
+        ("idle_syscalls_per_session_s", idle_syscalls_per_session_s.into()),
+        ("tts_push_ms", tts_push_ms.into()),
+        ("tts_poll_ms", tts_poll_ms.into()),
+        ("push_frames", (push_frames as f64).into()),
+        ("drained", (drained as f64).into()),
+    ]));
+
+    // -- gates -----------------------------------------------------------
+    let mut failed = false;
+    if idle_syscalls_per_session_s > 0.01 {
+        println!(
+            "FAIL: {idle_syscalls_per_session_s:.4} write syscalls per idle \
+             session-second (budget 0.01; idle sessions must stay off the \
+             wire)"
+        );
+        failed = true;
+    } else {
+        println!(
+            "PASS: {idle_syscalls_per_session_s:.4} write syscalls per idle \
+             session-second <= 0.01"
+        );
+    }
+    if fanned != sessions || greeted != sessions {
+        println!(
+            "FAIL: broadcast fan-out {fanned}/{sessions} (greeted \
+             {greeted}/{sessions})"
+        );
+        failed = true;
+    } else {
+        println!("PASS: broadcast reached all {sessions} sessions");
+    }
+    if !streamed_put_ok {
+        println!("FAIL: streamed PUT was not acked with status 200");
+        failed = true;
+    } else {
+        println!("PASS: streamed PUT acked in-order on the session");
+    }
+    if tts_push_ms >= tts_poll_ms {
+        println!(
+            "FAIL: push notify {tts_push_ms:.1} ms did not beat the 500 ms \
+             poller ({tts_poll_ms:.1} ms)"
+        );
+        failed = true;
+    } else {
+        println!(
+            "PASS: push notify {tts_push_ms:.1} ms < poller {tts_poll_ms:.1} \
+             ms"
+        );
+    }
+    if drained != sessions || server_drained != opened {
+        println!(
+            "FAIL: drain dropped sessions (client saw {drained}/{sessions} \
+             closes; server drained {server_drained}/{opened})"
+        );
+        failed = true;
+    } else {
+        println!("PASS: all {sessions} sessions drained with going-away");
+    }
+    std::process::exit(if failed { 1 } else { 0 });
+}
+
 fn main() {
+    let push_sessions = env_u64("NODIO_PUSH_SESSIONS", 0) as usize;
+    if push_sessions > 0 {
+        push_soak(push_sessions); // exits the process
+    }
     let full = std::env::var("NODIO_BENCH_FULL").is_ok();
     let conns = env_u64("NODIO_LOADGEN_CONNS", 5000) as usize;
     let secs = env_u64("NODIO_LOADGEN_SECS", if full { 8 } else { 3 });

@@ -71,9 +71,12 @@ commands:
             dependency-free probe ci/federation_smoke.sh drives
   client    --server HOST:PORT [--problem trap] [--dim N] [--target T]
             [--engine native|xla|jnp] [--pop 256] [--epochs N]
-            [--uuid NAME] [--no-restart]
+            [--uuid NAME] [--no-restart] [--push]
             run one volunteer island (--problem must match the server's;
-            real problems run a native real-coded island)
+            real problems run a native real-coded island); --push holds
+            a WebSocket session open instead of per-epoch HTTP polling:
+            PUTs stream as frames and immigrants arrive as server pushes
+            (e.g. nodio client --server 127.0.0.1:8080 --push)
   swarm     [--clients 4] [--problem trap] [--dim N] [--target T]
             [--engine native|xla|jnp] [--mode basic|w2] [--solutions 1]
             [--timeout-s 60] [--churn-rate R] [--session-s S] [--seed N]
@@ -81,7 +84,10 @@ commands:
             [--snapshot-every 1024] [--peer HOST:PORT ...]
             [--gossip-listen HOST:PORT] [--gossip-every 250]
             [--addr 127.0.0.1:0] [--trace-buffer 256] [--slow-ms 500]
+            [--push]
             in-process server + simulated volunteers (experiment E6);
+            --push migrates every volunteer over a WebSocket session
+            instead of per-epoch HTTP polling;
             --problem/--dim/--target select the experiment exactly like
             `nodio server` (e.g. --problem rastrigin --dim 64);
             --shards N > 1 drives the sharded pool coordinator;
@@ -309,7 +315,9 @@ fn cmd_server(args: &Args) -> Result<()> {
     println!("        GET /experiment/history, GET /stats, GET /metrics,");
     println!("        GET /metrics/prom, GET /healthz, GET /readyz,");
     println!("        GET /debug/trace, GET /experiment/lineage,");
-    println!("        POST /experiment/reset");
+    println!("        POST /experiment/reset,");
+    println!("        GET /experiment/session (WebSocket push sessions),");
+    println!("        GET /experiment/stream (SSE push fallback)");
     if args.flag("no-persist") {
         println!("persistence: disabled (--no-persist)");
     } else {
@@ -624,14 +632,16 @@ fn cmd_client(args: &Args) -> Result<()> {
         max_epochs: args.get_u64("epochs", u64::MAX).map_err(|e| anyhow!(e))?,
         uuid: args.get_or("uuid", "cli-island").to_string(),
         restart_on_solution: !args.flag("no-restart"),
+        push: args.flag("push"),
         ..Default::default()
     };
     println!(
-        "volunteer {} (engine {}, pop {}) -> {}",
+        "volunteer {} (engine {}, pop {}) -> {}{}",
         config.uuid,
         config.engine.as_str(),
         config.pop_size,
-        addr
+        addr,
+        if config.push { " [push session]" } else { "" }
     );
     let stop = AtomicBool::new(false);
     let mut client = VolunteerClient::new(config)?;
@@ -678,6 +688,7 @@ fn cmd_swarm(args: &Args) -> Result<()> {
             mean_session_s: args.get_f64("session-s", 10.0).unwrap_or(10.0),
             max_concurrent: args.get_usize("max-clients", 16).unwrap_or(16),
         }),
+        push: args.flag("push"),
         ..Default::default()
     };
     if backends > 1 {

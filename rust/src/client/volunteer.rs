@@ -10,8 +10,8 @@ use anyhow::Result;
 use super::driver::{ClientGenome, EngineChoice, IslandDriver};
 use crate::ea::genome::{BitString, RealVector};
 use crate::genome::ProblemSpec;
-use crate::http::{HttpClient, Method, Request};
-use crate::json::Json;
+use crate::http::{ws, HttpClient, Method, Request, WsClient, WsMsg};
+use crate::json::{self, Json};
 
 /// Volunteer client configuration.
 #[derive(Debug, Clone)]
@@ -39,6 +39,10 @@ pub struct ClientConfig {
     pub slowdown: f64,
     /// Network timeout for migrations.
     pub timeout: Duration,
+    /// Migrate over a persistent WebSocket session instead of per-epoch
+    /// HTTP requests: PUTs stream as text frames, immigrants arrive as
+    /// server-pushed broadcasts (no `GET /experiment/random` polling).
+    pub push: bool,
 }
 
 impl Default for ClientConfig {
@@ -55,6 +59,7 @@ impl Default for ClientConfig {
             max_epochs: u64::MAX,
             slowdown: 1.0,
             timeout: Duration::from_secs(2),
+            push: false,
         }
     }
 }
@@ -84,6 +89,12 @@ pub struct VolunteerClient {
     /// Immigrant fetched at the end of the previous epoch, injected at the
     /// start of the next.
     pending_immigrant: Option<ClientGenome>,
+    /// Push-mode session, connected lazily on the first migration and
+    /// reconnected on the next epoch after a transport failure.
+    ws: Option<WsClient>,
+    /// Latest server broadcast (`"type":"push"`) seen on the session;
+    /// the next epoch's immigrant is cut from it.
+    last_push: Option<Json>,
 }
 
 impl VolunteerClient {
@@ -106,6 +117,8 @@ impl VolunteerClient {
             http,
             stats: ClientStats { best_fitness: f64::NEG_INFINITY, ..Default::default() },
             pending_immigrant: None,
+            ws: None,
+            last_push: None,
         })
     }
 
@@ -177,6 +190,125 @@ impl VolunteerClient {
         }
     }
 
+    /// PUT the best genome over the WebSocket session as a text frame,
+    /// waiting for the ack (a frame whose JSON carries `status` and no
+    /// `"type":"push"` tag). Broadcasts that arrive first are stashed in
+    /// `last_push`. Returns the ack's `solved`, or None on failure — the
+    /// session is dropped so the next epoch reconnects.
+    fn put_best_push(
+        &mut self,
+        best: &ClientGenome,
+        fitness: f64,
+    ) -> Option<bool> {
+        let addr = self.config.server?;
+        if self.ws.is_none() {
+            match WsClient::connect(addr, ws::WS_PATH, self.config.timeout) {
+                Ok(c) => self.ws = Some(c),
+                Err(_) => {
+                    self.stats.migrations_failed += 1;
+                    return None;
+                }
+            }
+        }
+        let (key, genome_json) = best.wire_member();
+        let body = Json::obj(vec![
+            (key, genome_json),
+            ("fitness", fitness.into()),
+            ("uuid", self.config.uuid.clone().into()),
+        ]);
+        let text = json::to_string(&body);
+        let ws = self.ws.as_mut().expect("connected above");
+        if ws.send_text(text.as_bytes()).is_err() {
+            self.ws = None;
+            self.stats.migrations_failed += 1;
+            return None;
+        }
+        // Bounded ack wait: stash any broadcasts that beat the ack (a
+        // busy swarm can park several generations' worth of frames).
+        for _ in 0..128 {
+            let ws = self.ws.as_mut().expect("session held across loop");
+            match ws.recv_timeout(self.config.timeout) {
+                Ok(Some(WsMsg::Text(payload))) => {
+                    let parsed = std::str::from_utf8(&payload)
+                        .ok()
+                        .and_then(|t| json::parse(t).ok());
+                    let Some(reply) = parsed else { continue };
+                    if reply.get_str("type") == Some("push") {
+                        self.last_push = Some(reply);
+                        continue;
+                    }
+                    let status = reply.get_u64("status").unwrap_or(0);
+                    if status == 200 || status == 201 {
+                        self.stats.migrations_ok += 1;
+                        return reply
+                            .get("solved")
+                            .and_then(Json::as_bool);
+                    }
+                    self.stats.migrations_failed += 1;
+                    return None;
+                }
+                // Binary/pong frames: not part of this protocol, skip.
+                Ok(Some(WsMsg::Close(_))) | Ok(None) | Err(_) => {
+                    self.ws = None;
+                    self.stats.migrations_failed += 1;
+                    return None;
+                }
+                Ok(Some(_)) => {}
+            }
+        }
+        self.ws = None;
+        self.stats.migrations_failed += 1;
+        None
+    }
+
+    /// Drain broadcasts parked on the session between epochs. The first
+    /// read waits briefly (the server pushes in the same loop tick as the
+    /// PUT it acked, but the frame can trail the ack by one scheduling
+    /// hop); later reads only sweep already-buffered frames.
+    fn poll_push(&mut self) {
+        let mut wait = Duration::from_millis(50);
+        for _ in 0..8 {
+            let Some(ws) = self.ws.as_mut() else { return };
+            match ws.recv_timeout(wait) {
+                Ok(Some(WsMsg::Text(payload))) => {
+                    if let Some(reply) = std::str::from_utf8(&payload)
+                        .ok()
+                        .and_then(|t| json::parse(t).ok())
+                    {
+                        if reply.get_str("type") == Some("push") {
+                            self.last_push = Some(reply);
+                        }
+                    }
+                }
+                Ok(Some(WsMsg::Close(_))) | Err(_) => {
+                    self.ws = None;
+                    return;
+                }
+                Ok(None) => return,
+                Ok(Some(_)) => {}
+            }
+            wait = Duration::from_millis(2);
+        }
+    }
+
+    /// Cut the next immigrant from the latest broadcast, mirroring what
+    /// `GET /experiment/random` would have returned.
+    fn immigrant_from_push(&mut self) -> Option<ClientGenome> {
+        let body = self.last_push.take()?;
+        let parsed = if let Some(chrom) = body.get_str("chromosome") {
+            ClientGenome::Bits(BitString::parse(chrom)?)
+        } else {
+            let items = body.get("genes")?.as_arr()?;
+            let mut values = Vec::with_capacity(items.len());
+            for item in items {
+                values.push(item.as_f64()?);
+            }
+            ClientGenome::Real(RealVector { values })
+        };
+        self.stats.immigrants_received += 1;
+        Some(parsed)
+    }
+
     /// One migration epoch: evolve, PUT best, GET immigrant, restart if
     /// solved (W² mode). Returns `(best_fitness, solved,
     /// best_chromosome)` or `None` on engine failure. Building block for
@@ -212,9 +344,18 @@ impl VolunteerClient {
             ));
         }
 
-        // Migration: PUT best, then fetch next epoch's immigrant.
-        let _confirmed = self.put_best(&outcome.best, outcome.best_fitness);
-        self.pending_immigrant = self.get_random();
+        // Migration: PUT best, then source next epoch's immigrant —
+        // from the session broadcast in push mode, by polling otherwise.
+        if self.config.push && self.config.server.is_some() {
+            let _confirmed =
+                self.put_best_push(&outcome.best, outcome.best_fitness);
+            self.poll_push();
+            self.pending_immigrant = self.immigrant_from_push();
+        } else {
+            let _confirmed =
+                self.put_best(&outcome.best, outcome.best_fitness);
+            self.pending_immigrant = self.get_random();
+        }
 
         if outcome.solved {
             self.stats.solutions_found += 1;
@@ -250,6 +391,10 @@ impl VolunteerClient {
                 }
                 None => break,
             }
+        }
+        if let Some(ws) = self.ws.as_mut() {
+            let _ = ws.send_close(ws::CLOSE_NORMAL);
+            self.ws = None;
         }
         self.stats.clone()
     }
@@ -312,6 +457,47 @@ mod tests {
         // Own chromosomes come back as immigrants after the first epoch.
         assert!(stats.immigrants_received >= 1);
         handle.stop();
+    }
+
+    #[test]
+    fn push_migrates_against_live_server() {
+        let handle = PoolServer::spawn(
+            "127.0.0.1:0",
+            PoolServerConfig::default(),
+        )
+        .unwrap();
+        let stop = AtomicBool::new(false);
+        let mut config = offline_config(3);
+        config.server = Some(handle.addr);
+        config.uuid = "push-island".into();
+        config.push = true;
+        let mut client = VolunteerClient::new(config).unwrap();
+        let stats = client.run(&stop);
+        assert_eq!(stats.epochs, 3);
+        // One acked PUT frame per epoch; no GET polling in push mode.
+        assert_eq!(stats.migrations_ok, 3, "{stats:?}");
+        assert_eq!(stats.migrations_failed, 0, "{stats:?}");
+        // Broadcasts deliver the pool best back as an immigrant.
+        assert!(stats.immigrants_received >= 1, "{stats:?}");
+        handle.stop();
+    }
+
+    #[test]
+    fn push_survives_dead_server() {
+        let dead = {
+            let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap()
+        };
+        let stop = AtomicBool::new(false);
+        let mut config = offline_config(2);
+        config.server = Some(dead);
+        config.push = true;
+        config.timeout = Duration::from_millis(100);
+        let mut client = VolunteerClient::new(config).unwrap();
+        let stats = client.run(&stop);
+        assert_eq!(stats.epochs, 2);
+        assert!(stats.migrations_failed > 0);
+        assert_eq!(stats.migrations_ok, 0);
     }
 
     #[test]

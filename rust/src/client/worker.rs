@@ -73,6 +73,7 @@ impl ClientProcess {
         uuid_prefix: &str,
         max_epochs: u64,
         slowdown: f64,
+        push: bool,
     ) -> ClientProcess {
         let stop = Arc::new(AtomicBool::new(false));
         let mut seeds = SplitMix64::new(seed);
@@ -99,6 +100,7 @@ impl ClientProcess {
                     restart_on_solution: mode == WorkerMode::W2,
                     max_epochs,
                     slowdown,
+                    push,
                     ..Default::default()
                 };
                 let stop = stop.clone();
@@ -171,6 +173,7 @@ mod tests {
             "browser-0",
             2, // two epochs each
             1.0,
+            false,
         );
         let stats = process.join();
         assert_eq!(stats.len(), 2);
@@ -192,6 +195,45 @@ mod tests {
     }
 
     #[test]
+    fn w2_process_runs_push_workers() {
+        // Same two-worker scenario over WebSocket sessions: each worker
+        // holds its own session, PUTs stream as frames, and the server's
+        // per-uuid ledger records both volunteers.
+        let handle =
+            PoolServer::spawn("127.0.0.1:0", PoolServerConfig::default())
+                .unwrap();
+        let process = ClientProcess::spawn(
+            Some(handle.addr),
+            &ProblemSpec::trap(),
+            WorkerMode::W2,
+            EngineChoice::Native,
+            256,
+            43,
+            "push-browser",
+            2,
+            1.0,
+            true,
+        );
+        let stats = process.join();
+        assert_eq!(stats.len(), 2);
+        for s in &stats {
+            assert_eq!(s.epochs, 2);
+            assert!(s.migrations_ok > 0, "{s:?}");
+            assert_eq!(s.migrations_failed, 0, "{s:?}");
+        }
+        let mut c = crate::http::HttpClient::connect(handle.addr).unwrap();
+        let body = c
+            .send(&crate::http::Request::new(crate::http::Method::Get, "/stats"))
+            .unwrap()
+            .json_body()
+            .unwrap();
+        let per_uuid = body.get("per_uuid").unwrap();
+        assert!(per_uuid.get("push-browser-w0").is_some());
+        assert!(per_uuid.get("push-browser-w1").is_some());
+        handle.stop();
+    }
+
+    #[test]
     fn stop_interrupts_workers() {
         let process = ClientProcess::spawn(
             None,
@@ -203,6 +245,7 @@ mod tests {
             "b",
             u64::MAX,
             1.0,
+            false,
         );
         std::thread::sleep(std::time::Duration::from_millis(100));
         let stats = process.shutdown();

@@ -75,8 +75,8 @@ use super::pool::{ChromosomePool, PoolEntry};
 use super::provenance::{lineage_json, Hop, LineageRecord, Provenance};
 use super::routes::{
     first_json_byte, precompute_verdicts, put_fail, run_put_batch_n,
-    validate_put_json, validate_put_ref, GenomeFields, PutFields,
-    PutOutcome, RandomOutcome,
+    validate_put_json, validate_put_ref, BatchOutcome, GenomeFields,
+    PutFields, PutOutcome, RandomOutcome,
 };
 use super::security::{FitnessVerifier, RateLimiter, SaboteurLog};
 use super::server::{PoolServer, PoolServerConfig};
@@ -94,7 +94,9 @@ use crate::http::server::{
 use crate::http::types::{
     write_json_200_head, write_no_content_204,
 };
-use crate::http::{Method, Request, Response, Service};
+use crate::http::{
+    ws, Method, Request, Response, Service, SessionAccept,
+};
 use crate::json::{self, Json, PutBody, PutScratch};
 use crate::rng::Xoshiro256pp;
 use crate::util::unix_ms;
@@ -276,6 +278,11 @@ pub(crate) struct ClusterShared {
     /// live best's hop chain. Updated on accepted PUTs and adopted
     /// migrations; cleared on every epoch transition.
     best_lineage: Mutex<Option<(u64, LineageRecord)>>,
+    /// Push-broadcast generation: advanced on accepted PUTs, merged
+    /// migrations, and epoch transitions. Shard drivers re-render and
+    /// push to their sessions exactly when this moves, so idle sessions
+    /// cost nothing between changes.
+    pub(crate) push_gen: AtomicU64,
     shutdown: AtomicBool,
 }
 
@@ -320,8 +327,16 @@ impl ClusterShared {
             completed: Mutex::new(completed),
             pending_epoch_log: Mutex::new(None),
             best_lineage: Mutex::new(None),
+            push_gen: AtomicU64::new(1),
             shutdown: AtomicBool::new(false),
         }
+    }
+
+    /// Advance the push-broadcast generation. Starts at 1 and counts up;
+    /// it cannot reach the drivers' fresh-session sentinel (`u64::MAX`)
+    /// in any realistic process lifetime.
+    pub(crate) fn bump_push_gen(&self) {
+        self.push_gen.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Offer a candidate for the live experiment's best lineage. The
@@ -422,6 +437,7 @@ impl ClusterShared {
         self.best_key
             .store(ordered_key(f64::NEG_INFINITY), Ordering::Release);
         *self.best_lineage.lock().unwrap() = None;
+        self.bump_push_gen();
         Some(log)
     }
 
@@ -461,6 +477,7 @@ impl ClusterShared {
                     Ordering::Relaxed,
                 );
                 *self.best_lineage.lock().unwrap() = None;
+                self.bump_push_gen();
                 advanced = true;
                 break;
             }
@@ -900,6 +917,8 @@ impl ShardService {
                 "",
             );
             self.publish_pool_len();
+            // Merged immigrants change what a push would carry.
+            self.shared.bump_push_gen();
         }
     }
 
@@ -1084,6 +1103,145 @@ impl ShardService {
         }
     }
 
+    /// One session message is one chromosome PUT (single object or
+    /// batch array) pushed over the session channel: same parse,
+    /// validation, guard, and provenance path as
+    /// `PUT /experiment/chromosome`, so a pushed PUT is
+    /// indistinguishable from a polled one downstream. The reply
+    /// mirrors the HTTP response body with the would-be status stamped
+    /// into the payload (frames have no status line).
+    fn session_put(&mut self, payload: &[u8], reply: &mut Vec<u8>) {
+        let Ok(text) = std::str::from_utf8(payload) else {
+            reply.extend_from_slice(
+                br#"{"error":"bad json: not utf-8","status":400}"#,
+            );
+            return;
+        };
+        let parsed = {
+            let mut scratch = std::mem::take(&mut self.put_scratch);
+            let parsed = json::parse_put_body_reusing(text, &mut scratch);
+            self.put_scratch = scratch;
+            parsed
+        };
+        match parsed {
+            Ok(PutBody::Single(item)) => {
+                let (status, mut body) =
+                    match validate_put_ref(&item, self.repr) {
+                        Ok(fields) => self.put_one(fields),
+                        Err(rejection) => rejection,
+                    };
+                body.set("status", (status as u64).into());
+                reply.extend_from_slice(json::to_string(&body).as_bytes());
+            }
+            Ok(PutBody::Batch(items)) => {
+                let repr = self.repr;
+                let mut validated: Vec<_> = items
+                    .iter()
+                    .map(|item| validate_put_ref(item, repr))
+                    .collect();
+                let mut pre =
+                    precompute_verdicts(&mut self.verifier, &validated);
+                let outcome = run_put_batch_n(validated.len(), |i| {
+                    let verdict = pre[i].take();
+                    match std::mem::replace(
+                        &mut validated[i],
+                        Err(put_fail(500, "consumed")),
+                    ) {
+                        Ok(fields) => self.put_one_pre(fields, verdict),
+                        Err(rejection) => rejection,
+                    }
+                });
+                let envelope =
+                    self.session_batch_envelope(items.len(), outcome);
+                drop(validated);
+                self.put_scratch.restore(items);
+                reply.extend_from_slice(
+                    json::to_string(&envelope).as_bytes(),
+                );
+            }
+            Err(_) => {
+                // Owned fallback (escapes, unusual shapes) — mirrors the
+                // HTTP handler's fallback exactly.
+                let Ok(body) = json::parse(text) else {
+                    reply.extend_from_slice(
+                        br#"{"error":"bad json","status":400}"#,
+                    );
+                    return;
+                };
+                match &body {
+                    Json::Arr(items) => {
+                        let repr = self.repr;
+                        let mut validated: Vec<_> = items
+                            .iter()
+                            .map(|item| validate_put_json(item, repr))
+                            .collect();
+                        let mut pre = precompute_verdicts(
+                            &mut self.verifier,
+                            &validated,
+                        );
+                        let outcome =
+                            run_put_batch_n(validated.len(), |i| {
+                                let verdict = pre[i].take();
+                                match std::mem::replace(
+                                    &mut validated[i],
+                                    Err(put_fail(500, "consumed")),
+                                ) {
+                                    Ok(fields) => {
+                                        self.put_one_pre(fields, verdict)
+                                    }
+                                    Err(rejection) => rejection,
+                                }
+                            });
+                        let envelope = self
+                            .session_batch_envelope(items.len(), outcome);
+                        reply.extend_from_slice(
+                            json::to_string(&envelope).as_bytes(),
+                        );
+                    }
+                    _ => {
+                        let (status, mut payload) =
+                            match validate_put_json(&body, self.repr) {
+                                Ok(fields) => self.put_one(fields),
+                                Err(rejection) => rejection,
+                            };
+                        payload.set("status", (status as u64).into());
+                        reply.extend_from_slice(
+                            json::to_string(&payload).as_bytes(),
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    /// Render the batched-PUT session reply (mirrors the HTTP batch
+    /// response envelope; see [`ShardService::session_put`]).
+    fn session_batch_envelope(
+        &self,
+        count: usize,
+        outcome: Result<BatchOutcome, Response>,
+    ) -> Json {
+        match outcome {
+            Err(resp) => Json::obj(vec![
+                (
+                    "error",
+                    String::from_utf8_lossy(&resp.body)
+                        .into_owned()
+                        .into(),
+                ),
+                ("status", (resp.status as u64).into()),
+            ]),
+            Ok(out) => Json::obj(vec![
+                ("batch", count.into()),
+                ("accepted", out.accepted.into()),
+                ("solved", out.solved.into()),
+                ("experiment", self.local_experiment.into()),
+                ("results", Json::Arr(out.results)),
+                ("status", 200u64.into()),
+            ]),
+        }
+    }
+
     /// Apply one validated PUT element (shared by the single and batched
     /// forms). Returns the per-item status and JSON payload.
     fn put_one(&mut self, fields: PutFields) -> (u16, Json) {
@@ -1243,6 +1401,9 @@ impl ShardService {
             });
         }
         self.publish_pool_len();
+        // An accepted PUT is a fresh immigrant: wake the push sessions
+        // (every shard's driver re-renders from its own partition).
+        self.shared.bump_push_gen();
         let current_id = self.local_experiment;
         self.log.log_with("put", || {
             Json::obj(vec![
@@ -1674,6 +1835,13 @@ impl ShardService {
                 Response::json(&self.telemetry.dump_trace_json())
             }
             (Method::Post, "/experiment/reset") => self.reset(),
+            // The push-session endpoints are claimed by the event-loop
+            // driver before dispatch; reaching them here means no
+            // driver sits on this path (direct calls, the threaded
+            // ablation server), where sessions cannot be served.
+            (_, p) if p == ws::WS_PATH || p == ws::SSE_PATH => {
+                Response::new(426).with_text("upgrade required")
+            }
             (
                 _,
                 "/" | "/experiment/chromosome" | "/experiment/random"
@@ -1801,6 +1969,49 @@ impl Service for ShardService {
         );
         None
     }
+
+    fn session_accept(&mut self, req: &Request) -> SessionAccept {
+        if req.path == ws::WS_PATH {
+            // The driver validates the RFC 6455 handshake (and answers
+            // 400 on a bad key or non-GET).
+            SessionAccept::Ws
+        } else if req.method == Method::Get && req.path == ws::SSE_PATH {
+            SessionAccept::Sse
+        } else {
+            SessionAccept::Decline
+        }
+    }
+
+    fn session_message(&mut self, payload: &[u8], reply: &mut Vec<u8>) {
+        self.session_put(payload, reply);
+    }
+
+    fn push_generation(&mut self) -> u64 {
+        self.shared.push_gen.load(Ordering::Relaxed)
+    }
+
+    fn render_push(&mut self, generation: u64, out: &mut Vec<u8>) {
+        // Render from a caught-up partition so the bulletin's epoch
+        // matches what the next request would see.
+        self.sync_epoch();
+        let mut members: Vec<(&str, Json)> = vec![
+            ("type", "push".into()),
+            ("gen", generation.into()),
+            ("experiment", self.local_experiment.into()),
+            ("completed", self.shared.completed_count().into()),
+        ];
+        // Ship this partition's best entry as the pushed immigrant;
+        // right after an epoch transition the partition is empty and
+        // the broadcast is the bare experiment bulletin.
+        if let Some(e) = self.pool.best() {
+            let (key, genome_json) = e.chromosome.wire_member();
+            members.push((key, genome_json));
+            members.push(("fitness", e.fitness.into()));
+        }
+        out.extend_from_slice(
+            json::to_string(&Json::obj(members)).as_bytes(),
+        );
+    }
 }
 
 /// `audit.jsonl` -> `audit-shard0003.jsonl`: every shard owns its own
@@ -1879,11 +2090,18 @@ fn shard_loop(
         service.publish_per_uuid();
         service.publish_events();
         service.maybe_snapshot();
+        // Broadcast to push sessions in the same tick as whatever moved
+        // the generation (a PUT here, a peer's epoch CAS + waker, a
+        // merged migration batch).
+        driver.push_sessions(&epoll, &mut service, &stats);
         driver.sweep_idle(&epoll);
         slots[id]
             .open_conns
             .store(driver.connections() as u64, Ordering::Relaxed);
     }
+    // Orderly shutdown: sessions get a close-going-away frame (SSE: a
+    // `bye` event) before the WAL fsync and thread exit.
+    driver.drain_sessions(&stats);
     service.shutdown_flush();
     Ok(())
 }
@@ -1932,6 +2150,12 @@ impl ShardedPoolServer {
         config: ClusterConfig,
     ) -> io::Result<ClusterHandle> {
         let n = config.shards.max(1);
+        // The soft RLIMIT_NOFILE often defaults to 1024; thousands of
+        // volunteer connections/sessions across shards need headroom
+        // regardless of what limit this process inherited.
+        let _ = eventloop::raise_nofile_limit(
+            config.base.http.max_connections as u64 * n as u64 + 64,
+        );
         let listener = TcpListener::bind(addr)?;
         listener.set_nonblocking(true)?;
         let addr = listener.local_addr()?;

@@ -26,7 +26,9 @@ use super::telemetry::{
 use super::timeseries::TimeSeries;
 use crate::genome::{Genome, ProblemSpec, RealGenes, Representation};
 use crate::http::types::{write_json_200_head, write_no_content_204};
-use crate::http::{FastOutcome, Method, Params, Request, Response, Router};
+use crate::http::{
+    FastOutcome, Method, Params, PushSource, Request, Response, Router,
+};
 use crate::json::{self, Json, PutBody, PutItemRef, PutScratch};
 use crate::problems::PackedBits;
 use crate::rng::Xoshiro256pp;
@@ -344,6 +346,11 @@ pub struct PoolState {
     pub node: Arc<str>,
     /// Per-process PUT ingest counter (the `seq` of the origin tag).
     prov_seq: u64,
+    /// Push-broadcast generation: advanced on every accepted PUT (an
+    /// immigrant is available) and every epoch transition. The event
+    /// loop re-renders and pushes to its sessions exactly when this
+    /// moves, so idle experiments cost idle sessions nothing.
+    pub push_gen: u64,
 }
 
 impl PoolState {
@@ -375,6 +382,7 @@ impl PoolState {
             )),
             node: Arc::from("local"),
             prov_seq: 0,
+            push_gen: 1,
         };
         state.rebuild_put_ok();
         state
@@ -425,6 +433,16 @@ impl PoolState {
         // Render caches start cold: the GET path resizes the slot cache
         // lazily and put_ok must carry the recovered epoch.
         self.drop_render_caches();
+        self.bump_push_gen();
+    }
+
+    /// Advance the broadcast generation (accepted PUT, epoch change).
+    fn bump_push_gen(&mut self) {
+        // Skip the driver's fresh-session sentinel (`u64::MAX`) on wrap.
+        self.push_gen = self.push_gen.wrapping_add(1);
+        if self.push_gen == u64::MAX {
+            self.push_gen = 0;
+        }
     }
 
     /// Point-in-time gauges for the Prometheus exposition.
@@ -708,6 +726,7 @@ pub fn build_router(state: Shared) -> Router {
                 s.pool.clear();
                 s.series.clear();
                 s.drop_render_caches();
+                s.bump_push_gen();
                 let started = s.experiments.started_at_ms();
                 if let Some(p) = &mut s.persist {
                     p.record_epoch(log.id, log.id + 1, Some(&log), started);
@@ -810,12 +829,185 @@ pub fn build_router(state: Shared) -> Router {
         });
     }
 
+    // Push sessions (WebSocket + SSE): the router claims the session
+    // endpoints and adapts the shared state to the event loop's push
+    // protocol.
+    router.set_push(Box::new(StatePush { state: state.clone() }));
+
     // Latency recording sits in the router itself, so both event-loop
     // traffic and direct handler calls (tests, benches) land in the
     // same per-route histograms.
     router.set_telemetry(state.borrow().telemetry.driver(0));
 
     router
+}
+
+/// The single-loop push source: adapts [`PoolState`] to the event-loop
+/// session protocol (boxed into the router by [`build_router`]).
+struct StatePush {
+    state: Shared,
+}
+
+impl PushSource for StatePush {
+    fn generation(&mut self) -> u64 {
+        self.state.borrow().push_gen
+    }
+
+    fn render(&mut self, generation: u64, out: &mut Vec<u8>) {
+        let s = self.state.borrow();
+        let mut members: Vec<(&str, Json)> = vec![
+            ("type", "push".into()),
+            ("gen", generation.into()),
+            ("experiment", s.experiments.current_id().into()),
+            ("completed", s.experiments.completed().len().into()),
+        ];
+        // Ship the pool's current best as the pushed immigrant; right
+        // after an epoch transition the pool is empty and the broadcast
+        // is the bare experiment bulletin.
+        if let Some(e) = s.pool.best() {
+            let (key, genome_json) = e.chromosome.wire_member();
+            members.push((key, genome_json));
+            members.push(("fitness", e.fitness.into()));
+        }
+        out.extend_from_slice(
+            json::to_string(&Json::obj(members)).as_bytes(),
+        );
+    }
+
+    fn message(&mut self, payload: &[u8], reply: &mut Vec<u8>) {
+        session_put(&self.state, payload, reply);
+    }
+}
+
+/// Render the batched-PUT reply payload for a session message. The body
+/// mirrors the HTTP batch response exactly, with the would-be HTTP
+/// status stamped into the envelope (frames have no status line).
+fn batch_envelope(
+    s: &PoolState,
+    count: usize,
+    outcome: Result<BatchOutcome, Response>,
+) -> Json {
+    match outcome {
+        Err(resp) => Json::obj(vec![
+            ("error", String::from_utf8_lossy(&resp.body).into_owned().into()),
+            ("status", (resp.status as u64).into()),
+        ]),
+        Ok(out) => Json::obj(vec![
+            ("batch", count.into()),
+            ("accepted", out.accepted.into()),
+            ("solved", out.solved.into()),
+            ("experiment", s.experiments.current_id().into()),
+            ("results", Json::Arr(out.results)),
+            ("status", 200u64.into()),
+        ]),
+    }
+}
+
+/// One session message is one chromosome PUT (single object or batch
+/// array) pushed over the session channel: same parse, validation,
+/// guard, and provenance path as `PUT /experiment/chromosome`, so a
+/// pushed PUT is indistinguishable from a polled one downstream.
+fn session_put(state: &Shared, payload: &[u8], reply: &mut Vec<u8>) {
+    let Ok(text) = std::str::from_utf8(payload) else {
+        reply.extend_from_slice(
+            br#"{"error":"bad json: not utf-8","status":400}"#,
+        );
+        return;
+    };
+    let parsed = {
+        let mut scratch =
+            std::mem::take(&mut state.borrow_mut().put_scratch);
+        let parsed = json::parse_put_body_reusing(text, &mut scratch);
+        state.borrow_mut().put_scratch = scratch;
+        parsed
+    };
+    match parsed {
+        Ok(PutBody::Single(item)) => {
+            let mut s = state.borrow_mut();
+            let repr = s.experiments.repr;
+            let (status, mut body) = match validate_put_ref(&item, repr) {
+                Ok(fields) => put_one(&mut s, fields),
+                Err(rejection) => rejection,
+            };
+            body.set("status", (status as u64).into());
+            reply.extend_from_slice(json::to_string(&body).as_bytes());
+        }
+        Ok(PutBody::Batch(items)) => {
+            let envelope = {
+                let mut s = state.borrow_mut();
+                let repr = s.experiments.repr;
+                let mut validated: Vec<_> = items
+                    .iter()
+                    .map(|item| validate_put_ref(item, repr))
+                    .collect();
+                let mut pre =
+                    precompute_verdicts(&mut s.verifier, &validated);
+                let outcome = run_put_batch_n(validated.len(), |i| {
+                    let verdict = pre[i].take();
+                    match std::mem::replace(
+                        &mut validated[i],
+                        Err(put_fail(500, "consumed")),
+                    ) {
+                        Ok(fields) => put_one_pre(&mut s, fields, verdict),
+                        Err(rejection) => rejection,
+                    }
+                });
+                batch_envelope(&s, items.len(), outcome)
+            };
+            state.borrow_mut().put_scratch.restore(items);
+            reply.extend_from_slice(json::to_string(&envelope).as_bytes());
+        }
+        Err(_) => {
+            // Owned fallback (escapes, unusual shapes) — mirrors the
+            // HTTP handler's fallback exactly.
+            let Ok(body) = json::parse(text) else {
+                reply.extend_from_slice(
+                    br#"{"error":"bad json","status":400}"#,
+                );
+                return;
+            };
+            let mut s = state.borrow_mut();
+            let repr = s.experiments.repr;
+            match &body {
+                Json::Arr(items) => {
+                    let mut validated: Vec<_> = items
+                        .iter()
+                        .map(|item| validate_put_json(item, repr))
+                        .collect();
+                    let mut pre =
+                        precompute_verdicts(&mut s.verifier, &validated);
+                    let outcome = run_put_batch_n(validated.len(), |i| {
+                        let verdict = pre[i].take();
+                        match std::mem::replace(
+                            &mut validated[i],
+                            Err(put_fail(500, "consumed")),
+                        ) {
+                            Ok(fields) => {
+                                put_one_pre(&mut s, fields, verdict)
+                            }
+                            Err(rejection) => rejection,
+                        }
+                    });
+                    let envelope =
+                        batch_envelope(&s, items.len(), outcome);
+                    reply.extend_from_slice(
+                        json::to_string(&envelope).as_bytes(),
+                    );
+                }
+                _ => {
+                    let (status, mut payload) =
+                        match validate_put_json(&body, repr) {
+                            Ok(fields) => put_one(&mut s, fields),
+                            Err(rejection) => rejection,
+                        };
+                    payload.set("status", (status as u64).into());
+                    reply.extend_from_slice(
+                        json::to_string(&payload).as_bytes(),
+                    );
+                }
+            }
+        }
+    }
 }
 
 fn put_chromosome(state: &Shared, req: &Request) -> Response {
@@ -1068,6 +1260,9 @@ fn apply_put_pre(
             ("experiment", current_id.into()),
         ])
     });
+
+    // An accepted PUT is a fresh immigrant: wake the push sessions.
+    s.bump_push_gen();
 
     if !solved {
         maybe_snapshot(s);

@@ -177,6 +177,13 @@ pub struct ShardTelemetry {
     pub requests: [AtomicHist; ROUTE_CLASSES],
     /// Live connections registered with this shard's `ConnDriver`.
     pub open_conns: AtomicU64,
+    /// Live push sessions (WebSocket + SSE) on this shard's driver.
+    pub ws_sessions: AtomicU64,
+    /// Broadcast frames pushed to sessions (one per session per
+    /// generation, WebSocket frames and SSE events alike).
+    pub push_frames: AtomicU64,
+    /// Session lifetime, recorded when a session closes or drains.
+    pub session_lifetime: AtomicHist,
     /// Requests at or over the slow threshold (also traced).
     pub slow_requests: AtomicU64,
     /// WAL append latency (frame + write + flush, + fsync when on).
@@ -232,6 +239,9 @@ impl ShardTelemetry {
         ShardTelemetry {
             requests: std::array::from_fn(|_| AtomicHist::new()),
             open_conns: AtomicU64::new(0),
+            ws_sessions: AtomicU64::new(0),
+            push_frames: AtomicU64::new(0),
+            session_lifetime: AtomicHist::new(),
             slow_requests: AtomicU64::new(0),
             wal_append: AtomicHist::new(),
             wal_append_bytes: AtomicU64::new(0),
@@ -881,6 +891,49 @@ impl Telemetry {
 
         write_help_type(
             out,
+            "nodio_ws_sessions",
+            "Live push sessions (WebSocket + SSE) across all event loops.",
+            "gauge",
+        );
+        write_sample_u64(
+            out,
+            "nodio_ws_sessions",
+            &[],
+            self.sum(|s| s.ws_sessions.load(Ordering::Relaxed)),
+        );
+
+        write_help_type(
+            out,
+            "nodio_push_frames_total",
+            "Broadcast frames pushed to sessions (WS frames + SSE events).",
+            "counter",
+        );
+        write_sample_u64(
+            out,
+            "nodio_push_frames_total",
+            &[],
+            self.sum(|s| s.push_frames.load(Ordering::Relaxed)),
+        );
+
+        let mut session_lifetime = HistSnapshot::new();
+        for s in &self.shards {
+            s.session_lifetime.add_into(&mut session_lifetime);
+        }
+        write_help_type(
+            out,
+            "nodio_ws_session_duration_seconds",
+            "Push session lifetime, recorded at close or drain.",
+            "histogram",
+        );
+        write_histogram(
+            out,
+            "nodio_ws_session_duration_seconds",
+            &[],
+            &session_lifetime,
+        );
+
+        write_help_type(
+            out,
             "nodio_shards",
             "Event-loop shards in this process.",
             "gauge",
@@ -1088,6 +1141,21 @@ impl DriverTelemetry {
     /// Publish the live connection count for this event loop.
     pub fn set_open_conns(&self, n: u64) {
         self.shard.open_conns.store(n, Ordering::Relaxed);
+    }
+
+    /// Publish the live push-session count for this event loop.
+    pub fn set_ws_sessions(&self, n: u64) {
+        self.shard.ws_sessions.store(n, Ordering::Relaxed);
+    }
+
+    /// Count broadcast frames pushed to sessions this generation.
+    pub fn inc_push_frames(&self, n: u64) {
+        self.shard.push_frames.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Record a session's lifetime when it closes or drains.
+    pub fn record_session_lifetime(&self, lived: Duration) {
+        self.shard.session_lifetime.record(lived);
     }
 }
 

@@ -9,6 +9,7 @@
 //! * [`threaded`] — a thread-per-connection server used as the ablation
 //!   baseline in the scalability bench
 //! * [`client`] — a blocking keep-alive client used by volunteer islands
+//! * [`ws`] — RFC 6455 WebSocket + SSE wire support for push sessions
 
 pub mod client;
 pub mod parse;
@@ -16,11 +17,46 @@ pub mod router;
 pub mod server;
 pub mod threaded;
 pub mod types;
+pub mod ws;
 
 pub use client::HttpClient;
 pub use router::{FastOutcome, Params, Router};
 pub use server::{Server, ServerHandle};
 pub use types::{Method, Request, Response};
+pub use ws::{WsClient, WsMsg};
+
+/// What a service says about a request aimed at a session endpoint.
+/// `Ws` asks the driver to attempt the RFC 6455 upgrade (the driver
+/// validates the handshake and answers 400 on a bad key or non-GET);
+/// `Sse` switches the connection into a server-sent-events stream.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SessionAccept {
+    Decline,
+    Ws,
+    Sse,
+}
+
+/// The service-side half of the push protocol, boxed into a [`Router`]
+/// (the cluster's `ShardService` implements the [`Service`] session
+/// hooks directly). One implementor per pool state.
+pub trait PushSource {
+    /// Monotonic broadcast generation: the driver re-renders and pushes
+    /// to every session exactly when this advances (epoch transitions,
+    /// migration immigrants, experiment completion), so an unchanged
+    /// generation costs idle sessions nothing.
+    fn generation(&mut self) -> u64;
+
+    /// Render the broadcast payload (single-line JSON) for the current
+    /// generation. Rendered once per generation and shared across all
+    /// sessions as a WebSocket frame / SSE event.
+    fn render(&mut self, generation: u64, out: &mut Vec<u8>);
+
+    /// Handle one client message (a pushed chromosome PUT) and render
+    /// the reply payload. Must route through the same validation +
+    /// provenance path as the HTTP PUT so pushed and polled PUTs are
+    /// indistinguishable downstream.
+    fn message(&mut self, payload: &[u8], reply: &mut Vec<u8>);
+}
 
 /// Anything that can turn requests into responses. The event-loop server
 /// owns its service exclusively (single thread), so no `Sync` bound.
@@ -60,6 +96,30 @@ pub trait Service {
     ) -> Option<std::sync::Arc<[u8]>> {
         self.handle_into(req, keep_alive, out);
         None
+    }
+
+    /// Claim (or decline) a request as a push-session endpoint. Checked
+    /// by the driver before normal dispatch; the default keeps every
+    /// existing service session-free.
+    fn session_accept(&mut self, req: &Request) -> SessionAccept {
+        let _ = req;
+        SessionAccept::Decline
+    }
+
+    /// Handle one session message (see [`PushSource::message`]).
+    fn session_message(&mut self, payload: &[u8], reply: &mut Vec<u8>) {
+        let _ = payload;
+        reply.extend_from_slice(br#"{"error":"sessions unsupported"}"#);
+    }
+
+    /// Current push generation (see [`PushSource::generation`]).
+    fn push_generation(&mut self) -> u64 {
+        0
+    }
+
+    /// Render the broadcast payload (see [`PushSource::render`]).
+    fn render_push(&mut self, generation: u64, out: &mut Vec<u8>) {
+        let _ = (generation, out);
     }
 }
 

@@ -51,6 +51,14 @@ impl RequestParser {
         self.buf.len()
     }
 
+    /// Take ownership of any unconsumed bytes, leaving the parser empty.
+    /// The WebSocket upgrade path uses this: bytes a client pipelined
+    /// behind its handshake request are the first frames of the session
+    /// and must seed the frame decoder, not rot in the HTTP parser.
+    pub fn take_buffered(&mut self) -> Vec<u8> {
+        std::mem::take(&mut self.buf)
+    }
+
     /// Try to extract the next complete request. `Ok(None)` means "need
     /// more bytes". Consumed bytes are removed from the buffer, so this can
     /// be called repeatedly to drain pipelined requests.

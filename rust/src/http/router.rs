@@ -6,7 +6,7 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use super::types::{Method, Request, Response};
-use super::Service;
+use super::{ws, PushSource, Service, SessionAccept};
 use crate::coordinator::telemetry::{route_class, DriverTelemetry};
 
 /// Captured path parameters (`/experiment/:id` matching `/experiment/3`
@@ -67,11 +67,24 @@ pub struct Router {
     routes: Vec<(Route, Handler)>,
     fast: Option<FastHandler>,
     telemetry: Option<DriverTelemetry>,
+    push: Option<Box<dyn PushSource>>,
 }
 
 impl Router {
     pub fn new() -> Router {
-        Router { routes: Vec::new(), fast: None, telemetry: None }
+        Router {
+            routes: Vec::new(),
+            fast: None,
+            telemetry: None,
+            push: None,
+        }
+    }
+
+    /// Install the push-protocol source: the router then claims the
+    /// WebSocket (`/experiment/session`) and SSE (`/experiment/stream`)
+    /// endpoints for the connection driver's session machinery.
+    pub fn set_push(&mut self, source: Box<dyn PushSource>) {
+        self.push = Some(source);
     }
 
     /// Install the event-loop fast path. The hook must be behaviorally
@@ -284,6 +297,35 @@ impl Service for Router {
             );
         }
         None
+    }
+
+    fn session_accept(&mut self, req: &Request) -> SessionAccept {
+        if self.push.is_none() {
+            return SessionAccept::Decline;
+        }
+        match req.path.as_str() {
+            ws::WS_PATH => SessionAccept::Ws,
+            ws::SSE_PATH if req.method == Method::Get => SessionAccept::Sse,
+            _ => SessionAccept::Decline,
+        }
+    }
+
+    fn session_message(&mut self, payload: &[u8], reply: &mut Vec<u8>) {
+        match &mut self.push {
+            Some(source) => source.message(payload, reply),
+            None => reply
+                .extend_from_slice(br#"{"error":"sessions unsupported"}"#),
+        }
+    }
+
+    fn push_generation(&mut self) -> u64 {
+        self.push.as_mut().map_or(0, |source| source.generation())
+    }
+
+    fn render_push(&mut self, generation: u64, out: &mut Vec<u8>) {
+        if let Some(source) = &mut self.push {
+            source.render(generation, out);
+        }
     }
 }
 

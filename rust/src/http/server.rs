@@ -17,7 +17,8 @@ use std::time::{Duration, Instant};
 
 use super::parse::RequestParser;
 use super::types::Response;
-use super::Service;
+use super::ws::{self, WsMsg, WsViolation};
+use super::{Service, SessionAccept};
 use crate::coordinator::telemetry::DriverTelemetry;
 use crate::eventloop::{
     self, accept_nonblocking, Epoll, Event, Interest, Waker,
@@ -32,6 +33,12 @@ pub(crate) const TOKEN_BASE: u64 = 2;
 /// renders allocation-free once warm, small enough to keep thousands of
 /// idle keep-alive connections cheap.
 const RETAINED_OUT_CAP: usize = 64 * 1024;
+
+/// Sentinel for "this session has never been pushed to": forces the
+/// next [`ConnDriver::push_sessions`] pass to send the current payload
+/// (the chromosome batch a volunteer receives on connect). Real
+/// generations count up from zero and never reach it.
+const STALE_GEN: u64 = u64::MAX;
 
 /// Tunables for the event loop.
 #[derive(Debug, Clone)]
@@ -72,8 +79,32 @@ pub struct ServerStats {
     pub parse_errors: AtomicU64,
     /// Outbound `write(2)`/`writev(2)` syscalls issued (including ones
     /// that returned EAGAIN). The load generator divides this by
-    /// `requests` to assert the one-syscall-per-response budget.
+    /// `requests` to assert the one-syscall-per-response budget. The
+    /// session soak watches its delta over an idle window to assert the
+    /// ~0-syscalls-per-idle-session budget.
     pub write_syscalls: AtomicU64,
+    /// Push broadcast frames sent to live sessions.
+    pub push_frames: AtomicU64,
+    /// Sessions ever established (WebSocket upgrades + SSE streams).
+    pub sessions_opened: AtomicU64,
+    /// Sessions that ended outside a drain (peer close, sweep, error).
+    pub sessions_closed: AtomicU64,
+    /// Sessions handed a close-going-away frame (or SSE bye event) by a
+    /// graceful shutdown drain. The soak gate asserts
+    /// `opened == drained + closed` — nothing silently dropped.
+    pub sessions_drained: AtomicU64,
+}
+
+/// What a connection currently speaks. `Http` is the request/response
+/// steady state every connection starts in; an accepted upgrade flips it
+/// to a long-lived push session that bypasses the request parser.
+enum ConnMode {
+    Http,
+    /// A WebSocket session: `gen` is the last push generation written to
+    /// this session (STALE_GEN until the first push).
+    Ws { decoder: ws::FrameDecoder, gen: u64, opened: Instant },
+    /// An SSE fallback stream (one-way; client bytes are discarded).
+    Sse { gen: u64, opened: Instant },
 }
 
 struct Conn {
@@ -84,11 +115,14 @@ struct Conn {
     /// Shared response body logically appended *after* `out`: the
     /// vectored fast path parks the cached body here and `flush` gathers
     /// `out[out_pos..] ++ tail` into one `writev(2)`. The `usize` is the
-    /// send progress within the body.
+    /// send progress within the body. Push broadcasts reuse the same
+    /// parking spot: the per-generation frame is rendered once and
+    /// shared across every session as an `Arc`.
     tail: Option<(Arc<[u8]>, usize)>,
     last_active: Instant,
     close_after_write: bool,
     want_write: bool,
+    mode: ConnMode,
 }
 
 impl Conn {
@@ -102,7 +136,12 @@ impl Conn {
             last_active: Instant::now(),
             close_after_write: false,
             want_write: false,
+            mode: ConnMode::Http,
         }
+    }
+
+    fn is_session(&self) -> bool {
+        !matches!(self.mode, ConnMode::Http)
     }
 
     fn pending_out(&self) -> bool {
@@ -131,6 +170,17 @@ pub(crate) struct ConnDriver {
     read_buf: Vec<u8>,
     config: ServerConfig,
     last_sweep: Instant,
+    /// Live push sessions (WebSocket + SSE) among `conns`.
+    sessions: usize,
+    /// The broadcast payload for one generation, rendered once and
+    /// shared across all sessions: (generation, WebSocket text frame,
+    /// SSE event chunk).
+    push_cache: Option<(u64, Arc<[u8]>, Arc<[u8]>)>,
+    /// The generation every live session has already been sent.
+    /// Equality with the service's current generation is the whole idle
+    /// steady state: one virtual call + one compare per tick, zero
+    /// syscalls, zero allocations, regardless of session count.
+    pushed_gen: u64,
 }
 
 impl ConnDriver {
@@ -141,6 +191,9 @@ impl ConnDriver {
             read_buf: vec![0u8; 64 * 1024],
             config,
             last_sweep: Instant::now(),
+            sessions: 0,
+            push_cache: None,
+            pushed_gen: STALE_GEN,
         }
     }
 
@@ -198,7 +251,9 @@ impl ConnDriver {
     ) {
         let token = ev.token;
         let mut drop_conn = ev.closed;
+        let mut became_session = false;
         if let Some(conn) = self.conns.get_mut(&token) {
+            let was_session = conn.is_session();
             if ev.readable && !drop_conn {
                 drop_conn |= Self::handle_readable(
                     conn,
@@ -213,17 +268,52 @@ impl ConnDriver {
             if !drop_conn {
                 Self::update_interest(epoll, token, conn);
             }
+            became_session = !was_session && conn.is_session();
+        }
+        if became_session {
+            // Count it even if it drops in the same event (remove_conn
+            // decrements), and mark the broadcast state stale so the
+            // next push pass delivers the current payload to it.
+            self.sessions += 1;
+            self.pushed_gen = STALE_GEN;
+            stats.sessions_opened.fetch_add(1, Ordering::Relaxed);
+            self.publish_sessions();
         }
         if drop_conn {
-            if let Some(conn) = self.conns.remove(&token) {
-                epoll.remove(conn.stream.as_raw_fd());
+            self.remove_conn(epoll, token, stats);
+        }
+    }
+
+    /// Remove a connection, recording session bookkeeping (lifetime
+    /// histogram, gauge, close counter) when it was a push session.
+    fn remove_conn(&mut self, epoll: &Epoll, token: u64, stats: &ServerStats) {
+        if let Some(conn) = self.conns.remove(&token) {
+            epoll.remove(conn.stream.as_raw_fd());
+            if let ConnMode::Ws { opened, .. }
+            | ConnMode::Sse { opened, .. } = &conn.mode
+            {
+                self.sessions -= 1;
+                stats.sessions_closed.fetch_add(1, Ordering::Relaxed);
+                if let Some(t) = &self.config.telemetry {
+                    t.record_session_lifetime(opened.elapsed());
+                }
+                self.publish_sessions();
             }
-            self.publish_conns();
+        }
+        self.publish_conns();
+    }
+
+    /// Publish the live session gauge (no-op without telemetry).
+    fn publish_sessions(&self) {
+        if let Some(t) = &self.config.telemetry {
+            t.set_ws_sessions(self.sessions as u64);
         }
     }
 
     /// Drop connections idle past the configured timeout. Rate-limited
     /// internally to one pass per second; call freely every loop tick.
+    /// Push sessions are exempt: they are idle by design between epoch
+    /// transitions and are dropped only by peer close or a drain.
     pub(crate) fn sweep_idle(&mut self, epoll: &Epoll) {
         if self.last_sweep.elapsed() < Duration::from_secs(1) {
             return;
@@ -239,7 +329,9 @@ impl ConnDriver {
             .conns
             .iter()
             .filter(|(_, c)| {
-                now.duration_since(c.last_active) > self.config.idle_timeout
+                !c.is_session()
+                    && now.duration_since(c.last_active)
+                        > self.config.idle_timeout
             })
             .map(|(t, _)| *t)
             .collect();
@@ -254,7 +346,9 @@ impl ConnDriver {
         }
     }
 
-    /// Read everything available, run the service over complete requests.
+    /// Read everything available, then process it per connection mode:
+    /// HTTP requests through the service, WebSocket frames through the
+    /// session message path, SSE input discarded (one-way stream).
     /// Returns true if the connection should be dropped.
     fn handle_readable<S: Service>(
         conn: &mut Conn,
@@ -266,16 +360,90 @@ impl ConnDriver {
         loop {
             match conn.stream.read(read_buf) {
                 Ok(0) => return true, // peer closed
-                Ok(n) => conn.parser.feed(&read_buf[..n]),
+                Ok(n) => match &mut conn.mode {
+                    ConnMode::Http => conn.parser.feed(&read_buf[..n]),
+                    ConnMode::Ws { decoder, .. } => {
+                        decoder.feed(&read_buf[..n])
+                    }
+                    ConnMode::Sse { .. } => {} // one-way: discard
+                },
                 Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
                 Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
                 Err(_) => return true,
             }
         }
+        match conn.mode {
+            ConnMode::Http => Self::process_http(conn, service, stats),
+            ConnMode::Ws { .. } => Self::process_ws(conn, service, stats),
+            ConnMode::Sse { .. } => false,
+        }
+    }
+
+    /// Drain complete HTTP requests through the service. A request the
+    /// service claims as a session endpoint switches the connection mode
+    /// instead of producing a normal response.
+    fn process_http<S: Service>(
+        conn: &mut Conn,
+        service: &mut S,
+        stats: &ServerStats,
+    ) -> bool {
         loop {
             match conn.parser.next_request() {
                 Ok(Some(req)) => {
                     stats.requests.fetch_add(1, Ordering::Relaxed);
+                    match service.session_accept(&req) {
+                        SessionAccept::Ws => {
+                            conn.flatten_tail();
+                            match ws::validate_upgrade(&req) {
+                                Ok(accept) => {
+                                    ws::write_handshake_response(
+                                        &mut conn.out,
+                                        &accept,
+                                    );
+                                    // Bytes pipelined behind the upgrade
+                                    // are the session's first frames.
+                                    let mut decoder =
+                                        ws::FrameDecoder::new(true);
+                                    decoder.feed(
+                                        &conn.parser.take_buffered(),
+                                    );
+                                    conn.mode = ConnMode::Ws {
+                                        decoder,
+                                        gen: STALE_GEN,
+                                        opened: Instant::now(),
+                                    };
+                                    return Self::process_ws(
+                                        conn, service, stats,
+                                    );
+                                }
+                                Err(msg) => {
+                                    // Bad key / non-GET / missing headers:
+                                    // refuse the upgrade and close.
+                                    Response::bad_request(msg)
+                                        .write_to(&mut conn.out, false);
+                                    conn.close_after_write = true;
+                                    return false;
+                                }
+                            }
+                        }
+                        SessionAccept::Sse => {
+                            conn.flatten_tail();
+                            // `Last-Event-ID` resumes a reconnecting
+                            // stream: a client already at the current
+                            // generation gets nothing re-sent.
+                            let last = req
+                                .header("last-event-id")
+                                .and_then(|v| v.parse::<u64>().ok())
+                                .unwrap_or(STALE_GEN);
+                            ws::write_sse_head(&mut conn.out);
+                            conn.mode = ConnMode::Sse {
+                                gen: last,
+                                opened: Instant::now(),
+                            };
+                            return false;
+                        }
+                        SessionAccept::Decline => {}
+                    }
                     let keep = req.keep_alive();
                     // Render straight into the connection's (warm,
                     // capacity-retaining) output buffer; services with a
@@ -312,6 +480,168 @@ impl ConnDriver {
             }
         }
         false
+    }
+
+    /// Drain complete WebSocket messages: data frames are session
+    /// messages (pushed PUTs) answered in-order on the same connection,
+    /// pings get pongs, a close or protocol violation answers with the
+    /// appropriate close frame and ends the session.
+    fn process_ws<S: Service>(
+        conn: &mut Conn,
+        service: &mut S,
+        stats: &ServerStats,
+    ) -> bool {
+        loop {
+            // Re-borrow the decoder each pass: the arms below need the
+            // whole connection (output buffer, tail) mutably.
+            let step = match &mut conn.mode {
+                ConnMode::Ws { decoder, .. } => decoder.next_msg(),
+                _ => return false,
+            };
+            match step {
+                Ok(Some(WsMsg::Text(payload)))
+                | Ok(Some(WsMsg::Binary(payload))) => {
+                    stats.requests.fetch_add(1, Ordering::Relaxed);
+                    let mut reply = Vec::new();
+                    service.session_message(&payload, &mut reply);
+                    conn.flatten_tail();
+                    ws::encode_frame(&mut conn.out, ws::OP_TEXT, &reply);
+                }
+                Ok(Some(WsMsg::Ping(payload))) => {
+                    conn.flatten_tail();
+                    ws::encode_frame(&mut conn.out, ws::OP_PONG, &payload);
+                }
+                Ok(Some(WsMsg::Pong(_))) => {}
+                Ok(Some(WsMsg::Close(_))) => {
+                    conn.flatten_tail();
+                    ws::encode_close_frame(&mut conn.out, ws::CLOSE_NORMAL);
+                    conn.close_after_write = true;
+                    return false;
+                }
+                Ok(None) => return false,
+                Err(WsViolation(code)) => {
+                    conn.flatten_tail();
+                    ws::encode_close_frame(&mut conn.out, code);
+                    conn.close_after_write = true;
+                    return false;
+                }
+            }
+        }
+    }
+
+    /// Broadcast the current push payload to every session that has not
+    /// seen it. The idle steady state — no generation change — is one
+    /// compare and returns without touching any connection, which is
+    /// what the soak gate's ~0-syscalls-per-idle-session budget
+    /// measures. On a change the payload is rendered once, wrapped once
+    /// per transport (WebSocket frame / SSE event), and parked as each
+    /// stale session's shared writev tail.
+    pub(crate) fn push_sessions<S: Service>(
+        &mut self,
+        epoll: &Epoll,
+        service: &mut S,
+        stats: &ServerStats,
+    ) {
+        if self.sessions == 0 {
+            return;
+        }
+        let generation = service.push_generation();
+        if self.pushed_gen == generation {
+            return;
+        }
+        if self.push_cache.as_ref().map(|(g, _, _)| *g) != Some(generation)
+        {
+            let mut payload = Vec::new();
+            service.render_push(generation, &mut payload);
+            let mut ws_frame = Vec::new();
+            ws::encode_frame(&mut ws_frame, ws::OP_TEXT, &payload);
+            let mut sse_chunk = Vec::new();
+            ws::write_sse_event(&mut sse_chunk, generation, &payload);
+            self.push_cache =
+                Some((generation, ws_frame.into(), sse_chunk.into()));
+        }
+        let (_, ws_frame, sse_chunk) =
+            self.push_cache.as_ref().expect("cache just filled").clone();
+        let mut dead: Vec<u64> = Vec::new();
+        let mut pushed = 0u64;
+        for (&token, conn) in self.conns.iter_mut() {
+            let (frame, seen) = match &mut conn.mode {
+                ConnMode::Ws { gen, .. } => (&ws_frame, gen),
+                ConnMode::Sse { gen, .. } => (&sse_chunk, gen),
+                ConnMode::Http => continue,
+            };
+            if *seen == generation {
+                continue;
+            }
+            *seen = generation;
+            conn.flatten_tail();
+            conn.tail = Some((frame.clone(), 0));
+            pushed += 1;
+            if Self::flush(conn, stats) {
+                dead.push(token);
+            } else {
+                Self::update_interest(epoll, token, conn);
+            }
+        }
+        if pushed > 0 {
+            stats.push_frames.fetch_add(pushed, Ordering::Relaxed);
+            if let Some(t) = &self.config.telemetry {
+                t.inc_push_frames(pushed);
+            }
+        }
+        for token in dead {
+            self.remove_conn(epoll, token, stats);
+        }
+        self.pushed_gen = generation;
+    }
+
+    /// Graceful shutdown drain: every live session gets a
+    /// close-going-away frame (SSE: a `bye` event) flushed out before
+    /// its socket drops, so volunteers see an orderly end instead of a
+    /// reset. Bounded by a short deadline; HTTP connections are
+    /// untouched (they end with the process as before).
+    pub(crate) fn drain_sessions(&mut self, stats: &ServerStats) {
+        if self.sessions == 0 {
+            return;
+        }
+        let deadline = Instant::now() + Duration::from_secs(2);
+        for conn in self.conns.values_mut() {
+            match &conn.mode {
+                ConnMode::Http => continue,
+                ConnMode::Ws { .. } => {
+                    conn.flatten_tail();
+                    ws::encode_close_frame(
+                        &mut conn.out,
+                        ws::CLOSE_GOING_AWAY,
+                    );
+                }
+                ConnMode::Sse { .. } => {
+                    conn.flatten_tail();
+                    ws::write_sse_bye(&mut conn.out);
+                }
+            }
+            while conn.pending_out() {
+                if Self::flush(conn, stats) {
+                    break;
+                }
+                if conn.pending_out() {
+                    if Instant::now() >= deadline {
+                        break;
+                    }
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+            }
+            if let ConnMode::Ws { opened, .. }
+            | ConnMode::Sse { opened, .. } = &conn.mode
+            {
+                stats.sessions_drained.fetch_add(1, Ordering::Relaxed);
+                if let Some(t) = &self.config.telemetry {
+                    t.record_session_lifetime(opened.elapsed());
+                }
+            }
+        }
+        self.sessions = 0;
+        self.publish_sessions();
     }
 
     /// Flush pending output — the contiguous buffer plus any parked
@@ -398,6 +728,14 @@ impl Server {
     }
 
     pub fn bind_with(addr: &str, config: ServerConfig) -> io::Result<Server> {
+        // The server's own half of the fd budget: a standalone `nodio
+        // server` process inherits the default soft NOFILE limit, which
+        // a few-thousand-connection soak blows through even when the
+        // load generator raised its own. Best-effort — the clamp to the
+        // hard limit never lowers anything.
+        let _ = eventloop::raise_nofile_limit(
+            config.max_connections as u64 * 2 + 64,
+        );
         let listener = TcpListener::bind(addr)?;
         listener.set_nonblocking(true)?;
         let epoll = Epoll::new()?;
@@ -451,8 +789,15 @@ impl Server {
                     ),
                 }
             }
+            // Broadcast to push sessions in the same tick as the event
+            // that advanced the generation (a solving PUT reaches every
+            // session before the next epoll_wait).
+            driver.push_sessions(&self.epoll, &mut service, &self.stats);
             driver.sweep_idle(&self.epoll);
         }
+        // Orderly shutdown: sessions get a close-going-away frame
+        // instead of a dropped socket.
+        driver.drain_sessions(&self.stats);
         Ok(())
     }
 
@@ -552,6 +897,12 @@ pub struct ServerHandle {
 impl ServerHandle {
     pub fn stats(&self) -> &ServerStats {
         &self.stats
+    }
+
+    /// Shared stats handle that stays readable after [`Self::stop`]
+    /// consumes the handle (drain counters are written during stop).
+    pub fn stats_arc(&self) -> Arc<ServerStats> {
+        self.stats.clone()
     }
 
     pub fn url(&self) -> String {
@@ -864,6 +1215,355 @@ mod tests {
         req.body = vec![b'x'; 1_000_000];
         let resp = client.send(&req).unwrap();
         assert_eq!(resp.body, b"1000000");
+        handle.stop();
+    }
+
+    // ------------------------------------------------- push sessions
+
+    use crate::http::ws::{WsClient, WsMsg};
+
+    /// A push-capable test service: session messages are acked back,
+    /// the push generation is a shared atomic the test bumps.
+    struct PushEcho {
+        generation: Arc<AtomicU64>,
+    }
+
+    impl Service for PushEcho {
+        fn handle(&mut self, _req: &Request) -> Response {
+            Response::ok().with_text("http")
+        }
+
+        fn session_accept(&mut self, req: &Request) -> SessionAccept {
+            match req.path.as_str() {
+                ws::WS_PATH => SessionAccept::Ws,
+                ws::SSE_PATH if req.method == Method::Get => {
+                    SessionAccept::Sse
+                }
+                _ => SessionAccept::Decline,
+            }
+        }
+
+        fn session_message(&mut self, payload: &[u8], reply: &mut Vec<u8>) {
+            reply.extend_from_slice(b"ack:");
+            reply.extend_from_slice(payload);
+        }
+
+        fn push_generation(&mut self) -> u64 {
+            self.generation.load(Ordering::Relaxed)
+        }
+
+        fn render_push(&mut self, generation: u64, out: &mut Vec<u8>) {
+            out.extend_from_slice(b"{\"type\":\"push\",\"gen\":");
+            crate::http::types::push_u64(out, generation);
+            out.push(b'}');
+        }
+    }
+
+    fn spawn_push_server() -> (ServerHandle, Arc<AtomicU64>) {
+        let generation = Arc::new(AtomicU64::new(0));
+        let handle = {
+            let generation = generation.clone();
+            Server::spawn("127.0.0.1:0", move || PushEcho { generation })
+                .unwrap()
+        };
+        (handle, generation)
+    }
+
+    #[test]
+    fn ws_session_gets_initial_push_and_message_acks() {
+        let (handle, _gen) = spawn_push_server();
+        let mut ws = WsClient::connect(
+            handle.addr,
+            ws::WS_PATH,
+            Duration::from_secs(5),
+        )
+        .unwrap();
+        // A fresh session receives the current payload unprompted (the
+        // volunteer's chromosome batch on connect).
+        assert_eq!(
+            ws.recv().unwrap(),
+            Some(WsMsg::Text(br#"{"type":"push","gen":0}"#.to_vec()))
+        );
+        ws.send_text(b"put-1").unwrap();
+        assert_eq!(
+            ws.recv().unwrap(),
+            Some(WsMsg::Text(b"ack:put-1".to_vec()))
+        );
+        assert_eq!(
+            handle.stats().sessions_opened.load(Ordering::Relaxed),
+            1
+        );
+        handle.stop();
+    }
+
+    #[test]
+    fn generation_bump_broadcasts_to_ws_and_sse() {
+        let (handle, generation) = spawn_push_server();
+        let mut ws = WsClient::connect(
+            handle.addr,
+            ws::WS_PATH,
+            Duration::from_secs(5),
+        )
+        .unwrap();
+        assert!(ws.recv().unwrap().is_some()); // initial gen-0 push
+
+        // SSE client that has already seen generation 0 reconnects with
+        // Last-Event-ID and must NOT get it re-sent.
+        let mut sse = std::net::TcpStream::connect(handle.addr).unwrap();
+        use std::io::{Read, Write};
+        sse.write_all(
+            format!(
+                "GET {} HTTP/1.1\r\nlast-event-id: 0\r\n\r\n",
+                ws::SSE_PATH
+            )
+            .as_bytes(),
+        )
+        .unwrap();
+        sse.set_read_timeout(Some(Duration::from_millis(600))).unwrap();
+        let mut got = Vec::new();
+        let mut buf = [0u8; 4096];
+        while let Ok(n) = sse.read(&mut buf) {
+            if n == 0 {
+                break;
+            }
+            got.extend_from_slice(&buf[..n]);
+        }
+        let text = String::from_utf8_lossy(&got).to_string();
+        assert!(text.starts_with("HTTP/1.1 200 OK"), "{text}");
+        assert!(
+            text.contains("content-type: text/event-stream"),
+            "{text}"
+        );
+        assert!(!text.contains("data:"), "gen 0 re-sent: {text}");
+
+        // Bump: both transports receive exactly the new payload.
+        generation.store(1, Ordering::Relaxed);
+        assert_eq!(
+            ws.recv().unwrap(),
+            Some(WsMsg::Text(br#"{"type":"push","gen":1}"#.to_vec()))
+        );
+        let mut got = Vec::new();
+        while let Ok(n) = sse.read(&mut buf) {
+            if n == 0 {
+                break;
+            }
+            got.extend_from_slice(&buf[..n]);
+        }
+        let text = String::from_utf8_lossy(&got);
+        assert!(
+            text.contains("id: 1\ndata: {\"type\":\"push\",\"gen\":1}"),
+            "{text}"
+        );
+        assert_eq!(
+            handle.stats().push_frames.load(Ordering::Relaxed) >= 3,
+            true
+        );
+        handle.stop();
+    }
+
+    #[test]
+    fn bad_websocket_key_gets_400_and_close() {
+        let (handle, _gen) = spawn_push_server();
+        let mut raw = std::net::TcpStream::connect(handle.addr).unwrap();
+        use std::io::{Read, Write};
+        raw.write_all(
+            format!(
+                "GET {} HTTP/1.1\r\nupgrade: websocket\r\n\
+                 connection: upgrade\r\nsec-websocket-version: 13\r\n\
+                 sec-websocket-key: not-base64!\r\n\r\n",
+                ws::WS_PATH
+            )
+            .as_bytes(),
+        )
+        .unwrap();
+        let mut response = String::new();
+        raw.read_to_string(&mut response).unwrap(); // server closes
+        assert!(response.starts_with("HTTP/1.1 400"), "{response}");
+        assert_eq!(
+            handle.stats().sessions_opened.load(Ordering::Relaxed),
+            0
+        );
+        handle.stop();
+    }
+
+    #[test]
+    fn non_get_upgrade_gets_400() {
+        let (handle, _gen) = spawn_push_server();
+        let mut raw = std::net::TcpStream::connect(handle.addr).unwrap();
+        use std::io::{Read, Write};
+        raw.write_all(
+            format!(
+                "PUT {} HTTP/1.1\r\nupgrade: websocket\r\n\
+                 connection: upgrade\r\nsec-websocket-version: 13\r\n\
+                 sec-websocket-key: dGhlIHNhbXBsZSBub25jZQ==\r\n\
+                 content-length: 0\r\n\r\n",
+                ws::WS_PATH
+            )
+            .as_bytes(),
+        )
+        .unwrap();
+        let mut response = String::new();
+        raw.read_to_string(&mut response).unwrap();
+        assert!(response.starts_with("HTTP/1.1 400"), "{response}");
+        handle.stop();
+    }
+
+    #[test]
+    fn unmasked_client_frame_is_closed_with_1002() {
+        let (handle, _gen) = spawn_push_server();
+        let mut raw = std::net::TcpStream::connect(handle.addr).unwrap();
+        use std::io::{Read, Write};
+        raw.write_all(
+            format!(
+                "GET {} HTTP/1.1\r\nupgrade: websocket\r\n\
+                 connection: upgrade\r\nsec-websocket-version: 13\r\n\
+                 sec-websocket-key: dGhlIHNhbXBsZSBub25jZQ==\r\n\r\n",
+                ws::WS_PATH
+            )
+            .as_bytes(),
+        )
+        .unwrap();
+        // Send an UNMASKED text frame — a protocol violation for
+        // client-to-server frames.
+        let mut frame = Vec::new();
+        ws::encode_frame(&mut frame, ws::OP_TEXT, b"cheeky");
+        raw.write_all(&frame).unwrap();
+        let mut wire = Vec::new();
+        raw.read_to_end(&mut wire).unwrap(); // server closes after 1002
+        let head_end = wire
+            .windows(4)
+            .position(|w| w == b"\r\n\r\n")
+            .expect("handshake head")
+            + 4;
+        assert!(
+            String::from_utf8_lossy(&wire[..head_end])
+                .starts_with("HTTP/1.1 101"),
+            "upgrade should succeed before the violation"
+        );
+        // Skip any push frame; the final frame must be close/1002.
+        let mut dec = ws::FrameDecoder::new(false);
+        dec.feed(&wire[head_end..]);
+        let mut last = None;
+        while let Ok(Some(msg)) = dec.next_msg() {
+            last = Some(msg);
+        }
+        assert_eq!(
+            last,
+            Some(WsMsg::Close(ws::CLOSE_PROTOCOL_ERROR)),
+            "expected a close-1002 frame"
+        );
+        handle.stop();
+    }
+
+    #[test]
+    fn frame_pipelined_behind_upgrade_is_not_lost() {
+        let (handle, _gen) = spawn_push_server();
+        let mut raw = std::net::TcpStream::connect(handle.addr).unwrap();
+        use std::io::{Read, Write};
+        // Handshake and the first (masked) frame in ONE segment: the
+        // leftover parser bytes must seed the frame decoder.
+        let mut wire = format!(
+            "GET {} HTTP/1.1\r\nupgrade: websocket\r\n\
+             connection: upgrade\r\nsec-websocket-version: 13\r\n\
+             sec-websocket-key: dGhlIHNhbXBsZSBub25jZQ==\r\n\r\n",
+            ws::WS_PATH
+        )
+        .into_bytes();
+        ws::encode_masked_frame(&mut wire, ws::OP_TEXT, b"early", [7, 7, 7, 7]);
+        raw.write_all(&wire).unwrap();
+        raw.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        let mut got = Vec::new();
+        let mut buf = [0u8; 4096];
+        let deadline = Instant::now() + Duration::from_secs(5);
+        let acked = loop {
+            match raw.read(&mut buf) {
+                Ok(0) => break false,
+                Ok(n) => got.extend_from_slice(&buf[..n]),
+                Err(_) => break false,
+            }
+            if let Some(head_end) =
+                got.windows(4).position(|w| w == b"\r\n\r\n")
+            {
+                let mut dec = ws::FrameDecoder::new(false);
+                dec.feed(&got[head_end + 4..]);
+                let mut seen_ack = false;
+                while let Ok(Some(msg)) = dec.next_msg() {
+                    if msg == WsMsg::Text(b"ack:early".to_vec()) {
+                        seen_ack = true;
+                    }
+                }
+                if seen_ack {
+                    break true;
+                }
+            }
+            if Instant::now() > deadline {
+                break false;
+            }
+        };
+        assert!(acked, "pipelined frame was lost in the upgrade");
+        handle.stop();
+    }
+
+    #[test]
+    fn shutdown_drains_sessions_with_going_away() {
+        let (handle, _gen) = spawn_push_server();
+        let mut ws_a = WsClient::connect(
+            handle.addr,
+            ws::WS_PATH,
+            Duration::from_secs(5),
+        )
+        .unwrap();
+        let mut ws_b = WsClient::connect(
+            handle.addr,
+            ws::WS_PATH,
+            Duration::from_secs(5),
+        )
+        .unwrap();
+        assert!(ws_a.recv().unwrap().is_some()); // initial pushes
+        assert!(ws_b.recv().unwrap().is_some());
+        let stats = handle.stats.clone();
+        handle.stop(); // joins the loop; drain runs before exit
+        for ws_client in [&mut ws_a, &mut ws_b] {
+            let msg = ws_client.recv().unwrap();
+            assert_eq!(
+                msg,
+                Some(WsMsg::Close(ws::CLOSE_GOING_AWAY)),
+                "session dropped without a going-away close"
+            );
+        }
+        assert_eq!(stats.sessions_drained.load(Ordering::Relaxed), 2);
+        assert_eq!(stats.sessions_closed.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn idle_ws_session_survives_the_idle_sweep() {
+        let config = ServerConfig {
+            idle_timeout: Duration::from_millis(200),
+            ..ServerConfig::default()
+        };
+        let generation = Arc::new(AtomicU64::new(0));
+        let handle = {
+            let generation = generation.clone();
+            Server::spawn_with("127.0.0.1:0", config, move || PushEcho {
+                generation,
+            })
+            .unwrap()
+        };
+        let mut ws = WsClient::connect(
+            handle.addr,
+            ws::WS_PATH,
+            Duration::from_secs(5),
+        )
+        .unwrap();
+        assert!(ws.recv().unwrap().is_some());
+        // Far past the idle timeout plus a sweep pass: a polling conn
+        // would be gone, a session must still answer.
+        std::thread::sleep(Duration::from_millis(1600));
+        ws.send_text(b"still-here").unwrap();
+        assert_eq!(
+            ws.recv().unwrap(),
+            Some(WsMsg::Text(b"ack:still-here".to_vec()))
+        );
         handle.stop();
     }
 }

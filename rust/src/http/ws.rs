@@ -1,0 +1,833 @@
+//! RFC 6455 WebSocket + SSE wire support for the push protocol.
+//!
+//! The volunteer protocol's push mode upgrades a plain pool connection
+//! into a long-lived session: the server pushes epoch transitions and
+//! chromosome batches instead of volunteers polling `GET
+//! /experiment/random`. This module is the wire layer only — handshake
+//! (with an in-repo SHA-1 + base64, no dependencies), server/client
+//! frame codecs, the SSE fallback chunk format, and a small blocking
+//! [`WsClient`] used by push-mode volunteers, the swarm sim and the
+//! load generator. Session state machines live in the connection
+//! driver (`super::server`).
+
+use std::io::{self, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::Duration;
+
+use super::types::{Method, Request};
+
+/// RFC 6455 §1.3 handshake GUID.
+pub const WS_GUID: &str = "258EAFA5-E914-47DA-95CA-C5AB0DC85B11";
+
+/// The WebSocket session endpoint volunteers upgrade on.
+pub const WS_PATH: &str = "/experiment/session";
+/// The SSE fallback stream for clients that cannot upgrade.
+pub const SSE_PATH: &str = "/experiment/stream";
+
+/// Frames larger than this are refused with close code 1009: push
+/// payloads and chromosome PUTs are all well under the HTTP body limit.
+pub const MAX_FRAME_PAYLOAD: usize = 1024 * 1024;
+
+pub const OP_CONTINUATION: u8 = 0x0;
+pub const OP_TEXT: u8 = 0x1;
+pub const OP_BINARY: u8 = 0x2;
+pub const OP_CLOSE: u8 = 0x8;
+pub const OP_PING: u8 = 0x9;
+pub const OP_PONG: u8 = 0xA;
+
+/// Close codes the driver sends (RFC 6455 §7.4.1).
+pub const CLOSE_NORMAL: u16 = 1000;
+pub const CLOSE_GOING_AWAY: u16 = 1001;
+pub const CLOSE_PROTOCOL_ERROR: u16 = 1002;
+pub const CLOSE_TOO_BIG: u16 = 1009;
+
+// ---------------------------------------------------------------- sha1
+
+/// In-repo SHA-1 (FIPS 180-1), used only for the handshake accept key —
+/// RFC 6455 mandates SHA-1 here and nothing else in the repo needs a
+/// hash, so a 40-line implementation beats a dependency.
+pub fn sha1(data: &[u8]) -> [u8; 20] {
+    let mut h: [u32; 5] =
+        [0x67452301, 0xEFCDAB89, 0x98BADCFE, 0x10325476, 0xC3D2E1F0];
+    let bit_len = (data.len() as u64).wrapping_mul(8);
+    let mut msg = data.to_vec();
+    msg.push(0x80);
+    while msg.len() % 64 != 56 {
+        msg.push(0);
+    }
+    msg.extend_from_slice(&bit_len.to_be_bytes());
+    for chunk in msg.chunks_exact(64) {
+        let mut w = [0u32; 80];
+        for (i, word) in chunk.chunks_exact(4).enumerate() {
+            w[i] = u32::from_be_bytes([word[0], word[1], word[2], word[3]]);
+        }
+        for i in 16..80 {
+            w[i] = (w[i - 3] ^ w[i - 8] ^ w[i - 14] ^ w[i - 16])
+                .rotate_left(1);
+        }
+        let (mut a, mut b, mut c, mut d, mut e) =
+            (h[0], h[1], h[2], h[3], h[4]);
+        for (i, &wi) in w.iter().enumerate() {
+            let (f, k) = match i {
+                0..=19 => ((b & c) | (!b & d), 0x5A827999),
+                20..=39 => (b ^ c ^ d, 0x6ED9EBA1),
+                40..=59 => ((b & c) | (b & d) | (c & d), 0x8F1BBCDC),
+                _ => (b ^ c ^ d, 0xCA62C1D6),
+            };
+            let tmp = a
+                .rotate_left(5)
+                .wrapping_add(f)
+                .wrapping_add(e)
+                .wrapping_add(k)
+                .wrapping_add(wi);
+            e = d;
+            d = c;
+            c = b.rotate_left(30);
+            b = a;
+            a = tmp;
+        }
+        h[0] = h[0].wrapping_add(a);
+        h[1] = h[1].wrapping_add(b);
+        h[2] = h[2].wrapping_add(c);
+        h[3] = h[3].wrapping_add(d);
+        h[4] = h[4].wrapping_add(e);
+    }
+    let mut out = [0u8; 20];
+    for (i, word) in h.iter().enumerate() {
+        out[i * 4..i * 4 + 4].copy_from_slice(&word.to_be_bytes());
+    }
+    out
+}
+
+// -------------------------------------------------------------- base64
+
+const B64_TABLE: &[u8; 64] =
+    b"ABCDEFGHIJKLMNOPQRSTUVWXYZabcdefghijklmnopqrstuvwxyz0123456789+/";
+
+/// Standard base64 with padding (RFC 4648).
+pub fn base64_encode(data: &[u8]) -> String {
+    let mut out = String::with_capacity(data.len().div_ceil(3) * 4);
+    for group in data.chunks(3) {
+        let b0 = group[0] as u32;
+        let b1 = *group.get(1).unwrap_or(&0) as u32;
+        let b2 = *group.get(2).unwrap_or(&0) as u32;
+        let n = (b0 << 16) | (b1 << 8) | b2;
+        out.push(B64_TABLE[(n >> 18) as usize & 63] as char);
+        out.push(B64_TABLE[(n >> 12) as usize & 63] as char);
+        out.push(if group.len() > 1 {
+            B64_TABLE[(n >> 6) as usize & 63] as char
+        } else {
+            '='
+        });
+        out.push(if group.len() > 2 {
+            B64_TABLE[n as usize & 63] as char
+        } else {
+            '='
+        });
+    }
+    out
+}
+
+// ----------------------------------------------------------- handshake
+
+/// Derive the `Sec-WebSocket-Accept` value for a client key.
+pub fn accept_key(key: &str) -> String {
+    let mut seed = Vec::with_capacity(key.len() + WS_GUID.len());
+    seed.extend_from_slice(key.trim().as_bytes());
+    seed.extend_from_slice(WS_GUID.as_bytes());
+    base64_encode(&sha1(&seed))
+}
+
+/// A syntactically valid `Sec-WebSocket-Key`: base64 of exactly 16
+/// random bytes, i.e. 22 base64 characters plus `==` padding.
+fn key_is_well_formed(key: &str) -> bool {
+    let key = key.trim();
+    key.len() == 24
+        && key.ends_with("==")
+        && key[..22]
+            .bytes()
+            .all(|b| b.is_ascii_alphanumeric() || b == b'+' || b == b'/')
+}
+
+/// Validate an HTTP/1.1 Upgrade request against RFC 6455 §4.2.1.
+/// Returns the accept key to echo, or a human-readable refusal (the
+/// driver answers 400 and closes).
+pub fn validate_upgrade(req: &Request) -> Result<String, &'static str> {
+    if req.method != Method::Get {
+        return Err("websocket upgrade requires GET");
+    }
+    let upgrade_ok = req
+        .header("upgrade")
+        .is_some_and(|v| v.eq_ignore_ascii_case("websocket"));
+    if !upgrade_ok {
+        return Err("missing upgrade: websocket");
+    }
+    let conn_ok = req
+        .header("connection")
+        .is_some_and(|v| v.to_ascii_lowercase().contains("upgrade"));
+    if !conn_ok {
+        return Err("missing connection: upgrade");
+    }
+    if req.header("sec-websocket-version") != Some("13") {
+        return Err("unsupported websocket version");
+    }
+    match req.header("sec-websocket-key") {
+        Some(key) if key_is_well_formed(key) => Ok(accept_key(key)),
+        Some(_) => Err("malformed sec-websocket-key"),
+        None => Err("missing sec-websocket-key"),
+    }
+}
+
+/// Append the `101 Switching Protocols` response. Written raw — the
+/// `Response` type's status table has no 101 and a switching response
+/// carries no `content-length`.
+pub fn write_handshake_response(out: &mut Vec<u8>, accept: &str) {
+    out.extend_from_slice(
+        b"HTTP/1.1 101 Switching Protocols\r\n\
+          upgrade: websocket\r\n\
+          connection: upgrade\r\n\
+          sec-websocket-accept: ",
+    );
+    out.extend_from_slice(accept.as_bytes());
+    out.extend_from_slice(b"\r\n\r\n");
+}
+
+/// Append the SSE stream response head: a never-ending `text/event-
+/// stream` body, delimited by connection close (no content-length).
+pub fn write_sse_head(out: &mut Vec<u8>) {
+    out.extend_from_slice(
+        b"HTTP/1.1 200 OK\r\n\
+          content-type: text/event-stream\r\n\
+          cache-control: no-cache\r\n\r\n",
+    );
+}
+
+/// Append one SSE event carrying a single-line `data` payload, with the
+/// push generation as the event id (clients resume via `Last-Event-ID`).
+pub fn write_sse_event(out: &mut Vec<u8>, id: u64, data: &[u8]) {
+    out.extend_from_slice(b"id: ");
+    super::types::push_u64(out, id);
+    out.extend_from_slice(b"\ndata: ");
+    out.extend_from_slice(data);
+    out.extend_from_slice(b"\n\n");
+}
+
+/// The final SSE event a draining server sends before closing — the
+/// stream-level analog of the WebSocket close-going-away frame.
+pub fn write_sse_bye(out: &mut Vec<u8>) {
+    out.extend_from_slice(b"event: bye\ndata: going away\n\n");
+}
+
+// ------------------------------------------------------------- framing
+
+/// Append a server-to-client frame (FIN set, unmasked per RFC 6455 §5.1).
+pub fn encode_frame(out: &mut Vec<u8>, opcode: u8, payload: &[u8]) {
+    out.push(0x80 | (opcode & 0x0F));
+    let len = payload.len();
+    if len < 126 {
+        out.push(len as u8);
+    } else if len <= 0xFFFF {
+        out.push(126);
+        out.extend_from_slice(&(len as u16).to_be_bytes());
+    } else {
+        out.push(127);
+        out.extend_from_slice(&(len as u64).to_be_bytes());
+    }
+    out.extend_from_slice(payload);
+}
+
+/// Append a client-to-server frame (FIN set, masked per RFC 6455 §5.3).
+pub fn encode_masked_frame(
+    out: &mut Vec<u8>,
+    opcode: u8,
+    payload: &[u8],
+    mask: [u8; 4],
+) {
+    out.push(0x80 | (opcode & 0x0F));
+    let len = payload.len();
+    if len < 126 {
+        out.push(0x80 | len as u8);
+    } else if len <= 0xFFFF {
+        out.push(0x80 | 126);
+        out.extend_from_slice(&(len as u16).to_be_bytes());
+    } else {
+        out.push(0x80 | 127);
+        out.extend_from_slice(&(len as u64).to_be_bytes());
+    }
+    out.extend_from_slice(&mask);
+    for (i, &b) in payload.iter().enumerate() {
+        out.push(b ^ mask[i % 4]);
+    }
+}
+
+/// Append a close frame with a status code (server side, unmasked).
+pub fn encode_close_frame(out: &mut Vec<u8>, code: u16) {
+    encode_frame(out, OP_CLOSE, &code.to_be_bytes());
+}
+
+/// One complete message out of the decoder (fragments already joined).
+#[derive(Debug, Clone, PartialEq)]
+pub enum WsMsg {
+    Text(Vec<u8>),
+    Binary(Vec<u8>),
+    Ping(Vec<u8>),
+    Pong(Vec<u8>),
+    /// Peer-initiated close with its status code (1005 when absent).
+    Close(u16),
+}
+
+/// A protocol violation; the carried code is what the close frame the
+/// server answers with must say (1002 protocol error / 1009 too big).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WsViolation(pub u16);
+
+/// Incremental frame decoder holding a rolling input buffer, mirroring
+/// `RequestParser`: feed bytes as they arrive, pull complete messages.
+/// Servers construct it with `require_mask` — an unmasked client frame
+/// is a 1002 violation (RFC 6455 §5.1).
+#[derive(Debug)]
+pub struct FrameDecoder {
+    buf: Vec<u8>,
+    frag: Vec<u8>,
+    frag_opcode: u8,
+    require_mask: bool,
+}
+
+impl FrameDecoder {
+    pub fn new(require_mask: bool) -> FrameDecoder {
+        FrameDecoder {
+            buf: Vec::new(),
+            frag: Vec::new(),
+            frag_opcode: 0,
+            require_mask,
+        }
+    }
+
+    /// Seed/extend the buffer — the upgrade path feeds any bytes left in
+    /// the HTTP parser after the handshake request here, so a client that
+    /// pipelines its first frame behind the upgrade loses nothing.
+    pub fn feed(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    pub fn buffered(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Extract the next complete message. `Ok(None)` means "need more
+    /// bytes" (a frame split across reads stays buffered). Control
+    /// frames may interleave fragmented data frames and are surfaced
+    /// immediately; data fragments are joined until FIN.
+    pub fn next_msg(&mut self) -> Result<Option<WsMsg>, WsViolation> {
+        loop {
+            if self.buf.len() < 2 {
+                return Ok(None);
+            }
+            let b0 = self.buf[0];
+            let b1 = self.buf[1];
+            if b0 & 0x70 != 0 {
+                // RSV bits without a negotiated extension.
+                return Err(WsViolation(CLOSE_PROTOCOL_ERROR));
+            }
+            let fin = b0 & 0x80 != 0;
+            let opcode = b0 & 0x0F;
+            let masked = b1 & 0x80 != 0;
+            if self.require_mask && !masked {
+                return Err(WsViolation(CLOSE_PROTOCOL_ERROR));
+            }
+            let (payload_len, mut header_len) = match b1 & 0x7F {
+                126 => {
+                    if self.buf.len() < 4 {
+                        return Ok(None);
+                    }
+                    (
+                        u16::from_be_bytes([self.buf[2], self.buf[3]])
+                            as usize,
+                        4,
+                    )
+                }
+                127 => {
+                    if self.buf.len() < 10 {
+                        return Ok(None);
+                    }
+                    let mut b = [0u8; 8];
+                    b.copy_from_slice(&self.buf[2..10]);
+                    let n = u64::from_be_bytes(b);
+                    if n > MAX_FRAME_PAYLOAD as u64 {
+                        return Err(WsViolation(CLOSE_TOO_BIG));
+                    }
+                    (n as usize, 10)
+                }
+                n => (n as usize, 2),
+            };
+            if payload_len > MAX_FRAME_PAYLOAD
+                || self.frag.len() + payload_len > MAX_FRAME_PAYLOAD
+            {
+                return Err(WsViolation(CLOSE_TOO_BIG));
+            }
+            let is_control = opcode >= 0x8;
+            if is_control && (!fin || payload_len > 125) {
+                return Err(WsViolation(CLOSE_PROTOCOL_ERROR));
+            }
+            let mask_off = header_len;
+            if masked {
+                header_len += 4;
+            }
+            if self.buf.len() < header_len + payload_len {
+                return Ok(None);
+            }
+            let mut payload =
+                self.buf[header_len..header_len + payload_len].to_vec();
+            if masked {
+                let mut mask = [0u8; 4];
+                mask.copy_from_slice(&self.buf[mask_off..mask_off + 4]);
+                for (i, b) in payload.iter_mut().enumerate() {
+                    *b ^= mask[i % 4];
+                }
+            }
+            self.buf.drain(..header_len + payload_len);
+            match opcode {
+                OP_CONTINUATION => {
+                    if self.frag_opcode == 0 {
+                        return Err(WsViolation(CLOSE_PROTOCOL_ERROR));
+                    }
+                    self.frag.extend_from_slice(&payload);
+                    if fin {
+                        let data = std::mem::take(&mut self.frag);
+                        let op = self.frag_opcode;
+                        self.frag_opcode = 0;
+                        return Ok(Some(if op == OP_TEXT {
+                            WsMsg::Text(data)
+                        } else {
+                            WsMsg::Binary(data)
+                        }));
+                    }
+                }
+                OP_TEXT | OP_BINARY => {
+                    if self.frag_opcode != 0 {
+                        // A new data frame mid-fragmentation.
+                        return Err(WsViolation(CLOSE_PROTOCOL_ERROR));
+                    }
+                    if fin {
+                        return Ok(Some(if opcode == OP_TEXT {
+                            WsMsg::Text(payload)
+                        } else {
+                            WsMsg::Binary(payload)
+                        }));
+                    }
+                    self.frag_opcode = opcode;
+                    self.frag = payload;
+                }
+                OP_CLOSE => {
+                    let code = if payload.len() >= 2 {
+                        u16::from_be_bytes([payload[0], payload[1]])
+                    } else {
+                        1005 // no status present
+                    };
+                    return Ok(Some(WsMsg::Close(code)));
+                }
+                OP_PING => return Ok(Some(WsMsg::Ping(payload))),
+                OP_PONG => return Ok(Some(WsMsg::Pong(payload))),
+                _ => return Err(WsViolation(CLOSE_PROTOCOL_ERROR)),
+            }
+        }
+    }
+}
+
+// -------------------------------------------------------------- client
+
+/// A small blocking WebSocket client: handshake over a fresh TCP
+/// connection, masked frames out, server frames in. Used by push-mode
+/// volunteers, the swarm sim and the load generator's session soak —
+/// never by the server side, which runs the non-blocking driver.
+pub struct WsClient {
+    stream: TcpStream,
+    decoder: FrameDecoder,
+    mask_state: u64,
+    read_buf: Vec<u8>,
+}
+
+impl WsClient {
+    /// Connect and upgrade on `path`. The key is derived from a process
+    /// counter (uniqueness, not secrecy, is what the handshake needs).
+    pub fn connect(
+        addr: SocketAddr,
+        path: &str,
+        timeout: Duration,
+    ) -> io::Result<WsClient> {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        static KEY_SEQ: AtomicU64 = AtomicU64::new(0x9E3779B97F4A7C15);
+        let seq = KEY_SEQ.fetch_add(0x9E3779B97F4A7C15, Ordering::Relaxed);
+        let mut key_bytes = [0u8; 16];
+        key_bytes[..8].copy_from_slice(&seq.to_le_bytes());
+        key_bytes[8..].copy_from_slice(&(!seq).rotate_left(17).to_le_bytes());
+        let key = base64_encode(&key_bytes);
+
+        let stream = TcpStream::connect_timeout(&addr, timeout)?;
+        stream.set_nodelay(true)?;
+        stream.set_read_timeout(Some(timeout))?;
+        let mut client = WsClient {
+            stream,
+            decoder: FrameDecoder::new(false),
+            mask_state: seq | 1,
+            read_buf: vec![0u8; 16 * 1024],
+        };
+        let request = format!(
+            "GET {path} HTTP/1.1\r\nhost: nodio\r\nupgrade: websocket\r\n\
+             connection: upgrade\r\nsec-websocket-version: 13\r\n\
+             sec-websocket-key: {key}\r\n\r\n",
+        );
+        client.stream.write_all(request.as_bytes())?;
+
+        // Read the 101 head; any frame bytes behind it seed the decoder.
+        let mut head = Vec::new();
+        loop {
+            let n = client.stream.read(&mut client.read_buf)?;
+            if n == 0 {
+                return Err(io::Error::other("closed during handshake"));
+            }
+            head.extend_from_slice(&client.read_buf[..n]);
+            if let Some(end) =
+                head.windows(4).position(|w| w == b"\r\n\r\n")
+            {
+                let text = String::from_utf8_lossy(&head[..end]);
+                if !text.starts_with("HTTP/1.1 101") {
+                    return Err(io::Error::other(format!(
+                        "upgrade refused: {}",
+                        text.lines().next().unwrap_or("")
+                    )));
+                }
+                let want = accept_key(&key);
+                let accept_ok = text.lines().any(|l| {
+                    l.to_ascii_lowercase()
+                        .starts_with("sec-websocket-accept:")
+                        && l.split(':').nth(1).map(str::trim)
+                            == Some(want.as_str())
+                });
+                if !accept_ok {
+                    return Err(io::Error::other("bad accept key"));
+                }
+                client.decoder.feed(&head[end + 4..]);
+                return Ok(client);
+            }
+            if head.len() > 16 * 1024 {
+                return Err(io::Error::other("oversized handshake reply"));
+            }
+        }
+    }
+
+    fn next_mask(&mut self) -> [u8; 4] {
+        // xorshift64* — masks need only be unpredictable-ish per frame.
+        let mut x = self.mask_state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.mask_state = x;
+        (x.wrapping_mul(0x2545F4914F6CDD1D) >> 32).to_le_bytes()[..4]
+            .try_into()
+            .expect("4 bytes")
+    }
+
+    pub fn send_text(&mut self, payload: &[u8]) -> io::Result<()> {
+        let mask = self.next_mask();
+        let mut frame = Vec::with_capacity(payload.len() + 14);
+        encode_masked_frame(&mut frame, OP_TEXT, payload, mask);
+        self.stream.write_all(&frame)
+    }
+
+    pub fn send_ping(&mut self, payload: &[u8]) -> io::Result<()> {
+        let mask = self.next_mask();
+        let mut frame = Vec::with_capacity(payload.len() + 14);
+        encode_masked_frame(&mut frame, OP_PING, payload, mask);
+        self.stream.write_all(&frame)
+    }
+
+    /// Send a masked close frame (the client half of a clean shutdown).
+    pub fn send_close(&mut self, code: u16) -> io::Result<()> {
+        let mask = self.next_mask();
+        let mut frame = Vec::new();
+        encode_masked_frame(&mut frame, OP_CLOSE, &code.to_be_bytes(), mask);
+        self.stream.write_all(&frame)
+    }
+
+    /// Blocking receive of the next message; pings are answered with
+    /// pongs internally and not surfaced. Returns `Ok(None)` on a read
+    /// timeout (the configured connect timeout), `Err` on EOF/transport
+    /// failure.
+    pub fn recv(&mut self) -> io::Result<Option<WsMsg>> {
+        loop {
+            match self.decoder.next_msg() {
+                Ok(Some(WsMsg::Ping(p))) => {
+                    let mask = self.next_mask();
+                    let mut frame = Vec::with_capacity(p.len() + 14);
+                    encode_masked_frame(&mut frame, OP_PONG, &p, mask);
+                    self.stream.write_all(&frame)?;
+                }
+                Ok(Some(msg)) => return Ok(Some(msg)),
+                Ok(None) => {}
+                Err(WsViolation(code)) => {
+                    return Err(io::Error::other(format!(
+                        "server protocol violation ({code})"
+                    )))
+                }
+            }
+            match self.stream.read(&mut self.read_buf) {
+                Ok(0) => {
+                    return Err(io::ErrorKind::UnexpectedEof.into());
+                }
+                Ok(n) => {
+                    let (buf, decoder) =
+                        (&self.read_buf[..n], &mut self.decoder);
+                    decoder.feed(buf);
+                }
+                Err(e)
+                    if e.kind() == io::ErrorKind::WouldBlock
+                        || e.kind() == io::ErrorKind::TimedOut =>
+                {
+                    return Ok(None)
+                }
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                Err(e) => return Err(e),
+            }
+        }
+    }
+
+    /// Receive with a one-off read timeout (restores the connect
+    /// timeout afterwards is the caller's concern; volunteers use short
+    /// drains between epochs).
+    pub fn recv_timeout(
+        &mut self,
+        timeout: Duration,
+    ) -> io::Result<Option<WsMsg>> {
+        self.stream.set_read_timeout(Some(timeout.max(
+            Duration::from_millis(1),
+        )))?;
+        self.recv()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sha1_known_vectors() {
+        // FIPS 180-1 appendix examples.
+        let hex = |d: &[u8]| {
+            sha1(d).iter().map(|b| format!("{b:02x}")).collect::<String>()
+        };
+        assert_eq!(hex(b"abc"), "a9993e364706816aba3e25717850c26c9cd0d89d");
+        assert_eq!(
+            hex(b"abcdbcdecdefdefgefghfghighijhijkijkljklmklmnlmnomnopnopq"),
+            "84983e441c3bd26ebaae4aa1f95129e5e54670f1"
+        );
+        assert_eq!(hex(b""), "da39a3ee5e6b4b0d3255bfef95601890afd80709");
+    }
+
+    #[test]
+    fn base64_known_vectors() {
+        // RFC 4648 §10 test vectors.
+        assert_eq!(base64_encode(b""), "");
+        assert_eq!(base64_encode(b"f"), "Zg==");
+        assert_eq!(base64_encode(b"fo"), "Zm8=");
+        assert_eq!(base64_encode(b"foo"), "Zm9v");
+        assert_eq!(base64_encode(b"foob"), "Zm9vYg==");
+        assert_eq!(base64_encode(b"fooba"), "Zm9vYmE=");
+        assert_eq!(base64_encode(b"foobar"), "Zm9vYmFy");
+    }
+
+    #[test]
+    fn rfc6455_accept_key_example() {
+        // The worked example from RFC 6455 §1.3.
+        assert_eq!(
+            accept_key("dGhlIHNhbXBsZSBub25jZQ=="),
+            "s3pPLMBiTxaQ9kYGzzhZRbK+xOo="
+        );
+    }
+
+    #[test]
+    fn upgrade_validation_refuses_bad_requests() {
+        let mut req = Request::new(Method::Get, WS_PATH);
+        req.headers = vec![
+            ("upgrade".into(), "websocket".into()),
+            ("connection".into(), "Upgrade".into()),
+            ("sec-websocket-version".into(), "13".into()),
+            (
+                "sec-websocket-key".into(),
+                "dGhlIHNhbXBsZSBub25jZQ==".into(),
+            ),
+        ];
+        assert!(validate_upgrade(&req).is_ok());
+
+        let mut bad_key = req.clone();
+        bad_key.headers.retain(|(k, _)| k != "sec-websocket-key");
+        bad_key
+            .headers
+            .push(("sec-websocket-key".into(), "short".into()));
+        assert!(validate_upgrade(&bad_key).is_err());
+
+        let mut non_get = req.clone();
+        non_get.method = Method::Put;
+        assert!(validate_upgrade(&non_get).is_err());
+
+        let mut no_upgrade = req.clone();
+        no_upgrade.headers.retain(|(k, _)| k != "upgrade");
+        assert!(validate_upgrade(&no_upgrade).is_err());
+
+        let mut bad_version = req;
+        bad_version
+            .headers
+            .iter_mut()
+            .find(|(k, _)| k == "sec-websocket-version")
+            .unwrap()
+            .1 = "8".into();
+        assert!(validate_upgrade(&bad_version).is_err());
+    }
+
+    #[test]
+    fn masked_frame_round_trip() {
+        let mut wire = Vec::new();
+        encode_masked_frame(&mut wire, OP_TEXT, b"hello push", [1, 2, 3, 4]);
+        let mut dec = FrameDecoder::new(true);
+        dec.feed(&wire);
+        assert_eq!(
+            dec.next_msg().unwrap(),
+            Some(WsMsg::Text(b"hello push".to_vec()))
+        );
+        assert_eq!(dec.next_msg().unwrap(), None);
+    }
+
+    #[test]
+    fn extended_length_round_trips() {
+        for len in [125usize, 126, 127, 65535, 65536, 100_000] {
+            let payload = vec![0xA5u8; len];
+            let mut wire = Vec::new();
+            encode_masked_frame(&mut wire, OP_BINARY, &payload, [9, 8, 7, 6]);
+            let mut dec = FrameDecoder::new(true);
+            dec.feed(&wire);
+            assert_eq!(
+                dec.next_msg().unwrap(),
+                Some(WsMsg::Binary(payload)),
+                "len {len}"
+            );
+        }
+    }
+
+    #[test]
+    fn unmasked_client_frame_is_a_1002_violation() {
+        let mut wire = Vec::new();
+        encode_frame(&mut wire, OP_TEXT, b"unmasked");
+        let mut dec = FrameDecoder::new(true);
+        dec.feed(&wire);
+        assert_eq!(
+            dec.next_msg(),
+            Err(WsViolation(CLOSE_PROTOCOL_ERROR))
+        );
+        // A client-side decoder accepts unmasked server frames.
+        let mut client_dec = FrameDecoder::new(false);
+        client_dec.feed(&wire);
+        assert_eq!(
+            client_dec.next_msg().unwrap(),
+            Some(WsMsg::Text(b"unmasked".to_vec()))
+        );
+    }
+
+    #[test]
+    fn partial_frame_across_reads() {
+        let mut wire = Vec::new();
+        encode_masked_frame(&mut wire, OP_TEXT, b"split me", [4, 3, 2, 1]);
+        let mut dec = FrameDecoder::new(true);
+        for chunk in wire.chunks(3) {
+            assert!(matches!(dec.next_msg(), Ok(None) | Ok(Some(_)))); // never a violation mid-feed
+            dec.feed(chunk);
+        }
+        assert_eq!(
+            dec.next_msg().unwrap(),
+            Some(WsMsg::Text(b"split me".to_vec()))
+        );
+    }
+
+    /// Fragmented text with an interleaved ping: the control frame is
+    /// surfaced between the fragments, the joined message after FIN.
+    #[test]
+    fn fragmented_message_with_interleaved_ping() {
+        let mask = [0x11, 0x22, 0x33, 0x44];
+        let mut wire = Vec::new();
+        // First fragment: FIN clear, opcode text.
+        let mut first = Vec::new();
+        encode_masked_frame(&mut first, OP_TEXT, b"frag-", mask);
+        first[0] &= 0x7F; // clear FIN
+        wire.extend_from_slice(&first);
+        // Interleaved ping.
+        encode_masked_frame(&mut wire, OP_PING, b"hb", mask);
+        // Final continuation.
+        let mut last = Vec::new();
+        encode_masked_frame(&mut last, OP_CONTINUATION, b"mented", mask);
+        wire.extend_from_slice(&last);
+
+        let mut dec = FrameDecoder::new(true);
+        dec.feed(&wire);
+        assert_eq!(dec.next_msg().unwrap(), Some(WsMsg::Ping(b"hb".to_vec())));
+        assert_eq!(
+            dec.next_msg().unwrap(),
+            Some(WsMsg::Text(b"frag-mented".to_vec()))
+        );
+        assert_eq!(dec.next_msg().unwrap(), None);
+    }
+
+    #[test]
+    fn oversized_frame_is_a_1009_violation() {
+        let mut dec = FrameDecoder::new(true);
+        // Header declaring a 2 MiB payload — rejected before any payload
+        // bytes arrive (no buffering of the oversized body).
+        let mut header = vec![0x80 | OP_BINARY, 0x80 | 127];
+        header.extend_from_slice(&(2u64 * 1024 * 1024).to_be_bytes());
+        dec.feed(&header);
+        assert_eq!(dec.next_msg(), Err(WsViolation(CLOSE_TOO_BIG)));
+    }
+
+    #[test]
+    fn close_frame_carries_its_code() {
+        let mut wire = Vec::new();
+        encode_masked_frame(
+            &mut wire,
+            OP_CLOSE,
+            &CLOSE_GOING_AWAY.to_be_bytes(),
+            [5, 6, 7, 8],
+        );
+        let mut dec = FrameDecoder::new(true);
+        dec.feed(&wire);
+        assert_eq!(
+            dec.next_msg().unwrap(),
+            Some(WsMsg::Close(CLOSE_GOING_AWAY))
+        );
+        // Bare close (no payload) maps to 1005.
+        let mut wire = Vec::new();
+        encode_masked_frame(&mut wire, OP_CLOSE, b"", [5, 6, 7, 8]);
+        let mut dec = FrameDecoder::new(true);
+        dec.feed(&wire);
+        assert_eq!(dec.next_msg().unwrap(), Some(WsMsg::Close(1005)));
+    }
+
+    #[test]
+    fn continuation_without_start_is_a_violation() {
+        let mut wire = Vec::new();
+        encode_masked_frame(&mut wire, OP_CONTINUATION, b"orphan", [1, 1, 1, 1]);
+        let mut dec = FrameDecoder::new(true);
+        dec.feed(&wire);
+        assert_eq!(
+            dec.next_msg(),
+            Err(WsViolation(CLOSE_PROTOCOL_ERROR))
+        );
+    }
+
+    #[test]
+    fn sse_event_format() {
+        let mut out = Vec::new();
+        write_sse_event(&mut out, 42, br#"{"experiment":3}"#);
+        assert_eq!(
+            out,
+            b"id: 42\ndata: {\"experiment\":3}\n\n".to_vec()
+        );
+    }
+}

@@ -72,6 +72,9 @@ pub struct SwarmConfig {
     pub gossip_listen: Option<String>,
     /// Outbound federation gossip period (`--gossip-every`).
     pub gossip_every: Duration,
+    /// Volunteers migrate over persistent WebSocket sessions instead of
+    /// per-epoch HTTP polling (`--push` on `nodio swarm`).
+    pub push: bool,
 }
 
 impl Default for SwarmConfig {
@@ -94,6 +97,7 @@ impl Default for SwarmConfig {
             peers: Vec::new(),
             gossip_listen: None,
             gossip_every: Duration::from_millis(250),
+            push: false,
         }
     }
 }
@@ -175,6 +179,7 @@ pub fn run_swarm(config: SwarmConfig) -> Result<SwarmReport> {
             &format!("client-{idx}"),
             u64::MAX,
             slowdown,
+            config.push,
         )
     };
 
@@ -370,6 +375,7 @@ pub fn run_federated_swarm(
             &format!("fed-client-{i}"),
             u64::MAX,
             1.0,
+            config.push,
         ));
     }
 
@@ -491,6 +497,7 @@ pub fn run_kill_resume(
                 &format!("resume-{i}"),
                 u64::MAX,
                 1.0,
+                config.push,
             )
         })
         .collect();
@@ -565,6 +572,32 @@ mod tests {
         assert!(report.time_to_first.is_some());
         assert!(report.total_requests > 0);
         assert_eq!(report.experiment_times.len() as u64, report.solutions);
+    }
+
+    #[test]
+    fn push_swarm_solves_trap40_on_sharded_backend() {
+        // E6 over WebSocket sessions against the sharded coordinator:
+        // pushed PUTs must ride the same provenance/termination path as
+        // polled ones, whichever shard holds the session.
+        let report = run_swarm(SwarmConfig {
+            n_clients: 2,
+            shards: 2,
+            push: true,
+            target_solutions: 1,
+            timeout: Duration::from_secs(120),
+            seed: 19,
+            ..Default::default()
+        })
+        .unwrap();
+        assert!(report.solutions >= 1, "no pushed solution: {report:?}");
+        assert!(report.time_to_first.is_some());
+        assert_eq!(report.experiment_times.len() as u64, report.solutions);
+        let migrations_failed: u64 = report
+            .client_stats
+            .iter()
+            .map(|s| s.migrations_failed)
+            .sum();
+        assert_eq!(migrations_failed, 0, "{report:?}");
     }
 
     #[test]
@@ -762,6 +795,7 @@ mod tests {
                     &format!("trace-ring-{i}"),
                     u64::MAX,
                     1.0,
+                    false,
                 )
             })
             .collect();
@@ -908,6 +942,7 @@ pub fn run_swarm_trace(
                     &format!("trace-{i}"),
                     u64::MAX,
                     slot.session.slowdown,
+                    false,
                 ));
                 spawned += 1;
             }

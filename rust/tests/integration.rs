@@ -97,6 +97,7 @@ fn two_native_clients_solve_cooperatively() {
                 &format!("coop-{i}"),
                 u64::MAX,
                 1.0,
+                false,
             )
         })
         .collect();

@@ -108,6 +108,12 @@ for f in "$@"; do
             check "$f" "$base" idle_syscalls_per_session_s down
             check "$f" "$base" tts_push_ms down
             ;;
+        analytics)
+            check "$f" "$base" record_ns_per_put down
+            check "$f" "$base" sampling_overhead_ratio down
+            check "$f" "$base" micro_allocs_per_op down
+            check "$f" "$base" put_allocs_per_req down
+            ;;
         *)
             echo "FAIL: unknown bench \"$name\" in $f"
             FAILED=1

@@ -18,6 +18,7 @@ use nodio::client::{ClientProcess, EngineChoice, WorkerMode};
 use nodio::coordinator::telemetry::{
     check_exposition, parse_exposition, quantile_from_buckets,
 };
+use nodio::coordinator::timeseries;
 use nodio::coordinator::{PoolServer, PoolServerConfig, TelemetrySettings};
 use nodio::genome::ProblemSpec;
 use nodio::http::{HttpClient, Method, Request};
@@ -29,7 +30,11 @@ fn main() -> anyhow::Result<()> {
     let handle = PoolServer::spawn(
         "127.0.0.1:0",
         PoolServerConfig {
-            telemetry: TelemetrySettings { trace_buffer: 256, slow_ms: 1 },
+            telemetry: TelemetrySettings {
+                trace_buffer: 256,
+                slow_ms: 1,
+                ..Default::default()
+            },
             ..Default::default()
         },
     )?;
@@ -66,8 +71,17 @@ fn main() -> anyhow::Result<()> {
         })
         .collect();
     let t0 = Instant::now();
+    // The per-epoch time series resets when the experiment solves, so
+    // keep the latest in-flight snapshot from `/experiment/timeseries`
+    // while waiting — that's the solving epoch's fitness trajectory.
+    let mut last_series = nodio::json::Json::Null;
     loop {
         std::thread::sleep(Duration::from_millis(50));
+        let series =
+            get(&mut probe, "/experiment/timeseries")?.json_body()?;
+        if series.get_u64("count").unwrap_or(0) > 0 {
+            last_series = series;
+        }
         let state = get(&mut probe, "/experiment/state")?.json_body()?;
         if state.get_u64("completed").unwrap_or(0) > 0 {
             break;
@@ -140,6 +154,48 @@ fn main() -> anyhow::Result<()> {
             e.get_u64("shard").unwrap_or(0),
             e.get_str("kind").unwrap_or("?"),
         );
+    }
+
+    // --- 5. The analytics observatory ------------------------------------
+    // `/experiment/timeseries` holds the bounded fitness-over-time
+    // series of the current epoch (merged across shards on a cluster);
+    // the snapshot captured mid-run above is the solving epoch's curve.
+    let best: Vec<f64> = last_series
+        .get("samples")
+        .and_then(|s| s.as_arr())
+        .map(|arr| arr.iter().filter_map(|s| s.get_f64("best")).collect())
+        .unwrap_or_default();
+    println!(
+        "fitness curve   : {} samples (epoch {})",
+        best.len(),
+        last_series.get_u64("experiment").unwrap_or(0),
+    );
+    if !best.is_empty() {
+        println!("  {}", timeseries::spark_values(&best, 64));
+        println!(
+            "  start {:.2} -> best {:.2}",
+            best[0],
+            best.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
+        );
+    }
+
+    // `/experiment/volunteers` is the cumulative contribution ledger —
+    // it survives the epoch rollover, so both solvers are still there.
+    let volunteers = get(&mut probe, "/experiment/volunteers")?.json_body()?;
+    println!(
+        "volunteers seen : {}",
+        volunteers.get_u64("volunteers_seen").unwrap_or(0),
+    );
+    if let Some(rows) = volunteers.get("top").and_then(|t| t.as_arr()) {
+        for row in rows {
+            println!(
+                "  {:<16} puts {:>5}  accepts {:>5}  solutions {}",
+                row.get_str("uuid").unwrap_or("?"),
+                row.get_u64("puts").unwrap_or(0),
+                row.get_u64("accepts").unwrap_or(0),
+                row.get_u64("solutions").unwrap_or(0),
+            );
+        }
     }
 
     drop(probe);

@@ -1,0 +1,268 @@
+//! Analytics-recording overhead bench with hard regression gates.
+//!
+//! PR 10 put an analytics sampler (per-shard `TimeSeries`) and a
+//! per-volunteer ledger (`VolunteerTable`) on the PUT hot path. This
+//! bench certifies that the recording layer stays cheap enough to leave
+//! enabled unconditionally:
+//!
+//! * **router PUT** — the full single-loop PUT path with recording
+//!   wired in (what `hotpath_alloc` gates; measured here for the ratio
+//!   denominator and to re-assert the allocation budget with the
+//!   analytics layer enabled);
+//! * **analytics micro** — the isolated per-PUT recording work (one
+//!   `TimeSeries::record_with` + one `VolunteerTable::note_put` on a
+//!   warm table), i.e. the marginal cost this subsystem added.
+//!
+//! Gates (process exits 1 on violation — CI job `bench-smoke`):
+//! * steady-state `VolunteerTable::note_put` on a known UUID must do
+//!   **0 allocations** (the table's get_mut-first discipline);
+//! * steady-state `TimeSeries::record_with` must be allocation-free
+//!   (preallocated ring, in-place stride decimation);
+//! * the recording work must stay a small fraction of a full PUT:
+//!   `sampling_overhead_ratio` (analytics ns / router PUT ns) < 0.25;
+//! * the router PUT itself must hold the documented <= 8 allocs/req
+//!   budget and the cached GET must stay allocation-free, with
+//!   recording enabled.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::RefCell;
+use std::rc::Rc;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+use nodio::bench::{write_json_summary, Table};
+use nodio::coordinator::routes::{build_router, PoolState};
+use nodio::coordinator::timeseries::{Observation, TimeSeries};
+use nodio::coordinator::VolunteerTable;
+use nodio::genome::ProblemSpec;
+use nodio::http::{Method, Request};
+
+// ---------------------------------------------------------------------
+// Counting allocator
+// ---------------------------------------------------------------------
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+static BYTES: AtomicU64 = AtomicU64::new(0);
+
+struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(
+        &self,
+        ptr: *mut u8,
+        layout: Layout,
+        new_size: usize,
+    ) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        BYTES.fetch_add(new_size as u64, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+/// Run `f` n times; returns (elapsed seconds, allocations).
+fn measured(n: u64, mut f: impl FnMut()) -> (f64, u64) {
+    let a0 = ALLOCS.load(Ordering::Relaxed);
+    let t0 = Instant::now();
+    for _ in 0..n {
+        f();
+    }
+    (t0.elapsed().as_secs_f64(), ALLOCS.load(Ordering::Relaxed) - a0)
+}
+
+const PUT_BODY: &str = concat!(
+    "{\"chromosome\":\"",
+    "0101010101010101010101010101010101010101",
+    "0101010101010101010101010101010101010101",
+    "0101010101010101010101010101010101010101",
+    "0101010101010101010101010101010101010101",
+    "\",\"fitness\":40.5,\"uuid\":\"bench\"}"
+);
+
+fn main() {
+    let full = std::env::var("NODIO_BENCH_FULL").is_ok();
+    let n: u64 = if full { 2_000_000 } else { 500_000 };
+    let n_router: u64 = n / 5;
+
+    println!(
+        "== analytics recording overhead ({n} micro / {n_router} router \
+         iterations) =="
+    );
+
+    // -- analytics micro: the exact per-PUT recording work -------------
+    let mut series = TimeSeries::new(512);
+    let mut volunteers = VolunteerTable::new();
+    volunteers.note_put("bench", true, 1); // warm: the steady-state key
+    let mut puts = 0u64;
+    // Warm past the first stride doublings so the measured window is
+    // steady state (decimation runs in place, no growth).
+    for _ in 0..10_000 {
+        puts += 1;
+        series.record_with(|| Observation {
+            best_fitness: 40.5,
+            mean_fitness: 20.25,
+            pool_size: 1024,
+            puts,
+            rejected: 0,
+            sessions: 3,
+        });
+        volunteers.note_put("bench", true, puts);
+    }
+    let (t_micro, a_micro) = measured(n, || {
+        puts += 1;
+        series.record_with(|| Observation {
+            best_fitness: 40.5,
+            mean_fitness: 20.25,
+            pool_size: 1024,
+            puts,
+            rejected: 0,
+            sessions: 3,
+        });
+        volunteers.note_put("bench", true, puts);
+    });
+    let record_ns_per_put = t_micro * 1e9 / n as f64;
+
+    // -- router PUT / cached GET with recording enabled ----------------
+    let state = Rc::new(RefCell::new(PoolState::new(
+        1024,
+        // never solved mid-bench
+        &ProblemSpec::bits(160, 1e18),
+        nodio::coordinator::logger::EventLog::disabled(),
+        7,
+    )));
+    let mut router = build_router(state.clone());
+    let get_req = Request::new(Method::Get, "/experiment/random?uuid=bench");
+    let put_req = {
+        let mut r = Request::new(Method::Put, "/experiment/chromosome");
+        r.body = PUT_BODY.as_bytes().to_vec();
+        r
+    };
+    let mut out: Vec<u8> = Vec::with_capacity(64 * 1024);
+    router.handle_into(&put_req, true, &mut out);
+    out.clear();
+    for _ in 0..1_000 {
+        router.handle_into(&get_req, true, &mut out);
+        out.clear();
+    }
+    let (_t, a_get) = measured(n_router, || {
+        router.handle_into(&get_req, true, &mut out);
+        out.clear();
+    });
+    for _ in 0..1_000 {
+        router.handle_into(&put_req, true, &mut out);
+        out.clear();
+    }
+    let (t_put, a_put) = measured(n_router, || {
+        router.handle_into(&put_req, true, &mut out);
+        out.clear();
+    });
+    let put_ns_per_req = t_put * 1e9 / n_router as f64;
+    let put_allocs_per_req = a_put as f64 / n_router as f64;
+    let sampling_overhead_ratio = record_ns_per_put / put_ns_per_req;
+    let series_len = state.borrow().series.len();
+
+    let mut table = Table::new(&["path", "ns/op", "allocs/op"]);
+    table.row(&[
+        "analytics record (micro)".into(),
+        format!("{record_ns_per_put:.1}"),
+        format!("{:.4}", a_micro as f64 / n as f64),
+    ]);
+    table.row(&[
+        "router PUT (recording on)".into(),
+        format!("{put_ns_per_req:.1}"),
+        format!("{put_allocs_per_req:.3}"),
+    ]);
+    table.row(&[
+        "router GET (cached)".into(),
+        "-".into(),
+        format!("{:.3}", a_get as f64 / n_router as f64),
+    ]);
+    table.print();
+    println!(
+        "\nrecording is {:.1}% of a full PUT ({} bounded samples held \
+         after {} puts)",
+        sampling_overhead_ratio * 100.0,
+        series_len,
+        n_router + n + 10_001,
+    );
+
+    // Written before the gates so a failing run still leaves evidence.
+    write_json_summary(&nodio::json::Json::obj(vec![
+        ("bench", "analytics".into()),
+        ("record_ns_per_put", record_ns_per_put.into()),
+        ("put_ns_per_req", put_ns_per_req.into()),
+        ("sampling_overhead_ratio", sampling_overhead_ratio.into()),
+        ("micro_allocs_per_op", (a_micro as f64 / n as f64).into()),
+        ("put_allocs_per_req", put_allocs_per_req.into()),
+        ("series_len", (series_len as u64).into()),
+    ]));
+
+    // -- gates ---------------------------------------------------------
+    let mut failed = false;
+    if a_micro != 0 {
+        println!(
+            "FAIL: steady-state analytics recording allocated ({a_micro} \
+             allocations over {n} ops; budget is 0)"
+        );
+        failed = true;
+    } else {
+        println!("PASS: steady-state analytics recording is allocation-free");
+    }
+    if a_get != 0 {
+        println!(
+            "FAIL: cached GET allocated with recording enabled ({a_get} \
+             allocations over {n_router} requests; budget is 0)"
+        );
+        failed = true;
+    } else {
+        println!("PASS: cached GET stays allocation-free with recording on");
+    }
+    if put_allocs_per_req > 8.0 {
+        println!(
+            "FAIL: PUT allocates {put_allocs_per_req:.2}/request with \
+             recording enabled (budget 8)"
+        );
+        failed = true;
+    } else {
+        println!(
+            "PASS: PUT within budget with recording enabled \
+             ({put_allocs_per_req:.2} allocations/request <= 8)"
+        );
+    }
+    if sampling_overhead_ratio >= 0.25 {
+        println!(
+            "FAIL: analytics recording is {:.1}% of a full PUT \
+             (gate < 25%)",
+            sampling_overhead_ratio * 100.0
+        );
+        failed = true;
+    } else {
+        println!(
+            "PASS: analytics recording is {:.1}% of a full PUT (< 25%)",
+            sampling_overhead_ratio * 100.0
+        );
+    }
+    if series_len == 0 || series_len > 512 {
+        println!(
+            "FAIL: time series held {series_len} samples (bound is 512)"
+        );
+        failed = true;
+    } else {
+        println!("PASS: time series stayed within its 512-sample bound");
+    }
+    if failed {
+        std::process::exit(1);
+    }
+}

@@ -19,6 +19,7 @@ use crate::coordinator::telemetry::{
     check_exposition, parse_exposition, quantile_from_buckets, Sample,
     TelemetrySettings,
 };
+use crate::coordinator::timeseries::{self, Sample as TsSample};
 use crate::coordinator::{FederationConfig, PersistConfig, PoolServerConfig};
 use crate::genome::ProblemSpec;
 use crate::http::{HttpClient, Method, Request};
@@ -97,16 +98,28 @@ commands:
             the pool server's listen address (default: an ephemeral
             port) so /metrics/prom, /debug/trace and `nodio top` can
             watch the run from outside
-  replay    <data-dir>
+  replay    <data-dir> [--timeseries]
             reconstruct an experiment's history offline from its WAL +
-            snapshot directory (no server needed)
-  top       <URL> [--interval-s 2] [--count 0] [--once]
+            snapshot directory (no server needed); --timeseries rebuilds
+            the fitness-over-time curve per experiment epoch from the
+            put records instead (works on any WAL version, v1-v4)
+  top       <URL> [--interval-s 2] [--count 0] [--once] [--json]
             live dashboard over GET /metrics/prom: request rate, p50/p99
             service latency, open connections, pool gauges, WAL write
             rate and per-peer federation link health, one line per poll
             (--count 0 = run until killed; a bare host URL defaults to
             /metrics/prom); --once prints a single machine-readable
-            key=value sample and exits (for scripts — no polling loop)
+            key=value sample and exits (for scripts — no polling loop);
+            --json prints the same sample as one JSON object
+  dash      <URL> [--url HOST:PORT ...] [--interval-s 2] [--count 0]
+            [--once]
+            full-screen ANSI terminal dashboard over GET /metrics/prom,
+            /experiment/timeseries and /experiment/volunteers: sparkline
+            fitness + request-rate trajectories, the volunteer
+            leaderboard, per-peer federation link health, and one status
+            line per extra --url peer server; --once prints a single
+            machine-readable key=value snapshot (no ANSI) and exits —
+            the CI live-swarm gate drives it
   promcheck <URL>
             fetch a Prometheus exposition and validate it against the
             text-format grammar — the CI live-scrape gate; exits nonzero
@@ -146,7 +159,7 @@ pub fn dispatch(args: &Args) -> Result<()> {
     // not something to silently ignore.
     if !matches!(
         args.command.as_str(),
-        "replay" | "trace" | "http" | "top" | "promcheck"
+        "replay" | "trace" | "http" | "top" | "dash" | "promcheck"
     ) && args.positional_count() > 0
     {
         bail!(
@@ -160,6 +173,7 @@ pub fn dispatch(args: &Args) -> Result<()> {
         "swarm" => cmd_swarm(args),
         "http" => cmd_http(args),
         "top" => cmd_top(args),
+        "dash" => cmd_dash(args),
         "promcheck" => cmd_promcheck(args),
         "replay" => cmd_replay(args),
         "baseline" => cmd_baseline(args),
@@ -315,6 +329,7 @@ fn cmd_server(args: &Args) -> Result<()> {
     println!("        GET /experiment/history, GET /stats, GET /metrics,");
     println!("        GET /metrics/prom, GET /healthz, GET /readyz,");
     println!("        GET /debug/trace, GET /experiment/lineage,");
+    println!("        GET /experiment/timeseries, GET /experiment/volunteers,");
     println!("        POST /experiment/reset,");
     println!("        GET /experiment/session (WebSocket push sessions),");
     println!("        GET /experiment/stream (SSE push fallback)");
@@ -440,37 +455,93 @@ fn fmt_quantile(v: f64) -> String {
     }
 }
 
+/// The one-shot sample fields shared by `top --once` (key=value), `top
+/// --json`, and `dash --once`, in print order. Everything except the
+/// `_s` latency quantiles is an integer count — both renderings apply
+/// the same rule so they cannot disagree on a value.
+fn top_sample_fields(samples: &[Sample]) -> Vec<(&'static str, f64)> {
+    let lat = merged_buckets(samples, "nodio_request_duration_seconds");
+    vec![
+        ("requests", sum_counter(samples, "nodio_requests_total")),
+        ("experiment", gauge(samples, "nodio_experiment")),
+        ("shards", gauge(samples, "nodio_shards")),
+        ("pool", gauge(samples, "nodio_pool_entries")),
+        ("pool_capacity", gauge(samples, "nodio_pool_capacity")),
+        ("conns", gauge(samples, "nodio_open_connections")),
+        ("p50_s", quantile_from_buckets(&lat, 0.5)),
+        ("p99_s", quantile_from_buckets(&lat, 0.99)),
+        (
+            "wal_bytes",
+            sum_counter(samples, "nodio_wal_appended_bytes_total"),
+        ),
+    ]
+}
+
+fn top_field_is_float(name: &str) -> bool {
+    name.ends_with("_s")
+}
+
+/// The `--once` line: `key=value` pairs in field order.
+fn render_top_once(samples: &[Sample]) -> String {
+    top_sample_fields(samples)
+        .iter()
+        .map(|(k, v)| {
+            if top_field_is_float(k) {
+                format!("{k}={v}")
+            } else {
+                format!("{k}={}", *v as u64)
+            }
+        })
+        .collect::<Vec<_>>()
+        .join(" ")
+}
+
+/// The `--json` object: same fields, same order; a quantile with no
+/// finite estimate (rank in the unbounded top bucket) renders as null.
+fn top_sample_json(samples: &[Sample]) -> Json {
+    Json::obj(
+        top_sample_fields(samples)
+            .iter()
+            .map(|(k, v)| {
+                let val = if top_field_is_float(k) {
+                    if v.is_finite() {
+                        Json::from(*v)
+                    } else {
+                        Json::Null
+                    }
+                } else {
+                    Json::from(*v as u64)
+                };
+                (*k, val)
+            })
+            .collect(),
+    )
+}
+
 /// `nodio top <url>` — poll the Prometheus exposition and print a
 /// one-line live summary per interval, using the same dependency-free
 /// HTTP client the volunteers run on.
 fn cmd_top(args: &Args) -> Result<()> {
     let url = args.positional(0).ok_or_else(|| {
         anyhow!(
-            "usage: nodio top <url> [--interval-s 2] [--count 0] [--once]"
+            "usage: nodio top <url> [--interval-s 2] [--count 0] \
+             [--once] [--json]"
         )
     })?;
     let (host, path) = scrape_target(url);
     // `--once`: one scrape, one machine-readable key=value line, exit —
     // scriptable (load harnesses, cron probes) with no interval loop and
-    // no cursor redraw assumptions about the terminal.
-    if args.flag("once") {
+    // no cursor redraw assumptions about the terminal. `--json` is the
+    // same sample as one JSON object.
+    if args.flag("once") || args.flag("json") {
         let text = fetch_text(host, path)?;
         let samples =
             parse_exposition(&text).map_err(|e| anyhow!("{host}: {e}"))?;
-        let lat = merged_buckets(&samples, "nodio_request_duration_seconds");
-        println!(
-            "requests={} experiment={} shards={} pool={} pool_capacity={} \
-             conns={} p50_s={} p99_s={} wal_bytes={}",
-            sum_counter(&samples, "nodio_requests_total") as u64,
-            gauge(&samples, "nodio_experiment") as u64,
-            gauge(&samples, "nodio_shards") as u64,
-            gauge(&samples, "nodio_pool_entries") as u64,
-            gauge(&samples, "nodio_pool_capacity") as u64,
-            gauge(&samples, "nodio_open_connections") as u64,
-            quantile_from_buckets(&lat, 0.5),
-            quantile_from_buckets(&lat, 0.99),
-            sum_counter(&samples, "nodio_wal_appended_bytes_total") as u64,
-        );
+        if args.flag("json") {
+            println!("{}", json::to_string(&top_sample_json(&samples)));
+        } else {
+            println!("{}", render_top_once(&samples));
+        }
         return Ok(());
     }
     let interval =
@@ -546,6 +617,237 @@ fn print_top_line(cur: &[Sample], prev: &[Sample], dt: f64) {
     println!("{line}");
 }
 
+/// One polled frame of the dash dashboard: the Prometheus exposition
+/// plus both analytics endpoints, fetched over the same dependency-free
+/// client.
+struct DashFrame {
+    samples: Vec<Sample>,
+    series: Json,
+    volunteers: Json,
+}
+
+fn fetch_dash_frame(host: &str) -> Result<DashFrame> {
+    let prom = fetch_text(host, "/metrics/prom")?;
+    let samples =
+        parse_exposition(&prom).map_err(|e| anyhow!("{host}: {e}"))?;
+    let series = json::parse(&fetch_text(host, "/experiment/timeseries")?)
+        .map_err(|e| anyhow!("{host}/experiment/timeseries: {e}"))?;
+    let volunteers =
+        json::parse(&fetch_text(host, "/experiment/volunteers")?)
+            .map_err(|e| anyhow!("{host}/experiment/volunteers: {e}"))?;
+    Ok(DashFrame { samples, series, volunteers })
+}
+
+/// Best-fitness values of the frame's time-series samples, in order.
+fn dash_best_values(series: &Json) -> Vec<f64> {
+    series
+        .get("samples")
+        .and_then(|s| s.as_arr())
+        .map(|arr| {
+            arr.iter()
+                .filter_map(|s| s.get_f64("best"))
+                .collect()
+        })
+        .unwrap_or_default()
+}
+
+/// The `dash --once` snapshot: the `top --once` fields plus the
+/// analytics-endpoint counters, as one machine-readable key=value line
+/// (no ANSI) — the CI live-swarm gate asserts on it.
+fn render_dash_once(frame: &DashFrame) -> String {
+    let mut line = render_top_once(&frame.samples);
+    let best = dash_best_values(&frame.series)
+        .last()
+        .copied()
+        .unwrap_or(f64::NEG_INFINITY);
+    line.push_str(&format!(
+        " best={} timeseries_samples={} volunteers_seen={}",
+        if best.is_finite() { format!("{best}") } else { "-".into() },
+        frame.series.get_u64("count").unwrap_or(0),
+        frame.volunteers.get_u64("volunteers_seen").unwrap_or(0),
+    ));
+    line
+}
+
+/// Render one full-screen dashboard frame. `req_rate` is the polled
+/// request-rate history (newest last) maintained by the caller.
+fn render_dash_frame(
+    host: &str,
+    frame: &DashFrame,
+    req_rate: &[f64],
+    peers: &[&str],
+) -> String {
+    let mut out = String::new();
+    // Clear screen + home; the frame is rebuilt from scratch each poll.
+    out.push_str("\x1b[2J\x1b[H");
+    out.push_str(&format!(
+        "\x1b[1mnodio dash\x1b[0m {host}  experiment {}  \
+         shards {}  pool {}/{}  conns {}\n",
+        gauge(&frame.samples, "nodio_experiment") as u64,
+        gauge(&frame.samples, "nodio_shards") as u64,
+        fmt_count(gauge(&frame.samples, "nodio_pool_entries") as u64),
+        fmt_count(gauge(&frame.samples, "nodio_pool_capacity") as u64),
+        gauge(&frame.samples, "nodio_open_connections") as u64,
+    ));
+    let lat =
+        merged_buckets(&frame.samples, "nodio_request_duration_seconds");
+    out.push_str(&format!(
+        "p50 {}  p99 {}  volunteers {}  sessions {}\n\n",
+        fmt_quantile(quantile_from_buckets(&lat, 0.5)),
+        fmt_quantile(quantile_from_buckets(&lat, 0.99)),
+        fmt_count(
+            frame.volunteers.get_u64("volunteers_seen").unwrap_or(0)
+        ),
+        gauge(&frame.samples, "nodio_ws_sessions") as u64,
+    ));
+
+    let best = dash_best_values(&frame.series);
+    out.push_str(&format!(
+        "fitness  [{:>4} samples] {}\n",
+        best.len(),
+        timeseries::spark_values(&best, 64)
+    ));
+    if let Some(b) = best.last() {
+        out.push_str(&format!("         best {b:.3}\n"));
+    }
+    out.push_str(&format!(
+        "req/s    [{:>4} polls  ] {}\n",
+        req_rate.len(),
+        timeseries::spark_values(req_rate, 64)
+    ));
+    if let Some(r) = req_rate.last() {
+        out.push_str(&format!("         now {r:.1}/s\n"));
+    }
+
+    out.push_str("\nvolunteer leaderboard (by accepts):\n");
+    let top = frame
+        .volunteers
+        .get("top")
+        .and_then(|t| t.as_arr())
+        .unwrap_or(&[]);
+    if top.is_empty() {
+        out.push_str("  (no volunteers yet)\n");
+    }
+    for row in top.iter().take(10) {
+        out.push_str(&format!(
+            "  {:<24} puts {:>6}  accepts {:>6}  rejects {:>4}  \
+             solutions {:>2}  session {:.0}s\n",
+            row.get_str("uuid").unwrap_or("?"),
+            row.get_u64("puts").unwrap_or(0),
+            row.get_u64("accepts").unwrap_or(0),
+            row.get_u64("rejects").unwrap_or(0),
+            row.get_u64("solutions").unwrap_or(0),
+            row.get_f64("session_s").unwrap_or(0.0),
+        ));
+    }
+
+    // Per-peer federation link health (rows exist only when federated).
+    let links: Vec<&Sample> = frame
+        .samples
+        .iter()
+        .filter(|s| s.name == "nodio_federation_link_up")
+        .collect();
+    if !links.is_empty() {
+        out.push_str("\nfederation links:\n");
+        for s in links {
+            let peer = s.label("peer").unwrap_or("?");
+            let lag = frame
+                .samples
+                .iter()
+                .find(|l| {
+                    l.name == "nodio_federation_link_lag_records"
+                        && l.label("peer") == Some(peer)
+                })
+                .map(|l| l.value)
+                .unwrap_or(0.0);
+            out.push_str(&format!(
+                "  {peer:<24} {}  lag {}\n",
+                if s.value > 0.0 { "up  " } else { "DOWN" },
+                fmt_count(lag as u64),
+            ));
+        }
+    }
+
+    // One status line per extra --url peer server.
+    if !peers.is_empty() {
+        out.push_str("\npeer servers:\n");
+        for peer in peers {
+            let (phost, _) = split_url(peer);
+            match fetch_text(phost, "/metrics/prom")
+                .and_then(|t| {
+                    parse_exposition(&t).map_err(|e| anyhow!("{e}"))
+                }) {
+                Ok(ps) => out.push_str(&format!(
+                    "  {phost:<24} up    experiment {}  pool {}/{}  \
+                     req {}\n",
+                    gauge(&ps, "nodio_experiment") as u64,
+                    fmt_count(gauge(&ps, "nodio_pool_entries") as u64),
+                    fmt_count(gauge(&ps, "nodio_pool_capacity") as u64),
+                    fmt_count(
+                        sum_counter(&ps, "nodio_requests_total") as u64
+                    ),
+                )),
+                Err(e) => out.push_str(&format!(
+                    "  {phost:<24} DOWN  ({e})\n"
+                )),
+            }
+        }
+    }
+    out
+}
+
+/// `nodio dash <url>` — full-screen ANSI dashboard over the Prometheus
+/// exposition plus the analytics endpoints; `--once` prints a single
+/// machine-readable snapshot instead (what CI drives).
+fn cmd_dash(args: &Args) -> Result<()> {
+    let url = args.positional(0).ok_or_else(|| {
+        anyhow!(
+            "usage: nodio dash <url> [--url HOST:PORT ...] \
+             [--interval-s 2] [--count 0] [--once]"
+        )
+    })?;
+    let (host, _) = split_url(url);
+    if args.flag("once") {
+        println!("{}", render_dash_once(&fetch_dash_frame(host)?));
+        return Ok(());
+    }
+    let peers = args.get_multi("url");
+    let interval =
+        args.get_f64("interval-s", 2.0).map_err(|e| anyhow!(e))?;
+    if !interval.is_finite() || interval <= 0.0 {
+        bail!("--interval-s must be positive");
+    }
+    let count = args.get_u64("count", 0).map_err(|e| anyhow!(e))?;
+
+    // Request-rate trajectory across polls, bounded to the sparkline
+    // width so the dashboard's memory is constant.
+    let mut req_rate: Vec<f64> = Vec::new();
+    let mut prev: Option<(std::time::Instant, f64)> = None;
+    let mut rendered = 0u64;
+    loop {
+        let frame = fetch_dash_frame(host)?;
+        let now = std::time::Instant::now();
+        let total = sum_counter(&frame.samples, "nodio_requests_total");
+        if let Some((t0, base)) = prev {
+            let dt = now.duration_since(t0).as_secs_f64().max(1e-9);
+            req_rate.push(((total - base) / dt).max(0.0));
+            if req_rate.len() > 64 {
+                req_rate.remove(0);
+            }
+        }
+        prev = Some((now, total));
+        print!("{}", render_dash_frame(host, &frame, &req_rate, &peers));
+        use std::io::Write as _;
+        let _ = std::io::stdout().flush();
+        rendered += 1;
+        if count > 0 && rendered >= count {
+            println!();
+            return Ok(());
+        }
+        std::thread::sleep(Duration::from_secs_f64(interval));
+    }
+}
+
 /// `nodio promcheck <url>` — fetch an exposition and run the
 /// text-format grammar checker over it (CI's live-scrape gate).
 fn cmd_promcheck(args: &Args) -> Result<()> {
@@ -569,7 +871,12 @@ fn cmd_replay(args: &Args) -> Result<()> {
     let dir = args
         .positional(0)
         .or_else(|| args.get("dir"))
-        .ok_or_else(|| anyhow!("usage: nodio replay <data-dir>"))?;
+        .ok_or_else(|| {
+            anyhow!("usage: nodio replay <data-dir> [--timeseries]")
+        })?;
+    if args.flag("timeseries") {
+        return cmd_replay_timeseries(std::path::Path::new(dir));
+    }
     let history = replay_dir(std::path::Path::new(dir))?;
     println!(
         "{dir}: {} shard(s), experiment {} live",
@@ -613,6 +920,126 @@ fn cmd_replay(args: &Args) -> Result<()> {
             log.gets,
             log.solved_by.as_deref().unwrap_or("-")
         );
+    }
+    Ok(())
+}
+
+/// One experiment epoch's reconstructed fitness trajectory.
+struct EpochCurve {
+    experiment: u64,
+    /// Wall-clock base of the epoch (first provenance-stamped put);
+    /// None until a v4 record is seen.
+    base_ms: Option<u64>,
+    samples: Vec<TsSample>,
+}
+
+/// Rebuild fitness-over-time per experiment epoch from the put records
+/// of every shard WAL under `dir` — the offline parity of
+/// `GET /experiment/timeseries`, needing no server (and no pid lock:
+/// the WALs are only read). Works on any record version: v1–v4 all
+/// carry a plain `fitness`; v4 adds the provenance ingest stamp used
+/// as the wall clock, older records fall back to put-index
+/// pseudo-time.
+fn replay_timeseries_curves(
+    dir: &std::path::Path,
+) -> Result<Vec<EpochCurve>> {
+    // (experiment, ts_ms [0 = pre-v4], shard, seq) — the sort key —
+    // plus the claimed fitness.
+    let mut puts: Vec<(u64, u64, usize, u64, f64)> = Vec::new();
+    let mut shard = 0usize;
+    loop {
+        let sdir = shard_dir(dir, shard);
+        if !sdir.exists() {
+            break;
+        }
+        let scanned = wal::scan(&sdir.join(WAL_FILE))
+            .map_err(|e| anyhow!("{}: {e}", sdir.display()))?;
+        for rec in &scanned.records {
+            if rec.get_str("t") != Some("put") {
+                continue;
+            }
+            let Some(fitness) = rec.get_f64("fitness") else {
+                continue;
+            };
+            puts.push((
+                rec.get_u64("experiment").unwrap_or(0),
+                Provenance::decode_record(rec).ts_ms,
+                shard,
+                rec.get_u64("seq").unwrap_or(0),
+                fitness,
+            ));
+        }
+        shard += 1;
+    }
+    if shard == 0 {
+        bail!(
+            "{}: no shard-0000/ directory (is this a --data-dir?)",
+            dir.display()
+        );
+    }
+    // Wall-clock order across shards; pre-provenance records (ts 0)
+    // keep their per-shard WAL order.
+    puts.sort_by(|a, b| {
+        (a.0, a.1, a.2, a.3).cmp(&(b.0, b.1, b.2, b.3))
+    });
+    let mut curves: Vec<EpochCurve> = Vec::new();
+    for (experiment, ts_ms, _, _, fitness) in puts {
+        if curves.last().map(|c| c.experiment) != Some(experiment) {
+            curves.push(EpochCurve {
+                experiment,
+                base_ms: None,
+                samples: Vec::new(),
+            });
+        }
+        let curve = curves.last_mut().expect("just pushed");
+        let n = curve.samples.len() as u64;
+        let t_s = match (ts_ms, curve.base_ms) {
+            (0, _) => n as f64,
+            (ts, None) => {
+                curve.base_ms = Some(ts);
+                0.0
+            }
+            (ts, Some(base)) => {
+                ts.saturating_sub(base) as f64 / 1000.0
+            }
+        };
+        let best = curve
+            .samples
+            .last()
+            .map(|s| s.best_fitness.max(fitness))
+            .unwrap_or(fitness);
+        curve.samples.push(TsSample {
+            t_s,
+            best_fitness: best,
+            mean_fitness: fitness,
+            pool_size: 0,
+            puts: n + 1,
+            rejected: 0,
+            sessions: 0,
+        });
+    }
+    Ok(curves)
+}
+
+/// `nodio replay <data-dir> --timeseries` — print each epoch's
+/// reconstructed curve with a sparkline.
+fn cmd_replay_timeseries(dir: &std::path::Path) -> Result<()> {
+    let curves = replay_timeseries_curves(dir)?;
+    println!(
+        "{}: {} experiment epoch(s) reconstructed from WAL put records",
+        dir.display(),
+        curves.len()
+    );
+    for c in &curves {
+        let last = c.samples.last().expect("curves are never empty");
+        println!(
+            "experiment {}: {} puts, best {:.2}, span {:.2}s",
+            c.experiment, last.puts, last.best_fitness, last.t_s
+        );
+        println!("  {}", timeseries::sparkline_of(&c.samples, 64));
+    }
+    if curves.is_empty() {
+        println!("(no put records — nothing to plot)");
     }
     Ok(())
 }
@@ -1199,5 +1626,171 @@ fn assemble_trace_dump(
             seq: e.get_u64("seq").unwrap_or(0),
             line,
         });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A synthetic exposition covering every `top --once` field,
+    /// including a p99 that lands in the unbounded +Inf bucket (so the
+    /// two renderings must agree on the no-finite-estimate case too).
+    const EXPO: &str = "\
+# TYPE nodio_requests_total counter
+nodio_requests_total{route=\"put\"} 10
+# TYPE nodio_experiment gauge
+nodio_experiment 2
+# TYPE nodio_shards gauge
+nodio_shards 1
+# TYPE nodio_pool_entries gauge
+nodio_pool_entries 5
+# TYPE nodio_pool_capacity gauge
+nodio_pool_capacity 64
+# TYPE nodio_open_connections gauge
+nodio_open_connections 3
+# TYPE nodio_wal_appended_bytes_total counter
+nodio_wal_appended_bytes_total 123
+# TYPE nodio_request_duration_seconds histogram
+nodio_request_duration_seconds_bucket{le=\"0.001\"} 8
+nodio_request_duration_seconds_bucket{le=\"+Inf\"} 10
+nodio_request_duration_seconds_sum 0.5
+nodio_request_duration_seconds_count 10
+";
+
+    #[test]
+    fn top_once_and_json_render_the_same_sample() {
+        let samples = parse_exposition(EXPO).unwrap();
+        let line = render_top_once(&samples);
+        let obj = top_sample_json(&samples);
+
+        // Same fields, same order, same values.
+        let pairs: Vec<(&str, &str)> = line
+            .split(' ')
+            .map(|kv| kv.split_once('=').unwrap())
+            .collect();
+        let fields = top_sample_fields(&samples);
+        assert_eq!(pairs.len(), fields.len());
+        for ((k, v), (name, raw)) in pairs.iter().zip(&fields) {
+            assert_eq!(k, name);
+            if top_field_is_float(name) {
+                match obj.get(name).unwrap() {
+                    Json::Null => {
+                        assert!(!raw.is_finite());
+                        assert_eq!(*v, "inf");
+                    }
+                    j => assert_eq!(
+                        j.as_f64().unwrap().to_string(),
+                        *v
+                    ),
+                }
+            } else {
+                assert_eq!(obj.get_u64(name), Some(v.parse().unwrap()));
+                assert_eq!((*raw as u64).to_string(), *v);
+            }
+        }
+        // Spot-check the values themselves.
+        assert_eq!(obj.get_u64("requests"), Some(10));
+        assert_eq!(obj.get_u64("wal_bytes"), Some(123));
+        assert!(line.contains("pool_capacity=64"));
+        // p99 of 10 samples with 8 under 1ms ranks in +Inf: null/inf.
+        assert!(matches!(obj.get("p99_s"), Some(Json::Null)));
+        assert!(line.contains("p99_s=inf"));
+    }
+
+    /// A hand-written v1 WAL (no provenance stamps) still reconstructs
+    /// a curve: pre-v4 records fall back to put-index pseudo-time.
+    #[test]
+    fn replay_timeseries_reads_v1_wal_records() {
+        let dir = std::env::temp_dir().join(format!(
+            "nodio-replay-ts-v1-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let sdir = shard_dir(&dir, 0);
+        std::fs::create_dir_all(&sdir).unwrap();
+        let file = std::fs::File::create(sdir.join(WAL_FILE)).unwrap();
+        let mut w = wal::FrameWriter::new(file, 0);
+        for (fitness, exp) in [(4.0, 0u64), (9.0, 0), (6.0, 0), (2.0, 1)] {
+            w.append(Json::obj(vec![
+                ("t", "put".into()),
+                ("experiment", exp.into()),
+                ("uuid", "v1".into()),
+                ("chromosome", "0101".into()),
+                ("fitness", fitness.into()),
+            ]))
+            .unwrap();
+        }
+        drop(w);
+
+        let curves = replay_timeseries_curves(&dir).unwrap();
+        assert_eq!(curves.len(), 2);
+        let c0 = &curves[0];
+        assert_eq!(c0.experiment, 0);
+        assert_eq!(c0.base_ms, None);
+        let t: Vec<f64> = c0.samples.iter().map(|s| s.t_s).collect();
+        assert_eq!(t, vec![0.0, 1.0, 2.0]);
+        let best: Vec<f64> =
+            c0.samples.iter().map(|s| s.best_fitness).collect();
+        assert_eq!(best, vec![4.0, 9.0, 9.0]);
+        assert_eq!(c0.samples.last().unwrap().puts, 3);
+        assert_eq!(curves[1].samples.len(), 1);
+        assert_eq!(curves[1].experiment, 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Kill a persisted server, then rebuild the fitness curve offline
+    /// from its WAL — the `replay --timeseries` acceptance path.
+    #[test]
+    fn recovery_replay_timeseries_rebuilds_curve_after_kill() {
+        let dir = std::env::temp_dir().join(format!(
+            "nodio-replay-ts-kill-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let config = ClusterConfig {
+            shards: 1,
+            base: PoolServerConfig {
+                problem: ProblemSpec::bits(8, 8.0),
+                // Keep every put in the WAL tail (no compaction) so the
+                // curve sees the whole run.
+                persist: Some(PersistConfig {
+                    snapshot_every: 1_000_000,
+                    ..PersistConfig::new(&dir)
+                }),
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let handle = PoolBackend::spawn("127.0.0.1:0", config).unwrap();
+        let mut c = HttpClient::connect(handle.addr()).unwrap();
+        for (chromosome, fitness) in
+            [("01010101", 4.0), ("01110111", 6.0), ("11111111", 8.0)]
+        {
+            let req = Request::new(Method::Put, "/experiment/chromosome")
+                .with_json(&Json::obj(vec![
+                    ("chromosome", chromosome.into()),
+                    ("fitness", fitness.into()),
+                    ("uuid", "curve".into()),
+                ]));
+            assert!(c.send(&req).unwrap().status < 300);
+        }
+        handle.stop(); // releases the pid lock; WAL is flushed per record
+
+        let curves = replay_timeseries_curves(&dir).unwrap();
+        // Epoch 0 holds all three puts (the solve rolls the epoch over
+        // after recording the winning put).
+        let c0 = curves
+            .iter()
+            .find(|c| c.experiment == 0)
+            .expect("epoch-0 curve");
+        assert_eq!(c0.samples.len(), 3);
+        assert_eq!(c0.samples.last().unwrap().best_fitness, 8.0);
+        assert_eq!(c0.samples.last().unwrap().puts, 3);
+        // Provenance stamps are monotone, so the time axis is too.
+        for pair in c0.samples.windows(2) {
+            assert!(pair[1].t_s >= pair[0].t_s);
+        }
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -1,0 +1,310 @@
+//! Per-volunteer contribution analytics.
+//!
+//! The browser-EC lineage papers show volunteer contribution is
+//! heavy-tailed and churn-dominated — *who contributes how much* is the
+//! first question asked of a volunteer swarm. This table rides the
+//! existing per-UUID accounting: every PUT (accepted or rejected)
+//! touches one entry keyed by the volunteer's UUID, and the scrape-time
+//! reader renders a top-K leaderboard plus summary quantiles of the
+//! contribution distribution for `GET /experiment/volunteers`.
+//!
+//! Hot-path discipline matches `bump_count`: updating an existing
+//! volunteer never allocates (a `&str` lookup plus counter bumps); only
+//! the first sighting of a UUID pays for the key clone. The GET path
+//! ([`VolunteerTable::touch`]) refreshes last-seen on *existing*
+//! entries only, so the 0-allocation cached-GET gate holds with
+//! analytics recording enabled.
+//!
+//! In the sharded cluster each shard keeps a private delta table,
+//! periodically drained into its slot's published copy
+//! ([`VolunteerTable::publish_into`]); scrape-time readers merge the
+//! published copies ([`VolunteerTable::merge_from`]) into one
+//! cluster-wide view. Volunteer history is cumulative across
+//! experiment epochs — a solve resets the pool and the time series,
+//! never the contribution ledger.
+
+use std::collections::HashMap;
+
+use crate::json::Json;
+
+/// Lifetime counters for one volunteer UUID.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct VolunteerStats {
+    /// Total PUT attempts (accepted + rejected).
+    pub puts: u64,
+    /// PUTs that entered the pool.
+    pub accepts: u64,
+    /// PUTs turned away by the abuse guards (banned, throttled,
+    /// verification mismatch).
+    pub rejects: u64,
+    /// Experiments this volunteer solved.
+    pub solutions: u64,
+    pub first_seen_ms: u64,
+    pub last_seen_ms: u64,
+}
+
+impl VolunteerStats {
+    fn new(now_ms: u64) -> VolunteerStats {
+        VolunteerStats {
+            puts: 0,
+            accepts: 0,
+            rejects: 0,
+            solutions: 0,
+            first_seen_ms: now_ms,
+            last_seen_ms: now_ms,
+        }
+    }
+
+    fn merge(&mut self, other: &VolunteerStats) {
+        self.puts += other.puts;
+        self.accepts += other.accepts;
+        self.rejects += other.rejects;
+        self.solutions += other.solutions;
+        self.first_seen_ms = self.first_seen_ms.min(other.first_seen_ms);
+        self.last_seen_ms = self.last_seen_ms.max(other.last_seen_ms);
+    }
+}
+
+/// The per-volunteer ledger for one server (or one shard's delta).
+#[derive(Debug, Default)]
+pub struct VolunteerTable {
+    map: HashMap<String, VolunteerStats>,
+}
+
+impl VolunteerTable {
+    pub fn new() -> VolunteerTable {
+        VolunteerTable { map: HashMap::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn get(&self, uuid: &str) -> Option<&VolunteerStats> {
+        self.map.get(uuid)
+    }
+
+    /// Record a PUT attempt. Allocates only on the first sighting of
+    /// `uuid` (the key clone); steady-state updates are counter bumps.
+    pub fn note_put(&mut self, uuid: &str, accepted: bool, now_ms: u64) {
+        let stats = match self.map.get_mut(uuid) {
+            Some(s) => s,
+            None => self
+                .map
+                .entry(uuid.to_string())
+                .or_insert_with(|| VolunteerStats::new(now_ms)),
+        };
+        stats.puts += 1;
+        if accepted {
+            stats.accepts += 1;
+        } else {
+            stats.rejects += 1;
+        }
+        stats.last_seen_ms = stats.last_seen_ms.max(now_ms);
+    }
+
+    /// Credit a solve to `uuid` (the PUT itself was already noted).
+    pub fn note_solution(&mut self, uuid: &str, now_ms: u64) {
+        if let Some(stats) = self.map.get_mut(uuid) {
+            stats.solutions += 1;
+            stats.last_seen_ms = stats.last_seen_ms.max(now_ms);
+        }
+    }
+
+    /// Refresh last-seen for an *existing* volunteer (the GET path —
+    /// never inserts, so the allocation-free cached-GET gate holds).
+    pub fn touch(&mut self, uuid: &str, now_ms: u64) {
+        if let Some(stats) = self.map.get_mut(uuid) {
+            stats.last_seen_ms = stats.last_seen_ms.max(now_ms);
+        }
+    }
+
+    /// Merge a snapshot of `other` into `self` (scrape-time shard
+    /// merging; `other` is unchanged).
+    pub fn merge_from(&mut self, other: &VolunteerTable) {
+        for (uuid, stats) in &other.map {
+            match self.map.get_mut(uuid.as_str()) {
+                Some(mine) => mine.merge(stats),
+                None => {
+                    self.map.insert(uuid.clone(), *stats);
+                }
+            }
+        }
+    }
+
+    /// Drain `self` into `target` (a shard publishing its delta into
+    /// its slot's shared copy; `self` ends empty but keeps capacity).
+    pub fn publish_into(&mut self, target: &mut VolunteerTable) {
+        for (uuid, stats) in self.map.drain() {
+            match target.map.get_mut(uuid.as_str()) {
+                Some(t) => t.merge(&stats),
+                None => {
+                    target.map.insert(uuid, stats);
+                }
+            }
+        }
+    }
+
+    /// The scrape payload: volunteer count, top-K leaderboard by
+    /// contribution (accepts, then puts, then UUID — deterministic),
+    /// and nearest-rank quantiles of the accepts-per-volunteer
+    /// distribution.
+    pub fn to_json(&self, top_k: usize) -> Json {
+        let mut rows: Vec<(&String, &VolunteerStats)> =
+            self.map.iter().collect();
+        rows.sort_by(|(ua, a), (ub, b)| {
+            b.accepts
+                .cmp(&a.accepts)
+                .then(b.puts.cmp(&a.puts))
+                .then(ua.cmp(ub))
+        });
+        let top: Vec<Json> = rows
+            .iter()
+            .take(top_k)
+            .map(|(uuid, s)| {
+                Json::obj(vec![
+                    ("uuid", uuid.as_str().into()),
+                    ("puts", s.puts.into()),
+                    ("accepts", s.accepts.into()),
+                    ("rejects", s.rejects.into()),
+                    ("solutions", s.solutions.into()),
+                    ("first_seen_ms", s.first_seen_ms.into()),
+                    ("last_seen_ms", s.last_seen_ms.into()),
+                    (
+                        "session_s",
+                        (s.last_seen_ms.saturating_sub(s.first_seen_ms)
+                            as f64
+                            / 1000.0)
+                            .into(),
+                    ),
+                ])
+            })
+            .collect();
+        let mut accepts: Vec<u64> =
+            rows.iter().map(|(_, s)| s.accepts).collect();
+        accepts.sort_unstable();
+        let q = |p: f64| -> Json {
+            if accepts.is_empty() {
+                return Json::Num(0.0);
+            }
+            // Nearest-rank on the sorted accepts distribution.
+            let rank = ((p * accepts.len() as f64).ceil() as usize)
+                .clamp(1, accepts.len());
+            (accepts[rank - 1]).into()
+        };
+        Json::obj(vec![
+            ("volunteers_seen", self.map.len().into()),
+            ("top", Json::Arr(top)),
+            (
+                "quantiles",
+                Json::obj(vec![
+                    ("p50", q(0.50)),
+                    ("p90", q(0.90)),
+                    ("p99", q(0.99)),
+                    ("max", accepts.last().copied().unwrap_or(0).into()),
+                ]),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn notes_accumulate_per_uuid() {
+        let mut t = VolunteerTable::new();
+        t.note_put("a", true, 100);
+        t.note_put("a", false, 200);
+        t.note_put("b", true, 150);
+        let a = t.get("a").unwrap();
+        assert_eq!(
+            (a.puts, a.accepts, a.rejects, a.first_seen_ms, a.last_seen_ms),
+            (2, 1, 1, 100, 200)
+        );
+        assert_eq!(t.len(), 2);
+    }
+
+    #[test]
+    fn touch_never_creates_entries() {
+        let mut t = VolunteerTable::new();
+        t.touch("ghost", 500);
+        assert!(t.is_empty());
+        t.note_put("a", true, 100);
+        t.touch("a", 900);
+        assert_eq!(t.get("a").unwrap().last_seen_ms, 900);
+    }
+
+    #[test]
+    fn solutions_credit_known_volunteers() {
+        let mut t = VolunteerTable::new();
+        t.note_put("a", true, 100);
+        t.note_solution("a", 300);
+        assert_eq!(t.get("a").unwrap().solutions, 1);
+        t.note_solution("nobody", 300);
+        assert_eq!(t.len(), 1);
+    }
+
+    #[test]
+    fn merge_and_publish_agree() {
+        let mut a = VolunteerTable::new();
+        a.note_put("x", true, 100);
+        a.note_put("y", false, 120);
+        let mut b = VolunteerTable::new();
+        b.note_put("x", true, 90);
+        b.note_put("z", true, 200);
+
+        let mut merged = VolunteerTable::new();
+        merged.merge_from(&a);
+        merged.merge_from(&b);
+        assert_eq!(merged.len(), 3);
+        let x = merged.get("x").unwrap();
+        assert_eq!((x.puts, x.accepts, x.first_seen_ms), (2, 2, 90));
+
+        // Draining publish produces the same totals.
+        let mut target = VolunteerTable::new();
+        a.publish_into(&mut target);
+        b.publish_into(&mut target);
+        assert!(a.is_empty() && b.is_empty());
+        assert_eq!(target.get("x"), merged.get("x"));
+        assert_eq!(target.len(), 3);
+    }
+
+    #[test]
+    fn json_leaderboard_is_deterministic_and_bounded() {
+        let mut t = VolunteerTable::new();
+        for (uuid, n) in [("a", 5u64), ("b", 9), ("c", 9), ("d", 1)] {
+            for i in 0..n {
+                t.note_put(uuid, true, 100 + i);
+            }
+        }
+        let j = t.to_json(3);
+        assert_eq!(j.get_u64("volunteers_seen"), Some(4));
+        let top = j.get("top").unwrap().as_arr().unwrap();
+        assert_eq!(top.len(), 3);
+        // Ties broken by UUID so the order is stable.
+        assert_eq!(top[0].get_str("uuid"), Some("b"));
+        assert_eq!(top[1].get_str("uuid"), Some("c"));
+        assert_eq!(top[2].get_str("uuid"), Some("a"));
+        let quants = j.get("quantiles").unwrap();
+        assert_eq!(quants.get_u64("max"), Some(9));
+        assert_eq!(quants.get_u64("p50"), Some(5));
+    }
+
+    #[test]
+    fn empty_table_renders_zeroes() {
+        let t = VolunteerTable::new();
+        let j = t.to_json(10);
+        assert_eq!(j.get_u64("volunteers_seen"), Some(0));
+        assert_eq!(j.get("top").unwrap().as_arr().unwrap().len(), 0);
+        assert_eq!(
+            j.get("quantiles").unwrap().get_u64("max"),
+            Some(0)
+        );
+    }
+}

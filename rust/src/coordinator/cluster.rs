@@ -73,16 +73,19 @@ use super::persistence::{
 };
 use super::pool::{ChromosomePool, PoolEntry};
 use super::provenance::{lineage_json, Hop, LineageRecord, Provenance};
+use super::analytics::VolunteerTable;
 use super::routes::{
-    first_json_byte, precompute_verdicts, put_fail, run_put_batch_n,
-    validate_put_json, validate_put_ref, BatchOutcome, GenomeFields,
-    PutFields, PutOutcome, RandomOutcome,
+    first_json_byte, pool_mean_fitness, precompute_verdicts, put_fail,
+    run_put_batch_n, timeseries_payload, validate_put_json,
+    validate_put_ref, volunteers_payload, volunteers_top_k, BatchOutcome,
+    GenomeFields, PutFields, PutOutcome, RandomOutcome,
 };
 use super::security::{FitnessVerifier, RateLimiter, SaboteurLog};
 use super::server::{PoolServer, PoolServerConfig};
 use super::telemetry::{
     self, route_class, DriverTelemetry, ServerGauges, Telemetry, TraceKind,
 };
+use super::timeseries::{self, Observation, TimeSeries};
 use crate::eventloop::{
     self, BatchedWaker, Epoll, Event, Interest, Waker,
 };
@@ -227,6 +230,14 @@ pub(crate) struct ShardSlot {
     /// on any shard merges every slot's copy). Written by the owner only,
     /// read by aggregating shards — contention-free in steady state.
     per_uuid: Mutex<HashMap<String, u64>>,
+    /// This shard's experiment time series, published once per tick by
+    /// the owner (same dirty-copy discipline as `per_uuid`); any shard
+    /// serving `GET /experiment/timeseries` merges every slot's copy
+    /// with its own live series at scrape time.
+    series: Mutex<Vec<timeseries::Sample>>,
+    /// This shard's volunteer-ledger delta, drained here once per tick;
+    /// `GET /experiment/volunteers` merges every slot's copy.
+    volunteers: Mutex<VolunteerTable>,
 }
 
 impl ShardSlot {
@@ -244,6 +255,8 @@ impl ShardSlot {
             cache_hits: AtomicU64::new(0),
             events: AtomicU64::new(0),
             per_uuid: Mutex::new(HashMap::new()),
+            series: Mutex::new(Vec::new()),
+            volunteers: Mutex::new(VolunteerTable::new()),
         }
     }
 }
@@ -283,6 +296,10 @@ pub(crate) struct ClusterShared {
     /// push to their sessions exactly when this moves, so idle sessions
     /// cost nothing between changes.
     pub(crate) push_gen: AtomicU64,
+    /// PUTs turned away by the abuse guards (banned, throttled,
+    /// verification mismatch) — the time-series `rejected` column,
+    /// cluster-wide. Relaxed bumps on the reject paths only.
+    rejected: AtomicU64,
     shutdown: AtomicBool,
 }
 
@@ -328,6 +345,7 @@ impl ClusterShared {
             pending_epoch_log: Mutex::new(None),
             best_lineage: Mutex::new(None),
             push_gen: AtomicU64::new(1),
+            rejected: AtomicU64::new(0),
             shutdown: AtomicBool::new(false),
         }
     }
@@ -607,6 +625,17 @@ struct ShardService {
     /// pool's lifetime-accepted counter so stamps stay unique across
     /// restarts.
     prov_seq: u64,
+    /// This shard's experiment time series (recorded on accepted PUTs,
+    /// single-writer `&mut`); published into the slot once per tick,
+    /// merged with every other slot's copy at scrape time.
+    series: TimeSeries,
+    /// Set when `series` changed since the last publish, so idle ticks
+    /// skip the slot copy.
+    series_dirty: bool,
+    /// This shard's volunteer-ledger delta (single-writer `&mut`),
+    /// drained into the slot's published table once per tick — same
+    /// discipline as `per_uuid_delta`.
+    volunteers_delta: VolunteerTable,
     shared: Arc<ClusterShared>,
     slots: Arc<Vec<ShardSlot>>,
 }
@@ -706,6 +735,9 @@ impl ShardService {
             telemetry: cfg.telemetry.clone(),
             node: cfg.node.clone(),
             prov_seq,
+            series: TimeSeries::new(512),
+            series_dirty: false,
+            volunteers_delta: VolunteerTable::new(),
             shared,
             slots,
         };
@@ -752,6 +784,33 @@ impl ShardService {
         for (k, v) in self.per_uuid_delta.drain() {
             *published.entry(k).or_insert(0) += v;
         }
+    }
+
+    /// Publish this tick's analytics: copy the live time series into
+    /// the slot (cheap `Copy` samples, bounded by the series capacity)
+    /// and drain the volunteer delta into the slot's published ledger.
+    /// Same once-per-tick discipline as [`Self::publish_per_uuid`] —
+    /// the request path never touches these locks.
+    fn publish_analytics(&mut self) {
+        if self.series_dirty {
+            self.series_dirty = false;
+            let mut published = self.slot().series.lock().unwrap();
+            published.clear();
+            published.extend_from_slice(self.series.samples());
+        }
+        if !self.volunteers_delta.is_empty() {
+            let slot = &self.slots[self.id];
+            let mut published = slot.volunteers.lock().unwrap();
+            self.volunteers_delta.publish_into(&mut published);
+        }
+    }
+
+    /// Ledger + counter for an abuse-guard rejection: these (and only
+    /// these) feed the time-series `rejected` column — validation 400s
+    /// never reach the guards.
+    fn note_reject(&mut self, uuid: &str) {
+        self.shared.rejected.fetch_add(1, Ordering::Relaxed);
+        self.volunteers_delta.note_put(uuid, false, unix_ms());
     }
 
     /// Keep the render cache slot-aligned after a pool insert.
@@ -837,6 +896,12 @@ impl ShardService {
         self.epoch_puts = 0;
         self.epoch_gets = 0;
         self.epoch_best = f64::NEG_INFINITY;
+        // New epoch, new fitness trajectory: clear the series and
+        // publish the cleared copy so scrapes stop seeing stale samples.
+        // The volunteer ledger is cumulative and survives the epoch.
+        self.series.clear();
+        self.series_dirty = true;
+        self.publish_analytics();
         self.publish_pool_len();
     }
 
@@ -1290,10 +1355,12 @@ impl ShardService {
         // Abuse guards (parity with the single-loop server; per-shard
         // state — see module docs for the multi-connection semantics).
         if self.saboteurs.is_banned(f.uuid) {
+            self.note_reject(f.uuid);
             return reject(403, "banned for repeated sabotage");
         }
         if let Some(limiter) = &mut self.rate_limiter {
             if !limiter.allow(f.uuid) {
+                self.note_reject(f.uuid);
                 return reject(429, "rate limited");
             }
         }
@@ -1317,6 +1384,7 @@ impl ShardService {
                         ("banned", banned.into()),
                     ])
                 });
+                self.note_reject(f.uuid);
                 return reject(409, "fitness mismatch");
             }
         }
@@ -1324,16 +1392,19 @@ impl ShardService {
         let Some(genome) = genome.into_genome() else {
             // Unreachable after validation; a defensive 400 beats a
             // panic on the shard loop.
+            self.note_reject(uuid);
             return reject(400, "malformed chromosome");
         };
 
         // Never insert into a partition belonging to a finished epoch.
         self.sync_epoch();
 
+        let now_ms = unix_ms();
         self.shared.puts.fetch_add(1, Ordering::Relaxed);
         self.slot().puts.fetch_add(1, Ordering::Relaxed);
         self.epoch_puts += 1;
         bump_count(&mut self.per_uuid_delta, uuid);
+        self.volunteers_delta.note_put(uuid, true, now_ms);
         if fitness > self.epoch_best {
             self.epoch_best = fitness;
         }
@@ -1366,7 +1437,7 @@ impl ShardService {
             &self.node,
             self.id as u32,
             self.prov_seq,
-            unix_ms(),
+            now_ms,
         );
         let entry = PoolEntry {
             chromosome: genome,
@@ -1401,6 +1472,32 @@ impl ShardService {
             });
         }
         self.publish_pool_len();
+        // Sample the experiment trajectory. Stride-sampled: the closure
+        // (with its O(pool) mean) only runs when a sample is actually
+        // taken, so steady-state PUTs pay a counter bump.
+        {
+            let best = self.shared.best_fitness();
+            let puts = self
+                .shared
+                .puts
+                .load(Ordering::Relaxed)
+                .saturating_sub(
+                    self.shared.exp_base_puts.load(Ordering::Relaxed),
+                );
+            let rejected = self.shared.rejected.load(Ordering::Relaxed);
+            let sessions = self.telemetry.ws_sessions();
+            let pool_size = self.total_pool_len() as usize;
+            let pool = &self.pool;
+            self.series.record_with(|| Observation {
+                best_fitness: best,
+                mean_fitness: pool_mean_fitness(pool),
+                pool_size,
+                puts,
+                rejected,
+                sessions,
+            });
+            self.series_dirty = true;
+        }
         // An accepted PUT is a fresh immigrant: wake the push sessions
         // (every shard's driver re-renders from its own partition).
         self.shared.bump_push_gen();
@@ -1417,6 +1514,7 @@ impl ShardService {
         if !solved {
             return PutOutcome::Accepted;
         }
+        self.volunteers_delta.note_solution(uuid, now_ms);
 
         // Experiment over. One shard wins the epoch CAS and records the
         // log; everyone else (a concurrent solver on another shard) still
@@ -1524,6 +1622,9 @@ impl ShardService {
         self.epoch_gets += 1;
         if let Some(u) = req.query_param("uuid") {
             bump_count(&mut self.per_uuid_delta, u);
+            // Existing volunteers only: `touch` never inserts, so the
+            // 0-allocation cached-GET gate holds.
+            self.volunteers_delta.touch(u, unix_ms());
         }
         let Some(idx) = self.pool.random_index(&mut self.rng) else {
             // Empty partition: 204, the island continues without an
@@ -1726,6 +1827,52 @@ impl ShardService {
         ]))
     }
 
+    /// Cluster-wide experiment time series: this shard's live series
+    /// plus every *other* slot's published copy (peer staleness bounded
+    /// by one tick), k-way merged by timestamp and re-bounded to the
+    /// series capacity.
+    fn merged_timeseries(&self) -> Vec<timeseries::Sample> {
+        let guards: Vec<_> = self
+            .slots
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| *i != self.id)
+            .map(|(_, slot)| slot.series.lock().unwrap())
+            .collect();
+        let mut parts: Vec<&[timeseries::Sample]> =
+            guards.iter().map(|g| g.as_slice()).collect();
+        parts.push(self.series.samples());
+        timeseries::merge_bounded(&parts, self.series.capacity())
+    }
+
+    /// Cluster-wide volunteer ledger: every slot's published table plus
+    /// this shard's unpublished delta — the same merge discipline as
+    /// [`Self::merged_per_uuid`].
+    fn merged_volunteers(&self) -> VolunteerTable {
+        let mut merged = VolunteerTable::new();
+        for slot in self.slots.iter() {
+            merged.merge_from(&slot.volunteers.lock().unwrap());
+        }
+        merged.merge_from(&self.volunteers_delta);
+        merged
+    }
+
+    fn experiment_timeseries(&self) -> Response {
+        let merged = self.merged_timeseries();
+        Response::json(&timeseries_payload(
+            self.shared.experiment.load(Ordering::Acquire),
+            timeseries::samples_json(&merged),
+            merged.len(),
+        ))
+    }
+
+    fn experiment_volunteers(&self, req: &Request) -> Response {
+        Response::json(&volunteers_payload(
+            self.shared.experiment.load(Ordering::Acquire),
+            self.merged_volunteers().to_json(volunteers_top_k(req)),
+        ))
+    }
+
     /// The Prometheus text exposition. The renderer is shared with the
     /// single-loop server, so a 1-shard cluster scrape is byte-identical
     /// to the single loop's for equal state; per-link federation gauges
@@ -1739,6 +1886,8 @@ impl ShardService {
                 as u64,
             completed: self.shared.completed_count(),
             shards: self.slots.len() as u64,
+            volunteers_seen: self.merged_volunteers().len() as u64,
+            timeseries_samples: self.merged_timeseries().len() as u64,
         };
         let mut body = Vec::new();
         self.telemetry.render_prometheus(&mut body, &gauges);
@@ -1824,6 +1973,12 @@ impl ShardService {
             (Method::Get, "/experiment/state") => self.state(),
             (Method::Get, "/experiment/history") => self.history(),
             (Method::Get, "/experiment/lineage") => self.lineage(),
+            (Method::Get, "/experiment/timeseries") => {
+                self.experiment_timeseries()
+            }
+            (Method::Get, "/experiment/volunteers") => {
+                self.experiment_volunteers(req)
+            }
             (Method::Get, "/stats") => self.stats_route(),
             (Method::Get, "/metrics") => self.metrics(),
             (Method::Get, "/metrics/prom") => self.prom(),
@@ -1846,7 +2001,8 @@ impl ShardService {
                 _,
                 "/" | "/experiment/chromosome" | "/experiment/random"
                 | "/experiment/state" | "/experiment/history"
-                | "/experiment/lineage" | "/stats"
+                | "/experiment/lineage" | "/experiment/timeseries"
+                | "/experiment/volunteers" | "/stats"
                 | "/metrics" | "/metrics/prom" | "/healthz" | "/readyz"
                 | "/debug/trace" | "/experiment/reset",
             ) => Response::new(405).with_text("method not allowed"),
@@ -2088,6 +2244,7 @@ fn shard_loop(
             service.federation_gossip();
         }
         service.publish_per_uuid();
+        service.publish_analytics();
         service.publish_events();
         service.maybe_snapshot();
         // Broadcast to push sessions in the same tick as whatever moved
@@ -2634,6 +2791,139 @@ mod tests {
             text,
             String::from_utf8_lossy(&cluster.body),
         );
+    }
+
+    /// The analytics endpoints are built from shared constructors, so a
+    /// 1-shard cluster and the single-loop router must produce
+    /// byte-identical `/experiment/timeseries` bodies for identical
+    /// traffic. Wall-clock timestamps are pinned with the series'
+    /// `time_override` test knob on both sides.
+    #[test]
+    fn one_shard_timeseries_matches_single_loop_byte_for_byte() {
+        use crate::coordinator::routes::{build_router, PoolState};
+        use std::cell::RefCell;
+        use std::rc::Rc;
+
+        let problem = ProblemSpec::bits(8, 1e18);
+        let capacity = 64;
+
+        let state = Rc::new(RefCell::new(PoolState::new(
+            capacity,
+            &problem,
+            EventLog::disabled(),
+            7,
+        )));
+        state.borrow_mut().series.set_time_override(Some(0.0));
+        let mut router = build_router(state);
+
+        let shared = Arc::new(ClusterShared::recovered(
+            problem.target_fitness,
+            0,
+            0,
+            0,
+            f64::NEG_INFINITY,
+            0,
+            Vec::new(),
+        ));
+        let slots = Arc::new(vec![ShardSlot::new(Waker::new().unwrap())]);
+        let cfg = ShardCfg {
+            id: 0,
+            http: ServerConfig::default(),
+            problem: problem.clone(),
+            pool_capacity: capacity,
+            seed: 7,
+            log_path: None,
+            migration_interval: Duration::from_millis(20),
+            migration_k: 2,
+            persist: None,
+            verify_fitness: false,
+            rate_limit: None,
+            recovered: None,
+            federation: None,
+            fed_gossip_interval: Duration::from_millis(20),
+            telemetry: Arc::new(Telemetry::new(1, &Default::default())),
+            node: Arc::from("local"),
+        };
+        let mut shard = ShardService::new(
+            &cfg,
+            RecoveredShard::fresh(),
+            shared,
+            slots,
+        );
+        shard.series.set_time_override(Some(0.0));
+
+        for req in
+            [put_req("01010101", 4.0, "a"), put_req("01110111", 6.0, "b")]
+        {
+            assert_eq!(router.handle(&req).status, 200);
+            assert_eq!(shard.handle(&req).status, 200);
+        }
+
+        let scrape = Request::new(Method::Get, "/experiment/timeseries");
+        let single = router.handle(&scrape);
+        let cluster = shard.handle(&scrape);
+        assert_eq!((single.status, cluster.status), (200, 200));
+        assert_eq!(
+            single.body,
+            cluster.body,
+            "shapes diverged:\n--- single ---\n{}\n--- cluster ---\n{}",
+            String::from_utf8_lossy(&single.body),
+            String::from_utf8_lossy(&cluster.body),
+        );
+        let body = json::parse(
+            std::str::from_utf8(&single.body).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(body.get_u64("count"), Some(2));
+        let samples = body.get("samples").unwrap().as_arr().unwrap();
+        assert_eq!(samples[1].get_f64("best"), Some(6.0));
+        assert_eq!(samples[1].get_f64("mean"), Some(5.0));
+        assert_eq!(samples[1].get_u64("puts"), Some(2));
+    }
+
+    /// The cluster volunteer ledger merges slot-published tables with
+    /// the live delta, so the scrape sees contributions before AND
+    /// after a publish tick — and the ledger survives a solve.
+    #[test]
+    fn cluster_volunteers_merge_published_and_live() {
+        let handle =
+            ShardedPoolServer::spawn("127.0.0.1:0", fast_config(2, 8.0))
+                .unwrap();
+        let mut c = HttpClient::connect(handle.addr).unwrap();
+        assert_eq!(c.send(&put_req("01010101", 4.0, "a")).unwrap().status, 200);
+        assert_eq!(c.send(&put_req("01110101", 5.0, "b")).unwrap().status, 200);
+        assert_eq!(c.send(&put_req("01110111", 6.0, "b")).unwrap().status, 200);
+
+        let volunteers = |c: &mut HttpClient| -> Json {
+            let resp = c
+                .send(&Request::new(Method::Get, "/experiment/volunteers"))
+                .unwrap();
+            assert_eq!(resp.status, 200);
+            json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap()
+        };
+        // Both volunteers visible regardless of publish timing (the
+        // scrape merges the live delta), from ANY shard's connection.
+        let mut c2 = HttpClient::connect(handle.addr).unwrap();
+        assert!(wait_until(Duration::from_secs(5), || {
+            volunteers(&mut c2).get_u64("volunteers_seen") == Some(2)
+        }));
+        let body = volunteers(&mut c2);
+        let top = body.get("top").unwrap().as_arr().unwrap();
+        assert_eq!(top[0].get_str("uuid"), Some("b"));
+        assert_eq!(top[0].get_u64("accepts"), Some(2));
+
+        // A solve advances the epoch but never clears the ledger.
+        assert_eq!(c.send(&put_req("11111111", 8.0, "b")).unwrap().status, 200);
+        assert!(wait_until(Duration::from_secs(5), || {
+            let b = volunteers(&mut c2);
+            b.get_u64("experiment") == Some(1)
+                && b.get_u64("volunteers_seen") == Some(2)
+        }));
+        let after = volunteers(&mut c2);
+        let top = after.get("top").unwrap().as_arr().unwrap();
+        assert_eq!(top[0].get_str("uuid"), Some("b"));
+        assert_eq!(top[0].get_u64("solutions"), Some(1));
+        handle.stop();
     }
 
     #[test]

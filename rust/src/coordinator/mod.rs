@@ -36,6 +36,7 @@
 //! as CRC-framed WAL records — island-model scaling across hosts, the
 //! paper's "add more backends" claim made concrete.
 
+pub mod analytics;
 pub mod cluster;
 pub mod experiment;
 pub mod federation;
@@ -49,6 +50,7 @@ pub mod telemetry;
 pub mod timeseries;
 pub mod server;
 
+pub use analytics::{VolunteerStats, VolunteerTable};
 pub use cluster::{ClusterConfig, ClusterHandle, PoolBackend, ShardedPoolServer};
 pub use experiment::{ExperimentLog, ExperimentManager};
 pub use federation::FederationConfig;

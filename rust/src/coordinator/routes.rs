@@ -23,7 +23,8 @@ use super::security::{FitnessVerifier, RateLimiter, SaboteurLog};
 use super::telemetry::{
     ServerGauges, Telemetry, TelemetrySettings, TraceKind,
 };
-use super::timeseries::TimeSeries;
+use super::analytics::VolunteerTable;
+use super::timeseries::{Observation, TimeSeries};
 use crate::genome::{Genome, ProblemSpec, RealGenes, Representation};
 use crate::http::types::{write_json_200_head, write_no_content_204};
 use crate::http::{
@@ -313,9 +314,16 @@ pub struct PoolState {
     pub saboteurs: SaboteurLog,
     /// DoS guard: per-UUID token bucket; empty bucket yields 429.
     pub rate_limiter: Option<RateLimiter>,
-    /// Best-fitness/pool time series for `/metrics` and `/dashboard`
-    /// (the paper's in-page Chart.js plot, server-side).
+    /// Best-fitness/pool time series for `/metrics`, `/dashboard` and
+    /// `/experiment/timeseries` (the paper's in-page Chart.js plot,
+    /// server-side).
     pub series: TimeSeries,
+    /// Per-volunteer contribution ledger for `/experiment/volunteers`.
+    /// Cumulative across experiment epochs — a solve never clears it.
+    pub volunteers: VolunteerTable,
+    /// PUTs turned away by the abuse guards (banned, throttled,
+    /// verification mismatch) — the time-series `rejected` column.
+    pub rejected: u64,
     /// Durable-experiment subsystem ([`super::persistence`]): WAL every
     /// accepted PUT and epoch transition, snapshot periodically. `None`
     /// runs fully in-memory (the paper's original semantics).
@@ -372,6 +380,8 @@ impl PoolState {
             saboteurs: SaboteurLog::new(3),
             rate_limiter: None,
             series: TimeSeries::new(512),
+            volunteers: VolunteerTable::new(),
+            rejected: 0,
             persist: None,
             random_cache: Vec::new(),
             put_ok_body: Arc::from(&b""[..]),
@@ -454,6 +464,8 @@ impl PoolState {
             pool_capacity: self.pool.capacity() as u64,
             completed: self.experiments.completed().len() as u64,
             shards: self.telemetry.shards() as u64,
+            volunteers_seen: self.volunteers.len() as u64,
+            timeseries_samples: self.series.len() as u64,
         }
     }
 
@@ -485,6 +497,39 @@ fn maybe_snapshot(s: &mut PoolState) {
 }
 
 type Shared = Rc<RefCell<PoolState>>;
+
+/// Default leaderboard depth for `GET /experiment/volunteers`.
+pub(crate) const VOLUNTEERS_TOP_K: usize = 10;
+
+/// `?k=` override for the leaderboard depth (clamped to something an
+/// operator terminal can render).
+pub(crate) fn volunteers_top_k(req: &Request) -> usize {
+    req.query_param("k")
+        .and_then(|k| k.parse::<usize>().ok())
+        .unwrap_or(VOLUNTEERS_TOP_K)
+        .clamp(1, 1000)
+}
+
+/// The `GET /experiment/timeseries` envelope — one shared constructor so
+/// the single-loop and sharded shapes render byte-identical payloads.
+pub(crate) fn timeseries_payload(
+    experiment: u64,
+    samples: Json,
+    count: usize,
+) -> Json {
+    Json::obj(vec![
+        ("experiment", experiment.into()),
+        ("count", count.into()),
+        ("samples", samples),
+    ])
+}
+
+/// The `GET /experiment/volunteers` envelope (same sharing rationale).
+pub(crate) fn volunteers_payload(experiment: u64, table: Json) -> Json {
+    let mut body = table;
+    body.set("experiment", experiment.into());
+    body
+}
 
 /// Build the full NodIO router over shared state.
 pub fn build_router(state: Shared) -> Router {
@@ -649,6 +694,39 @@ pub fn build_router(state: Shared) -> Router {
                 ("series", s.series.to_json()),
             ]))
         });
+    }
+
+    // Evolution analytics: the bounded, whole-run-spanning experiment
+    // time series (the data behind the paper's live chart) as JSON.
+    {
+        let state = state.clone();
+        router.get(
+            "/experiment/timeseries",
+            move |_req: &Request, _p: &Params| {
+                let s = state.borrow();
+                Response::json(&timeseries_payload(
+                    s.experiments.current_id(),
+                    s.series.to_json(),
+                    s.series.len(),
+                ))
+            },
+        );
+    }
+
+    // Evolution analytics: per-volunteer contribution leaderboard +
+    // quantiles (cumulative across epochs).
+    {
+        let state = state.clone();
+        router.get(
+            "/experiment/volunteers",
+            move |req: &Request, _p: &Params| {
+                let s = state.borrow();
+                Response::json(&volunteers_payload(
+                    s.experiments.current_id(),
+                    s.volunteers.to_json(volunteers_top_k(req)),
+                ))
+            },
+        );
     }
 
     // Prometheus text exposition (scrape-time aggregation; the request
@@ -1180,12 +1258,20 @@ fn apply_put_pre(
         let (status, payload) = put_fail(status, msg);
         PutOutcome::Rejected(status, payload)
     }
+    /// A turned-away PUT still counts: the volunteer ledger and the
+    /// time-series `rejected` column both see it.
+    fn note_reject(s: &mut PoolState, uuid: &str) {
+        s.rejected += 1;
+        s.volunteers.note_put(uuid, false, unix_ms());
+    }
     // Abuse guards (see super::security): bans, rate limits, verification.
     if s.saboteurs.is_banned(f.uuid) {
+        note_reject(s, f.uuid);
         return reject(403, "banned for repeated sabotage");
     }
     if let Some(limiter) = &mut s.rate_limiter {
         if !limiter.allow(f.uuid) {
+            note_reject(s, f.uuid);
             return reject(429, "rate limited");
         }
     }
@@ -1209,6 +1295,7 @@ fn apply_put_pre(
                     ("banned", banned.into()),
                 ])
             });
+            note_reject(s, f.uuid);
             return reject(409, "fitness mismatch");
         }
     }
@@ -1216,21 +1303,20 @@ fn apply_put_pre(
     let Some(genome) = genome.into_genome() else {
         // Unreachable after validation; a defensive 400 beats a panic on
         // the event loop.
+        note_reject(s, uuid);
         return reject(400, "malformed chromosome");
     };
 
     let solved = s.experiments.record_put(uuid, fitness);
-    {
-        let best = s.experiments.best_fitness();
-        let pool_size = s.pool.len();
-        let puts = s.experiments.puts();
-        s.series.record(best, pool_size, puts);
-    }
+    let now_ms = unix_ms();
+    // Contribution ledger: allocation-free for a known UUID (first
+    // sighting pays the one key clone — same budget as `per_uuid`).
+    s.volunteers.note_put(uuid, true, now_ms);
     // Stamp the origin tag (node/shard/uuid/seq + ingest time). The
     // single-loop server is shard 0 of node "local"; `origin` clones an
     // Arc and starts an empty hop vector — no allocations.
     s.prov_seq += 1;
-    let origin = Provenance::origin(&s.node, 0, s.prov_seq, unix_ms());
+    let origin = Provenance::origin(&s.node, 0, s.prov_seq, now_ms);
     let entry = PoolEntry {
         chromosome: genome,
         fitness,
@@ -1243,6 +1329,25 @@ fn apply_put_pre(
     // chromosome twice).
     let slot = evict.unwrap_or(s.pool.len() - 1);
     s.note_pool_insert(evict);
+    // Sample the experiment trajectory post-insert, so pool size and
+    // mean fitness include this immigrant. The O(pool) mean only runs
+    // on stride-sampled events, and the sampler never allocates in the
+    // steady state — the hot-path gates run with this enabled.
+    {
+        let best = s.experiments.best_fitness();
+        let puts = s.experiments.puts();
+        let rejected = s.rejected;
+        let sessions = s.telemetry.ws_sessions();
+        let pool = &s.pool;
+        s.series.record_with(|| Observation {
+            best_fitness: best,
+            mean_fitness: pool_mean_fitness(pool),
+            pool_size: pool.len(),
+            puts,
+            rejected,
+            sessions,
+        });
+    }
     // Hand the tag to the metric registry: the next class-0 latency
     // sample rendered for `nodio_request_duration_seconds` carries it as
     // an OpenMetrics exemplar, and a slow-request trace event inherits
@@ -1268,6 +1373,10 @@ fn apply_put_pre(
         maybe_snapshot(s);
         return PutOutcome::Accepted;
     }
+
+    // The ledger is cumulative across epochs: credit the solve, never
+    // clear the table.
+    s.volunteers.note_solution(uuid, now_ms);
 
     // Experiment over: log, reset pool, bump counter (Figure 2 step 6).
     let solution = s.pool.entries()[slot].chromosome.display_string();
@@ -1317,6 +1426,16 @@ fn apply_put_pre(
     PutOutcome::Solved(resp)
 }
 
+/// Mean fitness over the live pool — the time-series `mean` column.
+/// O(pool), so only run from stride-sampled observations.
+pub(crate) fn pool_mean_fitness(pool: &ChromosomePool) -> f64 {
+    if pool.is_empty() {
+        return 0.0;
+    }
+    let sum: f64 = pool.entries().iter().map(|e| e.fitness).sum();
+    sum / pool.len() as f64
+}
+
 /// First non-whitespace byte of a request body — a cheap shape probe so
 /// the event-loop fast hooks decline batch (`[`) and junk bodies without
 /// parsing them (dispatch parses once instead).
@@ -1348,6 +1467,11 @@ fn random_body<'a>(s: &'a mut PoolState, req: &Request) -> RandomOutcome<'a> {
         }
     }
     s.experiments.record_get(req.query_param("uuid"));
+    // Refresh last-seen for known volunteers only — `touch` never
+    // inserts, so the cached-GET path stays allocation-free.
+    if let Some(uuid) = req.query_param("uuid") {
+        s.volunteers.touch(uuid, unix_ms());
+    }
     let Some(idx) = s.pool.random_index(&mut s.rng) else {
         // Empty pool: 204 — the island just continues without an
         // immigrant (paper: islands are autonomous).
@@ -2138,5 +2262,127 @@ mod dashboard_tests {
         let html = String::from_utf8(resp.body).unwrap();
         assert!(html.contains("NodIO experiment 0"));
         assert!(html.contains("best fitness: 4.00"));
+    }
+
+    fn put_as(
+        router: &mut Router,
+        chromosome: &str,
+        fitness: f64,
+        uuid: &str,
+    ) -> Response {
+        let body = Json::obj(vec![
+            ("chromosome", chromosome.into()),
+            ("fitness", fitness.into()),
+            ("uuid", uuid.into()),
+        ]);
+        router.handle(
+            &Request::new(Method::Put, "/experiment/chromosome")
+                .with_json(&body),
+        )
+    }
+
+    #[test]
+    fn timeseries_endpoint_reports_extended_samples() {
+        let (_state, mut router) = setup();
+        put(&mut router, "01010101", 4.0);
+        put(&mut router, "01110101", 6.0);
+        let resp = router
+            .handle(&Request::new(Method::Get, "/experiment/timeseries"));
+        assert_eq!(resp.status, 200);
+        let body = resp.json_body().unwrap();
+        assert_eq!(body.get_u64("experiment"), Some(0));
+        assert_eq!(body.get_u64("count"), Some(2));
+        let samples = body.get("samples").unwrap().as_arr().unwrap();
+        assert_eq!(samples.len(), 2);
+        assert_eq!(samples[1].get_f64("best"), Some(6.0));
+        assert_eq!(samples[1].get_f64("mean"), Some(5.0));
+        assert_eq!(samples[1].get_u64("pool"), Some(2));
+        assert_eq!(samples[1].get_u64("puts"), Some(2));
+        assert_eq!(samples[1].get_u64("rejected"), Some(0));
+        assert_eq!(samples[1].get_u64("sessions"), Some(0));
+    }
+
+    #[test]
+    fn volunteers_endpoint_ranks_and_survives_solve() {
+        let (state, mut router) = setup();
+        put_as(&mut router, "01010101", 4.0, "a");
+        put_as(&mut router, "01110101", 5.0, "b");
+        put_as(&mut router, "01110100", 6.0, "b");
+        let resp = router
+            .handle(&Request::new(Method::Get, "/experiment/volunteers"));
+        assert_eq!(resp.status, 200);
+        let body = resp.json_body().unwrap();
+        assert_eq!(body.get_u64("volunteers_seen"), Some(2));
+        let top = body.get("top").unwrap().as_arr().unwrap();
+        assert_eq!(top[0].get_str("uuid"), Some("b"));
+        assert_eq!(top[0].get_u64("accepts"), Some(2));
+
+        // ?k= bounds the leaderboard.
+        let resp = router.handle(&Request::new(
+            Method::Get,
+            "/experiment/volunteers?k=1",
+        ));
+        let body = resp.json_body().unwrap();
+        assert_eq!(body.get("top").unwrap().as_arr().unwrap().len(), 1);
+        assert_eq!(body.get_u64("volunteers_seen"), Some(2));
+
+        // A solve clears the pool and the series, never the ledger.
+        put_as(&mut router, "11111111", 80.0, "a");
+        let resp = router
+            .handle(&Request::new(Method::Get, "/experiment/volunteers"));
+        let body = resp.json_body().unwrap();
+        assert_eq!(body.get_u64("experiment"), Some(1));
+        assert_eq!(body.get_u64("volunteers_seen"), Some(2));
+        let top = body.get("top").unwrap().as_arr().unwrap();
+        let a = top.iter().find(|v| v.get_str("uuid") == Some("a")).unwrap();
+        assert_eq!(a.get_u64("solutions"), Some(1));
+        assert_eq!(a.get_u64("accepts"), Some(2));
+        assert_eq!(
+            state.borrow().prom_gauges().volunteers_seen,
+            2,
+            "gauge rides the same ledger"
+        );
+        assert_eq!(state.borrow().prom_gauges().timeseries_samples, 0);
+    }
+
+    #[test]
+    fn guard_rejections_feed_ledger_and_series() {
+        let (state, mut router) = setup();
+        state.borrow_mut().verifier = Some(FitnessVerifier::new(Box::new(
+            crate::problems::OneMax::new(8),
+        )));
+        // Honest claim (OneMax verifier: fitness = count of ones).
+        assert_eq!(put_as(&mut router, "01010101", 4.0, "good").status, 200);
+        // Crafted claim: rejected 409 by the verifier.
+        assert_eq!(put_as(&mut router, "01010101", 99.0, "evil").status, 409);
+        assert_eq!(state.borrow().rejected, 1);
+        let resp = router
+            .handle(&Request::new(Method::Get, "/experiment/volunteers"));
+        let body = resp.json_body().unwrap();
+        assert_eq!(body.get_u64("volunteers_seen"), Some(2));
+        let evil = body
+            .get("top")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .find(|v| v.get_str("uuid") == Some("evil"))
+            .cloned()
+            .unwrap();
+        assert_eq!(evil.get_u64("rejects"), Some(1));
+        assert_eq!(evil.get_u64("accepts"), Some(0));
+        // The next accepted sample carries the running rejected count.
+        assert_eq!(put_as(&mut router, "01110101", 5.0, "good").status, 200);
+        let resp = router
+            .handle(&Request::new(Method::Get, "/experiment/timeseries"));
+        let samples = resp
+            .json_body()
+            .unwrap()
+            .get("samples")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .clone();
+        assert_eq!(samples.last().unwrap().get_u64("rejected"), Some(1));
     }
 }

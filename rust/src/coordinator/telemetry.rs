@@ -980,6 +980,26 @@ impl Telemetry {
             "gauge",
         );
         write_sample_f64(out, "nodio_best_fitness", &[], g.best_fitness);
+        write_help_type(
+            out,
+            "nodio_volunteers_seen",
+            "Distinct volunteer UUIDs in the contribution ledger \
+             (cumulative across experiment epochs).",
+            "gauge",
+        );
+        write_sample_u64(out, "nodio_volunteers_seen", &[], g.volunteers_seen);
+        write_help_type(
+            out,
+            "nodio_timeseries_samples",
+            "Samples held in the experiment time series.",
+            "gauge",
+        );
+        write_sample_u64(
+            out,
+            "nodio_timeseries_samples",
+            &[],
+            g.timeseries_samples,
+        );
 
         let mut wal_append = HistSnapshot::new();
         let mut wal_fsync = HistSnapshot::new();
@@ -1055,6 +1075,12 @@ impl Telemetry {
     fn sum(&self, f: impl Fn(&ShardTelemetry) -> u64) -> u64 {
         self.shards.iter().map(|s| f(s)).sum()
     }
+
+    /// Live push sessions across every shard (the time-series sampler's
+    /// `sessions` column).
+    pub fn ws_sessions(&self) -> u64 {
+        self.sum(|s| s.ws_sessions.load(Ordering::Relaxed))
+    }
 }
 
 impl fmt::Debug for Telemetry {
@@ -1072,6 +1098,8 @@ pub struct ServerGauges {
     pub pool_capacity: u64,
     pub completed: u64,
     pub shards: u64,
+    pub volunteers_seen: u64,
+    pub timeseries_samples: u64,
 }
 
 /// What a request recorder holds: its shard's slots, that shard's ring,
@@ -2021,6 +2049,8 @@ mod tests {
             pool_capacity: 1024,
             completed: 3,
             shards: 2,
+            volunteers_seen: 4,
+            timeseries_samples: 7,
         }
     }
 

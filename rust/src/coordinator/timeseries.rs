@@ -1,10 +1,17 @@
 //! Experiment time series — the server-side data behind the paper's
 //! in-page charts (Chart.js plotting generation/fitness over time).
 //!
-//! A fixed-capacity ring of `(t, best_fitness, pool_size, puts)` samples,
-//! recorded on every PUT, downsampled on overflow by dropping every other
-//! sample (so the series always spans the whole experiment at bounded
-//! memory — good enough for plotting, cheap enough for the event loop).
+//! A fixed-capacity ring of samples (best/mean fitness, pool size,
+//! accepted/rejected PUT counts, live push sessions), recorded on pool
+//! mutations, downsampled on overflow by dropping every other sample —
+//! so the series always spans the whole experiment at bounded memory,
+//! good enough for plotting and cheap enough for the event loop.
+//!
+//! The same `Sample` type travels through the sharded cluster: each
+//! shard records its own series and publishes a copy into its slot;
+//! scrape-time readers k-way-merge the per-shard series by timestamp
+//! ([`merge_bounded`]) into one bounded, whole-run-spanning view for
+//! `GET /experiment/timeseries`.
 
 use std::time::Instant;
 
@@ -15,8 +22,25 @@ use crate::json::Json;
 pub struct Sample {
     pub t_s: f64,
     pub best_fitness: f64,
+    pub mean_fitness: f64,
     pub pool_size: usize,
     pub puts: u64,
+    pub rejected: u64,
+    pub sessions: u64,
+}
+
+/// One observation minus the timestamp (the series supplies its own
+/// clock). Built lazily — [`TimeSeries::record_with`] only invokes the
+/// closure on stride-sampled events, so O(pool) work like the mean
+/// fitness is skipped on the events the stride drops.
+#[derive(Debug, Clone, Copy)]
+pub struct Observation {
+    pub best_fitness: f64,
+    pub mean_fitness: f64,
+    pub pool_size: usize,
+    pub puts: u64,
+    pub rejected: u64,
+    pub sessions: u64,
 }
 
 /// Bounded, whole-run-spanning series.
@@ -28,6 +52,11 @@ pub struct TimeSeries {
     stride: u64,
     events: u64,
     epoch: Instant,
+    /// Deterministic clock for tests: when set, every sample is stamped
+    /// with this value instead of the wall clock (the byte-parity tests
+    /// pin it on both server shapes, mirroring the telemetry registry's
+    /// `latency_override_us` knob).
+    time_override: Option<f64>,
 }
 
 impl TimeSeries {
@@ -39,27 +68,65 @@ impl TimeSeries {
             stride: 1,
             events: 0,
             epoch: Instant::now(),
+            time_override: None,
         }
     }
 
-    /// Record an observation (subject to the current stride).
-    pub fn record(&mut self, best_fitness: f64, pool_size: usize, puts: u64) {
+    /// Pin the sample clock to a fixed value (`None` restores the wall
+    /// clock). Survives `clear` so a pinned series stays deterministic
+    /// across epochs.
+    pub fn set_time_override(&mut self, t_s: Option<f64>) {
+        self.time_override = t_s;
+    }
+
+    fn now(&self) -> f64 {
+        match self.time_override {
+            Some(t) => t,
+            None => self.epoch.elapsed().as_secs_f64(),
+        }
+    }
+
+    /// Record an observation (subject to the current stride). The
+    /// closure runs only when this event is actually sampled.
+    pub fn record_with(&mut self, observe: impl FnOnce() -> Observation) {
         self.events += 1;
         if self.events % self.stride != 0 {
             return;
         }
         if self.samples.len() >= self.capacity {
-            // Halve resolution: keep every other sample, double stride.
-            let kept: Vec<Sample> =
-                self.samples.iter().step_by(2).copied().collect();
-            self.samples = kept;
+            // Halve resolution in place: keep every other sample,
+            // double the stride. No allocation — the buffer keeps its
+            // capacity, so the steady-state hot path never touches the
+            // allocator.
+            let mut w = 0;
+            for r in (0..self.samples.len()).step_by(2) {
+                self.samples[w] = self.samples[r];
+                w += 1;
+            }
+            self.samples.truncate(w);
             self.stride *= 2;
         }
+        let o = observe();
         self.samples.push(Sample {
-            t_s: self.epoch.elapsed().as_secs_f64(),
+            t_s: self.now(),
+            best_fitness: o.best_fitness,
+            mean_fitness: o.mean_fitness,
+            pool_size: o.pool_size,
+            puts: o.puts,
+            rejected: o.rejected,
+            sessions: o.sessions,
+        });
+    }
+
+    /// Convenience for the basic (fitness, pool, puts) observation.
+    pub fn record(&mut self, best_fitness: f64, pool_size: usize, puts: u64) {
+        self.record_with(|| Observation {
             best_fitness,
+            mean_fitness: best_fitness,
             pool_size,
             puts,
+            rejected: 0,
+            sessions: 0,
         });
     }
 
@@ -75,6 +142,10 @@ impl TimeSeries {
         &self.samples
     }
 
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
     /// Reset for a new experiment.
     pub fn clear(&mut self) {
         self.samples.clear();
@@ -83,45 +154,107 @@ impl TimeSeries {
         self.epoch = Instant::now();
     }
 
-    /// JSON array for the `/metrics` route.
+    /// JSON array for the `/metrics` and `/experiment/timeseries`
+    /// routes.
     pub fn to_json(&self) -> Json {
-        Json::Arr(
-            self.samples
-                .iter()
-                .map(|s| {
-                    Json::obj(vec![
-                        ("t_s", s.t_s.into()),
-                        ("best", s.best_fitness.into()),
-                        ("pool", s.pool_size.into()),
-                        ("puts", s.puts.into()),
-                    ])
-                })
-                .collect(),
-        )
+        samples_json(&self.samples)
     }
 
     /// A terminal sparkline of best-fitness over time (the CLI's chart).
     pub fn sparkline(&self, width: usize) -> String {
-        if self.samples.is_empty() {
-            return String::new();
-        }
-        const LEVELS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
-        let (min, max) = self.samples.iter().fold(
-            (f64::INFINITY, f64::NEG_INFINITY),
-            |(lo, hi), s| (lo.min(s.best_fitness), hi.max(s.best_fitness)),
-        );
-        let span = (max - min).max(1e-9);
-        let step = (self.samples.len() as f64 / width as f64).max(1.0);
-        let mut out = String::new();
-        let mut i = 0.0;
-        while (i as usize) < self.samples.len() && out.chars().count() < width {
-            let s = &self.samples[i as usize];
-            let level = ((s.best_fitness - min) / span * 7.0).round() as usize;
-            out.push(LEVELS[level.min(7)]);
-            i += step;
-        }
-        out
+        sparkline_of(&self.samples, width)
     }
+}
+
+/// Render one sample as the canonical JSON object (shared by both
+/// server shapes so the endpoint is byte-identical across them).
+pub fn sample_json(s: &Sample) -> Json {
+    Json::obj(vec![
+        ("t_s", s.t_s.into()),
+        ("best", s.best_fitness.into()),
+        ("mean", s.mean_fitness.into()),
+        ("pool", s.pool_size.into()),
+        ("puts", s.puts.into()),
+        ("rejected", s.rejected.into()),
+        ("sessions", s.sessions.into()),
+    ])
+}
+
+/// Render a slice of samples as a JSON array.
+pub fn samples_json(samples: &[Sample]) -> Json {
+    Json::Arr(samples.iter().map(sample_json).collect())
+}
+
+/// Merge per-shard sample runs into one time-ordered series bounded to
+/// `capacity` points (scrape-time shard merging; each input is already
+/// time-sorted because every shard's clock is monotone).
+pub fn merge_bounded(parts: &[&[Sample]], capacity: usize) -> Vec<Sample> {
+    let total: usize = parts.iter().map(|p| p.len()).sum();
+    let mut merged: Vec<Sample> = Vec::with_capacity(total);
+    let mut cursors = vec![0usize; parts.len()];
+    for _ in 0..total {
+        let mut pick: Option<usize> = None;
+        for (i, part) in parts.iter().enumerate() {
+            if cursors[i] >= part.len() {
+                continue;
+            }
+            let t = part[cursors[i]].t_s;
+            match pick {
+                Some(p) if parts[p][cursors[p]].t_s <= t => {}
+                _ => pick = Some(i),
+            }
+        }
+        let p = pick.expect("cursor invariant");
+        merged.push(parts[p][cursors[p]]);
+        cursors[p] += 1;
+    }
+    // Bound the merged view the same way the recorder does: decimate by
+    // powers of two until it fits, always keeping the newest sample.
+    while merged.len() > capacity.max(8) {
+        let last = *merged.last().expect("non-empty");
+        let mut w = 0;
+        for r in (0..merged.len()).step_by(2) {
+            merged[w] = merged[r];
+            w += 1;
+        }
+        merged.truncate(w);
+        if merged.last() != Some(&last) {
+            merged.push(last);
+        }
+    }
+    merged
+}
+
+/// Sparkline over any sample slice (shared with `nodio dash` and
+/// `nodio replay --timeseries`, which build their sample vectors
+/// outside a live `TimeSeries`).
+pub fn sparkline_of(samples: &[Sample], width: usize) -> String {
+    let vals: Vec<f64> = samples.iter().map(|s| s.best_fitness).collect();
+    spark_values(&vals, width)
+}
+
+/// Sparkline over raw f64 values (the dash's req/s trajectory).
+pub fn spark_values(vals: &[f64], width: usize) -> String {
+    if vals.is_empty() {
+        return String::new();
+    }
+    const LEVELS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+    let (min, max) = vals
+        .iter()
+        .fold((f64::INFINITY, f64::NEG_INFINITY), |(lo, hi), v| {
+            (lo.min(*v), hi.max(*v))
+        });
+    let span = (max - min).max(1e-9);
+    let step = (vals.len() as f64 / width as f64).max(1.0);
+    let mut out = String::new();
+    let mut i = 0.0;
+    while (i as usize) < vals.len() && out.chars().count() < width {
+        let v = vals[i as usize];
+        let level = ((v - min) / span * 7.0).round() as usize;
+        out.push(LEVELS[level.min(7)]);
+        i += step;
+    }
+    out
 }
 
 #[cfg(test)]
@@ -139,6 +272,8 @@ mod tests {
         let arr = json.as_arr().unwrap();
         assert_eq!(arr.len(), 10);
         assert_eq!(arr[9].get_f64("best"), Some(9.0));
+        assert_eq!(arr[9].get_f64("mean"), Some(9.0));
+        assert_eq!(arr[9].get_u64("rejected"), Some(0));
     }
 
     #[test]
@@ -162,6 +297,58 @@ mod tests {
     }
 
     #[test]
+    fn stride_doubling_always_retains_newest_sample() {
+        // Property sweep: whatever the event count, the series spans the
+        // run — first sample from the earliest stride window, newest
+        // event always present, length bounded, time monotone.
+        for n in [8u64, 16, 17, 100, 255, 256, 257, 1000, 4096, 10_001] {
+            let mut ts = TimeSeries::new(16);
+            for i in 0..n {
+                ts.record(i as f64, 0, i);
+            }
+            assert!(ts.len() <= 16, "n={n} len={}", ts.len());
+            assert!(!ts.is_empty(), "n={n}");
+            let first = ts.samples().first().unwrap();
+            let last = ts.samples().last().unwrap();
+            // The newest sampled event is never dropped by a later
+            // downsample, and sampling never lags more than one stride.
+            assert!(last.puts + 2 * ts.stride >= n, "n={n} last={}", last.puts);
+            assert!(first.puts <= ts.stride, "n={n} first={}", first.puts);
+            let mut prev = -1.0;
+            for s in ts.samples() {
+                assert!(s.t_s >= prev);
+                prev = s.t_s;
+            }
+        }
+    }
+
+    #[test]
+    fn record_with_skips_observation_off_stride() {
+        let mut ts = TimeSeries::new(8);
+        // Fill far enough that stride > 1.
+        for i in 0..64 {
+            ts.record(i as f64, 0, i);
+        }
+        assert!(ts.stride > 1);
+        let mut calls = 0;
+        for i in 0..ts.stride {
+            ts.record_with(|| {
+                calls += 1;
+                Observation {
+                    best_fitness: 1.0,
+                    mean_fitness: 1.0,
+                    pool_size: 0,
+                    puts: 64 + i,
+                    rejected: 0,
+                    sessions: 0,
+                }
+            });
+        }
+        // Exactly one event in a stride window pays for the observation.
+        assert_eq!(calls, 1);
+    }
+
+    #[test]
     fn clear_resets() {
         let mut ts = TimeSeries::new(8);
         for i in 0..100 {
@@ -171,6 +358,46 @@ mod tests {
         assert!(ts.is_empty());
         ts.record(1.0, 1, 1);
         assert_eq!(ts.len(), 1); // stride reset to 1
+    }
+
+    #[test]
+    fn time_override_pins_the_clock() {
+        let mut ts = TimeSeries::new(8);
+        ts.set_time_override(Some(1.5));
+        ts.record(1.0, 1, 1);
+        ts.record(2.0, 2, 2);
+        assert!(ts.samples().iter().all(|s| s.t_s == 1.5));
+        // Survives clear (parity tests pin once, then drive an epoch).
+        ts.clear();
+        ts.record(3.0, 3, 3);
+        assert_eq!(ts.samples()[0].t_s, 1.5);
+    }
+
+    #[test]
+    fn merge_bounded_orders_and_bounds() {
+        let mk = |t: f64, puts: u64| Sample {
+            t_s: t,
+            best_fitness: t,
+            mean_fitness: t,
+            pool_size: 0,
+            puts,
+            rejected: 0,
+            sessions: 0,
+        };
+        let a: Vec<Sample> = (0..50).map(|i| mk(i as f64 * 2.0, i)).collect();
+        let b: Vec<Sample> =
+            (0..50).map(|i| mk(i as f64 * 2.0 + 1.0, i)).collect();
+        let merged = merge_bounded(&[&a, &b], 16);
+        assert!(merged.len() <= 17); // capacity + retained newest
+        let mut prev = -1.0;
+        for s in &merged {
+            assert!(s.t_s >= prev);
+            prev = s.t_s;
+        }
+        // Newest sample across both shards survives the decimation.
+        assert_eq!(merged.last().unwrap().t_s, 99.0);
+        // Empty input merges to empty.
+        assert!(merge_bounded(&[], 16).is_empty());
     }
 
     #[test]

@@ -7,7 +7,7 @@
 //! thread allows the service of many requests" — the scalability bench
 //! (E3) measures where that saturation point actually is.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::io::{self, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::os::fd::AsRawFd;
@@ -39,6 +39,12 @@ const RETAINED_OUT_CAP: usize = 64 * 1024;
 /// (the chromosome batch a volunteer receives on connect). Real
 /// generations count up from zero and never reach it.
 const STALE_GEN: u64 = u64::MAX;
+
+/// Broadcast frames retained for reconnect replay: an SSE client that
+/// resumes with `Last-Event-ID` within the last this-many observed
+/// generations gets every missed frame in order; anything older jumps
+/// straight to the newest payload.
+const PUSH_RING_CAP: usize = 16;
 
 /// Tunables for the event loop.
 #[derive(Debug, Clone)]
@@ -172,10 +178,12 @@ pub(crate) struct ConnDriver {
     last_sweep: Instant,
     /// Live push sessions (WebSocket + SSE) among `conns`.
     sessions: usize,
-    /// The broadcast payload for one generation, rendered once and
-    /// shared across all sessions: (generation, WebSocket text frame,
-    /// SSE event chunk).
-    push_cache: Option<(u64, Arc<[u8]>, Arc<[u8]>)>,
+    /// The last [`PUSH_RING_CAP`] broadcast payloads, each rendered once
+    /// and shared across all sessions: (generation, WebSocket text
+    /// frame, SSE event chunk), newest at the back. The back entry is
+    /// the live push cache; older entries serve `Last-Event-ID`
+    /// reconnect replay.
+    push_ring: VecDeque<(u64, Arc<[u8]>, Arc<[u8]>)>,
     /// The generation every live session has already been sent.
     /// Equality with the service's current generation is the whole idle
     /// steady state: one virtual call + one compare per tick, zero
@@ -192,7 +200,7 @@ impl ConnDriver {
             config,
             last_sweep: Instant::now(),
             sessions: 0,
-            push_cache: None,
+            push_ring: VecDeque::new(),
             pushed_gen: STALE_GEN,
         }
     }
@@ -430,7 +438,9 @@ impl ConnDriver {
                             conn.flatten_tail();
                             // `Last-Event-ID` resumes a reconnecting
                             // stream: a client already at the current
-                            // generation gets nothing re-sent.
+                            // generation gets nothing re-sent; one
+                            // within the replay ring gets every missed
+                            // frame in order on the next push pass.
                             let last = req
                                 .header("last-event-id")
                                 .and_then(|v| v.parse::<u64>().ok())
@@ -549,32 +559,63 @@ impl ConnDriver {
         if self.pushed_gen == generation {
             return;
         }
-        if self.push_cache.as_ref().map(|(g, _, _)| *g) != Some(generation)
-        {
+        if self.push_ring.back().map(|(g, _, _)| *g) != Some(generation) {
             let mut payload = Vec::new();
             service.render_push(generation, &mut payload);
             let mut ws_frame = Vec::new();
             ws::encode_frame(&mut ws_frame, ws::OP_TEXT, &payload);
             let mut sse_chunk = Vec::new();
             ws::write_sse_event(&mut sse_chunk, generation, &payload);
-            self.push_cache =
-                Some((generation, ws_frame.into(), sse_chunk.into()));
+            if self.push_ring.len() == PUSH_RING_CAP {
+                self.push_ring.pop_front();
+            }
+            self.push_ring.push_back((
+                generation,
+                ws_frame.into(),
+                sse_chunk.into(),
+            ));
         }
-        let (_, ws_frame, sse_chunk) =
-            self.push_cache.as_ref().expect("cache just filled").clone();
+        let newest = self.push_ring.len() - 1;
         let mut dead: Vec<u64> = Vec::new();
         let mut pushed = 0u64;
         for (&token, conn) in self.conns.iter_mut() {
-            let (frame, seen) = match &mut conn.mode {
-                ConnMode::Ws { gen, .. } => (&ws_frame, gen),
-                ConnMode::Sse { gen, .. } => (&sse_chunk, gen),
+            let (is_ws, seen) = match &mut conn.mode {
+                ConnMode::Ws { gen, .. } => (true, gen),
+                ConnMode::Sse { gen, .. } => (false, gen),
                 ConnMode::Http => continue,
             };
             if *seen == generation {
                 continue;
             }
+            // Replay window: a session resuming from a generation still
+            // in the ring gets every missed frame in order; a fresh
+            // session — or one that fell off the ring — jumps straight
+            // to the newest payload (the pre-ring behavior).
+            let start = if *seen == STALE_GEN {
+                newest
+            } else {
+                match self
+                    .push_ring
+                    .iter()
+                    .position(|(g, _, _)| *g == *seen)
+                {
+                    Some(i) => i + 1,
+                    None => newest,
+                }
+            };
             *seen = generation;
             conn.flatten_tail();
+            // Older replayed frames are copied into the contiguous
+            // buffer; the newest stays a shared zero-copy tail, so the
+            // common no-replay case parks exactly one Arc as before.
+            for i in start..newest {
+                let (_, ws_f, sse_f) = &self.push_ring[i];
+                conn.out
+                    .extend_from_slice(if is_ws { ws_f } else { sse_f });
+                pushed += 1;
+            }
+            let (_, ws_f, sse_f) = &self.push_ring[newest];
+            let frame = if is_ws { ws_f } else { sse_f };
             conn.tail = Some((frame.clone(), 0));
             pushed += 1;
             if Self::flush(conn, stats) {
@@ -1357,6 +1398,113 @@ mod tests {
         assert_eq!(
             handle.stats().push_frames.load(Ordering::Relaxed) >= 3,
             true
+        );
+        handle.stop();
+    }
+
+    /// Drain an SSE stream until the read timeout, returning the text.
+    fn read_sse(sse: &mut std::net::TcpStream) -> String {
+        use std::io::Read;
+        let mut got = Vec::new();
+        let mut buf = [0u8; 4096];
+        while let Ok(n) = sse.read(&mut buf) {
+            if n == 0 {
+                break;
+            }
+            got.extend_from_slice(&buf[..n]);
+        }
+        String::from_utf8_lossy(&got).to_string()
+    }
+
+    /// Drive `generation` through `gens`, confirming each bump on a live
+    /// WebSocket session so every generation lands in the replay ring
+    /// (push passes only observe the generation at tick time).
+    fn observe_gens(
+        ws: &mut WsClient,
+        generation: &AtomicU64,
+        gens: std::ops::RangeInclusive<u64>,
+    ) {
+        for g in gens {
+            generation.store(g, Ordering::Relaxed);
+            let expected =
+                format!("{{\"type\":\"push\",\"gen\":{g}}}").into_bytes();
+            assert_eq!(ws.recv().unwrap(), Some(WsMsg::Text(expected)));
+        }
+    }
+
+    #[test]
+    fn sse_reconnect_replays_missed_generations_in_order() {
+        let (handle, generation) = spawn_push_server();
+        let mut ws = WsClient::connect(
+            handle.addr,
+            ws::WS_PATH,
+            Duration::from_secs(5),
+        )
+        .unwrap();
+        assert!(ws.recv().unwrap().is_some()); // initial gen-0 push
+        observe_gens(&mut ws, &generation, 1..=3);
+
+        // A client that saw generation 1 reconnects: generations 2 and 3
+        // are still in the ring, so both are replayed, oldest first.
+        let mut sse = std::net::TcpStream::connect(handle.addr).unwrap();
+        use std::io::Write;
+        sse.write_all(
+            format!(
+                "GET {} HTTP/1.1\r\nlast-event-id: 1\r\n\r\n",
+                ws::SSE_PATH
+            )
+            .as_bytes(),
+        )
+        .unwrap();
+        sse.set_read_timeout(Some(Duration::from_millis(600))).unwrap();
+        let text = read_sse(&mut sse);
+        assert!(!text.contains("id: 1\n"), "gen 1 re-sent: {text}");
+        let two = text
+            .find("id: 2\ndata: {\"type\":\"push\",\"gen\":2}")
+            .unwrap_or_else(|| panic!("gen 2 not replayed: {text}"));
+        let three = text
+            .find("id: 3\ndata: {\"type\":\"push\",\"gen\":3}")
+            .unwrap_or_else(|| panic!("gen 3 not replayed: {text}"));
+        assert!(two < three, "replay out of order: {text}");
+        handle.stop();
+    }
+
+    #[test]
+    fn sse_reconnect_past_ring_capacity_jumps_to_newest() {
+        let (handle, generation) = spawn_push_server();
+        let mut ws = WsClient::connect(
+            handle.addr,
+            ws::WS_PATH,
+            Duration::from_secs(5),
+        )
+        .unwrap();
+        assert!(ws.recv().unwrap().is_some()); // initial gen-0 push
+        // Observe well past PUSH_RING_CAP generations so gen 2 falls
+        // off the ring.
+        let last = 2 + PUSH_RING_CAP as u64 + 2;
+        observe_gens(&mut ws, &generation, 1..=last);
+
+        let mut sse = std::net::TcpStream::connect(handle.addr).unwrap();
+        use std::io::Write;
+        sse.write_all(
+            format!(
+                "GET {} HTTP/1.1\r\nlast-event-id: 2\r\n\r\n",
+                ws::SSE_PATH
+            )
+            .as_bytes(),
+        )
+        .unwrap();
+        sse.set_read_timeout(Some(Duration::from_millis(600))).unwrap();
+        let text = read_sse(&mut sse);
+        // Too far behind to replay: exactly one event, the newest.
+        assert!(
+            text.contains(&format!("id: {last}\n")),
+            "newest not sent: {text}"
+        );
+        assert_eq!(
+            text.matches("data: ").count(),
+            1,
+            "expected newest-only, got: {text}"
         );
         handle.stop();
     }
